@@ -1,0 +1,60 @@
+//! Fig 2 reproduction (DESIGN.md E2): ranked per-word variances of the
+//! NYTimes-like and PubMed-like corpora, streamed with the sharded moment
+//! pass. The rapid decay is what makes safe feature elimination so
+//! effective on text data.
+//!
+//! ```bash
+//! cargo run --release --example variance_profile
+//! cargo run --release --example variance_profile -- 30000 20000
+//! ```
+
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::elim::lambda_survivor_curve;
+use lsspca::stream::{variance_pass, StreamOptions, SynthSource};
+use lsspca::util::plot::AsciiPlot;
+
+fn profile(preset: &str, docs: usize, vocab: usize) {
+    let spec = CorpusSpec::preset(preset).unwrap().scaled(docs, vocab);
+    let corpus = SynthCorpus::new(spec, 20111212);
+    let opts = StreamOptions { workers: 2, chunk_docs: 2048, queue_depth: 4 };
+    let (fv, stats) = variance_pass(&mut SynthSource::new(&corpus), opts).unwrap();
+    let sorted = fv.sorted_variances();
+    println!(
+        "\n== {preset}: {} docs × {} words, {} nnz (pass: {:.2}s, {} workers) ==",
+        stats.docs, vocab, stats.nnz, stats.seconds, opts.workers
+    );
+    let pts: Vec<(f64, f64)> = sorted
+        .iter()
+        .enumerate()
+        .filter(|&(_, &v)| v > 0.0)
+        .step_by((sorted.len() / 2000).max(1))
+        .map(|(i, &v)| ((i + 1) as f64, v))
+        .collect();
+    println!(
+        "{}",
+        AsciiPlot::new("sorted word variances (log-log) — cf. paper Fig 2")
+            .logx()
+            .logy()
+            .series("variance", '*', &pts)
+            .render()
+    );
+    // decay summary + λ → n̂ curve (the safe-elimination payoff)
+    let decades = (sorted[0] / sorted[sorted.len() / 2].max(1e-300)).log10();
+    println!("decay: top variance {:.3}, median ratio 10^{decades:.1}", sorted[0]);
+    let lambdas: Vec<f64> = (0..8).map(|k| sorted[0] * 0.5f64.powi(k + 1)).collect();
+    println!("λ → surviving features (safe elimination):");
+    for (lam, kept) in lambda_survivor_curve(&fv.variance, &lambdas) {
+        println!(
+            "  λ={lam:10.4}  n̂={kept:>7}  (×{:.0} reduction)",
+            vocab as f64 / kept.max(1) as f64
+        );
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let docs: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(50_000);
+    let vocab: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30_000);
+    profile("nytimes", docs, vocab);
+    profile("pubmed", docs, vocab);
+}

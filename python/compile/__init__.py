@@ -1,0 +1,13 @@
+"""Build-time compile package: L2 JAX graphs + L1 Pallas kernels + AOT.
+
+Nothing in here runs at serving/request time — `make artifacts` lowers the
+graphs once to HLO text under `artifacts/`, and the Rust coordinator loads
+them through PJRT (see rust/src/runtime.rs).
+
+All numerics are float64: the BCA solver's τ / barrier arithmetic needs the
+headroom, and the CPU PJRT backend executes f64 natively.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,111 @@
+"""AOT lowering: JAX graphs → HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Emitted artifacts (sizes mirrored in rust/src/engine.rs::XLA_SIZES):
+
+    bca_sweep_n{N}.hlo.txt    (X, Σ, λ, β)  → (X′,)
+    power_iter_n{N}.hlo.txt   (Σ, v0)       → (v, value)
+    gram_b{M}x{K}.hlo.txt     (A,)          → (AᵀA,)
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes 32,64,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+jax.config.update("jax_enable_x64", True)
+
+SIZES = [32, 64, 128, 256, 512]
+GRAM_BLOCK = (256, 512)
+MOMENTS_BLOCK = (1024, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bca_sweep(n: int) -> str:
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    return to_hlo_text(jax.jit(model.bca_sweep).lower(mat, mat, scalar, scalar))
+
+
+def lower_power_iter(n: int) -> str:
+    mat = jax.ShapeDtypeStruct((n, n), jnp.float64)
+    vec = jax.ShapeDtypeStruct((n,), jnp.float64)
+    return to_hlo_text(jax.jit(model.power_iter).lower(mat, vec))
+
+
+def lower_gram(m: int, k: int) -> str:
+    blk = jax.ShapeDtypeStruct((m, k), jnp.float64)
+    return to_hlo_text(jax.jit(model.gram_block).lower(blk))
+
+
+def lower_col_moments(m: int, k: int) -> str:
+    blk = jax.ShapeDtypeStruct((m, k), jnp.float64)
+    return to_hlo_text(jax.jit(model.col_moments_block).lower(blk))
+
+
+def emit(out_dir: str, sizes: list[int], gram_block=GRAM_BLOCK, verbose=True) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+
+    def write(name: str, text: str):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        if verbose:
+            print(f"  {name}: {len(text) / 1024:.0f} KiB")
+
+    for n in sizes:
+        if verbose:
+            print(f"lowering n={n} ...", flush=True)
+        write(f"bca_sweep_n{n}", lower_bca_sweep(n))
+        write(f"power_iter_n{n}", lower_power_iter(n))
+    m, k = gram_block
+    if verbose:
+        print(f"lowering gram {m}x{k} ...", flush=True)
+    write(f"gram_b{m}x{k}", lower_gram(m, k))
+    mm, mk = MOMENTS_BLOCK
+    if verbose:
+        print(f"lowering col_moments {mm}x{mk} ...", flush=True)
+    write(f"col_moments_b{mm}x{mk}", lower_col_moments(mm, mk))
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--sizes",
+        default=",".join(str(s) for s in SIZES),
+        help="comma-separated BCA/power artifact sizes",
+    )
+    args = ap.parse_args(argv)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+    written = emit(args.out_dir, sizes)
+    print(f"wrote {len(written)} artifacts to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

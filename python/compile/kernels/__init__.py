@@ -1,0 +1,11 @@
+"""L1 Pallas kernels: the paper's compute hot-spots.
+
+- `boxqp` — the box-constrained QP coordinate descent (paper Eq. 11–13),
+  the inner loop of Algorithm 1.
+- `gram` — blocked AᵀA accumulation for covariance assembly.
+- `ref` — pure-numpy oracles both kernels are verified against.
+
+Kernels are lowered with ``interpret=True``: real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. The BlockSpec structure is
+still written TPU-shaped (see DESIGN.md §Hardware-Adaptation).
+"""

@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: box-constrained QP coordinate descent (Eq. 11–13).
+
+This is the paper's compute hot-spot — the inner solver of every
+Algorithm-1 column update:
+
+    R² = min_u uᵀ Y u   s.t.  |uᵢ − sᵢ| ≤ rᵢ
+
+Generalized per-coordinate radii support the masked full-size formulation
+(rⱼ = 0 pins uⱼ = sⱼ; with sⱼ = 0 that is exactly "coordinate j removed"),
+which is what keeps every shape static for AOT.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole Y tile stays
+resident in VMEM (n ≤ 512 ⇒ ≤ 2 MiB f64 — fits), and the sequential
+coordinate recurrence streams over it; each step is one row-dot + one
+row-axpy, both of which vectorize across the 8×128 VPU lanes. The kernel
+is latency-bound, not MXU-bound — the paper's algorithm is inherently a
+sequential coordinate method, and the win is keeping Y on-chip across all
+`nsweeps × n` steps instead of re-reading HBM.
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls);
+correctness is pinned to `ref.boxqp_ref` by `python/tests/test_boxqp.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _coordinate_step(i, carry, y, s, r):
+    """One Eq.-(13) update of coordinate i, maintaining w = Y u."""
+    u, w = carry
+    n = y.shape[0]
+    yi = jax.lax.dynamic_slice(y, (i, 0), (1, n))[0]  # row i of Y
+    yii = jax.lax.dynamic_index_in_dim(yi, i, keepdims=False)
+    ui = jax.lax.dynamic_index_in_dim(u, i, keepdims=False)
+    si = jax.lax.dynamic_index_in_dim(s, i, keepdims=False)
+    ri = jax.lax.dynamic_index_in_dim(r, i, keepdims=False)
+    wi = jax.lax.dynamic_index_in_dim(w, i, keepdims=False)
+    g = wi - yii * ui
+    lo, hi = si - ri, si + ri
+    # y1 > 0: clipped unconstrained minimizer; y1 == 0: box edge by sign(g).
+    unc = jnp.where(yii > 0.0, -g / jnp.where(yii > 0.0, yii, 1.0), 0.0)
+    interior = jnp.clip(unc, lo, hi)
+    edge = jnp.where(g > 0.0, lo, hi)
+    new = jnp.where(ri == 0.0, si, jnp.where(yii > 0.0, interior, edge))
+    delta = new - ui
+    w = w + delta * yi
+    u = jax.lax.dynamic_update_index_in_dim(u, new, i, 0)
+    return u, w
+
+
+def _boxqp_kernel(y_ref, s_ref, r_ref, u_ref, w_ref, *, nsweeps: int):
+    """Pallas kernel body: whole problem resident in one VMEM tile."""
+    y = y_ref[...]
+    s = s_ref[...]
+    r = r_ref[...]
+    n = y.shape[0]
+    u0 = s  # box center: always feasible
+    w0 = y @ u0
+
+    def sweep(_, carry):
+        return jax.lax.fori_loop(
+            0, n, lambda i, c: _coordinate_step(i, c, y, s, r), carry
+        )
+
+    u, w = jax.lax.fori_loop(0, nsweeps, sweep, (u0, w0))
+    u_ref[...] = u
+    w_ref[...] = w
+
+
+@functools.partial(jax.jit, static_argnames=("nsweeps",))
+def boxqp(y: jax.Array, s: jax.Array, r: jax.Array, *, nsweeps: int = 8):
+    """Solve the box QP; returns (u, w) with w = Y u.
+
+    R² is then `u @ w` — left to the caller (the L2 sweep) so the kernel
+    output stays a plain pair of vectors.
+    """
+    n = y.shape[0]
+    assert y.shape == (n, n) and s.shape == (n,) and r.shape == (n,)
+    dtype = jnp.float64
+    return pl.pallas_call(
+        functools.partial(_boxqp_kernel, nsweeps=nsweeps),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), dtype),
+            jax.ShapeDtypeStruct((n,), dtype),
+        ),
+        interpret=True,  # CPU PJRT target; see module docstring
+    )(y.astype(dtype), s.astype(dtype), r.astype(dtype))

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: blocked Gram matrix AᵀA.
+
+Covariance assembly building block: the reduced covariance is
+Σ̂ = AᵀA/m − μμᵀ over the kept features, and this kernel produces the AᵀA
+term for one dense row-block of A; the Rust side accumulates across blocks
+and applies the centering.
+
+TPU mapping: classic three-dimensional matmul grid. The output is tiled
+(TILE × TILE); the contraction dimension is the innermost grid axis so each
+output tile accumulates in VMEM across k-steps; every step is one
+TILE×TILE·TILE×TILE matmul — exactly the MXU's shape. On a real TPU this
+would run bf16/f32 on the systolic array; here it is f64 + interpret=True
+to match the solver's precision on the CPU PJRT backend.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+TILE = 128
+
+
+def _gram_kernel(ai_ref, aj_ref, o_ref):
+    """Accumulate one (i, j) output tile over the k-th row block."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += ai_ref[...].T @ aj_ref[...]
+
+
+@jax.jit
+def gram(a: jax.Array) -> jax.Array:
+    """AᵀA of an (m, n) block; m and n must be multiples of TILE."""
+    m, n = a.shape
+    assert m % TILE == 0 and n % TILE == 0, f"block shape {a.shape} not {TILE}-aligned"
+    a = a.astype(jnp.float64)
+    grid = (n // TILE, n // TILE, m // TILE)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (k, i)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float64),
+        interpret=True,
+    )(a, a)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def gram_normalized(a: jax.Array) -> jax.Array:
+    """AᵀA / m — covariance convention used by the pipeline."""
+    return gram(a) / a.shape[0]

@@ -1,0 +1,141 @@
+"""Pure-numpy oracles for the Pallas kernels and the L2 sweep.
+
+These are deliberately independent implementations (plain Python loops, no
+jax) — the CORE correctness signal for the kernel layer. The Rust native
+engine implements the same algorithms a third time; the three-way agreement
+is checked across the test suites.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def coordinate_update(y1: float, g: float, s1: float, r: float) -> float:
+    """Closed-form scalar update, paper Eq. (13), with box radius r."""
+    lo, hi = s1 - r, s1 + r
+    if y1 > 0.0:
+        unc = -g / y1
+        return min(max(unc, lo), hi)
+    # y1 == 0 (PSD ⇒ y1 ≥ 0): linear objective, pick a box edge.
+    return lo if g > 0.0 else hi
+
+
+def boxqp_ref(y: np.ndarray, s: np.ndarray, r: np.ndarray, nsweeps: int):
+    """Cyclic coordinate descent for min uᵀYu s.t. |uᵢ − sᵢ| ≤ rᵢ.
+
+    Starts at the box center u = s (coordinates with r = 0 stay pinned).
+    Returns (u, w) with w = Y u, matching the kernel's outputs.
+    """
+    y = np.asarray(y, dtype=np.float64)
+    s = np.asarray(s, dtype=np.float64)
+    r = np.asarray(r, dtype=np.float64)
+    n = y.shape[0]
+    u = s.copy()
+    w = y @ u
+    for _ in range(nsweeps):
+        for i in range(n):
+            if r[i] == 0.0:
+                new = s[i]
+            else:
+                g = w[i] - y[i, i] * u[i]
+                new = coordinate_update(y[i, i], g, s[i], r[i])
+            delta = new - u[i]
+            if delta != 0.0:
+                w += delta * y[i]
+                u[i] = new
+    return u, w
+
+
+def solve_tau_ref(r2: float, beta: float, c: float, iters: int = 200) -> float:
+    """Bisection for the unique positive root of τ³ + cτ² − βτ − R² = 0."""
+
+    def g(tau):
+        return tau + c - beta / tau - r2 / (tau * tau)
+
+    hi = max(1.0, 1.0 + beta + r2 - c)
+    while g(hi) < 0.0:
+        hi *= 2.0
+    lo = min(1e-12, hi * 0.5)
+    while lo > 1e-300 and g(lo) > 0.0:
+        lo *= 0.5
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        if g(mid) < 0.0:
+            lo = mid
+        else:
+            hi = mid
+    return 0.5 * (lo + hi)
+
+
+def bca_sweep_ref(
+    x: np.ndarray,
+    sigma: np.ndarray,
+    lam: float,
+    beta: float,
+    qp_sweeps: int,
+) -> np.ndarray:
+    """One full Algorithm-1 sweep (paper steps 3–7), masked formulation.
+
+    Mirrors exactly what the L2 jax graph does so the two can be compared
+    elementwise: fixed qp_sweeps, bisection τ, column write-back w/τ.
+    """
+    x = np.array(x, dtype=np.float64, copy=True)
+    sigma = np.asarray(sigma, dtype=np.float64)
+    n = x.shape[0]
+    for j in range(n):
+        mask = np.zeros(n, dtype=bool)
+        mask[j] = True
+        y = x.copy()
+        y[j, :] = 0.0
+        y[:, j] = 0.0
+        s = sigma[j].copy()
+        s[j] = 0.0
+        r = np.full(n, lam)
+        r[j] = 0.0
+        u, w = boxqp_ref(y, s, r, qp_sweeps)
+        r2 = max(float(u @ w), 0.0)
+        t = np.trace(x) - x[j, j]
+        c = sigma[j, j] - lam - t
+        tau = solve_tau_ref(r2, beta, c)
+        newcol = w / tau
+        newcol[j] = c + tau
+        x[j, :] = newcol
+        x[:, j] = newcol
+    return x
+
+
+def barrier_objective_ref(x, sigma, lam, beta):
+    """Objective of problem (6); -inf if x is not PD."""
+    sign, logdet = np.linalg.slogdet(x)
+    if sign <= 0:
+        return -np.inf
+    tr = np.trace(x)
+    return float(np.sum(sigma * x) - lam * np.abs(x).sum() - 0.5 * tr * tr + beta * logdet)
+
+
+def power_iter_ref(sigma: np.ndarray, v0: np.ndarray, iters: int):
+    """Fixed-iteration power method; returns (v, rayleigh)."""
+    v = np.asarray(v0, dtype=np.float64).copy()
+    nrm = np.linalg.norm(v)
+    if nrm > 0:
+        v /= nrm
+    for _ in range(iters):
+        av = sigma @ v
+        nrm = np.linalg.norm(av)
+        if nrm > 1e-300:
+            v = av / nrm
+    return v, float(v @ (sigma @ v))
+
+
+def gram_ref(a: np.ndarray) -> np.ndarray:
+    """AᵀA (unnormalized; the caller divides by m)."""
+    a = np.asarray(a, dtype=np.float64)
+    return a.T @ a
+
+
+def random_psd(rng: np.random.Generator, n: int, ridge: float = 0.05) -> np.ndarray:
+    """Random PSD test matrix FᵀF/m + ridge·I."""
+    m = n + 3
+    f = rng.standard_normal((m, n))
+    return f.T @ f / m + ridge * np.eye(n)

@@ -1,0 +1,137 @@
+"""L2 JAX graphs: one full Algorithm-1 sweep, power iteration, Gram.
+
+These are the computations the Rust coordinator executes through PJRT.
+Everything is shape-static (AOT requirement); the BCA sweep uses the
+*masked full-size* formulation so no dynamic-shape minor extraction is
+needed (DESIGN.md "Fixed shapes and masking"):
+
+  column j's sub-QP runs over the full n-vector with
+    Y := X with row/col j zeroed,   s := Σ_j with s[j] = 0,
+    r := λ everywhere except r[j] = 0  (pins u[j] = 0),
+  which reproduces the (n−1)-minor problem exactly.
+
+Constants QP_SWEEPS / POWER_ITERS are mirrored in rust/src/engine.rs
+(XLA_QP_SWEEPS / XLA_POWER_ITERS) — the agreement tests rely on both sides
+using the same inner-iteration budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.boxqp import boxqp
+from compile.kernels.colmoments import col_moments
+from compile.kernels.gram import gram
+
+jax.config.update("jax_enable_x64", True)
+
+QP_SWEEPS = 8
+POWER_ITERS = 100
+TAU_BISECT_ITERS = 128
+
+
+def solve_tau(r2: jax.Array, beta: jax.Array, c: jax.Array) -> jax.Array:
+    """Unique positive root of τ³ + cτ² − βτ − R² = 0 by fixed bisection.
+
+    The bracket [lo, hi] provably contains the root: the derivative
+    g(τ) = τ + c − β/τ − R²/τ² is increasing, g(lo) < 0 for tiny lo and
+    g(hi) ≥ hi + c − β − R² ≥ 1 > 0 for hi = max(1, 1 + β + R² − c).
+    """
+
+    def g(tau):
+        return tau + c - beta / tau - r2 / (tau * tau)
+
+    hi0 = jnp.maximum(1.0, 1.0 + beta + r2 - c)
+    lo0 = jnp.float64(1e-30)
+
+    def body(_, bracket):
+        lo, hi = bracket
+        mid = 0.5 * (lo + hi)
+        neg = g(mid) < 0.0
+        return jnp.where(neg, mid, lo), jnp.where(neg, hi, mid)
+
+    lo, hi = jax.lax.fori_loop(0, TAU_BISECT_ITERS, body, (lo0, hi0))
+    return 0.5 * (lo + hi)
+
+
+def bca_column_update(x, sigma, lam, beta, j):
+    """Steps 4–6 of Algorithm 1 for column j (masked formulation)."""
+    n = x.shape[0]
+    mask = jnp.arange(n) == j
+    y = jnp.where(mask[:, None] | mask[None, :], 0.0, x)
+    s = jnp.where(mask, 0.0, jax.lax.dynamic_slice(sigma, (j, 0), (1, n))[0])
+    r = jnp.where(mask, 0.0, lam)
+    u, w = boxqp(y, s, r, nsweeps=QP_SWEEPS)  # L1 Pallas kernel
+    r2 = jnp.maximum(u @ w, 0.0)
+    xjj = jax.lax.dynamic_index_in_dim(jnp.diagonal(x), j, keepdims=False)
+    t = jnp.trace(x) - xjj
+    sjj = jax.lax.dynamic_index_in_dim(jnp.diagonal(sigma), j, keepdims=False)
+    c = sjj - lam - t
+    tau = solve_tau(r2, beta, c)
+    newcol = jnp.where(mask, c + tau, w / tau)
+    x = x.at[j, :].set(newcol)
+    x = x.at[:, j].set(newcol)
+    return x
+
+
+@jax.jit
+def bca_sweep(x, sigma, lam, beta):
+    """One full sweep over all n columns; returns the updated X."""
+    n = x.shape[0]
+    x = jax.lax.fori_loop(
+        0, n, lambda j, xx: bca_column_update(xx, sigma, lam, beta, j), x
+    )
+    return (x,)
+
+
+@jax.jit
+def power_iter(sigma, v0):
+    """POWER_ITERS rounds of power iteration; returns (v, rayleigh)."""
+
+    def body(_, v):
+        av = sigma @ v
+        nrm = jnp.linalg.norm(av)
+        return jnp.where(nrm > 1e-300, av / nrm, v)
+
+    v = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-300)
+    v = jax.lax.fori_loop(0, POWER_ITERS, body, v)
+    value = v @ (sigma @ v)
+    return v, value
+
+
+@jax.jit
+def gram_block(a):
+    """AᵀA of a dense row block (L1 Pallas gram kernel)."""
+    return (gram(a),)
+
+
+@jax.jit
+def col_moments_block(a):
+    """Per-column (sum, sum²) of a dense row block (L1 Pallas kernel)."""
+    return col_moments(a)
+
+
+# ---------------------------------------------------------------------------
+# numpy-facing helpers used by the python test-suite
+# ---------------------------------------------------------------------------
+
+
+def bca_sweep_np(x, sigma, lam, beta):
+    """Run the jitted sweep on numpy inputs, return numpy."""
+    import numpy as np
+
+    (out,) = bca_sweep(
+        jnp.asarray(x, jnp.float64),
+        jnp.asarray(sigma, jnp.float64),
+        jnp.float64(lam),
+        jnp.float64(beta),
+    )
+    return np.asarray(out)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_shapes():  # pragma: no cover - debugging helper
+    return {}

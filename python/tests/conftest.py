@@ -1,0 +1,17 @@
+"""Shared pytest fixtures/settings for the kernel test suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from hypothesis import settings
+
+# 1-core container: keep the per-case budget modest but deterministic.
+settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+settings.load_profile("ci")

@@ -1,0 +1,107 @@
+"""L1 Pallas box-QP kernel vs the pure-numpy oracle (the CORE correctness
+signal for the kernel layer) + KKT optimality checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.boxqp import boxqp
+
+
+def kkt_residual(y, s, lam, u):
+    """Worst KKT violation for uniform box radius lam (cf. rust solver::qp)."""
+    w = y @ u
+    worst = 0.0
+    for i in range(len(u)):
+        grad = 2.0 * w[i]
+        lo, hi = s[i] - lam, s[i] + lam
+        tol = 1e-9 * (1.0 + abs(lam) + abs(s[i]))
+        if u[i] <= lo + tol:
+            v = max(-grad, 0.0)
+        elif u[i] >= hi - tol:
+            v = max(grad, 0.0)
+        else:
+            v = abs(grad)
+        worst = max(worst, v, max(lo - u[i], 0.0), max(u[i] - hi, 0.0))
+    return worst
+
+
+@given(
+    n=st.integers(1, 12),
+    seed=st.integers(0, 10_000),
+    lam=st.floats(0.05, 2.0),
+    nsweeps=st.sampled_from([1, 4, 8]),
+)
+def test_kernel_matches_ref(n, seed, lam, nsweeps):
+    rng = np.random.default_rng(seed)
+    y = ref.random_psd(rng, n)
+    s = rng.standard_normal(n)
+    r = np.full(n, lam)
+    # randomly pin some coordinates (masked formulation)
+    pins = rng.random(n) < 0.25
+    r[pins] = 0.0
+    u_ref, w_ref = ref.boxqp_ref(y, s, r, nsweeps)
+    u, w = boxqp(y, s, r, nsweeps=nsweeps)
+    np.testing.assert_allclose(np.asarray(u), u_ref, atol=1e-11, rtol=1e-9)
+    np.testing.assert_allclose(np.asarray(w), w_ref, atol=1e-9, rtol=1e-7)
+
+
+@given(n=st.integers(1, 10), seed=st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_kernel_reaches_kkt_optimum(n, seed):
+    rng = np.random.default_rng(seed)
+    y = ref.random_psd(rng, n, ridge=0.2)
+    s = rng.standard_normal(n)
+    lam = 0.5
+    u, _ = boxqp(y, s, np.full(n, lam), nsweeps=200)
+    res = kkt_residual(y, s, lam, np.asarray(u))
+    assert res < 1e-6 * (1.0 + np.trace(y)), f"KKT residual {res}"
+
+
+def test_pinned_coordinates_stay_at_center():
+    rng = np.random.default_rng(3)
+    n = 8
+    y = ref.random_psd(rng, n)
+    s = rng.standard_normal(n)
+    r = np.full(n, 0.7)
+    r[2] = 0.0
+    r[5] = 0.0
+    u, _ = boxqp(y, s, r, nsweeps=16)
+    u = np.asarray(u)
+    assert u[2] == s[2] and u[5] == s[5]
+    assert np.all(np.abs(u - s) <= 0.7 + 1e-12)
+
+
+def test_zero_matrix_edge_case():
+    # Y = 0: objective constant 0; coordinate rule picks a box edge.
+    n = 4
+    y = np.zeros((n, n))
+    s = np.array([1.0, -1.0, 0.0, 2.0])
+    u, w = boxqp(y, s, np.full(n, 0.5), nsweeps=2)
+    u = np.asarray(u)
+    assert np.all(np.abs(u - s) <= 0.5 + 1e-12)
+    np.testing.assert_allclose(np.asarray(w), 0.0)
+
+
+def test_objective_decreases_with_more_sweeps():
+    rng = np.random.default_rng(4)
+    n = 10
+    y = ref.random_psd(rng, n, ridge=0.01)
+    s = rng.standard_normal(n)
+    r = np.full(n, 1.0)
+    prev = np.inf
+    for nsweeps in [1, 2, 4, 16]:
+        u, w = boxqp(y, s, r, nsweeps=nsweeps)
+        obj = float(np.asarray(u) @ np.asarray(w))
+        assert obj <= prev + 1e-10
+        prev = obj
+
+
+def test_f32_inputs_upcast():
+    rng = np.random.default_rng(5)
+    n = 6
+    y = ref.random_psd(rng, n).astype(np.float32)
+    s = rng.standard_normal(n).astype(np.float32)
+    u, _ = boxqp(y, s, np.full(n, 0.5, dtype=np.float32), nsweeps=4)
+    assert np.asarray(u).dtype == np.float64

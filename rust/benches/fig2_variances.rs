@@ -1,0 +1,47 @@
+//! E2 — paper Fig 2: sorted word variances of the two corpora, plus the
+//! streamed moment-pass throughput at several worker counts.
+
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::stream::{variance_pass, StreamOptions, SynthSource};
+use lsspca::util::bench::{metric, section};
+
+fn profile(preset: &str, docs: usize, vocab: usize) {
+    section(&format!("Fig2 {preset} ({docs} docs × {vocab} words)"));
+    let spec = CorpusSpec::preset(preset).unwrap().scaled(docs, vocab);
+    let corpus = SynthCorpus::new(spec, 20111212);
+    // throughput at 1/2/4 workers (backpressure pipeline)
+    for workers in [1usize, 2, 4] {
+        let opts = StreamOptions { workers, chunk_docs: 2048, queue_depth: 4 };
+        let (fv, stats) = variance_pass(&mut SynthSource::new(&corpus), opts).unwrap();
+        metric(
+            &format!("{preset}.pass_seconds.workers{workers}"),
+            format!("{:.3}", stats.seconds),
+        );
+        metric(
+            &format!("{preset}.nnz_per_sec.workers{workers}"),
+            format!("{:.0}", stats.nnz as f64 / stats.seconds),
+        );
+        if workers == 1 {
+            let sv = fv.sorted_variances();
+            // decimated Fig-2 series
+            println!("series {preset}.sorted_variances: rank,variance");
+            let step = (sv.len() / 40).max(1);
+            for (i, v) in sv.iter().enumerate().step_by(step) {
+                if *v > 0.0 {
+                    println!("  {},{v:.6e}", i + 1);
+                }
+            }
+            let mid = sv[sv.len() / 2].max(1e-300);
+            metric(&format!("{preset}.top_variance"), format!("{:.4}", sv[0]));
+            metric(
+                &format!("{preset}.decay_decades_to_median"),
+                format!("{:.2}", (sv[0] / mid).log10()),
+            );
+        }
+    }
+}
+
+fn main() {
+    profile("nytimes", 20_000, 30_000);
+    profile("pubmed", 20_000, 40_000);
+}

@@ -1,0 +1,43 @@
+//! Micro-benchmark of the paper's hot spot: the box-constrained QP
+//! coordinate descent (Eq 11–13). Used by the §Perf pass to tune the inner
+//! loop (dot-product unrolling, incremental w-maintenance, early exit).
+
+use lsspca::data::SymMat;
+use lsspca::solver::qp::{solve, solve_masked, QpOptions};
+use lsspca::util::bench::{bench, metric, section, BenchConfig};
+use lsspca::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::seed_from(99);
+    section("QP coordinate descent micro");
+    for &n in &[64usize, 128, 256, 512] {
+        let y = SymMat::random_psd(n, n / 2 + 4, 0.05, &mut rng);
+        let s = rng.gauss_vec(n);
+        let lambda = 0.3;
+        let opts = QpOptions { max_sweeps: 8, tol: 0.0 };
+        let r = bench(&format!("qp fixed-8-sweeps n={n}"), BenchConfig::default(), || {
+            solve(&y, &s, lambda, opts).r_squared
+        });
+        // work rate: 8 sweeps × n coords × n flops ×2 (dot + axpy)
+        let flops = (8 * n * n * 4) as f64;
+        metric(
+            &format!("qp.n{n}.gflops"),
+            format!("{:.2}", flops / r.summary.p50 / 1e9),
+        );
+        // converged (early-exit) variant, as the BCA outer loop runs it
+        let conv = QpOptions::default();
+        bench(&format!("qp converged n={n}"), BenchConfig::default(), || {
+            solve(&y, &s, lambda, conv).sweeps
+        });
+        // masked (skip-one) variant: the exact call shape of Algorithm 1
+        let mut u = Vec::new();
+        let mut w = Vec::new();
+        let mut radius = vec![lambda; n];
+        radius[n / 2] = 0.0;
+        let mut center = s.clone();
+        center[n / 2] = 0.0;
+        bench(&format!("qp masked n={n}"), BenchConfig::default(), || {
+            solve_masked(&y, &center, &radius, Some(n / 2), opts, &mut u, &mut w).r_squared
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! E6 — §3 complexity: one BCA sweep is O(n²) per column, O(n³) total.
+//! Times a sweep across n and fits the exponent of t(n) = a·n^b; the
+//! paper's claim holds if b ≈ 3 (and the first-order method's per-iteration
+//! eigendecomposition shows its heavier scaling).
+
+use lsspca::corpus::models::gaussian_factor_cov;
+use lsspca::linalg::eig::JacobiEig;
+use lsspca::solver::bca::{sweep, BcaOptions, SweepBuffers};
+use lsspca::util::bench::{bench, metric, section, BenchConfig};
+use lsspca::util::rng::Rng;
+use lsspca::util::stats::linfit;
+
+fn main() {
+    section("E6 — BCA sweep time vs n (fit exponent)");
+    let mut rng = Rng::seed_from(7);
+    let sizes = [50usize, 100, 200, 400];
+    let mut pts = Vec::new();
+    for &n in &sizes {
+        let sigma = gaussian_factor_cov(n, n / 2, &mut rng);
+        let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let lambda = lsspca::elim::lambda_for_survivors(&d, n / 2);
+        let opts = BcaOptions::default();
+        let beta = opts.epsilon / n as f64;
+        let mut x = lsspca::data::SymMat::identity(n);
+        let mut buf = SweepBuffers::new(n);
+        // measure a mid-flight sweep (first sweep does extra support churn)
+        sweep(&mut x, &sigma, lambda, beta, &opts, &mut buf);
+        let r = bench(
+            &format!("bca_sweep n={n}"),
+            BenchConfig { max_seconds: 4.0, ..Default::default() },
+            || {
+                let mut xc = x.clone();
+                sweep(&mut xc, &sigma, lambda, beta, &opts, &mut buf)
+            },
+        );
+        pts.push(((n as f64).ln(), r.summary.p50.ln()));
+    }
+    let (_, b) = linfit(
+        &pts.iter().map(|p| p.0).collect::<Vec<_>>(),
+        &pts.iter().map(|p| p.1).collect::<Vec<_>>(),
+    );
+    metric("bca_sweep_exponent", format!("{b:.2} (paper: 3)"));
+
+    section("E6 — first-order per-iteration (eigendecomposition) vs n");
+    let mut pts = Vec::new();
+    for &n in &[50usize, 100, 200] {
+        let sigma = gaussian_factor_cov(n, n / 2, &mut rng);
+        let r = bench(
+            &format!("jacobi_eig n={n}"),
+            BenchConfig { max_seconds: 4.0, ..Default::default() },
+            || JacobiEig::new(&sigma).lambda_max(),
+        );
+        pts.push(((n as f64).ln(), r.summary.p50.ln()));
+    }
+    let (_, b) = linfit(
+        &pts.iter().map(|p| p.0).collect::<Vec<_>>(),
+        &pts.iter().map(|p| p.1).collect::<Vec<_>>(),
+    );
+    metric("first_order_periter_exponent", format!("{b:.2} (≥3; ×O(1/ε) iterations)"));
+}

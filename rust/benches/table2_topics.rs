@@ -1,0 +1,9 @@
+//! E4 — paper Table 2: top-5 sparse PCs on the PubMed-like corpus.
+//! Shares the recovery-scoring harness with table1_topics.
+
+#[path = "table1_topics.rs"]
+mod table1;
+
+fn main() {
+    table1::run_preset("pubmed", 20_000, 40_000);
+}

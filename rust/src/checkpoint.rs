@@ -1,0 +1,199 @@
+//! Checkpointing for the expensive streaming pass.
+//!
+//! At PubMed scale (8.2M docs, 7.8 GB on disk) the variance pass is the
+//! dominant I/O cost, and it is λ-independent: every λ-search, every
+//! re-run with a different target cardinality, reuses the same per-feature
+//! variances. This module persists a [`FeatureVariances`] to a compact
+//! binary file keyed by a corpus fingerprint, so repeated pipeline runs
+//! skip the pass entirely (`corpus.cache_dir` in the config).
+//!
+//! Format (little-endian): magic "LSPV", u32 version, u64 key hash,
+//! u64 docs, u64 n, then 3n f64 (variance, mean, second_moment), then a
+//! trailing xor-fold checksum of the payload.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::moments::FeatureVariances;
+
+const MAGIC: &[u8; 4] = b"LSPV";
+const VERSION: u32 = 1;
+
+/// Fingerprint of the corpus a checkpoint belongs to (FNV-1a over a
+/// caller-supplied identity string: preset+docs+vocab+seed, or input path
+/// + file length).
+pub fn corpus_key(identity: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in identity.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn checksum(buf: &[u8]) -> u64 {
+    // xor-fold over 8-byte lanes; cheap and order-sensitive enough to
+    // catch truncation / bit rot (not cryptographic).
+    let mut acc: u64 = 0x9e3779b97f4a7c15;
+    for (i, chunk) in buf.chunks(8).enumerate() {
+        let mut lane = [0u8; 8];
+        lane[..chunk.len()].copy_from_slice(chunk);
+        acc ^= u64::from_le_bytes(lane).rotate_left((i % 63) as u32);
+    }
+    acc
+}
+
+/// Checkpoint file path for a key inside a cache directory.
+pub fn path_for(cache_dir: &Path, key: u64) -> PathBuf {
+    cache_dir.join(format!("variances_{key:016x}.lspv"))
+}
+
+/// Save a variance checkpoint.
+pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    }
+    let n = fv.variance.len();
+    assert_eq!(fv.mean.len(), n);
+    assert_eq!(fv.second_moment.len(), n);
+    let mut payload = Vec::with_capacity(24 + 24 * n);
+    payload.extend_from_slice(&key.to_le_bytes());
+    payload.extend_from_slice(&fv.docs.to_le_bytes());
+    payload.extend_from_slice(&(n as u64).to_le_bytes());
+    for series in [&fv.variance, &fv.mean, &fv.second_moment] {
+        for v in series.iter() {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let sum = checksum(&payload);
+    let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+    f.write_all(MAGIC).map_err(|e| e.to_string())?;
+    f.write_all(&VERSION.to_le_bytes()).map_err(|e| e.to_string())?;
+    f.write_all(&payload).map_err(|e| e.to_string())?;
+    f.write_all(&sum.to_le_bytes()).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+/// Load a checkpoint; verifies magic, version, key and checksum. Returns
+/// `Ok(None)` when the file does not exist, `Err` on any corruption (a
+/// corrupt cache must never be silently used).
+pub fn load(path: &Path, key: u64) -> Result<Option<FeatureVariances>, String> {
+    let mut f = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("open {}: {e}", path.display())),
+    };
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| e.to_string())?;
+    if buf.len() < 8 + 24 + 8 || &buf[..4] != MAGIC {
+        return Err("checkpoint: bad magic or truncated header".into());
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!("checkpoint: version {version}, want {VERSION}"));
+    }
+    let payload = &buf[8..buf.len() - 8];
+    let stored_sum = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if checksum(payload) != stored_sum {
+        return Err("checkpoint: checksum mismatch (corrupt file)".into());
+    }
+    let rd_u64 = |o: usize| u64::from_le_bytes(payload[o..o + 8].try_into().unwrap());
+    let stored_key = rd_u64(0);
+    if stored_key != key {
+        return Err(format!(
+            "checkpoint: corpus key mismatch ({stored_key:#x} vs {key:#x}) — stale cache"
+        ));
+    }
+    let docs = rd_u64(8);
+    let n = rd_u64(16) as usize;
+    if payload.len() != 24 + 24 * n {
+        return Err("checkpoint: payload size mismatch".into());
+    }
+    let read_series = |idx: usize| -> Vec<f64> {
+        let base = 24 + idx * 8 * n;
+        (0..n)
+            .map(|i| f64::from_le_bytes(payload[base + 8 * i..base + 8 * i + 8].try_into().unwrap()))
+            .collect()
+    };
+    Ok(Some(FeatureVariances {
+        variance: read_series(0),
+        mean: read_series(1),
+        second_moment: read_series(2),
+        docs,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> FeatureVariances {
+        let mut rng = Rng::seed_from(seed);
+        FeatureVariances {
+            variance: (0..n).map(|_| rng.range_f64(0.0, 5.0)).collect(),
+            mean: (0..n).map(|_| rng.gauss()).collect(),
+            second_moment: (0..n).map(|_| rng.range_f64(0.0, 30.0)).collect(),
+            docs: 12345,
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_ckpt_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let fv = sample(300, 1);
+        let key = corpus_key("nytimes:300");
+        let p = tmp("rt.lspv");
+        save(&p, key, &fv).unwrap();
+        let got = load(&p, key).unwrap().unwrap();
+        assert_eq!(got.docs, fv.docs);
+        assert_eq!(got.variance, fv.variance);
+        assert_eq!(got.mean, fv.mean);
+        assert_eq!(got.second_moment, fv.second_moment);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        assert!(load(&tmp("nope.lspv"), 1).unwrap().is_none());
+    }
+
+    #[test]
+    fn key_mismatch_rejected() {
+        let fv = sample(10, 2);
+        let p = tmp("key.lspv");
+        save(&p, corpus_key("a"), &fv).unwrap();
+        let err = load(&p, corpus_key("b")).unwrap_err();
+        assert!(err.contains("key mismatch"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let fv = sample(50, 3);
+        let key = corpus_key("c");
+        let p = tmp("corrupt.lspv");
+        save(&p, key, &fv).unwrap();
+        // flip one payload byte
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load(&p, key).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+        // truncation
+        std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
+        assert!(load(&p, key).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn distinct_identities_distinct_keys() {
+        assert_ne!(corpus_key("nytimes:50000:30000:1"), corpus_key("nytimes:50000:30000:2"));
+    }
+}

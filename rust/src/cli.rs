@@ -1,0 +1,322 @@
+//! Declarative command-line parsing (offline substitute for `clap`, see
+//! DESIGN.md §3).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! typed accessors with defaults, required arguments, and auto-generated
+//! `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_switch: bool,
+    pub required: bool,
+}
+
+/// Specification of a (sub)command.
+#[derive(Clone, Debug, Default)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl CommandSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        CommandSpec { name, about, flags: Vec::new() }
+    }
+
+    /// A flag taking a value, with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_switch: false,
+            required: false,
+        });
+        self
+    }
+
+    /// A required flag taking a value.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: false, required: true });
+        self
+    }
+
+    /// A boolean switch (present = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: true, required: false });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    fn usage(&self, prog: &str) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "usage: {prog} {} [flags]\n\nflags:", self.name);
+        for f in &self.flags {
+            let meta = if f.is_switch {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} <v>", f.name)
+            };
+            let default = match (&f.default, f.required) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, true) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  {meta:<26} {}{default}", f.help);
+        }
+        s
+    }
+}
+
+/// Parsed arguments for one command.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Trailing positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.get(name)
+            .unwrap_or_else(|| panic!("flag --{name} missing (spec bug)"))
+            .to_string()
+    }
+
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| format!("missing required flag --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| format!("invalid value '{raw}' for --{name}: {e}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.parse(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.parse(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.parse(name)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// A multi-command CLI application.
+#[derive(Debug, Default)]
+pub struct App {
+    pub prog: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+/// Result of parsing: the selected command name and its arguments.
+#[derive(Debug)]
+pub enum Parsed {
+    Command(String, Args),
+    /// `--help` or no args: the rendered help text to print.
+    Help(String),
+}
+
+impl App {
+    pub fn new(prog: &'static str, about: &'static str) -> Self {
+        App { prog, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, spec: CommandSpec) -> Self {
+        self.commands.push(spec);
+        self
+    }
+
+    fn top_help(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n\ncommands:", self.prog, self.about);
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:<18} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "\nrun `{} <command> --help` for per-command flags", self.prog);
+        s
+    }
+
+    /// Parse an argument vector (excluding argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Ok(Parsed::Help(self.top_help()));
+        }
+        let cmd_name = &argv[0];
+        let spec = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.top_help()))?;
+
+        let mut values = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Ok(Parsed::Help(spec.usage(self.prog)));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let flag = spec
+                    .find(&name)
+                    .ok_or_else(|| format!("unknown flag --{name} for '{cmd_name}'"))?;
+                if flag.is_switch {
+                    if inline_val.is_some() {
+                        return Err(format!("switch --{name} takes no value"));
+                    }
+                    switches.push(name);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("flag --{name} expects a value"))?
+                        }
+                    };
+                    values.insert(name, val);
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults; enforce required.
+        for f in &spec.flags {
+            if f.is_switch {
+                continue;
+            }
+            if !values.contains_key(f.name) {
+                match (&f.default, f.required) {
+                    (Some(d), _) => {
+                        values.insert(f.name.to_string(), d.clone());
+                    }
+                    (None, true) => {
+                        return Err(format!(
+                            "missing required flag --{}\n\n{}",
+                            f.name,
+                            spec.usage(self.prog)
+                        ));
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(Parsed::Command(cmd_name.clone(), Args { values, switches, positional }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("lsspca", "sparse pca").command(
+            CommandSpec::new("solve", "run solver")
+                .opt("lambda", "0.5", "penalty")
+                .opt("n", "100", "size")
+                .req("input", "input path")
+                .switch("verbose", "chatty"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let p = app().parse(&sv(&["solve", "--input", "x.txt", "--lambda=0.9"])).unwrap();
+        match p {
+            Parsed::Command(name, args) => {
+                assert_eq!(name, "solve");
+                assert_eq!(args.f64("lambda").unwrap(), 0.9);
+                assert_eq!(args.usize("n").unwrap(), 100);
+                assert_eq!(args.str("input"), "x.txt");
+                assert!(!args.switch("verbose"));
+            }
+            _ => panic!("expected command"),
+        }
+    }
+
+    #[test]
+    fn switch_and_positional() {
+        let p = app()
+            .parse(&sv(&["solve", "--input", "a", "--verbose", "pos1"]))
+            .unwrap();
+        if let Parsed::Command(_, args) = p {
+            assert!(args.switch("verbose"));
+            assert_eq!(args.positional, vec!["pos1"]);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let e = app().parse(&sv(&["solve"])).unwrap_err();
+        assert!(e.contains("--input"));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        let e = app().parse(&sv(&["solve", "--bogus", "1"])).unwrap_err();
+        assert!(e.contains("bogus"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(app().parse(&sv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&sv(&[])).unwrap(), Parsed::Help(_)));
+        assert!(matches!(app().parse(&sv(&["solve", "--help"])).unwrap(), Parsed::Help(_)));
+    }
+
+    #[test]
+    fn bad_value_reports_flag() {
+        let p = app().parse(&sv(&["solve", "--input", "a", "--n", "abc"])).unwrap();
+        if let Parsed::Command(_, args) = p {
+            let e = args.usize("n").unwrap_err();
+            assert!(e.contains("--n"));
+        } else {
+            panic!();
+        }
+    }
+}

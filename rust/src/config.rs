@@ -1,0 +1,426 @@
+//! Typed pipeline configuration plus a TOML-subset parser (offline
+//! substitute for `serde` + `toml`, see DESIGN.md §3).
+//!
+//! The subset covers what config files in this repo need: `[section]`
+//! headers, `key = value` with string / integer / float / boolean values,
+//! inline comments with `#`, and blank lines. Arrays of scalars are
+//! supported with `[a, b, c]` syntax.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(xs) => {
+                write!(f, "[")?;
+                for (i, x) in xs.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed document: `section.key -> value` (top-level keys use section "").
+#[derive(Clone, Debug, Default)]
+pub struct Document {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Document {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Document, String> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = inner.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(val.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.entries.insert((section.clone(), key), value);
+        }
+        Ok(doc)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &Path) -> Result<Document, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Document::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    fn typed<T>(
+        &self,
+        section: &str,
+        key: &str,
+        default: T,
+        conv: impl Fn(&Value) -> Option<T>,
+    ) -> Result<T, String> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(v) => {
+                conv(v).ok_or_else(|| format!("[{section}] {key}: unexpected type ({v})"))
+            }
+        }
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
+        self.typed(section, key, default, |v| v.as_f64())
+    }
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize, String> {
+        self.typed(section, key, default, |v| v.as_usize())
+    }
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64, String> {
+        self.typed(section, key, default, |v| v.as_i64().and_then(|i| u64::try_from(i).ok()))
+    }
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+        self.typed(section, key, default, |v| v.as_bool())
+    }
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String, String> {
+        self.typed(section, key, default.to_string(), |v| v.as_str().map(|s| s.to_string()))
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+/// End-to-end pipeline configuration (see `coordinator::Pipeline`).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Path to a docword file (UCI bag-of-words format, optionally .gz);
+    /// empty = generate a synthetic corpus instead.
+    pub input: String,
+    /// Synthetic corpus preset when `input` is empty: "nytimes" | "pubmed".
+    pub synth_preset: String,
+    /// Synthetic corpus scale overrides (0 = preset default).
+    pub synth_docs: usize,
+    pub synth_vocab: usize,
+    pub seed: u64,
+    /// Directory for variance-pass checkpoints (empty = disabled). At
+    /// PubMed scale the pass dominates wall time and is λ-independent, so
+    /// re-runs reuse it (see `checkpoint`).
+    pub cache_dir: String,
+    /// Number of moment-pass worker threads.
+    pub workers: usize,
+    /// Documents per streamed chunk.
+    pub chunk_docs: usize,
+    /// Bounded queue depth between reader and workers (backpressure).
+    pub queue_depth: usize,
+    /// Number of sparse PCs to extract.
+    pub num_pcs: usize,
+    /// Target cardinality per PC (paper: 5).
+    pub target_card: usize,
+    /// Accept solutions with cardinality within ±slack of target (paper
+    /// accepts "close, but not necessarily equal").
+    pub card_slack: usize,
+    /// Hard cap on the reduced problem size n̂ after elimination.
+    pub max_reduced: usize,
+    /// BCA sweeps (paper: K typically 5).
+    pub bca_sweeps: usize,
+    /// ε for the barrier parameter β = ε/n.
+    pub epsilon: f64,
+    /// Solver engine: "native" | "xla".
+    pub engine: String,
+    /// Directory holding AOT artifacts (for engine = "xla").
+    pub artifacts_dir: String,
+    /// Deflation scheme: "projection" | "hotelling".
+    pub deflation: String,
+    /// Compute a dual optimality certificate per component (extra
+    /// eigendecompositions; off by default).
+    pub certify: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            input: String::new(),
+            synth_preset: "nytimes".into(),
+            synth_docs: 0,
+            synth_vocab: 0,
+            seed: 20111212,
+            cache_dir: String::new(),
+            workers: 2,
+            chunk_docs: 2048,
+            queue_depth: 4,
+            num_pcs: 5,
+            target_card: 5,
+            card_slack: 2,
+            max_reduced: 512,
+            bca_sweeps: 5,
+            epsilon: 1e-3,
+            engine: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            deflation: "projection".into(),
+            certify: false,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Build from a parsed TOML-subset document (missing keys = defaults).
+    pub fn from_document(doc: &Document) -> Result<PipelineConfig, String> {
+        let d = PipelineConfig::default();
+        let cfg = PipelineConfig {
+            input: doc.str_or("corpus", "input", &d.input)?,
+            synth_preset: doc.str_or("corpus", "preset", &d.synth_preset)?,
+            synth_docs: doc.usize_or("corpus", "docs", d.synth_docs)?,
+            synth_vocab: doc.usize_or("corpus", "vocab", d.synth_vocab)?,
+            seed: doc.u64_or("corpus", "seed", d.seed)?,
+            cache_dir: doc.str_or("corpus", "cache_dir", &d.cache_dir)?,
+            workers: doc.usize_or("stream", "workers", d.workers)?,
+            chunk_docs: doc.usize_or("stream", "chunk_docs", d.chunk_docs)?,
+            queue_depth: doc.usize_or("stream", "queue_depth", d.queue_depth)?,
+            num_pcs: doc.usize_or("solver", "num_pcs", d.num_pcs)?,
+            target_card: doc.usize_or("solver", "target_card", d.target_card)?,
+            card_slack: doc.usize_or("solver", "card_slack", d.card_slack)?,
+            max_reduced: doc.usize_or("solver", "max_reduced", d.max_reduced)?,
+            bca_sweeps: doc.usize_or("solver", "bca_sweeps", d.bca_sweeps)?,
+            epsilon: doc.f64_or("solver", "epsilon", d.epsilon)?,
+            engine: doc.str_or("solver", "engine", &d.engine)?,
+            artifacts_dir: doc.str_or("solver", "artifacts_dir", &d.artifacts_dir)?,
+            deflation: doc.str_or("solver", "deflation", &d.deflation)?,
+            certify: doc.bool_or("solver", "certify", d.certify)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<PipelineConfig, String> {
+        Self::from_document(&Document::load(path)?)
+    }
+
+    /// Sanity-check field values.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers == 0 {
+            return Err("stream.workers must be >= 1".into());
+        }
+        if self.chunk_docs == 0 {
+            return Err("stream.chunk_docs must be >= 1".into());
+        }
+        if self.queue_depth == 0 {
+            return Err("stream.queue_depth must be >= 1".into());
+        }
+        if self.num_pcs == 0 {
+            return Err("solver.num_pcs must be >= 1".into());
+        }
+        if self.target_card == 0 {
+            return Err("solver.target_card must be >= 1".into());
+        }
+        if self.max_reduced < self.target_card {
+            return Err("solver.max_reduced must be >= target_card".into());
+        }
+        if !(self.epsilon > 0.0) {
+            return Err("solver.epsilon must be > 0".into());
+        }
+        match self.engine.as_str() {
+            "native" | "xla" => {}
+            other => return Err(format!("solver.engine '{other}' (want native|xla)")),
+        }
+        match self.deflation.as_str() {
+            "projection" | "hotelling" => {}
+            other => return Err(format!("solver.deflation '{other}' (want projection|hotelling)")),
+        }
+        match self.synth_preset.as_str() {
+            "nytimes" | "pubmed" => {}
+            other => return Err(format!("corpus.preset '{other}' (want nytimes|pubmed)")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# pipeline config
+[corpus]
+preset = "pubmed"   # larger preset
+docs = 10000
+seed = 7
+
+[stream]
+workers = 3
+
+[solver]
+target_card = 5
+epsilon = 0.01
+engine = "native"
+lambdas = [0.1, 0.2, 0.5]
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.get("corpus", "preset"), Some(&Value::Str("pubmed".into())));
+        assert_eq!(doc.get("corpus", "docs"), Some(&Value::Int(10000)));
+        assert_eq!(doc.get("solver", "epsilon"), Some(&Value::Float(0.01)));
+        match doc.get("solver", "lambdas") {
+            Some(Value::Array(xs)) => assert_eq!(xs.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_stripped_even_inline() {
+        let doc = Document::parse("a = 1 # one\nb = \"x # not a comment\"").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("", "b"), Some(&Value::Str("x # not a comment".into())));
+    }
+
+    #[test]
+    fn config_from_document() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.synth_preset, "pubmed");
+        assert_eq!(cfg.synth_docs, 10000);
+        assert_eq!(cfg.workers, 3);
+        assert_eq!(cfg.epsilon, 0.01);
+        // defaults fill in
+        assert_eq!(cfg.num_pcs, 5);
+    }
+
+    #[test]
+    fn validation_rejects_bad_engine() {
+        let doc = Document::parse("[solver]\nengine = \"gpu\"").unwrap();
+        assert!(PipelineConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let e = Document::parse("ok = 1\nnot a kv line").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+    }
+
+    #[test]
+    fn bad_value_type_reports_key() {
+        let doc = Document::parse("[stream]\nworkers = \"three\"").unwrap();
+        let e = PipelineConfig::from_document(&doc).unwrap_err();
+        assert!(e.contains("workers"), "{e}");
+    }
+
+    #[test]
+    fn default_validates() {
+        PipelineConfig::default().validate().unwrap();
+    }
+}

@@ -1,0 +1,494 @@
+//! The end-to-end pipeline — the paper's §4 workflow as one coordinator:
+//!
+//! ```text
+//! corpus (file or synthetic)
+//!   → streamed variance pass (sharded workers, backpressure)      stream/moments
+//!   → safe feature elimination at λ̂ for the target cardinality    elim
+//!   → streamed reduced-covariance pass                            cov
+//!   → λ-search + BCA solve (native or XLA engine)                 solver/engine
+//!   → deflate, repeat for num_pcs components                      solver::deflate
+//!   → topic table + metrics                                       report
+//! ```
+//!
+//! Deflation note: components after the first are extracted from the same
+//! reduced covariance, re-solving after projecting out earlier PCs — the
+//! paper's "top 5 sparse principal components" workflow. The initial λ̂ for
+//! *elimination* is chosen from the variance profile so the reduced
+//! problem comfortably contains a cardinality-`target` solution
+//! (`max_reduced` caps it; the cap is reported when it binds).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::PipelineConfig;
+use crate::corpus::{CorpusSpec, SynthCorpus};
+use crate::cov::covariance_pass;
+use crate::data::{SymMat, Vocab};
+use crate::elim::{lambda_for_survivors, SafeElimination};
+use crate::engine::{Engine, NativeEngine, XlaEngine};
+use crate::moments::FeatureVariances;
+use crate::solver::bca::BcaOptions;
+use crate::solver::deflate::Scheme;
+use crate::solver::extract::SparsePc;
+use crate::solver::lambda::{search, LambdaSearchOptions};
+use crate::stream::{variance_pass, FileSource, StreamOptions, SynthSource};
+use crate::util::timer::{Profiler, Timer};
+
+/// One extracted component with its reporting metadata.
+#[derive(Clone, Debug)]
+pub struct ComponentReport {
+    /// The sparse PC in *reduced* coordinates.
+    pub pc: SparsePc,
+    /// λ chosen by the cardinality search.
+    pub lambda: f64,
+    /// Problem-(1) objective.
+    pub phi: f64,
+    /// Explained variance on the (deflated) reduced covariance.
+    pub explained_variance: f64,
+    /// Words (or `wNNNNN` labels) of the support, by decreasing |loading|.
+    pub words: Vec<String>,
+    /// Wall seconds to find this PC (λ-search + solves).
+    pub seconds: f64,
+    /// Dual optimality gap (upper bound − φ), when `solver.certify` is on.
+    pub certificate_gap: Option<f64>,
+}
+
+/// Full pipeline output.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub corpus_name: String,
+    pub num_docs: usize,
+    pub vocab_size: usize,
+    pub nnz: u64,
+    /// Sorted variance profile (Fig 2 series).
+    pub sorted_variances: Vec<f64>,
+    /// Elimination metadata (E5 headline).
+    pub reduced_size: usize,
+    pub reduction_factor: f64,
+    pub elim_lambda: f64,
+    pub elim_capped: bool,
+    pub components: Vec<ComponentReport>,
+    /// Second-level timing profile.
+    pub profile: String,
+    pub total_seconds: f64,
+    /// Markdown topic table (the paper's Tables 1–2 format).
+    pub topic_table: String,
+}
+
+/// The pipeline object: configuration + engine.
+pub struct Pipeline {
+    pub config: PipelineConfig,
+}
+
+impl Pipeline {
+    pub fn new(config: PipelineConfig) -> Pipeline {
+        Pipeline { config }
+    }
+
+    fn stream_opts(&self) -> StreamOptions {
+        StreamOptions {
+            workers: self.config.workers,
+            chunk_docs: self.config.chunk_docs,
+            queue_depth: self.config.queue_depth,
+        }
+    }
+
+    fn make_engine(&self) -> Result<Box<dyn Engine>, String> {
+        match self.config.engine.as_str() {
+            "native" => Ok(Box::new(NativeEngine::new())),
+            "xla" => Ok(Box::new(XlaEngine::load(Path::new(&self.config.artifacts_dir))?)),
+            other => Err(format!("unknown engine '{other}'")),
+        }
+    }
+
+    /// Run end-to-end. `input` resolution: configured file path, else a
+    /// synthetic corpus streamed straight from the generator.
+    pub fn run(&self) -> Result<PipelineReport, String> {
+        let total = Timer::start();
+        let mut prof = Profiler::new();
+        let opts = self.stream_opts();
+
+        // --- resolve corpus ------------------------------------------------
+        let synth: Option<SynthCorpus> = if self.config.input.is_empty() {
+            let spec = CorpusSpec::preset(&self.config.synth_preset)
+                .ok_or_else(|| format!("unknown preset {}", self.config.synth_preset))?
+                .scaled(self.config.synth_docs, self.config.synth_vocab);
+            Some(SynthCorpus::new(spec, self.config.seed))
+        } else {
+            None
+        };
+        let input_path = PathBuf::from(&self.config.input);
+        let vocab = match &synth {
+            Some(s) => s.vocab.clone(),
+            None => {
+                let vp = input_path.with_extension("vocab");
+                if vp.exists() {
+                    Vocab::load(&vp)?
+                } else {
+                    Vocab::default()
+                }
+            }
+        };
+        let corpus_name = synth
+            .as_ref()
+            .map(|s| s.spec.name.to_string())
+            .unwrap_or_else(|| input_path.display().to_string());
+        crate::info!("pipeline start: corpus={corpus_name} engine={}", self.config.engine);
+
+        // --- pass 1: variances (with optional checkpoint reuse) -------------
+        let cache = if self.config.cache_dir.is_empty() {
+            None
+        } else {
+            // Fingerprint the corpus identity: synthetic params, or the
+            // input path + its size (cheap mtime-free invalidation).
+            let identity = match &synth {
+                Some(s) => format!(
+                    "synth:{}:{}:{}:{}",
+                    s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
+                ),
+                None => {
+                    let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
+                    format!("file:{}:{len}", input_path.display())
+                }
+            };
+            let key = crate::checkpoint::corpus_key(&identity);
+            Some((crate::checkpoint::path_for(Path::new(&self.config.cache_dir), key), key))
+        };
+        let cached_fv = match &cache {
+            Some((path, key)) => match crate::checkpoint::load(path, *key) {
+                Ok(hit) => {
+                    if hit.is_some() {
+                        crate::info!("variance pass: checkpoint hit at {}", path.display());
+                    }
+                    hit
+                }
+                Err(e) => {
+                    crate::warn_!("ignoring bad variance checkpoint: {e}");
+                    None
+                }
+            },
+            None => None,
+        };
+        let (fv, stats1) = match cached_fv {
+            Some(fv) => {
+                let stats = crate::stream::StreamStats {
+                    docs: fv.docs,
+                    ..Default::default()
+                };
+                (fv, stats)
+            }
+            None => {
+                let (fv, stats) = prof.time("variance_pass", || -> Result<_, String> {
+                    match &synth {
+                        Some(s) => variance_pass(&mut SynthSource::new(s), opts),
+                        None => {
+                            let mut src = FileSource::open(&input_path)?;
+                            variance_pass(&mut src, opts)
+                        }
+                    }
+                })?;
+                if let Some((path, key)) = &cache {
+                    if let Err(e) = crate::checkpoint::save(path, *key, &fv) {
+                        crate::warn_!("could not write variance checkpoint: {e}");
+                    }
+                }
+                (fv, stats)
+            }
+        };
+        crate::info!(
+            "variance pass: {} docs, {} nnz in {:.2}s",
+            stats1.docs,
+            stats1.nnz,
+            stats1.seconds
+        );
+
+        // --- safe elimination ----------------------------------------------
+        let (elim, elim_capped) = prof.time("elimination", || {
+            choose_elimination(&fv, self.config.target_card, self.config.max_reduced)
+        });
+        crate::info!(
+            "safe elimination: λ={:.4e} keeps n̂={} of n={} ({}x reduction{})",
+            elim.lambda,
+            elim.reduced(),
+            elim.original,
+            elim.reduction_factor() as u64,
+            if elim_capped { ", capped" } else { "" }
+        );
+        if elim.reduced() == 0 {
+            return Err("elimination removed every feature; lower solver.target λ̂".into());
+        }
+
+        // --- pass 2: reduced covariance -------------------------------------
+        let (mut cov, _stats2) = prof.time("covariance_pass", || match &synth {
+            Some(s) => covariance_pass(&mut SynthSource::new(s), &elim, opts),
+            None => {
+                let mut src = FileSource::open(&input_path)?;
+                covariance_pass(&mut src, &elim, opts)
+            }
+        })?;
+
+        // --- solve: λ-search + BCA + deflation -------------------------------
+        let mut engine = self.make_engine()?;
+        let scheme = Scheme::parse(&self.config.deflation).ok_or("bad deflation scheme")?;
+        let mut components = Vec::new();
+        for k in 0..self.config.num_pcs {
+            let t = Timer::start();
+            let bca = BcaOptions {
+                max_sweeps: self.config.bca_sweeps,
+                epsilon: self.config.epsilon,
+                tol: 1e-7,
+                ..Default::default()
+            };
+            let sopts = LambdaSearchOptions {
+                target_card: self.config.target_card,
+                slack: self.config.card_slack,
+                bca,
+                ..Default::default()
+            };
+            let res = prof.time("lambda_search+bca", || {
+                search_with_engine(&mut *engine, &cov, &sopts)
+            })?;
+            let words: Vec<String> = res
+                .pc
+                .support
+                .iter()
+                .map(|&r| vocab.word(elim.kept[r]))
+                .collect();
+            crate::info!(
+                "PC {}: card={} λ={:.4} φ={:.4} [{}] in {:.2}s",
+                k + 1,
+                res.pc.cardinality(),
+                res.lambda,
+                res.solution.phi,
+                words.join(", "),
+                t.secs()
+            );
+            let explained = res.pc.explained_variance(&cov);
+            let certificate_gap = if self.config.certify {
+                let cert = prof.time("certificate", || {
+                    // certify on the survivors of res.lambda (the solve
+                    // space); the eliminated coordinates are provably zero.
+                    let diags: Vec<f64> = (0..cov.n()).map(|i| cov.get(i, i)).collect();
+                    let sub_elim = crate::elim::SafeElimination::apply(&diags, res.lambda, None);
+                    let sub = cov.submatrix(&sub_elim.kept);
+                    crate::solver::certificate::certify(&sub, &res.solution.z, res.lambda)
+                });
+                crate::info!(
+                    "PC {} certificate: φ={:.4} ≤ {:.4} (gap {:.2e})",
+                    k + 1,
+                    cert.primal,
+                    cert.upper_bound,
+                    cert.gap
+                );
+                Some(cert.gap)
+            } else {
+                None
+            };
+            prof.time("deflation", || scheme.apply(&mut cov, &res.pc.vector));
+            components.push(ComponentReport {
+                lambda: res.lambda,
+                phi: res.solution.phi,
+                explained_variance: explained,
+                words,
+                seconds: t.secs(),
+                pc: res.pc,
+                certificate_gap,
+            });
+        }
+
+        let topic_table = crate::report::topic_table(
+            &components.iter().map(|c| c.pc.clone()).collect::<Vec<_>>(),
+            &vocab,
+            Some(&elim.kept),
+        );
+        Ok(PipelineReport {
+            corpus_name,
+            num_docs: stats1.docs as usize,
+            vocab_size: fv.variance.len(),
+            nnz: stats1.nnz,
+            sorted_variances: fv.sorted_variances(),
+            reduced_size: elim.reduced(),
+            reduction_factor: elim.reduction_factor(),
+            elim_lambda: elim.lambda,
+            elim_capped,
+            components,
+            profile: prof.report(),
+            total_seconds: total.secs(),
+            topic_table,
+        })
+    }
+}
+
+/// Choose the elimination λ̂ for a target PC cardinality: keep a working
+/// set comfortably larger than the target (the λ-search then operates
+/// inside it), capped at `max_reduced`. Returns the elimination and
+/// whether the cap bound.
+pub fn choose_elimination(
+    fv: &FeatureVariances,
+    target_card: usize,
+    max_reduced: usize,
+) -> (SafeElimination, bool) {
+    // Working set ~ 40× the target cardinality mirrors the paper's
+    // observation (target 5 → n̂ ≤ ~500 on NYTimes within a ~100k vocab).
+    let want = (target_card * 40).min(max_reduced).max(target_card);
+    let lam = lambda_for_survivors(&fv.variance, want);
+    let elim = SafeElimination::from_variances(fv, lam, Some(max_reduced));
+    let capped = elim.capped(&fv.variance);
+    (elim, capped)
+}
+
+/// λ-search where the inner solves run on an [`Engine`].
+pub fn search_with_engine(
+    engine: &mut dyn Engine,
+    sigma: &SymMat,
+    opts: &LambdaSearchOptions,
+) -> Result<crate::solver::lambda::LambdaSearchResult, String> {
+    match engine.name() {
+        // The native fast path uses the allocation-free direct solver.
+        "native" => Ok(search(sigma, opts)),
+        _ => {
+            // Engine-generic path: replicate the search but solve via engine.
+            let mut eopts = *opts;
+            eopts.bca.track_history = false;
+            engine_search(engine, sigma, &eopts)
+        }
+    }
+}
+
+fn engine_search(
+    engine: &mut dyn Engine,
+    sigma: &SymMat,
+    opts: &LambdaSearchOptions,
+) -> Result<crate::solver::lambda::LambdaSearchResult, String> {
+    use crate::solver::extract::leading_sparse_pc;
+    use crate::solver::lambda::{LambdaEval, LambdaSearchResult};
+    let n = sigma.n();
+    let max_diag = (0..n).map(|i| sigma.get(i, i)).fold(0.0f64, f64::max);
+    let (mut lo, mut hi) = (0.0f64, max_diag * 0.999);
+    let mut lambda = 0.5 * hi;
+    let mut trace = Vec::new();
+    let mut best: Option<(f64, crate::solver::bca::BcaSolution, SparsePc)> = None;
+    let mut best_key = (usize::MAX, f64::NEG_INFINITY);
+    let diags: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    for evals in 0..opts.max_evals {
+        // Per-probe safe elimination (Thm 2.1), mirroring the native
+        // search: solve only the surviving submatrix and lift back.
+        let elim = crate::elim::SafeElimination::apply(&diags, lambda, None);
+        let (sol, pc) = if elim.reduced() == n || elim.reduced() == 0 {
+            let sol = crate::engine::bca_solve(engine, sigma, lambda, &opts.bca)?;
+            let pc = leading_sparse_pc(&sol.z, opts.extract_tol);
+            (sol, pc)
+        } else {
+            let sub = sigma.submatrix(&elim.kept);
+            let sol = crate::engine::bca_solve(engine, &sub, lambda, &opts.bca)?;
+            let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
+            pc.vector = elim.lift(&pc.vector);
+            pc.support = pc.support.iter().map(|&r| elim.kept[r]).collect();
+            (sol, pc)
+        };
+        let card = pc.cardinality();
+        trace.push(LambdaEval { lambda, cardinality: card, phi: sol.phi });
+        let key = (card.abs_diff(opts.target_card), sol.phi);
+        if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 > best_key.1) {
+            best_key = key;
+            best = Some((lambda, sol, pc));
+        }
+        let dist = card.abs_diff(opts.target_card);
+        if dist == 0 || (dist <= opts.slack && evals + 1 >= opts.max_evals / 2) {
+            break;
+        }
+        if card > opts.target_card {
+            lo = lambda;
+        } else {
+            hi = lambda;
+        }
+        lambda = 0.5 * (lo + hi);
+        if (hi - lo) < 1e-12 * (1.0 + max_diag) {
+            break;
+        }
+    }
+    let (lambda, solution, pc) = best.ok_or("no evaluations")?;
+    let hit_target = pc.cardinality().abs_diff(opts.target_card) <= opts.slack;
+    Ok(LambdaSearchResult { lambda, solution, pc, trace, hit_target })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_config() -> PipelineConfig {
+        PipelineConfig {
+            synth_preset: "nytimes".into(),
+            synth_docs: 800,
+            synth_vocab: 3000,
+            workers: 2,
+            chunk_docs: 128,
+            num_pcs: 3,
+            target_card: 5,
+            card_slack: 2,
+            max_reduced: 64,
+            bca_sweeps: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_tiny_nytimes() {
+        let report = Pipeline::new(tiny_config()).run().unwrap();
+        assert_eq!(report.num_docs, 800);
+        assert!(report.reduced_size > 0 && report.reduced_size <= 64);
+        assert!(report.reduction_factor > 10.0, "reduction {}", report.reduction_factor);
+        assert_eq!(report.components.len(), 3);
+        for c in &report.components {
+            assert!(c.pc.cardinality() >= 1);
+            assert!(c.pc.cardinality() <= 5 + 4, "card {}", c.pc.cardinality());
+            assert!(!c.words.is_empty());
+        }
+        // topic table mentions at least one planted word from Table 1
+        let planted = ["million", "percent", "point", "play", "official", "president", "school"];
+        assert!(
+            planted.iter().any(|w| report.topic_table.contains(w)),
+            "topic table:\n{}",
+            report.topic_table
+        );
+        // Fig 2 series is sorted descending
+        assert!(report
+            .sorted_variances
+            .windows(2)
+            .all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn first_pc_recovers_a_planted_topic() {
+        let report = Pipeline::new(tiny_config()).run().unwrap();
+        // The strongest PC should consist mostly of words from ONE topic.
+        let spec = CorpusSpec::nytimes();
+        let first = &report.components[0];
+        let mut best_overlap = 0usize;
+        for t in &spec.topics {
+            let overlap = first
+                .words
+                .iter()
+                .filter(|w| t.words.contains(&w.as_str()))
+                .count();
+            best_overlap = best_overlap.max(overlap);
+        }
+        assert!(
+            best_overlap * 2 >= first.words.len(),
+            "PC1 words {:?} do not concentrate on one topic",
+            first.words
+        );
+    }
+
+    #[test]
+    fn choose_elimination_respects_cap() {
+        let fv = crate::moments::FeatureVariances {
+            variance: (0..1000).map(|i| 1.0 / (1.0 + i as f64)).collect(),
+            mean: vec![0.0; 1000],
+            second_moment: vec![0.0; 1000],
+            docs: 10,
+        };
+        let (elim, capped) = choose_elimination(&fv, 5, 50);
+        assert!(elim.reduced() <= 50);
+        assert!(!capped || elim.reduced() == 50);
+    }
+}

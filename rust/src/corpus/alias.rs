@@ -1,0 +1,129 @@
+//! Walker alias method: O(n) construction, O(1) sampling from a fixed
+//! categorical distribution. The document generator draws ~10⁶–10⁸ words
+//! per corpus, so constant-time sampling matters (see §Perf).
+
+use crate::util::rng::Rng;
+
+/// Alias table over `n` categories.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized non-negative weights.
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one category");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must not all be zero");
+        assert!(
+            weights.iter().all(|&w| w >= 0.0 && w.is_finite()),
+            "weights must be finite and non-negative"
+        );
+        // Scaled probabilities * n; split into small/large worklists.
+        let mut prob: Vec<f64> = weights.iter().map(|&w| w * n as f64 / total).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            alias[s as usize] = l;
+            // large donates the deficit of small
+            prob[l as usize] -= 1.0 - prob[s as usize];
+            if prob[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Remaining entries are exactly 1 (up to FP error).
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one category index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{ensure, property};
+
+    #[test]
+    fn single_category() {
+        let t = AliasTable::new(&[3.0]);
+        let mut rng = Rng::seed_from(51);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn zero_weight_never_sampled() {
+        let t = AliasTable::new(&[1.0, 0.0, 1.0]);
+        let mut rng = Rng::seed_from(52);
+        for _ in 0..5000 {
+            assert_ne!(t.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn prop_empirical_matches_weights() {
+        property("alias sampling matches distribution", 8, |rng| {
+            let n = rng.range(2, 12);
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(0.1, 5.0)).collect();
+            let total: f64 = w.iter().sum();
+            let t = AliasTable::new(&w);
+            let draws = 60_000;
+            let mut counts = vec![0usize; n];
+            for _ in 0..draws {
+                counts[t.sample(rng)] += 1;
+            }
+            for i in 0..n {
+                let want = w[i] / total;
+                let got = counts[i] as f64 / draws as f64;
+                // 5-sigma binomial bound
+                let sigma = (want * (1.0 - want) / draws as f64).sqrt();
+                ensure(
+                    (got - want).abs() < 5.0 * sigma + 1e-3,
+                    format!("cat {i}: want {want:.4} got {got:.4}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "weights must not all be zero")]
+    fn all_zero_panics() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

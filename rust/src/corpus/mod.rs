@@ -1,0 +1,23 @@
+//! Synthetic workload generation.
+//!
+//! The paper evaluates on the UCI NYTimes and PubMed bag-of-words corpora,
+//! which are not available in this offline environment. Per DESIGN.md §3 we
+//! substitute generators that preserve exactly the structure the paper's
+//! method exploits:
+//!
+//! - [`synth`] — Zipf-distributed word marginals with planted topics,
+//!   emitted in the UCI `docword` format. Zipf marginals give the
+//!   rapidly-decaying ranked variance profile of Fig 2; planted topics give
+//!   recoverable interpretable sparse PCs (Tables 1–2) *with ground truth*.
+//! - [`models`] — the two covariance models of Fig 1: `Σ = FᵀF/m` with
+//!   Gaussian `F`, and the spiked model `Σ = uuᵀ + VVᵀ/m`.
+//! - [`alias`] — Walker alias sampling, the O(1) categorical sampler the
+//!   document generator is built on.
+
+pub mod alias;
+pub mod models;
+pub mod synth;
+
+pub use alias::AliasTable;
+pub use models::{gaussian_factor_cov, spiked_covariance, spiked_covariance_with_u};
+pub use synth::{CorpusSpec, SynthCorpus, TopicSpec};

@@ -1,0 +1,100 @@
+//! The two covariance models of the paper's Fig 1 speed comparison.
+
+use crate::data::SymMat;
+use crate::linalg::vec::normalize;
+use crate::util::rng::Rng;
+
+/// `Σ = FᵀF / m` with `F ∈ R^{m×n}` i.i.d. standard Gaussian — the
+/// left-panel model of Fig 1.
+pub fn gaussian_factor_cov(n: usize, m: usize, rng: &mut Rng) -> SymMat {
+    let f: Vec<f64> = (0..m * n).map(|_| rng.gauss()).collect();
+    SymMat::gram(m, n, &f)
+}
+
+/// Spiked covariance `Σ = snr·uuᵀ + VVᵀ/m` with a sparse unit spike `u`
+/// of cardinality `card` and Gaussian noise `V ∈ R^{n×m}` — the
+/// right-panel model of Fig 1 (after [2]). Returns `(Σ, u)` so recovery
+/// can be verified against ground truth.
+pub fn spiked_covariance_with_u(
+    n: usize,
+    m: usize,
+    card: usize,
+    snr: f64,
+    rng: &mut Rng,
+) -> (SymMat, Vec<f64>) {
+    assert!(card >= 1 && card <= n);
+    let mut u = vec![0.0f64; n];
+    let support = rng.sample_indices(n, card);
+    for &i in &support {
+        // nonzero magnitudes bounded away from 0 so the support is crisp
+        u[i] = rng.range_f64(0.5, 1.0) * if rng.bool(0.5) { 1.0 } else { -1.0 };
+    }
+    normalize(&mut u);
+    // noise part VVᵀ/m
+    let v: Vec<f64> = (0..n * m).map(|_| rng.gauss()).collect();
+    let mut sigma = SymMat::zeros(n);
+    {
+        let buf = sigma.as_mut_slice();
+        for i in 0..n {
+            for j in i..n {
+                let mut acc = 0.0;
+                let (ri, rj) = (&v[i * m..(i + 1) * m], &v[j * m..(j + 1) * m]);
+                for k in 0..m {
+                    acc += ri[k] * rj[k];
+                }
+                let val = acc / m as f64 + snr * u[i] * u[j];
+                buf[i * n + j] = val;
+                buf[j * n + i] = val;
+            }
+        }
+    }
+    (sigma, u)
+}
+
+/// Spiked covariance, discarding the ground-truth spike.
+pub fn spiked_covariance(n: usize, m: usize, card: usize, snr: f64, rng: &mut Rng) -> SymMat {
+    spiked_covariance_with_u(n, m, card, snr, rng).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::is_psd;
+    use crate::linalg::vec::{cardinality, norm2};
+    use crate::util::check::{ensure, property};
+
+    #[test]
+    fn gaussian_factor_psd_and_scale() {
+        let mut rng = Rng::seed_from(61);
+        let s = gaussian_factor_cov(12, 40, &mut rng);
+        assert!(is_psd(&s, 1e-9));
+        // E[Σ_ii] = 1 for standard Gaussian factors
+        let mean_diag = s.trace() / 12.0;
+        assert!((mean_diag - 1.0).abs() < 0.5, "mean diag {mean_diag}");
+    }
+
+    #[test]
+    fn spiked_properties() {
+        property("spiked model: PSD, unit sparse spike", 10, |rng| {
+            let n = rng.range(5, 30);
+            let card = rng.range(1, n.min(6));
+            let m = rng.range(5, 40);
+            let (s, u) = spiked_covariance_with_u(n, m, card, 2.0, rng);
+            ensure(is_psd(&s, 1e-9), "spiked must be PSD")?;
+            ensure(cardinality(&u, 1e-12) == card, "spike cardinality")?;
+            crate::util::check::close(norm2(&u), 1.0, 1e-9)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn spike_dominates_leading_direction() {
+        // With high SNR the top eigenvector should align with u.
+        let mut rng = Rng::seed_from(63);
+        let (s, u) = spiked_covariance_with_u(30, 200, 3, 10.0, &mut rng);
+        let e = crate::linalg::eig::JacobiEig::new(&s);
+        let v = e.vector(0);
+        let align: f64 = v.iter().zip(&u).map(|(a, b)| a * b).sum::<f64>().abs();
+        assert!(align > 0.95, "alignment {align}");
+    }
+}

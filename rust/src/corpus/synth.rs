@@ -1,0 +1,421 @@
+//! Synthetic bag-of-words corpora with Zipf marginals and planted topics.
+//!
+//! Substitutes the UCI NYTimes / PubMed corpora (DESIGN.md §3). The
+//! generative model:
+//!
+//! - Background word frequencies follow a Zipf law `p(r) ∝ (r+1)^(-s)` —
+//!   this yields the rapidly decaying ranked variance profile of Fig 2.
+//! - `K` planted topics, each with a short signature word list (taken from
+//!   the paper's own Tables 1–2, so a successful reproduction prints
+//!   recognizably the same topic tables). A topical document draws a
+//!   fraction `topic_mix` of its tokens from its topic's signature words,
+//!   making those words *bursty*: high variance, strongly co-occurring —
+//!   exactly the structure sparse PCA extracts.
+//! - Document lengths are Poisson.
+//!
+//! Generation is deterministic given a seed, and the docword writer uses
+//! two passes with the *same* seed (first to count NNZ for the header,
+//! then to emit triples), so corpora of any size stream to disk in O(1)
+//! memory — the property that makes PubMed-scale generation feasible.
+
+use std::path::Path;
+
+use crate::corpus::alias::AliasTable;
+use crate::data::docword::{DocwordHeader, DocwordWriter};
+use crate::data::sparse::{CsrMatrix, TripletMatrix};
+use crate::data::vocab::Vocab;
+use crate::util::rng::Rng;
+
+/// One planted topic.
+#[derive(Clone, Debug)]
+pub struct TopicSpec {
+    pub name: &'static str,
+    pub words: Vec<&'static str>,
+}
+
+/// Full corpus specification.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub name: &'static str,
+    pub num_docs: usize,
+    pub vocab_size: usize,
+    /// Zipf exponent for background frequencies.
+    pub zipf_exponent: f64,
+    /// Zipf rank shift: weight(r) ∝ (r + shift)^(-s). A shift flattens the
+    /// extreme head of the distribution so that the very top background
+    /// words do not out-variance the bursty topic words — mirroring real
+    /// bag-of-words data where stopword-ish heads are pruned from the UCI
+    /// vocabularies (both NYTimes and PubMed ship with stopwords removed).
+    pub zipf_shift: f64,
+    /// Mean document length (tokens).
+    pub mean_doc_len: f64,
+    /// Fraction of documents that are topical (vs pure background).
+    pub topic_doc_fraction: f64,
+    /// Fraction of a topical document's tokens drawn from its topic.
+    pub topic_mix: f64,
+    /// First background rank reserved for topic signature words.
+    pub topic_rank_base: usize,
+    pub topics: Vec<TopicSpec>,
+}
+
+impl CorpusSpec {
+    /// NYTimes-like preset. The five planted topics are the paper's
+    /// Table 1 principal components (business / sports / U.S. / politics /
+    /// education). Scaled to this testbed by default; use
+    /// [`CorpusSpec::scaled`] for other sizes.
+    pub fn nytimes() -> CorpusSpec {
+        CorpusSpec {
+            name: "nytimes-synth",
+            num_docs: 50_000,
+            vocab_size: 30_000,
+            zipf_exponent: 1.05,
+            zipf_shift: 50.0,
+            mean_doc_len: 150.0,
+            topic_doc_fraction: 0.5,
+            topic_mix: 0.25,
+            topic_rank_base: 120,
+            topics: vec![
+                TopicSpec {
+                    name: "business",
+                    words: vec!["million", "percent", "business", "company", "market", "companies"],
+                },
+                TopicSpec {
+                    name: "sports",
+                    words: vec!["point", "play", "team", "season", "game"],
+                },
+                TopicSpec {
+                    name: "us",
+                    words: vec!["official", "government", "united_states", "u_s", "attack"],
+                },
+                TopicSpec {
+                    name: "politics",
+                    words: vec!["president", "campaign", "bush", "administration"],
+                },
+                TopicSpec {
+                    name: "education",
+                    words: vec!["school", "program", "children", "student"],
+                },
+            ],
+        }
+    }
+
+    /// PubMed-like preset; topics are the paper's Table 2 components.
+    pub fn pubmed() -> CorpusSpec {
+        CorpusSpec {
+            name: "pubmed-synth",
+            num_docs: 80_000,
+            vocab_size: 40_000,
+            zipf_exponent: 1.1,
+            zipf_shift: 50.0,
+            mean_doc_len: 90.0, // abstracts are shorter than articles
+            topic_doc_fraction: 0.5,
+            topic_mix: 0.25,
+            topic_rank_base: 120,
+            topics: vec![
+                TopicSpec {
+                    name: "clinical",
+                    words: vec!["patient", "cell", "treatment", "protein", "disease"],
+                },
+                TopicSpec {
+                    name: "pharmacology",
+                    words: vec!["effect", "level", "activity", "concentration", "rat"],
+                },
+                TopicSpec {
+                    name: "molecular",
+                    words: vec!["human", "expression", "receptor", "binding"],
+                },
+                TopicSpec {
+                    name: "oncology",
+                    words: vec!["tumor", "mice", "cancer", "malignant", "carcinoma"],
+                },
+                TopicSpec {
+                    name: "pediatric",
+                    words: vec!["year", "infection", "age", "children", "child"],
+                },
+            ],
+        }
+    }
+
+    /// Preset by name ("nytimes" | "pubmed").
+    pub fn preset(name: &str) -> Option<CorpusSpec> {
+        match name {
+            "nytimes" => Some(Self::nytimes()),
+            "pubmed" => Some(Self::pubmed()),
+            _ => None,
+        }
+    }
+
+    /// Override document and vocabulary counts (0 keeps the preset value).
+    pub fn scaled(mut self, docs: usize, vocab: usize) -> CorpusSpec {
+        if docs > 0 {
+            self.num_docs = docs;
+        }
+        if vocab > 0 {
+            self.vocab_size = vocab;
+        }
+        let needed = self.topic_rank_base + self.topics.iter().map(|t| t.words.len()).sum::<usize>();
+        assert!(
+            self.vocab_size > needed,
+            "vocab_size {} too small for topic layout (need > {needed})",
+            self.vocab_size
+        );
+        self
+    }
+}
+
+/// A prepared generator for one corpus.
+pub struct SynthCorpus {
+    pub spec: CorpusSpec,
+    pub seed: u64,
+    /// Vocabulary (topic words at their planted ids, `wNNNNN` elsewhere).
+    pub vocab: Vocab,
+    /// Planted topic → vocab ids (ground truth for recovery checks).
+    pub topic_word_ids: Vec<Vec<usize>>,
+    background: AliasTable,
+    topic_tables: Vec<AliasTable>,
+}
+
+impl SynthCorpus {
+    pub fn new(spec: CorpusSpec, seed: u64) -> SynthCorpus {
+        let v = spec.vocab_size;
+        // Background Zipf weights over all vocab ids. Vocab id == frequency
+        // rank (id 0 most frequent) — matches how UCI vocab files tend to
+        // correlate with frequency, and makes Fig 2's x-axis natural.
+        let mut weights: Vec<f64> = (0..v)
+            .map(|r| 1.0 / ((r + 1) as f64 + spec.zipf_shift).powf(spec.zipf_exponent))
+            .collect();
+        // Plant topic words at consecutive ids starting at topic_rank_base;
+        // their *background* weight stays the Zipf weight of that rank (they
+        // are ordinary mid-frequency words outside their topic).
+        let mut names: Vec<String> = (0..v).map(|i| format!("w{i:06}")).collect();
+        let mut topic_word_ids = Vec::new();
+        let mut next = spec.topic_rank_base;
+        for t in &spec.topics {
+            let mut ids = Vec::new();
+            for w in &t.words {
+                assert!(next < v, "vocab too small for topic words");
+                names[next] = (*w).to_string();
+                ids.push(next);
+                next += 1;
+            }
+            topic_word_ids.push(ids);
+        }
+        // Per-topic signature sampler: mildly uneven weights so the PC
+        // loading order is stable (first listed word loads heaviest,
+        // mirroring the paper's table ordering).
+        let topic_tables = topic_word_ids
+            .iter()
+            .map(|ids| {
+                let w: Vec<f64> = (0..ids.len()).map(|k| 1.0 / (1.0 + 0.25 * k as f64)).collect();
+                AliasTable::new(&w)
+            })
+            .collect();
+        // Topic words keep their background weight too — fine; build table.
+        let background = AliasTable::new(&weights);
+        weights.clear();
+        SynthCorpus {
+            spec,
+            seed,
+            vocab: Vocab::new(names),
+            topic_word_ids,
+            background,
+            topic_tables,
+        }
+    }
+
+    /// Topic assignment for a document index (None = background doc).
+    /// Derived from the doc's own RNG so both generation passes agree.
+    fn doc_topic(&self, rng: &mut Rng) -> Option<usize> {
+        if rng.bool(self.spec.topic_doc_fraction) {
+            Some(rng.below(self.spec.topics.len()))
+        } else {
+            None
+        }
+    }
+
+    /// Generate document `d` as sorted `(word_id, count)` pairs.
+    ///
+    /// Each document uses an RNG seeded from `(corpus seed, d)`, so
+    /// generation is random-access: pass 1 (count nnz) and pass 2 (write)
+    /// see identical documents, and chunked/parallel generation is safe.
+    pub fn generate_doc(&self, d: usize) -> Vec<(u32, f64)> {
+        let mut rng = Rng::seed_from(self.seed ^ (d as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let topic = self.doc_topic(&mut rng);
+        let len = rng.poisson(self.spec.mean_doc_len).max(1);
+        let mut counts: Vec<(u32, f64)> = Vec::with_capacity(len as usize / 2);
+        let mut raw: Vec<u32> = Vec::with_capacity(len as usize);
+        for _ in 0..len {
+            let w = match topic {
+                Some(t) if rng.f64() < self.spec.topic_mix => {
+                    let k = self.topic_tables[t].sample(&mut rng);
+                    self.topic_word_ids[t][k] as u32
+                }
+                _ => self.background.sample(&mut rng) as u32,
+            };
+            raw.push(w);
+        }
+        raw.sort_unstable();
+        for w in raw {
+            match counts.last_mut() {
+                Some((lw, c)) if *lw == w => *c += 1.0,
+                _ => counts.push((w, 1.0)),
+            }
+        }
+        counts
+    }
+
+    /// Write the corpus in UCI docword format (two deterministic passes:
+    /// count then emit). Also writes `<path>.vocab` with the vocabulary.
+    pub fn write_docword(&self, path: &Path) -> Result<DocwordHeader, String> {
+        // pass 1: count nnz
+        let mut nnz = 0usize;
+        for d in 0..self.spec.num_docs {
+            nnz += self.generate_doc(d).len();
+        }
+        let header = DocwordHeader {
+            num_docs: self.spec.num_docs,
+            vocab_size: self.spec.vocab_size,
+            nnz,
+        };
+        // pass 2: emit
+        let mut w = DocwordWriter::create(path, header)?;
+        for d in 0..self.spec.num_docs {
+            let doc = self.generate_doc(d);
+            w.write_doc(d, &doc)?;
+        }
+        w.finish()?;
+        let vocab_path = path.with_extension("vocab");
+        self.vocab.save(&vocab_path)?;
+        Ok(header)
+    }
+
+    /// Materialize the whole corpus as an in-memory CSR matrix (for tests
+    /// and small benchmark runs; prefer streaming for large corpora).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut t = TripletMatrix::new(self.spec.num_docs, self.spec.vocab_size);
+        for d in 0..self.spec.num_docs {
+            for (w, c) in self.generate_doc(d) {
+                t.push(d, w as usize, c);
+            }
+        }
+        t.to_csr()
+    }
+
+    /// All planted topic word ids, flattened (ground truth support union).
+    pub fn planted_ids(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self.topic_word_ids.iter().flatten().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moments::FeatureMoments;
+
+    fn tiny() -> SynthCorpus {
+        let spec = CorpusSpec::nytimes().scaled(400, 2000);
+        SynthCorpus::new(spec, 99)
+    }
+
+    #[test]
+    fn docs_deterministic_and_sorted() {
+        let c = tiny();
+        let d1 = c.generate_doc(7);
+        let d2 = c.generate_doc(7);
+        assert_eq!(d1, d2);
+        assert!(d1.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(!d1.is_empty());
+    }
+
+    #[test]
+    fn distinct_docs_differ() {
+        let c = tiny();
+        assert_ne!(c.generate_doc(1), c.generate_doc(2));
+    }
+
+    #[test]
+    fn vocab_contains_topic_words() {
+        let c = tiny();
+        assert_eq!(c.topic_word_ids.len(), 5);
+        let id = c.topic_word_ids[0][0];
+        assert_eq!(c.vocab.word(id), "million");
+        // planted ids are in the reserved band
+        for ids in &c.topic_word_ids {
+            for &i in ids {
+                assert!(i >= c.spec.topic_rank_base);
+                assert!(i < c.spec.topic_rank_base + 30);
+            }
+        }
+    }
+
+    #[test]
+    fn write_and_reread_roundtrip() {
+        let spec = CorpusSpec::nytimes().scaled(60, 1500);
+        let c = SynthCorpus::new(spec, 5);
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_synth_{}.txt", std::process::id()));
+        let hdr = c.write_docword(&p).unwrap();
+        assert_eq!(hdr.num_docs, 60);
+        let mut r = crate::data::docword::DocwordReader::open(&p).unwrap();
+        assert_eq!(r.header(), hdr);
+        let mut total = 0;
+        let mut docs = 0;
+        while let Some(chunk) = r.next_chunk(16).unwrap() {
+            for doc in &chunk.docs {
+                assert_eq!(doc.words, c.generate_doc(doc.id));
+                docs += 1;
+                total += doc.words.len();
+            }
+        }
+        assert_eq!(docs, 60);
+        assert_eq!(total, hdr.nnz);
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(p.with_extension("vocab")).ok();
+    }
+
+    #[test]
+    fn topic_words_are_high_variance() {
+        // The planted mechanism must make signature words high-variance —
+        // that's what lets them survive safe elimination.
+        let c = tiny();
+        let mut m = FeatureMoments::new(c.spec.vocab_size);
+        for d in 0..c.spec.num_docs {
+            m.push_doc(&c.generate_doc(d));
+        }
+        let f = m.finalize();
+        let ranked = f.ranked();
+        let top: Vec<usize> = ranked.iter().take(80).map(|&(i, _)| i).collect();
+        let planted = c.planted_ids();
+        let hits = planted.iter().filter(|id| top.contains(id)).count();
+        assert!(
+            hits >= planted.len() * 3 / 4,
+            "only {hits}/{} planted words in top-80 by variance",
+            planted.len()
+        );
+    }
+
+    #[test]
+    fn variance_profile_decays() {
+        let c = tiny();
+        let mut m = FeatureMoments::new(c.spec.vocab_size);
+        for d in 0..c.spec.num_docs {
+            m.push_doc(&c.generate_doc(d));
+        }
+        let sv = m.finalize().sorted_variances();
+        // strong decay: median variance orders of magnitude below max
+        let mid = sv[sv.len() / 2];
+        assert!(sv[0] > 50.0 * mid.max(1e-12), "sv0={} mid={}", sv[0], mid);
+    }
+
+    #[test]
+    fn presets_valid() {
+        for name in ["nytimes", "pubmed"] {
+            let s = CorpusSpec::preset(name).unwrap();
+            assert!(s.vocab_size > s.topic_rank_base + 40);
+            assert_eq!(s.topics.len(), 5);
+        }
+        assert!(CorpusSpec::preset("bogus").is_none());
+    }
+}

@@ -1,0 +1,273 @@
+//! Reduced covariance assembly — the second streaming pass.
+//!
+//! After safe elimination keeps n̂ ≪ n features, the solver needs the dense
+//! n̂ × n̂ *centered* covariance of exactly those features:
+//!
+//! ```text
+//! Σ̂_ab = (1/m) Σ_d x_{d,k(a)} x_{d,k(b)}  −  μ_a μ_b
+//! ```
+//!
+//! A document contributes the outer product of its *kept* words only —
+//! O(k_d²) work for k_d kept words in the document, so the pass stays
+//! cheap even at PubMed scale. Partial accumulators (sum of outer products
+//! + per-feature sums) merge additively across workers.
+
+use crate::data::docword::DocChunk;
+use crate::data::sparse::CsrMatrix;
+use crate::data::SymMat;
+use crate::elim::SafeElimination;
+use crate::stream::{parallel_fold, ChunkSource, StreamOptions, StreamStats};
+
+/// Mergeable accumulator for the covariance pass.
+#[derive(Clone, Debug)]
+pub struct CovAccum {
+    /// n̂ × n̂ sum of outer products over kept coordinates (upper triangle
+    /// maintained, mirrored at finalize).
+    outer: Vec<f64>,
+    /// Per-kept-feature sums.
+    sums: Vec<f64>,
+    /// Documents seen.
+    docs: u64,
+    nhat: usize,
+}
+
+impl CovAccum {
+    pub fn new(nhat: usize) -> CovAccum {
+        CovAccum { outer: vec![0.0; nhat * nhat], sums: vec![0.0; nhat], docs: 0, nhat }
+    }
+
+    /// Fold one document given a full→reduced lookup (u32::MAX = dropped).
+    pub fn push_doc(&mut self, words: &[(u32, f64)], lookup: &[u32]) {
+        self.docs += 1;
+        // Gather kept entries (reduced index, count).
+        let mut kept: Vec<(u32, f64)> = Vec::new();
+        for &(w, c) in words {
+            let r = lookup[w as usize];
+            if r != u32::MAX {
+                kept.push((r, c));
+            }
+        }
+        for (i, &(a, ca)) in kept.iter().enumerate() {
+            self.sums[a as usize] += ca;
+            for &(b, cb) in &kept[i..] {
+                let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+                self.outer[lo as usize * self.nhat + hi as usize] += ca * cb;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &CovAccum) {
+        assert_eq!(self.nhat, other.nhat);
+        for (a, b) in self.outer.iter_mut().zip(&other.outer) {
+            *a += b;
+        }
+        for (a, b) in self.sums.iter_mut().zip(&other.sums) {
+            *a += b;
+        }
+        self.docs += other.docs;
+    }
+
+    /// Finalize into a centered covariance matrix (population convention).
+    pub fn finalize(&self) -> SymMat {
+        let m = self.docs.max(1) as f64;
+        let nhat = self.nhat;
+        let mut cov = SymMat::zeros(nhat);
+        for a in 0..nhat {
+            let mu_a = self.sums[a] / m;
+            for b in a..nhat {
+                let mu_b = self.sums[b] / m;
+                let v = self.outer[a * nhat + b] / m - mu_a * mu_b;
+                cov.set(a, b, v);
+            }
+        }
+        cov
+    }
+}
+
+/// Build the full→reduced lookup table from an elimination result.
+pub fn reduced_lookup(elim: &SafeElimination) -> Vec<u32> {
+    let mut lookup = vec![u32::MAX; elim.original];
+    for (r, &orig) in elim.kept.iter().enumerate() {
+        lookup[orig] = r as u32;
+    }
+    lookup
+}
+
+/// Streaming reduced-covariance pass.
+pub fn covariance_pass<S: ChunkSource>(
+    source: &mut S,
+    elim: &SafeElimination,
+    opts: StreamOptions,
+) -> Result<(SymMat, StreamStats), String> {
+    let nhat = elim.reduced();
+    let lookup = std::sync::Arc::new(reduced_lookup(elim));
+    let (acc, stats) = parallel_fold(
+        source,
+        opts,
+        || CovAccum::new(nhat),
+        {
+            let lookup = std::sync::Arc::clone(&lookup);
+            move |acc: &mut CovAccum, chunk: &DocChunk| {
+                for doc in &chunk.docs {
+                    acc.push_doc(&doc.words, &lookup);
+                }
+            }
+        },
+        |a, b| a.merge(&b),
+    )?;
+    Ok((acc.finalize(), stats))
+}
+
+/// Dense reference: centered covariance of selected columns of a CSR
+/// matrix (O(m·n̂) memory-light two-pass; used by tests and small runs).
+pub fn covariance_from_csr(m: &CsrMatrix, kept: &[usize]) -> SymMat {
+    let nhat = kept.len();
+    let rows = m.rows.max(1) as f64;
+    let mut lookup = vec![u32::MAX; m.cols];
+    for (r, &orig) in kept.iter().enumerate() {
+        lookup[orig] = r as u32;
+    }
+    let mut acc = CovAccum::new(nhat);
+    for d in 0..m.rows {
+        let words: Vec<(u32, f64)> = m.row(d).map(|(c, v)| (c as u32, v)).collect();
+        acc.push_doc(&words, &lookup);
+    }
+    let _ = rows;
+    acc.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusSpec, SynthCorpus};
+    use crate::elim::SafeElimination;
+    use crate::stream::{variance_pass, SynthSource};
+    use crate::util::check::{close, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_matches_dense_definition() {
+        property("covariance pass == dense centered covariance", 15, |rng| {
+            // random small sparse corpus
+            let docs = rng.range(2, 30);
+            let vocab = rng.range(2, 12);
+            let mut dense = vec![0.0f64; docs * vocab];
+            let mut chunks = Vec::new();
+            for d in 0..docs {
+                let mut words = Vec::new();
+                for w in 0..vocab {
+                    if rng.bool(0.5) {
+                        let c = (1 + rng.below(4)) as f64;
+                        dense[d * vocab + w] = c;
+                        words.push((w as u32, c));
+                    }
+                }
+                chunks.push(words);
+            }
+            // keep a random subset
+            let nkeep = rng.range(1, vocab + 1);
+            let kept_orig = rng.sample_indices(vocab, nkeep);
+            let elim = SafeElimination {
+                lambda: 0.0,
+                original: vocab,
+                kept: kept_orig.clone(),
+                kept_variances: vec![0.0; nkeep],
+            };
+            let lookup = reduced_lookup(&elim);
+            let mut acc = CovAccum::new(nkeep);
+            for words in &chunks {
+                acc.push_doc(words, &lookup);
+            }
+            let cov = acc.finalize();
+            // dense reference
+            for a in 0..nkeep {
+                for b in 0..nkeep {
+                    let (i, j) = (kept_orig[a], kept_orig[b]);
+                    let mi: f64 =
+                        (0..docs).map(|d| dense[d * vocab + i]).sum::<f64>() / docs as f64;
+                    let mj: f64 =
+                        (0..docs).map(|d| dense[d * vocab + j]).sum::<f64>() / docs as f64;
+                    let want: f64 = (0..docs)
+                        .map(|d| (dense[d * vocab + i] - mi) * (dense[d * vocab + j] - mj))
+                        .sum::<f64>()
+                        / docs as f64;
+                    close(cov.get(a, b), want, 1e-10)?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_equals_single() {
+        let mut rng = Rng::seed_from(71);
+        let vocab = 6;
+        let lookup: Vec<u32> = (0..vocab).map(|i| i as u32).collect();
+        let docs: Vec<Vec<(u32, f64)>> = (0..20)
+            .map(|_| {
+                let mut words = Vec::new();
+                for w in 0..vocab {
+                    if rng.bool(0.5) {
+                        words.push((w as u32, 1.0 + rng.below(3) as f64));
+                    }
+                }
+                words
+            })
+            .collect();
+        let mut whole = CovAccum::new(vocab);
+        for d in &docs {
+            whole.push_doc(d, &lookup);
+        }
+        let mut a = CovAccum::new(vocab);
+        let mut b = CovAccum::new(vocab);
+        for d in &docs[..9] {
+            a.push_doc(d, &lookup);
+        }
+        for d in &docs[9..] {
+            b.push_doc(d, &lookup);
+        }
+        a.merge(&b);
+        let (ca, cw) = (a.finalize(), whole.finalize());
+        for i in 0..vocab {
+            for j in 0..vocab {
+                assert!((ca.get(i, j) - cw.get(i, j)).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matches_variance_pass() {
+        // The covariance diagonal must equal the variances from the moment
+        // pass — the consistency which Thm 2.1's λ < σ²min assumption needs.
+        let c = SynthCorpus::new(CorpusSpec::nytimes().scaled(200, 800), 3);
+        let opts = StreamOptions { workers: 2, chunk_docs: 50, queue_depth: 2 };
+        let (fv, _) = variance_pass(&mut SynthSource::new(&c), opts).unwrap();
+        let elim = SafeElimination::from_variances(&fv, 0.05, Some(32));
+        assert!(elim.reduced() > 0);
+        let (cov, _) = covariance_pass(&mut SynthSource::new(&c), &elim, opts).unwrap();
+        for (r, &orig) in elim.kept.iter().enumerate() {
+            assert!(
+                (cov.get(r, r) - fv.variance[orig]).abs() < 1e-9 * (1.0 + fv.variance[orig]),
+                "diag mismatch at {r}"
+            );
+        }
+        // PSD check on the assembled covariance
+        assert!(crate::linalg::chol::is_psd(&cov, 1e-8), "covariance must be PSD");
+    }
+
+    #[test]
+    fn csr_reference_agrees_with_streaming() {
+        let c = SynthCorpus::new(CorpusSpec::nytimes().scaled(150, 600), 9);
+        let csr = c.to_csr();
+        let opts = StreamOptions { workers: 1, chunk_docs: 64, queue_depth: 2 };
+        let (fv, _) = variance_pass(&mut SynthSource::new(&c), opts).unwrap();
+        let elim = SafeElimination::from_variances(&fv, 0.02, Some(20));
+        let (cov_stream, _) = covariance_pass(&mut SynthSource::new(&c), &elim, opts).unwrap();
+        let cov_csr = covariance_from_csr(&csr, &elim.kept);
+        for i in 0..elim.reduced() {
+            for j in 0..elim.reduced() {
+                assert!((cov_stream.get(i, j) - cov_csr.get(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! The UCI "Bag of Words" `docword` on-disk format, exactly as used by the
+//! paper's NYTimes and PubMed data sets:
+//!
+//! ```text
+//! D            <- number of documents
+//! W            <- vocabulary size
+//! NNZ          <- number of (doc, word) pairs
+//! docID wordID count     <- 1-based ids, one triple per line
+//! ...
+//! ```
+//!
+//! Files may be gzip-compressed (`.gz` suffix), matching the UCI
+//! distribution. The reader streams documents in bounded-size chunks so a
+//! 7.8 GB PubMed-scale file never needs to fit in memory — this is the
+//! property the paper's pre-processing pass depends on.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+
+/// Header of a docword file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DocwordHeader {
+    pub num_docs: usize,
+    pub vocab_size: usize,
+    pub nnz: usize,
+}
+
+/// One document: sorted `(word_id_0based, count)` pairs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Doc {
+    pub id: usize,
+    pub words: Vec<(u32, f64)>,
+}
+
+/// A chunk of consecutive documents, the unit handed to moment workers.
+#[derive(Clone, Debug, Default)]
+pub struct DocChunk {
+    pub docs: Vec<Doc>,
+}
+
+impl DocChunk {
+    pub fn total_nnz(&self) -> usize {
+        self.docs.iter().map(|d| d.words.len()).sum()
+    }
+}
+
+fn open_maybe_gz(path: &Path) -> std::io::Result<Box<dyn BufRead + Send>> {
+    let f = File::open(path)?;
+    if path.extension().is_some_and(|e| e == "gz") {
+        Ok(Box::new(BufReader::with_capacity(1 << 20, GzDecoder::new(f))))
+    } else {
+        Ok(Box::new(BufReader::with_capacity(1 << 20, f)))
+    }
+}
+
+/// Streaming reader over a docword file.
+pub struct DocwordReader {
+    header: DocwordHeader,
+    lines: std::io::Lines<Box<dyn BufRead + Send>>,
+    /// Lookahead triple that belongs to the next document.
+    pending: Option<(usize, u32, f64)>,
+    docs_seen: usize,
+    nnz_seen: usize,
+}
+
+impl DocwordReader {
+    /// Open a (possibly gzipped) docword file and parse the header.
+    pub fn open(path: &Path) -> Result<DocwordReader, String> {
+        let reader = open_maybe_gz(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+        let mut lines = reader.lines();
+        let mut next_header = |what: &str| -> Result<usize, String> {
+            let line = lines
+                .next()
+                .ok_or_else(|| format!("truncated header: missing {what}"))?
+                .map_err(|e| format!("read error in header: {e}"))?;
+            line.trim()
+                .parse::<usize>()
+                .map_err(|_| format!("bad {what} line: '{line}'"))
+        };
+        let num_docs = next_header("D")?;
+        let vocab_size = next_header("W")?;
+        let nnz = next_header("NNZ")?;
+        Ok(DocwordReader {
+            header: DocwordHeader { num_docs, vocab_size, nnz },
+            lines,
+            pending: None,
+            docs_seen: 0,
+            nnz_seen: 0,
+        })
+    }
+
+    pub fn header(&self) -> DocwordHeader {
+        self.header
+    }
+
+    fn next_triple(&mut self) -> Result<Option<(usize, u32, f64)>, String> {
+        if let Some(t) = self.pending.take() {
+            return Ok(Some(t));
+        }
+        for line in self.lines.by_ref() {
+            let line = line.map_err(|e| format!("read error: {e}"))?;
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let mut it = trimmed.split_ascii_whitespace();
+            let doc: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("bad docID in line '{trimmed}'"))?;
+            let word: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("bad wordID in line '{trimmed}'"))?;
+            let count: f64 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| format!("bad count in line '{trimmed}'"))?;
+            if doc == 0 || word == 0 {
+                return Err(format!("ids are 1-based; got line '{trimmed}'"));
+            }
+            if word > self.header.vocab_size {
+                return Err(format!(
+                    "wordID {word} exceeds W={} in line '{trimmed}'",
+                    self.header.vocab_size
+                ));
+            }
+            self.nnz_seen += 1;
+            return Ok(Some((doc - 1, (word - 1) as u32, count)));
+        }
+        Ok(None)
+    }
+
+    /// Read the next chunk of up to `max_docs` documents. Returns `None` at
+    /// end of stream. Triples for one document must be contiguous (UCI files
+    /// are sorted by docID).
+    pub fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String> {
+        assert!(max_docs > 0);
+        let mut chunk = DocChunk::default();
+        let mut cur: Option<Doc> = None;
+        loop {
+            let triple = self.next_triple()?;
+            match triple {
+                None => {
+                    if let Some(d) = cur.take() {
+                        self.docs_seen += 1;
+                        chunk.docs.push(d);
+                    }
+                    break;
+                }
+                Some((doc_id, w, c)) => {
+                    let start_new = cur.as_ref().is_none_or(|d| d.id != doc_id);
+                    if start_new {
+                        if let Some(d) = cur.take() {
+                            self.docs_seen += 1;
+                            chunk.docs.push(d);
+                            if chunk.docs.len() >= max_docs {
+                                // This triple belongs to the next chunk.
+                                self.pending = Some((doc_id, w, c));
+                                return Ok(Some(chunk));
+                            }
+                        }
+                        cur = Some(Doc { id: doc_id, words: vec![(w, c)] });
+                    } else {
+                        cur.as_mut().unwrap().words.push((w, c));
+                    }
+                }
+            }
+        }
+        if chunk.docs.is_empty() {
+            Ok(None)
+        } else {
+            Ok(Some(chunk))
+        }
+    }
+
+    /// Documents and nnz consumed so far.
+    pub fn progress(&self) -> (usize, usize) {
+        (self.docs_seen, self.nnz_seen)
+    }
+}
+
+/// Writer producing the same format (used by the synthetic corpus
+/// generator; `.gz` suffix enables compression).
+pub struct DocwordWriter {
+    out: Box<dyn Write + Send>,
+    nnz_written: usize,
+    declared: DocwordHeader,
+}
+
+impl DocwordWriter {
+    pub fn create(path: &Path, header: DocwordHeader) -> Result<DocwordWriter, String> {
+        let f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+        let mut out: Box<dyn Write + Send> = if path.extension().is_some_and(|e| e == "gz") {
+            Box::new(BufWriter::with_capacity(
+                1 << 20,
+                GzEncoder::new(f, Compression::fast()),
+            ))
+        } else {
+            Box::new(BufWriter::with_capacity(1 << 20, f))
+        };
+        write!(out, "{}\n{}\n{}\n", header.num_docs, header.vocab_size, header.nnz)
+            .map_err(|e| format!("write header: {e}"))?;
+        Ok(DocwordWriter { out, nnz_written: 0, declared: header })
+    }
+
+    /// Write one document's `(word_id_0based, count)` pairs.
+    pub fn write_doc(&mut self, doc_id_0based: usize, words: &[(u32, f64)]) -> Result<(), String> {
+        for &(w, c) in words {
+            // counts in UCI files are integers; keep integer formatting when exact
+            if c.fract() == 0.0 {
+                writeln!(self.out, "{} {} {}", doc_id_0based + 1, w + 1, c as i64)
+            } else {
+                writeln!(self.out, "{} {} {}", doc_id_0based + 1, w + 1, c)
+            }
+            .map_err(|e| format!("write doc: {e}"))?;
+            self.nnz_written += 1;
+        }
+        Ok(())
+    }
+
+    /// Flush and verify the declared nnz.
+    pub fn finish(mut self) -> Result<(), String> {
+        self.out.flush().map_err(|e| format!("flush: {e}"))?;
+        if self.nnz_written != self.declared.nnz {
+            return Err(format!(
+                "nnz mismatch: declared {} wrote {}",
+                self.declared.nnz, self.nnz_written
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn write_sample(path: &Path) {
+        let hdr = DocwordHeader { num_docs: 3, vocab_size: 5, nnz: 5 };
+        let mut w = DocwordWriter::create(path, hdr).unwrap();
+        w.write_doc(0, &[(0, 2.0), (3, 1.0)]).unwrap();
+        w.write_doc(1, &[(1, 4.0)]).unwrap();
+        w.write_doc(2, &[(0, 1.0), (4, 7.0)]).unwrap();
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_plain() {
+        let p = tmpfile("roundtrip.txt");
+        write_sample(&p);
+        let mut r = DocwordReader::open(&p).unwrap();
+        assert_eq!(r.header(), DocwordHeader { num_docs: 3, vocab_size: 5, nnz: 5 });
+        let chunk = r.next_chunk(10).unwrap().unwrap();
+        assert_eq!(chunk.docs.len(), 3);
+        assert_eq!(chunk.docs[0].words, vec![(0, 2.0), (3, 1.0)]);
+        assert_eq!(chunk.docs[2].words, vec![(0, 1.0), (4, 7.0)]);
+        assert!(r.next_chunk(10).unwrap().is_none());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn roundtrip_gzip() {
+        let p = tmpfile("roundtrip.txt.gz");
+        write_sample(&p);
+        let mut r = DocwordReader::open(&p).unwrap();
+        let chunk = r.next_chunk(10).unwrap().unwrap();
+        assert_eq!(chunk.total_nnz(), 5);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn chunk_boundaries_respected() {
+        let p = tmpfile("chunks.txt");
+        write_sample(&p);
+        let mut r = DocwordReader::open(&p).unwrap();
+        let c1 = r.next_chunk(2).unwrap().unwrap();
+        assert_eq!(c1.docs.len(), 2);
+        let c2 = r.next_chunk(2).unwrap().unwrap();
+        assert_eq!(c2.docs.len(), 1);
+        assert_eq!(c2.docs[0].id, 2);
+        assert!(r.next_chunk(2).unwrap().is_none());
+        assert_eq!(r.progress().0, 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_zero_based_ids() {
+        let p = tmpfile("zerobased.txt");
+        std::fs::write(&p, "1\n5\n1\n0 3 1\n").unwrap();
+        let mut r = DocwordReader::open(&p).unwrap();
+        assert!(r.next_chunk(1).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_out_of_range_word() {
+        let p = tmpfile("oor.txt");
+        std::fs::write(&p, "1\n5\n1\n1 6 1\n").unwrap();
+        let mut r = DocwordReader::open(&p).unwrap();
+        assert!(r.next_chunk(1).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_header_errors() {
+        let p = tmpfile("trunc.txt");
+        std::fs::write(&p, "10\n").unwrap();
+        assert!(DocwordReader::open(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writer_verifies_nnz() {
+        let p = tmpfile("nnzmismatch.txt");
+        let hdr = DocwordHeader { num_docs: 1, vocab_size: 2, nnz: 3 };
+        let mut w = DocwordWriter::create(&p, hdr).unwrap();
+        w.write_doc(0, &[(0, 1.0)]).unwrap();
+        assert!(w.finish().is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

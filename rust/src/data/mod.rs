@@ -1,0 +1,13 @@
+//! Data structures and on-disk formats: dense symmetric matrices, sparse
+//! matrices (triplet/CSR/CSC), the UCI bag-of-words `docword` format and
+//! vocabulary files.
+
+pub mod docword;
+pub mod sparse;
+pub mod sym;
+pub mod vocab;
+
+pub use docword::{DocwordHeader, DocwordReader, DocwordWriter};
+pub use sparse::{CscMatrix, CsrMatrix, TripletMatrix};
+pub use sym::SymMat;
+pub use vocab::Vocab;

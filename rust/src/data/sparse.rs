@@ -1,0 +1,301 @@
+//! Sparse matrix types for bag-of-words data: triplet (COO) for assembly,
+//! CSR (document-major) for streaming passes, CSC (feature-major) for the
+//! reduced-covariance gather pass.
+
+/// Coordinate-format sparse matrix (assembly form).
+#[derive(Clone, Debug, Default)]
+pub struct TripletMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl TripletMatrix {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        TripletMatrix { rows, cols, entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.entries.push((r as u32, c as u32, v));
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Convert to CSR, summing duplicate coordinates.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut entries = self.entries.clone();
+        entries.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::with_capacity(entries.len());
+        let mut values: Vec<f64> = Vec::with_capacity(entries.len());
+        let mut last: Option<(u32, u32)> = None;
+        for &(r, c, v) in &entries {
+            if last == Some((r, c)) {
+                // duplicate coordinate: fold into the previous entry
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r as usize + 1] += 1; // per-row count, prefix-summed below
+                last = Some((r, c));
+            }
+        }
+        for i in 0..self.rows {
+            indptr[i + 1] += indptr[i];
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, indptr, indices, values }
+    }
+}
+
+/// Compressed sparse row matrix. Rows = documents, cols = features.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CsrMatrix {
+    /// Empty matrix with the given shape.
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        CsrMatrix { rows, cols, indptr: vec![0; rows + 1], indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate a row's `(col, value)` pairs.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// Transpose-convert to CSC (feature-major) via counting sort — O(nnz).
+    pub fn to_csc(&self) -> CscMatrix {
+        let mut colptr = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            colptr[c as usize + 1] += 1;
+        }
+        for i in 0..self.cols {
+            colptr[i + 1] += colptr[i];
+        }
+        let mut next = colptr.clone();
+        let mut rowidx = vec![0u32; self.nnz()];
+        let mut values = vec![0.0f64; self.nnz()];
+        for r in 0..self.rows {
+            for k in self.indptr[r]..self.indptr[r + 1] {
+                let c = self.indices[k] as usize;
+                let dst = next[c];
+                rowidx[dst] = r as u32;
+                values[dst] = self.values[k];
+                next[c] += 1;
+            }
+        }
+        CscMatrix { rows: self.rows, cols: self.cols, colptr, rowidx, values }
+    }
+
+    /// Dense row-major copy (test helper; O(rows·cols)).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.rows * self.cols];
+        for r in 0..self.rows {
+            for (c, v) in self.row(r) {
+                d[r * self.cols + c] += v;
+            }
+        }
+        d
+    }
+
+    /// y = Aᵀ(Ax) convenience used by tests (covariance action without
+    /// forming the covariance).
+    pub fn gram_action(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut ax = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let mut acc = 0.0;
+            for (c, v) in self.row(r) {
+                acc += v * x[c];
+            }
+            ax[r] = acc;
+        }
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let a = ax[r];
+            if a == 0.0 {
+                continue;
+            }
+            for (c, v) in self.row(r) {
+                y[c] += v * a;
+            }
+        }
+        y
+    }
+}
+
+/// Compressed sparse column matrix (feature-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub colptr: Vec<usize>,
+    pub rowidx: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl CscMatrix {
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate a column's `(row, value)` pairs.
+    pub fn col(&self, c: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let (lo, hi) = (self.colptr[c], self.colptr[c + 1]);
+        self.rowidx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&r, &v)| (r as usize, v))
+    }
+
+    /// Column nnz.
+    pub fn col_nnz(&self, c: usize) -> usize {
+        self.colptr[c + 1] - self.colptr[c]
+    }
+
+    /// Dot product of two columns — the covariance entry `(AᵀA)_{ij}` up to
+    /// scaling. Uses a merge over sorted row indices: O(nnz_i + nnz_j).
+    pub fn col_dot(&self, i: usize, j: usize) -> f64 {
+        let (mut a, ahi) = (self.colptr[i], self.colptr[i + 1]);
+        let (mut b, bhi) = (self.colptr[j], self.colptr[j + 1]);
+        let mut acc = 0.0;
+        while a < ahi && b < bhi {
+            let (ra, rb) = (self.rowidx[a], self.rowidx[b]);
+            match ra.cmp(&rb) {
+                std::cmp::Ordering::Less => a += 1,
+                std::cmp::Ordering::Greater => b += 1,
+                std::cmp::Ordering::Equal => {
+                    acc += self.values[a] * self.values[b];
+                    a += 1;
+                    b += 1;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Sum and sum-of-squares per column (moment pass building block).
+    pub fn col_moments(&self, c: usize) -> (f64, f64) {
+        let mut s = 0.0;
+        let mut ss = 0.0;
+        for k in self.colptr[c]..self.colptr[c + 1] {
+            let v = self.values[k];
+            s += v;
+            ss += v * v;
+        }
+        (s, ss)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{close, ensure, property};
+
+    fn sample_csr() -> CsrMatrix {
+        // [[1,0,2],[0,0,0],[3,4,0]]
+        let mut t = TripletMatrix::new(3, 3);
+        t.push(0, 0, 1.0);
+        t.push(0, 2, 2.0);
+        t.push(2, 0, 3.0);
+        t.push(2, 1, 4.0);
+        t.to_csr()
+    }
+
+    #[test]
+    fn triplet_to_csr_basic() {
+        let m = sample_csr();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(m.row(1).count(), 0);
+        assert_eq!(m.row(2).collect::<Vec<_>>(), vec![(0, 3.0), (1, 4.0)]);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let mut t = TripletMatrix::new(2, 2);
+        t.push(0, 1, 1.0);
+        t.push(0, 1, 2.5);
+        let m = t.to_csr();
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.row(0).next(), Some((1, 3.5)));
+    }
+
+    #[test]
+    fn csr_csc_roundtrip_dense() {
+        let m = sample_csr();
+        let c = m.to_csc();
+        assert_eq!(c.nnz(), m.nnz());
+        assert_eq!(c.col(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 3.0)]);
+        assert_eq!(c.col(1).collect::<Vec<_>>(), vec![(2, 4.0)]);
+        assert_eq!(c.col(2).collect::<Vec<_>>(), vec![(0, 2.0)]);
+    }
+
+    #[test]
+    fn col_dot_matches_dense() {
+        let m = sample_csr();
+        let c = m.to_csc();
+        let d = m.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                let want: f64 = (0..3).map(|r| d[r * 3 + i] * d[r * 3 + j]).sum();
+                assert!((c.col_dot(i, j) - want).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_and_moments() {
+        property("sparse roundtrips", 30, |rng| {
+            let rows = rng.range(1, 12);
+            let cols = rng.range(1, 12);
+            let mut t = TripletMatrix::new(rows, cols);
+            let nnz = rng.below(rows * cols + 1);
+            for _ in 0..nnz {
+                t.push(rng.below(rows), rng.below(cols), rng.range_f64(-3.0, 3.0));
+            }
+            let csr = t.to_csr();
+            let d = csr.to_dense();
+            let csc = csr.to_csc();
+            ensure(csc.nnz() == csr.nnz(), "nnz preserved")?;
+            for c in 0..cols {
+                let (s, ss) = csc.col_moments(c);
+                let want_s: f64 = (0..rows).map(|r| d[r * cols + c]).sum();
+                let want_ss: f64 = (0..rows).map(|r| d[r * cols + c].powi(2)).sum();
+                close(s, want_s, 1e-10)?;
+                close(ss, want_ss, 1e-10)?;
+            }
+            // gram_action equals dense AᵀA x
+            let x: Vec<f64> = (0..cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = csr.gram_action(&x);
+            for i in 0..cols {
+                let mut want = 0.0;
+                for j in 0..cols {
+                    let mut aa = 0.0;
+                    for r in 0..rows {
+                        aa += d[r * cols + i] * d[r * cols + j];
+                    }
+                    want += aa * x[j];
+                }
+                close(y[i], want, 1e-9)?;
+            }
+            Ok(())
+        });
+    }
+}

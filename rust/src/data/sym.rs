@@ -1,0 +1,319 @@
+//! Dense symmetric matrix stored as a full row-major `n × n` buffer.
+//!
+//! Full (not packed-triangular) storage is a deliberate hot-path choice:
+//! Algorithm 1's inner loops walk whole rows (`Y[j]·u` dot products and the
+//! column write-back `y = Yu/τ`), and contiguous rows keep those loops
+//! vectorizable and prefetch-friendly. Symmetry is maintained by the
+//! mutators (`set` writes both `(i,j)` and `(j,i)`).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SymMat {
+    n: usize,
+    data: Vec<f64>,
+}
+
+impl SymMat {
+    /// Zero matrix of order `n`.
+    pub fn zeros(n: usize) -> SymMat {
+        SymMat { n, data: vec![0.0; n * n] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn identity(n: usize) -> SymMat {
+        let mut m = SymMat::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a full row-major buffer, verifying symmetry.
+    pub fn from_rows(n: usize, data: Vec<f64>) -> Result<SymMat, String> {
+        if data.len() != n * n {
+            return Err(format!("expected {} elements, got {}", n * n, data.len()));
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (a, b) = (data[i * n + j], data[j * n + i]);
+                if (a - b).abs() > 1e-9 * (1.0 + a.abs().max(b.abs())) {
+                    return Err(format!("not symmetric at ({i},{j}): {a} vs {b}"));
+                }
+            }
+        }
+        Ok(SymMat { n, data })
+    }
+
+    /// Build from a function of `(i, j)` (evaluated for `i ≤ j`).
+    pub fn from_fn(n: usize, mut f: impl FnMut(usize, usize) -> f64) -> SymMat {
+        let mut m = SymMat::zeros(n);
+        for i in 0..n {
+            for j in i..n {
+                let v = f(i, j);
+                m.data[i * n + j] = v;
+                m.data[j * n + i] = v;
+            }
+        }
+        m
+    }
+
+    /// Gram matrix `FᵀF / m` of an `m × n` row-major factor matrix — the
+    /// covariance convention used throughout (population, uncentered unless
+    /// the caller centers `F` first).
+    pub fn gram(m_rows: usize, n: usize, f_rowmajor: &[f64]) -> SymMat {
+        assert_eq!(f_rowmajor.len(), m_rows * n);
+        let mut g = SymMat::zeros(n);
+        // Accumulate row-by-row outer products: cache-friendly over F.
+        for r in 0..m_rows {
+            let row = &f_rowmajor[r * n..(r + 1) * n];
+            for i in 0..n {
+                let fi = row[i];
+                if fi == 0.0 {
+                    continue;
+                }
+                let gi = &mut g.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    gi[j] += fi * row[j];
+                }
+            }
+        }
+        let inv = 1.0 / m_rows as f64;
+        for v in &mut g.data {
+            *v *= inv;
+        }
+        g
+    }
+
+    /// Random PSD matrix `FᵀF/m + ridge·I` (test helper).
+    pub fn random_psd(n: usize, m_rows: usize, ridge: f64, rng: &mut Rng) -> SymMat {
+        let f: Vec<f64> = (0..m_rows * n).map(|_| rng.gauss()).collect();
+        let mut g = SymMat::gram(m_rows, n, &f);
+        for i in 0..n {
+            g.data[i * n + i] += ridge;
+        }
+        g
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n + j]
+    }
+
+    /// Set both `(i,j)` and `(j,i)`.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.n + j] = v;
+        self.data[j * self.n + i] = v;
+    }
+
+    /// Contiguous row `i` (equals column `i` by symmetry).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Full backing buffer, row-major.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.data[i * self.n + i]).sum()
+    }
+
+    /// Sum of absolute values of all entries (the ‖·‖₁ of problem (1)).
+    pub fn l1_norm(&self) -> f64 {
+        self.data.iter().map(|v| v.abs()).sum()
+    }
+
+    /// Frobenius inner product `Tr(AᵀB) = Σ AᵢⱼBᵢⱼ`.
+    pub fn frob_dot(&self, other: &SymMat) -> f64 {
+        assert_eq!(self.n, other.n);
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    /// Matrix–vector product `y = A x`.
+    pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for i in 0..self.n {
+            let row = &self.data[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// Quadratic form `xᵀ A x`.
+    pub fn quad_form(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.n);
+        let mut total = 0.0;
+        for i in 0..self.n {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * self.n..(i + 1) * self.n];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            total += xi * acc;
+        }
+        total
+    }
+
+    /// Extract the principal submatrix on the given (sorted or not) indices.
+    pub fn submatrix(&self, idx: &[usize]) -> SymMat {
+        let k = idx.len();
+        let mut m = SymMat::zeros(k);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                m.data[a * k + b] = self.get(i, j);
+            }
+        }
+        m
+    }
+
+    /// Zero-pad to order `n_pad ≥ n` (new rows/cols are zero).
+    pub fn pad_to(&self, n_pad: usize) -> SymMat {
+        assert!(n_pad >= self.n);
+        let mut m = SymMat::zeros(n_pad);
+        for i in 0..self.n {
+            m.data[i * n_pad..i * n_pad + self.n]
+                .copy_from_slice(&self.data[i * self.n..(i + 1) * self.n]);
+        }
+        m
+    }
+
+    /// Maximum absolute asymmetry `max |Aᵢⱼ − Aⱼᵢ|` (diagnostic).
+    pub fn asymmetry(&self) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                worst = worst.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        worst
+    }
+
+    /// Re-symmetrize in place: `A ← (A + Aᵀ)/2`.
+    pub fn symmetrize(&mut self) {
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let v = 0.5 * (self.data[i * self.n + j] + self.data[j * self.n + i]);
+                self.data[i * self.n + j] = v;
+                self.data[j * self.n + i] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_and_trace() {
+        let m = SymMat::identity(4);
+        assert_eq!(m.trace(), 4.0);
+        assert_eq!(m.get(2, 2), 1.0);
+        assert_eq!(m.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn from_rows_rejects_asymmetric() {
+        assert!(SymMat::from_rows(2, vec![1.0, 2.0, 3.0, 4.0]).is_err());
+        assert!(SymMat::from_rows(2, vec![1.0, 2.0, 2.0, 4.0]).is_ok());
+        assert!(SymMat::from_rows(2, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn gram_small() {
+        // F = [[1,0],[1,1]] → FᵀF = [[2,1],[1,1]], /m=2
+        let g = SymMat::gram(2, 2, &[1.0, 0.0, 1.0, 1.0]);
+        assert!((g.get(0, 0) - 1.0).abs() < 1e-12);
+        assert!((g.get(0, 1) - 0.5).abs() < 1e-12);
+        assert!((g.get(1, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_quadform_agree() {
+        let mut rng = Rng::seed_from(21);
+        let a = SymMat::random_psd(8, 12, 0.1, &mut rng);
+        let x = rng.gauss_vec(8);
+        let mut y = vec![0.0; 8];
+        a.matvec(&x, &mut y);
+        let xay: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((xay - a.quad_form(&x)).abs() < 1e-9 * (1.0 + xay.abs()));
+    }
+
+    #[test]
+    fn random_psd_is_psd_diag() {
+        let mut rng = Rng::seed_from(22);
+        let a = SymMat::random_psd(10, 20, 0.0, &mut rng);
+        // PSD implies non-negative diagonal and |a_ij| <= sqrt(a_ii a_jj)
+        for i in 0..10 {
+            assert!(a.get(i, i) >= 0.0);
+            for j in 0..10 {
+                assert!(a.get(i, j).abs() <= (a.get(i, i) * a.get(j, j)).sqrt() + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn submatrix_picks_entries() {
+        let m = SymMat::from_fn(4, |i, j| (i * 10 + j) as f64);
+        let s = m.submatrix(&[1, 3]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.get(0, 0), m.get(1, 1));
+        assert_eq!(s.get(0, 1), m.get(1, 3));
+        assert_eq!(s.get(1, 1), m.get(3, 3));
+    }
+
+    #[test]
+    fn pad_preserves_block() {
+        let m = SymMat::from_fn(3, |i, j| (i + j) as f64);
+        let p = m.pad_to(5);
+        assert_eq!(p.n(), 5);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(p.get(i, j), m.get(i, j));
+            }
+        }
+        assert_eq!(p.get(4, 4), 0.0);
+        assert_eq!(p.get(0, 4), 0.0);
+    }
+
+    #[test]
+    fn symmetrize_fixes_drift() {
+        let mut m = SymMat::zeros(3);
+        m.as_mut_slice()[1] = 1.0; // (0,1) only
+        assert!(m.asymmetry() > 0.0);
+        m.symmetrize();
+        assert_eq!(m.asymmetry(), 0.0);
+        assert_eq!(m.get(0, 1), 0.5);
+    }
+
+    #[test]
+    fn l1_and_frob() {
+        let a = SymMat::from_fn(2, |i, j| if i == j { 1.0 } else { -2.0 });
+        assert_eq!(a.l1_norm(), 6.0);
+        assert_eq!(a.frob_dot(&a), 1.0 + 4.0 + 4.0 + 1.0);
+    }
+}

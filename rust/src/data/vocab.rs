@@ -1,0 +1,86 @@
+//! Vocabulary files: one word per line, line number = 1-based word id,
+//! matching the UCI `vocab.*.txt` companions of the docword files.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// An ordered vocabulary with reverse lookup.
+#[derive(Clone, Debug, Default)]
+pub struct Vocab {
+    words: Vec<String>,
+}
+
+impl Vocab {
+    pub fn new(words: Vec<String>) -> Vocab {
+        Vocab { words }
+    }
+
+    /// Load from a one-word-per-line file.
+    pub fn load(path: &Path) -> Result<Vocab, String> {
+        let f = std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+        let mut words = Vec::new();
+        for line in BufReader::new(f).lines() {
+            let line = line.map_err(|e| format!("read {}: {e}", path.display()))?;
+            words.push(line.trim().to_string());
+        }
+        Ok(Vocab { words })
+    }
+
+    /// Save one word per line.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+        for w in &self.words {
+            writeln!(f, "{w}").map_err(|e| format!("write: {e}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Word for a 0-based id; synthesizes `word<id>` when out of range or
+    /// when no vocabulary was provided (the UCI sets ship metadata-free
+    /// variants too).
+    pub fn word(&self, id0: usize) -> String {
+        self.words
+            .get(id0)
+            .cloned()
+            .unwrap_or_else(|| format!("word{id0}"))
+    }
+
+    /// 0-based id of a word, if present.
+    pub fn id(&self, word: &str) -> Option<usize> {
+        self.words.iter().position(|w| w == word)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_vocab_{}.txt", std::process::id()));
+        let v = Vocab::new(vec!["alpha".into(), "beta".into()]);
+        v.save(&p).unwrap();
+        let v2 = Vocab::load(&p).unwrap();
+        assert_eq!(v2.len(), 2);
+        assert_eq!(v2.word(1), "beta");
+        assert_eq!(v2.id("alpha"), Some(0));
+        assert_eq!(v2.id("gamma"), None);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn fallback_names() {
+        let v = Vocab::default();
+        assert!(v.is_empty());
+        assert_eq!(v.word(17), "word17");
+    }
+}

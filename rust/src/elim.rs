@@ -1,0 +1,215 @@
+//! Safe feature elimination — Theorem 2.1 of the paper.
+//!
+//! With `Σ = AᵀA` (so `Σ_ii = aᵢᵀaᵢ` is feature `i`'s energy), the sparse
+//! PCA problem (2) satisfies
+//!
+//! ```text
+//! ψ = max_{‖ξ‖₂=1} Σᵢ ((aᵢᵀξ)² − λ)₊
+//! ```
+//!
+//! and feature `i` is absent from every optimal support whenever
+//! `(aᵢᵀξ)² ≤ aᵢᵀaᵢ = Σ_ii ≤ λ`. So features with `Σ_ii < λ` can be
+//! removed *before* solving — safely, i.e. without changing the optimum.
+//! On data with rapidly decaying ranked variances this collapses the
+//! problem by orders of magnitude (paper: 102,660 → ≤ 500).
+
+use crate::moments::FeatureVariances;
+
+/// Result of applying the elimination test at one λ.
+#[derive(Clone, Debug)]
+pub struct SafeElimination {
+    /// λ used by the test.
+    pub lambda: f64,
+    /// Original feature count n.
+    pub original: usize,
+    /// Kept (surviving) original feature indices, in decreasing-variance
+    /// order — the order the reduced covariance is assembled in.
+    pub kept: Vec<usize>,
+    /// The survivors' variances, aligned with `kept`.
+    pub kept_variances: Vec<f64>,
+}
+
+impl SafeElimination {
+    /// Apply the test: keep exactly the features with `Σ_ii > λ`
+    /// (strict, per Thm 2.1's "absent if Σ_ii ≤ λ" contrapositive — we
+    /// keep when the variance strictly exceeds λ).
+    ///
+    /// `max_keep` optionally caps the reduced size by keeping only the
+    /// highest-variance survivors; a cap makes the reduction *heuristic*
+    /// beyond the cap (recorded in [`SafeElimination::capped`]).
+    pub fn apply(variances: &[f64], lambda: f64, max_keep: Option<usize>) -> SafeElimination {
+        let mut ranked: Vec<(usize, f64)> = variances
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|&(_, v)| v > lambda)
+            .collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        if let Some(cap) = max_keep {
+            ranked.truncate(cap);
+        }
+        SafeElimination {
+            lambda,
+            original: variances.len(),
+            kept: ranked.iter().map(|&(i, _)| i).collect(),
+            kept_variances: ranked.iter().map(|&(_, v)| v).collect(),
+        }
+    }
+
+    /// Apply using centered variances from a moment pass.
+    pub fn from_variances(
+        fv: &FeatureVariances,
+        lambda: f64,
+        max_keep: Option<usize>,
+    ) -> SafeElimination {
+        Self::apply(&fv.variance, lambda, max_keep)
+    }
+
+    /// Reduced problem size n̂.
+    pub fn reduced(&self) -> usize {
+        self.kept.len()
+    }
+
+    /// Reduction factor n / n̂ (∞ if everything was eliminated).
+    pub fn reduction_factor(&self) -> f64 {
+        if self.kept.is_empty() {
+            f64::INFINITY
+        } else {
+            self.original as f64 / self.kept.len() as f64
+        }
+    }
+
+    /// Whether a `max_keep` cap actually truncated the survivor set —
+    /// i.e. the reduction is no longer purely "safe".
+    pub fn capped(&self, variances: &[f64]) -> bool {
+        let survivors = variances.iter().filter(|&&v| v > self.lambda).count();
+        survivors > self.kept.len()
+    }
+
+    /// Map a reduced-space vector back to the full feature space.
+    pub fn lift(&self, reduced_vec: &[f64]) -> Vec<f64> {
+        assert_eq!(reduced_vec.len(), self.kept.len());
+        let mut full = vec![0.0; self.original];
+        for (r, &orig) in self.kept.iter().enumerate() {
+            full[orig] = reduced_vec[r];
+        }
+        full
+    }
+
+    /// Position of an original feature in the reduced index space.
+    pub fn position_of(&self, original_idx: usize) -> Option<usize> {
+        self.kept.iter().position(|&k| k == original_idx)
+    }
+}
+
+/// The λ → n̂ curve: for each λ in `lambdas`, the number of surviving
+/// features. Monotone non-increasing in λ. This is the quantitative form
+/// of the paper's headline "150∼200 times smaller" observation (E5).
+pub fn lambda_survivor_curve(variances: &[f64], lambdas: &[f64]) -> Vec<(f64, usize)> {
+    // Sort variances descending once; each λ is then a binary search.
+    let mut sorted = variances.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    lambdas
+        .iter()
+        .map(|&lam| {
+            // count of entries strictly greater than lam
+            let cnt = sorted.partition_point(|&v| v > lam);
+            (lam, cnt)
+        })
+        .collect()
+}
+
+/// Smallest λ that leaves at most `target` survivors (from the sorted
+/// variance profile). Useful to seed the λ-search for a target cardinality.
+pub fn lambda_for_survivors(variances: &[f64], target: usize) -> f64 {
+    let mut sorted = variances.to_vec();
+    sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    if target >= sorted.len() {
+        return 0.0;
+    }
+    // keeping features with v > λ: λ = variance of feature `target` keeps
+    // exactly the strictly-larger ones (ties collapse together).
+    sorted[target]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{ensure, property};
+
+    #[test]
+    fn keeps_only_above_lambda() {
+        let v = [0.1, 5.0, 0.3, 2.0, 0.05];
+        let e = SafeElimination::apply(&v, 0.25, None);
+        assert_eq!(e.kept, vec![1, 3, 2]); // sorted by decreasing variance
+        assert_eq!(e.reduced(), 3);
+        assert!((e.reduction_factor() - 5.0 / 3.0).abs() < 1e-12);
+        assert!(!e.capped(&v));
+    }
+
+    #[test]
+    fn cap_truncates_and_flags() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        let e = SafeElimination::apply(&v, 0.5, Some(2));
+        assert_eq!(e.kept, vec![3, 2]);
+        assert!(e.capped(&v));
+    }
+
+    #[test]
+    fn strict_threshold() {
+        let v = [1.0, 2.0];
+        // Σ_ii == λ is eliminated (test is (aᵢᵀξ)² ≤ λ ⇒ absent)
+        let e = SafeElimination::apply(&v, 1.0, None);
+        assert_eq!(e.kept, vec![1]);
+    }
+
+    #[test]
+    fn lift_roundtrip() {
+        let v = [0.0, 3.0, 0.0, 2.0];
+        let e = SafeElimination::apply(&v, 1.0, None);
+        let full = e.lift(&[0.7, -0.7]);
+        assert_eq!(full, vec![0.0, 0.7, 0.0, -0.7]);
+        assert_eq!(e.position_of(3), Some(1));
+        assert_eq!(e.position_of(0), None);
+    }
+
+    #[test]
+    fn prop_curve_monotone_and_consistent() {
+        property("λ→n̂ curve monotone, matches direct count", 25, |rng| {
+            let n = rng.range(1, 100);
+            let v: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 10.0)).collect();
+            let mut lams: Vec<f64> = (0..10).map(|_| rng.range_f64(0.0, 12.0)).collect();
+            lams.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let curve = lambda_survivor_curve(&v, &lams);
+            for w in curve.windows(2) {
+                ensure(w[0].1 >= w[1].1, "curve must be non-increasing")?;
+            }
+            for &(lam, cnt) in &curve {
+                let direct = v.iter().filter(|&&x| x > lam).count();
+                ensure(cnt == direct, format!("count mismatch at λ={lam}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_lambda_for_survivors_bound() {
+        property("lambda_for_survivors leaves ≤ target", 25, |rng| {
+            let n = rng.range(1, 60);
+            let v: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 5.0)).collect();
+            let target = rng.below(n + 2);
+            let lam = lambda_for_survivors(&v, target);
+            let kept = v.iter().filter(|&&x| x > lam).count();
+            ensure(kept <= target.max(kept.min(target)), "")?;
+            ensure(kept <= target || target >= n, format!("kept={kept} target={target}"))?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_input() {
+        let e = SafeElimination::apply(&[], 0.1, None);
+        assert_eq!(e.reduced(), 0);
+        assert!(e.reduction_factor().is_infinite());
+    }
+}

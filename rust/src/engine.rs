@@ -1,0 +1,389 @@
+//! Compute engines: the same solver operations behind one trait, with a
+//! pure-native implementation and an AOT/XLA-artifact implementation.
+//!
+//! - [`NativeEngine`] — optimized Rust (the §Perf hot path).
+//! - [`XlaEngine`] — executes the L2 JAX graphs (which call the L1 Pallas
+//!   kernels) AOT-compiled to `artifacts/*.hlo.txt`, through the PJRT
+//!   runtime. Artifacts are shape-static, so problems are zero-padded up to
+//!   the nearest compiled size (see DESIGN.md "Fixed shapes and masking" —
+//!   padded features have `Σ_ii = 0 < λ` and never enter the support;
+//!   their diagonal settles at `x ≈ β/(λ+t)`, a vanishing perturbation).
+//!
+//! The two engines are cross-checked for numerical agreement in
+//! `rust/tests/engine_agreement.rs` and raced in `benches/engines.rs`.
+
+use std::path::Path;
+
+use crate::data::SymMat;
+use crate::runtime::{Runtime, TensorF64};
+use crate::solver::bca::{self, BcaOptions, BcaSolution, SweepBuffers};
+
+/// Abstract compute engine for the solver's heavy operations.
+pub trait Engine {
+    fn name(&self) -> &str;
+
+    /// One full Algorithm-1 sweep over all columns of `x` in place;
+    /// returns the largest entry change.
+    fn bca_sweep(
+        &mut self,
+        x: &mut SymMat,
+        sigma: &SymMat,
+        lambda: f64,
+        beta: f64,
+        opts: &BcaOptions,
+    ) -> Result<f64, String>;
+
+    /// `iters` rounds of power iteration from `v0`; returns (vector, value).
+    fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String>;
+
+    /// Gram matrix `AᵀA/m` of a dense row-major `m × n` block.
+    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
+        let _ = self.name();
+        Ok(SymMat::gram(m_rows, n, data))
+    }
+
+    /// Per-column `(sum, sum of squares)` of a dense row-major block —
+    /// the dense-shard moment-pass primitive.
+    fn col_moments(
+        &mut self,
+        m_rows: usize,
+        n: usize,
+        data: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>), String> {
+        let _ = self.name();
+        assert_eq!(data.len(), m_rows * n);
+        let mut s = vec![0.0; n];
+        let mut ss = vec![0.0; n];
+        for r in 0..m_rows {
+            let row = &data[r * n..(r + 1) * n];
+            for j in 0..n {
+                let v = row[j];
+                s[j] += v;
+                ss[j] += v * v;
+            }
+        }
+        Ok((s, ss))
+    }
+}
+
+/// Run the full BCA solve on any engine (shared outer loop).
+pub fn bca_solve(
+    engine: &mut dyn Engine,
+    sigma: &SymMat,
+    lambda: f64,
+    opts: &BcaOptions,
+) -> Result<BcaSolution, String> {
+    bca::solve_with(sigma, lambda, opts, |x, o| {
+        let beta = o.epsilon / x.n() as f64;
+        engine.bca_sweep(x, sigma, lambda, beta, o)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Native engine
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust engine (no artifacts needed).
+#[derive(Default)]
+pub struct NativeEngine {
+    buffers: Option<SweepBuffers>,
+}
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine::default()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn bca_sweep(
+        &mut self,
+        x: &mut SymMat,
+        sigma: &SymMat,
+        lambda: f64,
+        beta: f64,
+        opts: &BcaOptions,
+    ) -> Result<f64, String> {
+        let n = x.n();
+        let buf = match &mut self.buffers {
+            Some(b) if b.capacity() == n => b,
+            _ => {
+                self.buffers = Some(SweepBuffers::new(n));
+                self.buffers.as_mut().unwrap()
+            }
+        };
+        Ok(bca::sweep(x, sigma, lambda, beta, opts, buf))
+    }
+
+    fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
+        let n = sigma.n();
+        assert_eq!(v0.len(), n);
+        let mut v = v0.to_vec();
+        crate::linalg::vec::normalize(&mut v);
+        let mut av = vec![0.0; n];
+        for _ in 0..XLA_POWER_ITERS {
+            sigma.matvec(&v, &mut av);
+            crate::linalg::vec::normalize(&mut av);
+            std::mem::swap(&mut v, &mut av);
+        }
+        sigma.matvec(&v, &mut av);
+        let value = crate::linalg::vec::dot(&v, &av);
+        Ok((v, value))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA engine
+// ---------------------------------------------------------------------------
+
+/// Shape-static artifact sizes emitted by `python/compile/aot.py`.
+/// Keep in sync with `SIZES` there.
+pub const XLA_SIZES: [usize; 5] = [32, 64, 128, 256, 512];
+/// QP coordinate-descent sweeps baked into the Pallas kernel.
+pub const XLA_QP_SWEEPS: usize = 8;
+/// Power-iteration rounds baked into the power artifact.
+pub const XLA_POWER_ITERS: usize = 100;
+/// Gram artifact block shape (rows × cols).
+pub const XLA_GRAM_BLOCK: (usize, usize) = (256, 512);
+/// Col-moments artifact block shape (rows × cols).
+pub const XLA_MOMENTS_BLOCK: (usize, usize) = (1024, 512);
+
+/// Engine executing the AOT artifacts through PJRT.
+pub struct XlaEngine {
+    rt: Runtime,
+}
+
+impl XlaEngine {
+    /// Load all artifacts from a directory (run `make artifacts` first).
+    pub fn load(dir: &Path) -> Result<XlaEngine, String> {
+        let mut rt = Runtime::new().map_err(|e| format!("{e:#}"))?;
+        rt.load_dir(dir).map_err(|e| format!("{e:#}"))?;
+        Ok(XlaEngine { rt })
+    }
+
+    /// Smallest compiled size ≥ n.
+    pub fn padded_size(n: usize) -> Result<usize, String> {
+        XLA_SIZES
+            .iter()
+            .copied()
+            .find(|&s| s >= n)
+            .ok_or_else(|| format!("problem size {n} exceeds largest artifact {}", XLA_SIZES[4]))
+    }
+
+    /// Match the kernel's fixed inner-iteration budget on the native side
+    /// (used by the agreement tests to compare like for like).
+    pub fn matching_native_opts(opts: &BcaOptions) -> BcaOptions {
+        let mut o = *opts;
+        o.qp.max_sweeps = XLA_QP_SWEEPS;
+        o.qp.tol = 0.0;
+        o
+    }
+}
+
+impl Engine for XlaEngine {
+    fn name(&self) -> &str {
+        "xla"
+    }
+
+    fn bca_sweep(
+        &mut self,
+        x: &mut SymMat,
+        sigma: &SymMat,
+        lambda: f64,
+        beta: f64,
+        _opts: &BcaOptions,
+    ) -> Result<f64, String> {
+        let n = x.n();
+        let np = Self::padded_size(n)?;
+        let name = format!("bca_sweep_n{np}");
+        let xp = if np == n { x.clone() } else { x.pad_to(np) };
+        let sp = if np == n { sigma.clone() } else { sigma.pad_to(np) };
+        let out = self
+            .rt
+            .execute(
+                &name,
+                &[
+                    TensorF64::new(xp.as_slice().to_vec(), &[np, np]),
+                    TensorF64::new(sp.as_slice().to_vec(), &[np, np]),
+                    TensorF64::scalar(lambda),
+                    TensorF64::scalar(beta),
+                ],
+            )
+            .map_err(|e| format!("{e:#}"))?;
+        let new_x = &out[0];
+        if new_x.len() != np * np {
+            return Err(format!("artifact returned {} values, want {}", new_x.len(), np * np));
+        }
+        // Copy the active block back, tracking the largest change.
+        let mut max_delta = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                let v = new_x[i * np + j];
+                let d = (v - x.get(i, j)).abs();
+                if d > max_delta {
+                    max_delta = d;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in i..n {
+                // symmetrize vs FP drift between the (i,j)/(j,i) lanes
+                let v = 0.5 * (new_x[i * np + j] + new_x[j * np + i]);
+                x.set(i, j, v);
+            }
+        }
+        Ok(max_delta)
+    }
+
+    fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
+        let n = sigma.n();
+        let np = Self::padded_size(n)?;
+        let name = format!("power_iter_n{np}");
+        let sp = if np == n { sigma.clone() } else { sigma.pad_to(np) };
+        let mut v0p = v0.to_vec();
+        v0p.resize(np, 0.0);
+        let out = self
+            .rt
+            .execute(
+                &name,
+                &[
+                    TensorF64::new(sp.as_slice().to_vec(), &[np, np]),
+                    TensorF64::new(v0p, &[np]),
+                ],
+            )
+            .map_err(|e| format!("{e:#}"))?;
+        let mut v = out[0].clone();
+        v.truncate(n);
+        let value = out[1][0];
+        Ok((v, value))
+    }
+
+    fn col_moments(
+        &mut self,
+        m_rows: usize,
+        n: usize,
+        data: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>), String> {
+        assert_eq!(data.len(), m_rows * n);
+        let (bm, bn) = XLA_MOMENTS_BLOCK;
+        if n > bn {
+            return Err(format!("col_moments block supports n ≤ {bn}, got {n}"));
+        }
+        let name = format!("col_moments_b{bm}x{bn}");
+        let mut s = vec![0.0f64; n];
+        let mut ss = vec![0.0f64; n];
+        let mut row = 0;
+        while row < m_rows {
+            let rows_here = (m_rows - row).min(bm);
+            let mut block = vec![0.0f64; bm * bn];
+            for r in 0..rows_here {
+                let src = &data[(row + r) * n..(row + r + 1) * n];
+                block[r * bn..r * bn + n].copy_from_slice(src);
+            }
+            let out = self
+                .rt
+                .execute(&name, &[TensorF64::new(block, &[bm, bn])])
+                .map_err(|e| format!("{e:#}"))?;
+            for j in 0..n {
+                s[j] += out[0][j];
+                ss[j] += out[1][j];
+            }
+            row += rows_here;
+        }
+        Ok((s, ss))
+    }
+
+    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
+        assert_eq!(data.len(), m_rows * n);
+        let (bm, bn) = XLA_GRAM_BLOCK;
+        if n > bn {
+            return Err(format!("gram block supports n ≤ {bn}, got {n}"));
+        }
+        let name = format!("gram_b{bm}x{bn}");
+        // Accumulate AᵀA over zero-padded row blocks.
+        let mut acc = vec![0.0f64; bn * bn];
+        let mut row = 0;
+        while row < m_rows {
+            let rows_here = (m_rows - row).min(bm);
+            let mut block = vec![0.0f64; bm * bn];
+            for r in 0..rows_here {
+                let src = &data[(row + r) * n..(row + r + 1) * n];
+                block[r * bn..r * bn + n].copy_from_slice(src);
+            }
+            let out = self
+                .rt
+                .execute(&name, &[TensorF64::new(block, &[bm, bn])])
+                .map_err(|e| format!("{e:#}"))?;
+            for (a, b) in acc.iter_mut().zip(&out[0]) {
+                *a += b;
+            }
+            row += rows_here;
+        }
+        let inv = 1.0 / m_rows as f64;
+        let mut g = SymMat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                g.as_mut_slice()[i * n + j] = acc[i * bn + j] * inv;
+            }
+        }
+        g.symmetrize();
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn padded_size_selection() {
+        assert_eq!(XlaEngine::padded_size(1).unwrap(), 32);
+        assert_eq!(XlaEngine::padded_size(32).unwrap(), 32);
+        assert_eq!(XlaEngine::padded_size(33).unwrap(), 64);
+        assert_eq!(XlaEngine::padded_size(512).unwrap(), 512);
+        assert!(XlaEngine::padded_size(513).is_err());
+    }
+
+    #[test]
+    fn native_engine_solves() {
+        let mut rng = Rng::seed_from(151);
+        let sigma = SymMat::random_psd(8, 20, 0.1, &mut rng);
+        let mut eng = NativeEngine::new();
+        let sol = bca_solve(&mut eng, &sigma, 0.05, &BcaOptions::default()).unwrap();
+        assert!(sol.phi.is_finite());
+        // equals the direct solver
+        let direct = bca::solve(&sigma, 0.05, &BcaOptions::default());
+        assert!((sol.phi - direct.phi).abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_power_iter_matches_linalg() {
+        let mut rng = Rng::seed_from(152);
+        let sigma = SymMat::random_psd(10, 30, 0.1, &mut rng);
+        let mut eng = NativeEngine::new();
+        let v0 = rng.gauss_vec(10);
+        let (_, value) = eng.power_iter(&sigma, &v0).unwrap();
+        let eig = crate::linalg::eig::JacobiEig::new(&sigma);
+        assert!((value - eig.lambda_max()).abs() < 1e-3 * (1.0 + eig.lambda_max()));
+    }
+
+    #[test]
+    fn default_gram_matches_symmat() {
+        let mut rng = Rng::seed_from(153);
+        let (m, n) = (7, 5);
+        let data: Vec<f64> = (0..m * n).map(|_| rng.gauss()).collect();
+        let mut eng = NativeEngine::new();
+        let g = eng.gram(m, n, &data).unwrap();
+        let want = SymMat::gram(m, n, &data);
+        for i in 0..n {
+            for j in 0..n {
+                assert!((g.get(i, j) - want.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+}

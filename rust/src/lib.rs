@@ -1,0 +1,65 @@
+//! # lsspca — Large-Scale Sparse Principal Component Analysis
+//!
+//! A production-grade reproduction of *"Large-Scale Sparse Principal
+//! Component Analysis with Application to Text Data"* (Zhang & El Ghaoui,
+//! NIPS 2011) as a three-layer Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: streaming corpus ingestion,
+//!   sharded per-feature moment computation, *safe feature elimination*
+//!   (Theorem 2.1), reduced covariance assembly, the *block coordinate
+//!   ascent* DSPCA solver (Algorithm 1), baselines, deflation, and the
+//!   λ-search driver. Pure Rust on the hot path; no Python at runtime.
+//! - **Layer 2 (python/compile/model.py)** — the BCA sweep, Gram assembly
+//!   and power iteration as JAX graphs, AOT-lowered once to HLO text.
+//! - **Layer 1 (python/compile/kernels/)** — the box-constrained QP
+//!   coordinate-descent hot spot as a Pallas kernel.
+//!
+//! The AOT artifacts are loaded at runtime through the PJRT C API (the
+//! [`xla`] crate) by [`runtime`], and exposed behind the [`engine::Engine`]
+//! trait next to the optimized native implementation.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lsspca::prelude::*;
+//!
+//! // A small covariance matrix with a planted sparse direction.
+//! let mut rng = Rng::seed_from(7);
+//! let sigma = lsspca::corpus::spiked_covariance(40, 200, 4, 1.5, &mut rng);
+//! let opts = BcaOptions::default();
+//! let sol = lsspca::solver::bca::solve(&sigma, 0.5, &opts);
+//! let pc = lsspca::solver::extract::leading_sparse_pc(&sol.x, 1e-6);
+//! println!("support = {:?}", pc.support);
+//! ```
+
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod cov;
+pub mod data;
+pub mod elim;
+pub mod engine;
+pub mod linalg;
+pub mod logging;
+pub mod moments;
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod stream;
+pub mod util;
+
+/// Convenience re-exports for typical use.
+pub mod prelude {
+    pub use crate::config::PipelineConfig;
+    pub use crate::coordinator::{Pipeline, PipelineReport};
+    pub use crate::data::{CscMatrix, CsrMatrix, DocwordHeader, SymMat, TripletMatrix};
+    pub use crate::elim::SafeElimination;
+    pub use crate::engine::{Engine, NativeEngine};
+    pub use crate::linalg::{power_iteration, JacobiEig};
+    pub use crate::moments::FeatureMoments;
+    pub use crate::solver::bca::{BcaOptions, BcaSolution};
+    pub use crate::solver::extract::SparsePc;
+    pub use crate::util::rng::Rng;
+}

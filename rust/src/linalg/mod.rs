@@ -1,0 +1,20 @@
+//! Dense linear algebra built from scratch (no BLAS/LAPACK in the offline
+//! environment): vector kernels, Cholesky, the cyclic Jacobi symmetric
+//! eigensolver, and power iteration.
+//!
+//! These are the substrates the solvers sit on: Cholesky backs the PSD
+//! property checks, Jacobi backs the first-order DSPCA baseline (which
+//! needs full eigendecompositions) and the solution-extraction step, and
+//! power iteration is the PCA baseline the paper compares complexity
+//! against (O(n²) per iteration).
+
+pub mod chol;
+pub mod eig;
+pub mod elastic_net;
+pub mod power;
+pub mod vec;
+
+pub use chol::{cholesky, is_psd};
+pub use eig::JacobiEig;
+pub use power::{power_iteration, PowerResult};
+pub use vec::{axpy, dot, norm2, normalize, scale};

@@ -1,0 +1,95 @@
+//! Power iteration — the O(n²)-per-step PCA workhorse the paper's
+//! complexity comparison is framed against ("we can compute one principal
+//! component with a complexity of O(n²)").
+
+use crate::data::SymMat;
+use crate::linalg::vec::{dot, max_abs_diff, normalize};
+use crate::util::rng::Rng;
+
+/// Result of a power-iteration run.
+#[derive(Clone, Debug)]
+pub struct PowerResult {
+    /// Estimated leading eigenvector (unit norm).
+    pub vector: Vec<f64>,
+    /// Estimated leading eigenvalue (Rayleigh quotient).
+    pub value: f64,
+    /// Iterations performed.
+    pub iters: usize,
+    /// Final successive-iterate change (ℓ∞).
+    pub delta: f64,
+}
+
+/// Leading eigenpair of a symmetric PSD matrix by power iteration.
+///
+/// Deterministic given the RNG seed used for the start vector. Converges
+/// linearly at rate |λ₂/λ₁|; `max_iters` bounds the work.
+pub fn power_iteration(a: &SymMat, max_iters: usize, tol: f64, rng: &mut Rng) -> PowerResult {
+    let n = a.n();
+    assert!(n > 0);
+    let mut v = rng.gauss_vec(n);
+    normalize(&mut v);
+    let mut av = vec![0.0; n];
+    let mut delta = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..max_iters {
+        a.matvec(&v, &mut av);
+        let norm = normalize(&mut av);
+        if norm <= 1e-300 {
+            // a annihilated v (possible for singular A): restart randomly
+            av = rng.gauss_vec(n);
+            normalize(&mut av);
+        }
+        // Sign-align to previous iterate so the convergence check is
+        // meaningful for eigenvectors of either sign.
+        if dot(&av, &v) < 0.0 {
+            for x in &mut av {
+                *x = -*x;
+            }
+        }
+        delta = max_abs_diff(&av, &v);
+        std::mem::swap(&mut v, &mut av);
+        iters = it + 1;
+        if delta < tol {
+            break;
+        }
+    }
+    a.matvec(&v, &mut av);
+    let value = dot(&v, &av);
+    PowerResult { vector: v, value, iters, delta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig::JacobiEig;
+    use crate::util::check::{close, property};
+
+    #[test]
+    fn diagonal_leading() {
+        let d = SymMat::from_fn(4, |i, j| if i == j { (i + 1) as f64 } else { 0.0 });
+        let mut rng = Rng::seed_from(41);
+        let r = power_iteration(&d, 500, 1e-12, &mut rng);
+        assert!((r.value - 4.0).abs() < 1e-8);
+        assert!(r.vector[3].abs() > 0.999);
+    }
+
+    #[test]
+    fn prop_agrees_with_jacobi() {
+        property("power iteration matches Jacobi λ₁", 15, |rng| {
+            let n = rng.range(2, 12);
+            let a = SymMat::random_psd(n, n + 4, 0.05, rng);
+            let e = JacobiEig::new(&a);
+            let r = power_iteration(&a, 5000, 1e-12, rng);
+            // Eigenvalue gap can be tiny for random matrices; allow loose tol
+            close(r.value, e.lambda_max(), 1e-4)
+        });
+    }
+
+    #[test]
+    fn zero_matrix_no_panic() {
+        let a = SymMat::zeros(5);
+        let mut rng = Rng::seed_from(43);
+        let r = power_iteration(&a, 10, 1e-10, &mut rng);
+        assert!(r.value.abs() < 1e-12);
+    }
+}

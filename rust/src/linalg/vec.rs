@@ -1,0 +1,135 @@
+//! Vector kernels. Written with simple indexable loops that LLVM
+//! auto-vectorizes; these sit on the solver hot path (see §Perf).
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: breaks the serial FP dependency chain,
+    // measurably faster than a naive fold at n ~ 500 (see EXPERIMENTS §Perf).
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// Normalize to unit Euclidean norm; returns the original norm.
+/// Leaves the vector untouched if its norm is (near) zero.
+pub fn normalize(x: &mut [f64]) -> f64 {
+    let n = norm2(x);
+    if n > 1e-300 {
+        scale(1.0 / n, x);
+    }
+    n
+}
+
+/// Number of entries with magnitude above `tol` (the ‖·‖₀ of problem (2)).
+pub fn cardinality(x: &[f64], tol: f64) -> usize {
+    x.iter().filter(|v| v.abs() > tol).count()
+}
+
+/// Indices of entries with magnitude above `tol`.
+pub fn support(x: &[f64], tol: f64) -> Vec<usize> {
+    x.iter()
+        .enumerate()
+        .filter(|(_, v)| v.abs() > tol)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// ℓ∞ distance between two vectors.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{close, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_matches_naive() {
+        property("unrolled dot == naive dot", 50, |rng| {
+            let n = rng.range(0, 67);
+            let a: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            close(dot(&a, &b), naive, 1e-12)
+        });
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(2.0, &[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, 2.0, 1.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, vec![1.5, 1.0, 0.5]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let mut rng = Rng::seed_from(31);
+        let mut x = rng.gauss_vec(10);
+        let n0 = norm2(&x);
+        let returned = normalize(&mut x);
+        assert!((returned - n0).abs() < 1e-12);
+        assert!((norm2(&x) - 1.0).abs() < 1e-12);
+        // zero vector untouched
+        let mut z = vec![0.0; 4];
+        assert_eq!(normalize(&mut z), 0.0);
+        assert_eq!(z, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn cardinality_and_support() {
+        let x = [0.0, 0.5, -1e-12, 2.0];
+        assert_eq!(cardinality(&x, 1e-9), 2);
+        assert_eq!(support(&x, 1e-9), vec![1, 3]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal leveled stderr logger (the `log` facade has no vendored backend;
+//! this is the offline substitute, see DESIGN.md §3).
+//!
+//! Level is controlled by `LSSPCA_LOG` (`error|warn|info|debug|trace`,
+//! default `info`) or programmatically via [`set_level`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+fn init_level() -> u8 {
+    let lvl = std::env::var("LSSPCA_LOG")
+        .ok()
+        .and_then(|s| Level::parse(&s))
+        .unwrap_or(Level::Info) as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current level.
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == u8::MAX { init_level() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Set the global level programmatically.
+pub fn set_level(lvl: Level) {
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `lvl` would be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+/// Emit a log line (used by the macros; rarely called directly).
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        let t = START.elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {}] {args}", lvl.tag());
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, format_args!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("warn"), Some(Level::Warn));
+        assert_eq!(Level::parse("TRACE"), Some(Level::Trace));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn set_and_query() {
+        set_level(Level::Debug);
+        assert!(enabled(Level::Debug));
+        assert!(!enabled(Level::Trace));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+}

@@ -1,0 +1,269 @@
+//! `lsspca` — command-line entrypoint for the Large-Scale Sparse PCA
+//! pipeline (Zhang & El Ghaoui, NIPS 2011 reproduction).
+//!
+//! ```text
+//! lsspca run        --preset nytimes --pcs 5 --target-card 5     # full pipeline
+//! lsspca gen        --preset pubmed --docs 100000 --out corpus.txt.gz
+//! lsspca variances  --input corpus.txt.gz                        # Fig 2 profile
+//! lsspca solve      --n 200 --lambda 0.5 --model spiked          # solver on synthetic Σ
+//! lsspca artifacts  --dir artifacts                              # inspect AOT artifacts
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use lsspca::cli::{App, Args, CommandSpec, Parsed};
+use lsspca::config::PipelineConfig;
+use lsspca::coordinator::Pipeline;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::data::Vocab;
+use lsspca::prelude::*;
+use lsspca::solver::bca;
+use lsspca::stream::{variance_pass_file, StreamOptions};
+use lsspca::util::plot::AsciiPlot;
+use lsspca::util::rng::Rng;
+
+fn app() -> App {
+    App::new("lsspca", "large-scale sparse PCA (NIPS 2011 reproduction)")
+        .command(
+            CommandSpec::new("run", "full pipeline: stream → eliminate → solve → topics")
+                .opt("config", "", "TOML config file (flags override)")
+                .opt("input", "", "docword file (empty = synthetic preset)")
+                .opt("preset", "nytimes", "synthetic preset: nytimes|pubmed")
+                .opt("docs", "0", "synthetic docs (0 = preset default)")
+                .opt("vocab", "0", "synthetic vocab (0 = preset default)")
+                .opt("seed", "20111212", "corpus seed")
+                .opt("pcs", "5", "number of sparse PCs")
+                .opt("target-card", "5", "target cardinality per PC")
+                .opt("max-reduced", "512", "cap on reduced problem size")
+                .opt("workers", "2", "moment-pass worker threads")
+                .opt("engine", "native", "solver engine: native|xla")
+                .opt("artifacts", "artifacts", "artifact dir for --engine xla")
+                .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
+                .switch("certify", "compute a dual optimality certificate per PC")
+                .switch("profile", "print the timing profile"),
+        )
+        .command(
+            CommandSpec::new("gen", "generate a synthetic corpus to disk (UCI docword format)")
+                .req("out", "output path (.gz for gzip)")
+                .opt("preset", "nytimes", "nytimes|pubmed")
+                .opt("docs", "0", "documents (0 = preset default)")
+                .opt("vocab", "0", "vocabulary (0 = preset default)")
+                .opt("seed", "20111212", "seed"),
+        )
+        .command(
+            CommandSpec::new("variances", "streamed variance profile of a docword file (Fig 2)")
+                .req("input", "docword file")
+                .opt("workers", "2", "worker threads")
+                .opt("top", "20", "print the top-k features"),
+        )
+        .command(
+            CommandSpec::new("solve", "run BCA on a synthetic covariance model")
+                .opt("n", "100", "problem size")
+                .opt("m", "300", "samples for the covariance model")
+                .opt("model", "spiked", "spiked|gaussian")
+                .opt("card", "10", "spike cardinality (spiked model)")
+                .opt("lambda", "-1", "penalty λ (-1 = auto from variances)")
+                .opt("sweeps", "20", "max BCA sweeps")
+                .opt("seed", "7", "model seed"),
+        )
+        .command(
+            CommandSpec::new("artifacts", "load and list AOT artifacts through PJRT")
+                .opt("dir", "artifacts", "artifact directory"),
+        )
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let mut cfg = if args.str("config").is_empty() {
+        PipelineConfig::default()
+    } else {
+        PipelineConfig::load(Path::new(&args.str("config")))?
+    };
+    // flags override config-file values
+    if !args.str("input").is_empty() {
+        cfg.input = args.str("input");
+    }
+    cfg.synth_preset = args.str("preset");
+    if args.usize("docs")? > 0 {
+        cfg.synth_docs = args.usize("docs")?;
+    }
+    if args.usize("vocab")? > 0 {
+        cfg.synth_vocab = args.usize("vocab")?;
+    }
+    cfg.seed = args.u64("seed")?;
+    cfg.num_pcs = args.usize("pcs")?;
+    cfg.target_card = args.usize("target-card")?;
+    cfg.max_reduced = args.usize("max-reduced")?;
+    cfg.workers = args.usize("workers")?;
+    cfg.engine = args.str("engine");
+    cfg.artifacts_dir = args.str("artifacts");
+    if !args.str("cache-dir").is_empty() {
+        cfg.cache_dir = args.str("cache-dir");
+    }
+    cfg.certify = cfg.certify || args.switch("certify");
+    cfg.validate()?;
+
+    let report = Pipeline::new(cfg).run()?;
+    println!("\n# {} — sparse PCA report", report.corpus_name);
+    println!(
+        "docs={} vocab={} nnz={} | reduced n̂={} ({}x reduction, λ̂={:.4e}{})",
+        report.num_docs,
+        report.vocab_size,
+        report.nnz,
+        report.reduced_size,
+        report.reduction_factor as u64,
+        report.elim_lambda,
+        if report.elim_capped { ", capped" } else { "" }
+    );
+    println!("\n{}", report.topic_table);
+    for (k, c) in report.components.iter().enumerate() {
+        let cert = c
+            .certificate_gap
+            .map(|g| format!(" gap≤{g:.2e}"))
+            .unwrap_or_default();
+        println!(
+            "PC{}: card={} λ={:.4} φ={:.4} explained={:.4} ({:.2}s){cert}",
+            k + 1,
+            c.pc.cardinality(),
+            c.lambda,
+            c.phi,
+            c.explained_variance,
+            c.seconds
+        );
+    }
+    println!("\ntotal: {:.2}s", report.total_seconds);
+    if args.switch("profile") {
+        println!("\n{}", report.profile);
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<(), String> {
+    let spec = CorpusSpec::preset(&args.str("preset"))
+        .ok_or("unknown preset")?
+        .scaled(args.usize("docs")?, args.usize("vocab")?);
+    let corpus = SynthCorpus::new(spec, args.u64("seed")?);
+    let out = PathBuf::from(args.str("out"));
+    let t = lsspca::util::Timer::start();
+    let hdr = corpus.write_docword(&out)?;
+    println!(
+        "wrote {}: D={} W={} NNZ={} in {:.1}s (+ vocab at {})",
+        out.display(),
+        hdr.num_docs,
+        hdr.vocab_size,
+        hdr.nnz,
+        t.secs(),
+        out.with_extension("vocab").display()
+    );
+    Ok(())
+}
+
+fn cmd_variances(args: &Args) -> Result<(), String> {
+    let input = PathBuf::from(args.str("input"));
+    let opts = StreamOptions { workers: args.usize("workers")?, ..Default::default() };
+    let (hdr, fv, stats) = variance_pass_file(&input, opts)?;
+    let sorted = fv.sorted_variances();
+    println!(
+        "D={} W={} NNZ={} | pass took {:.2}s with {} workers",
+        hdr.num_docs, hdr.vocab_size, hdr.nnz, stats.seconds, opts.workers
+    );
+    let pts: Vec<(f64, f64)> = sorted
+        .iter()
+        .enumerate()
+        .filter(|&(_, &v)| v > 0.0)
+        .map(|(i, &v)| ((i + 1) as f64, v))
+        .collect();
+    println!(
+        "{}",
+        AsciiPlot::new("sorted word variances (cf. paper Fig 2)")
+            .logx()
+            .logy()
+            .series("variance", '*', &pts)
+            .render()
+    );
+    let vocab_path = input.with_extension("vocab");
+    let vocab = if vocab_path.exists() { Vocab::load(&vocab_path)? } else { Vocab::default() };
+    println!("top features by variance:");
+    for (rank, (idx, var)) in fv.ranked().into_iter().take(args.usize("top")?).enumerate() {
+        println!("  {:>3}. {:<20} {var:.4}", rank + 1, vocab.word(idx));
+    }
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<(), String> {
+    let n = args.usize("n")?;
+    let m = args.usize("m")?;
+    let mut rng = Rng::seed_from(args.u64("seed")?);
+    let sigma = match args.str("model").as_str() {
+        "spiked" => {
+            lsspca::corpus::spiked_covariance(n, m, args.usize("card")?.min(n), 2.0, &mut rng)
+        }
+        "gaussian" => lsspca::corpus::gaussian_factor_cov(n, m, &mut rng),
+        other => return Err(format!("unknown model '{other}'")),
+    };
+    let mut lambda = args.f64("lambda")?;
+    if lambda < 0.0 {
+        let diags: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        lambda = lsspca::elim::lambda_for_survivors(&diags, (2 * args.usize("card")?).max(10));
+        println!("auto λ = {lambda:.4}");
+    }
+    let opts = BcaOptions { max_sweeps: args.usize("sweeps")?, ..Default::default() };
+    let sol = bca::solve(&sigma, lambda, &opts);
+    let pc = lsspca::solver::extract::leading_sparse_pc(&sol.z, 1e-4);
+    println!(
+        "φ={:.6} sweeps={} final_delta={:.2e} time={:.2}s",
+        sol.phi, sol.sweeps, sol.final_delta, sol.seconds
+    );
+    println!("support ({}): {:?}", pc.cardinality(), pc.support);
+    let series: Vec<(f64, f64)> = sol
+        .history
+        .iter()
+        .map(|h| (h.seconds.max(1e-6), h.objective))
+        .collect();
+    println!(
+        "{}",
+        AsciiPlot::new("objective vs time")
+            .series("BCA", 'o', &series)
+            .render()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = PathBuf::from(args.str("dir"));
+    let mut rt = lsspca::runtime::Runtime::new().map_err(|e| format!("{e:#}"))?;
+    let names = rt.load_dir(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("loaded {} artifacts from {}:", names.len(), dir.display());
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let parsed = match app().parse(&argv) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match parsed {
+        Parsed::Help(text) => {
+            println!("{text}");
+            Ok(())
+        }
+        Parsed::Command(name, args) => match name.as_str() {
+            "run" => cmd_run(&args),
+            "gen" => cmd_gen(&args),
+            "variances" => cmd_variances(&args),
+            "solve" => cmd_solve(&args),
+            "artifacts" => cmd_artifacts(&args),
+            _ => unreachable!("parser rejects unknown commands"),
+        },
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,236 @@
+//! Per-feature streaming moments — the substrate of the paper's
+//! pre-processing pass.
+//!
+//! Safe feature elimination (Theorem 2.1) needs every feature's variance
+//! `Σ_ii`, computed over corpora too large to hold in memory. Each worker
+//! folds a chunk of documents into a [`FeatureMoments`] accumulator; the
+//! accumulators merge associatively (Chan et al.), so the pass parallelizes
+//! exactly as the paper notes ("this task is easy to parallelize").
+//!
+//! Bag-of-words sparsity is exploited: a document only touches the
+//! accumulators of the words it contains; the implicit zeros are folded in
+//! *once per feature* at finalization time in O(1) each via
+//! [`RunningStats::push_repeated`].
+
+use crate::data::docword::DocChunk;
+use crate::util::stats::RunningStats;
+
+/// Accumulated first and second moments for every feature.
+#[derive(Clone, Debug)]
+pub struct FeatureMoments {
+    /// Per-feature stats over the *nonzero* observations only; zeros are
+    /// folded in by [`finalize`](FeatureMoments::finalize).
+    stats: Vec<RunningStats>,
+    /// Documents folded in so far.
+    pub docs: u64,
+    /// Nonzero entries folded in so far.
+    pub nnz: u64,
+}
+
+/// Finalized per-feature statistics (zeros included).
+#[derive(Clone, Debug)]
+pub struct FeatureVariances {
+    /// Population variance per feature: the `Σ_ii` of Theorem 2.1 for
+    /// mean-centered data.
+    pub variance: Vec<f64>,
+    /// Mean per feature.
+    pub mean: Vec<f64>,
+    /// Uncentered second moment `E[x²]` per feature — the `Σ_ii = aᵢᵀaᵢ/m`
+    /// of the *uncentered* covariance convention.
+    pub second_moment: Vec<f64>,
+    pub docs: u64,
+}
+
+impl FeatureMoments {
+    pub fn new(num_features: usize) -> FeatureMoments {
+        FeatureMoments {
+            stats: vec![RunningStats::new(); num_features],
+            docs: 0,
+            nnz: 0,
+        }
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.stats.len()
+    }
+
+    /// Fold one document (sparse `(word, count)` pairs) into the moments.
+    pub fn push_doc(&mut self, words: &[(u32, f64)]) {
+        self.docs += 1;
+        for &(w, c) in words {
+            self.stats[w as usize].push(c);
+            self.nnz += 1;
+        }
+    }
+
+    /// Fold a whole chunk.
+    pub fn push_chunk(&mut self, chunk: &DocChunk) {
+        for doc in &chunk.docs {
+            self.push_doc(&doc.words);
+        }
+    }
+
+    /// Merge another accumulator (parallel combination; associative and
+    /// commutative, see the property tests).
+    pub fn merge(&mut self, other: &FeatureMoments) {
+        assert_eq!(self.stats.len(), other.stats.len(), "feature count mismatch");
+        for (a, b) in self.stats.iter_mut().zip(&other.stats) {
+            a.merge(b);
+        }
+        self.docs += other.docs;
+        self.nnz += other.nnz;
+    }
+
+    /// Fold in the implicit zeros and produce final variances.
+    pub fn finalize(&self) -> FeatureVariances {
+        let n = self.stats.len();
+        let mut variance = Vec::with_capacity(n);
+        let mut mean = Vec::with_capacity(n);
+        let mut second_moment = Vec::with_capacity(n);
+        for s in &self.stats {
+            debug_assert!(s.n <= self.docs, "feature seen more often than docs");
+            let mut full = *s;
+            full.push_repeated(0.0, self.docs - s.n);
+            variance.push(full.variance());
+            mean.push(full.mean);
+            // E[x²] = var + mean² (population)
+            second_moment.push(full.variance() + full.mean * full.mean);
+        }
+        FeatureVariances { variance, mean, second_moment, docs: self.docs }
+    }
+}
+
+impl FeatureVariances {
+    /// Features ranked by decreasing variance — the Fig 2 series and the
+    /// input to the elimination threshold.
+    pub fn ranked(&self) -> Vec<(usize, f64)> {
+        let mut idx: Vec<(usize, f64)> = self.variance.iter().copied().enumerate().collect();
+        idx.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        idx
+    }
+
+    /// The variance column, sorted descending (Fig 2's y-series).
+    pub fn sorted_variances(&self) -> Vec<f64> {
+        let mut v = self.variance.clone();
+        v.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::docword::Doc;
+    use crate::util::check::{close, close_slice, property};
+
+    fn chunk(docs: Vec<Vec<(u32, f64)>>) -> DocChunk {
+        DocChunk {
+            docs: docs
+                .into_iter()
+                .enumerate()
+                .map(|(id, words)| Doc { id, words })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn variance_with_implicit_zeros() {
+        // 4 docs over 2 features; feature 0 counts: 2,0,0,0 → mean .5,
+        // var = (2.25 + 3*.25)/4 = .75
+        let mut m = FeatureMoments::new(2);
+        m.push_chunk(&chunk(vec![vec![(0, 2.0)], vec![], vec![(1, 1.0)], vec![]]));
+        let f = m.finalize();
+        assert_eq!(f.docs, 4);
+        assert!((f.variance[0] - 0.75).abs() < 1e-12);
+        assert!((f.mean[0] - 0.5).abs() < 1e-12);
+        // second moment = E[x²] = 4/4 = 1
+        assert!((f.second_moment[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_merge_equals_single_pass() {
+        property("moments merge == single pass", 25, |rng| {
+            let features = rng.range(1, 8);
+            let ndocs = rng.range(1, 30);
+            let docs: Vec<Vec<(u32, f64)>> = (0..ndocs)
+                .map(|_| {
+                    let k = rng.below(features + 1);
+                    let mut ws: Vec<usize> = rng.sample_indices(features, k);
+                    ws.sort_unstable();
+                    ws.into_iter()
+                        .map(|w| (w as u32, (1 + rng.below(9)) as f64))
+                        .collect()
+                })
+                .collect();
+            let mut whole = FeatureMoments::new(features);
+            for d in &docs {
+                whole.push_doc(d);
+            }
+            let cut = rng.below(ndocs + 1);
+            let mut a = FeatureMoments::new(features);
+            let mut b = FeatureMoments::new(features);
+            for d in &docs[..cut] {
+                a.push_doc(d);
+            }
+            for d in &docs[cut..] {
+                b.push_doc(d);
+            }
+            a.merge(&b);
+            let fa = a.finalize();
+            let fw = whole.finalize();
+            close_slice(&fa.variance, &fw.variance, 1e-10)?;
+            close_slice(&fa.mean, &fw.mean, 1e-10)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_variance_matches_naive() {
+        property("streamed variance == naive dense variance", 25, |rng| {
+            let features = rng.range(1, 6);
+            let ndocs = rng.range(1, 25);
+            let mut dense = vec![0.0f64; ndocs * features];
+            let mut m = FeatureMoments::new(features);
+            for d in 0..ndocs {
+                let mut words = Vec::new();
+                for w in 0..features {
+                    if rng.bool(0.4) {
+                        let c = (1 + rng.below(5)) as f64;
+                        dense[d * features + w] = c;
+                        words.push((w as u32, c));
+                    }
+                }
+                m.push_doc(&words);
+            }
+            let f = m.finalize();
+            for w in 0..features {
+                let col: Vec<f64> = (0..ndocs).map(|d| dense[d * features + w]).collect();
+                let mean = col.iter().sum::<f64>() / ndocs as f64;
+                let var = col.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / ndocs as f64;
+                close(f.variance[w], var, 1e-10)?;
+                let m2 = col.iter().map(|x| x * x).sum::<f64>() / ndocs as f64;
+                close(f.second_moment[w], m2, 1e-10)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ranked_is_descending() {
+        let mut m = FeatureMoments::new(3);
+        m.push_chunk(&chunk(vec![vec![(0, 1.0), (2, 10.0)], vec![(2, 5.0)]]));
+        let f = m.finalize();
+        let r = f.ranked();
+        assert_eq!(r[0].0, 2);
+        let sv = f.sorted_variances();
+        assert!(sv.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "feature count mismatch")]
+    fn merge_rejects_mismatch() {
+        let mut a = FeatureMoments::new(2);
+        let b = FeatureMoments::new(3);
+        a.merge(&b);
+    }
+}

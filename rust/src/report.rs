@@ -1,0 +1,125 @@
+//! Experiment reporting: markdown tables (the paper's Tables 1–2 format),
+//! CSV series, and helpers shared by the benches and examples.
+
+use std::fmt::Write as _;
+
+use crate::data::Vocab;
+use crate::solver::extract::SparsePc;
+
+/// Render a markdown table from a header and rows.
+pub fn markdown_table(header: &[String], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut out = String::new();
+    let _ = writeln!(out, "| {} |", header.join(" | "));
+    let _ = writeln!(out, "|{}", "---|".repeat(cols));
+    for row in rows {
+        let mut cells = row.clone();
+        cells.resize(cols, String::new());
+        let _ = writeln!(out, "| {} |", cells.join(" | "));
+    }
+    out
+}
+
+/// Render the paper's topic-table format: one column per PC, one word per
+/// row (Tables 1 and 2).
+pub fn topic_table(pcs: &[SparsePc], vocab: &Vocab, kept_to_orig: Option<&[usize]>) -> String {
+    let header: Vec<String> = pcs
+        .iter()
+        .enumerate()
+        .map(|(k, pc)| format!("{} PC ({} words)", ordinal(k + 1), pc.cardinality()))
+        .collect();
+    let depth = pcs.iter().map(|pc| pc.cardinality()).max().unwrap_or(0);
+    let mut rows = Vec::with_capacity(depth);
+    for r in 0..depth {
+        let row: Vec<String> = pcs
+            .iter()
+            .map(|pc| {
+                pc.support
+                    .get(r)
+                    .map(|&i| {
+                        let orig = kept_to_orig.map_or(i, |map| map[i]);
+                        vocab.word(orig)
+                    })
+                    .unwrap_or_default()
+            })
+            .collect();
+        rows.push(row);
+    }
+    markdown_table(&header, &rows)
+}
+
+fn ordinal(k: usize) -> String {
+    let suffix = match (k % 10, k % 100) {
+        (1, 11) | (2, 12) | (3, 13) => "th",
+        (1, _) => "st",
+        (2, _) => "nd",
+        (3, _) => "rd",
+        _ => "th",
+    };
+    format!("{k}{suffix}")
+}
+
+/// Write `(x, y)` series as CSV.
+pub fn csv_series(header: (&str, &str), pts: &[(f64, f64)]) -> String {
+    let mut out = format!("{},{}\n", header.0, header.1);
+    for (x, y) in pts {
+        let _ = writeln!(out, "{x},{y}");
+    }
+    out
+}
+
+/// Save text to a file, creating parent directories.
+pub fn save(path: &std::path::Path, text: &str) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    }
+    std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordinals() {
+        assert_eq!(ordinal(1), "1st");
+        assert_eq!(ordinal(2), "2nd");
+        assert_eq!(ordinal(3), "3rd");
+        assert_eq!(ordinal(4), "4th");
+        assert_eq!(ordinal(11), "11th");
+        assert_eq!(ordinal(21), "21st");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(
+            &["a".into(), "b".into()],
+            &[vec!["1".into()], vec!["2".into(), "3".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[1].contains("---|---"));
+        assert!(lines[2].ends_with("| 1 |  |"));
+    }
+
+    #[test]
+    fn topic_table_uses_vocab_and_mapping() {
+        let vocab = Vocab::new(vec!["zero".into(), "one".into(), "two".into(), "three".into()]);
+        let pc = SparsePc {
+            vector: vec![0.9, 0.44, 0.0],
+            support: vec![0, 1],
+            z_eigenvalue: 1.0,
+        };
+        // reduced index 0 → original 3, 1 → original 1
+        let table = topic_table(&[pc], &vocab, Some(&[3, 1]));
+        assert!(table.contains("three"));
+        assert!(table.contains("one"));
+        assert!(table.contains("1st PC (2 words)"));
+    }
+
+    #[test]
+    fn csv_format() {
+        let s = csv_series(("t", "obj"), &[(0.5, 1.25)]);
+        assert_eq!(s, "t,obj\n0.5,1.25\n");
+    }
+}

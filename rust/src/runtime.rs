@@ -1,0 +1,208 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust hot path. Python never runs at request time — `make artifacts`
+//! lowers the JAX/Pallas graphs to HLO *text* once (xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos; the text parser reassigns
+//! instruction ids, so text round-trips — see /opt/xla-example/README.md),
+//! and this module compiles + runs them through the `xla` crate.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Name of an artifact as emitted by `python/compile/aot.py`:
+/// `<stem>.hlo.txt` → stem like `bca_sweep_n128`.
+fn artifact_stem(path: &Path) -> Option<String> {
+    let name = path.file_name()?.to_str()?;
+    name.strip_suffix(".hlo.txt").map(|s| s.to_string())
+}
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Typed input to an execution: an f64 buffer with a shape.
+#[derive(Clone, Debug)]
+pub struct TensorF64 {
+    pub data: Vec<f64>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorF64 {
+    pub fn new(data: Vec<f64>, dims: &[usize]) -> TensorF64 {
+        let expect: usize = dims.iter().product();
+        assert_eq!(data.len(), expect, "shape/data mismatch");
+        TensorF64 { data, dims: dims.iter().map(|&d| d as i64).collect() }
+    }
+
+    pub fn scalar(v: f64) -> TensorF64 {
+        TensorF64 { data: vec![v], dims: vec![] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // rank-0: reshape a 1-element vec to scalar shape
+            Ok(lit.reshape(&[])?)
+        } else {
+            Ok(lit.reshape(&self.dims)?)
+        }
+    }
+}
+
+/// The PJRT runtime holding a CPU client and the compiled artifact
+/// registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl Runtime {
+    /// Create a runtime with the PJRT CPU client.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::info!(
+            "PJRT runtime up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, artifacts: HashMap::new() })
+    }
+
+    /// Load and compile one HLO-text artifact under the given name.
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        crate::debug!("compiled artifact '{name}' from {}", path.display());
+        self.artifacts.insert(
+            name.to_string(),
+            Artifact { name: name.to_string(), path: path.to_path_buf(), exe },
+        );
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; returns the loaded names.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("reading artifact dir {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            if let Some(stem) = artifact_stem(&path) {
+                self.load(&stem, &path)?;
+                names.push(stem);
+            }
+        }
+        names.sort();
+        if names.is_empty() {
+            bail!(
+                "no *.hlo.txt artifacts in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(names)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute an artifact on f64 inputs; returns the tuple elements as
+    /// flat f64 buffers (all our L2 graphs are lowered with
+    /// `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[TensorF64]) -> Result<Vec<Vec<f64>>> {
+        let artifact = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded (have: {:?})", self.names()))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = artifact
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing '{name}'"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        let mut buffers = Vec::with_capacity(parts.len());
+        for p in parts {
+            buffers.push(p.to_vec::<f64>().context("reading f64 output")?);
+        }
+        Ok(buffers)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that need artifacts only run when `make artifacts` has been
+    /// executed (CI runs it first; `cargo test` alone skips gracefully).
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join(".stamp").exists().then_some(dir)
+    }
+
+    #[test]
+    fn stem_parsing() {
+        assert_eq!(
+            artifact_stem(Path::new("/x/bca_sweep_n128.hlo.txt")),
+            Some("bca_sweep_n128".to_string())
+        );
+        assert_eq!(artifact_stem(Path::new("/x/readme.md")), None);
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = TensorF64::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.dims, vec![2, 2]);
+        let s = TensorF64::scalar(7.0);
+        assert!(s.dims.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_rejects_bad_shape() {
+        TensorF64::new(vec![1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let rt = Runtime::new().unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+        assert!(!rt.has("nope"));
+    }
+
+    #[test]
+    fn load_dir_roundtrip_if_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::new().unwrap();
+        let names = rt.load_dir(&dir).unwrap();
+        assert!(!names.is_empty());
+        for n in &names {
+            assert!(rt.has(n));
+        }
+    }
+}

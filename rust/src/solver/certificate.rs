@@ -1,0 +1,146 @@
+//! Dual optimality certificates for DSPCA.
+//!
+//! Problem (1)'s dual is `min λmax(Σ + U)` over `‖U‖∞ ≤ λ`, so ANY
+//! feasible `U` certifies `φ ≤ λmax(Σ + U)`. Given a primal candidate `Z`
+//! we build `U` from the subgradient structure of `−λ‖Z‖₁`:
+//!
+//! ```text
+//! U_ij = −λ·sign(Z_ij)      where Z_ij ≠ 0
+//! U_ij = clamp(candidate)   elsewhere (free to shrink λmax)
+//! ```
+//!
+//! using `−λ·sign` on the off-support too (a simple feasible completion).
+//! The resulting *duality gap* `λmax(Σ+U) − (TrΣZ − λ‖Z‖₁)` bounds the
+//! suboptimality of the solver's answer — this is what lets the pipeline
+//! *prove* how good a BCA solution is without trusting the solver.
+
+use crate::data::SymMat;
+use crate::linalg::eig::JacobiEig;
+
+/// A certificate: dual-feasible `U`, its bound, and the gap vs a primal value.
+#[derive(Clone, Debug)]
+pub struct Certificate {
+    /// Upper bound `λmax(Σ + U)` from the dual-feasible point.
+    pub upper_bound: f64,
+    /// Primal value `Tr ΣZ − λ‖Z‖₁` of the certified candidate.
+    pub primal: f64,
+    /// `upper_bound − primal ≥ 0` (up to eig tolerance).
+    pub gap: f64,
+}
+
+/// Build a certificate for a trace-1 PSD candidate `Z`, tightening the
+/// dual point with `tighten_steps` projected-subgradient steps on
+/// `λmax(Σ+U)` (subgradient = vvᵀ for the top eigenvector v; projection =
+/// clamp to the box). Every iterate is dual-feasible, so the best bound
+/// seen is always valid — more steps only improve it.
+pub fn certify_steps(sigma: &SymMat, z: &SymMat, lambda: f64, tighten_steps: usize) -> Certificate {
+    let n = sigma.n();
+    assert_eq!(z.n(), n);
+    // Start: U = −λ sign(Z), completed with −λ sign(Σ) off-support.
+    let mut u = SymMat::from_fn(n, |i, j| {
+        let zij = z.get(i, j);
+        if zij != 0.0 {
+            -lambda * zij.signum()
+        } else {
+            -lambda * sigma.get(i, j).signum()
+        }
+    });
+    let primal = sigma.frob_dot(z) - lambda * z.l1_norm();
+    let mut best = f64::INFINITY;
+    for k in 0..=tighten_steps {
+        let m = SymMat::from_fn(n, |i, j| sigma.get(i, j) + u.get(i, j));
+        let eig = JacobiEig::new(&m);
+        best = best.min(eig.lambda_max());
+        if k == tighten_steps || best - primal <= 1e-12 * (1.0 + primal.abs()) {
+            break;
+        }
+        // U ← P_box(U − step·vvᵀ), diminishing step scaled by λ.
+        let v = eig.vector(0);
+        let step = 2.0 * lambda / (1.0 + k as f64).sqrt();
+        for i in 0..n {
+            for j in i..n {
+                let w = (u.get(i, j) - step * v[i] * v[j]).clamp(-lambda, lambda);
+                u.set(i, j, w);
+            }
+        }
+    }
+    Certificate { upper_bound: best, primal, gap: best - primal }
+}
+
+/// Certificate with the default tightening budget.
+pub fn certify(sigma: &SymMat, z: &SymMat, lambda: f64) -> Certificate {
+    certify_steps(sigma, z, lambda, 40)
+}
+
+/// Relative gap, safe for zero primal.
+impl Certificate {
+    pub fn relative_gap(&self) -> f64 {
+        self.gap / (1.0 + self.primal.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::bca::{self, BcaOptions};
+    use crate::util::check::{ensure, property};
+
+    #[test]
+    fn prop_gap_nonnegative_for_any_feasible_z() {
+        property("certificate: gap ≥ 0 for random feasible Z", 15, |rng| {
+            let n = rng.range(2, 10);
+            let sigma = SymMat::random_psd(n, n + 3, 0.1, rng);
+            // random trace-1 PSD candidate
+            let mut z = SymMat::random_psd(n, n + 2, 1e-6, rng);
+            let tr = z.trace();
+            crate::linalg::vec::scale(1.0 / tr, z.as_mut_slice());
+            let lambda = rng.range_f64(0.0, 1.0);
+            let cert = certify(&sigma, &z, lambda);
+            ensure(
+                cert.gap >= -1e-7 * (1.0 + cert.upper_bound.abs()),
+                format!("negative gap {}", cert.gap),
+            )
+        });
+    }
+
+    #[test]
+    fn bca_solution_has_small_gap() {
+        property("certificate: converged BCA gap is small", 6, |rng| {
+            let n = rng.range(4, 10);
+            let sigma = SymMat::random_psd(n, 3 * n, 0.2, rng);
+            let min_diag = (0..n).map(|i| sigma.get(i, i)).fold(f64::INFINITY, f64::min);
+            let lambda = 0.4 * min_diag;
+            let sol = bca::solve(
+                &sigma,
+                lambda,
+                &BcaOptions { max_sweeps: 80, epsilon: 1e-5, tol: 1e-12, ..Default::default() },
+            );
+            let cert = certify(&sigma, &sol.z, lambda);
+            ensure(
+                cert.relative_gap() < 0.2,
+                format!(
+                    "gap too large: primal {} upper {} (rel {})",
+                    cert.primal,
+                    cert.upper_bound,
+                    cert.relative_gap()
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn gap_detects_bad_candidate() {
+        // A deliberately bad Z (mass on the min-variance coordinate) must
+        // show a much larger gap than the solver's answer.
+        let mut rng = crate::util::rng::Rng::seed_from(231);
+        let sigma = SymMat::from_fn(4, |i, j| if i == j { [5.0, 1.0, 0.4, 3.0][i] } else { 0.0 });
+        let _ = &mut rng;
+        let mut bad = SymMat::zeros(4);
+        bad.set(2, 2, 1.0); // worst coordinate
+        let lambda = 0.2;
+        let cert_bad = certify(&sigma, &bad, lambda);
+        let sol = bca::solve(&sigma, lambda, &BcaOptions::default());
+        let cert_good = certify(&sigma, &sol.z, lambda);
+        assert!(cert_bad.gap > 10.0 * cert_good.gap.max(1e-6), "{} vs {}", cert_bad.gap, cert_good.gap);
+    }
+}

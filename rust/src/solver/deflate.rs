@@ -1,0 +1,115 @@
+//! Deflation: remove an extracted component before computing the next one
+//! (the paper extracts "the top 5 sparse principal components" — its tables
+//! are produced by repeated solve-then-deflate).
+
+use crate::data::SymMat;
+use crate::linalg::vec::dot;
+
+/// Projection deflation: `Σ ← (I − vvᵀ) Σ (I − vvᵀ)` for a unit vector v.
+/// Keeps PSD-ness and removes all variance along `v` (robust to `v` not
+/// being an exact eigenvector — the right choice for sparse PCs).
+pub fn projection(sigma: &mut SymMat, v: &[f64]) {
+    let n = sigma.n();
+    assert_eq!(v.len(), n);
+    // w = Σ v, α = vᵀΣv
+    let mut w = vec![0.0; n];
+    sigma.matvec(v, &mut w);
+    let alpha = dot(v, &w);
+    // Σ' = Σ − v wᵀ − w vᵀ + α v vᵀ
+    let buf = sigma.as_mut_slice();
+    for i in 0..n {
+        for j in 0..n {
+            buf[i * n + j] += -v[i] * w[j] - w[i] * v[j] + alpha * v[i] * v[j];
+        }
+    }
+}
+
+/// Hotelling deflation: `Σ ← Σ − θ v vᵀ` with `θ = vᵀΣv` (exact for true
+/// eigenvectors; can lose PSD-ness for approximate ones).
+pub fn hotelling(sigma: &mut SymMat, v: &[f64], theta: f64) {
+    let n = sigma.n();
+    assert_eq!(v.len(), n);
+    let buf = sigma.as_mut_slice();
+    for i in 0..n {
+        for j in 0..n {
+            buf[i * n + j] -= theta * v[i] * v[j];
+        }
+    }
+}
+
+/// Scheme selector used by the pipeline config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Projection,
+    Hotelling,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        match s {
+            "projection" => Some(Scheme::Projection),
+            "hotelling" => Some(Scheme::Hotelling),
+            _ => None,
+        }
+    }
+
+    /// Apply the scheme for a unit direction `v` on `sigma`.
+    pub fn apply(self, sigma: &mut SymMat, v: &[f64]) {
+        match self {
+            Scheme::Projection => projection(sigma, v),
+            Scheme::Hotelling => {
+                let mut w = vec![0.0; sigma.n()];
+                sigma.matvec(v, &mut w);
+                let theta = dot(v, &w);
+                hotelling(sigma, v, theta);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::is_psd;
+    use crate::linalg::vec::normalize;
+    use crate::util::check::{close, ensure, property};
+
+    #[test]
+    fn prop_projection_annihilates_direction() {
+        property("projection deflation: vᵀΣ'v = 0, Σ'v = 0, PSD kept", 15, |rng| {
+            let n = rng.range(2, 10);
+            let mut sigma = SymMat::random_psd(n, n + 5, 0.1, rng);
+            let mut v = rng.gauss_vec(n);
+            normalize(&mut v);
+            projection(&mut sigma, &v);
+            close(sigma.quad_form(&v), 0.0, 1e-8)?;
+            let mut w = vec![0.0; n];
+            sigma.matvec(&v, &mut w);
+            for &x in &w {
+                close(x, 0.0, 1e-8)?;
+            }
+            ensure(is_psd(&sigma, 1e-8), "projection must keep PSD")?;
+            ensure(sigma.asymmetry() < 1e-9, "symmetric")?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hotelling_exact_for_eigenvector() {
+        let mut rng = crate::util::rng::Rng::seed_from(121);
+        let sigma0 = SymMat::random_psd(6, 18, 0.1, &mut rng);
+        let eig = crate::linalg::eig::JacobiEig::new(&sigma0);
+        let mut sigma = sigma0.clone();
+        hotelling(&mut sigma, eig.vector(0), eig.values[0]);
+        // new top eigenvalue = old second eigenvalue
+        let e2 = crate::linalg::eig::JacobiEig::new(&sigma);
+        assert!((e2.lambda_max() - eig.values[1]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn scheme_parse() {
+        assert_eq!(Scheme::parse("projection"), Some(Scheme::Projection));
+        assert_eq!(Scheme::parse("hotelling"), Some(Scheme::Hotelling));
+        assert_eq!(Scheme::parse("x"), None);
+    }
+}

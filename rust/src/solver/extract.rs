@@ -1,0 +1,127 @@
+//! Recover the sparse principal component from the SDP solution.
+//!
+//! Problem (1)'s solution `Z*` is (near) rank-one when the relaxation is
+//! tight; the sparse PC is its leading eigenvector. Small numerical dust
+//! below `tol` is truncated to give the crisp support reported in the
+//! paper's tables.
+
+use crate::data::SymMat;
+use crate::linalg::power::power_iteration;
+use crate::linalg::vec::{normalize, norm2};
+use crate::util::rng::Rng;
+
+/// A sparse principal component.
+#[derive(Clone, Debug)]
+pub struct SparsePc {
+    /// Unit-norm loading vector (zeros off support).
+    pub vector: Vec<f64>,
+    /// Indices of the nonzero loadings, sorted by decreasing |loading|.
+    pub support: Vec<usize>,
+    /// Leading eigenvalue of `Z*` (rank-one-ness diagnostic: ≈ 1 when tight).
+    pub z_eigenvalue: f64,
+}
+
+impl SparsePc {
+    /// Cardinality of the component.
+    pub fn cardinality(&self) -> usize {
+        self.support.len()
+    }
+
+    /// Explained variance `xᵀΣx` of this component on a covariance.
+    pub fn explained_variance(&self, sigma: &SymMat) -> f64 {
+        sigma.quad_form(&self.vector)
+    }
+}
+
+/// Extract the leading sparse PC from `Z*` (or any PSD matrix).
+///
+/// `tol` is the relative magnitude below which loadings are truncated to
+/// zero (relative to the largest |loading|).
+pub fn leading_sparse_pc(z: &SymMat, tol: f64) -> SparsePc {
+    // Deterministic seed: extraction must be reproducible.
+    let mut rng = Rng::seed_from(0xD59Cu64 ^ z.n() as u64);
+    let res = power_iteration(z, 10_000, 1e-12, &mut rng);
+    let mut v = res.vector;
+    // Truncate dust, renormalize.
+    let maxabs = v.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    if maxabs > 0.0 {
+        for x in v.iter_mut() {
+            if x.abs() < tol * maxabs {
+                *x = 0.0;
+            }
+        }
+    }
+    if norm2(&v) > 0.0 {
+        normalize(&mut v);
+    }
+    // Canonical sign: largest-|loading| entry positive.
+    let mut support: Vec<usize> = (0..v.len()).filter(|&i| v[i] != 0.0).collect();
+    support.sort_by(|&a, &b| v[b].abs().partial_cmp(&v[a].abs()).unwrap());
+    if let Some(&lead) = support.first() {
+        if v[lead] < 0.0 {
+            for x in v.iter_mut() {
+                *x = -*x;
+            }
+        }
+    }
+    SparsePc { vector: v, support, z_eigenvalue: res.value }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{close, ensure, property};
+
+    #[test]
+    fn rank_one_recovery() {
+        // Z = vvᵀ with sparse v → exact recovery.
+        let v = {
+            let mut v = vec![0.0; 6];
+            v[1] = 0.8;
+            v[4] = -0.6;
+            v
+        };
+        let z = SymMat::from_fn(6, |i, j| v[i] * v[j]);
+        let pc = leading_sparse_pc(&z, 1e-6);
+        assert_eq!(pc.support.len(), 2);
+        assert_eq!(pc.support[0], 1);
+        assert_eq!(pc.support[1], 4);
+        close(pc.z_eigenvalue, 1.0, 1e-8).unwrap();
+        // canonical sign: leading loading positive
+        assert!(pc.vector[1] > 0.0);
+        close(pc.vector[1], 0.8, 1e-8).unwrap();
+        close(pc.vector[4], -0.6, 1e-8).unwrap();
+    }
+
+    #[test]
+    fn prop_unit_norm_and_sorted_support() {
+        property("extracted PC: unit norm, support sorted by |loading|", 15, |rng| {
+            let n = rng.range(2, 12);
+            let z = SymMat::random_psd(n, n + 2, 1e-6, rng);
+            let pc = leading_sparse_pc(&z, 1e-4);
+            close(crate::linalg::vec::norm2(&pc.vector), 1.0, 1e-9)?;
+            for w in pc.support.windows(2) {
+                ensure(
+                    pc.vector[w[0]].abs() >= pc.vector[w[1]].abs() - 1e-15,
+                    "support not sorted",
+                )?;
+            }
+            ensure(
+                pc.explained_variance(&z) >= -1e-12,
+                "explained variance must be ≥ 0 on PSD",
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_respects_tol() {
+        // leading eigenvector has a tiny component that must be zeroed
+        let mut v = vec![0.70710678, 0.70710678, 1e-8];
+        normalize(&mut v);
+        let z = SymMat::from_fn(3, |i, j| v[i] * v[j]);
+        let pc = leading_sparse_pc(&z, 1e-4);
+        assert_eq!(pc.cardinality(), 2);
+        assert_eq!(pc.vector[2], 0.0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Forward greedy sparse PCA baseline (Moghaddam et al. [5], d'Aspremont
+//! et al. [6]) — the strongest of the "local" methods the DSPCA line of
+//! work compares against; included for the ablation benches.
+//!
+//! Grows the support one feature at a time, at each step adding the
+//! feature that maximizes the leading eigenvalue of the principal
+//! submatrix. O(k · n · T_eig(k)) total — tractable for the small target
+//! cardinalities the paper cares about, but with no optimality guarantee
+//! (problem (2) is NP-hard; greedy can get stuck, see the tests).
+
+use crate::data::SymMat;
+use crate::linalg::eig::JacobiEig;
+use crate::solver::extract::SparsePc;
+
+/// Result of a greedy run: the chosen support at every prefix size, so one
+/// run yields the whole cardinality path.
+#[derive(Clone, Debug)]
+pub struct GreedyPath {
+    /// `path[k]` = (support of size k+1, its λ_max).
+    pub path: Vec<(Vec<usize>, f64)>,
+}
+
+impl GreedyPath {
+    /// The sparse PC at cardinality `k` (1-based; clamped to the path).
+    pub fn pc_at(&self, sigma: &SymMat, k: usize) -> SparsePc {
+        let idx = k.clamp(1, self.path.len()) - 1;
+        let (support, _) = &self.path[idx];
+        let sub = sigma.submatrix(support);
+        let eig = JacobiEig::new(&sub);
+        let mut vector = vec![0.0; sigma.n()];
+        for (pos, &orig) in support.iter().enumerate() {
+            vector[orig] = eig.vector(0)[pos];
+        }
+        // canonical sign + sorted support (largest |loading| first)
+        let mut sup: Vec<usize> = support.clone();
+        sup.sort_by(|&a, &b| vector[b].abs().partial_cmp(&vector[a].abs()).unwrap());
+        if let Some(&lead) = sup.first() {
+            if vector[lead] < 0.0 {
+                for x in vector.iter_mut() {
+                    *x = -*x;
+                }
+            }
+        }
+        SparsePc { vector, support: sup, z_eigenvalue: f64::NAN }
+    }
+}
+
+/// Run forward greedy selection up to cardinality `max_card`.
+pub fn forward(sigma: &SymMat, max_card: usize) -> GreedyPath {
+    let n = sigma.n();
+    let max_card = max_card.min(n);
+    let mut support: Vec<usize> = Vec::new();
+    let mut in_support = vec![false; n];
+    let mut path = Vec::with_capacity(max_card);
+    for _ in 0..max_card {
+        let mut best: Option<(usize, f64)> = None;
+        for cand in 0..n {
+            if in_support[cand] {
+                continue;
+            }
+            support.push(cand);
+            let lam = JacobiEig::new(&sigma.submatrix(&support)).lambda_max();
+            support.pop();
+            if best.map_or(true, |(_, b)| lam > b) {
+                best = Some((cand, lam));
+            }
+        }
+        let (chosen, lam) = best.expect("candidates remain");
+        support.push(chosen);
+        in_support[chosen] = true;
+        path.push((support.clone(), lam));
+    }
+    GreedyPath { path }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::models::spiked_covariance_with_u;
+    use crate::util::check::{ensure, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn first_pick_is_max_variance() {
+        let sigma = SymMat::from_fn(4, |i, j| if i == j { [1.0, 3.0, 2.0, 0.5][i] } else { 0.0 });
+        let g = forward(&sigma, 2);
+        assert_eq!(g.path[0].0, vec![1]);
+        assert!((g.path[0].1 - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn prop_path_monotone_and_nested() {
+        property("greedy path: λmax non-decreasing, supports nested", 10, |rng| {
+            let n = rng.range(3, 12);
+            let sigma = SymMat::random_psd(n, n + 4, 0.05, rng);
+            let g = forward(&sigma, n.min(6));
+            for w in g.path.windows(2) {
+                ensure(w[1].1 >= w[0].1 - 1e-10, "λmax must not decrease")?;
+                ensure(
+                    w[0].0.iter().all(|i| w[1].0.contains(i)),
+                    "supports must be nested",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn recovers_strong_spike() {
+        let mut rng = Rng::seed_from(171);
+        let (sigma, u) = spiked_covariance_with_u(25, 100, 4, 6.0, &mut rng);
+        let g = forward(&sigma, 4);
+        let planted = crate::linalg::vec::support(&u, 1e-9);
+        let hits = g.path[3].0.iter().filter(|i| planted.contains(i)).count();
+        assert!(hits >= 3, "greedy found {:?}, planted {planted:?}", g.path[3].0);
+        // and the extracted PC is unit-norm on that support
+        let pc = g.pc_at(&sigma, 4);
+        assert!((crate::linalg::vec::norm2(&pc.vector) - 1.0).abs() < 1e-9);
+        assert_eq!(pc.cardinality(), 4);
+    }
+
+    #[test]
+    fn greedy_never_beats_dspca_bound() {
+        // φ (SDP) upper-bounds ψ = λmax(submatrix) − λ·k for every support,
+        // including greedy's — the relaxation sandwich of §2.
+        let mut rng = Rng::seed_from(172);
+        let (sigma, _) = spiked_covariance_with_u(18, 60, 3, 4.0, &mut rng);
+        let g = forward(&sigma, 5);
+        let d: Vec<f64> = (0..18).map(|i| sigma.get(i, i)).collect();
+        let lambda = crate::elim::lambda_for_survivors(&d, 9);
+        let sol = crate::solver::bca::solve(
+            &sigma,
+            lambda,
+            &crate::solver::bca::BcaOptions { max_sweeps: 40, ..Default::default() },
+        );
+        for (support, lam_max) in &g.path {
+            let psi = lam_max - lambda * support.len() as f64;
+            assert!(
+                sol.phi >= psi - 1e-5 * (1.0 + psi.abs()),
+                "relaxation violated: φ={} < ψ(greedy k={})={psi}",
+                sol.phi,
+                support.len()
+            );
+        }
+    }
+}

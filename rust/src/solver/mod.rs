@@ -1,0 +1,35 @@
+//! Solvers: the paper's block coordinate ascent DSPCA algorithm
+//! (Algorithm 1) with its two sub-problems, plus every baseline the
+//! evaluation compares against.
+//!
+//! | module | paper reference |
+//! |---|---|
+//! | [`qp`] | the box-constrained QP (11) with closed-form update (13) |
+//! | [`tau`] | the 1-D τ problem (cubic optimality condition) |
+//! | [`bca`] | Algorithm 1 — block coordinate ascent, O(K n³) |
+//! | [`first_order`] | the O(n⁴√log n) first-order DSPCA method of [1] (Fig 1 baseline) |
+//! | [`greedy`] | forward greedy selection (Moghaddam [5] / d'Aspremont [6] baseline) |
+//! | [`gpower`] | generalized power method (Journée et al. [10] baseline) |
+//! | [`spca_zou`] | SPCA via alternating elastic net (Zou et al. [8] baseline) |
+//! | [`certificate`] | dual-feasible optimality certificates (gap bounds) |
+//! | [`path`] | λ regularization path with per-λ safe elimination |
+//! | [`pca`] | plain PCA via power iteration (the O(n²) comparison point) |
+//! | [`threshold`] | simple thresholding baseline (Cadima–Jolliffe [4]) |
+//! | [`deflate`] | deflation schemes for extracting multiple PCs |
+//! | [`lambda`] | λ-search for a target cardinality (§4's "coarse range of λ") |
+//! | [`extract`] | recover the sparse PC from the SDP solution `X*` |
+
+pub mod bca;
+pub mod certificate;
+pub mod deflate;
+pub mod extract;
+pub mod first_order;
+pub mod gpower;
+pub mod greedy;
+pub mod lambda;
+pub mod path;
+pub mod pca;
+pub mod qp;
+pub mod spca_zou;
+pub mod tau;
+pub mod threshold;

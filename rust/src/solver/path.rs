@@ -1,0 +1,158 @@
+//! Regularization-path computation: DSPCA solved over a λ grid, with
+//! per-λ safe elimination — the library API behind `examples/
+//! lambda_explorer.rs` and the cardinality/variance trade-off analyses.
+
+use crate::data::SymMat;
+use crate::elim::SafeElimination;
+use crate::solver::bca::{self, BcaOptions};
+use crate::solver::extract::{leading_sparse_pc, SparsePc};
+
+/// One point on the path.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub lambda: f64,
+    /// Surviving features after the Thm 2.1 test at this λ.
+    pub survivors: usize,
+    pub pc: SparsePc,
+    pub phi: f64,
+    /// Explained variance `xᵀΣx` of the extracted PC on the input Σ.
+    pub explained_variance: f64,
+    pub solve_seconds: f64,
+}
+
+/// Options for the path sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct PathOptions {
+    /// Number of λ grid points (log-spaced over (0, max Σ_ii)).
+    pub points: usize,
+    /// Smallest λ as a fraction of max Σ_ii.
+    pub min_frac: f64,
+    pub bca: BcaOptions,
+    pub extract_tol: f64,
+}
+
+impl Default for PathOptions {
+    fn default() -> Self {
+        PathOptions {
+            points: 12,
+            min_frac: 1e-3,
+            bca: BcaOptions { max_sweeps: 12, track_history: false, ..Default::default() },
+            extract_tol: 1e-3,
+        }
+    }
+}
+
+/// Compute the path, largest λ first (sparsest end first — each point
+/// applies safe elimination independently so the big-λ points are cheap).
+pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
+    let n = sigma.n();
+    assert!(n > 0 && opts.points >= 2);
+    let diags: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    let max_diag = diags.iter().cloned().fold(0.0f64, f64::max);
+    let lo = (max_diag * opts.min_frac).max(1e-300);
+    let hi = max_diag * 0.999;
+    let ratio = (hi / lo).powf(1.0 / (opts.points - 1) as f64);
+    let mut out = Vec::with_capacity(opts.points);
+    let mut lambda = hi;
+    for _ in 0..opts.points {
+        let t = crate::util::timer::Timer::start();
+        let elim = SafeElimination::apply(&diags, lambda, None);
+        let point = if elim.reduced() == 0 {
+            PathPoint {
+                lambda,
+                survivors: 0,
+                pc: SparsePc { vector: vec![0.0; n], support: Vec::new(), z_eigenvalue: 0.0 },
+                phi: 0.0,
+                explained_variance: 0.0,
+                solve_seconds: t.secs(),
+            }
+        } else {
+            let sub = sigma.submatrix(&elim.kept);
+            let sol = bca::solve(&sub, lambda, &opts.bca);
+            let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
+            pc.vector = elim.lift(&pc.vector);
+            pc.support = pc.support.iter().map(|&r| elim.kept[r]).collect();
+            let explained = sigma.quad_form(&pc.vector);
+            PathPoint {
+                lambda,
+                survivors: elim.reduced(),
+                phi: sol.phi,
+                explained_variance: explained,
+                pc,
+                solve_seconds: t.secs(),
+            }
+        };
+        out.push(point);
+        lambda /= ratio;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::models::spiked_covariance_with_u;
+    use crate::util::check::{ensure, property};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn prop_path_monotonicity() {
+        property("path: survivors/φ non-increasing in λ", 6, |rng| {
+            let n = rng.range(6, 18);
+            let sigma = SymMat::random_psd(n, 2 * n, 0.1, rng);
+            let path = compute(&sigma, &PathOptions { points: 8, ..Default::default() });
+            // path is sparsest-first (λ descending)
+            for w in path.windows(2) {
+                ensure(w[0].lambda > w[1].lambda, "λ must descend")?;
+                ensure(w[0].survivors <= w[1].survivors, "survivors must grow as λ falls")?;
+                ensure(
+                    w[0].phi <= w[1].phi + 1e-6 * (1.0 + w[1].phi.abs()),
+                    format!("φ must grow as λ falls: {} → {}", w[0].phi, w[1].phi),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dense_end_approaches_lambda_max() {
+        let mut rng = Rng::seed_from(241);
+        let (sigma, _) = spiked_covariance_with_u(15, 60, 3, 4.0, &mut rng);
+        let path = compute(
+            &sigma,
+            &PathOptions {
+                points: 10,
+                min_frac: 1e-4,
+                bca: BcaOptions { max_sweeps: 40, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let eig = crate::linalg::eig::JacobiEig::new(&sigma);
+        let last = path.last().unwrap();
+        assert!(
+            (last.explained_variance - eig.lambda_max()).abs() < 0.05 * eig.lambda_max(),
+            "dense-end explained {} vs λmax {}",
+            last.explained_variance,
+            eig.lambda_max()
+        );
+    }
+
+    #[test]
+    fn supports_nest_coarsely_along_path() {
+        // Sparse PCA supports are not strictly nested in general, but on a
+        // strong spike the sparse end must be contained in the dense end.
+        let mut rng = Rng::seed_from(242);
+        let (sigma, u) = spiked_covariance_with_u(20, 80, 4, 8.0, &mut rng);
+        let path = compute(&sigma, &PathOptions { points: 9, ..Default::default() });
+        let planted = crate::linalg::vec::support(&u, 1e-9);
+        for p in path.iter().filter(|p| (1..=4).contains(&p.pc.cardinality())) {
+            let hits = p.pc.support.iter().filter(|i| planted.contains(i)).count();
+            assert!(
+                hits * 2 >= p.pc.cardinality(),
+                "λ={}: support {:?} vs planted {planted:?}",
+                p.lambda,
+                p.pc.support
+            );
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Plain PCA — the O(n²)-per-iteration comparison point of the paper's
+//! "sparse PCA can be easier than PCA" argument, and the dense baseline in
+//! the topic-table experiments.
+
+use crate::data::SymMat;
+use crate::linalg::power::{power_iteration, PowerResult};
+use crate::util::rng::Rng;
+
+/// Leading principal component of a covariance matrix.
+#[derive(Clone, Debug)]
+pub struct PcaComponent {
+    pub vector: Vec<f64>,
+    /// Explained variance (the eigenvalue).
+    pub variance: f64,
+    pub iters: usize,
+}
+
+/// Compute the leading PC by power iteration (deterministic seed).
+pub fn leading_pc(sigma: &SymMat, max_iters: usize, tol: f64) -> PcaComponent {
+    let mut rng = Rng::seed_from(0x9CA ^ sigma.n() as u64);
+    let PowerResult { vector, value, iters, .. } = power_iteration(sigma, max_iters, tol, &mut rng);
+    PcaComponent { vector, variance: value, iters }
+}
+
+/// Top-k PCs via power iteration + Hotelling deflation (reference
+/// implementation for tests & the PCA column of the topic benchmarks).
+pub fn top_k(sigma: &SymMat, k: usize, max_iters: usize, tol: f64) -> Vec<PcaComponent> {
+    let mut work = sigma.clone();
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        let pc = leading_pc(&work, max_iters, tol);
+        crate::solver::deflate::hotelling(&mut work, &pc.vector, pc.variance);
+        out.push(pc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eig::JacobiEig;
+    use crate::util::check::{close, property};
+
+    #[test]
+    fn prop_topk_matches_jacobi() {
+        property("power-iteration top-k ≈ Jacobi eigenvalues", 8, |rng| {
+            let n = rng.range(3, 10);
+            let sigma = SymMat::random_psd(n, 3 * n, 0.05, rng);
+            let eig = JacobiEig::new(&sigma);
+            let pcs = top_k(&sigma, 3.min(n), 20_000, 1e-13);
+            for (k, pc) in pcs.iter().enumerate() {
+                close(pc.variance, eig.values[k], 1e-3)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn explained_variance_is_rayleigh() {
+        let mut rng = crate::util::rng::Rng::seed_from(111);
+        let sigma = SymMat::random_psd(7, 20, 0.1, &mut rng);
+        let pc = leading_pc(&sigma, 10_000, 1e-12);
+        let quad = sigma.quad_form(&pc.vector);
+        assert!((quad - pc.variance).abs() < 1e-8 * (1.0 + quad));
+    }
+}

@@ -1,0 +1,158 @@
+//! SPCA baseline (Zou, Hastie & Tibshirani [8]): sparse PCA as an
+//! alternating elastic-net regression.
+//!
+//! For a single component on a covariance Σ (self-contained variant using
+//! Σ's Cholesky-like square root as the data proxy):
+//!
+//! ```text
+//! repeat:  β ← argmin_β ‖X α − X β‖² + λ₁‖β‖₁ + λ₂‖β‖²   (elastic net)
+//!          α ← Σ β / ‖Σ β‖                                  (SVD step, rank 1)
+//! ```
+//!
+//! Non-convex; converges to a local optimum. Included because the DSPCA
+//! papers ([1,2,11], and this paper's intro) report that SPCA-style local
+//! methods underperform the SDP relaxation — the ablation bench quantifies
+//! that here.
+
+use crate::data::SymMat;
+use crate::linalg::eig::JacobiEig;
+use crate::linalg::elastic_net::{self, EnetOptions};
+use crate::linalg::vec::normalize;
+use crate::solver::extract::SparsePc;
+
+/// Options for the alternating SPCA solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SpcaOptions {
+    pub max_alternations: usize,
+    pub tol: f64,
+    /// Elastic-net ridge term λ₂ (Zou's default regime: small positive).
+    pub lambda2: f64,
+    pub enet: EnetOptions,
+}
+
+impl Default for SpcaOptions {
+    fn default() -> Self {
+        SpcaOptions {
+            max_alternations: 100,
+            tol: 1e-8,
+            lambda2: 1e-3,
+            enet: EnetOptions::default(),
+        }
+    }
+}
+
+/// Factor Σ = RᵀR via its eigendecomposition (R = diag(√w) Vᵀ, rows of R
+/// are features' "data" directions). Column-major m×p layout for the
+/// elastic-net solver, with m = p = n.
+fn sigma_root_colmajor(sigma: &SymMat) -> (Vec<f64>, usize) {
+    let n = sigma.n();
+    let eig = JacobiEig::new(sigma);
+    // R[k, j] = sqrt(w_k) * V[k, j]; column j of R is feature j's vector.
+    let mut r = vec![0.0f64; n * n];
+    for k in 0..n {
+        let s = eig.values[k].max(0.0).sqrt();
+        for j in 0..n {
+            r[j * n + k] = s * eig.vectors[k * n + j];
+        }
+    }
+    (r, n)
+}
+
+/// One sparse component via alternating elastic net.
+pub fn solve(sigma: &SymMat, lambda1: f64, opts: &SpcaOptions) -> SparsePc {
+    let n = sigma.n();
+    let (x, m) = sigma_root_colmajor(sigma); // m = n rows
+    // α starts at the dense leading eigenvector.
+    let mut alpha = crate::solver::pca::leading_pc(sigma, 10_000, 1e-12).vector;
+    let mut beta = vec![0.0f64; n];
+    for _ in 0..opts.max_alternations {
+        // y = X α  (length m)
+        let mut y = vec![0.0; m];
+        for j in 0..n {
+            let xj = &x[j * m..(j + 1) * m];
+            for (yi, &xv) in y.iter_mut().zip(xj) {
+                *yi += alpha[j] * xv;
+            }
+        }
+        let new_beta = elastic_net::solve(&x, m, n, &y, lambda1, opts.lambda2, opts.enet);
+        // α ← Σ β / ‖Σ β‖
+        let mut sb = vec![0.0; n];
+        sigma.matvec(&new_beta, &mut sb);
+        if normalize(&mut sb) <= 1e-300 {
+            beta = new_beta;
+            break; // λ₁ killed the component
+        }
+        let delta = crate::linalg::vec::max_abs_diff(&new_beta, &beta);
+        beta = new_beta;
+        alpha = sb;
+        if delta < opts.tol {
+            break;
+        }
+    }
+    let mut v = beta;
+    if normalize(&mut v) <= 1e-300 {
+        // empty component: return the zero PC
+        return SparsePc { vector: vec![0.0; n], support: Vec::new(), z_eigenvalue: f64::NAN };
+    }
+    let mut support: Vec<usize> = (0..n).filter(|&i| v[i] != 0.0).collect();
+    support.sort_by(|&a, &b| v[b].abs().partial_cmp(&v[a].abs()).unwrap());
+    if let Some(&lead) = support.first() {
+        if v[lead] < 0.0 {
+            for xv in v.iter_mut() {
+                *xv = -*xv;
+            }
+        }
+    }
+    SparsePc { vector: v, support, z_eigenvalue: f64::NAN }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::models::spiked_covariance_with_u;
+    use crate::util::check::close;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sigma_root_reconstructs() {
+        let mut rng = Rng::seed_from(221);
+        let sigma = SymMat::random_psd(7, 20, 0.1, &mut rng);
+        let (r, m) = sigma_root_colmajor(&sigma);
+        // Σ_ij = column_i · column_j
+        for i in 0..7 {
+            for j in 0..7 {
+                let d = crate::linalg::vec::dot(&r[i * m..(i + 1) * m], &r[j * m..(j + 1) * m]);
+                close(d, sigma.get(i, j), 1e-8).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn lambda_zero_gives_dense_leading_direction() {
+        let mut rng = Rng::seed_from(222);
+        let sigma = SymMat::random_psd(8, 24, 0.1, &mut rng);
+        let pc = solve(&sigma, 0.0, &SpcaOptions::default());
+        let eig = crate::linalg::eig::JacobiEig::new(&sigma);
+        let align: f64 = pc.vector.iter().zip(eig.vector(0)).map(|(a, b)| a * b).sum::<f64>().abs();
+        assert!(align > 0.999, "alignment {align}");
+    }
+
+    #[test]
+    fn recovers_spike_and_sparsifies() {
+        let mut rng = Rng::seed_from(223);
+        let (sigma, u) = spiked_covariance_with_u(20, 80, 4, 6.0, &mut rng);
+        let pc = solve(&sigma, 0.8, &SpcaOptions::default());
+        assert!(pc.cardinality() <= 10, "card {}", pc.cardinality());
+        let planted = crate::linalg::vec::support(&u, 1e-9);
+        let hits = pc.support.iter().filter(|i| planted.contains(i)).count();
+        assert!(hits >= 3, "support {:?} planted {planted:?}", pc.support);
+    }
+
+    #[test]
+    fn huge_lambda_empty_component() {
+        let mut rng = Rng::seed_from(224);
+        let sigma = SymMat::random_psd(6, 12, 0.1, &mut rng);
+        let pc = solve(&sigma, 1e9, &SpcaOptions::default());
+        assert_eq!(pc.cardinality(), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! The 1-D sub-problem of Algorithm 1, step 5:
+//!
+//! ```text
+//! min_{τ > 0}  R²/τ − β log τ + ½ (c + τ)²
+//! ```
+//!
+//! with `c = Σ_jj − λ − t`. The stationarity condition
+//!
+//! ```text
+//! −R²/τ² − β/τ + (c + τ) = 0   ⟺   τ³ + cτ² − βτ − R² = 0
+//! ```
+//!
+//! has a *unique* positive root: the derivative `g(τ) = −R²/τ² − β/τ + c + τ`
+//! is strictly increasing on τ > 0 (g′ = 2R²/τ³ + β/τ² + 1 > 0), tends to
+//! −∞ at 0⁺ and +∞ at ∞. We bracket it and run safeguarded
+//! Newton-bisection. The paper offers bisection or solving the degree-3
+//! polynomial; this hybrid does both at once (Newton steps = cubic-solving,
+//! the bracket keeps it safe).
+//!
+//! At the root, the new diagonal element `x = c + τ = β/τ + R²/τ² > 0` —
+//! the barrier automatically keeps `X ≻ 0`.
+
+/// Options for the τ solve.
+#[derive(Clone, Copy, Debug)]
+pub struct TauOptions {
+    pub tol: f64,
+    pub max_iters: usize,
+}
+
+impl Default for TauOptions {
+    fn default() -> Self {
+        TauOptions { tol: 1e-13, max_iters: 200 }
+    }
+}
+
+/// Derivative g(τ) of the objective.
+#[inline]
+fn g(tau: f64, r2: f64, beta: f64, c: f64) -> f64 {
+    -r2 / (tau * tau) - beta / tau + c + tau
+}
+
+/// Solve for the unique positive root. Requires `beta > 0` (the barrier)
+/// or `r2 > 0`; when both are zero the problem degenerates to
+/// `min ½(c+τ)²`, whose minimizer over τ>0 is `max(−c, 0⁺)` — we return
+/// a tiny positive τ in that case.
+pub fn solve(r2: f64, beta: f64, c: f64, opts: TauOptions) -> f64 {
+    debug_assert!(r2 >= 0.0, "R² must be non-negative");
+    debug_assert!(beta >= 0.0, "β must be non-negative");
+    if r2 <= 0.0 && beta <= 0.0 {
+        return (-c).max(1e-300);
+    }
+    // Bracket: g(lo) < 0 < g(hi).
+    let mut hi = 1.0f64.max(-c) + beta + r2.sqrt() + 1.0;
+    while g(hi, r2, beta, c) < 0.0 {
+        hi *= 2.0;
+    }
+    let mut lo = hi.min(1e-3);
+    while g(lo, r2, beta, c) > 0.0 {
+        lo *= 0.5;
+        if lo < 1e-300 {
+            break;
+        }
+    }
+    // Safeguarded Newton. Return `tau` the moment its residual is inside
+    // tolerance — checking *before* moving, so a converged iterate is never
+    // replaced by a bisection midpoint (the subtle bug the τ property test
+    // caught: at g(τ)=0 the Newton step equals lo and the fallback midpoint
+    // would otherwise be returned).
+    let mut tau = 0.5 * (lo + hi);
+    for _ in 0..opts.max_iters {
+        let val = g(tau, r2, beta, c);
+        if val.abs() <= opts.tol * (1.0 + c.abs()) {
+            return tau;
+        }
+        if val > 0.0 {
+            hi = tau;
+        } else {
+            lo = tau;
+        }
+        let deriv = 2.0 * r2 / (tau * tau * tau) + beta / (tau * tau) + 1.0;
+        let newton = tau - val / deriv;
+        tau = if newton > lo && newton < hi {
+            newton
+        } else {
+            0.5 * (lo + hi)
+        };
+        if (hi - lo) <= opts.tol * (1.0 + tau.abs()) {
+            break;
+        }
+    }
+    tau
+}
+
+/// Objective value at τ (for tests).
+pub fn objective(tau: f64, r2: f64, beta: f64, c: f64) -> f64 {
+    r2 / tau - beta * tau.ln() + 0.5 * (c + tau) * (c + tau)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{ensure, property};
+
+    #[test]
+    fn known_root() {
+        // τ³ + cτ² − βτ − R² with τ=1, c=0, β=0.5 → R² = 1 − 0.5 = 0.5
+        let tau = solve(0.5, 0.5, 0.0, TauOptions::default());
+        assert!((tau - 1.0).abs() < 1e-10, "tau={tau}");
+    }
+
+    #[test]
+    fn prop_root_is_stationary_and_minimal() {
+        property("τ: stationarity + local optimality + x>0", 50, |rng| {
+            let r2 = rng.range_f64(0.0, 10.0);
+            let beta = rng.range_f64(1e-8, 0.5);
+            let c = rng.range_f64(-10.0, 10.0);
+            let tau = solve(r2, beta, c, TauOptions::default());
+            ensure(tau > 0.0, "τ must be positive")?;
+            let val = g(tau, r2, beta, c);
+            ensure(
+                val.abs() < 1e-6 * (1.0 + c.abs() + r2),
+                format!("g(τ*)={val} not ~0 (τ={tau})"),
+            )?;
+            // objective at τ* below neighbors
+            let f0 = objective(tau, r2, beta, c);
+            for mult in [0.9, 1.1] {
+                let f1 = objective(tau * mult, r2, beta, c);
+                ensure(f0 <= f1 + 1e-9 * (1.0 + f1.abs()), "not a local min")?;
+            }
+            // x = c + τ = β/τ + R²/τ² > 0
+            let x = c + tau;
+            ensure(x > 0.0, format!("x = {x} must be positive"))?;
+            let identity = beta / tau + r2 / (tau * tau);
+            ensure(
+                (x - identity).abs() < 1e-5 * (1.0 + identity),
+                format!("x {x} != β/τ + R²/τ² {identity}"),
+            )?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn degenerate_no_barrier_no_r2() {
+        let tau = solve(0.0, 0.0, -3.0, TauOptions::default());
+        assert!((tau - 3.0).abs() < 1e-9);
+        let tau2 = solve(0.0, 0.0, 5.0, TauOptions::default());
+        assert!(tau2 > 0.0 && tau2 < 1e-200);
+    }
+
+    #[test]
+    fn huge_r2_and_negative_c() {
+        let tau = solve(1e8, 1e-6, -1e4, TauOptions::default());
+        assert!(tau.is_finite() && tau > 0.0);
+        assert!(g(tau, 1e8, 1e-6, -1e4).abs() < 1e-2);
+    }
+}

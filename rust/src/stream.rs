@@ -1,0 +1,450 @@
+//! Streaming orchestration: bounded channels with backpressure and a
+//! worker pool that folds document chunks into mergeable accumulators.
+//!
+//! This is the coordination layer for the paper's pre-processing passes.
+//! The corpora are larger than memory, so a single reader thread streams
+//! chunks into a *bounded* queue (backpressure: the reader blocks when the
+//! workers fall behind), and `W` workers fold chunks into thread-local
+//! accumulators that merge associatively at the end. The paper notes this
+//! pass "is easy to parallelize"; this module is that claim, made concrete.
+//!
+//! (The scaffold suggested tokio; it is not available in the offline
+//! vendor set, so this uses `std::thread` + a hand-rolled bounded channel —
+//! same semantics, see DESIGN.md §3.)
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::data::docword::{DocChunk, DocwordHeader, DocwordReader};
+use crate::moments::{FeatureMoments, FeatureVariances};
+
+// ---------------------------------------------------------------------------
+// Bounded MPMC channel
+// ---------------------------------------------------------------------------
+
+struct ChannelInner<T> {
+    queue: Mutex<ChannelState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    /// Live receiver handles. When it drops to zero the senders unblock
+    /// and start failing — this is what turns "all workers died" into an
+    /// error instead of a deadlocked reader (see worker_panic test).
+    receivers: AtomicUsize,
+}
+
+struct ChannelState<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    closed: bool,
+}
+
+/// Sending half of a bounded channel.
+pub struct BoundedSender<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+/// Receiving half of a bounded channel (cloneable: multiple workers).
+pub struct BoundedReceiver<T> {
+    inner: Arc<ChannelInner<T>>,
+}
+
+impl<T> Clone for BoundedReceiver<T> {
+    fn clone(&self) -> Self {
+        self.inner.receivers.fetch_add(1, Ordering::SeqCst);
+        BoundedReceiver { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Drop for BoundedReceiver<T> {
+    fn drop(&mut self) {
+        if self.inner.receivers.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // last receiver gone: wake blocked senders so they can error out
+            self.inner.not_full.notify_all();
+        }
+    }
+}
+
+/// Create a bounded channel with capacity `cap`.
+pub fn bounded<T>(cap: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    assert!(cap > 0);
+    let inner = Arc::new(ChannelInner {
+        queue: Mutex::new(ChannelState { buf: VecDeque::with_capacity(cap), cap, closed: false }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        receivers: AtomicUsize::new(1),
+    });
+    (BoundedSender { inner: Arc::clone(&inner) }, BoundedReceiver { inner })
+}
+
+impl<T> BoundedSender<T> {
+    /// Blocking send; returns `Err(item)` if the channel was closed or
+    /// every receiver is gone (e.g. all workers panicked).
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed || self.inner.receivers.load(Ordering::SeqCst) == 0 {
+                return Err(item);
+            }
+            if st.buf.len() < st.cap {
+                st.buf.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Close the channel; receivers drain the remaining items then see EOF.
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+}
+
+impl<T> Drop for BoundedSender<T> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    /// Blocking receive; `None` = channel closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunk sources
+// ---------------------------------------------------------------------------
+
+/// Anything that can produce document chunks in order.
+pub trait ChunkSource {
+    /// Total features (vocabulary size).
+    fn num_features(&self) -> usize;
+    /// Next chunk of at most `max_docs` documents, `None` at end.
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String>;
+}
+
+/// Stream from a docword file.
+pub struct FileSource {
+    reader: DocwordReader,
+}
+
+impl FileSource {
+    pub fn open(path: &Path) -> Result<FileSource, String> {
+        Ok(FileSource { reader: DocwordReader::open(path)? })
+    }
+
+    pub fn header(&self) -> DocwordHeader {
+        self.reader.header()
+    }
+}
+
+impl ChunkSource for FileSource {
+    fn num_features(&self) -> usize {
+        self.reader.header().vocab_size
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String> {
+        self.reader.next_chunk(max_docs)
+    }
+}
+
+/// Stream documents straight out of a synthetic corpus generator, without
+/// materializing a file (used by tests and in-memory benchmarks).
+pub struct SynthSource<'a> {
+    corpus: &'a crate::corpus::SynthCorpus,
+    next_doc: usize,
+}
+
+impl<'a> SynthSource<'a> {
+    pub fn new(corpus: &'a crate::corpus::SynthCorpus) -> SynthSource<'a> {
+        SynthSource { corpus, next_doc: 0 }
+    }
+}
+
+impl ChunkSource for SynthSource<'_> {
+    fn num_features(&self) -> usize {
+        self.corpus.spec.vocab_size
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String> {
+        let total = self.corpus.spec.num_docs;
+        if self.next_doc >= total {
+            return Ok(None);
+        }
+        let end = (self.next_doc + max_docs).min(total);
+        let docs = (self.next_doc..end)
+            .map(|d| crate::data::docword::Doc { id: d, words: self.corpus.generate_doc(d) })
+            .collect();
+        self.next_doc = end;
+        Ok(Some(DocChunk { docs }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel fold
+// ---------------------------------------------------------------------------
+
+/// Options for a streaming pass.
+#[derive(Clone, Copy, Debug)]
+pub struct StreamOptions {
+    pub workers: usize,
+    pub chunk_docs: usize,
+    pub queue_depth: usize,
+}
+
+impl Default for StreamOptions {
+    fn default() -> Self {
+        StreamOptions { workers: 2, chunk_docs: 2048, queue_depth: 4 }
+    }
+}
+
+/// Statistics from a completed pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    pub docs: u64,
+    pub nnz: u64,
+    pub chunks: u64,
+    pub seconds: f64,
+}
+
+/// Fold every chunk of `source` through worker-local accumulators.
+///
+/// `make_acc` builds one accumulator per worker, `fold` consumes a chunk,
+/// `merge` combines two accumulators. The reader applies backpressure via
+/// the bounded queue. Worker panics are converted to errors.
+pub fn parallel_fold<S, A, FM, FF, FG>(
+    source: &mut S,
+    opts: StreamOptions,
+    make_acc: FM,
+    fold: FF,
+    merge: FG,
+) -> Result<(A, StreamStats), String>
+where
+    S: ChunkSource,
+    A: Send + 'static,
+    FM: Fn() -> A,
+    FF: Fn(&mut A, &DocChunk) + Send + Sync + 'static,
+    FG: Fn(&mut A, A),
+{
+    assert!(opts.workers >= 1 && opts.chunk_docs >= 1 && opts.queue_depth >= 1);
+    let t0 = std::time::Instant::now();
+    let (tx, rx) = bounded::<DocChunk>(opts.queue_depth);
+    let fold = Arc::new(fold);
+    let mut stats = StreamStats::default();
+
+    let result: Result<A, String> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..opts.workers {
+            let rx = rx.clone();
+            let fold = Arc::clone(&fold);
+            let mut acc = make_acc();
+            handles.push(scope.spawn(move || {
+                while let Some(chunk) = rx.recv() {
+                    fold(&mut acc, &chunk);
+                }
+                acc
+            }));
+        }
+        drop(rx);
+
+        // Reader loop (this thread): stream chunks into the bounded queue.
+        let mut read_err = None;
+        loop {
+            match source.next_chunk(opts.chunk_docs) {
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+                Ok(None) => break,
+                Ok(Some(chunk)) => {
+                    stats.docs += chunk.docs.len() as u64;
+                    stats.nnz += chunk.total_nnz() as u64;
+                    stats.chunks += 1;
+                    if tx.send(chunk).is_err() {
+                        read_err = Some("all workers exited early".into());
+                        break;
+                    }
+                }
+            }
+        }
+        tx.close();
+
+        let mut final_acc: Option<A> = None;
+        let mut panic_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(acc) => match final_acc {
+                    None => final_acc = Some(acc),
+                    Some(ref mut f) => merge(f, acc),
+                },
+                Err(_) => panic_err = Some("worker thread panicked".to_string()),
+            }
+        }
+        if let Some(e) = read_err {
+            return Err(e);
+        }
+        if let Some(e) = panic_err {
+            return Err(e);
+        }
+        final_acc.ok_or_else(|| "no workers".to_string())
+    });
+
+    stats.seconds = t0.elapsed().as_secs_f64();
+    result.map(|acc| (acc, stats))
+}
+
+/// The paper's pre-processing pass: streamed per-feature variances.
+pub fn variance_pass<S: ChunkSource>(
+    source: &mut S,
+    opts: StreamOptions,
+) -> Result<(FeatureVariances, StreamStats), String> {
+    let nf = source.num_features();
+    let (acc, stats) = parallel_fold(
+        source,
+        opts,
+        || FeatureMoments::new(nf),
+        |acc: &mut FeatureMoments, chunk| acc.push_chunk(chunk),
+        |a, b| a.merge(&b),
+    )?;
+    Ok((acc.finalize(), stats))
+}
+
+/// Convenience: variance pass over a docword file.
+pub fn variance_pass_file(
+    path: &Path,
+    opts: StreamOptions,
+) -> Result<(DocwordHeader, FeatureVariances, StreamStats), String> {
+    let mut src = FileSource::open(path)?;
+    let header = src.header();
+    let (fv, stats) = variance_pass(&mut src, opts)?;
+    Ok((header, fv, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusSpec, SynthCorpus};
+    use crate::util::check::close_slice;
+
+    #[test]
+    fn bounded_channel_fifo_and_close() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.close();
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+        assert!(tx.send(3).is_err());
+    }
+
+    #[test]
+    fn send_fails_when_receivers_gone() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap(); // fills the queue
+        drop(rx);
+        // would deadlock before the receiver-count fix; must error instead
+        assert!(tx.send(2).is_err());
+    }
+
+    #[test]
+    fn bounded_channel_blocks_and_resumes() {
+        let (tx, rx) = bounded::<u32>(1);
+        let h = std::thread::spawn(move || {
+            // second send must block until the consumer drains
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+            "sent"
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(h.join().unwrap(), "sent");
+    }
+
+    fn corpus() -> SynthCorpus {
+        SynthCorpus::new(CorpusSpec::nytimes().scaled(300, 1200), 17)
+    }
+
+    #[test]
+    fn parallel_variance_equals_serial() {
+        let c = corpus();
+        // serial reference
+        let mut serial = crate::moments::FeatureMoments::new(c.spec.vocab_size);
+        for d in 0..c.spec.num_docs {
+            serial.push_doc(&c.generate_doc(d));
+        }
+        let want = serial.finalize();
+        for workers in [1, 2, 4] {
+            let mut src = SynthSource::new(&c);
+            let opts = StreamOptions { workers, chunk_docs: 37, queue_depth: 3 };
+            let (got, stats) = variance_pass(&mut src, opts).unwrap();
+            assert_eq!(stats.docs, 300);
+            close_slice(&got.variance, &want.variance, 1e-10).unwrap();
+            close_slice(&got.mean, &want.mean, 1e-10).unwrap();
+        }
+    }
+
+    #[test]
+    fn file_pass_matches_synth_pass() {
+        let c = corpus();
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_stream_{}.txt.gz", std::process::id()));
+        c.write_docword(&p).unwrap();
+        let opts = StreamOptions { workers: 2, chunk_docs: 50, queue_depth: 2 };
+        let (hdr, from_file, _) = variance_pass_file(&p, opts).unwrap();
+        assert_eq!(hdr.num_docs, 300);
+        let mut src = SynthSource::new(&c);
+        let (from_mem, _) = variance_pass(&mut src, opts).unwrap();
+        close_slice(&from_file.variance, &from_mem.variance, 1e-12).unwrap();
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(p.with_extension("vocab")).ok();
+    }
+
+    #[test]
+    fn worker_panic_reported() {
+        let c = corpus();
+        let mut src = SynthSource::new(&c);
+        let res: Result<(u64, _), String> = parallel_fold(
+            &mut src,
+            StreamOptions { workers: 2, chunk_docs: 64, queue_depth: 2 },
+            || 0u64,
+            |_, _| panic!("injected failure"),
+            |a, b| *a += b,
+        );
+        let err = res.unwrap_err();
+        assert!(err.contains("panicked") || err.contains("exited early"), "{err}");
+    }
+
+    #[test]
+    fn read_error_reported() {
+        struct Broken;
+        impl ChunkSource for Broken {
+            fn num_features(&self) -> usize {
+                1
+            }
+            fn next_chunk(&mut self, _: usize) -> Result<Option<DocChunk>, String> {
+                Err("disk on fire".into())
+            }
+        }
+        let res = variance_pass(&mut Broken, StreamOptions::default());
+        assert!(res.unwrap_err().contains("disk on fire"));
+    }
+}

@@ -1,0 +1,119 @@
+//! Micro-benchmark harness (offline substitute for `criterion`, see
+//! DESIGN.md §3) used by every `cargo bench` target.
+//!
+//! Each measurement runs warmups, then samples wall time until a time or
+//! iteration budget is exhausted, and reports min/median/p95. Results
+//! print in a stable, grep-friendly format that EXPERIMENTS.md quotes
+//! directly.
+
+use crate::util::stats::Summary;
+use crate::util::timer::Timer;
+
+/// Configuration for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    /// Stop sampling after this many seconds (after min_iters).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 2, min_iters: 5, max_iters: 200, max_seconds: 5.0 }
+    }
+}
+
+impl BenchConfig {
+    /// Budget for expensive end-to-end benches.
+    pub fn slow() -> BenchConfig {
+        BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 20, max_seconds: 20.0 }
+    }
+}
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        let s = &self.summary;
+        println!(
+            "bench {:<44} min {:>10}  p50 {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            crate::util::human_secs(s.min),
+            crate::util::human_secs(s.p50),
+            crate::util::human_secs(s.p95),
+            s.n
+        );
+    }
+}
+
+/// Measure a closure. The closure's return value is black-boxed to keep
+/// the optimizer honest.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::new();
+    let budget = Timer::start();
+    for i in 0..cfg.max_iters {
+        let t = Timer::start();
+        black_box(f());
+        samples.push(t.secs());
+        if i + 1 >= cfg.min_iters && budget.secs() > cfg.max_seconds {
+            break;
+        }
+    }
+    let result = BenchResult { name: name.to_string(), summary: Summary::of(&samples) };
+    result.print();
+    result
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a section header in the bench output.
+pub fn section(title: &str) {
+    println!("\n### {title}");
+}
+
+/// Print a `key = value` metric line (grep-friendly: `metric <name> = ...`).
+pub fn metric(name: &str, value: impl std::fmt::Display) {
+    println!("metric {name} = {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench(
+            "noop",
+            BenchConfig { warmup_iters: 1, min_iters: 3, max_iters: 5, max_seconds: 0.1 },
+            || 1 + 1,
+        );
+        assert_eq!(r.name, "noop");
+        assert!(r.summary.n >= 3);
+        assert!(r.summary.min >= 0.0);
+    }
+
+    #[test]
+    fn respects_time_budget() {
+        let t = Timer::start();
+        bench(
+            "sleepy",
+            BenchConfig { warmup_iters: 0, min_iters: 2, max_iters: 1000, max_seconds: 0.05 },
+            || std::thread::sleep(std::time::Duration::from_millis(5)),
+        );
+        assert!(t.secs() < 2.0);
+    }
+}

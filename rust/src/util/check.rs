@@ -1,0 +1,119 @@
+//! Property-testing mini-framework (offline substitute for `proptest`, see
+//! DESIGN.md §3).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it for
+//! many independent seeds and, on failure, reports the *seed* that broke it
+//! so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't receive the xla rpath rustflags,
+//! # // so they cannot load libxla_extension's libstdc++ in this image.
+//! use lsspca::util::check::property;
+//! property("addition commutes", 64, |rng| {
+//!     let a = rng.range_f64(-1e6, 1e6);
+//!     let b = rng.range_f64(-1e6, 1e6);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Base seed; combined with the case index so each case is independent but
+/// the whole suite is reproducible. Override with `LSSPCA_CHECK_SEED`.
+fn base_seed() -> u64 {
+    std::env::var("LSSPCA_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_1dea_cafe_f00d)
+}
+
+/// Number of cases multiplier (`LSSPCA_CHECK_FACTOR`, default 1).
+fn case_factor() -> usize {
+    std::env::var("LSSPCA_CHECK_FACTOR")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+/// Run `cases` randomized checks of the property; panic on first failure
+/// with the offending seed.
+pub fn property<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    let total = cases * case_factor();
+    for case in 0..total {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seed_from(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{total} (seed={seed:#x}):\n  {msg}\n\
+                 replay with LSSPCA_CHECK_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close in absolute-or-relative terms.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol}, |diff|={})", (a - b).abs()))
+    }
+}
+
+/// Assert two slices are elementwise close.
+pub fn close_slice(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x, y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Assert a boolean condition with a message.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs() {
+        property("tautology", 32, |rng| {
+            let x = rng.f64();
+            ensure((0.0..1.0).contains(&x), "uniform out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        property("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_handles_relative() {
+        assert!(close(1e9, 1e9 + 1.0, 1e-6).is_ok());
+        assert!(close(1.0, 1.1, 1e-6).is_err());
+    }
+
+    #[test]
+    fn close_slice_reports_index() {
+        let e = close_slice(&[1.0, 2.0], &[1.0, 3.0], 1e-9).unwrap_err();
+        assert!(e.contains("index 1"));
+        assert!(close_slice(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Small self-contained utilities: RNG, timers, running statistics, ASCII
+//! plotting and a property-testing mini-framework.
+//!
+//! The execution environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the usual ecosystem crates (`rand`,
+//! `criterion`, `proptest`) are re-implemented here at the scale this
+//! repository needs. See DESIGN.md §3 (substitutions).
+
+pub mod bench;
+pub mod check;
+pub mod plot;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::RunningStats;
+pub use timer::Timer;
+
+/// Format a number of bytes in a human-friendly way (KiB/MiB/GiB).
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Format a duration in seconds with adaptive precision.
+pub fn human_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.1} min", secs / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert!(human_secs(5e-9).ends_with("ns"));
+        assert!(human_secs(5e-5).ends_with("µs"));
+        assert!(human_secs(5e-2).ends_with("ms"));
+        assert!(human_secs(5.0).ends_with(" s"));
+        assert!(human_secs(500.0).ends_with("min"));
+    }
+}

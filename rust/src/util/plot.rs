@@ -1,0 +1,174 @@
+//! Minimal ASCII plotting for figure reproduction in a terminal-only
+//! environment (Fig 1 convergence curves, Fig 2 variance decay).
+
+/// Render one or more named series as an ASCII scatter/line chart.
+///
+/// Each series is a list of `(x, y)` points. Axes can independently be
+/// log-scaled (points with non-positive coordinates are dropped under log).
+pub struct AsciiPlot {
+    width: usize,
+    height: usize,
+    logx: bool,
+    logy: bool,
+    title: String,
+    series: Vec<(String, char, Vec<(f64, f64)>)>,
+}
+
+impl AsciiPlot {
+    pub fn new(title: &str) -> Self {
+        AsciiPlot {
+            width: 72,
+            height: 20,
+            logx: false,
+            logy: false,
+            title: title.to_string(),
+            series: Vec::new(),
+        }
+    }
+
+    pub fn size(mut self, width: usize, height: usize) -> Self {
+        self.width = width.max(16);
+        self.height = height.max(6);
+        self
+    }
+
+    pub fn logx(mut self) -> Self {
+        self.logx = true;
+        self
+    }
+
+    pub fn logy(mut self) -> Self {
+        self.logy = true;
+        self
+    }
+
+    pub fn series(mut self, name: &str, marker: char, pts: &[(f64, f64)]) -> Self {
+        self.series.push((name.to_string(), marker, pts.to_vec()));
+        self
+    }
+
+    fn tx(&self, x: f64) -> Option<f64> {
+        if self.logx {
+            (x > 0.0).then(|| x.log10())
+        } else {
+            Some(x)
+        }
+    }
+
+    fn ty(&self, y: f64) -> Option<f64> {
+        if self.logy {
+            (y > 0.0).then(|| y.log10())
+        } else {
+            Some(y)
+        }
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let mut pts_all: Vec<(f64, f64)> = Vec::new();
+        for (_, _, pts) in &self.series {
+            for &(x, y) in pts {
+                if let (Some(tx), Some(ty)) = (self.tx(x), self.ty(y)) {
+                    pts_all.push((tx, ty));
+                }
+            }
+        }
+        if pts_all.is_empty() {
+            return format!("{}\n<no data>\n", self.title);
+        }
+        let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in &pts_all {
+            xmin = xmin.min(x);
+            xmax = xmax.max(x);
+            ymin = ymin.min(y);
+            ymax = ymax.max(y);
+        }
+        if (xmax - xmin).abs() < 1e-300 {
+            xmax = xmin + 1.0;
+        }
+        if (ymax - ymin).abs() < 1e-300 {
+            ymax = ymin + 1.0;
+        }
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for (_, marker, pts) in &self.series {
+            for &(x, y) in pts {
+                if let (Some(tx), Some(ty)) = (self.tx(x), self.ty(y)) {
+                    let cx = ((tx - xmin) / (xmax - xmin) * (self.width - 1) as f64).round() as usize;
+                    let cy = ((ty - ymin) / (ymax - ymin) * (self.height - 1) as f64).round() as usize;
+                    let row = self.height - 1 - cy.min(self.height - 1);
+                    grid[row][cx.min(self.width - 1)] = *marker;
+                }
+            }
+        }
+        let fmt = |v: f64, log: bool| -> String {
+            if log {
+                format!("{:.3e}", 10f64.powf(v))
+            } else {
+                format!("{v:.4}")
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        for (name, marker, _) in &self.series {
+            out.push_str(&format!("  [{marker}] {name}\n"));
+        }
+        let ytop = fmt(ymax, self.logy);
+        let ybot = fmt(ymin, self.logy);
+        for (i, row) in grid.iter().enumerate() {
+            let label = if i == 0 {
+                ytop.clone()
+            } else if i == self.height - 1 {
+                ybot.clone()
+            } else {
+                String::new()
+            };
+            out.push_str(&format!("{label:>11} |{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str(&format!(
+            "{:>11}  {:<w$}{}\n",
+            "",
+            fmt(xmin, self.logx),
+            fmt(xmax, self.logx),
+            w = self.width.saturating_sub(8)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_points() {
+        let p = AsciiPlot::new("test")
+            .size(40, 10)
+            .series("line", '*', &[(0.0, 0.0), (1.0, 1.0), (2.0, 2.0)]);
+        let r = p.render();
+        assert!(r.contains("test"));
+        assert!(r.matches('*').count() >= 3);
+    }
+
+    #[test]
+    fn log_drops_nonpositive() {
+        let p = AsciiPlot::new("log")
+            .logy()
+            .series("s", 'o', &[(1.0, 0.0), (2.0, 10.0), (3.0, 100.0)]);
+        let r = p.render();
+        // y=0 dropped, two points remain
+        assert!(r.matches('o').count() >= 2);
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        let p = AsciiPlot::new("empty").series("s", 'x', &[]);
+        assert!(p.render().contains("<no data>"));
+    }
+
+    #[test]
+    fn constant_series_no_panic() {
+        let p = AsciiPlot::new("const").series("s", '#', &[(1.0, 5.0), (2.0, 5.0)]);
+        let _ = p.render();
+    }
+}

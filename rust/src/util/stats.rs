@@ -1,0 +1,247 @@
+//! Running statistics (Welford) and simple descriptive statistics over
+//! sample vectors — used by the bench harness and by the streaming moment
+//! engine's per-worker accumulators.
+
+/// Welford running mean/variance accumulator.
+///
+/// Numerically stable single-pass; two accumulators can be merged with
+/// [`RunningStats::merge`] (Chan et al.'s parallel combination), which is
+/// what the sharded moment workers rely on.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RunningStats {
+    /// Number of observations.
+    pub n: u64,
+    /// Running mean.
+    pub mean: f64,
+    /// Sum of squared deviations from the mean (M2).
+    pub m2: f64,
+}
+
+impl RunningStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    /// Add `k` identical observations of value `x` in O(1).
+    ///
+    /// This is the workhorse for bag-of-words data where a feature is zero
+    /// in most documents: the zeros are folded in with a single call.
+    #[inline]
+    pub fn push_repeated(&mut self, x: f64, k: u64) {
+        if k == 0 {
+            return;
+        }
+        let other = RunningStats { n: k, mean: x, m2: 0.0 };
+        self.merge(&other);
+    }
+
+    /// Merge another accumulator into this one (parallel combination).
+    #[inline]
+    pub fn merge(&mut self, other: &RunningStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = *other;
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.n += other.n;
+    }
+
+    /// Population variance (divides by n, matching the covariance matrix
+    /// convention Σ = AᵀA/m used throughout).
+    #[inline]
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.m2 / self.n as f64).max(0.0)
+        }
+    }
+
+    /// Sample variance (divides by n-1).
+    pub fn sample_variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).max(0.0)
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Descriptive summary of a sample: used by the bench harness.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Summarize a sample (sorts a copy).
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut rs = RunningStats::new();
+        for &x in &s {
+            rs.push(x);
+        }
+        Summary {
+            n: s.len(),
+            mean: rs.mean,
+            stddev: rs.sample_variance().sqrt(),
+            min: s[0],
+            p50: percentile_sorted(&s, 0.50),
+            p95: percentile_sorted(&s, 0.95),
+            max: *s.last().unwrap(),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Ordinary least squares fit of `y = a + b x`; returns `(a, b)`.
+///
+/// Used by the complexity bench to fit `log(time) = a + b log(n)` and report
+/// the measured exponent.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2);
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let b = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn welford_matches_naive() {
+        let mut rng = Rng::seed_from(10);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.gauss_ms(3.0, 2.0)).collect();
+        let mut rs = RunningStats::new();
+        for &x in &xs {
+            rs.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((rs.mean - mean).abs() < 1e-10);
+        assert!((rs.variance() - var).abs() < 1e-10);
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let mut rng = Rng::seed_from(11);
+        let xs: Vec<f64> = (0..500).map(|_| rng.gauss()).collect();
+        let mut whole = RunningStats::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        // Split at an arbitrary point and merge.
+        let (a, b) = xs.split_at(137);
+        let mut ra = RunningStats::new();
+        let mut rb = RunningStats::new();
+        a.iter().for_each(|&x| ra.push(x));
+        b.iter().for_each(|&x| rb.push(x));
+        ra.merge(&rb);
+        assert_eq!(ra.n, whole.n);
+        assert!((ra.mean - whole.mean).abs() < 1e-12);
+        assert!((ra.m2 - whole.m2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn push_repeated_equals_loop() {
+        let mut a = RunningStats::new();
+        let mut b = RunningStats::new();
+        a.push(2.0);
+        a.push_repeated(0.0, 7);
+        a.push(5.0);
+        for x in [2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 5.0] {
+            b.push(x);
+        }
+        assert_eq!(a.n, b.n);
+        assert!((a.mean - b.mean).abs() < 1e-12);
+        assert!((a.m2 - b.m2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = RunningStats::new();
+        a.push(1.0);
+        let before = a;
+        a.merge(&RunningStats::new());
+        assert_eq!(a, before);
+        let mut e = RunningStats::new();
+        e.merge(&a);
+        assert_eq!(e, a);
+    }
+
+    #[test]
+    fn percentiles() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile_sorted(&s, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 1.0) - 100.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 0.5) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_sane() {
+        let sm = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(sm.n, 5);
+        assert!((sm.mean - 3.0).abs() < 1e-12);
+        assert_eq!(sm.min, 1.0);
+        assert_eq!(sm.max, 5.0);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.5 + 3.0 * x).collect();
+        let (a, b) = linfit(&xs, &ys);
+        assert!((a - 2.5).abs() < 1e-9);
+        assert!((b - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,132 @@
+//! Wall-clock timing helpers used by the profiling instrumentation and the
+//! bench harness (criterion is unavailable offline; see DESIGN.md §3).
+
+use std::time::Instant;
+
+/// A simple wall-clock timer.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Restart, returning the elapsed seconds of the previous lap.
+    pub fn lap(&mut self) -> f64 {
+        let t = self.secs();
+        self.start = Instant::now();
+        t
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates named timing sections; the poor-man's profiler used in the
+/// §Perf pass (no `perf`/flamegraph in the container).
+#[derive(Debug, Default)]
+pub struct Profiler {
+    sections: Vec<(String, f64, u64)>,
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to the named section.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.sections.iter_mut().find(|(n, _, _)| n == name) {
+            e.1 += secs;
+            e.2 += 1;
+        } else {
+            self.sections.push((name.to_string(), secs, 1));
+        }
+    }
+
+    /// Time a closure under the given section name.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Timer::start();
+        let out = f();
+        self.add(name, t.secs());
+        out
+    }
+
+    /// Total time across all sections.
+    pub fn total(&self) -> f64 {
+        self.sections.iter().map(|(_, s, _)| s).sum()
+    }
+
+    /// Render a profile table sorted by time, descending.
+    pub fn report(&self) -> String {
+        let total = self.total().max(1e-12);
+        let mut rows = self.sections.clone();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut out = String::from("section                          time        calls   share\n");
+        for (name, secs, calls) in rows {
+            out.push_str(&format!(
+                "{:<30}  {:>10}  {:>7}  {:>5.1}%\n",
+                name,
+                crate::util::human_secs(secs),
+                calls,
+                100.0 * secs / total
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn lap_resets() {
+        let mut t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        let l1 = t.lap();
+        let l2 = t.secs();
+        assert!(l1 >= 0.002);
+        assert!(l2 < l1);
+    }
+
+    #[test]
+    fn profiler_accumulates() {
+        let mut p = Profiler::new();
+        p.add("a", 1.0);
+        p.add("a", 2.0);
+        p.add("b", 0.5);
+        assert!((p.total() - 3.5).abs() < 1e-12);
+        let rep = p.report();
+        assert!(rep.contains('a'));
+        let first_data_line = rep.lines().nth(1).unwrap();
+        assert!(first_data_line.starts_with('a'), "{rep}");
+    }
+
+    #[test]
+    fn profiler_time_closure() {
+        let mut p = Profiler::new();
+        let v = p.time("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(p.sections.len(), 1);
+    }
+}

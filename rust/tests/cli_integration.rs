@@ -1,0 +1,133 @@
+//! Integration: drive the `lsspca` binary end to end through its CLI
+//! (gen → variances → run), exercising argument parsing, file I/O and the
+//! report rendering as a user would.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> PathBuf {
+    // target/<profile>/lsspca next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("lsspca");
+    p
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .output()
+        .expect("spawn lsspca");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_cli_{}_{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    for cmd in ["run", "gen", "variances", "solve", "artifacts"] {
+        assert!(text.contains(cmd), "help missing '{cmd}':\n{text}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_cleanly() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown command"));
+}
+
+#[test]
+fn gen_then_variances_then_run() {
+    let corpus = tmp("corpus.txt.gz");
+    let corpus_str = corpus.display().to_string();
+    // gen
+    let (ok, text) = run(&[
+        "gen",
+        "--out",
+        &corpus_str,
+        "--preset",
+        "nytimes",
+        "--docs",
+        "500",
+        "--vocab",
+        "2000",
+        "--seed",
+        "9",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("D=500"), "{text}");
+    assert!(corpus.exists());
+    // variances (Fig 2 profile over the file)
+    let (ok, text) = run(&["variances", "--input", &corpus_str, "--top", "8"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sorted word variances"), "{text}");
+    assert!(text.contains("top features by variance"), "{text}");
+    // full pipeline from the file
+    let (ok, text) = run(&[
+        "run",
+        "--input",
+        &corpus_str,
+        "--docs",
+        "500",
+        "--vocab",
+        "2000",
+        "--seed",
+        "9",
+        "--pcs",
+        "2",
+        "--max-reduced",
+        "48",
+        "--profile",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("sparse PCA report"), "{text}");
+    assert!(text.contains("PC1:"), "{text}");
+    assert!(text.contains("section"), "profile flag should print profile:\n{text}");
+    std::fs::remove_file(&corpus).ok();
+    std::fs::remove_file(corpus.with_extension("vocab")).ok();
+}
+
+#[test]
+fn solve_command_spiked() {
+    let (ok, text) = run(&[
+        "solve", "--n", "40", "--m", "120", "--model", "spiked", "--card", "4",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("support"), "{text}");
+    assert!(text.contains("objective vs time"), "{text}");
+}
+
+#[test]
+fn shipped_configs_parse_and_validate() {
+    // The configs/ files must always load; run them at tiny scale.
+    for name in ["nytimes", "pubmed"] {
+        let path = format!("{}/configs/{name}.toml", env!("CARGO_MANIFEST_DIR"));
+        let cfg = lsspca::config::PipelineConfig::load(std::path::Path::new(&path))
+            .unwrap_or_else(|e| panic!("{path}: {e}"));
+        assert_eq!(cfg.synth_preset, name);
+        assert_eq!(cfg.target_card, 5);
+        cfg.validate().unwrap();
+    }
+}
+
+#[test]
+fn run_rejects_bad_flags() {
+    let (ok, text) = run(&["run", "--engine", "gpu"]);
+    assert!(!ok);
+    assert!(text.contains("engine"), "{text}");
+    let (ok, _) = run(&["gen"]); // missing required --out
+    assert!(!ok);
+}

@@ -1,0 +1,164 @@
+//! Integration: native Rust engine vs AOT/XLA artifacts (L2 JAX graph +
+//! L1 Pallas kernel through PJRT). The three implementations of the same
+//! algorithm (numpy ref ↔ jax graph is pinned by pytest; jax artifact ↔
+//! native rust is pinned here).
+//!
+//! These tests need `make artifacts`; they skip (with a message) when the
+//! artifacts are missing so plain `cargo test` still passes everywhere.
+
+use std::path::PathBuf;
+
+use lsspca::corpus::models::spiked_covariance_with_u;
+use lsspca::data::SymMat;
+use lsspca::engine::{bca_solve, Engine, NativeEngine, XlaEngine};
+use lsspca::solver::bca::BcaOptions;
+use lsspca::solver::extract::leading_sparse_pc;
+use lsspca::util::rng::Rng;
+
+fn engine() -> Option<XlaEngine> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join(".stamp").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaEngine::load(&dir).expect("artifacts load"))
+}
+
+#[test]
+fn sweep_agreement_exact_size() {
+    let Some(mut xla) = engine() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::seed_from(42);
+    // n = 32 hits an artifact size exactly — agreement should be tight.
+    let n = 32;
+    let (sigma, _) = spiked_covariance_with_u(n, 64, 4, 2.0, &mut rng);
+    let lambda = 0.4;
+    let opts = XlaEngine::matching_native_opts(&BcaOptions::default());
+    let beta = opts.epsilon / n as f64;
+    let mut xn = SymMat::identity(n);
+    let mut xx = SymMat::identity(n);
+    for sweep in 0..4 {
+        let dn = native.bca_sweep(&mut xn, &sigma, lambda, beta, &opts).unwrap();
+        let dx = xla.bca_sweep(&mut xx, &sigma, lambda, beta, &opts).unwrap();
+        let mut worst = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                worst = worst.max((xn.get(i, j) - xx.get(i, j)).abs());
+            }
+        }
+        assert!(
+            worst < 1e-7,
+            "sweep {sweep}: native/xla max diff {worst} (deltas {dn} vs {dx})"
+        );
+    }
+}
+
+#[test]
+fn sweep_agreement_padded_size() {
+    let Some(mut xla) = engine() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::seed_from(43);
+    // n = 40 pads to the 64-artifact: padded coordinates perturb the trace
+    // by O(pad·β/λ) — agreement is approximate but must stay tight.
+    let n = 40;
+    let (sigma, _) = spiked_covariance_with_u(n, 80, 4, 2.0, &mut rng);
+    let lambda = 0.5;
+    let opts = XlaEngine::matching_native_opts(&BcaOptions::default());
+    let beta = opts.epsilon / n as f64;
+    let mut xn = SymMat::identity(n);
+    let mut xx = SymMat::identity(n);
+    for _ in 0..3 {
+        native.bca_sweep(&mut xn, &sigma, lambda, beta, &opts).unwrap();
+        xla.bca_sweep(&mut xx, &sigma, lambda, beta, &opts).unwrap();
+    }
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            worst = worst.max((xn.get(i, j) - xx.get(i, j)).abs());
+        }
+    }
+    assert!(worst < 1e-3, "padded agreement too loose: {worst}");
+}
+
+#[test]
+fn full_solve_same_support_and_objective() {
+    let Some(mut xla) = engine() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::seed_from(44);
+    let n = 50;
+    let (sigma, truth) = spiked_covariance_with_u(n, 150, 5, 8.0, &mut rng);
+    let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, 16);
+    let opts = BcaOptions { max_sweeps: 8, track_history: false, ..Default::default() };
+    let sn = bca_solve(&mut native, &sigma, lambda, &opts).unwrap();
+    let sx = bca_solve(&mut xla, &sigma, lambda, &opts).unwrap();
+    assert!(
+        (sn.phi - sx.phi).abs() < 1e-4 * (1.0 + sn.phi.abs()),
+        "phi: native {} xla {}",
+        sn.phi,
+        sx.phi
+    );
+    let pn = leading_sparse_pc(&sn.z, 1e-3);
+    let px = leading_sparse_pc(&sx.z, 1e-3);
+    let mut a = pn.support.clone();
+    let mut b = px.support.clone();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "support must agree across engines");
+    // and both recover the planted spike
+    let planted = lsspca::linalg::vec::support(&truth, 1e-9);
+    let hits = a.iter().filter(|i| planted.contains(i)).count();
+    assert!(hits >= 3, "spike recovery: {hits}/5");
+}
+
+#[test]
+fn gram_and_power_agree() {
+    let Some(mut xla) = engine() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::seed_from(45);
+    let (m, k) = (600usize, 200usize);
+    let data: Vec<f64> = (0..m * k).map(|_| rng.gauss()).collect();
+    let gn = native.gram(m, k, &data).unwrap();
+    let gx = xla.gram(m, k, &data).unwrap();
+    for i in 0..k {
+        for j in 0..k {
+            assert!((gn.get(i, j) - gx.get(i, j)).abs() < 1e-9);
+        }
+    }
+    let (sigma, _) = spiked_covariance_with_u(70, 140, 4, 3.0, &mut rng);
+    let v0 = rng.gauss_vec(70);
+    let (vn, ln) = native.power_iter(&sigma, &v0).unwrap();
+    let (vx, lx) = xla.power_iter(&sigma, &v0).unwrap();
+    assert!((ln - lx).abs() < 1e-8 * (1.0 + ln.abs()));
+    let align: f64 = vn.iter().zip(&vx).map(|(a, b)| a * b).sum::<f64>().abs();
+    assert!(align > 1.0 - 1e-8, "eigenvector alignment {align}");
+}
+
+#[test]
+fn col_moments_agree() {
+    let Some(mut xla) = engine() else { return };
+    let mut native = NativeEngine::new();
+    let mut rng = Rng::seed_from(46);
+    // deliberately not block-aligned: 1300 rows (2 blocks), 200 cols (padded)
+    let (m, n) = (1300usize, 200usize);
+    let data: Vec<f64> = (0..m * n).map(|_| rng.gauss()).collect();
+    let (sn, ssn) = native.col_moments(m, n, &data).unwrap();
+    let (sx, ssx) = xla.col_moments(m, n, &data).unwrap();
+    for j in 0..n {
+        assert!((sn[j] - sx[j]).abs() < 1e-9 * (1.0 + sn[j].abs()));
+        assert!((ssn[j] - ssx[j]).abs() < 1e-9 * (1.0 + ssn[j].abs()));
+    }
+    // variance identity matches the moments module on a dense matrix
+    let var0 = ssn[0] / m as f64 - (sn[0] / m as f64).powi(2);
+    assert!(var0 > 0.5 && var0 < 2.0, "gaussian column variance ~1, got {var0}");
+}
+
+#[test]
+fn oversize_problem_is_clean_error() {
+    let Some(mut xla) = engine() else { return };
+    let sigma = SymMat::identity(600); // > largest artifact (512)
+    let mut x = SymMat::identity(600);
+    let opts = BcaOptions::default();
+    let err = xla.bca_sweep(&mut x, &sigma, 0.1, 1e-5, &opts).unwrap_err();
+    assert!(err.contains("exceeds"), "{err}");
+}

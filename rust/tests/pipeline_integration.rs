@@ -1,0 +1,172 @@
+//! Integration: the full coordinator pipeline over file-backed and
+//! in-memory corpora, including elimination-safety end to end.
+
+use lsspca::config::PipelineConfig;
+use lsspca::coordinator::Pipeline;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::cov::covariance_from_csr;
+use lsspca::elim::SafeElimination;
+use lsspca::moments::FeatureMoments;
+use lsspca::solver::bca::{self, BcaOptions};
+use lsspca::solver::extract::leading_sparse_pc;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_it_{}_{name}", std::process::id()));
+    p
+}
+
+#[test]
+fn pipeline_from_file_matches_pipeline_from_synth() {
+    // Write the corpus to disk, run the pipeline from the file, and
+    // compare against the in-memory run — exercises the docword reader,
+    // gzip, vocab loading and both streaming passes.
+    let spec = CorpusSpec::nytimes().scaled(600, 2500);
+    let corpus = SynthCorpus::new(spec, 31);
+    let path = tmp("pipe.txt.gz");
+    corpus.write_docword(&path).unwrap();
+
+    let base = PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 600,
+        synth_vocab: 2500,
+        seed: 31,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 48,
+        bca_sweeps: 6,
+        workers: 2,
+        ..Default::default()
+    };
+    let mem = Pipeline::new(base.clone()).run().unwrap();
+
+    let mut from_file = base;
+    from_file.input = path.display().to_string();
+    let file = Pipeline::new(from_file).run().unwrap();
+
+    assert_eq!(mem.num_docs, file.num_docs);
+    assert_eq!(mem.reduced_size, file.reduced_size);
+    assert_eq!(mem.components.len(), file.components.len());
+    for (a, b) in mem.components.iter().zip(&file.components) {
+        assert_eq!(a.words, b.words, "support words must match across sources");
+        assert!((a.phi - b.phi).abs() < 1e-8);
+    }
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(path.with_extension("vocab")).ok();
+}
+
+#[test]
+fn elimination_is_safe_end_to_end() {
+    // Thm 2.1 end-to-end: solving the FULL problem and the REDUCED problem
+    // at the same λ must give the same support and objective.
+    let spec = CorpusSpec::nytimes().scaled(400, 300);
+    let corpus = SynthCorpus::new(spec, 7);
+    let csr = corpus.to_csr();
+    let mut moments = FeatureMoments::new(300);
+    for d in 0..400 {
+        moments.push_doc(&corpus.generate_doc(d));
+    }
+    let fv = moments.finalize();
+    // λ keeping ~40 features
+    let lambda = lsspca::elim::lambda_for_survivors(&fv.variance, 40);
+    let elim = SafeElimination::from_variances(&fv, lambda, None);
+    assert!(elim.reduced() <= 40 && elim.reduced() > 5);
+    assert!(!elim.capped(&fv.variance));
+
+    let all: Vec<usize> = (0..300).collect();
+    let cov_full = covariance_from_csr(&csr, &all);
+    let cov_red = covariance_from_csr(&csr, &elim.kept);
+
+    let opts = BcaOptions { max_sweeps: 30, ..Default::default() };
+    let sol_full = bca::solve(&cov_full, lambda, &opts);
+    let sol_red = bca::solve(&cov_red, lambda, &opts);
+    assert!(
+        (sol_full.phi - sol_red.phi).abs() < 1e-3 * (1.0 + sol_full.phi.abs()),
+        "objective must be unchanged by safe elimination: {} vs {}",
+        sol_full.phi,
+        sol_red.phi
+    );
+    // support of the full solve must lie inside the kept set
+    let pc_full = leading_sparse_pc(&sol_full.z, 1e-3);
+    for &i in &pc_full.support {
+        assert!(
+            elim.kept.contains(&i),
+            "full-problem support index {i} was eliminated — unsafe!"
+        );
+    }
+    // and the reduced solve finds the same words
+    let pc_red = leading_sparse_pc(&sol_red.z, 1e-3);
+    let lifted: Vec<usize> = pc_red.support.iter().map(|&r| elim.kept[r]).collect();
+    let mut a = pc_full.support.clone();
+    let mut b = lifted;
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "support mismatch between full and reduced solves");
+}
+
+#[test]
+fn pubmed_preset_recovers_topics() {
+    let cfg = PipelineConfig {
+        synth_preset: "pubmed".into(),
+        synth_docs: 900,
+        synth_vocab: 3000,
+        num_pcs: 3,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 64,
+        bca_sweeps: 6,
+        ..Default::default()
+    };
+    let report = Pipeline::new(cfg).run().unwrap();
+    let spec = CorpusSpec::pubmed();
+    // every extracted PC should be dominated by one planted topic
+    for c in &report.components {
+        let best = spec
+            .topics
+            .iter()
+            .map(|t| c.words.iter().filter(|w| t.words.contains(&w.as_str())).count())
+            .max()
+            .unwrap();
+        assert!(
+            best * 2 >= c.words.len(),
+            "PC words {:?} not topic-pure",
+            c.words
+        );
+    }
+}
+
+#[test]
+fn certify_produces_small_gaps() {
+    let cfg = PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 500,
+        synth_vocab: 2000,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 48,
+        bca_sweeps: 8,
+        certify: true,
+        ..Default::default()
+    };
+    let report = Pipeline::new(cfg).run().unwrap();
+    for c in &report.components {
+        let gap = c.certificate_gap.expect("gap requested");
+        assert!(gap >= -1e-8, "dual bound below primal: {gap}");
+        assert!(
+            gap < 0.5 * (1.0 + c.phi.abs()),
+            "PC gap suspiciously large: {gap} (phi {})",
+            c.phi
+        );
+    }
+}
+
+#[test]
+fn pipeline_rejects_bad_config() {
+    let mut cfg = PipelineConfig::default();
+    cfg.engine = "quantum".into();
+    assert!(cfg.validate().is_err());
+    let cfg2 = PipelineConfig { input: "/nonexistent/file.txt".into(), ..Default::default() };
+    assert!(Pipeline::new(cfg2).run().is_err());
+}

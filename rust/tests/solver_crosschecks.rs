@@ -1,0 +1,153 @@
+//! Integration: cross-checks between independent solvers and the paper's
+//! analytic identities, on top of the per-module unit tests.
+
+use lsspca::corpus::models::{gaussian_factor_cov, spiked_covariance_with_u};
+use lsspca::data::SymMat;
+use lsspca::linalg::eig::JacobiEig;
+use lsspca::solver::bca::{self, BcaOptions};
+use lsspca::solver::extract::leading_sparse_pc;
+use lsspca::solver::first_order::{self, FirstOrderOptions};
+use lsspca::solver::lambda::{search, LambdaSearchOptions};
+use lsspca::util::check::property;
+use lsspca::util::rng::Rng;
+
+#[test]
+fn prop_bca_and_first_order_same_optimum() {
+    // Two very different algorithms for the same convex SDP must agree.
+    property("BCA φ == first-order φ (convexity)", 4, |rng| {
+        let n = rng.range(4, 9);
+        let sigma = SymMat::random_psd(n, 2 * n, 0.2, rng);
+        let min_diag = (0..n).map(|i| sigma.get(i, i)).fold(f64::INFINITY, f64::min);
+        let lambda = rng.range_f64(0.2, 0.6) * min_diag;
+        let b = bca::solve(
+            &sigma,
+            lambda,
+            &BcaOptions { max_sweeps: 80, epsilon: 1e-5, tol: 1e-11, ..Default::default() },
+        );
+        let f = first_order::solve(
+            &sigma,
+            lambda,
+            &FirstOrderOptions { max_iters: 4000, epsilon: 1e-3, gap_tol: 1e-5, ..Default::default() },
+        );
+        lsspca::util::check::close(b.phi, f.phi, 3e-2)?;
+        // BCA's φ must respect the first-order dual upper bound
+        lsspca::util::check::ensure(
+            b.phi <= f.dual_bound + 1e-3 * (1.0 + f.dual_bound.abs()),
+            format!("BCA φ {} exceeds dual bound {}", b.phi, f.dual_bound),
+        )
+    });
+}
+
+#[test]
+fn phi_equals_trace_of_x_star() {
+    // Identity from §3: X* = φ·Z* with Tr Z* = 1 ⇒ Tr X* = φ (up to the
+    // O(β·n) barrier perturbation).
+    let mut rng = Rng::seed_from(55);
+    let sigma = gaussian_factor_cov(12, 24, &mut rng);
+    let d: Vec<f64> = (0..12).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, 6);
+    let sol = bca::solve(
+        &sigma,
+        lambda,
+        &BcaOptions { max_sweeps: 100, epsilon: 1e-6, tol: 1e-12, ..Default::default() },
+    );
+    let tr = sol.x.trace();
+    assert!(
+        (tr - sol.phi).abs() < 1e-3 * (1.0 + sol.phi.abs()),
+        "Tr X* = {tr} vs φ = {}",
+        sol.phi
+    );
+}
+
+#[test]
+fn relaxation_upper_bounds_cardinality_problem() {
+    // φ (SDP value) ≥ ψ(x) = xᵀΣx − λ‖x‖₀ for any unit x — check against
+    // the planted spike and the extracted PC.
+    property("φ ≥ ψ(candidate) (relaxation)", 8, |rng| {
+        let n = rng.range(8, 20);
+        let (sigma, u) = spiked_covariance_with_u(n, 3 * n, (n / 5).max(2), 3.0, rng);
+        let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let lambda = lsspca::elim::lambda_for_survivors(&d, n / 2);
+        let sol = bca::solve(&sigma, lambda, &BcaOptions { max_sweeps: 40, ..Default::default() });
+        let psi_u = sigma.quad_form(&u) - lambda * lsspca::linalg::vec::cardinality(&u, 1e-12) as f64;
+        lsspca::util::check::ensure(
+            sol.phi >= psi_u - 1e-5 * (1.0 + psi_u.abs()),
+            format!("relaxation violated: φ={} < ψ(u)={psi_u}", sol.phi),
+        )?;
+        let pc = leading_sparse_pc(&sol.z, 1e-4);
+        let psi_pc =
+            sigma.quad_form(&pc.vector) - lambda * pc.cardinality() as f64;
+        lsspca::util::check::ensure(
+            sol.phi >= psi_pc - 1e-5 * (1.0 + psi_pc.abs()),
+            format!("relaxation violated vs extracted PC: φ={} < {psi_pc}", sol.phi),
+        )
+    });
+}
+
+#[test]
+fn lambda_search_monotone_cardinality() {
+    // Along the search trace, cardinality must be non-increasing in λ.
+    let mut rng = Rng::seed_from(66);
+    let (sigma, _) = spiked_covariance_with_u(40, 120, 6, 3.0, &mut rng);
+    let res = search(&sigma, &LambdaSearchOptions { target_card: 6, slack: 1, ..Default::default() });
+    let mut evals = res.trace.clone();
+    evals.sort_by(|a, b| a.lambda.partial_cmp(&b.lambda).unwrap());
+    for w in evals.windows(2) {
+        assert!(
+            w[0].cardinality + 2 >= w[1].cardinality,
+            "cardinality grew with λ: {:?} → {:?}",
+            w[0],
+            w[1]
+        );
+    }
+}
+
+#[test]
+fn bca_beats_first_order_wallclock_on_matched_accuracy() {
+    // The paper's Fig-1 claim, asserted coarsely: at n=60, BCA reaches
+    // first-order's final objective at least 3× faster.
+    let mut rng = Rng::seed_from(77);
+    let n = 60;
+    let sigma = gaussian_factor_cov(n, n / 2, &mut rng);
+    let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, n / 2);
+    let f = first_order::solve(
+        &sigma,
+        lambda,
+        &FirstOrderOptions { max_iters: 250, epsilon: 1e-2, gap_tol: 1e-9, ..Default::default() },
+    );
+    let b = bca::solve(&sigma, lambda, &BcaOptions { max_sweeps: 20, ..Default::default() });
+    assert!(b.phi >= f.phi - 1e-6, "BCA should at least match: {} vs {}", b.phi, f.phi);
+    let t_match = b
+        .history
+        .iter()
+        .find(|h| h.objective >= f.phi - 1e-9)
+        .map(|h| h.seconds)
+        .unwrap_or(b.seconds);
+    assert!(
+        t_match * 3.0 <= f.seconds,
+        "expected ≥3× speedup: BCA {t_match:.3}s vs first-order {:.3}s",
+        f.seconds
+    );
+}
+
+#[test]
+fn extraction_consistent_with_jacobi() {
+    let mut rng = Rng::seed_from(88);
+    let (sigma, _) = spiked_covariance_with_u(25, 75, 4, 4.0, &mut rng);
+    let d: Vec<f64> = (0..25).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, 8);
+    let sol = bca::solve(&sigma, lambda, &BcaOptions::default());
+    // leading eigenvector via power iteration (extract) vs full Jacobi
+    let pc = leading_sparse_pc(&sol.z, 0.0);
+    let eig = JacobiEig::new(&sol.z);
+    let align: f64 = pc
+        .vector
+        .iter()
+        .zip(eig.vector(0))
+        .map(|(a, b)| a * b)
+        .sum::<f64>()
+        .abs();
+    assert!(align > 1.0 - 1e-6, "alignment {align}");
+    assert!((pc.z_eigenvalue - eig.lambda_max()).abs() < 1e-8);
+}
