@@ -4,20 +4,34 @@
 //! Checks numerical agreement sweep-by-sweep, then races full solves.
 //! Requires `make artifacts`; skips gracefully when they are missing.
 
+#[cfg(feature = "xla")]
 use std::path::PathBuf;
 
+#[cfg(feature = "xla")]
 use lsspca::corpus::models::spiked_covariance_with_u;
+#[cfg(feature = "xla")]
 use lsspca::data::SymMat;
+#[cfg(feature = "xla")]
 use lsspca::engine::{bca_solve, Engine, NativeEngine, XlaEngine};
+#[cfg(feature = "xla")]
 use lsspca::solver::bca::BcaOptions;
+#[cfg(feature = "xla")]
 use lsspca::util::bench::{bench, metric, section, BenchConfig};
+#[cfg(feature = "xla")]
 use lsspca::util::rng::Rng;
 
+#[cfg(feature = "xla")]
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     dir.join(".stamp").exists().then_some(dir)
 }
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("SKIP engines bench: built without the `xla` feature");
+}
+
+#[cfg(feature = "xla")]
 fn main() {
     let Some(dir) = artifacts_dir() else {
         println!("SKIP engines bench: run `make artifacts` first");

@@ -221,6 +221,17 @@ pub struct PipelineConfig {
     pub cache_dir: String,
     /// Number of moment-pass worker threads.
     pub workers: usize,
+    /// Worker threads for the solver-side parallel kernels (λ-search
+    /// probes, path grids, Gram shards, deflation row blocks). 0 = use
+    /// every available core; 1 = serial.
+    pub threads: usize,
+    /// Independent λ probes per bracketing round of the cardinality
+    /// search. 1 = classic bisection (best per-eval bracketing; the
+    /// serial default); raise toward `threads` to trade eval-efficiency
+    /// for wall-clock parallelism. Part of the numerical schedule: fixed
+    /// by config, never derived from the thread count, so results are
+    /// machine-independent.
+    pub lambda_probes: usize,
     /// Documents per streamed chunk.
     pub chunk_docs: usize,
     /// Bounded queue depth between reader and workers (backpressure).
@@ -259,6 +270,8 @@ impl Default for PipelineConfig {
             seed: 20111212,
             cache_dir: String::new(),
             workers: 2,
+            threads: 1,
+            lambda_probes: 1,
             chunk_docs: 2048,
             queue_depth: 4,
             num_pcs: 5,
@@ -287,6 +300,8 @@ impl PipelineConfig {
             seed: doc.u64_or("corpus", "seed", d.seed)?,
             cache_dir: doc.str_or("corpus", "cache_dir", &d.cache_dir)?,
             workers: doc.usize_or("stream", "workers", d.workers)?,
+            threads: doc.usize_or("solver", "threads", d.threads)?,
+            lambda_probes: doc.usize_or("solver", "lambda_probes", d.lambda_probes)?,
             chunk_docs: doc.usize_or("stream", "chunk_docs", d.chunk_docs)?,
             queue_depth: doc.usize_or("stream", "queue_depth", d.queue_depth)?,
             num_pcs: doc.usize_or("solver", "num_pcs", d.num_pcs)?,
@@ -325,6 +340,9 @@ impl PipelineConfig {
         }
         if self.target_card == 0 {
             return Err("solver.target_card must be >= 1".into());
+        }
+        if self.lambda_probes == 0 {
+            return Err("solver.lambda_probes must be >= 1".into());
         }
         if self.max_reduced < self.target_card {
             return Err("solver.max_reduced must be >= target_card".into());

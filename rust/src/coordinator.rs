@@ -24,7 +24,9 @@ use crate::corpus::{CorpusSpec, SynthCorpus};
 use crate::cov::covariance_pass;
 use crate::data::{SymMat, Vocab};
 use crate::elim::{lambda_for_survivors, SafeElimination};
-use crate::engine::{Engine, NativeEngine, XlaEngine};
+use crate::engine::{Engine, NativeEngine};
+#[cfg(feature = "xla")]
+use crate::engine::XlaEngine;
 use crate::moments::FeatureVariances;
 use crate::solver::bca::BcaOptions;
 use crate::solver::deflate::Scheme;
@@ -94,8 +96,11 @@ impl Pipeline {
 
     fn make_engine(&self) -> Result<Box<dyn Engine>, String> {
         match self.config.engine.as_str() {
-            "native" => Ok(Box::new(NativeEngine::new())),
+            "native" => Ok(Box::new(NativeEngine::new().with_threads(self.config.threads))),
+            #[cfg(feature = "xla")]
             "xla" => Ok(Box::new(XlaEngine::load(Path::new(&self.config.artifacts_dir))?)),
+            #[cfg(not(feature = "xla"))]
+            "xla" => Err("this build has no XLA support (rebuild with --features xla)".into()),
             other => Err(format!("unknown engine '{other}'")),
         }
     }
@@ -238,10 +243,18 @@ impl Pipeline {
                 tol: 1e-7,
                 ..Default::default()
             };
+            // Parallel λ-search. The probe schedule comes from config —
+            // never derived from the thread count — so the pipeline's
+            // numerical results are identical on every machine and for
+            // every `threads` setting; threads only change wall time.
+            // The default (1) is classic bisection, the best per-eval
+            // bracketing for serial runs.
             let sopts = LambdaSearchOptions {
                 target_card: self.config.target_card,
                 slack: self.config.card_slack,
                 bca,
+                probes_per_round: self.config.lambda_probes,
+                threads: self.config.threads,
                 ..Default::default()
             };
             let res = prof.time("lambda_search+bca", || {
@@ -283,7 +296,9 @@ impl Pipeline {
             } else {
                 None
             };
-            prof.time("deflation", || scheme.apply(&mut cov, &res.pc.vector));
+            prof.time("deflation", || {
+                scheme.apply_par(&mut cov, &res.pc.vector, self.config.threads)
+            });
             components.push(ComponentReport {
                 lambda: res.lambda,
                 phi: res.solution.phi,

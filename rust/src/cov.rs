@@ -121,19 +121,111 @@ pub fn covariance_pass<S: ChunkSource>(
 /// Dense reference: centered covariance of selected columns of a CSR
 /// matrix (O(m·n̂) memory-light two-pass; used by tests and small runs).
 pub fn covariance_from_csr(m: &CsrMatrix, kept: &[usize]) -> SymMat {
+    covariance_from_csr_par(m, kept, 1)
+}
+
+/// Fixed row-shard size for the parallel dense passes. Shard boundaries
+/// depend only on this constant (never on the thread count), so partial
+/// accumulators merge in the same order for any `threads` — bitwise
+/// deterministic output (see `util::parallel`).
+const ROW_SHARD: usize = 1024;
+
+/// Shards are processed in bounded *waves* so only one wave of partial
+/// accumulators is alive at once — transient memory stays
+/// O(max(threads, SHARD_WAVE) · n̂²) no matter how many rows stream
+/// through (a PubMed-scale 8M-doc pass would otherwise hold thousands of
+/// partials). The wave size grows with the thread count so big machines
+/// keep every core busy; determinism is unaffected because the merge is
+/// a strict fold in shard order regardless of wave boundaries.
+const SHARD_WAVE: usize = 16;
+
+fn wave_cap(threads: usize) -> usize {
+    crate::util::parallel::resolve_threads(threads).max(SHARD_WAVE)
+}
+
+/// Parallel variant of [`covariance_from_csr`]: rows are split into fixed
+/// shards, each folded into its own [`CovAccum`] on a worker, then merged
+/// in shard order, wave by wave.
+pub fn covariance_from_csr_par(m: &CsrMatrix, kept: &[usize], threads: usize) -> SymMat {
     let nhat = kept.len();
-    let rows = m.rows.max(1) as f64;
     let mut lookup = vec![u32::MAX; m.cols];
     for (r, &orig) in kept.iter().enumerate() {
         lookup[orig] = r as u32;
     }
+    let shards = m.rows.div_ceil(ROW_SHARD).max(1);
+    let cap = wave_cap(threads);
     let mut acc = CovAccum::new(nhat);
-    for d in 0..m.rows {
-        let words: Vec<(u32, f64)> = m.row(d).map(|(c, v)| (c as u32, v)).collect();
-        acc.push_doc(&words, &lookup);
+    let mut wave_start = 0;
+    while wave_start < shards {
+        let wave = (shards - wave_start).min(cap);
+        let partials = crate::util::parallel::par_map_indexed(threads, wave, |k| {
+            let s = wave_start + k;
+            let start = s * ROW_SHARD;
+            let end = ((s + 1) * ROW_SHARD).min(m.rows);
+            let mut part = CovAccum::new(nhat);
+            for d in start..end {
+                let words: Vec<(u32, f64)> = m.row(d).map(|(c, v)| (c as u32, v)).collect();
+                part.push_doc(&words, &lookup);
+            }
+            part
+        });
+        for p in &partials {
+            acc.merge(p);
+        }
+        wave_start += wave;
     }
-    let _ = rows;
     acc.finalize()
+}
+
+/// Parallel Gram matrix `AᵀA/m` of a dense row-major `m × n` block: fixed
+/// row shards accumulate partial outer products on workers, merged in
+/// shard order wave by wave (deterministic for any `threads`; a single
+/// shard is bit-identical to [`SymMat::gram`]).
+pub fn gram_parallel(m_rows: usize, n: usize, data: &[f64], threads: usize) -> SymMat {
+    assert_eq!(data.len(), m_rows * n);
+    let shard_rows = 256usize;
+    let shards = m_rows.div_ceil(shard_rows).max(1);
+    if shards <= 1 {
+        return SymMat::gram(m_rows, n, data);
+    }
+    let cap = wave_cap(threads);
+    let mut acc = vec![0.0f64; n * n];
+    let mut wave_start = 0;
+    while wave_start < shards {
+        let wave = (shards - wave_start).min(cap);
+        let partials = crate::util::parallel::par_map_indexed(threads, wave, |k| {
+            let s = wave_start + k;
+            let start = s * shard_rows;
+            let end = ((s + 1) * shard_rows).min(m_rows);
+            let mut part = vec![0.0f64; n * n];
+            for r in start..end {
+                let row = &data[r * n..(r + 1) * n];
+                for i in 0..n {
+                    let fi = row[i];
+                    if fi == 0.0 {
+                        continue;
+                    }
+                    let pi = &mut part[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        pi[j] += fi * row[j];
+                    }
+                }
+            }
+            part
+        });
+        for part in &partials {
+            for (a, b) in acc.iter_mut().zip(part) {
+                *a += b;
+            }
+        }
+        wave_start += wave;
+    }
+    let inv = 1.0 / m_rows as f64;
+    let mut g = SymMat::zeros(n);
+    for (dst, src) in g.as_mut_slice().iter_mut().zip(&acc) {
+        *dst = src * inv;
+    }
+    g
 }
 
 #[cfg(test)]

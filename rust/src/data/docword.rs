@@ -18,9 +18,7 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
-use flate2::read::GzDecoder;
-use flate2::write::GzEncoder;
-use flate2::Compression;
+use crate::util::gzip::{GzDecoder, GzEncoder};
 
 /// Header of a docword file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,7 +50,11 @@ impl DocChunk {
 fn open_maybe_gz(path: &Path) -> std::io::Result<Box<dyn BufRead + Send>> {
     let f = File::open(path)?;
     if path.extension().is_some_and(|e| e == "gz") {
-        Ok(Box::new(BufReader::with_capacity(1 << 20, GzDecoder::new(f))))
+        // Inner BufReader feeds the decoder's byte-at-a-time bit reader
+        // from memory (one syscall per compressed byte otherwise); the
+        // outer one buffers decompressed lines.
+        let compressed = BufReader::with_capacity(1 << 16, f);
+        Ok(Box::new(BufReader::with_capacity(1 << 20, GzDecoder::new(compressed))))
     } else {
         Ok(Box::new(BufReader::with_capacity(1 << 20, f)))
     }
@@ -187,8 +189,34 @@ impl DocwordReader {
 
 /// Writer producing the same format (used by the synthetic corpus
 /// generator; `.gz` suffix enables compression).
+///
+/// Concrete output variants (not `Box<dyn Write>`) so [`finish`]
+/// (DocwordWriter::finish) can finalize the gzip trailer *explicitly* and
+/// surface its I/O errors — relying on the encoder's Drop would swallow a
+/// failed trailer write and leave a silently corrupt file.
+enum DocOut {
+    Plain(BufWriter<File>),
+    Gz(BufWriter<GzEncoder<File>>),
+}
+
+impl Write for DocOut {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            DocOut::Plain(w) => w.write(buf),
+            DocOut::Gz(w) => w.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            DocOut::Plain(w) => w.flush(),
+            DocOut::Gz(w) => w.flush(),
+        }
+    }
+}
+
 pub struct DocwordWriter {
-    out: Box<dyn Write + Send>,
+    out: DocOut,
     nnz_written: usize,
     declared: DocwordHeader,
 }
@@ -196,13 +224,10 @@ pub struct DocwordWriter {
 impl DocwordWriter {
     pub fn create(path: &Path, header: DocwordHeader) -> Result<DocwordWriter, String> {
         let f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
-        let mut out: Box<dyn Write + Send> = if path.extension().is_some_and(|e| e == "gz") {
-            Box::new(BufWriter::with_capacity(
-                1 << 20,
-                GzEncoder::new(f, Compression::fast()),
-            ))
+        let mut out = if path.extension().is_some_and(|e| e == "gz") {
+            DocOut::Gz(BufWriter::with_capacity(1 << 20, GzEncoder::new(f)))
         } else {
-            Box::new(BufWriter::with_capacity(1 << 20, f))
+            DocOut::Plain(BufWriter::with_capacity(1 << 20, f))
         };
         write!(out, "{}\n{}\n{}\n", header.num_docs, header.vocab_size, header.nnz)
             .map_err(|e| format!("write header: {e}"))?;
@@ -224,14 +249,23 @@ impl DocwordWriter {
         Ok(())
     }
 
-    /// Flush and verify the declared nnz.
-    pub fn finish(mut self) -> Result<(), String> {
-        self.out.flush().map_err(|e| format!("flush: {e}"))?;
+    /// Verify the declared nnz, then flush and finalize (the gzip trailer
+    /// is written here, with errors surfaced, not in a silent Drop).
+    pub fn finish(self) -> Result<(), String> {
         if self.nnz_written != self.declared.nnz {
             return Err(format!(
                 "nnz mismatch: declared {} wrote {}",
                 self.declared.nnz, self.nnz_written
             ));
+        }
+        match self.out {
+            DocOut::Plain(mut w) => w.flush().map_err(|e| format!("flush: {e}"))?,
+            DocOut::Gz(w) => {
+                let enc = w
+                    .into_inner()
+                    .map_err(|e| format!("flush gzip buffer: {e}"))?;
+                enc.finish().map_err(|e| format!("finalize gzip stream: {e}"))?;
+            }
         }
         Ok(())
     }

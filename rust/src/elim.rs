@@ -200,8 +200,13 @@ mod tests {
             let target = rng.below(n + 2);
             let lam = lambda_for_survivors(&v, target);
             let kept = v.iter().filter(|&&x| x > lam).count();
-            ensure(kept <= target.max(kept.min(target)), "")?;
-            ensure(kept <= target || target >= n, format!("kept={kept} target={target}"))?;
+            // The intended bound, stated directly: the survivor count never
+            // exceeds the target. For target < n, λ is the (target+1)-th
+            // largest variance, so at most `target` entries are strictly
+            // larger (ties collapse to fewer). For target ≥ n, λ = 0 keeps
+            // at most n ≤ target.
+            ensure(kept <= target, format!("kept={kept} > target={target} (λ={lam})"))?;
+            ensure(lam >= 0.0, "λ must be non-negative")?;
             Ok(())
         });
     }

@@ -12,15 +12,23 @@
 //! The two engines are cross-checked for numerical agreement in
 //! `rust/tests/engine_agreement.rs` and raced in `benches/engines.rs`.
 
+#[cfg(feature = "xla")]
 use std::path::Path;
 
 use crate::data::SymMat;
+#[cfg(feature = "xla")]
 use crate::runtime::{Runtime, TensorF64};
-use crate::solver::bca::{self, BcaOptions, BcaSolution, SweepBuffers};
+use crate::solver::bca::{self, BcaOptions, BcaSolution, SolverWorkspace};
 
 /// Abstract compute engine for the solver's heavy operations.
 pub trait Engine {
     fn name(&self) -> &str;
+
+    /// Called once at the start of every [`bca_solve`]: a solve boundary.
+    /// Engines with cross-sweep state (the native warm-start cache) drop
+    /// anything tied to the previous problem here, so a reused engine
+    /// solves each (Σ, λ) exactly like a fresh one.
+    fn begin_solve(&mut self) {}
 
     /// One full Algorithm-1 sweep over all columns of `x` in place;
     /// returns the largest entry change.
@@ -73,6 +81,7 @@ pub fn bca_solve(
     lambda: f64,
     opts: &BcaOptions,
 ) -> Result<BcaSolution, String> {
+    engine.begin_solve();
     bca::solve_with(sigma, lambda, opts, |x, o| {
         let beta = o.epsilon / x.n() as f64;
         engine.bca_sweep(x, sigma, lambda, beta, o)
@@ -83,21 +92,36 @@ pub fn bca_solve(
 // Native engine
 // ---------------------------------------------------------------------------
 
-/// Pure-Rust engine (no artifacts needed).
+/// Pure-Rust engine (no artifacts needed). Holds the persistent
+/// [`SolverWorkspace`] so repeated sweeps/solves warm-start each column's
+/// box-QP, and a thread knob for its parallel Gram kernel.
 #[derive(Default)]
 pub struct NativeEngine {
-    buffers: Option<SweepBuffers>,
+    workspace: Option<SolverWorkspace>,
+    threads: usize,
 }
 
 impl NativeEngine {
     pub fn new() -> NativeEngine {
         NativeEngine::default()
     }
+
+    /// Set the worker-thread count for parallel kernels (0 = auto).
+    pub fn with_threads(mut self, threads: usize) -> NativeEngine {
+        self.threads = threads;
+        self
+    }
 }
 
 impl Engine for NativeEngine {
     fn name(&self) -> &str {
         "native"
+    }
+
+    fn begin_solve(&mut self) {
+        if let Some(ws) = &mut self.workspace {
+            ws.reset();
+        }
     }
 
     fn bca_sweep(
@@ -109,14 +133,18 @@ impl Engine for NativeEngine {
         opts: &BcaOptions,
     ) -> Result<f64, String> {
         let n = x.n();
-        let buf = match &mut self.buffers {
-            Some(b) if b.capacity() == n => b,
+        let ws = match &mut self.workspace {
+            Some(w) if w.n() == n => w,
             _ => {
-                self.buffers = Some(SweepBuffers::new(n));
-                self.buffers.as_mut().unwrap()
+                self.workspace = Some(SolverWorkspace::new(n));
+                self.workspace.as_mut().unwrap()
             }
         };
-        Ok(bca::sweep(x, sigma, lambda, beta, opts, buf))
+        Ok(bca::sweep_ws(x, sigma, lambda, beta, opts, ws))
+    }
+
+    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
+        Ok(crate::cov::gram_parallel(m_rows, n, data, self.threads))
     }
 
     fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
@@ -152,11 +180,14 @@ pub const XLA_GRAM_BLOCK: (usize, usize) = (256, 512);
 /// Col-moments artifact block shape (rows × cols).
 pub const XLA_MOMENTS_BLOCK: (usize, usize) = (1024, 512);
 
-/// Engine executing the AOT artifacts through PJRT.
+/// Engine executing the AOT artifacts through PJRT. Requires the `xla`
+/// feature (off by default so the build is dependency-free offline).
+#[cfg(feature = "xla")]
 pub struct XlaEngine {
     rt: Runtime,
 }
 
+#[cfg(feature = "xla")]
 impl XlaEngine {
     /// Load all artifacts from a directory (run `make artifacts` first).
     pub fn load(dir: &Path) -> Result<XlaEngine, String> {
@@ -184,6 +215,7 @@ impl XlaEngine {
     }
 }
 
+#[cfg(feature = "xla")]
 impl Engine for XlaEngine {
     fn name(&self) -> &str {
         "xla"
@@ -340,6 +372,7 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn padded_size_selection() {
         assert_eq!(XlaEngine::padded_size(1).unwrap(), 32);

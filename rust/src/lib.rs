@@ -45,6 +45,7 @@ pub mod linalg;
 pub mod logging;
 pub mod moments;
 pub mod report;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod solver;
 pub mod stream;

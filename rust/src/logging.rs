@@ -5,9 +5,8 @@
 //! default `info`) or programmatically via [`set_level`].
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
@@ -43,7 +42,7 @@ impl Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
 
 fn init_level() -> u8 {
     let lvl = std::env::var("LSSPCA_LOG")
@@ -80,7 +79,7 @@ pub fn enabled(lvl: Level) -> bool {
 /// Emit a log line (used by the macros; rarely called directly).
 pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     if enabled(lvl) {
-        let t = START.elapsed().as_secs_f64();
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
         eprintln!("[{t:9.3}s {}] {args}", lvl.tag());
     }
 }

@@ -36,6 +36,7 @@ fn app() -> App {
                 .opt("target-card", "5", "target cardinality per PC")
                 .opt("max-reduced", "512", "cap on reduced problem size")
                 .opt("workers", "2", "moment-pass worker threads")
+                .opt("threads", "", "solver worker threads (0 = all cores; empty = config value)")
                 .opt("engine", "native", "solver engine: native|xla")
                 .opt("artifacts", "artifacts", "artifact dir for --engine xla")
                 .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
@@ -70,6 +71,17 @@ fn app() -> App {
             CommandSpec::new("artifacts", "load and list AOT artifacts through PJRT")
                 .opt("dir", "artifacts", "artifact directory"),
         )
+        .command(
+            CommandSpec::new(
+                "bench",
+                "hot-path benchmarks (qp_micro + fig1_speed scenarios) → BENCH_bca.json",
+            )
+            .opt("n", "512", "BCA problem size for the headline scenario")
+            .opt("sweeps", "5", "fixed BCA sweeps K")
+            .opt("threads", "4", "worker threads for the λ-search scaling scenario")
+            .opt("out", "BENCH_bca.json", "output JSON path")
+            .switch("quick", "smaller sizes / fewer repetitions"),
+        )
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
@@ -94,6 +106,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     cfg.target_card = args.usize("target-card")?;
     cfg.max_reduced = args.usize("max-reduced")?;
     cfg.workers = args.usize("workers")?;
+    // Empty default keeps the config file's solver.threads; an explicit
+    // flag (including 0 = all cores) overrides it.
+    if !args.str("threads").is_empty() {
+        cfg.threads = args.usize("threads")?;
+    }
     cfg.engine = args.str("engine");
     cfg.artifacts_dir = args.str("artifacts");
     if !args.str("cache-dir").is_empty() {
@@ -228,6 +245,7 @@ fn cmd_solve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_artifacts(args: &Args) -> Result<(), String> {
     let dir = PathBuf::from(args.str("dir"));
     let mut rt = lsspca::runtime::Runtime::new().map_err(|e| format!("{e:#}"))?;
@@ -236,6 +254,142 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
     for n in names {
         println!("  {n}");
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_artifacts(_args: &Args) -> Result<(), String> {
+    Err("this build has no XLA support (rebuild with --features xla)".into())
+}
+
+/// Time one closure: min wall-clock over `reps` runs (first run warms).
+fn time_min<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = lsspca::util::Timer::start();
+        lsspca::util::bench::black_box(f());
+        best = best.min(t.secs());
+    }
+    best
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    use lsspca::solver::lambda::{search, LambdaSearchOptions};
+    use lsspca::solver::qp::{self, QpOptions};
+    use lsspca::util::bench::{metric, section};
+
+    let quick = args.switch("quick");
+    let n = if quick { args.usize("n")?.min(128) } else { args.usize("n")? };
+    let sweeps = args.usize("sweeps")?;
+    let threads = args.usize("threads")?.max(1);
+    let reps = if quick { 1 } else { 2 };
+    let mut rng = Rng::seed_from(20111212);
+    let mut json = String::from("{\n");
+
+    // --- qp_micro: cold vs warm-started/active-set box-QP ----------------
+    section("qp_micro — box-QP coordinate descent, cold vs warm");
+    json.push_str("  \"qp_micro\": [\n");
+    let qp_sizes: &[usize] = if quick { &[64, 128] } else { &[64, 128, 256, 512] };
+    for (idx, &qn) in qp_sizes.iter().enumerate() {
+        let y = SymMat::random_psd(qn, qn / 2 + 4, 0.05, &mut rng);
+        let s = rng.gauss_vec(qn);
+        let lambda = 0.3;
+        let opts = QpOptions::default();
+        let radius = vec![lambda; qn];
+        let cold = time_min(reps + 1, || {
+            let mut u = Vec::new();
+            let mut w = Vec::new();
+            qp::solve_masked(&y, &s, &radius, None, opts, &mut u, &mut w).r_squared
+        });
+        // warm re-solve, as the BCA outer loop sees it from sweep 2 on
+        let prev = qp::solve(&y, &s, lambda, opts).u;
+        let warm = time_min(reps + 1, || {
+            let mut u = Vec::new();
+            let mut w = Vec::new();
+            let mut active = Vec::new();
+            qp::solve_masked_warm(
+                &y, &s, &radius, None, opts, Some(&prev), &mut u, &mut w, &mut active,
+            )
+            .r_squared
+        });
+        metric(&format!("qp.n{qn}.cold_secs"), format!("{cold:.6}"));
+        metric(&format!("qp.n{qn}.warm_secs"), format!("{warm:.6}"));
+        metric(&format!("qp.n{qn}.speedup"), format!("{:.2}", cold / warm.max(1e-12)));
+        json.push_str(&format!(
+            "    {{\"n\": {qn}, \"cold_secs\": {cold:.6}, \"warm_secs\": {warm:.6}, \
+             \"speedup\": {:.3}}}{}\n",
+            cold / warm.max(1e-12),
+            if idx + 1 == qp_sizes.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ],\n");
+
+    // --- fig1_speed headline: BCA at n, K sweeps, cold/serial vs hot ------
+    // Paper regime: a strong cardinality-5 spike. BCA then concentrates X,
+    // the column QPs become ill-conditioned, and cold starts pay heavily —
+    // exactly the case the workspace exists for.
+    section(&format!("fig1_speed — BCA n={n}, K={sweeps}: reference vs workspace"));
+    let sigma = lsspca::corpus::spiked_covariance(n, 2 * n, 5, 10.0, &mut rng);
+    let d: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    let lambda = lsspca::elim::lambda_for_survivors(&d, 3 * n / 4);
+    let opts = BcaOptions {
+        track_history: false,
+        ..BcaOptions::fixed_sweeps(sweeps)
+    };
+    // Single timed run each (solves are seconds-scale at n = 512); φ comes
+    // from the same runs, so equivalence is measured on what was timed.
+    let t = lsspca::util::Timer::start();
+    let phi_ref = bca::solve_reference(&sigma, lambda, &opts).phi;
+    let ref_secs = t.secs();
+    let t = lsspca::util::Timer::start();
+    let phi_ws = bca::solve(&sigma, lambda, &opts).phi;
+    let ws_secs = t.secs();
+    let bca_speedup = ref_secs / ws_secs.max(1e-12);
+    metric("bca.reference_secs", format!("{ref_secs:.4}"));
+    metric("bca.workspace_secs", format!("{ws_secs:.4}"));
+    metric("bca.speedup", format!("{bca_speedup:.2}"));
+    metric("bca.phi_abs_diff", format!("{:.3e}", (phi_ref - phi_ws).abs()));
+    json.push_str(&format!(
+        "  \"bca_n{n}\": {{\"n\": {n}, \"sweeps\": {sweeps}, \"reference_secs\": {ref_secs:.6}, \
+         \"workspace_secs\": {ws_secs:.6}, \"speedup\": {bca_speedup:.3}, \
+         \"phi_abs_diff\": {:.3e}}},\n",
+        (phi_ref - phi_ws).abs()
+    ));
+
+    // --- λ-search thread scaling ------------------------------------------
+    section(&format!("lambda_search — serial vs {threads} threads (same probe schedule)"));
+    let ln = if quick { 96 } else { 256.min(n) };
+    let lsigma = lsspca::corpus::spiked_covariance(ln, 2 * ln, (ln / 10).max(4), 3.0, &mut rng);
+    let mk_opts = |t: usize| LambdaSearchOptions {
+        target_card: (ln / 12).max(5),
+        slack: 1,
+        max_evals: 8,
+        probes_per_round: 4,
+        threads: t,
+        bca: BcaOptions { max_sweeps: sweeps, track_history: false, ..Default::default() },
+        ..Default::default()
+    };
+    let serial_secs = time_min(reps, || search(&lsigma, &mk_opts(1)).lambda);
+    let par_secs = time_min(reps, || search(&lsigma, &mk_opts(threads)).lambda);
+    let serial_res = search(&lsigma, &mk_opts(1));
+    let par_res = search(&lsigma, &mk_opts(threads));
+    let identical = serial_res.lambda == par_res.lambda
+        && serial_res.solution.phi == par_res.solution.phi;
+    let ls_speedup = serial_secs / par_secs.max(1e-12);
+    metric("lambda_search.serial_secs", format!("{serial_secs:.4}"));
+    metric("lambda_search.parallel_secs", format!("{par_secs:.4}"));
+    metric("lambda_search.speedup", format!("{ls_speedup:.2}"));
+    metric("lambda_search.identical_result", format!("{identical}"));
+    json.push_str(&format!(
+        "  \"lambda_search\": {{\"n\": {ln}, \"threads\": {threads}, \
+         \"serial_secs\": {serial_secs:.6}, \"parallel_secs\": {par_secs:.6}, \
+         \"speedup\": {ls_speedup:.3}, \"identical_result\": {identical}}}\n"
+    ));
+    json.push_str("}\n");
+
+    let out = PathBuf::from(args.str("out"));
+    std::fs::write(&out, &json).map_err(|e| format!("writing {}: {e}", out.display()))?;
+    println!("\nwrote {}", out.display());
     Ok(())
 }
 
@@ -259,6 +413,7 @@ fn main() {
             "variances" => cmd_variances(&args),
             "solve" => cmd_solve(&args),
             "artifacts" => cmd_artifacts(&args),
+            "bench" => cmd_bench(&args),
             _ => unreachable!("parser rejects unknown commands"),
         },
     };

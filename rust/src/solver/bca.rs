@@ -97,6 +97,8 @@ pub struct BcaSolution {
 }
 
 /// Reusable buffers for one sweep (avoid allocation in the hot loop).
+/// This is the *reference* (cold-start) path; the hot path uses
+/// [`SolverWorkspace`].
 pub struct SweepBuffers {
     u: Vec<f64>,
     w: Vec<f64>,
@@ -118,6 +120,157 @@ impl SweepBuffers {
     pub fn capacity(&self) -> usize {
         self.center.len()
     }
+}
+
+/// Persistent solver workspace — the warm-started hot path (see
+/// EXPERIMENTS.md §Perf).
+///
+/// Besides the per-sweep scratch of [`SweepBuffers`], it caches every
+/// column's previous box-QP solution (`n × n` f64 — ~2 MiB at n = 512) so
+/// each `update_column` warm-starts [`qp::solve_masked_warm`] from where
+/// the same column converged last sweep. The box center (`Σ_j`) and radius
+/// (λ) never change between sweeps, only the minor `Y = X_{\j\j}` drifts,
+/// so the cached point is always feasible and usually one verification
+/// sweep from optimal once BCA starts converging.
+pub struct SolverWorkspace {
+    n: usize,
+    u: Vec<f64>,
+    w: Vec<f64>,
+    center: Vec<f64>,
+    radius: Vec<f64>,
+    active: Vec<usize>,
+    /// Row `j` holds column `j`'s last QP solution (valid iff `visited[j]`).
+    prev: Vec<f64>,
+    visited: Vec<bool>,
+}
+
+impl SolverWorkspace {
+    pub fn new(n: usize) -> SolverWorkspace {
+        SolverWorkspace {
+            n,
+            u: Vec::with_capacity(n),
+            w: Vec::with_capacity(n),
+            center: vec![0.0; n],
+            radius: vec![0.0; n],
+            active: Vec::with_capacity(n),
+            prev: vec![0.0; n * n],
+            visited: vec![false; n],
+        }
+    }
+
+    /// Problem size this workspace serves.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Forget all cached solutions (e.g. when λ or Σ changes between
+    /// solves on a reused engine).
+    pub fn reset(&mut self) {
+        self.visited.fill(false);
+    }
+}
+
+/// Fill the column-update box of step 4: `center = Σ_j` with the
+/// diagonal entry zeroed, uniform radius λ, coordinate `j` pinned.
+fn fill_box(sigma: &SymMat, lambda: f64, j: usize, center: &mut [f64], radius: &mut [f64]) {
+    center.copy_from_slice(sigma.row(j));
+    center[j] = 0.0;
+    for r in radius.iter_mut() {
+        *r = lambda;
+    }
+    radius[j] = 0.0;
+}
+
+/// Steps 5–6 shared by the reference and workspace paths: solve the 1-D
+/// τ problem and write column `j` back from `w = Yu`. Returns the largest
+/// entry change.
+#[allow(clippy::too_many_arguments)]
+fn write_back_column(
+    x: &mut SymMat,
+    sigma: &SymMat,
+    lambda: f64,
+    beta: f64,
+    j: usize,
+    t: f64,
+    r_squared: f64,
+    w: &[f64],
+    opts: &BcaOptions,
+) -> f64 {
+    let n = x.n();
+    // 1-D τ problem with c = Σ_jj − λ − t.
+    let c = sigma.get(j, j) - lambda - t;
+    let tau_star = tau::solve(r_squared, beta, c, opts.tau);
+    // Write-back: y = (1/τ)·Yu — w already holds Yu for i ≠ j.
+    let inv_tau = 1.0 / tau_star;
+    let mut max_delta = 0.0f64;
+    for i in 0..n {
+        if i == j {
+            continue;
+        }
+        let new = w[i] * inv_tau;
+        let delta = (new - x.get(i, j)).abs();
+        if delta > max_delta {
+            max_delta = delta;
+        }
+        x.set(i, j, new);
+    }
+    let new_diag = c + tau_star;
+    max_delta = max_delta.max((new_diag - x.get(j, j)).abs());
+    x.set(j, j, new_diag);
+    max_delta
+}
+
+/// Warm-started, active-set variant of [`update_column`] (identical
+/// fixed point; the QP is convex, so start and iteration order do not
+/// change the optimum — pinned by the workspace-equivalence tests).
+pub fn update_column_ws(
+    x: &mut SymMat,
+    sigma: &SymMat,
+    lambda: f64,
+    beta: f64,
+    j: usize,
+    opts: &BcaOptions,
+    ws: &mut SolverWorkspace,
+) -> f64 {
+    let n = x.n();
+    debug_assert_eq!(ws.n, n);
+    let t = x.trace() - x.get(j, j); // Tr Y
+    fill_box(sigma, lambda, j, &mut ws.center, &mut ws.radius);
+    let warm = if ws.visited[j] { Some(&ws.prev[j * n..(j + 1) * n]) } else { None };
+    let sol = qp::solve_masked_warm(
+        x,
+        &ws.center,
+        &ws.radius,
+        Some(j),
+        opts.qp,
+        warm,
+        &mut ws.u,
+        &mut ws.w,
+        &mut ws.active,
+    );
+    ws.prev[j * n..(j + 1) * n].copy_from_slice(&ws.u);
+    ws.visited[j] = true;
+    write_back_column(x, sigma, lambda, beta, j, t, sol.r_squared, &ws.w, opts)
+}
+
+/// One full warm-started sweep over all columns.
+pub fn sweep_ws(
+    x: &mut SymMat,
+    sigma: &SymMat,
+    lambda: f64,
+    beta: f64,
+    opts: &BcaOptions,
+    ws: &mut SolverWorkspace,
+) -> f64 {
+    let n = x.n();
+    let mut max_delta = 0.0f64;
+    for j in 0..n {
+        let d = update_column_ws(x, sigma, lambda, beta, j, opts, ws);
+        if d > max_delta {
+            max_delta = d;
+        }
+    }
+    max_delta
 }
 
 /// The problem-(1) objective of the normalized iterate.
@@ -153,16 +306,8 @@ pub fn update_column(
     opts: &BcaOptions,
     buf: &mut SweepBuffers,
 ) -> f64 {
-    let n = x.n();
     let t = x.trace() - x.get(j, j); // Tr Y
-    // Box: center = Σ_j (off-diagonal column of Σ), radius λ, coordinate j pinned at 0.
-    let srow = sigma.row(j);
-    buf.center.copy_from_slice(srow);
-    buf.center[j] = 0.0;
-    for r in buf.radius.iter_mut() {
-        *r = lambda;
-    }
-    buf.radius[j] = 0.0;
+    fill_box(sigma, lambda, j, &mut buf.center, &mut buf.radius);
     let sol = qp::solve_masked(
         x,
         &buf.center,
@@ -172,27 +317,7 @@ pub fn update_column(
         &mut buf.u,
         &mut buf.w,
     );
-    // 1-D τ problem with c = Σ_jj − λ − t.
-    let c = sigma.get(j, j) - lambda - t;
-    let tau_star = tau::solve(sol.r_squared, beta, c, opts.tau);
-    // Write-back: y = (1/τ)·Yu — w already holds Yu for i ≠ j.
-    let inv_tau = 1.0 / tau_star;
-    let mut max_delta = 0.0f64;
-    for i in 0..n {
-        if i == j {
-            continue;
-        }
-        let new = buf.w[i] * inv_tau;
-        let delta = (new - x.get(i, j)).abs();
-        if delta > max_delta {
-            max_delta = delta;
-        }
-        x.set(i, j, new);
-    }
-    let new_diag = c + tau_star;
-    max_delta = max_delta.max((new_diag - x.get(j, j)).abs());
-    x.set(j, j, new_diag);
-    max_delta
+    write_back_column(x, sigma, lambda, beta, j, t, sol.r_squared, &buf.w, opts)
 }
 
 /// One full sweep over all columns. Returns the largest entry change.
@@ -215,10 +340,24 @@ pub fn sweep(
     max_delta
 }
 
-/// Solve DSPCA by block coordinate ascent starting from `X⁰ = I`.
+/// Solve DSPCA by block coordinate ascent starting from `X⁰ = I`, on the
+/// warm-started/active-set hot path.
 pub fn solve(sigma: &SymMat, lambda: f64, opts: &BcaOptions) -> BcaSolution {
+    let mut ws = SolverWorkspace::new(sigma.n());
     solve_with(sigma, lambda, opts, |x, o| {
-        let mut buf = SweepBuffers::new(x.n());
+        let beta = o.epsilon / x.n() as f64;
+        Ok(sweep_ws(x, sigma, lambda, beta, o, &mut ws))
+    })
+    .expect("native sweep cannot fail")
+}
+
+/// Reference solve on the cold-start path (every QP starts from the box
+/// center, every sweep touches every coordinate). Used by the equivalence
+/// tests and as the baseline the `bench` subcommand measures speedups
+/// against.
+pub fn solve_reference(sigma: &SymMat, lambda: f64, opts: &BcaOptions) -> BcaSolution {
+    let mut buf = SweepBuffers::new(sigma.n());
+    solve_with(sigma, lambda, opts, |x, o| {
         let beta = o.epsilon / x.n() as f64;
         Ok(sweep(x, sigma, lambda, beta, o, &mut buf))
     })

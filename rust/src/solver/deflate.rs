@@ -9,32 +9,63 @@ use crate::linalg::vec::dot;
 /// Keeps PSD-ness and removes all variance along `v` (robust to `v` not
 /// being an exact eigenvector — the right choice for sparse PCs).
 pub fn projection(sigma: &mut SymMat, v: &[f64]) {
+    projection_par(sigma, v, 1);
+}
+
+/// [`projection`] with the rank-2 update applied over row blocks on
+/// `threads` workers. Rows are independent given `w` and `α`, so the
+/// result is identical for any thread count.
+pub fn projection_par(sigma: &mut SymMat, v: &[f64], threads: usize) {
     let n = sigma.n();
     assert_eq!(v.len(), n);
+    if n == 0 {
+        return;
+    }
     // w = Σ v, α = vᵀΣv
     let mut w = vec![0.0; n];
     sigma.matvec(v, &mut w);
     let alpha = dot(v, &w);
-    // Σ' = Σ − v wᵀ − w vᵀ + α v vᵀ
+    // Σ' = Σ − v wᵀ − w vᵀ + α v vᵀ, row blocks in parallel
+    let rows_per_chunk = 64usize;
     let buf = sigma.as_mut_slice();
-    for i in 0..n {
-        for j in 0..n {
-            buf[i * n + j] += -v[i] * w[j] - w[i] * v[j] + alpha * v[i] * v[j];
+    crate::util::parallel::par_chunks_mut(threads, buf, rows_per_chunk * n, |off, chunk| {
+        let row0 = off / n;
+        for (r, row) in chunk.chunks_mut(n).enumerate() {
+            let i = row0 + r;
+            let vi = v[i];
+            let wi = w[i];
+            for j in 0..n {
+                row[j] += -vi * w[j] - wi * v[j] + alpha * vi * v[j];
+            }
         }
-    }
+    });
 }
 
 /// Hotelling deflation: `Σ ← Σ − θ v vᵀ` with `θ = vᵀΣv` (exact for true
 /// eigenvectors; can lose PSD-ness for approximate ones).
 pub fn hotelling(sigma: &mut SymMat, v: &[f64], theta: f64) {
+    hotelling_par(sigma, v, theta, 1);
+}
+
+/// [`hotelling`] with the rank-1 update applied over row blocks on
+/// `threads` workers (identical output for any thread count).
+pub fn hotelling_par(sigma: &mut SymMat, v: &[f64], theta: f64, threads: usize) {
     let n = sigma.n();
     assert_eq!(v.len(), n);
-    let buf = sigma.as_mut_slice();
-    for i in 0..n {
-        for j in 0..n {
-            buf[i * n + j] -= theta * v[i] * v[j];
-        }
+    if n == 0 {
+        return;
     }
+    let rows_per_chunk = 64usize;
+    let buf = sigma.as_mut_slice();
+    crate::util::parallel::par_chunks_mut(threads, buf, rows_per_chunk * n, |off, chunk| {
+        let row0 = off / n;
+        for (r, row) in chunk.chunks_mut(n).enumerate() {
+            let tv = theta * v[row0 + r];
+            for j in 0..n {
+                row[j] -= tv * v[j];
+            }
+        }
+    });
 }
 
 /// Scheme selector used by the pipeline config.
@@ -55,13 +86,19 @@ impl Scheme {
 
     /// Apply the scheme for a unit direction `v` on `sigma`.
     pub fn apply(self, sigma: &mut SymMat, v: &[f64]) {
+        self.apply_par(sigma, v, 1);
+    }
+
+    /// [`apply`](Scheme::apply) with the update spread over `threads`
+    /// workers (same result for any thread count).
+    pub fn apply_par(self, sigma: &mut SymMat, v: &[f64], threads: usize) {
         match self {
-            Scheme::Projection => projection(sigma, v),
+            Scheme::Projection => projection_par(sigma, v, threads),
             Scheme::Hotelling => {
                 let mut w = vec![0.0; sigma.n()];
                 sigma.matvec(v, &mut w);
                 let theta = dot(v, &w);
-                hotelling(sigma, v, theta);
+                hotelling_par(sigma, v, theta, threads);
             }
         }
     }

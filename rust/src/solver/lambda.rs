@@ -23,6 +23,15 @@ pub struct LambdaSearchOptions {
     /// Loading truncation tolerance for cardinality measurement.
     pub extract_tol: f64,
     pub bca: BcaOptions,
+    /// Independent λ probes per bracketing round. 1 = classic bisection
+    /// (the midpoint); `p` > 1 splits the bracket into `p + 1` equal parts
+    /// and evaluates all `p` interior probes, shrinking the bracket by a
+    /// factor `p + 1` per round. The probe *schedule* depends only on this
+    /// value — never on `threads` — so results are reproducible across
+    /// machines and thread counts.
+    pub probes_per_round: usize,
+    /// Worker threads evaluating one round's probes (0 = auto, 1 = serial).
+    pub threads: usize,
 }
 
 impl Default for LambdaSearchOptions {
@@ -33,6 +42,8 @@ impl Default for LambdaSearchOptions {
             max_evals: 12,
             extract_tol: 1e-3,
             bca: BcaOptions::default(),
+            probes_per_round: 1,
+            threads: 1,
         }
     }
 }
@@ -85,9 +96,20 @@ fn eval(sigma: &SymMat, lambda: f64, opts: &LambdaSearchOptions) -> (BcaSolution
 ///
 /// The bracket starts at `[0, max_diag)` — at λ ≥ max Σ_ii every feature is
 /// eliminated, so cardinality is 0 there; at λ = 0 the solution is dense.
+///
+/// Bracketing over λ: an exact hit stops the search; a within-slack
+/// solution is accepted (paper §4: "close, but not necessarily equal")
+/// only after a few refining evaluations have tried for the exact target —
+/// the best-seen solution is kept either way. With
+/// `probes_per_round == 1` this is classic midpoint bisection; with more
+/// probes the round's evaluations are *independent* and run on
+/// `opts.threads` workers (the probe schedule never depends on the thread
+/// count, so the result is identical for any `threads` — see the
+/// `perf_equivalence` tests).
 pub fn search(sigma: &SymMat, opts: &LambdaSearchOptions) -> LambdaSearchResult {
     let n = sigma.n();
     assert!(n > 0);
+    let probes = opts.probes_per_round.max(1);
     let max_diag = (0..n).map(|i| sigma.get(i, i)).fold(0.0f64, f64::max);
     let mut lo = 0.0f64; // card(lo) ≥ target side
     let mut hi = max_diag * 0.999; // card(hi) ≤ target side (sparser)
@@ -95,42 +117,57 @@ pub fn search(sigma: &SymMat, opts: &LambdaSearchOptions) -> LambdaSearchResult 
     let mut best: Option<(f64, BcaSolution, SparsePc)> = None;
     // score: distance to target, tie-broken toward higher φ
     let mut best_key = (usize::MAX, f64::NEG_INFINITY);
-    let consider = |lambda: f64,
-                        sol: BcaSolution,
-                        pc: SparsePc,
-                        trace: &mut Vec<LambdaEval>,
-                        best: &mut Option<(f64, BcaSolution, SparsePc)>,
-                        best_key: &mut (usize, f64)| {
-        let card = pc.cardinality();
-        trace.push(LambdaEval { lambda, cardinality: card, phi: sol.phi });
-        let dist = card.abs_diff(opts.target_card);
-        let key = (dist, sol.phi);
-        if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 > best_key.1) {
-            *best_key = key;
-            *best = Some((lambda, sol, pc));
+    let mut evals = 0usize;
+    while evals < opts.max_evals {
+        // This round's probe grid: `count` equally spaced interior points
+        // of the bracket (the midpoint when count == 1).
+        let count = probes.min(opts.max_evals - evals);
+        let step = (hi - lo) / (count + 1) as f64;
+        let lambdas: Vec<f64> = (1..=count).map(|k| lo + step * k as f64).collect();
+        let results = crate::util::parallel::par_map_indexed(
+            opts.threads,
+            lambdas.len(),
+            |k| eval(sigma, lambdas[k], opts),
+        );
+        // Fold in ascending-λ order — deterministic regardless of which
+        // worker evaluated which probe. An exact hit stops immediately; a
+        // within-slack evaluation is accepted only once half the budget
+        // has tried for the exact target (identical to the classic
+        // bisection's rule at `probes_per_round == 1`).
+        let mut stop = false;
+        for (k, (sol, pc)) in results.into_iter().enumerate() {
+            let lambda = lambdas[k];
+            evals += 1;
+            let card = pc.cardinality();
+            trace.push(LambdaEval { lambda, cardinality: card, phi: sol.phi });
+            let dist = card.abs_diff(opts.target_card);
+            let key = (dist, sol.phi);
+            if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 > best_key.1) {
+                best_key = key;
+                best = Some((lambda, sol, pc));
+            }
+            if dist == 0 || (dist <= opts.slack && evals >= opts.max_evals / 2) {
+                stop = true;
+                break;
+            }
+            // Cardinality is monotone non-increasing in λ: probes that are
+            // too dense raise the lower edge, too-sparse ones lower the
+            // upper edge. Measured cardinality comes from an approximate
+            // solve, though, so a probe contradicting the current bracket
+            // (which would invert it) is ignored rather than applied — the
+            // bracket stays valid and refinement continues. At one probe
+            // per round the midpoint is always strictly interior, so this
+            // never fires and classic bisection is preserved exactly.
+            if card > opts.target_card {
+                if lambda < hi {
+                    lo = lo.max(lambda);
+                }
+            } else if lambda > lo {
+                hi = hi.min(lambda);
+            }
         }
-        card
-    };
-    // Bisection over λ. An exact hit stops immediately; a within-slack
-    // solution is accepted (paper §4: "close, but not necessarily equal")
-    // only after a few refining evaluations have tried for the exact
-    // target — the best-seen solution is kept either way.
-    let mut lambda = 0.5 * hi;
-    for evals in 0..opts.max_evals {
-        let (sol, pc) = eval(sigma, lambda, opts);
-        let card = consider(lambda, sol, pc, &mut trace, &mut best, &mut best_key);
-        let dist = card.abs_diff(opts.target_card);
-        if dist == 0 || (dist <= opts.slack && evals + 1 >= opts.max_evals / 2) {
-            break;
-        }
-        if card > opts.target_card {
-            lo = lambda; // too dense → raise λ
-        } else {
-            hi = lambda; // too sparse → lower λ
-        }
-        lambda = 0.5 * (lo + hi);
-        if (hi - lo) < 1e-12 * (1.0 + max_diag) {
-            break;
+        if stop || hi - lo < 1e-12 * (1.0 + max_diag) {
+            break; // accepted, or bracket collapsed
         }
     }
     let (lambda, solution, pc) = best.expect("at least one evaluation");

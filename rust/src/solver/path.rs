@@ -29,6 +29,10 @@ pub struct PathOptions {
     pub min_frac: f64,
     pub bca: BcaOptions,
     pub extract_tol: f64,
+    /// Worker threads solving grid points concurrently (0 = auto,
+    /// 1 = serial). Every point is independent (per-λ safe elimination +
+    /// its own BCA solve), so the output is identical for any value.
+    pub threads: usize,
 }
 
 impl Default for PathOptions {
@@ -38,12 +42,15 @@ impl Default for PathOptions {
             min_frac: 1e-3,
             bca: BcaOptions { max_sweeps: 12, track_history: false, ..Default::default() },
             extract_tol: 1e-3,
+            threads: 1,
         }
     }
 }
 
 /// Compute the path, largest λ first (sparsest end first — each point
 /// applies safe elimination independently so the big-λ points are cheap).
+/// Points are solved on `opts.threads` workers; the λ grid and the output
+/// order are fixed up front, so results do not depend on the thread count.
 pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
     let n = sigma.n();
     assert!(n > 0 && opts.points >= 2);
@@ -52,12 +59,17 @@ pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
     let lo = (max_diag * opts.min_frac).max(1e-300);
     let hi = max_diag * 0.999;
     let ratio = (hi / lo).powf(1.0 / (opts.points - 1) as f64);
-    let mut out = Vec::with_capacity(opts.points);
+    let mut lambdas = Vec::with_capacity(opts.points);
     let mut lambda = hi;
     for _ in 0..opts.points {
+        lambdas.push(lambda);
+        lambda /= ratio;
+    }
+    crate::util::parallel::par_map_indexed(opts.threads, lambdas.len(), |k| {
+        let lambda = lambdas[k];
         let t = crate::util::timer::Timer::start();
         let elim = SafeElimination::apply(&diags, lambda, None);
-        let point = if elim.reduced() == 0 {
+        if elim.reduced() == 0 {
             PathPoint {
                 lambda,
                 survivors: 0,
@@ -81,11 +93,8 @@ pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
                 pc,
                 solve_seconds: t.secs(),
             }
-        };
-        out.push(point);
-        lambda /= ratio;
-    }
-    out
+        }
+    })
 }
 
 #[cfg(test)]

@@ -50,6 +50,18 @@ pub struct QpSolution {
     pub sweeps: usize,
 }
 
+/// Scalar outcome of a buffer-based solve: the optimal `u` and `w = Y·u`
+/// are left in the caller's buffers instead of being cloned — the BCA hot
+/// loop calls this once per column and reads the buffers directly, so an
+/// owned copy would be pure allocation overhead.
+#[derive(Clone, Copy, Debug)]
+pub struct QpOutcome {
+    /// `R² = uᵀYu` at the solution (≥ 0 for PSD `Y`).
+    pub r_squared: f64,
+    /// Sweeps actually performed (full + active-set inner).
+    pub sweeps: usize,
+}
+
 /// Closed-form scalar update (13): minimize `y₁η² + 2gη` over
 /// `|η − s₁| ≤ r`, where `g = ŷᵀû` is the off-diagonal inner product.
 #[inline]
@@ -137,6 +149,144 @@ pub fn solve_masked(
     }
     let r_squared = dot(u, w).max(0.0);
     QpSolution { u: u.clone(), r_squared, sweeps }
+}
+
+/// Warm-started, active-set variant of [`solve_masked`] — the BCA hot
+/// path (see EXPERIMENTS.md §Perf).
+///
+/// Differences from the cold reference solver:
+/// - **Warm start**: `warm` (typically the column's solution from the
+///   previous outer BCA sweep) seeds `u`, clamped into the current box;
+///   `None` falls back to the box center exactly like [`solve_masked`].
+/// - **Active-set sweeps**: after each full sweep, coordinates pinned at a
+///   box edge are dropped from the iteration set, and inner sweeps touch
+///   only the free coordinates — `O(|A|²)` instead of `O(n²)` per sweep —
+///   with `w` maintained on the active set only. Before the next full
+///   (verification) sweep, `w = Y·u` is recomputed in one fused blocked
+///   matvec pass, so edge coordinates whose gradient sign flipped re-enter.
+/// - Convergence is only declared by a *full* sweep moving nothing beyond
+///   `tol`, so the fixed point is identical to the reference solver's (the
+///   problem is convex; both satisfy the same KKT system — the property
+///   tests pin φ and the KKT residual against [`solve_masked`]).
+///
+/// `active` is caller-provided scratch (persisted in the solver workspace
+/// to avoid reallocation). On return `u` holds the solution and `w` holds
+/// the exactly-consistent `Y·u` (the BCA write-back vector).
+#[allow(clippy::too_many_arguments)]
+pub fn solve_masked_warm(
+    y: &SymMat,
+    center: &[f64],
+    radius: &[f64],
+    skip: Option<usize>,
+    opts: QpOptions,
+    warm: Option<&[f64]>,
+    u: &mut Vec<f64>,
+    w: &mut Vec<f64>,
+    active: &mut Vec<usize>,
+) -> QpOutcome {
+    let n = y.n();
+    assert_eq!(center.len(), n);
+    assert_eq!(radius.len(), n);
+    // Seed u: warm start clamped into the current box, else the center.
+    u.clear();
+    match warm {
+        Some(prev) => {
+            assert_eq!(prev.len(), n);
+            for i in 0..n {
+                let v = prev[i].clamp(center[i] - radius[i], center[i] + radius[i]);
+                u.push(v);
+            }
+        }
+        None => u.extend_from_slice(center),
+    }
+    if let Some(j) = skip {
+        u[j] = 0.0;
+    }
+    w.resize(n, 0.0);
+    y.matvec(u, w);
+    // Budgeting: `opts.max_sweeps` bounds *full* sweeps (so the warm path
+    // never gets less full-sweep work than the reference on hard
+    // instances); inner active-set sweeps are capped per round and cost
+    // O(|A|²) each. `sweeps` reports the total executed.
+    const INNER_CAP: usize = 8;
+    let mut sweeps = 0;
+    let mut full_sweeps = 0;
+    while full_sweeps < opts.max_sweeps {
+        // Full verification sweep: exact w maintenance over whole rows.
+        full_sweeps += 1;
+        sweeps += 1;
+        let mut max_move = 0.0f64;
+        for i in 0..n {
+            if Some(i) == skip {
+                continue;
+            }
+            let yi = y.row(i);
+            let yii = yi[i];
+            let g = w[i] - yii * u[i];
+            let new = if radius[i] == 0.0 {
+                center[i]
+            } else {
+                coordinate_update(yii, g, center[i], radius[i])
+            };
+            let delta = new - u[i];
+            max_move = max_move.max(delta.abs());
+            // Dead-band: sub-tol moves are already "converged" — applying
+            // them would cost a full row-axpy each for no progress (the
+            // reference path stops at the same granularity, via its
+            // max_move check). Keeps u and w exactly consistent.
+            if delta.abs() > opts.tol {
+                u[i] = new;
+                crate::linalg::vec::axpy(delta, yi, w);
+            }
+        }
+        if max_move <= opts.tol {
+            // Converged with w = Y·u exact — ready for r² and write-back.
+            let r_squared = dot(u, w).max(0.0);
+            return QpOutcome { r_squared, sweeps };
+        }
+        // Build the active set: free coordinates strictly inside the box.
+        // Edge-pinned coordinates stay put during inner sweeps; the next
+        // full sweep re-checks their gradients.
+        active.clear();
+        for i in 0..n {
+            if Some(i) == skip || radius[i] == 0.0 {
+                continue;
+            }
+            if (u[i] - center[i]).abs() < radius[i] {
+                active.push(i);
+            }
+        }
+        // Inner sweeps on the active set with w maintained on it only —
+        // worthwhile only when the set is a strict minority (each inner
+        // sweep then costs ≤ n²/4 versus n² for a full sweep).
+        if !active.is_empty() && 2 * active.len() <= n {
+            for _ in 0..INNER_CAP {
+                sweeps += 1;
+                let mut inner_move = 0.0f64;
+                for &i in active.iter() {
+                    let yi = y.row(i);
+                    let yii = yi[i];
+                    let g = w[i] - yii * u[i];
+                    let new = coordinate_update(yii, g, center[i], radius[i]);
+                    let delta = new - u[i];
+                    inner_move = inner_move.max(delta.abs());
+                    if delta.abs() > opts.tol {
+                        u[i] = new;
+                        for &k in active.iter() {
+                            w[k] += delta * yi[k];
+                        }
+                    }
+                }
+                if inner_move <= opts.tol {
+                    break;
+                }
+            }
+            // w is stale outside the active set; refresh before verifying.
+            y.matvec(u, w);
+        }
+    }
+    let r_squared = dot(u, w).max(0.0);
+    QpOutcome { r_squared, sweeps }
 }
 
 /// Convenience wrapper: solve (11) with uniform radius λ over an explicit

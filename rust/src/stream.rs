@@ -323,7 +323,7 @@ pub fn variance_pass<S: ChunkSource>(
         |acc: &mut FeatureMoments, chunk| acc.push_chunk(chunk),
         |a, b| a.merge(&b),
     )?;
-    Ok((acc.finalize(), stats))
+    Ok((acc.finalize_par(opts.workers), stats))
 }
 
 /// Convenience: variance pass over a docword file.

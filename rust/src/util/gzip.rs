@@ -1,0 +1,667 @@
+//! Minimal gzip (RFC 1952) + DEFLATE (RFC 1951) support — the offline
+//! substitute for `flate2` (see DESIGN.md §3 and EXPERIMENTS.md §Perf for
+//! why the default build carries zero external dependencies).
+//!
+//! - [`GzDecoder`] is a full streaming *inflate*: stored, fixed-Huffman and
+//!   dynamic-Huffman blocks, 32 KiB back-reference window, CRC32 + ISIZE
+//!   trailer verification. It reads anything the UCI distribution (or any
+//!   standard gzip) produces, in bounded memory.
+//! - [`GzEncoder`] emits valid gzip using *stored* (uncompressed) DEFLATE
+//!   blocks. The synthetic-corpus writer is the only producer in this
+//!   repository and its output is consumed once by our own reader, so
+//!   byte-exact validity matters and ratio does not.
+
+use std::io::{self, Read, Write};
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected, poly 0xEDB88320)
+// ---------------------------------------------------------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Running CRC32 checksum.
+#[derive(Clone)]
+pub struct Crc32 {
+    table: [u32; 256],
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32 { table: crc32_table(), state: !0 }
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32::default()
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut c = self.state;
+        for &b in data {
+            c = self.table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    pub fn finish(&self) -> u32 {
+        !self.state
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encoder: gzip container around stored DEFLATE blocks
+// ---------------------------------------------------------------------------
+
+const STORED_BLOCK_MAX: usize = 0xFFFF;
+const ENCODER_BUF: usize = 32 * 1024;
+
+/// Streaming gzip writer (stored blocks). Finalizes on [`GzEncoder::finish`]
+/// or, as a fallback, on drop (errors ignored there, matching `flate2`).
+pub struct GzEncoder<W: Write> {
+    inner: Option<W>,
+    buf: Vec<u8>,
+    crc: Crc32,
+    total: u64,
+    wrote_header: bool,
+}
+
+impl<W: Write> GzEncoder<W> {
+    pub fn new(inner: W) -> GzEncoder<W> {
+        GzEncoder {
+            inner: Some(inner),
+            buf: Vec::with_capacity(ENCODER_BUF),
+            crc: Crc32::new(),
+            total: 0,
+            wrote_header: false,
+        }
+    }
+
+    fn write_header(&mut self) -> io::Result<()> {
+        if !self.wrote_header {
+            // magic, CM=deflate, FLG=0, MTIME=0, XFL=0, OS=unknown
+            let hdr = [0x1F, 0x8B, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xFF];
+            self.inner.as_mut().unwrap().write_all(&hdr)?;
+            self.wrote_header = true;
+        }
+        Ok(())
+    }
+
+    /// Emit the buffered bytes as non-final stored blocks.
+    fn drain_buf(&mut self) -> io::Result<()> {
+        self.write_header()?;
+        let out = self.inner.as_mut().unwrap();
+        for chunk in self.buf.chunks(STORED_BLOCK_MAX) {
+            let len = chunk.len() as u16;
+            let header = [0x00u8, len as u8, (len >> 8) as u8, !len as u8, (!len >> 8) as u8];
+            out.write_all(&header)?;
+            out.write_all(chunk)?;
+        }
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Write the final (empty) block and the CRC32/ISIZE trailer, returning
+    /// the inner writer.
+    pub fn finish(mut self) -> io::Result<W> {
+        self.finish_in_place()?;
+        Ok(self.inner.take().unwrap())
+    }
+
+    fn finish_in_place(&mut self) -> io::Result<()> {
+        self.drain_buf()?;
+        let crc = self.crc.finish();
+        let isize_ = (self.total & 0xFFFF_FFFF) as u32;
+        let out = self.inner.as_mut().unwrap();
+        // final stored block, LEN = 0
+        out.write_all(&[0x01, 0x00, 0x00, 0xFF, 0xFF])?;
+        out.write_all(&crc.to_le_bytes())?;
+        out.write_all(&isize_.to_le_bytes())?;
+        out.flush()
+    }
+}
+
+impl<W: Write> Write for GzEncoder<W> {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        self.crc.update(data);
+        self.total += data.len() as u64;
+        self.buf.extend_from_slice(data);
+        if self.buf.len() >= ENCODER_BUF {
+            self.drain_buf()?;
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.drain_buf()?;
+        self.inner.as_mut().unwrap().flush()
+    }
+}
+
+impl<W: Write> Drop for GzEncoder<W> {
+    fn drop(&mut self) {
+        if self.inner.is_some() {
+            let _ = self.finish_in_place();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decoder: bit reader + canonical Huffman (puff-style) + LZ77 window
+// ---------------------------------------------------------------------------
+
+const WINDOW: usize = 32 * 1024;
+const MAX_BITS: usize = 15;
+
+/// Canonical Huffman table: symbol counts per code length plus symbols in
+/// canonical order (the compact representation used by zlib's `puff.c`).
+struct Huffman {
+    count: [u16; MAX_BITS + 1],
+    symbol: Vec<u16>,
+}
+
+impl Huffman {
+    /// Build from per-symbol code lengths (0 = unused symbol).
+    fn build(lengths: &[u8]) -> io::Result<Huffman> {
+        let mut count = [0u16; MAX_BITS + 1];
+        for &l in lengths {
+            if l as usize > MAX_BITS {
+                return Err(bad("code length exceeds 15"));
+            }
+            count[l as usize] += 1;
+        }
+        if count[0] as usize == lengths.len() {
+            // no codes at all — legal for an unused distance table
+            return Ok(Huffman { count, symbol: Vec::new() });
+        }
+        // over-subscription check
+        let mut left: i32 = 1;
+        for len in 1..=MAX_BITS {
+            left <<= 1;
+            left -= count[len] as i32;
+            if left < 0 {
+                return Err(bad("over-subscribed Huffman code"));
+            }
+        }
+        // offsets into symbol table per length
+        let mut offs = [0usize; MAX_BITS + 1];
+        for len in 1..MAX_BITS {
+            offs[len + 1] = offs[len] + count[len] as usize;
+        }
+        let mut symbol = vec![0u16; lengths.len()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbol[offs[l as usize]] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbol })
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("gzip: {msg}"))
+}
+
+/// DEFLATE length codes 257–285: (extra bits, base length).
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+/// Distance codes 0–29: (extra bits, base distance).
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+/// Order in which code-length code lengths are stored (RFC 1951 §3.2.7).
+const CLEN_ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+
+enum DecodeState {
+    Header,
+    Block,
+    Done,
+}
+
+/// Streaming gzip reader (single member, like `flate2::read::GzDecoder`).
+pub struct GzDecoder<R: Read> {
+    inner: R,
+    bit_buf: u32,
+    bit_count: u32,
+    state: DecodeState,
+    /// Sliding back-reference window (ring buffer).
+    window: Vec<u8>,
+    wpos: usize,
+    wfull: bool,
+    /// Decoded-but-unread output.
+    pending: Vec<u8>,
+    pending_off: usize,
+    crc: Crc32,
+    total: u64,
+}
+
+impl<R: Read> GzDecoder<R> {
+    pub fn new(inner: R) -> GzDecoder<R> {
+        GzDecoder {
+            inner,
+            bit_buf: 0,
+            bit_count: 0,
+            state: DecodeState::Header,
+            window: vec![0u8; WINDOW],
+            wpos: 0,
+            wfull: false,
+            pending: Vec::with_capacity(64 * 1024),
+            pending_off: 0,
+            crc: Crc32::new(),
+            total: 0,
+        }
+    }
+
+    fn read_byte(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.inner.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn bits(&mut self, n: u32) -> io::Result<u32> {
+        debug_assert!(n <= 16);
+        while self.bit_count < n {
+            let b = self.read_byte()?;
+            self.bit_buf |= (b as u32) << self.bit_count;
+            self.bit_count += 8;
+        }
+        let v = self.bit_buf & ((1u32 << n) - 1);
+        self.bit_buf >>= n;
+        self.bit_count -= n;
+        Ok(v)
+    }
+
+    fn align_byte(&mut self) {
+        self.bit_buf = 0;
+        self.bit_count = 0;
+    }
+
+    fn decode_symbol(&mut self, h: &Huffman) -> io::Result<u16> {
+        let mut code: u32 = 0;
+        let mut first: u32 = 0;
+        let mut index: usize = 0;
+        for len in 1..=MAX_BITS {
+            code |= self.bits(1)?;
+            let count = h.count[len] as u32;
+            if code >= first && code - first < count {
+                return Ok(h.symbol[index + (code - first) as usize]);
+            }
+            index += count as usize;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err(bad("invalid Huffman code"))
+    }
+
+    fn emit(&mut self, b: u8) {
+        self.pending.push(b);
+        self.window[self.wpos] = b;
+        self.wpos += 1;
+        if self.wpos == WINDOW {
+            self.wpos = 0;
+            self.wfull = true;
+        }
+    }
+
+    fn window_byte(&mut self, dist: usize) -> io::Result<u8> {
+        let avail = if self.wfull { WINDOW } else { self.wpos };
+        if dist == 0 || dist > avail {
+            return Err(bad("back-reference before start of stream"));
+        }
+        let idx = (self.wpos + WINDOW - dist) % WINDOW;
+        Ok(self.window[idx])
+    }
+
+    fn parse_header(&mut self) -> io::Result<()> {
+        let mut hdr = [0u8; 10];
+        self.inner.read_exact(&mut hdr)?;
+        if hdr[0] != 0x1F || hdr[1] != 0x8B {
+            return Err(bad("not a gzip stream (bad magic)"));
+        }
+        if hdr[2] != 8 {
+            return Err(bad("unsupported compression method"));
+        }
+        let flg = hdr[3];
+        if flg & 0x04 != 0 {
+            // FEXTRA
+            let lo = self.read_byte()? as usize;
+            let hi = self.read_byte()? as usize;
+            for _ in 0..(lo | (hi << 8)) {
+                self.read_byte()?;
+            }
+        }
+        if flg & 0x08 != 0 {
+            while self.read_byte()? != 0 {} // FNAME
+        }
+        if flg & 0x10 != 0 {
+            while self.read_byte()? != 0 {} // FCOMMENT
+        }
+        if flg & 0x02 != 0 {
+            self.read_byte()?; // FHCRC
+            self.read_byte()?;
+        }
+        Ok(())
+    }
+
+    fn check_trailer(&mut self) -> io::Result<()> {
+        self.align_byte();
+        let mut tr = [0u8; 8];
+        self.inner.read_exact(&mut tr)?;
+        let crc = u32::from_le_bytes([tr[0], tr[1], tr[2], tr[3]]);
+        let isize_ = u32::from_le_bytes([tr[4], tr[5], tr[6], tr[7]]);
+        if crc != self.crc.finish() {
+            return Err(bad("CRC32 mismatch"));
+        }
+        if isize_ != (self.total & 0xFFFF_FFFF) as u32 {
+            return Err(bad("ISIZE mismatch"));
+        }
+        Ok(())
+    }
+
+    fn inflate_stored(&mut self) -> io::Result<()> {
+        self.align_byte();
+        let mut b = [0u8; 4];
+        self.inner.read_exact(&mut b)?;
+        let len = u16::from_le_bytes([b[0], b[1]]);
+        let nlen = u16::from_le_bytes([b[2], b[3]]);
+        if len != !nlen {
+            return Err(bad("stored block LEN/NLEN mismatch"));
+        }
+        let mut buf = vec![0u8; len as usize];
+        self.inner.read_exact(&mut buf)?;
+        for &x in &buf {
+            self.emit(x);
+        }
+        Ok(())
+    }
+
+    fn fixed_tables() -> io::Result<(Huffman, Huffman)> {
+        let mut litlen = [0u8; 288];
+        for (i, l) in litlen.iter_mut().enumerate() {
+            *l = match i {
+                0..=143 => 8,
+                144..=255 => 9,
+                256..=279 => 7,
+                _ => 8,
+            };
+        }
+        let dist = [5u8; 30];
+        Ok((Huffman::build(&litlen)?, Huffman::build(&dist)?))
+    }
+
+    fn dynamic_tables(&mut self) -> io::Result<(Huffman, Huffman)> {
+        let hlit = self.bits(5)? as usize + 257;
+        let hdist = self.bits(5)? as usize + 1;
+        let hclen = self.bits(4)? as usize + 4;
+        if hlit > 286 || hdist > 30 {
+            return Err(bad("too many litlen/dist codes"));
+        }
+        let mut clen = [0u8; 19];
+        for &pos in CLEN_ORDER.iter().take(hclen) {
+            clen[pos] = self.bits(3)? as u8;
+        }
+        let clen_tab = Huffman::build(&clen)?;
+        let mut lengths = vec![0u8; hlit + hdist];
+        let mut i = 0;
+        while i < lengths.len() {
+            let sym = self.decode_symbol(&clen_tab)?;
+            match sym {
+                0..=15 => {
+                    lengths[i] = sym as u8;
+                    i += 1;
+                }
+                16 => {
+                    if i == 0 {
+                        return Err(bad("repeat with no previous length"));
+                    }
+                    let prev = lengths[i - 1];
+                    let reps = 3 + self.bits(2)? as usize;
+                    for _ in 0..reps {
+                        if i >= lengths.len() {
+                            return Err(bad("length repeat overflows table"));
+                        }
+                        lengths[i] = prev;
+                        i += 1;
+                    }
+                }
+                17 => {
+                    let reps = 3 + self.bits(3)? as usize;
+                    if i + reps > lengths.len() {
+                        return Err(bad("zero repeat overflows table"));
+                    }
+                    i += reps;
+                }
+                18 => {
+                    let reps = 11 + self.bits(7)? as usize;
+                    if i + reps > lengths.len() {
+                        return Err(bad("zero repeat overflows table"));
+                    }
+                    i += reps;
+                }
+                _ => return Err(bad("bad code-length symbol")),
+            }
+        }
+        if lengths[256] == 0 {
+            return Err(bad("missing end-of-block code"));
+        }
+        let litlen = Huffman::build(&lengths[..hlit])?;
+        let dist = Huffman::build(&lengths[hlit..])?;
+        Ok((litlen, dist))
+    }
+
+    fn inflate_huffman(&mut self, litlen: &Huffman, dist: &Huffman) -> io::Result<()> {
+        loop {
+            let sym = self.decode_symbol(litlen)?;
+            match sym {
+                0..=255 => self.emit(sym as u8),
+                256 => return Ok(()),
+                257..=285 => {
+                    let idx = sym as usize - 257;
+                    let len =
+                        LEN_BASE[idx] as usize + self.bits(LEN_EXTRA[idx] as u32)? as usize;
+                    let dsym = self.decode_symbol(dist)? as usize;
+                    if dsym >= 30 {
+                        return Err(bad("bad distance symbol"));
+                    }
+                    let d =
+                        DIST_BASE[dsym] as usize + self.bits(DIST_EXTRA[dsym] as u32)? as usize;
+                    for _ in 0..len {
+                        let b = self.window_byte(d)?;
+                        self.emit(b);
+                    }
+                }
+                _ => return Err(bad("bad literal/length symbol")),
+            }
+        }
+    }
+
+    /// Decode one DEFLATE block into `pending`. Returns whether the stream
+    /// is finished (final block decoded and trailer verified).
+    fn decode_block(&mut self) -> io::Result<bool> {
+        let final_block = self.bits(1)? == 1;
+        let btype = self.bits(2)?;
+        let before = self.pending.len();
+        match btype {
+            0 => self.inflate_stored()?,
+            1 => {
+                let (l, d) = Self::fixed_tables()?;
+                self.inflate_huffman(&l, &d)?;
+            }
+            2 => {
+                let (l, d) = self.dynamic_tables()?;
+                self.inflate_huffman(&l, &d)?;
+            }
+            _ => return Err(bad("reserved block type")),
+        }
+        let new = self.pending.len() - before;
+        self.crc.update(&self.pending[before..]);
+        self.total += new as u64;
+        if final_block {
+            self.check_trailer()?;
+        }
+        Ok(final_block)
+    }
+}
+
+impl<R: Read> Read for GzDecoder<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            if self.pending_off < self.pending.len() {
+                let n = (self.pending.len() - self.pending_off).min(buf.len());
+                buf[..n].copy_from_slice(&self.pending[self.pending_off..self.pending_off + n]);
+                self.pending_off += n;
+                if self.pending_off == self.pending.len() {
+                    self.pending.clear();
+                    self.pending_off = 0;
+                }
+                return Ok(n);
+            }
+            match self.state {
+                DecodeState::Done => return Ok(0),
+                DecodeState::Header => {
+                    self.parse_header()?;
+                    self.state = DecodeState::Block;
+                }
+                DecodeState::Block => {
+                    if self.decode_block()? {
+                        self.state = DecodeState::Done;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn decode_all(raw: &[u8]) -> Vec<u8> {
+        let mut d = GzDecoder::new(raw);
+        let mut out = Vec::new();
+        d.read_to_end(&mut out).unwrap();
+        out
+    }
+
+    // `gzip.compress(data, 6, mtime=0)` of the repeated pangram line —
+    // first block is BTYPE=2 (dynamic Huffman), covering the general path.
+    const GZ_DYNAMIC: &[u8] = &[
+        0x1f, 0x8b, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xff, 0xed, 0xcb, 0xc9, 0x15,
+        0x40, 0x30, 0x14, 0x05, 0xd0, 0xbd, 0x2a, 0x5e, 0x09, 0xe6, 0xa1, 0x1c, 0x24, 0x66,
+        0x3e, 0x91, 0x98, 0xaa, 0xa7, 0x08, 0xcb, 0xb7, 0xbe, 0xe7, 0xda, 0x4e, 0x63, 0x73,
+        0x7d, 0x3d, 0xa2, 0x32, 0x72, 0x2e, 0x68, 0xe4, 0xc2, 0xe0, 0xe6, 0x75, 0x87, 0x1c,
+        0xda, 0xc0, 0x7e, 0x3c, 0x95, 0xcf, 0x0d, 0x25, 0x2d, 0xfc, 0x20, 0x8c, 0xe2, 0x24,
+        0xcd, 0xf2, 0xc2, 0xb3, 0x6c, 0x6c, 0x6c, 0x6c, 0x6c, 0x6c, 0x6c, 0x6c, 0x7f, 0xb7,
+        0x17, 0x35, 0x61, 0x78, 0x79, 0x98, 0x08, 0x00, 0x00,
+    ];
+
+    // `gzip.compress(b"hello hello hello gzip", 6, mtime=0)` — BTYPE=1
+    // (fixed Huffman) with back-references.
+    const GZ_SMALL: &[u8] = &[
+        0x1f, 0x8b, 0x08, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xff, 0xcb, 0x48, 0xcd, 0xc9,
+        0xc9, 0x57, 0xc8, 0x40, 0x22, 0xd3, 0xab, 0x32, 0x0b, 0x00, 0x47, 0x3a, 0x59, 0x1c,
+        0x16, 0x00, 0x00, 0x00,
+    ];
+
+    #[test]
+    fn decodes_dynamic_huffman_stream() {
+        let want: Vec<u8> =
+            b"the quick brown fox jumps over the lazy dog 0123456789\n".repeat(40);
+        assert_eq!(decode_all(GZ_DYNAMIC), want);
+    }
+
+    #[test]
+    fn decodes_fixed_huffman_stream() {
+        assert_eq!(decode_all(GZ_SMALL), b"hello hello hello gzip");
+    }
+
+    #[test]
+    fn corrupted_crc_is_rejected() {
+        let mut raw = GZ_SMALL.to_vec();
+        let n = raw.len();
+        raw[n - 6] ^= 0xFF; // flip a CRC byte
+        let mut d = GzDecoder::new(&raw[..]);
+        let mut out = Vec::new();
+        assert!(d.read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn encoder_roundtrip_small() {
+        let data = b"stored-block roundtrip \x00\x01\x02 with binary bytes";
+        let mut enc = GzEncoder::new(Vec::new());
+        enc.write_all(data).unwrap();
+        let raw = enc.finish().unwrap();
+        assert_eq!(decode_all(&raw), data);
+    }
+
+    #[test]
+    fn encoder_roundtrip_large_random() {
+        // > one stored block and > encoder buffer, exercising chunking.
+        let mut rng = Rng::seed_from(404);
+        let data: Vec<u8> = (0..200_000).map(|_| rng.below(256) as u8).collect();
+        let mut enc = GzEncoder::new(Vec::new());
+        // uneven write sizes
+        let mut off = 0;
+        let mut step = 1;
+        while off < data.len() {
+            let end = (off + step).min(data.len());
+            enc.write_all(&data[off..end]).unwrap();
+            off = end;
+            step = (step * 7 + 3) % 4096 + 1;
+        }
+        let raw = enc.finish().unwrap();
+        assert_eq!(decode_all(&raw), data);
+    }
+
+    #[test]
+    fn encoder_empty_input() {
+        let enc = GzEncoder::new(Vec::new());
+        let raw = enc.finish().unwrap();
+        assert_eq!(decode_all(&raw), b"");
+    }
+
+    #[test]
+    fn drop_finalizes_stream() {
+        let mut sink = Vec::new();
+        {
+            let mut enc = GzEncoder::new(&mut sink);
+            enc.write_all(b"finalized on drop").unwrap();
+        } // drop writes the trailer
+        assert_eq!(decode_all(&sink), b"finalized on drop");
+    }
+
+    #[test]
+    fn crc32_known_value() {
+        // CRC32("123456789") = 0xCBF43926 (classic check value)
+        let mut c = Crc32::new();
+        c.update(b"123456789");
+        assert_eq!(c.finish(), 0xCBF4_3926);
+    }
+}

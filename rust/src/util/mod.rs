@@ -8,6 +8,8 @@
 
 pub mod bench;
 pub mod check;
+pub mod gzip;
+pub mod parallel;
 pub mod plot;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,173 @@
+//! Scoped data-parallel helpers built on the hand-rolled bounded channel
+//! from [`crate::stream`] — the same std-only worker-pool idiom the
+//! streaming passes use, packaged for compute kernels (λ-search probes,
+//! path grids, Gram shards, deflation row blocks). No external deps.
+//!
+//! Determinism contract (relied on by the `threads=1 == threads=4`
+//! property tests): work decomposition is fixed by the *inputs*, never by
+//! the thread count. Each index/chunk is processed exactly once by a pure
+//! function, and results are merged in index order, so outputs are
+//! bitwise identical for any `threads`.
+
+use crate::stream::bounded;
+
+/// Resolve a thread-count knob: `0` means "ask the OS", anything else is
+/// taken literally. Always ≥ 1.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Map `f` over `0..n` on up to `threads` scoped workers, returning the
+/// results in index order. `threads <= 1` (or tiny `n`) runs inline.
+///
+/// Work is distributed dynamically through a bounded channel, so uneven
+/// per-index costs (e.g. λ probes whose safe-elimination sizes differ)
+/// balance across workers.
+pub fn par_map_indexed<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = resolve_threads(threads).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let f = &f;
+    let mut slots: Vec<Option<T>> = Vec::new();
+    slots.resize_with(n, || None);
+    let collected: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let (tx, rx) = bounded::<usize>(n);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = rx.clone();
+            handles.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                while let Some(i) = rx.recv() {
+                    out.push((i, f(i)));
+                }
+                out
+            }));
+        }
+        drop(rx);
+        for i in 0..n {
+            if tx.send(i).is_err() {
+                break; // all workers gone (panic); join below re-raises
+            }
+        }
+        tx.close();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel worker panicked"))
+            .collect()
+    });
+    for (i, v) in collected.into_iter().flatten() {
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("parallel worker dropped an index"))
+        .collect()
+}
+
+/// Apply `f(offset, chunk)` to consecutive `chunk_len`-sized pieces of
+/// `data` on up to `threads` scoped workers. Chunk boundaries depend only
+/// on `chunk_len`, so the mutation is deterministic for any thread count
+/// (chunks are disjoint and each is processed exactly once).
+pub fn par_chunks_mut<T, F>(threads: usize, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    let threads = resolve_threads(threads);
+    if threads <= 1 || data.len() <= chunk_len {
+        let mut off = 0;
+        for c in data.chunks_mut(chunk_len) {
+            let len = c.len();
+            f(off, c);
+            off += len;
+        }
+        return;
+    }
+    let f = &f;
+    std::thread::scope(|scope| {
+        let (tx, rx) = bounded::<(usize, &mut [T])>(2 * threads);
+        for _ in 0..threads {
+            let rx = rx.clone();
+            scope.spawn(move || {
+                while let Some((off, c)) = rx.recv() {
+                    f(off, c);
+                }
+            });
+        }
+        drop(rx);
+        let mut off = 0;
+        for c in data.chunks_mut(chunk_len) {
+            let len = c.len();
+            if tx.send((off, c)).is_err() {
+                break;
+            }
+            off += len;
+        }
+        tx.close();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_semantics() {
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+
+    #[test]
+    fn par_map_matches_serial_any_thread_count() {
+        let f = |i: usize| (i as f64 + 1.0).sqrt() * 3.0;
+        let want: Vec<f64> = (0..97).map(f).collect();
+        for t in [1, 2, 4, 7] {
+            let got = par_map_indexed(t, 97, f);
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let got: Vec<usize> = par_map_indexed(4, 0, |i| i);
+        assert!(got.is_empty());
+        let got = par_map_indexed(4, 1, |i| i * 2);
+        assert_eq!(got, vec![0]);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_everything_once() {
+        let mut data: Vec<u64> = (0..10_001).collect();
+        par_chunks_mut(4, &mut data, 128, |off, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                assert_eq!(*v, (off + k) as u64, "offset bookkeeping");
+                *v += 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn uneven_work_still_complete() {
+        let got = par_map_indexed(3, 40, |i| {
+            if i % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i * i
+        });
+        assert_eq!(got.len(), 40);
+        assert_eq!(got[39], 39 * 39);
+    }
+}

@@ -5,6 +5,9 @@
 //!
 //! These tests need `make artifacts`; they skip (with a message) when the
 //! artifacts are missing so plain `cargo test` still passes everywhere.
+//! The whole file is compiled out without the `xla` feature.
+
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 

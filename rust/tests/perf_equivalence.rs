@@ -1,0 +1,275 @@
+//! Equivalence guarantees for the PR's performance machinery:
+//!
+//! (a) the warm-started / active-set hot path (QP `solve_masked_warm`,
+//!     BCA `SolverWorkspace`) reaches the same optimum as the cold-start
+//!     reference path — φ within 1e-6, matching KKT residuals, iterates
+//!     staying PD/symmetric;
+//! (b) the parallel kernels (λ-search probes, path grids, Gram /
+//!     covariance shards, deflation row blocks) produce results identical
+//!     at `threads = 1` and `threads = 4` — the work decomposition is
+//!     fixed by the inputs, never by the thread count.
+
+use lsspca::corpus::models::spiked_covariance_with_u;
+use lsspca::data::SymMat;
+use lsspca::solver::bca::{self, BcaOptions, SolverWorkspace};
+use lsspca::solver::lambda::{search, LambdaSearchOptions};
+use lsspca::solver::path::{compute, PathOptions};
+use lsspca::solver::qp::{self, QpOptions};
+use lsspca::util::check::{close, ensure, property};
+use lsspca::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// (a) warm-start / active-set ≡ cold-start reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_warm_qp_matches_cold_reference() {
+    property("warm/active-set QP == cold QP (R², KKT)", 30, |rng| {
+        let n = rng.range(2, 24);
+        let y = SymMat::random_psd(n, n + 3, 0.02, rng);
+        let s: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let lambda = rng.range_f64(0.05, 1.0);
+        let radius = vec![lambda; n];
+        let opts = QpOptions::default();
+        let (mut u, mut w) = (Vec::new(), Vec::new());
+        let cold = qp::solve_masked(&y, &s, &radius, None, opts, &mut u, &mut w);
+        // Warm start from a random feasible-ish point (gets clamped), and
+        // from the cold solution itself (one verification sweep).
+        for warm_kind in 0..2 {
+            let seed: Vec<f64> = if warm_kind == 0 {
+                (0..n).map(|i| s[i] + rng.range_f64(-2.0, 2.0)).collect()
+            } else {
+                cold.u.clone()
+            };
+            let (mut u2, mut w2, mut active) = (Vec::new(), Vec::new(), Vec::new());
+            let warm = qp::solve_masked_warm(
+                &y, &s, &radius, None, opts, Some(&seed), &mut u2, &mut w2, &mut active,
+            );
+            close(warm.r_squared, cold.r_squared, 1e-6)
+                .map_err(|e| format!("R² mismatch (kind {warm_kind}): {e}"))?;
+            let res = qp::kkt_residual(&y, &s, lambda, &u2);
+            ensure(
+                res < 1e-6 * (1.0 + y.trace()),
+                format!("warm KKT residual {res} (kind {warm_kind})"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_qp_respects_skip_and_pins() {
+    property("warm QP honors skip + zero radius", 20, |rng| {
+        let n = rng.range(3, 16);
+        let y = SymMat::random_psd(n, n + 2, 0.05, rng);
+        let lambda = rng.range_f64(0.1, 0.8);
+        let j = rng.below(n);
+        let mut center: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        center[j] = 0.0;
+        let mut radius = vec![lambda; n];
+        radius[j] = 0.0;
+        let pin = rng.below(n);
+        radius[pin] = 0.0;
+        let seed: Vec<f64> = (0..n).map(|_| rng.gauss()).collect();
+        let (mut u, mut w, mut active) = (Vec::new(), Vec::new(), Vec::new());
+        let warm = qp::solve_masked_warm(
+            &y,
+            &center,
+            &radius,
+            Some(j),
+            QpOptions::default(),
+            Some(&seed),
+            &mut u,
+            &mut w,
+            &mut active,
+        );
+        ensure(u[j] == 0.0, "skip coordinate must stay 0")?;
+        ensure(u[pin] == center[pin], "pinned coordinate must sit at center")?;
+        let (mut u2, mut w2) = (Vec::new(), Vec::new());
+        let cold = qp::solve_masked(
+            &y, &center, &radius, Some(j), QpOptions::default(), &mut u2, &mut w2,
+        );
+        close(warm.r_squared, cold.r_squared, 1e-6)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_workspace_bca_matches_reference() {
+    // The barrier problem (6) is strictly concave — its maximizer is
+    // unique — so whenever BOTH paths converge (outer early-exit fired)
+    // they must land on the same φ. On near-degenerate instances the two
+    // *trajectories* legitimately differ mid-flight (degenerate column
+    // QPs have multiple optimal u with equal R²), which is why the gate
+    // is convergence, not sweep count.
+    property("workspace BCA solve == reference solve (φ, PD, symmetric)", 10, |rng| {
+        let n = rng.range(3, 14);
+        let sigma = SymMat::random_psd(n, 2 * n, 0.1, rng);
+        let min_diag = (0..n).map(|i| sigma.get(i, i)).fold(f64::INFINITY, f64::min);
+        let lambda = rng.range_f64(0.1, 0.8) * min_diag;
+        // Generous budgets so each inner QP fully converges on both paths.
+        let opts = BcaOptions {
+            max_sweeps: 120,
+            tol: 1e-7,
+            qp: QpOptions { max_sweeps: 300, tol: 1e-11 },
+            ..Default::default()
+        };
+        let hot = bca::solve(&sigma, lambda, &opts);
+        let cold = bca::solve_reference(&sigma, lambda, &opts);
+        ensure(hot.x.asymmetry() < 1e-9, "workspace iterate must stay symmetric")?;
+        ensure(
+            lsspca::linalg::chol::is_psd(&hot.x, 1e-10),
+            "workspace iterate must stay PSD",
+        )?;
+        ensure(hot.phi.is_finite(), "φ must be finite")?;
+        if hot.sweeps < opts.max_sweeps && cold.sweeps < opts.max_sweeps {
+            close(hot.phi, cold.phi, 1e-6).map_err(|e| format!("φ diverged: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_workspace_sweeps_keep_barrier_monotone() {
+    // Every warm-started column update still exactly maximizes the
+    // barrier objective over its row/column block, so the objective can
+    // never decrease (slack covers log-det evaluation noise once X gets
+    // concentrated).
+    property("workspace sweeps never decrease the barrier objective", 8, |rng| {
+        let n = rng.range(3, 12);
+        let sigma = SymMat::random_psd(n, 2 * n, 0.15, rng);
+        let min_diag = (0..n).map(|i| sigma.get(i, i)).fold(f64::INFINITY, f64::min);
+        let lambda = rng.range_f64(0.1, 0.7) * min_diag;
+        let opts = BcaOptions {
+            qp: QpOptions { max_sweeps: 300, tol: 1e-11 },
+            ..Default::default()
+        };
+        let beta = opts.epsilon / n as f64;
+        let mut x = SymMat::identity(n);
+        let mut ws = SolverWorkspace::new(n);
+        let mut prev = bca::barrier_objective(&x, &sigma, lambda, beta).ok_or("X0 not PD")?;
+        for sweep_no in 0..4 {
+            bca::sweep_ws(&mut x, &sigma, lambda, beta, &opts, &mut ws);
+            let cur = bca::barrier_objective(&x, &sigma, lambda, beta)
+                .ok_or("hot iterate left the PD cone")?;
+            ensure(
+                cur >= prev - 3e-5 * (1.0 + prev.abs()),
+                format!("barrier dropped on sweep {sweep_no}: {prev} → {cur}"),
+            )?;
+            prev = cur;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// (b) parallel == serial, bit for bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_lambda_search_identical_across_thread_counts() {
+    property("λ-search: threads=1 == threads=4", 6, |rng| {
+        let n = rng.range(10, 30);
+        let (sigma, _) = spiked_covariance_with_u(n, 3 * n, 4, 4.0, rng);
+        let mk = |threads: usize| LambdaSearchOptions {
+            target_card: 4,
+            slack: 1,
+            max_evals: 8,
+            probes_per_round: 3,
+            threads,
+            bca: BcaOptions { max_sweeps: 8, track_history: false, ..Default::default() },
+            ..Default::default()
+        };
+        let serial = search(&sigma, &mk(1));
+        let par = search(&sigma, &mk(4));
+        ensure(serial.lambda == par.lambda, "chosen λ must be identical")?;
+        ensure(serial.solution.phi == par.solution.phi, "φ must be identical")?;
+        ensure(serial.trace.len() == par.trace.len(), "trace length must match")?;
+        for (a, b) in serial.trace.iter().zip(&par.trace) {
+            ensure(
+                a.lambda == b.lambda && a.cardinality == b.cardinality && a.phi == b.phi,
+                "trace entries must be bitwise identical",
+            )?;
+        }
+        ensure(serial.pc.support == par.pc.support, "supports must match")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_path_identical_across_thread_counts() {
+    property("path grid: threads=1 == threads=4", 4, |rng| {
+        let n = rng.range(8, 20);
+        let sigma = SymMat::random_psd(n, 2 * n, 0.1, rng);
+        let mk = |threads: usize| PathOptions { points: 7, threads, ..Default::default() };
+        let serial = compute(&sigma, &mk(1));
+        let par = compute(&sigma, &mk(4));
+        ensure(serial.len() == par.len(), "same number of points")?;
+        for (a, b) in serial.iter().zip(&par) {
+            ensure(a.lambda == b.lambda, "λ grid must match")?;
+            ensure(a.survivors == b.survivors, "survivors must match")?;
+            ensure(a.phi == b.phi, "φ must be bitwise identical")?;
+            ensure(a.pc.vector == b.pc.vector, "loadings must be bitwise identical")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gram_and_covariance_identical_across_thread_counts() {
+    property("gram/covariance shards: threads=1 == threads=4", 10, |rng| {
+        // Gram over enough rows to span several fixed shards.
+        let n = rng.range(2, 10);
+        let m = rng.range(300, 900);
+        let data: Vec<f64> = (0..m * n).map(|_| rng.gauss()).collect();
+        let g1 = lsspca::cov::gram_parallel(m, n, &data, 1);
+        let g4 = lsspca::cov::gram_parallel(m, n, &data, 4);
+        ensure(g1.as_slice() == g4.as_slice(), "gram must be bitwise identical")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn covariance_from_csr_identical_across_thread_counts() {
+    // Multi-shard CSR covariance (> 1024 docs) must not depend on threads.
+    let spec = lsspca::corpus::CorpusSpec::nytimes().scaled(2600, 500);
+    let corpus = lsspca::corpus::SynthCorpus::new(spec, 5);
+    let csr = corpus.to_csr();
+    let kept: Vec<usize> = (0..40).collect();
+    let c1 = lsspca::cov::covariance_from_csr_par(&csr, &kept, 1);
+    let c4 = lsspca::cov::covariance_from_csr_par(&csr, &kept, 4);
+    assert_eq!(c1.as_slice(), c4.as_slice(), "covariance must be bitwise identical");
+}
+
+#[test]
+fn deflation_identical_across_thread_counts() {
+    let mut rng = Rng::seed_from(808);
+    for scheme in [
+        lsspca::solver::deflate::Scheme::Projection,
+        lsspca::solver::deflate::Scheme::Hotelling,
+    ] {
+        let base = SymMat::random_psd(130, 200, 0.1, &mut rng);
+        let mut v = rng.gauss_vec(130);
+        lsspca::linalg::vec::normalize(&mut v);
+        let mut s1 = base.clone();
+        let mut s4 = base.clone();
+        scheme.apply_par(&mut s1, &v, 1);
+        scheme.apply_par(&mut s4, &v, 4);
+        assert_eq!(s1.as_slice(), s4.as_slice(), "{scheme:?} deflation must be identical");
+    }
+}
+
+#[test]
+fn moments_finalize_identical_across_thread_counts() {
+    let spec = lsspca::corpus::CorpusSpec::nytimes().scaled(300, 9000);
+    let corpus = lsspca::corpus::SynthCorpus::new(spec, 12);
+    let mut m = lsspca::moments::FeatureMoments::new(9000);
+    for d in 0..300 {
+        m.push_doc(&corpus.generate_doc(d));
+    }
+    let f1 = m.finalize_par(1);
+    let f4 = m.finalize_par(4);
+    assert_eq!(f1.variance, f4.variance);
+    assert_eq!(f1.mean, f4.mean);
+    assert_eq!(f1.second_moment, f4.second_moment);
+}
