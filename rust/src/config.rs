@@ -245,6 +245,15 @@ pub struct PipelineConfig {
     pub card_slack: usize,
     /// Hard cap on the reduced problem size n̂ after elimination.
     pub max_reduced: usize,
+    /// Covariance backend (`[cov] backend`): "dense" materializes the
+    /// reduced n̂ × n̂ matrix (solves bitwise the historical pipeline); "gram"
+    /// keeps Σ implicit as a centered Gram operator over the reduced
+    /// sparse term matrix — O(nnz) memory, so n̂ can reach tens of
+    /// thousands.
+    pub cov_backend: String,
+    /// Row-cache budget in MiB for the "gram" backend's lazily gathered
+    /// Σ rows (solver.row_cache_mb; 0 disables caching).
+    pub row_cache_mb: usize,
     /// BCA sweeps (paper: K typically 5).
     pub bca_sweeps: usize,
     /// ε for the barrier parameter β = ε/n.
@@ -278,6 +287,8 @@ impl Default for PipelineConfig {
             target_card: 5,
             card_slack: 2,
             max_reduced: 512,
+            cov_backend: "dense".into(),
+            row_cache_mb: 64,
             bca_sweeps: 5,
             epsilon: 1e-3,
             engine: "native".into(),
@@ -308,6 +319,8 @@ impl PipelineConfig {
             target_card: doc.usize_or("solver", "target_card", d.target_card)?,
             card_slack: doc.usize_or("solver", "card_slack", d.card_slack)?,
             max_reduced: doc.usize_or("solver", "max_reduced", d.max_reduced)?,
+            cov_backend: doc.str_or("cov", "backend", &d.cov_backend)?,
+            row_cache_mb: doc.usize_or("solver", "row_cache_mb", d.row_cache_mb)?,
             bca_sweeps: doc.usize_or("solver", "bca_sweeps", d.bca_sweeps)?,
             epsilon: doc.f64_or("solver", "epsilon", d.epsilon)?,
             engine: doc.str_or("solver", "engine", &d.engine)?,
@@ -353,6 +366,23 @@ impl PipelineConfig {
         match self.engine.as_str() {
             "native" | "xla" => {}
             other => return Err(format!("solver.engine '{other}' (want native|xla)")),
+        }
+        match self.cov_backend.as_str() {
+            "dense" | "gram" => {}
+            other => return Err(format!("cov.backend '{other}' (want dense|gram)")),
+        }
+        if self.engine == "xla" && self.cov_backend == "gram" {
+            // The XLA engine ships an explicit Σ to shape-static
+            // artifacts; combined with the implicit backend it would
+            // silently materialize the full n̂ × n̂ matrix once per
+            // λ-probe — defeating the gram backend's O(nnz) memory
+            // contract at exactly the scales it exists for.
+            return Err(
+                "solver.engine = \"xla\" requires cov.backend = \"dense\" (the XLA \
+                 artifacts need an explicit covariance matrix; \"gram\" would re-densify \
+                 Σ per λ-probe)"
+                    .into(),
+            );
         }
         match self.deflation.as_str() {
             "projection" | "hotelling" => {}
@@ -422,6 +452,24 @@ lambdas = [0.1, 0.2, 0.5]
     fn validation_rejects_bad_engine() {
         let doc = Document::parse("[solver]\nengine = \"gpu\"").unwrap();
         assert!(PipelineConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn cov_backend_parses_and_validates() {
+        let doc =
+            Document::parse("[cov]\nbackend = \"gram\"\n[solver]\nrow_cache_mb = 16").unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.cov_backend, "gram");
+        assert_eq!(cfg.row_cache_mb, 16);
+        // default backend is the bitwise-historical dense path
+        assert_eq!(PipelineConfig::default().cov_backend, "dense");
+        let bad = Document::parse("[cov]\nbackend = \"sparse\"").unwrap();
+        assert!(PipelineConfig::from_document(&bad).is_err());
+        // xla + gram would re-densify Σ per λ-probe; rejected up front
+        let clash =
+            Document::parse("[solver]\nengine = \"xla\"\n[cov]\nbackend = \"gram\"").unwrap();
+        let e = PipelineConfig::from_document(&clash).unwrap_err();
+        assert!(e.contains("xla") && e.contains("gram"), "{e}");
     }
 
     #[test]

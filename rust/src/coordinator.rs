@@ -11,25 +11,35 @@
 //! ```
 //!
 //! Deflation note: components after the first are extracted from the same
-//! reduced covariance, re-solving after projecting out earlier PCs — the
-//! paper's "top 5 sparse principal components" workflow. The initial λ̂ for
-//! *elimination* is chosen from the variance profile so the reduced
-//! problem comfortably contains a cardinality-`target` solution
+//! reduced covariance operator, re-solving after stacking earlier PCs as
+//! rank-K corrections ([`DeflatedCov`]) — the paper's "top 5 sparse
+//! principal components" workflow, without destructive dense edits. The
+//! initial λ̂ for *elimination* is chosen from the variance profile so the
+//! reduced problem comfortably contains a cardinality-`target` solution
 //! (`max_reduced` caps it; the cap is reported when it binds).
+//!
+//! Covariance backend (`cov.backend`): `"dense"` streams the reduced
+//! n̂ × n̂ matrix exactly as before (every solve bitwise the historical
+//! pipeline; components after the first agree to ~1e-9 because deflation
+//! reassociates the destructive updates' arithmetic);
+//! `"gram"` streams the reduced sparse term matrix instead and serves Σ
+//! implicitly through [`crate::covop::GramCov`] — O(nnz) memory plus a
+//! bounded row cache, so n̂ can reach tens of thousands.
 
 use std::path::{Path, PathBuf};
 
 use crate::config::PipelineConfig;
 use crate::corpus::{CorpusSpec, SynthCorpus};
-use crate::cov::covariance_pass;
-use crate::data::{SymMat, Vocab};
+use crate::cov::{covariance_pass, gram_pass};
+use crate::covop::{CovOp, DenseCov, MaskedCov};
+use crate::data::Vocab;
 use crate::elim::{lambda_for_survivors, SafeElimination};
 use crate::engine::{Engine, NativeEngine};
 #[cfg(feature = "xla")]
 use crate::engine::XlaEngine;
 use crate::moments::FeatureVariances;
 use crate::solver::bca::BcaOptions;
-use crate::solver::deflate::Scheme;
+use crate::solver::deflate::{DeflatedCov, Scheme};
 use crate::solver::extract::SparsePc;
 use crate::solver::lambda::{search, LambdaSearchOptions};
 use crate::stream::{variance_pass, FileSource, StreamOptions, SynthSource};
@@ -222,18 +232,42 @@ impl Pipeline {
             return Err("elimination removed every feature; lower solver.target λ̂".into());
         }
 
-        // --- pass 2: reduced covariance -------------------------------------
-        let (mut cov, _stats2) = prof.time("covariance_pass", || match &synth {
-            Some(s) => covariance_pass(&mut SynthSource::new(s), &elim, opts),
-            None => {
-                let mut src = FileSource::open(&input_path)?;
-                covariance_pass(&mut src, &elim, opts)
+        // --- pass 2: reduced covariance operator ----------------------------
+        let cov: Box<dyn CovOp> = match self.config.cov_backend.as_str() {
+            "gram" => {
+                let (gram, _stats2) = prof.time("gram_pass", || match &synth {
+                    Some(s) => {
+                        gram_pass(&mut SynthSource::new(s), &elim, opts, self.config.row_cache_mb)
+                    }
+                    None => {
+                        let mut src = FileSource::open(&input_path)?;
+                        gram_pass(&mut src, &elim, opts, self.config.row_cache_mb)
+                    }
+                })?;
+                crate::info!(
+                    "gram pass: reduced term matrix nnz={} (row cache {} rows ≤ {} MiB)",
+                    gram.nnz(),
+                    gram.cache_capacity_rows(),
+                    self.config.row_cache_mb
+                );
+                Box::new(gram)
             }
-        })?;
+            _ => {
+                let (cov, _stats2) = prof.time("covariance_pass", || match &synth {
+                    Some(s) => covariance_pass(&mut SynthSource::new(s), &elim, opts),
+                    None => {
+                        let mut src = FileSource::open(&input_path)?;
+                        covariance_pass(&mut src, &elim, opts)
+                    }
+                })?;
+                Box::new(DenseCov::new(cov))
+            }
+        };
 
-        // --- solve: λ-search + BCA + deflation -------------------------------
+        // --- solve: λ-search + BCA + rank-K deflation ------------------------
         let mut engine = self.make_engine()?;
         let scheme = Scheme::parse(&self.config.deflation).ok_or("bad deflation scheme")?;
+        let mut defl = DeflatedCov::new(cov.as_ref());
         let mut components = Vec::new();
         for k in 0..self.config.num_pcs {
             let t = Timer::start();
@@ -241,6 +275,10 @@ impl Pipeline {
                 max_sweeps: self.config.bca_sweeps,
                 epsilon: self.config.epsilon,
                 tol: 1e-7,
+                // The pipeline never reads the per-sweep history, and on
+                // the gram backend each history point costs a full pass
+                // of Σ-row gathers (frob_with) per sweep.
+                track_history: false,
                 ..Default::default()
             };
             // Parallel λ-search. The probe schedule comes from config —
@@ -258,7 +296,7 @@ impl Pipeline {
                 ..Default::default()
             };
             let res = prof.time("lambda_search+bca", || {
-                search_with_engine(&mut *engine, &cov, &sopts)
+                search_with_engine(&mut *engine, &defl, &sopts)
             })?;
             let words: Vec<String> = res
                 .pc
@@ -275,14 +313,17 @@ impl Pipeline {
                 words.join(", "),
                 t.secs()
             );
-            let explained = res.pc.explained_variance(&cov);
+            let explained = defl.quad_form(&res.pc.vector);
             let certificate_gap = if self.config.certify {
                 let cert = prof.time("certificate", || {
                     // certify on the survivors of res.lambda (the solve
                     // space); the eliminated coordinates are provably zero.
-                    let diags: Vec<f64> = (0..cov.n()).map(|i| cov.get(i, i)).collect();
+                    // The certificate's eigendecompositions need an
+                    // explicit matrix, so the survivor submatrix is
+                    // materialized here (small: the solve space).
+                    let diags: Vec<f64> = (0..defl.n()).map(|i| defl.diag(i)).collect();
                     let sub_elim = crate::elim::SafeElimination::apply(&diags, res.lambda, None);
-                    let sub = cov.submatrix(&sub_elim.kept);
+                    let sub = defl.materialize(&sub_elim.kept);
                     crate::solver::certificate::certify(&sub, &res.solution.z, res.lambda)
                 });
                 crate::info!(
@@ -296,9 +337,7 @@ impl Pipeline {
             } else {
                 None
             };
-            prof.time("deflation", || {
-                scheme.apply_par(&mut cov, &res.pc.vector, self.config.threads)
-            });
+            prof.time("deflation", || defl.push(scheme, &res.pc.vector));
             components.push(ComponentReport {
                 lambda: res.lambda,
                 phi: res.solution.phi,
@@ -354,7 +393,7 @@ pub fn choose_elimination(
 /// λ-search where the inner solves run on an [`Engine`].
 pub fn search_with_engine(
     engine: &mut dyn Engine,
-    sigma: &SymMat,
+    sigma: &dyn CovOp,
     opts: &LambdaSearchOptions,
 ) -> Result<crate::solver::lambda::LambdaSearchResult, String> {
     match engine.name() {
@@ -371,29 +410,31 @@ pub fn search_with_engine(
 
 fn engine_search(
     engine: &mut dyn Engine,
-    sigma: &SymMat,
+    sigma: &dyn CovOp,
     opts: &LambdaSearchOptions,
 ) -> Result<crate::solver::lambda::LambdaSearchResult, String> {
     use crate::solver::extract::leading_sparse_pc;
     use crate::solver::lambda::{LambdaEval, LambdaSearchResult};
     let n = sigma.n();
-    let max_diag = (0..n).map(|i| sigma.get(i, i)).fold(0.0f64, f64::max);
+    let max_diag = (0..n).map(|i| sigma.diag(i)).fold(0.0f64, f64::max);
     let (mut lo, mut hi) = (0.0f64, max_diag * 0.999);
     let mut lambda = 0.5 * hi;
     let mut trace = Vec::new();
     let mut best: Option<(f64, crate::solver::bca::BcaSolution, SparsePc)> = None;
     let mut best_key = (usize::MAX, f64::NEG_INFINITY);
-    let diags: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    let diags: Vec<f64> = (0..n).map(|i| sigma.diag(i)).collect();
     for evals in 0..opts.max_evals {
         // Per-probe safe elimination (Thm 2.1), mirroring the native
-        // search: solve only the surviving submatrix and lift back.
+        // search: solve on the masked survivor view and lift back.
         let elim = crate::elim::SafeElimination::apply(&diags, lambda, None);
-        let (sol, pc) = if elim.reduced() == n || elim.reduced() == 0 {
+        let use_mask =
+            opts.per_lambda_elim && elim.reduced() != n && elim.reduced() != 0;
+        let (sol, pc) = if !use_mask {
             let sol = crate::engine::bca_solve(engine, sigma, lambda, &opts.bca)?;
             let pc = leading_sparse_pc(&sol.z, opts.extract_tol);
             (sol, pc)
         } else {
-            let sub = sigma.submatrix(&elim.kept);
+            let sub = MaskedCov::new(sigma, elim.kept.clone());
             let sol = crate::engine::bca_solve(engine, &sub, lambda, &opts.bca)?;
             let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
             pc.vector = elim.lift(&pc.vector);

@@ -11,7 +11,16 @@
 //! O(k_d²) work for k_d kept words in the document, so the pass stays
 //! cheap even at PubMed scale. Partial accumulators (sum of outer products
 //! + per-feature sums) merge additively across workers.
+//!
+//! Two accumulators live here, one per covariance backend:
+//!
+//! - [`CovAccum`] → a dense [`SymMat`] (the `cov.backend = "dense"` path);
+//! - [`ReducedDocsAccum`] → the reduced sparse term matrix behind
+//!   [`GramCov`] (the `"gram"` path) — same streaming pass shape, but it
+//!   keeps the kept-feature rows themselves (O(nnz) memory) instead of
+//!   folding them into an O(n̂²) buffer.
 
+use crate::covop::GramCov;
 use crate::data::docword::DocChunk;
 use crate::data::sparse::CsrMatrix;
 use crate::data::SymMat;
@@ -29,18 +38,30 @@ pub struct CovAccum {
     /// Documents seen.
     docs: u64,
     nhat: usize,
+    /// Reusable kept-entry gather buffer — one allocation per
+    /// accumulator, not one per document (`push_doc` is called once per
+    /// document across the whole corpus).
+    scratch: Vec<(u32, f64)>,
 }
 
 impl CovAccum {
     pub fn new(nhat: usize) -> CovAccum {
-        CovAccum { outer: vec![0.0; nhat * nhat], sums: vec![0.0; nhat], docs: 0, nhat }
+        CovAccum {
+            outer: vec![0.0; nhat * nhat],
+            sums: vec![0.0; nhat],
+            docs: 0,
+            nhat,
+            scratch: Vec::new(),
+        }
     }
 
     /// Fold one document given a full→reduced lookup (u32::MAX = dropped).
     pub fn push_doc(&mut self, words: &[(u32, f64)], lookup: &[u32]) {
         self.docs += 1;
-        // Gather kept entries (reduced index, count).
-        let mut kept: Vec<(u32, f64)> = Vec::new();
+        // Gather kept entries (reduced index, count) into the reusable
+        // scratch buffer (taken out of self to split the borrow).
+        let mut kept = std::mem::take(&mut self.scratch);
+        kept.clear();
         for &(w, c) in words {
             let r = lookup[w as usize];
             if r != u32::MAX {
@@ -54,6 +75,7 @@ impl CovAccum {
                 self.outer[lo as usize * self.nhat + hi as usize] += ca * cb;
             }
         }
+        self.scratch = kept;
     }
 
     pub fn merge(&mut self, other: &CovAccum) {
@@ -116,6 +138,112 @@ pub fn covariance_pass<S: ChunkSource>(
         |a, b| a.merge(&b),
     )?;
     Ok((acc.finalize(), stats))
+}
+
+/// Mergeable accumulator for the implicit-Gram pass: collects each
+/// document's kept-feature entries into flat per-worker arrays (no
+/// per-document allocations; 12 bytes/nnz, the CSR's own footprint),
+/// tagged with the document id so rows reassemble in corpus order no
+/// matter which worker processed which chunk (stronger determinism than
+/// [`CovAccum`], whose float merges depend on chunk scheduling).
+#[derive(Clone, Debug)]
+pub struct ReducedDocsAccum {
+    /// Ids of documents with ≥ 1 kept feature, in fold order.
+    doc_ids: Vec<u64>,
+    /// Prefix offsets into `idx`/`val`; `doc_ptr.len() == doc_ids.len()+1`.
+    doc_ptr: Vec<usize>,
+    /// Kept entries of all folded documents, concatenated.
+    idx: Vec<u32>,
+    val: Vec<f64>,
+}
+
+impl Default for ReducedDocsAccum {
+    fn default() -> Self {
+        ReducedDocsAccum::new()
+    }
+}
+
+impl ReducedDocsAccum {
+    pub fn new() -> ReducedDocsAccum {
+        ReducedDocsAccum { doc_ids: Vec::new(), doc_ptr: vec![0], idx: Vec::new(), val: Vec::new() }
+    }
+
+    /// Fold one document given a full→reduced lookup (u32::MAX = dropped).
+    pub fn push_doc(&mut self, doc_id: u64, words: &[(u32, f64)], lookup: &[u32]) {
+        let start = self.idx.len();
+        for &(w, c) in words {
+            let r = lookup[w as usize];
+            if r != u32::MAX {
+                self.idx.push(r);
+                self.val.push(c);
+            }
+        }
+        if self.idx.len() > start {
+            self.doc_ids.push(doc_id);
+            self.doc_ptr.push(self.idx.len());
+        }
+    }
+
+    pub fn merge(&mut self, other: ReducedDocsAccum) {
+        let base = self.idx.len();
+        self.doc_ids.extend_from_slice(&other.doc_ids);
+        // other.doc_ptr[0] == 0; shift the rest by our current nnz.
+        self.doc_ptr.extend(other.doc_ptr[1..].iter().map(|&p| base + p));
+        self.idx.extend_from_slice(&other.idx);
+        self.val.extend_from_slice(&other.val);
+    }
+
+    /// Assemble the reduced CSR (rows = documents with ≥ 1 kept feature,
+    /// in ascending doc-id order; cols = kept features in elimination
+    /// order).
+    pub fn finalize(self, nhat: usize) -> CsrMatrix {
+        let ndocs = self.doc_ids.len();
+        let mut order: Vec<u32> = (0..ndocs as u32).collect();
+        order.sort_unstable_by_key(|&d| self.doc_ids[d as usize]);
+        let nnz = self.idx.len();
+        let mut indptr = Vec::with_capacity(ndocs + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0usize);
+        for &d in &order {
+            let (lo, hi) = (self.doc_ptr[d as usize], self.doc_ptr[d as usize + 1]);
+            indices.extend_from_slice(&self.idx[lo..hi]);
+            values.extend_from_slice(&self.val[lo..hi]);
+            indptr.push(indices.len());
+        }
+        CsrMatrix { rows: ndocs, cols: nhat, indptr, indices, values }
+    }
+}
+
+/// Streaming implicit-Gram pass: the `cov.backend = "gram"` counterpart
+/// of [`covariance_pass`]. Same reader/worker topology, but the result is
+/// a [`GramCov`] operator over the reduced term matrix — O(nnz + n̂)
+/// memory plus the `cache_mb` row-cache budget, never an n̂ × n̂ dense
+/// matrix.
+pub fn gram_pass<S: ChunkSource>(
+    source: &mut S,
+    elim: &SafeElimination,
+    opts: StreamOptions,
+    cache_mb: usize,
+) -> Result<(GramCov, StreamStats), String> {
+    let nhat = elim.reduced();
+    let lookup = std::sync::Arc::new(reduced_lookup(elim));
+    let (acc, stats) = parallel_fold(
+        source,
+        opts,
+        ReducedDocsAccum::new,
+        {
+            let lookup = std::sync::Arc::clone(&lookup);
+            move |acc: &mut ReducedDocsAccum, chunk: &DocChunk| {
+                for doc in &chunk.docs {
+                    acc.push_doc(doc.id as u64, &doc.words, &lookup);
+                }
+            }
+        },
+        |a, b| a.merge(b),
+    )?;
+    let csr = acc.finalize(nhat);
+    Ok((GramCov::new(csr, stats.docs, cache_mb), stats))
 }
 
 /// Dense reference: centered covariance of selected columns of a CSR
@@ -345,6 +473,57 @@ mod tests {
         }
         // PSD check on the assembled covariance
         assert!(crate::linalg::chol::is_psd(&cov, 1e-8), "covariance must be PSD");
+    }
+
+    #[test]
+    fn gram_pass_matches_covariance_pass() {
+        use crate::covop::CovOp;
+        let c = SynthCorpus::new(CorpusSpec::nytimes().scaled(250, 900), 21);
+        let opts = StreamOptions { workers: 2, chunk_docs: 40, queue_depth: 2 };
+        let (fv, _) = variance_pass(&mut SynthSource::new(&c), opts).unwrap();
+        let elim = SafeElimination::from_variances(&fv, 0.03, Some(24));
+        assert!(elim.reduced() > 1);
+        let (dense, _) = covariance_pass(&mut SynthSource::new(&c), &elim, opts).unwrap();
+        let (gram, stats) = gram_pass(&mut SynthSource::new(&c), &elim, opts, 8).unwrap();
+        assert_eq!(stats.docs, 250);
+        assert_eq!(gram.n(), elim.reduced());
+        let mut row = vec![0.0; elim.reduced()];
+        for j in 0..elim.reduced() {
+            assert!((gram.diag(j) - dense.get(j, j)).abs() < 1e-9);
+            gram.row_into(j, &mut row);
+            for k in 0..elim.reduced() {
+                assert!(
+                    (row[k] - dense.get(j, k)).abs() < 1e-9,
+                    "Σ[{j},{k}]: gram {} vs dense {}",
+                    row[k],
+                    dense.get(j, k)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_pass_deterministic_across_workers() {
+        use crate::covop::CovOp;
+        let c = SynthCorpus::new(CorpusSpec::nytimes().scaled(400, 1200), 29);
+        let (fv, _) =
+            variance_pass(&mut SynthSource::new(&c), StreamOptions::default()).unwrap();
+        let elim = SafeElimination::from_variances(&fv, 0.02, Some(16));
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for workers in [1, 4] {
+            let opts = StreamOptions { workers, chunk_docs: 33, queue_depth: 2 };
+            let (gram, _) = gram_pass(&mut SynthSource::new(&c), &elim, opts, 4).unwrap();
+            let mut flat = Vec::new();
+            let mut row = vec![0.0; elim.reduced()];
+            for j in 0..elim.reduced() {
+                gram.row_into(j, &mut row);
+                flat.extend_from_slice(&row);
+            }
+            rows.push(flat);
+        }
+        // doc-id sort makes the gram pass bitwise identical for any
+        // worker count (unlike the dense accumulator's float merges)
+        assert_eq!(rows[0], rows[1]);
     }
 
     #[test]

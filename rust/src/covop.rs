@@ -1,0 +1,764 @@
+//! Covariance operators — the abstraction that lets the solver stack run
+//! without ever committing to a dense n̂ × n̂ matrix.
+//!
+//! The paper's scaling story rests on two facts: (i) safe elimination
+//! (Thm 2.1) shrinks the feature set *per λ*, and (ii) for text data the
+//! covariance is available *implicitly* as `Σ = AᵀA/m − μμᵀ` from a sparse
+//! term matrix. Algorithm 1 itself only ever touches Σ through four
+//! operations — a diagonal read, a row gather (`Σ_j`, the box center of
+//! the column QP), a matvec, and a quadratic form. [`CovOp`] names exactly
+//! those operations, and everything downstream of covariance assembly
+//! (`solver/bca`, `solver/lambda`, `solver/path`, `solver/deflate`,
+//! `engine`, `coordinator`) is generic over it.
+//!
+//! Implementations:
+//!
+//! - [`DenseCov`] — wraps the existing [`SymMat`]; every method delegates
+//!   to the dense kernels, so every *solve* (BCA, λ-search probe, masked
+//!   view) is **bitwise identical** to the pre-operator pipeline (pinned
+//!   by `rust/tests/perf_equivalence.rs`). Across *components*, the
+//!   pipeline now deflates via rank-K corrections instead of destructive
+//!   dense edits, which reassociates the same arithmetic — PCs after the
+//!   first agree with the historical pipeline to ~1e-9, not bitwise.
+//!   `SymMat` itself also implements [`CovOp`], so existing call sites
+//!   keep compiling unchanged.
+//! - [`GramCov`] — the implicit centered-Gram operator over a reduced
+//!   CSR/CSC pair of kept-feature columns plus per-feature means. Memory
+//!   is O(nnz + n̂) plus a bounded row cache (`solver.row_cache_mb`), so
+//!   n̂ can reach tens of thousands without the O(n̂²) dense matrix ever
+//!   existing.
+//! - [`MaskedCov`] — a zero-copy principal-submatrix view: the per-λ
+//!   nested-elimination mask the λ-search solves on (high-λ probes see
+//!   only their own Thm-2.1 survivors of one shared superset operator).
+//! - [`crate::solver::deflate::DeflatedCov`] — a composable rank-K
+//!   correction stacked on any base operator (deflation without
+//!   destructive dense edits).
+//!
+//! ## Memory model and determinism
+//!
+//! Operators are `Send + Sync` so λ-search probes and path grid points can
+//! share one operator across worker threads. [`GramCov`]'s row cache is a
+//! `Mutex`-guarded LRU keyed by row index; caching never changes a value
+//! (rows are recomputed by the same deterministic kernel on a miss), so
+//! results are identical for any cache size or thread count.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::data::sparse::{CscMatrix, CsrMatrix};
+use crate::data::SymMat;
+
+// ---------------------------------------------------------------------------
+// The traits
+// ---------------------------------------------------------------------------
+
+/// Abstract access to a symmetric covariance operator of order `n`.
+///
+/// The required methods are the four operations Algorithm 1 needs; the
+/// provided methods (`row_gather`, `frob_with`, `materialize`) have
+/// generic implementations that implementors may shortcut.
+pub trait CovOp: Send + Sync {
+    /// Operator order n̂.
+    fn n(&self) -> usize;
+
+    /// Diagonal entry `Σ_jj` (feature variance; Thm 2.1's test quantity).
+    fn diag(&self, j: usize) -> f64;
+
+    /// Gather row `j` of Σ into `out` (length `n`).
+    fn row_into(&self, j: usize, out: &mut [f64]);
+
+    /// Matrix–vector product `y = Σ x`.
+    fn matvec(&self, x: &[f64], y: &mut [f64]);
+
+    /// Quadratic form `xᵀ Σ x` (explained variance of a loading vector).
+    fn quad_form(&self, x: &[f64]) -> f64 {
+        let mut y = vec![0.0; self.n()];
+        self.matvec(x, &mut y);
+        crate::linalg::vec::dot(x, &y)
+    }
+
+    /// Gather the entries `Σ[j, idx[k]]` into `out` (length `idx.len()`)
+    /// — the masked-view row kernel. The default gathers the full row
+    /// and picks; dense and cached implementations avoid the temporary.
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        let mut row = vec![0.0; self.n()];
+        self.row_into(j, &mut row);
+        for (o, &i) in out.iter_mut().zip(idx) {
+            *o = row[i];
+        }
+    }
+
+    /// Frobenius inner product `⟨Σ, X⟩ = Σᵢⱼ Σᵢⱼ Xᵢⱼ` with a dense `X`
+    /// (the `Tr ΣX` term of the primal objective).
+    ///
+    /// The default accumulates in flat row-major order with a single
+    /// accumulator — the exact summation order of [`SymMat::frob_dot`] —
+    /// so a masked dense view reproduces the materialized-submatrix
+    /// objective bitwise.
+    fn frob_with(&self, x: &SymMat) -> f64 {
+        let n = self.n();
+        assert_eq!(x.n(), n);
+        let mut row = vec![0.0; n];
+        let mut acc = 0.0;
+        for i in 0..n {
+            self.row_into(i, &mut row);
+            let xi = x.row(i);
+            for j in 0..n {
+                acc += row[j] * xi[j];
+            }
+        }
+        acc
+    }
+
+    /// Materialize the principal submatrix on `idx` as a dense matrix
+    /// (used by the dual certificate and the XLA engine, which need an
+    /// explicit matrix; never called on the GramCov hot path).
+    fn materialize(&self, idx: &[usize]) -> SymMat {
+        let k = idx.len();
+        let mut m = SymMat::zeros(k);
+        let mut buf = vec![0.0; k];
+        for a in 0..k {
+            self.row_gather(idx[a], idx, &mut buf);
+            for b in a..k {
+                m.set(a, b, buf[b]);
+            }
+        }
+        m
+    }
+
+    /// Materialize the whole operator densely.
+    fn materialize_full(&self) -> SymMat {
+        let idx: Vec<usize> = (0..self.n()).collect();
+        self.materialize(&idx)
+    }
+
+    /// The dense backing matrix, if this operator is one (fast path for
+    /// engines that ship Σ to an accelerator artifact).
+    fn as_dense(&self) -> Option<&SymMat> {
+        None
+    }
+}
+
+/// Contiguous dense row access — the box-QP's requirement on its matrix.
+///
+/// The QP of Algorithm 1 step 4 runs on the solver *iterate* `X` (always
+/// dense), not on Σ; its inner loop reads whole rows once per coordinate
+/// update and must not pay a gather. This trait spells out that contract
+/// so `solver/qp` is generic without giving up the hot path: for
+/// [`SymMat`] it monomorphizes to exactly the pre-refactor code.
+pub trait DenseRows {
+    /// Matrix order.
+    fn n(&self) -> usize;
+
+    /// Contiguous row `i` (= column `i` by symmetry).
+    fn row(&self, i: usize) -> &[f64];
+
+    /// `y = A x` via per-row dots (identical order to [`SymMat::matvec`]).
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(x.len(), n);
+        assert_eq!(y.len(), n);
+        for (i, yi) in y.iter_mut().enumerate() {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(x) {
+                acc += a * b;
+            }
+            *yi = acc;
+        }
+    }
+}
+
+impl DenseRows for SymMat {
+    fn n(&self) -> usize {
+        SymMat::n(self)
+    }
+
+    fn row(&self, i: usize) -> &[f64] {
+        SymMat::row(self, i)
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        SymMat::matvec(self, x, y)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense implementations
+// ---------------------------------------------------------------------------
+
+impl CovOp for SymMat {
+    fn n(&self) -> usize {
+        SymMat::n(self)
+    }
+
+    fn diag(&self, j: usize) -> f64 {
+        self.get(j, j)
+    }
+
+    fn row_into(&self, j: usize, out: &mut [f64]) {
+        out.copy_from_slice(self.row(j));
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        SymMat::matvec(self, x, y)
+    }
+
+    fn quad_form(&self, x: &[f64]) -> f64 {
+        SymMat::quad_form(self, x)
+    }
+
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        let row = self.row(j);
+        for (o, &i) in out.iter_mut().zip(idx) {
+            *o = row[i];
+        }
+    }
+
+    fn frob_with(&self, x: &SymMat) -> f64 {
+        self.frob_dot(x)
+    }
+
+    fn materialize(&self, idx: &[usize]) -> SymMat {
+        self.submatrix(idx)
+    }
+
+    fn as_dense(&self) -> Option<&SymMat> {
+        Some(self)
+    }
+}
+
+/// The dense covariance backend: a [`SymMat`] behind the operator
+/// interface. Every method forwards to the matrix's own [`CovOp`] impl,
+/// so a solve through `DenseCov` is **bitwise identical** to a solve on
+/// the wrapped matrix — and a future `CovOp` method optimized for
+/// `SymMat` is picked up here automatically.
+#[derive(Clone, Debug)]
+pub struct DenseCov(pub SymMat);
+
+impl DenseCov {
+    pub fn new(sigma: SymMat) -> DenseCov {
+        DenseCov(sigma)
+    }
+
+    /// The wrapped matrix.
+    pub fn inner(&self) -> &SymMat {
+        &self.0
+    }
+}
+
+impl CovOp for DenseCov {
+    fn n(&self) -> usize {
+        CovOp::n(&self.0)
+    }
+
+    fn diag(&self, j: usize) -> f64 {
+        CovOp::diag(&self.0, j)
+    }
+
+    fn row_into(&self, j: usize, out: &mut [f64]) {
+        CovOp::row_into(&self.0, j, out)
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        CovOp::matvec(&self.0, x, y)
+    }
+
+    fn quad_form(&self, x: &[f64]) -> f64 {
+        CovOp::quad_form(&self.0, x)
+    }
+
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        CovOp::row_gather(&self.0, j, idx, out)
+    }
+
+    fn frob_with(&self, x: &SymMat) -> f64 {
+        CovOp::frob_with(&self.0, x)
+    }
+
+    fn materialize(&self, idx: &[usize]) -> SymMat {
+        CovOp::materialize(&self.0, idx)
+    }
+
+    fn as_dense(&self) -> Option<&SymMat> {
+        Some(&self.0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Masked view — per-λ nested elimination
+// ---------------------------------------------------------------------------
+
+/// Zero-copy principal-submatrix view of a base operator.
+///
+/// This is the per-λ nested-elimination mask: a λ-search probe applies
+/// Thm 2.1 at *its own* λ and solves on the survivor subset of one shared
+/// superset operator, instead of materializing `Σ.submatrix(kept)` per
+/// probe. For a dense base the gathered values are the identical f64s the
+/// submatrix would contain, so the solve is bitwise equal to the
+/// materialized one (pinned by `prop_masked_solve_matches_submatrix`).
+pub struct MaskedCov<'a, C: CovOp + ?Sized> {
+    base: &'a C,
+    idx: Vec<usize>,
+}
+
+impl<'a, C: CovOp + ?Sized> MaskedCov<'a, C> {
+    /// View `base` restricted to the (not necessarily sorted) indices
+    /// `idx` — typically `SafeElimination::kept` at a probe λ.
+    pub fn new(base: &'a C, idx: Vec<usize>) -> MaskedCov<'a, C> {
+        let n = base.n();
+        assert!(idx.iter().all(|&i| i < n), "mask index out of range");
+        MaskedCov { base, idx }
+    }
+
+    /// The masked (original-space) indices.
+    pub fn indices(&self) -> &[usize] {
+        &self.idx
+    }
+}
+
+impl<C: CovOp + ?Sized> CovOp for MaskedCov<'_, C> {
+    fn n(&self) -> usize {
+        self.idx.len()
+    }
+
+    fn diag(&self, j: usize) -> f64 {
+        self.base.diag(self.idx[j])
+    }
+
+    fn row_into(&self, j: usize, out: &mut [f64]) {
+        self.base.row_gather(self.idx[j], &self.idx, out);
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        let k = self.idx.len();
+        assert_eq!(x.len(), k);
+        assert_eq!(y.len(), k);
+        let mut row = vec![0.0; k];
+        for (a, yi) in y.iter_mut().enumerate() {
+            self.base.row_gather(self.idx[a], &self.idx, &mut row);
+            *yi = crate::linalg::vec::dot(&row, x);
+        }
+    }
+
+    fn quad_form(&self, x: &[f64]) -> f64 {
+        let mut y = vec![0.0; self.idx.len()];
+        self.matvec(x, &mut y);
+        crate::linalg::vec::dot(x, &y)
+    }
+
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        let mapped: Vec<usize> = idx.iter().map(|&i| self.idx[i]).collect();
+        self.base.row_gather(self.idx[j], &mapped, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Implicit centered Gram operator
+// ---------------------------------------------------------------------------
+
+/// Least-recently-used cache of gathered rows (interior state; values are
+/// recomputed deterministically on a miss, so the cache never changes a
+/// result — only wall time).
+struct RowCache {
+    rows: HashMap<usize, (u64, Vec<f64>)>,
+    clock: u64,
+    cap_rows: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl RowCache {
+    fn new(cap_rows: usize) -> RowCache {
+        RowCache { rows: HashMap::new(), clock: 0, cap_rows, hits: 0, misses: 0 }
+    }
+
+    /// Copy a cached row's entries at `idx` into `out` (`None` = whole
+    /// row, served with one `copy_from_slice`); `false` on miss.
+    fn gather(&mut self, j: usize, idx: Option<&[usize]>, out: &mut [f64]) -> bool {
+        self.clock += 1;
+        match self.rows.get_mut(&j) {
+            Some((stamp, row)) => {
+                *stamp = self.clock;
+                self.hits += 1;
+                match idx {
+                    Some(idx) => {
+                        for (o, &i) in out.iter_mut().zip(idx) {
+                            *o = row[i];
+                        }
+                    }
+                    None => out.copy_from_slice(row),
+                }
+                true
+            }
+            None => {
+                self.misses += 1;
+                false
+            }
+        }
+    }
+
+    fn insert(&mut self, j: usize, row: Vec<f64>) {
+        if self.cap_rows == 0 {
+            return;
+        }
+        if self.rows.len() >= self.cap_rows && !self.rows.contains_key(&j) {
+            // Evict the least-recently-used row (O(len) scan; the scan is
+            // orders of magnitude cheaper than the sparse row gather a
+            // miss costs, so a fancier structure buys nothing here).
+            let victim = self
+                .rows
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(&k, _)| k);
+            if let Some(v) = victim {
+                self.rows.remove(&v);
+            }
+        }
+        self.clock += 1;
+        let stamped = (self.clock, row);
+        // A concurrent gather may have raced the same row in; keep the
+        // existing copy (values are identical by determinism).
+        self.rows.entry(j).or_insert(stamped);
+    }
+}
+
+/// Implicit centered covariance of a reduced sparse term matrix:
+///
+/// ```text
+/// Σ_ab = (AᵀA)_ab / m  −  μ_a μ_b,     μ = (Aᵀ1) / m
+/// ```
+///
+/// where `A` is the m × n̂ matrix of kept-feature counts (documents with
+/// no kept words contribute only to `m`). Rows of Σ are *gathered on
+/// demand* from the CSC/CSR pair — `O(Σ_{d ∋ j} nnz_d)` per row — and
+/// held in a bounded LRU cache; the full n̂ × n̂ matrix is never formed.
+///
+/// Entries match [`crate::cov::CovAccum::finalize`] up to FP summation
+/// order (the streaming accumulator folds documents in worker order, this
+/// operator in sorted document order — both population-convention).
+pub struct GramCov {
+    csr: CsrMatrix,
+    csc: CscMatrix,
+    /// Per-feature mean `μ_j` (over all `m` documents).
+    mean: Vec<f64>,
+    /// Precomputed diagonal `Σ_jj` (Thm 2.1 reads it constantly).
+    diag: Vec<f64>,
+    /// Document count m, including documents with no kept features.
+    m_docs: f64,
+    cache: Mutex<RowCache>,
+}
+
+impl GramCov {
+    /// Build from a reduced CSR (rows = documents that contain at least
+    /// one kept feature, cols = kept features in elimination order).
+    /// `total_docs` is the full corpus size m (the centering denominator);
+    /// `cache_mb` bounds the row cache (0 disables caching).
+    pub fn new(csr: CsrMatrix, total_docs: u64, cache_mb: usize) -> GramCov {
+        let nhat = csr.cols;
+        let m = total_docs.max(1) as f64;
+        let mut sums = vec![0.0; nhat];
+        for r in 0..csr.rows {
+            for (c, v) in csr.row(r) {
+                sums[c] += v;
+            }
+        }
+        let mean: Vec<f64> = sums.iter().map(|&s| s / m).collect();
+        let csc = csr.to_csc();
+        let diag: Vec<f64> = (0..nhat)
+            .map(|j| {
+                let (_, ss) = csc.col_moments(j);
+                ss / m - mean[j] * mean[j]
+            })
+            .collect();
+        let cap_rows = if cache_mb == 0 {
+            0
+        } else {
+            ((cache_mb * 1024 * 1024) / (8 * nhat.max(1))).max(1)
+        };
+        GramCov {
+            csr,
+            csc,
+            mean,
+            diag,
+            m_docs: m,
+            cache: Mutex::new(RowCache::new(cap_rows)),
+        }
+    }
+
+    /// Stored nonzeros of the reduced term matrix.
+    pub fn nnz(&self) -> usize {
+        self.csr.nnz()
+    }
+
+    /// `(cache hits, cache misses)` so far — capacity-planning telemetry
+    /// for the `row_cache_mb` knob.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// Rows the cache can hold under the configured budget.
+    pub fn cache_capacity_rows(&self) -> usize {
+        self.cache.lock().unwrap().cap_rows
+    }
+
+    /// Compute row `j` of Σ from the sparse factors:
+    /// `out[k] = (Σ_{d ∋ j} A_dj A_dk)/m − μ_j μ_k`.
+    fn compute_row(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.csr.cols);
+        out.fill(0.0);
+        for (d, aj) in self.csc.col(j) {
+            for (k, ak) in self.csr.row(d) {
+                out[k] += aj * ak;
+            }
+        }
+        let inv_m = 1.0 / self.m_docs;
+        let mu_j = self.mean[j];
+        for (o, &mu_k) in out.iter_mut().zip(&self.mean) {
+            *o = *o * inv_m - mu_j * mu_k;
+        }
+    }
+
+    /// Gather via the cache: serve picks (or the whole row when `idx` is
+    /// `None`) from a cached row, computing and inserting on a miss.
+    /// Computation happens outside the lock so concurrent probes do not
+    /// serialize on row builds.
+    fn cached_gather(&self, j: usize, idx: Option<&[usize]>, out: &mut [f64]) {
+        let caching = {
+            let mut cache = self.cache.lock().unwrap();
+            if cache.cap_rows > 0 && cache.gather(j, idx, out) {
+                return;
+            }
+            cache.cap_rows > 0
+        };
+        match idx {
+            Some(idx) => {
+                let mut row = vec![0.0; self.csr.cols];
+                self.compute_row(j, &mut row);
+                for (o, &i) in out.iter_mut().zip(idx) {
+                    *o = row[i];
+                }
+                if caching {
+                    self.cache.lock().unwrap().insert(j, row);
+                }
+            }
+            None => {
+                // Full-row request: compute straight into the caller's
+                // buffer, cloning only if it is worth caching.
+                self.compute_row(j, out);
+                if caching {
+                    self.cache.lock().unwrap().insert(j, out.to_vec());
+                }
+            }
+        }
+    }
+}
+
+impl CovOp for GramCov {
+    fn n(&self) -> usize {
+        self.csr.cols
+    }
+
+    fn diag(&self, j: usize) -> f64 {
+        self.diag[j]
+    }
+
+    fn row_into(&self, j: usize, out: &mut [f64]) {
+        self.cached_gather(j, None, out);
+    }
+
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        self.cached_gather(j, Some(idx), out);
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.csr.cols);
+        // y = Aᵀ(Ax)/m − μ(μᵀx): the shared sparse Gram-action kernel,
+        // then centering — no dense Σ.
+        self.csr.gram_action_into(x, y);
+        let inv_m = 1.0 / self.m_docs;
+        let mux = crate::linalg::vec::dot(&self.mean, x);
+        for (yk, &mu_k) in y.iter_mut().zip(&self.mean) {
+            *yk = *yk * inv_m - mu_k * mux;
+        }
+    }
+
+    fn quad_form(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.csr.cols);
+        // xᵀΣx = ‖Ax‖²/m − (μᵀx)².
+        let mut ax = vec![0.0; self.csr.rows];
+        self.csr.matvec_into(x, &mut ax);
+        let ssq: f64 = ax.iter().map(|a| a * a).sum();
+        let mux = crate::linalg::vec::dot(&self.mean, x);
+        ssq / self.m_docs - mux * mux
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cov::covariance_from_csr;
+    use crate::data::TripletMatrix;
+    use crate::util::check::{close, property};
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize) -> CsrMatrix {
+        let mut t = TripletMatrix::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bool(0.4) {
+                    t.push(r, c, (1 + rng.below(5)) as f64);
+                }
+            }
+        }
+        t.to_csr()
+    }
+
+    #[test]
+    fn dense_cov_is_bitwise_the_matrix() {
+        let mut rng = Rng::seed_from(31);
+        let n = 9;
+        let sigma = SymMat::random_psd(n, 2 * n, 0.1, &mut rng);
+        let op = DenseCov::new(sigma.clone());
+        let mut row = vec![0.0; n];
+        for j in 0..n {
+            assert_eq!(CovOp::diag(&op, j), sigma.get(j, j));
+            op.row_into(j, &mut row);
+            assert_eq!(row.as_slice(), sigma.row(j));
+        }
+        let x = rng.gauss_vec(n);
+        let (mut y1, mut y2) = (vec![0.0; n], vec![0.0; n]);
+        CovOp::matvec(&op, &x, &mut y1);
+        SymMat::matvec(&sigma, &x, &mut y2);
+        assert_eq!(y1, y2);
+        assert_eq!(CovOp::quad_form(&op, &x).to_bits(), sigma.quad_form(&x).to_bits());
+        let z = SymMat::random_psd(n, n + 2, 0.0, &mut rng);
+        assert_eq!(op.frob_with(&z).to_bits(), sigma.frob_dot(&z).to_bits());
+    }
+
+    #[test]
+    fn prop_gram_matches_dense_covariance() {
+        property("GramCov == covariance_from_csr entrywise", 15, |rng| {
+            let rows = rng.range(3, 40);
+            let cols = rng.range(2, 12);
+            let csr = random_csr(rng, rows, cols);
+            let kept: Vec<usize> = (0..cols).collect();
+            let dense = covariance_from_csr(&csr, &kept);
+            let gram = GramCov::new(csr, rows as u64, 4);
+            let mut row = vec![0.0; cols];
+            for j in 0..cols {
+                close(CovOp::diag(&gram, j), dense.get(j, j), 1e-10)?;
+                gram.row_into(j, &mut row);
+                for k in 0..cols {
+                    close(row[k], dense.get(j, k), 1e-10)?;
+                }
+            }
+            // matvec + quad form against the dense reference
+            let x: Vec<f64> = (0..cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let (mut yg, mut yd) = (vec![0.0; cols], vec![0.0; cols]);
+            CovOp::matvec(&gram, &x, &mut yg);
+            SymMat::matvec(&dense, &x, &mut yd);
+            for k in 0..cols {
+                close(yg[k], yd[k], 1e-9)?;
+            }
+            close(CovOp::quad_form(&gram, &x), dense.quad_form(&x), 1e-9)?;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_rows_symmetric_and_deterministic() {
+        let mut rng = Rng::seed_from(33);
+        let csr = random_csr(&mut rng, 60, 8);
+        let gram = GramCov::new(csr, 60, 1);
+        let (mut ra, mut rb) = (vec![0.0; 8], vec![0.0; 8]);
+        for a in 0..8 {
+            gram.row_into(a, &mut ra);
+            for b in 0..8 {
+                gram.row_into(b, &mut rb);
+                assert_eq!(ra[b].to_bits(), rb[a].to_bits(), "Σ must be exactly symmetric");
+            }
+            // a second gather (now cached) returns the same bits
+            let mut again = vec![0.0; 8];
+            gram.row_into(a, &mut again);
+            assert_eq!(ra, again);
+        }
+    }
+
+    #[test]
+    fn gram_counts_empty_documents_in_m() {
+        // Two docs share a feature; a third doc has no kept features but
+        // must still shrink the mean (m = 3, not 2).
+        let mut t = TripletMatrix::new(2, 1);
+        t.push(0, 0, 1.0);
+        t.push(1, 0, 1.0);
+        let gram = GramCov::new(t.to_csr(), 3, 1);
+        // μ = 2/3, Σ_00 = (1+1)/3 − (2/3)² = 2/3 − 4/9 = 2/9
+        close(CovOp::diag(&gram, 0), 2.0 / 9.0, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn row_cache_respects_budget_and_reports_stats() {
+        let mut rng = Rng::seed_from(34);
+        // 1 MiB budget over 4096-entry rows → 32 rows.
+        let csr = random_csr(&mut rng, 30, 16);
+        let gram = GramCov::new(csr, 30, 1);
+        let cap = gram.cache_capacity_rows();
+        assert_eq!(cap, 1024 * 1024 / (8 * 16));
+        let mut out = vec![0.0; 16];
+        gram.row_into(3, &mut out);
+        gram.row_into(3, &mut out);
+        let (hits, misses) = gram.cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+        // cache disabled: still correct, never cached
+        let csr2 = random_csr(&mut rng, 30, 16);
+        let g0 = GramCov::new(csr2, 30, 0);
+        assert_eq!(g0.cache_capacity_rows(), 0);
+        g0.row_into(2, &mut out);
+        let (h, _) = g0.cache_stats();
+        assert_eq!(h, 0);
+    }
+
+    #[test]
+    fn masked_view_equals_submatrix() {
+        let mut rng = Rng::seed_from(35);
+        let n = 10;
+        let sigma = SymMat::random_psd(n, 2 * n, 0.1, &mut rng);
+        let idx = vec![7, 1, 4, 2];
+        let masked = MaskedCov::new(&sigma, idx.clone());
+        let sub = sigma.submatrix(&idx);
+        let k = idx.len();
+        let mut row = vec![0.0; k];
+        for a in 0..k {
+            assert_eq!(CovOp::diag(&masked, a).to_bits(), sub.get(a, a).to_bits());
+            masked.row_into(a, &mut row);
+            assert_eq!(row.as_slice(), sub.row(a), "masked row must pick identical f64s");
+        }
+        // frob_with reproduces the dense fold bitwise
+        let x = SymMat::random_psd(k, k + 2, 0.0, &mut rng);
+        assert_eq!(masked.frob_with(&x).to_bits(), sub.frob_dot(&x).to_bits());
+        // materialize roundtrip
+        let mat = masked.materialize_full();
+        assert_eq!(mat.as_slice(), sub.as_slice());
+    }
+
+    #[test]
+    fn masked_over_gram_composes() {
+        let mut rng = Rng::seed_from(36);
+        let csr = random_csr(&mut rng, 50, 9);
+        let kept: Vec<usize> = (0..9).collect();
+        let dense = covariance_from_csr(&csr, &kept);
+        let gram = GramCov::new(csr, 50, 1);
+        let idx = vec![8, 0, 5];
+        let mg = MaskedCov::new(&gram, idx.clone());
+        let sub = dense.submatrix(&idx);
+        let mut row = vec![0.0; 3];
+        for a in 0..3 {
+            mg.row_into(a, &mut row);
+            for b in 0..3 {
+                close(row[b], sub.get(a, b), 1e-10).unwrap();
+            }
+        }
+    }
+}

@@ -114,21 +114,28 @@ impl CsrMatrix {
         d
     }
 
-    /// y = Aᵀ(Ax) convenience used by tests (covariance action without
-    /// forming the covariance).
-    pub fn gram_action(&self, x: &[f64]) -> Vec<f64> {
+    /// `ax[r] = row_r · x` — the forward half of the Gram action.
+    pub fn matvec_into(&self, x: &[f64], ax: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
-        let mut ax = vec![0.0; self.rows];
-        for r in 0..self.rows {
+        assert_eq!(ax.len(), self.rows);
+        for (r, axr) in ax.iter_mut().enumerate() {
             let mut acc = 0.0;
             for (c, v) in self.row(r) {
                 acc += v * x[c];
             }
-            ax[r] = acc;
+            *axr = acc;
         }
-        let mut y = vec![0.0; self.cols];
-        for r in 0..self.rows {
-            let a = ax[r];
+    }
+
+    /// `y = Aᵀ(Ax)` into a caller buffer — the single Gram-action kernel
+    /// shared by [`CsrMatrix::gram_action`] and the implicit-Gram
+    /// covariance operator (`covop::GramCov`).
+    pub fn gram_action_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(y.len(), self.cols);
+        let mut ax = vec![0.0; self.rows];
+        self.matvec_into(x, &mut ax);
+        y.fill(0.0);
+        for (r, &a) in ax.iter().enumerate() {
             if a == 0.0 {
                 continue;
             }
@@ -136,6 +143,13 @@ impl CsrMatrix {
                 y[c] += v * a;
             }
         }
+    }
+
+    /// y = Aᵀ(Ax) convenience used by tests (covariance action without
+    /// forming the covariance).
+    pub fn gram_action(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.gram_action_into(x, &mut y);
         y
     }
 }

@@ -2,12 +2,19 @@
 //! pure-native implementation and an AOT/XLA-artifact implementation.
 //!
 //! - [`NativeEngine`] — optimized Rust (the §Perf hot path).
-//! - [`XlaEngine`] — executes the L2 JAX graphs (which call the L1 Pallas
-//!   kernels) AOT-compiled to `artifacts/*.hlo.txt`, through the PJRT
-//!   runtime. Artifacts are shape-static, so problems are zero-padded up to
-//!   the nearest compiled size (see DESIGN.md "Fixed shapes and masking" —
-//!   padded features have `Σ_ii = 0 < λ` and never enter the support;
-//!   their diagonal settles at `x ≈ β/(λ+t)`, a vanishing perturbation).
+//! - `XlaEngine` (feature `xla`) — executes the L2 JAX graphs (which call
+//!   the L1 Pallas kernels) AOT-compiled to `artifacts/*.hlo.txt`,
+//!   through the PJRT runtime. Artifacts are shape-static, so problems
+//!   are zero-padded up to the nearest compiled size (see DESIGN.md
+//!   "Fixed shapes and masking" — padded features have `Σ_ii = 0 < λ` and
+//!   never enter the support; their diagonal settles at `x ≈ β/(λ+t)`, a
+//!   vanishing perturbation).
+//!
+//! Engines consume Σ through `&dyn CovOp`: the native engine works on
+//! any operator (dense, implicit Gram, masked, deflated); the XLA engine
+//! must ship an explicit matrix to the accelerator and declares that via
+//! [`Engine::requires_dense`] — [`bca_solve`] then materializes a
+//! non-dense operator once per solve.
 //!
 //! The two engines are cross-checked for numerical agreement in
 //! `rust/tests/engine_agreement.rs` and raced in `benches/engines.rs`.
@@ -15,6 +22,7 @@
 #[cfg(feature = "xla")]
 use std::path::Path;
 
+use crate::covop::CovOp;
 use crate::data::SymMat;
 #[cfg(feature = "xla")]
 use crate::runtime::{Runtime, TensorF64};
@@ -30,19 +38,26 @@ pub trait Engine {
     /// solves each (Σ, λ) exactly like a fresh one.
     fn begin_solve(&mut self) {}
 
+    /// Whether this engine needs an explicit dense Σ (`CovOp::as_dense`).
+    /// [`bca_solve`] materializes non-dense operators once per solve for
+    /// such engines instead of failing mid-sweep.
+    fn requires_dense(&self) -> bool {
+        false
+    }
+
     /// One full Algorithm-1 sweep over all columns of `x` in place;
     /// returns the largest entry change.
     fn bca_sweep(
         &mut self,
         x: &mut SymMat,
-        sigma: &SymMat,
+        sigma: &dyn CovOp,
         lambda: f64,
         beta: f64,
         opts: &BcaOptions,
     ) -> Result<f64, String>;
 
     /// `iters` rounds of power iteration from `v0`; returns (vector, value).
-    fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String>;
+    fn power_iter(&mut self, sigma: &dyn CovOp, v0: &[f64]) -> Result<(Vec<f64>, f64), String>;
 
     /// Gram matrix `AᵀA/m` of a dense row-major `m × n` block.
     fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
@@ -74,14 +89,23 @@ pub trait Engine {
     }
 }
 
-/// Run the full BCA solve on any engine (shared outer loop).
+/// Run the full BCA solve on any engine (shared outer loop). For engines
+/// that [`Engine::requires_dense`], a non-dense operator is materialized
+/// once here (not per sweep).
 pub fn bca_solve(
     engine: &mut dyn Engine,
-    sigma: &SymMat,
+    sigma: &dyn CovOp,
     lambda: f64,
     opts: &BcaOptions,
 ) -> Result<BcaSolution, String> {
     engine.begin_solve();
+    let dense_holder;
+    let sigma: &dyn CovOp = if engine.requires_dense() && sigma.as_dense().is_none() {
+        dense_holder = sigma.materialize_full();
+        &dense_holder
+    } else {
+        sigma
+    };
     bca::solve_with(sigma, lambda, opts, |x, o| {
         let beta = o.epsilon / x.n() as f64;
         engine.bca_sweep(x, sigma, lambda, beta, o)
@@ -127,7 +151,7 @@ impl Engine for NativeEngine {
     fn bca_sweep(
         &mut self,
         x: &mut SymMat,
-        sigma: &SymMat,
+        sigma: &dyn CovOp,
         lambda: f64,
         beta: f64,
         opts: &BcaOptions,
@@ -147,7 +171,7 @@ impl Engine for NativeEngine {
         Ok(crate::cov::gram_parallel(m_rows, n, data, self.threads))
     }
 
-    fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
+    fn power_iter(&mut self, sigma: &dyn CovOp, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
         let n = sigma.n();
         assert_eq!(v0.len(), n);
         let mut v = v0.to_vec();
@@ -221,14 +245,21 @@ impl Engine for XlaEngine {
         "xla"
     }
 
+    fn requires_dense(&self) -> bool {
+        true
+    }
+
     fn bca_sweep(
         &mut self,
         x: &mut SymMat,
-        sigma: &SymMat,
+        sigma: &dyn CovOp,
         lambda: f64,
         beta: f64,
         _opts: &BcaOptions,
     ) -> Result<f64, String> {
+        let sigma = sigma
+            .as_dense()
+            .ok_or_else(|| "xla engine needs a dense covariance (see bca_solve)".to_string())?;
         let n = x.n();
         let np = Self::padded_size(n)?;
         let name = format!("bca_sweep_n{np}");
@@ -271,8 +302,16 @@ impl Engine for XlaEngine {
         Ok(max_delta)
     }
 
-    fn power_iter(&mut self, sigma: &SymMat, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
-        let n = sigma.n();
+    fn power_iter(&mut self, sigma: &dyn CovOp, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
+        let dense_holder;
+        let sigma: &SymMat = match sigma.as_dense() {
+            Some(d) => d,
+            None => {
+                dense_holder = sigma.materialize_full();
+                &dense_holder
+            }
+        };
+        let n = SymMat::n(sigma);
         let np = Self::padded_size(n)?;
         let name = format!("power_iter_n{np}");
         let sp = if np == n { sigma.clone() } else { sigma.pad_to(np) };

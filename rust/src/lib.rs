@@ -15,8 +15,9 @@
 //!   coordinate-descent hot spot as a Pallas kernel.
 //!
 //! The AOT artifacts are loaded at runtime through the PJRT C API (the
-//! [`xla`] crate) by [`runtime`], and exposed behind the [`engine::Engine`]
-//! trait next to the optimized native implementation.
+//! `xla` crate) by the `runtime` module (feature `xla`), and exposed
+//! behind the [`engine::Engine`] trait next to the optimized native
+//! implementation.
 //!
 //! ## Quick start
 //!
@@ -38,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod corpus;
 pub mod cov;
+pub mod covop;
 pub mod data;
 pub mod elim;
 pub mod engine;
@@ -55,6 +57,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::PipelineConfig;
     pub use crate::coordinator::{Pipeline, PipelineReport};
+    pub use crate::covop::{CovOp, DenseCov, GramCov, MaskedCov};
     pub use crate::data::{CscMatrix, CsrMatrix, DocwordHeader, SymMat, TripletMatrix};
     pub use crate::elim::SafeElimination;
     pub use crate::engine::{Engine, NativeEngine};

@@ -38,6 +38,8 @@ fn app() -> App {
                 .opt("workers", "2", "moment-pass worker threads")
                 .opt("threads", "", "solver worker threads (0 = all cores; empty = config value)")
                 .opt("engine", "native", "solver engine: native|xla")
+                .opt("cov-backend", "", "covariance backend: dense|gram (empty = config value)")
+                .opt("row-cache-mb", "", "gram-backend row cache MiB (empty = config value)")
                 .opt("artifacts", "artifacts", "artifact dir for --engine xla")
                 .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
                 .switch("certify", "compute a dual optimality certificate per PC")
@@ -80,6 +82,7 @@ fn app() -> App {
             .opt("sweeps", "5", "fixed BCA sweeps K")
             .opt("threads", "4", "worker threads for the λ-search scaling scenario")
             .opt("out", "BENCH_bca.json", "output JSON path")
+            .opt("covop-out", "BENCH_covop.json", "covariance-operator race output JSON path")
             .switch("quick", "smaller sizes / fewer repetitions"),
         )
 }
@@ -112,6 +115,12 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         cfg.threads = args.usize("threads")?;
     }
     cfg.engine = args.str("engine");
+    if !args.str("cov-backend").is_empty() {
+        cfg.cov_backend = args.str("cov-backend");
+    }
+    if !args.str("row-cache-mb").is_empty() {
+        cfg.row_cache_mb = args.usize("row-cache-mb")?;
+    }
     cfg.artifacts_dir = args.str("artifacts");
     if !args.str("cache-dir").is_empty() {
         cfg.cache_dir = args.str("cache-dir");
@@ -390,6 +399,95 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let out = PathBuf::from(args.str("out"));
     std::fs::write(&out, &json).map_err(|e| format!("writing {}: {e}", out.display()))?;
     println!("\nwrote {}", out.display());
+
+    // --- covariance-operator races → BENCH_covop.json ---------------------
+    use lsspca::covop::{CovOp, DenseCov, GramCov};
+
+    let mut cj = String::from("{\n  \"matvec_row_gather\": [\n");
+    let covop_sizes: &[usize] = if quick { &[256, 1024] } else { &[512, 4096] };
+    section("covop — dense vs implicit-Gram covariance operator");
+    for (idx, &nhat) in covop_sizes.iter().enumerate() {
+        let spec = lsspca::corpus::CorpusSpec::nytimes().scaled(4 * nhat, nhat);
+        let corpus = lsspca::corpus::SynthCorpus::new(spec, 20111212);
+        let csr = corpus.to_csr();
+        let t = lsspca::util::Timer::start();
+        let gram = GramCov::new(csr, (4 * nhat) as u64, 64);
+        let gram_build = t.secs();
+        let x: Vec<f64> = (0..nhat).map(|_| rng.gauss()).collect();
+        let mut y = vec![0.0; nhat];
+        let mv_gram = time_min(reps + 1, || gram.matvec(&x, &mut y));
+        // Row gathers over a spread sample: first touch (sparse merge)
+        // vs repeat (cache hit) — measured before anything else warms
+        // the cache.
+        let sample: Vec<usize> = (0..32).map(|k| (k * nhat / 32) % nhat).collect();
+        let mut buf = vec![0.0; nhat];
+        let t = lsspca::util::Timer::start();
+        for &j in &sample {
+            gram.row_into(j, &mut buf);
+        }
+        let rg_gram_cold = t.secs();
+        let rg_gram_warm = time_min(reps + 1, || {
+            for &j in &sample {
+                gram.row_into(j, &mut buf);
+            }
+        });
+        // Dense operator assembled through the operator interface: one
+        // n̂ × n̂ buffer (the streaming CovAccum path holds a wave of
+        // partial accumulators, which at n̂ = 4096 would be GBs).
+        let t = lsspca::util::Timer::start();
+        let dense = DenseCov::new(gram.materialize_full());
+        let dense_build = t.secs();
+        let mv_dense = time_min(reps + 1, || dense.matvec(&x, &mut y));
+        let rg_dense = time_min(reps + 1, || {
+            for &j in &sample {
+                dense.row_into(j, &mut buf);
+            }
+        });
+        metric(&format!("covop.n{nhat}.dense_build_secs"), format!("{dense_build:.4}"));
+        metric(&format!("covop.n{nhat}.gram_build_secs"), format!("{gram_build:.4}"));
+        metric(&format!("covop.n{nhat}.matvec_dense_secs"), format!("{mv_dense:.6}"));
+        metric(&format!("covop.n{nhat}.matvec_gram_secs"), format!("{mv_gram:.6}"));
+        metric(&format!("covop.n{nhat}.rowgather32_dense_secs"), format!("{rg_dense:.6}"));
+        metric(&format!("covop.n{nhat}.rowgather32_gram_cold_secs"), format!("{rg_gram_cold:.6}"));
+        metric(&format!("covop.n{nhat}.rowgather32_gram_warm_secs"), format!("{rg_gram_warm:.6}"));
+        cj.push_str(&format!(
+            "    {{\"nhat\": {nhat}, \"dense_build_secs\": {dense_build:.6}, \
+             \"gram_build_secs\": {gram_build:.6}, \"matvec_dense_secs\": {mv_dense:.6}, \
+             \"matvec_gram_secs\": {mv_gram:.6}, \"rowgather32_dense_secs\": {rg_dense:.6}, \
+             \"rowgather32_gram_cold_secs\": {rg_gram_cold:.6}, \
+             \"rowgather32_gram_warm_secs\": {rg_gram_warm:.6}}}{}\n",
+            if idx + 1 == covop_sizes.len() { "" } else { "," }
+        ));
+    }
+    cj.push_str("  ],\n");
+
+    // λ-search with and without per-λ nested-elimination masks.
+    section("covop — λ-search with vs without per-λ elimination masks");
+    let mn = if quick { 128 } else { 256 };
+    let msigma = lsspca::corpus::spiked_covariance(mn, 2 * mn, 5, 6.0, &mut rng);
+    let mk_mask_opts = |masks: bool| LambdaSearchOptions {
+        target_card: 5,
+        slack: 1,
+        max_evals: 8,
+        per_lambda_elim: masks,
+        bca: BcaOptions { max_sweeps: sweeps, track_history: false, ..Default::default() },
+        ..Default::default()
+    };
+    let masked_secs = time_min(reps, || search(&msigma, &mk_mask_opts(true)).lambda);
+    let unmasked_secs = time_min(reps, || search(&msigma, &mk_mask_opts(false)).lambda);
+    let mask_speedup = unmasked_secs / masked_secs.max(1e-12);
+    metric("covop.lambda_search.masked_secs", format!("{masked_secs:.4}"));
+    metric("covop.lambda_search.unmasked_secs", format!("{unmasked_secs:.4}"));
+    metric("covop.lambda_search.mask_speedup", format!("{mask_speedup:.2}"));
+    cj.push_str(&format!(
+        "  \"lambda_search_masks\": {{\"n\": {mn}, \"masked_secs\": {masked_secs:.6}, \
+         \"unmasked_secs\": {unmasked_secs:.6}, \"speedup\": {mask_speedup:.3}}}\n}}\n"
+    ));
+
+    let covop_out = PathBuf::from(args.str("covop-out"));
+    std::fs::write(&covop_out, &cj)
+        .map_err(|e| format!("writing {}: {e}", covop_out.display()))?;
+    println!("wrote {}", covop_out.display());
     Ok(())
 }
 

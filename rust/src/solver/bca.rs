@@ -23,7 +23,15 @@
 //! Hot-path notes (§Perf): the minor `Y` is never materialized — the QP
 //! runs masked on full rows with `u[j] ≡ 0`, and its incrementally
 //! maintained `w = Yu` *is* the write-back vector, so step 3 is free.
+//!
+//! The solver reads Σ only through the [`CovOp`] operator interface
+//! (diagonal, row gather, Frobenius product) — the iterate `X` stays a
+//! dense [`SymMat`], but Σ may be dense, an implicit Gram operator, a
+//! masked elimination view, or a deflated composition. For a dense Σ the
+//! generic code monomorphizes to the pre-operator implementation and the
+//! results are bitwise unchanged (pinned by `perf_equivalence`).
 
+use crate::covop::CovOp;
 use crate::data::SymMat;
 use crate::solver::qp::{self, QpOptions};
 use crate::solver::tau::{self, TauOptions};
@@ -172,8 +180,14 @@ impl SolverWorkspace {
 
 /// Fill the column-update box of step 4: `center = Σ_j` with the
 /// diagonal entry zeroed, uniform radius λ, coordinate `j` pinned.
-fn fill_box(sigma: &SymMat, lambda: f64, j: usize, center: &mut [f64], radius: &mut [f64]) {
-    center.copy_from_slice(sigma.row(j));
+fn fill_box<C: CovOp + ?Sized>(
+    sigma: &C,
+    lambda: f64,
+    j: usize,
+    center: &mut [f64],
+    radius: &mut [f64],
+) {
+    sigma.row_into(j, center);
     center[j] = 0.0;
     for r in radius.iter_mut() {
         *r = lambda;
@@ -185,9 +199,9 @@ fn fill_box(sigma: &SymMat, lambda: f64, j: usize, center: &mut [f64], radius: &
 /// τ problem and write column `j` back from `w = Yu`. Returns the largest
 /// entry change.
 #[allow(clippy::too_many_arguments)]
-fn write_back_column(
+fn write_back_column<C: CovOp + ?Sized>(
     x: &mut SymMat,
-    sigma: &SymMat,
+    sigma: &C,
     lambda: f64,
     beta: f64,
     j: usize,
@@ -198,7 +212,7 @@ fn write_back_column(
 ) -> f64 {
     let n = x.n();
     // 1-D τ problem with c = Σ_jj − λ − t.
-    let c = sigma.get(j, j) - lambda - t;
+    let c = sigma.diag(j) - lambda - t;
     let tau_star = tau::solve(r_squared, beta, c, opts.tau);
     // Write-back: y = (1/τ)·Yu — w already holds Yu for i ≠ j.
     let inv_tau = 1.0 / tau_star;
@@ -223,9 +237,9 @@ fn write_back_column(
 /// Warm-started, active-set variant of [`update_column`] (identical
 /// fixed point; the QP is convex, so start and iteration order do not
 /// change the optimum — pinned by the workspace-equivalence tests).
-pub fn update_column_ws(
+pub fn update_column_ws<C: CovOp + ?Sized>(
     x: &mut SymMat,
-    sigma: &SymMat,
+    sigma: &C,
     lambda: f64,
     beta: f64,
     j: usize,
@@ -238,7 +252,7 @@ pub fn update_column_ws(
     fill_box(sigma, lambda, j, &mut ws.center, &mut ws.radius);
     let warm = if ws.visited[j] { Some(&ws.prev[j * n..(j + 1) * n]) } else { None };
     let sol = qp::solve_masked_warm(
-        x,
+        &*x,
         &ws.center,
         &ws.radius,
         Some(j),
@@ -254,9 +268,9 @@ pub fn update_column_ws(
 }
 
 /// One full warm-started sweep over all columns.
-pub fn sweep_ws(
+pub fn sweep_ws<C: CovOp + ?Sized>(
     x: &mut SymMat,
-    sigma: &SymMat,
+    sigma: &C,
     lambda: f64,
     beta: f64,
     opts: &BcaOptions,
@@ -274,16 +288,21 @@ pub fn sweep_ws(
 }
 
 /// The problem-(1) objective of the normalized iterate.
-pub fn primal_objective(x: &SymMat, sigma: &SymMat, lambda: f64) -> f64 {
+pub fn primal_objective<C: CovOp + ?Sized>(x: &SymMat, sigma: &C, lambda: f64) -> f64 {
     let tr = x.trace();
     if tr <= 0.0 {
         return f64::NEG_INFINITY;
     }
-    (sigma.frob_dot(x) - lambda * x.l1_norm()) / tr
+    (sigma.frob_with(x) - lambda * x.l1_norm()) / tr
 }
 
 /// The barrier objective (6) (O(n³) — used by tests/monitoring only).
-pub fn barrier_objective(x: &SymMat, sigma: &SymMat, lambda: f64, beta: f64) -> Option<f64> {
+pub fn barrier_objective<C: CovOp + ?Sized>(
+    x: &SymMat,
+    sigma: &C,
+    lambda: f64,
+    beta: f64,
+) -> Option<f64> {
     let l = crate::linalg::chol::cholesky(x, 0.0)?;
     let n = x.n();
     let mut logdet = 0.0;
@@ -292,14 +311,14 @@ pub fn barrier_objective(x: &SymMat, sigma: &SymMat, lambda: f64, beta: f64) -> 
     }
     logdet *= 2.0;
     let tr = x.trace();
-    Some(sigma.frob_dot(x) - lambda * x.l1_norm() - 0.5 * tr * tr + beta * logdet)
+    Some(sigma.frob_with(x) - lambda * x.l1_norm() - 0.5 * tr * tr + beta * logdet)
 }
 
 /// Update one row/column `j` of `X` in place (steps 4–6 of Algorithm 1).
 /// Returns the largest entry change.
-pub fn update_column(
+pub fn update_column<C: CovOp + ?Sized>(
     x: &mut SymMat,
-    sigma: &SymMat,
+    sigma: &C,
     lambda: f64,
     beta: f64,
     j: usize,
@@ -309,7 +328,7 @@ pub fn update_column(
     let t = x.trace() - x.get(j, j); // Tr Y
     fill_box(sigma, lambda, j, &mut buf.center, &mut buf.radius);
     let sol = qp::solve_masked(
-        x,
+        &*x,
         &buf.center,
         &buf.radius,
         Some(j),
@@ -321,9 +340,9 @@ pub fn update_column(
 }
 
 /// One full sweep over all columns. Returns the largest entry change.
-pub fn sweep(
+pub fn sweep<C: CovOp + ?Sized>(
     x: &mut SymMat,
-    sigma: &SymMat,
+    sigma: &C,
     lambda: f64,
     beta: f64,
     opts: &BcaOptions,
@@ -341,8 +360,9 @@ pub fn sweep(
 }
 
 /// Solve DSPCA by block coordinate ascent starting from `X⁰ = I`, on the
-/// warm-started/active-set hot path.
-pub fn solve(sigma: &SymMat, lambda: f64, opts: &BcaOptions) -> BcaSolution {
+/// warm-started/active-set hot path. Works on any covariance operator
+/// (dense, implicit Gram, masked, deflated).
+pub fn solve<C: CovOp + ?Sized>(sigma: &C, lambda: f64, opts: &BcaOptions) -> BcaSolution {
     let mut ws = SolverWorkspace::new(sigma.n());
     solve_with(sigma, lambda, opts, |x, o| {
         let beta = o.epsilon / x.n() as f64;
@@ -355,7 +375,11 @@ pub fn solve(sigma: &SymMat, lambda: f64, opts: &BcaOptions) -> BcaSolution {
 /// center, every sweep touches every coordinate). Used by the equivalence
 /// tests and as the baseline the `bench` subcommand measures speedups
 /// against.
-pub fn solve_reference(sigma: &SymMat, lambda: f64, opts: &BcaOptions) -> BcaSolution {
+pub fn solve_reference<C: CovOp + ?Sized>(
+    sigma: &C,
+    lambda: f64,
+    opts: &BcaOptions,
+) -> BcaSolution {
     let mut buf = SweepBuffers::new(sigma.n());
     solve_with(sigma, lambda, opts, |x, o| {
         let beta = o.epsilon / x.n() as f64;
@@ -367,8 +391,8 @@ pub fn solve_reference(sigma: &SymMat, lambda: f64, opts: &BcaOptions) -> BcaSol
 /// Generic driver: run Algorithm 1's outer loop with a pluggable sweep
 /// implementation (native here; the AOT/XLA engine plugs in through this,
 /// so both paths share convergence logic and history tracking).
-pub fn solve_with<F>(
-    sigma: &SymMat,
+pub fn solve_with<C: CovOp + ?Sized, F>(
+    sigma: &C,
     lambda: f64,
     opts: &BcaOptions,
     mut sweep_fn: F,
@@ -378,7 +402,7 @@ where
 {
     let n = sigma.n();
     assert!(n > 0, "empty covariance");
-    let min_diag = (0..n).map(|i| sigma.get(i, i)).fold(f64::INFINITY, f64::min);
+    let min_diag = (0..n).map(|i| sigma.diag(i)).fold(f64::INFINITY, f64::min);
     if lambda >= min_diag {
         // Thm 2.1: such features should have been eliminated; the
         // derivation of (5) assumed λ < min Σ_ii. Proceed (the barrier

@@ -1,7 +1,19 @@
 //! Deflation: remove an extracted component before computing the next one
 //! (the paper extracts "the top 5 sparse principal components" — its tables
 //! are produced by repeated solve-then-deflate).
+//!
+//! Two forms live here:
+//!
+//! - the classic destructive dense updates ([`projection`], [`hotelling`])
+//!   that edit a [`SymMat`] in place — kept for dense-only callers and as
+//!   the reference the operator form is tested against;
+//! - [`DeflatedCov`], a *composable rank-K correction* over any
+//!   [`CovOp`]: each extracted component appends one or two symmetric
+//!   rank-one terms, so K components cost O(K·n̂) memory on top of the
+//!   base operator and the base (which may be an implicit Gram operator)
+//!   is never modified.
 
+use crate::covop::CovOp;
 use crate::data::SymMat;
 use crate::linalg::vec::dot;
 
@@ -104,9 +116,133 @@ impl Scheme {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Operator-form deflation
+// ---------------------------------------------------------------------------
+
+/// A base covariance operator plus a symmetric low-rank correction:
+///
+/// ```text
+/// Σ' = Σ_base + Σ_t (x_t y_tᵀ + y_t x_tᵀ)
+/// ```
+///
+/// [`DeflatedCov::push`] appends the correction for one extracted unit
+/// direction `v` under a [`Scheme`]:
+///
+/// - **Projection** `(I − vvᵀ)Σ(I − vvᵀ) = Σ − vwᵀ − wvᵀ + αvvᵀ` with
+///   `w = Σv`, `α = vᵀΣv` → terms `(−v, w)` and `(αv/2, v)`;
+/// - **Hotelling** `Σ − θvvᵀ` with `θ = vᵀΣv` → term `(−θv/2, v)`.
+///
+/// `w` and `α` are measured against the *current* deflated operator, so
+/// pushing components one after another reproduces the sequential
+/// destructive updates (up to FP summation order — pinned to ~1e-10 by
+/// the deflate tests). The base is only read, never written: dense and
+/// implicit-Gram backends share this path, and K components cost
+/// O(K·n̂) extra memory.
+pub struct DeflatedCov<'a, C: CovOp + ?Sized> {
+    base: &'a C,
+    terms: Vec<(Vec<f64>, Vec<f64>)>,
+}
+
+impl<'a, C: CovOp + ?Sized> DeflatedCov<'a, C> {
+    /// Start with no correction (behaves exactly like `base`).
+    pub fn new(base: &'a C) -> DeflatedCov<'a, C> {
+        DeflatedCov { base, terms: Vec::new() }
+    }
+
+    /// Number of rank-one correction terms accumulated so far.
+    pub fn rank(&self) -> usize {
+        self.terms.len()
+    }
+
+    /// Deflate one extracted unit direction `v` under `scheme`.
+    pub fn push(&mut self, scheme: Scheme, v: &[f64]) {
+        let n = self.n();
+        assert_eq!(v.len(), n);
+        let mut w = vec![0.0; n];
+        self.matvec(v, &mut w);
+        let alpha = dot(v, &w);
+        match scheme {
+            Scheme::Projection => {
+                let neg_v: Vec<f64> = v.iter().map(|&x| -x).collect();
+                self.terms.push((neg_v, w));
+                let half_av: Vec<f64> = v.iter().map(|&x| 0.5 * alpha * x).collect();
+                self.terms.push((half_av, v.to_vec()));
+            }
+            Scheme::Hotelling => {
+                let ht: Vec<f64> = v.iter().map(|&x| -0.5 * alpha * x).collect();
+                self.terms.push((ht, v.to_vec()));
+            }
+        }
+    }
+}
+
+impl<C: CovOp + ?Sized> CovOp for DeflatedCov<'_, C> {
+    fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    fn diag(&self, j: usize) -> f64 {
+        let mut d = self.base.diag(j);
+        for (x, y) in &self.terms {
+            d += 2.0 * x[j] * y[j];
+        }
+        d
+    }
+
+    fn row_into(&self, j: usize, out: &mut [f64]) {
+        self.base.row_into(j, out);
+        for (x, y) in &self.terms {
+            crate::linalg::vec::axpy(x[j], y, out);
+            crate::linalg::vec::axpy(y[j], x, out);
+        }
+    }
+
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        self.base.row_gather(j, idx, out);
+        for (x, y) in &self.terms {
+            let (xj, yj) = (x[j], y[j]);
+            for (o, &i) in out.iter_mut().zip(idx) {
+                *o += xj * y[i] + yj * x[i];
+            }
+        }
+    }
+
+    fn matvec(&self, v: &[f64], out: &mut [f64]) {
+        self.base.matvec(v, out);
+        for (x, y) in &self.terms {
+            let yv = dot(y, v);
+            let xv = dot(x, v);
+            crate::linalg::vec::axpy(yv, x, out);
+            crate::linalg::vec::axpy(xv, y, out);
+        }
+    }
+
+    fn quad_form(&self, v: &[f64]) -> f64 {
+        let mut q = self.base.quad_form(v);
+        for (x, y) in &self.terms {
+            q += 2.0 * dot(x, v) * dot(y, v);
+        }
+        q
+    }
+
+    fn frob_with(&self, m: &SymMat) -> f64 {
+        // ⟨xyᵀ + yxᵀ, M⟩ = 2 xᵀMy for symmetric M.
+        let mut acc = self.base.frob_with(m);
+        let n = self.n();
+        let mut my = vec![0.0; n];
+        for (x, y) in &self.terms {
+            SymMat::matvec(m, y, &mut my);
+            acc += 2.0 * dot(x, &my);
+        }
+        acc
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::covop::CovOp;
     use crate::linalg::chol::is_psd;
     use crate::linalg::vec::normalize;
     use crate::util::check::{close, ensure, property};
@@ -148,5 +284,65 @@ mod tests {
         assert_eq!(Scheme::parse("projection"), Some(Scheme::Projection));
         assert_eq!(Scheme::parse("hotelling"), Some(Scheme::Hotelling));
         assert_eq!(Scheme::parse("x"), None);
+    }
+
+    #[test]
+    fn prop_deflated_cov_matches_destructive_updates() {
+        property("DeflatedCov == sequential destructive deflation", 10, |rng| {
+            let n = rng.range(3, 12);
+            let base = SymMat::random_psd(n, n + 5, 0.1, rng);
+            for scheme in [Scheme::Projection, Scheme::Hotelling] {
+                // three sequential components
+                let vs: Vec<Vec<f64>> = (0..3)
+                    .map(|_| {
+                        let mut v = rng.gauss_vec(n);
+                        normalize(&mut v);
+                        v
+                    })
+                    .collect();
+                let mut dense = base.clone();
+                let mut op = DeflatedCov::new(&base);
+                for v in &vs {
+                    scheme.apply(&mut dense, v);
+                    op.push(scheme, v);
+                }
+                let mut row = vec![0.0; n];
+                for j in 0..n {
+                    close(op.diag(j), dense.get(j, j), 1e-9)?;
+                    op.row_into(j, &mut row);
+                    for k in 0..n {
+                        close(row[k], dense.get(j, k), 1e-9)?;
+                    }
+                }
+                let x = rng.gauss_vec(n);
+                let (mut ya, mut yb) = (vec![0.0; n], vec![0.0; n]);
+                CovOp::matvec(&op, &x, &mut ya);
+                SymMat::matvec(&dense, &x, &mut yb);
+                for k in 0..n {
+                    close(ya[k], yb[k], 1e-8)?;
+                }
+                close(CovOp::quad_form(&op, &x), dense.quad_form(&x), 1e-8)?;
+                let m = SymMat::random_psd(n, n + 2, 0.0, rng);
+                close(op.frob_with(&m), dense.frob_dot(&m), 1e-7)?;
+                ensure(op.rank() == if scheme == Scheme::Projection { 6 } else { 3 }, "rank")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deflated_cov_projection_annihilates_direction() {
+        let mut rng = crate::util::rng::Rng::seed_from(122);
+        let base = SymMat::random_psd(8, 20, 0.1, &mut rng);
+        let mut v = rng.gauss_vec(8);
+        normalize(&mut v);
+        let mut op = DeflatedCov::new(&base);
+        op.push(Scheme::Projection, &v);
+        assert!(CovOp::quad_form(&op, &v).abs() < 1e-8);
+        let mut w = vec![0.0; 8];
+        CovOp::matvec(&op, &v, &mut w);
+        for x in &w {
+            assert!(x.abs() < 1e-8, "Σ'v must vanish, got {x}");
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! per-λ safe elimination — the library API behind `examples/
 //! lambda_explorer.rs` and the cardinality/variance trade-off analyses.
 
-use crate::data::SymMat;
+use crate::covop::{CovOp, MaskedCov};
 use crate::elim::SafeElimination;
 use crate::solver::bca::{self, BcaOptions};
 use crate::solver::extract::{leading_sparse_pc, SparsePc};
@@ -51,10 +51,10 @@ impl Default for PathOptions {
 /// applies safe elimination independently so the big-λ points are cheap).
 /// Points are solved on `opts.threads` workers; the λ grid and the output
 /// order are fixed up front, so results do not depend on the thread count.
-pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
+pub fn compute<C: CovOp + ?Sized>(sigma: &C, opts: &PathOptions) -> Vec<PathPoint> {
     let n = sigma.n();
     assert!(n > 0 && opts.points >= 2);
-    let diags: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+    let diags: Vec<f64> = (0..n).map(|i| sigma.diag(i)).collect();
     let max_diag = diags.iter().cloned().fold(0.0f64, f64::max);
     let lo = (max_diag * opts.min_frac).max(1e-300);
     let hi = max_diag * 0.999;
@@ -79,7 +79,10 @@ pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
                 solve_seconds: t.secs(),
             }
         } else {
-            let sub = sigma.submatrix(&elim.kept);
+            // Per-λ masked view: the grid point's Thm-2.1 survivors, no
+            // materialized submatrix (the big-λ end stays cheap even on
+            // an implicit-Gram operator).
+            let sub = MaskedCov::new(sigma, elim.kept.clone());
             let sol = bca::solve(&sub, lambda, &opts.bca);
             let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
             pc.vector = elim.lift(&pc.vector);
@@ -101,6 +104,7 @@ pub fn compute(sigma: &SymMat, opts: &PathOptions) -> Vec<PathPoint> {
 mod tests {
     use super::*;
     use crate::corpus::models::spiked_covariance_with_u;
+    use crate::data::SymMat;
     use crate::util::check::{ensure, property};
     use crate::util::rng::Rng;
 

@@ -20,8 +20,14 @@
 //! - generalized per-coordinate radii `r[i]` (the masked full-size
 //!   formulation the XLA engine uses pins coordinate j with `r[j] = 0`);
 //! - early exit when a full sweep moves no coordinate by more than `tol`.
+//!
+//! The solvers are generic over [`DenseRows`] — the QP's matrix is the
+//! solver *iterate* `X` (not Σ), and its inner loop needs contiguous row
+//! access once per coordinate update. For [`crate::data::SymMat`] the
+//! generic code monomorphizes to exactly the pre-operator-layer
+//! implementation, so results are bitwise unchanged.
 
-use crate::data::SymMat;
+use crate::covop::DenseRows;
 use crate::linalg::vec::dot;
 
 /// Options for the coordinate-descent QP solver.
@@ -88,13 +94,13 @@ pub fn coordinate_update(y1: f64, g: f64, s1: f64, r: f64) -> f64 {
 
 /// Solve (11) over the *masked* full-size matrix: coordinates where
 /// `radius[i] == 0` are pinned to `center[i]`; `skip` (if any) marks a
-/// coordinate treated as excluded (u[skip] forced to 0 — the "row j
+/// coordinate treated as excluded (`u[skip]` forced to 0 — the "row j
 /// removed" of Algorithm 1 without copying the submatrix).
 ///
 /// `y.row(i)` must be the full row; entries at `skip` are ignored because
 /// `u[skip] = 0` never contributes to `w`.
-pub fn solve_masked(
-    y: &SymMat,
+pub fn solve_masked<Y: DenseRows + ?Sized>(
+    y: &Y,
     center: &[f64],
     radius: &[f64],
     skip: Option<usize>,
@@ -173,8 +179,8 @@ pub fn solve_masked(
 /// to avoid reallocation). On return `u` holds the solution and `w` holds
 /// the exactly-consistent `Y·u` (the BCA write-back vector).
 #[allow(clippy::too_many_arguments)]
-pub fn solve_masked_warm(
-    y: &SymMat,
+pub fn solve_masked_warm<Y: DenseRows + ?Sized>(
+    y: &Y,
     center: &[f64],
     radius: &[f64],
     skip: Option<usize>,
@@ -292,7 +298,7 @@ pub fn solve_masked_warm(
 /// Convenience wrapper: solve (11) with uniform radius λ over an explicit
 /// `Y` and `s` (allocates; the BCA hot loop uses [`solve_masked`] with
 /// reused buffers instead).
-pub fn solve(y: &SymMat, s: &[f64], lambda: f64, opts: QpOptions) -> QpSolution {
+pub fn solve<Y: DenseRows + ?Sized>(y: &Y, s: &[f64], lambda: f64, opts: QpOptions) -> QpSolution {
     let n = y.n();
     let radius = vec![lambda; n];
     let mut u = Vec::with_capacity(n);
@@ -303,7 +309,7 @@ pub fn solve(y: &SymMat, s: &[f64], lambda: f64, opts: QpOptions) -> QpSolution 
 /// KKT residual of a candidate solution (for tests): for each coordinate,
 /// the gradient `2(Yu)_i` must vanish if `uᵢ` is interior, be ≥ 0 at the
 /// lower edge, ≤ 0 at the upper edge. Returns the worst violation.
-pub fn kkt_residual(y: &SymMat, s: &[f64], lambda: f64, u: &[f64]) -> f64 {
+pub fn kkt_residual<Y: DenseRows + ?Sized>(y: &Y, s: &[f64], lambda: f64, u: &[f64]) -> f64 {
     let n = y.n();
     let mut w = vec![0.0; n];
     y.matvec(u, &mut w);
@@ -329,6 +335,7 @@ pub fn kkt_residual(y: &SymMat, s: &[f64], lambda: f64, u: &[f64]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::SymMat;
     use crate::util::check::{close, ensure, property};
     use crate::util::rng::Rng;
 

@@ -4,8 +4,11 @@
 //!
 //! - [`GzDecoder`] is a full streaming *inflate*: stored, fixed-Huffman and
 //!   dynamic-Huffman blocks, 32 KiB back-reference window, CRC32 + ISIZE
-//!   trailer verification. It reads anything the UCI distribution (or any
-//!   standard gzip) produces, in bounded memory.
+//!   trailer verification, and *multi-member* (concatenated) streams —
+//!   real `docword.*.txt.gz` dumps are sometimes produced by appending
+//!   gzip members, and RFC 1952 §2.2 requires a decompressor to handle
+//!   that as one logical stream. It reads anything the UCI distribution
+//!   (or any standard gzip) produces, in bounded memory.
 //! - [`GzEncoder`] emits valid gzip using *stored* (uncompressed) DEFLATE
 //!   blocks. The synthetic-corpus writer is the only producer in this
 //!   repository and its output is consumed once by our own reader, so
@@ -49,6 +52,11 @@ impl Default for Crc32 {
 impl Crc32 {
     pub fn new() -> Crc32 {
         Crc32::default()
+    }
+
+    /// Restart the checksum (keeps the table): one CRC per gzip member.
+    pub fn reset(&mut self) {
+        self.state = !0;
     }
 
     pub fn update(&mut self, data: &[u8]) {
@@ -244,9 +252,16 @@ enum DecodeState {
     Done,
 }
 
-/// Streaming gzip reader (single member, like `flate2::read::GzDecoder`).
+/// Streaming gzip reader. Handles *concatenated* members transparently
+/// (like `flate2::read::MultiGzDecoder`): after one member's trailer
+/// verifies, a following gzip magic starts the next member; EOF or any
+/// non-magic trailing byte ends the stream cleanly (`gzip -d` likewise
+/// ignores trailing garbage such as NUL padding).
 pub struct GzDecoder<R: Read> {
     inner: R,
+    /// Lookahead bytes (at most the two magic bytes) pushed back while
+    /// probing for a following member at a member boundary.
+    peeked: Vec<u8>,
     bit_buf: u32,
     bit_count: u32,
     state: DecodeState,
@@ -265,6 +280,7 @@ impl<R: Read> GzDecoder<R> {
     pub fn new(inner: R) -> GzDecoder<R> {
         GzDecoder {
             inner,
+            peeked: Vec::new(),
             bit_buf: 0,
             bit_count: 0,
             state: DecodeState::Header,
@@ -278,10 +294,26 @@ impl<R: Read> GzDecoder<R> {
         }
     }
 
-    fn read_byte(&mut self) -> io::Result<u8> {
+    /// Next byte, or `None` at clean EOF.
+    fn try_read_byte(&mut self) -> io::Result<Option<u8>> {
+        if !self.peeked.is_empty() {
+            return Ok(Some(self.peeked.remove(0)));
+        }
         let mut b = [0u8; 1];
-        self.inner.read_exact(&mut b)?;
-        Ok(b[0])
+        loop {
+            match self.inner.read(&mut b) {
+                Ok(0) => return Ok(None),
+                Ok(_) => return Ok(Some(b[0])),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn read_byte(&mut self) -> io::Result<u8> {
+        self.try_read_byte()?.ok_or_else(|| {
+            io::Error::new(io::ErrorKind::UnexpectedEof, "gzip: truncated stream")
+        })
     }
 
     fn bits(&mut self, n: u32) -> io::Result<u32> {
@@ -339,15 +371,20 @@ impl<R: Read> GzDecoder<R> {
     }
 
     fn parse_header(&mut self) -> io::Result<()> {
-        let mut hdr = [0u8; 10];
-        self.inner.read_exact(&mut hdr)?;
-        if hdr[0] != 0x1F || hdr[1] != 0x8B {
+        // Magic first (via read_byte so the member-boundary lookahead is
+        // honored, and so trailing garbage fails as bad magic rather than
+        // a truncation error), then the remaining 8 header bytes.
+        if self.read_byte()? != 0x1F || self.read_byte()? != 0x8B {
             return Err(bad("not a gzip stream (bad magic)"));
         }
-        if hdr[2] != 8 {
+        let mut hdr = [0u8; 8];
+        for b in hdr.iter_mut() {
+            *b = self.read_byte()?;
+        }
+        if hdr[0] != 8 {
             return Err(bad("unsupported compression method"));
         }
-        let flg = hdr[3];
+        let flg = hdr[1];
         if flg & 0x04 != 0 {
             // FEXTRA
             let lo = self.read_byte()? as usize;
@@ -527,6 +564,42 @@ impl<R: Read> GzDecoder<R> {
         }
         Ok(final_block)
     }
+
+    /// After a member's trailer: probe for a following concatenated
+    /// member. Returns `true` (and resets per-member state) only when
+    /// BOTH gzip magic bytes follow; EOF or any other trailing bytes end
+    /// the stream cleanly — `gzip -d` likewise ignores trailing garbage
+    /// (NUL padding from archival tools is common, and it may even start
+    /// with a lone 0x1F), and the pre-multi-member reader never looked
+    /// past the first trailer. A member that starts with the full magic
+    /// but is malformed past it is reported by `parse_header`/decoding.
+    fn begin_next_member(&mut self) -> io::Result<bool> {
+        debug_assert_eq!(self.bit_count, 0, "trailer read must leave byte alignment");
+        let Some(b1) = self.try_read_byte()? else {
+            return Ok(false);
+        };
+        if b1 != 0x1F {
+            return Ok(false);
+        }
+        let Some(b2) = self.try_read_byte()? else {
+            return Ok(false);
+        };
+        if b2 != 0x8B {
+            return Ok(false);
+        }
+        // A real member follows: push the magic back for parse_header.
+        self.peeked = vec![b1, b2];
+        // CRC32/ISIZE are per member; back-references never cross a
+        // member boundary (each member is an independent DEFLATE
+        // stream), so the window resets too.
+        self.crc.reset();
+        self.total = 0;
+        self.wpos = 0;
+        self.wfull = false;
+        self.bit_buf = 0;
+        self.bit_count = 0;
+        Ok(true)
+    }
 }
 
 impl<R: Read> Read for GzDecoder<R> {
@@ -550,7 +623,13 @@ impl<R: Read> Read for GzDecoder<R> {
                 }
                 DecodeState::Block => {
                     if self.decode_block()? {
-                        self.state = DecodeState::Done;
+                        // Member finished (trailer verified). Concatenated
+                        // members continue the logical stream.
+                        self.state = if self.begin_next_member()? {
+                            DecodeState::Header
+                        } else {
+                            DecodeState::Done
+                        };
                     }
                 }
             }
@@ -655,6 +734,82 @@ mod tests {
             enc.write_all(b"finalized on drop").unwrap();
         } // drop writes the trailer
         assert_eq!(decode_all(&sink), b"finalized on drop");
+    }
+
+    #[test]
+    fn multi_member_concatenation_decodes_as_one_stream() {
+        // RFC 1952 §2.2: concatenated gzip members decompress to the
+        // concatenation of their contents — the shape real appended
+        // docword dumps take. Mix encoder output with the fixed- and
+        // dynamic-Huffman fixtures to cover every block type across a
+        // member boundary.
+        let mut enc = GzEncoder::new(Vec::new());
+        enc.write_all(b"first member; ").unwrap();
+        let first = enc.finish().unwrap();
+
+        let mut raw = first.clone();
+        raw.extend_from_slice(GZ_SMALL);
+        let mut want = b"first member; ".to_vec();
+        want.extend_from_slice(b"hello hello hello gzip");
+        assert_eq!(decode_all(&raw), want);
+
+        // three members, dynamic-Huffman in the middle
+        let mut raw3 = first.clone();
+        raw3.extend_from_slice(GZ_DYNAMIC);
+        raw3.extend_from_slice(GZ_SMALL);
+        let mut want3 = b"first member; ".to_vec();
+        want3.extend(b"the quick brown fox jumps over the lazy dog 0123456789\n".repeat(40));
+        want3.extend_from_slice(b"hello hello hello gzip");
+        assert_eq!(decode_all(&raw3), want3);
+    }
+
+    #[test]
+    fn multi_member_empty_members_are_fine() {
+        let empty = GzEncoder::new(Vec::new()).finish().unwrap();
+        let mut raw = empty.clone();
+        raw.extend_from_slice(&empty);
+        raw.extend_from_slice(GZ_SMALL);
+        assert_eq!(decode_all(&raw), b"hello hello hello gzip");
+    }
+
+    #[test]
+    fn multi_member_crc_checked_per_member() {
+        // Corrupt the SECOND member's CRC: the first member must decode,
+        // the stream as a whole must error.
+        let mut enc = GzEncoder::new(Vec::new());
+        enc.write_all(b"ok part").unwrap();
+        let mut raw = enc.finish().unwrap();
+        let mut second = GZ_SMALL.to_vec();
+        let n = second.len();
+        second[n - 6] ^= 0xFF;
+        raw.extend_from_slice(&second);
+        let mut d = GzDecoder::new(&raw[..]);
+        let mut out = Vec::new();
+        assert!(d.read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn trailing_garbage_is_ignored_like_gzip_cli() {
+        // `gzip -d` ignores trailing non-member bytes (NUL padding from
+        // tape/archival tools); so do we — the decoded data is complete
+        // and the stream ends cleanly. Includes garbage that starts with
+        // a lone magic byte, and a bare 0x1F at EOF.
+        for garbage in [&b"NOT GZIP"[..], &[0u8; 512][..], &[0x1F, 0x00, 0x08][..], &[0x1F][..]] {
+            let mut raw = GZ_SMALL.to_vec();
+            raw.extend_from_slice(garbage);
+            assert_eq!(decode_all(&raw), b"hello hello hello gzip");
+        }
+    }
+
+    #[test]
+    fn truncated_second_member_is_an_error() {
+        // A trailing byte that DOES start the gzip magic is a member;
+        // malformation past that point must surface, not be swallowed.
+        let mut raw = GZ_SMALL.to_vec();
+        raw.extend_from_slice(&[0x1F, 0x8B, 0x08]); // magic, then truncation
+        let mut d = GzDecoder::new(&raw[..]);
+        let mut out = Vec::new();
+        assert!(d.read_to_end(&mut out).is_err());
     }
 
     #[test]

@@ -7,10 +7,18 @@
 //! (b) the parallel kernels (λ-search probes, path grids, Gram /
 //!     covariance shards, deflation row blocks) produce results identical
 //!     at `threads = 1` and `threads = 4` — the work decomposition is
-//!     fixed by the inputs, never by the thread count.
+//!     fixed by the inputs, never by the thread count;
+//!
+//! (c) the covariance-operator layer: the `DenseCov` backend and the
+//!     per-λ `MaskedCov` nested-elimination views reproduce the dense
+//!     pipeline **bitwise** (identical φ, loadings, supports), the
+//!     implicit `GramCov` backend matches to FP-reassociation tolerance,
+//!     and Thm-2.1 survivor sets nest monotonically in λ.
 
 use lsspca::corpus::models::spiked_covariance_with_u;
+use lsspca::covop::{DenseCov, GramCov, MaskedCov};
 use lsspca::data::SymMat;
+use lsspca::elim::SafeElimination;
 use lsspca::solver::bca::{self, BcaOptions, SolverWorkspace};
 use lsspca::solver::lambda::{search, LambdaSearchOptions};
 use lsspca::solver::path::{compute, PathOptions};
@@ -257,6 +265,148 @@ fn deflation_identical_across_thread_counts() {
         scheme.apply_par(&mut s4, &v, 4);
         assert_eq!(s1.as_slice(), s4.as_slice(), "{scheme:?} deflation must be identical");
     }
+}
+
+// ---------------------------------------------------------------------------
+// (c) covariance-operator layer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_dense_backend_bca_bitwise_identical() {
+    // The acceptance bar for the operator refactor: running the BCA solve
+    // through DenseCov must give the SAME BITS as running it on the raw
+    // SymMat — φ, loadings, sweep counts, everything.
+    property("BCA through DenseCov == BCA on SymMat, bitwise", 10, |rng| {
+        let n = rng.range(3, 16);
+        let sigma = SymMat::random_psd(n, 2 * n, 0.1, rng);
+        let min_diag = (0..n).map(|i| sigma.get(i, i)).fold(f64::INFINITY, f64::min);
+        let lambda = rng.range_f64(0.1, 0.8) * min_diag;
+        let opts = BcaOptions { max_sweeps: 15, ..Default::default() };
+        let direct = bca::solve(&sigma, lambda, &opts);
+        let through_op = bca::solve(&DenseCov::new(sigma.clone()), lambda, &opts);
+        ensure(direct.phi.to_bits() == through_op.phi.to_bits(), "φ must be bit-identical")?;
+        ensure(direct.sweeps == through_op.sweeps, "sweep counts must match")?;
+        ensure(direct.z.as_slice() == through_op.z.as_slice(), "Z must be bit-identical")?;
+        ensure(direct.x.as_slice() == through_op.x.as_slice(), "X must be bit-identical")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_masked_solve_matches_submatrix_solve_bitwise() {
+    // A λ-probe's masked view over the superset operator must solve to
+    // the same bits as materializing the survivor submatrix (the
+    // pre-refactor behavior of the λ-search / path evals).
+    property("MaskedCov solve == submatrix solve, bitwise", 10, |rng| {
+        let n = rng.range(6, 18);
+        let sigma = SymMat::random_psd(n, 2 * n, 0.05, rng);
+        let diags: Vec<f64> = (0..n).map(|i| sigma.get(i, i)).collect();
+        let sorted = {
+            let mut s = diags.clone();
+            s.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            s
+        };
+        // a λ that keeps a strict, non-empty subset
+        let keep = rng.range(2, n - 1);
+        let lambda = sorted[keep];
+        let elim = SafeElimination::apply(&diags, lambda, None);
+        if elim.reduced() == 0 || elim.reduced() == n {
+            return Ok(()); // ties collapsed to a degenerate case
+        }
+        let opts = BcaOptions { max_sweeps: 12, ..Default::default() };
+        let masked = MaskedCov::new(&sigma, elim.kept.clone());
+        let sub = sigma.submatrix(&elim.kept);
+        let a = bca::solve(&masked, lambda, &opts);
+        let b = bca::solve(&sub, lambda, &opts);
+        ensure(a.phi.to_bits() == b.phi.to_bits(), "masked φ must be bit-identical")?;
+        ensure(a.z.as_slice() == b.z.as_slice(), "masked Z must be bit-identical")?;
+        ensure(a.sweeps == b.sweeps, "sweep counts must match")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nested_elimination_monotone() {
+    // Thm 2.1 survivors nest: λ₁ ≤ λ₂ ⇒ kept(λ₂) ⊆ kept(λ₁), and both
+    // keep the decreasing-variance order — a λ-search probe's mask is
+    // always a sub-mask of every lower probe's.
+    property("SafeElimination: survivor sets nest in λ", 30, |rng| {
+        let n = rng.range(1, 80);
+        let v: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 5.0)).collect();
+        let l1 = rng.range_f64(0.0, 5.0);
+        let l2 = rng.range_f64(l1, 5.0);
+        let e1 = SafeElimination::apply(&v, l1, None);
+        let e2 = SafeElimination::apply(&v, l2, None);
+        ensure(e2.reduced() <= e1.reduced(), "higher λ cannot keep more")?;
+        for k in &e2.kept {
+            ensure(e1.kept.contains(k), format!("feature {k} kept at λ₂ but not λ₁"))?;
+        }
+        // identical variance ranking ⇒ kept(λ₂) is a prefix of kept(λ₁)
+        // whenever variances are distinct (random f64s: a.s. distinct)
+        ensure(e1.kept[..e2.reduced()] == e2.kept[..], "nested set must be a prefix")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lambda_search_identical_with_gram_backend() {
+    // Full λ-search cross-backend: dense and implicit-Gram operators over
+    // the SAME sparse corpus must choose the same support (φ to FP
+    // tolerance — entry sums associate differently).
+    property("λ-search: DenseCov vs GramCov agree", 5, |rng| {
+        let docs = rng.range(150, 300);
+        let vocab = rng.range(30, 60);
+        let spec = lsspca::corpus::CorpusSpec::nytimes().scaled(docs, vocab);
+        let corpus = lsspca::corpus::SynthCorpus::new(spec, rng.below(1 << 30) as u64);
+        let csr = corpus.to_csr();
+        let kept: Vec<usize> = (0..vocab).collect();
+        let dense = DenseCov::new(lsspca::cov::covariance_from_csr(&csr, &kept));
+        let gram = GramCov::new(csr, docs as u64, 2);
+        let opts = LambdaSearchOptions {
+            target_card: 5,
+            slack: 1,
+            max_evals: 8,
+            bca: BcaOptions { max_sweeps: 8, track_history: false, ..Default::default() },
+            ..Default::default()
+        };
+        let a = search(&dense, &opts);
+        let b = search(&gram, &opts);
+        let mut sa = a.pc.support.clone();
+        let mut sb = b.pc.support.clone();
+        sa.sort_unstable();
+        sb.sort_unstable();
+        ensure(sa == sb, format!("supports diverged: {sa:?} vs {sb:?}"))?;
+        close(a.solution.phi, b.solution.phi, 1e-7)?;
+        Ok(())
+    });
+}
+
+#[test]
+fn gram_backend_never_materializes_dense() {
+    // Smoke-check the memory contract: a full λ-search plus deflated
+    // re-solves on GramCov touch Σ only through gathered rows — the
+    // operator has no n̂ × n̂ buffer to begin with, and the row cache
+    // stays within its configured budget.
+    let spec = lsspca::corpus::CorpusSpec::nytimes().scaled(400, 64);
+    let corpus = lsspca::corpus::SynthCorpus::new(spec, 9);
+    let csr = corpus.to_csr();
+    let gram = GramCov::new(csr, 400, 1); // 1 MiB → ≥ 2048 rows at n̂=64
+    let mut defl = lsspca::solver::deflate::DeflatedCov::new(&gram);
+    let opts = LambdaSearchOptions {
+        target_card: 5,
+        slack: 2,
+        max_evals: 6,
+        bca: BcaOptions { max_sweeps: 6, track_history: false, ..Default::default() },
+        ..Default::default()
+    };
+    for _ in 0..3 {
+        let res = search(&defl, &opts);
+        assert!(res.pc.cardinality() >= 1);
+        defl.push(lsspca::solver::deflate::Scheme::Projection, &res.pc.vector);
+    }
+    let (hits, misses) = gram.cache_stats();
+    assert!(hits + misses > 0, "the search must have gathered rows");
+    assert!(hits > 0, "repeat gathers must hit the cache");
 }
 
 #[test]
