@@ -1,0 +1,328 @@
+"""Pure-python mirror of the serving subsystem's logic (rust/src/model.rs,
+rust/src/score/scorer.rs, and the `lsspca bench --compare` gate rule).
+
+The Rust side has no interpreter in the authoring environment, so the
+binary artifact format, the sparse projection arithmetic and the gate
+comparison are mirrored here statement-for-statement and cross-checked
+against dense numpy references. Runs under pytest in CI and standalone
+via `python3 python/tests/test_scoring_mirror.py`.
+"""
+
+import io
+import struct
+
+import numpy as np
+
+MAGIC = b"LSPM"
+VERSION = 1
+MASK64 = (1 << 64) - 1
+
+
+# --- checksum (mirror of model.rs::checksum / checkpoint.rs) ---------------
+
+def rotl64(x, k):
+    k %= 64
+    return ((x << k) | (x >> (64 - k))) & MASK64
+
+
+def checksum(buf: bytes) -> int:
+    acc = 0x9E3779B97F4A7C15
+    for i in range(0, len(buf), 8):
+        chunk = buf[i : i + 8]
+        lane = int.from_bytes(chunk + b"\0" * (8 - len(chunk)), "little")
+        acc ^= rotl64(lane, (i // 8) % 63)
+    return acc
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK64
+    return h
+
+
+def vocab_hash(words) -> int:
+    return fnv1a(b"".join(w.encode() + b"\n" for w in words))
+
+
+# --- artifact encode/decode (mirror of Model::to_bytes / from_bytes) --------
+
+def _put_str(out, s):
+    b = s.encode()
+    out.write(struct.pack("<Q", len(b)))
+    out.write(b)
+
+
+def model_to_bytes(m: dict) -> bytes:
+    p = io.BytesIO()
+    _put_str(p, m["corpus_name"])
+    p.write(struct.pack("<QQQQd", m["num_docs"], m["n_features"], m["vocab_hash"],
+                        m["seed"], m["elim_lambda"]))
+    p.write(struct.pack("<Q", len(m["kept"])))
+    for k in m["kept"]:
+        p.write(struct.pack("<Q", k))
+    for v in m["kept_means"]:
+        p.write(struct.pack("<d", v))
+    for v in m["kept_stds"]:
+        p.write(struct.pack("<d", v))
+    for w in m["kept_words"]:
+        _put_str(p, w)
+    p.write(struct.pack("<Q", len(m["pcs"])))
+    for pc in m["pcs"]:
+        p.write(struct.pack("<ddd", pc["lambda"], pc["phi"], pc["explained_variance"]))
+        p.write(struct.pack("<Q", len(pc["loadings"])))
+        for idx, w in pc["loadings"]:
+            p.write(struct.pack("<Qd", idx, w))
+    payload = p.getvalue()
+    return MAGIC + struct.pack("<I", VERSION) + payload + struct.pack("<Q", checksum(payload))
+
+
+class Corrupt(Exception):
+    pass
+
+
+def model_from_bytes(buf: bytes) -> dict:
+    if len(buf) < 4 + 4 + 8 or buf[:4] != MAGIC:
+        raise Corrupt("bad magic or truncated header")
+    (version,) = struct.unpack("<I", buf[4:8])
+    if version != VERSION:
+        raise Corrupt(f"version {version}")
+    payload, stored = buf[8:-8], struct.unpack("<Q", buf[-8:])[0]
+    if checksum(payload) != stored:
+        raise Corrupt("checksum mismatch")
+    pos = [0]
+
+    def take(n):
+        if pos[0] + n > len(payload):
+            raise Corrupt("truncated payload")
+        out = payload[pos[0] : pos[0] + n]
+        pos[0] += n
+        return out
+
+    def u64():
+        return struct.unpack("<Q", take(8))[0]
+
+    def f64():
+        return struct.unpack("<d", take(8))[0]
+
+    def s():
+        ln = u64()
+        if ln > len(payload):
+            raise Corrupt("implausible length")
+        return take(ln).decode()
+
+    m = {"corpus_name": s(), "num_docs": u64(), "n_features": u64(),
+         "vocab_hash": u64(), "seed": u64(), "elim_lambda": f64()}
+    nk = u64()
+    if nk > len(payload):
+        raise Corrupt("implausible kept count")
+    m["kept"] = [u64() for _ in range(nk)]
+    m["kept_means"] = [f64() for _ in range(nk)]
+    m["kept_stds"] = [f64() for _ in range(nk)]
+    m["kept_words"] = [s() for _ in range(nk)]
+    npcs = u64()
+    if npcs > len(payload):
+        raise Corrupt("implausible pc count")
+    m["pcs"] = []
+    for _ in range(npcs):
+        pc = {"lambda": f64(), "phi": f64(), "explained_variance": f64()}
+        card = u64()
+        if card > len(payload):
+            raise Corrupt("implausible loading count")
+        pc["loadings"] = [(u64(), f64()) for _ in range(card)]
+        m["pcs"].append(pc)
+    if pos[0] != len(payload):
+        raise Corrupt("trailing bytes")
+    return m
+
+
+# --- scorer (mirror of score/scorer.rs) -------------------------------------
+
+class Scorer:
+    def __init__(self, model, center=True, normalize=False):
+        self.k = len(model["pcs"])
+        self.n = model["n_features"]
+        kept_pos = {orig: p for p, orig in enumerate(model["kept"])}
+        self.index = {}
+        offsets = [0.0] * self.k
+        for pc_idx, pc in enumerate(model["pcs"]):
+            for orig, loading in pc["loadings"]:
+                p = kept_pos[orig]
+                if normalize:
+                    s = model["kept_stds"][p]
+                    weight = loading / s if s > 0.0 else 0.0
+                else:
+                    weight = loading
+                if center:
+                    offsets[pc_idx] += weight * model["kept_means"][p]
+                self.index.setdefault(orig, []).append((pc_idx, weight))
+        # stored pre-negated; zero sums normalize to +0.0 (no "-0" output)
+        self.neg_offsets = [0.0 if o == 0.0 else -o for o in offsets]
+
+    def score(self, words):
+        out = list(self.neg_offsets)
+        for w, c in words:
+            if w >= self.n:
+                raise ValueError(f"word id {w} out of range")
+            for pc, weight in self.index.get(w, ()):
+                out[pc] += weight * c
+        return out
+
+    @staticmethod
+    def top_pcs(scores, top):
+        order = sorted(range(len(scores)), key=lambda i: (-scores[i], i))
+        return order[: max(1, min(top, len(scores)))]
+
+
+# --- bench gate rule (mirror of main.rs::bench_compare_gate) ----------------
+
+def gate_ok(cur, base, max_regress):
+    return cur / base <= 1.0 + max_regress
+
+
+# --- fixtures ----------------------------------------------------------------
+
+def random_model(rng, n=400, nk=30, k=4):
+    kept = sorted(rng.choice(n, size=nk, replace=False).tolist())
+    pcs = []
+    for _ in range(k):
+        card = int(rng.integers(2, 7))
+        sup = rng.choice(nk, size=card, replace=False)
+        loadings = [(kept[int(p)], float(rng.normal())) for p in sup]
+        loadings.sort(key=lambda t: -abs(t[1]))
+        pcs.append({"lambda": float(rng.uniform(0.1, 2)), "phi": float(rng.uniform(0, 5)),
+                    "explained_variance": float(rng.uniform(0, 5)), "loadings": loadings})
+    return {
+        "corpus_name": "mirror", "num_docs": 999, "n_features": n,
+        "vocab_hash": vocab_hash(f"w{i}" for i in range(n)), "seed": 7,
+        "elim_lambda": 0.5, "kept": kept,
+        "kept_means": [float(rng.normal()) for _ in range(nk)],
+        "kept_stds": [float(rng.uniform(0.2, 3)) for _ in range(nk)],
+        "kept_words": [f"w{kept[i]}" for i in range(nk)],
+        "pcs": pcs,
+    }
+
+
+def random_doc(rng, n, nnz):
+    ids = sorted(rng.choice(n, size=nnz, replace=False).tolist())
+    return [(i, float(rng.integers(1, 9))) for i in ids]
+
+
+# --- tests -------------------------------------------------------------------
+
+def test_artifact_roundtrip_bitwise():
+    rng = np.random.default_rng(1)
+    for trial in range(20):
+        m = random_model(rng)
+        got = model_from_bytes(model_to_bytes(m))
+        assert got == m, f"trial {trial}"
+
+
+def test_artifact_corruption_always_detected():
+    rng = np.random.default_rng(2)
+    m = random_model(rng)
+    good = model_to_bytes(m)
+    for at in rng.integers(0, len(good), size=60):
+        bad = bytearray(good)
+        bad[int(at)] ^= 1 << int(rng.integers(0, 8))
+        try:
+            model_from_bytes(bytes(bad))
+            raise AssertionError(f"flip at {at} accepted")
+        except Corrupt:
+            pass
+    for cut in rng.integers(0, len(good) - 1, size=30):
+        try:
+            model_from_bytes(good[: int(cut)])
+            raise AssertionError(f"truncation at {cut} accepted")
+        except Corrupt:
+            pass
+
+
+def test_scorer_matches_dense_projection():
+    """Sparse hash-accumulation == dense W @ (x − μ) for every option combo."""
+    rng = np.random.default_rng(3)
+    for trial in range(30):
+        m = random_model(rng)
+        n, k = m["n_features"], len(m["pcs"])
+        mu = np.zeros(n)
+        sd = np.ones(n)
+        for p, orig in enumerate(m["kept"]):
+            mu[orig] = m["kept_means"][p]
+            sd[orig] = m["kept_stds"][p]
+        doc = random_doc(rng, n, int(rng.integers(1, 40)))
+        x = np.zeros(n)
+        for i, c in doc:
+            x[i] = c
+        for center in (False, True):
+            for normalize in (False, True):
+                W = np.zeros((k, n))
+                for pc_idx, pc in enumerate(m["pcs"]):
+                    for orig, loading in pc["loadings"]:
+                        W[pc_idx, orig] = loading / sd[orig] if normalize else loading
+                want = W @ (x - mu) if center else W @ x
+                got = Scorer(m, center=center, normalize=normalize).score(doc)
+                np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12), trial
+
+
+def test_scorer_zero_std_guard():
+    rng = np.random.default_rng(4)
+    m = random_model(rng)
+    m["kept_stds"] = [0.0] * len(m["kept_stds"])
+    got = Scorer(m, center=True, normalize=True).score(random_doc(rng, m["n_features"], 20))
+    assert all(s == 0.0 for s in got)
+
+
+def test_scorer_deterministic_bitwise():
+    rng = np.random.default_rng(5)
+    m = random_model(rng)
+    doc = random_doc(rng, m["n_features"], 25)
+    s = Scorer(m, center=True, normalize=True)
+    a, b = s.score(doc), s.score(doc)
+    assert [struct.pack("<d", x) for x in a] == [struct.pack("<d", x) for x in b]
+
+
+def test_top_pcs_tie_rule():
+    assert Scorer.top_pcs([1.0, 3.0, 3.0, 2.0], 2) == [1, 2]
+    assert Scorer.top_pcs([0.0, 0.0], 1) == [0]
+    assert Scorer.top_pcs([1.0, 2.0], 5) == [1, 0]
+    assert Scorer.top_pcs([5.0], 0) == [0]  # clamped to 1
+
+
+def test_mean_document_scores_zero_when_centered():
+    rng = np.random.default_rng(6)
+    m = random_model(rng)
+    doc = [(orig, m["kept_means"][p]) for p, orig in enumerate(m["kept"])]
+    for sc in Scorer(m, center=True).score(doc):
+        assert abs(sc) < 1e-12
+
+
+def test_uncentered_scores_are_positive_zero():
+    rng = np.random.default_rng(7)
+    m = random_model(rng)
+    for sc in Scorer(m, center=False).score([]):
+        assert struct.pack("<d", sc) == struct.pack("<d", 0.0)
+
+
+def test_gate_rule():
+    assert gate_ok(1.0, 1.0, 0.25)
+    assert gate_ok(1.24, 1.0, 0.25)
+    assert not gate_ok(1.26, 1.0, 0.25)
+    assert gate_ok(0.1, 1.0, 0.25)  # faster is always fine
+    assert not gate_ok(2.0, 1.0, 0.0)
+
+
+def test_fnv_vectors():
+    # Known FNV-1a 64-bit vectors pin the hash the Rust side implements.
+    assert fnv1a(b"") == 0xCBF29CE484222325
+    assert fnv1a(b"a") == 0xAF63DC4C8601EC8C
+    assert fnv1a(b"foobar") == 0x85944171F73967E8
+    assert vocab_hash(["alpha", "beta"]) != vocab_hash(["alphabeta"])
+
+
+if __name__ == "__main__":
+    fns = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for fn in fns:
+        fn()
+        print(f"ok {fn.__name__}")
+    print(f"all {len(fns)} mirror tests passed")

@@ -31,17 +31,7 @@ pub fn corpus_key(identity: &str) -> u64 {
     h
 }
 
-fn checksum(buf: &[u8]) -> u64 {
-    // xor-fold over 8-byte lanes; cheap and order-sensitive enough to
-    // catch truncation / bit rot (not cryptographic).
-    let mut acc: u64 = 0x9e3779b97f4a7c15;
-    for (i, chunk) in buf.chunks(8).enumerate() {
-        let mut lane = [0u8; 8];
-        lane[..chunk.len()].copy_from_slice(chunk);
-        acc ^= u64::from_le_bytes(lane).rotate_left((i % 63) as u32);
-    }
-    acc
-}
+use crate::util::xor_fold_checksum as checksum;
 
 /// Checkpoint file path for a key inside a cache directory.
 pub fn path_for(cache_dir: &Path, key: u64) -> PathBuf {
@@ -74,10 +64,18 @@ pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), String> 
     Ok(())
 }
 
-/// Load a checkpoint; verifies magic, version, key and checksum. Returns
-/// `Ok(None)` when the file does not exist, `Err` on any corruption (a
-/// corrupt cache must never be silently used).
-pub fn load(path: &Path, key: u64) -> Result<Option<FeatureVariances>, String> {
+/// Load a checkpoint; verifies magic, version, key, checksum **and** the
+/// feature dimension against the live corpus when `expected_n` is given.
+/// Returns `Ok(None)` when the file does not exist, `Err` on any
+/// corruption or mismatch (a corrupt or mismatched cache must never be
+/// silently used — before the dimension check, a checkpoint whose key
+/// happened to collide with a corpus of different vocabulary size would
+/// pass the hash test and then index out of bounds deep in elimination).
+pub fn load(
+    path: &Path,
+    key: u64,
+    expected_n: Option<usize>,
+) -> Result<Option<FeatureVariances>, String> {
     let mut f = match std::fs::File::open(path) {
         Ok(f) => f,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
@@ -108,6 +106,14 @@ pub fn load(path: &Path, key: u64) -> Result<Option<FeatureVariances>, String> {
     let n = rd_u64(16) as usize;
     if payload.len() != 24 + 24 * n {
         return Err("checkpoint: payload size mismatch".into());
+    }
+    if let Some(want) = expected_n {
+        if n != want {
+            return Err(format!(
+                "checkpoint: dimension mismatch (file has n={n}, corpus has n={want}) — \
+                 stale or foreign cache"
+            ));
+        }
     }
     let read_series = |idx: usize| -> Vec<f64> {
         let base = 24 + idx * 8 * n;
@@ -150,7 +156,7 @@ mod tests {
         let key = corpus_key("nytimes:300");
         let p = tmp("rt.lspv");
         save(&p, key, &fv).unwrap();
-        let got = load(&p, key).unwrap().unwrap();
+        let got = load(&p, key, Some(300)).unwrap().unwrap();
         assert_eq!(got.docs, fv.docs);
         assert_eq!(got.variance, fv.variance);
         assert_eq!(got.mean, fv.mean);
@@ -160,7 +166,7 @@ mod tests {
 
     #[test]
     fn missing_file_is_none() {
-        assert!(load(&tmp("nope.lspv"), 1).unwrap().is_none());
+        assert!(load(&tmp("nope.lspv"), 1, None).unwrap().is_none());
     }
 
     #[test]
@@ -168,8 +174,26 @@ mod tests {
         let fv = sample(10, 2);
         let p = tmp("key.lspv");
         save(&p, corpus_key("a"), &fv).unwrap();
-        let err = load(&p, corpus_key("b")).unwrap_err();
+        let err = load(&p, corpus_key("b"), None).unwrap_err();
         assert!(err.contains("key mismatch"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        // Regression: a checkpoint passing the key test but holding a
+        // different vocabulary size must be rejected here, not surface as
+        // an index panic downstream in elimination.
+        let fv = sample(50, 9);
+        let key = corpus_key("dim");
+        let p = tmp("dim.lspv");
+        save(&p, key, &fv).unwrap();
+        let err = load(&p, key, Some(60)).unwrap_err();
+        assert!(err.contains("dimension mismatch"), "{err}");
+        assert!(err.contains("n=50") && err.contains("n=60"), "{err}");
+        // the matching dimension (and the no-expectation path) still load
+        assert!(load(&p, key, Some(50)).unwrap().is_some());
+        assert!(load(&p, key, None).unwrap().is_some());
         std::fs::remove_file(&p).ok();
     }
 
@@ -184,11 +208,11 @@ mod tests {
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xFF;
         std::fs::write(&p, &bytes).unwrap();
-        let err = load(&p, key).unwrap_err();
+        let err = load(&p, key, None).unwrap_err();
         assert!(err.contains("checksum"), "{err}");
         // truncation
         std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
-        assert!(load(&p, key).is_err());
+        assert!(load(&p, key, None).is_err());
         std::fs::remove_file(&p).ok();
     }
 

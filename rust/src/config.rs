@@ -267,6 +267,18 @@ pub struct PipelineConfig {
     /// Compute a dual optimality certificate per component (extra
     /// eigendecompositions; off by default).
     pub certify: bool,
+    /// Path to write the trained model artifact to (`[model] save_path`;
+    /// empty = don't save). `lsspca export --model-out` overrides.
+    pub save_model: String,
+    /// Scoring default: subtract training means (`[model] center`).
+    pub score_center: bool,
+    /// Scoring default: divide loadings by training standard deviations
+    /// (`[model] normalize`).
+    pub score_normalize: bool,
+    /// Bind address for `lsspca serve` (`[serve] addr`).
+    pub serve_addr: String,
+    /// Connection-handler threads for `lsspca serve` (`[serve] pool`).
+    pub serve_pool: usize,
 }
 
 impl Default for PipelineConfig {
@@ -295,6 +307,11 @@ impl Default for PipelineConfig {
             artifacts_dir: "artifacts".into(),
             deflation: "projection".into(),
             certify: false,
+            save_model: String::new(),
+            score_center: true,
+            score_normalize: false,
+            serve_addr: "127.0.0.1:7878".into(),
+            serve_pool: 4,
         }
     }
 }
@@ -327,6 +344,11 @@ impl PipelineConfig {
             artifacts_dir: doc.str_or("solver", "artifacts_dir", &d.artifacts_dir)?,
             deflation: doc.str_or("solver", "deflation", &d.deflation)?,
             certify: doc.bool_or("solver", "certify", d.certify)?,
+            save_model: doc.str_or("model", "save_path", &d.save_model)?,
+            score_center: doc.bool_or("model", "center", d.score_center)?,
+            score_normalize: doc.bool_or("model", "normalize", d.score_normalize)?,
+            serve_addr: doc.str_or("serve", "addr", &d.serve_addr)?,
+            serve_pool: doc.usize_or("serve", "pool", d.serve_pool)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -391,6 +413,12 @@ impl PipelineConfig {
         match self.synth_preset.as_str() {
             "nytimes" | "pubmed" => {}
             other => return Err(format!("corpus.preset '{other}' (want nytimes|pubmed)")),
+        }
+        if self.serve_pool == 0 {
+            return Err("serve.pool must be >= 1".into());
+        }
+        if self.serve_addr.is_empty() {
+            return Err("serve.addr must not be empty".into());
         }
         Ok(())
     }
@@ -470,6 +498,23 @@ lambdas = [0.1, 0.2, 0.5]
             Document::parse("[solver]\nengine = \"xla\"\n[cov]\nbackend = \"gram\"").unwrap();
         let e = PipelineConfig::from_document(&clash).unwrap_err();
         assert!(e.contains("xla") && e.contains("gram"), "{e}");
+    }
+
+    #[test]
+    fn model_and_serve_sections_parse_and_validate() {
+        let doc = Document::parse(
+            "[model]\nsave_path = \"out/m.lspm\"\nnormalize = true\n\
+             [serve]\naddr = \"0.0.0.0:9000\"\npool = 8",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.save_model, "out/m.lspm");
+        assert!(cfg.score_normalize);
+        assert!(cfg.score_center); // default stays on
+        assert_eq!(cfg.serve_addr, "0.0.0.0:9000");
+        assert_eq!(cfg.serve_pool, 8);
+        let bad = Document::parse("[serve]\npool = 0").unwrap();
+        assert!(PipelineConfig::from_document(&bad).is_err());
     }
 
     #[test]

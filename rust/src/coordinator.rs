@@ -8,6 +8,7 @@
 //!   → λ-search + BCA solve (native or XLA engine)                 solver/engine
 //!   → deflate, repeat for num_pcs components                      solver::deflate
 //!   → topic table + metrics                                       report
+//!   → model artifact (original-space PCs + norm stats)            model
 //! ```
 //!
 //! Deflation note: components after the first are extracted from the same
@@ -84,6 +85,10 @@ pub struct PipelineReport {
     pub total_seconds: f64,
     /// Markdown topic table (the paper's Tables 1–2 format).
     pub topic_table: String,
+    /// The serving artifact: original-space sparse PCs plus the
+    /// elimination map and normalization statistics (always built — it
+    /// is a few KiB; written to disk when `model.save_path` is set).
+    pub model: crate::model::Model,
 }
 
 /// The pipeline object: configuration + engine.
@@ -168,8 +173,17 @@ impl Pipeline {
             let key = crate::checkpoint::corpus_key(&identity);
             Some((crate::checkpoint::path_for(Path::new(&self.config.cache_dir), key), key))
         };
+        // The corpus' live feature dimension, for checkpoint validation:
+        // a cached file whose key collides but whose n differs must be
+        // rejected up front, not panic later inside elimination.
+        let expected_n: Option<usize> = match &synth {
+            Some(s) => Some(s.spec.vocab_size),
+            None => crate::data::docword::DocwordReader::open(&input_path)
+                .ok()
+                .map(|r| r.header().vocab_size),
+        };
         let cached_fv = match &cache {
-            Some((path, key)) => match crate::checkpoint::load(path, *key) {
+            Some((path, key)) => match crate::checkpoint::load(path, *key, expected_n) {
                 Ok(hit) => {
                     if hit.is_some() {
                         crate::info!("variance pass: checkpoint hit at {}", path.display());
@@ -354,6 +368,35 @@ impl Pipeline {
             &vocab,
             Some(&elim.kept),
         );
+
+        // --- model artifact: the hand-off to `score` / `serve` ---------------
+        let n_orig = fv.variance.len();
+        let model = crate::model::Model {
+            corpus_name: corpus_name.clone(),
+            num_docs: stats1.docs,
+            n_features: n_orig,
+            vocab_hash: crate::model::vocab_hash(&vocab),
+            seed: self.config.seed,
+            elim_lambda: elim.lambda,
+            kept: elim.kept.clone(),
+            kept_means: elim.kept.iter().map(|&i| fv.mean[i]).collect(),
+            kept_stds: elim.kept.iter().map(|&i| fv.variance[i].sqrt()).collect(),
+            kept_words: elim.kept.iter().map(|&i| vocab.word(i)).collect(),
+            pcs: components
+                .iter()
+                .map(|c| crate::model::ModelPc {
+                    lambda: c.lambda,
+                    phi: c.phi,
+                    explained_variance: c.explained_variance,
+                    loadings: c.pc.mapped(&elim.kept, n_orig).loadings(),
+                })
+                .collect(),
+        };
+        if !self.config.save_model.is_empty() {
+            model.save(Path::new(&self.config.save_model))?;
+            crate::info!("model artifact written to {}", self.config.save_model);
+        }
+
         Ok(PipelineReport {
             corpus_name,
             num_docs: stats1.docs as usize,
@@ -368,6 +411,7 @@ impl Pipeline {
             profile: prof.report(),
             total_seconds: total.secs(),
             topic_table,
+            model,
         })
     }
 }
@@ -436,9 +480,7 @@ fn engine_search(
         } else {
             let sub = MaskedCov::new(sigma, elim.kept.clone());
             let sol = crate::engine::bca_solve(engine, &sub, lambda, &opts.bca)?;
-            let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
-            pc.vector = elim.lift(&pc.vector);
-            pc.support = pc.support.iter().map(|&r| elim.kept[r]).collect();
+            let pc = leading_sparse_pc(&sol.z, opts.extract_tol).mapped(&elim.kept, n);
             (sol, pc)
         };
         let card = pc.cardinality();
@@ -533,6 +575,31 @@ mod tests {
             "PC1 words {:?} do not concentrate on one topic",
             first.words
         );
+    }
+
+    #[test]
+    fn report_model_is_consistent_with_components() {
+        let report = Pipeline::new(tiny_config()).run().unwrap();
+        let m = &report.model;
+        m.validate().unwrap();
+        assert_eq!(m.n_features, report.vocab_size);
+        assert_eq!(m.kept.len(), report.reduced_size);
+        assert_eq!(m.pcs.len(), report.components.len());
+        assert_eq!(m.num_docs as usize, report.num_docs);
+        for (c, pc) in report.components.iter().zip(&m.pcs) {
+            assert_eq!(pc.loadings.len(), c.pc.cardinality());
+            // original-space loadings are the reduced PC pushed through
+            // the kept map, bit for bit, in the same support order
+            for (&(orig, w), &r) in pc.loadings.iter().zip(&c.pc.support) {
+                assert_eq!(orig, m.kept[r]);
+                assert_eq!(w.to_bits(), c.pc.vector[r].to_bits());
+            }
+            assert_eq!(pc.lambda, c.lambda);
+        }
+        // the model's top word per PC matches the reported word list
+        for (c, pc) in report.components.iter().zip(&m.pcs) {
+            assert_eq!(m.word_of(pc.loadings[0].0), c.words[0]);
+        }
     }
 
     #[test]

@@ -156,7 +156,11 @@ impl DocwordReader {
                     break;
                 }
                 Some((doc_id, w, c)) => {
-                    let start_new = cur.as_ref().is_none_or(|d| d.id != doc_id);
+                    // (match, not Option::is_none_or — that is post-MSRV)
+                    let start_new = match &cur {
+                        Some(d) => d.id != doc_id,
+                        None => true,
+                    };
                     if start_new {
                         if let Some(d) = cur.take() {
                             self.docs_seen += 1;

@@ -45,10 +45,12 @@ pub mod elim;
 pub mod engine;
 pub mod linalg;
 pub mod logging;
+pub mod model;
 pub mod moments;
 pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
+pub mod score;
 pub mod solver;
 pub mod stream;
 pub mod util;
@@ -62,7 +64,9 @@ pub mod prelude {
     pub use crate::elim::SafeElimination;
     pub use crate::engine::{Engine, NativeEngine};
     pub use crate::linalg::{power_iteration, JacobiEig};
+    pub use crate::model::{Model, ModelPc};
     pub use crate::moments::FeatureMoments;
+    pub use crate::score::{ScoreOptions, Scorer};
     pub use crate::solver::bca::{BcaOptions, BcaSolution};
     pub use crate::solver::extract::SparsePc;
     pub use crate::util::rng::Rng;

@@ -6,7 +6,11 @@
 //! lsspca gen        --preset pubmed --docs 100000 --out corpus.txt.gz
 //! lsspca variances  --input corpus.txt.gz                        # Fig 2 profile
 //! lsspca solve      --n 200 --lambda 0.5 --model spiked          # solver on synthetic Σ
+//! lsspca export     --model-out model.lspm                       # train → artifact
+//! lsspca score      --model model.lspm --input new.txt.gz        # batch projection
+//! lsspca serve      --model model.lspm --addr 127.0.0.1:7878     # HTTP scoring
 //! lsspca artifacts  --dir artifacts                              # inspect AOT artifacts
+//! lsspca bench      --compare BENCH_baseline.json                # perf-regression gate
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -17,33 +21,73 @@ use lsspca::coordinator::Pipeline;
 use lsspca::corpus::{CorpusSpec, SynthCorpus};
 use lsspca::data::Vocab;
 use lsspca::prelude::*;
+use lsspca::score::{score_file, serve, BatchOptions, ServeOptions};
 use lsspca::solver::bca;
 use lsspca::stream::{variance_pass_file, StreamOptions};
+use lsspca::util::json::Json;
 use lsspca::util::plot::AsciiPlot;
 use lsspca::util::rng::Rng;
+
+/// The training flags shared verbatim by `run` and `export` (parsed by
+/// [`pipeline_config_from_args`] — keep the two in sync by construction).
+fn with_training_flags(spec: CommandSpec) -> CommandSpec {
+    spec.opt("config", "", "TOML config file (flags override)")
+        .opt("input", "", "docword file (empty = synthetic preset)")
+        .opt("preset", "nytimes", "synthetic preset: nytimes|pubmed")
+        .opt("docs", "0", "synthetic docs (0 = preset default)")
+        .opt("vocab", "0", "synthetic vocab (0 = preset default)")
+        .opt("seed", "20111212", "corpus seed")
+        .opt("pcs", "5", "number of sparse PCs")
+        .opt("target-card", "5", "target cardinality per PC")
+        .opt("max-reduced", "512", "cap on reduced problem size")
+        .opt("workers", "2", "moment-pass worker threads")
+        .opt("threads", "", "solver worker threads (0 = all cores; empty = config value)")
+        .opt("engine", "native", "solver engine: native|xla")
+        .opt("cov-backend", "", "covariance backend: dense|gram (empty = config value)")
+        .opt("row-cache-mb", "", "gram-backend row cache MiB (empty = config value)")
+        .opt("artifacts", "artifacts", "artifact dir for --engine xla")
+        .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
+        .opt("save-model", "", "also write the scoring model artifact here")
+        .switch("certify", "compute a dual optimality certificate per PC")
+}
 
 fn app() -> App {
     App::new("lsspca", "large-scale sparse PCA (NIPS 2011 reproduction)")
         .command(
-            CommandSpec::new("run", "full pipeline: stream → eliminate → solve → topics")
-                .opt("config", "", "TOML config file (flags override)")
-                .opt("input", "", "docword file (empty = synthetic preset)")
-                .opt("preset", "nytimes", "synthetic preset: nytimes|pubmed")
-                .opt("docs", "0", "synthetic docs (0 = preset default)")
-                .opt("vocab", "0", "synthetic vocab (0 = preset default)")
-                .opt("seed", "20111212", "corpus seed")
-                .opt("pcs", "5", "number of sparse PCs")
-                .opt("target-card", "5", "target cardinality per PC")
-                .opt("max-reduced", "512", "cap on reduced problem size")
-                .opt("workers", "2", "moment-pass worker threads")
-                .opt("threads", "", "solver worker threads (0 = all cores; empty = config value)")
-                .opt("engine", "native", "solver engine: native|xla")
-                .opt("cov-backend", "", "covariance backend: dense|gram (empty = config value)")
-                .opt("row-cache-mb", "", "gram-backend row cache MiB (empty = config value)")
-                .opt("artifacts", "artifacts", "artifact dir for --engine xla")
-                .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
-                .switch("certify", "compute a dual optimality certificate per PC")
-                .switch("profile", "print the timing profile"),
+            with_training_flags(CommandSpec::new(
+                "run",
+                "full pipeline: stream → eliminate → solve → topics",
+            ))
+            .switch("profile", "print the timing profile"),
+        )
+        .command(
+            with_training_flags(CommandSpec::new(
+                "export",
+                "train and write the scoring model artifact (.lspm)",
+            ))
+            .opt("model-out", "", "artifact path (empty = config save_path or model.lspm)"),
+        )
+        .command(
+            CommandSpec::new("score", "batch-score a docword file with a model artifact")
+                .req("model", "model artifact (.lspm) from `lsspca export`")
+                .req("input", "docword file to score (.gz supported)")
+                .opt("config", "", "TOML config file ([model] center/normalize defaults)")
+                .opt("out", "scores.csv", "output CSV path")
+                .opt("threads", "0", "scoring worker threads (0 = all cores)")
+                .opt("chunk-docs", "2048", "documents per streamed chunk")
+                .opt("top", "1", "top-k topic assignment depth")
+                .switch("no-center", "do not subtract training means")
+                .switch("normalize", "divide loadings by training std deviations")
+                .switch("allow-vocab-mismatch", "score even if the vocab hash differs"),
+        )
+        .command(
+            CommandSpec::new("serve", "serve a model over HTTP: /score /topics /healthz")
+                .req("model", "model artifact (.lspm) from `lsspca export`")
+                .opt("config", "", "TOML config file ([serve]/[model] sections)")
+                .opt("addr", "", "bind address (empty = config value, default 127.0.0.1:7878)")
+                .opt("pool", "", "connection-handler threads (empty = config value)")
+                .switch("no-center", "do not subtract training means")
+                .switch("normalize", "divide loadings by training std deviations"),
         )
         .command(
             CommandSpec::new("gen", "generate a synthetic corpus to disk (UCI docword format)")
@@ -83,17 +127,21 @@ fn app() -> App {
             .opt("threads", "4", "worker threads for the λ-search scaling scenario")
             .opt("out", "BENCH_bca.json", "output JSON path")
             .opt("covop-out", "BENCH_covop.json", "covariance-operator race output JSON path")
+            .opt("score-out", "BENCH_score.json", "batch-scoring throughput output JSON path")
+            .opt("compare", "", "baseline BENCH_bca.json: exit nonzero on gate regression")
+            .opt("max-regress", "0.25", "allowed fractional slowdown of gate medians")
             .switch("quick", "smaller sizes / fewer repetitions"),
         )
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
+/// Assemble a pipeline config from the flags shared by `run` and
+/// `export`: config-file values first, flags override.
+fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, String> {
     let mut cfg = if args.str("config").is_empty() {
         PipelineConfig::default()
     } else {
         PipelineConfig::load(Path::new(&args.str("config")))?
     };
-    // flags override config-file values
     if !args.str("input").is_empty() {
         cfg.input = args.str("input");
     }
@@ -125,7 +173,15 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if !args.str("cache-dir").is_empty() {
         cfg.cache_dir = args.str("cache-dir");
     }
+    if !args.str("save-model").is_empty() {
+        cfg.save_model = args.str("save-model");
+    }
     cfg.certify = cfg.certify || args.switch("certify");
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = pipeline_config_from_args(args)?;
     cfg.validate()?;
 
     let report = Pipeline::new(cfg).run()?;
@@ -161,6 +217,95 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         println!("\n{}", report.profile);
     }
     Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<(), String> {
+    let mut cfg = pipeline_config_from_args(args)?;
+    if !args.str("model-out").is_empty() {
+        cfg.save_model = args.str("model-out");
+    }
+    if cfg.save_model.is_empty() {
+        cfg.save_model = "model.lspm".into();
+    }
+    cfg.validate()?;
+    let out = cfg.save_model.clone();
+    let report = Pipeline::new(cfg).run()?;
+    println!("{}", report.model.summary());
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_score(args: &Args) -> Result<(), String> {
+    let model = Model::load(Path::new(&args.str("model")))?;
+    let input = PathBuf::from(args.str("input"));
+    // Vocabulary identity check: when the input ships a vocab companion
+    // file, its hash must match the training vocabulary's — scoring
+    // against re-indexed words silently permutes every topic otherwise.
+    let vocab_path = input.with_extension("vocab");
+    if vocab_path.exists() && model.vocab_hash != 0 {
+        let v = Vocab::load(&vocab_path)?;
+        let h = lsspca::model::vocab_hash(&v);
+        if h != model.vocab_hash && !args.switch("allow-vocab-mismatch") {
+            return Err(format!(
+                "vocabulary mismatch: {} hashes to {h:016x}, model was trained on {:016x} \
+                 (--allow-vocab-mismatch to override)",
+                vocab_path.display(),
+                model.vocab_hash
+            ));
+        }
+    }
+    // [model] center/normalize give the defaults; switches override.
+    let cfg = if args.str("config").is_empty() {
+        PipelineConfig::default()
+    } else {
+        PipelineConfig::load(Path::new(&args.str("config")))?
+    };
+    let sopts = ScoreOptions {
+        center: cfg.score_center && !args.switch("no-center"),
+        normalize: cfg.score_normalize || args.switch("normalize"),
+    };
+    let scorer = Scorer::new(&model, sopts)?;
+    let bopts = BatchOptions {
+        threads: args.usize("threads")?,
+        chunk_docs: args.usize("chunk-docs")?,
+        top: args.usize("top")?,
+    };
+    let out = PathBuf::from(args.str("out"));
+    let stats = score_file(&input, &scorer, bopts, &out)?;
+    println!(
+        "scored {} docs ({} nnz) onto {} PCs in {:.2}s — {:.0} docs/s → {}",
+        stats.docs,
+        stats.nnz,
+        scorer.num_pcs(),
+        stats.seconds,
+        stats.docs_per_sec(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let model = Model::load(Path::new(&args.str("model")))?;
+    let cfg = if args.str("config").is_empty() {
+        PipelineConfig::default()
+    } else {
+        PipelineConfig::load(Path::new(&args.str("config")))?
+    };
+    let addr = if args.str("addr").is_empty() { cfg.serve_addr.clone() } else { args.str("addr") };
+    let pool =
+        if args.str("pool").is_empty() { cfg.serve_pool } else { args.usize("pool")? };
+    let sopts = ScoreOptions {
+        center: cfg.score_center && !args.switch("no-center"),
+        normalize: cfg.score_normalize || args.switch("normalize"),
+    };
+    let scorer = Scorer::new(&model, sopts)?;
+    println!(
+        "serving {} ({} PCs, kept {}) on http://{addr} — GET /healthz /topics, POST /score",
+        model.corpus_name,
+        model.num_pcs(),
+        model.kept.len()
+    );
+    serve(model, scorer, ServeOptions { addr, pool, ..Default::default() })
 }
 
 fn cmd_gen(args: &Args) -> Result<(), String> {
@@ -282,6 +427,84 @@ fn time_min<T>(reps: usize, mut f: impl FnMut() -> T) -> f64 {
     best
 }
 
+/// Per-run wall-clock samples of one closure (for gate medians, which
+/// want a robust central tendency rather than the optimistic min).
+fn time_samples<T>(reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    (0..reps.max(1))
+        .map(|_| {
+            let t = lsspca::util::Timer::start();
+            lsspca::util::bench::black_box(f());
+            t.secs()
+        })
+        .collect()
+}
+
+fn median_secs(samples: &[f64]) -> f64 {
+    lsspca::util::stats::Summary::of(samples).p50
+}
+
+/// The bench-regression gate: compare this run's scenario medians against
+/// a committed baseline; any metric slower than `(1 + max_regress)×`
+/// baseline fails the gate (CI exits nonzero). Baselines are only
+/// comparable between runs of the same shape, so `quick`/`n` must match.
+fn bench_compare_gate(
+    baseline_path: &Path,
+    current: &[(&str, f64)],
+    quick: bool,
+    n: usize,
+    max_regress: f64,
+) -> Result<(), String> {
+    use lsspca::util::bench::{metric, section};
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("reading baseline {}: {e}", baseline_path.display()))?;
+    let doc = Json::parse(&text)
+        .map_err(|e| format!("parsing baseline {}: {e}", baseline_path.display()))?;
+    let gate = doc
+        .get("gate")
+        .ok_or_else(|| format!("baseline {} has no \"gate\" object", baseline_path.display()))?;
+    let base_quick = gate.get("quick").and_then(Json::as_bool).unwrap_or(false);
+    let base_n = gate.get("n").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+    if base_quick != quick || base_n != n {
+        return Err(format!(
+            "baseline gate shape mismatch: baseline quick={base_quick} n={base_n}, \
+             this run quick={quick} n={n} — regenerate the baseline with matching flags"
+        ));
+    }
+    section(&format!(
+        "bench gate — vs {} (fail above {:.0}% slowdown)",
+        baseline_path.display(),
+        max_regress * 100.0
+    ));
+    let mut failures = Vec::new();
+    for &(name, cur) in current {
+        let base = gate
+            .get(name)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("baseline gate is missing \"{name}\""))?;
+        if !base.is_finite() || base <= 0.0 {
+            return Err(format!("baseline gate \"{name}\" must be > 0 (got {base})"));
+        }
+        let ratio = cur / base;
+        let ok = ratio <= 1.0 + max_regress;
+        metric(
+            &format!("gate.{name}.ratio"),
+            format!("{ratio:.3} ({})", if ok { "ok" } else { "REGRESSION" }),
+        );
+        if !ok {
+            failures.push(format!(
+                "{name}: {cur:.6}s vs baseline {base:.6}s ({ratio:.2}x > {:.2}x allowed)",
+                1.0 + max_regress
+            ));
+        }
+    }
+    if failures.is_empty() {
+        println!("bench gate: ok");
+        Ok(())
+    } else {
+        Err(format!("bench gate failed:\n  {}", failures.join("\n  ")))
+    }
+}
+
 fn cmd_bench(args: &Args) -> Result<(), String> {
     use lsspca::solver::lambda::{search, LambdaSearchOptions};
     use lsspca::solver::qp::{self, QpOptions};
@@ -333,6 +556,23 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     }
     json.push_str("  ],\n");
 
+    // --- qp_micro gate median: repeated cold solves at the largest size ---
+    let gate_reps = if quick { 5 } else { 7 };
+    let gate_qn = *qp_sizes.last().unwrap();
+    let qp_gate_median = {
+        let y = SymMat::random_psd(gate_qn, gate_qn / 2 + 4, 0.05, &mut rng);
+        let s = rng.gauss_vec(gate_qn);
+        let radius = vec![0.3; gate_qn];
+        let opts = QpOptions::default();
+        let samples = time_samples(gate_reps, || {
+            let mut u = Vec::new();
+            let mut w = Vec::new();
+            qp::solve_masked(&y, &s, &radius, None, opts, &mut u, &mut w).r_squared
+        });
+        median_secs(&samples)
+    };
+    metric("gate.qp_micro_median_secs", format!("{qp_gate_median:.6}"));
+
     // --- fig1_speed headline: BCA at n, K sweeps, cold/serial vs hot ------
     // Paper regime: a strong cardinality-5 spike. BCA then concentrates X,
     // the column QPs become ill-conditioned, and cold starts pay heavily —
@@ -345,24 +585,35 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         track_history: false,
         ..BcaOptions::fixed_sweeps(sweeps)
     };
-    // Single timed run each (solves are seconds-scale at n = 512); φ comes
-    // from the same runs, so equivalence is measured on what was timed.
+    // One timed reference run (solves are seconds-scale at n = 512); the
+    // workspace side samples a few runs so the gate gets a median. φ comes
+    // from the timed runs, so equivalence is measured on what was timed.
     let t = lsspca::util::Timer::start();
     let phi_ref = bca::solve_reference(&sigma, lambda, &opts).phi;
     let ref_secs = t.secs();
-    let t = lsspca::util::Timer::start();
-    let phi_ws = bca::solve(&sigma, lambda, &opts).phi;
-    let ws_secs = t.secs();
+    let ws_reps = if quick { 5 } else { 3 };
+    let mut phi_ws = 0.0;
+    let ws_samples = time_samples(ws_reps, || {
+        phi_ws = bca::solve(&sigma, lambda, &opts).phi;
+    });
+    let ws_secs = ws_samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let fig1_gate_median = median_secs(&ws_samples);
     let bca_speedup = ref_secs / ws_secs.max(1e-12);
     metric("bca.reference_secs", format!("{ref_secs:.4}"));
     metric("bca.workspace_secs", format!("{ws_secs:.4}"));
     metric("bca.speedup", format!("{bca_speedup:.2}"));
     metric("bca.phi_abs_diff", format!("{:.3e}", (phi_ref - phi_ws).abs()));
+    metric("gate.fig1_speed_median_secs", format!("{fig1_gate_median:.6}"));
     json.push_str(&format!(
         "  \"bca_n{n}\": {{\"n\": {n}, \"sweeps\": {sweeps}, \"reference_secs\": {ref_secs:.6}, \
          \"workspace_secs\": {ws_secs:.6}, \"speedup\": {bca_speedup:.3}, \
          \"phi_abs_diff\": {:.3e}}},\n",
         (phi_ref - phi_ws).abs()
+    ));
+    json.push_str(&format!(
+        "  \"gate\": {{\"quick\": {quick}, \"n\": {n}, \
+         \"qp_micro_median_secs\": {qp_gate_median:.6}, \
+         \"fig1_speed_median_secs\": {fig1_gate_median:.6}}},\n"
     ));
 
     // --- λ-search thread scaling ------------------------------------------
@@ -488,6 +739,78 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     std::fs::write(&covop_out, &cj)
         .map_err(|e| format!("writing {}: {e}", covop_out.display()))?;
     println!("wrote {}", covop_out.display());
+
+    // --- batch-scoring throughput → BENCH_score.json ----------------------
+    // The serving-side number EXPERIMENTS.md §Serving quotes: documents
+    // projected per second onto K = 5 sparse PCs through the streaming
+    // batch scorer (CSV rendering included — this is the `lsspca score`
+    // hot path, not a stripped-down kernel).
+    use lsspca::score::score_stream;
+    use lsspca::stream::SynthSource;
+
+    section("scoring — batch projection throughput (docs/s onto 5 sparse PCs)");
+    let sdocs = if quick { 2_000 } else { 20_000 };
+    let scorpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(sdocs, 2000), 20111213);
+    let planted = scorpus.planted_ids();
+    let smodel = Model {
+        corpus_name: "bench-scoring".into(),
+        num_docs: sdocs as u64,
+        n_features: scorpus.spec.vocab_size,
+        vocab_hash: 0,
+        seed: scorpus.seed,
+        elim_lambda: 0.5,
+        kept_means: vec![0.1; planted.len()],
+        kept_stds: vec![1.0; planted.len()],
+        kept_words: planted.iter().map(|&i| scorpus.vocab.word(i)).collect(),
+        kept: planted,
+        pcs: scorpus
+            .topic_word_ids
+            .iter()
+            .map(|ids| ModelPc {
+                lambda: 0.5,
+                phi: 1.0,
+                explained_variance: 1.0,
+                loadings: ids.iter().map(|&i| (i, 1.0 / (ids.len() as f64).sqrt())).collect(),
+            })
+            .collect(),
+    };
+    let scorer = Scorer::new(&smodel, ScoreOptions::default())?;
+    let mut sj = String::from("{\n  \"batch_scoring\": [\n");
+    let thread_arms: Vec<usize> = if threads > 1 { vec![1, threads] } else { vec![1] };
+    for (idx, &t) in thread_arms.iter().enumerate() {
+        let opts = BatchOptions { threads: t, chunk_docs: 1024, top: 1 };
+        let mut sink = std::io::sink();
+        let stats = score_stream(&mut SynthSource::new(&scorpus), &scorer, opts, &mut sink)?;
+        let rate = stats.docs_per_sec();
+        metric(&format!("scoring.t{t}.docs_per_sec"), format!("{rate:.0}"));
+        sj.push_str(&format!(
+            "    {{\"threads\": {t}, \"docs\": {sdocs}, \"k\": {}, \"secs\": {:.6}, \
+             \"docs_per_sec\": {rate:.1}}}{}\n",
+            scorer.num_pcs(),
+            stats.seconds,
+            if idx + 1 == thread_arms.len() { "" } else { "," }
+        ));
+    }
+    sj.push_str("  ]\n}\n");
+    let score_out = PathBuf::from(args.str("score-out"));
+    std::fs::write(&score_out, &sj)
+        .map_err(|e| format!("writing {}: {e}", score_out.display()))?;
+    println!("wrote {}", score_out.display());
+
+    // --- regression gate vs a committed baseline --------------------------
+    let baseline = args.str("compare");
+    if !baseline.is_empty() {
+        bench_compare_gate(
+            Path::new(&baseline),
+            &[
+                ("qp_micro_median_secs", qp_gate_median),
+                ("fig1_speed_median_secs", fig1_gate_median),
+            ],
+            quick,
+            n,
+            args.f64("max-regress")?,
+        )?;
+    }
     Ok(())
 }
 
@@ -507,6 +830,9 @@ fn main() {
         }
         Parsed::Command(name, args) => match name.as_str() {
             "run" => cmd_run(&args),
+            "export" => cmd_export(&args),
+            "score" => cmd_score(&args),
+            "serve" => cmd_serve(&args),
             "gen" => cmd_gen(&args),
             "variances" => cmd_variances(&args),
             "solve" => cmd_solve(&args),

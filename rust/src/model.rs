@@ -1,0 +1,520 @@
+//! The persisted model artifact — the training half's hand-off to serving.
+//!
+//! A pipeline run ends with K sparse PCs expressed in *reduced* (post-
+//! elimination) coordinates plus the statistics needed to project new
+//! documents onto them. This module freezes all of that into one
+//! versioned binary file so `lsspca score` / `lsspca serve` can run
+//! without re-touching the corpus:
+//!
+//! - the K sparse PCs with **original-space** feature indices,
+//! - the kept→original elimination map and the survivors' means /
+//!   standard deviations (for optional centering / normalization at
+//!   scoring time),
+//! - the survivors' word strings (so the server can score `{"terms":
+//!   {word: count}}` payloads and explain `/topics` without a vocab
+//!   file), and
+//! - training metadata: corpus name, docs, original vocab size, seed,
+//!   elimination λ̂, and an FNV hash of the full training vocabulary to
+//!   detect scoring against a different vocabulary.
+//!
+//! Format (little-endian, `checkpoint.rs` style): magic `"LSPM"`,
+//! u32 version, length-prefixed payload, trailing xor-fold checksum.
+//! The loader validates magic, version, checksum and every internal
+//! length/index invariant before returning — a corrupt artifact must
+//! never score traffic.
+
+use std::path::Path;
+
+use crate::data::Vocab;
+
+const MAGIC: &[u8; 4] = b"LSPM";
+const VERSION: u32 = 1;
+
+/// One sparse principal component in original-index space.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelPc {
+    /// λ chosen by the cardinality search.
+    pub lambda: f64,
+    /// Problem-(1) objective at the solution.
+    pub phi: f64,
+    /// Explained variance on the (deflated) training covariance.
+    pub explained_variance: f64,
+    /// `(original feature index, loading)`, sorted by decreasing
+    /// |loading| — the order the paper's topic tables print.
+    pub loadings: Vec<(usize, f64)>,
+}
+
+/// A complete, self-contained scoring model.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    /// Corpus name or input path the model was trained on.
+    pub corpus_name: String,
+    /// Documents in the training corpus.
+    pub num_docs: u64,
+    /// Original vocabulary size n (pre-elimination feature count).
+    pub n_features: usize,
+    /// FNV-1a hash of the training vocabulary (0 when no vocab file).
+    pub vocab_hash: u64,
+    /// Corpus / generator seed.
+    pub seed: u64,
+    /// Elimination λ̂ used to build the reduced problem.
+    pub elim_lambda: f64,
+    /// Kept→original elimination map, in decreasing-variance order.
+    pub kept: Vec<usize>,
+    /// Per-kept-feature training mean (aligned with `kept`).
+    pub kept_means: Vec<f64>,
+    /// Per-kept-feature training standard deviation (population).
+    pub kept_stds: Vec<f64>,
+    /// Word strings of the kept features (aligned with `kept`).
+    pub kept_words: Vec<String>,
+    /// The sparse PCs, original-index space.
+    pub pcs: Vec<ModelPc>,
+}
+
+/// FNV-1a over every vocabulary word separated by `\n` — cheap identity
+/// check that a scoring-time vocabulary matches the training one.
+pub fn vocab_hash(vocab: &Vocab) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for i in 0..vocab.len() {
+        for b in vocab.word(i).as_bytes() {
+            eat(*b);
+        }
+        eat(b'\n');
+    }
+    h
+}
+
+use crate::util::xor_fold_checksum as checksum;
+
+// --- payload writer/reader helpers -----------------------------------------
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked little-endian reader over the payload — every read
+/// returns `Err` instead of panicking on truncated input.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or("model: truncated payload")?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed count with a sanity cap: a corrupt length must not
+    /// trigger a huge allocation before the per-element reads fail.
+    fn count(&mut self, what: &str) -> Result<usize, String> {
+        let v = self.u64()? as usize;
+        if v > self.buf.len() {
+            return Err(format!("model: implausible {what} count {v}"));
+        }
+        Ok(v)
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let len = self.count("string length")?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "model: non-utf8 string".to_string())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+impl Model {
+    /// Internal consistency checks shared by construction and loading.
+    pub fn validate(&self) -> Result<(), String> {
+        let nk = self.kept.len();
+        if self.kept_means.len() != nk || self.kept_stds.len() != nk || self.kept_words.len() != nk
+        {
+            return Err("model: kept map / means / stds / words length mismatch".into());
+        }
+        if self.pcs.is_empty() {
+            return Err("model: no components".into());
+        }
+        let kept_set: std::collections::HashSet<usize> = self.kept.iter().copied().collect();
+        for (i, &k) in self.kept.iter().enumerate() {
+            if k >= self.n_features {
+                return Err(format!(
+                    "model: kept[{i}]={k} out of range (n={})",
+                    self.n_features
+                ));
+            }
+        }
+        if kept_set.len() != nk {
+            return Err("model: duplicate indices in kept map".into());
+        }
+        for (k, pc) in self.pcs.iter().enumerate() {
+            if pc.loadings.is_empty() {
+                return Err(format!("model: PC {} has empty support", k + 1));
+            }
+            let mut seen = std::collections::HashSet::with_capacity(pc.loadings.len());
+            for &(idx, w) in &pc.loadings {
+                if !kept_set.contains(&idx) {
+                    return Err(format!(
+                        "model: PC {} loads feature {idx} outside the kept set",
+                        k + 1
+                    ));
+                }
+                if !seen.insert(idx) {
+                    // the scorer would double-count a repeated feature
+                    return Err(format!("model: PC {} loads feature {idx} twice", k + 1));
+                }
+                if !w.is_finite() {
+                    return Err(format!("model: PC {} has a non-finite loading", k + 1));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of components K.
+    pub fn num_pcs(&self) -> usize {
+        self.pcs.len()
+    }
+
+    /// Serialize to bytes (header + payload + checksum).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        put_str(&mut p, &self.corpus_name);
+        put_u64(&mut p, self.num_docs);
+        put_u64(&mut p, self.n_features as u64);
+        put_u64(&mut p, self.vocab_hash);
+        put_u64(&mut p, self.seed);
+        put_f64(&mut p, self.elim_lambda);
+        put_u64(&mut p, self.kept.len() as u64);
+        for &k in &self.kept {
+            put_u64(&mut p, k as u64);
+        }
+        for &m in &self.kept_means {
+            put_f64(&mut p, m);
+        }
+        for &s in &self.kept_stds {
+            put_f64(&mut p, s);
+        }
+        for w in &self.kept_words {
+            put_str(&mut p, w);
+        }
+        put_u64(&mut p, self.pcs.len() as u64);
+        for pc in &self.pcs {
+            put_f64(&mut p, pc.lambda);
+            put_f64(&mut p, pc.phi);
+            put_f64(&mut p, pc.explained_variance);
+            put_u64(&mut p, pc.loadings.len() as u64);
+            for &(idx, w) in &pc.loadings {
+                put_u64(&mut p, idx as u64);
+                put_f64(&mut p, w);
+            }
+        }
+        let mut out = Vec::with_capacity(16 + p.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&p);
+        out.extend_from_slice(&checksum(&p).to_le_bytes());
+        out
+    }
+
+    /// Parse from bytes; verifies magic, version, checksum and internal
+    /// invariants.
+    pub fn from_bytes(buf: &[u8]) -> Result<Model, String> {
+        if buf.len() < 4 + 4 + 8 || &buf[..4] != MAGIC {
+            return Err("model: bad magic or truncated header".into());
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!("model: version {version}, want {VERSION}"));
+        }
+        let payload = &buf[8..buf.len() - 8];
+        let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        if checksum(payload) != stored {
+            return Err("model: checksum mismatch (corrupt artifact)".into());
+        }
+        let mut r = Reader::new(payload);
+        let corpus_name = r.str()?;
+        let num_docs = r.u64()?;
+        let n_features = r.u64()? as usize;
+        let vocab_hash = r.u64()?;
+        let seed = r.u64()?;
+        let elim_lambda = r.f64()?;
+        let nk = r.count("kept")?;
+        let mut kept = Vec::with_capacity(nk);
+        for _ in 0..nk {
+            kept.push(r.u64()? as usize);
+        }
+        let mut kept_means = Vec::with_capacity(nk);
+        for _ in 0..nk {
+            kept_means.push(r.f64()?);
+        }
+        let mut kept_stds = Vec::with_capacity(nk);
+        for _ in 0..nk {
+            kept_stds.push(r.f64()?);
+        }
+        let mut kept_words = Vec::with_capacity(nk);
+        for _ in 0..nk {
+            kept_words.push(r.str()?);
+        }
+        let npcs = r.count("pc")?;
+        let mut pcs = Vec::with_capacity(npcs);
+        for _ in 0..npcs {
+            let lambda = r.f64()?;
+            let phi = r.f64()?;
+            let explained_variance = r.f64()?;
+            let card = r.count("loading")?;
+            let mut loadings = Vec::with_capacity(card);
+            for _ in 0..card {
+                let idx = r.u64()? as usize;
+                let w = r.f64()?;
+                loadings.push((idx, w));
+            }
+            pcs.push(ModelPc { lambda, phi, explained_variance, loadings });
+        }
+        if !r.done() {
+            return Err("model: trailing bytes in payload".into());
+        }
+        let model = Model {
+            corpus_name,
+            num_docs,
+            n_features,
+            vocab_hash,
+            seed,
+            elim_lambda,
+            kept,
+            kept_means,
+            kept_stds,
+            kept_words,
+            pcs,
+        };
+        model.validate()?;
+        Ok(model)
+    }
+
+    /// Save to a file (creates parent directories).
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        self.validate()?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_bytes()).map_err(|e| format!("write {}: {e}", path.display()))
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Model, String> {
+        let buf =
+            std::fs::read(path).map_err(|e| format!("open model {}: {e}", path.display()))?;
+        Self::from_bytes(&buf).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Word string for an original feature index, resolved through the
+    /// kept map (`wNNNNN` fallback off the kept set).
+    pub fn word_of(&self, orig_idx: usize) -> String {
+        self.kept
+            .iter()
+            .position(|&k| k == orig_idx)
+            .map(|p| self.kept_words[p].clone())
+            .unwrap_or_else(|| format!("w{orig_idx}"))
+    }
+
+    /// Human-readable summary for `lsspca export`.
+    pub fn summary(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!(
+            "model: corpus={} docs={} n={} kept={} pcs={} (elim λ̂={:.4e}, vocab hash {:016x})\n",
+            self.corpus_name,
+            self.num_docs,
+            self.n_features,
+            self.kept.len(),
+            self.pcs.len(),
+            self.elim_lambda,
+            self.vocab_hash,
+        );
+        for (k, pc) in self.pcs.iter().enumerate() {
+            let words: Vec<String> = pc
+                .loadings
+                .iter()
+                .take(8)
+                .map(|&(i, w)| format!("{}:{w:+.3}", self.word_of(i)))
+                .collect();
+            let _ = writeln!(
+                s,
+                "  PC{}: card={} λ={:.4} φ={:.4} [{}]",
+                k + 1,
+                pc.loadings.len(),
+                pc.lambda,
+                pc.phi,
+                words.join(", ")
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub(crate) fn sample_model(seed: u64) -> Model {
+        let mut rng = Rng::seed_from(seed);
+        let n = 500usize;
+        let kept: Vec<usize> = (0..40).map(|i| i * 7 % n).collect();
+        let mut pcs = Vec::new();
+        for _ in 0..3 {
+            let card = 3 + rng.below(4);
+            let mut loadings: Vec<(usize, f64)> = rng
+                .sample_indices(kept.len(), card)
+                .into_iter()
+                .map(|p| (kept[p], rng.gauss()))
+                .collect();
+            loadings.sort_by(|a, b| b.1.abs().partial_cmp(&a.1.abs()).unwrap());
+            pcs.push(ModelPc {
+                lambda: rng.range_f64(0.1, 2.0),
+                phi: rng.range_f64(0.0, 5.0),
+                explained_variance: rng.range_f64(0.0, 5.0),
+                loadings,
+            });
+        }
+        Model {
+            corpus_name: "unit-test".into(),
+            num_docs: 1234,
+            n_features: n,
+            vocab_hash: 0xfeedbeef,
+            seed,
+            elim_lambda: 0.73,
+            kept_means: (0..40).map(|_| rng.gauss()).collect(),
+            kept_stds: (0..40).map(|_| rng.range_f64(0.1, 3.0)).collect(),
+            kept_words: (0..40).map(|i| format!("word{i}")).collect(),
+            kept,
+            pcs,
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_model_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_bitwise() {
+        let m = sample_model(1);
+        let p = tmp("rt.lspm");
+        m.save(&p).unwrap();
+        let got = Model::load(&p).unwrap();
+        assert_eq!(got, m);
+        // float fields compare bitwise through PartialEq on f64 only when
+        // equal values; pin the bits explicitly for one series
+        for (a, b) in got.kept_means.iter().zip(&m.kept_means) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let m = sample_model(2);
+        let bytes = m.to_bytes();
+        // flip each of a spread of bytes; every flip must be caught by the
+        // checksum (or magic/version check)
+        for at in [0usize, 5, 16, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let mut b = bytes.clone();
+            b[at] ^= 0x40;
+            assert!(Model::from_bytes(&b).is_err(), "flip at {at} accepted");
+        }
+        // truncation at any point must error, never panic
+        for cut in [0, 3, 8, 20, bytes.len() / 3, bytes.len() - 1] {
+            assert!(Model::from_bytes(&bytes[..cut]).is_err(), "truncated at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let m = sample_model(3);
+        let mut b = m.to_bytes();
+        b[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let e = Model::from_bytes(&b).unwrap_err();
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn validate_catches_inconsistencies() {
+        let mut m = sample_model(4);
+        m.kept_means.pop();
+        assert!(m.validate().is_err());
+
+        let mut m = sample_model(5);
+        m.pcs[0].loadings[0].0 = m.n_features + 10; // outside kept set & range
+        assert!(m.validate().is_err());
+
+        let mut m = sample_model(6);
+        m.pcs.clear();
+        assert!(m.validate().is_err());
+
+        let mut m = sample_model(7);
+        m.kept[1] = m.kept[0]; // duplicate
+        assert!(m.validate().is_err());
+
+        let mut m = sample_model(9);
+        let first = m.pcs[0].loadings[0];
+        m.pcs[0].loadings.push(first); // same feature loaded twice in one PC
+        let e = m.validate().unwrap_err();
+        assert!(e.contains("twice"), "{e}");
+    }
+
+    #[test]
+    fn vocab_hash_distinguishes() {
+        let a = Vocab::new(vec!["alpha".into(), "beta".into()]);
+        let b = Vocab::new(vec!["alpha".into(), "gamma".into()]);
+        let c = Vocab::new(vec!["alphabeta".into()]); // separator must matter
+        assert_ne!(vocab_hash(&a), vocab_hash(&b));
+        assert_ne!(vocab_hash(&a), vocab_hash(&c));
+        assert_eq!(vocab_hash(&a), vocab_hash(&a.clone()));
+    }
+
+    #[test]
+    fn word_of_resolves_and_falls_back() {
+        let m = sample_model(8);
+        let orig = m.kept[3];
+        assert_eq!(m.word_of(orig), "word3");
+        // an index off the kept set gets the synthetic name
+        let off = (0..m.n_features).find(|i| !m.kept.contains(i)).unwrap();
+        assert_eq!(m.word_of(off), format!("w{off}"));
+    }
+}

@@ -1,0 +1,256 @@
+//! Batch scoring: stream a docword corpus through the scorer and write
+//! one CSV row per document.
+//!
+//! The stream is consumed in chunks (the same [`ChunkSource`] abstraction
+//! the training passes use); within a chunk the per-document projections
+//! run on [`crate::util::parallel::par_map_indexed`] workers and are
+//! written back in document order, so the output file is **byte-identical
+//! for any thread count** — the same determinism contract as the training
+//! side. Scores are formatted with Rust's shortest-roundtrip `f64`
+//! Display, so parsing a CSV cell back yields the bitwise-identical f64
+//! the in-memory scorer produced.
+//!
+//! CSV schema (`top` = requested assignment depth):
+//!
+//! ```text
+//! doc_id,pc1,...,pcK,top_pcs
+//! 17,0.25,-1.5,...,"3;1"
+//! ```
+//!
+//! `doc_id` is 1-based to match the UCI docword ids; `top_pcs` lists the
+//! top-`top` component ids (1-based) by decreasing score, `;`-separated.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::score::scorer::Scorer;
+use crate::stream::{ChunkSource, FileSource};
+use crate::util::timer::Timer;
+
+/// Options for a batch scoring pass.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOptions {
+    /// Worker threads per chunk (0 = all cores, 1 = serial).
+    pub threads: usize,
+    /// Documents per streamed chunk.
+    pub chunk_docs: usize,
+    /// Top-k assignment depth (clamped to [1, K]).
+    pub top: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { threads: 1, chunk_docs: 2048, top: 1 }
+    }
+}
+
+/// Statistics from a completed batch pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    pub docs: u64,
+    pub nnz: u64,
+    pub seconds: f64,
+}
+
+impl BatchStats {
+    pub fn docs_per_sec(&self) -> f64 {
+        self.docs as f64 / self.seconds.max(1e-12)
+    }
+}
+
+/// Render one document's CSV row (no trailing newline).
+fn row(doc_id: usize, scorer: &Scorer, words: &[(u32, f64)], top: usize) -> Result<String, String> {
+    let scores = scorer.score(words)?;
+    let mut line = String::with_capacity(16 * (scores.len() + 2));
+    let _ = write!(line, "{}", doc_id + 1);
+    for s in &scores {
+        let _ = write!(line, ",{s}");
+    }
+    let tops: Vec<String> =
+        Scorer::top_pcs(&scores, top).into_iter().map(|p| (p + 1).to_string()).collect();
+    let _ = write!(line, ",\"{}\"", tops.join(";"));
+    Ok(line)
+}
+
+/// Score every document of `source`, writing CSV to `out`.
+pub fn score_stream<S: ChunkSource>(
+    source: &mut S,
+    scorer: &Scorer,
+    opts: BatchOptions,
+    out: &mut dyn std::io::Write,
+) -> Result<BatchStats, String> {
+    if source.num_features() != scorer.n_features() {
+        return Err(format!(
+            "dimension mismatch: corpus has W={} features, model was trained with n={}",
+            source.num_features(),
+            scorer.n_features()
+        ));
+    }
+    let t = Timer::start();
+    let top = opts.top.clamp(1, scorer.num_pcs());
+    let mut header = String::from("doc_id");
+    for k in 0..scorer.num_pcs() {
+        let _ = write!(header, ",pc{}", k + 1);
+    }
+    header.push_str(",top_pcs\n");
+    out.write_all(header.as_bytes()).map_err(|e| format!("write csv: {e}"))?;
+    let mut stats = BatchStats::default();
+    while let Some(chunk) = source.next_chunk(opts.chunk_docs.max(1))? {
+        stats.docs += chunk.docs.len() as u64;
+        stats.nnz += chunk.total_nnz() as u64;
+        let lines = crate::util::parallel::par_map_indexed(opts.threads, chunk.docs.len(), |i| {
+            let d = &chunk.docs[i];
+            row(d.id, scorer, &d.words, top)
+        });
+        for line in lines {
+            let line = line?;
+            out.write_all(line.as_bytes()).map_err(|e| format!("write csv: {e}"))?;
+            out.write_all(b"\n").map_err(|e| format!("write csv: {e}"))?;
+        }
+    }
+    out.flush().map_err(|e| format!("flush csv: {e}"))?;
+    stats.seconds = t.secs();
+    Ok(stats)
+}
+
+/// Score a docword file (optionally `.gz`) to a CSV file.
+pub fn score_file(
+    input: &Path,
+    scorer: &Scorer,
+    opts: BatchOptions,
+    out_path: &Path,
+) -> Result<BatchStats, String> {
+    let mut src = FileSource::open(input)?;
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        }
+    }
+    let f = std::fs::File::create(out_path)
+        .map_err(|e| format!("create {}: {e}", out_path.display()))?;
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+    let stats = score_stream(&mut src, scorer, opts, &mut w)?;
+    w.flush().map_err(|e| format!("flush {}: {e}", out_path.display()))?;
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusSpec, SynthCorpus};
+    use crate::model::{Model, ModelPc};
+    use crate::score::scorer::ScoreOptions;
+    use crate::stream::SynthSource;
+
+    fn model_for(corpus: &SynthCorpus) -> Model {
+        // Hand-built 2-PC model over the first two planted topics.
+        let t0 = &corpus.topic_word_ids[0];
+        let t1 = &corpus.topic_word_ids[1];
+        let kept: Vec<usize> = t0.iter().chain(t1.iter()).copied().collect();
+        let nk = kept.len();
+        Model {
+            corpus_name: "batch-test".into(),
+            num_docs: corpus.spec.num_docs as u64,
+            n_features: corpus.spec.vocab_size,
+            vocab_hash: 0,
+            seed: corpus.seed,
+            elim_lambda: 0.5,
+            kept_means: vec![0.1; nk],
+            kept_stds: vec![1.0; nk],
+            kept_words: kept.iter().map(|&i| corpus.vocab.word(i)).collect(),
+            pcs: vec![
+                ModelPc {
+                    lambda: 0.4,
+                    phi: 1.0,
+                    explained_variance: 1.0,
+                    loadings: t0.iter().map(|&i| (i, 0.5)).collect(),
+                },
+                ModelPc {
+                    lambda: 0.4,
+                    phi: 0.8,
+                    explained_variance: 0.8,
+                    loadings: t1.iter().map(|&i| (i, 0.5)).collect(),
+                },
+            ],
+            kept,
+        }
+    }
+
+    #[test]
+    fn csv_identical_for_any_thread_count() {
+        let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(150, 1500), 31);
+        let scorer = Scorer::new(&model_for(&corpus), ScoreOptions::default()).unwrap();
+        let mut outputs = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let mut buf = Vec::new();
+            let opts = BatchOptions { threads, chunk_docs: 37, top: 2 };
+            let stats =
+                score_stream(&mut SynthSource::new(&corpus), &scorer, opts, &mut buf).unwrap();
+            assert_eq!(stats.docs, 150);
+            outputs.push(buf);
+        }
+        assert_eq!(outputs[0], outputs[1]);
+        assert_eq!(outputs[0], outputs[2]);
+    }
+
+    #[test]
+    fn csv_rows_match_in_memory_scores_bitwise() {
+        let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(40, 1500), 32);
+        let scorer = Scorer::new(&model_for(&corpus), ScoreOptions::default()).unwrap();
+        let mut buf = Vec::new();
+        score_stream(
+            &mut SynthSource::new(&corpus),
+            &scorer,
+            BatchOptions::default(),
+            &mut buf,
+        )
+        .unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "doc_id,pc1,pc2,top_pcs");
+        for (d, line) in lines.enumerate() {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert_eq!(cells[0], (d + 1).to_string());
+            let want = scorer.score(&corpus.generate_doc(d)).unwrap();
+            for (k, w) in want.iter().enumerate() {
+                let got: f64 = cells[1 + k].parse().unwrap();
+                assert_eq!(got.to_bits(), w.to_bits(), "doc {d} pc {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(10, 1500), 33);
+        let mut model = model_for(&corpus);
+        model.n_features = 999_999; // model trained on a different vocab size
+        let scorer = Scorer::new(&model, ScoreOptions::default()).unwrap();
+        let mut buf = Vec::new();
+        let e = score_stream(
+            &mut SynthSource::new(&corpus),
+            &scorer,
+            BatchOptions::default(),
+            &mut buf,
+        )
+        .unwrap_err();
+        assert!(e.contains("dimension mismatch"), "{e}");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(25, 1500), 34);
+        let scorer = Scorer::new(&model_for(&corpus), ScoreOptions::default()).unwrap();
+        let mut dw = std::env::temp_dir();
+        dw.push(format!("lsspca_batch_{}.txt.gz", std::process::id()));
+        corpus.write_docword(&dw).unwrap();
+        let csv = dw.with_extension("csv");
+        let stats = score_file(&dw, &scorer, BatchOptions::default(), &csv).unwrap();
+        assert_eq!(stats.docs, 25);
+        let text = std::fs::read_to_string(&csv).unwrap();
+        assert_eq!(text.lines().count(), 26); // header + one per doc
+        std::fs::remove_file(&dw).ok();
+        std::fs::remove_file(dw.with_extension("vocab")).ok();
+        std::fs::remove_file(&csv).ok();
+    }
+}

@@ -1,0 +1,24 @@
+//! The inference half of the system: project new bag-of-words documents
+//! onto a trained sparse-PCA [`Model`](crate::model::Model).
+//!
+//! The paper's end product is a set of sparse PCs that organize a corpus
+//! in a user-interpretable way; this module is what makes them *usable*
+//! downstream (Luss & d'Aspremont use exactly this projection for
+//! clustering and feature selection):
+//!
+//! - [`scorer`] — the core sparse dot-product projection: O(doc nnz ·
+//!   avg PCs per word) per document, independent of the vocabulary size.
+//! - [`batch`] — stream a docword file through sharded workers and write
+//!   per-document scores + top-k topic assignments as CSV,
+//!   deterministically for any thread count.
+//! - [`server`] — a zero-dependency HTTP/1.1 JSON server
+//!   (`std::net::TcpListener`, thread-per-connection pool) exposing
+//!   `/score`, `/topics` and `/healthz`.
+
+pub mod batch;
+pub mod scorer;
+pub mod server;
+
+pub use batch::{score_file, score_stream, BatchOptions, BatchStats};
+pub use scorer::{ScoreOptions, Scorer};
+pub use server::{serve, ServeOptions, Server};

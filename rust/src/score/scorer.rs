@@ -1,0 +1,272 @@
+//! Sparse projection of a bag-of-words document onto K sparse PCs.
+//!
+//! For component k with loadings `v_k` (supported on a handful of
+//! original-space features), the topic score of a document with counts
+//! `x` is
+//!
+//! ```text
+//! s_k = Σ_j w_kj · x_j  −  offset_k        with w_kj = v_kj (raw)
+//!                                         or  w_kj = v_kj / σ_j (normalized)
+//! ```
+//!
+//! where `offset_k = Σ_j w_kj · μ_j` folds mean-centering into a single
+//! precomputed constant (x − μ never materializes: the vocabulary is
+//! large, documents are sparse, and only support features have nonzero
+//! weight). The per-document cost is O(nnz(doc)) hash lookups — the
+//! scoring engine never touches the vocabulary dimension.
+//!
+//! Determinism: the inverted index is built in (PC, loading-rank) order
+//! and accumulation follows the document's word order, so for documents
+//! presented in sorted word order (the docword convention; the HTTP
+//! server sorts request payloads before scoring) batch scoring, serving,
+//! and in-memory scoring produce bitwise-identical f64s.
+
+use std::collections::HashMap;
+
+use crate::model::Model;
+
+/// Scoring-time options.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoreOptions {
+    /// Subtract the training means (fold `−Σ w·μ` into the score). The
+    /// training covariance is centered, so this is the default.
+    pub center: bool,
+    /// Divide each loading by the feature's training standard deviation
+    /// (correlation-style scoring). Zero-variance features score 0.
+    pub normalize: bool,
+}
+
+impl Default for ScoreOptions {
+    fn default() -> Self {
+        ScoreOptions { center: true, normalize: false }
+    }
+}
+
+/// A compiled scorer: inverted index from original feature index to the
+/// components that load it.
+pub struct Scorer {
+    k: usize,
+    n_features: usize,
+    /// orig feature → [(pc index, weight)] in PC order.
+    index: HashMap<u32, Vec<(u32, f64)>>,
+    /// Per-PC centering offset, stored already negated (`−Σ w·μ`, with
+    /// a zero sum normalized to +0.0 so uncentered scores never render
+    /// as `-0`); all zeros when `center` is off.
+    neg_offsets: Vec<f64>,
+    opts: ScoreOptions,
+}
+
+impl Scorer {
+    /// Compile a scorer from a model. Fails on a model whose loadings
+    /// reference features outside the kept set (validated shape).
+    pub fn new(model: &Model, opts: ScoreOptions) -> Result<Scorer, String> {
+        model.validate()?;
+        let k = model.num_pcs();
+        // orig index → position in the kept map (for μ/σ lookups)
+        let kept_pos: HashMap<usize, usize> =
+            model.kept.iter().enumerate().map(|(p, &orig)| (orig, p)).collect();
+        let mut index: HashMap<u32, Vec<(u32, f64)>> = HashMap::new();
+        let mut offsets = vec![0.0f64; k];
+        for (pc_idx, pc) in model.pcs.iter().enumerate() {
+            for &(orig, loading) in &pc.loadings {
+                let pos = *kept_pos
+                    .get(&orig)
+                    .ok_or_else(|| format!("PC {} loads unknown feature {orig}", pc_idx + 1))?;
+                let weight = if opts.normalize {
+                    let s = model.kept_stds[pos];
+                    if s > 0.0 {
+                        loading / s
+                    } else {
+                        // constant feature: centered value is identically 0
+                        0.0
+                    }
+                } else {
+                    loading
+                };
+                if opts.center {
+                    offsets[pc_idx] += weight * model.kept_means[pos];
+                }
+                index
+                    .entry(orig as u32)
+                    .or_default()
+                    .push((pc_idx as u32, weight));
+            }
+        }
+        let neg_offsets = offsets.iter().map(|&o| if o == 0.0 { 0.0 } else { -o }).collect();
+        Ok(Scorer { k, n_features: model.n_features, index, neg_offsets, opts })
+    }
+
+    /// Number of components K.
+    pub fn num_pcs(&self) -> usize {
+        self.k
+    }
+
+    /// Original-space feature count the model was trained on.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Options the scorer was compiled with.
+    pub fn options(&self) -> ScoreOptions {
+        self.opts
+    }
+
+    /// Score one document (sorted `(word_id_0based, count)` pairs) into
+    /// `out` (length K). Word ids outside the model's feature range are
+    /// an error (dimension mismatch, not a zero score).
+    pub fn score_into(&self, words: &[(u32, f64)], out: &mut [f64]) -> Result<(), String> {
+        assert_eq!(out.len(), self.k);
+        out.copy_from_slice(&self.neg_offsets);
+        for &(w, c) in words {
+            if w as usize >= self.n_features {
+                return Err(format!(
+                    "word id {w} out of range for model with n={}",
+                    self.n_features
+                ));
+            }
+            if let Some(entries) = self.index.get(&w) {
+                for &(pc, weight) in entries {
+                    out[pc as usize] += weight * c;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper around [`score_into`](Self::score_into).
+    pub fn score(&self, words: &[(u32, f64)]) -> Result<Vec<f64>, String> {
+        let mut out = vec![0.0; self.k];
+        self.score_into(words, &mut out)?;
+        Ok(out)
+    }
+
+    /// Top-k component indices by decreasing score, ties broken toward
+    /// the lower PC index (deterministic assignment). `top` is taken as
+    /// at least 1 and at most K.
+    pub fn top_pcs(scores: &[f64], top: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| {
+            scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let take = match top {
+            0 => 1usize.min(scores.len()),
+            t => t.min(scores.len()),
+        };
+        idx.truncate(take);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Model, ModelPc};
+
+    fn tiny_model() -> Model {
+        // n = 10, kept = {2, 5, 7}, two PCs
+        Model {
+            corpus_name: "tiny".into(),
+            num_docs: 4,
+            n_features: 10,
+            vocab_hash: 0,
+            seed: 0,
+            elim_lambda: 0.1,
+            kept: vec![2, 5, 7],
+            kept_means: vec![1.0, 0.5, 2.0],
+            kept_stds: vec![2.0, 1.0, 4.0],
+            kept_words: vec!["a".into(), "b".into(), "c".into()],
+            pcs: vec![
+                ModelPc {
+                    lambda: 0.3,
+                    phi: 1.0,
+                    explained_variance: 1.0,
+                    loadings: vec![(2, 0.8), (5, -0.6)],
+                },
+                ModelPc {
+                    lambda: 0.3,
+                    phi: 0.5,
+                    explained_variance: 0.5,
+                    loadings: vec![(7, 1.0)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn raw_projection() {
+        let s = Scorer::new(&tiny_model(), ScoreOptions { center: false, normalize: false })
+            .unwrap();
+        // doc: word 2 ×3, word 5 ×1, word 9 ×2 (off-support → no effect)
+        let scores = s.score(&[(2, 3.0), (5, 1.0), (9, 2.0)]).unwrap();
+        assert_eq!(scores.len(), 2);
+        assert!((scores[0] - (0.8 * 3.0 - 0.6 * 1.0)).abs() < 1e-15);
+        assert_eq!(scores[1], 0.0);
+    }
+
+    #[test]
+    fn centering_subtracts_mean_projection() {
+        let s = Scorer::new(&tiny_model(), ScoreOptions { center: true, normalize: false })
+            .unwrap();
+        // centered score of the mean document must be 0 on every PC:
+        // x = μ on the kept set
+        let scores = s.score(&[(2, 1.0), (5, 0.5), (7, 2.0)]).unwrap();
+        for sc in scores {
+            assert!(sc.abs() < 1e-12, "{sc}");
+        }
+    }
+
+    #[test]
+    fn normalization_divides_by_std() {
+        let s = Scorer::new(&tiny_model(), ScoreOptions { center: false, normalize: true })
+            .unwrap();
+        let scores = s.score(&[(2, 2.0)]).unwrap();
+        assert!((scores[0] - 0.8 / 2.0 * 2.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn zero_std_feature_scores_zero() {
+        let mut m = tiny_model();
+        m.kept_stds[0] = 0.0;
+        let s = Scorer::new(&m, ScoreOptions { center: true, normalize: true }).unwrap();
+        let scores = s.score(&[(2, 100.0)]).unwrap();
+        assert_eq!(scores[0], 0.0);
+    }
+
+    #[test]
+    fn uncentered_empty_doc_scores_positive_zero() {
+        // offsets are stored pre-negated; a zero offset must stay +0.0
+        // so CSV/JSON never render "-0"
+        let s = Scorer::new(&tiny_model(), ScoreOptions { center: false, normalize: false })
+            .unwrap();
+        for sc in s.score(&[]).unwrap() {
+            assert_eq!(sc.to_bits(), 0.0f64.to_bits(), "{sc}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_word_is_an_error() {
+        let s = Scorer::new(&tiny_model(), ScoreOptions::default()).unwrap();
+        let e = s.score(&[(10, 1.0)]).unwrap_err();
+        assert!(e.contains("out of range"), "{e}");
+    }
+
+    #[test]
+    fn top_pcs_deterministic_ties() {
+        assert_eq!(Scorer::top_pcs(&[1.0, 3.0, 3.0, 2.0], 2), vec![1, 2]);
+        assert_eq!(Scorer::top_pcs(&[0.0, 0.0], 1), vec![0]);
+        // top larger than K clamps
+        assert_eq!(Scorer::top_pcs(&[1.0, 2.0], 5), vec![1, 0]);
+    }
+
+    #[test]
+    fn deterministic_bitwise_repeat() {
+        let s = Scorer::new(&tiny_model(), ScoreOptions { center: true, normalize: true })
+            .unwrap();
+        let doc = [(2u32, 3.0), (5, 2.0), (7, 1.0)];
+        let a = s.score(&doc).unwrap();
+        let b = s.score(&doc).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

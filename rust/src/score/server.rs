@@ -1,0 +1,562 @@
+//! `lsspca serve` — a zero-dependency HTTP/1.1 scoring server.
+//!
+//! Built directly on [`std::net::TcpListener`] with the repo's own
+//! bounded channel as the connection queue: one acceptor thread feeds a
+//! fixed pool of connection-handler threads (the `serve.pool` knob), so
+//! a slow client occupies one worker, never the acceptor, and the queue
+//! applies backpressure under overload. Every response carries
+//! `Connection: close` — one request per connection keeps the handler
+//! loop trivially robust, and the OS connection setup cost is dwarfed by
+//! scoring at the payload sizes involved.
+//!
+//! Routes (JSON in/out):
+//!
+//! - `GET /healthz` — liveness + model identity.
+//! - `GET /topics` — the K sparse PCs with words and loadings (the
+//!   paper's topic tables, as an API).
+//! - `POST /score` — project one document: `{"words": [[id, count],
+//!   ...]}` (0-based original-space ids) and/or `{"terms": {"word":
+//!   count, ...}}`; optional `"top": k`. Terms not in the model's kept
+//!   set have zero weight on every PC and are reported in
+//!   `unknown_terms` rather than silently dropped.
+//!
+//! Request bodies are size-capped and parse through the depth-limited
+//! [`crate::util::json`] parser; malformed input gets a 4xx JSON error,
+//! never a worker panic.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::model::Model;
+use crate::score::scorer::Scorer;
+use crate::stream::bounded;
+use crate::util::json::{arr_f64, obj, Json};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
+    pub addr: String,
+    /// Connection-handler threads.
+    pub pool: usize,
+    /// Maximum accepted request-body size in bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { addr: "127.0.0.1:7878".into(), pool: 4, max_body_bytes: 1 << 20 }
+    }
+}
+
+/// A bound (not yet running) server.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    opts: ServeOptions,
+}
+
+struct ServerState {
+    model: Model,
+    scorer: Scorer,
+    /// word string → original feature index, for `terms` payloads.
+    term_index: HashMap<String, usize>,
+    shutdown: AtomicBool,
+    addr: SocketAddr,
+}
+
+/// Cloneable handle to stop a running server (used by tests and signal
+/// handlers; `shutdown` is idempotent).
+#[derive(Clone)]
+pub struct ServerHandle {
+    state: Arc<ServerState>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and unblock the acceptor with a dummy connection.
+    pub fn shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept(); a failed connect is fine (listener
+        // may already be gone).
+        let _ = TcpStream::connect(self.state.addr);
+    }
+}
+
+impl Server {
+    /// Bind the listener and compile the routing state.
+    pub fn bind(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<Server, String> {
+        if opts.pool == 0 {
+            return Err("serve.pool must be >= 1".into());
+        }
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| format!("bind {}: {e}", opts.addr))?;
+        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+        let term_index = model
+            .kept
+            .iter()
+            .zip(&model.kept_words)
+            .map(|(&orig, w)| (w.clone(), orig))
+            .collect();
+        let state = Arc::new(ServerState {
+            model,
+            scorer,
+            term_index,
+            shutdown: AtomicBool::new(false),
+            addr,
+        });
+        Ok(Server { listener, state, opts })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// A shutdown handle.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { state: Arc::clone(&self.state) }
+    }
+
+    /// Accept connections until [`ServerHandle::shutdown`] is called.
+    /// Blocks the calling thread; handlers run on `opts.pool` workers.
+    pub fn run(self) -> Result<(), String> {
+        let Server { listener, state, opts } = self;
+        crate::info!(
+            "serving model '{}' ({} PCs) on http://{} with {} workers",
+            state.model.corpus_name,
+            state.model.num_pcs(),
+            state.addr,
+            opts.pool
+        );
+        std::thread::scope(|scope| {
+            let (tx, rx) = bounded::<TcpStream>(2 * opts.pool);
+            for _ in 0..opts.pool {
+                let rx = rx.clone();
+                let state = Arc::clone(&state);
+                let max_body = opts.max_body_bytes;
+                scope.spawn(move || {
+                    while let Some(stream) = rx.recv() {
+                        handle_connection(stream, &state, max_body);
+                    }
+                });
+            }
+            drop(rx);
+            for incoming in listener.incoming() {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                match incoming {
+                    Ok(stream) => {
+                        if tx.send(stream).is_err() {
+                            break; // all workers gone
+                        }
+                    }
+                    Err(e) => {
+                        crate::warn_!("accept error: {e}");
+                    }
+                }
+            }
+            tx.close();
+        });
+        Ok(())
+    }
+}
+
+/// Bind and run in one call (the `lsspca serve` entrypoint).
+pub fn serve(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<(), String> {
+    Server::bind(model, scorer, opts)?.run()
+}
+
+// ---------------------------------------------------------------------------
+// Connection handling
+// ---------------------------------------------------------------------------
+
+fn handle_connection(stream: TcpStream, state: &ServerState, max_body: usize) {
+    // A stuck client must not pin a pool worker forever.
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut out = stream;
+    let (status, body) = match read_request(&mut reader, max_body) {
+        Ok(req) => route(&req, state),
+        Err(e) => (400, obj(vec![("error", Json::Str(e))])),
+    };
+    let _ = write_response(&mut out, status, &body.to_string());
+}
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Hard cap on one request's head (request line + headers). The body has
+/// its own `max_body` cap; without this, a client streaming bytes with no
+/// newline would grow `read_line`'s String without bound.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// `read_line` with a byte budget: errors once the cumulative head size
+/// exceeds [`MAX_HEAD_BYTES`] instead of buffering indefinitely.
+fn read_head_line(
+    reader: &mut BufReader<TcpStream>,
+    budget: &mut usize,
+    what: &str,
+) -> Result<String, String> {
+    let mut line = String::new();
+    let n = reader
+        .take(*budget as u64 + 1)
+        .read_line(&mut line)
+        .map_err(|e| format!("read {what}: {e}"))?;
+    if n > *budget {
+        return Err(format!("request head too large (> {MAX_HEAD_BYTES} bytes)"));
+    }
+    *budget -= n;
+    Ok(line)
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>, max_body: usize) -> Result<Request, String> {
+    let mut budget = MAX_HEAD_BYTES;
+    let line = read_head_line(reader, &mut budget, "request line")?;
+    let mut parts = line.split_ascii_whitespace();
+    let method = parts.next().ok_or("empty request line")?.to_string();
+    let target = parts.next().ok_or("missing request target")?.to_string();
+    // ignore query string; route on the path only
+    let path = target.split('?').next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    loop {
+        let h = read_head_line(reader, &mut budget, "header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("bad Content-Length '{}'", value.trim()))?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(format!("request body too large ({content_length} > {max_body} bytes)"));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).map_err(|e| format!("read body: {e}"))?;
+    Ok(Request { method, path, body })
+}
+
+fn write_response(out: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Error",
+    };
+    write!(
+        out,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    out.flush()
+}
+
+fn route(req: &Request, state: &ServerState) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (
+            200,
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(state.model.corpus_name.clone())),
+                ("pcs", Json::Num(state.model.num_pcs() as f64)),
+                ("kept", Json::Num(state.model.kept.len() as f64)),
+                ("n_features", Json::Num(state.model.n_features as f64)),
+            ]),
+        ),
+        ("GET", "/topics") => (200, topics_json(&state.model)),
+        ("POST", "/score") => score_route(req, state),
+        ("GET", "/score") => {
+            (405, obj(vec![("error", Json::Str("POST a JSON document to /score".into()))]))
+        }
+        _ => (404, obj(vec![("error", Json::Str(format!("no route for {}", req.path)))])),
+    }
+}
+
+fn topics_json(model: &Model) -> Json {
+    let topics: Vec<Json> = model
+        .pcs
+        .iter()
+        .enumerate()
+        .map(|(k, pc)| {
+            let words: Vec<Json> = pc
+                .loadings
+                .iter()
+                .map(|&(idx, w)| {
+                    obj(vec![
+                        ("word", Json::Str(model.word_of(idx))),
+                        ("index", Json::Num(idx as f64)),
+                        ("loading", Json::Num(w)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("pc", Json::Num((k + 1) as f64)),
+                ("lambda", Json::Num(pc.lambda)),
+                ("phi", Json::Num(pc.phi)),
+                ("explained_variance", Json::Num(pc.explained_variance)),
+                ("words", Json::Arr(words)),
+            ])
+        })
+        .collect();
+    obj(vec![("topics", Json::Arr(topics))])
+}
+
+fn score_route(req: &Request, state: &ServerState) -> (u16, Json) {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return (400, obj(vec![("error", Json::Str("body is not utf-8".into()))])),
+    };
+    let payload = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => return (400, obj(vec![("error", Json::Str(format!("bad JSON: {e}")))])),
+    };
+    let mut words: Vec<(u32, f64)> = Vec::new();
+    let mut unknown_terms = 0u64;
+    let mut saw_input = false;
+    if let Some(ws) = payload.get("words") {
+        saw_input = true;
+        let Some(items) = ws.as_array() else {
+            return (400, obj(vec![("error", Json::Str("\"words\" must be an array".into()))]));
+        };
+        for item in items {
+            let pair = item.as_array().unwrap_or(&[]);
+            let (Some(id), Some(count)) =
+                (pair.first().and_then(Json::as_f64), pair.get(1).and_then(Json::as_f64))
+            else {
+                return (
+                    400,
+                    obj(vec![(
+                        "error",
+                        Json::Str("\"words\" entries must be [id, count] pairs".into()),
+                    )]),
+                );
+            };
+            if !(id.fract() == 0.0 && id >= 0.0 && id < u32::MAX as f64) || !count.is_finite() {
+                return (
+                    400,
+                    obj(vec![(
+                        "error",
+                        Json::Str(format!("invalid word entry [{id}, {count}]")),
+                    )]),
+                );
+            }
+            words.push((id as u32, count));
+        }
+    }
+    if let Some(terms) = payload.get("terms") {
+        saw_input = true;
+        let Json::Obj(pairs) = terms else {
+            return (400, obj(vec![("error", Json::Str("\"terms\" must be an object".into()))]));
+        };
+        // Duplicate keys: last occurrence wins, matching `Json::get`'s
+        // lookup semantics (scoring both would double-count the term).
+        let mut last_at: HashMap<&str, usize> = HashMap::with_capacity(pairs.len());
+        for (i, (term, _)) in pairs.iter().enumerate() {
+            last_at.insert(term.as_str(), i);
+        }
+        for (i, (term, count)) in pairs.iter().enumerate() {
+            if last_at[term.as_str()] != i {
+                continue; // superseded by a later duplicate
+            }
+            let Some(c) = count.as_f64().filter(|c| c.is_finite()) else {
+                return (
+                    400,
+                    obj(vec![("error", Json::Str(format!("bad count for term '{term}'")))]),
+                );
+            };
+            match state.term_index.get(term) {
+                Some(&orig) => words.push((orig as u32, c)),
+                // outside the kept set every PC weight is exactly 0, so
+                // the score is unaffected; report instead of dropping
+                None => unknown_terms += 1,
+            }
+        }
+    }
+    if !saw_input {
+        return (
+            400,
+            obj(vec![(
+                "error",
+                Json::Str(
+                    "provide \"words\": [[id, count], ...] and/or \"terms\": {word: count}".into(),
+                ),
+            )]),
+        );
+    }
+    let top = payload
+        .get("top")
+        .and_then(Json::as_f64)
+        .map(|t| t.max(1.0) as usize)
+        .unwrap_or(1);
+    // Canonicalize to sorted word order (stable, so equal ids keep their
+    // payload order): f64 addition is order-sensitive, and the bitwise
+    // agreement with batch/in-memory scoring assumes docword ordering.
+    words.sort_by_key(|&(w, _)| w);
+    match state.scorer.score(&words) {
+        Ok(scores) => {
+            let tops: Vec<Json> = Scorer::top_pcs(&scores, top)
+                .into_iter()
+                .map(|p| Json::Num((p + 1) as f64))
+                .collect();
+            (
+                200,
+                obj(vec![
+                    ("scores", arr_f64(&scores)),
+                    ("top_pcs", Json::Arr(tops)),
+                    ("unknown_terms", Json::Num(unknown_terms as f64)),
+                ]),
+            )
+        }
+        Err(e) => (400, obj(vec![("error", Json::Str(e))])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelPc;
+    use crate::score::scorer::ScoreOptions;
+
+    fn test_model() -> Model {
+        Model {
+            corpus_name: "srv-test".into(),
+            num_docs: 10,
+            n_features: 100,
+            vocab_hash: 0,
+            seed: 1,
+            elim_lambda: 0.2,
+            kept: vec![3, 8, 15],
+            kept_means: vec![0.0, 0.0, 0.0],
+            kept_stds: vec![1.0, 1.0, 1.0],
+            kept_words: vec!["alpha".into(), "beta".into(), "gamma".into()],
+            pcs: vec![
+                ModelPc {
+                    lambda: 0.5,
+                    phi: 1.0,
+                    explained_variance: 1.0,
+                    loadings: vec![(3, 0.6), (8, 0.8)],
+                },
+                ModelPc {
+                    lambda: 0.5,
+                    phi: 0.7,
+                    explained_variance: 0.7,
+                    loadings: vec![(15, 1.0)],
+                },
+            ],
+        }
+    }
+
+    fn state() -> ServerState {
+        let model = test_model();
+        let scorer = Scorer::new(&model, ScoreOptions { center: false, normalize: false }).unwrap();
+        let term_index = model
+            .kept
+            .iter()
+            .zip(&model.kept_words)
+            .map(|(&orig, w)| (w.clone(), orig))
+            .collect();
+        let addr: SocketAddr = "127.0.0.1:0".parse().unwrap();
+        ServerState { model, scorer, term_index, shutdown: AtomicBool::new(false), addr }
+    }
+
+    fn post_score(body: &str) -> (u16, Json) {
+        let req = Request {
+            method: "POST".into(),
+            path: "/score".into(),
+            body: body.as_bytes().to_vec(),
+        };
+        route(&req, &state())
+    }
+
+    #[test]
+    fn score_by_words() {
+        let (code, v) = post_score(r#"{"words": [[3, 2], [15, 1]], "top": 2}"#);
+        assert_eq!(code, 200, "{v:?}");
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert!((scores[0].as_f64().unwrap() - 1.2).abs() < 1e-12);
+        assert!((scores[1].as_f64().unwrap() - 1.0).abs() < 1e-12);
+        let tops = v.get("top_pcs").unwrap().as_array().unwrap();
+        assert_eq!(tops[0].as_f64(), Some(1.0));
+        assert_eq!(tops[1].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn score_by_terms_counts_unknown() {
+        let (code, v) = post_score(r#"{"terms": {"alpha": 1, "nosuchword": 3}}"#);
+        assert_eq!(code, 200, "{v:?}");
+        assert_eq!(v.get("unknown_terms").unwrap().as_f64(), Some(1.0));
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert!((scores[0].as_f64().unwrap() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_terms_last_occurrence_wins() {
+        // must match Json::get's last-wins lookup, not double-count
+        let (code, v) = post_score(r#"{"terms": {"alpha": 1, "alpha": 2}}"#);
+        assert_eq!(code, 200, "{v:?}");
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert!((scores[0].as_f64().unwrap() - 0.6 * 2.0).abs() < 1e-12, "{scores:?}");
+    }
+
+    #[test]
+    fn bad_payloads_rejected() {
+        for body in [
+            "not json",
+            "{}",
+            r#"{"words": 5}"#,
+            r#"{"words": [[1]]}"#,
+            r#"{"words": [[-1, 2]]}"#,
+            r#"{"words": [[1.5, 2]]}"#,
+            r#"{"terms": [1]}"#,
+            r#"{"words": [[999, 1]]}"#, // id ≥ n_features → scorer error
+        ] {
+            let (code, v) = post_score(body);
+            assert_eq!(code, 400, "{body} -> {v:?}");
+            assert!(v.get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn routes() {
+        let st = state();
+        let get = |path: &str| {
+            route(&Request { method: "GET".into(), path: path.into(), body: vec![] }, &st)
+        };
+        let (code, v) = get("/healthz");
+        assert_eq!(code, 200);
+        assert_eq!(v.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("pcs").unwrap().as_f64(), Some(2.0));
+        let (code, v) = get("/topics");
+        assert_eq!(code, 200);
+        let topics = v.get("topics").unwrap().as_array().unwrap();
+        assert_eq!(topics.len(), 2);
+        assert_eq!(
+            topics[0].get("words").unwrap().as_array().unwrap()[1]
+                .get("word")
+                .unwrap()
+                .as_str(),
+            Some("beta")
+        );
+        assert_eq!(get("/nope").0, 404);
+        assert_eq!(get("/score").0, 405);
+    }
+}

@@ -31,6 +31,35 @@ impl SparsePc {
     pub fn explained_variance(&self, sigma: &SymMat) -> f64 {
         sigma.quad_form(&self.vector)
     }
+
+    /// Re-express the PC in a larger index space through `map`
+    /// (`map[reduced] = target index`, e.g. the
+    /// [`kept`](crate::elim::SafeElimination::kept) survivor map of a
+    /// safe elimination): loadings are
+    /// scattered into a length-`n_target` vector and the support is
+    /// remapped in place, preserving its decreasing-|loading| order. This
+    /// is how λ-search probes lift masked solves back to the caller's
+    /// coordinates and how the model artifact carries PCs in
+    /// original-vocabulary indices.
+    pub fn mapped(&self, map: &[usize], n_target: usize) -> SparsePc {
+        assert_eq!(self.vector.len(), map.len(), "map must cover the reduced space");
+        let mut vector = vec![0.0; n_target];
+        for (r, &target) in map.iter().enumerate() {
+            assert!(target < n_target, "map entry {target} out of range {n_target}");
+            vector[target] = self.vector[r];
+        }
+        SparsePc {
+            vector,
+            support: self.support.iter().map(|&r| map[r]).collect(),
+            z_eigenvalue: self.z_eigenvalue,
+        }
+    }
+
+    /// The `(index, loading)` pairs of the support, in decreasing
+    /// |loading| order (the model artifact's PC payload).
+    pub fn loadings(&self) -> Vec<(usize, f64)> {
+        self.support.iter().map(|&i| (i, self.vector[i])).collect()
+    }
 }
 
 /// Extract the leading sparse PC from `Z*` (or any PSD matrix).
@@ -112,6 +141,22 @@ mod tests {
             )?;
             Ok(())
         });
+    }
+
+    #[test]
+    fn mapped_scatters_and_remaps() {
+        let pc = SparsePc {
+            vector: vec![0.8, 0.0, -0.6],
+            support: vec![0, 2],
+            z_eigenvalue: 1.0,
+        };
+        let lifted = pc.mapped(&[5, 9, 11], 20);
+        assert_eq!(lifted.vector.len(), 20);
+        assert_eq!(lifted.vector[5], 0.8);
+        assert_eq!(lifted.vector[11], -0.6);
+        assert_eq!(lifted.support, vec![5, 11]);
+        assert_eq!(lifted.cardinality(), pc.cardinality());
+        assert_eq!(lifted.loadings(), vec![(5, 0.8), (11, -0.6)]);
     }
 
     #[test]

@@ -89,7 +89,12 @@ pub fn solve(sigma: &SymMat, gamma: f64, opts: &GPowerOptions, rng: &mut Rng) ->
         };
         let x = run_from(sigma, gamma, &x0, opts);
         let obj = objective(sigma, &x);
-        if best.as_ref().is_none_or(|(b, _)| obj > *b) {
+        // (match, not Option::is_none_or — that is post-MSRV)
+        let improves = match &best {
+            Some((b, _)) => obj > *b,
+            None => true,
+        };
+        if improves {
             best = Some((obj, x));
         }
     }

@@ -104,10 +104,8 @@ fn eval<C: CovOp + ?Sized>(
     }
     let sub = MaskedCov::new(sigma, elim.kept.clone());
     let sol = bca::solve(&sub, lambda, &opts.bca);
-    let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
     // lift vector + support back to the full coordinate space
-    pc.vector = elim.lift(&pc.vector);
-    pc.support = pc.support.iter().map(|&r| elim.kept[r]).collect();
+    let pc = leading_sparse_pc(&sol.z, opts.extract_tol).mapped(&elim.kept, n);
     (sol, pc)
 }
 

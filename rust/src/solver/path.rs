@@ -84,9 +84,7 @@ pub fn compute<C: CovOp + ?Sized>(sigma: &C, opts: &PathOptions) -> Vec<PathPoin
             // an implicit-Gram operator).
             let sub = MaskedCov::new(sigma, elim.kept.clone());
             let sol = bca::solve(&sub, lambda, &opts.bca);
-            let mut pc = leading_sparse_pc(&sol.z, opts.extract_tol);
-            pc.vector = elim.lift(&pc.vector);
-            pc.support = pc.support.iter().map(|&r| elim.kept[r]).collect();
+            let pc = leading_sparse_pc(&sol.z, opts.extract_tol).mapped(&elim.kept, n);
             let explained = sigma.quad_form(&pc.vector);
             PathPoint {
                 lambda,

@@ -9,6 +9,7 @@
 pub mod bench;
 pub mod check;
 pub mod gzip;
+pub mod json;
 pub mod parallel;
 pub mod plot;
 pub mod rng;
@@ -18,6 +19,21 @@ pub mod timer;
 pub use rng::Rng;
 pub use stats::RunningStats;
 pub use timer::Timer;
+
+/// Order-sensitive xor-fold checksum over 8-byte little-endian lanes —
+/// the integrity check shared by the on-disk binary formats
+/// ([`crate::checkpoint`] `.lspv` and [`crate::model`] `.lspm`). Cheap
+/// and order-sensitive enough to catch truncation and bit rot; not
+/// cryptographic.
+pub fn xor_fold_checksum(buf: &[u8]) -> u64 {
+    let mut acc: u64 = 0x9e3779b97f4a7c15;
+    for (i, chunk) in buf.chunks(8).enumerate() {
+        let mut lane = [0u8; 8];
+        lane[..chunk.len()].copy_from_slice(chunk);
+        acc ^= u64::from_le_bytes(lane).rotate_left((i % 63) as u32);
+    }
+    acc
+}
 
 /// Format a number of bytes in a human-friendly way (KiB/MiB/GiB).
 pub fn human_bytes(bytes: u64) -> String {

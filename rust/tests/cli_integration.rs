@@ -37,7 +37,8 @@ fn tmp(name: &str) -> PathBuf {
 fn help_lists_commands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for cmd in ["run", "gen", "variances", "solve", "artifacts"] {
+    for cmd in ["run", "gen", "variances", "solve", "artifacts", "export", "score", "serve", "bench"]
+    {
         assert!(text.contains(cmd), "help missing '{cmd}':\n{text}");
     }
 }

@@ -1,0 +1,290 @@
+//! Integration: the inference half of the system — model artifact
+//! round-trip, `export` → `score` CLI bitwise reproduction, corrupted
+//! artifact rejection at the user-facing level, and the HTTP scoring
+//! server exercised over a real TCP socket with concurrent clients.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::process::Command;
+
+use lsspca::config::PipelineConfig;
+use lsspca::coordinator::Pipeline;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::model::Model;
+use lsspca::score::{score_stream, BatchOptions, ScoreOptions, Scorer, ServeOptions, Server};
+use lsspca::stream::SynthSource;
+use lsspca::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_msc_{}_{name}", std::process::id()));
+    p
+}
+
+fn bin() -> PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("lsspca");
+    p
+}
+
+fn run_bin(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin()).args(args).output().expect("spawn lsspca");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+fn tiny_config() -> PipelineConfig {
+    PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 600,
+        synth_vocab: 2500,
+        workers: 2,
+        chunk_docs: 128,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 48,
+        bca_sweeps: 5,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model round-trip + batch scoring determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_roundtrip_batch_scores_bitwise_identical() {
+    let cfg = tiny_config();
+    let seed = cfg.seed;
+    let report = Pipeline::new(cfg).run().unwrap();
+    let model = report.model.clone();
+    let path = tmp("roundtrip.lspm");
+    model.save(&path).unwrap();
+    let loaded = Model::load(&path).unwrap();
+    assert_eq!(loaded, model, "artifact round-trip must be lossless");
+
+    // Batch-score the training corpus through the loaded artifact and
+    // through the in-memory model: the CSVs must be byte-identical, and
+    // each row must carry the bitwise in-memory projection.
+    let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(600, 2500), seed);
+    let opts = BatchOptions { threads: 2, chunk_docs: 97, top: 2 };
+    let mut csv_mem = Vec::new();
+    let scorer_mem = Scorer::new(&model, ScoreOptions::default()).unwrap();
+    score_stream(&mut SynthSource::new(&corpus), &scorer_mem, opts, &mut csv_mem).unwrap();
+    let mut csv_loaded = Vec::new();
+    let scorer_loaded = Scorer::new(&loaded, ScoreOptions::default()).unwrap();
+    score_stream(&mut SynthSource::new(&corpus), &scorer_loaded, opts, &mut csv_loaded).unwrap();
+    assert_eq!(csv_mem, csv_loaded, "loaded artifact must score byte-identically");
+
+    let text = String::from_utf8(csv_mem).unwrap();
+    for (d, line) in text.lines().skip(1).enumerate().step_by(53) {
+        let cells: Vec<&str> = line.split(',').collect();
+        let want = scorer_mem.score(&corpus.generate_doc(d)).unwrap();
+        for (k, w) in want.iter().enumerate() {
+            let got: f64 = cells[1 + k].parse().unwrap();
+            assert_eq!(got.to_bits(), w.to_bits(), "doc {d} pc {k}");
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// CLI: export → score reproduces in-memory projections bitwise
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_export_then_score_reproduces_in_memory_projections() {
+    let corpus_path = tmp("cli_corpus.txt.gz");
+    let corpus_str = corpus_path.display().to_string();
+    let (ok, text) = run_bin(&[
+        "gen", "--out", &corpus_str, "--preset", "nytimes", "--docs", "400", "--vocab", "2000",
+        "--seed", "11",
+    ]);
+    assert!(ok, "{text}");
+
+    let model_path = tmp("cli_model.lspm");
+    let model_str = model_path.display().to_string();
+    let (ok, text) = run_bin(&[
+        "export", "--input", &corpus_str, "--seed", "11", "--pcs", "2", "--max-reduced", "48",
+        "--model-out", &model_str,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wrote"), "{text}");
+    assert!(model_path.exists());
+
+    let csv_path = tmp("cli_scores.csv");
+    let csv_str = csv_path.display().to_string();
+    let (ok, text) = run_bin(&[
+        "score", "--model", &model_str, "--input", &corpus_str, "--out", &csv_str, "--top", "2",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("docs/s"), "{text}");
+
+    // Reference: the same projection computed in-process from the saved
+    // artifact. Every CSV cell must parse back to the bitwise f64.
+    let model = Model::load(&model_path).unwrap();
+    let scorer = Scorer::new(&model, ScoreOptions::default()).unwrap();
+    let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(400, 2000), 11);
+    let text = std::fs::read_to_string(&csv_path).unwrap();
+    let mut rows = 0;
+    for line in text.lines().skip(1) {
+        let cells: Vec<&str> = line.split(',').collect();
+        let doc_id: usize = cells[0].parse::<usize>().unwrap() - 1;
+        let want = scorer.score(&corpus.generate_doc(doc_id)).unwrap();
+        assert_eq!(cells.len(), 2 + want.len());
+        for (k, w) in want.iter().enumerate() {
+            let got: f64 = cells[1 + k].parse().unwrap();
+            assert_eq!(got.to_bits(), w.to_bits(), "doc {doc_id} pc {k}");
+        }
+        rows += 1;
+    }
+    assert_eq!(rows, 400);
+
+    // Corrupted artifact must be rejected with a checksum error, not
+    // score garbage or panic.
+    let mut bytes = std::fs::read(&model_path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    let bad_path = tmp("cli_model_bad.lspm");
+    std::fs::write(&bad_path, &bytes).unwrap();
+    let (ok, text) = run_bin(&[
+        "score", "--model", &bad_path.display().to_string(), "--input", &corpus_str,
+        "--out", &csv_str,
+    ]);
+    assert!(!ok, "corrupt artifact accepted:\n{text}");
+    assert!(text.contains("checksum") || text.contains("corrupt"), "{text}");
+
+    for p in [&corpus_path, &model_path, &csv_path, &bad_path] {
+        std::fs::remove_file(p).ok();
+    }
+    std::fs::remove_file(corpus_path.with_extension("vocab")).ok();
+}
+
+// ---------------------------------------------------------------------------
+// HTTP server over a real socket
+// ---------------------------------------------------------------------------
+
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap(); // Connection: close → EOF delimits
+    let status: u16 = buf
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad response: {buf:?}"));
+    let json_body = buf.split("\r\n\r\n").nth(1).unwrap_or("");
+    (status, Json::parse(json_body).unwrap_or(Json::Null))
+}
+
+#[test]
+fn server_answers_concurrent_score_requests_correctly() {
+    let report = Pipeline::new(tiny_config()).run().unwrap();
+    let model = report.model.clone();
+    let scorer = Scorer::new(&model, ScoreOptions::default()).unwrap();
+    let reference = Scorer::new(&model, ScoreOptions::default()).unwrap();
+    let seed = tiny_config().seed;
+    let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(600, 2500), seed);
+
+    let opts = ServeOptions { addr: "127.0.0.1:0".into(), pool: 2, ..Default::default() };
+    let server = Server::bind(model.clone(), scorer, opts).unwrap();
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    // health + topics
+    let (code, v) = http(addr, "GET", "/healthz", "");
+    assert_eq!(code, 200, "{v:?}");
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(v.get("pcs").and_then(Json::as_f64), Some(model.num_pcs() as f64));
+    let (code, v) = http(addr, "GET", "/topics", "");
+    assert_eq!(code, 200);
+    let topics = v.get("topics").unwrap().as_array().unwrap();
+    assert_eq!(topics.len(), model.num_pcs());
+    // the served top word of PC1 is the trained one
+    assert_eq!(
+        topics[0].get("words").unwrap().as_array().unwrap()[0]
+            .get("word")
+            .and_then(Json::as_str)
+            .map(str::to_string),
+        Some(model.word_of(model.pcs[0].loadings[0].0))
+    );
+
+    // 4 concurrent clients × 3 docs each through a pool of 2 workers;
+    // every response must equal the in-process projection exactly.
+    std::thread::scope(|scope| {
+        for client in 0..4usize {
+            let corpus = &corpus;
+            let reference = &reference;
+            scope.spawn(move || {
+                for r in 0..3usize {
+                    let d = client * 29 + r * 7;
+                    let doc = corpus.generate_doc(d);
+                    let words: Vec<String> =
+                        doc.iter().map(|&(w, c)| format!("[{w},{c}]")).collect();
+                    let body = format!("{{\"words\": [{}], \"top\": 2}}", words.join(","));
+                    let (code, v) = http(addr, "POST", "/score", &body);
+                    assert_eq!(code, 200, "{v:?}");
+                    let want = reference.score(&doc).unwrap();
+                    let got = v.get("scores").unwrap().as_array().unwrap();
+                    assert_eq!(got.len(), want.len());
+                    for (g, w) in got.iter().zip(&want) {
+                        assert_eq!(
+                            g.as_f64().unwrap().to_bits(),
+                            w.to_bits(),
+                            "served score differs from in-memory"
+                        );
+                    }
+                    let tops = v.get("top_pcs").unwrap().as_array().unwrap();
+                    let want_tops = Scorer::top_pcs(&want, 2);
+                    assert_eq!(tops[0].as_f64(), Some((want_tops[0] + 1) as f64));
+                }
+            });
+        }
+    });
+
+    // error paths over the wire
+    let (code, v) = http(addr, "POST", "/score", "this is not json");
+    assert_eq!(code, 400);
+    assert!(v.get("error").is_some());
+    let (code, _) = http(addr, "GET", "/no/such/route", "");
+    assert_eq!(code, 404);
+
+    handle.shutdown();
+    srv.join().unwrap();
+}
+
+#[test]
+fn corrupted_artifact_rejected_on_load() {
+    let report = Pipeline::new(tiny_config()).run().unwrap();
+    let path = tmp("reject.lspm");
+    report.model.save(&path).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    // truncations and bit flips across the file must all be rejected
+    for cut in [0usize, 7, good.len() / 2, good.len() - 1] {
+        std::fs::write(&path, &good[..cut]).unwrap();
+        assert!(Model::load(&path).is_err(), "truncation at {cut} accepted");
+    }
+    for at in [4usize, 12, good.len() / 3, good.len() - 2] {
+        let mut bad = good.clone();
+        bad[at] ^= 0x10;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Model::load(&path).is_err(), "bit flip at {at} accepted");
+    }
+    std::fs::remove_file(&path).ok();
+}
