@@ -11,22 +11,31 @@ use std::fmt::Write as _;
 /// Specification of one flag.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
+    /// Flag name as typed after `--`.
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value substituted when the flag is absent.
     pub default: Option<String>,
+    /// Boolean switch (present = true, takes no value).
     pub is_switch: bool,
+    /// Parsing fails when a required flag is absent.
     pub required: bool,
 }
 
 /// Specification of a (sub)command.
 #[derive(Clone, Debug, Default)]
 pub struct CommandSpec {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line description shown in the top-level help.
     pub about: &'static str,
+    /// Flags this command accepts.
     pub flags: Vec<FlagSpec>,
 }
 
 impl CommandSpec {
+    /// Start a command spec with no flags.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         CommandSpec { name, about, flags: Vec::new() }
     }
@@ -90,16 +99,20 @@ pub struct Args {
 }
 
 impl Args {
+    /// Raw value of a flag, if present (or defaulted).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Value of a flag that the spec guarantees exists (has a default).
     pub fn str(&self, name: &str) -> String {
         self.get(name)
             .unwrap_or_else(|| panic!("flag --{name} missing (spec bug)"))
             .to_string()
     }
 
+    /// Parse a flag's value into any `FromStr` type, with a
+    /// flag-naming error message.
     pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
     where
         T::Err: std::fmt::Display,
@@ -111,18 +124,22 @@ impl Args {
             .map_err(|e| format!("invalid value '{raw}' for --{name}: {e}"))
     }
 
+    /// `parse::<usize>` convenience.
     pub fn usize(&self, name: &str) -> Result<usize, String> {
         self.parse(name)
     }
 
+    /// `parse::<f64>` convenience.
     pub fn f64(&self, name: &str) -> Result<f64, String> {
         self.parse(name)
     }
 
+    /// `parse::<u64>` convenience.
     pub fn u64(&self, name: &str) -> Result<u64, String> {
         self.parse(name)
     }
 
+    /// Whether a boolean switch was present.
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
     }
@@ -131,24 +148,30 @@ impl Args {
 /// A multi-command CLI application.
 #[derive(Debug, Default)]
 pub struct App {
+    /// Program name (argv\[0\] replacement in help text).
     pub prog: &'static str,
+    /// One-line program description.
     pub about: &'static str,
+    /// Registered subcommands.
     pub commands: Vec<CommandSpec>,
 }
 
 /// Result of parsing: the selected command name and its arguments.
 #[derive(Debug)]
 pub enum Parsed {
+    /// A subcommand was selected, with its parsed arguments.
     Command(String, Args),
     /// `--help` or no args: the rendered help text to print.
     Help(String),
 }
 
 impl App {
+    /// Start an application spec with no commands.
     pub fn new(prog: &'static str, about: &'static str) -> Self {
         App { prog, about, commands: Vec::new() }
     }
 
+    /// Register a subcommand (builder style).
     pub fn command(mut self, spec: CommandSpec) -> Self {
         self.commands.push(spec);
         self

@@ -13,20 +13,27 @@ use std::path::Path;
 /// A parsed scalar value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// `[a, b, c]` array of scalars.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// String view, if this is a [`Value::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Numeric view (floats and ints both coerce).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -34,15 +41,18 @@ impl Value {
             _ => None,
         }
     }
+    /// Integer view, if this is a [`Value::Int`].
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// Non-negative integer view.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_i64().and_then(|i| usize::try_from(i).ok())
     }
+    /// Boolean view, if this is a [`Value::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -116,6 +126,7 @@ impl Document {
         Document::parse(&text)
     }
 
+    /// Look up `[section] key` (top-level keys use section `""`).
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.entries.get(&(section.to_string(), key.to_string()))
     }
@@ -135,18 +146,23 @@ impl Document {
         }
     }
 
+    /// `f64` at `[section] key`, or `default` when absent.
     pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
         self.typed(section, key, default, |v| v.as_f64())
     }
+    /// `usize` at `[section] key`, or `default` when absent.
     pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize, String> {
         self.typed(section, key, default, |v| v.as_usize())
     }
+    /// `u64` at `[section] key`, or `default` when absent.
     pub fn u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64, String> {
         self.typed(section, key, default, |v| v.as_i64().and_then(|i| u64::try_from(i).ok()))
     }
+    /// `bool` at `[section] key`, or `default` when absent.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
         self.typed(section, key, default, |v| v.as_bool())
     }
+    /// `String` at `[section] key`, or `default` when absent.
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String, String> {
         self.typed(section, key, default.to_string(), |v| v.as_str().map(|s| s.to_string()))
     }
@@ -211,9 +227,11 @@ pub struct PipelineConfig {
     pub input: String,
     /// Synthetic corpus preset when `input` is empty: "nytimes" | "pubmed".
     pub synth_preset: String,
-    /// Synthetic corpus scale overrides (0 = preset default).
+    /// Synthetic corpus document-count override (0 = preset default).
     pub synth_docs: usize,
+    /// Synthetic corpus vocabulary-size override (0 = preset default).
     pub synth_vocab: usize,
+    /// Corpus / generator seed.
     pub seed: u64,
     /// Directory for variance-pass checkpoints (empty = disabled). At
     /// PubMed scale the pass dominates wall time and is λ-independent, so
@@ -249,8 +267,18 @@ pub struct PipelineConfig {
     /// reduced n̂ × n̂ matrix (solves bitwise the historical pipeline); "gram"
     /// keeps Σ implicit as a centered Gram operator over the reduced
     /// sparse term matrix — O(nnz) memory, so n̂ can reach tens of
-    /// thousands.
+    /// thousands; "disk" streams the reduced matrix from the on-disk
+    /// shard cache under the `[memory] budget_mb` cap (bitwise-identical
+    /// solves to "gram"); "auto" lets the memory-budget planner pick from
+    /// the variance-pass footprint estimates.
     pub cov_backend: String,
+    /// Resident-memory budget in MiB for the covariance stage
+    /// (`[memory] budget_mb`; 0 = unlimited). Drives the `auto` backend
+    /// decision and sizes the disk backend's Σ-row cache.
+    pub memory_budget_mb: usize,
+    /// Byte budget per on-disk shard, in MiB (`[memory] shard_mb`) — the
+    /// streaming granularity of the disk backend.
+    pub shard_mb: usize,
     /// Row-cache budget in MiB for the "gram" backend's lazily gathered
     /// Σ rows (solver.row_cache_mb; 0 disables caching).
     pub row_cache_mb: usize,
@@ -300,6 +328,8 @@ impl Default for PipelineConfig {
             card_slack: 2,
             max_reduced: 512,
             cov_backend: "dense".into(),
+            memory_budget_mb: 0,
+            shard_mb: 32,
             row_cache_mb: 64,
             bca_sweeps: 5,
             epsilon: 1e-3,
@@ -337,6 +367,8 @@ impl PipelineConfig {
             card_slack: doc.usize_or("solver", "card_slack", d.card_slack)?,
             max_reduced: doc.usize_or("solver", "max_reduced", d.max_reduced)?,
             cov_backend: doc.str_or("cov", "backend", &d.cov_backend)?,
+            memory_budget_mb: doc.usize_or("memory", "budget_mb", d.memory_budget_mb)?,
+            shard_mb: doc.usize_or("memory", "shard_mb", d.shard_mb)?,
             row_cache_mb: doc.usize_or("solver", "row_cache_mb", d.row_cache_mb)?,
             bca_sweeps: doc.usize_or("solver", "bca_sweeps", d.bca_sweeps)?,
             epsilon: doc.f64_or("solver", "epsilon", d.epsilon)?,
@@ -390,21 +422,25 @@ impl PipelineConfig {
             other => return Err(format!("solver.engine '{other}' (want native|xla)")),
         }
         match self.cov_backend.as_str() {
-            "dense" | "gram" => {}
-            other => return Err(format!("cov.backend '{other}' (want dense|gram)")),
+            "dense" | "gram" | "disk" | "auto" => {}
+            other => return Err(format!("cov.backend '{other}' (want dense|gram|disk|auto)")),
         }
-        if self.engine == "xla" && self.cov_backend == "gram" {
+        if self.shard_mb == 0 {
+            return Err("memory.shard_mb must be >= 1".into());
+        }
+        if self.engine == "xla" && matches!(self.cov_backend.as_str(), "gram" | "disk") {
             // The XLA engine ships an explicit Σ to shape-static
-            // artifacts; combined with the implicit backend it would
+            // artifacts; combined with an implicit backend it would
             // silently materialize the full n̂ × n̂ matrix once per
-            // λ-probe — defeating the gram backend's O(nnz) memory
-            // contract at exactly the scales it exists for.
-            return Err(
+            // λ-probe — defeating the implicit backends' memory
+            // contract at exactly the scales they exist for. ("auto"
+            // is fine: the planner pins itself to dense under xla.)
+            return Err(format!(
                 "solver.engine = \"xla\" requires cov.backend = \"dense\" (the XLA \
-                 artifacts need an explicit covariance matrix; \"gram\" would re-densify \
-                 Σ per λ-probe)"
-                    .into(),
-            );
+                 artifacts need an explicit covariance matrix; \"{}\" would re-densify \
+                 Σ per λ-probe)",
+                self.cov_backend
+            ));
         }
         match self.deflation.as_str() {
             "projection" | "hotelling" => {}
@@ -498,6 +534,34 @@ lambdas = [0.1, 0.2, 0.5]
             Document::parse("[solver]\nengine = \"xla\"\n[cov]\nbackend = \"gram\"").unwrap();
         let e = PipelineConfig::from_document(&clash).unwrap_err();
         assert!(e.contains("xla") && e.contains("gram"), "{e}");
+    }
+
+    #[test]
+    fn memory_section_and_oocore_backends() {
+        let doc = Document::parse(
+            "[cov]\nbackend = \"auto\"\n[memory]\nbudget_mb = 256\nshard_mb = 8",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.cov_backend, "auto");
+        assert_eq!(cfg.memory_budget_mb, 256);
+        assert_eq!(cfg.shard_mb, 8);
+        // defaults: unlimited budget, 32 MiB shards
+        let d = PipelineConfig::default();
+        assert_eq!(d.memory_budget_mb, 0);
+        assert_eq!(d.shard_mb, 32);
+        let disk = Document::parse("[cov]\nbackend = \"disk\"").unwrap();
+        assert!(PipelineConfig::from_document(&disk).is_ok());
+        let bad = Document::parse("[memory]\nshard_mb = 0").unwrap();
+        assert!(PipelineConfig::from_document(&bad).is_err());
+        // xla still incompatible with the implicit backends...
+        let clash =
+            Document::parse("[solver]\nengine = \"xla\"\n[cov]\nbackend = \"disk\"").unwrap();
+        assert!(PipelineConfig::from_document(&clash).is_err());
+        // ...but auto is allowed (the planner pins itself to dense)
+        let autoxla =
+            Document::parse("[solver]\nengine = \"xla\"\n[cov]\nbackend = \"auto\"").unwrap();
+        assert!(PipelineConfig::from_document(&autoxla).is_ok());
     }
 
     #[test]

@@ -25,14 +25,21 @@
 //! reassociates the destructive updates' arithmetic);
 //! `"gram"` streams the reduced sparse term matrix instead and serves Σ
 //! implicitly through [`crate::covop::GramCov`] — O(nnz) memory plus a
-//! bounded row cache, so n̂ can reach tens of thousands.
+//! bounded row cache, so n̂ can reach tens of thousands; `"disk"`
+//! persists that matrix to the shard cache once and streams it through
+//! [`crate::cov_disk::DiskGramCov`] under `[memory] budget_mb` (solves
+//! bitwise-identical to `"gram"`); `"auto"` lets [`plan_backend`] — the
+//! memory-budget planner — pick from variance-pass footprint estimates,
+//! logging the numbers behind the decision.
 
 use std::path::{Path, PathBuf};
 
 use crate::config::PipelineConfig;
 use crate::corpus::{CorpusSpec, SynthCorpus};
-use crate::cov::{covariance_pass, gram_pass};
+use crate::cov::{covariance_pass, gram_pass, reduced_csr_pass};
+use crate::cov_disk::DiskGramCov;
 use crate::covop::{CovOp, DenseCov, MaskedCov};
+use crate::data::shardcache::{self, ShardCacheKey};
 use crate::data::Vocab;
 use crate::elim::{lambda_for_survivors, SafeElimination};
 use crate::engine::{Engine, NativeEngine};
@@ -68,20 +75,29 @@ pub struct ComponentReport {
 /// Full pipeline output.
 #[derive(Debug)]
 pub struct PipelineReport {
+    /// Corpus name (preset) or input path.
     pub corpus_name: String,
+    /// Documents streamed.
     pub num_docs: usize,
+    /// Original vocabulary size n.
     pub vocab_size: usize,
+    /// Corpus nonzeros streamed in pass 1.
     pub nnz: u64,
     /// Sorted variance profile (Fig 2 series).
     pub sorted_variances: Vec<f64>,
-    /// Elimination metadata (E5 headline).
+    /// Reduced problem size n̂ after elimination (E5 headline).
     pub reduced_size: usize,
+    /// `n / n̂`.
     pub reduction_factor: f64,
+    /// λ̂ the elimination ran at.
     pub elim_lambda: f64,
+    /// Whether `max_reduced` bound the reduction.
     pub elim_capped: bool,
+    /// One entry per extracted sparse PC.
     pub components: Vec<ComponentReport>,
     /// Second-level timing profile.
     pub profile: String,
+    /// End-to-end wall seconds.
     pub total_seconds: f64,
     /// Markdown topic table (the paper's Tables 1–2 format).
     pub topic_table: String,
@@ -93,10 +109,12 @@ pub struct PipelineReport {
 
 /// The pipeline object: configuration + engine.
 pub struct Pipeline {
+    /// The full run configuration.
     pub config: PipelineConfig,
 }
 
 impl Pipeline {
+    /// Wrap a validated configuration.
     pub fn new(config: PipelineConfig) -> Pipeline {
         Pipeline { config }
     }
@@ -155,23 +173,27 @@ impl Pipeline {
         crate::info!("pipeline start: corpus={corpus_name} engine={}", self.config.engine);
 
         // --- pass 1: variances (with optional checkpoint reuse) -------------
+        // Fingerprint the corpus identity: synthetic params, or the
+        // input path + its size (cheap mtime-free invalidation). Shared
+        // by the variance checkpoint and the covariance shard cache.
+        let identity = match &synth {
+            Some(s) => format!(
+                "synth:{}:{}:{}:{}",
+                s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
+            ),
+            None => {
+                let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
+                format!("file:{}:{len}", input_path.display())
+            }
+        };
+        let corpus_digest = crate::checkpoint::corpus_key(&identity);
         let cache = if self.config.cache_dir.is_empty() {
             None
         } else {
-            // Fingerprint the corpus identity: synthetic params, or the
-            // input path + its size (cheap mtime-free invalidation).
-            let identity = match &synth {
-                Some(s) => format!(
-                    "synth:{}:{}:{}:{}",
-                    s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
-                ),
-                None => {
-                    let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
-                    format!("file:{}:{len}", input_path.display())
-                }
-            };
-            let key = crate::checkpoint::corpus_key(&identity);
-            Some((crate::checkpoint::path_for(Path::new(&self.config.cache_dir), key), key))
+            Some((
+                crate::checkpoint::path_for(Path::new(&self.config.cache_dir), corpus_digest),
+                corpus_digest,
+            ))
         };
         // The corpus' live feature dimension, for checkpoint validation:
         // a cached file whose key collides but whose n differs must be
@@ -246,8 +268,112 @@ impl Pipeline {
             return Err("elimination removed every feature; lower solver.target λ̂".into());
         }
 
+        // --- memory-budget planner ------------------------------------------
+        // `auto` resolves to a concrete backend from footprint estimates
+        // derived off the variance pass; explicit backends pass through.
+        let backend = if self.config.cov_backend == "auto" {
+            let plan = plan_backend(&fv, &elim, &self.config);
+            crate::info!("memory planner: {}", plan.describe());
+            plan.backend
+        } else {
+            self.config.cov_backend.clone()
+        };
+
         // --- pass 2: reduced covariance operator ----------------------------
-        let cov: Box<dyn CovOp> = match self.config.cov_backend.as_str() {
+        let cov: Box<dyn CovOp> = match backend.as_str() {
+            "disk" => {
+                let dir = if self.config.cache_dir.is_empty() {
+                    // No configured dir: fall back to a stable
+                    // *per-user* location under the system temp dir so
+                    // the cache still reuses across runs without two
+                    // users fighting over one world-writable path.
+                    let user = std::env::var("USER")
+                        .or_else(|_| std::env::var("USERNAME"))
+                        .unwrap_or_else(|_| "default".into());
+                    std::env::temp_dir().join(format!("lsspca_shards_{user}"))
+                } else {
+                    PathBuf::from(&self.config.cache_dir)
+                };
+                // The fallback dir may sit under a shared tmp; keep it
+                // private to this user where the platform supports it.
+                if self.config.cache_dir.is_empty() {
+                    make_private_dir(&dir);
+                }
+                let key = ShardCacheKey {
+                    corpus_digest,
+                    elim_digest: shardcache::elim_digest(&elim),
+                };
+                // A hit is only a hit once every shard verifies: the
+                // operator cannot return errors mid-solve, so a corrupt
+                // or truncated shard must be caught (and the cache
+                // rebuilt) here, not hours into BCA.
+                let opened = match shardcache::open(&dir, &key) {
+                    Ok(Some(man)) => {
+                        match prof.time("shard_verify", || {
+                            shardcache::verify_shards(&dir, &man, self.config.threads)
+                        }) {
+                            Ok(()) => {
+                                crate::info!(
+                                    "shard cache hit: {} shards, nnz={} at {}",
+                                    man.shards.len(),
+                                    man.nnz,
+                                    dir.display()
+                                );
+                                Some(man)
+                            }
+                            Err(e) => {
+                                crate::warn_!("rebuilding shard cache: {e}");
+                                None
+                            }
+                        }
+                    }
+                    Ok(None) => None,
+                    Err(e) => {
+                        crate::warn_!("rebuilding shard cache: {e}");
+                        None
+                    }
+                };
+                let man = match opened {
+                    Some(man) => man,
+                    None => {
+                        let (csr, stats2) = prof.time("gram_pass", || match &synth {
+                            Some(s) => reduced_csr_pass(&mut SynthSource::new(s), &elim, opts),
+                            None => {
+                                let mut src = FileSource::open(&input_path)?;
+                                reduced_csr_pass(&mut src, &elim, opts)
+                            }
+                        })?;
+                        let man = prof.time("shard_write", || {
+                            shardcache::write(
+                                &dir,
+                                &key,
+                                &csr,
+                                stats2.docs,
+                                self.config.shard_mb * 1024 * 1024,
+                            )
+                        })?;
+                        crate::info!(
+                            "shard cache written: {} shards, nnz={} at {}",
+                            man.shards.len(),
+                            man.nnz,
+                            dir.display()
+                        );
+                        man
+                    }
+                };
+                // Cache sized against the *actual* decode wave: an
+                // oversized single-column shard shrinks the row cache
+                // rather than silently blowing the budget.
+                let cache_mb = disk_row_cache_mb(&self.config, man.max_shard_bytes());
+                let disk = DiskGramCov::new(&dir, man, cache_mb, self.config.threads);
+                crate::info!(
+                    "disk covariance backend: row cache {} rows ≤ {} MiB, {} worker threads",
+                    disk.cache_capacity_rows(),
+                    cache_mb,
+                    crate::util::parallel::resolve_threads(self.config.threads)
+                );
+                Box::new(disk)
+            }
             "gram" => {
                 let (gram, _stats2) = prof.time("gram_pass", || match &synth {
                     Some(s) => {
@@ -434,6 +560,171 @@ pub fn choose_elimination(
     (elim, capped)
 }
 
+/// Outcome of the memory-budget planner: the chosen backend and the
+/// footprint estimates (in bytes) the decision was based on.
+#[derive(Clone, Debug)]
+pub struct MemoryPlan {
+    /// Reduced problem size n̂ the estimates assume.
+    pub nhat: usize,
+    /// Estimated peak resident bytes of the dense backend (streaming
+    /// assembly holds one n̂ × n̂ partial per worker, plus Σ itself and
+    /// the solver iterate).
+    pub dense_bytes: u64,
+    /// Estimated resident bytes of the in-memory gram backend (CSR +
+    /// CSC of the reduced matrix, bounded above via the variance-pass
+    /// per-feature counts, plus the row cache).
+    pub gram_bytes: u64,
+    /// Resident floor of the disk backend (one streaming wave of shards;
+    /// the row cache then takes whatever budget remains).
+    pub disk_bytes: u64,
+    /// The configured budget in bytes (0 = unlimited).
+    pub budget_bytes: u64,
+    /// The backend the planner picked: "dense", "gram" or "disk".
+    pub backend: String,
+    /// One-line human reason for the choice.
+    pub reason: String,
+}
+
+impl MemoryPlan {
+    /// Render the full decision — estimates and reason — for the log.
+    pub fn describe(&self) -> String {
+        let mb = |b: u64| (b as f64 / (1024.0 * 1024.0)).ceil() as u64;
+        format!(
+            "n̂={} budget={} dense≈{} MiB gram≈{} MiB disk≥{} MiB → backend={} ({})",
+            self.nhat,
+            if self.budget_bytes == 0 {
+                "unlimited".to_string()
+            } else {
+                format!("{} MiB", mb(self.budget_bytes))
+            },
+            mb(self.dense_bytes),
+            mb(self.gram_bytes),
+            mb(self.disk_bytes),
+            self.backend,
+            self.reason
+        )
+    }
+}
+
+/// The memory-budget planner behind `[cov] backend = "auto"`: estimate
+/// the dense / gram / disk covariance footprints from the variance-pass
+/// statistics and pick the cheapest-to-serve backend that fits
+/// `[memory] budget_mb`.
+///
+/// Estimates (all deliberately upper bounds — the planner must never
+/// pick a backend that then blows the budget):
+///
+/// - **dense**: `(workers + 2) · 8n̂²` — the streaming assembly holds one
+///   n̂ × n̂ partial accumulator per worker, then Σ plus the solver
+///   iterate X stay resident.
+/// - **gram**: `24 · nnẑ + row_cache` where `nnẑ = Σ_{j kept}
+///   min(m, m·μ_j)` bounds the reduced matrix's nonzeros via the
+///   variance-pass per-feature means (counts ≥ 1 ⇒ doc-frequency ≤
+///   total count), and 24 bytes/nnz covers the CSR + CSC pair.
+/// - **disk**: `(threads + 1) · max(shard_mb, largest column) +
+///   8·rows` — one decode wave of shards plus the dense `A·x` scratch
+///   every matvec/quadratic form holds (one f64 per reduced row,
+///   bounded above by `min(m, nnẑ)` since each reduced row has ≥ 1
+///   nonzero). A column whose payload alone exceeds `shard_mb` becomes
+///   one oversized shard (`plan_shards` never splits a column), so the
+///   wave term uses the larger of the configured shard size and the
+///   biggest kept column's estimated bytes. The Σ-row cache is then
+///   *sized from* the remaining budget rather than estimated (see
+///   [`disk_row_cache_mb`]).
+///
+/// With no budget configured (`budget_mb = 0`) the planner keeps the
+/// historical default, dense; under the XLA engine it pins dense
+/// outright (the artifacts need an explicit matrix).
+pub fn plan_backend(
+    fv: &FeatureVariances,
+    elim: &SafeElimination,
+    cfg: &PipelineConfig,
+) -> MemoryPlan {
+    const MIB: u64 = 1024 * 1024;
+    let nhat = elim.reduced() as u64;
+    let m = fv.docs;
+    let dense_bytes = (cfg.workers as u64 + 2) * 8 * nhat * nhat;
+    let col_nnz_est = |j: usize| (fv.mean[j] * m as f64).min(m as f64).max(0.0);
+    let nnz_est: f64 = elim.kept.iter().map(|&j| col_nnz_est(j)).sum();
+    let gram_bytes = (24.0 * nnz_est) as u64 + cfg.row_cache_mb as u64 * MIB;
+    let wave = crate::util::parallel::resolve_threads(cfg.threads) as u64 + 1;
+    // A single column larger than shard_mb becomes one oversized shard,
+    // so the wave term must use the larger of the two.
+    let max_col_bytes = elim
+        .kept
+        .iter()
+        .map(|&j| (12.0 * col_nnz_est(j)) as u64)
+        .max()
+        .unwrap_or(0);
+    // Every matvec/quad form also holds one dense A·x scratch of one
+    // f64 per reduced row (rows ≤ min(m, nnẑ): each row has ≥ 1 nnz).
+    let ax_bytes = 8 * (m.min(nnz_est as u64));
+    let disk_bytes = wave * (cfg.shard_mb as u64 * MIB).max(max_col_bytes) + ax_bytes;
+    let budget_bytes = cfg.memory_budget_mb as u64 * MIB;
+    let (backend, reason) = if cfg.engine == "xla" {
+        ("dense", "xla engine needs an explicit dense Σ".to_string())
+    } else if budget_bytes == 0 {
+        ("dense", "no memory budget configured; keeping the default".to_string())
+    } else if dense_bytes <= budget_bytes {
+        ("dense", "dense fits the budget".to_string())
+    } else if gram_bytes <= budget_bytes {
+        ("gram", "dense exceeds the budget, implicit gram fits".to_string())
+    } else if disk_bytes <= budget_bytes {
+        ("disk", "only the out-of-core backend fits the budget".to_string())
+    } else {
+        (
+            "disk",
+            format!(
+                "nothing fits the budget (disk floor ≈ {} MiB); \
+                 falling back to disk, the smallest-footprint backend",
+                disk_bytes.div_ceil(MIB)
+            ),
+        )
+    };
+    MemoryPlan {
+        nhat: elim.reduced(),
+        dense_bytes,
+        gram_bytes,
+        disk_bytes,
+        budget_bytes,
+        backend: backend.to_string(),
+        reason,
+    }
+}
+
+/// Σ-row cache budget (MiB) for the disk backend: whatever remains of
+/// `[memory] budget_mb` after one streaming wave of shards, or the
+/// `row_cache_mb` default when no budget is configured. The wave is
+/// priced at the **actual** largest shard (`max_shard_bytes`, from the
+/// manifest) rather than the configured `shard_mb`, because a column
+/// bigger than the configured budget becomes one oversized shard. May
+/// return 0 — the cache never changes a value, only wall time.
+pub fn disk_row_cache_mb(cfg: &PipelineConfig, max_shard_bytes: u64) -> usize {
+    if cfg.memory_budget_mb == 0 {
+        return cfg.row_cache_mb;
+    }
+    const MIB: u64 = 1024 * 1024;
+    let wave = crate::util::parallel::resolve_threads(cfg.threads) as u64 + 1;
+    let shard = (cfg.shard_mb as u64 * MIB).max(max_shard_bytes);
+    let reserve_mb = (wave * shard).div_ceil(MIB) as usize;
+    cfg.memory_budget_mb.saturating_sub(reserve_mb)
+}
+
+/// Create `dir` (and parents) with user-only permissions where the
+/// platform supports it — the default shard-cache location sits under
+/// a shared temp directory. Errors are deferred to the first write.
+fn make_private_dir(dir: &Path) {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::DirBuilderExt;
+        let _ = std::fs::DirBuilder::new().recursive(true).mode(0o700).create(dir);
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = std::fs::create_dir_all(dir);
+    }
+}
+
 /// λ-search where the inner solves run on an [`Engine`].
 pub fn search_with_engine(
     engine: &mut dyn Engine,
@@ -600,6 +891,76 @@ mod tests {
         for (c, pc) in report.components.iter().zip(&m.pcs) {
             assert_eq!(m.word_of(pc.loadings[0].0), c.words[0]);
         }
+    }
+
+    #[test]
+    fn memory_planner_picks_backend_by_budget() {
+        let n = 2000;
+        let fv = crate::moments::FeatureVariances {
+            variance: vec![1.0; n],
+            mean: vec![0.001; n],
+            second_moment: vec![0.0; n],
+            docs: 10_000,
+        };
+        let elim = crate::elim::SafeElimination::apply(&fv.variance, 0.5, Some(1000));
+        assert_eq!(elim.reduced(), 1000);
+        let mut cfg = PipelineConfig {
+            workers: 2,
+            threads: 1,
+            shard_mb: 1,
+            row_cache_mb: 4,
+            ..Default::default()
+        };
+        // dense ≈ (2+2)·8·1000² = 32 MiB; gram ≈ 0.23 + 4 MiB; disk ≥ 2 MiB
+        cfg.memory_budget_mb = 64;
+        assert_eq!(plan_backend(&fv, &elim, &cfg).backend, "dense");
+        cfg.memory_budget_mb = 8;
+        assert_eq!(plan_backend(&fv, &elim, &cfg).backend, "gram");
+        cfg.memory_budget_mb = 2;
+        let plan = plan_backend(&fv, &elim, &cfg);
+        assert_eq!(plan.backend, "disk");
+        // the logged decision line carries every footprint estimate
+        let d = plan.describe();
+        assert!(
+            d.contains("dense≈") && d.contains("gram≈") && d.contains("budget=2 MiB"),
+            "{d}"
+        );
+        // a budget below even the disk floor still resolves (to disk)
+        cfg.memory_budget_mb = 1;
+        let floor = plan_backend(&fv, &elim, &cfg);
+        assert_eq!(floor.backend, "disk");
+        assert!(floor.reason.contains("nothing fits"), "{}", floor.reason);
+        // unlimited budget keeps the historical default
+        cfg.memory_budget_mb = 0;
+        assert_eq!(plan_backend(&fv, &elim, &cfg).backend, "dense");
+        // xla pins dense even under a tight budget
+        cfg.memory_budget_mb = 2;
+        cfg.engine = "xla".into();
+        let p = plan_backend(&fv, &elim, &cfg);
+        assert_eq!(p.backend, "dense");
+        assert!(p.reason.contains("xla"), "{}", p.reason);
+    }
+
+    #[test]
+    fn disk_row_cache_budget_resolution() {
+        let mut cfg = PipelineConfig {
+            threads: 1,
+            shard_mb: 2,
+            row_cache_mb: 64,
+            ..Default::default()
+        };
+        // no budget: the plain row-cache default applies
+        cfg.memory_budget_mb = 0;
+        assert_eq!(disk_row_cache_mb(&cfg, 0), 64);
+        // budget minus one shard wave ((1+1)·2 MiB)
+        cfg.memory_budget_mb = 100;
+        assert_eq!(disk_row_cache_mb(&cfg, 0), 96);
+        // an oversized single-column shard (5 MiB) prices the wave at
+        // its actual size, not the configured shard_mb
+        assert_eq!(disk_row_cache_mb(&cfg, 5 << 20), 90);
+        // tight budgets degrade to an uncached (still correct) operator
+        cfg.memory_budget_mb = 3;
+        assert_eq!(disk_row_cache_mb(&cfg, 0), 0);
     }
 
     #[test]

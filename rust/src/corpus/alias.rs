@@ -56,6 +56,7 @@ impl AliasTable {
         self.prob.len()
     }
 
+    /// Whether the table has no categories.
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -29,15 +29,20 @@ use crate::util::rng::Rng;
 /// One planted topic.
 #[derive(Clone, Debug)]
 pub struct TopicSpec {
+    /// Topic label (reporting only).
     pub name: &'static str,
+    /// Signature words planted for this topic.
     pub words: Vec<&'static str>,
 }
 
 /// Full corpus specification.
 #[derive(Clone, Debug)]
 pub struct CorpusSpec {
+    /// Preset name (reporting / cache identity).
     pub name: &'static str,
+    /// Documents to generate.
     pub num_docs: usize,
+    /// Vocabulary size n.
     pub vocab_size: usize,
     /// Zipf exponent for background frequencies.
     pub zipf_exponent: f64,
@@ -55,6 +60,7 @@ pub struct CorpusSpec {
     pub topic_mix: f64,
     /// First background rank reserved for topic signature words.
     pub topic_rank_base: usize,
+    /// The planted topics.
     pub topics: Vec<TopicSpec>,
 }
 
@@ -165,7 +171,9 @@ impl CorpusSpec {
 
 /// A prepared generator for one corpus.
 pub struct SynthCorpus {
+    /// The specification this generator realizes.
     pub spec: CorpusSpec,
+    /// Generator seed (documents are a pure function of `(spec, seed)`).
     pub seed: u64,
     /// Vocabulary (topic words at their planted ids, `wNNNNN` elsewhere).
     pub vocab: Vocab,
@@ -176,6 +184,7 @@ pub struct SynthCorpus {
 }
 
 impl SynthCorpus {
+    /// Prepare the alias tables for a spec (no documents generated yet).
     pub fn new(spec: CorpusSpec, seed: u64) -> SynthCorpus {
         let v = spec.vocab_size;
         // Background Zipf weights over all vocab ids. Vocab id == frequency

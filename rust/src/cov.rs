@@ -45,6 +45,7 @@ pub struct CovAccum {
 }
 
 impl CovAccum {
+    /// Zeroed accumulator for `nhat` kept features.
     pub fn new(nhat: usize) -> CovAccum {
         CovAccum {
             outer: vec![0.0; nhat * nhat],
@@ -78,6 +79,7 @@ impl CovAccum {
         self.scratch = kept;
     }
 
+    /// Fold another worker's partial sums in (additive).
     pub fn merge(&mut self, other: &CovAccum) {
         assert_eq!(self.nhat, other.nhat);
         for (a, b) in self.outer.iter_mut().zip(&other.outer) {
@@ -164,6 +166,7 @@ impl Default for ReducedDocsAccum {
 }
 
 impl ReducedDocsAccum {
+    /// Empty accumulator.
     pub fn new() -> ReducedDocsAccum {
         ReducedDocsAccum { doc_ids: Vec::new(), doc_ptr: vec![0], idx: Vec::new(), val: Vec::new() }
     }
@@ -184,6 +187,8 @@ impl ReducedDocsAccum {
         }
     }
 
+    /// Append another worker's documents (doc-id sort happens at
+    /// [`ReducedDocsAccum::finalize`]).
     pub fn merge(&mut self, other: ReducedDocsAccum) {
         let base = self.idx.len();
         self.doc_ids.extend_from_slice(&other.doc_ids);
@@ -195,7 +200,11 @@ impl ReducedDocsAccum {
 
     /// Assemble the reduced CSR (rows = documents with ≥ 1 kept feature,
     /// in ascending doc-id order; cols = kept features in elimination
-    /// order).
+    /// order). Within each row the entries are sorted by reduced column
+    /// index — the *canonical* layout both covariance backends consume,
+    /// and the precondition for the out-of-core backend's bitwise
+    /// equality with the in-memory one (a column-range sweep of the
+    /// shard cache replays exactly this per-row summation order).
     pub fn finalize(self, nhat: usize) -> CsrMatrix {
         let ndocs = self.doc_ids.len();
         let mut order: Vec<u32> = (0..ndocs as u32).collect();
@@ -204,28 +213,34 @@ impl ReducedDocsAccum {
         let mut indptr = Vec::with_capacity(ndocs + 1);
         let mut indices = Vec::with_capacity(nnz);
         let mut values = Vec::with_capacity(nnz);
+        let mut row: Vec<(u32, f64)> = Vec::new();
         indptr.push(0usize);
         for &d in &order {
             let (lo, hi) = (self.doc_ptr[d as usize], self.doc_ptr[d as usize + 1]);
-            indices.extend_from_slice(&self.idx[lo..hi]);
-            values.extend_from_slice(&self.val[lo..hi]);
+            row.clear();
+            row.extend(self.idx[lo..hi].iter().copied().zip(self.val[lo..hi].iter().copied()));
+            // Reduced indices are variance-ranked, not monotone in the
+            // original word id, so the pushed order is arbitrary; sort.
+            row.sort_unstable_by_key(|&(c, _)| c);
+            indices.extend(row.iter().map(|&(c, _)| c));
+            values.extend(row.iter().map(|&(_, v)| v));
             indptr.push(indices.len());
         }
         CsrMatrix { rows: ndocs, cols: nhat, indptr, indices, values }
     }
 }
 
-/// Streaming implicit-Gram pass: the `cov.backend = "gram"` counterpart
-/// of [`covariance_pass`]. Same reader/worker topology, but the result is
-/// a [`GramCov`] operator over the reduced term matrix — O(nnz + n̂)
-/// memory plus the `cache_mb` row-cache budget, never an n̂ × n̂ dense
-/// matrix.
-pub fn gram_pass<S: ChunkSource>(
+/// Streaming reduced-term-matrix pass: the shared front half of the
+/// `"gram"` and `"disk"` covariance backends. Same reader/worker
+/// topology as [`covariance_pass`], but the result is the reduced,
+/// doc-id-sorted, column-sorted CSR itself — the canonical matrix the
+/// in-memory [`GramCov`] wraps and the on-disk shard cache
+/// ([`crate::data::shardcache`]) persists.
+pub fn reduced_csr_pass<S: ChunkSource>(
     source: &mut S,
     elim: &SafeElimination,
     opts: StreamOptions,
-    cache_mb: usize,
-) -> Result<(GramCov, StreamStats), String> {
+) -> Result<(CsrMatrix, StreamStats), String> {
     let nhat = elim.reduced();
     let lookup = std::sync::Arc::new(reduced_lookup(elim));
     let (acc, stats) = parallel_fold(
@@ -242,7 +257,21 @@ pub fn gram_pass<S: ChunkSource>(
         },
         |a, b| a.merge(b),
     )?;
-    let csr = acc.finalize(nhat);
+    Ok((acc.finalize(nhat), stats))
+}
+
+/// Streaming implicit-Gram pass: the `cov.backend = "gram"` counterpart
+/// of [`covariance_pass`]. Same reader/worker topology, but the result is
+/// a [`GramCov`] operator over the reduced term matrix — O(nnz + n̂)
+/// memory plus the `cache_mb` row-cache budget, never an n̂ × n̂ dense
+/// matrix.
+pub fn gram_pass<S: ChunkSource>(
+    source: &mut S,
+    elim: &SafeElimination,
+    opts: StreamOptions,
+    cache_mb: usize,
+) -> Result<(GramCov, StreamStats), String> {
+    let (csr, stats) = reduced_csr_pass(source, elim, opts)?;
     Ok((GramCov::new(csr, stats.docs, cache_mb), stats))
 }
 

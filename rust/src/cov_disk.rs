@@ -1,0 +1,441 @@
+//! The out-of-core covariance backend (`[cov] backend = "disk"`).
+//!
+//! [`DiskGramCov`] serves the implicit centered covariance
+//! `Σ = AᵀA/m − μμᵀ` of a reduced term matrix that lives **on disk** as a
+//! [`crate::data::shardcache`] — column-range CSC shards plus a manifest
+//! with the per-feature means and Σ diagonal. Resident memory is a
+//! configured budget (the LRU row cache plus one streaming wave of
+//! shards), not a function of the corpus, which moves the pipeline's
+//! ceiling from "reduced matrix fits in RAM" to "reduced matrix fits on
+//! disk".
+//!
+//! ## Bitwise equality with [`GramCov`]
+//!
+//! Every kernel here replays the exact floating-point summation order of
+//! the in-memory [`GramCov`] over the same doc-id-sorted, column-sorted
+//! reduced CSR, so solves through this operator are **bitwise identical**
+//! to in-memory ones (pinned by `rust/tests/oocore.rs`):
+//!
+//! - *matvec, first half* (`ax = A x`): shards are swept in column
+//!   order, scattering `ax[d] += v·x[c]` — for each document the terms
+//!   arrive in ascending reduced-column order, which is the CSR row's own
+//!   (canonical, sorted) order.
+//! - *matvec, second half* (`y = Aᵀax`): each shard owns a disjoint
+//!   `y[c0..c1)` range; per column the terms run over ascending document
+//!   id, the order the in-memory row-major scatter produces. Ranges are
+//!   computed on [`crate::util::parallel`] workers and stitched in shard
+//!   order.
+//! - *row gather* (`Σ_j`): a sorted-merge dot of column `j` against each
+//!   column `k` accumulates over exactly the documents containing both
+//!   features, in ascending id order — the order [`GramCov`]'s
+//!   `compute_row` folds them.
+//!
+//! The means and diagonal are computed once at cache-write time with the
+//! same folds (`shardcache::write`), and gathered rows land in the same
+//! `Mutex`-guarded LRU row cache type, resized to the `[memory]` budget.
+//! Caching and thread count never change a value, only wall time.
+//!
+//! ## Failure model
+//!
+//! [`crate::covop::CovOp`] methods cannot return errors, and a solver
+//! mid-BCA has no way to continue without the data, so an I/O or
+//! integrity failure while streaming a shard **panics** with the
+//! underlying error. Corrupt caches are normally caught before any
+//! solve starts: the coordinator verifies the manifest at
+//! [`crate::data::shardcache::open`] and every shard via
+//! [`crate::data::shardcache::verify_shards`] on a cache hit,
+//! rebuilding on failure — the panic is the backstop for bit rot that
+//! happens *during* a run.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::covop::{CovOp, GramCov, RowCache};
+use crate::data::shardcache::{self, ShardBlock, ShardCacheKey, ShardManifest};
+use crate::util::parallel::{par_map_indexed, resolve_threads};
+
+/// Implicit centered covariance streamed from an on-disk shard cache —
+/// the `"disk"` covariance backend. See the module docs for the memory
+/// and determinism contracts.
+pub struct DiskGramCov {
+    dir: PathBuf,
+    man: ShardManifest,
+    /// Worker threads for shard-parallel kernels (0 = all cores).
+    threads: usize,
+    cache: Mutex<RowCache>,
+}
+
+impl DiskGramCov {
+    /// Open the operator over an existing, validated manifest.
+    ///
+    /// `cache_mb` bounds the Σ-row LRU cache (0 disables caching);
+    /// `threads` is the worker count for shard-parallel kernels
+    /// (0 = all cores).
+    pub fn new(dir: &Path, man: ShardManifest, cache_mb: usize, threads: usize) -> DiskGramCov {
+        let cap_rows = crate::covop::row_cache_cap(cache_mb, man.nhat);
+        DiskGramCov {
+            dir: dir.to_path_buf(),
+            man,
+            threads,
+            cache: Mutex::new(RowCache::new(cap_rows)),
+        }
+    }
+
+    /// Open from a cache directory and key: `Ok(None)` when the cache
+    /// does not exist yet, `Err` on a corrupt or stale manifest.
+    pub fn open(
+        dir: &Path,
+        key: &ShardCacheKey,
+        cache_mb: usize,
+        threads: usize,
+    ) -> Result<Option<DiskGramCov>, String> {
+        Ok(shardcache::open(dir, key)?.map(|man| DiskGramCov::new(dir, man, cache_mb, threads)))
+    }
+
+    /// The manifest this operator streams from.
+    pub fn manifest(&self) -> &ShardManifest {
+        &self.man
+    }
+
+    /// Number of shards on disk.
+    pub fn num_shards(&self) -> usize {
+        self.man.shards.len()
+    }
+
+    /// Stored nonzeros of the reduced term matrix.
+    pub fn nnz(&self) -> usize {
+        self.man.nnz
+    }
+
+    /// `(cache hits, cache misses)` so far — the same capacity-planning
+    /// telemetry [`GramCov::cache_stats`] reports.
+    pub fn cache_stats(&self) -> (u64, u64) {
+        let c = self.cache.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// Rows the Σ-row cache can hold under the configured budget.
+    pub fn cache_capacity_rows(&self) -> usize {
+        self.cache.lock().unwrap().cap_rows
+    }
+
+    /// Load and verify shard `s`, panicking with the underlying error on
+    /// I/O or integrity failure (see the module docs' failure model).
+    fn shard(&self, s: usize) -> ShardBlock {
+        match shardcache::load_shard(&self.dir, &self.man, s) {
+            Ok(b) => b,
+            Err(e) => panic!("disk covariance backend: {e}"),
+        }
+    }
+
+    /// Index of the shard holding reduced column `j`.
+    fn shard_of(&self, j: usize) -> usize {
+        debug_assert!(j < self.man.nhat);
+        match self.man.shards.binary_search_by(|m| {
+            if j < m.col_start {
+                std::cmp::Ordering::Greater
+            } else if j >= m.col_start + m.ncols {
+                std::cmp::Ordering::Less
+            } else {
+                std::cmp::Ordering::Equal
+            }
+        }) {
+            Ok(s) => s,
+            Err(_) => panic!("disk covariance backend: no shard covers column {j}"),
+        }
+    }
+
+    /// `ax = A x` — the first half of every Gram action, swept shard by
+    /// shard in column order so each document's terms accumulate in the
+    /// CSR row's own ascending-column order (bitwise the in-memory
+    /// `CsrMatrix::matvec_into`). Shards of a wave are *loaded* in
+    /// parallel; the fold itself is a strict column-order scatter.
+    fn stream_ax(&self, x: &[f64], ax: &mut [f64]) {
+        assert_eq!(x.len(), self.man.nhat);
+        assert_eq!(ax.len(), self.man.rows);
+        ax.fill(0.0);
+        let nshards = self.man.shards.len();
+        let wave = resolve_threads(self.threads).min(nshards.max(1));
+        let mut start = 0;
+        while start < nshards {
+            let count = wave.min(nshards - start);
+            let blocks = par_map_indexed(self.threads, count, |k| self.shard(start + k));
+            for b in &blocks {
+                for c in 0..b.ncols {
+                    let xc = x[b.col_start + c];
+                    for (d, v) in b.col(c) {
+                        ax[d] += v * xc;
+                    }
+                }
+            }
+            start += count;
+        }
+    }
+
+    /// One shard's slice of Σ row `j`: merge-dot of `col_j` against each
+    /// of the shard's columns over ascending doc ids (GramCov's per-k
+    /// order), then centering.
+    fn row_part(&self, b: &ShardBlock, col_j: &[(u32, f64)], mu_j: f64) -> Vec<f64> {
+        let inv_m = 1.0 / self.man.total_docs.max(1) as f64;
+        let mut part = vec![0.0; b.ncols];
+        for (c, o) in part.iter_mut().enumerate() {
+            let mut acc = 0.0;
+            let (lo, hi) = (b.colptr[c], b.colptr[c + 1]);
+            let (mut a, mut kq) = (0usize, lo);
+            while a < col_j.len() && kq < hi {
+                let (da, dk) = (col_j[a].0, b.rowidx[kq]);
+                match da.cmp(&dk) {
+                    std::cmp::Ordering::Less => a += 1,
+                    std::cmp::Ordering::Greater => kq += 1,
+                    std::cmp::Ordering::Equal => {
+                        acc += col_j[a].1 * b.values[kq];
+                        a += 1;
+                        kq += 1;
+                    }
+                }
+            }
+            let k = b.col_start + c;
+            *o = acc * inv_m - mu_j * self.man.mean[k];
+        }
+        part
+    }
+
+    /// Compute Σ row `j` from the shards: a sorted-merge dot of column
+    /// `j` against every column, shard-parallel over disjoint output
+    /// ranges, then centered — the same value sequence as
+    /// [`GramCov`]'s row kernel, bit for bit. The home shard (already
+    /// decoded to extract column `j`) is consumed inline rather than
+    /// loaded a second time.
+    fn compute_row(&self, j: usize, out: &mut [f64]) {
+        assert_eq!(out.len(), self.man.nhat);
+        let home_idx = self.shard_of(j);
+        let home = self.shard(home_idx);
+        let local = j - home.col_start;
+        let col_j: Vec<(u32, f64)> =
+            home.col(local).map(|(d, v)| (d as u32, v)).collect();
+        let mu_j = self.man.mean[j];
+        let home_part = self.row_part(&home, &col_j, mu_j);
+        out[home.col_start..home.col_start + home_part.len()].copy_from_slice(&home_part);
+        drop(home);
+        let nshards = self.man.shards.len();
+        let parts = par_map_indexed(self.threads, nshards, |s| {
+            if s == home_idx {
+                return None;
+            }
+            let b = self.shard(s);
+            Some((b.col_start, self.row_part(&b, &col_j, mu_j)))
+        });
+        for (col_start, part) in parts.into_iter().flatten() {
+            out[col_start..col_start + part.len()].copy_from_slice(&part);
+        }
+    }
+
+    /// Gather via the row cache — the shared
+    /// [`crate::covop::cached_gather_with`] protocol with this backend's
+    /// shard-streaming row kernel.
+    fn cached_gather(&self, j: usize, idx: Option<&[usize]>, out: &mut [f64]) {
+        crate::covop::cached_gather_with(&self.cache, self.man.nhat, j, idx, out, |j, row| {
+            self.compute_row(j, row)
+        });
+    }
+}
+
+impl CovOp for DiskGramCov {
+    fn n(&self) -> usize {
+        self.man.nhat
+    }
+
+    fn diag(&self, j: usize) -> f64 {
+        self.man.diag[j]
+    }
+
+    fn row_into(&self, j: usize, out: &mut [f64]) {
+        self.cached_gather(j, None, out);
+    }
+
+    fn row_gather(&self, j: usize, idx: &[usize], out: &mut [f64]) {
+        self.cached_gather(j, Some(idx), out);
+    }
+
+    fn matvec(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.man.nhat);
+        assert_eq!(y.len(), self.man.nhat);
+        // ax = A x, then y[c0..c1) = A_sᵀ ax per shard (disjoint ranges,
+        // computed in parallel, stitched in shard order), then centering
+        // — the same three folds as GramCov::matvec, in the same order.
+        let mut ax = vec![0.0; self.man.rows];
+        self.stream_ax(x, &mut ax);
+        let nshards = self.man.shards.len();
+        let parts = par_map_indexed(self.threads, nshards, |s| {
+            let b = self.shard(s);
+            let mut part = vec![0.0; b.ncols];
+            for (c, o) in part.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                for (d, v) in b.col(c) {
+                    let a = ax[d];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    acc += v * a;
+                }
+                *o = acc;
+            }
+            (b.col_start, part)
+        });
+        for (col_start, part) in parts {
+            y[col_start..col_start + part.len()].copy_from_slice(&part);
+        }
+        let inv_m = 1.0 / self.man.total_docs.max(1) as f64;
+        let mux = crate::linalg::vec::dot(&self.man.mean, x);
+        for (yk, &mu_k) in y.iter_mut().zip(&self.man.mean) {
+            *yk = *yk * inv_m - mu_k * mux;
+        }
+    }
+
+    fn quad_form(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.man.nhat);
+        // xᵀΣx = ‖Ax‖²/m − (μᵀx)², streamed — GramCov::quad_form's folds.
+        let mut ax = vec![0.0; self.man.rows];
+        self.stream_ax(x, &mut ax);
+        let ssq: f64 = ax.iter().map(|a| a * a).sum();
+        let mux = crate::linalg::vec::dot(&self.man.mean, x);
+        ssq / self.man.total_docs.max(1) as f64 - mux * mux
+    }
+}
+
+/// Convenience used by benches and tests: build an in-memory [`GramCov`]
+/// and a [`DiskGramCov`] over the **same** reduced CSR, writing (or
+/// reusing) the shard cache under `dir`.
+pub fn disk_twin_of(
+    csr: &crate::data::CsrMatrix,
+    total_docs: u64,
+    dir: &Path,
+    key: &ShardCacheKey,
+    shard_bytes: usize,
+    cache_mb: usize,
+    threads: usize,
+) -> Result<(GramCov, DiskGramCov), String> {
+    let man = shardcache::write(dir, key, csr, total_docs, shard_bytes)?;
+    let disk = DiskGramCov::new(dir, man, cache_mb, threads);
+    Ok((GramCov::new(csr.clone(), total_docs, cache_mb), disk))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TripletMatrix;
+    use crate::util::check::property;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize) -> crate::data::CsrMatrix {
+        let mut t = TripletMatrix::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bool(0.35) {
+                    t.push(r, c, (1 + rng.below(5)) as f64);
+                }
+            }
+        }
+        t.to_csr()
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_covdisk_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn prop_disk_matches_gram_bitwise() {
+        property("DiskGramCov == GramCov bitwise", 8, |rng| {
+            let rows = rng.range(3, 60);
+            let cols = rng.range(2, 18);
+            let csr = random_csr(rng, rows, cols);
+            let dir = tmpdir("bw");
+            let key = ShardCacheKey {
+                corpus_digest: rng.below(1 << 30) as u64,
+                elim_digest: 99,
+            };
+            // tiny shard budget → several shards; tiny cache → eviction
+            let (gram, disk) =
+                disk_twin_of(&csr, rows as u64 + 1, &dir, &key, 200, 1, 2).unwrap();
+            assert_eq!(CovOp::n(&disk), cols);
+            let mut rg = vec![0.0; cols];
+            let mut rd = vec![0.0; cols];
+            for j in 0..cols {
+                if disk.diag(j).to_bits() != gram.diag(j).to_bits() {
+                    return Err(format!("diag {j} differs"));
+                }
+                gram.row_into(j, &mut rg);
+                disk.row_into(j, &mut rd);
+                for k in 0..cols {
+                    if rg[k].to_bits() != rd[k].to_bits() {
+                        return Err(format!("row {j} col {k}: {} vs {}", rg[k], rd[k]));
+                    }
+                }
+            }
+            let x: Vec<f64> = (0..cols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let (mut yg, mut yd) = (vec![0.0; cols], vec![0.0; cols]);
+            gram.matvec(&x, &mut yg);
+            disk.matvec(&x, &mut yd);
+            if yg.iter().zip(&yd).any(|(a, b)| a.to_bits() != b.to_bits()) {
+                return Err("matvec differs".into());
+            }
+            if gram.quad_form(&x).to_bits() != disk.quad_form(&x).to_bits() {
+                return Err("quad_form differs".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn disk_deterministic_across_threads_and_cache_sizes() {
+        let mut rng = Rng::seed_from(41);
+        let csr = random_csr(&mut rng, 80, 12);
+        let dir = tmpdir("det");
+        let key = ShardCacheKey { corpus_digest: 1, elim_digest: 2 };
+        let man = shardcache::write(&dir, &key, &csr, 80, 300).unwrap();
+        let x: Vec<f64> = (0..12).map(|_| rng.gauss()).collect();
+        let mut reference: Option<(Vec<u64>, Vec<u64>)> = None;
+        for (threads, cache_mb) in [(1, 0), (1, 4), (4, 1), (3, 16)] {
+            let disk = DiskGramCov::new(&dir, man.clone(), cache_mb, threads);
+            let mut y = vec![0.0; 12];
+            disk.matvec(&x, &mut y);
+            let ybits: Vec<u64> = y.iter().map(|v| v.to_bits()).collect();
+            let mut row = vec![0.0; 12];
+            let mut rbits = Vec::new();
+            for j in 0..12 {
+                disk.row_into(j, &mut row);
+                rbits.extend(row.iter().map(|v| v.to_bits()));
+                // repeated gather (cached or not) returns the same bits
+                let mut again = vec![0.0; 12];
+                disk.row_into(j, &mut again);
+                assert_eq!(row, again);
+            }
+            match &reference {
+                None => reference = Some((ybits, rbits)),
+                Some((wy, wr)) => {
+                    assert_eq!(&ybits, wy, "threads={threads} cache={cache_mb}");
+                    assert_eq!(&rbits, wr, "threads={threads} cache={cache_mb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn open_roundtrip_and_missing() {
+        let mut rng = Rng::seed_from(42);
+        let csr = random_csr(&mut rng, 30, 6);
+        let dir = tmpdir("open");
+        let key = ShardCacheKey { corpus_digest: 10, elim_digest: 20 };
+        assert!(DiskGramCov::open(&dir, &key, 4, 1).unwrap().is_none());
+        shardcache::write(&dir, &key, &csr, 30, 1 << 20).unwrap();
+        let disk = DiskGramCov::open(&dir, &key, 4, 1).unwrap().expect("cache hit");
+        assert_eq!(disk.nnz(), csr.nnz());
+        assert!(disk.num_shards() >= 1);
+        assert!(disk.cache_capacity_rows() > 0);
+        let (h, m) = disk.cache_stats();
+        assert_eq!((h, m), (0, 0));
+    }
+}

@@ -27,6 +27,10 @@
 //!   is O(nnz + n̂) plus a bounded row cache (`solver.row_cache_mb`), so
 //!   n̂ can reach tens of thousands without the O(n̂²) dense matrix ever
 //!   existing.
+//! - [`crate::cov_disk::DiskGramCov`] — the out-of-core twin of
+//!   [`GramCov`]: the same operator streamed from an on-disk shard cache
+//!   under a configured memory budget, with **bitwise-identical** results
+//!   (same summation orders; see `cov_disk`).
 //! - [`MaskedCov`] — a zero-copy principal-submatrix view: the per-λ
 //!   nested-elimination mask the λ-search solves on (high-λ probes see
 //!   only their own Thm-2.1 survivors of one shared superset operator).
@@ -57,6 +61,31 @@ use crate::data::SymMat;
 /// The required methods are the four operations Algorithm 1 needs; the
 /// provided methods (`row_gather`, `frob_with`, `materialize`) have
 /// generic implementations that implementors may shortcut.
+///
+/// # Example: one matvec, two backends
+///
+/// The implicit Gram operator and its densified counterpart agree:
+///
+/// ```
+/// use lsspca::covop::{CovOp, GramCov};
+/// use lsspca::data::TripletMatrix;
+///
+/// // A 3-document × 2-feature term matrix.
+/// let mut t = TripletMatrix::new(3, 2);
+/// t.push(0, 0, 1.0);
+/// t.push(1, 0, 2.0);
+/// t.push(1, 1, 1.0);
+/// let gram = GramCov::new(t.to_csr(), 3, 4); // m = 3 docs, 4 MiB cache
+/// let dense = gram.materialize_full();       // Σ as an explicit matrix
+///
+/// let x = [1.0, -0.5];
+/// let (mut y_gram, mut y_dense) = (vec![0.0; 2], vec![0.0; 2]);
+/// gram.matvec(&x, &mut y_gram);
+/// CovOp::matvec(&dense, &x, &mut y_dense);
+/// for (a, b) in y_gram.iter().zip(&y_dense) {
+///     assert!((a - b).abs() < 1e-12);
+/// }
+/// ```
 pub trait CovOp: Send + Sync {
     /// Operator order n̂.
     fn n(&self) -> usize;
@@ -237,6 +266,7 @@ impl CovOp for SymMat {
 pub struct DenseCov(pub SymMat);
 
 impl DenseCov {
+    /// Wrap an assembled covariance matrix.
     pub fn new(sigma: SymMat) -> DenseCov {
         DenseCov(sigma)
     }
@@ -359,23 +389,24 @@ impl<C: CovOp + ?Sized> CovOp for MaskedCov<'_, C> {
 
 /// Least-recently-used cache of gathered rows (interior state; values are
 /// recomputed deterministically on a miss, so the cache never changes a
-/// result — only wall time).
-struct RowCache {
+/// result — only wall time). Shared by [`GramCov`] and the out-of-core
+/// [`crate::cov_disk::DiskGramCov`].
+pub(crate) struct RowCache {
     rows: HashMap<usize, (u64, Vec<f64>)>,
     clock: u64,
-    cap_rows: usize,
-    hits: u64,
-    misses: u64,
+    pub(crate) cap_rows: usize,
+    pub(crate) hits: u64,
+    pub(crate) misses: u64,
 }
 
 impl RowCache {
-    fn new(cap_rows: usize) -> RowCache {
+    pub(crate) fn new(cap_rows: usize) -> RowCache {
         RowCache { rows: HashMap::new(), clock: 0, cap_rows, hits: 0, misses: 0 }
     }
 
     /// Copy a cached row's entries at `idx` into `out` (`None` = whole
     /// row, served with one `copy_from_slice`); `false` on miss.
-    fn gather(&mut self, j: usize, idx: Option<&[usize]>, out: &mut [f64]) -> bool {
+    pub(crate) fn gather(&mut self, j: usize, idx: Option<&[usize]>, out: &mut [f64]) -> bool {
         self.clock += 1;
         match self.rows.get_mut(&j) {
             Some((stamp, row)) => {
@@ -398,7 +429,7 @@ impl RowCache {
         }
     }
 
-    fn insert(&mut self, j: usize, row: Vec<f64>) {
+    pub(crate) fn insert(&mut self, j: usize, row: Vec<f64>) {
         if self.cap_rows == 0 {
             return;
         }
@@ -420,6 +451,86 @@ impl RowCache {
         // A concurrent gather may have raced the same row in; keep the
         // existing copy (values are identical by determinism).
         self.rows.entry(j).or_insert(stamped);
+    }
+}
+
+/// Per-feature means `μ = (Aᵀ1)/m` and centered diagonal `Σ_jj` of a
+/// reduced term matrix — the **single** definition of these folds,
+/// shared by [`GramCov::new`] and the shard-cache writer
+/// ([`crate::data::shardcache::write`]) so the in-memory and on-disk
+/// backends serve identical bits by construction. The mean accumulates
+/// in CSR row-major order; the diagonal via per-column sums of squares.
+pub(crate) fn reduced_means_and_diag(csr: &CsrMatrix, total_docs: u64) -> (Vec<f64>, Vec<f64>) {
+    let nhat = csr.cols;
+    let m = total_docs.max(1) as f64;
+    let mut sums = vec![0.0; nhat];
+    for r in 0..csr.rows {
+        for (c, v) in csr.row(r) {
+            sums[c] += v;
+        }
+    }
+    let mean: Vec<f64> = sums.iter().map(|&s| s / m).collect();
+    let csc = csr.to_csc();
+    let diag: Vec<f64> = (0..nhat)
+        .map(|j| {
+            let (_, ss) = csc.col_moments(j);
+            ss / m - mean[j] * mean[j]
+        })
+        .collect();
+    (mean, diag)
+}
+
+/// Rows a `cache_mb`-MiB Σ-row cache holds at order `nhat` (0 disables
+/// caching; at least one row otherwise) — shared by both implicit
+/// backends so their cache behavior matches.
+pub(crate) fn row_cache_cap(cache_mb: usize, nhat: usize) -> usize {
+    if cache_mb == 0 {
+        0
+    } else {
+        ((cache_mb * 1024 * 1024) / (8 * nhat.max(1))).max(1)
+    }
+}
+
+/// The shared cached-row-gather protocol of both implicit backends:
+/// serve picks (or the whole row when `idx` is `None`) from the cache,
+/// computing via `compute_row` and inserting on a miss. Row computation
+/// happens **outside** the lock so concurrent probes do not serialize
+/// on row builds; a racing insert of the same row is benign because
+/// rows are deterministic.
+pub(crate) fn cached_gather_with(
+    cache: &Mutex<RowCache>,
+    nhat: usize,
+    j: usize,
+    idx: Option<&[usize]>,
+    out: &mut [f64],
+    compute_row: impl Fn(usize, &mut [f64]),
+) {
+    let caching = {
+        let mut cache = cache.lock().unwrap();
+        if cache.cap_rows > 0 && cache.gather(j, idx, out) {
+            return;
+        }
+        cache.cap_rows > 0
+    };
+    match idx {
+        Some(idx) => {
+            let mut row = vec![0.0; nhat];
+            compute_row(j, &mut row);
+            for (o, &i) in out.iter_mut().zip(idx) {
+                *o = row[i];
+            }
+            if caching {
+                cache.lock().unwrap().insert(j, row);
+            }
+        }
+        None => {
+            // Full-row request: compute straight into the caller's
+            // buffer, cloning only if it is worth caching.
+            compute_row(j, out);
+            if caching {
+                cache.lock().unwrap().insert(j, out.to_vec());
+            }
+        }
     }
 }
 
@@ -457,25 +568,9 @@ impl GramCov {
     pub fn new(csr: CsrMatrix, total_docs: u64, cache_mb: usize) -> GramCov {
         let nhat = csr.cols;
         let m = total_docs.max(1) as f64;
-        let mut sums = vec![0.0; nhat];
-        for r in 0..csr.rows {
-            for (c, v) in csr.row(r) {
-                sums[c] += v;
-            }
-        }
-        let mean: Vec<f64> = sums.iter().map(|&s| s / m).collect();
+        let (mean, diag) = reduced_means_and_diag(&csr, total_docs);
         let csc = csr.to_csc();
-        let diag: Vec<f64> = (0..nhat)
-            .map(|j| {
-                let (_, ss) = csc.col_moments(j);
-                ss / m - mean[j] * mean[j]
-            })
-            .collect();
-        let cap_rows = if cache_mb == 0 {
-            0
-        } else {
-            ((cache_mb * 1024 * 1024) / (8 * nhat.max(1))).max(1)
-        };
+        let cap_rows = row_cache_cap(cache_mb, nhat);
         GramCov {
             csr,
             csc,
@@ -520,38 +615,12 @@ impl GramCov {
         }
     }
 
-    /// Gather via the cache: serve picks (or the whole row when `idx` is
-    /// `None`) from a cached row, computing and inserting on a miss.
-    /// Computation happens outside the lock so concurrent probes do not
-    /// serialize on row builds.
+    /// Gather via the cache — the shared [`cached_gather_with`]
+    /// protocol with this backend's sparse row kernel.
     fn cached_gather(&self, j: usize, idx: Option<&[usize]>, out: &mut [f64]) {
-        let caching = {
-            let mut cache = self.cache.lock().unwrap();
-            if cache.cap_rows > 0 && cache.gather(j, idx, out) {
-                return;
-            }
-            cache.cap_rows > 0
-        };
-        match idx {
-            Some(idx) => {
-                let mut row = vec![0.0; self.csr.cols];
-                self.compute_row(j, &mut row);
-                for (o, &i) in out.iter_mut().zip(idx) {
-                    *o = row[i];
-                }
-                if caching {
-                    self.cache.lock().unwrap().insert(j, row);
-                }
-            }
-            None => {
-                // Full-row request: compute straight into the caller's
-                // buffer, cloning only if it is worth caching.
-                self.compute_row(j, out);
-                if caching {
-                    self.cache.lock().unwrap().insert(j, out.to_vec());
-                }
-            }
-        }
+        cached_gather_with(&self.cache, self.csr.cols, j, idx, out, |j, row| {
+            self.compute_row(j, row)
+        });
     }
 }
 

@@ -23,25 +23,32 @@ use crate::util::gzip::{GzDecoder, GzEncoder};
 /// Header of a docword file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DocwordHeader {
+    /// Declared document count D.
     pub num_docs: usize,
+    /// Declared vocabulary size W.
     pub vocab_size: usize,
+    /// Declared nonzero count NNZ.
     pub nnz: usize,
 }
 
 /// One document: sorted `(word_id_0based, count)` pairs.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Doc {
+    /// 0-based document id (file order).
     pub id: usize,
+    /// Sorted `(word_id_0based, count)` pairs.
     pub words: Vec<(u32, f64)>,
 }
 
 /// A chunk of consecutive documents, the unit handed to moment workers.
 #[derive(Clone, Debug, Default)]
 pub struct DocChunk {
+    /// Consecutive documents, in file order.
     pub docs: Vec<Doc>,
 }
 
 impl DocChunk {
+    /// Stored `(word, count)` pairs across the chunk.
     pub fn total_nnz(&self) -> usize {
         self.docs.iter().map(|d| d.words.len()).sum()
     }
@@ -96,6 +103,7 @@ impl DocwordReader {
         })
     }
 
+    /// The file's declared `(D, W, NNZ)` header.
     pub fn header(&self) -> DocwordHeader {
         self.header
     }
@@ -219,6 +227,8 @@ impl Write for DocOut {
     }
 }
 
+/// Streaming writer for the UCI docword format (`.gz` when the path
+/// ends in `.gz`).
 pub struct DocwordWriter {
     out: DocOut,
     nnz_written: usize,
@@ -226,6 +236,7 @@ pub struct DocwordWriter {
 }
 
 impl DocwordWriter {
+    /// Create the file and write the three-line header.
     pub fn create(path: &Path, header: DocwordHeader) -> Result<DocwordWriter, String> {
         let f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
         let mut out = if path.extension().is_some_and(|e| e == "gz") {

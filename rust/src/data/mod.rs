@@ -1,13 +1,15 @@
 //! Data structures and on-disk formats: dense symmetric matrices, sparse
-//! matrices (triplet/CSR/CSC), the UCI bag-of-words `docword` format and
-//! vocabulary files.
+//! matrices (triplet/CSR/CSC), the UCI bag-of-words `docword` format,
+//! vocabulary files, and the out-of-core corpus shard cache.
 
 pub mod docword;
+pub mod shardcache;
 pub mod sparse;
 pub mod sym;
 pub mod vocab;
 
 pub use docword::{DocwordHeader, DocwordReader, DocwordWriter};
+pub use shardcache::{ShardCacheKey, ShardManifest};
 pub use sparse::{CscMatrix, CsrMatrix, TripletMatrix};
 pub use sym::SymMat;
 pub use vocab::Vocab;

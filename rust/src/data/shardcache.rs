@@ -1,0 +1,799 @@
+//! The on-disk corpus shard cache — the persistence layer behind the
+//! out-of-core covariance backend (`[cov] backend = "disk"`).
+//!
+//! After safe elimination, the `gram_pass` produces the reduced,
+//! doc-id-sorted sparse term matrix `A` (rows = documents with ≥ 1 kept
+//! feature, cols = kept features). This module writes that matrix **once**
+//! as a set of fixed-byte-budget *column-range shards* plus a manifest,
+//! keyed by `(corpus digest, elimination digest)` so later runs on the
+//! same corpus and elimination mask reuse the cache without re-streaming
+//! the corpus.
+//!
+//! Why column ranges: every operation the solver needs from the implicit
+//! covariance `Σ = AᵀA/m − μμᵀ` decomposes over *feature* (column) blocks
+//! of `A` — a Σ-row gather is a set of column dot products, and the
+//! second half of a matvec (`y = Aᵀ(Ax)`) writes disjoint `y` ranges per
+//! block — so [`crate::cov_disk::DiskGramCov`] can stream one shard at a
+//! time under a fixed memory budget, in parallel where the outputs are
+//! disjoint. Within each shard, columns store their `(doc, value)` pairs
+//! in ascending document order (CSC of the doc-id-sorted CSR), which is
+//! exactly the summation order of the in-memory [`crate::covop::GramCov`]
+//! kernels — the property that makes disk-backed solves **bitwise
+//! identical** to in-memory ones.
+//!
+//! ## Layout and integrity
+//!
+//! All files are little-endian with the `checkpoint.rs`-style framing:
+//! magic, `u32` version, payload, trailing xor-fold checksum.
+//!
+//! - `shards_<corpus>_<elim>.lssm` — the manifest: both digests, corpus
+//!   document count `m`, reduced shape and nnz, the per-shard column
+//!   ranges and payload checksums, and the precomputed per-feature means
+//!   and Σ diagonal (so opening the cache costs one small file read, not
+//!   a pass over every shard).
+//! - `shards_<corpus>_<elim>.s<idx>.lss` — one shard: its index and
+//!   column range (cross-checked against the manifest at load), then the
+//!   CSC arrays `colptr` / `rowidx` / `values`.
+//!
+//! Every load path re-verifies checksums and cross-checks the shard
+//! header against the manifest record, so a truncated shard, a corrupt
+//! manifest, or a stale mix of files from different runs is rejected
+//! with an error instead of silently feeding wrong numbers to the solver.
+//!
+//! The digests and checksums are *integrity* checks (FNV + xor-fold),
+//! not authentication: they catch rot, truncation, and staleness, not a
+//! co-resident adversary who can write the cache directory. Point
+//! `corpus.cache_dir` at a directory you trust; the no-config fallback
+//! is a per-user directory created with user-only permissions on Unix.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::data::sparse::CsrMatrix;
+use crate::elim::SafeElimination;
+use crate::util::xor_fold_checksum as checksum;
+
+const MANIFEST_MAGIC: &[u8; 4] = b"LSSM";
+const SHARD_MAGIC: &[u8; 4] = b"LSSH";
+const VERSION: u32 = 1;
+
+/// Identity of a shard cache: which corpus and which elimination mask
+/// the shards were built from. Both digests appear in the file names and
+/// inside every payload; a mismatch on open means a stale cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardCacheKey {
+    /// FNV-1a digest of the corpus identity string (see
+    /// [`crate::checkpoint::corpus_key`]).
+    pub corpus_digest: u64,
+    /// Digest of the elimination mask (λ̂, original n, kept indices) —
+    /// see [`elim_digest`].
+    pub elim_digest: u64,
+}
+
+/// FNV-1a digest of an elimination result: λ̂ bits, the original feature
+/// count, and every kept index in order. Two eliminations that keep the
+/// same features of the same corpus at the same λ̂ share a cache; any
+/// difference (re-tuned target, different vocabulary) misses.
+pub fn elim_digest(elim: &SafeElimination) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(elim.lambda.to_bits());
+    eat(elim.original as u64);
+    eat(elim.kept.len() as u64);
+    for &k in &elim.kept {
+        eat(k as u64);
+    }
+    h
+}
+
+/// Manifest record for one shard: the column range it covers and the
+/// checksum its payload must carry (the staleness cross-check).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// First reduced column in this shard.
+    pub col_start: usize,
+    /// Number of columns in this shard.
+    pub ncols: usize,
+    /// Stored nonzeros in this shard.
+    pub nnz: usize,
+    /// Payload checksum of the shard file (duplicated from the shard's
+    /// own trailer so a shard from a *different* write of the same key
+    /// is caught).
+    pub checksum: u64,
+}
+
+/// The shard cache manifest: everything [`crate::cov_disk::DiskGramCov`]
+/// needs to serve Σ except the shard payloads themselves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    /// Cache identity (corpus + elimination digests).
+    pub key: ShardCacheKey,
+    /// Total corpus document count `m` (the centering denominator,
+    /// including documents with no kept features).
+    pub total_docs: u64,
+    /// Rows of the reduced matrix (documents with ≥ 1 kept feature).
+    pub rows: usize,
+    /// Reduced feature count n̂ (columns).
+    pub nhat: usize,
+    /// Total stored nonzeros across all shards.
+    pub nnz: usize,
+    /// The byte budget each shard was packed against.
+    pub shard_bytes: usize,
+    /// Per-shard column ranges and checksums, in column order.
+    pub shards: Vec<ShardMeta>,
+    /// Per-feature mean `μ_j` over all `m` documents (same summation
+    /// order as [`crate::covop::GramCov::new`], so bitwise equal).
+    pub mean: Vec<f64>,
+    /// Precomputed diagonal `Σ_jj` (bitwise equal to the in-memory
+    /// backend's).
+    pub diag: Vec<f64>,
+}
+
+/// One decoded shard: the CSC arrays of columns
+/// `col_start .. col_start + ncols` of the reduced term matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardBlock {
+    /// First reduced column this shard covers.
+    pub col_start: usize,
+    /// Columns in this shard.
+    pub ncols: usize,
+    /// Rows of the full reduced matrix (shared by all shards).
+    pub rows: usize,
+    /// Column pointers, local to the shard (`len == ncols + 1`).
+    pub colptr: Vec<usize>,
+    /// Row (document) indices, ascending within each column.
+    pub rowidx: Vec<u32>,
+    /// Nonzero values, aligned with `rowidx`.
+    pub values: Vec<f64>,
+}
+
+impl ShardBlock {
+    /// Iterate local column `c`'s `(row, value)` pairs in ascending row
+    /// order — the same order [`crate::data::CscMatrix::col`] yields.
+    pub fn col(&self, c: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let (lo, hi) = (self.colptr[c], self.colptr[c + 1]);
+        self.rowidx[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&r, &v)| (r as usize, v))
+    }
+}
+
+fn stem(key: &ShardCacheKey) -> String {
+    format!("shards_{:016x}_{:016x}", key.corpus_digest, key.elim_digest)
+}
+
+/// Manifest path for a key inside a cache directory.
+pub fn manifest_path(dir: &Path, key: &ShardCacheKey) -> PathBuf {
+    dir.join(format!("{}.lssm", stem(key)))
+}
+
+/// Shard file path for a key and shard index inside a cache directory.
+pub fn shard_path(dir: &Path, key: &ShardCacheKey, idx: usize) -> PathBuf {
+    dir.join(format!("{}.s{idx:04}.lss", stem(key)))
+}
+
+// --- little-endian payload helpers -----------------------------------------
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked reader (truncation surfaces as `Err`, never a panic).
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or("shard cache: truncated payload")?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize, String> {
+        usize::try_from(self.u64()?).map_err(|_| "shard cache: length overflows usize".into())
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+/// Frame a payload (magic + version + payload + checksum) and write it.
+fn write_framed(path: &Path, magic: &[u8; 4], payload: &[u8]) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+    }
+    let sum = checksum(payload);
+    let mut f =
+        std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+    f.write_all(magic).map_err(|e| e.to_string())?;
+    f.write_all(&VERSION.to_le_bytes()).map_err(|e| e.to_string())?;
+    f.write_all(payload).map_err(|e| e.to_string())?;
+    f.write_all(&sum.to_le_bytes()).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+/// Read a framed file back, verifying magic, version and checksum.
+/// Returns the payload bytes.
+fn read_framed(path: &Path, magic: &[u8; 4], what: &str) -> Result<Vec<u8>, String> {
+    let mut f =
+        std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| e.to_string())?;
+    if buf.len() < 16 || &buf[..4] != magic {
+        return Err(format!("{what} {}: bad magic or truncated header", path.display()));
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(format!("{what} {}: version {version}, want {VERSION}", path.display()));
+    }
+    let payload = &buf[8..buf.len() - 8];
+    let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if checksum(payload) != stored {
+        return Err(format!("{what} {}: checksum mismatch (corrupt file)", path.display()));
+    }
+    Ok(payload.to_vec())
+}
+
+/// Approximate on-disk bytes of a shard holding `ncols` columns and
+/// `nnz` entries (colptr + rowidx + values).
+fn shard_payload_bytes(ncols: usize, nnz: usize) -> usize {
+    8 * (ncols + 1) + 12 * nnz
+}
+
+/// Pack columns into shards greedily under `shard_bytes` per shard
+/// (every shard holds at least one column). Returns `(col_start, ncols)`
+/// ranges covering `0..nhat` in order.
+pub fn plan_shards(col_nnz: &[usize], shard_bytes: usize) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    let mut start = 0;
+    while start < col_nnz.len() {
+        let mut end = start + 1;
+        let mut nnz = col_nnz[start];
+        while end < col_nnz.len() {
+            let next = nnz + col_nnz[end];
+            if shard_payload_bytes(end + 1 - start, next) > shard_bytes {
+                break;
+            }
+            nnz = next;
+            end += 1;
+        }
+        ranges.push((start, end - start));
+        start = end;
+    }
+    if ranges.is_empty() {
+        ranges.push((0, 0));
+    }
+    ranges
+}
+
+/// Write the shard cache for a reduced, doc-id-sorted CSR under `dir`.
+///
+/// `total_docs` is the full corpus size `m` (centering denominator);
+/// `shard_bytes` is the per-shard byte budget. Returns the manifest that
+/// was written. The per-feature means and Σ diagonal are computed here
+/// with the identical summation order used by
+/// [`crate::covop::GramCov::new`], so a [`crate::cov_disk::DiskGramCov`]
+/// opened from this cache serves bitwise-identical values.
+///
+/// # Example: write → reopen roundtrip
+///
+/// ```
+/// use lsspca::data::shardcache::{self, ShardCacheKey};
+/// use lsspca::data::TripletMatrix;
+///
+/// let mut t = TripletMatrix::new(3, 2);
+/// t.push(0, 0, 2.0);
+/// t.push(2, 1, 1.0);
+/// let csr = t.to_csr();
+/// let dir = std::env::temp_dir()
+///     .join(format!("lsspca_doctest_shards_{}", std::process::id()));
+/// let key = ShardCacheKey { corpus_digest: 1, elim_digest: 2 };
+/// let written = shardcache::write(&dir, &key, &csr, 3, 1 << 20).unwrap();
+/// let reopened = shardcache::open(&dir, &key).unwrap().expect("cache hit");
+/// assert_eq!(reopened, written); // manifest verified: magic + checksum + key
+/// # for i in 0..written.shards.len() {
+/// #     std::fs::remove_file(shardcache::shard_path(&dir, &key, i)).ok();
+/// # }
+/// # std::fs::remove_file(shardcache::manifest_path(&dir, &key)).ok();
+/// # std::fs::remove_dir(&dir).ok();
+/// ```
+pub fn write(
+    dir: &Path,
+    key: &ShardCacheKey,
+    csr: &CsrMatrix,
+    total_docs: u64,
+    shard_bytes: usize,
+) -> Result<ShardManifest, String> {
+    let nhat = csr.cols;
+    // The one shared definition of the mean/diagonal folds — bitwise
+    // equality with GramCov holds by construction, not by transcription.
+    let (mean, diag) = crate::covop::reduced_means_and_diag(csr, total_docs);
+    // Column-major view for slicing shards.
+    let csc = csr.to_csc();
+    let col_nnz: Vec<usize> = (0..nhat).map(|c| csc.col_nnz(c)).collect();
+    let ranges = plan_shards(&col_nnz, shard_bytes.max(1));
+
+    let mut shards = Vec::with_capacity(ranges.len());
+    for (idx, &(col_start, ncols)) in ranges.iter().enumerate() {
+        let (lo, hi) = (csc.colptr[col_start], csc.colptr[col_start + ncols]);
+        let mut payload = Vec::with_capacity(64 + shard_payload_bytes(ncols, hi - lo));
+        put_u64(&mut payload, key.corpus_digest);
+        put_u64(&mut payload, key.elim_digest);
+        put_u64(&mut payload, idx as u64);
+        put_u64(&mut payload, col_start as u64);
+        put_u64(&mut payload, ncols as u64);
+        put_u64(&mut payload, csr.rows as u64);
+        put_u64(&mut payload, (hi - lo) as u64);
+        for &p in &csc.colptr[col_start..=col_start + ncols] {
+            put_u64(&mut payload, (p - lo) as u64);
+        }
+        for &r in &csc.rowidx[lo..hi] {
+            payload.extend_from_slice(&r.to_le_bytes());
+        }
+        for &v in &csc.values[lo..hi] {
+            put_f64(&mut payload, v);
+        }
+        let sum = checksum(&payload);
+        write_framed(&shard_path(dir, key, idx), SHARD_MAGIC, &payload)?;
+        shards.push(ShardMeta { col_start, ncols, nnz: hi - lo, checksum: sum });
+    }
+
+    let manifest = ShardManifest {
+        key: *key,
+        total_docs,
+        rows: csr.rows,
+        nhat,
+        nnz: csr.nnz(),
+        shard_bytes,
+        shards,
+        mean,
+        diag,
+    };
+    write_manifest(dir, &manifest)?;
+    Ok(manifest)
+}
+
+fn write_manifest(dir: &Path, man: &ShardManifest) -> Result<(), String> {
+    let mut payload = Vec::new();
+    put_u64(&mut payload, man.key.corpus_digest);
+    put_u64(&mut payload, man.key.elim_digest);
+    put_u64(&mut payload, man.total_docs);
+    put_u64(&mut payload, man.rows as u64);
+    put_u64(&mut payload, man.nhat as u64);
+    put_u64(&mut payload, man.nnz as u64);
+    put_u64(&mut payload, man.shard_bytes as u64);
+    put_u64(&mut payload, man.shards.len() as u64);
+    for s in &man.shards {
+        put_u64(&mut payload, s.col_start as u64);
+        put_u64(&mut payload, s.ncols as u64);
+        put_u64(&mut payload, s.nnz as u64);
+        put_u64(&mut payload, s.checksum);
+    }
+    for &v in &man.mean {
+        put_f64(&mut payload, v);
+    }
+    for &v in &man.diag {
+        put_f64(&mut payload, v);
+    }
+    write_framed(&manifest_path(dir, &man.key), MANIFEST_MAGIC, &payload)
+}
+
+/// Open a shard cache: `Ok(None)` when no manifest exists for the key
+/// (a cache miss — build and [`write`] it), `Err` on corruption or a
+/// stale manifest whose stored digests disagree with `key`.
+///
+/// Shard payloads are *not* read here; [`load_shard`] verifies each one
+/// on first touch.
+pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, String> {
+    let path = manifest_path(dir, key);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let payload = read_framed(&path, MANIFEST_MAGIC, "shard manifest")?;
+    let mut r = Reader::new(&payload);
+    let stored = ShardCacheKey { corpus_digest: r.u64()?, elim_digest: r.u64()? };
+    if stored != *key {
+        return Err(format!(
+            "shard manifest {}: key mismatch (stored {:016x}/{:016x}, want {:016x}/{:016x}) \
+             — stale cache",
+            path.display(),
+            stored.corpus_digest,
+            stored.elim_digest,
+            key.corpus_digest,
+            key.elim_digest
+        ));
+    }
+    let total_docs = r.u64()?;
+    let rows = r.usize()?;
+    let nhat = r.usize()?;
+    let nnz = r.usize()?;
+    let shard_bytes = r.usize()?;
+    let nshards = r.usize()?;
+    if nshards > payload.len() || nhat > payload.len() {
+        return Err("shard manifest: implausible shard or column count".into());
+    }
+    let mut shards = Vec::with_capacity(nshards);
+    for _ in 0..nshards {
+        shards.push(ShardMeta {
+            col_start: r.usize()?,
+            ncols: r.usize()?,
+            nnz: r.usize()?,
+            checksum: r.u64()?,
+        });
+    }
+    let mut mean = Vec::with_capacity(nhat);
+    for _ in 0..nhat {
+        mean.push(r.f64()?);
+    }
+    let mut diag = Vec::with_capacity(nhat);
+    for _ in 0..nhat {
+        diag.push(r.f64()?);
+    }
+    if !r.done() {
+        return Err("shard manifest: trailing bytes (corrupt file)".into());
+    }
+    // Structural sanity: shard ranges must tile 0..nhat in order.
+    let mut expect = 0;
+    let mut sum_nnz = 0;
+    for s in &shards {
+        if s.col_start != expect {
+            return Err("shard manifest: shard ranges do not tile the columns".into());
+        }
+        expect += s.ncols;
+        sum_nnz += s.nnz;
+    }
+    if expect != nhat || sum_nnz != nnz {
+        return Err("shard manifest: shard ranges inconsistent with shape".into());
+    }
+    Ok(Some(ShardManifest {
+        key: *key,
+        total_docs,
+        rows,
+        nhat,
+        nnz,
+        shard_bytes,
+        shards,
+        mean,
+        diag,
+    }))
+}
+
+/// Load and verify one shard. The payload checksum must match both the
+/// shard's own trailer and the manifest record, and the header must
+/// agree with the manifest's column range — so a shard file left over
+/// from a different write of the same key is rejected as stale.
+pub fn load_shard(
+    dir: &Path,
+    man: &ShardManifest,
+    idx: usize,
+) -> Result<ShardBlock, String> {
+    let meta = man
+        .shards
+        .get(idx)
+        .ok_or_else(|| format!("shard cache: shard index {idx} out of range"))?;
+    let path = shard_path(dir, &man.key, idx);
+    let payload = read_framed(&path, SHARD_MAGIC, "shard")?;
+    if checksum(&payload) != meta.checksum {
+        return Err(format!(
+            "shard {}: checksum disagrees with manifest — stale shard file",
+            path.display()
+        ));
+    }
+    let mut r = Reader::new(&payload);
+    let stored = ShardCacheKey { corpus_digest: r.u64()?, elim_digest: r.u64()? };
+    let sidx = r.usize()?;
+    let col_start = r.usize()?;
+    let ncols = r.usize()?;
+    let rows = r.usize()?;
+    let nnz = r.usize()?;
+    if stored != man.key
+        || sidx != idx
+        || col_start != meta.col_start
+        || ncols != meta.ncols
+        || rows != man.rows
+        || nnz != meta.nnz
+    {
+        return Err(format!(
+            "shard {}: header disagrees with manifest — stale shard file",
+            path.display()
+        ));
+    }
+    let mut colptr = Vec::with_capacity(ncols + 1);
+    for _ in 0..=ncols {
+        colptr.push(r.usize()?);
+    }
+    let mut rowidx = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        rowidx.push(u32::from_le_bytes(r.take(4)?.try_into().unwrap()));
+    }
+    let mut values = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        values.push(r.f64()?);
+    }
+    if !r.done() {
+        return Err(format!("shard {}: trailing bytes (corrupt file)", path.display()));
+    }
+    if colptr.first() != Some(&0) || colptr.last() != Some(&nnz) {
+        return Err(format!("shard {}: bad column pointers", path.display()));
+    }
+    for w in colptr.windows(2) {
+        if w[0] > w[1] {
+            return Err(format!("shard {}: column pointers not monotone", path.display()));
+        }
+    }
+    if rowidx.iter().any(|&doc| doc as usize >= rows) {
+        return Err(format!("shard {}: row index out of range", path.display()));
+    }
+    Ok(ShardBlock { col_start, ncols, rows, colptr, rowidx, values })
+}
+
+impl ShardManifest {
+    /// Largest single shard's payload bytes — the unit the memory
+    /// planner's "one decode wave" reserve must use (a column larger
+    /// than the configured budget becomes one oversized shard).
+    pub fn max_shard_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| shard_payload_bytes(s.ncols, s.nnz) as u64)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Verify every shard a manifest references: load, checksum, cross-check
+/// against the manifest, drop. Shards verify on up to `threads` workers
+/// (0 = all cores), one shard resident per worker — the same memory
+/// bound as a solve-time decode wave. `Err` names a corrupt, truncated,
+/// or stale shard. Run this on a cache hit *before* starting a solve:
+/// [`crate::cov_disk::DiskGramCov`] cannot return errors mid-kernel, so
+/// a bad shard discovered there panics, while a bad shard discovered
+/// here lets the caller rebuild.
+pub fn verify_shards(dir: &Path, man: &ShardManifest, threads: usize) -> Result<(), String> {
+    let results = crate::util::parallel::par_map_indexed(threads, man.shards.len(), |idx| {
+        load_shard(dir, man, idx).map(|_| ())
+    });
+    results.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TripletMatrix;
+    use crate::util::check::property;
+    use crate::util::rng::Rng;
+
+    fn random_csr(rng: &mut Rng, rows: usize, cols: usize) -> CsrMatrix {
+        let mut t = TripletMatrix::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                if rng.bool(0.3) {
+                    t.push(r, c, (1 + rng.below(6)) as f64);
+                }
+            }
+        }
+        t.to_csr()
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_shardcache_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    fn key(a: u64, b: u64) -> ShardCacheKey {
+        ShardCacheKey { corpus_digest: a, elim_digest: b }
+    }
+
+    #[test]
+    fn plan_shards_tiles_and_respects_budget() {
+        let col_nnz = vec![10, 0, 5, 100, 1, 1, 1, 40];
+        for budget in [1usize, 200, 600, 1 << 20] {
+            let ranges = plan_shards(&col_nnz, budget);
+            let mut expect = 0;
+            for &(s, n) in &ranges {
+                assert_eq!(s, expect);
+                assert!(n >= 1);
+                expect += n;
+                // a multi-column shard never exceeds the budget
+                if n > 1 {
+                    let nnz: usize = col_nnz[s..s + n].iter().sum();
+                    assert!(shard_payload_bytes(n, nnz) <= budget);
+                }
+            }
+            assert_eq!(expect, col_nnz.len());
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_bitwise_vs_in_memory_csc() {
+        property("shard cache roundtrips the CSC bitwise", 10, |rng| {
+            let rows = rng.range(2, 50);
+            let cols = rng.range(1, 20);
+            let csr = random_csr(rng, rows, cols);
+            let csc = csr.to_csc();
+            let dir = tmpdir("rt");
+            let k = key(rng.below(1 << 30) as u64, 7);
+            // small budget to force several shards
+            let man = write(&dir, &k, &csr, rows as u64 + 2, 256).unwrap();
+            assert_eq!(man.rows, csr.rows);
+            assert_eq!(man.nnz, csr.nnz());
+            let reopened = open(&dir, &k).unwrap().expect("manifest must exist");
+            assert_eq!(reopened, man);
+            // reassemble every column from shards; must match the CSC bit
+            // for bit, in order
+            for (idx, meta) in man.shards.iter().enumerate() {
+                let block = load_shard(&dir, &man, idx).unwrap();
+                assert_eq!(block.col_start, meta.col_start);
+                for c in 0..block.ncols {
+                    let got: Vec<(usize, u64)> =
+                        block.col(c).map(|(r, v)| (r, v.to_bits())).collect();
+                    let want: Vec<(usize, u64)> =
+                        csc.col(meta.col_start + c).map(|(r, v)| (r, v.to_bits())).collect();
+                    if got != want {
+                        return Err(format!("column {} differs", meta.col_start + c));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        let dir = tmpdir("miss");
+        assert!(open(&dir, &key(1, 2)).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_manifest_rejected() {
+        let mut rng = Rng::seed_from(5);
+        let dir = tmpdir("cm");
+        let k = key(11, 22);
+        let csr = random_csr(&mut rng, 20, 6);
+        write(&dir, &k, &csr, 20, 512).unwrap();
+        let path = manifest_path(&dir, &k);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = open(&dir, &k).unwrap_err();
+        assert!(err.contains("checksum"), "{err}");
+        // truncation also rejected
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        assert!(open(&dir, &k).is_err());
+    }
+
+    #[test]
+    fn stale_manifest_key_mismatch_rejected() {
+        let mut rng = Rng::seed_from(6);
+        let dir = tmpdir("stale");
+        let k_old = key(1, 1);
+        let k_new = key(2, 2);
+        let csr = random_csr(&mut rng, 15, 5);
+        write(&dir, &k_old, &csr, 15, 512).unwrap();
+        // simulate a stale cache: a manifest written for another key is
+        // dropped at the new key's path
+        std::fs::rename(manifest_path(&dir, &k_old), manifest_path(&dir, &k_new)).unwrap();
+        let err = open(&dir, &k_new).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_or_truncated_shard_rejected() {
+        let mut rng = Rng::seed_from(7);
+        let dir = tmpdir("cs");
+        let k = key(3, 4);
+        let csr = random_csr(&mut rng, 30, 8);
+        let man = write(&dir, &k, &csr, 30, 128).unwrap();
+        assert!(man.shards.len() > 1, "want several shards");
+        let path = shard_path(&dir, &k, 0);
+        let good = std::fs::read(&path).unwrap();
+        // bit flip in the payload
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(load_shard(&dir, &man, 0).is_err());
+        // truncation
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(load_shard(&dir, &man, 0).is_err());
+        // restore; other shards were never affected
+        std::fs::write(&path, &good).unwrap();
+        load_shard(&dir, &man, 0).unwrap();
+        load_shard(&dir, &man, 1).unwrap();
+    }
+
+    #[test]
+    fn verify_shards_catches_any_bad_shard() {
+        let mut rng = Rng::seed_from(9);
+        let dir = tmpdir("vs");
+        let k = key(7, 8);
+        let csr = random_csr(&mut rng, 40, 10);
+        let man = write(&dir, &k, &csr, 40, 128).unwrap();
+        assert!(man.shards.len() > 2);
+        for threads in [1, 4] {
+            verify_shards(&dir, &man, threads).unwrap();
+        }
+        assert!(man.max_shard_bytes() > 0);
+        // corrupt the *last* shard: the sweep must still find it
+        let idx = man.shards.len() - 1;
+        let path = shard_path(&dir, &k, idx);
+        let good = std::fs::read(&path).unwrap();
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(verify_shards(&dir, &man, 2).is_err());
+        // a missing shard is caught too
+        std::fs::remove_file(&path).unwrap();
+        assert!(verify_shards(&dir, &man, 2).is_err());
+        std::fs::write(&path, &good).unwrap();
+        verify_shards(&dir, &man, 2).unwrap();
+    }
+
+    #[test]
+    fn shard_from_other_write_rejected_as_stale() {
+        let mut rng = Rng::seed_from(8);
+        let dir = tmpdir("sw");
+        let k = key(5, 6);
+        let csr_a = random_csr(&mut rng, 25, 6);
+        let man_a = write(&dir, &k, &csr_a, 25, 128).unwrap();
+        let shard0_a = std::fs::read(shard_path(&dir, &k, 0)).unwrap();
+        // a second write of the same key with different data
+        let csr_b = random_csr(&mut rng, 25, 6);
+        let man_b = write(&dir, &k, &csr_b, 25, 128).unwrap();
+        assert_ne!(man_a, man_b);
+        // drop shard 0 from the old write next to the new manifest
+        std::fs::write(shard_path(&dir, &k, 0), &shard0_a).unwrap();
+        let err = load_shard(&dir, &man_b, 0).unwrap_err();
+        assert!(err.contains("stale"), "{err}");
+    }
+
+    #[test]
+    fn elim_digest_distinguishes_masks() {
+        let base = SafeElimination {
+            lambda: 0.5,
+            original: 100,
+            kept: vec![3, 1, 4],
+            kept_variances: vec![0.0; 3],
+        };
+        let mut other = base.clone();
+        other.kept = vec![3, 1, 5];
+        assert_ne!(elim_digest(&base), elim_digest(&other));
+        let mut lam = base.clone();
+        lam.lambda = 0.25;
+        assert_ne!(elim_digest(&base), elim_digest(&lam));
+        assert_eq!(elim_digest(&base), elim_digest(&base.clone()));
+    }
+}

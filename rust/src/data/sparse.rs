@@ -5,21 +5,27 @@
 /// Coordinate-format sparse matrix (assembly form).
 #[derive(Clone, Debug, Default)]
 pub struct TripletMatrix {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
+    /// `(row, col, value)` coordinates, in push order.
     pub entries: Vec<(u32, u32, f64)>,
 }
 
 impl TripletMatrix {
+    /// Empty matrix with the given shape.
     pub fn new(rows: usize, cols: usize) -> Self {
         TripletMatrix { rows, cols, entries: Vec::new() }
     }
 
+    /// Append one `(row, col, value)` entry.
     pub fn push(&mut self, r: usize, c: usize, v: f64) {
         debug_assert!(r < self.rows && c < self.cols);
         self.entries.push((r as u32, c as u32, v));
     }
 
+    /// Stored entries (duplicates not yet folded).
     pub fn nnz(&self) -> usize {
         self.entries.len()
     }
@@ -53,10 +59,15 @@ impl TripletMatrix {
 /// Compressed sparse row matrix. Rows = documents, cols = features.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
+    /// Row (document) count.
     pub rows: usize,
+    /// Column (feature) count.
     pub cols: usize,
+    /// Row start offsets into `indices`/`values` (`len == rows + 1`).
     pub indptr: Vec<usize>,
+    /// Column indices per stored entry.
     pub indices: Vec<u32>,
+    /// Stored values, aligned with `indices`.
     pub values: Vec<f64>,
 }
 
@@ -66,6 +77,7 @@ impl CsrMatrix {
         CsrMatrix { rows, cols, indptr: vec![0; rows + 1], indices: Vec::new(), values: Vec::new() }
     }
 
+    /// Stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }
@@ -157,14 +169,20 @@ impl CsrMatrix {
 /// Compressed sparse column matrix (feature-major).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CscMatrix {
+    /// Row (document) count.
     pub rows: usize,
+    /// Column (feature) count.
     pub cols: usize,
+    /// Column start offsets into `rowidx`/`values` (`len == cols + 1`).
     pub colptr: Vec<usize>,
+    /// Row indices per stored entry, ascending within each column.
     pub rowidx: Vec<u32>,
+    /// Stored values, aligned with `rowidx`.
     pub values: Vec<f64>,
 }
 
 impl CscMatrix {
+    /// Stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.values.len()
     }

@@ -8,6 +8,7 @@
 
 use crate::util::rng::Rng;
 
+/// Dense symmetric matrix of order `n`, full row-major storage.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SymMat {
     n: usize,
@@ -95,11 +96,13 @@ impl SymMat {
         g
     }
 
+    /// Matrix order.
     #[inline]
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Entry `(i, j)`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.data[i * self.n + j]
@@ -124,6 +127,7 @@ impl SymMat {
         &self.data
     }
 
+    /// Mutable backing buffer — callers must preserve symmetry.
     #[inline]
     pub fn as_mut_slice(&mut self) -> &mut [f64] {
         &mut self.data

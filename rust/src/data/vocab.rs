@@ -11,6 +11,7 @@ pub struct Vocab {
 }
 
 impl Vocab {
+    /// Wrap an ordered word list (index = 0-based id).
     pub fn new(words: Vec<String>) -> Vocab {
         Vocab { words }
     }
@@ -35,10 +36,12 @@ impl Vocab {
         Ok(())
     }
 
+    /// Number of known words.
     pub fn len(&self) -> usize {
         self.words.len()
     }
 
+    /// Whether no vocabulary was provided.
     pub fn is_empty(&self) -> bool {
         self.words.is_empty()
     }

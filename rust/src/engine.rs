@@ -126,6 +126,7 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
+    /// Engine with a fresh workspace and automatic threading.
     pub fn new() -> NativeEngine {
         NativeEngine::default()
     }

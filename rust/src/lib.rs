@@ -21,17 +21,26 @@
 //!
 //! ## Quick start
 //!
-//! ```no_run
+//! Solve for one sparse principal component of a small covariance with
+//! a planted sparse direction (this example runs as a doc-test):
+//!
+//! ```
 //! use lsspca::prelude::*;
 //!
-//! // A small covariance matrix with a planted sparse direction.
 //! let mut rng = Rng::seed_from(7);
 //! let sigma = lsspca::corpus::spiked_covariance(40, 200, 4, 1.5, &mut rng);
 //! let opts = BcaOptions::default();
 //! let sol = lsspca::solver::bca::solve(&sigma, 0.5, &opts);
-//! let pc = lsspca::solver::extract::leading_sparse_pc(&sol.x, 1e-6);
-//! println!("support = {:?}", pc.support);
+//! let pc = lsspca::solver::extract::leading_sparse_pc(&sol.z, 1e-6);
+//! assert!(pc.cardinality() >= 1, "support = {:?}", pc.support);
 //! ```
+//!
+//! For the end-to-end pipeline (stream → eliminate → solve → topics →
+//! model artifact) see [`coordinator::Pipeline`]; for the covariance
+//! backends (dense / implicit / out-of-core) see [`covop`] and
+//! [`cov_disk`]; ARCHITECTURE.md maps the whole system.
+
+#![warn(missing_docs)]
 
 pub mod checkpoint;
 pub mod cli;
@@ -39,6 +48,7 @@ pub mod config;
 pub mod coordinator;
 pub mod corpus;
 pub mod cov;
+pub mod cov_disk;
 pub mod covop;
 pub mod data;
 pub mod elim;
@@ -59,6 +69,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::config::PipelineConfig;
     pub use crate::coordinator::{Pipeline, PipelineReport};
+    pub use crate::cov_disk::DiskGramCov;
     pub use crate::covop::{CovOp, DenseCov, GramCov, MaskedCov};
     pub use crate::data::{CscMatrix, CsrMatrix, DocwordHeader, SymMat, TripletMatrix};
     pub use crate::elim::SafeElimination;

@@ -106,6 +106,7 @@ impl JacobiEig {
         JacobiEig { values, vectors, sweeps }
     }
 
+    /// Matrix order.
     pub fn n(&self) -> usize {
         self.values.len()
     }

@@ -16,7 +16,9 @@ use crate::linalg::vec::dot;
 /// Options for the coordinate-descent solve.
 #[derive(Clone, Copy, Debug)]
 pub struct EnetOptions {
+    /// Maximum coordinate-descent sweeps.
     pub max_sweeps: usize,
+    /// Stop when the largest coefficient move falls below this.
     pub tol: f64,
 }
 

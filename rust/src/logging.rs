@@ -8,17 +8,24 @@ use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
+/// Log severity, ordered from most to least severe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
+    /// Unrecoverable problems.
     Error = 0,
+    /// Suspicious but survivable conditions.
     Warn = 1,
+    /// Progress messages (the default threshold).
     Info = 2,
+    /// Diagnostic detail.
     Debug = 3,
+    /// Very chatty inner-loop tracing.
     Trace = 4,
 }
 
 impl Level {
+    /// Parse a level name (`error|warn|info|debug|trace`, any case).
     pub fn parse(s: &str) -> Option<Level> {
         match s.to_ascii_lowercase().as_str() {
             "error" => Some(Level::Error),
@@ -84,22 +91,28 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
     }
 }
 
+/// Log at `Error` level (printf-style args, stderr).
 #[macro_export]
 macro_rules! error {
     ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, format_args!($($arg)*)) };
 }
+/// Log at `Warn` level (named `warn_!` — `warn` collides with the
+/// built-in lint attribute namespace in some contexts).
 #[macro_export]
 macro_rules! warn_ {
     ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, format_args!($($arg)*)) };
 }
+/// Log at `Info` level (the default threshold).
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, format_args!($($arg)*)) };
 }
+/// Log at `Debug` level (enable with `LSSPCA_LOG=debug`).
 #[macro_export]
 macro_rules! debug {
     ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, format_args!($($arg)*)) };
 }
+/// Log at `Trace` level (enable with `LSSPCA_LOG=trace`).
 #[macro_export]
 macro_rules! trace {
     ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Trace, format_args!($($arg)*)) };

@@ -43,8 +43,10 @@ fn with_training_flags(spec: CommandSpec) -> CommandSpec {
         .opt("workers", "2", "moment-pass worker threads")
         .opt("threads", "", "solver worker threads (0 = all cores; empty = config value)")
         .opt("engine", "native", "solver engine: native|xla")
-        .opt("cov-backend", "", "covariance backend: dense|gram (empty = config value)")
+        .opt("cov-backend", "", "covariance backend: dense|gram|disk|auto (empty = config value)")
         .opt("row-cache-mb", "", "gram-backend row cache MiB (empty = config value)")
+        .opt("memory-budget-mb", "", "covariance memory budget MiB, 0 = unlimited (empty = config)")
+        .opt("shard-mb", "", "disk-backend shard size MiB (empty = config value)")
         .opt("artifacts", "artifacts", "artifact dir for --engine xla")
         .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
         .opt("save-model", "", "also write the scoring model artifact here")
@@ -128,6 +130,7 @@ fn app() -> App {
             .opt("out", "BENCH_bca.json", "output JSON path")
             .opt("covop-out", "BENCH_covop.json", "covariance-operator race output JSON path")
             .opt("score-out", "BENCH_score.json", "batch-scoring throughput output JSON path")
+            .opt("oocore-out", "BENCH_oocore.json", "out-of-core backend race output JSON path")
             .opt("compare", "", "baseline BENCH_bca.json: exit nonzero on gate regression")
             .opt("max-regress", "0.25", "allowed fractional slowdown of gate medians")
             .switch("quick", "smaller sizes / fewer repetitions"),
@@ -168,6 +171,12 @@ fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, String> {
     }
     if !args.str("row-cache-mb").is_empty() {
         cfg.row_cache_mb = args.usize("row-cache-mb")?;
+    }
+    if !args.str("memory-budget-mb").is_empty() {
+        cfg.memory_budget_mb = args.usize("memory-budget-mb")?;
+    }
+    if !args.str("shard-mb").is_empty() {
+        cfg.shard_mb = args.usize("shard-mb")?;
     }
     cfg.artifacts_dir = args.str("artifacts");
     if !args.str("cache-dir").is_empty() {
@@ -610,10 +619,110 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
          \"phi_abs_diff\": {:.3e}}},\n",
         (phi_ref - phi_ws).abs()
     ));
+    // --- oocore: disk-backed covariance vs in-memory gram ------------------
+    // Runs before the gate object is assembled because the disk matvec
+    // median is one of the gated metrics.
+    // (CovOp / GramCov come from the covop import further down — `use`
+    // items are in scope for the whole function block.)
+    use lsspca::cov_disk::DiskGramCov;
+    use lsspca::data::shardcache::{self, ShardCacheKey};
+
+    section("oocore — disk-backed covariance: matvec + λ-search vs in-memory gram");
+    let onhat = if quick { 256 } else { 1024 };
+    let odocs = 4 * onhat;
+    let ocorpus =
+        SynthCorpus::new(CorpusSpec::nytimes().scaled(odocs, onhat), 20111214);
+    let ocsr = ocorpus.to_csr();
+    let odir = std::env::temp_dir().join(format!("lsspca_bench_oocore_{}", std::process::id()));
+    let okey = ShardCacheKey { corpus_digest: 0xbe0c, elim_digest: 0x0c0e };
+    let t = lsspca::util::Timer::start();
+    let oman = shardcache::write(&odir, &okey, &ocsr, odocs as u64, 256 * 1024)
+        .map_err(|e| format!("writing bench shard cache: {e}"))?;
+    let shard_write_secs = t.secs();
+    let ogram = GramCov::new(ocsr, odocs as u64, 16);
+    let ox: Vec<f64> = (0..onhat).map(|_| rng.gauss()).collect();
+    let (mut oyg, mut oyd) = (vec![0.0; onhat], vec![0.0; onhat]);
+    let mv_gram = time_min(reps + 1, || ogram.matvec(&ox, &mut oyg));
+    let odisk = DiskGramCov::new(&odir, oman.clone(), 16, threads);
+    let mv_samples = time_samples(if quick { 5 } else { 7 }, || odisk.matvec(&ox, &mut oyd));
+    let mv_disk = mv_samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let oocore_gate_median = median_secs(&mv_samples);
+    let mv_bitwise = oyg.iter().zip(&oyd).all(|(a, b)| a.to_bits() == b.to_bits());
+    metric("oocore.shards", format!("{}", oman.shards.len()));
+    metric("oocore.shard_write_secs", format!("{shard_write_secs:.4}"));
+    metric("oocore.matvec_gram_secs", format!("{mv_gram:.6}"));
+    metric("oocore.matvec_disk_secs", format!("{mv_disk:.6}"));
+    metric("oocore.matvec_bitwise_identical", format!("{mv_bitwise}"));
+    metric("gate.oocore_disk_matvec_median_secs", format!("{oocore_gate_median:.6}"));
+    // Σ-row gathers, cold (stream every shard) vs warm (row-cache hit).
+    let osample: Vec<usize> = (0..16).map(|k| (k * onhat / 16) % onhat).collect();
+    let mut obuf = vec![0.0; onhat];
+    let t = lsspca::util::Timer::start();
+    for &j in &osample {
+        odisk.row_into(j, &mut obuf);
+    }
+    let rg_disk_cold = t.secs();
+    let rg_disk_warm = time_min(reps + 1, || {
+        for &j in &osample {
+            odisk.row_into(j, &mut obuf);
+        }
+    });
+    metric("oocore.rowgather16_disk_cold_secs", format!("{rg_disk_cold:.6}"));
+    metric("oocore.rowgather16_disk_warm_secs", format!("{rg_disk_warm:.6}"));
+    let mut oj = String::from("{\n");
+    oj.push_str(&format!(
+        "  \"matvec\": {{\"nhat\": {onhat}, \"docs\": {odocs}, \"shards\": {}, \
+         \"shard_write_secs\": {shard_write_secs:.6}, \"gram_secs\": {mv_gram:.6}, \
+         \"disk_secs\": {mv_disk:.6}, \"disk_median_secs\": {oocore_gate_median:.6}, \
+         \"bitwise_identical\": {mv_bitwise}, \
+         \"rowgather16_cold_secs\": {rg_disk_cold:.6}, \
+         \"rowgather16_warm_secs\": {rg_disk_warm:.6}}},\n",
+        oman.shards.len()
+    ));
+    // End-to-end λ-search throughput at several row-cache budgets: the
+    // whole cardinality search (per-λ elimination masks on) on the disk
+    // operator, against the in-memory gram reference.
+    let mk_oocore_opts = || LambdaSearchOptions {
+        target_card: 8,
+        slack: 2,
+        max_evals: 4,
+        per_lambda_elim: true,
+        threads,
+        bca: BcaOptions { max_sweeps: sweeps, track_history: false, ..Default::default() },
+        ..Default::default()
+    };
+    let t = lsspca::util::Timer::start();
+    let gram_lambda = search(&ogram, &mk_oocore_opts()).lambda;
+    let gram_search_secs = t.secs();
+    oj.push_str(&format!(
+        "  \"lambda_search\": {{\"gram_secs\": {gram_search_secs:.6}, \"budgets\": [\n"
+    ));
+    metric("oocore.lambda_search.gram_secs", format!("{gram_search_secs:.4}"));
+    let budget_arms: &[usize] = if quick { &[0, 8] } else { &[4, 32] };
+    for (idx, &cache_mb) in budget_arms.iter().enumerate() {
+        let arm = DiskGramCov::new(&odir, oman.clone(), cache_mb, threads);
+        let t = lsspca::util::Timer::start();
+        let res = search(&arm, &mk_oocore_opts());
+        let secs = t.secs();
+        let identical = res.lambda == gram_lambda;
+        metric(
+            &format!("oocore.lambda_search.disk_cache{cache_mb}mb_secs"),
+            format!("{secs:.4} (identical_result {identical})"),
+        );
+        oj.push_str(&format!(
+            "    {{\"row_cache_mb\": {cache_mb}, \"secs\": {secs:.6}, \
+             \"identical_result\": {identical}}}{}\n",
+            if idx + 1 == budget_arms.len() { "" } else { "," }
+        ));
+    }
+    oj.push_str("  ]}\n}\n");
+    std::fs::remove_dir_all(&odir).ok();
+
     json.push_str(&format!(
         "  \"gate\": {{\"quick\": {quick}, \"n\": {n}, \
          \"qp_micro_median_secs\": {qp_gate_median:.6}, \
-         \"fig1_speed_median_secs\": {fig1_gate_median:.6}}},\n"
+         \"fig1_speed_median_secs\": {fig1_gate_median:.6}, \
+         \"oocore_disk_matvec_median_secs\": {oocore_gate_median:.6}}},\n"
     ));
 
     // --- λ-search thread scaling ------------------------------------------
@@ -797,6 +906,11 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         .map_err(|e| format!("writing {}: {e}", score_out.display()))?;
     println!("wrote {}", score_out.display());
 
+    let oocore_out = PathBuf::from(args.str("oocore-out"));
+    std::fs::write(&oocore_out, &oj)
+        .map_err(|e| format!("writing {}: {e}", oocore_out.display()))?;
+    println!("wrote {}", oocore_out.display());
+
     // --- regression gate vs a committed baseline --------------------------
     let baseline = args.str("compare");
     if !baseline.is_empty() {
@@ -805,6 +919,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
             &[
                 ("qp_micro_median_secs", qp_gate_median),
                 ("fig1_speed_median_secs", fig1_gate_median),
+                ("oocore_disk_matvec_median_secs", oocore_gate_median),
             ],
             quick,
             n,

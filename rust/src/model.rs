@@ -45,6 +45,38 @@ pub struct ModelPc {
 }
 
 /// A complete, self-contained scoring model.
+///
+/// # Example: save → load roundtrip
+///
+/// ```
+/// use lsspca::model::{Model, ModelPc};
+///
+/// let model = Model {
+///     corpus_name: "doctest".into(),
+///     num_docs: 10,
+///     n_features: 6,
+///     vocab_hash: 0,
+///     seed: 1,
+///     elim_lambda: 0.5,
+///     kept: vec![4, 2],
+///     kept_means: vec![0.5, 0.25],
+///     kept_stds: vec![1.0, 1.0],
+///     kept_words: vec!["alpha".into(), "beta".into()],
+///     pcs: vec![ModelPc {
+///         lambda: 0.5,
+///         phi: 1.0,
+///         explained_variance: 1.0,
+///         loadings: vec![(4, 0.8), (2, 0.6)],
+///     }],
+/// };
+/// model.validate().unwrap();
+/// let path = std::env::temp_dir()
+///     .join(format!("lsspca_doctest_model_{}.lspm", std::process::id()));
+/// model.save(&path).unwrap();
+/// let back = Model::load(&path).unwrap();
+/// assert_eq!(back, model); // bit-for-bit, checksum verified
+/// # std::fs::remove_file(&path).ok();
+/// ```
 #[derive(Clone, Debug, PartialEq)]
 pub struct Model {
     /// Corpus name or input path the model was trained on.

@@ -38,10 +38,12 @@ pub struct FeatureVariances {
     /// Uncentered second moment `E[x²]` per feature — the `Σ_ii = aᵢᵀaᵢ/m`
     /// of the *uncentered* covariance convention.
     pub second_moment: Vec<f64>,
+    /// Documents folded in.
     pub docs: u64,
 }
 
 impl FeatureMoments {
+    /// Zeroed accumulator over `num_features` features.
     pub fn new(num_features: usize) -> FeatureMoments {
         FeatureMoments {
             stats: vec![RunningStats::new(); num_features],
@@ -50,6 +52,7 @@ impl FeatureMoments {
         }
     }
 
+    /// Feature count this accumulator covers.
     pub fn num_features(&self) -> usize {
         self.stats.len()
     }

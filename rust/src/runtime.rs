@@ -19,7 +19,9 @@ fn artifact_stem(path: &Path) -> Option<String> {
 
 /// A compiled artifact ready to execute.
 pub struct Artifact {
+    /// Artifact name (file stem).
     pub name: String,
+    /// Source `.hlo.txt` path.
     pub path: PathBuf,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -27,17 +29,21 @@ pub struct Artifact {
 /// Typed input to an execution: an f64 buffer with a shape.
 #[derive(Clone, Debug)]
 pub struct TensorF64 {
+    /// Row-major element buffer.
     pub data: Vec<f64>,
+    /// Shape (XLA convention, i64 dims).
     pub dims: Vec<i64>,
 }
 
 impl TensorF64 {
+    /// Wrap a buffer with a shape (asserts the element count matches).
     pub fn new(data: Vec<f64>, dims: &[usize]) -> TensorF64 {
         let expect: usize = dims.iter().product();
         assert_eq!(data.len(), expect, "shape/data mismatch");
         TensorF64 { data, dims: dims.iter().map(|&d| d as i64).collect() }
     }
 
+    /// Rank-0 tensor.
     pub fn scalar(v: f64) -> TensorF64 {
         TensorF64 { data: vec![v], dims: vec![] }
     }
@@ -113,10 +119,12 @@ impl Runtime {
         Ok(names)
     }
 
+    /// Whether an artifact with this name was loaded.
     pub fn has(&self, name: &str) -> bool {
         self.artifacts.contains_key(name)
     }
 
+    /// Sorted names of the loaded artifacts.
     pub fn names(&self) -> Vec<&str> {
         let mut v: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
         v.sort();

@@ -48,12 +48,16 @@ impl Default for BatchOptions {
 /// Statistics from a completed batch pass.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct BatchStats {
+    /// Documents scored.
     pub docs: u64,
+    /// `(word, count)` pairs read.
     pub nnz: u64,
+    /// Wall time of the pass.
     pub seconds: f64,
 }
 
 impl BatchStats {
+    /// Throughput (guarded against zero elapsed time).
     pub fn docs_per_sec(&self) -> f64 {
         self.docs as f64 / self.seconds.max(1e-12)
     }

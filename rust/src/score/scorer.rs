@@ -44,6 +44,37 @@ impl Default for ScoreOptions {
 
 /// A compiled scorer: inverted index from original feature index to the
 /// components that load it.
+///
+/// # Example: project a document onto the sparse PCs
+///
+/// ```
+/// use lsspca::model::{Model, ModelPc};
+/// use lsspca::score::{ScoreOptions, Scorer};
+///
+/// let model = Model {
+///     corpus_name: "doctest".into(),
+///     num_docs: 10,
+///     n_features: 6,
+///     vocab_hash: 0,
+///     seed: 1,
+///     elim_lambda: 0.5,
+///     kept: vec![4, 2],
+///     kept_means: vec![0.0, 0.0],
+///     kept_stds: vec![1.0, 1.0],
+///     kept_words: vec!["alpha".into(), "beta".into()],
+///     pcs: vec![ModelPc {
+///         lambda: 0.5,
+///         phi: 1.0,
+///         explained_variance: 1.0,
+///         loadings: vec![(4, 0.8), (2, 0.6)],
+///     }],
+/// };
+/// let scorer = Scorer::new(&model, ScoreOptions::default()).unwrap();
+/// // A document with count 1 of feature 2 and count 3 of feature 4
+/// // projects to 1·0.6 + 3·0.8 = 3.0 (means are zero here).
+/// let scores = scorer.score(&[(2, 1.0), (4, 3.0)]).unwrap();
+/// assert!((scores[0] - 3.0).abs() < 1e-12);
+/// ```
 pub struct Scorer {
     k: usize,
     n_features: usize,

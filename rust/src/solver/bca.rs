@@ -78,6 +78,7 @@ impl BcaOptions {
 /// One history sample.
 #[derive(Clone, Copy, Debug)]
 pub struct HistoryPoint {
+    /// Sweep index (1-based).
     pub sweep: usize,
     /// Problem-(1) objective of the normalized iterate `Z = X/TrX`.
     pub objective: f64,
@@ -115,6 +116,7 @@ pub struct SweepBuffers {
 }
 
 impl SweepBuffers {
+    /// Buffers for problem size `n`.
     pub fn new(n: usize) -> SweepBuffers {
         SweepBuffers {
             u: Vec::with_capacity(n),
@@ -140,6 +142,22 @@ impl SweepBuffers {
 /// (λ) never change between sweeps, only the minor `Y = X_{\j\j}` drifts,
 /// so the cached point is always feasible and usually one verification
 /// sweep from optimal once BCA starts converging.
+///
+/// # Example: hot path vs reference, same optimum
+///
+/// [`solve`] drives this workspace; the cold-start [`solve_reference`]
+/// must land on the same fixed point (the subproblems are convex):
+///
+/// ```
+/// use lsspca::prelude::*;
+///
+/// let mut rng = Rng::seed_from(3);
+/// let sigma = lsspca::corpus::spiked_covariance(24, 80, 3, 2.0, &mut rng);
+/// let opts = BcaOptions::default();
+/// let hot = lsspca::solver::bca::solve(&sigma, 0.4, &opts);
+/// let cold = lsspca::solver::bca::solve_reference(&sigma, 0.4, &opts);
+/// assert!((hot.phi - cold.phi).abs() < 1e-6);
+/// ```
 pub struct SolverWorkspace {
     n: usize,
     u: Vec<f64>,
@@ -153,6 +171,8 @@ pub struct SolverWorkspace {
 }
 
 impl SolverWorkspace {
+    /// Workspace for problem size `n` (allocates the n × n warm-start
+    /// cache once; reuse it across sweeps and solves).
     pub fn new(n: usize) -> SolverWorkspace {
         SolverWorkspace {
             n,

@@ -72,8 +72,8 @@ pub fn certify(sigma: &SymMat, z: &SymMat, lambda: f64) -> Certificate {
     certify_steps(sigma, z, lambda, 40)
 }
 
-/// Relative gap, safe for zero primal.
 impl Certificate {
+    /// Relative gap, safe for zero primal.
     pub fn relative_gap(&self) -> f64 {
         self.gap / (1.0 + self.primal.abs())
     }

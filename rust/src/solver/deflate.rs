@@ -83,11 +83,14 @@ pub fn hotelling_par(sigma: &mut SymMat, v: &[f64], theta: f64, threads: usize) 
 /// Scheme selector used by the pipeline config.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scheme {
+    /// Orthogonal projection deflation (removes the component subspace).
     Projection,
+    /// Hotelling's deflation (subtracts the explained rank-one term).
     Hotelling,
 }
 
 impl Scheme {
+    /// Parse the config string (`"projection"` | `"hotelling"`).
     pub fn parse(s: &str) -> Option<Scheme> {
         match s {
             "projection" => Some(Scheme::Projection),

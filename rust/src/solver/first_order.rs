@@ -29,6 +29,7 @@ use crate::util::timer::Timer;
 /// Options for the first-order method.
 #[derive(Clone, Copy, Debug)]
 pub struct FirstOrderOptions {
+    /// Maximum gradient iterations.
     pub max_iters: usize,
     /// Target accuracy ε (sets the smoothing μ = ε / (2 log n)).
     pub epsilon: f64,
@@ -53,9 +54,11 @@ pub struct FirstOrderSolution {
     pub phi: f64,
     /// Dual upper bound `min_k λ_max(Σ + U_k)`.
     pub dual_bound: f64,
+    /// Iterations performed.
     pub iters: usize,
     /// (iteration, primal objective, seconds) samples.
     pub history: Vec<(usize, f64, f64)>,
+    /// Total solve seconds.
     pub seconds: f64,
 }
 

@@ -22,7 +22,9 @@ use crate::util::rng::Rng;
 /// Options for the generalized power method.
 #[derive(Clone, Copy, Debug)]
 pub struct GPowerOptions {
+    /// Maximum power iterations per restart.
     pub max_iters: usize,
+    /// Convergence tolerance on the iterate change.
     pub tol: f64,
     /// Restarts from random unit vectors (keep the best objective).
     pub restarts: usize,

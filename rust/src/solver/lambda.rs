@@ -15,6 +15,7 @@ use crate::solver::extract::{leading_sparse_pc, SparsePc};
 /// Options for the cardinality-targeted λ search.
 #[derive(Clone, Copy, Debug)]
 pub struct LambdaSearchOptions {
+    /// Desired PC cardinality (paper: 5).
     pub target_card: usize,
     /// Accept |card − target| ≤ slack.
     pub slack: usize,
@@ -22,6 +23,7 @@ pub struct LambdaSearchOptions {
     pub max_evals: usize,
     /// Loading truncation tolerance for cardinality measurement.
     pub extract_tol: f64,
+    /// Inner-solver options shared by every probe.
     pub bca: BcaOptions,
     /// Independent λ probes per bracketing round. 1 = classic bisection
     /// (the midpoint); `p` > 1 splits the bracket into `p + 1` equal parts
@@ -58,17 +60,24 @@ impl Default for LambdaSearchOptions {
 /// One evaluation in the search trace.
 #[derive(Clone, Debug)]
 pub struct LambdaEval {
+    /// Probe λ.
     pub lambda: f64,
+    /// Cardinality of the extracted PC at this λ.
     pub cardinality: usize,
+    /// Problem-(1) objective at this λ.
     pub phi: f64,
 }
 
 /// Search result: chosen λ, its solution, PC, and the full trace.
 #[derive(Clone, Debug)]
 pub struct LambdaSearchResult {
+    /// Accepted λ.
     pub lambda: f64,
+    /// Solver output at the accepted λ.
     pub solution: BcaSolution,
+    /// Extracted sparse PC at the accepted λ.
     pub pc: SparsePc,
+    /// Every evaluation, in search order.
     pub trace: Vec<LambdaEval>,
     /// Whether the accepted cardinality is within the slack.
     pub hit_target: bool,

@@ -10,13 +10,17 @@ use crate::solver::extract::{leading_sparse_pc, SparsePc};
 /// One point on the path.
 #[derive(Clone, Debug)]
 pub struct PathPoint {
+    /// Grid λ.
     pub lambda: f64,
     /// Surviving features after the Thm 2.1 test at this λ.
     pub survivors: usize,
+    /// Extracted sparse PC at this λ.
     pub pc: SparsePc,
+    /// Problem-(1) objective at this λ.
     pub phi: f64,
     /// Explained variance `xᵀΣx` of the extracted PC on the input Σ.
     pub explained_variance: f64,
+    /// Wall seconds for this grid point's solve.
     pub solve_seconds: f64,
 }
 
@@ -27,7 +31,9 @@ pub struct PathOptions {
     pub points: usize,
     /// Smallest λ as a fraction of max Σ_ii.
     pub min_frac: f64,
+    /// Inner-solver options shared by every grid point.
     pub bca: BcaOptions,
+    /// Loading truncation tolerance for cardinality measurement.
     pub extract_tol: f64,
     /// Worker threads solving grid points concurrently (0 = auto,
     /// 1 = serial). Every point is independent (per-λ safe elimination +

@@ -9,9 +9,11 @@ use crate::util::rng::Rng;
 /// Leading principal component of a covariance matrix.
 #[derive(Clone, Debug)]
 pub struct PcaComponent {
+    /// Unit-norm loading vector.
     pub vector: Vec<f64>,
     /// Explained variance (the eigenvalue).
     pub variance: f64,
+    /// Power iterations performed.
     pub iters: usize,
 }
 

@@ -23,10 +23,13 @@ use crate::solver::extract::SparsePc;
 /// Options for the alternating SPCA solve.
 #[derive(Clone, Copy, Debug)]
 pub struct SpcaOptions {
+    /// Maximum outer alternations.
     pub max_alternations: usize,
+    /// Stop when the loading change falls below this.
     pub tol: f64,
     /// Elastic-net ridge term λ₂ (Zou's default regime: small positive).
     pub lambda2: f64,
+    /// Inner elastic-net solver options.
     pub enet: EnetOptions,
 }
 

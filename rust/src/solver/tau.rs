@@ -23,7 +23,9 @@
 /// Options for the τ solve.
 #[derive(Clone, Copy, Debug)]
 pub struct TauOptions {
+    /// Newton convergence tolerance on τ.
     pub tol: f64,
+    /// Maximum Newton iterations.
     pub max_iters: usize,
 }
 

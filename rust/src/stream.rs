@@ -146,10 +146,12 @@ pub struct FileSource {
 }
 
 impl FileSource {
+    /// Open a docword file (`.gz` transparently).
     pub fn open(path: &Path) -> Result<FileSource, String> {
         Ok(FileSource { reader: DocwordReader::open(path)? })
     }
 
+    /// The file's declared `(D, W, NNZ)` header.
     pub fn header(&self) -> DocwordHeader {
         self.reader.header()
     }
@@ -173,6 +175,7 @@ pub struct SynthSource<'a> {
 }
 
 impl<'a> SynthSource<'a> {
+    /// Stream from document 0 of `corpus`.
     pub fn new(corpus: &'a crate::corpus::SynthCorpus) -> SynthSource<'a> {
         SynthSource { corpus, next_doc: 0 }
     }
@@ -204,8 +207,11 @@ impl ChunkSource for SynthSource<'_> {
 /// Options for a streaming pass.
 #[derive(Clone, Copy, Debug)]
 pub struct StreamOptions {
+    /// Worker threads folding chunks.
     pub workers: usize,
+    /// Documents per streamed chunk (fixed → deterministic shards).
     pub chunk_docs: usize,
+    /// Bounded queue depth between reader and workers (backpressure).
     pub queue_depth: usize,
 }
 
@@ -218,9 +224,13 @@ impl Default for StreamOptions {
 /// Statistics from a completed pass.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamStats {
+    /// Documents streamed.
     pub docs: u64,
+    /// `(word, count)` pairs streamed.
     pub nnz: u64,
+    /// Chunks handed to workers.
     pub chunks: u64,
+    /// Wall time of the pass.
     pub seconds: f64,
 }
 

@@ -12,8 +12,11 @@ use crate::util::timer::Timer;
 /// Configuration for one measurement.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations.
     pub warmup_iters: usize,
+    /// Minimum timed iterations.
     pub min_iters: usize,
+    /// Maximum timed iterations.
     pub max_iters: usize,
     /// Stop sampling after this many seconds (after min_iters).
     pub max_seconds: f64,
@@ -35,11 +38,14 @@ impl BenchConfig {
 /// One benchmark result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timing summary over the samples.
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Print the one-line `bench <name> ...` summary.
     pub fn print(&self) {
         let s = &self.summary;
         println!(

@@ -50,6 +50,7 @@ impl Default for Crc32 {
 }
 
 impl Crc32 {
+    /// Fresh checksum state.
     pub fn new() -> Crc32 {
         Crc32::default()
     }
@@ -59,6 +60,7 @@ impl Crc32 {
         self.state = !0;
     }
 
+    /// Fold `data` into the checksum.
     pub fn update(&mut self, data: &[u8]) {
         let mut c = self.state;
         for &b in data {
@@ -67,6 +69,7 @@ impl Crc32 {
         self.state = c;
     }
 
+    /// Final CRC-32 value (state is not consumed).
     pub fn finish(&self) -> u32 {
         !self.state
     }
@@ -90,6 +93,7 @@ pub struct GzEncoder<W: Write> {
 }
 
 impl<W: Write> GzEncoder<W> {
+    /// Wrap a writer; the gzip header is emitted on first write.
     pub fn new(inner: W) -> GzEncoder<W> {
         GzEncoder {
             inner: Some(inner),
@@ -277,6 +281,7 @@ pub struct GzDecoder<R: Read> {
 }
 
 impl<R: Read> GzDecoder<R> {
+    /// Wrap a reader positioned at a gzip header.
     pub fn new(inner: R) -> GzDecoder<R> {
         GzDecoder {
             inner,

@@ -14,10 +14,15 @@ const MAX_DEPTH: usize = 64;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (parsed as f64).
     Num(f64),
+    /// String (escapes decoded).
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
     /// Key→value pairs in insertion order (duplicate keys: last wins on
     /// lookup, all are preserved for serialization).
@@ -54,6 +59,7 @@ impl Json {
         Some(cur)
     }
 
+    /// Numeric view, if this is a [`Json::Num`].
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -61,6 +67,7 @@ impl Json {
         }
     }
 
+    /// Boolean view, if this is a [`Json::Bool`].
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -68,6 +75,7 @@ impl Json {
         }
     }
 
+    /// String view, if this is a [`Json::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -75,6 +83,7 @@ impl Json {
         }
     }
 
+    /// Array view, if this is a [`Json::Arr`].
     pub fn as_array(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(xs) => Some(xs),
@@ -328,6 +337,7 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Build a JSON array from a float slice.
 pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }

@@ -15,6 +15,7 @@ pub struct AsciiPlot {
 }
 
 impl AsciiPlot {
+    /// Empty plot with the default 72×20 canvas.
     pub fn new(title: &str) -> Self {
         AsciiPlot {
             width: 72,
@@ -26,22 +27,26 @@ impl AsciiPlot {
         }
     }
 
+    /// Set the canvas size (clamped to a sane minimum).
     pub fn size(mut self, width: usize, height: usize) -> Self {
         self.width = width.max(16);
         self.height = height.max(6);
         self
     }
 
+    /// Log-scale the x axis.
     pub fn logx(mut self) -> Self {
         self.logx = true;
         self
     }
 
+    /// Log-scale the y axis.
     pub fn logy(mut self) -> Self {
         self.logy = true;
         self
     }
 
+    /// Add a named point series drawn with `marker`.
     pub fn series(mut self, name: &str, marker: char, pts: &[(f64, f64)]) -> Self {
         self.series.push((name.to_string(), marker, pts.to_vec()));
         self

@@ -18,6 +18,7 @@ pub struct RunningStats {
 }
 
 impl RunningStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
@@ -83,6 +84,7 @@ impl RunningStats {
         }
     }
 
+    /// Sample standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -91,12 +93,19 @@ impl RunningStats {
 /// Descriptive summary of a sample: used by the bench harness.
 #[derive(Clone, Debug)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 

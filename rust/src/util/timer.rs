@@ -42,6 +42,7 @@ pub struct Profiler {
 }
 
 impl Profiler {
+    /// Empty profile.
     pub fn new() -> Self {
         Self::default()
     }

@@ -1,0 +1,306 @@
+//! Out-of-core backend integration: the shard cache and `DiskGramCov`
+//! driven through the full pipeline and the CLI.
+//!
+//! The load-bearing pin is `disk_backend_pcs_bitwise_equal_gram`: the K
+//! sparse PCs of a `--cov-backend disk` run — with a memory budget far
+//! smaller than the reduced matrix, so nothing can hide in the row
+//! cache — must be bit-for-bit the PCs of the in-memory `gram` run.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use lsspca::config::PipelineConfig;
+use lsspca::coordinator::{choose_elimination, plan_backend, Pipeline};
+use lsspca::corpus::CorpusSpec;
+use lsspca::stream::{variance_pass, StreamOptions, SynthSource};
+
+fn tmpdir(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_oocore_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn base_config(cache_dir: &PathBuf) -> PipelineConfig {
+    PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 800,
+        synth_vocab: 3000,
+        workers: 2,
+        chunk_docs: 128,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 48,
+        bca_sweeps: 4,
+        cache_dir: cache_dir.display().to_string(),
+        ..Default::default()
+    }
+}
+
+/// Acceptance pin: `disk` (tight budget → shard streaming + zero row
+/// cache) reproduces the `gram` run's components bit for bit.
+#[test]
+fn disk_backend_pcs_bitwise_equal_gram() {
+    let dir = tmpdir("bitwise");
+    let mut gram_cfg = base_config(&dir);
+    gram_cfg.cov_backend = "gram".into();
+    let gram = Pipeline::new(gram_cfg).run().unwrap();
+
+    let mut disk_cfg = base_config(&dir);
+    disk_cfg.cov_backend = "disk".into();
+    // 1 MiB budget with 1 MiB shards → a zero-row Σ cache: every gather
+    // streams from disk, so equality cannot come from cached state.
+    disk_cfg.memory_budget_mb = 1;
+    disk_cfg.shard_mb = 1;
+    let disk = Pipeline::new(disk_cfg).run().unwrap();
+
+    assert_eq!(gram.components.len(), disk.components.len());
+    for (g, d) in gram.components.iter().zip(&disk.components) {
+        assert_eq!(g.lambda.to_bits(), d.lambda.to_bits(), "λ differs");
+        assert_eq!(g.phi.to_bits(), d.phi.to_bits(), "φ differs");
+        assert_eq!(g.pc.support, d.pc.support, "support differs");
+        for (a, b) in g.pc.vector.iter().zip(&d.pc.vector) {
+            assert_eq!(a.to_bits(), b.to_bits(), "loading differs");
+        }
+        assert_eq!(
+            g.explained_variance.to_bits(),
+            d.explained_variance.to_bits(),
+            "explained variance differs"
+        );
+    }
+    // the shard cache landed in the configured directory
+    let lssm = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "lssm"))
+        .count();
+    assert!(lssm >= 1, "expected a shard manifest under {}", dir.display());
+}
+
+/// Second run with the same corpus + elimination reuses the cache: the
+/// manifest bytes are untouched and the output is identical.
+#[test]
+fn shard_cache_reused_across_runs() {
+    let dir = tmpdir("reuse");
+    let mut cfg = base_config(&dir);
+    cfg.cov_backend = "disk".into();
+    cfg.memory_budget_mb = 8;
+    let first = Pipeline::new(cfg.clone()).run().unwrap();
+    // snapshot every cache file (manifest + shards)
+    let snapshot: Vec<(PathBuf, Vec<u8>)> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            let s = p.to_string_lossy().to_string();
+            s.ends_with(".lssm") || s.ends_with(".lss")
+        })
+        .map(|p| (p.clone(), std::fs::read(&p).unwrap()))
+        .collect();
+    assert!(!snapshot.is_empty());
+    let second = Pipeline::new(cfg).run().unwrap();
+    for (path, bytes) in &snapshot {
+        let now = std::fs::read(path).unwrap();
+        assert_eq!(&now, bytes, "cache file {} was rewritten", path.display());
+    }
+    for (a, b) in first.components.iter().zip(&second.components) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        for (x, y) in a.pc.vector.iter().zip(&b.pc.vector) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+/// A corrupted shard cache is rejected and rebuilt, not trusted: the run
+/// still completes and produces the same components.
+#[test]
+fn corrupt_cache_rebuilt_gracefully() {
+    let dir = tmpdir("corrupt");
+    let mut cfg = base_config(&dir);
+    cfg.cov_backend = "disk".into();
+    cfg.memory_budget_mb = 8;
+    let first = Pipeline::new(cfg.clone()).run().unwrap();
+    // corrupt the manifest
+    let manifest = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "lssm"))
+        .expect("manifest exists");
+    let mut bytes = std::fs::read(&manifest).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&manifest, &bytes).unwrap();
+    let second = Pipeline::new(cfg.clone()).run().unwrap();
+    for (a, b) in first.components.iter().zip(&second.components) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        assert_eq!(a.phi.to_bits(), b.phi.to_bits());
+    }
+    // and the rebuilt manifest verifies again
+    let reread = std::fs::read(&manifest).unwrap();
+    assert_ne!(reread, bytes, "manifest must have been rewritten");
+
+    // Now corrupt a *shard* (manifest intact): the hit-time verification
+    // sweep must catch it and rebuild rather than panic mid-solve.
+    let shard = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "lss"))
+        .expect("shard exists");
+    let mut sbytes = std::fs::read(&shard).unwrap();
+    let mid = sbytes.len() / 2;
+    sbytes[mid] ^= 0xFF;
+    std::fs::write(&shard, &sbytes).unwrap();
+    let third = Pipeline::new(cfg).run().unwrap();
+    for (a, b) in first.components.iter().zip(&third.components) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        assert_eq!(a.phi.to_bits(), b.phi.to_bits());
+    }
+    assert_ne!(std::fs::read(&shard).unwrap(), sbytes, "shard must have been rewritten");
+}
+
+/// The `auto` planner resolves to dense / gram / disk across three
+/// budget presets of the same synthetic corpus, and each decision line
+/// names the footprint estimates it was based on.
+#[test]
+fn planner_resolves_three_presets() {
+    let c = lsspca::corpus::SynthCorpus::new(CorpusSpec::nytimes().scaled(800, 4000), 11);
+    let opts = StreamOptions { workers: 2, chunk_docs: 100, queue_depth: 2 };
+    let (fv, _) = variance_pass(&mut SynthSource::new(&c), opts).unwrap();
+    let (elim, _) = choose_elimination(&fv, 13, 512);
+    let nhat = elim.reduced() as u64;
+    assert!(nhat >= 200, "n̂={nhat}");
+    // workers = 30 inflates the dense assembly estimate ((workers+2)·8n̂²)
+    // past gram's hard upper bound (24·n̂·m + 1 MiB row cache) by several
+    // MiB, so every budget band below is guaranteed regardless of the
+    // corpus draw.
+    let mut cfg = PipelineConfig {
+        workers: 30,
+        threads: 1,
+        shard_mb: 1,
+        row_cache_mb: 1,
+        ..Default::default()
+    };
+    cfg.memory_budget_mb = 1 << 20; // effectively unlimited (but set)
+    let tiny = plan_backend(&fv, &elim, &cfg);
+    assert_eq!(tiny.backend, "dense", "{}", tiny.describe());
+    let gram_hard_cap = 24 * nhat * fv.docs + (1 << 20);
+    assert!(
+        tiny.gram_bytes <= gram_hard_cap && gram_hard_cap < tiny.dense_bytes,
+        "estimate ordering broke: {}",
+        tiny.describe()
+    );
+    // medium budget: at least gram's estimate, comfortably below dense's
+    cfg.memory_budget_mb = tiny.gram_bytes.div_ceil(1 << 20) as usize + 1;
+    assert!((cfg.memory_budget_mb as u64) < (tiny.dense_bytes >> 20), "{}", tiny.describe());
+    let medium = plan_backend(&fv, &elim, &cfg);
+    assert_eq!(medium.backend, "gram", "{}", medium.describe());
+    // over-budget: below even gram (and the disk floor) → disk
+    cfg.memory_budget_mb = 1;
+    let over = plan_backend(&fv, &elim, &cfg);
+    assert_eq!(over.backend, "disk", "{}", over.describe());
+    for plan in [&tiny, &medium, &over] {
+        let line = plan.describe();
+        assert!(
+            line.contains("dense≈") && line.contains("gram≈") && line.contains("disk≥"),
+            "decision line must carry the estimates: {line}"
+        );
+    }
+}
+
+// --- CLI ---------------------------------------------------------------
+
+fn bin() -> PathBuf {
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("lsspca");
+    p
+}
+
+fn run_cli(args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin()).args(args).output().expect("spawn lsspca");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+/// Acceptance: `lsspca run --cov-backend disk --memory-budget-mb <small>`
+/// completes on a synthetic corpus whose reduced term matrix (as written
+/// to the shard cache) exceeds the budget.
+#[test]
+fn cli_run_disk_backend_under_tight_budget() {
+    let dir = tmpdir("cli");
+    let dir_str = dir.display().to_string();
+    let (ok, text) = run_cli(&[
+        "run",
+        "--preset",
+        "nytimes",
+        "--docs",
+        "10000",
+        "--vocab",
+        "4000",
+        "--pcs",
+        "1",
+        "--max-reduced",
+        "256",
+        "--cov-backend",
+        "disk",
+        "--memory-budget-mb",
+        "3",
+        "--shard-mb",
+        "1",
+        "--cache-dir",
+        &dir_str,
+    ]);
+    assert!(ok, "disk-backend run failed:\n{text}");
+    assert!(text.contains("PC1:"), "missing report:\n{text}");
+    assert!(text.contains("shard cache written"), "no shard cache log:\n{text}");
+    // the on-disk reduced matrix really exceeds the 3 MiB budget
+    let cache_bytes: u64 = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let s = e.path().to_string_lossy().to_string();
+            s.ends_with(".lss") || s.ends_with(".lssm")
+        })
+        .map(|e| e.metadata().map(|m| m.len()).unwrap_or(0))
+        .sum();
+    assert!(
+        cache_bytes > 3 << 20,
+        "corpus too small to exercise out-of-core: cache is {cache_bytes} bytes"
+    );
+}
+
+/// `--cov-backend auto` logs the planner decision with its estimates.
+#[test]
+fn cli_auto_backend_logs_planner_decision() {
+    let (ok, text) = run_cli(&[
+        "run",
+        "--preset",
+        "nytimes",
+        "--docs",
+        "600",
+        "--vocab",
+        "2000",
+        "--pcs",
+        "1",
+        "--max-reduced",
+        "48",
+        "--cov-backend",
+        "auto",
+        "--memory-budget-mb",
+        "512",
+    ]);
+    assert!(ok, "auto run failed:\n{text}");
+    assert!(text.contains("memory planner:"), "planner must log its decision:\n{text}");
+    assert!(
+        text.contains("dense≈") && text.contains("gram≈"),
+        "planner log must carry footprint estimates:\n{text}"
+    );
+}
