@@ -4,6 +4,10 @@
 //! component with deflation — and print the paper-style topic table plus
 //! the headline metrics (reduction factor, per-PC wall time).
 //!
+//! Written against the staged session API: the stages run explicitly
+//! (`stream → eliminate → reduce → fit`) so the example doubles as the
+//! migration reference from the old one-shot `Pipeline::run`.
+//!
 //! ```bash
 //! cargo run --release --example text_topics                 # default scale
 //! cargo run --release --example text_topics -- 100000 50000 # docs vocab
@@ -12,8 +16,8 @@
 //!
 //! The run is recorded in EXPERIMENTS.md (E3 headline run).
 
-use lsspca::config::PipelineConfig;
-use lsspca::coordinator::Pipeline;
+use lsspca::session::{LambdaSpec, Session};
+use lsspca::util::Timer;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -21,41 +25,52 @@ fn main() {
     let vocab: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(30_000);
     let engine = args.get(2).cloned().unwrap_or_else(|| "native".into());
 
-    let cfg = PipelineConfig {
-        synth_preset: "nytimes".into(),
-        synth_docs: docs,
-        synth_vocab: vocab,
-        num_pcs: 5,
-        target_card: 5,
-        card_slack: 2,
-        max_reduced: 512,
-        workers: 2,
-        engine,
-        ..Default::default()
-    };
-    cfg.validate().expect("config");
+    let mut session = Session::builder()
+        .synthetic("nytimes")
+        .synth_size(docs, vocab)
+        .num_pcs(5)
+        .target_card(5)
+        .card_slack(2)
+        .max_reduced(512)
+        .workers(2)
+        .engine(&engine)
+        .build()
+        .expect("config");
     println!(
         "# text_topics — NYTimes-like corpus, {docs} docs × {vocab} words, engine={}",
-        cfg.engine
+        session.config().engine
     );
-    let report = Pipeline::new(cfg).run().expect("pipeline");
 
+    // Stage by stage (each caches; a second fit would reuse all three):
+    let total = Timer::start();
+    let (num_docs, vocab_size, nnz) = {
+        let stats = session.stream().expect("variance pass");
+        (stats.docs, stats.vocab_size(), stats.nnz)
+    };
+    let (reduced_size, reduction_factor, elim_lambda, elim_capped) = {
+        let plan = session.eliminate(5).expect("elimination");
+        (
+            plan.elim.reduced(),
+            plan.elim.reduction_factor(),
+            plan.elim.lambda,
+            plan.capped,
+        )
+    };
+    session.reduce().expect("covariance pass");
+    let fit = session.fit(LambdaSpec::search(5, 2), 5).expect("fit");
+    let total_seconds = total.secs();
+
+    println!("\ncorpus: {num_docs} docs, {vocab_size} features, {nnz} nnz");
     println!(
-        "\ncorpus: {} docs, {} features, {} nnz",
-        report.num_docs, report.vocab_size, report.nnz
-    );
-    println!(
-        "safe elimination: n={} → n̂={}  (reduction ×{:.0}, λ̂={:.4e}{})",
-        report.vocab_size,
-        report.reduced_size,
-        report.reduction_factor,
-        report.elim_lambda,
-        if report.elim_capped { ", capped" } else { "" }
+        "safe elimination: n={vocab_size} → n̂={reduced_size}  (reduction ×{:.0}, λ̂={:.4e}{})",
+        reduction_factor,
+        elim_lambda,
+        if elim_capped { ", capped" } else { "" }
     );
     println!("\n## Top 5 sparse principal components (cf. paper Table 1)\n");
-    println!("{}", report.topic_table);
+    println!("{}", fit.topic_table);
     println!("## Per-component metrics\n");
-    for (k, c) in report.components.iter().enumerate() {
+    for (k, c) in fit.components.iter().enumerate() {
         println!(
             "PC{}: cardinality={} λ={:.4} φ={:.4} explained_variance={:.4} wall={:.2}s",
             k + 1,
@@ -67,14 +82,14 @@ fn main() {
         );
     }
     let per_pc: f64 =
-        report.components.iter().map(|c| c.seconds).sum::<f64>() / report.components.len() as f64;
+        fit.components.iter().map(|c| c.seconds).sum::<f64>() / fit.components.len() as f64;
     println!(
         "\nheadline: reduction ×{:.0} (paper: 150–200×); mean per-PC solve {:.2}s \
          (paper: ~20 s on a 2011 laptop at full NYTimes scale)",
-        report.reduction_factor, per_pc
+        reduction_factor, per_pc
     );
     println!(
-        "total pipeline: {:.2}s\n\nprofile:\n{}",
-        report.total_seconds, report.profile
+        "total pipeline: {total_seconds:.2}s\n\nprofile:\n{}",
+        session.profile()
     );
 }

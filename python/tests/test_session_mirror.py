@@ -1,0 +1,172 @@
+"""Mirrors for the staged-session PR's non-solver logic.
+
+The session API itself is pure orchestration over kernels that earlier
+mirror suites already validate (variance pass, GramCov/DiskGramCov
+bitwise claims, scoring). What *is* new algorithmically — and therefore
+mirrored here — is:
+
+- ``config.rs``'s unknown-key typo detector: the Levenshtein
+  edit-distance DP (two rolling rows) plus the "suggest within
+  distance 2" rule;
+- the CLI exit-code contract (``error.rs``): distinct codes per error
+  class, matching the table documented in README.md;
+- the bench-gate wiring: ``BENCH_baseline.json`` must carry a positive
+  baseline for every metric ``lsspca bench --compare`` gates on
+  (``main.rs``), including the new ``session_refit_median_secs`` —
+  a missing key would fail CI's gate step at runtime.
+"""
+
+import json
+import pathlib
+import random
+import re
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+
+# ---------------------------------------------------------------------------
+# edit distance (mirror of config.rs::edit_distance)
+# ---------------------------------------------------------------------------
+
+
+def edit_distance(a: str, b: str) -> int:
+    """Transliteration of the Rust rolling-row DP."""
+    prev = list(range(len(b) + 1))
+    cur = [0] * (len(b) + 1)
+    for i, ca in enumerate(a):
+        cur[0] = i + 1
+        for j, cb in enumerate(b):
+            sub = prev[j] + (ca != cb)
+            cur[j + 1] = min(sub, prev[j + 1] + 1, cur[j] + 1)
+        prev, cur = cur, prev
+    return prev[len(b)]
+
+
+def reference_distance(a: str, b: str) -> int:
+    """Classic full-matrix Levenshtein, independently written."""
+    m, n = len(a), len(b)
+    d = [[0] * (n + 1) for _ in range(m + 1)]
+    for i in range(m + 1):
+        d[i][0] = i
+    for j in range(n + 1):
+        d[0][j] = j
+    for i in range(1, m + 1):
+        for j in range(1, n + 1):
+            d[i][j] = min(
+                d[i - 1][j] + 1,
+                d[i][j - 1] + 1,
+                d[i - 1][j - 1] + (a[i - 1] != b[j - 1]),
+            )
+    return d[m][n]
+
+
+def test_edit_distance_known_values():
+    assert edit_distance("memry", "memory") == 1
+    assert edit_distance("target_cards", "target_card") == 1
+    assert edit_distance("", "abc") == 3
+    assert edit_distance("abc", "") == 3
+    assert edit_distance("kitten", "sitting") == 3
+    assert edit_distance("same", "same") == 0
+
+
+def test_edit_distance_matches_reference_randomized():
+    rng = random.Random(20110512)
+    alphabet = "abcde_"
+    for _ in range(300):
+        a = "".join(rng.choice(alphabet) for _ in range(rng.randrange(0, 9)))
+        b = "".join(rng.choice(alphabet) for _ in range(rng.randrange(0, 9)))
+        got = edit_distance(a, b)
+        want = reference_distance(a, b)
+        assert got == want, (a, b, got, want)
+        # symmetry + bounds
+        assert edit_distance(b, a) == got
+        assert got <= max(len(a), len(b))
+
+
+def known_keys_from_rust():
+    """Parse the KNOWN_KEYS whitelist out of config.rs."""
+    src = (REPO / "rust" / "src" / "config.rs").read_text(encoding="utf-8")
+    block = re.search(
+        r"const KNOWN_KEYS: &\[\(&str, &str\)\] = &\[(.*?)\];", src, re.S
+    ).group(1)
+    return re.findall(r'\("([^"]+)", "([^"]+)"\)', block)
+
+
+def test_known_keys_whitelist_matches_from_document():
+    """Every key from_document reads must be whitelisted, and vice
+    versa — a key added to one side but not the other silently warns
+    (or silently stops warning)."""
+    src = (REPO / "rust" / "src" / "config.rs").read_text(encoding="utf-8")
+    body = re.search(
+        r"pub fn from_document.*?cfg\.validate\(\)\?", src, re.S
+    ).group(0)
+    consumed = set(re.findall(r'doc\.\w+_or\("(\w+)", "(\w+)"', body))
+    whitelisted = set(known_keys_from_rust())
+    assert consumed == whitelisted, (
+        consumed.symmetric_difference(whitelisted)
+    )
+
+
+def test_typo_suggestion_rule():
+    """The suggest-within-distance-2 rule points [memry] at [memory]
+    and target_cards at target_card, and stays silent for unrelated
+    names."""
+    keys = known_keys_from_rust()
+    sections = sorted({s for s, _ in keys})
+
+    def suggest(got, candidates):
+        best = min(candidates, key=lambda c: edit_distance(got, c))
+        return best if edit_distance(got, best) <= 2 else None
+
+    assert suggest("memry", sections) == "memory"
+    solver_keys = [k for s, k in keys if s == "solver"]
+    assert suggest("target_cards", solver_keys) == "target_card"
+    assert suggest("completely_unrelated_knob", solver_keys) is None
+
+
+# ---------------------------------------------------------------------------
+# exit-code contract (mirror of error.rs::exit_code)
+# ---------------------------------------------------------------------------
+
+DOCUMENTED_EXIT_CODES = {
+    "Config": 2,
+    "Io": 3,
+    "Cache": 4,
+    "Numeric": 5,
+    "Corpus": 6,
+    "Serve": 7,
+}
+
+
+def test_exit_codes_match_error_rs():
+    src = (REPO / "rust" / "src" / "error.rs").read_text(encoding="utf-8")
+    body = re.search(
+        r"pub fn exit_code\(&self\) -> i32 \{.*?\n    \}", src, re.S
+    ).group(0)
+    found = dict(re.findall(r"LsspcaError::(\w+) \{ \.\. \} => (\d+)", body))
+    assert {k: int(v) for k, v in found.items()} == DOCUMENTED_EXIT_CODES
+    # distinct, and none collides with success (0) or the generic 1
+    codes = list(DOCUMENTED_EXIT_CODES.values())
+    assert len(set(codes)) == len(codes)
+    assert all(c >= 2 for c in codes)
+
+
+# ---------------------------------------------------------------------------
+# bench-gate wiring (BENCH_baseline.json ↔ main.rs --compare list)
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_covers_every_gated_metric():
+    baseline = json.loads((REPO / "BENCH_baseline.json").read_text())
+    gate = baseline["gate"]
+    src = (REPO / "rust" / "src" / "main.rs").read_text(encoding="utf-8")
+    compare = re.search(
+        r"bench_compare_gate\(\s*Path::new\(&baseline\),\s*&\[(.*?)\]", src, re.S
+    ).group(1)
+    gated = re.findall(r'\("([a-z0-9_]+)"', compare)
+    assert "session_refit_median_secs" in gated
+    for name in gated:
+        assert name in gate, f"BENCH_baseline.json gate missing {name}"
+        assert gate[name] > 0
+    # the gate's shape keys are present for the mismatch check
+    assert gate["quick"] is True and gate["n"] == 128

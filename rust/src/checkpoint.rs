@@ -14,6 +14,7 @@
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
+use crate::error::LsspcaError;
 use crate::moments::FeatureVariances;
 
 const MAGIC: &[u8; 4] = b"LSPV";
@@ -38,10 +39,15 @@ pub fn path_for(cache_dir: &Path, key: u64) -> PathBuf {
     cache_dir.join(format!("variances_{key:016x}.lspv"))
 }
 
-/// Save a variance checkpoint.
-pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), String> {
+/// Save a variance checkpoint. Failures are [`LsspcaError::Cache`] —
+/// an unwritable cache is a cache-layer condition the pipeline degrades
+/// around, not a hard I/O failure of the run itself.
+pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), LsspcaError> {
+    let cache_err = |what: &str, e: std::io::Error| {
+        LsspcaError::cache(format!("checkpoint {}: {what}: {e}", path.display()))
+    };
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        std::fs::create_dir_all(dir).map_err(|e| cache_err("mkdir", e))?;
     }
     let n = fv.variance.len();
     assert_eq!(fv.mean.len(), n);
@@ -56,11 +62,11 @@ pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), String> 
         }
     }
     let sum = checksum(&payload);
-    let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
-    f.write_all(MAGIC).map_err(|e| e.to_string())?;
-    f.write_all(&VERSION.to_le_bytes()).map_err(|e| e.to_string())?;
-    f.write_all(&payload).map_err(|e| e.to_string())?;
-    f.write_all(&sum.to_le_bytes()).map_err(|e| e.to_string())?;
+    let mut f = std::fs::File::create(path).map_err(|e| cache_err("create", e))?;
+    f.write_all(MAGIC).map_err(|e| cache_err("write", e))?;
+    f.write_all(&VERSION.to_le_bytes()).map_err(|e| cache_err("write", e))?;
+    f.write_all(&payload).map_err(|e| cache_err("write", e))?;
+    f.write_all(&sum.to_le_bytes()).map_err(|e| cache_err("write", e))?;
     Ok(())
 }
 
@@ -75,44 +81,45 @@ pub fn load(
     path: &Path,
     key: u64,
     expected_n: Option<usize>,
-) -> Result<Option<FeatureVariances>, String> {
+) -> Result<Option<FeatureVariances>, LsspcaError> {
     let mut f = match std::fs::File::open(path) {
         Ok(f) => f,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-        Err(e) => return Err(format!("open {}: {e}", path.display())),
+        Err(e) => return Err(LsspcaError::cache(format!("open {}: {e}", path.display()))),
     };
     let mut buf = Vec::new();
-    f.read_to_end(&mut buf).map_err(|e| e.to_string())?;
+    f.read_to_end(&mut buf)
+        .map_err(|e| LsspcaError::cache(format!("read {}: {e}", path.display())))?;
     if buf.len() < 8 + 24 + 8 || &buf[..4] != MAGIC {
-        return Err("checkpoint: bad magic or truncated header".into());
+        return Err(LsspcaError::cache("checkpoint: bad magic or truncated header"));
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     if version != VERSION {
-        return Err(format!("checkpoint: version {version}, want {VERSION}"));
+        return Err(LsspcaError::cache(format!("checkpoint: version {version}, want {VERSION}")));
     }
     let payload = &buf[8..buf.len() - 8];
     let stored_sum = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
     if checksum(payload) != stored_sum {
-        return Err("checkpoint: checksum mismatch (corrupt file)".into());
+        return Err(LsspcaError::cache("checkpoint: checksum mismatch (corrupt file)"));
     }
     let rd_u64 = |o: usize| u64::from_le_bytes(payload[o..o + 8].try_into().unwrap());
     let stored_key = rd_u64(0);
     if stored_key != key {
-        return Err(format!(
+        return Err(LsspcaError::cache(format!(
             "checkpoint: corpus key mismatch ({stored_key:#x} vs {key:#x}) — stale cache"
-        ));
+        )));
     }
     let docs = rd_u64(8);
     let n = rd_u64(16) as usize;
     if payload.len() != 24 + 24 * n {
-        return Err("checkpoint: payload size mismatch".into());
+        return Err(LsspcaError::cache("checkpoint: payload size mismatch"));
     }
     if let Some(want) = expected_n {
         if n != want {
-            return Err(format!(
+            return Err(LsspcaError::cache(format!(
                 "checkpoint: dimension mismatch (file has n={n}, corpus has n={want}) — \
                  stale or foreign cache"
-            ));
+            )));
         }
     }
     let read_series = |idx: usize| -> Vec<f64> {
@@ -175,6 +182,8 @@ mod tests {
         let p = tmp("key.lspv");
         save(&p, corpus_key("a"), &fv).unwrap();
         let err = load(&p, corpus_key("b"), None).unwrap_err();
+        assert!(matches!(err, LsspcaError::Cache { .. }));
+        let err = err.to_string();
         assert!(err.contains("key mismatch"), "{err}");
         std::fs::remove_file(&p).ok();
     }
@@ -188,7 +197,7 @@ mod tests {
         let key = corpus_key("dim");
         let p = tmp("dim.lspv");
         save(&p, key, &fv).unwrap();
-        let err = load(&p, key, Some(60)).unwrap_err();
+        let err = load(&p, key, Some(60)).unwrap_err().to_string();
         assert!(err.contains("dimension mismatch"), "{err}");
         assert!(err.contains("n=50") && err.contains("n=60"), "{err}");
         // the matching dimension (and the no-expectation path) still load
@@ -209,7 +218,8 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&p, &bytes).unwrap();
         let err = load(&p, key, None).unwrap_err();
-        assert!(err.contains("checksum"), "{err}");
+        assert!(matches!(err, LsspcaError::Cache { .. }));
+        assert!(err.to_string().contains("checksum"), "{err}");
         // truncation
         std::fs::write(&p, &bytes[..bytes.len() / 3]).unwrap();
         assert!(load(&p, key, None).is_err());

@@ -8,6 +8,8 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+use crate::error::LsspcaError;
+
 /// Specification of one flag.
 #[derive(Clone, Debug)]
 pub struct FlagSpec {
@@ -113,29 +115,29 @@ impl Args {
 
     /// Parse a flag's value into any `FromStr` type, with a
     /// flag-naming error message.
-    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, LsspcaError>
     where
         T::Err: std::fmt::Display,
     {
         let raw = self
             .get(name)
-            .ok_or_else(|| format!("missing required flag --{name}"))?;
+            .ok_or_else(|| LsspcaError::config(format!("missing required flag --{name}")))?;
         raw.parse::<T>()
-            .map_err(|e| format!("invalid value '{raw}' for --{name}: {e}"))
+            .map_err(|e| LsspcaError::config(format!("invalid value '{raw}' for --{name}: {e}")))
     }
 
     /// `parse::<usize>` convenience.
-    pub fn usize(&self, name: &str) -> Result<usize, String> {
+    pub fn usize(&self, name: &str) -> Result<usize, LsspcaError> {
         self.parse(name)
     }
 
     /// `parse::<f64>` convenience.
-    pub fn f64(&self, name: &str) -> Result<f64, String> {
+    pub fn f64(&self, name: &str) -> Result<f64, LsspcaError> {
         self.parse(name)
     }
 
     /// `parse::<u64>` convenience.
-    pub fn u64(&self, name: &str) -> Result<u64, String> {
+    pub fn u64(&self, name: &str) -> Result<u64, LsspcaError> {
         self.parse(name)
     }
 
@@ -187,17 +189,16 @@ impl App {
         s
     }
 
-    /// Parse an argument vector (excluding argv[0]).
-    pub fn parse(&self, argv: &[String]) -> Result<Parsed, String> {
+    /// Parse an argument vector (excluding argv\[0\]). Failures are
+    /// [`LsspcaError::Config`] (exit code 2 in `main`).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed, LsspcaError> {
         if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
             return Ok(Parsed::Help(self.top_help()));
         }
         let cmd_name = &argv[0];
-        let spec = self
-            .commands
-            .iter()
-            .find(|c| c.name == cmd_name)
-            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.top_help()))?;
+        let spec = self.commands.iter().find(|c| c.name == cmd_name).ok_or_else(|| {
+            LsspcaError::config(format!("unknown command '{cmd_name}'\n\n{}", self.top_help()))
+        })?;
 
         let mut values = BTreeMap::new();
         let mut switches = Vec::new();
@@ -213,12 +214,12 @@ impl App {
                     Some((n, v)) => (n.to_string(), Some(v.to_string())),
                     None => (stripped.to_string(), None),
                 };
-                let flag = spec
-                    .find(&name)
-                    .ok_or_else(|| format!("unknown flag --{name} for '{cmd_name}'"))?;
+                let flag = spec.find(&name).ok_or_else(|| {
+                    LsspcaError::config(format!("unknown flag --{name} for '{cmd_name}'"))
+                })?;
                 if flag.is_switch {
                     if inline_val.is_some() {
-                        return Err(format!("switch --{name} takes no value"));
+                        return Err(LsspcaError::config(format!("switch --{name} takes no value")));
                     }
                     switches.push(name);
                 } else {
@@ -226,9 +227,9 @@ impl App {
                         Some(v) => v,
                         None => {
                             i += 1;
-                            argv.get(i)
-                                .cloned()
-                                .ok_or_else(|| format!("flag --{name} expects a value"))?
+                            argv.get(i).cloned().ok_or_else(|| {
+                                LsspcaError::config(format!("flag --{name} expects a value"))
+                            })?
                         }
                     };
                     values.insert(name, val);
@@ -249,11 +250,11 @@ impl App {
                         values.insert(f.name.to_string(), d.clone());
                     }
                     (None, true) => {
-                        return Err(format!(
+                        return Err(LsspcaError::config(format!(
                             "missing required flag --{}\n\n{}",
                             f.name,
                             spec.usage(self.prog)
-                        ));
+                        )));
                     }
                     _ => {}
                 }
@@ -312,13 +313,14 @@ mod tests {
     #[test]
     fn missing_required_errors() {
         let e = app().parse(&sv(&["solve"])).unwrap_err();
-        assert!(e.contains("--input"));
+        assert!(matches!(e, LsspcaError::Config { .. }));
+        assert!(e.to_string().contains("--input"));
     }
 
     #[test]
     fn unknown_flag_errors() {
         let e = app().parse(&sv(&["solve", "--bogus", "1"])).unwrap_err();
-        assert!(e.contains("bogus"));
+        assert!(e.to_string().contains("bogus"));
     }
 
     #[test]
@@ -337,7 +339,7 @@ mod tests {
         let p = app().parse(&sv(&["solve", "--input", "a", "--n", "abc"])).unwrap();
         if let Parsed::Command(_, args) = p {
             let e = args.usize("n").unwrap_err();
-            assert!(e.contains("--n"));
+            assert!(e.to_string().contains("--n"));
         } else {
             panic!();
         }

@@ -5,10 +5,20 @@
 //! headers, `key = value` with string / integer / float / boolean values,
 //! inline comments with `#`, and blank lines. Arrays of scalars are
 //! supported with `[a, b, c]` syntax.
+//!
+//! [`PipelineConfig`] is *one* way to configure the system — the file
+//! format behind `lsspca run --config`. Library callers should prefer
+//! the typed [`crate::session::SessionBuilder`], which produces the same
+//! validated configuration programmatically. Unknown `[section]`s and
+//! keys in a parsed document are reported as warnings with
+//! nearest-known-spelling suggestions (typo detection, e.g. `[memry]` →
+//! `[memory]`), so a misspelled knob never silently becomes a no-op.
 
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
+
+use crate::error::LsspcaError;
 
 /// A parsed scalar value.
 #[derive(Clone, Debug, PartialEq)]
@@ -90,7 +100,7 @@ pub struct Document {
 
 impl Document {
     /// Parse TOML-subset text.
-    pub fn parse(text: &str) -> Result<Document, String> {
+    pub fn parse(text: &str) -> Result<Document, LsspcaError> {
         let mut doc = Document::default();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
@@ -101,28 +111,31 @@ impl Document {
             if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
                 section = inner.trim().to_string();
                 if section.is_empty() {
-                    return Err(format!("line {}: empty section name", lineno + 1));
+                    return Err(LsspcaError::config(format!(
+                        "line {}: empty section name",
+                        lineno + 1
+                    )));
                 }
                 continue;
             }
-            let (key, val) = line
-                .split_once('=')
-                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let (key, val) = line.split_once('=').ok_or_else(|| {
+                LsspcaError::config(format!("line {}: expected key = value", lineno + 1))
+            })?;
             let key = key.trim().to_string();
             if key.is_empty() {
-                return Err(format!("line {}: empty key", lineno + 1));
+                return Err(LsspcaError::config(format!("line {}: empty key", lineno + 1)));
             }
             let value = parse_value(val.trim())
-                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+                .map_err(|e| LsspcaError::config(format!("line {}: {e}", lineno + 1)))?;
             doc.entries.insert((section.clone(), key), value);
         }
         Ok(doc)
     }
 
     /// Load and parse a file.
-    pub fn load(path: &Path) -> Result<Document, String> {
+    pub fn load(path: &Path) -> Result<Document, LsspcaError> {
         let text = std::fs::read_to_string(path)
-            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            .map_err(|e| LsspcaError::io_at(path, format!("reading config: {e}")))?;
         Document::parse(&text)
     }
 
@@ -131,41 +144,144 @@ impl Document {
         self.entries.get(&(section.to_string(), key.to_string()))
     }
 
+    /// Iterate every parsed entry as `(section, key, value)`, in sorted
+    /// order (the unknown-key detector walks this).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|((s, k), v)| (s.as_str(), k.as_str(), v))
+    }
+
     fn typed<T>(
         &self,
         section: &str,
         key: &str,
         default: T,
         conv: impl Fn(&Value) -> Option<T>,
-    ) -> Result<T, String> {
+    ) -> Result<T, LsspcaError> {
         match self.get(section, key) {
             None => Ok(default),
-            Some(v) => {
-                conv(v).ok_or_else(|| format!("[{section}] {key}: unexpected type ({v})"))
-            }
+            Some(v) => conv(v).ok_or_else(|| {
+                LsspcaError::config(format!("[{section}] {key}: unexpected type ({v})"))
+            }),
         }
     }
 
     /// `f64` at `[section] key`, or `default` when absent.
-    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64, String> {
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> Result<f64, LsspcaError> {
         self.typed(section, key, default, |v| v.as_f64())
     }
     /// `usize` at `[section] key`, or `default` when absent.
-    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize, String> {
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> Result<usize, LsspcaError> {
         self.typed(section, key, default, |v| v.as_usize())
     }
     /// `u64` at `[section] key`, or `default` when absent.
-    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64, String> {
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> Result<u64, LsspcaError> {
         self.typed(section, key, default, |v| v.as_i64().and_then(|i| u64::try_from(i).ok()))
     }
     /// `bool` at `[section] key`, or `default` when absent.
-    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, String> {
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> Result<bool, LsspcaError> {
         self.typed(section, key, default, |v| v.as_bool())
     }
     /// `String` at `[section] key`, or `default` when absent.
-    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String, String> {
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String, LsspcaError> {
         self.typed(section, key, default.to_string(), |v| v.as_str().map(|s| s.to_string()))
     }
+}
+
+/// Every `[section] key` the pipeline configuration consumes — the
+/// whitelist behind [`unknown_key_warnings`]. Keep in sync with
+/// [`PipelineConfig::from_document`].
+const KNOWN_KEYS: &[(&str, &str)] = &[
+    ("corpus", "input"),
+    ("corpus", "preset"),
+    ("corpus", "docs"),
+    ("corpus", "vocab"),
+    ("corpus", "seed"),
+    ("corpus", "cache_dir"),
+    ("stream", "workers"),
+    ("stream", "chunk_docs"),
+    ("stream", "queue_depth"),
+    ("solver", "threads"),
+    ("solver", "lambda_probes"),
+    ("solver", "num_pcs"),
+    ("solver", "target_card"),
+    ("solver", "card_slack"),
+    ("solver", "max_reduced"),
+    ("solver", "row_cache_mb"),
+    ("solver", "bca_sweeps"),
+    ("solver", "epsilon"),
+    ("solver", "engine"),
+    ("solver", "artifacts_dir"),
+    ("solver", "deflation"),
+    ("solver", "certify"),
+    ("cov", "backend"),
+    ("memory", "budget_mb"),
+    ("memory", "shard_mb"),
+    ("model", "save_path"),
+    ("model", "center"),
+    ("model", "normalize"),
+    ("serve", "addr"),
+    ("serve", "pool"),
+];
+
+/// Levenshtein edit distance (the strings involved are tiny).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Nearest candidate within edit distance 2, if any.
+fn suggest<'a>(got: &str, candidates: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    candidates
+        .map(|c| (edit_distance(got, c), c))
+        .min_by_key(|&(d, _)| d)
+        .filter(|&(d, _)| d <= 2)
+        .map(|(_, c)| c)
+}
+
+/// Warnings for entries a [`Document`] holds but [`PipelineConfig`]
+/// never reads — silent typos like `[memry] budget_mb` or
+/// `target_cards`. Each warning names the offending `[section] key` and
+/// suggests the nearest known spelling when one is close.
+/// [`PipelineConfig::from_document`] logs these; callers that want to
+/// treat them as hard errors can check the returned list directly.
+pub fn unknown_key_warnings(doc: &Document) -> Vec<String> {
+    let mut out = Vec::new();
+    for (section, key, _) in doc.entries() {
+        if KNOWN_KEYS.iter().any(|&(s, k)| s == section && k == key) {
+            continue;
+        }
+        let known_section = KNOWN_KEYS.iter().any(|&(s, _)| s == section);
+        let msg = if known_section {
+            let keys = KNOWN_KEYS.iter().filter(|&&(s, _)| s == section).map(|&(_, k)| k);
+            match suggest(key, keys) {
+                Some(near) => {
+                    format!("[{section}] {key}: unknown key (did you mean '{near}'?)")
+                }
+                None => format!("[{section}] {key}: unknown key"),
+            }
+        } else {
+            let mut sections: Vec<&str> = KNOWN_KEYS.iter().map(|&(s, _)| s).collect();
+            sections.dedup();
+            match suggest(section, sections.into_iter()) {
+                Some(near) => format!(
+                    "[{section}] {key}: unknown section '[{section}]' (did you mean '[{near}]'?)"
+                ),
+                None => format!("[{section}] {key}: unknown section '[{section}]'"),
+            }
+        };
+        out.push(msg);
+    }
+    out
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -347,8 +463,13 @@ impl Default for PipelineConfig {
 }
 
 impl PipelineConfig {
-    /// Build from a parsed TOML-subset document (missing keys = defaults).
-    pub fn from_document(doc: &Document) -> Result<PipelineConfig, String> {
+    /// Build from a parsed TOML-subset document (missing keys =
+    /// defaults). Unknown sections/keys are logged as warnings with a
+    /// nearest-spelling suggestion — see [`unknown_key_warnings`].
+    pub fn from_document(doc: &Document) -> Result<PipelineConfig, LsspcaError> {
+        for w in unknown_key_warnings(doc) {
+            crate::warn_!("config: {w}");
+        }
         let d = PipelineConfig::default();
         let cfg = PipelineConfig {
             input: doc.str_or("corpus", "input", &d.input)?,
@@ -387,46 +508,47 @@ impl PipelineConfig {
     }
 
     /// Load from a file path.
-    pub fn load(path: &Path) -> Result<PipelineConfig, String> {
+    pub fn load(path: &Path) -> Result<PipelineConfig, LsspcaError> {
         Self::from_document(&Document::load(path)?)
     }
 
     /// Sanity-check field values.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), LsspcaError> {
+        let bad = |msg: String| Err(LsspcaError::config(msg));
         if self.workers == 0 {
-            return Err("stream.workers must be >= 1".into());
+            return bad("stream.workers must be >= 1".into());
         }
         if self.chunk_docs == 0 {
-            return Err("stream.chunk_docs must be >= 1".into());
+            return bad("stream.chunk_docs must be >= 1".into());
         }
         if self.queue_depth == 0 {
-            return Err("stream.queue_depth must be >= 1".into());
+            return bad("stream.queue_depth must be >= 1".into());
         }
         if self.num_pcs == 0 {
-            return Err("solver.num_pcs must be >= 1".into());
+            return bad("solver.num_pcs must be >= 1".into());
         }
         if self.target_card == 0 {
-            return Err("solver.target_card must be >= 1".into());
+            return bad("solver.target_card must be >= 1".into());
         }
         if self.lambda_probes == 0 {
-            return Err("solver.lambda_probes must be >= 1".into());
+            return bad("solver.lambda_probes must be >= 1".into());
         }
         if self.max_reduced < self.target_card {
-            return Err("solver.max_reduced must be >= target_card".into());
+            return bad("solver.max_reduced must be >= target_card".into());
         }
         if !(self.epsilon > 0.0) {
-            return Err("solver.epsilon must be > 0".into());
+            return bad("solver.epsilon must be > 0".into());
         }
         match self.engine.as_str() {
             "native" | "xla" => {}
-            other => return Err(format!("solver.engine '{other}' (want native|xla)")),
+            other => return bad(format!("solver.engine '{other}' (want native|xla)")),
         }
         match self.cov_backend.as_str() {
             "dense" | "gram" | "disk" | "auto" => {}
-            other => return Err(format!("cov.backend '{other}' (want dense|gram|disk|auto)")),
+            other => return bad(format!("cov.backend '{other}' (want dense|gram|disk|auto)")),
         }
         if self.shard_mb == 0 {
-            return Err("memory.shard_mb must be >= 1".into());
+            return bad("memory.shard_mb must be >= 1".into());
         }
         if self.engine == "xla" && matches!(self.cov_backend.as_str(), "gram" | "disk") {
             // The XLA engine ships an explicit Σ to shape-static
@@ -435,7 +557,7 @@ impl PipelineConfig {
             // λ-probe — defeating the implicit backends' memory
             // contract at exactly the scales they exist for. ("auto"
             // is fine: the planner pins itself to dense under xla.)
-            return Err(format!(
+            return bad(format!(
                 "solver.engine = \"xla\" requires cov.backend = \"dense\" (the XLA \
                  artifacts need an explicit covariance matrix; \"{}\" would re-densify \
                  Σ per λ-probe)",
@@ -444,17 +566,17 @@ impl PipelineConfig {
         }
         match self.deflation.as_str() {
             "projection" | "hotelling" => {}
-            other => return Err(format!("solver.deflation '{other}' (want projection|hotelling)")),
+            other => return bad(format!("solver.deflation '{other}' (want projection|hotelling)")),
         }
         match self.synth_preset.as_str() {
             "nytimes" | "pubmed" => {}
-            other => return Err(format!("corpus.preset '{other}' (want nytimes|pubmed)")),
+            other => return bad(format!("corpus.preset '{other}' (want nytimes|pubmed)")),
         }
         if self.serve_pool == 0 {
-            return Err("serve.pool must be >= 1".into());
+            return bad("serve.pool must be >= 1".into());
         }
         if self.serve_addr.is_empty() {
-            return Err("serve.addr must not be empty".into());
+            return bad("serve.addr must not be empty".into());
         }
         Ok(())
     }
@@ -532,7 +654,7 @@ lambdas = [0.1, 0.2, 0.5]
         // xla + gram would re-densify Σ per λ-probe; rejected up front
         let clash =
             Document::parse("[solver]\nengine = \"xla\"\n[cov]\nbackend = \"gram\"").unwrap();
-        let e = PipelineConfig::from_document(&clash).unwrap_err();
+        let e = PipelineConfig::from_document(&clash).unwrap_err().to_string();
         assert!(e.contains("xla") && e.contains("gram"), "{e}");
     }
 
@@ -584,18 +706,77 @@ lambdas = [0.1, 0.2, 0.5]
     #[test]
     fn parse_errors_carry_line_numbers() {
         let e = Document::parse("ok = 1\nnot a kv line").unwrap_err();
-        assert!(e.contains("line 2"), "{e}");
+        assert!(matches!(e, crate::error::LsspcaError::Config { .. }));
+        assert!(e.to_string().contains("line 2"), "{e}");
     }
 
     #[test]
     fn bad_value_type_reports_key() {
         let doc = Document::parse("[stream]\nworkers = \"three\"").unwrap();
         let e = PipelineConfig::from_document(&doc).unwrap_err();
-        assert!(e.contains("workers"), "{e}");
+        assert!(e.to_string().contains("workers"), "{e}");
+    }
+
+    #[test]
+    fn validation_errors_are_config_variants() {
+        let doc = Document::parse("[solver]\nengine = \"gpu\"").unwrap();
+        let e = PipelineConfig::from_document(&doc).unwrap_err();
+        assert!(matches!(e, crate::error::LsspcaError::Config { .. }), "{e}");
+        assert_eq!(e.exit_code(), 2);
     }
 
     #[test]
     fn default_validates() {
         PipelineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_section_warns_with_suggestion() {
+        // the classic typo: [memry] instead of [memory]
+        let doc = Document::parse("[memry]\nbudget_mb = 256").unwrap();
+        let warnings = unknown_key_warnings(&doc);
+        assert_eq!(warnings.len(), 1, "{warnings:?}");
+        assert!(warnings[0].contains("memry"), "{warnings:?}");
+        assert!(warnings[0].contains("did you mean '[memory]'"), "{warnings:?}");
+        // the misspelled section must not silently apply: defaults hold
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.memory_budget_mb, 0);
+    }
+
+    #[test]
+    fn unknown_key_warns_with_suggestion() {
+        let doc = Document::parse("[solver]\ntarget_cards = 7\nnum_pcs = 2").unwrap();
+        let warnings = unknown_key_warnings(&doc);
+        assert_eq!(warnings.len(), 1, "{warnings:?}");
+        assert!(warnings[0].contains("target_cards"), "{warnings:?}");
+        assert!(warnings[0].contains("did you mean 'target_card'"), "{warnings:?}");
+        // the known key in the same document still applies
+        assert_eq!(PipelineConfig::from_document(&doc).unwrap().num_pcs, 2);
+    }
+
+    #[test]
+    fn unrelated_unknown_key_warns_without_suggestion() {
+        let doc = Document::parse("[solver]\ncompletely_unrelated_knob = 1").unwrap();
+        let warnings = unknown_key_warnings(&doc);
+        assert_eq!(warnings.len(), 1, "{warnings:?}");
+        assert!(warnings[0].contains("unknown key"), "{warnings:?}");
+        assert!(!warnings[0].contains("did you mean"), "{warnings:?}");
+    }
+
+    #[test]
+    fn known_keys_produce_no_warnings() {
+        let doc = Document::parse(
+            "[corpus]\npreset = \"nytimes\"\n[memory]\nbudget_mb = 64\nshard_mb = 4",
+        )
+        .unwrap();
+        assert!(unknown_key_warnings(&doc).is_empty());
+        // a document exercising one key from every known section is quiet
+        let full = Document::parse(
+            "[corpus]\nseed = 1\n[stream]\nworkers = 2\n[solver]\nengine = \"native\"\n\
+             [cov]\nbackend = \"dense\"\n[memory]\nshard_mb = 8\n\
+             [model]\ncenter = true\n[serve]\npool = 2",
+        )
+        .unwrap();
+        assert!(unknown_key_warnings(&full).is_empty());
     }
 }

@@ -11,13 +11,23 @@
 //!   → model artifact (original-space PCs + norm stats)            model
 //! ```
 //!
+//! **Migration note:** [`Pipeline::run`] is now a thin compatibility
+//! wrapper over the staged [`crate::session::Session`] API — the stages
+//! above are `stream() → eliminate(k) → reduce() → fit(λ, K)`, each
+//! individually callable and cached. Code that only needs the one-shot
+//! report keeps working unchanged (results are bitwise-identical);
+//! code that re-solves at several `(λ, K)` should hold a `Session` and
+//! call `fit` repeatedly instead of re-running the pipeline. Errors are
+//! now the structured [`LsspcaError`] instead of `String`.
+//!
 //! Deflation note: components after the first are extracted from the same
 //! reduced covariance operator, re-solving after stacking earlier PCs as
-//! rank-K corrections ([`DeflatedCov`]) — the paper's "top 5 sparse
-//! principal components" workflow, without destructive dense edits. The
-//! initial λ̂ for *elimination* is chosen from the variance profile so the
-//! reduced problem comfortably contains a cardinality-`target` solution
-//! (`max_reduced` caps it; the cap is reported when it binds).
+//! rank-K corrections ([`DeflatedCov`](crate::solver::deflate::DeflatedCov))
+//! — the paper's "top 5 sparse principal components" workflow, without
+//! destructive dense edits. The initial λ̂ for *elimination* is chosen from
+//! the variance profile so the reduced problem comfortably contains a
+//! cardinality-`target` solution (`max_reduced` caps it; the cap is
+//! reported when it binds).
 //!
 //! Covariance backend (`cov.backend`): `"dense"` streams the reduced
 //! n̂ × n̂ matrix exactly as before (every solve bitwise the historical
@@ -32,26 +42,19 @@
 //! memory-budget planner — pick from variance-pass footprint estimates,
 //! logging the numbers behind the decision.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
+use std::sync::Arc;
 
 use crate::config::PipelineConfig;
-use crate::corpus::{CorpusSpec, SynthCorpus};
-use crate::cov::{covariance_pass, gram_pass, reduced_csr_pass};
-use crate::cov_disk::DiskGramCov;
-use crate::covop::{CovOp, DenseCov, MaskedCov};
-use crate::data::shardcache::{self, ShardCacheKey};
-use crate::data::Vocab;
+use crate::covop::{CovOp, MaskedCov};
 use crate::elim::{lambda_for_survivors, SafeElimination};
-use crate::engine::{Engine, NativeEngine};
-#[cfg(feature = "xla")]
-use crate::engine::XlaEngine;
+use crate::engine::Engine;
+use crate::error::LsspcaError;
 use crate::moments::FeatureVariances;
-use crate::solver::bca::BcaOptions;
-use crate::solver::deflate::{DeflatedCov, Scheme};
+use crate::session::{LambdaSpec, Progress, Session};
 use crate::solver::extract::SparsePc;
-use crate::solver::lambda::{search, LambdaSearchOptions};
-use crate::stream::{variance_pass, FileSource, StreamOptions, SynthSource};
-use crate::util::timer::{Profiler, Timer};
+use crate::solver::lambda::{LambdaEval, LambdaSearchOptions};
+use crate::util::timer::Timer;
 
 /// One extracted component with its reporting metadata.
 #[derive(Clone, Debug)]
@@ -107,437 +110,81 @@ pub struct PipelineReport {
     pub model: crate::model::Model,
 }
 
-/// The pipeline object: configuration + engine.
+/// The one-shot pipeline object: configuration (+ optional observer).
+///
+/// A compatibility wrapper over [`Session`]: `run` executes
+/// `stream → eliminate → reduce → fit` once and assembles the classic
+/// [`PipelineReport`]. Hold a [`Session`] directly to reuse the
+/// streamed corpus across many fits.
 pub struct Pipeline {
     /// The full run configuration.
     pub config: PipelineConfig,
+    observer: Option<Arc<dyn Progress>>,
 }
 
 impl Pipeline {
     /// Wrap a validated configuration.
     pub fn new(config: PipelineConfig) -> Pipeline {
-        Pipeline { config }
+        Pipeline { config, observer: None }
     }
 
-    fn stream_opts(&self) -> StreamOptions {
-        StreamOptions {
-            workers: self.config.workers,
-            chunk_docs: self.config.chunk_docs,
-            queue_depth: self.config.queue_depth,
-        }
-    }
-
-    fn make_engine(&self) -> Result<Box<dyn Engine>, String> {
-        match self.config.engine.as_str() {
-            "native" => Ok(Box::new(NativeEngine::new().with_threads(self.config.threads))),
-            #[cfg(feature = "xla")]
-            "xla" => Ok(Box::new(XlaEngine::load(Path::new(&self.config.artifacts_dir))?)),
-            #[cfg(not(feature = "xla"))]
-            "xla" => Err("this build has no XLA support (rebuild with --features xla)".into()),
-            other => Err(format!("unknown engine '{other}'")),
-        }
+    /// Attach a [`Progress`] observer to the run.
+    pub fn with_observer(mut self, observer: Arc<dyn Progress>) -> Pipeline {
+        self.observer = Some(observer);
+        self
     }
 
     /// Run end-to-end. `input` resolution: configured file path, else a
     /// synthetic corpus streamed straight from the generator.
-    pub fn run(&self) -> Result<PipelineReport, String> {
+    ///
+    /// Equivalent to a fresh [`Session`] running every stage once with
+    /// this configuration — bitwise-identical components, same logs,
+    /// same profile sections.
+    pub fn run(&self) -> Result<PipelineReport, LsspcaError> {
         let total = Timer::start();
-        let mut prof = Profiler::new();
-        let opts = self.stream_opts();
-
-        // --- resolve corpus ------------------------------------------------
-        let synth: Option<SynthCorpus> = if self.config.input.is_empty() {
-            let spec = CorpusSpec::preset(&self.config.synth_preset)
-                .ok_or_else(|| format!("unknown preset {}", self.config.synth_preset))?
-                .scaled(self.config.synth_docs, self.config.synth_vocab);
-            Some(SynthCorpus::new(spec, self.config.seed))
-        } else {
-            None
-        };
-        let input_path = PathBuf::from(&self.config.input);
-        let vocab = match &synth {
-            Some(s) => s.vocab.clone(),
-            None => {
-                let vp = input_path.with_extension("vocab");
-                if vp.exists() {
-                    Vocab::load(&vp)?
-                } else {
-                    Vocab::default()
-                }
-            }
-        };
-        let corpus_name = synth
-            .as_ref()
-            .map(|s| s.spec.name.to_string())
-            .unwrap_or_else(|| input_path.display().to_string());
-        crate::info!("pipeline start: corpus={corpus_name} engine={}", self.config.engine);
-
-        // --- pass 1: variances (with optional checkpoint reuse) -------------
-        // Fingerprint the corpus identity: synthetic params, or the
-        // input path + its size (cheap mtime-free invalidation). Shared
-        // by the variance checkpoint and the covariance shard cache.
-        let identity = match &synth {
-            Some(s) => format!(
-                "synth:{}:{}:{}:{}",
-                s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
-            ),
-            None => {
-                let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
-                format!("file:{}:{len}", input_path.display())
-            }
-        };
-        let corpus_digest = crate::checkpoint::corpus_key(&identity);
-        let cache = if self.config.cache_dir.is_empty() {
-            None
-        } else {
-            Some((
-                crate::checkpoint::path_for(Path::new(&self.config.cache_dir), corpus_digest),
-                corpus_digest,
-            ))
-        };
-        // The corpus' live feature dimension, for checkpoint validation:
-        // a cached file whose key collides but whose n differs must be
-        // rejected up front, not panic later inside elimination.
-        let expected_n: Option<usize> = match &synth {
-            Some(s) => Some(s.spec.vocab_size),
-            None => crate::data::docword::DocwordReader::open(&input_path)
-                .ok()
-                .map(|r| r.header().vocab_size),
-        };
-        let cached_fv = match &cache {
-            Some((path, key)) => match crate::checkpoint::load(path, *key, expected_n) {
-                Ok(hit) => {
-                    if hit.is_some() {
-                        crate::info!("variance pass: checkpoint hit at {}", path.display());
-                    }
-                    hit
-                }
-                Err(e) => {
-                    crate::warn_!("ignoring bad variance checkpoint: {e}");
-                    None
-                }
-            },
-            None => None,
-        };
-        let (fv, stats1) = match cached_fv {
-            Some(fv) => {
-                let stats = crate::stream::StreamStats {
-                    docs: fv.docs,
-                    ..Default::default()
-                };
-                (fv, stats)
-            }
-            None => {
-                let (fv, stats) = prof.time("variance_pass", || -> Result<_, String> {
-                    match &synth {
-                        Some(s) => variance_pass(&mut SynthSource::new(s), opts),
-                        None => {
-                            let mut src = FileSource::open(&input_path)?;
-                            variance_pass(&mut src, opts)
-                        }
-                    }
-                })?;
-                if let Some((path, key)) = &cache {
-                    if let Err(e) = crate::checkpoint::save(path, *key, &fv) {
-                        crate::warn_!("could not write variance checkpoint: {e}");
-                    }
-                }
-                (fv, stats)
-            }
-        };
-        crate::info!(
-            "variance pass: {} docs, {} nnz in {:.2}s",
-            stats1.docs,
-            stats1.nnz,
-            stats1.seconds
-        );
-
-        // --- safe elimination ----------------------------------------------
-        let (elim, elim_capped) = prof.time("elimination", || {
-            choose_elimination(&fv, self.config.target_card, self.config.max_reduced)
-        });
-        crate::info!(
-            "safe elimination: λ={:.4e} keeps n̂={} of n={} ({}x reduction{})",
-            elim.lambda,
-            elim.reduced(),
-            elim.original,
-            elim.reduction_factor() as u64,
-            if elim_capped { ", capped" } else { "" }
-        );
-        if elim.reduced() == 0 {
-            return Err("elimination removed every feature; lower solver.target λ̂".into());
+        let mut session = Session::from_config(self.config.clone())?;
+        if let Some(obs) = &self.observer {
+            session.set_observer(Arc::clone(obs));
         }
-
-        // --- memory-budget planner ------------------------------------------
-        // `auto` resolves to a concrete backend from footprint estimates
-        // derived off the variance pass; explicit backends pass through.
-        let backend = if self.config.cov_backend == "auto" {
-            let plan = plan_backend(&fv, &elim, &self.config);
-            crate::info!("memory planner: {}", plan.describe());
-            plan.backend
-        } else {
-            self.config.cov_backend.clone()
+        let fit = session.fit(LambdaSpec::from_config(&self.config), self.config.num_pcs)?;
+        let (corpus_name, num_docs, vocab_size, nnz, sorted_variances) = {
+            let stats = session.stream()?;
+            (
+                stats.corpus_name.clone(),
+                stats.docs as usize,
+                stats.vocab_size(),
+                stats.nnz,
+                stats.variances.sorted_variances(),
+            )
         };
-
-        // --- pass 2: reduced covariance operator ----------------------------
-        let cov: Box<dyn CovOp> = match backend.as_str() {
-            "disk" => {
-                let dir = if self.config.cache_dir.is_empty() {
-                    // No configured dir: fall back to a stable
-                    // *per-user* location under the system temp dir so
-                    // the cache still reuses across runs without two
-                    // users fighting over one world-writable path.
-                    let user = std::env::var("USER")
-                        .or_else(|_| std::env::var("USERNAME"))
-                        .unwrap_or_else(|_| "default".into());
-                    std::env::temp_dir().join(format!("lsspca_shards_{user}"))
-                } else {
-                    PathBuf::from(&self.config.cache_dir)
-                };
-                // The fallback dir may sit under a shared tmp; keep it
-                // private to this user where the platform supports it.
-                if self.config.cache_dir.is_empty() {
-                    make_private_dir(&dir);
-                }
-                let key = ShardCacheKey {
-                    corpus_digest,
-                    elim_digest: shardcache::elim_digest(&elim),
-                };
-                // A hit is only a hit once every shard verifies: the
-                // operator cannot return errors mid-solve, so a corrupt
-                // or truncated shard must be caught (and the cache
-                // rebuilt) here, not hours into BCA.
-                let opened = match shardcache::open(&dir, &key) {
-                    Ok(Some(man)) => {
-                        match prof.time("shard_verify", || {
-                            shardcache::verify_shards(&dir, &man, self.config.threads)
-                        }) {
-                            Ok(()) => {
-                                crate::info!(
-                                    "shard cache hit: {} shards, nnz={} at {}",
-                                    man.shards.len(),
-                                    man.nnz,
-                                    dir.display()
-                                );
-                                Some(man)
-                            }
-                            Err(e) => {
-                                crate::warn_!("rebuilding shard cache: {e}");
-                                None
-                            }
-                        }
-                    }
-                    Ok(None) => None,
-                    Err(e) => {
-                        crate::warn_!("rebuilding shard cache: {e}");
-                        None
-                    }
-                };
-                let man = match opened {
-                    Some(man) => man,
-                    None => {
-                        let (csr, stats2) = prof.time("gram_pass", || match &synth {
-                            Some(s) => reduced_csr_pass(&mut SynthSource::new(s), &elim, opts),
-                            None => {
-                                let mut src = FileSource::open(&input_path)?;
-                                reduced_csr_pass(&mut src, &elim, opts)
-                            }
-                        })?;
-                        let man = prof.time("shard_write", || {
-                            shardcache::write(
-                                &dir,
-                                &key,
-                                &csr,
-                                stats2.docs,
-                                self.config.shard_mb * 1024 * 1024,
-                            )
-                        })?;
-                        crate::info!(
-                            "shard cache written: {} shards, nnz={} at {}",
-                            man.shards.len(),
-                            man.nnz,
-                            dir.display()
-                        );
-                        man
-                    }
-                };
-                // Cache sized against the *actual* decode wave: an
-                // oversized single-column shard shrinks the row cache
-                // rather than silently blowing the budget.
-                let cache_mb = disk_row_cache_mb(&self.config, man.max_shard_bytes());
-                let disk = DiskGramCov::new(&dir, man, cache_mb, self.config.threads);
-                crate::info!(
-                    "disk covariance backend: row cache {} rows ≤ {} MiB, {} worker threads",
-                    disk.cache_capacity_rows(),
-                    cache_mb,
-                    crate::util::parallel::resolve_threads(self.config.threads)
-                );
-                Box::new(disk)
-            }
-            "gram" => {
-                let (gram, _stats2) = prof.time("gram_pass", || match &synth {
-                    Some(s) => {
-                        gram_pass(&mut SynthSource::new(s), &elim, opts, self.config.row_cache_mb)
-                    }
-                    None => {
-                        let mut src = FileSource::open(&input_path)?;
-                        gram_pass(&mut src, &elim, opts, self.config.row_cache_mb)
-                    }
-                })?;
-                crate::info!(
-                    "gram pass: reduced term matrix nnz={} (row cache {} rows ≤ {} MiB)",
-                    gram.nnz(),
-                    gram.cache_capacity_rows(),
-                    self.config.row_cache_mb
-                );
-                Box::new(gram)
-            }
-            _ => {
-                let (cov, _stats2) = prof.time("covariance_pass", || match &synth {
-                    Some(s) => covariance_pass(&mut SynthSource::new(s), &elim, opts),
-                    None => {
-                        let mut src = FileSource::open(&input_path)?;
-                        covariance_pass(&mut src, &elim, opts)
-                    }
-                })?;
-                Box::new(DenseCov::new(cov))
-            }
-        };
-
-        // --- solve: λ-search + BCA + rank-K deflation ------------------------
-        let mut engine = self.make_engine()?;
-        let scheme = Scheme::parse(&self.config.deflation).ok_or("bad deflation scheme")?;
-        let mut defl = DeflatedCov::new(cov.as_ref());
-        let mut components = Vec::new();
-        for k in 0..self.config.num_pcs {
-            let t = Timer::start();
-            let bca = BcaOptions {
-                max_sweeps: self.config.bca_sweeps,
-                epsilon: self.config.epsilon,
-                tol: 1e-7,
-                // The pipeline never reads the per-sweep history, and on
-                // the gram backend each history point costs a full pass
-                // of Σ-row gathers (frob_with) per sweep.
-                track_history: false,
-                ..Default::default()
-            };
-            // Parallel λ-search. The probe schedule comes from config —
-            // never derived from the thread count — so the pipeline's
-            // numerical results are identical on every machine and for
-            // every `threads` setting; threads only change wall time.
-            // The default (1) is classic bisection, the best per-eval
-            // bracketing for serial runs.
-            let sopts = LambdaSearchOptions {
-                target_card: self.config.target_card,
-                slack: self.config.card_slack,
-                bca,
-                probes_per_round: self.config.lambda_probes,
-                threads: self.config.threads,
-                ..Default::default()
-            };
-            let res = prof.time("lambda_search+bca", || {
-                search_with_engine(&mut *engine, &defl, &sopts)
-            })?;
-            let words: Vec<String> = res
-                .pc
-                .support
-                .iter()
-                .map(|&r| vocab.word(elim.kept[r]))
-                .collect();
-            crate::info!(
-                "PC {}: card={} λ={:.4} φ={:.4} [{}] in {:.2}s",
-                k + 1,
-                res.pc.cardinality(),
-                res.lambda,
-                res.solution.phi,
-                words.join(", "),
-                t.secs()
-            );
-            let explained = defl.quad_form(&res.pc.vector);
-            let certificate_gap = if self.config.certify {
-                let cert = prof.time("certificate", || {
-                    // certify on the survivors of res.lambda (the solve
-                    // space); the eliminated coordinates are provably zero.
-                    // The certificate's eigendecompositions need an
-                    // explicit matrix, so the survivor submatrix is
-                    // materialized here (small: the solve space).
-                    let diags: Vec<f64> = (0..defl.n()).map(|i| defl.diag(i)).collect();
-                    let sub_elim = crate::elim::SafeElimination::apply(&diags, res.lambda, None);
-                    let sub = defl.materialize(&sub_elim.kept);
-                    crate::solver::certificate::certify(&sub, &res.solution.z, res.lambda)
-                });
-                crate::info!(
-                    "PC {} certificate: φ={:.4} ≤ {:.4} (gap {:.2e})",
-                    k + 1,
-                    cert.primal,
-                    cert.upper_bound,
-                    cert.gap
-                );
-                Some(cert.gap)
-            } else {
-                None
-            };
-            prof.time("deflation", || defl.push(scheme, &res.pc.vector));
-            components.push(ComponentReport {
-                lambda: res.lambda,
-                phi: res.solution.phi,
-                explained_variance: explained,
-                words,
-                seconds: t.secs(),
-                pc: res.pc,
-                certificate_gap,
-            });
-        }
-
-        let topic_table = crate::report::topic_table(
-            &components.iter().map(|c| c.pc.clone()).collect::<Vec<_>>(),
-            &vocab,
-            Some(&elim.kept),
-        );
-
-        // --- model artifact: the hand-off to `score` / `serve` ---------------
-        let n_orig = fv.variance.len();
-        let model = crate::model::Model {
-            corpus_name: corpus_name.clone(),
-            num_docs: stats1.docs,
-            n_features: n_orig,
-            vocab_hash: crate::model::vocab_hash(&vocab),
-            seed: self.config.seed,
-            elim_lambda: elim.lambda,
-            kept: elim.kept.clone(),
-            kept_means: elim.kept.iter().map(|&i| fv.mean[i]).collect(),
-            kept_stds: elim.kept.iter().map(|&i| fv.variance[i].sqrt()).collect(),
-            kept_words: elim.kept.iter().map(|&i| vocab.word(i)).collect(),
-            pcs: components
-                .iter()
-                .map(|c| crate::model::ModelPc {
-                    lambda: c.lambda,
-                    phi: c.phi,
-                    explained_variance: c.explained_variance,
-                    loadings: c.pc.mapped(&elim.kept, n_orig).loadings(),
-                })
-                .collect(),
+        let (reduced_size, reduction_factor, elim_lambda, elim_capped) = {
+            let plan = session.eliminate(self.config.target_card)?;
+            (
+                plan.elim.reduced(),
+                plan.elim.reduction_factor(),
+                plan.elim.lambda,
+                plan.capped,
+            )
         };
         if !self.config.save_model.is_empty() {
-            model.save(Path::new(&self.config.save_model))?;
+            fit.model.save(Path::new(&self.config.save_model))?;
             crate::info!("model artifact written to {}", self.config.save_model);
         }
-
         Ok(PipelineReport {
             corpus_name,
-            num_docs: stats1.docs as usize,
-            vocab_size: fv.variance.len(),
-            nnz: stats1.nnz,
-            sorted_variances: fv.sorted_variances(),
-            reduced_size: elim.reduced(),
-            reduction_factor: elim.reduction_factor(),
-            elim_lambda: elim.lambda,
+            num_docs,
+            vocab_size,
+            nnz,
+            sorted_variances,
+            reduced_size,
+            reduction_factor,
+            elim_lambda,
             elim_capped,
-            components,
-            profile: prof.report(),
+            components: fit.components,
+            profile: session.profile(),
             total_seconds: total.secs(),
-            topic_table,
-            model,
+            topic_table: fit.topic_table,
+            model: fit.model,
         })
     }
 }
@@ -617,7 +264,7 @@ impl MemoryPlan {
 /// - **dense**: `(workers + 2) · 8n̂²` — the streaming assembly holds one
 ///   n̂ × n̂ partial accumulator per worker, then Σ plus the solver
 ///   iterate X stay resident.
-/// - **gram**: `24 · nnẑ + row_cache` where `nnẑ = Σ_{j kept}
+/// - **gram**: `24 · nnẑ + row_cache` where `nnẑ = Σ_{j kept}
 ///   min(m, m·μ_j)` bounds the reduced matrix's nonzeros via the
 ///   variance-pass per-feature means (counts ≥ 1 ⇒ doc-frequency ≤
 ///   total count), and 24 bytes/nnz covers the CSR + CSC pair.
@@ -710,36 +357,66 @@ pub fn disk_row_cache_mb(cfg: &PipelineConfig, max_shard_bytes: u64) -> usize {
     cfg.memory_budget_mb.saturating_sub(reserve_mb)
 }
 
-/// Create `dir` (and parents) with user-only permissions where the
-/// platform supports it — the default shard-cache location sits under
-/// a shared temp directory. Errors are deferred to the first write.
-fn make_private_dir(dir: &Path) {
-    #[cfg(unix)]
-    {
-        use std::os::unix::fs::DirBuilderExt;
-        let _ = std::fs::DirBuilder::new().recursive(true).mode(0o700).create(dir);
-    }
-    #[cfg(not(unix))]
-    {
-        let _ = std::fs::create_dir_all(dir);
-    }
-}
-
 /// λ-search where the inner solves run on an [`Engine`].
 pub fn search_with_engine(
     engine: &mut dyn Engine,
     sigma: &dyn CovOp,
     opts: &LambdaSearchOptions,
-) -> Result<crate::solver::lambda::LambdaSearchResult, String> {
+) -> Result<crate::solver::lambda::LambdaSearchResult, LsspcaError> {
+    search_with_engine_observed(engine, sigma, opts, &mut |_| {})
+}
+
+/// [`search_with_engine`] with a per-evaluation callback (the λ-grid
+/// progress feed — see [`crate::solver::lambda::search_observed`]). The
+/// callback cannot change the search result.
+pub fn search_with_engine_observed(
+    engine: &mut dyn Engine,
+    sigma: &dyn CovOp,
+    opts: &LambdaSearchOptions,
+    on_eval: &mut dyn FnMut(&LambdaEval),
+) -> Result<crate::solver::lambda::LambdaSearchResult, LsspcaError> {
     match engine.name() {
         // The native fast path uses the allocation-free direct solver.
-        "native" => Ok(search(sigma, opts)),
+        "native" => Ok(crate::solver::lambda::search_observed(sigma, opts, on_eval)),
         _ => {
             // Engine-generic path: replicate the search but solve via engine.
             let mut eopts = *opts;
             eopts.bca.track_history = false;
-            engine_search(engine, sigma, &eopts)
+            engine_search(engine, sigma, &eopts, on_eval)
         }
+    }
+}
+
+/// One engine-path probe at a fixed λ: per-λ safe elimination
+/// (Thm 2.1, mirroring [`crate::solver::lambda::evaluate`]'s native
+/// logic), [`crate::engine::bca_solve`] on the masked survivor view,
+/// and the lift back to the caller's coordinates. Shared by
+/// [`search_with_engine_observed`]'s bracketing loop and the session's
+/// fixed-λ grid path — the masked-probe logic exists exactly once per
+/// solver path, so the "grid point ≡ search probe" bitwise pin cannot
+/// drift between them. `diags` is Σ's full diagonal, hoisted by the
+/// caller (a search evaluates many probes against the same diagonal,
+/// which is O(k) per entry on a deflated operator).
+pub(crate) fn engine_probe(
+    engine: &mut dyn Engine,
+    sigma: &dyn CovOp,
+    diags: &[f64],
+    lambda: f64,
+    opts: &LambdaSearchOptions,
+) -> Result<(crate::solver::bca::BcaSolution, SparsePc), LsspcaError> {
+    use crate::solver::extract::leading_sparse_pc;
+    let n = sigma.n();
+    let elim = crate::elim::SafeElimination::apply(diags, lambda, None);
+    let use_mask = opts.per_lambda_elim && elim.reduced() != n && elim.reduced() != 0;
+    if !use_mask {
+        let sol = crate::engine::bca_solve(engine, sigma, lambda, &opts.bca)?;
+        let pc = leading_sparse_pc(&sol.z, opts.extract_tol);
+        Ok((sol, pc))
+    } else {
+        let sub = MaskedCov::new(sigma, elim.kept.clone());
+        let sol = crate::engine::bca_solve(engine, &sub, lambda, &opts.bca)?;
+        let pc = leading_sparse_pc(&sol.z, opts.extract_tol).mapped(&elim.kept, n);
+        Ok((sol, pc))
     }
 }
 
@@ -747,9 +424,9 @@ fn engine_search(
     engine: &mut dyn Engine,
     sigma: &dyn CovOp,
     opts: &LambdaSearchOptions,
-) -> Result<crate::solver::lambda::LambdaSearchResult, String> {
-    use crate::solver::extract::leading_sparse_pc;
-    use crate::solver::lambda::{LambdaEval, LambdaSearchResult};
+    on_eval: &mut dyn FnMut(&LambdaEval),
+) -> Result<crate::solver::lambda::LambdaSearchResult, LsspcaError> {
+    use crate::solver::lambda::LambdaSearchResult;
     let n = sigma.n();
     let max_diag = (0..n).map(|i| sigma.diag(i)).fold(0.0f64, f64::max);
     let (mut lo, mut hi) = (0.0f64, max_diag * 0.999);
@@ -759,23 +436,10 @@ fn engine_search(
     let mut best_key = (usize::MAX, f64::NEG_INFINITY);
     let diags: Vec<f64> = (0..n).map(|i| sigma.diag(i)).collect();
     for evals in 0..opts.max_evals {
-        // Per-probe safe elimination (Thm 2.1), mirroring the native
-        // search: solve on the masked survivor view and lift back.
-        let elim = crate::elim::SafeElimination::apply(&diags, lambda, None);
-        let use_mask =
-            opts.per_lambda_elim && elim.reduced() != n && elim.reduced() != 0;
-        let (sol, pc) = if !use_mask {
-            let sol = crate::engine::bca_solve(engine, sigma, lambda, &opts.bca)?;
-            let pc = leading_sparse_pc(&sol.z, opts.extract_tol);
-            (sol, pc)
-        } else {
-            let sub = MaskedCov::new(sigma, elim.kept.clone());
-            let sol = crate::engine::bca_solve(engine, &sub, lambda, &opts.bca)?;
-            let pc = leading_sparse_pc(&sol.z, opts.extract_tol).mapped(&elim.kept, n);
-            (sol, pc)
-        };
+        let (sol, pc) = engine_probe(engine, sigma, &diags, lambda, opts)?;
         let card = pc.cardinality();
         trace.push(LambdaEval { lambda, cardinality: card, phi: sol.phi });
+        on_eval(trace.last().expect("just pushed"));
         let key = (card.abs_diff(opts.target_card), sol.phi);
         if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 > best_key.1) {
             best_key = key;
@@ -795,7 +459,8 @@ fn engine_search(
             break;
         }
     }
-    let (lambda, solution, pc) = best.ok_or("no evaluations")?;
+    let (lambda, solution, pc) =
+        best.ok_or_else(|| LsspcaError::numeric("no evaluations"))?;
     let hit_target = pc.cardinality().abs_diff(opts.target_card) <= opts.slack;
     Ok(LambdaSearchResult { lambda, solution, pc, trace, hit_target })
 }
@@ -803,6 +468,7 @@ fn engine_search(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::corpus::CorpusSpec;
 
     fn tiny_config() -> PipelineConfig {
         PipelineConfig {
@@ -974,5 +640,27 @@ mod tests {
         let (elim, capped) = choose_elimination(&fv, 5, 50);
         assert!(elim.reduced() <= 50);
         assert!(!capped || elim.reduced() == 50);
+    }
+
+    #[test]
+    fn pipeline_run_matches_staged_session_bitwise() {
+        let cfg = tiny_config();
+        let report = Pipeline::new(cfg.clone()).run().unwrap();
+        let mut session = Session::from_config(cfg.clone()).unwrap();
+        session.stream().unwrap();
+        session.eliminate(cfg.target_card).unwrap();
+        session.reduce().unwrap();
+        let fit = session.fit(LambdaSpec::from_config(&cfg), cfg.num_pcs).unwrap();
+        assert_eq!(report.components.len(), fit.components.len());
+        for (a, b) in report.components.iter().zip(&fit.components) {
+            assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+            assert_eq!(a.phi.to_bits(), b.phi.to_bits());
+            assert_eq!(a.pc.support, b.pc.support);
+            for (x, y) in a.pc.vector.iter().zip(&b.pc.vector) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(report.topic_table, fit.topic_table);
+        assert_eq!(report.model, fit.model);
     }
 }

@@ -275,7 +275,7 @@ impl SynthCorpus {
 
     /// Write the corpus in UCI docword format (two deterministic passes:
     /// count then emit). Also writes `<path>.vocab` with the vocabulary.
-    pub fn write_docword(&self, path: &Path) -> Result<DocwordHeader, String> {
+    pub fn write_docword(&self, path: &Path) -> Result<DocwordHeader, crate::error::LsspcaError> {
         // pass 1: count nnz
         let mut nnz = 0usize;
         for d in 0..self.spec.num_docs {

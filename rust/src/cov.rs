@@ -122,7 +122,7 @@ pub fn covariance_pass<S: ChunkSource>(
     source: &mut S,
     elim: &SafeElimination,
     opts: StreamOptions,
-) -> Result<(SymMat, StreamStats), String> {
+) -> Result<(SymMat, StreamStats), crate::error::LsspcaError> {
     let nhat = elim.reduced();
     let lookup = std::sync::Arc::new(reduced_lookup(elim));
     let (acc, stats) = parallel_fold(
@@ -240,7 +240,7 @@ pub fn reduced_csr_pass<S: ChunkSource>(
     source: &mut S,
     elim: &SafeElimination,
     opts: StreamOptions,
-) -> Result<(CsrMatrix, StreamStats), String> {
+) -> Result<(CsrMatrix, StreamStats), crate::error::LsspcaError> {
     let nhat = elim.reduced();
     let lookup = std::sync::Arc::new(reduced_lookup(elim));
     let (acc, stats) = parallel_fold(
@@ -270,7 +270,7 @@ pub fn gram_pass<S: ChunkSource>(
     elim: &SafeElimination,
     opts: StreamOptions,
     cache_mb: usize,
-) -> Result<(GramCov, StreamStats), String> {
+) -> Result<(GramCov, StreamStats), crate::error::LsspcaError> {
     let (csr, stats) = reduced_csr_pass(source, elim, opts)?;
     Ok((GramCov::new(csr, stats.docs, cache_mb), stats))
 }

@@ -88,7 +88,7 @@ impl DiskGramCov {
         key: &ShardCacheKey,
         cache_mb: usize,
         threads: usize,
-    ) -> Result<Option<DiskGramCov>, String> {
+    ) -> Result<Option<DiskGramCov>, crate::error::LsspcaError> {
         Ok(shardcache::open(dir, key)?.map(|man| DiskGramCov::new(dir, man, cache_mb, threads)))
     }
 
@@ -314,7 +314,7 @@ pub fn disk_twin_of(
     shard_bytes: usize,
     cache_mb: usize,
     threads: usize,
-) -> Result<(GramCov, DiskGramCov), String> {
+) -> Result<(GramCov, DiskGramCov), crate::error::LsspcaError> {
     let man = shardcache::write(dir, key, csr, total_docs, shard_bytes)?;
     let disk = DiskGramCov::new(dir, man, cache_mb, threads);
     Ok((GramCov::new(csr.clone(), total_docs, cache_mb), disk))

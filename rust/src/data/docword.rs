@@ -18,6 +18,7 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
+use crate::error::LsspcaError;
 use crate::util::gzip::{GzDecoder, GzEncoder};
 
 /// Header of a docword file.
@@ -79,17 +80,20 @@ pub struct DocwordReader {
 
 impl DocwordReader {
     /// Open a (possibly gzipped) docword file and parse the header.
-    pub fn open(path: &Path) -> Result<DocwordReader, String> {
-        let reader = open_maybe_gz(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+    /// A filesystem failure is [`LsspcaError::Io`]; a present-but-
+    /// malformed header is [`LsspcaError::Corpus`].
+    pub fn open(path: &Path) -> Result<DocwordReader, LsspcaError> {
+        let reader = open_maybe_gz(path)
+            .map_err(|e| LsspcaError::io_at(path, format!("open docword: {e}")))?;
         let mut lines = reader.lines();
-        let mut next_header = |what: &str| -> Result<usize, String> {
+        let mut next_header = |what: &str| -> Result<usize, LsspcaError> {
             let line = lines
                 .next()
-                .ok_or_else(|| format!("truncated header: missing {what}"))?
-                .map_err(|e| format!("read error in header: {e}"))?;
+                .ok_or_else(|| LsspcaError::corpus(format!("truncated header: missing {what}")))?
+                .map_err(|e| LsspcaError::corpus(format!("read error in header: {e}")))?;
             line.trim()
                 .parse::<usize>()
-                .map_err(|_| format!("bad {what} line: '{line}'"))
+                .map_err(|_| LsspcaError::corpus(format!("bad {what} line: '{line}'")))
         };
         let num_docs = next_header("D")?;
         let vocab_size = next_header("W")?;
@@ -108,12 +112,12 @@ impl DocwordReader {
         self.header
     }
 
-    fn next_triple(&mut self) -> Result<Option<(usize, u32, f64)>, String> {
+    fn next_triple(&mut self) -> Result<Option<(usize, u32, f64)>, LsspcaError> {
         if let Some(t) = self.pending.take() {
             return Ok(Some(t));
         }
         for line in self.lines.by_ref() {
-            let line = line.map_err(|e| format!("read error: {e}"))?;
+            let line = line.map_err(|e| LsspcaError::corpus(format!("read error: {e}")))?;
             let trimmed = line.trim();
             if trimmed.is_empty() {
                 continue;
@@ -122,23 +126,23 @@ impl DocwordReader {
             let doc: usize = it
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| format!("bad docID in line '{trimmed}'"))?;
+                .ok_or_else(|| LsspcaError::corpus(format!("bad docID in line '{trimmed}'")))?;
             let word: usize = it
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| format!("bad wordID in line '{trimmed}'"))?;
+                .ok_or_else(|| LsspcaError::corpus(format!("bad wordID in line '{trimmed}'")))?;
             let count: f64 = it
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| format!("bad count in line '{trimmed}'"))?;
+                .ok_or_else(|| LsspcaError::corpus(format!("bad count in line '{trimmed}'")))?;
             if doc == 0 || word == 0 {
-                return Err(format!("ids are 1-based; got line '{trimmed}'"));
+                return Err(LsspcaError::corpus(format!("ids are 1-based; got line '{trimmed}'")));
             }
             if word > self.header.vocab_size {
-                return Err(format!(
+                return Err(LsspcaError::corpus(format!(
                     "wordID {word} exceeds W={} in line '{trimmed}'",
                     self.header.vocab_size
-                ));
+                )));
             }
             self.nnz_seen += 1;
             return Ok(Some((doc - 1, (word - 1) as u32, count)));
@@ -149,7 +153,7 @@ impl DocwordReader {
     /// Read the next chunk of up to `max_docs` documents. Returns `None` at
     /// end of stream. Triples for one document must be contiguous (UCI files
     /// are sorted by docID).
-    pub fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String> {
+    pub fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
         assert!(max_docs > 0);
         let mut chunk = DocChunk::default();
         let mut cur: Option<Doc> = None;
@@ -237,20 +241,25 @@ pub struct DocwordWriter {
 
 impl DocwordWriter {
     /// Create the file and write the three-line header.
-    pub fn create(path: &Path, header: DocwordHeader) -> Result<DocwordWriter, String> {
-        let f = File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+    pub fn create(path: &Path, header: DocwordHeader) -> Result<DocwordWriter, LsspcaError> {
+        let f = File::create(path)
+            .map_err(|e| LsspcaError::io_at(path, format!("create docword: {e}")))?;
         let mut out = if path.extension().is_some_and(|e| e == "gz") {
             DocOut::Gz(BufWriter::with_capacity(1 << 20, GzEncoder::new(f)))
         } else {
             DocOut::Plain(BufWriter::with_capacity(1 << 20, f))
         };
         write!(out, "{}\n{}\n{}\n", header.num_docs, header.vocab_size, header.nnz)
-            .map_err(|e| format!("write header: {e}"))?;
+            .map_err(|e| LsspcaError::io(format!("write header: {e}")))?;
         Ok(DocwordWriter { out, nnz_written: 0, declared: header })
     }
 
     /// Write one document's `(word_id_0based, count)` pairs.
-    pub fn write_doc(&mut self, doc_id_0based: usize, words: &[(u32, f64)]) -> Result<(), String> {
+    pub fn write_doc(
+        &mut self,
+        doc_id_0based: usize,
+        words: &[(u32, f64)],
+    ) -> Result<(), LsspcaError> {
         for &(w, c) in words {
             // counts in UCI files are integers; keep integer formatting when exact
             if c.fract() == 0.0 {
@@ -258,7 +267,7 @@ impl DocwordWriter {
             } else {
                 writeln!(self.out, "{} {} {}", doc_id_0based + 1, w + 1, c)
             }
-            .map_err(|e| format!("write doc: {e}"))?;
+            .map_err(|e| LsspcaError::io(format!("write doc: {e}")))?;
             self.nnz_written += 1;
         }
         Ok(())
@@ -266,20 +275,23 @@ impl DocwordWriter {
 
     /// Verify the declared nnz, then flush and finalize (the gzip trailer
     /// is written here, with errors surfaced, not in a silent Drop).
-    pub fn finish(self) -> Result<(), String> {
+    pub fn finish(self) -> Result<(), LsspcaError> {
         if self.nnz_written != self.declared.nnz {
-            return Err(format!(
+            return Err(LsspcaError::io(format!(
                 "nnz mismatch: declared {} wrote {}",
                 self.declared.nnz, self.nnz_written
-            ));
+            )));
         }
         match self.out {
-            DocOut::Plain(mut w) => w.flush().map_err(|e| format!("flush: {e}"))?,
+            DocOut::Plain(mut w) => {
+                w.flush().map_err(|e| LsspcaError::io(format!("flush: {e}")))?
+            }
             DocOut::Gz(w) => {
                 let enc = w
                     .into_inner()
-                    .map_err(|e| format!("flush gzip buffer: {e}"))?;
-                enc.finish().map_err(|e| format!("finalize gzip stream: {e}"))?;
+                    .map_err(|e| LsspcaError::io(format!("flush gzip buffer: {e}")))?;
+                enc.finish()
+                    .map_err(|e| LsspcaError::io(format!("finalize gzip stream: {e}")))?;
             }
         }
         Ok(())

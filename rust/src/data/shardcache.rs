@@ -51,6 +51,7 @@ use std::path::{Path, PathBuf};
 
 use crate::data::sparse::CsrMatrix;
 use crate::elim::SafeElimination;
+use crate::error::LsspcaError;
 use crate::util::xor_fold_checksum as checksum;
 
 const MANIFEST_MAGIC: &[u8; 4] = b"LSSM";
@@ -199,26 +200,27 @@ impl<'a> Reader<'a> {
         Reader { buf, pos: 0 }
     }
 
-    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8], LsspcaError> {
         let end = self
             .pos
             .checked_add(len)
             .filter(|&e| e <= self.buf.len())
-            .ok_or("shard cache: truncated payload")?;
+            .ok_or_else(|| LsspcaError::cache("shard cache: truncated payload"))?;
         let s = &self.buf[self.pos..end];
         self.pos = end;
         Ok(s)
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    fn u64(&mut self) -> Result<u64, LsspcaError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn usize(&mut self) -> Result<usize, String> {
-        usize::try_from(self.u64()?).map_err(|_| "shard cache: length overflows usize".into())
+    fn usize(&mut self) -> Result<usize, LsspcaError> {
+        usize::try_from(self.u64()?)
+            .map_err(|_| LsspcaError::cache("shard cache: length overflows usize"))
     }
 
-    fn f64(&mut self) -> Result<f64, String> {
+    fn f64(&mut self) -> Result<f64, LsspcaError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
@@ -228,38 +230,48 @@ impl<'a> Reader<'a> {
 }
 
 /// Frame a payload (magic + version + payload + checksum) and write it.
-fn write_framed(path: &Path, magic: &[u8; 4], payload: &[u8]) -> Result<(), String> {
+fn write_framed(path: &Path, magic: &[u8; 4], payload: &[u8]) -> Result<(), LsspcaError> {
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| LsspcaError::cache(format!("mkdir {}: {e}", dir.display())))?;
     }
     let sum = checksum(payload);
-    let mut f =
-        std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
-    f.write_all(magic).map_err(|e| e.to_string())?;
-    f.write_all(&VERSION.to_le_bytes()).map_err(|e| e.to_string())?;
-    f.write_all(payload).map_err(|e| e.to_string())?;
-    f.write_all(&sum.to_le_bytes()).map_err(|e| e.to_string())?;
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| LsspcaError::cache(format!("create {}: {e}", path.display())))?;
+    f.write_all(magic).map_err(|e| LsspcaError::cache(e.to_string()))?;
+    f.write_all(&VERSION.to_le_bytes()).map_err(|e| LsspcaError::cache(e.to_string()))?;
+    f.write_all(payload).map_err(|e| LsspcaError::cache(e.to_string()))?;
+    f.write_all(&sum.to_le_bytes()).map_err(|e| LsspcaError::cache(e.to_string()))?;
     Ok(())
 }
 
 /// Read a framed file back, verifying magic, version and checksum.
 /// Returns the payload bytes.
-fn read_framed(path: &Path, magic: &[u8; 4], what: &str) -> Result<Vec<u8>, String> {
-    let mut f =
-        std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+fn read_framed(path: &Path, magic: &[u8; 4], what: &str) -> Result<Vec<u8>, LsspcaError> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| LsspcaError::cache(format!("open {}: {e}", path.display())))?;
     let mut buf = Vec::new();
-    f.read_to_end(&mut buf).map_err(|e| e.to_string())?;
+    f.read_to_end(&mut buf).map_err(|e| LsspcaError::cache(e.to_string()))?;
     if buf.len() < 16 || &buf[..4] != magic {
-        return Err(format!("{what} {}: bad magic or truncated header", path.display()));
+        return Err(LsspcaError::cache(format!(
+            "{what} {}: bad magic or truncated header",
+            path.display()
+        )));
     }
     let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
     if version != VERSION {
-        return Err(format!("{what} {}: version {version}, want {VERSION}", path.display()));
+        return Err(LsspcaError::cache(format!(
+            "{what} {}: version {version}, want {VERSION}",
+            path.display()
+        )));
     }
     let payload = &buf[8..buf.len() - 8];
     let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
     if checksum(payload) != stored {
-        return Err(format!("{what} {}: checksum mismatch (corrupt file)", path.display()));
+        return Err(LsspcaError::cache(format!(
+            "{what} {}: checksum mismatch (corrupt file)",
+            path.display()
+        )));
     }
     Ok(payload.to_vec())
 }
@@ -333,7 +345,7 @@ pub fn write(
     csr: &CsrMatrix,
     total_docs: u64,
     shard_bytes: usize,
-) -> Result<ShardManifest, String> {
+) -> Result<ShardManifest, LsspcaError> {
     let nhat = csr.cols;
     // The one shared definition of the mean/diagonal folds — bitwise
     // equality with GramCov holds by construction, not by transcription.
@@ -383,7 +395,7 @@ pub fn write(
     Ok(manifest)
 }
 
-fn write_manifest(dir: &Path, man: &ShardManifest) -> Result<(), String> {
+fn write_manifest(dir: &Path, man: &ShardManifest) -> Result<(), LsspcaError> {
     let mut payload = Vec::new();
     put_u64(&mut payload, man.key.corpus_digest);
     put_u64(&mut payload, man.key.elim_digest);
@@ -414,7 +426,7 @@ fn write_manifest(dir: &Path, man: &ShardManifest) -> Result<(), String> {
 ///
 /// Shard payloads are *not* read here; [`load_shard`] verifies each one
 /// on first touch.
-pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, String> {
+pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, LsspcaError> {
     let path = manifest_path(dir, key);
     if !path.exists() {
         return Ok(None);
@@ -423,7 +435,7 @@ pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, St
     let mut r = Reader::new(&payload);
     let stored = ShardCacheKey { corpus_digest: r.u64()?, elim_digest: r.u64()? };
     if stored != *key {
-        return Err(format!(
+        return Err(LsspcaError::cache(format!(
             "shard manifest {}: key mismatch (stored {:016x}/{:016x}, want {:016x}/{:016x}) \
              — stale cache",
             path.display(),
@@ -431,7 +443,7 @@ pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, St
             stored.elim_digest,
             key.corpus_digest,
             key.elim_digest
-        ));
+        )));
     }
     let total_docs = r.u64()?;
     let rows = r.usize()?;
@@ -440,7 +452,7 @@ pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, St
     let shard_bytes = r.usize()?;
     let nshards = r.usize()?;
     if nshards > payload.len() || nhat > payload.len() {
-        return Err("shard manifest: implausible shard or column count".into());
+        return Err(LsspcaError::cache("shard manifest: implausible shard or column count"));
     }
     let mut shards = Vec::with_capacity(nshards);
     for _ in 0..nshards {
@@ -460,20 +472,20 @@ pub fn open(dir: &Path, key: &ShardCacheKey) -> Result<Option<ShardManifest>, St
         diag.push(r.f64()?);
     }
     if !r.done() {
-        return Err("shard manifest: trailing bytes (corrupt file)".into());
+        return Err(LsspcaError::cache("shard manifest: trailing bytes (corrupt file)"));
     }
     // Structural sanity: shard ranges must tile 0..nhat in order.
     let mut expect = 0;
     let mut sum_nnz = 0;
     for s in &shards {
         if s.col_start != expect {
-            return Err("shard manifest: shard ranges do not tile the columns".into());
+            return Err(LsspcaError::cache("shard manifest: shard ranges do not tile the columns"));
         }
         expect += s.ncols;
         sum_nnz += s.nnz;
     }
     if expect != nhat || sum_nnz != nnz {
-        return Err("shard manifest: shard ranges inconsistent with shape".into());
+        return Err(LsspcaError::cache("shard manifest: shard ranges inconsistent with shape"));
     }
     Ok(Some(ShardManifest {
         key: *key,
@@ -496,18 +508,20 @@ pub fn load_shard(
     dir: &Path,
     man: &ShardManifest,
     idx: usize,
-) -> Result<ShardBlock, String> {
+) -> Result<ShardBlock, LsspcaError> {
     let meta = man
         .shards
         .get(idx)
-        .ok_or_else(|| format!("shard cache: shard index {idx} out of range"))?;
+        .ok_or_else(|| {
+            LsspcaError::cache(format!("shard cache: shard index {idx} out of range"))
+        })?;
     let path = shard_path(dir, &man.key, idx);
     let payload = read_framed(&path, SHARD_MAGIC, "shard")?;
     if checksum(&payload) != meta.checksum {
-        return Err(format!(
+        return Err(LsspcaError::cache(format!(
             "shard {}: checksum disagrees with manifest — stale shard file",
             path.display()
-        ));
+        )));
     }
     let mut r = Reader::new(&payload);
     let stored = ShardCacheKey { corpus_digest: r.u64()?, elim_digest: r.u64()? };
@@ -523,10 +537,10 @@ pub fn load_shard(
         || rows != man.rows
         || nnz != meta.nnz
     {
-        return Err(format!(
+        return Err(LsspcaError::cache(format!(
             "shard {}: header disagrees with manifest — stale shard file",
             path.display()
-        ));
+        )));
     }
     let mut colptr = Vec::with_capacity(ncols + 1);
     for _ in 0..=ncols {
@@ -541,18 +555,30 @@ pub fn load_shard(
         values.push(r.f64()?);
     }
     if !r.done() {
-        return Err(format!("shard {}: trailing bytes (corrupt file)", path.display()));
+        return Err(LsspcaError::cache(format!(
+            "shard {}: trailing bytes (corrupt file)",
+            path.display()
+        )));
     }
     if colptr.first() != Some(&0) || colptr.last() != Some(&nnz) {
-        return Err(format!("shard {}: bad column pointers", path.display()));
+        return Err(LsspcaError::cache(format!(
+            "shard {}: bad column pointers",
+            path.display()
+        )));
     }
     for w in colptr.windows(2) {
         if w[0] > w[1] {
-            return Err(format!("shard {}: column pointers not monotone", path.display()));
+            return Err(LsspcaError::cache(format!(
+                "shard {}: column pointers not monotone",
+                path.display()
+            )));
         }
     }
     if rowidx.iter().any(|&doc| doc as usize >= rows) {
-        return Err(format!("shard {}: row index out of range", path.display()));
+        return Err(LsspcaError::cache(format!(
+            "shard {}: row index out of range",
+            path.display()
+        )));
     }
     Ok(ShardBlock { col_start, ncols, rows, colptr, rowidx, values })
 }
@@ -578,7 +604,7 @@ impl ShardManifest {
 /// [`crate::cov_disk::DiskGramCov`] cannot return errors mid-kernel, so
 /// a bad shard discovered there panics, while a bad shard discovered
 /// here lets the caller rebuild.
-pub fn verify_shards(dir: &Path, man: &ShardManifest, threads: usize) -> Result<(), String> {
+pub fn verify_shards(dir: &Path, man: &ShardManifest, threads: usize) -> Result<(), LsspcaError> {
     let results = crate::util::parallel::par_map_indexed(threads, man.shards.len(), |idx| {
         load_shard(dir, man, idx).map(|_| ())
     });
@@ -688,7 +714,8 @@ mod tests {
         bytes[mid] ^= 0xFF;
         std::fs::write(&path, &bytes).unwrap();
         let err = open(&dir, &k).unwrap_err();
-        assert!(err.contains("checksum"), "{err}");
+        assert!(matches!(err, LsspcaError::Cache { .. }));
+        assert!(err.to_string().contains("checksum"), "{err}");
         // truncation also rejected
         std::fs::write(&path, &bytes[..10]).unwrap();
         assert!(open(&dir, &k).is_err());
@@ -706,7 +733,7 @@ mod tests {
         // dropped at the new key's path
         std::fs::rename(manifest_path(&dir, &k_old), manifest_path(&dir, &k_new)).unwrap();
         let err = open(&dir, &k_new).unwrap_err();
-        assert!(err.contains("stale"), "{err}");
+        assert!(err.to_string().contains("stale"), "{err}");
     }
 
     #[test]
@@ -777,7 +804,7 @@ mod tests {
         // drop shard 0 from the old write next to the new manifest
         std::fs::write(shard_path(&dir, &k, 0), &shard0_a).unwrap();
         let err = load_shard(&dir, &man_b, 0).unwrap_err();
-        assert!(err.contains("stale"), "{err}");
+        assert!(err.to_string().contains("stale"), "{err}");
     }
 
     #[test]

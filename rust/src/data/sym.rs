@@ -31,15 +31,22 @@ impl SymMat {
     }
 
     /// Build from a full row-major buffer, verifying symmetry.
-    pub fn from_rows(n: usize, data: Vec<f64>) -> Result<SymMat, String> {
+    pub fn from_rows(n: usize, data: Vec<f64>) -> Result<SymMat, crate::error::LsspcaError> {
+        use crate::error::LsspcaError;
         if data.len() != n * n {
-            return Err(format!("expected {} elements, got {}", n * n, data.len()));
+            return Err(LsspcaError::numeric(format!(
+                "expected {} elements, got {}",
+                n * n,
+                data.len()
+            )));
         }
         for i in 0..n {
             for j in (i + 1)..n {
                 let (a, b) = (data[i * n + j], data[j * n + i]);
                 if (a - b).abs() > 1e-9 * (1.0 + a.abs().max(b.abs())) {
-                    return Err(format!("not symmetric at ({i},{j}): {a} vs {b}"));
+                    return Err(LsspcaError::numeric(format!(
+                        "not symmetric at ({i},{j}): {a} vs {b}"
+                    )));
                 }
             }
         }

@@ -4,6 +4,8 @@
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+use crate::error::LsspcaError;
+
 /// An ordered vocabulary with reverse lookup.
 #[derive(Clone, Debug, Default)]
 pub struct Vocab {
@@ -17,21 +19,23 @@ impl Vocab {
     }
 
     /// Load from a one-word-per-line file.
-    pub fn load(path: &Path) -> Result<Vocab, String> {
-        let f = std::fs::File::open(path).map_err(|e| format!("open {}: {e}", path.display()))?;
+    pub fn load(path: &Path) -> Result<Vocab, LsspcaError> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| LsspcaError::io_at(path, format!("open vocab: {e}")))?;
         let mut words = Vec::new();
         for line in BufReader::new(f).lines() {
-            let line = line.map_err(|e| format!("read {}: {e}", path.display()))?;
+            let line = line.map_err(|e| LsspcaError::io_at(path, format!("read vocab: {e}")))?;
             words.push(line.trim().to_string());
         }
         Ok(Vocab { words })
     }
 
     /// Save one word per line.
-    pub fn save(&self, path: &Path) -> Result<(), String> {
-        let mut f = std::fs::File::create(path).map_err(|e| format!("create {}: {e}", path.display()))?;
+    pub fn save(&self, path: &Path) -> Result<(), LsspcaError> {
+        let mut f = std::fs::File::create(path)
+            .map_err(|e| LsspcaError::io_at(path, format!("create vocab: {e}")))?;
         for w in &self.words {
-            writeln!(f, "{w}").map_err(|e| format!("write: {e}"))?;
+            writeln!(f, "{w}").map_err(|e| LsspcaError::io_at(path, format!("write vocab: {e}")))?;
         }
         Ok(())
     }

@@ -24,6 +24,7 @@ use std::path::Path;
 
 use crate::covop::CovOp;
 use crate::data::SymMat;
+use crate::error::LsspcaError;
 #[cfg(feature = "xla")]
 use crate::runtime::{Runtime, TensorF64};
 use crate::solver::bca::{self, BcaOptions, BcaSolution, SolverWorkspace};
@@ -54,13 +55,17 @@ pub trait Engine {
         lambda: f64,
         beta: f64,
         opts: &BcaOptions,
-    ) -> Result<f64, String>;
+    ) -> Result<f64, LsspcaError>;
 
     /// `iters` rounds of power iteration from `v0`; returns (vector, value).
-    fn power_iter(&mut self, sigma: &dyn CovOp, v0: &[f64]) -> Result<(Vec<f64>, f64), String>;
+    fn power_iter(
+        &mut self,
+        sigma: &dyn CovOp,
+        v0: &[f64],
+    ) -> Result<(Vec<f64>, f64), LsspcaError>;
 
     /// Gram matrix `AᵀA/m` of a dense row-major `m × n` block.
-    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
+    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, LsspcaError> {
         let _ = self.name();
         Ok(SymMat::gram(m_rows, n, data))
     }
@@ -72,7 +77,7 @@ pub trait Engine {
         m_rows: usize,
         n: usize,
         data: &[f64],
-    ) -> Result<(Vec<f64>, Vec<f64>), String> {
+    ) -> Result<(Vec<f64>, Vec<f64>), LsspcaError> {
         let _ = self.name();
         assert_eq!(data.len(), m_rows * n);
         let mut s = vec![0.0; n];
@@ -97,7 +102,7 @@ pub fn bca_solve(
     sigma: &dyn CovOp,
     lambda: f64,
     opts: &BcaOptions,
-) -> Result<BcaSolution, String> {
+) -> Result<BcaSolution, LsspcaError> {
     engine.begin_solve();
     let dense_holder;
     let sigma: &dyn CovOp = if engine.requires_dense() && sigma.as_dense().is_none() {
@@ -156,7 +161,7 @@ impl Engine for NativeEngine {
         lambda: f64,
         beta: f64,
         opts: &BcaOptions,
-    ) -> Result<f64, String> {
+    ) -> Result<f64, LsspcaError> {
         let n = x.n();
         let ws = match &mut self.workspace {
             Some(w) if w.n() == n => w,
@@ -168,11 +173,15 @@ impl Engine for NativeEngine {
         Ok(bca::sweep_ws(x, sigma, lambda, beta, opts, ws))
     }
 
-    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
+    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, LsspcaError> {
         Ok(crate::cov::gram_parallel(m_rows, n, data, self.threads))
     }
 
-    fn power_iter(&mut self, sigma: &dyn CovOp, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
+    fn power_iter(
+        &mut self,
+        sigma: &dyn CovOp,
+        v0: &[f64],
+    ) -> Result<(Vec<f64>, f64), LsspcaError> {
         let n = sigma.n();
         assert_eq!(v0.len(), n);
         let mut v = v0.to_vec();
@@ -215,19 +224,20 @@ pub struct XlaEngine {
 #[cfg(feature = "xla")]
 impl XlaEngine {
     /// Load all artifacts from a directory (run `make artifacts` first).
-    pub fn load(dir: &Path) -> Result<XlaEngine, String> {
-        let mut rt = Runtime::new().map_err(|e| format!("{e:#}"))?;
-        rt.load_dir(dir).map_err(|e| format!("{e:#}"))?;
+    pub fn load(dir: &Path) -> Result<XlaEngine, LsspcaError> {
+        let mut rt = Runtime::new().map_err(|e| LsspcaError::io(format!("{e:#}")))?;
+        rt.load_dir(dir).map_err(|e| LsspcaError::io(format!("{e:#}")))?;
         Ok(XlaEngine { rt })
     }
 
     /// Smallest compiled size ≥ n.
-    pub fn padded_size(n: usize) -> Result<usize, String> {
-        XLA_SIZES
-            .iter()
-            .copied()
-            .find(|&s| s >= n)
-            .ok_or_else(|| format!("problem size {n} exceeds largest artifact {}", XLA_SIZES[4]))
+    pub fn padded_size(n: usize) -> Result<usize, LsspcaError> {
+        XLA_SIZES.iter().copied().find(|&s| s >= n).ok_or_else(|| {
+            LsspcaError::numeric(format!(
+                "problem size {n} exceeds largest artifact {}",
+                XLA_SIZES[4]
+            ))
+        })
     }
 
     /// Match the kernel's fixed inner-iteration budget on the native side
@@ -257,10 +267,10 @@ impl Engine for XlaEngine {
         lambda: f64,
         beta: f64,
         _opts: &BcaOptions,
-    ) -> Result<f64, String> {
-        let sigma = sigma
-            .as_dense()
-            .ok_or_else(|| "xla engine needs a dense covariance (see bca_solve)".to_string())?;
+    ) -> Result<f64, LsspcaError> {
+        let sigma = sigma.as_dense().ok_or_else(|| {
+            LsspcaError::numeric("xla engine needs a dense covariance (see bca_solve)")
+        })?;
         let n = x.n();
         let np = Self::padded_size(n)?;
         let name = format!("bca_sweep_n{np}");
@@ -277,10 +287,14 @@ impl Engine for XlaEngine {
                     TensorF64::scalar(beta),
                 ],
             )
-            .map_err(|e| format!("{e:#}"))?;
+            .map_err(|e| LsspcaError::numeric(format!("{e:#}")))?;
         let new_x = &out[0];
         if new_x.len() != np * np {
-            return Err(format!("artifact returned {} values, want {}", new_x.len(), np * np));
+            return Err(LsspcaError::numeric(format!(
+                "artifact returned {} values, want {}",
+                new_x.len(),
+                np * np
+            )));
         }
         // Copy the active block back, tracking the largest change.
         let mut max_delta = 0.0f64;
@@ -303,7 +317,11 @@ impl Engine for XlaEngine {
         Ok(max_delta)
     }
 
-    fn power_iter(&mut self, sigma: &dyn CovOp, v0: &[f64]) -> Result<(Vec<f64>, f64), String> {
+    fn power_iter(
+        &mut self,
+        sigma: &dyn CovOp,
+        v0: &[f64],
+    ) -> Result<(Vec<f64>, f64), LsspcaError> {
         let dense_holder;
         let sigma: &SymMat = match sigma.as_dense() {
             Some(d) => d,
@@ -327,7 +345,7 @@ impl Engine for XlaEngine {
                     TensorF64::new(v0p, &[np]),
                 ],
             )
-            .map_err(|e| format!("{e:#}"))?;
+            .map_err(|e| LsspcaError::numeric(format!("{e:#}")))?;
         let mut v = out[0].clone();
         v.truncate(n);
         let value = out[1][0];
@@ -339,11 +357,13 @@ impl Engine for XlaEngine {
         m_rows: usize,
         n: usize,
         data: &[f64],
-    ) -> Result<(Vec<f64>, Vec<f64>), String> {
+    ) -> Result<(Vec<f64>, Vec<f64>), LsspcaError> {
         assert_eq!(data.len(), m_rows * n);
         let (bm, bn) = XLA_MOMENTS_BLOCK;
         if n > bn {
-            return Err(format!("col_moments block supports n ≤ {bn}, got {n}"));
+            return Err(LsspcaError::numeric(format!(
+                "col_moments block supports n ≤ {bn}, got {n}"
+            )));
         }
         let name = format!("col_moments_b{bm}x{bn}");
         let mut s = vec![0.0f64; n];
@@ -359,7 +379,7 @@ impl Engine for XlaEngine {
             let out = self
                 .rt
                 .execute(&name, &[TensorF64::new(block, &[bm, bn])])
-                .map_err(|e| format!("{e:#}"))?;
+                .map_err(|e| LsspcaError::numeric(format!("{e:#}")))?;
             for j in 0..n {
                 s[j] += out[0][j];
                 ss[j] += out[1][j];
@@ -369,11 +389,13 @@ impl Engine for XlaEngine {
         Ok((s, ss))
     }
 
-    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, String> {
+    fn gram(&mut self, m_rows: usize, n: usize, data: &[f64]) -> Result<SymMat, LsspcaError> {
         assert_eq!(data.len(), m_rows * n);
         let (bm, bn) = XLA_GRAM_BLOCK;
         if n > bn {
-            return Err(format!("gram block supports n ≤ {bn}, got {n}"));
+            return Err(LsspcaError::numeric(format!(
+                "gram block supports n ≤ {bn}, got {n}"
+            )));
         }
         let name = format!("gram_b{bm}x{bn}");
         // Accumulate AᵀA over zero-padded row blocks.
@@ -389,7 +411,7 @@ impl Engine for XlaEngine {
             let out = self
                 .rt
                 .execute(&name, &[TensorF64::new(block, &[bm, bn])])
-                .map_err(|e| format!("{e:#}"))?;
+                .map_err(|e| LsspcaError::numeric(format!("{e:#}")))?;
             for (a, b) in acc.iter_mut().zip(&out[0]) {
                 *a += b;
             }

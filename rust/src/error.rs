@@ -1,0 +1,234 @@
+//! The crate-wide structured error type.
+//!
+//! Every fallible operation on the public surface returns
+//! [`LsspcaError`] instead of a bare `String`, so library callers can
+//! *match* on failure classes (retry a cache rebuild, surface a config
+//! typo to the user, alert on numeric trouble) and the CLI can map each
+//! class to a distinct process exit code (see [`LsspcaError::exit_code`]).
+//!
+//! The variants mirror the system's layers:
+//!
+//! | variant    | layer                                        | exit code |
+//! |------------|----------------------------------------------|-----------|
+//! | `Config`   | TOML / builder / CLI-flag validation         | 2         |
+//! | `Io`       | filesystem + model-artifact I/O              | 3         |
+//! | `Cache`    | variance checkpoints + covariance shard cache| 4         |
+//! | `Numeric`  | solver / engine failures                     | 5         |
+//! | `Corpus`   | docword ingestion + streaming passes         | 6         |
+//! | `Serve`    | the HTTP scoring server                      | 7         |
+//!
+//! `LsspcaError` implements [`std::error::Error`], so it composes with
+//! `Box<dyn Error>`, `anyhow`-style consumers and `?` in `main`.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Structured error for every fallible operation in the crate.
+///
+/// Construct via the per-variant helpers ([`LsspcaError::config`],
+/// [`LsspcaError::io`], …) rather than the variants directly — the
+/// helpers take anything `Into<String>` and keep call sites short.
+#[derive(Clone, Debug)]
+pub enum LsspcaError {
+    /// Invalid configuration: unparsable TOML, bad flag values, or knob
+    /// combinations the pipeline rejects up front.
+    Config {
+        /// What was wrong, naming the offending `[section] key` or flag.
+        message: String,
+    },
+    /// Filesystem failure or a malformed on-disk artifact (docword
+    /// write, vocab file, model artifact, report output).
+    Io {
+        /// The file the operation touched, when known.
+        path: Option<PathBuf>,
+        /// The underlying failure.
+        message: String,
+    },
+    /// Corpus ingestion problems: an unreadable or format-violating
+    /// docword stream, or a streaming-pass worker failure.
+    Corpus {
+        /// What went wrong while streaming the corpus.
+        message: String,
+    },
+    /// Cache-layer problems: a stale, corrupt or truncated variance
+    /// checkpoint or covariance shard cache.
+    Cache {
+        /// Which cache object failed which integrity check.
+        message: String,
+    },
+    /// Numerical / solver-layer failure: an engine that cannot run the
+    /// requested problem, or a dimension mismatch reaching the solver.
+    Numeric {
+        /// What the solver layer rejected.
+        message: String,
+    },
+    /// Scoring-server failure: bind/accept errors or invalid serve
+    /// options.
+    Serve {
+        /// What the server could not do.
+        message: String,
+    },
+}
+
+impl LsspcaError {
+    /// A [`LsspcaError::Config`] with the given message.
+    pub fn config(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Config { message: message.into() }
+    }
+
+    /// A [`LsspcaError::Io`] with no path context (the message usually
+    /// already embeds one).
+    pub fn io(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Io { path: None, message: message.into() }
+    }
+
+    /// A [`LsspcaError::Io`] carrying the file it concerns.
+    pub fn io_at(path: impl AsRef<Path>, message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Io { path: Some(path.as_ref().to_path_buf()), message: message.into() }
+    }
+
+    /// A [`LsspcaError::Corpus`] with the given message.
+    pub fn corpus(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Corpus { message: message.into() }
+    }
+
+    /// A [`LsspcaError::Cache`] with the given message.
+    pub fn cache(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Cache { message: message.into() }
+    }
+
+    /// A [`LsspcaError::Numeric`] with the given message.
+    pub fn numeric(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Numeric { message: message.into() }
+    }
+
+    /// A [`LsspcaError::Serve`] with the given message.
+    pub fn serve(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Serve { message: message.into() }
+    }
+
+    /// The error class as a short lowercase label (the [`fmt::Display`]
+    /// prefix).
+    pub fn category(&self) -> &'static str {
+        match self {
+            LsspcaError::Config { .. } => "config",
+            LsspcaError::Io { .. } => "io",
+            LsspcaError::Corpus { .. } => "corpus",
+            LsspcaError::Cache { .. } => "cache",
+            LsspcaError::Numeric { .. } => "numeric",
+            LsspcaError::Serve { .. } => "serve",
+        }
+    }
+
+    /// The bare message, without the category prefix or path — what an
+    /// API response or log line that supplies its own framing should
+    /// show.
+    pub fn message(&self) -> &str {
+        match self {
+            LsspcaError::Config { message }
+            | LsspcaError::Io { message, .. }
+            | LsspcaError::Corpus { message }
+            | LsspcaError::Cache { message }
+            | LsspcaError::Numeric { message }
+            | LsspcaError::Serve { message } => message,
+        }
+    }
+
+    /// Process exit code for the `lsspca` CLI: each error class maps to
+    /// a distinct code so shell callers can branch on the failure kind
+    /// (config=2, io=3, cache=4, numeric=5, corpus=6, serve=7).
+    pub fn exit_code(&self) -> i32 {
+        match self {
+            LsspcaError::Config { .. } => 2,
+            LsspcaError::Io { .. } => 3,
+            LsspcaError::Cache { .. } => 4,
+            LsspcaError::Numeric { .. } => 5,
+            LsspcaError::Corpus { .. } => 6,
+            LsspcaError::Serve { .. } => 7,
+        }
+    }
+}
+
+impl fmt::Display for LsspcaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LsspcaError::Io { path: Some(p), message } => {
+                write!(f, "io error [{}]: {message}", p.display())
+            }
+            other => write!(f, "{} error: {}", other.category(), other.message()),
+        }
+    }
+}
+
+impl std::error::Error for LsspcaError {}
+
+/// Compatibility bridge for string-error contexts (the property-test
+/// DSL's closures return `Result<(), String>`): `?` on an
+/// [`LsspcaError`] inside them renders via [`fmt::Display`].
+impl From<LsspcaError> for String {
+    fn from(e: LsspcaError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_category_and_message() {
+        let e = LsspcaError::config("solver.engine 'gpu' (want native|xla)");
+        let s = e.to_string();
+        assert!(s.starts_with("config error: "), "{s}");
+        assert!(s.contains("gpu"), "{s}");
+        let e = LsspcaError::io_at("/tmp/m.lspm", "checksum mismatch");
+        let s = e.to_string();
+        assert!(s.contains("/tmp/m.lspm") && s.contains("checksum"), "{s}");
+    }
+
+    #[test]
+    fn exit_codes_are_distinct_and_match_the_contract() {
+        let all = [
+            LsspcaError::config("x"),
+            LsspcaError::io("x"),
+            LsspcaError::cache("x"),
+            LsspcaError::numeric("x"),
+            LsspcaError::corpus("x"),
+            LsspcaError::serve("x"),
+        ];
+        // the documented CLI contract
+        assert_eq!(LsspcaError::config("x").exit_code(), 2);
+        assert_eq!(LsspcaError::io("x").exit_code(), 3);
+        assert_eq!(LsspcaError::cache("x").exit_code(), 4);
+        assert_eq!(LsspcaError::numeric("x").exit_code(), 5);
+        let mut codes: Vec<i32> = all.iter().map(|e| e.exit_code()).collect();
+        codes.sort_unstable();
+        codes.dedup();
+        assert_eq!(codes.len(), all.len(), "exit codes must be distinct");
+        // none may collide with the generic-failure code 1 or success 0
+        assert!(codes.iter().all(|&c| c >= 2));
+    }
+
+    #[test]
+    fn implements_std_error() {
+        fn takes_error(_: &dyn std::error::Error) {}
+        let e = LsspcaError::numeric("diverged");
+        takes_error(&e);
+        let boxed: Box<dyn std::error::Error> = Box::new(e);
+        assert!(boxed.to_string().contains("diverged"));
+    }
+
+    #[test]
+    fn string_bridge_renders_display() {
+        let s: String = LsspcaError::cache("shard 3 checksum mismatch").into();
+        assert_eq!(s, "cache error: shard 3 checksum mismatch");
+    }
+
+    #[test]
+    fn matching_on_variants() {
+        let e = LsspcaError::cache("corrupt");
+        assert!(matches!(e, LsspcaError::Cache { .. }));
+        assert_eq!(e.category(), "cache");
+        assert_eq!(e.message(), "corrupt");
+    }
+}

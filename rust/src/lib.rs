@@ -35,10 +35,32 @@
 //! assert!(pc.cardinality() >= 1, "support = {:?}", pc.support);
 //! ```
 //!
-//! For the end-to-end pipeline (stream → eliminate → solve → topics →
-//! model artifact) see [`coordinator::Pipeline`]; for the covariance
-//! backends (dense / implicit / out-of-core) see [`covop`] and
-//! [`cov_disk`]; ARCHITECTURE.md maps the whole system.
+//! For the full pipeline as a **staged, resumable session** — stream a
+//! corpus once, then re-solve at many `(λ, K)` without re-reading it —
+//! see [`session::Session`] and its typed [`session::SessionBuilder`]
+//! (this is the primary library API; [`coordinator::Pipeline::run`] is
+//! a thin one-shot wrapper over it):
+//!
+//! ```
+//! use lsspca::session::{LambdaSpec, Session};
+//!
+//! let mut session = Session::builder()
+//!     .synthetic("nytimes")
+//!     .synth_size(300, 1200)
+//!     .max_reduced(32)
+//!     .bca_sweeps(4)
+//!     .build()
+//!     .unwrap();
+//! session.stream().unwrap();                // pass 1, reused by every fit
+//! let fit = session.fit(LambdaSpec::search(5, 2), 1).unwrap();
+//! assert_eq!(fit.components.len(), 1);
+//! ```
+//!
+//! Every fallible public API returns the structured [`LsspcaError`]
+//! (match on `Config`/`Io`/`Corpus`/`Cache`/`Numeric`/`Serve`); attach
+//! a [`session::Progress`] observer to watch stages stream. For the
+//! covariance backends (dense / implicit / out-of-core) see [`covop`]
+//! and [`cov_disk`]; ARCHITECTURE.md maps the whole system.
 
 #![warn(missing_docs)]
 
@@ -53,6 +75,7 @@ pub mod covop;
 pub mod data;
 pub mod elim;
 pub mod engine;
+pub mod error;
 pub mod linalg;
 pub mod logging;
 pub mod model;
@@ -61,9 +84,12 @@ pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod score;
+pub mod session;
 pub mod solver;
 pub mod stream;
 pub mod util;
+
+pub use crate::error::LsspcaError;
 
 /// Convenience re-exports for typical use.
 pub mod prelude {
@@ -74,10 +100,12 @@ pub mod prelude {
     pub use crate::data::{CscMatrix, CsrMatrix, DocwordHeader, SymMat, TripletMatrix};
     pub use crate::elim::SafeElimination;
     pub use crate::engine::{Engine, NativeEngine};
+    pub use crate::error::LsspcaError;
     pub use crate::linalg::{power_iteration, JacobiEig};
     pub use crate::model::{Model, ModelPc};
     pub use crate::moments::FeatureMoments;
     pub use crate::score::{ScoreOptions, Scorer};
+    pub use crate::session::{FitResult, LambdaSpec, Progress, Session, SessionBuilder, Stage};
     pub use crate::solver::bca::{BcaOptions, BcaSolution};
     pub use crate::solver::extract::SparsePc;
     pub use crate::util::rng::Rng;

@@ -15,13 +15,16 @@
 
 use std::path::{Path, PathBuf};
 
+use std::sync::Arc;
+
 use lsspca::cli::{App, Args, CommandSpec, Parsed};
 use lsspca::config::PipelineConfig;
 use lsspca::coordinator::Pipeline;
 use lsspca::corpus::{CorpusSpec, SynthCorpus};
 use lsspca::data::Vocab;
 use lsspca::prelude::*;
-use lsspca::score::{score_file, serve, BatchOptions, ServeOptions};
+use lsspca::score::{score_file_observed, serve, BatchOptions, ServeOptions};
+use lsspca::session::{NoopProgress, StderrProgress};
 use lsspca::solver::bca;
 use lsspca::stream::{variance_pass_file, StreamOptions};
 use lsspca::util::json::Json;
@@ -60,7 +63,8 @@ fn app() -> App {
                 "run",
                 "full pipeline: stream → eliminate → solve → topics",
             ))
-            .switch("profile", "print the timing profile"),
+            .switch("profile", "print the timing profile")
+            .switch("progress", "print live stage progress to stderr"),
         )
         .command(
             with_training_flags(CommandSpec::new(
@@ -80,7 +84,8 @@ fn app() -> App {
                 .opt("top", "1", "top-k topic assignment depth")
                 .switch("no-center", "do not subtract training means")
                 .switch("normalize", "divide loadings by training std deviations")
-                .switch("allow-vocab-mismatch", "score even if the vocab hash differs"),
+                .switch("allow-vocab-mismatch", "score even if the vocab hash differs")
+                .switch("progress", "print live scoring progress to stderr"),
         )
         .command(
             CommandSpec::new("serve", "serve a model over HTTP: /score /topics /healthz")
@@ -139,7 +144,7 @@ fn app() -> App {
 
 /// Assemble a pipeline config from the flags shared by `run` and
 /// `export`: config-file values first, flags override.
-fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, String> {
+fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, LsspcaError> {
     let mut cfg = if args.str("config").is_empty() {
         PipelineConfig::default()
     } else {
@@ -189,11 +194,15 @@ fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, String> {
     Ok(cfg)
 }
 
-fn cmd_run(args: &Args) -> Result<(), String> {
+fn cmd_run(args: &Args) -> Result<(), LsspcaError> {
     let cfg = pipeline_config_from_args(args)?;
     cfg.validate()?;
 
-    let report = Pipeline::new(cfg).run()?;
+    let mut pipeline = Pipeline::new(cfg);
+    if args.switch("progress") {
+        pipeline = pipeline.with_observer(Arc::new(StderrProgress::new()));
+    }
+    let report = pipeline.run()?;
     println!("\n# {} — sparse PCA report", report.corpus_name);
     println!(
         "docs={} vocab={} nnz={} | reduced n̂={} ({}x reduction, λ̂={:.4e}{})",
@@ -228,7 +237,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_export(args: &Args) -> Result<(), String> {
+fn cmd_export(args: &Args) -> Result<(), LsspcaError> {
     let mut cfg = pipeline_config_from_args(args)?;
     if !args.str("model-out").is_empty() {
         cfg.save_model = args.str("model-out");
@@ -244,7 +253,7 @@ fn cmd_export(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_score(args: &Args) -> Result<(), String> {
+fn cmd_score(args: &Args) -> Result<(), LsspcaError> {
     let model = Model::load(Path::new(&args.str("model")))?;
     let input = PathBuf::from(args.str("input"));
     // Vocabulary identity check: when the input ships a vocab companion
@@ -255,12 +264,12 @@ fn cmd_score(args: &Args) -> Result<(), String> {
         let v = Vocab::load(&vocab_path)?;
         let h = lsspca::model::vocab_hash(&v);
         if h != model.vocab_hash && !args.switch("allow-vocab-mismatch") {
-            return Err(format!(
+            return Err(LsspcaError::config(format!(
                 "vocabulary mismatch: {} hashes to {h:016x}, model was trained on {:016x} \
                  (--allow-vocab-mismatch to override)",
                 vocab_path.display(),
                 model.vocab_hash
-            ));
+            )));
         }
     }
     // [model] center/normalize give the defaults; switches override.
@@ -280,7 +289,14 @@ fn cmd_score(args: &Args) -> Result<(), String> {
         top: args.usize("top")?,
     };
     let out = PathBuf::from(args.str("out"));
-    let stats = score_file(&input, &scorer, bopts, &out)?;
+    let stderr_progress;
+    let progress: &dyn lsspca::session::Progress = if args.switch("progress") {
+        stderr_progress = StderrProgress::new();
+        &stderr_progress
+    } else {
+        &NoopProgress
+    };
+    let stats = score_file_observed(&input, &scorer, bopts, &out, progress)?;
     println!(
         "scored {} docs ({} nnz) onto {} PCs in {:.2}s — {:.0} docs/s → {}",
         stats.docs,
@@ -293,7 +309,7 @@ fn cmd_score(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<(), String> {
+fn cmd_serve(args: &Args) -> Result<(), LsspcaError> {
     let model = Model::load(Path::new(&args.str("model")))?;
     let cfg = if args.str("config").is_empty() {
         PipelineConfig::default()
@@ -317,9 +333,9 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     serve(model, scorer, ServeOptions { addr, pool, ..Default::default() })
 }
 
-fn cmd_gen(args: &Args) -> Result<(), String> {
+fn cmd_gen(args: &Args) -> Result<(), LsspcaError> {
     let spec = CorpusSpec::preset(&args.str("preset"))
-        .ok_or("unknown preset")?
+        .ok_or_else(|| LsspcaError::config("unknown preset"))?
         .scaled(args.usize("docs")?, args.usize("vocab")?);
     let corpus = SynthCorpus::new(spec, args.u64("seed")?);
     let out = PathBuf::from(args.str("out"));
@@ -337,7 +353,7 @@ fn cmd_gen(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_variances(args: &Args) -> Result<(), String> {
+fn cmd_variances(args: &Args) -> Result<(), LsspcaError> {
     let input = PathBuf::from(args.str("input"));
     let opts = StreamOptions { workers: args.usize("workers")?, ..Default::default() };
     let (hdr, fv, stats) = variance_pass_file(&input, opts)?;
@@ -369,7 +385,7 @@ fn cmd_variances(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_solve(args: &Args) -> Result<(), String> {
+fn cmd_solve(args: &Args) -> Result<(), LsspcaError> {
     let n = args.usize("n")?;
     let m = args.usize("m")?;
     let mut rng = Rng::seed_from(args.u64("seed")?);
@@ -378,7 +394,7 @@ fn cmd_solve(args: &Args) -> Result<(), String> {
             lsspca::corpus::spiked_covariance(n, m, args.usize("card")?.min(n), 2.0, &mut rng)
         }
         "gaussian" => lsspca::corpus::gaussian_factor_cov(n, m, &mut rng),
-        other => return Err(format!("unknown model '{other}'")),
+        other => return Err(LsspcaError::config(format!("unknown model '{other}'"))),
     };
     let mut lambda = args.f64("lambda")?;
     if lambda < 0.0 {
@@ -409,10 +425,11 @@ fn cmd_solve(args: &Args) -> Result<(), String> {
 }
 
 #[cfg(feature = "xla")]
-fn cmd_artifacts(args: &Args) -> Result<(), String> {
+fn cmd_artifacts(args: &Args) -> Result<(), LsspcaError> {
     let dir = PathBuf::from(args.str("dir"));
-    let mut rt = lsspca::runtime::Runtime::new().map_err(|e| format!("{e:#}"))?;
-    let names = rt.load_dir(&dir).map_err(|e| format!("{e:#}"))?;
+    let mut rt = lsspca::runtime::Runtime::new()
+        .map_err(|e| LsspcaError::io(format!("{e:#}")))?;
+    let names = rt.load_dir(&dir).map_err(|e| LsspcaError::io(format!("{e:#}")))?;
     println!("loaded {} artifacts from {}:", names.len(), dir.display());
     for n in names {
         println!("  {n}");
@@ -421,8 +438,10 @@ fn cmd_artifacts(args: &Args) -> Result<(), String> {
 }
 
 #[cfg(not(feature = "xla"))]
-fn cmd_artifacts(_args: &Args) -> Result<(), String> {
-    Err("this build has no XLA support (rebuild with --features xla)".into())
+fn cmd_artifacts(_args: &Args) -> Result<(), LsspcaError> {
+    Err(LsspcaError::config(
+        "this build has no XLA support (rebuild with --features xla)",
+    ))
 }
 
 /// Time one closure: min wall-clock over `reps` runs (first run warms).
@@ -462,22 +481,26 @@ fn bench_compare_gate(
     quick: bool,
     n: usize,
     max_regress: f64,
-) -> Result<(), String> {
+) -> Result<(), LsspcaError> {
     use lsspca::util::bench::{metric, section};
     let text = std::fs::read_to_string(baseline_path)
-        .map_err(|e| format!("reading baseline {}: {e}", baseline_path.display()))?;
-    let doc = Json::parse(&text)
-        .map_err(|e| format!("parsing baseline {}: {e}", baseline_path.display()))?;
-    let gate = doc
-        .get("gate")
-        .ok_or_else(|| format!("baseline {} has no \"gate\" object", baseline_path.display()))?;
+        .map_err(|e| LsspcaError::io_at(baseline_path, format!("reading baseline: {e}")))?;
+    let doc = Json::parse(&text).map_err(|e| {
+        LsspcaError::config(format!("parsing baseline {}: {e}", baseline_path.display()))
+    })?;
+    let gate = doc.get("gate").ok_or_else(|| {
+        LsspcaError::config(format!(
+            "baseline {} has no \"gate\" object",
+            baseline_path.display()
+        ))
+    })?;
     let base_quick = gate.get("quick").and_then(Json::as_bool).unwrap_or(false);
     let base_n = gate.get("n").and_then(Json::as_f64).unwrap_or(0.0) as usize;
     if base_quick != quick || base_n != n {
-        return Err(format!(
+        return Err(LsspcaError::config(format!(
             "baseline gate shape mismatch: baseline quick={base_quick} n={base_n}, \
              this run quick={quick} n={n} — regenerate the baseline with matching flags"
-        ));
+        )));
     }
     section(&format!(
         "bench gate — vs {} (fail above {:.0}% slowdown)",
@@ -489,9 +512,11 @@ fn bench_compare_gate(
         let base = gate
             .get(name)
             .and_then(Json::as_f64)
-            .ok_or_else(|| format!("baseline gate is missing \"{name}\""))?;
+            .ok_or_else(|| LsspcaError::config(format!("baseline gate is missing \"{name}\"")))?;
         if !base.is_finite() || base <= 0.0 {
-            return Err(format!("baseline gate \"{name}\" must be > 0 (got {base})"));
+            return Err(LsspcaError::config(format!(
+                "baseline gate \"{name}\" must be > 0 (got {base})"
+            )));
         }
         let ratio = cur / base;
         let ok = ratio <= 1.0 + max_regress;
@@ -510,11 +535,14 @@ fn bench_compare_gate(
         println!("bench gate: ok");
         Ok(())
     } else {
-        Err(format!("bench gate failed:\n  {}", failures.join("\n  ")))
+        Err(LsspcaError::numeric(format!(
+            "bench gate failed:\n  {}",
+            failures.join("\n  ")
+        )))
     }
 }
 
-fn cmd_bench(args: &Args) -> Result<(), String> {
+fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
     use lsspca::solver::lambda::{search, LambdaSearchOptions};
     use lsspca::solver::qp::{self, QpOptions};
     use lsspca::util::bench::{metric, section};
@@ -619,6 +647,56 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
          \"phi_abs_diff\": {:.3e}}},\n",
         (phi_ref - phi_ws).abs()
     ));
+
+    // --- session_refit: warm Session::fit at a new λ vs cold one-shot -----
+    // The staged-session API's headline number: once a session has
+    // streamed/eliminated/reduced the corpus, a re-fit at a new (λ, K)
+    // touches only the reduced operator. The gate tracks the warm
+    // re-fit median so a regression in the fit hot path (or an
+    // accidental stage re-run) fails CI.
+    section("session — warm re-fit at a new λ vs cold one-shot run");
+    let sr_docs = if quick { 600 } else { 2000 };
+    let sr_cfg = PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: sr_docs,
+        synth_vocab: 3000,
+        workers: 2,
+        chunk_docs: 256,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 64,
+        bca_sweeps: sweeps,
+        ..Default::default()
+    };
+    let t = lsspca::util::Timer::start();
+    let cold_report = Pipeline::new(sr_cfg.clone()).run()?;
+    let cold_secs = t.secs();
+    // a λ the cold run never solved at: between the first two PCs' λs
+    let lam_new = 0.5 * (cold_report.components[0].lambda + cold_report.components[1].lambda);
+    let mut warm = Session::from_config(sr_cfg.clone())?;
+    warm.reduce()?;
+    let sr_reps = if quick { 5 } else { 7 };
+    let warm_samples = time_samples(sr_reps, || {
+        warm.fit(LambdaSpec::Fixed(lam_new), 2).expect("warm re-fit")
+    });
+    let warm_min = warm_samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let session_refit_median = median_secs(&warm_samples);
+    metric("session.cold_oneshot_secs", format!("{cold_secs:.4}"));
+    metric("session.warm_refit_secs", format!("{warm_min:.6}"));
+    metric(
+        "session.refit_speedup",
+        format!("{:.1}", cold_secs / warm_min.max(1e-12)),
+    );
+    metric("gate.session_refit_median_secs", format!("{session_refit_median:.6}"));
+    json.push_str(&format!(
+        "  \"session_refit\": {{\"docs\": {sr_docs}, \"pcs\": 2, \
+         \"cold_oneshot_secs\": {cold_secs:.6}, \"warm_refit_secs\": {warm_min:.6}, \
+         \"warm_refit_median_secs\": {session_refit_median:.6}, \
+         \"speedup\": {:.3}}},\n",
+        cold_secs / warm_min.max(1e-12)
+    ));
+
     // --- oocore: disk-backed covariance vs in-memory gram ------------------
     // Runs before the gate object is assembled because the disk matvec
     // median is one of the gated metrics.
@@ -636,8 +714,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let odir = std::env::temp_dir().join(format!("lsspca_bench_oocore_{}", std::process::id()));
     let okey = ShardCacheKey { corpus_digest: 0xbe0c, elim_digest: 0x0c0e };
     let t = lsspca::util::Timer::start();
-    let oman = shardcache::write(&odir, &okey, &ocsr, odocs as u64, 256 * 1024)
-        .map_err(|e| format!("writing bench shard cache: {e}"))?;
+    let oman = shardcache::write(&odir, &okey, &ocsr, odocs as u64, 256 * 1024)?;
     let shard_write_secs = t.secs();
     let ogram = GramCov::new(ocsr, odocs as u64, 16);
     let ox: Vec<f64> = (0..onhat).map(|_| rng.gauss()).collect();
@@ -722,7 +799,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
         "  \"gate\": {{\"quick\": {quick}, \"n\": {n}, \
          \"qp_micro_median_secs\": {qp_gate_median:.6}, \
          \"fig1_speed_median_secs\": {fig1_gate_median:.6}, \
-         \"oocore_disk_matvec_median_secs\": {oocore_gate_median:.6}}},\n"
+         \"oocore_disk_matvec_median_secs\": {oocore_gate_median:.6}, \
+         \"session_refit_median_secs\": {session_refit_median:.6}}},\n"
     ));
 
     // --- λ-search thread scaling ------------------------------------------
@@ -757,7 +835,8 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     json.push_str("}\n");
 
     let out = PathBuf::from(args.str("out"));
-    std::fs::write(&out, &json).map_err(|e| format!("writing {}: {e}", out.display()))?;
+    std::fs::write(&out, &json)
+        .map_err(|e| LsspcaError::io_at(&out, format!("writing bench json: {e}")))?;
     println!("\nwrote {}", out.display());
 
     // --- covariance-operator races → BENCH_covop.json ---------------------
@@ -846,7 +925,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
 
     let covop_out = PathBuf::from(args.str("covop-out"));
     std::fs::write(&covop_out, &cj)
-        .map_err(|e| format!("writing {}: {e}", covop_out.display()))?;
+        .map_err(|e| LsspcaError::io_at(&covop_out, format!("writing bench json: {e}")))?;
     println!("wrote {}", covop_out.display());
 
     // --- batch-scoring throughput → BENCH_score.json ----------------------
@@ -903,12 +982,12 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     sj.push_str("  ]\n}\n");
     let score_out = PathBuf::from(args.str("score-out"));
     std::fs::write(&score_out, &sj)
-        .map_err(|e| format!("writing {}: {e}", score_out.display()))?;
+        .map_err(|e| LsspcaError::io_at(&score_out, format!("writing bench json: {e}")))?;
     println!("wrote {}", score_out.display());
 
     let oocore_out = PathBuf::from(args.str("oocore-out"));
     std::fs::write(&oocore_out, &oj)
-        .map_err(|e| format!("writing {}: {e}", oocore_out.display()))?;
+        .map_err(|e| LsspcaError::io_at(&oocore_out, format!("writing bench json: {e}")))?;
     println!("wrote {}", oocore_out.display());
 
     // --- regression gate vs a committed baseline --------------------------
@@ -920,6 +999,7 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
                 ("qp_micro_median_secs", qp_gate_median),
                 ("fig1_speed_median_secs", fig1_gate_median),
                 ("oocore_disk_matvec_median_secs", oocore_gate_median),
+                ("session_refit_median_secs", session_refit_median),
             ],
             quick,
             n,
@@ -935,10 +1015,10 @@ fn main() {
         Ok(p) => p,
         Err(e) => {
             eprintln!("{e}");
-            std::process::exit(2);
+            std::process::exit(e.exit_code());
         }
     };
-    let result = match parsed {
+    let result: Result<(), LsspcaError> = match parsed {
         Parsed::Help(text) => {
             println!("{text}");
             Ok(())
@@ -956,8 +1036,11 @@ fn main() {
             _ => unreachable!("parser rejects unknown commands"),
         },
     };
+    // Distinct exit codes per error class (config=2, io=3, cache=4,
+    // numeric=5, corpus=6, serve=7) so shell callers can branch on the
+    // failure kind; success stays 0.
     if let Err(e) = result {
         eprintln!("error: {e}");
-        std::process::exit(1);
+        std::process::exit(e.exit_code());
     }
 }

@@ -26,6 +26,7 @@
 use std::path::Path;
 
 use crate::data::Vocab;
+use crate::error::LsspcaError;
 
 const MAGIC: &[u8; 4] = b"LSPM";
 const VERSION: u32 = 1;
@@ -149,39 +150,39 @@ impl<'a> Reader<'a> {
         Reader { buf, pos: 0 }
     }
 
-    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8], LsspcaError> {
         let end = self
             .pos
             .checked_add(len)
             .filter(|&e| e <= self.buf.len())
-            .ok_or("model: truncated payload")?;
+            .ok_or_else(|| LsspcaError::io("model: truncated payload"))?;
         let out = &self.buf[self.pos..end];
         self.pos = end;
         Ok(out)
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    fn u64(&mut self) -> Result<u64, LsspcaError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, String> {
+    fn f64(&mut self) -> Result<f64, LsspcaError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     /// Length-prefixed count with a sanity cap: a corrupt length must not
     /// trigger a huge allocation before the per-element reads fail.
-    fn count(&mut self, what: &str) -> Result<usize, String> {
+    fn count(&mut self, what: &str) -> Result<usize, LsspcaError> {
         let v = self.u64()? as usize;
         if v > self.buf.len() {
-            return Err(format!("model: implausible {what} count {v}"));
+            return Err(LsspcaError::io(format!("model: implausible {what} count {v}")));
         }
         Ok(v)
     }
 
-    fn str(&mut self) -> Result<String, String> {
+    fn str(&mut self) -> Result<String, LsspcaError> {
         let len = self.count("string length")?;
         let bytes = self.take(len)?;
-        String::from_utf8(bytes.to_vec()).map_err(|_| "model: non-utf8 string".to_string())
+        String::from_utf8(bytes.to_vec()).map_err(|_| LsspcaError::io("model: non-utf8 string"))
     }
 
     fn done(&self) -> bool {
@@ -191,45 +192,51 @@ impl<'a> Reader<'a> {
 
 impl Model {
     /// Internal consistency checks shared by construction and loading.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), LsspcaError> {
         let nk = self.kept.len();
         if self.kept_means.len() != nk || self.kept_stds.len() != nk || self.kept_words.len() != nk
         {
-            return Err("model: kept map / means / stds / words length mismatch".into());
+            return Err(LsspcaError::io("model: kept map / means / stds / words length mismatch"));
         }
         if self.pcs.is_empty() {
-            return Err("model: no components".into());
+            return Err(LsspcaError::io("model: no components"));
         }
         let kept_set: std::collections::HashSet<usize> = self.kept.iter().copied().collect();
         for (i, &k) in self.kept.iter().enumerate() {
             if k >= self.n_features {
-                return Err(format!(
+                return Err(LsspcaError::io(format!(
                     "model: kept[{i}]={k} out of range (n={})",
                     self.n_features
-                ));
+                )));
             }
         }
         if kept_set.len() != nk {
-            return Err("model: duplicate indices in kept map".into());
+            return Err(LsspcaError::io("model: duplicate indices in kept map"));
         }
         for (k, pc) in self.pcs.iter().enumerate() {
             if pc.loadings.is_empty() {
-                return Err(format!("model: PC {} has empty support", k + 1));
+                return Err(LsspcaError::io(format!("model: PC {} has empty support", k + 1)));
             }
             let mut seen = std::collections::HashSet::with_capacity(pc.loadings.len());
             for &(idx, w) in &pc.loadings {
                 if !kept_set.contains(&idx) {
-                    return Err(format!(
+                    return Err(LsspcaError::io(format!(
                         "model: PC {} loads feature {idx} outside the kept set",
                         k + 1
-                    ));
+                    )));
                 }
                 if !seen.insert(idx) {
                     // the scorer would double-count a repeated feature
-                    return Err(format!("model: PC {} loads feature {idx} twice", k + 1));
+                    return Err(LsspcaError::io(format!(
+                        "model: PC {} loads feature {idx} twice",
+                        k + 1
+                    )));
                 }
                 if !w.is_finite() {
-                    return Err(format!("model: PC {} has a non-finite loading", k + 1));
+                    return Err(LsspcaError::io(format!(
+                        "model: PC {} has a non-finite loading",
+                        k + 1
+                    )));
                 }
             }
         }
@@ -284,18 +291,18 @@ impl Model {
 
     /// Parse from bytes; verifies magic, version, checksum and internal
     /// invariants.
-    pub fn from_bytes(buf: &[u8]) -> Result<Model, String> {
+    pub fn from_bytes(buf: &[u8]) -> Result<Model, LsspcaError> {
         if buf.len() < 4 + 4 + 8 || &buf[..4] != MAGIC {
-            return Err("model: bad magic or truncated header".into());
+            return Err(LsspcaError::io("model: bad magic or truncated header"));
         }
         let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
         if version != VERSION {
-            return Err(format!("model: version {version}, want {VERSION}"));
+            return Err(LsspcaError::io(format!("model: version {version}, want {VERSION}")));
         }
         let payload = &buf[8..buf.len() - 8];
         let stored = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
         if checksum(payload) != stored {
-            return Err("model: checksum mismatch (corrupt artifact)".into());
+            return Err(LsspcaError::io("model: checksum mismatch (corrupt artifact)"));
         }
         let mut r = Reader::new(payload);
         let corpus_name = r.str()?;
@@ -337,7 +344,7 @@ impl Model {
             pcs.push(ModelPc { lambda, phi, explained_variance, loadings });
         }
         if !r.done() {
-            return Err("model: trailing bytes in payload".into());
+            return Err(LsspcaError::io("model: trailing bytes in payload"));
         }
         let model = Model {
             corpus_name,
@@ -357,21 +364,23 @@ impl Model {
     }
 
     /// Save to a file (creates parent directories).
-    pub fn save(&self, path: &Path) -> Result<(), String> {
+    pub fn save(&self, path: &Path) -> Result<(), LsspcaError> {
         self.validate()?;
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+                std::fs::create_dir_all(dir)
+                    .map_err(|e| LsspcaError::io_at(dir, format!("mkdir: {e}")))?;
             }
         }
-        std::fs::write(path, self.to_bytes()).map_err(|e| format!("write {}: {e}", path.display()))
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| LsspcaError::io_at(path, format!("write model: {e}")))
     }
 
     /// Load from a file.
-    pub fn load(path: &Path) -> Result<Model, String> {
-        let buf =
-            std::fs::read(path).map_err(|e| format!("open model {}: {e}", path.display()))?;
-        Self::from_bytes(&buf).map_err(|e| format!("{}: {e}", path.display()))
+    pub fn load(path: &Path) -> Result<Model, LsspcaError> {
+        let buf = std::fs::read(path)
+            .map_err(|e| LsspcaError::io_at(path, format!("open model: {e}")))?;
+        Self::from_bytes(&buf).map_err(|e| LsspcaError::io_at(path, e.message().to_string()))
     }
 
     /// Word string for an original feature index, resolved through the
@@ -502,7 +511,8 @@ mod tests {
         let mut b = m.to_bytes();
         b[4..8].copy_from_slice(&99u32.to_le_bytes());
         let e = Model::from_bytes(&b).unwrap_err();
-        assert!(e.contains("version"), "{e}");
+        assert!(matches!(e, LsspcaError::Io { .. }));
+        assert!(e.to_string().contains("version"), "{e}");
     }
 
     #[test]
@@ -527,7 +537,7 @@ mod tests {
         let first = m.pcs[0].loadings[0];
         m.pcs[0].loadings.push(first); // same feature loaded twice in one PC
         let e = m.validate().unwrap_err();
-        assert!(e.contains("twice"), "{e}");
+        assert!(e.to_string().contains("twice"), "{e}");
     }
 
     #[test]

@@ -69,11 +69,13 @@ pub fn csv_series(header: (&str, &str), pts: &[(f64, f64)]) -> String {
 }
 
 /// Save text to a file, creating parent directories.
-pub fn save(path: &std::path::Path, text: &str) -> Result<(), String> {
+pub fn save(path: &std::path::Path, text: &str) -> Result<(), crate::error::LsspcaError> {
+    use crate::error::LsspcaError;
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| LsspcaError::io_at(dir, format!("mkdir: {e}")))?;
     }
-    std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))
+    std::fs::write(path, text).map_err(|e| LsspcaError::io_at(path, format!("write: {e}")))
 }
 
 #[cfg(test)]

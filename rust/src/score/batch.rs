@@ -24,7 +24,9 @@ use std::fmt::Write as _;
 use std::io::Write as _;
 use std::path::Path;
 
+use crate::error::LsspcaError;
 use crate::score::scorer::Scorer;
+use crate::session::{NoopProgress, Progress, ProgressUpdate, Stage, StageGuard};
 use crate::stream::{ChunkSource, FileSource};
 use crate::util::timer::Timer;
 
@@ -64,7 +66,12 @@ impl BatchStats {
 }
 
 /// Render one document's CSV row (no trailing newline).
-fn row(doc_id: usize, scorer: &Scorer, words: &[(u32, f64)], top: usize) -> Result<String, String> {
+fn row(
+    doc_id: usize,
+    scorer: &Scorer,
+    words: &[(u32, f64)],
+    top: usize,
+) -> Result<String, LsspcaError> {
     let scores = scorer.score(words)?;
     let mut line = String::with_capacity(16 * (scores.len() + 2));
     let _ = write!(line, "{}", doc_id + 1);
@@ -83,38 +90,59 @@ pub fn score_stream<S: ChunkSource>(
     scorer: &Scorer,
     opts: BatchOptions,
     out: &mut dyn std::io::Write,
-) -> Result<BatchStats, String> {
+) -> Result<BatchStats, LsspcaError> {
+    score_stream_observed(source, scorer, opts, out, &NoopProgress)
+}
+
+/// [`score_stream`] with a [`Progress`] observer: emits
+/// [`Stage::Score`] began/advanced (per chunk: docs + nnz)/finished
+/// events, so callers can watch a long batch pass the same way they
+/// watch training stages. The observer never changes the output — the
+/// CSV stays byte-identical for any observer and thread count.
+pub fn score_stream_observed<S: ChunkSource>(
+    source: &mut S,
+    scorer: &Scorer,
+    opts: BatchOptions,
+    out: &mut dyn std::io::Write,
+    progress: &dyn Progress,
+) -> Result<BatchStats, LsspcaError> {
     if source.num_features() != scorer.n_features() {
-        return Err(format!(
+        return Err(LsspcaError::numeric(format!(
             "dimension mismatch: corpus has W={} features, model was trained with n={}",
             source.num_features(),
             scorer.n_features()
-        ));
+        )));
     }
     let t = Timer::start();
+    // RAII pairing: stage_finished fires even when a write errors out.
+    let guard = StageGuard::begin(progress, Stage::Score);
     let top = opts.top.clamp(1, scorer.num_pcs());
     let mut header = String::from("doc_id");
     for k in 0..scorer.num_pcs() {
         let _ = write!(header, ",pc{}", k + 1);
     }
     header.push_str(",top_pcs\n");
-    out.write_all(header.as_bytes()).map_err(|e| format!("write csv: {e}"))?;
+    let io_err = |e: std::io::Error| LsspcaError::io(format!("write csv: {e}"));
+    out.write_all(header.as_bytes()).map_err(io_err)?;
     let mut stats = BatchStats::default();
     while let Some(chunk) = source.next_chunk(opts.chunk_docs.max(1))? {
-        stats.docs += chunk.docs.len() as u64;
-        stats.nnz += chunk.total_nnz() as u64;
+        let (docs, nnz) = (chunk.docs.len() as u64, chunk.total_nnz() as u64);
+        stats.docs += docs;
+        stats.nnz += nnz;
         let lines = crate::util::parallel::par_map_indexed(opts.threads, chunk.docs.len(), |i| {
             let d = &chunk.docs[i];
             row(d.id, scorer, &d.words, top)
         });
         for line in lines {
             let line = line?;
-            out.write_all(line.as_bytes()).map_err(|e| format!("write csv: {e}"))?;
-            out.write_all(b"\n").map_err(|e| format!("write csv: {e}"))?;
+            out.write_all(line.as_bytes()).map_err(io_err)?;
+            out.write_all(b"\n").map_err(io_err)?;
         }
+        progress.stage_advanced(Stage::Score, ProgressUpdate { docs, nnz });
     }
-    out.flush().map_err(|e| format!("flush csv: {e}"))?;
+    out.flush().map_err(|e| LsspcaError::io(format!("flush csv: {e}")))?;
     stats.seconds = t.secs();
+    guard.finish();
     Ok(stats)
 }
 
@@ -124,18 +152,31 @@ pub fn score_file(
     scorer: &Scorer,
     opts: BatchOptions,
     out_path: &Path,
-) -> Result<BatchStats, String> {
+) -> Result<BatchStats, LsspcaError> {
+    score_file_observed(input, scorer, opts, out_path, &NoopProgress)
+}
+
+/// [`score_file`] with a [`Progress`] observer (see
+/// [`score_stream_observed`]).
+pub fn score_file_observed(
+    input: &Path,
+    scorer: &Scorer,
+    opts: BatchOptions,
+    out_path: &Path,
+    progress: &dyn Progress,
+) -> Result<BatchStats, LsspcaError> {
     let mut src = FileSource::open(input)?;
     if let Some(dir) = out_path.parent() {
         if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {}: {e}", dir.display()))?;
+            std::fs::create_dir_all(dir)
+                .map_err(|e| LsspcaError::io_at(dir, format!("mkdir: {e}")))?;
         }
     }
     let f = std::fs::File::create(out_path)
-        .map_err(|e| format!("create {}: {e}", out_path.display()))?;
+        .map_err(|e| LsspcaError::io_at(out_path, format!("create csv: {e}")))?;
     let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
-    let stats = score_stream(&mut src, scorer, opts, &mut w)?;
-    w.flush().map_err(|e| format!("flush {}: {e}", out_path.display()))?;
+    let stats = score_stream_observed(&mut src, scorer, opts, &mut w, progress)?;
+    w.flush().map_err(|e| LsspcaError::io_at(out_path, format!("flush csv: {e}")))?;
     Ok(stats)
 }
 
@@ -238,7 +279,8 @@ mod tests {
             &mut buf,
         )
         .unwrap_err();
-        assert!(e.contains("dimension mismatch"), "{e}");
+        assert!(matches!(e, LsspcaError::Numeric { .. }));
+        assert!(e.to_string().contains("dimension mismatch"), "{e}");
     }
 
     #[test]

@@ -19,6 +19,8 @@ pub mod batch;
 pub mod scorer;
 pub mod server;
 
-pub use batch::{score_file, score_stream, BatchOptions, BatchStats};
+pub use batch::{
+    score_file, score_file_observed, score_stream, score_stream_observed, BatchOptions, BatchStats,
+};
 pub use scorer::{ScoreOptions, Scorer};
 pub use server::{serve, ServeOptions, Server};

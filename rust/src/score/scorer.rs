@@ -23,6 +23,7 @@
 
 use std::collections::HashMap;
 
+use crate::error::LsspcaError;
 use crate::model::Model;
 
 /// Scoring-time options.
@@ -90,7 +91,7 @@ pub struct Scorer {
 impl Scorer {
     /// Compile a scorer from a model. Fails on a model whose loadings
     /// reference features outside the kept set (validated shape).
-    pub fn new(model: &Model, opts: ScoreOptions) -> Result<Scorer, String> {
+    pub fn new(model: &Model, opts: ScoreOptions) -> Result<Scorer, LsspcaError> {
         model.validate()?;
         let k = model.num_pcs();
         // orig index → position in the kept map (for μ/σ lookups)
@@ -100,9 +101,9 @@ impl Scorer {
         let mut offsets = vec![0.0f64; k];
         for (pc_idx, pc) in model.pcs.iter().enumerate() {
             for &(orig, loading) in &pc.loadings {
-                let pos = *kept_pos
-                    .get(&orig)
-                    .ok_or_else(|| format!("PC {} loads unknown feature {orig}", pc_idx + 1))?;
+                let pos = *kept_pos.get(&orig).ok_or_else(|| {
+                    LsspcaError::config(format!("PC {} loads unknown feature {orig}", pc_idx + 1))
+                })?;
                 let weight = if opts.normalize {
                     let s = model.kept_stds[pos];
                     if s > 0.0 {
@@ -145,15 +146,15 @@ impl Scorer {
     /// Score one document (sorted `(word_id_0based, count)` pairs) into
     /// `out` (length K). Word ids outside the model's feature range are
     /// an error (dimension mismatch, not a zero score).
-    pub fn score_into(&self, words: &[(u32, f64)], out: &mut [f64]) -> Result<(), String> {
+    pub fn score_into(&self, words: &[(u32, f64)], out: &mut [f64]) -> Result<(), LsspcaError> {
         assert_eq!(out.len(), self.k);
         out.copy_from_slice(&self.neg_offsets);
         for &(w, c) in words {
             if w as usize >= self.n_features {
-                return Err(format!(
+                return Err(LsspcaError::numeric(format!(
                     "word id {w} out of range for model with n={}",
                     self.n_features
-                ));
+                )));
             }
             if let Some(entries) = self.index.get(&w) {
                 for &(pc, weight) in entries {
@@ -165,7 +166,7 @@ impl Scorer {
     }
 
     /// Allocating convenience wrapper around [`score_into`](Self::score_into).
-    pub fn score(&self, words: &[(u32, f64)]) -> Result<Vec<f64>, String> {
+    pub fn score(&self, words: &[(u32, f64)]) -> Result<Vec<f64>, LsspcaError> {
         let mut out = vec![0.0; self.k];
         self.score_into(words, &mut out)?;
         Ok(out)
@@ -278,7 +279,7 @@ mod tests {
     fn out_of_range_word_is_an_error() {
         let s = Scorer::new(&tiny_model(), ScoreOptions::default()).unwrap();
         let e = s.score(&[(10, 1.0)]).unwrap_err();
-        assert!(e.contains("out of range"), "{e}");
+        assert!(e.to_string().contains("out of range"), "{e}");
     }
 
     #[test]

@@ -31,6 +31,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::error::LsspcaError;
 use crate::model::Model;
 use crate::score::scorer::Scorer;
 use crate::stream::bounded;
@@ -87,14 +88,17 @@ impl ServerHandle {
 }
 
 impl Server {
-    /// Bind the listener and compile the routing state.
-    pub fn bind(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<Server, String> {
+    /// Bind the listener and compile the routing state. Failures are
+    /// [`LsspcaError::Serve`].
+    pub fn bind(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<Server, LsspcaError> {
         if opts.pool == 0 {
-            return Err("serve.pool must be >= 1".into());
+            return Err(LsspcaError::serve("serve.pool must be >= 1"));
         }
         let listener = TcpListener::bind(&opts.addr)
-            .map_err(|e| format!("bind {}: {e}", opts.addr))?;
-        let addr = listener.local_addr().map_err(|e| e.to_string())?;
+            .map_err(|e| LsspcaError::serve(format!("bind {}: {e}", opts.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| LsspcaError::serve(format!("local_addr: {e}")))?;
         let term_index = model
             .kept
             .iter()
@@ -123,7 +127,7 @@ impl Server {
 
     /// Accept connections until [`ServerHandle::shutdown`] is called.
     /// Blocks the calling thread; handlers run on `opts.pool` workers.
-    pub fn run(self) -> Result<(), String> {
+    pub fn run(self) -> Result<(), LsspcaError> {
         let Server { listener, state, opts } = self;
         crate::info!(
             "serving model '{}' ({} PCs) on http://{} with {} workers",
@@ -167,7 +171,7 @@ impl Server {
 }
 
 /// Bind and run in one call (the `lsspca serve` entrypoint).
-pub fn serve(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<(), String> {
+pub fn serve(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<(), LsspcaError> {
     Server::bind(model, scorer, opts)?.run()
 }
 
@@ -327,7 +331,10 @@ fn score_route(req: &Request, state: &ServerState) -> (u16, Json) {
     };
     let payload = match Json::parse(text) {
         Ok(v) => v,
-        Err(e) => return (400, obj(vec![("error", Json::Str(format!("bad JSON: {e}")))])),
+        Err(e) => {
+            let msg = format!("bad JSON: {}", e.message());
+            return (400, obj(vec![("error", Json::Str(msg))]));
+        }
     };
     let mut words: Vec<(u32, f64)> = Vec::new();
     let mut unknown_terms = 0u64;
@@ -426,7 +433,7 @@ fn score_route(req: &Request, state: &ServerState) -> (u16, Json) {
                 ]),
             )
         }
-        Err(e) => (400, obj(vec![("error", Json::Str(e))])),
+        Err(e) => (400, obj(vec![("error", Json::Str(e.message().to_string()))])),
     }
 }
 

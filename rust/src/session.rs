@@ -1,0 +1,1556 @@
+//! Staged, resumable pipeline sessions — the crate's primary library
+//! API.
+//!
+//! The paper's central practical claim (§2.1 + §4) is that one expensive
+//! streaming pass — per-feature moments plus safe elimination — is
+//! **λ-independent** and therefore amortizes across many cheap solves at
+//! different `(λ, K)`. [`Session`] makes that structure first-class: the
+//! pipeline's stages are separate, individually cached calls, so a
+//! server can stream a corpus once and re-solve per request without
+//! touching the docword file again.
+//!
+//! ```text
+//! SessionBuilder ── build() ──▶ Session
+//!   session.stream()     → &CorpusStats       (variance pass, checkpointable)
+//!   session.eliminate(k) → &EliminationPlan   (Thm 2.1 at λ̂ for target k)
+//!   session.reduce()     → &ReducedCorpus     (covariance operator: dense /
+//!                                              gram / disk / auto-planned)
+//!   session.fit(λ, K)    → FitResult          (λ-search or fixed-λ solves,
+//!                                              rank-K deflation, model)
+//! ```
+//!
+//! Each stage runs its prerequisites on demand (`fit` alone is a full
+//! one-shot run) and caches its result; a second `fit` at a new `(λ, K)`
+//! reuses the streamed, eliminated, reduced corpus and performs **zero
+//! docword reads**, returning PCs bitwise-identical to a fresh one-shot
+//! run with the same parameters (pinned by `rust/tests/session_api.rs`).
+//! [`crate::coordinator::Pipeline::run`] is now a thin compatibility
+//! wrapper over this type.
+//!
+//! Progress is observable: attach a [`Progress`] implementation with
+//! [`SessionBuilder::observer`] to receive stage began/advanced/finished
+//! events (documents and nonzeros streamed, per chunk) and per-probe
+//! λ-search evaluations. Observers never change results — only what you
+//! can watch.
+//!
+//! # Example: build → stream → fit → warm re-fit
+//!
+//! ```
+//! use lsspca::session::{LambdaSpec, Session};
+//!
+//! let mut session = Session::builder()
+//!     .synthetic("nytimes")
+//!     .synth_size(300, 1200)
+//!     .max_reduced(32)
+//!     .bca_sweeps(4)
+//!     .build()
+//!     .unwrap();
+//!
+//! // Stage 1 explicitly (the stats are reusable across every fit):
+//! let docs = session.stream().unwrap().docs;
+//! assert_eq!(docs, 300);
+//!
+//! // λ-search for one cardinality-5 PC:
+//! let fit = session.fit(LambdaSpec::search(5, 2), 1).unwrap();
+//! assert_eq!(fit.components.len(), 1);
+//! let lambda = fit.components[0].lambda;
+//!
+//! // Warm re-fit at a fixed λ: no re-streaming, same reduced operator.
+//! let refit = session.fit(LambdaSpec::Fixed(lambda), 1).unwrap();
+//! assert_eq!(refit.components[0].lambda, lambda);
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::config::PipelineConfig;
+use crate::coordinator::{
+    choose_elimination, disk_row_cache_mb, plan_backend, search_with_engine_observed,
+    ComponentReport, MemoryPlan,
+};
+use crate::corpus::{CorpusSpec, SynthCorpus};
+use crate::cov::{covariance_pass, gram_pass, reduced_csr_pass};
+use crate::cov_disk::DiskGramCov;
+use crate::covop::{CovOp, DenseCov};
+use crate::data::docword::DocChunk;
+use crate::data::shardcache::{self, ShardCacheKey};
+use crate::data::Vocab;
+use crate::elim::SafeElimination;
+use crate::engine::{Engine, NativeEngine};
+#[cfg(feature = "xla")]
+use crate::engine::XlaEngine;
+use crate::error::LsspcaError;
+use crate::model::Model;
+use crate::moments::FeatureVariances;
+use crate::solver::bca::BcaOptions;
+use crate::solver::deflate::{DeflatedCov, Scheme};
+use crate::solver::lambda::{LambdaEval, LambdaSearchOptions, LambdaSearchResult};
+use crate::stream::{variance_pass, ChunkSource, FileSource, StreamOptions, SynthSource};
+use crate::util::timer::{Profiler, Timer};
+
+// ---------------------------------------------------------------------------
+// Progress observers
+// ---------------------------------------------------------------------------
+
+/// The pipeline stages a [`Progress`] observer is notified about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Pass 1: streamed per-feature variances ([`Session::stream`]).
+    Stream,
+    /// Safe feature elimination ([`Session::eliminate`]).
+    Eliminate,
+    /// Pass 2: reduced covariance operator assembly ([`Session::reduce`]).
+    Reduce,
+    /// λ-search + BCA + deflation ([`Session::fit`]).
+    Fit,
+    /// Batch scoring ([`crate::score::score_stream_observed`]).
+    Score,
+}
+
+impl Stage {
+    /// Lowercase stage label for logs and progress lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Stream => "stream",
+            Stage::Eliminate => "eliminate",
+            Stage::Reduce => "reduce",
+            Stage::Fit => "fit",
+            Stage::Score => "score",
+        }
+    }
+}
+
+/// One incremental progress report within a stage: how much corpus the
+/// increment covered. For streamed stages an update fires once per
+/// document chunk; `nnz` (stored `(word, count)` pairs) is the
+/// I/O-proportional unit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProgressUpdate {
+    /// Documents processed in this increment.
+    pub docs: u64,
+    /// `(word, count)` pairs processed in this increment.
+    pub nnz: u64,
+}
+
+/// Observer for pipeline progress. All methods have empty defaults —
+/// implement only what you care about. Observers are shared across
+/// worker threads (`Send + Sync`) and must not assume any particular
+/// calling thread; events for one session arrive in order. Observing
+/// never changes results.
+pub trait Progress: Send + Sync {
+    /// A stage started running. A stage whose result is already cached
+    /// *in the session* (e.g. a second `stream()` call) emits no events
+    /// at all; an *on-disk* cache hit inside a live run (variance
+    /// checkpoint, verified shard cache) still fires began/finished,
+    /// with no `advanced` events in between.
+    fn stage_began(&self, stage: Stage) {
+        let _ = stage;
+    }
+
+    /// Incremental progress within a stage — for streamed stages, one
+    /// event per document chunk read from the corpus.
+    fn stage_advanced(&self, stage: Stage, update: ProgressUpdate) {
+        let _ = (stage, update);
+    }
+
+    /// A stage finished, with its wall-clock seconds. Fires exactly
+    /// once per `stage_began` — **including when the stage fails** (the
+    /// session pairs the events through an RAII guard), so observers
+    /// may safely open spinners/timers on began and close on finished.
+    fn stage_finished(&self, stage: Stage, seconds: f64) {
+        let _ = (stage, seconds);
+    }
+
+    /// λ-grid progress: one cardinality-search evaluation for component
+    /// `component` (0-based), in deterministic fold order.
+    fn lambda_evaluated(&self, component: usize, eval: &LambdaEval) {
+        let _ = (component, eval);
+    }
+}
+
+/// The default observer: ignores every event.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopProgress;
+
+impl Progress for NoopProgress {}
+
+/// Progress printer to stderr (the CLI's `--progress` switch). Prints
+/// began/finished lines per stage, a running docs/nnz total every few
+/// chunks, and each λ-search evaluation.
+#[derive(Debug, Default)]
+pub struct StderrProgress {
+    docs: AtomicU64,
+    nnz: AtomicU64,
+    updates: AtomicU64,
+}
+
+impl StderrProgress {
+    /// A fresh printer with zeroed counters.
+    pub fn new() -> StderrProgress {
+        StderrProgress::default()
+    }
+}
+
+impl Progress for StderrProgress {
+    fn stage_began(&self, stage: Stage) {
+        self.docs.store(0, Ordering::Relaxed);
+        self.nnz.store(0, Ordering::Relaxed);
+        self.updates.store(0, Ordering::Relaxed);
+        eprintln!("[{}] started", stage.name());
+    }
+
+    fn stage_advanced(&self, stage: Stage, update: ProgressUpdate) {
+        let docs = self.docs.fetch_add(update.docs, Ordering::Relaxed) + update.docs;
+        let nnz = self.nnz.fetch_add(update.nnz, Ordering::Relaxed) + update.nnz;
+        // every 8th chunk keeps the output bounded on big corpora
+        if self.updates.fetch_add(1, Ordering::Relaxed) % 8 == 0 {
+            eprintln!("[{}] {docs} docs, {nnz} nnz", stage.name());
+        }
+    }
+
+    fn stage_finished(&self, stage: Stage, seconds: f64) {
+        eprintln!("[{}] done in {seconds:.2}s", stage.name());
+    }
+
+    fn lambda_evaluated(&self, component: usize, eval: &LambdaEval) {
+        eprintln!(
+            "[fit] PC{} probe λ={:.4} → card={} φ={:.4}",
+            component + 1,
+            eval.lambda,
+            eval.cardinality,
+            eval.phi
+        );
+    }
+}
+
+/// Thread-safe counting observer: tallies events per stage. Useful for
+/// instrumentation and tests — `rust/tests/session_api.rs` uses it to
+/// pin that warm re-fits perform **zero** corpus reads.
+#[derive(Debug, Default)]
+pub struct CountingProgress {
+    began: [AtomicU64; 5],
+    advanced: [AtomicU64; 5],
+    finished: [AtomicU64; 5],
+    docs: [AtomicU64; 5],
+    lambda_evals: AtomicU64,
+}
+
+impl CountingProgress {
+    /// A fresh counter set.
+    pub fn new() -> CountingProgress {
+        CountingProgress::default()
+    }
+
+    fn slot(stage: Stage) -> usize {
+        match stage {
+            Stage::Stream => 0,
+            Stage::Eliminate => 1,
+            Stage::Reduce => 2,
+            Stage::Fit => 3,
+            Stage::Score => 4,
+        }
+    }
+
+    /// `stage_began` events seen for a stage.
+    pub fn began(&self, stage: Stage) -> u64 {
+        self.began[Self::slot(stage)].load(Ordering::SeqCst)
+    }
+
+    /// `stage_advanced` events seen for a stage — for streamed stages,
+    /// the number of corpus chunk reads.
+    pub fn reads(&self, stage: Stage) -> u64 {
+        self.advanced[Self::slot(stage)].load(Ordering::SeqCst)
+    }
+
+    /// `stage_finished` events seen for a stage.
+    pub fn finished(&self, stage: Stage) -> u64 {
+        self.finished[Self::slot(stage)].load(Ordering::SeqCst)
+    }
+
+    /// Total documents reported for a stage.
+    pub fn docs(&self, stage: Stage) -> u64 {
+        self.docs[Self::slot(stage)].load(Ordering::SeqCst)
+    }
+
+    /// Total λ-search evaluations observed.
+    pub fn lambda_evals(&self) -> u64 {
+        self.lambda_evals.load(Ordering::SeqCst)
+    }
+
+    /// Corpus chunk reads across *all* streamed stages — the "did
+    /// anything touch the docword file" counter.
+    pub fn corpus_reads(&self) -> u64 {
+        self.reads(Stage::Stream) + self.reads(Stage::Reduce) + self.reads(Stage::Score)
+    }
+}
+
+impl Progress for CountingProgress {
+    fn stage_began(&self, stage: Stage) {
+        self.began[Self::slot(stage)].fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn stage_advanced(&self, stage: Stage, update: ProgressUpdate) {
+        self.advanced[Self::slot(stage)].fetch_add(1, Ordering::SeqCst);
+        self.docs[Self::slot(stage)].fetch_add(update.docs, Ordering::SeqCst);
+    }
+
+    fn stage_finished(&self, stage: Stage, _seconds: f64) {
+        self.finished[Self::slot(stage)].fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn lambda_evaluated(&self, _component: usize, _eval: &LambdaEval) {
+        self.lambda_evals.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+/// A [`ChunkSource`] wrapper that reports every chunk to a [`Progress`]
+/// observer — how streamed stages (and observed batch scoring) account
+/// for their corpus reads. Purely pass-through otherwise.
+pub struct ObservedSource<'a, S: ChunkSource> {
+    inner: &'a mut S,
+    observer: &'a dyn Progress,
+    stage: Stage,
+}
+
+impl<'a, S: ChunkSource> ObservedSource<'a, S> {
+    /// Wrap `inner`, reporting chunks under `stage`.
+    pub fn new(inner: &'a mut S, observer: &'a dyn Progress, stage: Stage) -> Self {
+        ObservedSource { inner, observer, stage }
+    }
+}
+
+impl<S: ChunkSource> ChunkSource for ObservedSource<'_, S> {
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
+        let chunk = self.inner.next_chunk(max_docs)?;
+        if let Some(c) = &chunk {
+            self.observer.stage_advanced(
+                self.stage,
+                ProgressUpdate { docs: c.docs.len() as u64, nnz: c.total_nnz() as u64 },
+            );
+        }
+        Ok(chunk)
+    }
+}
+
+/// RAII pairing of `stage_began`/`stage_finished`: fires `began` on
+/// construction and guarantees `finished` fires exactly once — via
+/// [`StageGuard::finish`] on success, or on drop when the stage errors
+/// out early. This is what keeps the [`Progress`] pairing contract true
+/// on every `?` path.
+pub(crate) struct StageGuard<'a> {
+    observer: &'a dyn Progress,
+    stage: Stage,
+    timer: Timer,
+    done: bool,
+}
+
+impl<'a> StageGuard<'a> {
+    /// Fire `stage_began` and start the stage clock.
+    pub(crate) fn begin(observer: &'a dyn Progress, stage: Stage) -> StageGuard<'a> {
+        observer.stage_began(stage);
+        StageGuard { observer, stage, timer: Timer::start(), done: false }
+    }
+
+    /// Fire `stage_finished` now; returns the stage's wall seconds.
+    pub(crate) fn finish(mut self) -> f64 {
+        let seconds = self.timer.secs();
+        self.done = true;
+        self.observer.stage_finished(self.stage, seconds);
+        seconds
+    }
+}
+
+impl Drop for StageGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.observer.stage_finished(self.stage, self.timer.secs());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stage results
+// ---------------------------------------------------------------------------
+
+/// Result of [`Session::stream`]: the corpus' identity and its streamed
+/// per-feature variance profile — everything λ-independent.
+#[derive(Clone, Debug)]
+pub struct CorpusStats {
+    /// Corpus name (synthetic preset) or input path.
+    pub corpus_name: String,
+    /// Streamed per-feature moments (the Fig 2 variance profile).
+    pub variances: FeatureVariances,
+    /// Documents streamed.
+    pub docs: u64,
+    /// `(word, count)` pairs streamed (0 on a checkpoint hit).
+    pub nnz: u64,
+    /// Wall seconds of the pass (≈0 on a checkpoint hit).
+    pub seconds: f64,
+    /// Whether the variances came from a checkpoint instead of a pass.
+    pub from_checkpoint: bool,
+    /// The training vocabulary (empty ⇒ synthesized `wNNNNN` labels).
+    pub vocab: Vocab,
+    /// FNV digest of the corpus identity — keys the variance checkpoint
+    /// and the covariance shard cache.
+    pub corpus_digest: u64,
+}
+
+impl CorpusStats {
+    /// Original vocabulary size n.
+    pub fn vocab_size(&self) -> usize {
+        self.variances.variance.len()
+    }
+}
+
+/// Result of [`Session::eliminate`]: the Thm 2.1 elimination chosen for
+/// a target cardinality.
+#[derive(Clone, Debug)]
+pub struct EliminationPlan {
+    /// The elimination: λ̂, kept features, reduction bookkeeping.
+    pub elim: SafeElimination,
+    /// Whether `max_reduced` bound the reduction.
+    pub capped: bool,
+    /// The target cardinality the λ̂ was chosen for.
+    pub target_card: usize,
+    /// Wall seconds to choose the elimination.
+    pub seconds: f64,
+}
+
+/// Result of [`Session::reduce`]: the reduced covariance operator Σ̂,
+/// behind whichever backend the configuration (or memory planner)
+/// selected. This is the object every [`Session::fit`] reuses.
+pub struct ReducedCorpus {
+    cov: Box<dyn CovOp>,
+    /// The backend serving Σ̂: `"dense"`, `"gram"` or `"disk"`.
+    pub backend: String,
+    /// The memory planner's decision, when `cov.backend = "auto"`.
+    pub memory_plan: Option<MemoryPlan>,
+    /// Wall seconds to assemble (≈ shard-verify time on a cache hit).
+    pub seconds: f64,
+}
+
+impl ReducedCorpus {
+    /// The reduced covariance operator.
+    pub fn cov(&self) -> &dyn CovOp {
+        self.cov.as_ref()
+    }
+
+    /// Reduced problem size n̂.
+    pub fn n(&self) -> usize {
+        self.cov.n()
+    }
+}
+
+impl std::fmt::Debug for ReducedCorpus {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReducedCorpus")
+            .field("n", &self.cov.n())
+            .field("backend", &self.backend)
+            .field("memory_plan", &self.memory_plan)
+            .field("seconds", &self.seconds)
+            .finish()
+    }
+}
+
+/// Result of one [`Session::fit`]: K sparse PCs with reporting
+/// metadata, the rendered topic table, and the serving model artifact.
+#[derive(Debug)]
+pub struct FitResult {
+    /// One entry per extracted sparse PC.
+    pub components: Vec<ComponentReport>,
+    /// Markdown topic table (the paper's Tables 1–2 format).
+    pub topic_table: String,
+    /// The serving artifact (not written to disk — call
+    /// [`Model::save`], or let `Pipeline::run` honor `[model]
+    /// save_path`).
+    pub model: Model,
+    /// Wall seconds of this fit.
+    pub seconds: f64,
+}
+
+/// How [`Session::fit`] picks λ for each component.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LambdaSpec {
+    /// Cardinality-targeted bisection search (the paper's §4 workflow):
+    /// accept a PC with `|card − target_card| ≤ slack`.
+    Search {
+        /// Desired PC cardinality (paper: 5).
+        target_card: usize,
+        /// Accepted distance from the target.
+        slack: usize,
+    },
+    /// Solve at this fixed penalty λ — one point of a λ grid. The solve
+    /// is bitwise-identical to the same λ landing as a search probe.
+    Fixed(f64),
+}
+
+impl LambdaSpec {
+    /// Shorthand for [`LambdaSpec::Search`].
+    pub fn search(target_card: usize, slack: usize) -> LambdaSpec {
+        LambdaSpec::Search { target_card, slack }
+    }
+
+    /// The search a configuration's `solver.target_card` /
+    /// `solver.card_slack` describe — what `Pipeline::run` uses.
+    pub fn from_config(cfg: &PipelineConfig) -> LambdaSpec {
+        LambdaSpec::Search { target_card: cfg.target_card, slack: cfg.card_slack }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Typed, programmatic construction of a [`Session`] — the library
+/// alternative to a TOML [`PipelineConfig`] (which remains one way to
+/// seed a builder, via [`SessionBuilder::from_config`]).
+///
+/// Every setter maps to one documented config knob;
+/// [`SessionBuilder::build`] validates the combination exactly like
+/// `PipelineConfig::validate`, so a builder cannot produce a session a
+/// config file could not.
+pub struct SessionBuilder {
+    cfg: PipelineConfig,
+    observer: Arc<dyn Progress>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder::new()
+    }
+}
+
+impl SessionBuilder {
+    /// Start from the default configuration (synthetic NYTimes preset).
+    pub fn new() -> SessionBuilder {
+        SessionBuilder { cfg: PipelineConfig::default(), observer: Arc::new(NoopProgress) }
+    }
+
+    /// Seed every knob from an existing configuration (e.g. a parsed
+    /// TOML file), then override via the typed setters.
+    pub fn from_config(cfg: PipelineConfig) -> SessionBuilder {
+        SessionBuilder { cfg, observer: Arc::new(NoopProgress) }
+    }
+
+    /// Train from a docword file (UCI bag-of-words, `.gz` supported).
+    /// Clears the synthetic-corpus selection.
+    pub fn input(mut self, path: impl Into<String>) -> Self {
+        self.cfg.input = path.into();
+        self
+    }
+
+    /// Train from a synthetic preset (`"nytimes"` | `"pubmed"`) instead
+    /// of a file.
+    pub fn synthetic(mut self, preset: &str) -> Self {
+        self.cfg.input = String::new();
+        self.cfg.synth_preset = preset.to_string();
+        self
+    }
+
+    /// Synthetic corpus size overrides (0 = preset default).
+    pub fn synth_size(mut self, docs: usize, vocab: usize) -> Self {
+        self.cfg.synth_docs = docs;
+        self.cfg.synth_vocab = vocab;
+        self
+    }
+
+    /// Corpus / generator seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Directory for variance checkpoints and the covariance shard
+    /// cache (empty = disabled).
+    pub fn cache_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.cache_dir = dir.into();
+        self
+    }
+
+    /// Moment-pass worker threads.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// Solver-side worker threads (0 = all cores, 1 = serial).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Independent λ probes per bracketing round (1 = bisection).
+    pub fn lambda_probes(mut self, probes: usize) -> Self {
+        self.cfg.lambda_probes = probes;
+        self
+    }
+
+    /// Documents per streamed chunk.
+    pub fn chunk_docs(mut self, docs: usize) -> Self {
+        self.cfg.chunk_docs = docs;
+        self
+    }
+
+    /// Bounded reader→worker queue depth (backpressure).
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    /// Default number of PCs (`Pipeline::run`'s K; [`Session::fit`]
+    /// takes K explicitly).
+    pub fn num_pcs(mut self, k: usize) -> Self {
+        self.cfg.num_pcs = k;
+        self
+    }
+
+    /// Target cardinality per PC (drives elimination λ̂ and the default
+    /// λ-search).
+    pub fn target_card(mut self, card: usize) -> Self {
+        self.cfg.target_card = card;
+        self
+    }
+
+    /// Accepted |cardinality − target| slack.
+    pub fn card_slack(mut self, slack: usize) -> Self {
+        self.cfg.card_slack = slack;
+        self
+    }
+
+    /// Hard cap on the reduced problem size n̂.
+    pub fn max_reduced(mut self, cap: usize) -> Self {
+        self.cfg.max_reduced = cap;
+        self
+    }
+
+    /// Covariance backend: `"dense"` | `"gram"` | `"disk"` | `"auto"`.
+    pub fn cov_backend(mut self, backend: &str) -> Self {
+        self.cfg.cov_backend = backend.to_string();
+        self
+    }
+
+    /// Covariance-stage memory budget in MiB (0 = unlimited; drives the
+    /// `"auto"` backend planner).
+    pub fn memory_budget_mb(mut self, mb: usize) -> Self {
+        self.cfg.memory_budget_mb = mb;
+        self
+    }
+
+    /// Disk-backend shard size in MiB.
+    pub fn shard_mb(mut self, mb: usize) -> Self {
+        self.cfg.shard_mb = mb;
+        self
+    }
+
+    /// Gram/disk-backend Σ-row cache budget in MiB.
+    pub fn row_cache_mb(mut self, mb: usize) -> Self {
+        self.cfg.row_cache_mb = mb;
+        self
+    }
+
+    /// Maximum BCA sweeps per solve.
+    pub fn bca_sweeps(mut self, sweeps: usize) -> Self {
+        self.cfg.bca_sweeps = sweeps;
+        self
+    }
+
+    /// Barrier ε (β = ε/n).
+    pub fn epsilon(mut self, epsilon: f64) -> Self {
+        self.cfg.epsilon = epsilon;
+        self
+    }
+
+    /// Solver engine: `"native"` | `"xla"`.
+    pub fn engine(mut self, engine: &str) -> Self {
+        self.cfg.engine = engine.to_string();
+        self
+    }
+
+    /// AOT-artifact directory for the `"xla"` engine.
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    /// Deflation scheme: `"projection"` | `"hotelling"`.
+    pub fn deflation(mut self, scheme: &str) -> Self {
+        self.cfg.deflation = scheme.to_string();
+        self
+    }
+
+    /// Compute a dual optimality certificate per component.
+    pub fn certify(mut self, on: bool) -> Self {
+        self.cfg.certify = on;
+        self
+    }
+
+    /// Attach a [`Progress`] observer.
+    pub fn observer(mut self, observer: Arc<dyn Progress>) -> Self {
+        self.observer = observer;
+        self
+    }
+
+    /// Validate and produce the [`Session`]. Fails with
+    /// [`LsspcaError::Config`] on an invalid knob combination.
+    pub fn build(self) -> Result<Session, LsspcaError> {
+        self.cfg.validate()?;
+        Ok(Session {
+            cfg: self.cfg,
+            observer: self.observer,
+            prof: Profiler::new(),
+            synth: None,
+            stats: None,
+            plan: None,
+            reduced: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+// ---------------------------------------------------------------------------
+
+/// A staged, resumable pipeline run over one corpus. See the [module
+/// docs](self) for the stage diagram and reuse contract.
+pub struct Session {
+    cfg: PipelineConfig,
+    observer: Arc<dyn Progress>,
+    prof: Profiler,
+    synth: Option<SynthCorpus>,
+    stats: Option<CorpusStats>,
+    plan: Option<EliminationPlan>,
+    reduced: Option<ReducedCorpus>,
+}
+
+impl Session {
+    /// Start a typed [`SessionBuilder`].
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// Build directly from a validated configuration (TOML or
+    /// programmatic) with no observer.
+    pub fn from_config(cfg: PipelineConfig) -> Result<Session, LsspcaError> {
+        SessionBuilder::from_config(cfg).build()
+    }
+
+    /// The session's configuration (immutable — build a new session to
+    /// change corpus-identity knobs).
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Replace the progress observer (applies to subsequent stages).
+    pub fn set_observer(&mut self, observer: Arc<dyn Progress>) {
+        self.observer = observer;
+    }
+
+    /// The accumulated per-stage timing profile (same renderer as
+    /// `PipelineReport::profile`).
+    pub fn profile(&self) -> String {
+        self.prof.report()
+    }
+
+    /// Drop every cached stage, forcing the next call to re-run from
+    /// the corpus.
+    pub fn reset(&mut self) {
+        self.synth = None;
+        self.stats = None;
+        self.plan = None;
+        self.reduced = None;
+    }
+
+    /// Cached [`CorpusStats`] if [`Session::stream`] has run.
+    pub fn stats(&self) -> Option<&CorpusStats> {
+        self.stats.as_ref()
+    }
+
+    /// Cached [`EliminationPlan`] if [`Session::eliminate`] has run.
+    pub fn elimination(&self) -> Option<&EliminationPlan> {
+        self.plan.as_ref()
+    }
+
+    /// Cached [`ReducedCorpus`] if [`Session::reduce`] has run.
+    pub fn reduced_corpus(&self) -> Option<&ReducedCorpus> {
+        self.reduced.as_ref()
+    }
+
+    // -- stage 1: stream ----------------------------------------------------
+
+    /// Pass 1: streamed per-feature variances (with checkpoint reuse
+    /// when a cache dir is configured). Cached — repeated calls return
+    /// the same stats without touching the corpus.
+    pub fn stream(&mut self) -> Result<&CorpusStats, LsspcaError> {
+        if self.stats.is_none() {
+            self.run_stream()?;
+        }
+        Ok(self.stats.as_ref().expect("just streamed"))
+    }
+
+    fn run_stream(&mut self) -> Result<(), LsspcaError> {
+        let cfg = self.cfg.clone();
+        let opts = stream_opts(&cfg);
+        // --- resolve corpus ------------------------------------------------
+        let synth: Option<SynthCorpus> = if cfg.input.is_empty() {
+            let spec = CorpusSpec::preset(&cfg.synth_preset)
+                .ok_or_else(|| {
+                    LsspcaError::config(format!("unknown preset {}", cfg.synth_preset))
+                })?
+                .scaled(cfg.synth_docs, cfg.synth_vocab);
+            Some(SynthCorpus::new(spec, cfg.seed))
+        } else {
+            None
+        };
+        let input_path = PathBuf::from(&cfg.input);
+        let vocab = match &synth {
+            Some(s) => s.vocab.clone(),
+            None => {
+                let vp = input_path.with_extension("vocab");
+                if vp.exists() {
+                    Vocab::load(&vp)?
+                } else {
+                    Vocab::default()
+                }
+            }
+        };
+        let corpus_name = synth
+            .as_ref()
+            .map(|s| s.spec.name.to_string())
+            .unwrap_or_else(|| input_path.display().to_string());
+        crate::info!("pipeline start: corpus={corpus_name} engine={}", cfg.engine);
+
+        // Fingerprint the corpus identity: synthetic params, or the
+        // input path + its size (cheap mtime-free invalidation). Shared
+        // by the variance checkpoint and the covariance shard cache.
+        let identity = match &synth {
+            Some(s) => format!(
+                "synth:{}:{}:{}:{}",
+                s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
+            ),
+            None => {
+                let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
+                format!("file:{}:{len}", input_path.display())
+            }
+        };
+        let corpus_digest = crate::checkpoint::corpus_key(&identity);
+        let cache = if cfg.cache_dir.is_empty() {
+            None
+        } else {
+            Some((
+                crate::checkpoint::path_for(Path::new(&cfg.cache_dir), corpus_digest),
+                corpus_digest,
+            ))
+        };
+        // The corpus' live feature dimension, for checkpoint validation:
+        // a cached file whose key collides but whose n differs must be
+        // rejected up front, not panic later inside elimination.
+        let expected_n: Option<usize> = match &synth {
+            Some(s) => Some(s.spec.vocab_size),
+            None => crate::data::docword::DocwordReader::open(&input_path)
+                .ok()
+                .map(|r| r.header().vocab_size),
+        };
+        let cached_fv = match &cache {
+            Some((path, key)) => match crate::checkpoint::load(path, *key, expected_n) {
+                Ok(hit) => {
+                    if hit.is_some() {
+                        crate::info!("variance pass: checkpoint hit at {}", path.display());
+                    }
+                    hit
+                }
+                Err(e) => {
+                    crate::warn_!("ignoring bad variance checkpoint: {e}");
+                    None
+                }
+            },
+            None => None,
+        };
+        let obs = Arc::clone(&self.observer);
+        let guard = StageGuard::begin(obs.as_ref(), Stage::Stream);
+        let (fv, stats1, from_checkpoint) = match cached_fv {
+            Some(fv) => {
+                let stats = crate::stream::StreamStats { docs: fv.docs, ..Default::default() };
+                (fv, stats, true)
+            }
+            None => {
+                let t = Timer::start();
+                let (fv, stats) = match &synth {
+                    Some(s) => {
+                        let mut inner = SynthSource::new(s);
+                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                        variance_pass(&mut src, opts)
+                    }
+                    None => {
+                        let mut inner = FileSource::open(&input_path)?;
+                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                        variance_pass(&mut src, opts)
+                    }
+                }?;
+                self.prof.add("variance_pass", t.secs());
+                if let Some((path, key)) = &cache {
+                    if let Err(e) = crate::checkpoint::save(path, *key, &fv) {
+                        crate::warn_!("could not write variance checkpoint: {e}");
+                    }
+                }
+                (fv, stats, false)
+            }
+        };
+        let seconds = guard.finish();
+        crate::info!(
+            "variance pass: {} docs, {} nnz in {:.2}s",
+            stats1.docs,
+            stats1.nnz,
+            stats1.seconds
+        );
+        self.synth = synth;
+        self.stats = Some(CorpusStats {
+            corpus_name,
+            variances: fv,
+            docs: stats1.docs,
+            nnz: stats1.nnz,
+            seconds,
+            from_checkpoint,
+            vocab,
+            corpus_digest,
+        });
+        Ok(())
+    }
+
+    // -- stage 2: eliminate -------------------------------------------------
+
+    /// Safe feature elimination (Thm 2.1) at a λ̂ chosen so the reduced
+    /// problem comfortably contains a cardinality-`target_card`
+    /// solution, capped at `max_reduced`. Streams first if needed.
+    /// Cached per target — a different `target_card` recomputes the
+    /// elimination and invalidates the reduced operator.
+    pub fn eliminate(&mut self, target_card: usize) -> Result<&EliminationPlan, LsspcaError> {
+        if target_card == 0 {
+            return Err(LsspcaError::config("eliminate: target_card must be >= 1"));
+        }
+        if self.plan.as_ref().map(|p| p.target_card) != Some(target_card) {
+            self.stream()?;
+            let obs = Arc::clone(&self.observer);
+            let guard = StageGuard::begin(obs.as_ref(), Stage::Eliminate);
+            let fv = &self.stats.as_ref().expect("streamed").variances;
+            let (elim, capped) = choose_elimination(fv, target_card, self.cfg.max_reduced);
+            crate::info!(
+                "safe elimination: λ={:.4e} keeps n̂={} of n={} ({}x reduction{})",
+                elim.lambda,
+                elim.reduced(),
+                elim.original,
+                elim.reduction_factor() as u64,
+                if capped { ", capped" } else { "" }
+            );
+            if elim.reduced() == 0 {
+                // guard drop still fires stage_finished
+                return Err(LsspcaError::numeric(
+                    "elimination removed every feature; lower solver.target λ̂",
+                ));
+            }
+            let seconds = guard.finish();
+            self.prof.add("elimination", seconds);
+            // a new elimination invalidates any reduced operator
+            self.reduced = None;
+            self.plan = Some(EliminationPlan { elim, capped, target_card, seconds });
+        }
+        Ok(self.plan.as_ref().expect("just eliminated"))
+    }
+
+    // -- stage 3: reduce ----------------------------------------------------
+
+    /// Pass 2: assemble the reduced covariance operator on the
+    /// configured backend (`dense` / `gram` / `disk`, or `auto` via the
+    /// memory-budget planner). Runs [`Session::stream`] and
+    /// [`Session::eliminate`] (at the configured `target_card`) if
+    /// needed. Cached — every subsequent [`Session::fit`] reuses it
+    /// with zero corpus reads.
+    pub fn reduce(&mut self) -> Result<&ReducedCorpus, LsspcaError> {
+        if self.reduced.is_none() {
+            if self.plan.is_none() {
+                let target = self.cfg.target_card;
+                self.eliminate(target)?;
+            }
+            self.run_reduce()?;
+        }
+        Ok(self.reduced.as_ref().expect("just reduced"))
+    }
+
+    fn run_reduce(&mut self) -> Result<(), LsspcaError> {
+        let cfg = self.cfg.clone();
+        let opts = stream_opts(&cfg);
+        let input_path = PathBuf::from(&cfg.input);
+        // --- memory-budget planner -----------------------------------------
+        // `auto` resolves to a concrete backend from footprint estimates
+        // derived off the variance pass; explicit backends pass through.
+        let (backend, memory_plan) = {
+            let stats = self.stats.as_ref().expect("stream ran");
+            let plan = self.plan.as_ref().expect("eliminate ran");
+            if cfg.cov_backend == "auto" {
+                let p = plan_backend(&stats.variances, &plan.elim, &cfg);
+                crate::info!("memory planner: {}", p.describe());
+                (p.backend.clone(), Some(p))
+            } else {
+                (cfg.cov_backend.clone(), None)
+            }
+        };
+        let elim = self.plan.as_ref().expect("eliminate ran").elim.clone();
+        let corpus_digest = self.stats.as_ref().expect("stream ran").corpus_digest;
+        let obs = Arc::clone(&self.observer);
+        let guard = StageGuard::begin(obs.as_ref(), Stage::Reduce);
+        let mut profbuf: Vec<(&'static str, f64)> = Vec::new();
+        let synth = self.synth.as_ref();
+
+        let cov: Box<dyn CovOp> = match backend.as_str() {
+            "disk" => {
+                let dir = if cfg.cache_dir.is_empty() {
+                    // No configured dir: fall back to a stable
+                    // *per-user* location under the system temp dir so
+                    // the cache still reuses across runs without two
+                    // users fighting over one world-writable path.
+                    let user = std::env::var("USER")
+                        .or_else(|_| std::env::var("USERNAME"))
+                        .unwrap_or_else(|_| "default".into());
+                    std::env::temp_dir().join(format!("lsspca_shards_{user}"))
+                } else {
+                    PathBuf::from(&cfg.cache_dir)
+                };
+                // The fallback dir may sit under a shared tmp; keep it
+                // private to this user where the platform supports it.
+                if cfg.cache_dir.is_empty() {
+                    make_private_dir(&dir);
+                }
+                let key = ShardCacheKey {
+                    corpus_digest,
+                    elim_digest: shardcache::elim_digest(&elim),
+                };
+                // A hit is only a hit once every shard verifies: the
+                // operator cannot return errors mid-solve, so a corrupt
+                // or truncated shard must be caught (and the cache
+                // rebuilt) here, not hours into BCA.
+                let opened = match shardcache::open(&dir, &key) {
+                    Ok(Some(man)) => {
+                        let t = Timer::start();
+                        let verified = shardcache::verify_shards(&dir, &man, cfg.threads);
+                        profbuf.push(("shard_verify", t.secs()));
+                        match verified {
+                            Ok(()) => {
+                                crate::info!(
+                                    "shard cache hit: {} shards, nnz={} at {}",
+                                    man.shards.len(),
+                                    man.nnz,
+                                    dir.display()
+                                );
+                                Some(man)
+                            }
+                            Err(e) => {
+                                crate::warn_!("rebuilding shard cache: {e}");
+                                None
+                            }
+                        }
+                    }
+                    Ok(None) => None,
+                    Err(e) => {
+                        crate::warn_!("rebuilding shard cache: {e}");
+                        None
+                    }
+                };
+                let man = match opened {
+                    Some(man) => man,
+                    None => {
+                        let t = Timer::start();
+                        let (csr, stats2) = match synth {
+                            Some(s) => {
+                                let mut inner = SynthSource::new(s);
+                                let mut src =
+                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                                reduced_csr_pass(&mut src, &elim, opts)
+                            }
+                            None => {
+                                let mut inner = FileSource::open(&input_path)?;
+                                let mut src =
+                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                                reduced_csr_pass(&mut src, &elim, opts)
+                            }
+                        }?;
+                        profbuf.push(("gram_pass", t.secs()));
+                        let t = Timer::start();
+                        let man = shardcache::write(
+                            &dir,
+                            &key,
+                            &csr,
+                            stats2.docs,
+                            cfg.shard_mb * 1024 * 1024,
+                        )?;
+                        profbuf.push(("shard_write", t.secs()));
+                        crate::info!(
+                            "shard cache written: {} shards, nnz={} at {}",
+                            man.shards.len(),
+                            man.nnz,
+                            dir.display()
+                        );
+                        man
+                    }
+                };
+                // Cache sized against the *actual* decode wave: an
+                // oversized single-column shard shrinks the row cache
+                // rather than silently blowing the budget.
+                let cache_mb = disk_row_cache_mb(&cfg, man.max_shard_bytes());
+                let disk = DiskGramCov::new(&dir, man, cache_mb, cfg.threads);
+                crate::info!(
+                    "disk covariance backend: row cache {} rows ≤ {} MiB, {} worker threads",
+                    disk.cache_capacity_rows(),
+                    cache_mb,
+                    crate::util::parallel::resolve_threads(cfg.threads)
+                );
+                Box::new(disk)
+            }
+            "gram" => {
+                let t = Timer::start();
+                let (gram, _stats2) = match synth {
+                    Some(s) => {
+                        let mut inner = SynthSource::new(s);
+                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                        gram_pass(&mut src, &elim, opts, cfg.row_cache_mb)
+                    }
+                    None => {
+                        let mut inner = FileSource::open(&input_path)?;
+                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                        gram_pass(&mut src, &elim, opts, cfg.row_cache_mb)
+                    }
+                }?;
+                profbuf.push(("gram_pass", t.secs()));
+                crate::info!(
+                    "gram pass: reduced term matrix nnz={} (row cache {} rows ≤ {} MiB)",
+                    gram.nnz(),
+                    gram.cache_capacity_rows(),
+                    cfg.row_cache_mb
+                );
+                Box::new(gram)
+            }
+            _ => {
+                let t = Timer::start();
+                let (cov, _stats2) = match synth {
+                    Some(s) => {
+                        let mut inner = SynthSource::new(s);
+                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                        covariance_pass(&mut src, &elim, opts)
+                    }
+                    None => {
+                        let mut inner = FileSource::open(&input_path)?;
+                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                        covariance_pass(&mut src, &elim, opts)
+                    }
+                }?;
+                profbuf.push(("covariance_pass", t.secs()));
+                Box::new(DenseCov::new(cov))
+            }
+        };
+        let seconds = guard.finish();
+        for (name, secs) in profbuf {
+            self.prof.add(name, secs);
+        }
+        self.reduced = Some(ReducedCorpus { cov, backend, memory_plan, seconds });
+        Ok(())
+    }
+
+    // -- stage 4: fit -------------------------------------------------------
+
+    /// Extract `num_pcs` sparse PCs from the cached reduced operator —
+    /// λ-search per component ([`LambdaSpec::Search`]) or a fixed-λ
+    /// solve ([`LambdaSpec::Fixed`]) — with rank-K deflation between
+    /// components, exactly as `Pipeline::run` does.
+    ///
+    /// Every fit builds a fresh engine and deflation stack, so repeated
+    /// fits are independent: a warm `fit` at `(λ, K)` returns PCs
+    /// bitwise-identical to a fresh session (or `Pipeline::run`) with
+    /// the same parameters, while performing **zero** corpus reads.
+    pub fn fit(&mut self, lambda: LambdaSpec, num_pcs: usize) -> Result<FitResult, LsspcaError> {
+        if num_pcs == 0 {
+            return Err(LsspcaError::config("fit: num_pcs must be >= 1"));
+        }
+        if let LambdaSpec::Search { target_card, .. } = lambda {
+            if target_card == 0 {
+                return Err(LsspcaError::config("fit: target_card must be >= 1"));
+            }
+        }
+        self.reduce()?;
+        let cfg = self.cfg.clone();
+        let obs = Arc::clone(&self.observer);
+        let guard = StageGuard::begin(obs.as_ref(), Stage::Fit);
+        let mut engine = make_engine(&cfg)?;
+        let scheme = Scheme::parse(&cfg.deflation)
+            .ok_or_else(|| LsspcaError::config("bad deflation scheme"))?;
+        let mut profbuf: Vec<(&'static str, f64)> = Vec::new();
+        let (components, topic_table, model) = {
+            let stats = self.stats.as_ref().expect("stream ran");
+            let plan = self.plan.as_ref().expect("eliminate ran");
+            let reduced = self.reduced.as_ref().expect("reduce ran");
+            let elim = &plan.elim;
+            let vocab = &stats.vocab;
+            let mut defl = DeflatedCov::new(reduced.cov());
+            let mut components: Vec<ComponentReport> = Vec::new();
+            for k in 0..num_pcs {
+                let t = Timer::start();
+                let bca = BcaOptions {
+                    max_sweeps: cfg.bca_sweeps,
+                    epsilon: cfg.epsilon,
+                    tol: 1e-7,
+                    // The pipeline never reads the per-sweep history, and on
+                    // the gram backend each history point costs a full pass
+                    // of Σ-row gathers (frob_with) per sweep.
+                    track_history: false,
+                    ..Default::default()
+                };
+                // Parallel λ-search. The probe schedule comes from config —
+                // never derived from the thread count — so the numerical
+                // results are identical on every machine and for every
+                // `threads` setting; threads only change wall time.
+                let sopts = LambdaSearchOptions {
+                    target_card: match lambda {
+                        LambdaSpec::Search { target_card, .. } => target_card,
+                        LambdaSpec::Fixed(_) => cfg.target_card,
+                    },
+                    slack: match lambda {
+                        LambdaSpec::Search { slack, .. } => slack,
+                        LambdaSpec::Fixed(_) => cfg.card_slack,
+                    },
+                    bca,
+                    probes_per_round: cfg.lambda_probes,
+                    threads: cfg.threads,
+                    ..Default::default()
+                };
+                let t_solve = Timer::start();
+                let res = match lambda {
+                    LambdaSpec::Search { .. } => {
+                        let mut on_eval = |e: &LambdaEval| obs.lambda_evaluated(k, e);
+                        search_with_engine_observed(&mut *engine, &defl, &sopts, &mut on_eval)?
+                    }
+                    LambdaSpec::Fixed(lam) => {
+                        let res = evaluate_with_engine(&mut *engine, &defl, lam, &sopts)?;
+                        obs.lambda_evaluated(k, &res.trace[0]);
+                        res
+                    }
+                };
+                profbuf.push(("lambda_search+bca", t_solve.secs()));
+                let words: Vec<String> = res
+                    .pc
+                    .support
+                    .iter()
+                    .map(|&r| vocab.word(elim.kept[r]))
+                    .collect();
+                crate::info!(
+                    "PC {}: card={} λ={:.4} φ={:.4} [{}] in {:.2}s",
+                    k + 1,
+                    res.pc.cardinality(),
+                    res.lambda,
+                    res.solution.phi,
+                    words.join(", "),
+                    t.secs()
+                );
+                let explained = defl.quad_form(&res.pc.vector);
+                let certificate_gap = if cfg.certify {
+                    let t_cert = Timer::start();
+                    // certify on the survivors of res.lambda (the solve
+                    // space); the eliminated coordinates are provably zero.
+                    // The certificate's eigendecompositions need an
+                    // explicit matrix, so the survivor submatrix is
+                    // materialized here (small: the solve space).
+                    let diags: Vec<f64> = (0..defl.n()).map(|i| defl.diag(i)).collect();
+                    let sub_elim = SafeElimination::apply(&diags, res.lambda, None);
+                    let sub = defl.materialize(&sub_elim.kept);
+                    let cert =
+                        crate::solver::certificate::certify(&sub, &res.solution.z, res.lambda);
+                    profbuf.push(("certificate", t_cert.secs()));
+                    crate::info!(
+                        "PC {} certificate: φ={:.4} ≤ {:.4} (gap {:.2e})",
+                        k + 1,
+                        cert.primal,
+                        cert.upper_bound,
+                        cert.gap
+                    );
+                    Some(cert.gap)
+                } else {
+                    None
+                };
+                let t_defl = Timer::start();
+                defl.push(scheme, &res.pc.vector);
+                profbuf.push(("deflation", t_defl.secs()));
+                components.push(ComponentReport {
+                    lambda: res.lambda,
+                    phi: res.solution.phi,
+                    explained_variance: explained,
+                    words,
+                    seconds: t.secs(),
+                    pc: res.pc,
+                    certificate_gap,
+                });
+            }
+            let topic_table = crate::report::topic_table(
+                &components.iter().map(|c| c.pc.clone()).collect::<Vec<_>>(),
+                vocab,
+                Some(&elim.kept),
+            );
+            // --- model artifact: the hand-off to `score` / `serve` ---------
+            let fv = &stats.variances;
+            let n_orig = fv.variance.len();
+            let model = Model {
+                corpus_name: stats.corpus_name.clone(),
+                num_docs: stats.docs,
+                n_features: n_orig,
+                vocab_hash: crate::model::vocab_hash(vocab),
+                seed: cfg.seed,
+                elim_lambda: elim.lambda,
+                kept: elim.kept.clone(),
+                kept_means: elim.kept.iter().map(|&i| fv.mean[i]).collect(),
+                kept_stds: elim.kept.iter().map(|&i| fv.variance[i].sqrt()).collect(),
+                kept_words: elim.kept.iter().map(|&i| vocab.word(i)).collect(),
+                pcs: components
+                    .iter()
+                    .map(|c| crate::model::ModelPc {
+                        lambda: c.lambda,
+                        phi: c.phi,
+                        explained_variance: c.explained_variance,
+                        loadings: c.pc.mapped(&elim.kept, n_orig).loadings(),
+                    })
+                    .collect(),
+            };
+            (components, topic_table, model)
+        };
+        let seconds = guard.finish();
+        for (name, secs) in profbuf {
+            self.prof.add(name, secs);
+        }
+        Ok(FitResult { components, topic_table, model, seconds })
+    }
+}
+
+fn stream_opts(cfg: &PipelineConfig) -> StreamOptions {
+    StreamOptions {
+        workers: cfg.workers,
+        chunk_docs: cfg.chunk_docs,
+        queue_depth: cfg.queue_depth,
+    }
+}
+
+/// Build the configured solver engine.
+pub(crate) fn make_engine(cfg: &PipelineConfig) -> Result<Box<dyn Engine>, LsspcaError> {
+    match cfg.engine.as_str() {
+        "native" => Ok(Box::new(NativeEngine::new().with_threads(cfg.threads))),
+        #[cfg(feature = "xla")]
+        "xla" => Ok(Box::new(XlaEngine::load(Path::new(&cfg.artifacts_dir))?)),
+        #[cfg(not(feature = "xla"))]
+        "xla" => Err(LsspcaError::config(
+            "this build has no XLA support (rebuild with --features xla)",
+        )),
+        other => Err(LsspcaError::config(format!("unknown engine '{other}'"))),
+    }
+}
+
+/// One fixed-λ evaluation on an engine: the [`LambdaSpec::Fixed`] path.
+/// On the native engine this is exactly a [`crate::solver::lambda`]
+/// search probe (per-λ elimination mask + BCA + lift), so a grid point
+/// is bitwise-identical to the same λ landing inside a search; other
+/// engines go through [`crate::engine::bca_solve`] with the same mask.
+fn evaluate_with_engine(
+    engine: &mut dyn Engine,
+    sigma: &dyn CovOp,
+    lambda: f64,
+    opts: &LambdaSearchOptions,
+) -> Result<LambdaSearchResult, LsspcaError> {
+    let (solution, pc) = if engine.name() == "native" {
+        crate::solver::lambda::evaluate(sigma, lambda, opts)
+    } else {
+        let diags: Vec<f64> = (0..sigma.n()).map(|i| sigma.diag(i)).collect();
+        crate::coordinator::engine_probe(engine, sigma, &diags, lambda, opts)?
+    };
+    let cardinality = pc.cardinality();
+    let phi = solution.phi;
+    let hit_target = cardinality.abs_diff(opts.target_card) <= opts.slack;
+    Ok(LambdaSearchResult {
+        lambda,
+        solution,
+        pc,
+        trace: vec![LambdaEval { lambda, cardinality, phi }],
+        hit_target,
+    })
+}
+
+/// Create `dir` (and parents) with user-only permissions where the
+/// platform supports it — the default shard-cache location sits under
+/// a shared temp directory. Errors are deferred to the first write.
+fn make_private_dir(dir: &Path) {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::DirBuilderExt;
+        let _ = std::fs::DirBuilder::new().recursive(true).mode(0o700).create(dir);
+    }
+    #[cfg(not(unix))]
+    {
+        let _ = std::fs::create_dir_all(dir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_builder() -> SessionBuilder {
+        Session::builder()
+            .synthetic("nytimes")
+            .synth_size(400, 2000)
+            .workers(2)
+            .chunk_docs(128)
+            .target_card(5)
+            .card_slack(2)
+            .max_reduced(48)
+            .bca_sweeps(5)
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(matches!(
+            Session::builder().engine("gpu").build().unwrap_err(),
+            LsspcaError::Config { .. }
+        ));
+        assert!(Session::builder().build().is_ok());
+    }
+
+    #[test]
+    fn stages_cache_and_chain() {
+        let mut s = tiny_builder().build().unwrap();
+        assert!(s.stats().is_none());
+        let docs = s.stream().unwrap().docs;
+        assert_eq!(docs, 400);
+        // cached: same stats object again
+        assert_eq!(s.stream().unwrap().docs, 400);
+        let n1 = s.eliminate(5).unwrap().elim.reduced();
+        assert!(n1 > 0 && n1 <= 48);
+        let n2 = s.reduce().unwrap().n();
+        assert_eq!(n1, n2);
+        let fit = s.fit(LambdaSpec::search(5, 2), 2).unwrap();
+        assert_eq!(fit.components.len(), 2);
+        for c in &fit.components {
+            assert!(c.pc.cardinality() >= 1);
+        }
+        fit.model.validate().unwrap();
+    }
+
+    #[test]
+    fn fit_alone_runs_the_whole_pipeline() {
+        let mut s = tiny_builder().build().unwrap();
+        let fit = s.fit(LambdaSpec::search(5, 2), 1).unwrap();
+        assert_eq!(fit.components.len(), 1);
+        // the implicit stages are now cached
+        assert!(s.stats().is_some());
+        assert!(s.elimination().is_some());
+        assert!(s.reduced_corpus().is_some());
+    }
+
+    #[test]
+    fn changing_target_invalidates_reduced() {
+        let mut s = tiny_builder().build().unwrap();
+        s.reduce().unwrap();
+        assert!(s.reduced_corpus().is_some());
+        // same target: cache kept
+        s.eliminate(5).unwrap();
+        assert!(s.reduced_corpus().is_some());
+        // new target: reduced dropped, then rebuilt on demand
+        s.eliminate(3).unwrap();
+        assert!(s.reduced_corpus().is_none());
+        assert!(s.reduce().unwrap().n() > 0);
+    }
+
+    #[test]
+    fn warm_refits_are_deterministic() {
+        let mut s = tiny_builder().build().unwrap();
+        let a = s.fit(LambdaSpec::search(5, 2), 2).unwrap();
+        let b = s.fit(LambdaSpec::search(5, 2), 2).unwrap();
+        assert_eq!(a.components.len(), b.components.len());
+        for (x, y) in a.components.iter().zip(&b.components) {
+            assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+            assert_eq!(x.phi.to_bits(), y.phi.to_bits());
+            assert_eq!(x.pc.support, y.pc.support);
+            for (u, v) in x.pc.vector.iter().zip(&y.pc.vector) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_lambda_grid_reuses_stages() {
+        let obs = Arc::new(CountingProgress::new());
+        let mut s = tiny_builder().observer(Arc::clone(&obs) as Arc<dyn Progress>).build().unwrap();
+        s.reduce().unwrap();
+        let reads_after_reduce = obs.corpus_reads();
+        assert!(reads_after_reduce > 0, "reduce must stream the corpus");
+        let rc = s.reduced_corpus().unwrap();
+        let max_diag = (0..rc.n()).map(|i| rc.cov().diag(i)).fold(0.0f64, f64::max);
+        let lam_hi = 0.8 * max_diag;
+        for i in 1..=3 {
+            let lam = lam_hi * i as f64 / 4.0;
+            let fit = s.fit(LambdaSpec::Fixed(lam), 1).unwrap();
+            assert_eq!(fit.components[0].lambda, lam);
+        }
+        assert_eq!(obs.corpus_reads(), reads_after_reduce, "fits must not re-read the corpus");
+        assert_eq!(obs.lambda_evals(), 3);
+        assert_eq!(obs.began(Stage::Fit), 3);
+        assert_eq!(obs.finished(Stage::Fit), 3);
+    }
+
+    #[test]
+    fn observer_sees_stream_chunks() {
+        let obs = Arc::new(CountingProgress::new());
+        let mut s = tiny_builder()
+            .chunk_docs(100)
+            .observer(Arc::clone(&obs) as Arc<dyn Progress>)
+            .build()
+            .unwrap();
+        s.stream().unwrap();
+        assert_eq!(obs.began(Stage::Stream), 1);
+        assert_eq!(obs.finished(Stage::Stream), 1);
+        assert_eq!(obs.reads(Stage::Stream), 4, "400 docs / 100 per chunk");
+        assert_eq!(obs.docs(Stage::Stream), 400);
+    }
+
+    #[test]
+    fn reset_forces_restream() {
+        let obs = Arc::new(CountingProgress::new());
+        let mut s = tiny_builder().observer(Arc::clone(&obs) as Arc<dyn Progress>).build().unwrap();
+        s.stream().unwrap();
+        let r1 = obs.reads(Stage::Stream);
+        s.stream().unwrap(); // cached
+        assert_eq!(obs.reads(Stage::Stream), r1);
+        s.reset();
+        s.stream().unwrap();
+        assert_eq!(obs.reads(Stage::Stream), 2 * r1);
+    }
+
+    #[test]
+    fn stage_events_pair_even_when_a_stage_fails() {
+        let obs = Arc::new(CountingProgress::new());
+        // engine = "xla": validates (with the dense backend), streams and
+        // reduces natively, then fit fails at engine construction — after
+        // stage_began(Fit) has fired. The guard must still pair it.
+        let mut s = tiny_builder()
+            .engine("xla")
+            .observer(Arc::clone(&obs) as Arc<dyn Progress>)
+            .build()
+            .unwrap();
+        assert!(s.fit(LambdaSpec::search(5, 2), 1).is_err());
+        for stage in [Stage::Stream, Stage::Eliminate, Stage::Reduce, Stage::Fit] {
+            assert_eq!(obs.began(stage), obs.finished(stage), "unpaired events for {stage:?}");
+        }
+        assert_eq!(obs.began(Stage::Fit), 1);
+    }
+
+    #[test]
+    fn lambda_spec_from_config() {
+        let cfg = PipelineConfig { target_card: 7, card_slack: 1, ..Default::default() };
+        assert_eq!(LambdaSpec::from_config(&cfg), LambdaSpec::Search { target_card: 7, slack: 1 });
+    }
+}

@@ -416,9 +416,9 @@ pub fn solve_with<C: CovOp + ?Sized, F>(
     lambda: f64,
     opts: &BcaOptions,
     mut sweep_fn: F,
-) -> Result<BcaSolution, String>
+) -> Result<BcaSolution, crate::error::LsspcaError>
 where
-    F: FnMut(&mut SymMat, &BcaOptions) -> Result<f64, String>,
+    F: FnMut(&mut SymMat, &BcaOptions) -> Result<f64, crate::error::LsspcaError>,
 {
     let n = sigma.n();
     assert!(n > 0, "empty covariance");

@@ -83,7 +83,13 @@ pub struct LambdaSearchResult {
     pub hit_target: bool,
 }
 
-fn eval<C: CovOp + ?Sized>(
+/// One solver evaluation at a fixed λ, exactly as a [`search`] probe
+/// performs it: per-λ safe elimination (when `opts.per_lambda_elim`),
+/// BCA on the survivor view, PC extraction, and lifting back to the
+/// caller's coordinates. [`crate::session::Session::fit`] uses this for
+/// fixed-λ grid points so a grid solve is bitwise-identical to the same
+/// λ landing as a search probe.
+pub fn evaluate<C: CovOp + ?Sized>(
     sigma: &C,
     lambda: f64,
     opts: &LambdaSearchOptions,
@@ -133,6 +139,20 @@ fn eval<C: CovOp + ?Sized>(
 /// count, so the result is identical for any `threads` — see the
 /// `perf_equivalence` tests).
 pub fn search<C: CovOp + ?Sized>(sigma: &C, opts: &LambdaSearchOptions) -> LambdaSearchResult {
+    search_observed(sigma, opts, &mut |_| {})
+}
+
+/// [`search`] with a per-evaluation callback: `on_eval` fires for every
+/// probe as it is folded (deterministic ascending-λ order within a
+/// round), carrying the probe's λ, cardinality and φ — the λ-grid
+/// progress feed for [`crate::session::Progress`] observers. The
+/// callback cannot change the search: results are identical to
+/// [`search`] for any callback.
+pub fn search_observed<C: CovOp + ?Sized>(
+    sigma: &C,
+    opts: &LambdaSearchOptions,
+    on_eval: &mut dyn FnMut(&LambdaEval),
+) -> LambdaSearchResult {
     let n = sigma.n();
     assert!(n > 0);
     let probes = opts.probes_per_round.max(1);
@@ -153,7 +173,7 @@ pub fn search<C: CovOp + ?Sized>(sigma: &C, opts: &LambdaSearchOptions) -> Lambd
         let results = crate::util::parallel::par_map_indexed(
             opts.threads,
             lambdas.len(),
-            |k| eval(sigma, lambdas[k], opts),
+            |k| evaluate(sigma, lambdas[k], opts),
         );
         // Fold in ascending-λ order — deterministic regardless of which
         // worker evaluated which probe. An exact hit stops immediately; a
@@ -166,6 +186,7 @@ pub fn search<C: CovOp + ?Sized>(sigma: &C, opts: &LambdaSearchOptions) -> Lambd
             evals += 1;
             let card = pc.cardinality();
             trace.push(LambdaEval { lambda, cardinality: card, phi: sol.phi });
+            on_eval(trace.last().expect("just pushed"));
             let dist = card.abs_diff(opts.target_card);
             let key = (dist, sol.phi);
             if key.0 < best_key.0 || (key.0 == best_key.0 && key.1 > best_key.1) {

@@ -18,6 +18,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::data::docword::{DocChunk, DocwordHeader, DocwordReader};
+use crate::error::LsspcaError;
 use crate::moments::{FeatureMoments, FeatureVariances};
 
 // ---------------------------------------------------------------------------
@@ -137,7 +138,7 @@ pub trait ChunkSource {
     /// Total features (vocabulary size).
     fn num_features(&self) -> usize;
     /// Next chunk of at most `max_docs` documents, `None` at end.
-    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String>;
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError>;
 }
 
 /// Stream from a docword file.
@@ -147,7 +148,7 @@ pub struct FileSource {
 
 impl FileSource {
     /// Open a docword file (`.gz` transparently).
-    pub fn open(path: &Path) -> Result<FileSource, String> {
+    pub fn open(path: &Path) -> Result<FileSource, LsspcaError> {
         Ok(FileSource { reader: DocwordReader::open(path)? })
     }
 
@@ -162,7 +163,7 @@ impl ChunkSource for FileSource {
         self.reader.header().vocab_size
     }
 
-    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String> {
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
         self.reader.next_chunk(max_docs)
     }
 }
@@ -186,7 +187,7 @@ impl ChunkSource for SynthSource<'_> {
         self.corpus.spec.vocab_size
     }
 
-    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, String> {
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
         let total = self.corpus.spec.num_docs;
         if self.next_doc >= total {
             return Ok(None);
@@ -245,7 +246,7 @@ pub fn parallel_fold<S, A, FM, FF, FG>(
     make_acc: FM,
     fold: FF,
     merge: FG,
-) -> Result<(A, StreamStats), String>
+) -> Result<(A, StreamStats), LsspcaError>
 where
     S: ChunkSource,
     A: Send + 'static,
@@ -259,7 +260,7 @@ where
     let fold = Arc::new(fold);
     let mut stats = StreamStats::default();
 
-    let result: Result<A, String> = std::thread::scope(|scope| {
+    let result: Result<A, LsspcaError> = std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for _ in 0..opts.workers {
             let rx = rx.clone();
@@ -288,7 +289,7 @@ where
                     stats.nnz += chunk.total_nnz() as u64;
                     stats.chunks += 1;
                     if tx.send(chunk).is_err() {
-                        read_err = Some("all workers exited early".into());
+                        read_err = Some(LsspcaError::corpus("all workers exited early"));
                         break;
                     }
                 }
@@ -304,7 +305,7 @@ where
                     None => final_acc = Some(acc),
                     Some(ref mut f) => merge(f, acc),
                 },
-                Err(_) => panic_err = Some("worker thread panicked".to_string()),
+                Err(_) => panic_err = Some(LsspcaError::corpus("worker thread panicked")),
             }
         }
         if let Some(e) = read_err {
@@ -313,7 +314,7 @@ where
         if let Some(e) = panic_err {
             return Err(e);
         }
-        final_acc.ok_or_else(|| "no workers".to_string())
+        final_acc.ok_or_else(|| LsspcaError::corpus("no workers"))
     });
 
     stats.seconds = t0.elapsed().as_secs_f64();
@@ -324,7 +325,7 @@ where
 pub fn variance_pass<S: ChunkSource>(
     source: &mut S,
     opts: StreamOptions,
-) -> Result<(FeatureVariances, StreamStats), String> {
+) -> Result<(FeatureVariances, StreamStats), LsspcaError> {
     let nf = source.num_features();
     let (acc, stats) = parallel_fold(
         source,
@@ -340,7 +341,7 @@ pub fn variance_pass<S: ChunkSource>(
 pub fn variance_pass_file(
     path: &Path,
     opts: StreamOptions,
-) -> Result<(DocwordHeader, FeatureVariances, StreamStats), String> {
+) -> Result<(DocwordHeader, FeatureVariances, StreamStats), LsspcaError> {
     let mut src = FileSource::open(path)?;
     let header = src.header();
     let (fv, stats) = variance_pass(&mut src, opts)?;
@@ -432,14 +433,14 @@ mod tests {
     fn worker_panic_reported() {
         let c = corpus();
         let mut src = SynthSource::new(&c);
-        let res: Result<(u64, _), String> = parallel_fold(
+        let res: Result<(u64, _), LsspcaError> = parallel_fold(
             &mut src,
             StreamOptions { workers: 2, chunk_docs: 64, queue_depth: 2 },
             || 0u64,
             |_, _| panic!("injected failure"),
             |a, b| *a += b,
         );
-        let err = res.unwrap_err();
+        let err = res.unwrap_err().to_string();
         assert!(err.contains("panicked") || err.contains("exited early"), "{err}");
     }
 
@@ -450,11 +451,11 @@ mod tests {
             fn num_features(&self) -> usize {
                 1
             }
-            fn next_chunk(&mut self, _: usize) -> Result<Option<DocChunk>, String> {
-                Err("disk on fire".into())
+            fn next_chunk(&mut self, _: usize) -> Result<Option<DocChunk>, LsspcaError> {
+                Err(LsspcaError::corpus("disk on fire"))
             }
         }
         let res = variance_pass(&mut Broken, StreamOptions::default());
-        assert!(res.unwrap_err().contains("disk on fire"));
+        assert!(res.unwrap_err().to_string().contains("disk on fire"));
     }
 }

@@ -16,6 +16,7 @@
 //! });
 //! ```
 
+use crate::error::LsspcaError;
 use crate::util::rng::Rng;
 
 /// Base seed; combined with the case index so each case is independent but
@@ -57,32 +58,44 @@ where
 }
 
 /// Assert two floats are close in absolute-or-relative terms.
-pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+///
+/// Failures are [`LsspcaError::Numeric`]; inside [`property`] closures
+/// (which return `Result<(), String>`) `?` still works through the
+/// `From<LsspcaError> for String` bridge.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), LsspcaError> {
     let scale = 1.0_f64.max(a.abs()).max(b.abs());
     if (a - b).abs() <= tol * scale {
         Ok(())
     } else {
-        Err(format!("{a} !~ {b} (tol {tol}, |diff|={})", (a - b).abs()))
+        Err(LsspcaError::numeric(format!(
+            "{a} !~ {b} (tol {tol}, |diff|={})",
+            (a - b).abs()
+        )))
     }
 }
 
 /// Assert two slices are elementwise close.
-pub fn close_slice(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+pub fn close_slice(a: &[f64], b: &[f64], tol: f64) -> Result<(), LsspcaError> {
     if a.len() != b.len() {
-        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+        return Err(LsspcaError::numeric(format!(
+            "length mismatch {} vs {}",
+            a.len(),
+            b.len()
+        )));
     }
     for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
-        close(x, y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+        close(x, y, tol)
+            .map_err(|e| LsspcaError::numeric(format!("at index {i}: {}", e.message())))?;
     }
     Ok(())
 }
 
 /// Assert a boolean condition with a message.
-pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), LsspcaError> {
     if cond {
         Ok(())
     } else {
-        Err(msg.into())
+        Err(LsspcaError::numeric(msg.into()))
     }
 }
 
@@ -113,7 +126,8 @@ mod tests {
     #[test]
     fn close_slice_reports_index() {
         let e = close_slice(&[1.0, 2.0], &[1.0, 3.0], 1e-9).unwrap_err();
-        assert!(e.contains("index 1"));
+        assert!(e.to_string().contains("index 1"));
+        assert!(matches!(e, LsspcaError::Numeric { .. }));
         assert!(close_slice(&[1.0], &[1.0, 2.0], 1e-9).is_err());
     }
 }

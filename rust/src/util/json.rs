@@ -31,13 +31,16 @@ pub enum Json {
 
 impl Json {
     /// Parse a complete JSON document (trailing garbage is an error).
-    pub fn parse(text: &str) -> Result<Json, String> {
+    /// Failures are [`crate::error::LsspcaError::Config`] — malformed
+    /// input handed to the parser, whatever its transport.
+    pub fn parse(text: &str) -> Result<Json, crate::error::LsspcaError> {
+        use crate::error::LsspcaError;
         let bytes = text.as_bytes();
         let mut pos = 0usize;
-        let v = parse_value(bytes, &mut pos, 0)?;
+        let v = parse_value(bytes, &mut pos, 0).map_err(LsspcaError::config)?;
         skip_ws(bytes, &mut pos);
         if pos != bytes.len() {
-            return Err(format!("trailing data at byte {pos}"));
+            return Err(LsspcaError::config(format!("trailing data at byte {pos}")));
         }
         Ok(v)
     }

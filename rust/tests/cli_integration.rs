@@ -15,6 +15,12 @@ fn bin() -> PathBuf {
 }
 
 fn run(args: &[&str]) -> (bool, String) {
+    let (_, ok, text) = run_with_code(args);
+    (ok, text)
+}
+
+/// Like [`run`], additionally returning the process exit code.
+fn run_with_code(args: &[&str]) -> (Option<i32>, bool, String) {
     let out = Command::new(bin())
         .args(args)
         .output()
@@ -24,7 +30,7 @@ fn run(args: &[&str]) -> (bool, String) {
         String::from_utf8_lossy(&out.stdout),
         String::from_utf8_lossy(&out.stderr)
     );
-    (out.status.success(), text)
+    (out.status.code(), out.status.success(), text)
 }
 
 fn tmp(name: &str) -> PathBuf {
@@ -131,4 +137,36 @@ fn run_rejects_bad_flags() {
     assert!(text.contains("engine"), "{text}");
     let (ok, _) = run(&["gen"]); // missing required --out
     assert!(!ok);
+}
+
+#[test]
+fn exit_codes_distinguish_error_classes() {
+    // config error (invalid engine) → 2, printed via Display
+    let (code, ok, text) = run_with_code(&["run", "--engine", "gpu"]);
+    assert!(!ok);
+    assert_eq!(code, Some(2), "{text}");
+    assert!(text.contains("config error"), "{text}");
+    // argument-parse errors are config errors too → 2
+    let (code, _, _) = run_with_code(&["run", "--bogus-flag", "1"]);
+    assert_eq!(code, Some(2));
+    // io error (missing corpus file) → 3
+    let missing = tmp("definitely_missing.txt.gz");
+    let (code, ok, text) = run_with_code(&["run", "--input", &missing.display().to_string()]);
+    assert!(!ok);
+    assert_eq!(code, Some(3), "{text}");
+    assert!(text.contains("io error"), "{text}");
+    // io error (missing/corrupt model artifact) → 3
+    let model = tmp("no_such_model.lspm");
+    let (code, _, text) = run_with_code(&[
+        "score",
+        "--model",
+        &model.display().to_string(),
+        "--input",
+        &missing.display().to_string(),
+    ]);
+    assert_eq!(code, Some(3), "{text}");
+    // success stays 0
+    let (code, ok, _) = run_with_code(&["--help"]);
+    assert!(ok);
+    assert_eq!(code, Some(0));
 }

@@ -163,5 +163,5 @@ fn oversize_problem_is_clean_error() {
     let mut x = SymMat::identity(600);
     let opts = BcaOptions::default();
     let err = xla.bca_sweep(&mut x, &sigma, 0.1, 1e-5, &opts).unwrap_err();
-    assert!(err.contains("exceeds"), "{err}");
+    assert!(err.to_string().contains("exceeds"), "{err}");
 }

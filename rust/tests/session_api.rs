@@ -1,0 +1,211 @@
+//! Integration pins for the staged session API:
+//!
+//! (a) a warm `Session::fit` at a new (λ, K) returns PCs
+//!     **bitwise-identical** to a fresh one-shot run with the same
+//!     parameters,
+//! (b) reusing the `ReducedCorpus` across a λ grid performs **zero**
+//!     docword re-reads (instrumented via the `Progress` observer),
+//! (c) failures match on the structured `LsspcaError` variants
+//!     (corrupt cache → `Cache`, bad config → `Config`, missing
+//!     corpus → `Io`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lsspca::config::{Document, PipelineConfig};
+use lsspca::coordinator::Pipeline;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::data::shardcache::{self, ShardCacheKey};
+use lsspca::data::TripletMatrix;
+use lsspca::error::LsspcaError;
+use lsspca::session::{CountingProgress, LambdaSpec, Progress, Session, Stage};
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_session_api_{}_{name}", std::process::id()));
+    p
+}
+
+/// Write a small deterministic corpus to disk (docword + vocab).
+fn corpus_file(name: &str) -> PathBuf {
+    let corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(500, 2000), 42);
+    let path = tmp(&format!("{name}.txt.gz"));
+    corpus.write_docword(&path).unwrap();
+    path
+}
+
+fn cleanup(path: &PathBuf) {
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(path.with_extension("vocab")).ok();
+}
+
+fn file_config(input: &PathBuf, num_pcs: usize) -> PipelineConfig {
+    PipelineConfig {
+        input: input.display().to_string(),
+        workers: 2,
+        chunk_docs: 128,
+        num_pcs,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 48,
+        bca_sweeps: 5,
+        ..Default::default()
+    }
+}
+
+fn assert_components_bitwise(
+    a: &[lsspca::coordinator::ComponentReport],
+    b: &[lsspca::coordinator::ComponentReport],
+) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+        assert_eq!(x.phi.to_bits(), y.phi.to_bits());
+        assert_eq!(x.pc.support, y.pc.support);
+        assert_eq!(x.pc.vector.len(), y.pc.vector.len());
+        for (u, v) in x.pc.vector.iter().zip(&y.pc.vector) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(x.words, y.words);
+    }
+}
+
+// -- (a) warm fit at a new (λ, K) is bitwise a fresh one-shot run -----------
+
+#[test]
+fn warm_fit_at_new_k_bitwise_matches_fresh_oneshot() {
+    let path = corpus_file("warm_k");
+    // Warm a session with a K=3 search fit...
+    let mut session = Session::from_config(file_config(&path, 3)).unwrap();
+    let first = session.fit(LambdaSpec::search(5, 2), 3).unwrap();
+    assert_eq!(first.components.len(), 3);
+    // ...then re-fit at K=2 without re-streaming, and compare against a
+    // completely fresh one-shot pipeline run configured for K=2.
+    let warm = session.fit(LambdaSpec::search(5, 2), 2).unwrap();
+    let fresh = Pipeline::new(file_config(&path, 2)).run().unwrap();
+    assert_components_bitwise(&warm.components, &fresh.components);
+    assert_eq!(warm.topic_table, fresh.topic_table);
+    assert_eq!(warm.model, fresh.model);
+    // the K=3 fit's first two components are the same solves too
+    assert_components_bitwise(&warm.components, &first.components[..2]);
+    cleanup(&path);
+}
+
+#[test]
+fn warm_fit_at_new_lambda_bitwise_matches_fresh_session() {
+    let path = corpus_file("warm_lambda");
+    let mut warm = Session::from_config(file_config(&path, 2)).unwrap();
+    // warm every stage with a search fit, then pick a λ the session has
+    // already solved *near* but not at
+    let probe = warm.fit(LambdaSpec::search(5, 2), 1).unwrap();
+    let lam = 0.75 * probe.components[0].lambda;
+    let warm_fit = warm.fit(LambdaSpec::Fixed(lam), 2).unwrap();
+    // a fresh session running the identical fixed-λ fit from scratch
+    let mut fresh = Session::from_config(file_config(&path, 2)).unwrap();
+    let fresh_fit = fresh.fit(LambdaSpec::Fixed(lam), 2).unwrap();
+    assert_components_bitwise(&warm_fit.components, &fresh_fit.components);
+    assert_eq!(warm_fit.model, fresh_fit.model);
+    for c in &warm_fit.components {
+        assert_eq!(c.lambda, lam);
+    }
+    cleanup(&path);
+}
+
+// -- (b) λ-grid reuse performs zero docword re-reads ------------------------
+
+#[test]
+fn lambda_grid_reuse_never_rereads_docword() {
+    let path = corpus_file("grid");
+    let obs = Arc::new(CountingProgress::new());
+    let mut session = Session::from_config(file_config(&path, 2)).unwrap();
+    session.set_observer(Arc::clone(&obs) as Arc<dyn Progress>);
+    // stage the corpus once: stream + reduce both read the file
+    session.reduce().unwrap();
+    let staged_reads = obs.corpus_reads();
+    assert!(staged_reads > 0, "staging must stream the corpus");
+    assert!(obs.docs(Stage::Stream) == 500 && obs.docs(Stage::Reduce) == 500);
+    // a λ grid over the reduced operator's diagonal range
+    let max_diag = {
+        let rc = session.reduced_corpus().unwrap();
+        (0..rc.n()).map(|i| rc.cov().diag(i)).fold(0.0f64, f64::max)
+    };
+    let grid: Vec<f64> = (1..=4).map(|i| 0.9 * max_diag * i as f64 / 5.0).collect();
+    for &lam in &grid {
+        let fit = session.fit(LambdaSpec::Fixed(lam), 1).unwrap();
+        assert_eq!(fit.components[0].lambda, lam);
+    }
+    // plus a full λ-search re-fit at a new K
+    session.fit(LambdaSpec::search(5, 2), 2).unwrap();
+    // the docword file was never touched again
+    assert_eq!(
+        obs.corpus_reads(),
+        staged_reads,
+        "warm fits must perform zero docword re-reads"
+    );
+    // the observer did see the fits: λ evaluations and fit stages
+    assert!(obs.lambda_evals() >= grid.len() as u64 + 2);
+    assert_eq!(obs.began(Stage::Fit), grid.len() as u64 + 1);
+    assert_eq!(obs.finished(Stage::Fit), grid.len() as u64 + 1);
+    cleanup(&path);
+}
+
+// -- (c) error-variant matching ---------------------------------------------
+
+#[test]
+fn bad_config_is_a_config_error() {
+    // unparsable document
+    let e = Document::parse("not a key value line").unwrap_err();
+    assert!(matches!(e, LsspcaError::Config { .. }), "{e}");
+    // parsable but invalid knob combination
+    let doc = Document::parse("[solver]\nengine = \"gpu\"").unwrap();
+    let e = PipelineConfig::from_document(&doc).unwrap_err();
+    assert!(matches!(e, LsspcaError::Config { .. }), "{e}");
+    assert_eq!(e.exit_code(), 2);
+    // the session builder rejects the same combination the same way
+    let e = Session::builder().engine("gpu").build().unwrap_err();
+    assert!(matches!(e, LsspcaError::Config { .. }), "{e}");
+}
+
+#[test]
+fn corrupt_shard_cache_is_a_cache_error() {
+    let dir = tmp("cache_dir");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut t = TripletMatrix::new(30, 8);
+    for r in 0..30 {
+        t.push(r, r % 8, 1.0 + r as f64);
+    }
+    let csr = t.to_csr();
+    let key = ShardCacheKey { corpus_digest: 0xabc, elim_digest: 0xdef };
+    let man = shardcache::write(&dir, &key, &csr, 30, 256).unwrap();
+    // corrupt the manifest: open must fail with a Cache error
+    let mpath = shardcache::manifest_path(&dir, &key);
+    let mut bytes = std::fs::read(&mpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&mpath, &bytes).unwrap();
+    let e = shardcache::open(&dir, &key).unwrap_err();
+    assert!(matches!(e, LsspcaError::Cache { .. }), "{e}");
+    assert_eq!(e.exit_code(), 4);
+    // restore the manifest, then corrupt a shard instead:
+    // verify_shards reports a Cache error too
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&mpath, &bytes).unwrap();
+    let spath = shardcache::shard_path(&dir, &key, 0);
+    let mut sbytes = std::fs::read(&spath).unwrap();
+    let smid = sbytes.len() / 2;
+    sbytes[smid] ^= 0x01;
+    std::fs::write(&spath, &sbytes).unwrap();
+    let e = shardcache::verify_shards(&dir, &man, 1).unwrap_err();
+    assert!(matches!(e, LsspcaError::Cache { .. }), "{e}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_corpus_is_an_io_error() {
+    let cfg = file_config(&tmp("does_not_exist.txt.gz"), 1);
+    let e = Pipeline::new(cfg).run().unwrap_err();
+    assert!(matches!(e, LsspcaError::Io { .. }), "{e}");
+    assert_eq!(e.exit_code(), 3);
+    // the structured error still renders a useful message
+    assert!(e.to_string().contains("does_not_exist"), "{e}");
+}
