@@ -11,11 +11,12 @@
 //! u64 docs, u64 n, then 3n f64 (variance, mean, second_moment), then a
 //! trailing xor-fold checksum of the payload.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::{Path, PathBuf};
 
 use crate::error::LsspcaError;
 use crate::moments::FeatureVariances;
+use crate::util::{atomic_write, faultinject, retry};
 
 const MAGIC: &[u8; 4] = b"LSPV";
 const VERSION: u32 = 1;
@@ -42,6 +43,12 @@ pub fn path_for(cache_dir: &Path, key: u64) -> PathBuf {
 /// Save a variance checkpoint. Failures are [`LsspcaError::Cache`] —
 /// an unwritable cache is a cache-layer condition the pipeline degrades
 /// around, not a hard I/O failure of the run itself.
+///
+/// The write is crash-atomic (tmp + fsync + rename, see
+/// [`crate::util::atomic_write`]): a kill mid-save can never replace a
+/// valid checkpoint with a torn one. Transient write failures retry
+/// under the process [`retry::policy`]; exhaustion surfaces as a
+/// *transient* cache error ([`LsspcaError::is_transient`]).
 pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), LsspcaError> {
     let cache_err = |what: &str, e: std::io::Error| {
         LsspcaError::cache(format!("checkpoint {}: {what}: {e}", path.display()))
@@ -52,22 +59,23 @@ pub fn save(path: &Path, key: u64, fv: &FeatureVariances) -> Result<(), LsspcaEr
     let n = fv.variance.len();
     assert_eq!(fv.mean.len(), n);
     assert_eq!(fv.second_moment.len(), n);
-    let mut payload = Vec::with_capacity(24 + 24 * n);
-    payload.extend_from_slice(&key.to_le_bytes());
-    payload.extend_from_slice(&fv.docs.to_le_bytes());
-    payload.extend_from_slice(&(n as u64).to_le_bytes());
+    let mut bytes = Vec::with_capacity(16 + 24 + 24 * n);
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&VERSION.to_le_bytes());
+    bytes.extend_from_slice(&key.to_le_bytes());
+    bytes.extend_from_slice(&fv.docs.to_le_bytes());
+    bytes.extend_from_slice(&(n as u64).to_le_bytes());
     for series in [&fv.variance, &fv.mean, &fv.second_moment] {
         for v in series.iter() {
-            payload.extend_from_slice(&v.to_le_bytes());
+            bytes.extend_from_slice(&v.to_le_bytes());
         }
     }
-    let sum = checksum(&payload);
-    let mut f = std::fs::File::create(path).map_err(|e| cache_err("create", e))?;
-    f.write_all(MAGIC).map_err(|e| cache_err("write", e))?;
-    f.write_all(&VERSION.to_le_bytes()).map_err(|e| cache_err("write", e))?;
-    f.write_all(&payload).map_err(|e| cache_err("write", e))?;
-    f.write_all(&sum.to_le_bytes()).map_err(|e| cache_err("write", e))?;
-    Ok(())
+    let sum = checksum(&bytes[8..]);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    retry::with_retry(&retry::policy(), || atomic_write(path, "checkpoint", &bytes)).map_err(|e| {
+        let msg = e.describe(&format!("checkpoint {}: write", path.display()));
+        if e.transient { LsspcaError::cache_transient(msg) } else { LsspcaError::cache(msg) }
+    })
 }
 
 /// Load a checkpoint; verifies magic, version, key, checksum **and** the
@@ -82,14 +90,24 @@ pub fn load(
     key: u64,
     expected_n: Option<usize>,
 ) -> Result<Option<FeatureVariances>, LsspcaError> {
-    let mut f = match std::fs::File::open(path) {
-        Ok(f) => f,
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
-        Err(e) => return Err(LsspcaError::cache(format!("open {}: {e}", path.display()))),
+    let buf = match retry::with_retry(&retry::policy(), || {
+        let f = std::fs::File::open(path)?;
+        let mut r = faultinject::wrap_read("checkpoint", f);
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        Ok(buf)
+    }) {
+        Ok(buf) => buf,
+        Err(e) if e.error.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            let msg = e.describe(&format!("read {}", path.display()));
+            return Err(if e.transient {
+                LsspcaError::cache_transient(msg)
+            } else {
+                LsspcaError::cache(msg)
+            });
+        }
     };
-    let mut buf = Vec::new();
-    f.read_to_end(&mut buf)
-        .map_err(|e| LsspcaError::cache(format!("read {}: {e}", path.display())))?;
     if buf.len() < 8 + 24 + 8 || &buf[..4] != MAGIC {
         return Err(LsspcaError::cache("checkpoint: bad magic or truncated header"));
     }

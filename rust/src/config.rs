@@ -221,6 +221,14 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("model", "normalize"),
     ("serve", "addr"),
     ("serve", "pool"),
+    ("serve", "timeout_secs"),
+    ("robustness", "max_bad_records"),
+    ("robustness", "dead_letter_path"),
+    ("robustness", "retry_attempts"),
+    ("robustness", "retry_base_ms"),
+    ("robustness", "job_state"),
+    ("robustness", "job_state_chunks"),
+    ("robustness", "faults"),
 ];
 
 /// Levenshtein edit distance (the strings involved are tiny).
@@ -423,6 +431,34 @@ pub struct PipelineConfig {
     pub serve_addr: String,
     /// Connection-handler threads for `lsspca serve` (`[serve] pool`).
     pub serve_pool: usize,
+    /// Per-connection socket read/write timeout in seconds for
+    /// `lsspca serve` (`[serve] timeout_secs`; 0 = no timeout).
+    pub serve_timeout_secs: u64,
+    /// Tolerated count of malformed corpus records (`[robustness]
+    /// max_bad_records`). 0 (default) keeps the strict behavior: the
+    /// first bad record aborts the run. > 0 quarantines bad records to
+    /// the dead-letter queue and aborts only past this budget.
+    pub robust_max_bad_records: u64,
+    /// Dead-letter queue path (`[robustness] dead_letter_path`; empty =
+    /// derived: `<cache_dir>/deadletter_<digest>.jsonl`, or
+    /// `<input>.deadletter.jsonl` without a cache dir).
+    pub robust_dead_letter_path: String,
+    /// Attempts per transient-I/O operation (`[robustness]
+    /// retry_attempts`, >= 1; 1 = no retry).
+    pub robust_retry_attempts: usize,
+    /// Base backoff delay in ms for transient-I/O retries
+    /// (`[robustness] retry_base_ms`; doubles per retry, capped).
+    pub robust_retry_base_ms: u64,
+    /// Persist resumable job state during the variance pass
+    /// (`[robustness] job_state`; needs `corpus.cache_dir`).
+    pub robust_job_state: bool,
+    /// Chunks between job-state snapshots (`[robustness]
+    /// job_state_chunks`, >= 1).
+    pub robust_job_state_chunks: usize,
+    /// Deterministic fault-injection plan (`[robustness] faults`,
+    /// `op:tag@offset;...` — see `util::faultinject`; empty = off; test
+    /// harness only).
+    pub robust_faults: String,
 }
 
 impl Default for PipelineConfig {
@@ -458,6 +494,14 @@ impl Default for PipelineConfig {
             score_normalize: false,
             serve_addr: "127.0.0.1:7878".into(),
             serve_pool: 4,
+            serve_timeout_secs: 10,
+            robust_max_bad_records: 0,
+            robust_dead_letter_path: String::new(),
+            robust_retry_attempts: 3,
+            robust_retry_base_ms: 10,
+            robust_job_state: true,
+            robust_job_state_chunks: 64,
+            robust_faults: String::new(),
         }
     }
 }
@@ -502,6 +546,30 @@ impl PipelineConfig {
             score_normalize: doc.bool_or("model", "normalize", d.score_normalize)?,
             serve_addr: doc.str_or("serve", "addr", &d.serve_addr)?,
             serve_pool: doc.usize_or("serve", "pool", d.serve_pool)?,
+            serve_timeout_secs: doc.u64_or("serve", "timeout_secs", d.serve_timeout_secs)?,
+            robust_max_bad_records: doc.u64_or(
+                "robustness",
+                "max_bad_records",
+                d.robust_max_bad_records,
+            )?,
+            robust_dead_letter_path: doc.str_or(
+                "robustness",
+                "dead_letter_path",
+                &d.robust_dead_letter_path,
+            )?,
+            robust_retry_attempts: doc.usize_or(
+                "robustness",
+                "retry_attempts",
+                d.robust_retry_attempts,
+            )?,
+            robust_retry_base_ms: doc.u64_or("robustness", "retry_base_ms", d.robust_retry_base_ms)?,
+            robust_job_state: doc.bool_or("robustness", "job_state", d.robust_job_state)?,
+            robust_job_state_chunks: doc.usize_or(
+                "robustness",
+                "job_state_chunks",
+                d.robust_job_state_chunks,
+            )?,
+            robust_faults: doc.str_or("robustness", "faults", &d.robust_faults)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -578,6 +646,17 @@ impl PipelineConfig {
         if self.serve_addr.is_empty() {
             return bad("serve.addr must not be empty".into());
         }
+        if self.robust_retry_attempts == 0 {
+            return bad("robustness.retry_attempts must be >= 1".into());
+        }
+        if self.robust_job_state_chunks == 0 {
+            return bad("robustness.job_state_chunks must be >= 1".into());
+        }
+        if !self.robust_faults.is_empty() {
+            if let Err(e) = crate::util::faultinject::FaultPlan::parse(&self.robust_faults) {
+                return bad(format!("robustness.faults: {e}"));
+            }
+        }
         Ok(())
     }
 }
@@ -638,6 +717,47 @@ lambdas = [0.1, 0.2, 0.5]
     fn validation_rejects_bad_engine() {
         let doc = Document::parse("[solver]\nengine = \"gpu\"").unwrap();
         assert!(PipelineConfig::from_document(&doc).is_err());
+    }
+
+    #[test]
+    fn robustness_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[robustness]\nmax_bad_records = 25\ndead_letter_path = \"dlq.jsonl\"\n\
+             retry_attempts = 5\nretry_base_ms = 20\njob_state = false\n\
+             job_state_chunks = 8\nfaults = \"rinterrupt:checkpoint@4\"",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.robust_max_bad_records, 25);
+        assert_eq!(cfg.robust_dead_letter_path, "dlq.jsonl");
+        assert_eq!(cfg.robust_retry_attempts, 5);
+        assert_eq!(cfg.robust_retry_base_ms, 20);
+        assert!(!cfg.robust_job_state);
+        assert_eq!(cfg.robust_job_state_chunks, 8);
+        assert_eq!(cfg.robust_faults, "rinterrupt:checkpoint@4");
+        // defaults: strict reader, job state on, 3 retry attempts
+        let d = PipelineConfig::default();
+        assert_eq!(d.robust_max_bad_records, 0);
+        assert!(d.robust_job_state);
+        assert_eq!(d.robust_retry_attempts, 3);
+
+        // zero retries / zero cadence / unparsable fault plans are
+        // config errors, not silent surprises at hour three
+        for bad in [
+            "[robustness]\nretry_attempts = 0",
+            "[robustness]\njob_state_chunks = 0",
+            "[robustness]\nfaults = \"explode:everything@now\"",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(PipelineConfig::from_document(&doc).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn serve_timeout_parses() {
+        let doc = Document::parse("[serve]\ntimeout_secs = 0").unwrap();
+        assert_eq!(PipelineConfig::from_document(&doc).unwrap().serve_timeout_secs, 0);
+        assert_eq!(PipelineConfig::default().serve_timeout_secs, 10);
     }
 
     #[test]

@@ -18,7 +18,9 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
+use crate::deadletter::{BadRecordReason, RecordPolicy};
 use crate::error::LsspcaError;
+use crate::util::faultinject;
 use crate::util::gzip::{GzDecoder, GzEncoder};
 
 /// Header of a docword file.
@@ -56,7 +58,7 @@ impl DocChunk {
 }
 
 fn open_maybe_gz(path: &Path) -> std::io::Result<Box<dyn BufRead + Send>> {
-    let f = File::open(path)?;
+    let f = faultinject::wrap_read("docword", File::open(path)?);
     if path.extension().is_some_and(|e| e == "gz") {
         // Inner BufReader feeds the decoder's byte-at-a-time bit reader
         // from memory (one syscall per compressed byte otherwise); the
@@ -76,6 +78,12 @@ pub struct DocwordReader {
     pending: Option<(usize, u32, f64)>,
     docs_seen: usize,
     nnz_seen: usize,
+    /// 1-based data-line counter (the dead-letter `offset`).
+    data_line: u64,
+    /// Last docID seen (1-based), for the monotonicity check.
+    last_doc: Option<usize>,
+    /// `Some` = quarantine malformed records instead of aborting.
+    policy: Option<RecordPolicy>,
 }
 
 impl DocwordReader {
@@ -83,6 +91,18 @@ impl DocwordReader {
     /// A filesystem failure is [`LsspcaError::Io`]; a present-but-
     /// malformed header is [`LsspcaError::Corpus`].
     pub fn open(path: &Path) -> Result<DocwordReader, LsspcaError> {
+        DocwordReader::open_with_policy(path, None)
+    }
+
+    /// [`open`](DocwordReader::open), optionally with a dead-letter
+    /// [`RecordPolicy`]: with a policy, malformed *data* records are
+    /// quarantined and skipped (up to the policy's budget) instead of
+    /// aborting the stream. The header is always strict — a damaged
+    /// header means there is no trustworthy stream to salvage.
+    pub fn open_with_policy(
+        path: &Path,
+        policy: Option<RecordPolicy>,
+    ) -> Result<DocwordReader, LsspcaError> {
         let reader = open_maybe_gz(path)
             .map_err(|e| LsspcaError::io_at(path, format!("open docword: {e}")))?;
         let mut lines = reader.lines();
@@ -104,6 +124,9 @@ impl DocwordReader {
             pending: None,
             docs_seen: 0,
             nnz_seen: 0,
+            data_line: 0,
+            last_doc: None,
+            policy,
         })
     }
 
@@ -112,42 +135,113 @@ impl DocwordReader {
         self.header
     }
 
+    /// Distinct records quarantined by this reader's policy across all
+    /// passes (0 when running strict).
+    pub fn bad_records(&self) -> u64 {
+        self.policy.as_ref().map_or(0, RecordPolicy::quarantined)
+    }
+
+    /// Strict mode: abort with a corpus error. Quarantine mode: spill the
+    /// record to the dead-letter queue and let the caller skip it (the
+    /// budget check inside [`RecordPolicy::admit`] may still abort).
+    fn reject(
+        &mut self,
+        reason: BadRecordReason,
+        detail: String,
+        line: &str,
+    ) -> Result<(), LsspcaError> {
+        match self.policy.as_mut() {
+            None => Err(LsspcaError::corpus(detail)),
+            Some(p) => p.admit(self.data_line, reason, &detail, line),
+        }
+    }
+
     fn next_triple(&mut self) -> Result<Option<(usize, u32, f64)>, LsspcaError> {
         if let Some(t) = self.pending.take() {
             return Ok(Some(t));
         }
-        for line in self.lines.by_ref() {
-            let line = line.map_err(|e| LsspcaError::corpus(format!("read error: {e}")))?;
+        loop {
+            let line = match self.lines.next() {
+                None => return Ok(None),
+                Some(Ok(l)) => l,
+                Some(Err(e)) => {
+                    let detail = format!("read error: {e}");
+                    // A gzip member whose CRC32 trailer fails is damage,
+                    // not formatting: quarantine the event, then stop —
+                    // the decompressed stream past it is untrustworthy.
+                    if self.policy.is_some() && e.to_string().contains("CRC32 mismatch") {
+                        self.data_line += 1;
+                        self.reject(BadRecordReason::GzipCrc, detail, "")?;
+                        return Ok(None);
+                    }
+                    return Err(LsspcaError::corpus(detail));
+                }
+            };
+            self.data_line += 1;
             let trimmed = line.trim();
             if trimmed.is_empty() {
                 continue;
             }
             let mut it = trimmed.split_ascii_whitespace();
-            let doc: usize = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| LsspcaError::corpus(format!("bad docID in line '{trimmed}'")))?;
-            let word: usize = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| LsspcaError::corpus(format!("bad wordID in line '{trimmed}'")))?;
-            let count: f64 = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| LsspcaError::corpus(format!("bad count in line '{trimmed}'")))?;
+            let Some(doc) = it.next().and_then(|s| s.parse::<usize>().ok()) else {
+                self.reject(
+                    BadRecordReason::BadDocId,
+                    format!("bad docID in line '{trimmed}'"),
+                    trimmed,
+                )?;
+                continue;
+            };
+            let Some(word) = it.next().and_then(|s| s.parse::<usize>().ok()) else {
+                self.reject(
+                    BadRecordReason::BadWordId,
+                    format!("bad wordID in line '{trimmed}'"),
+                    trimmed,
+                )?;
+                continue;
+            };
+            let Some(count) = it.next().and_then(|s| s.parse::<f64>().ok()) else {
+                self.reject(
+                    BadRecordReason::BadCount,
+                    format!("bad count in line '{trimmed}'"),
+                    trimmed,
+                )?;
+                continue;
+            };
             if doc == 0 || word == 0 {
-                return Err(LsspcaError::corpus(format!("ids are 1-based; got line '{trimmed}'")));
+                self.reject(
+                    BadRecordReason::ZeroId,
+                    format!("ids are 1-based; got line '{trimmed}'"),
+                    trimmed,
+                )?;
+                continue;
             }
             if word > self.header.vocab_size {
-                return Err(LsspcaError::corpus(format!(
-                    "wordID {word} exceeds W={} in line '{trimmed}'",
-                    self.header.vocab_size
-                )));
+                self.reject(
+                    BadRecordReason::WordOutOfRange,
+                    format!(
+                        "wordID {word} exceeds W={} in line '{trimmed}'",
+                        self.header.vocab_size
+                    ),
+                    trimmed,
+                )?;
+                continue;
             }
+            // UCI files are sorted by docID; a docID going backwards means
+            // shuffled or spliced data (equal is fine — same doc continues).
+            if let Some(last) = self.last_doc {
+                if doc < last {
+                    self.reject(
+                        BadRecordReason::NonMonotonicDoc,
+                        format!("non-monotonic docID {doc} after {last} in line '{trimmed}'"),
+                        trimmed,
+                    )?;
+                    continue;
+                }
+            }
+            self.last_doc = Some(doc);
             self.nnz_seen += 1;
             return Ok(Some((doc - 1, (word - 1) as u32, count)));
         }
-        Ok(None)
     }
 
     /// Read the next chunk of up to `max_docs` documents. Returns `None` at
@@ -372,6 +466,79 @@ mod tests {
         let mut r = DocwordReader::open(&p).unwrap();
         assert!(r.next_chunk(1).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn strict_rejects_non_monotonic_doc_ids() {
+        let p = tmpfile("nonmono.txt");
+        std::fs::write(&p, "3\n5\n3\n1 1 1\n3 1 1\n2 1 1\n").unwrap();
+        let mut r = DocwordReader::open(&p).unwrap();
+        let err = loop {
+            match r.next_chunk(10) {
+                Err(e) => break e,
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("expected a non-monotonic error"),
+            }
+        };
+        assert!(err.to_string().contains("non-monotonic"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn policy_quarantines_and_stream_continues() {
+        use crate::deadletter::{read_records, BadRecordReason, DeadLetterQueue, RecordPolicy};
+        let p = tmpfile("quarantine.txt");
+        let dlq = tmpfile("quarantine.jsonl");
+        std::fs::remove_file(&dlq).ok();
+        // data lines: good, bad count, zero id, out-of-range, good,
+        // non-monotonic, good (doc 3 continues after the rejected doc 1)
+        std::fs::write(
+            &p,
+            "3\n5\n4\n1 1 2\n1 2 oops\n0 3 1\n2 6 1\n2 2 5\n1 1 9\n3 4 1\n",
+        )
+        .unwrap();
+        let policy = RecordPolicy::new(10, DeadLetterQueue::open(&dlq).unwrap());
+        let mut r = DocwordReader::open_with_policy(&p, Some(policy)).unwrap();
+        let mut docs = Vec::new();
+        while let Some(chunk) = r.next_chunk(2).unwrap() {
+            docs.extend(chunk.docs);
+        }
+        assert_eq!(docs.len(), 3);
+        assert_eq!(docs[0].words, vec![(0, 2.0)]);
+        assert_eq!(docs[1].words, vec![(1, 5.0)]);
+        assert_eq!(docs[2].words, vec![(3, 1.0)]);
+        assert_eq!(r.bad_records(), 4);
+        let recs = read_records(&dlq).unwrap();
+        let reasons: Vec<_> = recs.iter().map(|r| r.reason.unwrap()).collect();
+        assert_eq!(
+            reasons,
+            vec![
+                BadRecordReason::BadCount,
+                BadRecordReason::ZeroId,
+                BadRecordReason::WordOutOfRange,
+                BadRecordReason::NonMonotonicDoc,
+            ]
+        );
+        // offsets are 1-based data-line numbers (header excluded)
+        assert_eq!(recs.iter().map(|r| r.offset).collect::<Vec<_>>(), vec![2, 3, 4, 6]);
+        assert!(recs.iter().all(|r| r.crc_ok));
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&dlq).ok();
+    }
+
+    #[test]
+    fn policy_budget_aborts_stream() {
+        use crate::deadletter::{DeadLetterQueue, RecordPolicy};
+        let p = tmpfile("budget.txt");
+        let dlq = tmpfile("budget.jsonl");
+        std::fs::remove_file(&dlq).ok();
+        std::fs::write(&p, "2\n5\n2\n1 1 a\n1 2 b\n2 1 1\n").unwrap();
+        let policy = RecordPolicy::new(1, DeadLetterQueue::open(&dlq).unwrap());
+        let mut r = DocwordReader::open_with_policy(&p, Some(policy)).unwrap();
+        let err = r.next_chunk(10).unwrap_err();
+        assert!(err.to_string().contains("too many bad records"), "{err}");
+        std::fs::remove_file(&p).ok();
+        std::fs::remove_file(&dlq).ok();
     }
 
     #[test]

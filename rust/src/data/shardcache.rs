@@ -46,13 +46,14 @@
 //! `corpus.cache_dir` at a directory you trust; the no-config fallback
 //! is a per-user directory created with user-only permissions on Unix.
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::{Path, PathBuf};
 
 use crate::data::sparse::CsrMatrix;
 use crate::elim::SafeElimination;
 use crate::error::LsspcaError;
 use crate::util::xor_fold_checksum as checksum;
+use crate::util::{atomic_write, faultinject, retry};
 
 const MANIFEST_MAGIC: &[u8; 4] = b"LSSM";
 const SHARD_MAGIC: &[u8; 4] = b"LSSH";
@@ -229,29 +230,43 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Frame a payload (magic + version + payload + checksum) and write it.
-fn write_framed(path: &Path, magic: &[u8; 4], payload: &[u8]) -> Result<(), LsspcaError> {
+/// Frame a payload (magic + version + payload + checksum) and write it
+/// crash-atomically (tmp + fsync + rename via
+/// [`crate::util::atomic_write`]) with transient-I/O retry. `tag` names
+/// the fault-injection stream (`"manifest"` / `"shard"`).
+fn write_framed(path: &Path, magic: &[u8; 4], tag: &str, payload: &[u8]) -> Result<(), LsspcaError> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)
             .map_err(|e| LsspcaError::cache(format!("mkdir {}: {e}", dir.display())))?;
     }
     let sum = checksum(payload);
-    let mut f = std::fs::File::create(path)
-        .map_err(|e| LsspcaError::cache(format!("create {}: {e}", path.display())))?;
-    f.write_all(magic).map_err(|e| LsspcaError::cache(e.to_string()))?;
-    f.write_all(&VERSION.to_le_bytes()).map_err(|e| LsspcaError::cache(e.to_string()))?;
-    f.write_all(payload).map_err(|e| LsspcaError::cache(e.to_string()))?;
-    f.write_all(&sum.to_le_bytes()).map_err(|e| LsspcaError::cache(e.to_string()))?;
-    Ok(())
+    let mut bytes = Vec::with_capacity(16 + payload.len());
+    bytes.extend_from_slice(magic);
+    bytes.extend_from_slice(&VERSION.to_le_bytes());
+    bytes.extend_from_slice(payload);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    retry::with_retry(&retry::policy(), || atomic_write(path, tag, &bytes)).map_err(|e| {
+        let msg = e.describe(&format!("write {}", path.display()));
+        if e.transient { LsspcaError::cache_transient(msg) } else { LsspcaError::cache(msg) }
+    })
 }
 
 /// Read a framed file back, verifying magic, version and checksum.
-/// Returns the payload bytes.
+/// Returns the payload bytes. Transient read failures retry under the
+/// process [`retry::policy`].
 fn read_framed(path: &Path, magic: &[u8; 4], what: &str) -> Result<Vec<u8>, LsspcaError> {
-    let mut f = std::fs::File::open(path)
-        .map_err(|e| LsspcaError::cache(format!("open {}: {e}", path.display())))?;
-    let mut buf = Vec::new();
-    f.read_to_end(&mut buf).map_err(|e| LsspcaError::cache(e.to_string()))?;
+    let tag = if magic == MANIFEST_MAGIC { "manifest" } else { "shard" };
+    let buf = retry::with_retry(&retry::policy(), || {
+        let f = std::fs::File::open(path)?;
+        let mut r = faultinject::wrap_read(tag, f);
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        Ok(buf)
+    })
+    .map_err(|e| {
+        let msg = e.describe(&format!("{what} {}", path.display()));
+        if e.transient { LsspcaError::cache_transient(msg) } else { LsspcaError::cache(msg) }
+    })?;
     if buf.len() < 16 || &buf[..4] != magic {
         return Err(LsspcaError::cache(format!(
             "{what} {}: bad magic or truncated header",
@@ -376,7 +391,7 @@ pub fn write(
             put_f64(&mut payload, v);
         }
         let sum = checksum(&payload);
-        write_framed(&shard_path(dir, key, idx), SHARD_MAGIC, &payload)?;
+        write_framed(&shard_path(dir, key, idx), SHARD_MAGIC, "shard", &payload)?;
         shards.push(ShardMeta { col_start, ncols, nnz: hi - lo, checksum: sum });
     }
 
@@ -417,7 +432,7 @@ fn write_manifest(dir: &Path, man: &ShardManifest) -> Result<(), LsspcaError> {
     for &v in &man.diag {
         put_f64(&mut payload, v);
     }
-    write_framed(&manifest_path(dir, &man.key), MANIFEST_MAGIC, &payload)
+    write_framed(&manifest_path(dir, &man.key), MANIFEST_MAGIC, "manifest", &payload)
 }
 
 /// Open a shard cache: `Ok(None)` when no manifest exists for the key

@@ -1,0 +1,414 @@
+//! Dead-letter quarantine for malformed corpus records.
+//!
+//! Real-world docword dumps carry damage — a truncated line from an
+//! interrupted export, a wordID past the declared vocabulary, ids pasted
+//! in the wrong order. Today's strict reader aborts a multi-hour pass on
+//! the first such line; with `[robustness] max_bad_records > 0` the
+//! reader instead *quarantines* the record here and keeps streaming: the
+//! offending raw line goes to an append-only `deadletter.jsonl` next to
+//! the cache, with its source line number, a typed [`BadRecordReason`],
+//! a human detail string, and a per-record xor-fold checksum so later
+//! tooling can verify the quarantine file itself was not damaged.
+//!
+//! Records are deduplicated by source offset: the pipeline streams the
+//! corpus twice (variance pass, reduced-CSR pass) and a resumed run
+//! re-reads the completed prefix, so the same bad line is *encountered*
+//! many times but *recorded* once — and the bad-record budget counts
+//! distinct lines, not encounters.
+//!
+//! Record layout (one JSON object per line, fixed key order):
+//!
+//! ```json
+//! {"offset":17,"reason":"word-out-of-range","detail":"wordID 9 exceeds W=5","line":"3 9 1","crc":"89abcdef01234567"}
+//! ```
+//!
+//! `crc` is the [`crate::util::xor_fold_checksum`] (as 16 hex digits) of
+//! the record serialized *without* the `crc` field — i.e. of the bytes
+//! `{"offset":...,"line":"..."}`. `lsspca dlq` inspects and re-validates
+//! these files; `lsspca dlq --retry` re-parses the quarantined lines
+//! against a corpus header to report which became recoverable.
+
+use std::collections::HashSet;
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::LsspcaError;
+use crate::util::json::Json;
+use crate::util::xor_fold_checksum;
+
+/// Why a record was quarantined instead of folded into the pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BadRecordReason {
+    /// The docID token would not parse as an integer.
+    BadDocId,
+    /// The wordID token would not parse as an integer.
+    BadWordId,
+    /// The count token would not parse as a number.
+    BadCount,
+    /// A docID or wordID of 0 in the 1-based UCI format.
+    ZeroId,
+    /// wordID past the header's declared vocabulary size W.
+    WordOutOfRange,
+    /// docID went backwards — UCI files are sorted by document.
+    NonMonotonicDoc,
+    /// The gzip member's CRC32 trailer did not match its contents.
+    GzipCrc,
+}
+
+impl BadRecordReason {
+    /// The stable string form stored in `deadletter.jsonl`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BadRecordReason::BadDocId => "bad-doc-id",
+            BadRecordReason::BadWordId => "bad-word-id",
+            BadRecordReason::BadCount => "bad-count",
+            BadRecordReason::ZeroId => "zero-id",
+            BadRecordReason::WordOutOfRange => "word-out-of-range",
+            BadRecordReason::NonMonotonicDoc => "non-monotonic-doc",
+            BadRecordReason::GzipCrc => "gzip-crc",
+        }
+    }
+
+    /// Parse the stable string form back.
+    pub fn parse(s: &str) -> Option<BadRecordReason> {
+        Some(match s {
+            "bad-doc-id" => BadRecordReason::BadDocId,
+            "bad-word-id" => BadRecordReason::BadWordId,
+            "bad-count" => BadRecordReason::BadCount,
+            "zero-id" => BadRecordReason::ZeroId,
+            "word-out-of-range" => BadRecordReason::WordOutOfRange,
+            "non-monotonic-doc" => BadRecordReason::NonMonotonicDoc,
+            "gzip-crc" => BadRecordReason::GzipCrc,
+            _ => return None,
+        })
+    }
+}
+
+/// Minimal deterministic JSON string escaping (the exact bytes the
+/// Python mirror reproduces): backslash, double quote, and control
+/// characters below 0x20 as `\u00XX`; everything else verbatim UTF-8.
+fn escape_json(s: &str, out: &mut String) {
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Serialize a record without its `crc` field — the checksum input.
+fn record_prefix(offset: u64, reason: BadRecordReason, detail: &str, line: &str) -> String {
+    let mut s = String::with_capacity(64 + detail.len() + line.len());
+    s.push_str(&format!("{{\"offset\":{offset},\"reason\":\"{}\",\"detail\":\"", reason.as_str()));
+    escape_json(detail, &mut s);
+    s.push_str("\",\"line\":\"");
+    escape_json(line, &mut s);
+    s.push_str("\"}");
+    s
+}
+
+/// Serialize one full record line (with `crc`, without the trailing
+/// newline) — exposed for the format-mirror tests.
+pub fn format_record(offset: u64, reason: BadRecordReason, detail: &str, line: &str) -> String {
+    let prefix = record_prefix(offset, reason, detail, line);
+    let crc = xor_fold_checksum(prefix.as_bytes());
+    format!("{},\"crc\":\"{crc:016x}\"}}", &prefix[..prefix.len() - 1])
+}
+
+/// One parsed entry of a `deadletter.jsonl` file.
+#[derive(Clone, Debug)]
+pub struct DeadLetterRecord {
+    /// 1-based data-line number in the corpus file (counting from the
+    /// first line after the three-line header).
+    pub offset: u64,
+    /// The typed reason, if the stored string is a known one.
+    pub reason: Option<BadRecordReason>,
+    /// The stored reason string (kept verbatim for unknown reasons).
+    pub reason_str: String,
+    /// Human-readable detail from the reader.
+    pub detail: String,
+    /// The raw quarantined corpus line.
+    pub line: String,
+    /// Whether the record's own checksum verified.
+    pub crc_ok: bool,
+}
+
+/// The append-side handle a streaming pass quarantines into.
+pub struct DeadLetterQueue {
+    path: PathBuf,
+    file: Option<File>,
+    seen: HashSet<u64>,
+}
+
+impl DeadLetterQueue {
+    /// Open (or create lazily on first quarantine) the queue at `path`,
+    /// loading existing records so re-runs deduplicate and the budget
+    /// counts distinct bad lines across passes.
+    pub fn open(path: &Path) -> Result<DeadLetterQueue, LsspcaError> {
+        let mut seen = HashSet::new();
+        if path.exists() {
+            for r in read_records(path)? {
+                seen.insert(r.offset);
+            }
+        }
+        Ok(DeadLetterQueue { path: path.to_path_buf(), file: None, seen })
+    }
+
+    /// Where this queue writes.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Distinct quarantined source lines (pre-existing + this run).
+    pub fn len(&self) -> u64 {
+        self.seen.len() as u64
+    }
+
+    /// `true` when nothing has ever been quarantined here.
+    pub fn is_empty(&self) -> bool {
+        self.seen.is_empty()
+    }
+
+    /// Quarantine one record. Duplicate offsets (a second pass or a
+    /// resumed run re-reading the same line) are counted once and not
+    /// re-written. Each append is flushed so a later crash cannot lose
+    /// the evidence of records already skipped.
+    pub fn quarantine(
+        &mut self,
+        offset: u64,
+        reason: BadRecordReason,
+        detail: &str,
+        line: &str,
+    ) -> Result<(), LsspcaError> {
+        if !self.seen.insert(offset) {
+            return Ok(());
+        }
+        if self.file.is_none() {
+            if let Some(dir) = self.path.parent() {
+                if !dir.as_os_str().is_empty() {
+                    std::fs::create_dir_all(dir).map_err(|e| {
+                        LsspcaError::io_at(&self.path, format!("mkdir for dead-letter queue: {e}"))
+                    })?;
+                }
+            }
+            let f = OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&self.path)
+                .map_err(|e| LsspcaError::io_at(&self.path, format!("open dead-letter queue: {e}")))?;
+            self.file = Some(f);
+        }
+        let f = self.file.as_mut().unwrap();
+        let rec = format_record(offset, reason, detail, line);
+        writeln!(f, "{rec}")
+            .and_then(|_| f.flush())
+            .map_err(|e| LsspcaError::io_at(&self.path, format!("append dead-letter record: {e}")))
+    }
+}
+
+/// Reader-side quarantine policy: the bad-record budget plus the queue
+/// malformed records spill into. `[robustness] max_bad_records` > 0
+/// creates one of these; 0 (the default) leaves the reader strict.
+pub struct RecordPolicy {
+    max_bad_records: u64,
+    dlq: DeadLetterQueue,
+}
+
+impl RecordPolicy {
+    /// Tolerate up to `max_bad_records` distinct bad lines, spilling them
+    /// into `dlq`.
+    pub fn new(max_bad_records: u64, dlq: DeadLetterQueue) -> RecordPolicy {
+        RecordPolicy { max_bad_records, dlq }
+    }
+
+    /// Quarantine one malformed record, then enforce the budget: once the
+    /// count of *distinct* quarantined lines exceeds `max_bad_records`
+    /// this errors — the evidence is on disk either way.
+    pub fn admit(
+        &mut self,
+        offset: u64,
+        reason: BadRecordReason,
+        detail: &str,
+        line: &str,
+    ) -> Result<(), LsspcaError> {
+        self.dlq.quarantine(offset, reason, detail, line)?;
+        if self.dlq.len() > self.max_bad_records {
+            return Err(LsspcaError::corpus(format!(
+                "too many bad records: {} quarantined, max_bad_records = {} (see {})",
+                self.dlq.len(),
+                self.max_bad_records,
+                self.dlq.path().display()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Distinct quarantined lines so far (all passes).
+    pub fn quarantined(&self) -> u64 {
+        self.dlq.len()
+    }
+
+    /// The queue file this policy spills into.
+    pub fn path(&self) -> &Path {
+        self.dlq.path()
+    }
+}
+
+/// Parse every record of a `deadletter.jsonl`, verifying each record's
+/// own checksum (`crc_ok`). Unparsable lines are an error — the queue
+/// file is machine-written, so damage to it should be loud.
+pub fn read_records(path: &Path) -> Result<Vec<DeadLetterRecord>, LsspcaError> {
+    let f = File::open(path)
+        .map_err(|e| LsspcaError::io_at(path, format!("open dead-letter queue: {e}")))?;
+    let mut out = Vec::new();
+    for (i, line) in BufReader::new(f).lines().enumerate() {
+        let line = line
+            .map_err(|e| LsspcaError::io_at(path, format!("read dead-letter queue: {e}")))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let bad = |what: &str| {
+            LsspcaError::io_at(path, format!("dead-letter record {}: {what}", i + 1))
+        };
+        let v = Json::parse(&line).map_err(|e| bad(&format!("bad JSON: {}", e.message())))?;
+        let offset = v
+            .get("offset")
+            .and_then(Json::as_f64)
+            .filter(|o| o.fract() == 0.0 && *o >= 0.0)
+            .ok_or_else(|| bad("missing offset"))? as u64;
+        let reason_str = v
+            .get("reason")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("missing reason"))?
+            .to_string();
+        let detail =
+            v.get("detail").and_then(Json::as_str).ok_or_else(|| bad("missing detail"))?.to_string();
+        let raw =
+            v.get("line").and_then(Json::as_str).ok_or_else(|| bad("missing line"))?.to_string();
+        let stored_crc = v.get("crc").and_then(Json::as_str).unwrap_or("").to_string();
+        let reason = BadRecordReason::parse(&reason_str);
+        let crc_ok = match reason {
+            Some(r) => {
+                let prefix = record_prefix(offset, r, &detail, &raw);
+                format!("{:016x}", xor_fold_checksum(prefix.as_bytes())) == stored_crc
+            }
+            None => false,
+        };
+        out.push(DeadLetterRecord { offset, reason, reason_str, detail, line: raw, crc_ok });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lsspca_dlq_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn quarantine_roundtrips_with_valid_crc() {
+        let p = tmp("rt.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut q = DeadLetterQueue::open(&p).unwrap();
+        q.quarantine(17, BadRecordReason::WordOutOfRange, "wordID 9 exceeds W=5", "3 9 1")
+            .unwrap();
+        q.quarantine(21, BadRecordReason::ZeroId, "ids are 1-based", "0 3 1").unwrap();
+        assert_eq!(q.len(), 2);
+        let recs = read_records(&p).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].offset, 17);
+        assert_eq!(recs[0].reason, Some(BadRecordReason::WordOutOfRange));
+        assert_eq!(recs[0].line, "3 9 1");
+        assert!(recs.iter().all(|r| r.crc_ok), "{recs:?}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn duplicate_offsets_recorded_once() {
+        let p = tmp("dup.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut q = DeadLetterQueue::open(&p).unwrap();
+        q.quarantine(5, BadRecordReason::BadCount, "x", "1 2 huh").unwrap();
+        q.quarantine(5, BadRecordReason::BadCount, "x", "1 2 huh").unwrap();
+        assert_eq!(q.len(), 1);
+        drop(q);
+        // a second pass re-opens the queue and re-encounters the line
+        let mut q2 = DeadLetterQueue::open(&p).unwrap();
+        assert_eq!(q2.len(), 1, "existing records count toward the budget");
+        q2.quarantine(5, BadRecordReason::BadCount, "x", "1 2 huh").unwrap();
+        assert_eq!(q2.len(), 1);
+        assert_eq!(read_records(&p).unwrap().len(), 1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn tampered_record_fails_crc() {
+        let p = tmp("tamper.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut q = DeadLetterQueue::open(&p).unwrap();
+        q.quarantine(3, BadRecordReason::BadDocId, "bad docID", "x 2 1").unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, text.replace("x 2 1", "y 2 1")).unwrap();
+        let recs = read_records(&p).unwrap();
+        assert!(!recs[0].crc_ok, "{recs:?}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn record_bytes_are_stable() {
+        // Pinned layout shared with python/tests/test_fault_mirror.py:
+        // the identical inputs must serialize to the identical line,
+        // checksum hex included, in both languages.
+        let rec = format_record(17, BadRecordReason::WordOutOfRange, "wordID 9 exceeds W=5", "3 9 1");
+        assert_eq!(
+            rec,
+            "{\"offset\":17,\"reason\":\"word-out-of-range\",\
+             \"detail\":\"wordID 9 exceeds W=5\",\"line\":\"3 9 1\",\
+             \"crc\":\"7e673c33f156083c\"}"
+        );
+        // escaping: quotes, backslashes, control chars
+        let rec = format_record(1, BadRecordReason::BadDocId, "a\"b\\c", "tab\there");
+        assert!(rec.contains("a\\\"b\\\\c"), "{rec}");
+        assert!(rec.contains("tab\\u0009here"), "{rec}");
+    }
+
+    #[test]
+    fn policy_enforces_budget_after_recording() {
+        let p = tmp("budget.jsonl");
+        std::fs::remove_file(&p).ok();
+        let mut pol = RecordPolicy::new(2, DeadLetterQueue::open(&p).unwrap());
+        pol.admit(1, BadRecordReason::BadCount, "x", "1 1 a").unwrap();
+        pol.admit(2, BadRecordReason::BadCount, "x", "1 1 b").unwrap();
+        // a duplicate offset does not consume budget
+        pol.admit(2, BadRecordReason::BadCount, "x", "1 1 b").unwrap();
+        let err = pol.admit(3, BadRecordReason::BadCount, "x", "1 1 c").unwrap_err();
+        assert!(matches!(err, LsspcaError::Corpus { .. }));
+        assert!(err.to_string().contains("too many bad records"), "{err}");
+        // the record that broke the budget is still on disk (evidence)
+        assert_eq!(read_records(&p).unwrap().len(), 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reason_strings_roundtrip() {
+        for r in [
+            BadRecordReason::BadDocId,
+            BadRecordReason::BadWordId,
+            BadRecordReason::BadCount,
+            BadRecordReason::ZeroId,
+            BadRecordReason::WordOutOfRange,
+            BadRecordReason::NonMonotonicDoc,
+            BadRecordReason::GzipCrc,
+        ] {
+            assert_eq!(BadRecordReason::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(BadRecordReason::parse("whatever"), None);
+    }
+}

@@ -43,6 +43,10 @@ pub enum LsspcaError {
         path: Option<PathBuf>,
         /// The underlying failure.
         message: String,
+        /// `true` when the failure was transient (`Interrupted`,
+        /// `TimedOut`, `WouldBlock`) and every retry was exhausted —
+        /// the caller may reasonably try the whole operation again.
+        transient: bool,
     },
     /// Corpus ingestion problems: an unreadable or format-violating
     /// docword stream, or a streaming-pass worker failure.
@@ -51,10 +55,13 @@ pub enum LsspcaError {
         message: String,
     },
     /// Cache-layer problems: a stale, corrupt or truncated variance
-    /// checkpoint or covariance shard cache.
+    /// checkpoint, covariance shard cache, or job-state file.
     Cache {
         /// Which cache object failed which integrity check.
         message: String,
+        /// `true` when the failure was transient I/O with retries
+        /// exhausted, rather than a corrupt or stale artifact.
+        transient: bool,
     },
     /// Numerical / solver-layer failure: an engine that cannot run the
     /// requested problem, or a dimension mismatch reaching the solver.
@@ -79,12 +86,28 @@ impl LsspcaError {
     /// A [`LsspcaError::Io`] with no path context (the message usually
     /// already embeds one).
     pub fn io(message: impl Into<String>) -> LsspcaError {
-        LsspcaError::Io { path: None, message: message.into() }
+        LsspcaError::Io { path: None, message: message.into(), transient: false }
     }
 
     /// A [`LsspcaError::Io`] carrying the file it concerns.
     pub fn io_at(path: impl AsRef<Path>, message: impl Into<String>) -> LsspcaError {
-        LsspcaError::Io { path: Some(path.as_ref().to_path_buf()), message: message.into() }
+        LsspcaError::Io {
+            path: Some(path.as_ref().to_path_buf()),
+            message: message.into(),
+            transient: false,
+        }
+    }
+
+    /// A *transient* [`LsspcaError::Io`]: the operation failed with a
+    /// retryable [`std::io::ErrorKind`] and the retry budget ran out
+    /// (see [`crate::util::retry`]). [`LsspcaError::is_transient`]
+    /// returns `true`.
+    pub fn io_transient(path: impl AsRef<Path>, message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Io {
+            path: Some(path.as_ref().to_path_buf()),
+            message: message.into(),
+            transient: true,
+        }
     }
 
     /// A [`LsspcaError::Corpus`] with the given message.
@@ -94,7 +117,14 @@ impl LsspcaError {
 
     /// A [`LsspcaError::Cache`] with the given message.
     pub fn cache(message: impl Into<String>) -> LsspcaError {
-        LsspcaError::Cache { message: message.into() }
+        LsspcaError::Cache { message: message.into(), transient: false }
+    }
+
+    /// A *transient* [`LsspcaError::Cache`]: retry-exhausted transient
+    /// I/O against a checkpoint / shard-cache / job-state file, as
+    /// opposed to a corrupt or stale artifact.
+    pub fn cache_transient(message: impl Into<String>) -> LsspcaError {
+        LsspcaError::Cache { message: message.into(), transient: true }
     }
 
     /// A [`LsspcaError::Numeric`] with the given message.
@@ -128,9 +158,21 @@ impl LsspcaError {
             LsspcaError::Config { message }
             | LsspcaError::Io { message, .. }
             | LsspcaError::Corpus { message }
-            | LsspcaError::Cache { message }
+            | LsspcaError::Cache { message, .. }
             | LsspcaError::Numeric { message }
             | LsspcaError::Serve { message } => message,
+        }
+    }
+
+    /// `true` when the underlying failure was transient I/O
+    /// (`Interrupted` / `TimedOut` / `WouldBlock`) whose retry budget
+    /// was exhausted: the operation may succeed if re-run, unlike a
+    /// corrupt artifact or a config error. Only [`LsspcaError::Io`] and
+    /// [`LsspcaError::Cache`] can carry the flag.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            LsspcaError::Io { transient, .. } | LsspcaError::Cache { transient, .. } => *transient,
+            _ => false,
         }
     }
 
@@ -152,7 +194,7 @@ impl LsspcaError {
 impl fmt::Display for LsspcaError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            LsspcaError::Io { path: Some(p), message } => {
+            LsspcaError::Io { path: Some(p), message, .. } => {
                 write!(f, "io error [{}]: {message}", p.display())
             }
             other => write!(f, "{} error: {}", other.category(), other.message()),
@@ -230,5 +272,26 @@ mod tests {
         assert!(matches!(e, LsspcaError::Cache { .. }));
         assert_eq!(e.category(), "cache");
         assert_eq!(e.message(), "corrupt");
+    }
+
+    #[test]
+    fn transient_flag_only_on_transient_constructors() {
+        assert!(LsspcaError::io_transient("/tmp/x", "interrupted").is_transient());
+        assert!(LsspcaError::cache_transient("interrupted").is_transient());
+        for e in [
+            LsspcaError::config("x"),
+            LsspcaError::io("x"),
+            LsspcaError::io_at("/tmp/x", "x"),
+            LsspcaError::cache("x"),
+            LsspcaError::numeric("x"),
+            LsspcaError::corpus("x"),
+            LsspcaError::serve("x"),
+        ] {
+            assert!(!e.is_transient(), "{e}");
+        }
+        // transient errors keep their class's exit code — transience is
+        // an orthogonal axis, not a new category
+        assert_eq!(LsspcaError::cache_transient("x").exit_code(), 4);
+        assert_eq!(LsspcaError::io_transient("/t", "x").exit_code(), 3);
     }
 }

@@ -1,0 +1,343 @@
+//! Persisted job state for kill-and-resume of the streaming passes.
+//!
+//! The variance pass over a PubMed-scale corpus runs for hours; a
+//! SIGKILL at hour three used to restart it from byte zero. This module
+//! persists the pass's *partial accumulators at chunk granularity*: a
+//! `.lsjs` file records how many chunks have been folded into the master
+//! accumulator plus the accumulator itself, keyed by the corpus digest
+//! and the chunk size. On restart, [`crate::stream::resumable_variance_pass`]
+//! reloads the state, skips the completed chunks, and continues folding —
+//! and because the resumable pass merges per-chunk accumulators into the
+//! master *in strict chunk-index order* (see `stream.rs`), the resumed
+//! run's final [`crate::moments::FeatureVariances`] is **bitwise
+//! identical** to an uninterrupted run's.
+//!
+//! Format (little-endian, the `checkpoint.rs` framing family): magic
+//! `"LSJS"`, `u32` version, then the payload — `u64` corpus key, `u64`
+//! kind ([`KIND_VARIANCE`]), `u64` chunk_docs, `u64` completed_chunks,
+//! `u64` docs, `u64` nnz, `u64` n, then `n × (u64 n_obs, f64 mean,
+//! f64 m2)` per-feature Welford triples — and a trailing xor-fold
+//! checksum of the payload.
+//!
+//! Like the variance checkpoint, job state is advisory: a corrupt,
+//! stale, or foreign file is *rejected* (never silently used) and the
+//! pass simply starts over. Writes are crash-atomic with transient-I/O
+//! retry, so the file on disk is always a complete, verified snapshot.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use crate::error::LsspcaError;
+use crate::moments::FeatureMoments;
+use crate::util::stats::RunningStats;
+use crate::util::xor_fold_checksum as checksum;
+use crate::util::{atomic_write, faultinject, retry};
+
+const MAGIC: &[u8; 4] = b"LSJS";
+const VERSION: u32 = 1;
+/// Fixed-size payload prefix: key, kind, chunk_docs, completed_chunks,
+/// docs, nnz, n.
+const HEADER_U64S: usize = 7;
+
+/// Job kind: the per-feature variance pass (`FeatureMoments`
+/// accumulator). Future kinds (e.g. the reduced-CSR pass) extend the
+/// format without breaking this one.
+pub const KIND_VARIANCE: u64 = 1;
+
+/// A resumable pass's persisted position: everything needed to continue
+/// folding from chunk `completed_chunks` as if never interrupted.
+#[derive(Clone, Debug)]
+pub struct JobState {
+    /// Corpus digest ([`crate::checkpoint::corpus_key`]) the pass ran over.
+    pub key: u64,
+    /// Which pass this is ([`KIND_VARIANCE`]).
+    pub kind: u64,
+    /// Chunk size (documents) the pass streamed with. Resuming at a
+    /// different chunk size would move chunk boundaries and change the
+    /// merge order, so a mismatch is rejected as stale.
+    pub chunk_docs: u64,
+    /// Chunks fully merged into `moments`, in order: chunks
+    /// `0..completed_chunks` are done, the pass resumes at
+    /// `completed_chunks`.
+    pub completed_chunks: u64,
+    /// The master accumulator after merging exactly those chunks.
+    pub moments: FeatureMoments,
+}
+
+/// Job-state file path for a corpus key inside a cache directory.
+pub fn path_for(cache_dir: &Path, key: u64) -> PathBuf {
+    cache_dir.join(format!("jobstate_{key:016x}.lsjs"))
+}
+
+/// Persist a snapshot crash-atomically (tmp + fsync + rename), retrying
+/// transient I/O under the process [`retry::policy`]. Failures are
+/// [`LsspcaError::Cache`]; retry exhaustion sets
+/// [`LsspcaError::is_transient`].
+pub fn save(path: &Path, state: &JobState) -> Result<(), LsspcaError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| LsspcaError::cache(format!("job state mkdir {}: {e}", dir.display())))?;
+    }
+    let stats = state.moments.stats();
+    let n = stats.len();
+    let mut bytes = Vec::with_capacity(8 + 8 * HEADER_U64S + 24 * n + 8);
+    bytes.extend_from_slice(MAGIC);
+    bytes.extend_from_slice(&VERSION.to_le_bytes());
+    for v in [
+        state.key,
+        state.kind,
+        state.chunk_docs,
+        state.completed_chunks,
+        state.moments.docs,
+        state.moments.nnz,
+        n as u64,
+    ] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    for st in stats {
+        bytes.extend_from_slice(&st.n.to_le_bytes());
+        bytes.extend_from_slice(&st.mean.to_le_bytes());
+        bytes.extend_from_slice(&st.m2.to_le_bytes());
+    }
+    let sum = checksum(&bytes[8..]);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    retry::with_retry(&retry::policy(), || atomic_write(path, "jobstate", &bytes)).map_err(|e| {
+        let msg = e.describe(&format!("job state {}: write", path.display()));
+        if e.transient { LsspcaError::cache_transient(msg) } else { LsspcaError::cache(msg) }
+    })
+}
+
+/// Load a snapshot. `Ok(None)` when no file exists; `Err` on corruption
+/// or on any identity mismatch — wrong corpus key, wrong kind, a
+/// different `chunk_docs` (chunk boundaries would move), or a feature
+/// count that contradicts the live corpus. A rejected file must never be
+/// resumed from: the caller logs and starts the pass over.
+pub fn load(
+    path: &Path,
+    key: u64,
+    expected_n: usize,
+    chunk_docs: u64,
+) -> Result<Option<JobState>, LsspcaError> {
+    let buf = match retry::with_retry(&retry::policy(), || {
+        let f = std::fs::File::open(path)?;
+        let mut r = faultinject::wrap_read("jobstate", f);
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        Ok(buf)
+    }) {
+        Ok(buf) => buf,
+        Err(e) if e.error.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            let msg = e.describe(&format!("job state read {}", path.display()));
+            return Err(if e.transient {
+                LsspcaError::cache_transient(msg)
+            } else {
+                LsspcaError::cache(msg)
+            });
+        }
+    };
+    if buf.len() < 8 + 8 * HEADER_U64S + 8 || &buf[..4] != MAGIC {
+        return Err(LsspcaError::cache("job state: bad magic or truncated header"));
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(LsspcaError::cache(format!("job state: version {version}, want {VERSION}")));
+    }
+    let payload = &buf[8..buf.len() - 8];
+    let stored_sum = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if checksum(payload) != stored_sum {
+        return Err(LsspcaError::cache("job state: checksum mismatch (corrupt file)"));
+    }
+    let rd_u64 = |o: usize| u64::from_le_bytes(payload[o..o + 8].try_into().unwrap());
+    let stored_key = rd_u64(0);
+    if stored_key != key {
+        return Err(LsspcaError::cache(format!(
+            "job state: corpus key mismatch ({stored_key:#x} vs {key:#x}) — foreign job state"
+        )));
+    }
+    let kind = rd_u64(8);
+    if kind != KIND_VARIANCE {
+        return Err(LsspcaError::cache(format!("job state: unknown kind {kind}")));
+    }
+    let stored_chunk = rd_u64(16);
+    if stored_chunk != chunk_docs {
+        return Err(LsspcaError::cache(format!(
+            "job state: chunk size mismatch (file has chunk_docs={stored_chunk}, run uses \
+             {chunk_docs}) — chunk boundaries would move; stale job state"
+        )));
+    }
+    let completed_chunks = rd_u64(24);
+    let docs = rd_u64(32);
+    let nnz = rd_u64(40);
+    let n = rd_u64(48) as usize;
+    if payload.len() != 8 * HEADER_U64S + 24 * n {
+        return Err(LsspcaError::cache("job state: payload size mismatch"));
+    }
+    if n != expected_n {
+        return Err(LsspcaError::cache(format!(
+            "job state: dimension mismatch (file has n={n}, corpus has n={expected_n}) — \
+             stale or foreign job state"
+        )));
+    }
+    let base = 8 * HEADER_U64S;
+    let stats: Vec<RunningStats> = (0..n)
+        .map(|i| {
+            let o = base + 24 * i;
+            RunningStats {
+                n: rd_u64(o),
+                mean: f64::from_le_bytes(payload[o + 8..o + 16].try_into().unwrap()),
+                m2: f64::from_le_bytes(payload[o + 16..o + 24].try_into().unwrap()),
+            }
+        })
+        .collect();
+    Ok(Some(JobState {
+        key,
+        kind,
+        chunk_docs,
+        completed_chunks,
+        moments: FeatureMoments::from_parts(stats, docs, nnz),
+    }))
+}
+
+/// Remove a snapshot (on successful pass completion). Missing file is
+/// fine; other failures are logged by the caller, not fatal.
+pub fn remove(path: &Path) -> std::io::Result<()> {
+    match std::fs::remove_file(path) {
+        Err(e) if e.kind() != std::io::ErrorKind::NotFound => Err(e),
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(n: usize, seed: u64) -> JobState {
+        let mut rng = Rng::seed_from(seed);
+        let stats: Vec<RunningStats> = (0..n)
+            .map(|_| RunningStats {
+                n: rng.below(100) as u64,
+                mean: rng.gauss(),
+                m2: rng.range_f64(0.0, 10.0),
+            })
+            .collect();
+        JobState {
+            key: crate::checkpoint::corpus_key("job:test"),
+            kind: KIND_VARIANCE,
+            chunk_docs: 128,
+            completed_chunks: 9,
+            moments: FeatureMoments::from_parts(stats, 1152, 3456),
+        }
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("lsspca_jobstate_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise() {
+        let js = sample(40, 1);
+        let p = tmp("rt.lsjs");
+        save(&p, &js).unwrap();
+        let got = load(&p, js.key, 40, 128).unwrap().unwrap();
+        assert_eq!(got.completed_chunks, 9);
+        assert_eq!(got.moments.docs, 1152);
+        assert_eq!(got.moments.nnz, 3456);
+        for (a, b) in got.moments.stats().iter().zip(js.moments.stats()) {
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits());
+            assert_eq!(a.m2.to_bits(), b.m2.to_bits());
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_none() {
+        assert!(load(&tmp("nope.lsjs"), 1, 4, 128).unwrap().is_none());
+    }
+
+    #[test]
+    fn foreign_and_stale_states_rejected() {
+        let js = sample(10, 2);
+        let p = tmp("stale.lsjs");
+        save(&p, &js).unwrap();
+        // wrong corpus
+        let e = load(&p, js.key ^ 1, 10, 128).unwrap_err().to_string();
+        assert!(e.contains("key mismatch"), "{e}");
+        // wrong chunk size: boundaries would move
+        let e = load(&p, js.key, 10, 64).unwrap_err().to_string();
+        assert!(e.contains("chunk size mismatch"), "{e}");
+        // wrong dimension
+        let e = load(&p, js.key, 11, 128).unwrap_err().to_string();
+        assert!(e.contains("dimension mismatch"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corruption_rejected() {
+        let js = sample(25, 3);
+        let p = tmp("corrupt.lsjs");
+        save(&p, &js).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let e = load(&p, js.key, 25, 128).unwrap_err();
+        assert!(matches!(e, LsspcaError::Cache { .. }));
+        assert!(e.to_string().contains("checksum"), "{e}");
+        // truncation
+        std::fs::write(&p, &bytes[..bytes.len() / 4]).unwrap();
+        assert!(load(&p, js.key, 25, 128).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn file_bytes_are_stable() {
+        // Pinned layout shared with python/tests/test_fault_mirror.py:
+        // the identical example must produce the identical file image
+        // (and so the identical trailing checksum) in both languages.
+        let js = JobState {
+            key: 0x1122334455667788,
+            kind: KIND_VARIANCE,
+            chunk_docs: 64,
+            completed_chunks: 3,
+            moments: FeatureMoments::from_parts(
+                vec![
+                    RunningStats { n: 5, mean: 1.5, m2: 0.25 },
+                    RunningStats { n: 7, mean: -2.0, m2: 3.5 },
+                ],
+                192,
+                1000,
+            ),
+        };
+        let p = tmp("pin.lsjs");
+        save(&p, &js).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(bytes.len(), 8 + 8 * HEADER_U64S + 24 * 2 + 8);
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        assert_eq!(sum, 0x17154AFD2A2C67C7, "checksum drifted from the Python mirror pin");
+        use std::fmt::Write as _;
+        let mut hex = String::with_capacity(2 * bytes.len());
+        for b in &bytes {
+            write!(hex, "{b:02x}").unwrap();
+        }
+        assert_eq!(
+            hex,
+            "4c534a530100000088776655443322110100000000000000400000000000000003000000000000\
+             00c000000000000000e8030000000000000200000000000000050000000000000000000000000\
+             0f83f000000000000d03f070000000000000000000000000000c00000000000000c40c7672c2a\
+             fd4a1517"
+        );
+    }
+
+    #[test]
+    fn remove_is_idempotent() {
+        let p = tmp("rm.lsjs");
+        save(&p, &sample(4, 4)).unwrap();
+        remove(&p).unwrap();
+        remove(&p).unwrap();
+        assert!(load(&p, 1, 4, 128).unwrap().is_none());
+    }
+}

@@ -73,9 +73,11 @@ pub mod cov;
 pub mod cov_disk;
 pub mod covop;
 pub mod data;
+pub mod deadletter;
 pub mod elim;
 pub mod engine;
 pub mod error;
+pub mod jobstate;
 pub mod linalg;
 pub mod logging;
 pub mod model;

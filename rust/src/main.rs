@@ -9,6 +9,7 @@
 //! lsspca export     --model-out model.lspm                       # train → artifact
 //! lsspca score      --model model.lspm --input new.txt.gz        # batch projection
 //! lsspca serve      --model model.lspm --addr 127.0.0.1:7878     # HTTP scoring
+//! lsspca dlq        --path deadletter.jsonl --retry              # inspect quarantine
 //! lsspca artifacts  --dir artifacts                              # inspect AOT artifacts
 //! lsspca bench      --compare BENCH_baseline.json                # perf-regression gate
 //! ```
@@ -53,6 +54,13 @@ fn with_training_flags(spec: CommandSpec) -> CommandSpec {
         .opt("artifacts", "artifacts", "artifact dir for --engine xla")
         .opt("cache-dir", "", "variance-checkpoint dir (reused across runs)")
         .opt("save-model", "", "also write the scoring model artifact here")
+        .opt("max-bad-records", "", "quarantine up to N malformed records (empty = config; 0 = strict abort)")
+        .opt("dead-letter-path", "", "dead-letter queue path (empty = config value or auto)")
+        .opt("retry-attempts", "", "transient-I/O retry attempts (empty = config value)")
+        .opt("retry-base-ms", "", "retry backoff base delay in ms (empty = config value)")
+        .opt("job-state", "", "resumable job state: on|off (empty = config value)")
+        .opt("job-state-chunks", "", "chunks between job-state checkpoints (empty = config value)")
+        .opt("faults", "", "deterministic fault-injection plan (testing; empty = config value)")
         .switch("certify", "compute a dual optimality certificate per PC")
 }
 
@@ -93,8 +101,16 @@ fn app() -> App {
                 .opt("config", "", "TOML config file ([serve]/[model] sections)")
                 .opt("addr", "", "bind address (empty = config value, default 127.0.0.1:7878)")
                 .opt("pool", "", "connection-handler threads (empty = config value)")
+                .opt("timeout-secs", "", "per-connection socket timeout secs, 0 = none (empty = config)")
                 .switch("no-center", "do not subtract training means")
                 .switch("normalize", "divide loadings by training std deviations"),
+        )
+        .command(
+            CommandSpec::new("dlq", "inspect or retry a dead-letter queue (deadletter.jsonl)")
+                .req("path", "deadletter.jsonl written by a pass with max_bad_records > 0")
+                .opt("list", "10", "print the first N quarantined records (0 = none)")
+                .opt("vocab-size", "0", "validate retried word ids against this vocab size (0 = skip)")
+                .switch("retry", "re-parse quarantined lines and report which are recoverable"),
         )
         .command(
             CommandSpec::new("gen", "generate a synthetic corpus to disk (UCI docword format)")
@@ -189,6 +205,34 @@ fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, LsspcaError>
     }
     if !args.str("save-model").is_empty() {
         cfg.save_model = args.str("save-model");
+    }
+    if !args.str("max-bad-records").is_empty() {
+        cfg.robust_max_bad_records = args.u64("max-bad-records")?;
+    }
+    if !args.str("dead-letter-path").is_empty() {
+        cfg.robust_dead_letter_path = args.str("dead-letter-path");
+    }
+    if !args.str("retry-attempts").is_empty() {
+        cfg.robust_retry_attempts = args.usize("retry-attempts")?;
+    }
+    if !args.str("retry-base-ms").is_empty() {
+        cfg.robust_retry_base_ms = args.u64("retry-base-ms")?;
+    }
+    match args.str("job-state").as_str() {
+        "" => {}
+        "on" | "true" | "1" => cfg.robust_job_state = true,
+        "off" | "false" | "0" => cfg.robust_job_state = false,
+        other => {
+            return Err(LsspcaError::config(format!(
+                "--job-state must be on or off (got '{other}')"
+            )))
+        }
+    }
+    if !args.str("job-state-chunks").is_empty() {
+        cfg.robust_job_state_chunks = args.usize("job-state-chunks")?;
+    }
+    if !args.str("faults").is_empty() {
+        cfg.robust_faults = args.str("faults");
     }
     cfg.certify = cfg.certify || args.switch("certify");
     Ok(cfg)
@@ -319,6 +363,11 @@ fn cmd_serve(args: &Args) -> Result<(), LsspcaError> {
     let addr = if args.str("addr").is_empty() { cfg.serve_addr.clone() } else { args.str("addr") };
     let pool =
         if args.str("pool").is_empty() { cfg.serve_pool } else { args.usize("pool")? };
+    let timeout_secs = if args.str("timeout-secs").is_empty() {
+        cfg.serve_timeout_secs
+    } else {
+        args.u64("timeout-secs")?
+    };
     let sopts = ScoreOptions {
         center: cfg.score_center && !args.switch("no-center"),
         normalize: cfg.score_normalize || args.switch("normalize"),
@@ -330,7 +379,92 @@ fn cmd_serve(args: &Args) -> Result<(), LsspcaError> {
         model.num_pcs(),
         model.kept.len()
     );
-    serve(model, scorer, ServeOptions { addr, pool, ..Default::default() })
+    serve(model, scorer, ServeOptions { addr, pool, timeout_secs, ..Default::default() })
+}
+
+/// Can a quarantined line now be parsed as a valid docword triple? Mirrors
+/// the reader's checks (three base-10 fields, ids ≥ 1, count ≥ 1, word ≤ W
+/// when a vocab size is given) — monotonicity is a *stream* property the
+/// single line cannot establish, so `dlq --retry` reports those lines as
+/// parseable and leaves the ordering decision to a re-run.
+fn dlq_line_recoverable(line: &str, vocab_size: usize) -> bool {
+    let mut parts = line.split_whitespace();
+    let (Some(d), Some(w), Some(c)) = (parts.next(), parts.next(), parts.next()) else {
+        return false;
+    };
+    if parts.next().is_some() {
+        return false;
+    }
+    let (Ok(doc), Ok(word), Ok(count)) =
+        (d.parse::<usize>(), w.parse::<usize>(), c.parse::<u64>())
+    else {
+        return false;
+    };
+    doc >= 1 && word >= 1 && count >= 1 && (vocab_size == 0 || word <= vocab_size)
+}
+
+fn cmd_dlq(args: &Args) -> Result<(), LsspcaError> {
+    use lsspca::deadletter::read_records;
+    let path = PathBuf::from(args.str("path"));
+    let records = read_records(&path)?;
+    if records.is_empty() {
+        println!("{}: empty dead-letter queue", path.display());
+        return Ok(());
+    }
+    // Per-reason histogram plus the checksum health of the file itself.
+    let mut by_reason: Vec<(String, u64)> = Vec::new();
+    let mut bad_crc = 0u64;
+    for r in &records {
+        if !r.crc_ok {
+            bad_crc += 1;
+        }
+        match by_reason.iter_mut().find(|(k, _)| *k == r.reason_str) {
+            Some((_, n)) => *n += 1,
+            None => by_reason.push((r.reason_str.clone(), 1)),
+        }
+    }
+    println!("{}: {} quarantined records", path.display(), records.len());
+    for (reason, n) in &by_reason {
+        println!("  {reason:<20} {n}");
+    }
+    if bad_crc > 0 {
+        println!("  WARNING: {bad_crc} records fail their crc (corrupted queue file)");
+    }
+    let list = args.usize("list")?;
+    for r in records.iter().take(list) {
+        println!(
+            "  offset={} reason={} crc={} line={:?} — {}",
+            r.offset,
+            r.reason_str,
+            if r.crc_ok { "ok" } else { "BAD" },
+            r.line,
+            r.detail
+        );
+    }
+    if records.len() > list && list > 0 {
+        println!("  … {} more (raise --list to see them)", records.len() - list);
+    }
+    if args.switch("retry") {
+        let vocab_size = args.usize("vocab-size")?;
+        let (mut recoverable, mut dead) = (0u64, 0u64);
+        for r in &records {
+            if dlq_line_recoverable(&r.line, vocab_size) {
+                recoverable += 1;
+            } else {
+                dead += 1;
+            }
+        }
+        println!(
+            "retry: {recoverable} recoverable / {dead} permanently malformed{}",
+            if vocab_size == 0 { " (word-id range unchecked; pass --vocab-size)" } else { "" }
+        );
+        if dead > 0 {
+            return Err(LsspcaError::corpus(format!(
+                "{dead} quarantined records are not recoverable (see listing above)"
+            )));
+        }
+    }
+    Ok(())
 }
 
 fn cmd_gen(args: &Args) -> Result<(), LsspcaError> {
@@ -1028,6 +1162,7 @@ fn main() {
             "export" => cmd_export(&args),
             "score" => cmd_score(&args),
             "serve" => cmd_serve(&args),
+            "dlq" => cmd_dlq(&args),
             "gen" => cmd_gen(&args),
             "variances" => cmd_variances(&args),
             "solve" => cmd_solve(&args),

@@ -84,6 +84,19 @@ impl FeatureMoments {
         self.nnz += other.nnz;
     }
 
+    /// The raw per-feature accumulators (nonzero observations only) —
+    /// what the job-state file serializes for kill-and-resume.
+    pub fn stats(&self) -> &[RunningStats] {
+        &self.stats
+    }
+
+    /// Rebuild an accumulator from serialized parts (the job-state
+    /// loader's inverse of [`stats`](FeatureMoments::stats) plus the
+    /// `docs`/`nnz` counters).
+    pub fn from_parts(stats: Vec<RunningStats>, docs: u64, nnz: u64) -> FeatureMoments {
+        FeatureMoments { stats, docs, nnz }
+    }
+
     /// Fold in the implicit zeros and produce final variances.
     pub fn finalize(&self) -> FeatureVariances {
         self.finalize_par(1)

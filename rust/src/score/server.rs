@@ -4,7 +4,12 @@
 //! bounded channel as the connection queue: one acceptor thread feeds a
 //! fixed pool of connection-handler threads (the `serve.pool` knob), so
 //! a slow client occupies one worker, never the acceptor, and the queue
-//! applies backpressure under overload. Every response carries
+//! applies backpressure under overload: when every worker is busy *and*
+//! the queue is full, the acceptor sheds load with an immediate
+//! `503 Service Unavailable` + `Retry-After` instead of stalling, so
+//! health checks keep getting answers. Accepted sockets carry a
+//! read/write timeout (`serve.timeout_secs`, 0 = none) so a stuck
+//! client cannot pin a pool worker forever. Every response carries
 //! `Connection: close` — one request per connection keeps the handler
 //! loop trivially robust, and the OS connection setup cost is dwarfed by
 //! scoring at the payload sizes involved.
@@ -34,7 +39,7 @@ use std::time::Duration;
 use crate::error::LsspcaError;
 use crate::model::Model;
 use crate::score::scorer::Scorer;
-use crate::stream::bounded;
+use crate::stream::{bounded, TrySendError};
 use crate::util::json::{arr_f64, obj, Json};
 
 /// Server configuration.
@@ -46,11 +51,18 @@ pub struct ServeOptions {
     pub pool: usize,
     /// Maximum accepted request-body size in bytes.
     pub max_body_bytes: usize,
+    /// Read/write timeout on accepted sockets, in seconds (0 = none).
+    pub timeout_secs: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { addr: "127.0.0.1:7878".into(), pool: 4, max_body_bytes: 1 << 20 }
+        ServeOptions {
+            addr: "127.0.0.1:7878".into(),
+            pool: 4,
+            max_body_bytes: 1 << 20,
+            timeout_secs: 10,
+        }
     }
 }
 
@@ -142,9 +154,10 @@ impl Server {
                 let rx = rx.clone();
                 let state = Arc::clone(&state);
                 let max_body = opts.max_body_bytes;
+                let timeout_secs = opts.timeout_secs;
                 scope.spawn(move || {
                     while let Some(stream) = rx.recv() {
-                        handle_connection(stream, &state, max_body);
+                        handle_connection(stream, &state, max_body, timeout_secs);
                     }
                 });
             }
@@ -154,11 +167,27 @@ impl Server {
                     break;
                 }
                 match incoming {
-                    Ok(stream) => {
-                        if tx.send(stream).is_err() {
-                            break; // all workers gone
+                    Ok(stream) => match tx.try_send(stream) {
+                        Ok(()) => {}
+                        // Queue full: every worker busy and the backlog at
+                        // capacity. Shed the connection with a retryable
+                        // 503 instead of blocking the acceptor behind it.
+                        Err(TrySendError::Full(mut stream)) => {
+                            let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+                            let body = obj(vec![(
+                                "error",
+                                Json::Str("server overloaded; retry shortly".into()),
+                            )])
+                            .to_string();
+                            let _ = write_response_with(
+                                &mut stream,
+                                503,
+                                "Retry-After: 1\r\n",
+                                &body,
+                            );
                         }
-                    }
+                        Err(TrySendError::Closed(_)) => break, // all workers gone
+                    },
                     Err(e) => {
                         crate::warn_!("accept error: {e}");
                     }
@@ -179,10 +208,13 @@ pub fn serve(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<(), Lss
 // Connection handling
 // ---------------------------------------------------------------------------
 
-fn handle_connection(stream: TcpStream, state: &ServerState, max_body: usize) {
-    // A stuck client must not pin a pool worker forever.
-    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
-    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+fn handle_connection(stream: TcpStream, state: &ServerState, max_body: usize, timeout_secs: u64) {
+    // A stuck client must not pin a pool worker forever (0 = no timeout).
+    if timeout_secs > 0 {
+        let t = Duration::from_secs(timeout_secs);
+        let _ = stream.set_read_timeout(Some(t));
+        let _ = stream.set_write_timeout(Some(t));
+    }
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -257,18 +289,30 @@ fn read_request(reader: &mut BufReader<TcpStream>, max_body: usize) -> Result<Re
     Ok(Request { method, path, body })
 }
 
-fn write_response(out: &mut TcpStream, status: u16, body: &str) -> std::io::Result<()> {
+fn write_response(out: &mut impl Write, status: u16, body: &str) -> std::io::Result<()> {
+    write_response_with(out, status, "", body)
+}
+
+/// [`write_response`] with extra raw headers (each `\r\n`-terminated) —
+/// the 503 overload path adds `Retry-After` this way.
+fn write_response_with(
+    out: &mut impl Write,
+    status: u16,
+    extra_headers: &str,
+    body: &str,
+) -> std::io::Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        503 => "Service Unavailable",
         _ => "Error",
     };
     write!(
         out,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+         Content-Length: {}\r\nConnection: close\r\n{extra_headers}\r\n{body}",
         body.len()
     )?;
     out.flush()
@@ -540,6 +584,27 @@ mod tests {
             assert_eq!(code, 400, "{body} -> {v:?}");
             assert!(v.get("error").is_some());
         }
+    }
+
+    #[test]
+    fn overload_response_is_retryable_503() {
+        let mut buf: Vec<u8> = Vec::new();
+        let body =
+            obj(vec![("error", Json::Str("server overloaded; retry shortly".into()))]).to_string();
+        write_response_with(&mut buf, 503, "Retry-After: 1\r\n", &body).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("\r\nRetry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Connection: close"), "{text}");
+        let (head, got_body) = text.split_once("\r\n\r\n").unwrap();
+        assert_eq!(got_body, body);
+        let len: usize = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Content-Length: "))
+            .unwrap()
+            .parse()
+            .unwrap();
+        assert_eq!(len, got_body.len());
     }
 
     #[test]

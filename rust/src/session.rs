@@ -86,7 +86,9 @@ use crate::moments::FeatureVariances;
 use crate::solver::bca::BcaOptions;
 use crate::solver::deflate::{DeflatedCov, Scheme};
 use crate::solver::lambda::{LambdaEval, LambdaSearchOptions, LambdaSearchResult};
-use crate::stream::{variance_pass, ChunkSource, FileSource, StreamOptions, SynthSource};
+use crate::stream::{
+    resumable_variance_pass, variance_pass, ChunkSource, FileSource, StreamOptions, SynthSource,
+};
 use crate::util::timer::{Profiler, Timer};
 
 // ---------------------------------------------------------------------------
@@ -794,6 +796,7 @@ impl Session {
 
     fn run_stream(&mut self) -> Result<(), LsspcaError> {
         let cfg = self.cfg.clone();
+        install_robustness(&cfg);
         let opts = stream_opts(&cfg);
         // --- resolve corpus ------------------------------------------------
         let synth: Option<SynthCorpus> = if cfg.input.is_empty() {
@@ -879,18 +882,107 @@ impl Session {
             }
             None => {
                 let t = Timer::start();
-                let (fv, stats) = match &synth {
-                    Some(s) => {
-                        let mut inner = SynthSource::new(s);
-                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
-                        variance_pass(&mut src, opts)
+                // Resumable job state: with a cache dir, the pass snapshots
+                // its partial accumulators every `job_state_chunks` chunks
+                // so a killed run restarts at the last completed chunk, not
+                // byte zero (see `jobstate`). The load is advisory:
+                // corrupt/stale/foreign state is rejected with a warning
+                // and the pass starts over.
+                let job = match (&cache, cfg.robust_job_state, expected_n) {
+                    (Some((_, key)), true, Some(n)) => {
+                        let js_path = crate::jobstate::path_for(Path::new(&cfg.cache_dir), *key);
+                        let resume =
+                            match crate::jobstate::load(&js_path, *key, n, opts.chunk_docs as u64) {
+                                Ok(Some(js)) => {
+                                    crate::info!(
+                                        "variance pass: resuming from job state at chunk {} \
+                                         ({} docs already folded)",
+                                        js.completed_chunks,
+                                        js.moments.docs
+                                    );
+                                    Some((js.moments, js.completed_chunks))
+                                }
+                                Ok(None) => None,
+                                Err(e) => {
+                                    crate::warn_!("ignoring bad job state: {e}");
+                                    None
+                                }
+                            };
+                        Some((js_path, *key, resume))
                     }
-                    None => {
-                        let mut inner = FileSource::open(&input_path)?;
-                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
-                        variance_pass(&mut src, opts)
+                    _ => None,
+                };
+                let (fv, stats) = match job {
+                    None => match &synth {
+                        Some(s) => {
+                            let mut inner = SynthSource::new(s);
+                            let mut src =
+                                ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                            variance_pass(&mut src, opts)?
+                        }
+                        None => {
+                            let policy = record_policy(&cfg, &input_path, corpus_digest)?;
+                            let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                            let r = {
+                                let mut src =
+                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                                variance_pass(&mut src, opts)?
+                            };
+                            report_quarantined(&inner, "variance pass");
+                            r
+                        }
+                    },
+                    Some((js_path, key, resume)) => {
+                        let persist_every = cfg.robust_job_state_chunks as u64;
+                        let chunk_docs = opts.chunk_docs as u64;
+                        let persist = |m: &crate::moments::FeatureMoments, done: u64| {
+                            crate::jobstate::save(
+                                &js_path,
+                                &crate::jobstate::JobState {
+                                    key,
+                                    kind: crate::jobstate::KIND_VARIANCE,
+                                    chunk_docs,
+                                    completed_chunks: done,
+                                    moments: m.clone(),
+                                },
+                            )
+                        };
+                        let r = match &synth {
+                            Some(s) => {
+                                let mut inner = SynthSource::new(s);
+                                let mut src =
+                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                                resumable_variance_pass(&mut src, opts, resume, persist_every, persist)?
+                            }
+                            None => {
+                                let policy = record_policy(&cfg, &input_path, corpus_digest)?;
+                                let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                                let r = {
+                                    let mut src = ObservedSource::new(
+                                        &mut inner,
+                                        obs.as_ref(),
+                                        Stage::Stream,
+                                    );
+                                    resumable_variance_pass(
+                                        &mut src,
+                                        opts,
+                                        resume,
+                                        persist_every,
+                                        persist,
+                                    )?
+                                };
+                                report_quarantined(&inner, "variance pass");
+                                r
+                            }
+                        };
+                        // The pass completed: the job state has served its
+                        // purpose and a stale copy must not outlive it.
+                        if let Err(e) = crate::jobstate::remove(&js_path) {
+                            crate::warn_!("could not remove job state: {e}");
+                        }
+                        r
                     }
-                }?;
+                };
                 self.prof.add("variance_pass", t.secs());
                 if let Some((path, key)) = &cache {
                     if let Err(e) = crate::checkpoint::save(path, *key, &fv) {
@@ -1071,10 +1163,19 @@ impl Session {
                                 reduced_csr_pass(&mut src, &elim, opts)
                             }
                             None => {
-                                let mut inner = FileSource::open(&input_path)?;
-                                let mut src =
-                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
-                                reduced_csr_pass(&mut src, &elim, opts)
+                                let policy = record_policy(&cfg, &input_path, corpus_digest)?;
+                                let mut inner =
+                                    FileSource::open_with_policy(&input_path, policy)?;
+                                let r = {
+                                    let mut src = ObservedSource::new(
+                                        &mut inner,
+                                        obs.as_ref(),
+                                        Stage::Reduce,
+                                    );
+                                    reduced_csr_pass(&mut src, &elim, opts)
+                                };
+                                report_quarantined(&inner, "reduced-csr pass");
+                                r
                             }
                         }?;
                         profbuf.push(("gram_pass", t.secs()));
@@ -1118,9 +1219,15 @@ impl Session {
                         gram_pass(&mut src, &elim, opts, cfg.row_cache_mb)
                     }
                     None => {
-                        let mut inner = FileSource::open(&input_path)?;
-                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
-                        gram_pass(&mut src, &elim, opts, cfg.row_cache_mb)
+                        let policy = record_policy(&cfg, &input_path, corpus_digest)?;
+                        let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                        let r = {
+                            let mut src =
+                                ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                            gram_pass(&mut src, &elim, opts, cfg.row_cache_mb)
+                        };
+                        report_quarantined(&inner, "gram pass");
+                        r
                     }
                 }?;
                 profbuf.push(("gram_pass", t.secs()));
@@ -1141,9 +1248,15 @@ impl Session {
                         covariance_pass(&mut src, &elim, opts)
                     }
                     None => {
-                        let mut inner = FileSource::open(&input_path)?;
-                        let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
-                        covariance_pass(&mut src, &elim, opts)
+                        let policy = record_policy(&cfg, &input_path, corpus_digest)?;
+                        let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                        let r = {
+                            let mut src =
+                                ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                            covariance_pass(&mut src, &elim, opts)
+                        };
+                        report_quarantined(&inner, "covariance pass");
+                        r
                     }
                 }?;
                 profbuf.push(("covariance_pass", t.secs()));
@@ -1334,6 +1447,70 @@ fn stream_opts(cfg: &PipelineConfig) -> StreamOptions {
         workers: cfg.workers,
         chunk_docs: cfg.chunk_docs,
         queue_depth: cfg.queue_depth,
+    }
+}
+
+/// Install the process-wide robustness knobs from config: the
+/// transient-I/O retry schedule and (if scripted) the fault-injection
+/// plan. Called at the top of every streaming stage — idempotent.
+fn install_robustness(cfg: &PipelineConfig) {
+    crate::util::retry::set_policy(crate::util::retry::RetryPolicy {
+        attempts: cfg.robust_retry_attempts as u32,
+        base_delay_ms: cfg.robust_retry_base_ms,
+        ..Default::default()
+    });
+    if !cfg.robust_faults.is_empty() {
+        match crate::util::faultinject::FaultPlan::parse(&cfg.robust_faults) {
+            Ok(plan) => crate::util::faultinject::install(plan),
+            Err(e) => crate::warn_!("ignoring bad [robustness] faults: {e}"),
+        }
+    }
+}
+
+/// Log how many records a pass left in the dead-letter queue, if any.
+fn report_quarantined(src: &FileSource, pass: &str) {
+    let n = src.bad_records();
+    if n > 0 {
+        crate::warn_!("{pass}: {n} bad records quarantined (see dead-letter queue)");
+    }
+}
+
+/// Build the dead-letter record policy from config. `None` (strict
+/// reads) when `[robustness] max_bad_records` is 0 or the corpus is
+/// synthetic — a generator cannot produce malformed lines, only a file
+/// can.
+fn record_policy(
+    cfg: &PipelineConfig,
+    input_path: &Path,
+    corpus_digest: u64,
+) -> Result<Option<crate::deadletter::RecordPolicy>, LsspcaError> {
+    if cfg.robust_max_bad_records == 0 || cfg.input.is_empty() {
+        return Ok(None);
+    }
+    let path = dead_letter_path(cfg, input_path, corpus_digest);
+    let dlq = crate::deadletter::DeadLetterQueue::open(&path)?;
+    Ok(Some(crate::deadletter::RecordPolicy::new(cfg.robust_max_bad_records, dlq)))
+}
+
+/// Where quarantined records go: the configured `dead_letter_path`, else
+/// `deadletter_<digest>.jsonl` in the cache dir, else
+/// `<input>.deadletter.jsonl` beside the corpus.
+pub(crate) fn dead_letter_path(
+    cfg: &PipelineConfig,
+    input_path: &Path,
+    corpus_digest: u64,
+) -> PathBuf {
+    if !cfg.robust_dead_letter_path.is_empty() {
+        PathBuf::from(&cfg.robust_dead_letter_path)
+    } else if !cfg.cache_dir.is_empty() {
+        Path::new(&cfg.cache_dir).join(format!("deadletter_{corpus_digest:016x}.jsonl"))
+    } else {
+        let mut name = input_path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "corpus".into());
+        name.push_str(".deadletter.jsonl");
+        input_path.with_file_name(name)
     }
 }
 

@@ -46,6 +46,16 @@ pub struct BoundedSender<T> {
     inner: Arc<ChannelInner<T>>,
 }
 
+/// Why a [`BoundedSender::try_send`] did not enqueue; the item is handed
+/// back so the caller can respond to its owner (e.g. write a 503).
+#[derive(Debug)]
+pub enum TrySendError<T> {
+    /// Queue at capacity right now.
+    Full(T),
+    /// Channel closed or all receivers gone.
+    Closed(T),
+}
+
 /// Receiving half of a bounded channel (cloneable: multiple workers).
 pub struct BoundedReceiver<T> {
     inner: Arc<ChannelInner<T>>,
@@ -95,6 +105,22 @@ impl<T> BoundedSender<T> {
             }
             st = self.inner.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking send; never waits for queue space. The server's accept
+    /// loop uses this to shed load (503 + `Retry-After`) instead of letting
+    /// a full worker pool back up into the listener.
+    pub fn try_send(&self, item: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed || self.inner.receivers.load(Ordering::SeqCst) == 0 {
+            return Err(TrySendError::Closed(item));
+        }
+        if st.buf.len() < st.cap {
+            st.buf.push_back(item);
+            self.inner.not_empty.notify_one();
+            return Ok(());
+        }
+        Err(TrySendError::Full(item))
     }
 
     /// Close the channel; receivers drain the remaining items then see EOF.
@@ -152,9 +178,24 @@ impl FileSource {
         Ok(FileSource { reader: DocwordReader::open(path)? })
     }
 
+    /// Open with an optional dead-letter [`crate::deadletter::RecordPolicy`]:
+    /// malformed records are quarantined and skipped (within the policy's
+    /// budget) instead of aborting the pass.
+    pub fn open_with_policy(
+        path: &Path,
+        policy: Option<crate::deadletter::RecordPolicy>,
+    ) -> Result<FileSource, LsspcaError> {
+        Ok(FileSource { reader: DocwordReader::open_with_policy(path, policy)? })
+    }
+
     /// The file's declared `(D, W, NNZ)` header.
     pub fn header(&self) -> DocwordHeader {
         self.reader.header()
+    }
+
+    /// Distinct records quarantined so far (0 when strict).
+    pub fn bad_records(&self) -> u64 {
+        self.reader.bad_records()
     }
 }
 
@@ -337,6 +378,157 @@ pub fn variance_pass<S: ChunkSource>(
     Ok((acc.finalize_par(opts.workers), stats))
 }
 
+/// A deterministic, kill-resumable variance pass.
+///
+/// [`variance_pass`] merges worker-local accumulators in thread-completion
+/// order — fine under an f64 *tolerance*, but not stable enough for the
+/// fault-tolerance contract, which demands that a run killed mid-pass and
+/// resumed from a [`crate::jobstate`] file produce **bitwise-identical**
+/// variances. This variant restores determinism by construction:
+///
+/// - each chunk is folded into a **fresh** per-chunk accumulator on
+///   whatever worker picks it up (per-chunk arithmetic is sequential and
+///   thread-independent);
+/// - a dedicated merger thread merges per-chunk results into the master
+///   accumulator in **strict chunk-index order**, parking out-of-order
+///   arrivals in a `BTreeMap` until their turn;
+/// - because [`crate::util::stats::RunningStats::merge`] into an empty
+///   accumulator is an exact copy, the master after chunks `0..k` is the
+///   same f64 sequence regardless of worker count — and a master
+///   *deserialized* from a job state saved at chunk `k` is bitwise equal
+///   to one that folded `0..k` in-process (the format stores exact
+///   `f64::to_le_bytes`).
+///
+/// `resume` restores `(partial accumulator, completed_chunks)` from a job
+/// state; the reader re-reads and discards the completed prefix (gzip
+/// streams cannot seek) so document/nnz totals still match an
+/// uninterrupted run. `persist` is invoked with the master and the number
+/// of completed chunks every `persist_every` merged chunks (0 = never);
+/// a persist failure aborts the pass — by the time it is called the
+/// retry budget has already been spent inside [`crate::jobstate::save`].
+pub fn resumable_variance_pass<S, F>(
+    source: &mut S,
+    opts: StreamOptions,
+    resume: Option<(FeatureMoments, u64)>,
+    persist_every: u64,
+    persist: F,
+) -> Result<(FeatureVariances, StreamStats), LsspcaError>
+where
+    S: ChunkSource,
+    F: FnMut(&FeatureMoments, u64) -> Result<(), LsspcaError> + Send,
+{
+    assert!(opts.workers >= 1 && opts.chunk_docs >= 1 && opts.queue_depth >= 1);
+    let t0 = std::time::Instant::now();
+    let nf = source.num_features();
+    let (start_state, skip_chunks) = match resume {
+        Some((m, done)) => {
+            assert_eq!(m.num_features(), nf, "resume state feature count mismatch");
+            (m, done)
+        }
+        None => (FeatureMoments::new(nf), 0),
+    };
+    let (work_tx, work_rx) = bounded::<(u64, DocChunk)>(opts.queue_depth);
+    let (res_tx, res_rx) = bounded::<(u64, FeatureMoments)>(opts.queue_depth.max(opts.workers));
+    let mut stats = StreamStats::default();
+
+    let result: Result<FeatureMoments, LsspcaError> = std::thread::scope(|scope| {
+        let res_tx = &res_tx;
+        let mut workers = Vec::new();
+        for _ in 0..opts.workers {
+            let rx = work_rx.clone();
+            workers.push(scope.spawn(move || {
+                while let Some((idx, chunk)) = rx.recv() {
+                    let mut acc = FeatureMoments::new(nf);
+                    acc.push_chunk(&chunk);
+                    if res_tx.send((idx, acc)).is_err() {
+                        break;
+                    }
+                }
+            }));
+        }
+        drop(work_rx);
+
+        let merger = scope.spawn({
+            let mut persist = persist;
+            let mut master = start_state;
+            move || -> Result<FeatureMoments, LsspcaError> {
+                let mut pending: std::collections::BTreeMap<u64, FeatureMoments> =
+                    std::collections::BTreeMap::new();
+                let mut next = skip_chunks;
+                let mut unsaved = 0u64;
+                while let Some((idx, acc)) = res_rx.recv() {
+                    pending.insert(idx, acc);
+                    while let Some(acc) = pending.remove(&next) {
+                        master.merge(&acc);
+                        next += 1;
+                        unsaved += 1;
+                        if persist_every > 0 && unsaved >= persist_every {
+                            persist(&master, next)?;
+                            unsaved = 0;
+                        }
+                    }
+                }
+                // Leftover `pending` entries mean a worker died mid-chunk;
+                // the reader/worker error paths below report the cause.
+                Ok(master)
+            }
+        });
+
+        // Reader loop (this thread).
+        let mut read_err = None;
+        let mut idx = 0u64;
+        loop {
+            match source.next_chunk(opts.chunk_docs) {
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+                Ok(None) => break,
+                Ok(Some(chunk)) => {
+                    stats.docs += chunk.docs.len() as u64;
+                    stats.nnz += chunk.total_nnz() as u64;
+                    stats.chunks += 1;
+                    let i = idx;
+                    idx += 1;
+                    if i < skip_chunks {
+                        continue; // already folded into the restored state
+                    }
+                    if work_tx.send((i, chunk)).is_err() {
+                        read_err = Some(LsspcaError::corpus("all workers exited early"));
+                        break;
+                    }
+                }
+            }
+        }
+        work_tx.close();
+
+        let mut panic_err = None;
+        for h in workers {
+            if h.join().is_err() {
+                panic_err = Some(LsspcaError::corpus("worker thread panicked"));
+            }
+        }
+        res_tx.close();
+        // A merger error (persist failure) is the root cause: it makes the
+        // workers and reader shut down with symptom errors, so report it
+        // first rather than "all workers exited early".
+        let acc = match merger.join() {
+            Ok(r) => r?,
+            Err(_) => return Err(LsspcaError::corpus("merger thread panicked")),
+        };
+        if let Some(e) = read_err {
+            return Err(e);
+        }
+        if let Some(e) = panic_err {
+            return Err(e);
+        }
+        Ok(acc)
+    });
+
+    stats.seconds = t0.elapsed().as_secs_f64();
+    result.map(|acc| (acc.finalize_par(opts.workers), stats))
+}
+
 /// Convenience: variance pass over a docword file.
 pub fn variance_pass_file(
     path: &Path,
@@ -364,6 +556,23 @@ mod tests {
         assert_eq!(rx.recv(), Some(2));
         assert_eq!(rx.recv(), None);
         assert!(tx.send(3).is_err());
+    }
+
+    #[test]
+    fn try_send_reports_full_and_closed() {
+        let (tx, rx) = bounded::<u32>(1);
+        assert!(tx.try_send(1).is_ok());
+        match tx.try_send(2) {
+            Err(TrySendError::Full(2)) => {}
+            other => panic!("want Full(2), got {other:?}"),
+        }
+        assert_eq!(rx.recv(), Some(1));
+        assert!(tx.try_send(3).is_ok());
+        tx.close();
+        match tx.try_send(4) {
+            Err(TrySendError::Closed(4)) => {}
+            other => panic!("want Closed(4), got {other:?}"),
+        }
     }
 
     #[test]
@@ -427,6 +636,71 @@ mod tests {
         close_slice(&from_file.variance, &from_mem.variance, 1e-12).unwrap();
         std::fs::remove_file(&p).ok();
         std::fs::remove_file(p.with_extension("vocab")).ok();
+    }
+
+    #[test]
+    fn resumable_pass_is_bitwise_stable_across_resume_points() {
+        let c = corpus();
+        let opts = StreamOptions { workers: 3, chunk_docs: 37, queue_depth: 2 };
+        // Uninterrupted run, capturing the master state after every chunk.
+        let states = std::sync::Mutex::new(Vec::<(u64, FeatureMoments)>::new());
+        let mut src = SynthSource::new(&c);
+        let (want, stats) = resumable_variance_pass(&mut src, opts, None, 1, |m, done| {
+            states.lock().unwrap().push((done, m.clone()));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(stats.docs, 300);
+        let states = states.into_inner().unwrap();
+        assert_eq!(states.len() as u64, stats.chunks);
+        // tolerance-level agreement with the completion-order pass
+        let mut src = SynthSource::new(&c);
+        let (plain, _) = variance_pass(&mut src, opts).unwrap();
+        close_slice(&plain.variance, &want.variance, 1e-10).unwrap();
+        // Resume from several interruption points: bitwise identical.
+        for &(done, ref state) in [&states[0], &states[states.len() / 2], &states[states.len() - 2]]
+        {
+            let mut src = SynthSource::new(&c);
+            let (got, rstats) =
+                resumable_variance_pass(&mut src, opts, Some((state.clone(), done)), 0, |_, _| {
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(rstats.docs, 300, "resumed stats re-count the whole corpus");
+            assert_eq!(got.docs, want.docs);
+            for i in 0..got.variance.len() {
+                assert_eq!(got.variance[i].to_bits(), want.variance[i].to_bits(), "feature {i}");
+                assert_eq!(got.mean[i].to_bits(), want.mean[i].to_bits(), "feature {i}");
+                assert_eq!(
+                    got.second_moment[i].to_bits(),
+                    want.second_moment[i].to_bits(),
+                    "feature {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resumable_pass_persist_failure_is_root_cause() {
+        let c = corpus();
+        let mut src = SynthSource::new(&c);
+        let mut calls = 0;
+        let err = resumable_variance_pass(
+            &mut src,
+            StreamOptions { workers: 2, chunk_docs: 16, queue_depth: 2 },
+            None,
+            2,
+            |_, _| {
+                calls += 1;
+                if calls >= 2 {
+                    Err(LsspcaError::cache("job state disk full"))
+                } else {
+                    Ok(())
+                }
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("disk full"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Deterministic fault injection for the fault-tolerance test surface.
+//!
+//! Real I/O faults — `EINTR` mid-read, a torn write at a power cut, a
+//! SIGKILL between `write` and `rename` — are timing accidents, which
+//! makes tests of the recovery paths flaky by construction. This module
+//! replaces timing with *scripted byte offsets*: a [`FaultPlan`] lists
+//! faults as `op:tag@offset` entries, and the I/O sites that opt in
+//! ([`wrap_read`] / [`wrap_write`], tagged `"checkpoint"`,
+//! `"jobstate"`, `"manifest"`, `"shard"`, `"docword"`) fire each entry
+//! exactly once when their cumulative byte position crosses the scripted
+//! offset. The same corpus plus the same plan always fails at the same
+//! byte.
+//!
+//! Plans come from three places, in priority order: a programmatic
+//! [`scoped`] call (unit tests), the `LSSPCA_FAULTS` environment
+//! variable (CLI-level integration tests, read once per process), or
+//! `[robustness] faults` in the config (operator drills). When no plan
+//! is active the wrappers are a single relaxed atomic load of overhead.
+//!
+//! Fault operations:
+//!
+//! | op           | effect at the scripted offset                            |
+//! |--------------|----------------------------------------------------------|
+//! | `rinterrupt` | read fails once with [`std::io::ErrorKind::Interrupted`] |
+//! | `rshort`     | read is truncated at the offset; at/past it, one `Ok(0)` |
+//! | `winterrupt` | write fails once with `Interrupted`, no bytes consumed   |
+//! | `wtorn`      | write lands bytes up to the offset, then fails permanently |
+//! | `wkill`      | write lands bytes up to the offset, flushes, then aborts the process |
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, Once};
+
+/// One scripted fault.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultEntry {
+    /// Which failure to inject (see the module table).
+    pub op: FaultOp,
+    /// The wrapper tag this entry targets (`"checkpoint"`, `"docword"`, …).
+    pub tag: String,
+    /// Cumulative byte offset within one wrapped stream at which to fire.
+    pub offset: u64,
+    fired: bool,
+}
+
+/// The failure kind a [`FaultEntry`] injects.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultOp {
+    /// Read fails once with `ErrorKind::Interrupted`.
+    ReadInterrupt,
+    /// Read is cut short at the offset (one early EOF if at/past it).
+    ReadShort,
+    /// Write fails once with `ErrorKind::Interrupted`, consuming nothing.
+    WriteInterrupt,
+    /// Write lands a prefix then fails with a permanent error — the
+    /// half-written file stays on disk (the atomic-write regression case).
+    WriteTorn,
+    /// Write lands a prefix, flushes it, then `std::process::abort()`s —
+    /// a real mid-write kill for subprocess-level tests.
+    WriteKill,
+}
+
+impl FaultOp {
+    fn parse(s: &str) -> Option<FaultOp> {
+        Some(match s {
+            "rinterrupt" => FaultOp::ReadInterrupt,
+            "rshort" => FaultOp::ReadShort,
+            "winterrupt" => FaultOp::WriteInterrupt,
+            "wtorn" => FaultOp::WriteTorn,
+            "wkill" => FaultOp::WriteKill,
+            _ => return None,
+        })
+    }
+
+    fn is_read(self) -> bool {
+        matches!(self, FaultOp::ReadInterrupt | FaultOp::ReadShort)
+    }
+}
+
+/// A parsed fault script: the entries fire independently, each at most
+/// once per process.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The scripted faults.
+    pub entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    /// Parse a spec string: `;`-separated `op:tag@offset` entries, e.g.
+    /// `"wtorn:checkpoint@100;rinterrupt:jobstate@8"`. Empty spec =
+    /// empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut entries = Vec::new();
+        for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let (op_s, rest) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault '{part}': want op:tag@offset"))?;
+            let (tag, off_s) = rest
+                .split_once('@')
+                .ok_or_else(|| format!("fault '{part}': want op:tag@offset"))?;
+            let op = FaultOp::parse(op_s).ok_or_else(|| {
+                format!("fault '{part}': unknown op '{op_s}' (want rinterrupt|rshort|winterrupt|wtorn|wkill)")
+            })?;
+            if tag.is_empty() {
+                return Err(format!("fault '{part}': empty tag"));
+            }
+            let offset: u64 = off_s
+                .parse()
+                .map_err(|_| format!("fault '{part}': bad offset '{off_s}'"))?;
+            entries.push(FaultEntry { op, tag: tag.to_string(), offset, fired: false });
+        }
+        Ok(FaultPlan { entries })
+    }
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<FaultPlan>> = Mutex::new(None);
+static ENV_ONCE: Once = Once::new();
+
+/// Serializes tests that install process-global plans. Unit tests that
+/// call [`scoped`] must hold this guard, or concurrently running tests
+/// would see each other's faults.
+pub fn test_guard() -> MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn load_env_plan() {
+    ENV_ONCE.call_once(|| {
+        if let Ok(spec) = std::env::var("LSSPCA_FAULTS") {
+            match FaultPlan::parse(&spec) {
+                Ok(plan) if !plan.entries.is_empty() => {
+                    crate::warn_!("fault injection active from LSSPCA_FAULTS: {spec}");
+                    *PLAN.lock().unwrap() = Some(plan);
+                    ACTIVE.store(true, Ordering::SeqCst);
+                }
+                Ok(_) => {}
+                Err(e) => crate::warn_!("ignoring bad LSSPCA_FAULTS: {e}"),
+            }
+        }
+    });
+}
+
+/// Install a process-global plan (from `[robustness] faults`). An empty
+/// plan deactivates injection.
+pub fn install(plan: FaultPlan) {
+    load_env_plan();
+    let active = !plan.entries.is_empty();
+    *PLAN.lock().unwrap() = if active { Some(plan) } else { None };
+    ACTIVE.store(active, Ordering::SeqCst);
+}
+
+/// Remove any active plan.
+pub fn clear() {
+    load_env_plan();
+    *PLAN.lock().unwrap() = None;
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+/// Run `f` with `plan` installed, restoring the previous plan after —
+/// the unit-test entry point (hold [`test_guard`] around it).
+pub fn scoped<T>(plan: FaultPlan, f: impl FnOnce() -> T) -> T {
+    load_env_plan();
+    let prev = {
+        let mut slot = PLAN.lock().unwrap();
+        let prev = slot.take();
+        let active = !plan.entries.is_empty();
+        *slot = if active { Some(plan) } else { None };
+        ACTIVE.store(active, Ordering::SeqCst);
+        prev
+    };
+    let out = f();
+    let active = prev.is_some();
+    *PLAN.lock().unwrap() = prev;
+    ACTIVE.store(active, Ordering::SeqCst);
+    out
+}
+
+/// What the active plan says about the I/O about to happen on `tag`
+/// covering stream bytes `[pos, pos + len)`.
+enum Verdict {
+    Pass,
+    Interrupt,
+    /// Allow only this many bytes of the request (then the entry is spent;
+    /// for reads a 0 means one early EOF, for torn/kill writes the prefix
+    /// lands before the failure).
+    Partial(usize, FaultOp),
+}
+
+fn consult(tag: &str, reading: bool, pos: u64, len: usize) -> Verdict {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return Verdict::Pass;
+    }
+    load_env_plan();
+    let mut slot = PLAN.lock().unwrap();
+    let Some(plan) = slot.as_mut() else { return Verdict::Pass };
+    let end = pos + len as u64;
+    for e in plan.entries.iter_mut() {
+        if e.fired || e.op.is_read() != reading || e.tag != tag || e.offset >= end {
+            continue;
+        }
+        e.fired = true;
+        let keep = e.offset.saturating_sub(pos) as usize;
+        return match e.op {
+            FaultOp::ReadInterrupt | FaultOp::WriteInterrupt => Verdict::Interrupt,
+            op => Verdict::Partial(keep, op),
+        };
+    }
+    Verdict::Pass
+}
+
+/// Wrap a reader so the active plan's `tag` read-entries fire against
+/// it. Byte offsets count from this wrapper's construction.
+pub fn wrap_read<R: Read>(tag: &str, inner: R) -> FaultRead<R> {
+    FaultRead { inner, tag: tag.to_string(), pos: 0 }
+}
+
+/// Wrap a writer so the active plan's `tag` write-entries fire against
+/// it. Byte offsets count from this wrapper's construction.
+pub fn wrap_write<W: Write>(tag: &str, inner: W) -> FaultWrite<W> {
+    FaultWrite { inner, tag: tag.to_string(), pos: 0 }
+}
+
+/// A [`Read`] that injects scripted faults (see [`wrap_read`]).
+pub struct FaultRead<R> {
+    inner: R,
+    tag: String,
+    pos: u64,
+}
+
+impl<R: Read> Read for FaultRead<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match consult(&self.tag, true, self.pos, buf.len()) {
+            Verdict::Pass => {}
+            Verdict::Interrupt => {
+                return Err(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    format!("injected read interrupt ({} at byte {})", self.tag, self.pos),
+                ));
+            }
+            Verdict::Partial(keep, _) => {
+                // rshort: deliver only up to the scripted offset; a keep
+                // of 0 is one early EOF.
+                let n = self.inner.read(&mut buf[..keep])?;
+                self.pos += n as u64;
+                return Ok(n);
+            }
+        }
+        let n = self.inner.read(buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+}
+
+/// A [`Write`] that injects scripted faults (see [`wrap_write`]).
+pub struct FaultWrite<W: Write> {
+    inner: W,
+    tag: String,
+    pos: u64,
+}
+
+impl<W: Write> FaultWrite<W> {
+    /// Unwrap the inner writer (for a final `sync_all` on a `File`).
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for FaultWrite<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match consult(&self.tag, false, self.pos, buf.len()) {
+            Verdict::Pass => {}
+            Verdict::Interrupt => {
+                return Err(io::Error::new(
+                    io::ErrorKind::Interrupted,
+                    format!("injected write interrupt ({} at byte {})", self.tag, self.pos),
+                ));
+            }
+            Verdict::Partial(keep, op) => {
+                // Land the prefix so the torn file is really on disk.
+                self.inner.write_all(&buf[..keep])?;
+                self.inner.flush()?;
+                self.pos += keep as u64;
+                if op == FaultOp::WriteKill {
+                    std::process::abort();
+                }
+                return Err(io::Error::other(format!(
+                    "injected torn write ({} at byte {})",
+                    self.tag, self.pos
+                )));
+            }
+        }
+        let n = self.inner.write(buf)?;
+        self.pos += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let p = FaultPlan::parse("wtorn:checkpoint@100; rinterrupt:jobstate@8").unwrap();
+        assert_eq!(p.entries.len(), 2);
+        assert_eq!(p.entries[0].op, FaultOp::WriteTorn);
+        assert_eq!(p.entries[0].tag, "checkpoint");
+        assert_eq!(p.entries[0].offset, 100);
+        assert_eq!(p.entries[1].op, FaultOp::ReadInterrupt);
+        assert!(FaultPlan::parse("").unwrap().entries.is_empty());
+        for bad in ["boom:x@1", "wtorn:@1", "wtorn:x@ten", "wtorn:x", "justwords"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn read_interrupt_fires_once_at_offset() {
+        let _g = test_guard();
+        let data = vec![7u8; 64];
+        scoped(FaultPlan::parse("rinterrupt:t@10").unwrap(), || {
+            let mut r = wrap_read("t", &data[..]);
+            let mut buf = [0u8; 8];
+            r.read_exact(&mut buf).unwrap(); // bytes 0..8: clean
+            let e = r.read(&mut buf).unwrap_err(); // would cross 10
+            assert_eq!(e.kind(), io::ErrorKind::Interrupted);
+            r.read_exact(&mut buf).unwrap(); // entry spent: clean again
+        });
+    }
+
+    #[test]
+    fn short_read_truncates_then_resumes() {
+        let _g = test_guard();
+        let data: Vec<u8> = (0..32).collect();
+        scoped(FaultPlan::parse("rshort:t@5").unwrap(), || {
+            let mut r = wrap_read("t", &data[..]);
+            let mut buf = [0u8; 16];
+            let n = r.read(&mut buf).unwrap();
+            assert_eq!(n, 5, "cut at the scripted offset");
+            assert_eq!(&buf[..5], &[0, 1, 2, 3, 4]);
+            let n = r.read(&mut buf).unwrap(); // entry spent
+            assert_eq!(&buf[..n], &data[5..5 + n]);
+        });
+    }
+
+    #[test]
+    fn torn_write_lands_prefix_then_permanent_error() {
+        let _g = test_guard();
+        let mut sink = Vec::new();
+        scoped(FaultPlan::parse("wtorn:t@6").unwrap(), || {
+            let mut w = wrap_write("t", &mut sink);
+            let e = w.write_all(&[1u8; 10]).unwrap_err();
+            assert_ne!(e.kind(), io::ErrorKind::Interrupted, "torn writes are permanent");
+            assert!(e.to_string().contains("torn"), "{e}");
+        });
+        assert_eq!(sink.len(), 6, "exactly the pre-offset prefix landed");
+    }
+
+    #[test]
+    fn untagged_streams_unaffected() {
+        let _g = test_guard();
+        scoped(FaultPlan::parse("rinterrupt:other@0;wtorn:other@0").unwrap(), || {
+            let mut r = wrap_read("t", &[1u8, 2, 3][..]);
+            let mut buf = [0u8; 3];
+            r.read_exact(&mut buf).unwrap();
+            let mut sink = Vec::new();
+            wrap_write("t", &mut sink).write_all(&[9u8; 4]).unwrap();
+            assert_eq!(sink.len(), 4);
+        });
+    }
+
+    #[test]
+    fn scoped_restores_inactive() {
+        let _g = test_guard();
+        scoped(FaultPlan::parse("rinterrupt:t@0").unwrap(), || {});
+        let mut r = wrap_read("t", &[1u8][..]);
+        let mut buf = [0u8; 1];
+        r.read_exact(&mut buf).unwrap();
+    }
+
+    #[test]
+    fn write_interrupt_consumes_nothing() {
+        let _g = test_guard();
+        let mut sink = Vec::new();
+        scoped(FaultPlan::parse("winterrupt:t@0").unwrap(), || {
+            let mut w = wrap_write("t", &mut sink);
+            let e = w.write(&[1u8; 4]).unwrap_err();
+            assert_eq!(e.kind(), io::ErrorKind::Interrupted);
+            w.write_all(&[1u8; 4]).unwrap(); // spent: retry succeeds
+        });
+        assert_eq!(sink.len(), 4);
+    }
+}

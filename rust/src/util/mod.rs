@@ -8,10 +8,12 @@
 
 pub mod bench;
 pub mod check;
+pub mod faultinject;
 pub mod gzip;
 pub mod json;
 pub mod parallel;
 pub mod plot;
+pub mod retry;
 pub mod rng;
 pub mod stats;
 pub mod timer;
@@ -33,6 +35,38 @@ pub fn xor_fold_checksum(buf: &[u8]) -> u64 {
         acc ^= u64::from_le_bytes(lane).rotate_left((i % 63) as u32);
     }
     acc
+}
+
+/// Crash-atomic file replacement: write `bytes` to `<path>.tmp`, fsync,
+/// then rename over `path`. A crash (or injected kill) at any point
+/// leaves either the old file or the new one — never a half-written
+/// hybrid — because the rename is the only step that touches `path` and
+/// POSIX renames within a directory are atomic. The write stream runs
+/// through [`faultinject::wrap_write`] under `tag`, so tests can tear
+/// or kill it at scripted offsets; the orphaned `.tmp` is removed
+/// best-effort on failure.
+pub fn atomic_write(path: &std::path::Path, tag: &str, bytes: &[u8]) -> std::io::Result<()> {
+    use std::io::Write;
+    let tmp = path.with_extension(match path.extension() {
+        Some(ext) => format!("{}.tmp", ext.to_string_lossy()),
+        None => "tmp".to_string(),
+    });
+    let result = (|| {
+        let file = std::fs::File::create(&tmp)?;
+        let mut w = faultinject::wrap_write(tag, file);
+        w.write_all(bytes)?;
+        w.flush()?;
+        // Durability before visibility: the data must be on disk before
+        // the rename can make it the canonical file.
+        let file = w.into_inner();
+        file.sync_all()?;
+        drop(file);
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
 }
 
 /// Format a number of bytes in a human-friendly way (KiB/MiB/GiB).
@@ -75,6 +109,28 @@ mod tests {
         assert_eq!(human_bytes(17), "17 B");
         assert_eq!(human_bytes(2048), "2.00 KiB");
         assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn atomic_write_replaces_or_preserves_never_tears() {
+        let _g = faultinject::test_guard();
+        let dir = std::env::temp_dir().join(format!("lsspca_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("target.bin");
+        atomic_write(&path, "t", b"original contents").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"original contents");
+        // A torn write mid-replacement must leave the original intact
+        // and no .tmp debris behind.
+        faultinject::scoped(faultinject::FaultPlan::parse("wtorn:t@4").unwrap(), || {
+            let e = atomic_write(&path, "t", b"replacement that tears").unwrap_err();
+            assert!(e.to_string().contains("torn"), "{e}");
+        });
+        assert_eq!(std::fs::read(&path).unwrap(), b"original contents");
+        assert!(!path.with_extension("bin.tmp").exists(), "tmp file must be cleaned up");
+        // With the plan spent, the same replacement goes through.
+        atomic_write(&path, "t", b"replacement that lands").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"replacement that lands");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

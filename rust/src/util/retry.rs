@@ -1,0 +1,199 @@
+//! Retry with capped exponential backoff for transient I/O.
+//!
+//! The cache-layer files (variance checkpoints, covariance shards, job
+//! state) live on whatever filesystem the operator points `cache_dir`
+//! at — often network-attached at the corpus scales the paper targets —
+//! where reads and writes can fail *transiently* (`EINTR`, a timeout, a
+//! momentarily unreachable mount). Aborting a multi-hour streaming pass
+//! on the first `Interrupted` is exactly the fragility this layer
+//! removes: [`with_retry`] re-runs the operation with deterministic
+//! capped exponential backoff and only surfaces the error once the
+//! attempt budget is spent, tagging it so callers can map it to
+//! [`crate::error::LsspcaError::is_transient`].
+//!
+//! Only *transient* [`std::io::ErrorKind`]s are retried (see
+//! [`is_transient_kind`]); permanent failures — `NotFound`,
+//! `PermissionDenied`, `UnexpectedEof` (truncation is damage, not
+//! weather) — surface immediately on the first attempt.
+
+use std::io;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Deterministic capped-exponential-backoff schedule. No jitter: runs
+/// must be reproducible, and the in-process contention jitter exists to
+/// fight does not apply to the single-writer cache files involved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (`>= 1`). 1 = no retry.
+    pub attempts: u32,
+    /// Backoff before the first retry, in milliseconds; doubles each
+    /// retry after that.
+    pub base_delay_ms: u64,
+    /// Ceiling on any single backoff, in milliseconds.
+    pub max_delay_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 3, base_delay_ms: 10, max_delay_ms: 1000 }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff before retry number `retry` (0-based):
+    /// `min(base_delay_ms << retry, max_delay_ms)`.
+    pub fn delay_ms(&self, retry: u32) -> u64 {
+        let shifted = self.base_delay_ms.checked_shl(retry).unwrap_or(u64::MAX);
+        shifted.min(self.max_delay_ms)
+    }
+}
+
+/// `true` for [`std::io::ErrorKind`]s worth retrying: the OS or the
+/// fault-injection harness said "try again", not "this file is gone".
+pub fn is_transient_kind(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::Interrupted | io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock
+    )
+}
+
+/// Outcome of [`with_retry`] when every attempt failed.
+#[derive(Debug)]
+pub struct RetryError {
+    /// The error from the final attempt.
+    pub error: io::Error,
+    /// Attempts actually made.
+    pub attempts: u32,
+    /// `true` when the final error was a transient kind — i.e. the
+    /// budget ran out on retryable weather; `false` means the operation
+    /// hit a permanent failure (no further attempts were made).
+    pub transient: bool,
+}
+
+impl RetryError {
+    /// Render as `"<what>: <error> (after N attempts)"` — the message
+    /// shape the cache-layer error constructors wrap.
+    pub fn describe(&self, what: &str) -> String {
+        if self.attempts > 1 {
+            format!("{what}: {} (after {} attempts)", self.error, self.attempts)
+        } else {
+            format!("{what}: {}", self.error)
+        }
+    }
+}
+
+/// Run `op`, retrying transient failures per `policy`. Permanent errors
+/// return after the first attempt with `transient: false`.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> Result<T, RetryError> {
+    let attempts = policy.attempts.max(1);
+    let mut made = 0;
+    loop {
+        made += 1;
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                let transient = is_transient_kind(e.kind());
+                if !transient || made >= attempts {
+                    return Err(RetryError { error: e, attempts: made, transient });
+                }
+                std::thread::sleep(Duration::from_millis(policy.delay_ms(made - 1)));
+            }
+        }
+    }
+}
+
+static GLOBAL_POLICY: Mutex<RetryPolicy> =
+    Mutex::new(RetryPolicy { attempts: 3, base_delay_ms: 10, max_delay_ms: 1000 });
+
+/// Install the process-wide policy the cache layers use (set from
+/// `[robustness] retry_attempts` / `retry_base_ms` at pipeline start).
+pub fn set_policy(policy: RetryPolicy) {
+    *GLOBAL_POLICY.lock().unwrap() = policy;
+}
+
+/// The current process-wide policy.
+pub fn policy() -> RetryPolicy {
+    *GLOBAL_POLICY.lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn interrupted() -> io::Error {
+        io::Error::new(io::ErrorKind::Interrupted, "fake EINTR")
+    }
+
+    #[test]
+    fn first_try_success_needs_no_retries() {
+        let mut calls = 0;
+        let r = with_retry(&RetryPolicy::default(), || {
+            calls += 1;
+            Ok::<_, io::Error>(42)
+        });
+        assert_eq!(r.unwrap(), 42);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn transient_errors_retry_until_success() {
+        let fast = RetryPolicy { attempts: 5, base_delay_ms: 0, max_delay_ms: 0 };
+        let mut calls = 0;
+        let r = with_retry(&fast, || {
+            calls += 1;
+            if calls < 3 { Err(interrupted()) } else { Ok(7) }
+        });
+        assert_eq!(r.unwrap(), 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn budget_exhaustion_reports_transient() {
+        let fast = RetryPolicy { attempts: 3, base_delay_ms: 0, max_delay_ms: 0 };
+        let mut calls = 0;
+        let e = with_retry(&fast, || -> io::Result<()> {
+            calls += 1;
+            Err(interrupted())
+        })
+        .unwrap_err();
+        assert_eq!(calls, 3);
+        assert_eq!(e.attempts, 3);
+        assert!(e.transient);
+        assert!(e.describe("reading x").contains("after 3 attempts"), "{}", e.describe("reading x"));
+    }
+
+    #[test]
+    fn permanent_errors_fail_fast() {
+        let mut calls = 0;
+        let e = with_retry(&RetryPolicy::default(), || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::NotFound, "gone"))
+        })
+        .unwrap_err();
+        assert_eq!(calls, 1, "permanent errors must not burn the budget");
+        assert!(!e.transient);
+    }
+
+    #[test]
+    fn truncation_is_not_transient() {
+        // UnexpectedEof means the file is damaged; retrying re-reads the
+        // same damage.
+        assert!(!is_transient_kind(io::ErrorKind::UnexpectedEof));
+        assert!(is_transient_kind(io::ErrorKind::Interrupted));
+        assert!(is_transient_kind(io::ErrorKind::TimedOut));
+        assert!(is_transient_kind(io::ErrorKind::WouldBlock));
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = RetryPolicy { attempts: 10, base_delay_ms: 10, max_delay_ms: 35 };
+        assert_eq!(p.delay_ms(0), 10);
+        assert_eq!(p.delay_ms(1), 20);
+        assert_eq!(p.delay_ms(2), 35); // 40 capped
+        assert_eq!(p.delay_ms(63), 35); // shift overflow saturates, then caps
+    }
+}

@@ -1,0 +1,414 @@
+//! Fault tolerance: kill-and-resume job state, dead-letter quarantine,
+//! transient-I/O retry classification, and the deterministic
+//! fault-injection harness — exercised both in-process (library API)
+//! and through the `lsspca` binary (the `LSSPCA_FAULTS` env path).
+//!
+//! Artifacts (dead-letter queues, cache dirs with job state) are created
+//! under `LSSPCA_FAULT_DIR` when set, so CI can upload the leftovers of
+//! a failing test; on success each test removes its own directory.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use lsspca::config::PipelineConfig;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::error::LsspcaError;
+use lsspca::jobstate::{self, JobState, KIND_VARIANCE};
+use lsspca::moments::FeatureMoments;
+use lsspca::session::Session;
+use lsspca::stream::{resumable_variance_pass, StreamOptions, SynthSource};
+use lsspca::util::{faultinject, retry};
+
+/// Root for test artifacts: `LSSPCA_FAULT_DIR` (CI upload point) or the
+/// system temp dir.
+fn artifact_root() -> PathBuf {
+    match std::env::var("LSSPCA_FAULT_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir(),
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = artifact_root().join(format!("lsspca_ft_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(p.parent().unwrap()).ok();
+    p
+}
+
+fn bin() -> PathBuf {
+    // target/<profile>/lsspca next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("lsspca");
+    p
+}
+
+/// Run the binary; returns (exit code, success, stdout+stderr).
+fn run_cli(args: &[&str], env: &[(&str, &str)]) -> (Option<i32>, bool, String) {
+    let mut cmd = Command::new(bin());
+    cmd.args(args);
+    for &(k, v) in env {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("spawn lsspca");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.code(), out.status.success(), text)
+}
+
+fn ft_config(cache_dir: &std::path::Path) -> PipelineConfig {
+    PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 600,
+        synth_vocab: 1500,
+        workers: 3,
+        chunk_docs: 64,
+        cache_dir: cache_dir.display().to_string(),
+        robust_job_state_chunks: 1,
+        ..Default::default()
+    }
+}
+
+/// The corpus digest `run_stream` derives for a synthetic config — same
+/// identity string, same FNV fold.
+fn synth_key(cfg: &PipelineConfig) -> u64 {
+    let spec = CorpusSpec::preset(&cfg.synth_preset)
+        .unwrap()
+        .scaled(cfg.synth_docs, cfg.synth_vocab);
+    let corpus = SynthCorpus::new(spec, cfg.seed);
+    lsspca::checkpoint::corpus_key(&format!(
+        "synth:{}:{}:{}:{}",
+        corpus.spec.name, corpus.spec.num_docs, corpus.spec.vocab_size, corpus.seed
+    ))
+}
+
+#[test]
+fn resume_from_job_state_is_bitwise_identical() {
+    let cache_a = tmp("resume_clean");
+    let cache_b = tmp("resume_killed");
+    std::fs::remove_dir_all(&cache_a).ok();
+    std::fs::remove_dir_all(&cache_b).ok();
+
+    // Reference: one uninterrupted run.
+    let cfg_a = ft_config(&cache_a);
+    let mut sess = Session::from_config(cfg_a.clone()).unwrap();
+    let stats_a = sess.stream().unwrap();
+    let (var_a, mean_a, docs_a) = (
+        stats_a.variances.variance.clone(),
+        stats_a.variances.mean.clone(),
+        stats_a.docs,
+    );
+    let key = synth_key(&cfg_a);
+    let ckpt_a = std::fs::read(lsspca::checkpoint::path_for(&cache_a, key)).unwrap();
+
+    // "Killed" run: drive the resumable pass directly, persisting job
+    // state every chunk, and die (persist error) after the 3rd snapshot —
+    // the moment-in-time a SIGKILL would leave behind.
+    let cfg_b = ft_config(&cache_b);
+    let spec = CorpusSpec::preset("nytimes").unwrap().scaled(600, 1500);
+    let corpus = SynthCorpus::new(spec, cfg_b.seed);
+    let js_path = jobstate::path_for(&cache_b, key);
+    let opts = StreamOptions {
+        workers: cfg_b.workers,
+        chunk_docs: cfg_b.chunk_docs,
+        queue_depth: cfg_b.queue_depth,
+    };
+    let mut saves = 0u64;
+    let chunk_docs = cfg_b.chunk_docs as u64;
+    let res = resumable_variance_pass(
+        &mut SynthSource::new(&corpus),
+        opts,
+        None,
+        1,
+        |m, done| {
+            jobstate::save(
+                &js_path,
+                &JobState {
+                    key,
+                    kind: KIND_VARIANCE,
+                    chunk_docs,
+                    completed_chunks: done,
+                    moments: m.clone(),
+                },
+            )?;
+            saves += 1;
+            if saves == 3 {
+                return Err(LsspcaError::io("simulated kill"));
+            }
+            Ok(())
+        },
+    );
+    let err = res.unwrap_err().to_string();
+    assert!(err.contains("simulated kill"), "persist failure must be the root cause: {err}");
+    let js = jobstate::load(&js_path, key, 1500, chunk_docs).unwrap().unwrap();
+    assert_eq!(js.completed_chunks, 3, "job state snapshots the last completed chunk");
+
+    // Restart: the session finds the job state, resumes at chunk 3, and
+    // the final statistics are bitwise those of the uninterrupted run.
+    let mut sess_b = Session::from_config(cfg_b).unwrap();
+    let got = sess_b.stream().unwrap();
+    assert_eq!(got.docs, docs_a);
+    assert_eq!(got.variances.variance.len(), var_a.len());
+    for (a, b) in var_a.iter().zip(&got.variances.variance) {
+        assert_eq!(a.to_bits(), b.to_bits(), "resumed variances must be bitwise identical");
+    }
+    for (a, b) in mean_a.iter().zip(&got.variances.mean) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert!(!js_path.exists(), "job state is removed once the pass completes");
+    let ckpt_b = std::fs::read(lsspca::checkpoint::path_for(&cache_b, key)).unwrap();
+    assert_eq!(ckpt_a, ckpt_b, "checkpoint written after resume must match byte for byte");
+
+    std::fs::remove_dir_all(&cache_a).ok();
+    std::fs::remove_dir_all(&cache_b).ok();
+}
+
+#[test]
+fn stale_or_foreign_job_state_is_rejected_not_resumed() {
+    let cache_ref = tmp("stale_ref");
+    let cache_foreign = tmp("stale_foreign");
+    let cache_chunks = tmp("stale_chunks");
+    for d in [&cache_ref, &cache_foreign, &cache_chunks] {
+        std::fs::remove_dir_all(d).ok();
+    }
+    let cfg = ft_config(&cache_ref);
+    let key = synth_key(&cfg);
+    let mut sess = Session::from_config(cfg.clone()).unwrap();
+    let var_ref = sess.stream().unwrap().variances.variance.clone();
+
+    // A job state from a *different corpus* sitting at this corpus' path
+    // (e.g. a digest collision after a cache-dir copy) must be ignored.
+    let foreign = JobState {
+        key: key ^ 0xdead_beef,
+        kind: KIND_VARIANCE,
+        chunk_docs: cfg.chunk_docs as u64,
+        completed_chunks: 4,
+        moments: FeatureMoments::new(1500),
+    };
+    jobstate::save(&jobstate::path_for(&cache_foreign, key), &foreign).unwrap();
+    let mut cfg_f = cfg.clone();
+    cfg_f.cache_dir = cache_foreign.display().to_string();
+    let mut sess_f = Session::from_config(cfg_f).unwrap();
+    let got = sess_f.stream().unwrap();
+    for (a, b) in var_ref.iter().zip(&got.variances.variance) {
+        assert_eq!(a.to_bits(), b.to_bits(), "rejected job state must not affect the result");
+    }
+
+    // A job state recorded at a different chunk size is stale: chunk
+    // boundaries would move, so the pass starts over.
+    let stale = JobState {
+        key,
+        kind: KIND_VARIANCE,
+        chunk_docs: 999,
+        completed_chunks: 2,
+        moments: FeatureMoments::new(1500),
+    };
+    jobstate::save(&jobstate::path_for(&cache_chunks, key), &stale).unwrap();
+    let mut cfg_c = cfg.clone();
+    cfg_c.cache_dir = cache_chunks.display().to_string();
+    let mut sess_c = Session::from_config(cfg_c).unwrap();
+    let got = sess_c.stream().unwrap();
+    for (a, b) in var_ref.iter().zip(&got.variances.variance) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    for d in [&cache_ref, &cache_foreign, &cache_chunks] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn torn_write_never_corrupts_persisted_job_state() {
+    let _g = faultinject::test_guard();
+    let dir = tmp("torn");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = jobstate::path_for(&dir, 0xfeed);
+    let snap = |completed: u64| JobState {
+        key: 0xfeed,
+        kind: KIND_VARIANCE,
+        chunk_docs: 64,
+        completed_chunks: completed,
+        moments: FeatureMoments::new(8),
+    };
+    jobstate::save(&path, &snap(1)).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // A power cut mid-write of the *next* snapshot: the torn bytes land
+    // in the tmp file only; the published snapshot must stay intact.
+    faultinject::scoped(faultinject::FaultPlan::parse("wtorn:jobstate@8").unwrap(), || {
+        let e = jobstate::save(&path, &snap(2)).unwrap_err();
+        assert!(e.to_string().contains("torn"), "{e}");
+        assert!(!e.is_transient(), "a torn write is damage, not weather");
+    });
+    assert_eq!(std::fs::read(&path).unwrap(), good, "published snapshot survived the tear");
+    let js = jobstate::load(&path, 0xfeed, 8, 64).unwrap().unwrap();
+    assert_eq!(js.completed_chunks, 1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn retry_exhaustion_maps_to_transient_cache_error() {
+    let fast = retry::RetryPolicy { attempts: 3, base_delay_ms: 0, max_delay_ms: 0 };
+    let mut calls = 0;
+    let err = retry::with_retry(&fast, || -> std::io::Result<()> {
+        calls += 1;
+        Err(std::io::Error::new(std::io::ErrorKind::TimedOut, "nfs mount wobble"))
+    })
+    .unwrap_err();
+    assert_eq!(calls, 3, "transient failures burn the whole budget");
+    assert!(err.transient);
+    // The mapping the cache layers (checkpoint/jobstate/shardcache) use:
+    // exhausted-transient → Cache { transient: true } → exit code 4.
+    let mapped = LsspcaError::cache_transient(err.describe("job state write"));
+    assert!(mapped.is_transient());
+    assert_eq!(mapped.exit_code(), 4);
+    assert!(mapped.to_string().contains("after 3 attempts"), "{mapped}");
+
+    // Permanent failures surface immediately and are not transient.
+    let mut calls = 0;
+    let err = retry::with_retry(&fast, || -> std::io::Result<()> {
+        calls += 1;
+        Err(std::io::Error::new(std::io::ErrorKind::PermissionDenied, "denied"))
+    })
+    .unwrap_err();
+    assert_eq!(calls, 1);
+    assert!(!err.transient);
+    assert!(!LsspcaError::cache(err.describe("checkpoint write")).is_transient());
+}
+
+#[test]
+fn cli_kill_mid_pass_then_rerun_matches_clean_run() {
+    let root = tmp("cli_kill");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let corpus = root.join("corpus.txt.gz");
+    let corpus_s = corpus.display().to_string();
+    let (_, ok, text) = run_cli(
+        &["gen", "--out", &corpus_s, "--preset", "nytimes", "--docs", "400", "--vocab", "1500"],
+        &[],
+    );
+    assert!(ok, "{text}");
+    // chunk_docs is a config-file knob; persist job state every chunk so
+    // the scripted kill lands inside the pass.
+    let cfg = root.join("ft.toml");
+    std::fs::write(&cfg, "[stream]\nchunk_docs = 32\n\n[robustness]\njob_state_chunks = 1\n")
+        .unwrap();
+    let cfg_s = cfg.display().to_string();
+    let killed_cache = root.join("cache_killed");
+    let clean_cache = root.join("cache_clean");
+    let killed_s = killed_cache.display().to_string();
+    let clean_s = clean_cache.display().to_string();
+    let args: Vec<&str> = vec![
+        "run", "--config", &cfg_s, "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+        "--cache-dir", &killed_s,
+    ];
+    let args_clean: Vec<&str> = vec![
+        "run", "--config", &cfg_s, "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+        "--cache-dir", &clean_s,
+    ];
+
+    // Run 1: abort the process mid-write of the first job-state snapshot.
+    let (_, ok, _) = run_cli(&args, &[("LSSPCA_FAULTS", "wkill:jobstate@8")]);
+    assert!(!ok, "the scripted kill must abort the run");
+    let lspv = |dir: &std::path::Path| {
+        std::fs::read_dir(dir)
+            .ok()
+            .into_iter()
+            .flatten()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.extension().is_some_and(|x| x == "lspv"))
+    };
+    assert!(lspv(&killed_cache).is_none(), "no checkpoint may exist after the kill");
+
+    // Run 2: no faults — recovers (the torn tmp snapshot is invisible;
+    // the atomic write never published it) and completes.
+    let (_, ok, text) = run_cli(&args, &[]);
+    assert!(ok, "{text}");
+
+    // Reference: a never-killed run in a fresh cache. The final variance
+    // checkpoints must agree byte for byte.
+    let (_, ok, text) = run_cli(&args_clean, &[]);
+    assert!(ok, "{text}");
+    let a = std::fs::read(lspv(&killed_cache).expect("checkpoint after recovery")).unwrap();
+    let b = std::fs::read(lspv(&clean_cache).expect("checkpoint of clean run")).unwrap();
+    assert_eq!(a, b, "post-crash rerun must produce a bitwise-identical checkpoint");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cli_dead_letter_quarantine_budget_and_dlq_command() {
+    let root = tmp("cli_dlq");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let corpus = root.join("corpus.txt");
+    let corpus_s = corpus.display().to_string();
+    let (_, ok, text) = run_cli(
+        &["gen", "--out", &corpus_s, "--preset", "nytimes", "--docs", "300", "--vocab", "1200"],
+        &[],
+    );
+    assert!(ok, "{text}");
+    // Splice three malformed records at the top of the data section:
+    // zero doc id, out-of-range word id, non-numeric count.
+    let txt = std::fs::read_to_string(&corpus).unwrap();
+    let mut lines: Vec<&str> = txt.lines().collect();
+    lines.splice(3..3, ["0 5 1", "1 999999 2", "1 7 x"]);
+    std::fs::write(&corpus, lines.join("\n") + "\n").unwrap();
+
+    // Strict mode (the default): the first malformed record aborts with
+    // the corpus exit code.
+    let (code, ok, text) =
+        run_cli(&["run", "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32"], &[]);
+    assert!(!ok);
+    assert_eq!(code, Some(6), "{text}");
+
+    // With a budget the run completes and the records are quarantined.
+    let dlq = root.join("dlq.jsonl");
+    let dlq_s = dlq.display().to_string();
+    let (_, ok, text) = run_cli(
+        &[
+            "run", "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+            "--max-bad-records", "10", "--dead-letter-path", &dlq_s,
+        ],
+        &[],
+    );
+    assert!(ok, "{text}");
+    assert!(text.contains("quarantined"), "{text}");
+    assert!(dlq.exists());
+
+    // `lsspca dlq` inspects the queue: count, per-reason histogram, crc.
+    let (_, ok, text) = run_cli(&["dlq", "--path", &dlq_s], &[]);
+    assert!(ok, "{text}");
+    assert!(text.contains("3 quarantined records"), "{text}");
+    for reason in ["zero-id", "word-out-of-range", "bad-count"] {
+        assert!(text.contains(reason), "missing {reason}:\n{text}");
+    }
+    assert!(!text.contains("WARNING"), "all records must pass their crc:\n{text}");
+
+    // `dlq --retry`: none of these records can be salvaged, and the
+    // command says so with the corpus exit code.
+    let (code, ok, text) =
+        run_cli(&["dlq", "--path", &dlq_s, "--retry", "--vocab-size", "1200"], &[]);
+    assert!(!ok);
+    assert_eq!(code, Some(6), "{text}");
+    assert!(text.contains("0 recoverable / 3 permanently malformed"), "{text}");
+
+    // A budget below the damage aborts with the corpus exit code and
+    // points at the queue.
+    let dlq2 = root.join("dlq2.jsonl");
+    let dlq2_s = dlq2.display().to_string();
+    let (code, ok, text) = run_cli(
+        &[
+            "run", "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+            "--max-bad-records", "2", "--dead-letter-path", &dlq2_s,
+        ],
+        &[],
+    );
+    assert!(!ok);
+    assert_eq!(code, Some(6), "{text}");
+    assert!(text.contains("too many bad records"), "{text}");
+    std::fs::remove_dir_all(&root).ok();
+}
