@@ -1,0 +1,289 @@
+"""Mirror suite for the PR-7 SIMD kernel layer (rust/src/kernels/).
+
+Stdlib + numpy only; runs standalone:
+
+    python3 python/tests/test_kernels_mirror.py
+
+The Rust claims under test are *summation-order* claims about IEEE-754
+doubles, so they are checkable without the Rust toolchain by replaying
+the exact operation sequences in Python floats (which are IEEE doubles
+with round-to-nearest-even, same as Rust f64):
+
+1. The scalar reference dot (4-way unrolled, `(s0+s1)+(s2+s3)` tree,
+   sequential tail), the AVX2 simulation (4-lane vertical accumulate,
+   same tree), and the NEON simulation (two 2-lane accumulators, same
+   tree) are bitwise identical at every probed length — including the
+   awkward ones (0..=33, 127, 1000) and adversarial data (mixed
+   magnitudes, subnormals, signed zeros).
+2. The fast_math FMA variant (exact fused multiply-add emulated with
+   Fraction arithmetic + one correct rounding) stays within 1e-12
+   relative of the exact path on unit-scale data.
+3. Skipping exact-zero scatter columns / inactive shards (the
+   DiskGramCov::stream_ax bugfix) is bitwise-neutral: a +0.0-seeded
+   running sum can never become -0.0, so `ax[d] += v * 0.0` is always
+   the identity on bits.
+4. The CSC column-sweep scatter and the CSR row-major accumulate add
+   each output's terms in the same (ascending-column) order, hence
+   bitwise-equal results — the GramCov::forward_ax fast-path claim.
+"""
+
+import math
+import random
+import struct
+from fractions import Fraction
+
+import numpy as np
+
+PROBE_SIZES = list(range(34)) + [127, 1000]
+
+
+def bits(x):
+    return struct.pack("<d", float(x))
+
+
+# ---------------------------------------------------------------------------
+# mirrored kernels (line-for-line from rust/src/kernels/{scalar,x86,neon}.rs)
+# ---------------------------------------------------------------------------
+
+
+def dot_scalar(a, b):
+    n = len(a)
+    chunks = n // 4
+    s0 = s1 = s2 = s3 = 0.0
+    for k in range(chunks):
+        i = 4 * k
+        s0 += a[i] * b[i]
+        s1 += a[i + 1] * b[i + 1]
+        s2 += a[i + 2] * b[i + 2]
+        s3 += a[i + 3] * b[i + 3]
+    s = (s0 + s1) + (s2 + s3)
+    for i in range(4 * chunks, n):
+        s += a[i] * b[i]
+    return s
+
+
+def dot_avx2(a, b):
+    # Vertical 4-lane accumulate: lane j mirrors scalar s_j exactly.
+    n = len(a)
+    chunks = n // 4
+    lanes = [0.0, 0.0, 0.0, 0.0]
+    for k in range(chunks):
+        i = 4 * k
+        for j in range(4):
+            lanes[j] = lanes[j] + a[i + j] * b[i + j]
+    s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+    for i in range(4 * chunks, n):
+        s += a[i] * b[i]
+    return s
+
+
+def dot_neon(a, b):
+    # Two 2-lane accumulators per 4-chunk; reduce4 = (s0+s1)+(s2+s3).
+    n = len(a)
+    chunks = n // 4
+    acc01 = [0.0, 0.0]
+    acc23 = [0.0, 0.0]
+    for k in range(chunks):
+        i = 4 * k
+        acc01[0] += a[i] * b[i]
+        acc01[1] += a[i + 1] * b[i + 1]
+        acc23[0] += a[i + 2] * b[i + 2]
+        acc23[1] += a[i + 3] * b[i + 3]
+    s01 = acc01[0] + acc01[1]
+    s23 = acc23[0] + acc23[1]
+    s = s01 + s23
+    for i in range(4 * chunks, n):
+        s += a[i] * b[i]
+    return s
+
+
+def fma(a, b, c):
+    # Exact fused multiply-add: one rounding of the exact a*b + c.
+    # float(Fraction) rounds correctly to nearest-even, which is the
+    # IEEE fma semantics for finite inputs.
+    return float(Fraction(a) * Fraction(b) + Fraction(c))
+
+
+def dot_fma(a, b):
+    n = len(a)
+    chunks = n // 4
+    lanes = [0.0, 0.0, 0.0, 0.0]
+    for k in range(chunks):
+        i = 4 * k
+        for j in range(4):
+            lanes[j] = fma(a[i + j], b[i + j], lanes[j])
+    s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+    for i in range(4 * chunks, n):
+        s = fma(a[i], b[i], s)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# test data
+# ---------------------------------------------------------------------------
+
+
+def adversarial(rng, n):
+    """Mixed magnitudes, subnormals, signed zeros — worst case for
+    reassociation sensitivity."""
+    out = []
+    for _ in range(n):
+        kind = rng.randrange(6)
+        if kind == 0:
+            out.append(rng.gauss(0.0, 1.0) * 10.0 ** rng.randrange(-12, 13))
+        elif kind == 1:
+            out.append(5e-324 * rng.randrange(1, 1000))  # subnormal
+        elif kind == 2:
+            out.append(-0.0 if rng.random() < 0.5 else 0.0)
+        else:
+            out.append(rng.gauss(0.0, 1.0))
+    return out
+
+
+def test_lane_tree_bitwise_identity():
+    rng = random.Random(20260808)
+    cases = 0
+    for n in PROBE_SIZES:
+        for trial in range(30 if n <= 33 else 8):
+            if trial % 2 == 0:
+                a = [rng.gauss(0.0, 1.0) for _ in range(n)]
+                b = [rng.gauss(0.0, 1.0) for _ in range(n)]
+            else:
+                a = adversarial(rng, n)
+                b = adversarial(rng, n)
+            r = dot_scalar(a, b)
+            assert bits(dot_avx2(a, b)) == bits(r), f"avx2 != scalar at n={n}"
+            assert bits(dot_neon(a, b)) == bits(r), f"neon != scalar at n={n}"
+            cases += 1
+    print(f"  lane-tree bitwise identity: {cases} cases, 2 SIMD simulations")
+
+
+def test_tree_shape_matters():
+    """Sanity check that the test has teeth: the *wrong* reduction order
+    ((s0+s1)+s2)+s3 does differ on adversarial data, so a reduction-tree
+    slip in a SIMD port would be caught above."""
+    rng = random.Random(7)
+    diff = 0
+    for _ in range(400):
+        a = adversarial(rng, 16)
+        b = adversarial(rng, 16)
+        s = [0.0] * 4
+        for k in range(4):
+            for j in range(4):
+                s[j] += a[4 * k + j] * b[4 * k + j]
+        good = (s[0] + s[1]) + (s[2] + s[3])
+        bad = ((s[0] + s[1]) + s[2]) + s[3]
+        if bits(good) != bits(bad):
+            diff += 1
+    assert diff > 0, "reduction-order probe has no discriminating power"
+    print(f"  tree-shape discriminator: {diff}/400 adversarial cases differ")
+
+
+def test_fast_math_within_1e_12():
+    rng = random.Random(42)
+    worst = 0.0
+    for n in [33, 127, 1000]:
+        for _ in range(10):
+            a = [rng.gauss(0.0, 1.0) for _ in range(n)]
+            b = [rng.gauss(0.0, 1.0) for _ in range(n)]
+            exact = dot_scalar(a, b)
+            fused = dot_fma(a, b)
+            denom = max(abs(exact), 1.0)
+            worst = max(worst, abs(fused - exact) / denom)
+    assert worst <= 1e-12, f"fast_math deviation {worst:.3e} > 1e-12"
+    print(f"  fast_math dot vs exact: worst relative deviation {worst:.3e}")
+
+
+def test_zero_skip_bitwise_neutral():
+    """stream_ax / scatter_matvec_into: skipping xc == 0.0 columns (and
+    all-zero shards) never changes a bit of the +0.0-seeded output."""
+    rng = random.Random(99)
+    for _ in range(200):
+        rows, cols = rng.randrange(1, 20), rng.randrange(1, 20)
+        # Column-major sparse block; values include -0.0 adversaries.
+        colv = []
+        for _ in range(cols):
+            entries = []
+            for d in range(rows):
+                if rng.random() < 0.4:
+                    v = rng.choice([rng.gauss(0, 1), -0.0, 0.0, -1.5])
+                    entries.append((d, v))
+            colv.append(entries)
+        # Sparse probe: most x entries exactly 0.0 / -0.0.
+        x = [
+            rng.choice([0.0, -0.0]) if rng.random() < 0.7 else rng.gauss(0, 1)
+            for _ in range(cols)
+        ]
+        full = [0.0] * rows
+        for c in range(cols):
+            for d, v in colv[c]:
+                full[d] += v * x[c]
+        skip = [0.0] * rows
+        for c in range(cols):
+            if x[c] == 0.0:  # matches Rust `if xc == 0.0 { continue; }`
+                continue
+            for d, v in colv[c]:
+                skip[d] += v * x[c]
+        assert all(bits(f) == bits(s) for f, s in zip(full, skip))
+        # Invariant the neutrality rests on: no +0.0-seeded running sum
+        # ever becomes -0.0 (so `+= v*0.0` is the bitwise identity).
+        assert all(bits(f) != bits(-0.0) for f in full)
+    print("  zero-column skip: bitwise-neutral on 200 blocks with -0.0 adversaries")
+
+
+def test_csc_scatter_matches_csr_rows_bitwise():
+    """GramCov::forward_ax: the CSC ascending-column scatter adds each
+    output's terms in the same order as the CSR row-major accumulate
+    (rows stored column-sorted), so the fast-path choice is free."""
+    rng = random.Random(1234)
+    for _ in range(120):
+        rows, cols = rng.randrange(1, 30), rng.randrange(1, 30)
+        csr = []
+        for _ in range(rows):
+            support = sorted(rng.sample(range(cols), rng.randrange(0, cols + 1)))
+            csr.append([(c, rng.gauss(0, 1)) for c in support])
+        x = [
+            0.0 if rng.random() < 0.5 else rng.gauss(0, 1) for _ in range(cols)
+        ]
+        by_rows = [0.0] * rows
+        for d in range(rows):
+            acc = 0.0  # sequential, ascending-column (storage) order
+            for c, v in csr[d]:
+                acc += v * x[c]
+            by_rows[d] = acc
+        by_cols = [0.0] * rows
+        for c in range(cols):  # ascending columns -> same per-row order
+            if x[c] == 0.0:
+                continue
+            for d in range(rows):
+                for cc, v in csr[d]:
+                    if cc == c:
+                        by_cols[d] += v * x[c]
+        assert all(bits(r) == bits(s) for r, s in zip(by_rows, by_cols))
+    print("  CSC scatter vs CSR rows: bitwise-equal on 120 random operators")
+
+
+def test_numeric_agreement_with_numpy():
+    rng = random.Random(5)
+    for n in [127, 1000]:
+        a = np.array([rng.gauss(0, 1) for _ in range(n)])
+        b = np.array([rng.gauss(0, 1) for _ in range(n)])
+        ours = dot_scalar(list(a), list(b))
+        ref = float(np.dot(a, b))
+        assert math.isclose(ours, ref, rel_tol=1e-12, abs_tol=1e-12)
+    print("  scalar reference vs numpy dot: agrees to 1e-12")
+
+
+if __name__ == "__main__":
+    tests = [
+        test_lane_tree_bitwise_identity,
+        test_tree_shape_matters,
+        test_fast_math_within_1e_12,
+        test_zero_skip_bitwise_neutral,
+        test_csc_scatter_matches_csr_rows_bitwise,
+        test_numeric_agreement_with_numpy,
+    ]
+    for t in tests:
+        print(f"{t.__name__}:")
+        t()
+    print(f"{len(tests)}/{len(tests)} kernel mirror tests passed")

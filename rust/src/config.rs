@@ -214,6 +214,8 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("solver", "deflation"),
     ("solver", "certify"),
     ("cov", "backend"),
+    ("compute", "kernels"),
+    ("compute", "fast_math"),
     ("memory", "budget_mb"),
     ("memory", "shard_mb"),
     ("model", "save_path"),
@@ -396,6 +398,18 @@ pub struct PipelineConfig {
     /// solves to "gram"); "auto" lets the memory-budget planner pick from
     /// the variance-pass footprint estimates.
     pub cov_backend: String,
+    /// SIMD kernel dispatch (`[compute] kernels`): "auto" detects the
+    /// best available tier at startup (AVX2 on x86-64, NEON on aarch64,
+    /// scalar otherwise); "scalar" | "avx2" | "neon" force a tier
+    /// (forcing an unavailable tier is a config error). All tiers are
+    /// bitwise-identical, so this knob is purely about speed — see
+    /// [`crate::kernels`].
+    pub kernels: String,
+    /// Allow reassociating FMA kernel variants (`[compute] fast_math`).
+    /// Off by default: results then match the scalar reference bitwise.
+    /// When on, dot reductions may use fused multiply-add (validated to
+    /// agree within 1e-12 relative, but not bitwise).
+    pub fast_math: bool,
     /// Resident-memory budget in MiB for the covariance stage
     /// (`[memory] budget_mb`; 0 = unlimited). Drives the `auto` backend
     /// decision and sizes the disk backend's Σ-row cache.
@@ -480,6 +494,8 @@ impl Default for PipelineConfig {
             card_slack: 2,
             max_reduced: 512,
             cov_backend: "dense".into(),
+            kernels: "auto".into(),
+            fast_math: false,
             memory_budget_mb: 0,
             shard_mb: 32,
             row_cache_mb: 64,
@@ -532,6 +548,8 @@ impl PipelineConfig {
             card_slack: doc.usize_or("solver", "card_slack", d.card_slack)?,
             max_reduced: doc.usize_or("solver", "max_reduced", d.max_reduced)?,
             cov_backend: doc.str_or("cov", "backend", &d.cov_backend)?,
+            kernels: doc.str_or("compute", "kernels", &d.kernels)?,
+            fast_math: doc.bool_or("compute", "fast_math", d.fast_math)?,
             memory_budget_mb: doc.usize_or("memory", "budget_mb", d.memory_budget_mb)?,
             shard_mb: doc.usize_or("memory", "shard_mb", d.shard_mb)?,
             row_cache_mb: doc.usize_or("solver", "row_cache_mb", d.row_cache_mb)?,
@@ -614,6 +632,12 @@ impl PipelineConfig {
         match self.cov_backend.as_str() {
             "dense" | "gram" | "disk" | "auto" => {}
             other => return bad(format!("cov.backend '{other}' (want dense|gram|disk|auto)")),
+        }
+        if crate::kernels::KernelMode::parse(&self.kernels).is_none() {
+            return bad(format!(
+                "compute.kernels '{}' (want auto|scalar|avx2|neon)",
+                self.kernels
+            ));
         }
         if self.shard_mb == 0 {
             return bad("memory.shard_mb must be >= 1".into());
@@ -807,6 +831,26 @@ lambdas = [0.1, 0.2, 0.5]
     }
 
     #[test]
+    fn compute_section_parses_and_validates() {
+        let doc = Document::parse("[compute]\nkernels = \"scalar\"\nfast_math = true").unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.kernels, "scalar");
+        assert!(cfg.fast_math);
+        // defaults: auto-detect, exact (bitwise) math
+        let d = PipelineConfig::default();
+        assert_eq!(d.kernels, "auto");
+        assert!(!d.fast_math);
+        // unknown tier names are config errors, not silent fallbacks
+        let bad = Document::parse("[compute]\nkernels = \"sse9\"").unwrap();
+        let e = PipelineConfig::from_document(&bad).unwrap_err().to_string();
+        assert!(e.contains("compute.kernels"), "{e}");
+        // forcing a tier this arch lacks is *not* a file-validation
+        // error (configs stay portable); it fails at apply time.
+        let forced = Document::parse("[compute]\nkernels = \"neon\"").unwrap();
+        assert!(PipelineConfig::from_document(&forced).is_ok());
+    }
+
+    #[test]
     fn model_and_serve_sections_parse_and_validate() {
         let doc = Document::parse(
             "[model]\nsave_path = \"out/m.lspm\"\nnormalize = true\n\
@@ -893,7 +937,8 @@ lambdas = [0.1, 0.2, 0.5]
         // a document exercising one key from every known section is quiet
         let full = Document::parse(
             "[corpus]\nseed = 1\n[stream]\nworkers = 2\n[solver]\nengine = \"native\"\n\
-             [cov]\nbackend = \"dense\"\n[memory]\nshard_mb = 8\n\
+             [cov]\nbackend = \"dense\"\n[compute]\nkernels = \"auto\"\n\
+             [memory]\nshard_mb = 8\n\
              [model]\ncenter = true\n[serve]\npool = 2",
         )
         .unwrap();

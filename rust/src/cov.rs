@@ -363,9 +363,10 @@ pub fn gram_parallel(m_rows: usize, n: usize, data: &[f64], threads: usize) -> S
                         continue;
                     }
                     let pi = &mut part[i * n..(i + 1) * n];
-                    for j in 0..n {
-                        pi[j] += fi * row[j];
-                    }
+                    // Element-wise axpy through the dispatch layer:
+                    // bitwise-identical on every tier, so the single-
+                    // shard pin against SymMat::gram holds unchanged.
+                    crate::kernels::axpy(fi, row, pi);
                 }
             }
             part

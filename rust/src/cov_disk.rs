@@ -150,19 +150,39 @@ impl DiskGramCov {
     /// CSR row's own ascending-column order (bitwise the in-memory
     /// `CsrMatrix::matvec_into`). Shards of a wave are *loaded* in
     /// parallel; the fold itself is a strict column-order scatter.
+    ///
+    /// Requires `ax` pre-zeroed (both callers hand it a fresh buffer —
+    /// re-zeroing the full m-length vector on every probe was pure
+    /// overhead). Only shards overlapping the *active* (nonzero) columns
+    /// of `x` are loaded at all: a λ-search quad form on a
+    /// cardinality-k loading touches k columns, so whole shards — and
+    /// their disk reads — drop out. Skipping is bitwise-neutral: a
+    /// skipped column contributes only `±0.0` terms, which cannot change
+    /// a partial sum seeded at `+0.0` (see
+    /// [`crate::data::CscMatrix::scatter_matvec_into`], the in-memory
+    /// kernel this sweep mirrors).
     fn stream_ax(&self, x: &[f64], ax: &mut [f64]) {
         assert_eq!(x.len(), self.man.nhat);
         assert_eq!(ax.len(), self.man.rows);
-        ax.fill(0.0);
-        let nshards = self.man.shards.len();
-        let wave = resolve_threads(self.threads).min(nshards.max(1));
+        debug_assert!(ax.iter().all(|&v| v == 0.0), "ax must start zeroed");
+        let active: Vec<usize> = (0..self.man.shards.len())
+            .filter(|&s| {
+                let m = &self.man.shards[s];
+                x[m.col_start..m.col_start + m.ncols].iter().any(|&v| v != 0.0)
+            })
+            .collect();
+        let nactive = active.len();
+        let wave = resolve_threads(self.threads).min(nactive.max(1));
         let mut start = 0;
-        while start < nshards {
-            let count = wave.min(nshards - start);
-            let blocks = par_map_indexed(self.threads, count, |k| self.shard(start + k));
+        while start < nactive {
+            let count = wave.min(nactive - start);
+            let blocks = par_map_indexed(self.threads, count, |k| self.shard(active[start + k]));
             for b in &blocks {
                 for c in 0..b.ncols {
                     let xc = x[b.col_start + c];
+                    if xc == 0.0 {
+                        continue;
+                    }
                     for (d, v) in b.col(c) {
                         ax[d] += v * xc;
                     }
@@ -297,7 +317,9 @@ impl CovOp for DiskGramCov {
         // xᵀΣx = ‖Ax‖²/m − (μᵀx)², streamed — GramCov::quad_form's folds.
         let mut ax = vec![0.0; self.man.rows];
         self.stream_ax(x, &mut ax);
-        let ssq: f64 = ax.iter().map(|a| a * a).sum();
+        // Same 4-lane reduction as `GramCov::quad_form` — the two
+        // backends must stay bitwise-paired (pinned below).
+        let ssq = crate::linalg::vec::dot(&ax, &ax);
         let mux = crate::linalg::vec::dot(&self.man.mean, x);
         ssq / self.man.total_docs.max(1) as f64 - mux * mux
     }

@@ -182,18 +182,15 @@ pub trait DenseRows {
     /// Contiguous row `i` (= column `i` by symmetry).
     fn row(&self, i: usize) -> &[f64];
 
-    /// `y = A x` via per-row dots (identical order to [`SymMat::matvec`]).
+    /// `y = A x` via per-row dots (identical order to [`SymMat::matvec`]:
+    /// both route every row through [`crate::kernels::dot`], so the two
+    /// stay bitwise-locked on every dispatch tier).
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         let n = self.n();
         assert_eq!(x.len(), n);
         assert_eq!(y.len(), n);
         for (i, yi) in y.iter_mut().enumerate() {
-            let row = self.row(i);
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            *yi = acc;
+            *yi = crate::kernels::dot(self.row(i), x);
         }
     }
 }
@@ -622,6 +619,22 @@ impl GramCov {
             self.compute_row(j, row)
         });
     }
+
+    /// Forward Gram half `ax = A x`, choosing the sweep by probe
+    /// sparsity: a handful of active columns (λ-search quad forms,
+    /// deflation corrections, masked probes) goes through the CSC
+    /// active-column scatter, dense `x` through the streaming row
+    /// accumulate. Both orders are bitwise identical
+    /// ([`CscMatrix::scatter_matvec_into`]), so the threshold is purely
+    /// a performance choice.
+    fn forward_ax(&self, x: &[f64], ax: &mut [f64]) {
+        let active = x.iter().filter(|v| **v != 0.0).count();
+        if active * 8 <= self.csr.cols {
+            self.csc.scatter_matvec_into(x, ax);
+        } else {
+            self.csr.matvec_into(x, ax);
+        }
+    }
 }
 
 impl CovOp for GramCov {
@@ -643,9 +656,11 @@ impl CovOp for GramCov {
 
     fn matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.csr.cols);
-        // y = Aᵀ(Ax)/m − μ(μᵀx): the shared sparse Gram-action kernel,
-        // then centering — no dense Σ.
-        self.csr.gram_action_into(x, y);
+        // y = Aᵀ(Ax)/m − μ(μᵀx): sparsity-aware forward half, shared
+        // transpose scatter, then centering — no dense Σ.
+        let mut ax = vec![0.0; self.csr.rows];
+        self.forward_ax(x, &mut ax);
+        self.csr.t_matvec_into(&ax, y);
         let inv_m = 1.0 / self.m_docs;
         let mux = crate::linalg::vec::dot(&self.mean, x);
         for (yk, &mu_k) in y.iter_mut().zip(&self.mean) {
@@ -655,10 +670,12 @@ impl CovOp for GramCov {
 
     fn quad_form(&self, x: &[f64]) -> f64 {
         assert_eq!(x.len(), self.csr.cols);
-        // xᵀΣx = ‖Ax‖²/m − (μᵀx)².
+        // xᵀΣx = ‖Ax‖²/m − (μᵀx)². ‖Ax‖² runs through the dispatched
+        // dot (fixed 4-lane reduction — the order the out-of-core twin
+        // replays bitwise).
         let mut ax = vec![0.0; self.csr.rows];
-        self.csr.matvec_into(x, &mut ax);
-        let ssq: f64 = ax.iter().map(|a| a * a).sum();
+        self.forward_ax(x, &mut ax);
+        let ssq = crate::linalg::vec::dot(&ax, &ax);
         let mux = crate::linalg::vec::dot(&self.mean, x);
         ssq / self.m_docs - mux * mux
     }

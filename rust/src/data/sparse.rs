@@ -127,6 +127,13 @@ impl CsrMatrix {
     }
 
     /// `ax[r] = row_r · x` — the forward half of the Gram action.
+    ///
+    /// This per-row sequential accumulate over ascending column indices
+    /// is the *definitional* forward order: the CSC scatter path
+    /// ([`CscMatrix::scatter_matvec_into`]) and the out-of-core shard
+    /// sweep (`cov_disk::DiskGramCov::stream_ax`) replay exactly this
+    /// per-document summation order, so all three are bitwise-identical.
+    /// Every entry of `ax` is assigned (no pre-zeroing needed).
     pub fn matvec_into(&self, x: &[f64], ax: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(ax.len(), self.rows);
@@ -139,13 +146,13 @@ impl CsrMatrix {
         }
     }
 
-    /// `y = Aᵀ(Ax)` into a caller buffer — the single Gram-action kernel
-    /// shared by [`CsrMatrix::gram_action`] and the implicit-Gram
-    /// covariance operator (`covop::GramCov`).
-    pub fn gram_action_into(&self, x: &[f64], y: &mut [f64]) {
+    /// Backward Gram half `y = Aᵀ ax`: zero `y`, then scatter each row
+    /// with nonzero `ax[r]` in ascending row order (so each `y[c]`
+    /// accumulates its terms in ascending document order — the order the
+    /// out-of-core backend's per-column accumulate replays bitwise).
+    pub fn t_matvec_into(&self, ax: &[f64], y: &mut [f64]) {
+        assert_eq!(ax.len(), self.rows);
         assert_eq!(y.len(), self.cols);
-        let mut ax = vec![0.0; self.rows];
-        self.matvec_into(x, &mut ax);
         y.fill(0.0);
         for (r, &a) in ax.iter().enumerate() {
             if a == 0.0 {
@@ -155,6 +162,17 @@ impl CsrMatrix {
                 y[c] += v * a;
             }
         }
+    }
+
+    /// `y = Aᵀ(Ax)` into a caller buffer — the single Gram-action kernel
+    /// shared by [`CsrMatrix::gram_action`] and the implicit-Gram
+    /// covariance operator (`covop::GramCov`, which swaps the forward
+    /// half for the active-column scatter when `x` is sparse).
+    pub fn gram_action_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(y.len(), self.cols);
+        let mut ax = vec![0.0; self.rows];
+        self.matvec_into(x, &mut ax);
+        self.t_matvec_into(&ax, y);
     }
 
     /// y = Aᵀ(Ax) convenience used by tests (covariance action without
@@ -220,6 +238,43 @@ impl CscMatrix {
             }
         }
         acc
+    }
+
+    /// Forward Gram half `ax[d] += A_dc·x[c]` as an ascending column
+    /// scatter that *skips inactive columns* (`x[c] == 0`) — the
+    /// sparse-`x` fast path behind `GramCov`/`DiskGramCov` probes
+    /// (λ-search explained-variance quad forms touch a handful of
+    /// columns; the row-major path would still walk every stored entry).
+    ///
+    /// Requires `ax` pre-zeroed. **Bitwise identical** to
+    /// [`CsrMatrix::matvec_into`] for any `x`: rows are column-sorted
+    /// (the canonical reduced layout), so sweeping columns in ascending
+    /// order delivers each document's terms in exactly the row
+    /// accumulate's order; and a skipped `±0.0` term cannot change a
+    /// partial sum, because a sum seeded at `+0.0` can never reach
+    /// `-0.0` (IEEE round-to-nearest yields `+0.0` for every exact-zero
+    /// result of non-`-0.0` addends). Columns are processed in L2-sized
+    /// blocks ([`crate::kernels::l2_block_cols`]) so the `x` window and
+    /// column pointers stay cache-resident while `ax` streams.
+    pub fn scatter_matvec_into(&self, x: &[f64], ax: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(ax.len(), self.rows);
+        debug_assert!(ax.iter().all(|&v| v == 0.0), "ax must start zeroed");
+        // 8 bytes of x + ~8 bytes of colptr per column in the window.
+        let block = crate::kernels::l2_block_cols(16);
+        let mut start = 0;
+        while start < self.cols {
+            let end = (start + block).min(self.cols);
+            for (off, &xc) in x[start..end].iter().enumerate() {
+                if xc == 0.0 {
+                    continue;
+                }
+                for (d, v) in self.col(start + off) {
+                    ax[d] += v * xc;
+                }
+            }
+            start = end;
+        }
     }
 
     /// Sum and sum-of-squares per column (moment pass building block).
@@ -289,6 +344,56 @@ mod tests {
                 let want: f64 = (0..3).map(|r| d[r * 3 + i] * d[r * 3 + j]).sum();
                 assert!((c.col_dot(i, j) - want).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn prop_scatter_matvec_bitwise_matches_row_major() {
+        property("CSC scatter forward == CSR row accumulate, bitwise", 30, |rng| {
+            let rows = rng.range(1, 40);
+            let cols = rng.range(1, 20);
+            let mut t = TripletMatrix::new(rows, cols);
+            for _ in 0..rng.below(rows * cols + 1) {
+                t.push(rng.below(rows), rng.below(cols), rng.range_f64(-3.0, 3.0));
+            }
+            let csr = t.to_csr();
+            let csc = csr.to_csc();
+            // probe with dense, sparse, and signed-zero-bearing x
+            for density in [1.0, 0.2, 0.0] {
+                let x: Vec<f64> = (0..cols)
+                    .map(|_| {
+                        if rng.bool(density) {
+                            rng.range_f64(-2.0, 2.0)
+                        } else if rng.bool(0.5) {
+                            0.0
+                        } else {
+                            -0.0
+                        }
+                    })
+                    .collect();
+                let mut by_rows = vec![0.0; rows];
+                csr.matvec_into(&x, &mut by_rows);
+                let mut by_cols = vec![0.0; rows];
+                csc.scatter_matvec_into(&x, &mut by_cols);
+                for (a, b) in by_rows.iter().zip(&by_cols) {
+                    ensure(a.to_bits() == b.to_bits(), "forward halves must agree bitwise")?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_action_split_halves_compose() {
+        let m = sample_csr();
+        let x = [0.5, -1.0, 2.0];
+        let mut ax = vec![0.0; 3];
+        m.matvec_into(&x, &mut ax);
+        let mut y = vec![0.0; 3];
+        m.t_matvec_into(&ax, &mut y);
+        let whole = m.gram_action(&x);
+        for (a, b) in y.iter().zip(&whole) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

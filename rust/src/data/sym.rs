@@ -73,6 +73,8 @@ impl SymMat {
         assert_eq!(f_rowmajor.len(), m_rows * n);
         let mut g = SymMat::zeros(n);
         // Accumulate row-by-row outer products: cache-friendly over F.
+        // The inner update is an axpy (element-wise, so the SIMD tiers
+        // are bitwise-identical to the scalar loop it replaces).
         for r in 0..m_rows {
             let row = &f_rowmajor[r * n..(r + 1) * n];
             for i in 0..n {
@@ -81,9 +83,7 @@ impl SymMat {
                     continue;
                 }
                 let gi = &mut g.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    gi[j] += fi * row[j];
-                }
+                crate::kernels::axpy(fi, row, gi);
             }
         }
         let inv = 1.0 / m_rows as f64;
@@ -157,20 +157,24 @@ impl SymMat {
     }
 
     /// Matrix–vector product `y = A x`.
+    ///
+    /// Each row dot runs through [`crate::kernels::dot`] — the fixed
+    /// 4-lane reduction order shared by every dispatch tier, so this is
+    /// bitwise-identical across `scalar`/`avx2`/`neon` and defines the
+    /// row-dot order every dense-row consumer (the QP's
+    /// `DenseRows::matvec` default, [`quad_form`](SymMat::quad_form))
+    /// must share.
     pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
         for i in 0..self.n {
             let row = &self.data[i * self.n..(i + 1) * self.n];
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            y[i] = acc;
+            y[i] = crate::kernels::dot(row, x);
         }
     }
 
-    /// Quadratic form `xᵀ A x`.
+    /// Quadratic form `xᵀ A x` — same per-row dot order as
+    /// [`matvec`](SymMat::matvec), skipping rows with `x[i] == 0`.
     pub fn quad_form(&self, x: &[f64]) -> f64 {
         assert_eq!(x.len(), self.n);
         let mut total = 0.0;
@@ -180,11 +184,7 @@ impl SymMat {
                 continue;
             }
             let row = &self.data[i * self.n..(i + 1) * self.n];
-            let mut acc = 0.0;
-            for (a, b) in row.iter().zip(x) {
-                acc += a * b;
-            }
-            total += xi * acc;
+            total += xi * crate::kernels::dot(row, x);
         }
         total
     }

@@ -1,0 +1,539 @@
+//! Runtime-dispatched compute kernels for the BCA/covariance/scoring hot
+//! paths.
+//!
+//! Every arithmetic-intensity-bound loop in the crate — QP coordinate
+//! sweeps, Gram/covariance matvecs, scorer projections — bottoms out in a
+//! handful of vector primitives (`dot`, `axpy`, `scale`, gathered axpy).
+//! This module owns those primitives and selects, once per process, the
+//! fastest available backend:
+//!
+//! | tier     | ISA            | guard                                  |
+//! |----------|----------------|----------------------------------------|
+//! | `scalar` | portable Rust  | always available (the reference)       |
+//! | `avx2`   | x86-64 AVX2    | `is_x86_feature_detected!("avx2")`     |
+//! | `neon`   | AArch64 NEON   | `is_aarch64_feature_detected!("neon")` |
+//!
+//! Selection order: the `LSSPCA_KERNELS` environment variable (read
+//! lazily on first kernel call), then any explicit [`force`] from the
+//! `[compute] kernels` config key / `--kernels` CLI flag, then hardware
+//! auto-detection. The active tier is a process-global so every layer —
+//! solver, covariance backends, scorer — flips together; [`active`]
+//! reports it for benchmarks and logs.
+//!
+//! # Determinism invariant
+//!
+//! **Every SIMD path is bitwise-identical to the scalar path.** The
+//! scalar kernels fix the floating-point evaluation order (e.g. [`dot`]
+//! accumulates into four lanes combined as `(s0 + s1) + (s2 + s3)` with a
+//! sequential remainder), and the SIMD backends reproduce *exactly that
+//! tree*: a 4-wide vertical accumulate whose horizontal reduction is the
+//! same `(s0 + s1) + (s2 + s3)`, with separate rounding of every product
+//! and sum (vector multiply + add, never fused multiply-add). Element-wise
+//! kernels (`axpy`, `scale`) are trivially bitwise because each lane is an
+//! independent rounding. This is what lets the pipeline promise
+//! bit-identical principal components across `scalar`/`avx2`/`neon`/`auto`
+//! — pinned by property tests over every remainder-lane count.
+//!
+//! The only reassociating/fusing variants live behind the explicit
+//! `fast_math = true` opt-in ([`set_fast_math`]): FMA-contracted dot
+//! products, validated against the exact path at ≤ 1e-12 by tests and
+//! **off by default**.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+use crate::error::LsspcaError;
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+/// Requested dispatch mode — what config/CLI/env ask for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Pick the best tier the hardware supports (the default).
+    Auto,
+    /// Portable scalar reference kernels.
+    Scalar,
+    /// x86-64 AVX2 (requires hardware support; error otherwise).
+    Avx2,
+    /// AArch64 NEON (requires hardware support; error otherwise).
+    Neon,
+}
+
+impl KernelMode {
+    /// Parse a mode name as accepted by `[compute] kernels`, `--kernels`
+    /// and `LSSPCA_KERNELS`: `auto | scalar | avx2 | neon`.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s {
+            "auto" => Some(KernelMode::Auto),
+            "scalar" => Some(KernelMode::Scalar),
+            "avx2" => Some(KernelMode::Avx2),
+            "neon" => Some(KernelMode::Neon),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Auto => "auto",
+            KernelMode::Scalar => "scalar",
+            KernelMode::Avx2 => "avx2",
+            KernelMode::Neon => "neon",
+        }
+    }
+}
+
+/// Resolved dispatch tier — what the process actually runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Tier {
+    /// Portable scalar kernels.
+    Scalar = 1,
+    /// x86-64 AVX2 kernels.
+    Avx2 = 2,
+    /// AArch64 NEON kernels.
+    Neon = 3,
+}
+
+impl Tier {
+    /// Lowercase tier name, for logs and bench JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Scalar => "scalar",
+            Tier::Avx2 => "avx2",
+            Tier::Neon => "neon",
+        }
+    }
+}
+
+/// 0 = not yet initialised; otherwise a `Tier` discriminant.
+static ACTIVE_TIER: AtomicU8 = AtomicU8::new(0);
+
+/// Reassociating/FMA variants opt-in (`[compute] fast_math`). Off by
+/// default: the exact, bitwise-reproducible paths run.
+static FAST_MATH: AtomicBool = AtomicBool::new(false);
+
+fn tier_from_u8(v: u8) -> Option<Tier> {
+    match v {
+        1 => Some(Tier::Scalar),
+        2 => Some(Tier::Avx2),
+        3 => Some(Tier::Neon),
+        _ => None,
+    }
+}
+
+/// Best tier the current hardware supports.
+fn detect() -> Tier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Tier::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Tier::Neon;
+        }
+    }
+    Tier::Scalar
+}
+
+/// Resolve a requested mode against the hardware; `Err` if the mode
+/// names a tier this machine cannot run.
+fn resolve(mode: KernelMode) -> Result<Tier, LsspcaError> {
+    match mode {
+        KernelMode::Auto => Ok(detect()),
+        KernelMode::Scalar => Ok(Tier::Scalar),
+        KernelMode::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    return Ok(Tier::Avx2);
+                }
+            }
+            Err(LsspcaError::config(
+                "kernels = \"avx2\" requested but AVX2 is not available on this CPU".to_string(),
+            ))
+        }
+        KernelMode::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return Ok(Tier::Neon);
+                }
+            }
+            Err(LsspcaError::config(
+                "kernels = \"neon\" requested but NEON is not available on this CPU".to_string(),
+            ))
+        }
+    }
+}
+
+/// Lazy first-touch initialisation: honour `LSSPCA_KERNELS` if set (an
+/// unusable value warns and falls back to auto-detection so an exported
+/// variable never turns a working binary into a crashing one), otherwise
+/// auto-detect.
+#[cold]
+fn init_tier() -> Tier {
+    let mode = match std::env::var("LSSPCA_KERNELS") {
+        Ok(v) if !v.is_empty() => match KernelMode::parse(&v) {
+            Some(m) => m,
+            None => {
+                crate::warn_!("LSSPCA_KERNELS={v:?} not one of auto|scalar|avx2|neon; using auto");
+                KernelMode::Auto
+            }
+        },
+        _ => KernelMode::Auto,
+    };
+    let tier = resolve(mode).unwrap_or_else(|e| {
+        crate::warn_!("LSSPCA_KERNELS: {e}; using auto-detected tier");
+        detect()
+    });
+    ACTIVE_TIER.store(tier as u8, Ordering::Relaxed);
+    tier
+}
+
+/// The active dispatch tier (initialising it on first call).
+#[inline]
+pub fn active() -> Tier {
+    match tier_from_u8(ACTIVE_TIER.load(Ordering::Relaxed)) {
+        Some(t) => t,
+        None => init_tier(),
+    }
+}
+
+/// Force the dispatch tier (config `[compute] kernels` / `--kernels` /
+/// A-B tests). Errors if the requested tier is unavailable on this
+/// hardware; on success returns the resolved tier.
+///
+/// Switching tiers at runtime is safe for results: every tier is
+/// bitwise-identical (see the module docs), so concurrent work observes
+/// identical arithmetic regardless of when the switch lands.
+pub fn force(mode: KernelMode) -> Result<Tier, LsspcaError> {
+    let tier = resolve(mode)?;
+    ACTIVE_TIER.store(tier as u8, Ordering::Relaxed);
+    Ok(tier)
+}
+
+/// Enable/disable the reassociating FMA variants. Off by default; when
+/// on, SIMD dots contract multiply-add pairs (≤ 1e-12 relative deviation
+/// from the exact path, pinned by tests) — bitwise reproducibility across
+/// tiers is forfeited.
+pub fn set_fast_math(on: bool) {
+    FAST_MATH.store(on, Ordering::Relaxed);
+}
+
+/// Whether the reassociating variants are enabled.
+#[inline]
+pub fn fast_math() -> bool {
+    FAST_MATH.load(Ordering::Relaxed)
+}
+
+/// Apply the `[compute]` settings (config or CLI): parse + force the
+/// kernel mode, set the fast-math opt-in. Returns the resolved tier.
+///
+/// An explicit tier name beats everything. `"auto"` (the config default)
+/// defers to `LSSPCA_KERNELS` when set, then hardware detection — so an
+/// exported env override keeps working for runs whose config never
+/// mentions `[compute]`.
+pub fn apply_settings(kernels: &str, fast: bool) -> Result<Tier, LsspcaError> {
+    let mode = KernelMode::parse(kernels).ok_or_else(|| {
+        LsspcaError::config(format!(
+            "compute.kernels = {kernels:?} not one of auto|scalar|avx2|neon"
+        ))
+    })?;
+    set_fast_math(fast);
+    match mode {
+        KernelMode::Auto => {
+            // Re-run the env-aware lazy init rather than plain detection.
+            ACTIVE_TIER.store(0, Ordering::Relaxed);
+            Ok(active())
+        }
+        m => force(m),
+    }
+}
+
+/// Cache-block target for column-range sweeps: the working window of a
+/// sweep (the `x` slice plus column pointers) is kept within a
+/// conservative half-L2 budget so the streamed output is the only
+/// traffic that misses. 256 KiB covers the common 512 KiB–1 MiB L2 sizes
+/// without starving hyper-threaded siblings.
+pub const L2_TARGET_BYTES: usize = 256 * 1024;
+
+/// Number of columns per cache block for a sweep touching
+/// `bytes_per_col` bytes of working set per column (floor 64 so tiny
+/// estimates never degenerate into per-column loop overhead).
+pub fn l2_block_cols(bytes_per_col: usize) -> usize {
+    (L2_TARGET_BYTES / bytes_per_col.max(1)).max(64)
+}
+
+/// Dot product `Σ aᵢ·bᵢ` over `a.len()` entries (`b` may be longer).
+///
+/// Fixed evaluation order on every tier: four lanes over 4-element
+/// chunks combined as `(s0 + s1) + (s2 + s3)`, then a sequential
+/// remainder — see the module docs for why this is bitwise-stable
+/// across `scalar`/`avx2`/`neon`.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert!(b.len() >= a.len(), "dot: b.len() {} < a.len() {}", b.len(), a.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe {
+            if fast_math() {
+                x86::dot_fma(a, b)
+            } else {
+                x86::dot(a, b)
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe {
+            if fast_math() {
+                neon::dot_fma(a, b)
+            } else {
+                neon::dot(a, b)
+            }
+        },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// In-place `y ← y + α·x` over `min(x.len(), y.len())` entries.
+/// Element-wise, hence bitwise-identical on every tier.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { x86::axpy(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::axpy(alpha, x, y) },
+        _ => scalar::axpy(alpha, x, y),
+    }
+}
+
+/// In-place `x ← α·x`. Element-wise, bitwise-identical on every tier.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => unsafe { x86::scale(alpha, x) },
+        #[cfg(target_arch = "aarch64")]
+        Tier::Neon => unsafe { neon::scale(alpha, x) },
+        _ => scalar::scale(alpha, x),
+    }
+}
+
+/// Gathered axpy `y[k] ← y[k] + α·x[k]` for `k` in `idx` — the QP
+/// active-set inner update. Each index is an independent rounding, so
+/// any future vector-gather implementation stays bitwise-identical; for
+/// now every tier runs the scalar loop (AVX2 has no f64 scatter store,
+/// so a gather/scalar-scatter mix measures no better than the scalar
+/// loop on typical active-set sizes).
+#[inline]
+pub fn gather_axpy(alpha: f64, x: &[f64], idx: &[usize], y: &mut [f64]) {
+    scalar::gather_axpy(alpha, x, idx, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Serialises the tests that mutate the process-global tier or the
+    /// fast-math flag: switching tiers is bitwise-invisible to concurrent
+    /// work, but enabling fast-math mid-flight is not.
+    static GLOBAL_STATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn global_lock() -> std::sync::MutexGuard<'static, ()> {
+        GLOBAL_STATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Sizes covering every remainder-lane count of the 4-wide kernels,
+    /// plus a couple of larger lengths.
+    fn probe_sizes() -> Vec<usize> {
+        let mut v: Vec<usize> = (0..=33).collect();
+        v.push(127);
+        v.push(1000);
+        v
+    }
+
+    fn vecs(rng: &mut Rng, n: usize) -> (Vec<f64>, Vec<f64>) {
+        let a: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn mode_parsing_round_trips() {
+        for m in [KernelMode::Auto, KernelMode::Scalar, KernelMode::Avx2, KernelMode::Neon] {
+            assert_eq!(KernelMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("sse2"), None);
+        assert_eq!(KernelMode::parse(""), None);
+    }
+
+    #[test]
+    fn unavailable_tier_is_an_error() {
+        // At most one of the SIMD tiers can exist on any one machine, so
+        // at least one of these must error (both on plain scalar hosts).
+        let avx2 = resolve(KernelMode::Avx2);
+        let neon = resolve(KernelMode::Neon);
+        assert!(avx2.is_err() || neon.is_err());
+        // Auto and Scalar always resolve.
+        assert!(resolve(KernelMode::Auto).is_ok());
+        assert_eq!(resolve(KernelMode::Scalar).unwrap(), Tier::Scalar);
+    }
+
+    #[test]
+    fn dispatch_is_bitwise_stable_across_forced_tiers() {
+        // The dispatch-level invariant: whatever tier `auto` lands on,
+        // the public kernels return the same bits as forced scalar.
+        let _g = global_lock();
+        let mut rng = Rng::seed_from(0xD07);
+        for n in probe_sizes() {
+            let (a, b) = vecs(&mut rng, n);
+            let mut y1: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let mut y2 = y1.clone();
+            force(KernelMode::Scalar).unwrap();
+            let d1 = dot(&a, &b);
+            axpy(0.37, &a, &mut y1);
+            scale(-1.25, &mut y1);
+            force(KernelMode::Auto).unwrap();
+            let d2 = dot(&a, &b);
+            axpy(0.37, &a, &mut y2);
+            scale(-1.25, &mut y2);
+            assert_eq!(d1.to_bits(), d2.to_bits(), "dot diverged at n = {n}");
+            for (v1, v2) in y1.iter().zip(&y2) {
+                assert_eq!(v1.to_bits(), v2.to_bits(), "axpy/scale diverged at n = {n}");
+            }
+        }
+        force(KernelMode::Auto).unwrap();
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn prop_avx2_bitwise_identical_to_scalar() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            return; // nothing to pin on this host
+        }
+        let mut rng = Rng::seed_from(0xA5C2);
+        for n in probe_sizes() {
+            for rep in 0..4 {
+                let (a, b) = vecs(&mut rng, n);
+                let exact = scalar::dot(&a, &b);
+                let simd = unsafe { x86::dot(&a, &b) };
+                assert_eq!(
+                    exact.to_bits(),
+                    simd.to_bits(),
+                    "avx2 dot != scalar at n = {n}, rep {rep}"
+                );
+                let mut ys = b.clone();
+                let mut yv = b.clone();
+                scalar::axpy(1.5 - rep as f64, &a, &mut ys);
+                unsafe { x86::axpy(1.5 - rep as f64, &a, &mut yv) };
+                scalar::scale(0.75, &mut ys);
+                unsafe { x86::scale(0.75, &mut yv) };
+                for (s, v) in ys.iter().zip(&yv) {
+                    assert_eq!(s.to_bits(), v.to_bits(), "avx2 axpy/scale != scalar at n = {n}");
+                }
+            }
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn prop_neon_bitwise_identical_to_scalar() {
+        if !std::arch::is_aarch64_feature_detected!("neon") {
+            return;
+        }
+        let mut rng = Rng::seed_from(0x4E04);
+        for n in probe_sizes() {
+            for rep in 0..4 {
+                let (a, b) = vecs(&mut rng, n);
+                let exact = scalar::dot(&a, &b);
+                let simd = unsafe { neon::dot(&a, &b) };
+                assert_eq!(
+                    exact.to_bits(),
+                    simd.to_bits(),
+                    "neon dot != scalar at n = {n}, rep {rep}"
+                );
+                let mut ys = b.clone();
+                let mut yv = b.clone();
+                scalar::axpy(1.5 - rep as f64, &a, &mut ys);
+                unsafe { neon::axpy(1.5 - rep as f64, &a, &mut yv) };
+                scalar::scale(0.75, &mut ys);
+                unsafe { neon::scale(0.75, &mut yv) };
+                for (s, v) in ys.iter().zip(&yv) {
+                    assert_eq!(s.to_bits(), v.to_bits(), "neon axpy/scale != scalar at n = {n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_math_dot_within_1e12_of_exact() {
+        // The fused variants may reassociate but must stay within 1e-12
+        // (relative to the sum of |aᵢ·bᵢ|, which bounds the condition of
+        // the sum) of the exact path on every probe size.
+        let _g = global_lock();
+        let mut rng = Rng::seed_from(0xFA57);
+        for n in probe_sizes() {
+            let (a, b) = vecs(&mut rng, n);
+            let exact = scalar::dot(&a, &b);
+            let denom = 1.0 + a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f64>();
+            #[cfg(target_arch = "x86_64")]
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                let fused = unsafe { x86::dot_fma(&a, &b) };
+                assert!(
+                    (fused - exact).abs() / denom <= 1e-12,
+                    "fma dot off by {} at n = {n}",
+                    (fused - exact).abs()
+                );
+            }
+            #[cfg(target_arch = "aarch64")]
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                let fused = unsafe { neon::dot_fma(&a, &b) };
+                assert!(
+                    (fused - exact).abs() / denom <= 1e-12,
+                    "fma dot off by {} at n = {n}",
+                    (fused - exact).abs()
+                );
+            }
+            // The scalar tier ignores fast_math entirely: identical bits.
+            set_fast_math(true);
+            force(KernelMode::Scalar).unwrap();
+            assert_eq!(dot(&a, &b).to_bits(), exact.to_bits());
+            set_fast_math(false);
+            force(KernelMode::Auto).unwrap();
+        }
+    }
+
+    #[test]
+    fn gather_axpy_matches_dense_axpy_on_full_index_set() {
+        let mut rng = Rng::seed_from(0x6A7);
+        for n in [1usize, 7, 32, 33, 127] {
+            let (x, y0) = vecs(&mut rng, n);
+            let idx: Vec<usize> = (0..n).collect();
+            let mut y1 = y0.clone();
+            let mut y2 = y0.clone();
+            gather_axpy(-0.625, &x, &idx, &mut y1);
+            axpy(-0.625, &x, &mut y2);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn l2_block_cols_has_floor_and_scales() {
+        assert_eq!(l2_block_cols(0), L2_TARGET_BYTES.max(64));
+        assert!(l2_block_cols(usize::MAX) >= 64);
+        assert_eq!(l2_block_cols(1024), (L2_TARGET_BYTES / 1024).max(64));
+    }
+}

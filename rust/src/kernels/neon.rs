@@ -1,0 +1,117 @@
+//! AArch64 NEON backend.
+//!
+//! NEON vectors are 2×f64, so each kernel runs two vector accumulators
+//! per 4-element chunk — together they are exactly the scalar
+//! reference's four lanes `s0..s3`, reduced with the same
+//! `(s0 + s1) + (s2 + s3)` tree (see [`super::scalar`]); the exact paths
+//! use separate multiply + add so results are bitwise identical. Only
+//! [`dot_fma`] — the `fast_math = true` variant — fuses multiply-add.
+
+#![allow(unsafe_code)]
+
+use std::arch::aarch64::{
+    float64x2_t, vaddq_f64, vdupq_n_f64, vfmaq_f64, vgetq_lane_f64, vld1q_f64, vmulq_f64,
+    vmulq_n_f64, vst1q_f64,
+};
+
+/// `(s0 + s1) + (s2 + s3)` over the two 2-lane accumulators.
+#[inline(always)]
+unsafe fn reduce4(acc01: float64x2_t, acc23: float64x2_t) -> f64 {
+    let s01 = vgetq_lane_f64::<0>(acc01) + vgetq_lane_f64::<1>(acc01);
+    let s23 = vgetq_lane_f64::<0>(acc23) + vgetq_lane_f64::<1>(acc23);
+    s01 + s23
+}
+
+/// Exact NEON dot product — bitwise identical to [`super::scalar::dot`].
+///
+/// # Safety
+/// The caller must ensure NEON is available
+/// (`is_aarch64_feature_detected!("neon")`) and `b.len() >= a.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(b.len() >= a.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc01 = vaddq_f64(acc01, vmulq_f64(vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i))));
+        acc23 = vaddq_f64(acc23, vmulq_f64(vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2))));
+    }
+    let mut s = reduce4(acc01, acc23);
+    for i in 4 * chunks..n {
+        s += *pa.add(i) * *pb.add(i);
+    }
+    s
+}
+
+/// FMA-contracted dot product — the `fast_math = true` variant (≤ 1e-12
+/// relative deviation from the exact path, pinned by tests).
+///
+/// # Safety
+/// The caller must ensure NEON is available and `b.len() >= a.len()`.
+#[target_feature(enable = "neon")]
+pub unsafe fn dot_fma(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(b.len() >= a.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc01 = vdupq_n_f64(0.0);
+    let mut acc23 = vdupq_n_f64(0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        acc01 = vfmaq_f64(acc01, vld1q_f64(pa.add(i)), vld1q_f64(pb.add(i)));
+        acc23 = vfmaq_f64(acc23, vld1q_f64(pa.add(i + 2)), vld1q_f64(pb.add(i + 2)));
+    }
+    let mut s = reduce4(acc01, acc23);
+    for i in 4 * chunks..n {
+        s = (*pa.add(i)).mul_add(*pb.add(i), s);
+    }
+    s
+}
+
+/// Exact NEON `y ← y + α·x` — element-wise, bitwise identical to
+/// [`super::scalar::axpy`].
+///
+/// # Safety
+/// The caller must ensure NEON is available.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 2;
+    let va = vdupq_n_f64(alpha);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 2 * k;
+        let vy = vld1q_f64(py.add(i));
+        let vx = vld1q_f64(px.add(i));
+        vst1q_f64(py.add(i), vaddq_f64(vy, vmulq_f64(va, vx)));
+    }
+    for i in 2 * chunks..n {
+        *py.add(i) += alpha * *px.add(i);
+    }
+}
+
+/// Exact NEON `x ← α·x` — element-wise, bitwise identical to
+/// [`super::scalar::scale`].
+///
+/// # Safety
+/// The caller must ensure NEON is available.
+#[target_feature(enable = "neon")]
+pub unsafe fn scale(alpha: f64, x: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 2;
+    let px = x.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 2 * k;
+        vst1q_f64(px.add(i), vmulq_n_f64(vld1q_f64(px.add(i)), alpha));
+    }
+    for i in 2 * chunks..n {
+        *px.add(i) *= alpha;
+    }
+}

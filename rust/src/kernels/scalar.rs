@@ -1,0 +1,50 @@
+//! Portable scalar kernels — the reference the SIMD tiers must match
+//! bitwise.
+//!
+//! These bodies *define* the crate's floating-point evaluation orders.
+//! They are the former `linalg::vec` loops, moved here verbatim so the
+//! dispatch layer has a single authoritative scalar implementation; the
+//! AVX2/NEON backends reproduce each order exactly (see the module docs
+//! on [`crate::kernels`]). Written as simple indexable loops that LLVM
+//! auto-vectorizes well even without the explicit SIMD tiers.
+
+/// Dot product with a fixed 4-lane reduction tree:
+/// `(s0 + s1) + (s2 + s3)` over 4-element chunks, sequential remainder.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for k in 0..chunks {
+        let i = 4 * k;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for i in 4 * chunks..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `y ← y + α·x` over `min(x.len(), y.len())` entries.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x ← α·x`.
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// `y[k] ← y[k] + α·x[k]` for each `k` in `idx`, in index order.
+pub fn gather_axpy(alpha: f64, x: &[f64], idx: &[usize], y: &mut [f64]) {
+    for &k in idx {
+        y[k] += alpha * x[k];
+    }
+}

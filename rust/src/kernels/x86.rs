@@ -1,0 +1,123 @@
+//! x86-64 AVX2 backend.
+//!
+//! Each kernel reproduces the scalar reference order from
+//! [`super::scalar`] exactly — the 4-wide vertical accumulate *is* the
+//! scalar code's four lanes `s0..s3`, and the horizontal reduction is
+//! the same `(s0 + s1) + (s2 + s3)` tree, so results are bitwise
+//! identical (the exact paths use separate `vmulpd`/`vaddpd`, never a
+//! fused multiply-add). Only [`dot_fma`] — the `fast_math = true`
+//! variant — contracts multiply-add pairs and may deviate by one
+//! rounding per term.
+
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::{
+    _mm256_add_pd, _mm256_fmadd_pd, _mm256_loadu_pd, _mm256_mul_pd, _mm256_set1_pd,
+    _mm256_setzero_pd, _mm256_storeu_pd,
+};
+
+/// Exact AVX2 dot product — bitwise identical to [`super::scalar::dot`].
+///
+/// # Safety
+/// The caller must ensure AVX2 is available
+/// (`is_x86_feature_detected!("avx2")`) and `b.len() >= a.len()`.
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(b.len() >= a.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    // Vertical accumulation: lane j of `acc` is exactly the scalar
+    // reference's accumulator s_j (same multiplies, same adds, same
+    // rounding at every step).
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let va = _mm256_loadu_pd(pa.add(i));
+        let vb = _mm256_loadu_pd(pb.add(i));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for i in 4 * chunks..n {
+        s += *pa.add(i) * *pb.add(i);
+    }
+    s
+}
+
+/// FMA-contracted dot product — the `fast_math = true` variant. Deviates
+/// from the exact path by at most one rounding per term (≤ 1e-12
+/// relative in practice, pinned by tests).
+///
+/// # Safety
+/// The caller must ensure AVX2 and FMA are available and
+/// `b.len() >= a.len()`.
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+pub unsafe fn dot_fma(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert!(b.len() >= a.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let pa = a.as_ptr();
+    let pb = b.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let va = _mm256_loadu_pd(pa.add(i));
+        let vb = _mm256_loadu_pd(pb.add(i));
+        acc = _mm256_fmadd_pd(va, vb, acc);
+    }
+    let mut lanes = [0.0f64; 4];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+    let mut s = (lanes[0] + lanes[1]) + (lanes[2] + lanes[3]);
+    for i in 4 * chunks..n {
+        s = (*pa.add(i)).mul_add(*pb.add(i), s);
+    }
+    s
+}
+
+/// Exact AVX2 `y ← y + α·x` — element-wise, bitwise identical to
+/// [`super::scalar::axpy`].
+///
+/// # Safety
+/// The caller must ensure AVX2 is available.
+#[target_feature(enable = "avx2")]
+pub unsafe fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    let px = x.as_ptr();
+    let py = y.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let vy = _mm256_loadu_pd(py.add(i));
+        let vx = _mm256_loadu_pd(px.add(i));
+        _mm256_storeu_pd(py.add(i), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+    }
+    for i in 4 * chunks..n {
+        *py.add(i) += alpha * *px.add(i);
+    }
+}
+
+/// Exact AVX2 `x ← α·x` — element-wise, bitwise identical to
+/// [`super::scalar::scale`].
+///
+/// # Safety
+/// The caller must ensure AVX2 is available.
+#[target_feature(enable = "avx2")]
+pub unsafe fn scale(alpha: f64, x: &mut [f64]) {
+    let n = x.len();
+    let chunks = n / 4;
+    let va = _mm256_set1_pd(alpha);
+    let px = x.as_mut_ptr();
+    for k in 0..chunks {
+        let i = 4 * k;
+        let vx = _mm256_loadu_pd(px.add(i));
+        _mm256_storeu_pd(px.add(i), _mm256_mul_pd(vx, va));
+    }
+    for i in 4 * chunks..n {
+        *px.add(i) *= alpha;
+    }
+}

@@ -78,6 +78,7 @@ pub mod elim;
 pub mod engine;
 pub mod error;
 pub mod jobstate;
+pub mod kernels;
 pub mod linalg;
 pub mod logging;
 pub mod model;
@@ -103,6 +104,7 @@ pub mod prelude {
     pub use crate::elim::SafeElimination;
     pub use crate::engine::{Engine, NativeEngine};
     pub use crate::error::LsspcaError;
+    pub use crate::kernels::{KernelMode, Tier};
     pub use crate::linalg::{power_iteration, JacobiEig};
     pub use crate::model::{Model, ModelPc};
     pub use crate::moments::FeatureMoments;

@@ -1,27 +1,16 @@
-//! Vector kernels. Written with simple indexable loops that LLVM
-//! auto-vectorizes; these sit on the solver hot path (see §Perf).
+//! Vector kernels on the solver hot path, routed through the
+//! runtime-dispatched [`crate::kernels`] backends (scalar / AVX2 / NEON).
+//! Every tier is bitwise-identical, so these remain the crate's
+//! deterministic reference primitives (see §Perf and ARCHITECTURE
+//! §Compute kernels).
 
-/// Dot product.
+/// Dot product with the crate's fixed 4-lane reduction order
+/// (`(s0 + s1) + (s2 + s3)` over 4-element chunks, sequential
+/// remainder); dispatched to the active SIMD tier.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: breaks the serial FP dependency chain,
-    // measurably faster than a naive fold at n ~ 500 (see EXPERIMENTS §Perf).
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for k in 0..chunks {
-        let i = 4 * k;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for i in 4 * chunks..n {
-        s += a[i] * b[i];
-    }
-    s
+    crate::kernels::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -30,21 +19,19 @@ pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`; dispatched to the active SIMD tier (element-wise,
+/// bitwise-identical on every tier).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::kernels::axpy(alpha, x, y);
 }
 
-/// `x *= alpha`.
+/// `x *= alpha`; dispatched to the active SIMD tier (element-wise,
+/// bitwise-identical on every tier).
 #[inline]
 pub fn scale(alpha: f64, x: &mut [f64]) {
-    for xi in x {
-        *xi *= alpha;
-    }
+    crate::kernels::scale(alpha, x);
 }
 
 /// Normalize to unit Euclidean norm; returns the original norm.

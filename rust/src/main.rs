@@ -47,6 +47,7 @@ fn with_training_flags(spec: CommandSpec) -> CommandSpec {
         .opt("workers", "2", "moment-pass worker threads")
         .opt("threads", "", "solver worker threads (0 = all cores; empty = config value)")
         .opt("engine", "native", "solver engine: native|xla")
+        .opt("kernels", "", "SIMD kernel tier: auto|scalar|avx2|neon (empty = config value)")
         .opt("cov-backend", "", "covariance backend: dense|gram|disk|auto (empty = config value)")
         .opt("row-cache-mb", "", "gram-backend row cache MiB (empty = config value)")
         .opt("memory-budget-mb", "", "covariance memory budget MiB, 0 = unlimited (empty = config)")
@@ -61,6 +62,7 @@ fn with_training_flags(spec: CommandSpec) -> CommandSpec {
         .opt("job-state", "", "resumable job state: on|off (empty = config value)")
         .opt("job-state-chunks", "", "chunks between job-state checkpoints (empty = config value)")
         .opt("faults", "", "deterministic fault-injection plan (testing; empty = config value)")
+        .switch("fast-math", "allow reassociating FMA kernels (faster, not bitwise-reproducible)")
         .switch("certify", "compute a dual optimality certificate per PC")
 }
 
@@ -152,6 +154,8 @@ fn app() -> App {
             .opt("covop-out", "BENCH_covop.json", "covariance-operator race output JSON path")
             .opt("score-out", "BENCH_score.json", "batch-scoring throughput output JSON path")
             .opt("oocore-out", "BENCH_oocore.json", "out-of-core backend race output JSON path")
+            .opt("kernels", "", "SIMD kernel tier: auto|scalar|avx2|neon (empty = env or auto)")
+            .opt("kernels-out", "BENCH_kernels.json", "kernel micro-bench output JSON path")
             .opt("compare", "", "baseline BENCH_bca.json: exit nonzero on gate regression")
             .opt("max-regress", "0.25", "allowed fractional slowdown of gate medians")
             .switch("quick", "smaller sizes / fewer repetitions"),
@@ -187,6 +191,10 @@ fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, LsspcaError>
         cfg.threads = args.usize("threads")?;
     }
     cfg.engine = args.str("engine");
+    if !args.str("kernels").is_empty() {
+        cfg.kernels = args.str("kernels");
+    }
+    cfg.fast_math = cfg.fast_math || args.switch("fast-math");
     if !args.str("cov-backend").is_empty() {
         cfg.cov_backend = args.str("cov-backend");
     }
@@ -238,9 +246,19 @@ fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, LsspcaError>
     Ok(cfg)
 }
 
+/// Select the SIMD dispatch tier and fast-math opt-in from the
+/// `[compute]` settings (config file; `--kernels` / `--fast-math`
+/// override). Returns the resolved tier so callers can report it.
+fn apply_compute(cfg: &PipelineConfig) -> Result<lsspca::kernels::Tier, LsspcaError> {
+    let tier = lsspca::kernels::apply_settings(&cfg.kernels, cfg.fast_math)?;
+    lsspca::debug!("compute: kernel dispatch tier {} (fast_math {})", tier.name(), cfg.fast_math);
+    Ok(tier)
+}
+
 fn cmd_run(args: &Args) -> Result<(), LsspcaError> {
     let cfg = pipeline_config_from_args(args)?;
     cfg.validate()?;
+    apply_compute(&cfg)?;
 
     let mut pipeline = Pipeline::new(cfg);
     if args.switch("progress") {
@@ -290,6 +308,7 @@ fn cmd_export(args: &Args) -> Result<(), LsspcaError> {
         cfg.save_model = "model.lspm".into();
     }
     cfg.validate()?;
+    apply_compute(&cfg)?;
     let out = cfg.save_model.clone();
     let report = Pipeline::new(cfg).run()?;
     println!("{}", report.model.summary());
@@ -322,6 +341,7 @@ fn cmd_score(args: &Args) -> Result<(), LsspcaError> {
     } else {
         PipelineConfig::load(Path::new(&args.str("config")))?
     };
+    apply_compute(&cfg)?;
     let sopts = ScoreOptions {
         center: cfg.score_center && !args.switch("no-center"),
         normalize: cfg.score_normalize || args.switch("normalize"),
@@ -368,6 +388,7 @@ fn cmd_serve(args: &Args) -> Result<(), LsspcaError> {
     } else {
         args.u64("timeout-secs")?
     };
+    apply_compute(&cfg)?;
     let sopts = ScoreOptions {
         center: cfg.score_center && !args.switch("no-center"),
         normalize: cfg.score_normalize || args.switch("normalize"),
@@ -686,6 +707,12 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
     let sweeps = args.usize("sweeps")?;
     let threads = args.usize("threads")?.max(1);
     let reps = if quick { 1 } else { 2 };
+    let tier = if args.str("kernels").is_empty() {
+        lsspca::kernels::active()
+    } else {
+        lsspca::kernels::apply_settings(&args.str("kernels"), false)?
+    };
+    metric("kernels.dispatch_tier", tier.name().to_string());
     let mut rng = Rng::seed_from(20111212);
     let mut json = String::from("{\n");
 
@@ -929,12 +956,76 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
     oj.push_str("  ]}\n}\n");
     std::fs::remove_dir_all(&odir).ok();
 
+    // --- kernels: dispatched dot + sparse Gram matvec micro-benches -------
+    // Times the public dispatched kernels (whatever tier is active) and a
+    // forced-scalar arm of the same workload; gate medians track the
+    // active-tier numbers. Tier switches are bitwise-invisible (see
+    // `lsspca::kernels`), so forcing scalar mid-bench is safe.
+    section(&format!("kernels — dot/spmv micro-benches (dispatch tier: {})", tier.name()));
+    let kn = if quick { 4096 } else { 16384 };
+    let ka: Vec<f64> = (0..kn).map(|_| rng.gauss()).collect();
+    let kb: Vec<f64> = (0..kn).map(|_| rng.gauss()).collect();
+    let k_reps = if quick { 9 } else { 15 };
+    // Batch many kernel calls per sample so timer resolution is moot.
+    let dot_workload = |acc: &mut f64| {
+        for _ in 0..256 {
+            *acc += lsspca::kernels::dot(&ka, &kb);
+        }
+    };
+    let kd_samples = time_samples(k_reps, || {
+        let mut acc = 0.0;
+        dot_workload(&mut acc);
+        acc
+    });
+    let kernel_dot_median = median_secs(&kd_samples);
+    let ks_samples = time_samples(k_reps, || ogram.matvec(&ox, &mut oyg));
+    let kernel_spmv_median = median_secs(&ks_samples);
+    // Forced-scalar reference arm of both workloads.
+    let prev_mode = match tier {
+        Tier::Scalar => KernelMode::Scalar,
+        Tier::Avx2 => KernelMode::Avx2,
+        Tier::Neon => KernelMode::Neon,
+    };
+    lsspca::kernels::force(KernelMode::Scalar)?;
+    let kd_scalar = median_secs(&time_samples(k_reps, || {
+        let mut acc = 0.0;
+        dot_workload(&mut acc);
+        acc
+    }));
+    let ks_scalar = median_secs(&time_samples(k_reps, || ogram.matvec(&ox, &mut oyg)));
+    lsspca::kernels::force(prev_mode)?;
+    let dot_speedup = kd_scalar / kernel_dot_median.max(1e-12);
+    let spmv_speedup = ks_scalar / kernel_spmv_median.max(1e-12);
+    metric("kernels.dot_median_secs", format!("{kernel_dot_median:.6}"));
+    metric("kernels.dot_scalar_median_secs", format!("{kd_scalar:.6}"));
+    metric("kernels.dot_speedup_vs_scalar", format!("{dot_speedup:.2}"));
+    metric("kernels.spmv_median_secs", format!("{kernel_spmv_median:.6}"));
+    metric("kernels.spmv_scalar_median_secs", format!("{ks_scalar:.6}"));
+    metric("kernels.spmv_speedup_vs_scalar", format!("{spmv_speedup:.2}"));
+    metric("gate.kernel_dot_median_secs", format!("{kernel_dot_median:.6}"));
+    metric("gate.kernel_spmv_median_secs", format!("{kernel_spmv_median:.6}"));
+    let kj = format!(
+        "{{\n  \"dispatch_tier\": \"{}\",\n  \"dot\": {{\"n\": {kn}, \
+         \"calls_per_sample\": 256, \"median_secs\": {kernel_dot_median:.6}, \
+         \"scalar_median_secs\": {kd_scalar:.6}, \"speedup\": {dot_speedup:.3}}},\n  \
+         \"spmv\": {{\"nhat\": {onhat}, \"docs\": {odocs}, \
+         \"median_secs\": {kernel_spmv_median:.6}, \
+         \"scalar_median_secs\": {ks_scalar:.6}, \"speedup\": {spmv_speedup:.3}}}\n}}\n",
+        tier.name()
+    );
+    let kernels_out = PathBuf::from(args.str("kernels-out"));
+    std::fs::write(&kernels_out, &kj)
+        .map_err(|e| LsspcaError::io_at(&kernels_out, format!("writing bench json: {e}")))?;
+    println!("wrote {}", kernels_out.display());
+
     json.push_str(&format!(
         "  \"gate\": {{\"quick\": {quick}, \"n\": {n}, \
          \"qp_micro_median_secs\": {qp_gate_median:.6}, \
          \"fig1_speed_median_secs\": {fig1_gate_median:.6}, \
          \"oocore_disk_matvec_median_secs\": {oocore_gate_median:.6}, \
-         \"session_refit_median_secs\": {session_refit_median:.6}}},\n"
+         \"session_refit_median_secs\": {session_refit_median:.6}, \
+         \"kernel_dot_median_secs\": {kernel_dot_median:.6}, \
+         \"kernel_spmv_median_secs\": {kernel_spmv_median:.6}}},\n"
     ));
 
     // --- λ-search thread scaling ------------------------------------------
@@ -1134,6 +1225,8 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
                 ("fig1_speed_median_secs", fig1_gate_median),
                 ("oocore_disk_matvec_median_secs", oocore_gate_median),
                 ("session_refit_median_secs", session_refit_median),
+                ("kernel_dot_median_secs", kernel_dot_median),
+                ("kernel_spmv_median_secs", kernel_spmv_median),
             ],
             quick,
             n,

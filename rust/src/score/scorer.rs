@@ -79,8 +79,18 @@ impl Default for ScoreOptions {
 pub struct Scorer {
     k: usize,
     n_features: usize,
-    /// orig feature → [(pc index, weight)] in PC order.
-    index: HashMap<u32, Vec<(u32, f64)>>,
+    /// orig feature → `(start, len)` span into [`entries`](Self::entries).
+    ///
+    /// The inverted index is stored as one contiguous arena instead of a
+    /// `Vec` per key: scoring does a single hash probe per document word
+    /// and then scans a cache-line-friendly slab, rather than chasing a
+    /// separate heap allocation per feature. The per-feature entry order
+    /// (PC order) is preserved by the flattening, so accumulation order —
+    /// and hence every scored f64 — is bitwise unchanged.
+    spans: HashMap<u32, (u32, u32)>,
+    /// Flattened `(pc index, weight)` entries, grouped by feature in
+    /// ascending feature order, PC order within a feature.
+    entries: Vec<(u32, f64)>,
     /// Per-PC centering offset, stored already negated (`−Σ w·μ`, with
     /// a zero sum normalized to +0.0 so uncentered scores never render
     /// as `-0`); all zeros when `center` is off.
@@ -125,7 +135,18 @@ impl Scorer {
             }
         }
         let neg_offsets = offsets.iter().map(|&o| if o == 0.0 { 0.0 } else { -o }).collect();
-        Ok(Scorer { k, n_features: model.n_features, index, neg_offsets, opts })
+        // Flatten the per-feature lists into one arena, ascending feature
+        // order. Entry order within a feature is preserved.
+        let mut feats: Vec<u32> = index.keys().copied().collect();
+        feats.sort_unstable();
+        let mut spans = HashMap::with_capacity(feats.len());
+        let mut entries = Vec::with_capacity(index.values().map(Vec::len).sum());
+        for f in feats {
+            let list = &index[&f];
+            spans.insert(f, (entries.len() as u32, list.len() as u32));
+            entries.extend_from_slice(list);
+        }
+        Ok(Scorer { k, n_features: model.n_features, spans, entries, neg_offsets, opts })
     }
 
     /// Number of components K.
@@ -156,8 +177,9 @@ impl Scorer {
                     self.n_features
                 )));
             }
-            if let Some(entries) = self.index.get(&w) {
-                for &(pc, weight) in entries {
+            if let Some(&(start, len)) = self.spans.get(&w) {
+                let span = &self.entries[start as usize..(start + len) as usize];
+                for &(pc, weight) in span {
                     out[pc as usize] += weight * c;
                 }
             }

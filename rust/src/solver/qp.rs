@@ -278,9 +278,8 @@ pub fn solve_masked_warm<Y: DenseRows + ?Sized>(
                     inner_move = inner_move.max(delta.abs());
                     if delta.abs() > opts.tol {
                         u[i] = new;
-                        for &k in active.iter() {
-                            w[k] += delta * yi[k];
-                        }
+                        // w += delta·Y[i, active] on the active set only.
+                        crate::kernels::gather_axpy(delta, yi, active.as_slice(), w);
                     }
                 }
                 if inner_move <= opts.tol {

@@ -13,7 +13,12 @@
 //!     per-λ `MaskedCov` nested-elimination views reproduce the dense
 //!     pipeline **bitwise** (identical φ, loadings, supports), the
 //!     implicit `GramCov` backend matches to FP-reassociation tolerance,
-//!     and Thm-2.1 survivor sets nest monotonically in λ.
+//!     and Thm-2.1 survivor sets nest monotonically in λ;
+//!
+//! (d) the SIMD kernel dispatch layer: the full pipeline (stream →
+//!     eliminate → solve → topics) produces **bitwise-identical** reports
+//!     under `kernels = scalar` and `kernels = auto` — the tentpole
+//!     guarantee of the `lsspca::kernels` module, checked end to end.
 
 use lsspca::corpus::models::spiked_covariance_with_u;
 use lsspca::covop::{DenseCov, GramCov, MaskedCov};
@@ -407,6 +412,57 @@ fn gram_backend_never_materializes_dense() {
     let (hits, misses) = gram.cache_stats();
     assert!(hits + misses > 0, "the search must have gathered rows");
     assert!(hits > 0, "repeat gathers must hit the cache");
+}
+
+// ---------------------------------------------------------------------------
+// (d) kernel dispatch tiers: scalar == auto, bit for bit, end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_bitwise_identical_across_kernel_tiers() {
+    use lsspca::config::PipelineConfig;
+    use lsspca::coordinator::Pipeline;
+    use lsspca::kernels::{self, KernelMode};
+
+    // Small synthetic corpus, but the full pipeline: streamed moments,
+    // Thm-2.1 elimination, reduced covariance, λ-search, BCA, deflation.
+    let cfg = PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 400,
+        synth_vocab: 1500,
+        workers: 2,
+        chunk_docs: 128,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 48,
+        bca_sweeps: 4,
+        ..Default::default()
+    };
+    // Tier forcing is process-global, but switches are bitwise-invisible
+    // to any concurrently running test (that's the invariant under test),
+    // and fast_math stays off throughout.
+    kernels::force(KernelMode::Scalar).unwrap();
+    let a = Pipeline::new(cfg.clone()).run().expect("scalar-tier run");
+    kernels::force(KernelMode::Auto).unwrap();
+    let b = Pipeline::new(cfg).run().expect("auto-tier run");
+    assert_eq!(a.reduced_size, b.reduced_size);
+    assert_eq!(a.elim_lambda.to_bits(), b.elim_lambda.to_bits());
+    assert_eq!(a.components.len(), b.components.len());
+    for (k, (ca, cb)) in a.components.iter().zip(&b.components).enumerate() {
+        assert_eq!(ca.lambda.to_bits(), cb.lambda.to_bits(), "PC{} λ diverged", k + 1);
+        assert_eq!(ca.phi.to_bits(), cb.phi.to_bits(), "PC{} φ diverged", k + 1);
+        assert_eq!(ca.pc.support, cb.pc.support, "PC{} support diverged", k + 1);
+        for (x, y) in ca.pc.vector.iter().zip(&cb.pc.vector) {
+            assert_eq!(x.to_bits(), y.to_bits(), "PC{} loadings diverged", k + 1);
+        }
+        assert_eq!(
+            ca.explained_variance.to_bits(),
+            cb.explained_variance.to_bits(),
+            "PC{} explained variance diverged",
+            k + 1
+        );
+    }
 }
 
 #[test]
