@@ -1,0 +1,96 @@
+"""Mirrors for the serving-layer PR's wire-contract invariants.
+
+The event loop, registry, and reload logic are exercised by the Rust
+integration suite over real sockets; what is mirrored here is the
+*contract text* that ties independent files together — drift between
+them compiles fine in Rust but breaks clients:
+
+- the advertised ``V1_ROUTES`` table (``conn.rs``) must match the
+  router's actual match arms — the structured 404 promises exactly
+  these routes;
+- every legacy shim must render through the shared registry JSON views
+  and be marked ``Deprecation`` (the bitwise-parity mechanism: one
+  render path, headers-only difference);
+- every status code the serving layer can emit must be a label of
+  ``lsspca_http_requests_total`` (``metrics.rs`` CODES), or /metrics
+  would silently drop counts;
+- the latency histogram's bucket bounds must be strictly ascending
+  (cumulative rendering assumes it).
+"""
+
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+SERVE = REPO / "rust" / "src" / "serve"
+
+
+def read(name):
+    return (SERVE / name).read_text(encoding="utf-8")
+
+
+def v1_routes():
+    block = re.search(
+        r"pub const V1_ROUTES: \[&str; (\d+)\] = \[(.*?)\];", read("conn.rs"), re.S
+    )
+    routes = re.findall(r'"([A-Z]+ /[^"]*)"', block.group(2))
+    assert len(routes) == int(block.group(1))
+    return routes
+
+
+def router_src():
+    return re.search(r"pub fn route\(.*?\n\}", read("conn.rs"), re.S).group(0)
+
+
+def test_v1_route_table_matches_router():
+    routes = v1_routes()
+    src = router_src()
+    # static routes appear as literal (method, path) match arms
+    for r in routes:
+        method, path = r.split(" ", 1)
+        if "{name}" in path:
+            leaf = path.rsplit("/", 1)[1]
+            assert f'Some((name, "{leaf}"))' in src, r
+            assert f'("{method}", Some(slot))' in src, r
+        else:
+            assert f'("{method}", "{path}")' in src, r
+    # ... and nothing extra: every /v1 literal the router dispatches on
+    # a concrete method is advertised in the table
+    advertised = {r.split(" ", 1)[1] for r in routes if "{name}" not in r}
+    matched = set(re.findall(r'\("[A-Z]+", "(/v1/[^"]+)"\)', src))
+    assert matched == advertised, matched.symmetric_difference(advertised)
+
+
+def test_legacy_shims_share_views_and_are_marked_deprecated():
+    src = router_src()
+    # exactly the three legacy shims go through the deprecated() wrapper
+    assert src.count("deprecated(") == 3
+    # each shared JSON view renders both generations (legacy + v1)
+    for view in ["healthz_json", "topics_json", "score_resp"]:
+        assert src.count(view) >= 2, view
+    helper = read("conn.rs")
+    assert 'with_header("Deprecation", "true"' in helper
+    assert 'rel=\\"successor-version\\"' in helper
+
+
+def test_every_emitted_status_is_a_metrics_label():
+    block = re.search(
+        r"pub const CODES: \[u16; (\d+)\] = \[(.*?)\];", read("metrics.rs"), re.S
+    )
+    codes = {int(c) for c in re.findall(r"\d+", block.group(2))}
+    assert len(codes) == int(block.group(1))
+    emitted = {int(c) for c in re.findall(r"ParseError::new\(\s*(\d{3})", read("http.rs"))}
+    emitted |= {int(c) for c in re.findall(r"json_resp\(\s*(\d{3})", read("conn.rs"))}
+    emitted |= {int(c) for c in re.findall(r"Response::json\((\d{3})", read("listener.rs"))}
+    emitted.add(200)  # Response::text(200, ...) metrics path
+    assert emitted <= codes, emitted - codes
+
+
+def test_histogram_buckets_strictly_ascending():
+    m = re.search(
+        r"pub const BUCKETS: \[f64; (\d+)\] =\s*\[(.*?)\];", read("metrics.rs"), re.S
+    )
+    vals = [float(x) for x in re.findall(r"[0-9.]+", m.group(2))]
+    assert len(vals) == int(m.group(1))
+    assert all(a < b for a, b in zip(vals, vals[1:]))
+    assert vals[0] > 0

@@ -185,6 +185,19 @@ impl Document {
     pub fn str_or(&self, section: &str, key: &str, default: &str) -> Result<String, LsspcaError> {
         self.typed(section, key, default.to_string(), |v| v.as_str().map(|s| s.to_string()))
     }
+    /// `Vec<String>` at `[section] key` (an array of strings), or
+    /// `default` when absent.
+    pub fn strs_or(
+        &self,
+        section: &str,
+        key: &str,
+        default: &[String],
+    ) -> Result<Vec<String>, LsspcaError> {
+        self.typed(section, key, default.to_vec(), |v| match v {
+            Value::Array(xs) => xs.iter().map(|x| x.as_str().map(str::to_string)).collect(),
+            _ => None,
+        })
+    }
 }
 
 /// Every `[section] key` the pipeline configuration consumes — the
@@ -224,6 +237,10 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("serve", "addr"),
     ("serve", "pool"),
     ("serve", "timeout_secs"),
+    ("serve", "queue_depth"),
+    ("serve", "max_conns"),
+    ("serve", "reload_poll_ms"),
+    ("serve", "models"),
     ("robustness", "max_bad_records"),
     ("robustness", "dead_letter_path"),
     ("robustness", "retry_attempts"),
@@ -448,6 +465,19 @@ pub struct PipelineConfig {
     /// Per-connection socket read/write timeout in seconds for
     /// `lsspca serve` (`[serve] timeout_secs`; 0 = no timeout).
     pub serve_timeout_secs: u64,
+    /// Accept-queue capacity for `lsspca serve` (`[serve] queue_depth`);
+    /// a full queue sheds new connections with 503.
+    pub serve_queue_depth: usize,
+    /// Open-connection cap for `lsspca serve` (`[serve] max_conns`);
+    /// beyond it new connections shed with 503.
+    pub serve_max_conns: usize,
+    /// Model-artifact watch interval in ms for hot reload
+    /// (`[serve] reload_poll_ms`; 0 = reload off).
+    pub serve_reload_poll_ms: u64,
+    /// Registry rows for `lsspca serve` as `"name=path"` strings
+    /// (`[serve] models`); empty = serve the `--model` flag only. The
+    /// first entry is the default model.
+    pub serve_models: Vec<String>,
     /// Tolerated count of malformed corpus records (`[robustness]
     /// max_bad_records`). 0 (default) keeps the strict behavior: the
     /// first bad record aborts the run. > 0 quarantines bad records to
@@ -511,6 +541,10 @@ impl Default for PipelineConfig {
             serve_addr: "127.0.0.1:7878".into(),
             serve_pool: 4,
             serve_timeout_secs: 10,
+            serve_queue_depth: 64,
+            serve_max_conns: 1024,
+            serve_reload_poll_ms: 1000,
+            serve_models: Vec::new(),
             robust_max_bad_records: 0,
             robust_dead_letter_path: String::new(),
             robust_retry_attempts: 3,
@@ -565,6 +599,10 @@ impl PipelineConfig {
             serve_addr: doc.str_or("serve", "addr", &d.serve_addr)?,
             serve_pool: doc.usize_or("serve", "pool", d.serve_pool)?,
             serve_timeout_secs: doc.u64_or("serve", "timeout_secs", d.serve_timeout_secs)?,
+            serve_queue_depth: doc.usize_or("serve", "queue_depth", d.serve_queue_depth)?,
+            serve_max_conns: doc.usize_or("serve", "max_conns", d.serve_max_conns)?,
+            serve_reload_poll_ms: doc.u64_or("serve", "reload_poll_ms", d.serve_reload_poll_ms)?,
+            serve_models: doc.strs_or("serve", "models", &d.serve_models)?,
             robust_max_bad_records: doc.u64_or(
                 "robustness",
                 "max_bad_records",
@@ -669,6 +707,17 @@ impl PipelineConfig {
         }
         if self.serve_addr.is_empty() {
             return bad("serve.addr must not be empty".into());
+        }
+        if self.serve_queue_depth == 0 {
+            return bad("serve.queue_depth must be >= 1".into());
+        }
+        if self.serve_max_conns == 0 {
+            return bad("serve.max_conns must be >= 1".into());
+        }
+        for entry in &self.serve_models {
+            if !entry.contains('=') || entry.starts_with('=') || entry.ends_with('=') {
+                return bad(format!("serve.models entry '{entry}' must be 'name=path'"));
+            }
         }
         if self.robust_retry_attempts == 0 {
             return bad("robustness.retry_attempts must be >= 1".into());
@@ -865,6 +914,38 @@ lambdas = [0.1, 0.2, 0.5]
         assert_eq!(cfg.serve_pool, 8);
         let bad = Document::parse("[serve]\npool = 0").unwrap();
         assert!(PipelineConfig::from_document(&bad).is_err());
+    }
+
+    #[test]
+    fn serve_registry_keys_parse_and_validate() {
+        let doc = Document::parse(
+            "[serve]\nqueue_depth = 16\nmax_conns = 99\nreload_poll_ms = 250\n\
+             models = [\"nytimes=runs/nyt.lspm\", \"pubmed=runs/pm.lspm\"]",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.serve_queue_depth, 16);
+        assert_eq!(cfg.serve_max_conns, 99);
+        assert_eq!(cfg.serve_reload_poll_ms, 250);
+        assert_eq!(cfg.serve_models, vec!["nytimes=runs/nyt.lspm", "pubmed=runs/pm.lspm"]);
+        // defaults
+        let d = PipelineConfig::default();
+        assert_eq!(d.serve_queue_depth, 64);
+        assert_eq!(d.serve_max_conns, 1024);
+        assert_eq!(d.serve_reload_poll_ms, 1000);
+        assert!(d.serve_models.is_empty());
+        // malformed rows and zero knobs are rejected
+        for bad in [
+            "[serve]\nmodels = [\"no-equals-sign\"]",
+            "[serve]\nmodels = [\"=path\"]",
+            "[serve]\nmodels = [\"name=\"]",
+            "[serve]\nmodels = [7]",
+            "[serve]\nqueue_depth = 0",
+            "[serve]\nmax_conns = 0",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(PipelineConfig::from_document(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

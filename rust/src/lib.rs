@@ -87,6 +87,7 @@ pub mod report;
 #[cfg(feature = "xla")]
 pub mod runtime;
 pub mod score;
+pub mod serve;
 pub mod session;
 pub mod solver;
 pub mod stream;
@@ -109,6 +110,7 @@ pub mod prelude {
     pub use crate::model::{Model, ModelPc};
     pub use crate::moments::FeatureMoments;
     pub use crate::score::{ScoreOptions, Scorer};
+    pub use crate::serve::{Server, ServerBuilder, ServerHandle};
     pub use crate::session::{FitResult, LambdaSpec, Progress, Session, SessionBuilder, Stage};
     pub use crate::solver::bca::{BcaOptions, BcaSolution};
     pub use crate::solver::extract::SparsePc;

@@ -24,7 +24,7 @@ use lsspca::coordinator::Pipeline;
 use lsspca::corpus::{CorpusSpec, SynthCorpus};
 use lsspca::data::Vocab;
 use lsspca::prelude::*;
-use lsspca::score::{score_file_observed, serve, BatchOptions, ServeOptions};
+use lsspca::score::{score_file_observed, BatchOptions};
 use lsspca::session::{NoopProgress, StderrProgress};
 use lsspca::solver::bca;
 use lsspca::stream::{variance_pass_file, StreamOptions};
@@ -98,12 +98,16 @@ fn app() -> App {
                 .switch("progress", "print live scoring progress to stderr"),
         )
         .command(
-            CommandSpec::new("serve", "serve a model over HTTP: /score /topics /healthz")
-                .req("model", "model artifact (.lspm) from `lsspca export`")
+            CommandSpec::new("serve", "serve models over HTTP: /v1 API, hot reload, /metrics")
+                .req("model", "default model artifact (.lspm), hot-reloaded when rewritten")
                 .opt("config", "", "TOML config file ([serve]/[model] sections)")
+                .opt("models", "", "extra registry entries: name=path[,name=path...]")
                 .opt("addr", "", "bind address (empty = config value, default 127.0.0.1:7878)")
-                .opt("pool", "", "connection-handler threads (empty = config value)")
-                .opt("timeout-secs", "", "per-connection socket timeout secs, 0 = none (empty = config)")
+                .opt("pool", "", "event-loop worker threads (empty = config value)")
+                .opt("timeout-secs", "", "idle-connection timeout secs, 0 = none (empty = config)")
+                .opt("queue-depth", "", "accept-queue cap before 503 shedding (empty = config)")
+                .opt("max-conns", "", "open-connection cap before 503 shedding (empty = config)")
+                .opt("reload-poll-ms", "", "artifact watch interval ms, 0 = off (empty = config)")
                 .switch("no-center", "do not subtract training means")
                 .switch("normalize", "divide loadings by training std deviations"),
         )
@@ -156,6 +160,7 @@ fn app() -> App {
             .opt("oocore-out", "BENCH_oocore.json", "out-of-core backend race output JSON path")
             .opt("kernels", "", "SIMD kernel tier: auto|scalar|avx2|neon (empty = env or auto)")
             .opt("kernels-out", "BENCH_kernels.json", "kernel micro-bench output JSON path")
+            .opt("serve-out", "BENCH_serve.json", "serving-latency output JSON path")
             .opt("compare", "", "baseline BENCH_bca.json: exit nonzero on gate regression")
             .opt("max-regress", "0.25", "allowed fractional slowdown of gate medians")
             .switch("quick", "smaller sizes / fewer repetitions"),
@@ -374,33 +379,52 @@ fn cmd_score(args: &Args) -> Result<(), LsspcaError> {
 }
 
 fn cmd_serve(args: &Args) -> Result<(), LsspcaError> {
-    let model = Model::load(Path::new(&args.str("model")))?;
     let cfg = if args.str("config").is_empty() {
         PipelineConfig::default()
     } else {
         PipelineConfig::load(Path::new(&args.str("config")))?
     };
-    let addr = if args.str("addr").is_empty() { cfg.serve_addr.clone() } else { args.str("addr") };
-    let pool =
-        if args.str("pool").is_empty() { cfg.serve_pool } else { args.usize("pool")? };
-    let timeout_secs = if args.str("timeout-secs").is_empty() {
-        cfg.serve_timeout_secs
-    } else {
-        args.u64("timeout-secs")?
-    };
     apply_compute(&cfg)?;
-    let sopts = ScoreOptions {
+    let mut b = ServerBuilder::from_config(&cfg)?.score_options(ScoreOptions {
         center: cfg.score_center && !args.switch("no-center"),
         normalize: cfg.score_normalize || args.switch("normalize"),
-    };
-    let scorer = Scorer::new(&model, sopts)?;
+    });
+    if !args.str("addr").is_empty() {
+        b = b.addr(args.str("addr"));
+    }
+    if !args.str("pool").is_empty() {
+        b = b.workers(args.usize("pool")?);
+    }
+    if !args.str("timeout-secs").is_empty() {
+        b = b.timeout_secs(args.u64("timeout-secs")?);
+    }
+    if !args.str("queue-depth").is_empty() {
+        b = b.queue_depth(args.usize("queue-depth")?);
+    }
+    if !args.str("max-conns").is_empty() {
+        b = b.max_conns(args.usize("max-conns")?);
+    }
+    if !args.str("reload-poll-ms").is_empty() {
+        b = b.reload_poll_ms(args.u64("reload-poll-ms")?);
+    }
+    for entry in args.str("models").split(',').filter(|s| !s.is_empty()) {
+        let Some((name, path)) = entry.split_once('=') else {
+            return Err(LsspcaError::config(format!(
+                "--models entry '{entry}' must be 'name=path'"
+            )));
+        };
+        b = b.register(name, path);
+    }
+    // The --model flag is the default model, path-backed so a rewritten
+    // artifact hot-reloads without a restart.
+    let server =
+        b.register("default", args.str("model")).default_model("default").build()?;
     println!(
-        "serving {} ({} PCs, kept {}) on http://{addr} — GET /healthz /topics, POST /score",
-        model.corpus_name,
-        model.num_pcs(),
-        model.kept.len()
+        "serving on http://{} — GET /v1/models /v1/healthz /v1/metrics, \
+         POST /v1/models/{{name}}/score (legacy /score /topics /healthz deprecated)",
+        server.local_addr()
     );
-    serve(model, scorer, ServeOptions { addr, pool, timeout_secs, ..Default::default() })
+    server.run()
 }
 
 /// Can a quarantined line now be parsed as a valid docword triple? Mirrors
@@ -624,6 +648,38 @@ fn time_samples<T>(reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
 
 fn median_secs(samples: &[f64]) -> f64 {
     lsspca::util::stats::Summary::of(samples).p50
+}
+
+/// Read exactly one HTTP/1.1 response from a keep-alive stream: headers
+/// up to the blank line, then `Content-Length` body bytes. Returns the
+/// status line. Byte-at-a-time header reads — responses here are a few
+/// hundred bytes, so simplicity beats buffering.
+fn read_bench_response(stream: &mut std::net::TcpStream) -> Result<String, String> {
+    use std::io::Read;
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        match stream.read(&mut byte) {
+            Ok(0) => return Err("connection closed mid-response".into()),
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(format!("reading response head: {e}")),
+        }
+        if head.len() > 64 * 1024 {
+            return Err("response head too large".into());
+        }
+    }
+    let head = String::from_utf8_lossy(&head).into_owned();
+    let mut content_length = 0usize;
+    for line in head.lines() {
+        let lower = line.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_length =
+                v.trim().parse().map_err(|e| format!("bad content-length: {e}"))?;
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    stream.read_exact(&mut body).map_err(|e| format!("reading response body: {e}"))?;
+    Ok(head.lines().next().unwrap_or_default().to_string())
 }
 
 /// The bench-regression gate: compare this run's scenario medians against
@@ -1018,6 +1074,107 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
         .map_err(|e| LsspcaError::io_at(&kernels_out, format!("writing bench json: {e}")))?;
     println!("wrote {}", kernels_out.display());
 
+    // --- serve_throughput: event-loop HTTP latency → BENCH_serve.json -----
+    // A live server on an ephemeral port, hammered by keep-alive clients
+    // POSTing /v1 score requests; the p99 request latency is the gate
+    // metric CI tracks (the serving analogue of the batch docs/s number).
+    section("serve_throughput — keep-alive /v1 scoring latency (event loop)");
+    let serve_model = Model {
+        corpus_name: "bench-serve".into(),
+        num_docs: 100,
+        n_features: 32,
+        vocab_hash: 0,
+        seed: 1,
+        elim_lambda: 0.5,
+        kept: vec![3, 8, 15],
+        kept_words: vec!["alpha".into(), "beta".into(), "gamma".into()],
+        kept_means: vec![0.0; 3],
+        kept_stds: vec![1.0; 3],
+        pcs: vec![
+            ModelPc {
+                lambda: 0.5,
+                phi: 1.0,
+                explained_variance: 1.0,
+                loadings: vec![(3, 0.6), (8, 0.8)],
+            },
+            ModelPc {
+                lambda: 0.5,
+                phi: 0.5,
+                explained_variance: 0.5,
+                loadings: vec![(15, 1.0)],
+            },
+        ],
+    };
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(2)
+        .reload_poll_ms(0)
+        .model(serve_model)
+        .build()?;
+    let serve_addr = server.local_addr();
+    let serve_handle = server.handle();
+    let server_thread = std::thread::spawn(move || server.run());
+    let serve_clients = 2usize;
+    let per_client: usize = if quick { 100 } else { 1000 };
+    let serve_t = lsspca::util::Timer::start();
+    let client_threads: Vec<_> = (0..serve_clients)
+        .map(|_| {
+            std::thread::spawn(move || -> Result<Vec<f64>, String> {
+                use std::io::Write;
+                let mut stream = std::net::TcpStream::connect(serve_addr)
+                    .map_err(|e| format!("connect: {e}"))?;
+                stream.set_nodelay(true).ok();
+                let body = r#"{"words": [[3, 2], [8, 1], [15, 1]], "top": 2}"#;
+                let req = format!(
+                    "POST /v1/models/default/score HTTP/1.1\r\nHost: bench\r\n\
+                     Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                    body.len()
+                );
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t = lsspca::util::Timer::start();
+                    stream.write_all(req.as_bytes()).map_err(|e| format!("write: {e}"))?;
+                    let status = read_bench_response(&mut stream)?;
+                    if !status.starts_with("HTTP/1.1 200") {
+                        return Err(format!("unexpected status: {status}"));
+                    }
+                    lat.push(t.secs());
+                }
+                Ok(lat)
+            })
+        })
+        .collect();
+    let mut serve_lat: Vec<f64> = Vec::with_capacity(serve_clients * per_client);
+    for h in client_threads {
+        let lat = h
+            .join()
+            .map_err(|_| LsspcaError::serve("bench client thread panicked"))?
+            .map_err(LsspcaError::serve)?;
+        serve_lat.extend(lat);
+    }
+    let serve_total = serve_t.secs();
+    serve_handle.shutdown();
+    server_thread.join().map_err(|_| LsspcaError::serve("server thread panicked"))??;
+    serve_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let serve_p50 = lsspca::util::stats::percentile_sorted(&serve_lat, 0.50);
+    let serve_p99 = lsspca::util::stats::percentile_sorted(&serve_lat, 0.99);
+    let serve_reqs = serve_lat.len();
+    let serve_rps = serve_reqs as f64 / serve_total.max(1e-12);
+    metric("serve.requests", format!("{serve_reqs}"));
+    metric("serve.requests_per_sec", format!("{serve_rps:.0}"));
+    metric("serve.p50_secs", format!("{serve_p50:.6}"));
+    metric("gate.serve_throughput_p99_secs", format!("{serve_p99:.6}"));
+    let svj = format!(
+        "{{\n  \"serve_throughput\": {{\"clients\": {serve_clients}, \
+         \"requests\": {serve_reqs}, \"keep_alive\": true, \
+         \"total_secs\": {serve_total:.6}, \"requests_per_sec\": {serve_rps:.1}, \
+         \"p50_secs\": {serve_p50:.6}, \"p99_secs\": {serve_p99:.6}}}\n}}\n"
+    );
+    let serve_out = PathBuf::from(args.str("serve-out"));
+    std::fs::write(&serve_out, &svj)
+        .map_err(|e| LsspcaError::io_at(&serve_out, format!("writing bench json: {e}")))?;
+    println!("wrote {}", serve_out.display());
+
     json.push_str(&format!(
         "  \"gate\": {{\"quick\": {quick}, \"n\": {n}, \
          \"qp_micro_median_secs\": {qp_gate_median:.6}, \
@@ -1025,7 +1182,8 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
          \"oocore_disk_matvec_median_secs\": {oocore_gate_median:.6}, \
          \"session_refit_median_secs\": {session_refit_median:.6}, \
          \"kernel_dot_median_secs\": {kernel_dot_median:.6}, \
-         \"kernel_spmv_median_secs\": {kernel_spmv_median:.6}}},\n"
+         \"kernel_spmv_median_secs\": {kernel_spmv_median:.6}, \
+         \"serve_throughput_p99_secs\": {serve_p99:.6}}},\n"
     ));
 
     // --- λ-search thread scaling ------------------------------------------
@@ -1227,6 +1385,7 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
                 ("session_refit_median_secs", session_refit_median),
                 ("kernel_dot_median_secs", kernel_dot_median),
                 ("kernel_spmv_median_secs", kernel_spmv_median),
+                ("serve_throughput_p99_secs", serve_p99),
             ],
             quick,
             n,

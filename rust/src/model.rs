@@ -363,7 +363,9 @@ impl Model {
         Ok(model)
     }
 
-    /// Save to a file (creates parent directories).
+    /// Save to a file (creates parent directories). The write is
+    /// crash-atomic so a live server hot-reloading this path never
+    /// observes a partially written artifact.
     pub fn save(&self, path: &Path) -> Result<(), LsspcaError> {
         self.validate()?;
         if let Some(dir) = path.parent() {
@@ -372,7 +374,10 @@ impl Model {
                     .map_err(|e| LsspcaError::io_at(dir, format!("mkdir: {e}")))?;
             }
         }
-        std::fs::write(path, self.to_bytes())
+        // Crash-atomic (tmp + fsync + rename): a concurrent reader — the
+        // serving layer's hot-reload watcher in particular — sees either
+        // the old artifact or the complete new one, never a torn hybrid.
+        crate::util::atomic_write(path, "model", &self.to_bytes())
             .map_err(|e| LsspcaError::io_at(path, format!("write model: {e}")))
     }
 

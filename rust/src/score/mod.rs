@@ -11,16 +11,19 @@
 //! - [`batch`] — stream a docword file through sharded workers and write
 //!   per-document scores + top-k topic assignments as CSV,
 //!   deterministically for any thread count.
-//! - [`server`] — a zero-dependency HTTP/1.1 JSON server
-//!   (`std::net::TcpListener`, thread-per-connection pool) exposing
-//!   `/score`, `/topics` and `/healthz`.
+//!
+//! Online serving lives in [`crate::serve`] (event-loop HTTP server,
+//! multi-model registry, hot reload, `/metrics`); the old
+//! `score::server` names are re-exported here, deprecated, for source
+//! compatibility.
 
 pub mod batch;
 pub mod scorer;
-pub mod server;
 
 pub use batch::{
     score_file, score_file_observed, score_stream, score_stream_observed, BatchOptions, BatchStats,
 };
 pub use scorer::{ScoreOptions, Scorer};
-pub use server::{serve, ServeOptions, Server};
+#[allow(deprecated)]
+pub use crate::serve::{serve, ServeOptions};
+pub use crate::serve::Server;

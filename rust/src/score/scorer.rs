@@ -164,6 +164,18 @@ impl Scorer {
         self.opts
     }
 
+    /// Distinct words with a nonzero loading on some PC (the inverted
+    /// index's key count). Exposed for `/metrics`.
+    pub fn index_terms(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Word→PC weight postings held in the index arena. Exposed for
+    /// `/metrics`.
+    pub fn index_entries(&self) -> usize {
+        self.entries.len()
+    }
+
     /// Score one document (sorted `(word_id_0based, count)` pairs) into
     /// `out` (length K). Word ids outside the model's feature range are
     /// an error (dimension mismatch, not a zero score).

@@ -1,0 +1,429 @@
+//! Per-connection state machine and the route table — the replacement
+//! for the old thread-per-socket handler.
+//!
+//! A [`Conn`] owns one non-blocking socket plus an input and an output
+//! buffer. Each [`Conn::tick`] from the event loop drives the machine:
+//!
+//! ```text
+//!        ┌────────────────────────────────────────────────┐
+//!        ▼                                                │
+//!   READ bytes ──► PARSE next request ──► ROUTE ──► WRITE response
+//!   (until         (incremental; loops     │        (until WouldBlock;
+//!    WouldBlock)    over pipelined         │         keep-alive → back
+//!                   requests)              │         to READ)
+//!                                          ▼
+//!                             parse error / Connection: close
+//!                                → flush, drain, then CLOSE
+//! ```
+//!
+//! Reads, parses, and writes all happen on whichever event-loop worker
+//! owns the connection; a slow client costs a buffer, not a thread. The
+//! route table serves both API generations: `/v1/...` routes and the
+//! legacy `/score` / `/topics` / `/healthz` shims, which render through
+//! the same [`crate::serve::registry`] JSON views (bitwise-identical
+//! bodies) and add a `Deprecation` header.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use crate::serve::http::{self, Request, Response};
+use crate::serve::Shared;
+use crate::util::json::{obj, Json};
+
+/// The v1 route table — returned verbatim in the structured 404 for
+/// unknown `/v1/...` paths (and cross-checked against the router by the
+/// Python mirror suite).
+pub const V1_ROUTES: [&str; 5] = [
+    "GET /v1/models",
+    "GET /v1/models/{name}/topics",
+    "POST /v1/models/{name}/score",
+    "GET /v1/healthz",
+    "GET /v1/metrics",
+];
+
+/// What one [`Conn::tick`] accomplished, driving the event loop's
+/// park-or-spin decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tick {
+    /// Bytes moved or a request was served.
+    Progress,
+    /// Nothing to do right now (socket would block).
+    Idle,
+    /// Connection finished (flushed + close, EOF, timeout, or error) —
+    /// the worker drops it.
+    Close,
+}
+
+/// How long a closing connection lingers after its final response is
+/// flushed, draining (and discarding) whatever the client is still
+/// sending. Dropping a socket with unread bytes in the receive buffer
+/// makes the kernel send RST, which can destroy the response still in
+/// flight to the client — exactly the 4xx the client most needs to see.
+const DRAIN_GRACE: Duration = Duration::from_secs(1);
+
+/// One live connection owned by an event-loop worker.
+pub struct Conn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    last_active: Instant,
+    /// A response demanded close (client asked, or framing is unknown
+    /// after a parse error): stop parsing, flush, half-close, drain
+    /// briefly, then close.
+    close_after_flush: bool,
+    /// Deadline of the lingering-close drain, set when the final
+    /// response has been flushed and the write side shut down.
+    drain_until: Option<Instant>,
+    eof: bool,
+}
+
+impl Conn {
+    /// Take ownership of an accepted socket: non-blocking (the event
+    /// loop must never park inside a syscall on one connection) and
+    /// Nagle off (responses are single small writes; delaying them only
+    /// adds p99).
+    pub fn adopt(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            last_active: Instant::now(),
+            close_after_flush: false,
+            drain_until: None,
+            eof: false,
+        })
+    }
+
+    /// Drive the machine one step: read what's available, serve every
+    /// complete pipelined request, write what the socket will take.
+    pub fn tick(&mut self, shared: &Shared) -> Tick {
+        let mut progressed = false;
+
+        // READ — drain the socket into the input buffer. A closing
+        // connection keeps reading but discards the bytes (see
+        // [`DRAIN_GRACE`]).
+        if !self.eof {
+            let mut tmp = [0u8; 4096];
+            loop {
+                match self.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        self.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        if !self.close_after_flush {
+                            self.inbuf.extend_from_slice(&tmp[..n]);
+                        }
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => return Tick::Close,
+                }
+            }
+        }
+
+        // PARSE + ROUTE — loop over every complete request already
+        // buffered (HTTP/1.1 pipelining: responses go out in order).
+        while !self.close_after_flush {
+            match http::next_request(&mut self.inbuf, shared.max_body) {
+                Ok(Some(req)) => {
+                    progressed = true;
+                    let t0 = Instant::now();
+                    let resp = route(&req, shared);
+                    shared.metrics.count_response(resp.status);
+                    let keep_alive = !req.close;
+                    resp.render(keep_alive, &mut self.outbuf);
+                    shared.metrics.request_seconds.observe(t0.elapsed());
+                    if req.close {
+                        self.close_after_flush = true;
+                    }
+                }
+                Ok(None) => break, // valid prefix; need more bytes
+                Err(e) => {
+                    // Framing is unknown past a malformed head: answer
+                    // and close.
+                    progressed = true;
+                    let body = obj(vec![("error", Json::Str(e.message))]).to_string();
+                    shared.metrics.count_response(e.status);
+                    Response::json(e.status, body).render(false, &mut self.outbuf);
+                    self.close_after_flush = true;
+                }
+            }
+        }
+
+        // WRITE — push the output buffer until the socket would block.
+        while !self.outbuf.is_empty() {
+            match self.stream.write(&self.outbuf) {
+                Ok(0) => return Tick::Close,
+                Ok(n) => {
+                    self.outbuf.drain(..n);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return Tick::Close,
+            }
+        }
+
+        if progressed {
+            self.last_active = Instant::now();
+        }
+        let flushed = self.outbuf.is_empty();
+        if flushed && self.eof {
+            return Tick::Close;
+        }
+        if flushed && self.close_after_flush {
+            // Lingering close: half-close (FIN) so the client sees end-
+            // of-response, then keep draining until it closes its side
+            // or the grace period runs out.
+            match self.drain_until {
+                None => {
+                    let _ = self.stream.shutdown(std::net::Shutdown::Write);
+                    self.drain_until = Some(Instant::now() + DRAIN_GRACE);
+                }
+                Some(t) if Instant::now() >= t => return Tick::Close,
+                Some(_) => {}
+            }
+        }
+        // Idle keep-alive / stuck-client timeout (0 = none).
+        if !shared.timeout.is_zero() && self.last_active.elapsed() > shared.timeout {
+            return Tick::Close;
+        }
+        if progressed {
+            Tick::Progress
+        } else {
+            Tick::Idle
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+fn json_resp(code: u16, v: Json) -> Response {
+    Response::json(code, v.to_string())
+}
+
+fn method_not_allowed(allow: &'static str) -> Response {
+    json_resp(
+        405,
+        obj(vec![("error", Json::Str(format!("method not allowed; use {allow}")))]),
+    )
+    .with_header("Allow", allow)
+}
+
+/// Structured 404 for unknown `/v1/...` paths: the error plus the full
+/// route table, so a typo'd client sees what exists.
+fn unknown_v1(path: &str) -> Response {
+    let routes: Vec<Json> = V1_ROUTES.iter().map(|r| Json::Str(r.to_string())).collect();
+    json_resp(
+        404,
+        obj(vec![
+            ("error", Json::Str(format!("no route for {path}"))),
+            ("routes", Json::Arr(routes)),
+        ]),
+    )
+}
+
+fn unknown_model(name: &str, shared: &Shared) -> Response {
+    let models: Vec<Json> =
+        shared.registry.names().into_iter().map(Json::Str).collect();
+    json_resp(
+        404,
+        obj(vec![
+            ("error", Json::Str(format!("no model named '{name}'"))),
+            ("models", Json::Arr(models)),
+        ]),
+    )
+}
+
+/// Mark a legacy-shim response: `Deprecation` plus a pointer at the v1
+/// successor route. Headers only — the body stays bitwise-identical to
+/// the v1 route's.
+fn deprecated(resp: Response, successor: &str) -> Response {
+    resp.with_header("Deprecation", "true".to_string())
+        .with_header("Link", format!("<{successor}>; rel=\"successor-version\""))
+}
+
+fn metrics_resp(shared: &Shared) -> Response {
+    Response::text(200, shared.metrics.render(&shared.registry.model_stats()))
+}
+
+fn score_resp(slot: &crate::serve::registry::Slot, body: &[u8]) -> Response {
+    let sm = slot.current();
+    slot.requests.fetch_add(1, Ordering::Relaxed);
+    let (code, v) = crate::serve::registry::score_json(&sm, body);
+    json_resp(code, v)
+}
+
+/// The route table. Every 405 carries `Allow`; unknown `/v1` paths get
+/// the structured 404; legacy shims hit the default model and add
+/// `Deprecation`.
+pub fn route(req: &Request, shared: &Shared) -> Response {
+    use crate::serve::registry::{healthz_json, models_json, topics_json};
+    let method = req.method.as_str();
+    let path = req.path.as_str();
+    match (method, path) {
+        // --- v1 API ---------------------------------------------------
+        ("GET", "/v1/healthz") => {
+            json_resp(200, healthz_json(&shared.registry.default_slot().current().model))
+        }
+        ("GET", "/v1/models") => json_resp(200, models_json(&shared.registry)),
+        ("GET", "/v1/metrics") | ("GET", "/metrics") => metrics_resp(shared),
+        (_, "/v1/healthz") | (_, "/v1/models") | (_, "/v1/metrics") | (_, "/metrics") => {
+            method_not_allowed("GET")
+        }
+        _ if path.starts_with("/v1/models/") => {
+            let rest = &path["/v1/models/".len()..];
+            match rest.split_once('/') {
+                Some((name, "topics")) => match (method, shared.registry.get(name)) {
+                    ("GET", Some(slot)) => json_resp(200, topics_json(&slot.current().model)),
+                    ("GET", None) => unknown_model(name, shared),
+                    _ => method_not_allowed("GET"),
+                },
+                Some((name, "score")) => match (method, shared.registry.get(name)) {
+                    ("POST", Some(slot)) => score_resp(slot, &req.body),
+                    ("POST", None) => unknown_model(name, shared),
+                    _ => method_not_allowed("POST"),
+                },
+                _ => unknown_v1(path),
+            }
+        }
+        _ if path.starts_with("/v1/") || path == "/v1" => unknown_v1(path),
+        // --- legacy shims (default model + Deprecation header) --------
+        ("GET", "/healthz") => deprecated(
+            json_resp(200, healthz_json(&shared.registry.default_slot().current().model)),
+            "/v1/healthz",
+        ),
+        ("GET", "/topics") => {
+            let slot = shared.registry.default_slot();
+            let successor = format!("/v1/models/{}/topics", slot.name);
+            deprecated(json_resp(200, topics_json(&slot.current().model)), &successor)
+        }
+        ("POST", "/score") => {
+            let slot = shared.registry.default_slot();
+            let successor = format!("/v1/models/{}/score", slot.name);
+            deprecated(score_resp(slot, &req.body), &successor)
+        }
+        // the old server answered `GET /score` 405 with no Allow header;
+        // every 405 now says what would have worked
+        (_, "/score") => method_not_allowed("POST"),
+        (_, "/healthz") | (_, "/topics") => method_not_allowed("GET"),
+        _ => json_resp(404, obj(vec![("error", Json::Str(format!("no route for {path}")))])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::tests::test_registry;
+    use crate::serve::Shared;
+
+    fn shared() -> Shared {
+        Shared::for_tests(test_registry())
+    }
+
+    fn call(shared: &Shared, method: &str, path: &str, body: &str) -> Response {
+        route(
+            &Request {
+                method: method.into(),
+                path: path.into(),
+                body: body.as_bytes().to_vec(),
+                close: false,
+            },
+            shared,
+        )
+    }
+
+    fn header<'a>(resp: &'a Response, name: &str) -> Option<&'a str> {
+        resp.extra.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    #[test]
+    fn v1_and_legacy_bodies_are_bitwise_identical() {
+        let sh = shared();
+        let doc = r#"{"words": [[3, 2], [15, 1]], "top": 2}"#;
+        for (legacy, v1, method, body) in [
+            ("/healthz", "/v1/healthz", "GET", ""),
+            ("/topics", "/v1/models/default/topics", "GET", ""),
+            ("/score", "/v1/models/default/score", "POST", doc),
+        ] {
+            let l = call(&sh, method, legacy, body);
+            let v = call(&sh, method, v1, body);
+            assert_eq!(l.status, 200, "{legacy}");
+            assert_eq!(v.status, 200, "{v1}");
+            assert_eq!(l.body, v.body, "{legacy} vs {v1} must be byte-identical");
+            assert_eq!(header(&l, "Deprecation"), Some("true"), "{legacy}");
+            assert!(header(&l, "Link").unwrap().contains(v1), "{legacy} Link → {v1}");
+            assert_eq!(header(&v, "Deprecation"), None, "{v1} is not deprecated");
+        }
+    }
+
+    #[test]
+    fn every_405_names_the_allowed_method() {
+        let sh = shared();
+        for (method, path, want_allow) in [
+            ("GET", "/score", "POST"), // the old server's missing-Allow bug
+            ("DELETE", "/score", "POST"),
+            ("POST", "/topics", "GET"),
+            ("POST", "/healthz", "GET"),
+            ("POST", "/v1/models", "GET"),
+            ("POST", "/v1/metrics", "GET"),
+            ("POST", "/metrics", "GET"),
+            ("POST", "/v1/models/default/topics", "GET"),
+            ("GET", "/v1/models/default/score", "POST"),
+        ] {
+            let r = call(&sh, method, path, "");
+            assert_eq!(r.status, 405, "{method} {path}");
+            assert_eq!(header(&r, "Allow"), Some(want_allow), "{method} {path}");
+        }
+    }
+
+    #[test]
+    fn unknown_v1_paths_return_structured_404_with_routes() {
+        let sh = shared();
+        for path in ["/v1/nope", "/v1", "/v1/models/default", "/v1/models/default/wat"] {
+            let r = call(&sh, "GET", path, "");
+            assert_eq!(r.status, 404, "{path}");
+            let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+            let routes = v.get("routes").unwrap().as_array().unwrap();
+            assert_eq!(routes.len(), V1_ROUTES.len(), "{path}");
+            assert_eq!(routes[0].as_str(), Some(V1_ROUTES[0]));
+        }
+        // non-v1 unknown paths keep the legacy terse 404
+        let r = call(&sh, "GET", "/nope", "");
+        assert_eq!(r.status, 404);
+        let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert!(v.get("routes").is_none());
+    }
+
+    #[test]
+    fn unknown_model_404_lists_registered_names() {
+        let sh = shared();
+        let r = call(&sh, "POST", "/v1/models/nosuch/score", r#"{"words": [[3, 1]]}"#);
+        assert_eq!(r.status, 404);
+        let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        let models = v.get("models").unwrap().as_array().unwrap();
+        assert_eq!(models[0].as_str(), Some("default"));
+    }
+
+    #[test]
+    fn metrics_routes_render_prometheus_text() {
+        let sh = shared();
+        call(&sh, "POST", "/v1/models/default/score", r#"{"words": [[3, 1]]}"#);
+        for path in ["/metrics", "/v1/metrics"] {
+            let r = call(&sh, "GET", path, "");
+            assert_eq!(r.status, 200);
+            assert!(r.content_type.starts_with("text/plain"), "{path}");
+            let text = String::from_utf8(r.body).unwrap();
+            assert!(text.contains("lsspca_model_requests_total{model=\"default\"}"), "{text}");
+            assert!(text.contains("lsspca_request_duration_seconds_bucket"), "{text}");
+        }
+    }
+}

@@ -1,0 +1,329 @@
+//! HTTP/1.1 wire protocol: an incremental, allocation-light request
+//! parser and a response renderer, shared by every connection state
+//! machine in [`crate::serve::conn`].
+//!
+//! The parser is *incremental*: [`next_request`] inspects whatever bytes
+//! have arrived so far and either produces one complete request (and
+//! drains its bytes from the buffer), reports "need more bytes", or
+//! fails with a status code. Because it consumes exactly one request's
+//! bytes per call, a client that writes several requests back-to-back is
+//! served with HTTP/1.1 pipelining for free — the connection loop just
+//! calls [`next_request`] until the buffer runs dry.
+//!
+//! Framing rules (deliberately the subset the old thread-per-connection
+//! server spoke, plus keep-alive):
+//!
+//! - head (request line + headers) terminated by `\r\n\r\n`, capped at
+//!   [`MAX_HEAD_BYTES`] → `431` beyond that;
+//! - bodies framed by `Content-Length` only; `Transfer-Encoding` is
+//!   rejected with `501` (chunked bodies buy nothing for sub-megabyte
+//!   JSON documents);
+//! - `Content-Length` above the configured cap → `413`;
+//! - HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close; a
+//!   `Connection: close` / `keep-alive` header overrides either way.
+
+/// Hard cap on one request's head (request line + headers). The body
+/// has its own configurable cap; without this a client streaming header
+/// bytes forever would grow the connection buffer without bound.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// One parsed request, bytes already drained from the connection buffer.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Request method, e.g. `GET`.
+    pub method: String,
+    /// Path component of the target (query string stripped).
+    pub path: String,
+    /// Raw body bytes (`Content-Length` framed).
+    pub body: Vec<u8>,
+    /// Client asked to close the connection after this response.
+    pub close: bool,
+}
+
+/// A request that cannot be parsed; the connection answers with
+/// `status` and closes (framing is unknown past a malformed head).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParseError {
+    /// Status code to answer with (400 / 413 / 431 / 501).
+    pub status: u16,
+    /// Human-readable cause, returned in the JSON error body.
+    pub message: String,
+}
+
+impl ParseError {
+    fn new(status: u16, message: impl Into<String>) -> ParseError {
+        ParseError { status, message: message.into() }
+    }
+}
+
+/// Try to parse one complete request from the front of `buf`.
+///
+/// - `Ok(Some(req))` — a full head + body was available; its bytes have
+///   been drained from `buf` (call again: the next pipelined request may
+///   already be buffered).
+/// - `Ok(None)` — the buffered bytes are a valid prefix; read more.
+/// - `Err(e)` — the head is malformed or over a cap; answer `e.status`
+///   and close.
+pub fn next_request(buf: &mut Vec<u8>, max_body: usize) -> Result<Option<Request>, ParseError> {
+    let head_len = match find_head_end(buf) {
+        Some(n) => n,
+        None => {
+            if buf.len() > MAX_HEAD_BYTES {
+                return Err(ParseError::new(
+                    431,
+                    format!("request head too large (> {MAX_HEAD_BYTES} bytes)"),
+                ));
+            }
+            return Ok(None);
+        }
+    };
+    if head_len > MAX_HEAD_BYTES {
+        return Err(ParseError::new(
+            431,
+            format!("request head too large (> {MAX_HEAD_BYTES} bytes)"),
+        ));
+    }
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| ParseError::new(400, "request head is not valid UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_ascii_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| ParseError::new(400, "empty request line"))?
+        .to_string();
+    let target =
+        parts.next().ok_or_else(|| ParseError::new(400, "missing request target"))?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    // route on the path only; ignore any query string
+    let path = target.split('?').next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    // HTTP/1.1 defaults to keep-alive, HTTP/1.0 to close.
+    let mut close = version.eq_ignore_ascii_case("HTTP/1.0");
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ParseError::new(400, format!("malformed header line {line:?}")));
+        };
+        let value = value.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .parse()
+                .map_err(|_| ParseError::new(400, format!("bad Content-Length '{value}'")))?;
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                close = true;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                close = false;
+            }
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return Err(ParseError::new(501, "Transfer-Encoding is not supported"));
+        }
+    }
+    if content_length > max_body {
+        return Err(ParseError::new(
+            413,
+            format!("request body too large ({content_length} > {max_body} bytes)"),
+        ));
+    }
+    let total = head_len + content_length;
+    if buf.len() < total {
+        return Ok(None); // body still in flight
+    }
+    let body = buf[head_len..total].to_vec();
+    buf.drain(..total);
+    Ok(Some(Request { method, path, body, close }))
+}
+
+/// Byte offset just past the `\r\n\r\n` head terminator, if present.
+/// Searches only the head budget (+3 bytes of terminator slack) so a
+/// giant bufferful of garbage is not rescanned every call.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let limit = buf.len().min(MAX_HEAD_BYTES + 4);
+    buf[..limit].windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Standard reason phrase for every status the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// One response, status + optional extra headers + body, rendered into
+/// a connection's write buffer by [`Response::render`].
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Extra headers (name, value) — `Allow`, `Deprecation`,
+    /// `Retry-After`, …
+    pub extra: Vec<(&'static str, String)>,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// A JSON response (the API's default content type).
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            extra: Vec::new(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// A plain-text response (`/metrics`).
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; version=0.0.4",
+            extra: Vec::new(),
+            body: body.into().into_bytes(),
+        }
+    }
+
+    /// Attach an extra header.
+    pub fn with_header(mut self, name: &'static str, value: impl Into<String>) -> Response {
+        self.extra.push((name, value.into()));
+        self
+    }
+
+    /// Serialize head + body into `out`. `keep_alive` picks the
+    /// `Connection` header; the connection loop closes after flushing
+    /// when it is false.
+    pub fn render(&self, keep_alive: bool, out: &mut Vec<u8>) {
+        use std::io::Write as _;
+        let conn = if keep_alive { "keep-alive" } else { "close" };
+        let _ = write!(
+            out,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {conn}\r\n",
+            self.status,
+            reason(self.status),
+            self.content_type,
+            self.body.len(),
+        );
+        for (name, value) in &self.extra {
+            let _ = write!(out, "{name}: {value}\r\n");
+        }
+        let _ = write!(out, "\r\n");
+        out.extend_from_slice(&self.body);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(raw: &[u8], max_body: usize) -> Result<Option<Request>, ParseError> {
+        let mut buf = raw.to_vec();
+        next_request(&mut buf, max_body)
+    }
+
+    #[test]
+    fn parses_complete_request_and_drains() {
+        let mut buf =
+            b"POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcdGET ".to_vec();
+        let r = next_request(&mut buf, 1024).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/score");
+        assert_eq!(r.body, b"abcd");
+        assert!(!r.close, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(buf, b"GET ", "next pipelined request's bytes stay buffered");
+    }
+
+    #[test]
+    fn pipelined_requests_parse_back_to_back() {
+        let mut buf = b"GET /v1/healthz HTTP/1.1\r\n\r\nGET /v1/models HTTP/1.1\r\n\r\n".to_vec();
+        let a = next_request(&mut buf, 1024).unwrap().unwrap();
+        let b = next_request(&mut buf, 1024).unwrap().unwrap();
+        assert_eq!((a.path.as_str(), b.path.as_str()), ("/v1/healthz", "/v1/models"));
+        assert!(buf.is_empty());
+        assert!(next_request(&mut buf, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn partial_head_and_partial_body_wait() {
+        assert!(req(b"GET /x HT", 1024).unwrap().is_none());
+        assert!(req(b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", 1024)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn connection_header_and_version_drive_close() {
+        let r = req(b"GET /x HTTP/1.1\r\nConnection: close\r\n\r\n", 64).unwrap().unwrap();
+        assert!(r.close);
+        let r = req(b"GET /x HTTP/1.0\r\n\r\n", 64).unwrap().unwrap();
+        assert!(r.close, "HTTP/1.0 defaults to close");
+        let r = req(b"GET /x HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", 64).unwrap().unwrap();
+        assert!(!r.close);
+    }
+
+    #[test]
+    fn query_string_is_stripped() {
+        let r = req(b"GET /topics?pretty=1 HTTP/1.1\r\n\r\n", 64).unwrap().unwrap();
+        assert_eq!(r.path, "/topics");
+    }
+
+    #[test]
+    fn oversized_body_is_413_oversized_head_431() {
+        let e = req(b"POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n", 100).unwrap_err();
+        assert_eq!(e.status, 413);
+        let mut huge = b"GET /x HTTP/1.1\r\n".to_vec();
+        huge.extend(vec![b'a'; MAX_HEAD_BYTES + 10]);
+        let e = next_request(&mut huge, 100).unwrap_err();
+        assert_eq!(e.status, 431);
+    }
+
+    #[test]
+    fn malformed_heads_are_400_chunked_is_501() {
+        assert_eq!(req(b"\r\n\r\n", 64).unwrap_err().status, 400);
+        assert_eq!(req(b"GET\r\n\r\n", 64).unwrap_err().status, 400);
+        assert_eq!(req(b"GET /x HTTP/1.1\r\nnocolonhere\r\n\r\n", 64).unwrap_err().status, 400);
+        assert_eq!(
+            req(b"POST /x HTTP/1.1\r\nContent-Length: nope\r\n\r\n", 64).unwrap_err().status,
+            400
+        );
+        assert_eq!(
+            req(b"POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 64)
+                .unwrap_err()
+                .status,
+            501
+        );
+        assert_eq!(req(b"GET /\xff\xfe HTTP/1.1\r\n\r\n", 64).unwrap_err().status, 400);
+    }
+
+    #[test]
+    fn response_renders_with_length_connection_and_extras() {
+        let mut out = Vec::new();
+        Response::json(405, "{\"error\":\"x\"}")
+            .with_header("Allow", "POST")
+            .render(true, &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"), "{text}");
+        assert!(text.contains("\r\nConnection: keep-alive\r\n"), "{text}");
+        assert!(text.contains("\r\nAllow: POST\r\n"), "{text}");
+        assert!(text.contains("\r\nContent-Length: 13\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"error\":\"x\"}"), "{text}");
+        let mut out = Vec::new();
+        Response::text(200, "m 1\n").render(false, &mut out);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("\r\nConnection: close\r\n"), "{text}");
+        assert!(text.contains("Content-Type: text/plain"), "{text}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Accept loop and event-loop workers.
+//!
+//! One blocking acceptor thread (the caller of [`run`]) feeds accepted
+//! sockets through a bounded [`crate::stream`] channel to `workers`
+//! event-loop threads. Each worker owns a set of non-blocking
+//! [`Conn`] state machines and multiplexes them with [`Conn::tick`]:
+//! drain newly queued sockets with `try_recv`, tick every connection,
+//! park briefly only when nothing moved. A slow or idle client costs a
+//! buffer in one worker's set — never a blocked thread.
+//!
+//! Load shedding happens at the accept boundary, before any request
+//! bytes are read, on two conditions:
+//!
+//! 1. the accept queue is full ([`crate::stream::BoundedSender::try_send`]
+//!    returns `Full` — every worker is busy and the backlog is at
+//!    `queue_depth`), or
+//! 2. `max_conns` connections are already open (counted across queued
+//!    and live connections).
+//!
+//! Either way the acceptor writes `503` + `Retry-After: 1` and closes —
+//! the same contract the old thread-pool server had, now also visible
+//! as `lsspca_sheds_total` in `/metrics`.
+
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::serve::conn::{Conn, Tick};
+use crate::serve::http::Response;
+use crate::serve::Shared;
+use crate::stream::{self, BoundedReceiver, TryRecvError, TrySendError};
+use crate::util::json::{obj, Json};
+
+/// How long a worker with no connections parks on the accept queue
+/// before re-checking shutdown.
+const PARK: Duration = Duration::from_millis(50);
+/// How long a worker with idle connections sleeps between tick sweeps.
+const IDLE_SPIN: Duration = Duration::from_micros(500);
+
+/// Serve until `shared.shutdown` is raised. Runs the accept loop on the
+/// calling thread and spawns `workers` event-loop threads; returns after
+/// every worker has exited.
+pub fn run(
+    listener: TcpListener,
+    shared: &Arc<Shared>,
+    workers: usize,
+    queue_depth: usize,
+    max_conns: usize,
+) {
+    let workers = workers.max(1);
+    let (tx, rx) = stream::bounded::<TcpStream>(queue_depth.max(1));
+    let handles: Vec<_> = (0..workers)
+        .map(|i| {
+            let rx = rx.clone();
+            let shared = Arc::clone(shared);
+            std::thread::Builder::new()
+                .name(format!("lsspca-serve-{i}"))
+                .spawn(move || worker_loop(&rx, &shared))
+                .expect("spawn serve worker")
+        })
+        .collect();
+    drop(rx); // workers hold the only receivers
+
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        let sock = match listener.accept() {
+            Ok((sock, _)) => sock,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                crate::warn_!("serve: accept: {e}");
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // the shutdown wake-up connection itself
+        }
+        shared.metrics.connections_accepted.fetch_add(1, Ordering::Relaxed);
+        // `connections_active` counts queued + live; it is the admission
+        // gauge for the max_conns cap.
+        let open = shared.metrics.connections_active.fetch_add(1, Ordering::Relaxed);
+        if open as usize >= max_conns {
+            shed(sock, &shared.metrics);
+            shared.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+            continue;
+        }
+        match tx.try_send(sock) {
+            Ok(()) => {
+                shared.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(sock)) | Err(TrySendError::Closed(sock)) => {
+                shed(sock, &shared.metrics);
+                shared.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    tx.close(); // workers drain the queue, then observe Closed and exit
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+/// Write the shed response (503 + `Retry-After: 1`) and drop the socket.
+/// Body wording matches the old server byte-for-byte.
+fn shed(mut sock: TcpStream, metrics: &crate::serve::metrics::Metrics) {
+    metrics.sheds.fetch_add(1, Ordering::Relaxed);
+    metrics.count_response(503);
+    let body =
+        obj(vec![("error", Json::Str("server overloaded; retry shortly".into()))]).to_string();
+    let mut out = Vec::new();
+    Response::json(503, body)
+        .with_header("Retry-After", "1".to_string())
+        .render(false, &mut out);
+    let _ = sock.write_all(&out);
+    let _ = sock.shutdown(std::net::Shutdown::Write);
+}
+
+/// One event-loop worker: adopt queued sockets, tick every live
+/// connection, park only when there is nothing to do.
+fn worker_loop(rx: &BoundedReceiver<TcpStream>, shared: &Shared) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut queue_closed = false;
+    loop {
+        // Adopt everything already queued without blocking.
+        loop {
+            match rx.try_recv() {
+                Ok(sock) => {
+                    shared.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    match Conn::adopt(sock) {
+                        Ok(c) => conns.push(c),
+                        Err(_) => {
+                            shared.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Closed) => {
+                    queue_closed = true;
+                    break;
+                }
+            }
+        }
+
+        if shared.shutdown.load(Ordering::SeqCst) || (queue_closed && conns.is_empty()) {
+            // Shutdown: flushed responses are already on the wire; drop
+            // the rest. (Ticks are synchronous, so no request is ever
+            // abandoned mid-handler.)
+            for _ in &conns {
+                shared.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+            }
+            return;
+        }
+
+        if conns.is_empty() {
+            // Nothing to tick: park on the queue instead of spinning.
+            match rx.recv_timeout(PARK) {
+                Ok(sock) => {
+                    shared.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    match Conn::adopt(sock) {
+                        Ok(c) => conns.push(c),
+                        Err(_) => {
+                            shared.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Closed) => queue_closed = true,
+            }
+            continue;
+        }
+
+        // Tick sweep over every connection this worker owns.
+        let mut progressed = false;
+        conns.retain_mut(|c| match c.tick(shared) {
+            Tick::Progress => {
+                progressed = true;
+                true
+            }
+            Tick::Idle => true,
+            Tick::Close => {
+                shared.metrics.connections_active.fetch_sub(1, Ordering::Relaxed);
+                false
+            }
+        });
+        if !progressed {
+            // All sockets would block: yield briefly rather than burn a
+            // core. New sockets are picked up at the top of the loop.
+            std::thread::sleep(IDLE_SPIN);
+        }
+    }
+}

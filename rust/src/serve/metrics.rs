@@ -1,0 +1,290 @@
+//! Serving observability: lock-free counters and latency histograms
+//! rendered in the Prometheus text exposition format (`GET /metrics`,
+//! `GET /v1/metrics`).
+//!
+//! Every value is an [`AtomicU64`] updated with `Relaxed` ordering —
+//! metrics are monotone tallies, not synchronization points, and the
+//! render pass tolerates (bounded) skew between counters scraped
+//! mid-update. The request-latency histogram uses fixed bucket bounds
+//! ([`BUCKETS`], seconds) with per-bucket counts made cumulative only at
+//! render time, the shape Prometheus' `histogram_quantile` expects.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in seconds, ascending. Spans 100 µs
+/// (an in-memory score of a short document) to 2.5 s (a stalled client
+/// about to hit the idle timeout); `+Inf` is implicit.
+pub const BUCKETS: [f64; 12] =
+    [0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.5, 2.5];
+
+/// Status codes the server can emit — the label set of
+/// `lsspca_http_requests_total`. Codes outside this list cannot be
+/// produced by the router; debug builds assert that.
+pub const CODES: [u16; 8] = [200, 400, 404, 405, 413, 431, 501, 503];
+
+/// A fixed-bucket latency histogram (counts + sum, Prometheus style).
+#[derive(Debug, Default)]
+pub struct Histogram {
+    /// Per-bucket (non-cumulative) observation counts.
+    counts: [AtomicU64; BUCKETS.len()],
+    /// Observations above the last bound (the `+Inf` bucket).
+    overflow: AtomicU64,
+    /// Total observed duration in nanoseconds.
+    sum_nanos: AtomicU64,
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        let secs = d.as_secs_f64();
+        match BUCKETS.iter().position(|&b| secs <= b) {
+            Some(i) => self.counts[i].fetch_add(1, Ordering::Relaxed),
+            None => self.overflow.fetch_add(1, Ordering::Relaxed),
+        };
+        self.sum_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        let mut n = self.overflow.load(Ordering::Relaxed);
+        for c in &self.counts {
+            n += c.load(Ordering::Relaxed);
+        }
+        n
+    }
+
+    /// Render as `name_bucket{le=...}` lines plus `_sum` / `_count`.
+    fn render(&self, name: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let mut cumulative = 0u64;
+        for (i, bound) in BUCKETS.iter().enumerate() {
+            cumulative += self.counts[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cumulative}");
+        }
+        cumulative += self.overflow.load(Ordering::Relaxed);
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cumulative}");
+        let sum = self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9;
+        let _ = writeln!(out, "{name}_sum {sum}");
+        let _ = writeln!(out, "{name}_count {cumulative}");
+    }
+}
+
+/// Process-wide serving counters, shared (one `Arc`) by the acceptor,
+/// every event-loop worker, and the reload watcher.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Completed HTTP responses, indexed parallel to [`CODES`].
+    requests_by_code: [AtomicU64; CODES.len()],
+    /// Wall time from request fully parsed to response queued.
+    pub request_seconds: Histogram,
+    /// Connections handed to the event loop.
+    pub connections_accepted: AtomicU64,
+    /// Connections currently owned by event-loop workers (gauge).
+    pub connections_active: AtomicU64,
+    /// Accepted sockets sitting in the accept queue, not yet adopted by
+    /// a worker (gauge).
+    pub queue_depth: AtomicU64,
+    /// Connections shed with `503 Retry-After` (queue full or the
+    /// connection cap reached).
+    pub sheds: AtomicU64,
+    /// Successful hot reloads (model swaps) across all registry slots.
+    pub reloads: AtomicU64,
+    /// Failed reload attempts (unreadable / checksum-invalid artifact);
+    /// the previous model keeps serving.
+    pub reload_errors: AtomicU64,
+}
+
+/// One registry slot's contribution to `/metrics`, snapshotted by
+/// [`crate::serve::registry::Registry::model_stats`].
+#[derive(Clone, Debug)]
+pub struct ModelStat {
+    /// Registry name of the model.
+    pub name: String,
+    /// Scoring requests answered by this slot.
+    pub requests: u64,
+    /// Hot reloads applied to this slot.
+    pub reloads: u64,
+    /// Kept vocabulary terms (the scorer's inverted-index width).
+    pub scorer_terms: u64,
+    /// Scorer inverted-index postings (word→PC weight entries) held in
+    /// memory — the "cache" the scorer answers from.
+    pub scorer_entries: u64,
+}
+
+impl Metrics {
+    /// Count one response with `code` (must be in [`CODES`]).
+    pub fn count_response(&self, code: u16) {
+        debug_assert!(CODES.contains(&code), "unregistered status code {code}");
+        if let Some(i) = CODES.iter().position(|&c| c == code) {
+            self.requests_by_code[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Total responses with `code`.
+    pub fn responses(&self, code: u16) -> u64 {
+        CODES
+            .iter()
+            .position(|&c| c == code)
+            .map(|i| self.requests_by_code[i].load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Render the Prometheus text exposition, folding in the per-model
+    /// stats snapshotted from the registry.
+    pub fn render(&self, models: &[ModelStat]) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(2048);
+        let gauge = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} gauge");
+            let _ = writeln!(out, "{name} {v}");
+        };
+        let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        };
+
+        let _ = writeln!(out, "# HELP lsspca_http_requests_total HTTP responses, by status code.");
+        let _ = writeln!(out, "# TYPE lsspca_http_requests_total counter");
+        for (i, code) in CODES.iter().enumerate() {
+            let n = self.requests_by_code[i].load(Ordering::Relaxed);
+            let _ = writeln!(out, "lsspca_http_requests_total{{code=\"{code}\"}} {n}");
+        }
+
+        let _ = writeln!(
+            out,
+            "# HELP lsspca_request_duration_seconds Request latency, parse-complete to \
+             response-queued."
+        );
+        let _ = writeln!(out, "# TYPE lsspca_request_duration_seconds histogram");
+        self.request_seconds.render("lsspca_request_duration_seconds", &mut out);
+
+        counter(
+            &mut out,
+            "lsspca_connections_accepted_total",
+            "Connections handed to the event loop.",
+            self.connections_accepted.load(Ordering::Relaxed),
+        );
+        gauge(
+            &mut out,
+            "lsspca_connections_active",
+            "Connections currently owned by event-loop workers.",
+            self.connections_active.load(Ordering::Relaxed),
+        );
+        gauge(
+            &mut out,
+            "lsspca_accept_queue_depth",
+            "Accepted sockets waiting for a worker.",
+            self.queue_depth.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "lsspca_sheds_total",
+            "Connections shed with 503 under overload.",
+            self.sheds.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "lsspca_reloads_total",
+            "Successful hot model reloads.",
+            self.reloads.load(Ordering::Relaxed),
+        );
+        counter(
+            &mut out,
+            "lsspca_reload_errors_total",
+            "Failed reload attempts (previous model kept serving).",
+            self.reload_errors.load(Ordering::Relaxed),
+        );
+
+        gauge(&mut out, "lsspca_models", "Models in the serving registry.", models.len() as u64);
+        let _ = writeln!(out, "# HELP lsspca_model_requests_total Scoring requests, by model.");
+        let _ = writeln!(out, "# TYPE lsspca_model_requests_total counter");
+        for m in models {
+            let _ =
+                writeln!(out, "lsspca_model_requests_total{{model=\"{}\"}} {}", m.name, m.requests);
+        }
+        let _ = writeln!(out, "# HELP lsspca_model_reloads_total Hot reloads applied, by model.");
+        let _ = writeln!(out, "# TYPE lsspca_model_reloads_total counter");
+        for m in models {
+            let _ =
+                writeln!(out, "lsspca_model_reloads_total{{model=\"{}\"}} {}", m.name, m.reloads);
+        }
+        let _ = writeln!(
+            out,
+            "# HELP lsspca_scorer_index_terms Kept vocabulary terms in the scorer index, by model."
+        );
+        let _ = writeln!(out, "# TYPE lsspca_scorer_index_terms gauge");
+        let terms = "lsspca_scorer_index_terms";
+        for m in models {
+            let _ = writeln!(out, "{terms}{{model=\"{}\"}} {}", m.name, m.scorer_terms);
+        }
+        let _ = writeln!(
+            out,
+            "# HELP lsspca_scorer_index_entries Word-to-PC postings held by the scorer, by model."
+        );
+        let _ = writeln!(out, "# TYPE lsspca_scorer_index_entries gauge");
+        let entries = "lsspca_scorer_index_entries";
+        for m in models {
+            let _ = writeln!(out, "{entries}{{model=\"{}\"}} {}", m.name, m.scorer_entries);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_sorted_and_positive() {
+        assert!(BUCKETS.windows(2).all(|w| w[0] < w[1]));
+        assert!(BUCKETS[0] > 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_render() {
+        let h = Histogram::default();
+        h.observe(Duration::from_micros(50)); // ≤ 0.0001
+        h.observe(Duration::from_micros(50));
+        h.observe(Duration::from_millis(3)); // ≤ 0.005
+        h.observe(Duration::from_secs(10)); // +Inf
+        assert_eq!(h.count(), 4);
+        let mut s = String::new();
+        h.render("x", &mut s);
+        assert!(s.contains("x_bucket{le=\"0.0001\"} 2"), "{s}");
+        assert!(s.contains("x_bucket{le=\"0.005\"} 3"), "{s}");
+        assert!(s.contains("x_bucket{le=\"2.5\"} 3"), "{s}");
+        assert!(s.contains("x_bucket{le=\"+Inf\"} 4"), "{s}");
+        assert!(s.contains("x_count 4"), "{s}");
+    }
+
+    #[test]
+    fn render_shape_is_prometheus_text() {
+        let m = Metrics::default();
+        m.count_response(200);
+        m.count_response(200);
+        m.count_response(503);
+        m.sheds.fetch_add(1, Ordering::Relaxed);
+        let models = vec![ModelStat {
+            name: "default".into(),
+            requests: 2,
+            reloads: 1,
+            scorer_terms: 3,
+            scorer_entries: 5,
+        }];
+        let text = m.render(&models);
+        assert!(text.contains("lsspca_http_requests_total{code=\"200\"} 2"), "{text}");
+        assert!(text.contains("lsspca_http_requests_total{code=\"503\"} 1"), "{text}");
+        assert!(text.contains("lsspca_sheds_total 1"), "{text}");
+        assert!(text.contains("lsspca_models 1"), "{text}");
+        assert!(text.contains("lsspca_model_requests_total{model=\"default\"} 2"), "{text}");
+        assert!(text.contains("lsspca_scorer_index_entries{model=\"default\"} 5"), "{text}");
+        // every non-comment line is `name{labels} value` with a numeric value
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, v) = line.rsplit_once(' ').expect("metric line");
+            assert!(v.parse::<f64>().is_ok(), "non-numeric value in {line:?}");
+        }
+    }
+}

@@ -1,0 +1,508 @@
+//! The production serving layer: an event-driven HTTP/1.1 scoring
+//! server with keep-alive and pipelining, a named multi-model registry,
+//! checksum-validated hot reload, load shedding, and Prometheus
+//! `/metrics` — all on `std::net`, zero dependencies.
+//!
+//! # Architecture
+//!
+//! ```text
+//!  acceptor thread          bounded queue            event-loop workers
+//!  ───────────────          (queue_depth)            (serve.pool)
+//!  accept() ──try_send──► [ sock | sock | … ] ──try_recv──► worker 0: tick conns
+//!     │                                                      worker 1: tick conns
+//!     └─ queue full or max_conns reached:                    …
+//!        write 503 + Retry-After: 1, close
+//!
+//!  reload watcher (one thread, reload_poll_ms)
+//!  stat artifacts ─changed?→ read + checksum-validate ─ok?→ Registry::swap
+//!                                                       └err?→ keep old model
+//! ```
+//!
+//! Each worker multiplexes many non-blocking connections through the
+//! [`conn`] state machine (read → parse pipelined requests → route →
+//! write), so slow clients cost a buffer, not a thread. Models live in
+//! the [`registry`] behind `RwLock<Arc<_>>` slots: handlers snapshot an
+//! `Arc`, the [`reload`] watcher swaps slots atomically, and in-flight
+//! requests always finish on the model they started with.
+//!
+//! # API
+//!
+//! Configure with [`ServerBuilder`] (the typed path, mirroring
+//! `SessionBuilder`):
+//!
+//! ```no_run
+//! use lsspca::serve::ServerBuilder;
+//! # fn f(model: lsspca::model::Model) -> Result<(), lsspca::error::LsspcaError> {
+//! ServerBuilder::new()
+//!     .addr("127.0.0.1:7878")
+//!     .register("nytimes", "runs/nytimes.lspm") // hot-reloaded on rewrite
+//!     .register_model("inline", model)          // in-memory, never reloaded
+//!     .workers(4)
+//!     .build()?
+//!     .run()
+//! # }
+//! ```
+//!
+//! The HTTP surface is versioned under `/v1` ([`conn::V1_ROUTES`]); the
+//! pre-registry routes (`/score`, `/topics`, `/healthz`) remain as
+//! deprecated shims onto the default model with byte-identical bodies.
+//! [`ServeOptions`] and [`serve`] are the equally deprecated library
+//! mirror of those shims. Failures are [`LsspcaError::Serve`] (CLI exit
+//! code 7).
+
+pub(crate) mod conn;
+pub mod http;
+pub(crate) mod listener;
+pub mod metrics;
+pub mod registry;
+pub mod reload;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::PipelineConfig;
+use crate::error::LsspcaError;
+use crate::model::Model;
+use crate::score::scorer::{ScoreOptions, Scorer};
+use crate::serve::metrics::Metrics;
+use crate::serve::registry::{Registry, ServingModel};
+
+/// Everything the acceptor, workers, and watcher share (one `Arc`).
+pub(crate) struct Shared {
+    /// The model registry (slots swap under it on reload).
+    pub registry: Registry,
+    /// Process-wide serving counters.
+    pub metrics: Metrics,
+    /// Request-body cap in bytes (413 beyond).
+    pub max_body: usize,
+    /// Idle/stuck connection timeout (zero = none).
+    pub timeout: Duration,
+    /// Raised by [`ServerHandle::shutdown`].
+    pub shutdown: AtomicBool,
+    /// Bound address (shutdown wake-up connects here).
+    pub addr: SocketAddr,
+}
+
+#[cfg(test)]
+impl Shared {
+    /// A `Shared` for route-level unit tests (no sockets involved).
+    pub(crate) fn for_tests(registry: Registry) -> Shared {
+        Shared {
+            registry,
+            metrics: Metrics::default(),
+            max_body: 1 << 20,
+            timeout: Duration::from_secs(10),
+            shutdown: AtomicBool::new(false),
+            addr: "127.0.0.1:0".parse().unwrap(),
+        }
+    }
+}
+
+/// How one registered name obtains its model at [`ServerBuilder::build`].
+enum RowSource {
+    /// In-memory model, compiled with the builder's score options.
+    Memory(Model),
+    /// Artifact path: loaded at build, watched for hot reload.
+    Path(PathBuf),
+    /// Pre-compiled (the deprecated `Server::bind` hands a scorer in).
+    Compiled(Box<ServingModel>, ScoreOptions),
+}
+
+/// Typed, chainable server configuration — the serving counterpart of
+/// [`crate::session::SessionBuilder`]. Every knob has the `[serve]`
+/// config default; [`ServerBuilder::build`] validates, loads and
+/// compiles every registered model, and binds the listener.
+pub struct ServerBuilder {
+    addr: String,
+    workers: usize,
+    queue_depth: usize,
+    max_conns: usize,
+    max_body_bytes: usize,
+    timeout_secs: u64,
+    reload_poll_ms: u64,
+    score_opts: ScoreOptions,
+    default_model: Option<String>,
+    rows: Vec<(String, RowSource)>,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> Self {
+        ServerBuilder::new()
+    }
+}
+
+impl ServerBuilder {
+    /// Start from the `[serve]` defaults (no models registered yet).
+    pub fn new() -> ServerBuilder {
+        ServerBuilder {
+            addr: "127.0.0.1:7878".into(),
+            workers: 4,
+            queue_depth: 64,
+            max_conns: 1024,
+            max_body_bytes: 1 << 20,
+            timeout_secs: 10,
+            reload_poll_ms: 1000,
+            score_opts: ScoreOptions::default(),
+            default_model: None,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Seed every shared knob from a parsed `[serve]` config section,
+    /// including its `models = ["name=path", ...]` registry rows.
+    pub fn from_config(cfg: &PipelineConfig) -> Result<ServerBuilder, LsspcaError> {
+        let mut b = ServerBuilder::new()
+            .addr(cfg.serve_addr.clone())
+            .workers(cfg.serve_pool)
+            .queue_depth(cfg.serve_queue_depth)
+            .max_conns(cfg.serve_max_conns)
+            .timeout_secs(cfg.serve_timeout_secs)
+            .reload_poll_ms(cfg.serve_reload_poll_ms);
+        for entry in &cfg.serve_models {
+            let Some((name, path)) = entry.split_once('=') else {
+                return Err(LsspcaError::config(format!(
+                    "[serve] models entry '{entry}' must be 'name=path'"
+                )));
+            };
+            b = b.register(name, path);
+        }
+        Ok(b)
+    }
+
+    /// Seed from the deprecated [`ServeOptions`] (migration path: the
+    /// old option-struct knobs map onto the builder; then chain
+    /// registrations and the new knobs).
+    #[allow(deprecated)]
+    pub fn from_options(opts: ServeOptions) -> ServerBuilder {
+        ServerBuilder::new()
+            .addr(opts.addr)
+            .workers(opts.pool)
+            .max_body_bytes(opts.max_body_bytes)
+            .timeout_secs(opts.timeout_secs)
+    }
+
+    /// Bind address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
+    pub fn addr(mut self, addr: impl Into<String>) -> ServerBuilder {
+        self.addr = addr.into();
+        self
+    }
+
+    /// Event-loop worker threads (`[serve] pool`, ≥ 1).
+    pub fn workers(mut self, n: usize) -> ServerBuilder {
+        self.workers = n;
+        self
+    }
+
+    /// Accept-queue capacity; a full queue sheds with 503
+    /// (`[serve] queue_depth`).
+    pub fn queue_depth(mut self, n: usize) -> ServerBuilder {
+        self.queue_depth = n;
+        self
+    }
+
+    /// Open-connection cap across all workers; beyond it new
+    /// connections shed with 503 (`[serve] max_conns`).
+    pub fn max_conns(mut self, n: usize) -> ServerBuilder {
+        self.max_conns = n;
+        self
+    }
+
+    /// Request-body cap in bytes (413 beyond).
+    pub fn max_body_bytes(mut self, n: usize) -> ServerBuilder {
+        self.max_body_bytes = n;
+        self
+    }
+
+    /// Idle/stuck connection timeout in seconds, 0 = none
+    /// (`[serve] timeout_secs`).
+    pub fn timeout_secs(mut self, secs: u64) -> ServerBuilder {
+        self.timeout_secs = secs;
+        self
+    }
+
+    /// Artifact-watch poll interval in milliseconds, 0 = hot reload off
+    /// (`[serve] reload_poll_ms`).
+    pub fn reload_poll_ms(mut self, ms: u64) -> ServerBuilder {
+        self.reload_poll_ms = ms;
+        self
+    }
+
+    /// Scoring options applied when compiling registered models (and
+    /// re-applied on every hot reload).
+    pub fn score_options(mut self, opts: ScoreOptions) -> ServerBuilder {
+        self.score_opts = opts;
+        self
+    }
+
+    /// Which registered name the legacy shims and `/v1/healthz` use
+    /// (default: the first registration).
+    pub fn default_model(mut self, name: impl Into<String>) -> ServerBuilder {
+        self.default_model = Some(name.into());
+        self
+    }
+
+    /// Register a path-backed model: loaded (and checksum-validated) at
+    /// build, then watched for hot reload.
+    pub fn register(
+        mut self,
+        name: impl Into<String>,
+        path: impl Into<PathBuf>,
+    ) -> ServerBuilder {
+        self.rows.push((name.into(), RowSource::Path(path.into())));
+        self
+    }
+
+    /// Register an in-memory model (never hot-reloaded).
+    pub fn register_model(mut self, name: impl Into<String>, model: Model) -> ServerBuilder {
+        self.rows.push((name.into(), RowSource::Memory(model)));
+        self
+    }
+
+    /// Register an in-memory model under the name `default` — the
+    /// one-model convenience the old `serve(model, scorer, opts)` had.
+    pub fn model(self, model: Model) -> ServerBuilder {
+        self.register_model("default", model)
+    }
+
+    fn register_compiled(
+        mut self,
+        name: impl Into<String>,
+        sm: ServingModel,
+        opts: ScoreOptions,
+    ) -> ServerBuilder {
+        self.rows.push((name.into(), RowSource::Compiled(Box::new(sm), opts)));
+        self
+    }
+
+    /// Validate, load + compile every registered model, and bind the
+    /// listener. Knob and registry failures are [`LsspcaError::Serve`];
+    /// artifact-load failures keep their I/O class.
+    pub fn build(self) -> Result<Server, LsspcaError> {
+        if self.workers == 0 {
+            return Err(LsspcaError::serve("serve.pool must be >= 1"));
+        }
+        if self.queue_depth == 0 {
+            return Err(LsspcaError::serve("serve.queue_depth must be >= 1"));
+        }
+        if self.max_conns == 0 {
+            return Err(LsspcaError::serve("serve.max_conns must be >= 1"));
+        }
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for (name, source) in self.rows {
+            let (path, sm, opts) = match source {
+                RowSource::Memory(m) => {
+                    (None, ServingModel::compile(m, self.score_opts)?, self.score_opts)
+                }
+                RowSource::Path(p) => {
+                    let m = Model::load(&p)?;
+                    (Some(p), ServingModel::compile(m, self.score_opts)?, self.score_opts)
+                }
+                RowSource::Compiled(sm, opts) => (None, *sm, opts),
+            };
+            rows.push((name, path, sm, opts));
+        }
+        let registry = Registry::new(rows, self.default_model.as_deref())?;
+        let listener = TcpListener::bind(&self.addr)
+            .map_err(|e| LsspcaError::serve(format!("bind {}: {e}", self.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| LsspcaError::serve(format!("local_addr: {e}")))?;
+        let shared = Arc::new(Shared {
+            registry,
+            metrics: Metrics::default(),
+            max_body: self.max_body_bytes,
+            timeout: Duration::from_secs(self.timeout_secs),
+            shutdown: AtomicBool::new(false),
+            addr,
+        });
+        Ok(Server {
+            listener,
+            shared,
+            workers: self.workers,
+            queue_depth: self.queue_depth,
+            max_conns: self.max_conns,
+            reload_poll_ms: self.reload_poll_ms,
+        })
+    }
+}
+
+/// A bound (not yet running) server, produced by
+/// [`ServerBuilder::build`].
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    workers: usize,
+    queue_depth: usize,
+    max_conns: usize,
+    reload_poll_ms: u64,
+}
+
+impl Server {
+    /// Bind a single in-memory model with a pre-built scorer — the old
+    /// entrypoint, kept working verbatim.
+    #[deprecated(note = "use `ServerBuilder` (see `serve` module docs)")]
+    #[allow(deprecated)]
+    pub fn bind(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<Server, LsspcaError> {
+        let digest = crate::util::xor_fold_checksum(&model.to_bytes());
+        let score_opts = scorer.options();
+        let sm = ServingModel::from_parts(model, scorer, digest);
+        ServerBuilder::from_options(opts).register_compiled("default", sm, score_opts).build()
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// A cloneable shutdown handle.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Serve until [`ServerHandle::shutdown`]. Blocks the calling
+    /// thread (it becomes the acceptor); spawns the event-loop workers
+    /// and, when any registered model is path-backed and
+    /// `reload_poll_ms > 0`, the hot-reload watcher.
+    pub fn run(self) -> Result<(), LsspcaError> {
+        let Server { listener, shared, workers, queue_depth, max_conns, reload_poll_ms } = self;
+        crate::info!(
+            "serving {} model(s) [{}] on http://{} with {workers} workers (default '{}')",
+            shared.registry.slots().len(),
+            shared.registry.names().join(", "),
+            shared.addr,
+            shared.registry.default_slot().name,
+        );
+        let watch = reload_poll_ms > 0 && shared.registry.slots().iter().any(|s| s.path.is_some());
+        let watcher = if watch {
+            let sh = Arc::clone(&shared);
+            Some(
+                std::thread::Builder::new()
+                    .name("lsspca-reload".into())
+                    .spawn(move || {
+                        reload::watch_loop(
+                            &sh.registry,
+                            &sh.metrics,
+                            &sh.shutdown,
+                            Duration::from_millis(reload_poll_ms),
+                        );
+                    })
+                    .expect("spawn reload watcher"),
+            )
+        } else {
+            None
+        };
+        listener::run(listener, &shared, workers, queue_depth, max_conns);
+        // listener::run returns only on shutdown, but make it explicit
+        // for the watcher before joining it.
+        shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(w) = watcher {
+            let _ = w.join();
+        }
+        Ok(())
+    }
+}
+
+/// Cloneable handle to stop a running server (tests, signal handlers;
+/// `shutdown` is idempotent).
+#[derive(Clone)]
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and unblock the acceptor with a dummy
+    /// connection.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // Wake the blocking accept(); a failed connect is fine (the
+        // listener may already be gone).
+        let _ = TcpStream::connect(self.shared.addr);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated pre-registry surface
+// ---------------------------------------------------------------------------
+
+/// Flat server configuration for the old one-model API.
+#[deprecated(note = "use `ServerBuilder` (seed it with `ServerBuilder::from_options`)")]
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address, e.g. `127.0.0.1:7878` (port 0 = ephemeral).
+    pub addr: String,
+    /// Worker threads (now event-loop workers, not one per connection).
+    pub pool: usize,
+    /// Maximum accepted request-body size in bytes.
+    pub max_body_bytes: usize,
+    /// Connection idle timeout in seconds (0 = none).
+    pub timeout_secs: u64,
+}
+
+#[allow(deprecated)]
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7878".into(),
+            pool: 4,
+            max_body_bytes: 1 << 20,
+            timeout_secs: 10,
+        }
+    }
+}
+
+/// Bind and run a single-model server in one call — the old `lsspca
+/// serve` entrypoint, kept working verbatim.
+#[deprecated(note = "use `ServerBuilder` (see `serve` module docs)")]
+#[allow(deprecated)]
+pub fn serve(model: Model, scorer: Scorer, opts: ServeOptions) -> Result<(), LsspcaError> {
+    Server::bind(model, scorer, opts)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::registry::tests::test_model;
+
+    #[test]
+    fn builder_validates_knobs_and_registry() {
+        let m = || test_model("m");
+        let err = |b: ServerBuilder| b.build().unwrap_err().to_string();
+        assert!(err(ServerBuilder::new().model(m()).workers(0)).contains("pool"));
+        assert!(err(ServerBuilder::new().model(m()).queue_depth(0)).contains("queue_depth"));
+        assert!(err(ServerBuilder::new().model(m()).max_conns(0)).contains("max_conns"));
+        assert!(err(ServerBuilder::new()).contains("at least one model"));
+        assert!(err(ServerBuilder::new().model(m()).default_model("nosuch"))
+            .contains("not registered"));
+        assert!(matches!(
+            ServerBuilder::new().model(m()).workers(0).build(),
+            Err(LsspcaError::Serve { .. })
+        ));
+    }
+
+    #[test]
+    fn builder_binds_ephemeral_port_and_registers_models() {
+        let srv = ServerBuilder::new()
+            .addr("127.0.0.1:0")
+            .register_model("a", test_model("corpus-a"))
+            .register_model("b", test_model("corpus-b"))
+            .default_model("b")
+            .build()
+            .unwrap();
+        assert_ne!(srv.local_addr().port(), 0);
+        assert_eq!(srv.shared.registry.names(), vec!["a".to_string(), "b".to_string()]);
+        assert_eq!(srv.shared.registry.default_slot().name, "b");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_options_seed_the_builder() {
+        let opts = ServeOptions { pool: 7, timeout_secs: 3, ..Default::default() };
+        let b = ServerBuilder::from_options(opts);
+        assert_eq!(b.workers, 7);
+        assert_eq!(b.timeout_secs, 3);
+        assert_eq!(b.queue_depth, ServerBuilder::new().queue_depth); // new knobs keep defaults
+    }
+}

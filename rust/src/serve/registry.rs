@@ -1,0 +1,529 @@
+//! The named multi-model registry: one process serves several
+//! topic-sets, each behind an atomically swappable slot.
+//!
+//! A slot holds `RwLock<Arc<ServingModel>>`. Request handlers clone the
+//! `Arc` under a momentary read lock and then score entirely on their
+//! clone, so a hot reload ([`Registry::swap`], a momentary write lock)
+//! never blocks behind an in-flight request and never invalidates one:
+//! requests that grabbed the old `Arc` finish on the old model, requests
+//! that arrive after the swap see the new one. Nothing is ever dropped
+//! mid-score — the last `Arc` owner frees the old model.
+//!
+//! This module also owns the JSON views (`healthz`, `topics`, `score`)
+//! so the legacy routes and the `/v1` routes render through the *same*
+//! functions — the bitwise-identical-response contract between them is
+//! structural, not maintained by hand.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::error::LsspcaError;
+use crate::model::Model;
+use crate::score::scorer::{ScoreOptions, Scorer};
+use crate::serve::metrics::ModelStat;
+use crate::util::json::{arr_f64, obj, Json};
+
+/// One immutable, ready-to-serve compilation of a model: the artifact
+/// plus its scorer and term lookup. Swapped wholesale on reload.
+pub struct ServingModel {
+    /// The model artifact.
+    pub model: Model,
+    /// Compiled inverted-index scorer.
+    pub scorer: Scorer,
+    /// word string → original feature index, for `terms` payloads.
+    pub term_index: HashMap<String, usize>,
+    /// [`crate::util::xor_fold_checksum`] of the artifact bytes — the
+    /// reload watcher skips swaps when a rewrite produced identical
+    /// bytes.
+    pub digest: u64,
+}
+
+impl ServingModel {
+    /// Compile `model` for serving (index + term lookup + digest).
+    pub fn compile(model: Model, opts: ScoreOptions) -> Result<ServingModel, LsspcaError> {
+        let digest = crate::util::xor_fold_checksum(&model.to_bytes());
+        let scorer = Scorer::new(&model, opts)?;
+        Ok(ServingModel::from_parts(model, scorer, digest))
+    }
+
+    /// Wrap an already-built scorer (the deprecated `serve(model,
+    /// scorer, opts)` entrypoint hands one in).
+    pub fn from_parts(model: Model, scorer: Scorer, digest: u64) -> ServingModel {
+        let term_index = model
+            .kept
+            .iter()
+            .zip(&model.kept_words)
+            .map(|(&orig, w)| (w.clone(), orig))
+            .collect();
+        ServingModel { model, scorer, term_index, digest }
+    }
+}
+
+/// One registry entry: the swappable model plus its reload bookkeeping.
+pub struct Slot {
+    /// Registry name (path segment in `/v1/models/{name}/…`).
+    pub name: String,
+    /// Artifact path watched for hot reload (`None` = in-memory model,
+    /// never reloaded).
+    pub path: Option<PathBuf>,
+    /// Scorer options reapplied on every reload compile.
+    pub score_opts: ScoreOptions,
+    current: RwLock<Arc<ServingModel>>,
+    /// Scoring requests answered by this slot.
+    pub requests: AtomicU64,
+    /// Hot reloads applied to this slot.
+    pub reloads: AtomicU64,
+}
+
+impl Slot {
+    /// Snapshot the current model (cheap: one `Arc` clone under a read
+    /// lock). The caller scores on the snapshot; a concurrent swap does
+    /// not affect it.
+    pub fn current(&self) -> Arc<ServingModel> {
+        Arc::clone(&self.current.read().expect("slot lock poisoned"))
+    }
+}
+
+/// Ordered name → [`Slot`] map. The first registered model is the
+/// default (what the legacy `/score`, `/topics`, `/healthz` shims hit).
+pub struct Registry {
+    slots: Vec<Arc<Slot>>,
+    default: usize,
+}
+
+impl Registry {
+    /// Build from `(name, path, compiled model, score options)` rows;
+    /// `default_name = None` defaults to the first row.
+    pub fn new(
+        rows: Vec<(String, Option<PathBuf>, ServingModel, ScoreOptions)>,
+        default_name: Option<&str>,
+    ) -> Result<Registry, LsspcaError> {
+        if rows.is_empty() {
+            return Err(LsspcaError::serve("registry needs at least one model"));
+        }
+        let mut slots: Vec<Arc<Slot>> = Vec::with_capacity(rows.len());
+        for (name, path, sm, score_opts) in rows {
+            let name_ok = |c: char| c.is_ascii_alphanumeric() || c == '-' || c == '_';
+            if name.is_empty() || !name.chars().all(name_ok) {
+                return Err(LsspcaError::serve(format!(
+                    "model name '{name}' must be non-empty [A-Za-z0-9_-]"
+                )));
+            }
+            if slots.iter().any(|s| s.name == name) {
+                return Err(LsspcaError::serve(format!("duplicate model name '{name}'")));
+            }
+            slots.push(Arc::new(Slot {
+                name,
+                path,
+                score_opts,
+                current: RwLock::new(Arc::new(sm)),
+                requests: AtomicU64::new(0),
+                reloads: AtomicU64::new(0),
+            }));
+        }
+        let default = match default_name {
+            None => 0,
+            Some(d) => slots.iter().position(|s| s.name == d).ok_or_else(|| {
+                LsspcaError::serve(format!("default model '{d}' is not registered"))
+            })?,
+        };
+        Ok(Registry { slots, default })
+    }
+
+    /// Slot by name.
+    pub fn get(&self, name: &str) -> Option<&Arc<Slot>> {
+        self.slots.iter().find(|s| s.name == name)
+    }
+
+    /// The default slot (legacy shims and `Session::serve` land here).
+    pub fn default_slot(&self) -> &Arc<Slot> {
+        &self.slots[self.default]
+    }
+
+    /// All slots in registration order.
+    pub fn slots(&self) -> &[Arc<Slot>] {
+        &self.slots
+    }
+
+    /// Registered model names in order (the structured 404 lists them).
+    pub fn names(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.name.clone()).collect()
+    }
+
+    /// Atomically replace `name`'s model. In-flight requests keep the
+    /// `Arc` they already cloned; new requests see `next`.
+    pub fn swap(&self, name: &str, next: ServingModel) -> Result<(), LsspcaError> {
+        let slot = self
+            .get(name)
+            .ok_or_else(|| LsspcaError::serve(format!("swap: no model named '{name}'")))?;
+        *slot.current.write().expect("slot lock poisoned") = Arc::new(next);
+        slot.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Per-model stats snapshot for `/metrics`.
+    pub fn model_stats(&self) -> Vec<ModelStat> {
+        self.slots
+            .iter()
+            .map(|s| {
+                let sm = s.current();
+                ModelStat {
+                    name: s.name.clone(),
+                    requests: s.requests.load(Ordering::Relaxed),
+                    reloads: s.reloads.load(Ordering::Relaxed),
+                    scorer_terms: sm.scorer.index_terms() as u64,
+                    scorer_entries: sm.scorer.index_entries() as u64,
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON views — shared verbatim by legacy and /v1 routes
+// ---------------------------------------------------------------------------
+
+/// `/healthz` and `/v1/healthz` body: liveness + default-model identity.
+pub fn healthz_json(model: &Model) -> Json {
+    obj(vec![
+        ("ok", Json::Bool(true)),
+        ("model", Json::Str(model.corpus_name.clone())),
+        ("pcs", Json::Num(model.num_pcs() as f64)),
+        ("kept", Json::Num(model.kept.len() as f64)),
+        ("n_features", Json::Num(model.n_features as f64)),
+    ])
+}
+
+/// `/topics` and `/v1/models/{name}/topics` body: the K sparse PCs with
+/// words and loadings (the paper's topic tables, as an API).
+pub fn topics_json(model: &Model) -> Json {
+    let topics: Vec<Json> = model
+        .pcs
+        .iter()
+        .enumerate()
+        .map(|(k, pc)| {
+            let words: Vec<Json> = pc
+                .loadings
+                .iter()
+                .map(|&(idx, w)| {
+                    obj(vec![
+                        ("word", Json::Str(model.word_of(idx))),
+                        ("index", Json::Num(idx as f64)),
+                        ("loading", Json::Num(w)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("pc", Json::Num((k + 1) as f64)),
+                ("lambda", Json::Num(pc.lambda)),
+                ("phi", Json::Num(pc.phi)),
+                ("explained_variance", Json::Num(pc.explained_variance)),
+                ("words", Json::Arr(words)),
+            ])
+        })
+        .collect();
+    obj(vec![("topics", Json::Arr(topics))])
+}
+
+/// `/v1/models` body: every registered model with identity + reload
+/// bookkeeping.
+pub fn models_json(registry: &Registry) -> Json {
+    let models: Vec<Json> = registry
+        .slots()
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let sm = s.current();
+            let mut fields = vec![
+                ("name", Json::Str(s.name.clone())),
+                ("default", Json::Bool(i == registry.default)),
+                ("corpus", Json::Str(sm.model.corpus_name.clone())),
+                ("pcs", Json::Num(sm.model.num_pcs() as f64)),
+                ("kept", Json::Num(sm.model.kept.len() as f64)),
+                ("n_features", Json::Num(sm.model.n_features as f64)),
+                ("reloads", Json::Num(s.reloads.load(Ordering::Relaxed) as f64)),
+            ];
+            if let Some(p) = &s.path {
+                fields.push(("path", Json::Str(p.display().to_string())));
+            }
+            obj(fields)
+        })
+        .collect();
+    obj(vec![("models", Json::Arr(models))])
+}
+
+/// `POST /score` / `POST /v1/models/{name}/score` body: parse the
+/// document payload, project it, and render scores. Returns `(status,
+/// body)`; any 4xx carries a JSON `error` field.
+pub fn score_json(sm: &ServingModel, body: &[u8]) -> (u16, Json) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, obj(vec![("error", Json::Str("body is not utf-8".into()))])),
+    };
+    let payload = match Json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            let msg = format!("bad JSON: {}", e.message());
+            return (400, obj(vec![("error", Json::Str(msg))]));
+        }
+    };
+    let mut words: Vec<(u32, f64)> = Vec::new();
+    let mut unknown_terms = 0u64;
+    let mut saw_input = false;
+    if let Some(ws) = payload.get("words") {
+        saw_input = true;
+        let Some(items) = ws.as_array() else {
+            return (400, obj(vec![("error", Json::Str("\"words\" must be an array".into()))]));
+        };
+        for item in items {
+            let pair = item.as_array().unwrap_or(&[]);
+            let (Some(id), Some(count)) =
+                (pair.first().and_then(Json::as_f64), pair.get(1).and_then(Json::as_f64))
+            else {
+                return (
+                    400,
+                    obj(vec![(
+                        "error",
+                        Json::Str("\"words\" entries must be [id, count] pairs".into()),
+                    )]),
+                );
+            };
+            if !(id.fract() == 0.0 && id >= 0.0 && id < u32::MAX as f64) || !count.is_finite() {
+                return (
+                    400,
+                    obj(vec![(
+                        "error",
+                        Json::Str(format!("invalid word entry [{id}, {count}]")),
+                    )]),
+                );
+            }
+            words.push((id as u32, count));
+        }
+    }
+    if let Some(terms) = payload.get("terms") {
+        saw_input = true;
+        let Json::Obj(pairs) = terms else {
+            return (400, obj(vec![("error", Json::Str("\"terms\" must be an object".into()))]));
+        };
+        // Duplicate keys: last occurrence wins, matching `Json::get`'s
+        // lookup semantics (scoring both would double-count the term).
+        let mut last_at: HashMap<&str, usize> = HashMap::with_capacity(pairs.len());
+        for (i, (term, _)) in pairs.iter().enumerate() {
+            last_at.insert(term.as_str(), i);
+        }
+        for (i, (term, count)) in pairs.iter().enumerate() {
+            if last_at[term.as_str()] != i {
+                continue; // superseded by a later duplicate
+            }
+            let Some(c) = count.as_f64().filter(|c| c.is_finite()) else {
+                return (
+                    400,
+                    obj(vec![("error", Json::Str(format!("bad count for term '{term}'")))]),
+                );
+            };
+            match sm.term_index.get(term) {
+                Some(&orig) => words.push((orig as u32, c)),
+                // outside the kept set every PC weight is exactly 0, so
+                // the score is unaffected; report instead of dropping
+                None => unknown_terms += 1,
+            }
+        }
+    }
+    if !saw_input {
+        return (
+            400,
+            obj(vec![(
+                "error",
+                Json::Str(
+                    "provide \"words\": [[id, count], ...] and/or \"terms\": {word: count}".into(),
+                ),
+            )]),
+        );
+    }
+    let top = payload
+        .get("top")
+        .and_then(Json::as_f64)
+        .map(|t| t.max(1.0) as usize)
+        .unwrap_or(1);
+    // Canonicalize to sorted word order (stable, so equal ids keep their
+    // payload order): f64 addition is order-sensitive, and the bitwise
+    // agreement with batch/in-memory scoring assumes docword ordering.
+    words.sort_by_key(|&(w, _)| w);
+    match sm.scorer.score(&words) {
+        Ok(scores) => {
+            let tops: Vec<Json> = Scorer::top_pcs(&scores, top)
+                .into_iter()
+                .map(|p| Json::Num((p + 1) as f64))
+                .collect();
+            (
+                200,
+                obj(vec![
+                    ("scores", arr_f64(&scores)),
+                    ("top_pcs", Json::Arr(tops)),
+                    ("unknown_terms", Json::Num(unknown_terms as f64)),
+                ]),
+            )
+        }
+        Err(e) => (400, obj(vec![("error", Json::Str(e.message().to_string()))])),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::model::ModelPc;
+
+    /// The model the old `score::server` unit suite pinned its scores
+    /// against — kept verbatim so those pins carry over.
+    pub(crate) fn test_model(name: &str) -> Model {
+        Model {
+            corpus_name: name.into(),
+            num_docs: 10,
+            n_features: 100,
+            vocab_hash: 0,
+            seed: 1,
+            elim_lambda: 0.2,
+            kept: vec![3, 8, 15],
+            kept_means: vec![0.0, 0.0, 0.0],
+            kept_stds: vec![1.0, 1.0, 1.0],
+            kept_words: vec!["alpha".into(), "beta".into(), "gamma".into()],
+            pcs: vec![
+                ModelPc {
+                    lambda: 0.5,
+                    phi: 1.0,
+                    explained_variance: 1.0,
+                    loadings: vec![(3, 0.6), (8, 0.8)],
+                },
+                ModelPc {
+                    lambda: 0.5,
+                    phi: 0.7,
+                    explained_variance: 0.7,
+                    loadings: vec![(15, 1.0)],
+                },
+            ],
+        }
+    }
+
+    pub(crate) fn test_registry() -> Registry {
+        let opts = ScoreOptions { center: false, normalize: false };
+        let sm = ServingModel::compile(test_model("srv-test"), opts).unwrap();
+        Registry::new(vec![("default".into(), None, sm, opts)], None).unwrap()
+    }
+
+    fn post_score(body: &str) -> (u16, Json) {
+        let reg = test_registry();
+        let sm = reg.default_slot().current();
+        score_json(&sm, body.as_bytes())
+    }
+
+    #[test]
+    fn score_by_words() {
+        let (code, v) = post_score(r#"{"words": [[3, 2], [15, 1]], "top": 2}"#);
+        assert_eq!(code, 200, "{v:?}");
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert!((scores[0].as_f64().unwrap() - 1.2).abs() < 1e-12);
+        assert!((scores[1].as_f64().unwrap() - 1.0).abs() < 1e-12);
+        let tops = v.get("top_pcs").unwrap().as_array().unwrap();
+        assert_eq!(tops[0].as_f64(), Some(1.0));
+        assert_eq!(tops[1].as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn score_by_terms_counts_unknown() {
+        let (code, v) = post_score(r#"{"terms": {"alpha": 1, "nosuchword": 3}}"#);
+        assert_eq!(code, 200, "{v:?}");
+        assert_eq!(v.get("unknown_terms").unwrap().as_f64(), Some(1.0));
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert!((scores[0].as_f64().unwrap() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_terms_last_occurrence_wins() {
+        // must match Json::get's last-wins lookup, not double-count
+        let (code, v) = post_score(r#"{"terms": {"alpha": 1, "alpha": 2}}"#);
+        assert_eq!(code, 200, "{v:?}");
+        let scores = v.get("scores").unwrap().as_array().unwrap();
+        assert!((scores[0].as_f64().unwrap() - 0.6 * 2.0).abs() < 1e-12, "{scores:?}");
+    }
+
+    #[test]
+    fn bad_payloads_rejected() {
+        for body in [
+            "not json",
+            "{}",
+            r#"{"words": 5}"#,
+            r#"{"words": [[1]]}"#,
+            r#"{"words": [[-1, 2]]}"#,
+            r#"{"words": [[1.5, 2]]}"#,
+            r#"{"terms": [1]}"#,
+            r#"{"words": [[999, 1]]}"#, // id ≥ n_features → scorer error
+        ] {
+            let (code, v) = post_score(body);
+            assert_eq!(code, 400, "{body} -> {v:?}");
+            assert!(v.get("error").is_some());
+        }
+    }
+
+    #[test]
+    fn registry_routes_by_name_and_rejects_bad_names() {
+        let opts = ScoreOptions { center: false, normalize: false };
+        let a = ServingModel::compile(test_model("corpus-a"), opts).unwrap();
+        let b = ServingModel::compile(test_model("corpus-b"), opts).unwrap();
+        let reg = Registry::new(
+            vec![("nytimes".into(), None, a, opts), ("pubmed".into(), None, b, opts)],
+            Some("pubmed"),
+        )
+        .unwrap();
+        assert_eq!(reg.names(), vec!["nytimes".to_string(), "pubmed".to_string()]);
+        assert_eq!(reg.default_slot().name, "pubmed");
+        assert_eq!(reg.get("nytimes").unwrap().current().model.corpus_name, "corpus-a");
+        assert!(reg.get("nosuch").is_none());
+
+        let opts = ScoreOptions { center: false, normalize: false };
+        let row = |n: &str| {
+            (n.to_string(), None, ServingModel::compile(test_model("m"), opts).unwrap(), opts)
+        };
+        assert!(Registry::new(vec![row("x"), row("x")], None).is_err(), "duplicate name");
+        assert!(Registry::new(vec![row("bad name")], None).is_err(), "space in name");
+        assert!(Registry::new(vec![], None).is_err(), "empty registry");
+        assert!(Registry::new(vec![row("x")], Some("y")).is_err(), "unknown default");
+    }
+
+    #[test]
+    fn swap_changes_new_snapshots_not_old_ones() {
+        let reg = test_registry();
+        let before = reg.default_slot().current();
+        let mut m2 = test_model("srv-test-v2");
+        m2.pcs[0].loadings = vec![(3, 1.5)];
+        let next =
+            ServingModel::compile(m2, ScoreOptions { center: false, normalize: false }).unwrap();
+        reg.swap("default", next).unwrap();
+        let after = reg.default_slot().current();
+        assert_eq!(before.model.corpus_name, "srv-test");
+        assert_eq!(after.model.corpus_name, "srv-test-v2");
+        assert_eq!(reg.default_slot().reloads.load(Ordering::Relaxed), 1);
+        // the pre-swap snapshot still scores on the old weights
+        let score0 =
+            |v: &Json| v.get("scores").unwrap().as_array().unwrap()[0].as_f64().unwrap();
+        let (_, v) = score_json(&before, br#"{"words": [[3, 1]]}"#);
+        assert!((score0(&v) - 0.6).abs() < 1e-12);
+        let (_, v) = score_json(&after, br#"{"words": [[3, 1]]}"#);
+        assert!((score0(&v) - 1.5).abs() < 1e-12);
+        let stray = ServingModel::compile(test_model("x"), ScoreOptions::default()).unwrap();
+        assert!(reg.swap("nosuch", stray).is_err());
+    }
+
+    #[test]
+    fn models_json_lists_identity_and_default_flag() {
+        let reg = test_registry();
+        let v = models_json(&reg);
+        let models = v.get("models").unwrap().as_array().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].get("name").unwrap().as_str(), Some("default"));
+        assert_eq!(models[0].get("default").unwrap().as_bool(), Some(true));
+        assert_eq!(models[0].get("pcs").unwrap().as_f64(), Some(2.0));
+        assert!(models[0].get("path").is_none());
+    }
+}

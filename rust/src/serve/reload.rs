@@ -1,0 +1,224 @@
+//! Hot model reload: a polling watcher that picks up rewritten LSPM
+//! artifacts and swaps them into the registry without dropping a single
+//! in-flight request.
+//!
+//! The watcher polls each path-backed registry slot (`[serve]
+//! reload_poll_ms`): when an artifact's `(len, mtime)` signature
+//! changes, it re-reads the file (through the transient-I/O retry
+//! policy and the fault-injection layer, tag [`FAULT_TAG`]) and
+//! revalidates it with [`Model::from_bytes`] — magic, version, and the
+//! xor-fold checksum, so a corrupt or truncated file can never be
+//! swapped in. Writers that use [`crate::util::atomic_write`] (which
+//! [`Model::save`] does) rename a fully-fsynced file into place, so the
+//! watcher always reads either the old artifact or the complete new one.
+//!
+//! Swap mechanics are [`Registry::swap`]'s: a momentary write lock
+//! replaces the slot's `Arc`; requests already holding the old `Arc`
+//! finish on the old model. If the rewritten bytes hash to the digest
+//! already being served, the swap is skipped (a no-op rewrite is not a
+//! "reload"). Any failure leaves the previous model serving and counts
+//! in `lsspca_reload_errors_total`; the next poll retries.
+
+use std::io::Read as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, SystemTime};
+
+use crate::model::Model;
+use crate::serve::metrics::Metrics;
+use crate::serve::registry::{Registry, ServingModel};
+use crate::util::{faultinject, retry};
+
+/// Fault-injection tag for artifact reads — test plans like
+/// `rinterrupt:model@4` target the watcher's re-read path.
+pub const FAULT_TAG: &str = "model";
+
+/// Last artifact state seen on disk for one slot (`None` until the
+/// first poll).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactSig {
+    len: u64,
+    mtime: Option<SystemTime>,
+}
+
+fn stat_sig(path: &Path) -> Option<ArtifactSig> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some(ArtifactSig { len: meta.len(), mtime: meta.modified().ok() })
+}
+
+/// Read an artifact through the retry policy and fault-injection layer.
+fn read_artifact(path: &Path) -> std::io::Result<Vec<u8>> {
+    retry::with_retry(&retry::policy(), || {
+        let file = std::fs::File::open(path)?;
+        let mut reader = faultinject::wrap_read(FAULT_TAG, file);
+        let mut buf = Vec::new();
+        reader.read_to_end(&mut buf)?;
+        Ok(buf)
+    })
+    .map_err(|e| e.error)
+}
+
+/// One watcher pass over every path-backed slot. `sigs` carries the
+/// per-slot signatures between polls (parallel to `registry.slots()`).
+/// Returns the number of models swapped (tests poll synchronously).
+pub fn poll_once(
+    registry: &Registry,
+    metrics: &Metrics,
+    sigs: &mut Vec<Option<ArtifactSig>>,
+) -> usize {
+    sigs.resize(registry.slots().len(), None);
+    let mut swapped = 0;
+    for (slot, seen) in registry.slots().iter().zip(sigs.iter_mut()) {
+        let Some(path) = &slot.path else { continue };
+        let Some(sig) = stat_sig(path) else { continue }; // mid-rename or gone: next poll
+        if *seen == Some(sig) {
+            continue;
+        }
+        let bytes = match read_artifact(path) {
+            Ok(b) => b,
+            Err(e) => {
+                metrics.reload_errors.fetch_add(1, Ordering::Relaxed);
+                crate::warn_!("reload {}: read {}: {e}", slot.name, path.display());
+                continue; // signature not stored → retried next poll
+            }
+        };
+        let digest = crate::util::xor_fold_checksum(&bytes);
+        if digest == slot.current().digest {
+            *seen = Some(sig); // touched but identical: no swap
+            continue;
+        }
+        let next = Model::from_bytes(&bytes)
+            .and_then(|m| ServingModel::compile(m, slot.score_opts));
+        match next {
+            Ok(sm) => {
+                let name = sm.model.corpus_name.clone();
+                if registry.swap(&slot.name, sm).is_ok() {
+                    metrics.reloads.fetch_add(1, Ordering::Relaxed);
+                    *seen = Some(sig);
+                    swapped += 1;
+                    crate::info!("reloaded model '{}' from {} ({name})", slot.name, path.display());
+                }
+            }
+            Err(e) => {
+                metrics.reload_errors.fetch_add(1, Ordering::Relaxed);
+                crate::warn_!("reload {}: invalid artifact: {e}", slot.name);
+                // signature not stored → retried next poll
+            }
+        }
+    }
+    swapped
+}
+
+/// Watcher thread body: poll until `shutdown`, sleeping in short steps
+/// so shutdown is honored promptly even with a long poll interval.
+pub fn watch_loop(
+    registry: &Registry,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+    poll: Duration,
+) {
+    let mut sigs: Vec<Option<ArtifactSig>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        poll_once(registry, metrics, &mut sigs);
+        let mut left = poll;
+        while !left.is_zero() && !shutdown.load(Ordering::SeqCst) {
+            let step = left.min(Duration::from_millis(25));
+            std::thread::sleep(step);
+            left -= step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::score::scorer::ScoreOptions;
+    use crate::serve::registry::tests::test_model;
+
+    fn path_registry(path: &Path) -> Registry {
+        let opts = ScoreOptions { center: false, normalize: false };
+        let sm = ServingModel::compile(test_model("v1"), opts).unwrap();
+        Registry::new(
+            vec![("default".into(), Some(path.to_path_buf()), sm, opts)],
+            None,
+        )
+        .unwrap()
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lsspca_reload_{}_{name}.lspm", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn rewrite_swaps_and_noop_rewrite_does_not() {
+        let p = tmp("swap");
+        test_model("v1").save(&p).unwrap();
+        let reg = path_registry(&p);
+        let metrics = Metrics::default();
+        let mut sigs = Vec::new();
+        // first poll: file matches the served digest → signature learned, no swap
+        assert_eq!(poll_once(&reg, &metrics, &mut sigs), 0);
+        assert_eq!(metrics.reloads.load(Ordering::Relaxed), 0);
+        // rewrite with different content → swap
+        let mut m2 = test_model("v2");
+        m2.pcs[0].loadings = vec![(3, 9.0)];
+        m2.save(&p).unwrap();
+        assert_eq!(poll_once(&reg, &metrics, &mut sigs), 1);
+        assert_eq!(reg.default_slot().current().model.corpus_name, "v2");
+        assert_eq!(metrics.reloads.load(Ordering::Relaxed), 1);
+        // rewrite the same bytes → signature moves, no second swap
+        m2.save(&p).unwrap();
+        assert_eq!(poll_once(&reg, &metrics, &mut sigs), 0);
+        assert_eq!(metrics.reloads.load(Ordering::Relaxed), 1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_artifact_keeps_old_model_and_counts_error() {
+        let p = tmp("corrupt");
+        test_model("v1").save(&p).unwrap();
+        let reg = path_registry(&p);
+        let metrics = Metrics::default();
+        let mut sigs = Vec::new();
+        poll_once(&reg, &metrics, &mut sigs);
+        // corrupt the artifact in place (checksum now invalid)
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(poll_once(&reg, &metrics, &mut sigs), 0);
+        assert_eq!(reg.default_slot().current().model.corpus_name, "v1", "old model serves on");
+        assert_eq!(metrics.reload_errors.load(Ordering::Relaxed), 1);
+        // fixing the file recovers on the next poll
+        let mut m2 = test_model("v2");
+        m2.num_docs = 11;
+        m2.save(&p).unwrap();
+        assert_eq!(poll_once(&reg, &metrics, &mut sigs), 1);
+        assert_eq!(reg.default_slot().current().model.corpus_name, "v2");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn transient_read_fault_is_retried_within_one_poll() {
+        let _guard = faultinject::test_guard();
+        let p = tmp("fault");
+        test_model("v1").save(&p).unwrap();
+        let reg = path_registry(&p);
+        let metrics = Metrics::default();
+        let mut sigs = Vec::new();
+        poll_once(&reg, &metrics, &mut sigs);
+        let mut m2 = test_model("v2");
+        m2.seed = 99;
+        m2.save(&p).unwrap();
+        // one injected Interrupted on the first artifact read: the retry
+        // policy absorbs it inside the same poll
+        let plan = faultinject::FaultPlan::parse(&format!("rinterrupt:{FAULT_TAG}@4")).unwrap();
+        let swapped = faultinject::scoped(plan, || poll_once(&reg, &metrics, &mut sigs));
+        assert_eq!(swapped, 1, "transient fault must not block the reload");
+        assert_eq!(reg.default_slot().current().model.corpus_name, "v2");
+        assert_eq!(metrics.reload_errors.load(Ordering::Relaxed), 0);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -752,6 +752,26 @@ impl Session {
         self.observer = observer;
     }
 
+    /// Train-to-serve bridge: [`Session::fit`] with the session's
+    /// configured λ spec and PC count, then hand the trained model to a
+    /// [`crate::serve::ServerBuilder`] seeded from the same config
+    /// (`[serve]` knobs, including any `models = ["name=path"]` rows).
+    /// The fitted model is registered as `"session"` and made the
+    /// default. Chain further builder calls, then `.build()?.run()`.
+    pub fn serve(&mut self) -> Result<crate::serve::ServerBuilder, LsspcaError> {
+        let lambda = LambdaSpec::from_config(&self.cfg);
+        let num_pcs = self.cfg.num_pcs;
+        let fit = self.fit(lambda, num_pcs)?;
+        let score_opts = crate::score::scorer::ScoreOptions {
+            center: self.cfg.score_center,
+            normalize: self.cfg.score_normalize,
+        };
+        Ok(crate::serve::ServerBuilder::from_config(&self.cfg)?
+            .score_options(score_opts)
+            .register_model("session", fit.model)
+            .default_model("session"))
+    }
+
     /// The accumulated per-stage timing profile (same renderer as
     /// `PipelineReport::profile`).
     pub fn profile(&self) -> String {
@@ -1615,6 +1635,15 @@ mod tests {
             assert!(c.pc.cardinality() >= 1);
         }
         fit.model.validate().unwrap();
+    }
+
+    #[test]
+    fn serve_bridges_a_fit_into_a_bound_server() {
+        let mut s = tiny_builder().num_pcs(2).build().unwrap();
+        let srv = s.serve().unwrap().addr("127.0.0.1:0").build().unwrap();
+        assert_ne!(srv.local_addr().port(), 0);
+        // the fit that fed the server is cached on the session
+        assert!(s.stats().is_some());
     }
 
     #[test]

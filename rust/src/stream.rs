@@ -56,6 +56,16 @@ pub enum TrySendError<T> {
     Closed(T),
 }
 
+/// Why a [`BoundedReceiver::try_recv`] / [`BoundedReceiver::recv_timeout`]
+/// returned no item.
+#[derive(Debug, PartialEq, Eq)]
+pub enum TryRecvError {
+    /// Queue empty right now (or the timeout elapsed).
+    Empty,
+    /// Channel closed and fully drained — no item will ever arrive.
+    Closed,
+}
+
 /// Receiving half of a bounded channel (cloneable: multiple workers).
 pub struct BoundedReceiver<T> {
     inner: Arc<ChannelInner<T>>,
@@ -151,6 +161,44 @@ impl<T> BoundedReceiver<T> {
                 return None;
             }
             st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking receive. The serving event loop drains its accept
+    /// queue with this between connection ticks, so a worker with live
+    /// connections never parks on the channel.
+    pub fn try_recv(&self) -> Result<T, TryRecvError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        match st.buf.pop_front() {
+            Some(item) => {
+                self.inner.not_full.notify_one();
+                Ok(item)
+            }
+            None if st.closed => Err(TryRecvError::Closed),
+            None => Err(TryRecvError::Empty),
+        }
+    }
+
+    /// Blocking receive with a deadline: waits at most `timeout` for an
+    /// item. [`TryRecvError::Empty`] means the timeout elapsed; the
+    /// channel may still produce items later.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Result<T, TryRecvError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.buf.pop_front() {
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(TryRecvError::Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(TryRecvError::Empty);
+            }
+            let (guard, _) = self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
         }
     }
 }
@@ -573,6 +621,29 @@ mod tests {
             Err(TrySendError::Closed(4)) => {}
             other => panic!("want Closed(4), got {other:?}"),
         }
+    }
+
+    #[test]
+    fn try_recv_reports_empty_and_closed() {
+        let (tx, rx) = bounded::<u32>(2);
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        tx.send(7).unwrap();
+        assert_eq!(rx.try_recv(), Ok(7));
+        tx.close();
+        assert_eq!(rx.try_recv(), Err(TryRecvError::Closed));
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        use std::time::Duration;
+        let (tx, rx) = bounded::<u32>(1);
+        let t0 = std::time::Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(20)), Err(TryRecvError::Empty));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        tx.send(9).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(100)), Ok(9));
+        drop(tx); // sender drop closes
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), Err(TryRecvError::Closed));
     }
 
     #[test]

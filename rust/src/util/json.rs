@@ -1,5 +1,5 @@
 //! Minimal JSON parser/serializer (offline substitute for `serde_json`,
-//! see DESIGN.md §3), shared by the scoring server (`score::server`) and
+//! see DESIGN.md §3), shared by the serving layer (`crate::serve`) and
 //! the bench-regression gate (`lsspca bench --compare`).
 //!
 //! Covers the full JSON grammar the repo produces and consumes: objects

@@ -12,6 +12,7 @@ use lsspca::config::PipelineConfig;
 use lsspca::coordinator::Pipeline;
 use lsspca::corpus::{CorpusSpec, SynthCorpus};
 use lsspca::model::Model;
+#[allow(deprecated)]
 use lsspca::score::{score_stream, BatchOptions, ScoreOptions, Scorer, ServeOptions, Server};
 use lsspca::stream::SynthSource;
 use lsspca::util::json::Json;
@@ -177,7 +178,7 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
     write!(
         s,
         "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\n\r\n{body}",
+         Connection: close\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .unwrap();
@@ -193,6 +194,7 @@ fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
 }
 
 #[test]
+#[allow(deprecated)] // the legacy ServeOptions/Server::bind compat path, on purpose
 fn server_answers_concurrent_score_requests_correctly() {
     let report = Pipeline::new(tiny_config()).run().unwrap();
     let model = report.model.clone();

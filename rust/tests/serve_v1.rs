@@ -1,0 +1,551 @@
+//! Integration: the `/v1` serving layer over real sockets — keep-alive
+//! and pipelining on one connection, multi-model registry routing, hot
+//! reload under concurrent load (zero 5xx during the swap), overload
+//! shedding, legacy/v1 bitwise body parity, malformed-request handling,
+//! and fault injection against the reload watcher.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lsspca::prelude::*;
+use lsspca::util::faultinject::{self, FaultPlan};
+use lsspca::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Helpers: tiny models + a keep-alive-aware HTTP/1.1 client
+// ---------------------------------------------------------------------------
+
+/// A 3-term, 2-PC model whose PC1 score of `{"words": [[3, 1]]}` is
+/// exactly `w` — lets each test pin which model answered.
+fn model_with_weight(name: &str, w: f64) -> Model {
+    Model {
+        corpus_name: name.into(),
+        num_docs: 10,
+        n_features: 100,
+        vocab_hash: 0,
+        seed: 1,
+        elim_lambda: 0.2,
+        kept: vec![3, 8, 15],
+        kept_means: vec![0.0, 0.0, 0.0],
+        kept_stds: vec![1.0, 1.0, 1.0],
+        kept_words: vec!["alpha".into(), "beta".into(), "gamma".into()],
+        pcs: vec![
+            ModelPc {
+                lambda: 0.5,
+                phi: 1.0,
+                explained_variance: 1.0,
+                loadings: vec![(3, w), (8, 0.8)],
+            },
+            ModelPc {
+                lambda: 0.5,
+                phi: 0.7,
+                explained_variance: 0.7,
+                loadings: vec![(15, 1.0)],
+            },
+        ],
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_srv1_{}_{name}", std::process::id()));
+    p
+}
+
+struct Resp {
+    status: u16,
+    head: String,
+    body: Vec<u8>,
+}
+
+impl Resp {
+    fn json(&self) -> Json {
+        Json::parse(std::str::from_utf8(&self.body).unwrap_or("")).unwrap_or(Json::Null)
+    }
+
+    fn header(&self, name: &str) -> Option<String> {
+        let want = name.to_ascii_lowercase();
+        self.head.lines().find_map(|l| {
+            let (n, v) = l.split_once(':')?;
+            (n.to_ascii_lowercase() == want).then(|| v.trim().to_string())
+        })
+    }
+
+    fn score0(&self) -> f64 {
+        self.json().get("scores").expect("scores").as_array().expect("array")[0]
+            .as_f64()
+            .expect("f64")
+    }
+}
+
+/// Read exactly one response off a (possibly keep-alive) stream: head to
+/// the blank line, then `Content-Length` body bytes.
+fn read_resp(s: &mut TcpStream) -> Resp {
+    let mut head = Vec::new();
+    let mut b = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        match s.read(&mut b) {
+            Ok(0) => panic!("eof mid-head: {:?}", String::from_utf8_lossy(&head)),
+            Ok(_) => head.push(b[0]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => panic!("reading head: {e}"),
+        }
+        assert!(head.len() < 64 * 1024, "unterminated response head");
+    }
+    let head = String::from_utf8(head).unwrap();
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (n, v) = l.split_once(':')?;
+            n.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+        })
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    let status = head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap();
+    Resp { status, head, body }
+}
+
+/// Write one request on an existing keep-alive stream.
+fn send(s: &mut TcpStream, method: &str, path: &str, body: &str) {
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+}
+
+/// One-shot request on a fresh connection (`Connection: close`).
+fn req(addr: SocketAddr, method: &str, path: &str, body: &str) -> Resp {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    read_resp(&mut s)
+}
+
+/// Raw bytes on a fresh connection; returns the single response.
+fn raw(addr: SocketAddr, bytes: &[u8]) -> Resp {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(bytes).unwrap();
+    read_resp(&mut s)
+}
+
+fn start(server: Server) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle, join)
+}
+
+// ---------------------------------------------------------------------------
+// Keep-alive + pipelining
+// ---------------------------------------------------------------------------
+
+#[test]
+fn keep_alive_connection_pipelines_requests() {
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(2)
+        .model(model_with_weight("pipeline", 0.6))
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    // Three requests written back-to-back before any read: the server
+    // must answer all three, in order, on the one connection.
+    let body = r#"{"words": [[3, 1]]}"#;
+    let mut batch = Vec::new();
+    for _ in 0..2 {
+        batch.extend_from_slice(
+            format!(
+                "POST /v1/models/default/score HTTP/1.1\r\nHost: t\r\n\
+                 Content-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        );
+    }
+    batch.extend_from_slice(b"GET /v1/healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&batch).unwrap();
+    for i in 0..2 {
+        let r = read_resp(&mut s);
+        assert_eq!(r.status, 200, "pipelined request {i}: {}", r.head);
+        assert_eq!(r.header("Connection").as_deref(), Some("keep-alive"), "{}", r.head);
+        assert!((r.score0() - 0.6).abs() < 1e-12);
+    }
+    let r = read_resp(&mut s);
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("ok").and_then(Json::as_bool), Some(true));
+
+    // The connection is still usable for a fourth, separate request.
+    send(&mut s, "GET", "/v1/models", "");
+    let r = read_resp(&mut s);
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("models").unwrap().as_array().unwrap().len(), 1);
+
+    handle.shutdown();
+    srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-model registry routing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_routes_requests_by_model_name() {
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(1)
+        .register_model("nytimes", model_with_weight("corpus-a", 0.25))
+        .register_model("pubmed", model_with_weight("corpus-b", 4.0))
+        .default_model("pubmed")
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    let r = req(addr, "GET", "/v1/models", "");
+    assert_eq!(r.status, 200);
+    let models = r.json().get("models").unwrap().as_array().unwrap().to_vec();
+    assert_eq!(models.len(), 2);
+    assert_eq!(models[0].get("name").unwrap().as_str(), Some("nytimes"));
+    assert_eq!(models[0].get("default").unwrap().as_bool(), Some(false));
+    assert_eq!(models[1].get("name").unwrap().as_str(), Some("pubmed"));
+    assert_eq!(models[1].get("default").unwrap().as_bool(), Some(true));
+
+    let body = r#"{"words": [[3, 1]]}"#;
+    let r = req(addr, "POST", "/v1/models/nytimes/score", body);
+    assert!((r.score0() - 0.25).abs() < 1e-12, "nytimes slot answered");
+    let r = req(addr, "POST", "/v1/models/pubmed/score", body);
+    assert!((r.score0() - 4.0).abs() < 1e-12, "pubmed slot answered");
+    // the legacy shim hits the *default* model, not the first-registered
+    let r = req(addr, "POST", "/score", body);
+    assert!((r.score0() - 4.0).abs() < 1e-12, "legacy /score routes to default");
+    // per-name topics come from the right artifact
+    let r = req(addr, "GET", "/v1/models/nytimes/topics", "");
+    assert_eq!(r.status, 200);
+
+    // unknown model: structured 404 naming what is registered
+    let r = req(addr, "POST", "/v1/models/nope/score", body);
+    assert_eq!(r.status, 404);
+    let names: Vec<String> = r
+        .json()
+        .get("models")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(names, vec!["nytimes".to_string(), "pubmed".to_string()]);
+
+    handle.shutdown();
+    srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Hot reload under sustained concurrent load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_reload_swaps_under_load_without_dropping_requests() {
+    let _g = faultinject::test_guard(); // the watcher reads tag "model"
+    let path = tmp("reload.lspm");
+    model_with_weight("reload-v1", 0.5).save(&path).unwrap();
+
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(2)
+        .reload_poll_ms(10)
+        .register("default", &path)
+        .default_model("default")
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors_5xx = Arc::new(AtomicU64::new(0));
+    let saw_v2 = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for _ in 0..3 {
+        let (stop, errors_5xx, saw_v2) = (stop.clone(), errors_5xx.clone(), saw_v2.clone());
+        clients.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let body = r#"{"words": [[3, 1]]}"#;
+            while !stop.load(Ordering::Relaxed) {
+                send(&mut s, "POST", "/v1/models/default/score", body);
+                let r = read_resp(&mut s);
+                if r.status >= 500 {
+                    errors_5xx.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                assert_eq!(r.status, 200, "{}", r.head);
+                let score = r.score0();
+                if (score - 2.5).abs() < 1e-12 {
+                    saw_v2.store(true, Ordering::Relaxed);
+                } else {
+                    // before the swap every answer is v1's; never garbage
+                    assert!((score - 0.5).abs() < 1e-12, "unexpected score {score}");
+                }
+            }
+        }));
+    }
+
+    // Let the hammering get going, then rewrite the artifact under it.
+    // The v2 model has a different corpus name (and byte length), so the
+    // watcher's (len, mtime) signature is guaranteed to change.
+    std::thread::sleep(Duration::from_millis(50));
+    model_with_weight("reload-v2-renamed", 2.5).save(&path).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !saw_v2.load(Ordering::Relaxed) && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert!(saw_v2.load(Ordering::Relaxed), "hot reload was never observed");
+    assert_eq!(errors_5xx.load(Ordering::Relaxed), 0, "5xx during hot reload");
+
+    // /metrics records exactly one swap (the rewrite), zero errors.
+    let r = req(addr, "GET", "/v1/metrics", "");
+    let text = String::from_utf8(r.body).unwrap();
+    assert!(text.contains("lsspca_reloads_total 1"), "{text}");
+    assert!(text.contains("lsspca_reload_errors_total 0"), "{text}");
+    assert!(text.contains("lsspca_model_reloads_total{model=\"default\"} 1"), "{text}");
+
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Overload shedding
+// ---------------------------------------------------------------------------
+
+#[test]
+fn overload_sheds_503_with_retry_after() {
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(1)
+        .max_conns(1)
+        .model(model_with_weight("shed", 1.0))
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    // Occupy the single connection slot with a live keep-alive client.
+    let mut first = TcpStream::connect(addr).unwrap();
+    send(&mut first, "GET", "/v1/healthz", "");
+    assert_eq!(read_resp(&mut first).status, 200);
+
+    // The next connection must be shed at accept time: 503 + Retry-After.
+    let mut second = TcpStream::connect(addr).unwrap();
+    let r = read_resp(&mut second);
+    assert_eq!(r.status, 503, "{}", r.head);
+    assert_eq!(r.header("Retry-After").as_deref(), Some("1"), "{}", r.head);
+    assert!(r.json().get("error").is_some());
+    drop(second);
+    drop(first);
+
+    // Capacity returns once the held connection closes (the worker has
+    // to notice the EOF, so retry until then).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut recovered = false;
+    while Instant::now() < deadline {
+        if req(addr, "GET", "/v1/healthz", "").status == 200 {
+            recovered = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(recovered, "server never recovered after shed");
+
+    let r = req(addr, "GET", "/v1/metrics", "");
+    let sheds: u64 = String::from_utf8(r.body)
+        .unwrap()
+        .lines()
+        .find_map(|l| l.strip_prefix("lsspca_sheds_total ").map(|v| v.parse().unwrap()))
+        .unwrap();
+    assert!(sheds >= 1, "shed not counted");
+
+    handle.shutdown();
+    srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Legacy shims vs /v1: bitwise parity over the wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn legacy_shims_match_v1_bodies_bitwise_over_the_wire() {
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(1)
+        .model(model_with_weight("parity", 0.6))
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    let doc = r#"{"words": [[3, 2], [15, 1]], "top": 2}"#;
+    for (legacy, v1, method, body) in [
+        ("/healthz", "/v1/healthz", "GET", ""),
+        ("/topics", "/v1/models/default/topics", "GET", ""),
+        ("/score", "/v1/models/default/score", "POST", doc),
+    ] {
+        let l = req(addr, method, legacy, body);
+        let v = req(addr, method, v1, body);
+        assert_eq!(l.status, 200, "{legacy}");
+        assert_eq!(v.status, 200, "{v1}");
+        assert_eq!(l.body, v.body, "{legacy} vs {v1}: bodies must be byte-identical");
+        assert_eq!(l.header("Deprecation").as_deref(), Some("true"), "{legacy}");
+        assert!(l.header("Link").unwrap().contains(v1), "{legacy} Link points at {v1}");
+        assert_eq!(v.header("Deprecation"), None, "{v1} is not deprecated");
+    }
+
+    handle.shutdown();
+    srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Malformed / oversized requests
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_and_oversized_requests_get_structured_errors() {
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(1)
+        .max_body_bytes(256)
+        .model(model_with_weight("fuzz", 1.0))
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    // Parse failures: 400/501/413, each with a JSON error body, and the
+    // connection closes afterwards (framing is unknown past a bad head).
+    for (bytes, want) in [
+        (b"nonsense\r\n\r\n".to_vec(), 400),
+        (b"GET /v1/models HTTP/1.1\r\nno-colon-here\r\n\r\n".to_vec(), 400),
+        (b"POST /score HTTP/1.1\r\nContent-Length: nope\r\n\r\n".to_vec(), 400),
+        (b"POST /score HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec(), 501),
+        (b"POST /score HTTP/1.1\r\nContent-Length: 99999\r\n\r\n".to_vec(), 413),
+    ] {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&bytes).unwrap();
+        let r = read_resp(&mut s);
+        assert_eq!(r.status, want, "{:?} -> {}", String::from_utf8_lossy(&bytes), r.head);
+        assert!(r.json().get("error").is_some(), "{}", r.head);
+        assert_eq!(r.header("Connection").as_deref(), Some("close"));
+        let mut rest = Vec::new();
+        s.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server must close after a parse error");
+    }
+
+    // A head that never terminates is cut off at the 16 KiB budget: 431.
+    let mut huge = b"GET /v1/models HTTP/1.1\r\nX-Filler: ".to_vec();
+    huge.extend(vec![b'a'; 20 * 1024]);
+    let r = raw(addr, &huge);
+    assert_eq!(r.status, 431, "{}", r.head);
+
+    // The old missing-Allow bug: every 405 names the allowed method.
+    let r = req(addr, "GET", "/score", "");
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("Allow").as_deref(), Some("POST"), "{}", r.head);
+    let r = req(addr, "POST", "/topics", "");
+    assert_eq!(r.status, 405);
+    assert_eq!(r.header("Allow").as_deref(), Some("GET"));
+
+    // Unknown /v1 path: structured 404 listing the route table.
+    let r = req(addr, "GET", "/v1/frobnicate", "");
+    assert_eq!(r.status, 404);
+    let routes = r.json().get("routes").unwrap().as_array().unwrap().len();
+    assert_eq!(routes, 5, "404 lists the full v1 route table");
+
+    // Valid framing with invalid JSON is a 400 that keeps the connection.
+    let r = req(addr, "POST", "/v1/models/default/score", "this is not json");
+    assert_eq!(r.status, 400);
+    assert!(r.json().get("error").is_some());
+
+    handle.shutdown();
+    srv.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Reload watcher under fault injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reload_watcher_survives_injected_and_real_artifact_faults() {
+    let _g = faultinject::test_guard();
+    let path = tmp("faulty.lspm");
+    model_with_weight("fault-v1", 0.5).save(&path).unwrap();
+
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(1)
+        .reload_poll_ms(10)
+        .register("default", &path)
+        .default_model("default")
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+    let body = r#"{"words": [[3, 1]]}"#;
+    let score_now = || req(addr, "POST", "/v1/models/default/score", body).score0();
+    let wait_for_score = |want: f64| {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if (score_now() - want).abs() < 1e-12 {
+                return;
+            }
+            assert!(Instant::now() < deadline, "never started serving score {want}");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    };
+
+    // 1. A transient injected read interrupt: the watcher's retrying
+    //    reader absorbs it and the swap still lands.
+    faultinject::scoped(FaultPlan::parse("rinterrupt:model@4").unwrap(), || {
+        model_with_weight("fault-v2-renamed", 2.5).save(&path).unwrap();
+        wait_for_score(2.5);
+    });
+
+    // 2. A truncated (checksum-invalid) artifact: the reload fails, the
+    //    error is counted, and the previous model keeps serving.
+    let good = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = req(addr, "GET", "/v1/metrics", "");
+        let errs: u64 = String::from_utf8(r.body)
+            .unwrap()
+            .lines()
+            .find_map(|l| l.strip_prefix("lsspca_reload_errors_total ").map(|v| v.parse().unwrap()))
+            .unwrap();
+        if errs >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "reload error never counted");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!((score_now() - 2.5).abs() < 1e-12, "previous model must keep serving");
+
+    // 3. A good artifact heals it: the next poll swaps.
+    model_with_weight("fault-v3-renamed-again", 7.25).save(&path).unwrap();
+    wait_for_score(7.25);
+
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_file(&path).ok();
+}
