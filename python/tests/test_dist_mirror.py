@@ -1,0 +1,533 @@
+"""Mirror of the distributed corpus-pass on-disk formats and shard plan.
+
+``rust/src/jobstate.rs`` persists the coordinator's job state as a
+``.lsjs`` dist manifest (magic ``LSJM``): identity header, the corpus
+source a worker needs to reopen the *identical* stream, the kept-feature
+list and the shard table, with a trailing xor-fold checksum.
+``rust/src/dist/shardio.rs`` stores each shard's per-chunk accumulator
+blocks as an ``.lsds`` file (magic ``LSDS``): a 64-byte identity header
+followed by length-framed, checksummed blocks; a killed worker resumes
+from the longest valid block prefix. ``rust/src/dist/plan.rs`` cuts the
+corpus into chunk-aligned shards as a pure function of
+``(num_docs, chunk_docs, shard_docs)``.
+
+All three are cross-language contracts — an operator tool must be able
+to audit a manifest or shard spill written by the Rust pipeline — so
+this mirror reimplements them from the format docs alone and checks:
+
+- the LSJM byte image against the pinned example shared with
+  ``jobstate::tests::manifest_bytes_are_stable``, plus every rejection
+  the Rust loader enforces (bad magic, wrong version, flipped byte,
+  truncation);
+- the LSDS header/block framing, roundtrip, and the longest-valid-prefix
+  scan semantics (torn tail dropped, corrupt block stops the prefix,
+  non-contiguous chunk index stops the prefix);
+- the shard partitioner invariants (exact cover, chunk alignment,
+  worker-count independence) over a seeded random sweep;
+- the determinism keystone: folding per-chunk Welford accumulators in
+  global chunk order is invariant to which shard computed them, while
+  the hierarchical merge-shard-masters order is *not* bitwise equal —
+  which is exactly why the coordinator merges per-chunk blocks.
+"""
+
+import struct
+
+import pytest
+
+MASK = (1 << 64) - 1
+
+
+def rotl64(x, k):
+    k %= 64
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def xor_fold_checksum(buf):
+    """util::xor_fold_checksum — 8-byte LE lanes, zero-padded tail,
+    lane ``i`` rotated left by ``i % 63`` before folding."""
+    acc = 0x9E3779B97F4A7C15
+    for i in range(0, len(buf), 8):
+        lane = buf[i : i + 8].ljust(8, b"\x00")
+        acc ^= rotl64(struct.unpack("<Q", lane)[0], (i // 8) % 63)
+    return acc
+
+
+def put_str(out, s):
+    b = s.encode()
+    out += struct.pack("<Q", len(b))
+    out += b
+
+
+# ---------------------------------------------------------------------------
+# LSJM dist manifests (jobstate::save_dist / load_dist)
+# ---------------------------------------------------------------------------
+
+LSJM_MAGIC = b"LSJM"
+LSJM_VERSION = 1
+KIND_VARIANCE = 1
+KIND_REDUCE = 2
+
+# ShardStatus::to_u8
+PENDING, DONE, FAILED = 0, 1, 2
+
+
+def lsjm_bytes(m):
+    """jobstate::save_dist's byte image. ``m["source"]`` is either
+    ``("synth", preset, docs, vocab, seed)`` or ``("file", path)``."""
+    out = bytearray()
+    out += LSJM_MAGIC
+    out += struct.pack("<I", LSJM_VERSION)
+    for v in (
+        m["key"],
+        m["kind"],
+        m["chunk_docs"],
+        m["shard_docs"],
+        m["num_docs"],
+        m["n"],
+        m["max_bad_records"],
+    ):
+        out += struct.pack("<Q", v)
+    src = m["source"]
+    if src[0] == "synth":
+        out.append(0)
+        put_str(out, src[1])
+        for v in src[2:]:
+            out += struct.pack("<Q", v)
+    else:
+        out.append(1)
+        put_str(out, src[1])
+    put_str(out, m["dead_letter"])
+    out += struct.pack("<Q", len(m["kept"]))
+    for f in m["kept"]:
+        out += struct.pack("<I", f)
+    out += struct.pack("<Q", len(m["shards"]))
+    for status, attempts in m["shards"]:
+        out.append(status)
+        out += struct.pack("<I", attempts)
+    out += struct.pack("<Q", xor_fold_checksum(bytes(out[8:])))
+    return bytes(out)
+
+
+def lsjm_load(buf):
+    """jobstate::load_dist's validation, with the same error vocabulary."""
+    if len(buf) < 16 or buf[:4] != LSJM_MAGIC:
+        raise ValueError("bad magic or truncated header")
+    (version,) = struct.unpack("<I", buf[4:8])
+    if version != LSJM_VERSION:
+        raise ValueError(f"version {version}, want {LSJM_VERSION}")
+    payload = buf[8:-8]
+    (stored,) = struct.unpack("<Q", buf[-8:])
+    if xor_fold_checksum(payload) != stored:
+        raise ValueError("checksum mismatch (corrupt file)")
+    pos = 0
+
+    def take(k):
+        nonlocal pos
+        if len(payload) - pos < k:
+            raise ValueError("truncated payload")
+        s = payload[pos : pos + k]
+        pos += k
+        return s
+
+    def u64():
+        return struct.unpack("<Q", take(8))[0]
+
+    def u32():
+        return struct.unpack("<I", take(4))[0]
+
+    def string():
+        return take(u64()).decode()
+
+    m = {}
+    for name in ("key", "kind", "chunk_docs", "shard_docs", "num_docs", "n", "max_bad_records"):
+        m[name] = u64()
+    tag = take(1)[0]
+    if tag == 0:
+        m["source"] = ("synth", string(), u64(), u64(), u64())
+    elif tag == 1:
+        m["source"] = ("file", string())
+    else:
+        raise ValueError(f"unknown corpus source tag {tag}")
+    m["dead_letter"] = string()
+    m["kept"] = [u32() for _ in range(u64())]
+    shards = []
+    for _ in range(u64()):
+        status = take(1)[0]
+        if status not in (PENDING, DONE, FAILED):
+            raise ValueError(f"unknown shard status {status}")
+        shards.append((status, u32()))
+    m["shards"] = shards
+    if pos != len(payload):
+        raise ValueError("trailing bytes after shard table")
+    return m
+
+
+# The identical example is pinned in Rust by
+# jobstate::tests::manifest_bytes_are_stable — byte image and trailing
+# checksum must agree across both languages.
+EXAMPLE = dict(
+    key=0x1122334455667788,
+    kind=KIND_REDUCE,
+    chunk_docs=64,
+    shard_docs=128,
+    num_docs=200,
+    n=1500,
+    source=("synth", "nytimes", 200, 1500, 7),
+    max_bad_records=2,
+    dead_letter="dlq.jsonl",
+    kept=[2, 5],
+    shards=[(DONE, 1), (PENDING, 0)],
+)
+EXAMPLE_CHECKSUM = 0x069566457F40FCA7
+EXAMPLE_HEX = (
+    "4c534a4d0100000088776655443322110200000000000000400000000000000080000000000000"
+    "00c800000000000000dc0500000000000002000000000000000007000000000000006e7974696d"
+    "6573c800000000000000dc0500000000000007000000000000000900000000000000646c712e6a"
+    "736f6e6c02000000000000000200000005000000020000000000000001010000000000000000a7"
+    "fc407f45669506"
+)
+
+
+def test_lsjm_pinned_example_matches_rust():
+    b = lsjm_bytes(EXAMPLE)
+    assert b.hex() == EXAMPLE_HEX
+    assert struct.unpack("<Q", b[-8:])[0] == EXAMPLE_CHECKSUM
+
+
+def test_lsjm_roundtrip_both_sources():
+    assert lsjm_load(lsjm_bytes(EXAMPLE)) == EXAMPLE
+    mf = dict(EXAMPLE)
+    mf["source"] = ("file", "data/docword.nytimes.txt")
+    mf["kind"] = KIND_VARIANCE
+    mf["kept"] = []
+    mf["shards"] = [(FAILED, 2), (DONE, 1), (PENDING, 0)]
+    assert lsjm_load(lsjm_bytes(mf)) == mf
+
+
+def test_lsjm_rejections_match_rust_loader():
+    clean = lsjm_bytes(EXAMPLE)
+    with pytest.raises(ValueError, match="bad magic or truncated header"):
+        lsjm_load(b"X" + clean[1:])
+    with pytest.raises(ValueError, match="bad magic or truncated header"):
+        lsjm_load(clean[:10])
+    bumped = bytearray(clean)
+    bumped[4] = 9
+    with pytest.raises(ValueError, match="version 9, want 1"):
+        lsjm_load(bytes(bumped))
+    flipped = bytearray(clean)
+    flipped[20] ^= 0x40
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        lsjm_load(bytes(flipped))
+    with pytest.raises(ValueError):
+        lsjm_load(clean[: len(clean) // 3])
+
+
+def test_lsjm_checksum_covers_every_byte():
+    clean = lsjm_bytes(EXAMPLE)
+    # every single-bit flip in the checksummed region must be caught
+    for i in range(8, len(clean) - 8):
+        mutated = bytearray(clean)
+        mutated[i] ^= 0x01
+        with pytest.raises(ValueError):
+            lsjm_load(bytes(mutated))
+
+
+# ---------------------------------------------------------------------------
+# LSDS shard result files (dist::shardio)
+# ---------------------------------------------------------------------------
+
+LSDS_MAGIC = b"LSDS"
+LSDS_VERSION = 1
+HEADER_LEN = 4 + 4 + 6 * 8 + 8
+
+
+def lsds_header(h):
+    out = bytearray()
+    out += LSDS_MAGIC
+    out += struct.pack("<I", LSDS_VERSION)
+    for name in ("key", "kind", "shard_index", "chunk_docs", "chunk_start", "n"):
+        out += struct.pack("<Q", h[name])
+    out += struct.pack("<Q", xor_fold_checksum(bytes(out[8:])))
+    return bytes(out)
+
+
+def lsds_block(block):
+    """One length-framed block: u64 payload_len | payload | u64 checksum.
+    Payload starts ``chunk_index, docs, nnz`` then the kind-specific body."""
+    p = bytearray()
+    for name in ("chunk_index", "docs", "nnz"):
+        p += struct.pack("<Q", block[name])
+    if "feats" in block:  # variance: (feature, n_obs, mean, m2) ascending
+        p += struct.pack("<Q", len(block["feats"]))
+        for f, n_obs, mean, m2 in block["feats"]:
+            p += struct.pack("<IQdd", f, n_obs, mean, m2)
+    else:  # reduce: row-major reduced CSR slab
+        doc_ids, doc_ptr, idx, val = (
+            block["doc_ids"],
+            block["doc_ptr"],
+            block["idx"],
+            block["val"],
+        )
+        p += struct.pack("<QQ", len(doc_ids), len(idx))
+        for d in doc_ids:
+            p += struct.pack("<Q", d)
+        for e in doc_ptr[1:]:
+            p += struct.pack("<Q", e)
+        for i in idx:
+            p += struct.pack("<I", i)
+        for x in val:
+            p += struct.pack("<d", x)
+    return struct.pack("<Q", len(p)) + bytes(p) + struct.pack("<Q", xor_fold_checksum(bytes(p)))
+
+
+def lsds_scan(buf, expect):
+    """shardio::scan — longest valid prefix whose chunk indices are
+    contiguous from ``expect["chunk_start"]``. Returns (header_ok,
+    chunk_indices, valid_len)."""
+    if len(buf) < HEADER_LEN or buf[:HEADER_LEN] != lsds_header(expect):
+        return (False, [], 0)
+    chunks = []
+    pos = HEADER_LEN
+    nxt = expect["chunk_start"]
+    valid = HEADER_LEN
+    while pos + 8 <= len(buf):
+        (ln,) = struct.unpack("<Q", buf[pos : pos + 8])
+        end = pos + 8 + ln + 8
+        if end > len(buf):
+            break
+        payload = buf[pos + 8 : pos + 8 + ln]
+        (ck,) = struct.unpack("<Q", buf[end - 8 : end])
+        if ck != xor_fold_checksum(payload) or ln < 24:
+            break
+        (ci, docs, _nnz) = struct.unpack("<QQQ", payload[:24])
+        if ci != nxt or docs == 0:
+            break
+        nxt += 1
+        chunks.append(ci)
+        valid = end
+        pos = end
+    return (True, chunks, valid)
+
+
+HDR = dict(key=0xABCD, kind=KIND_VARIANCE, shard_index=2, chunk_docs=64, chunk_start=6, n=1500)
+
+
+def var_block(ci):
+    return dict(
+        chunk_index=ci,
+        docs=64,
+        nnz=100 + ci,
+        feats=[(3, 5, 1.5, 0.25), (17, 64, -2.0, 3.5)],
+    )
+
+
+def test_lsds_header_is_64_bytes_and_self_checks():
+    b = lsds_header(HDR)
+    assert len(b) == HEADER_LEN == 64
+    (stored,) = struct.unpack("<Q", b[-8:])
+    assert stored == xor_fold_checksum(b[8:-8])
+    # identity mismatch (different shard) → scan rejects the header
+    other = dict(HDR, shard_index=3)
+    ok, _, _ = lsds_scan(b, other)
+    assert not ok
+
+
+def test_lsds_scan_accepts_full_file_and_truncates_torn_tail():
+    full = lsds_header(HDR) + b"".join(lsds_block(var_block(ci)) for ci in (6, 7, 8))
+    ok, chunks, valid = lsds_scan(full, HDR)
+    assert ok and chunks == [6, 7, 8] and valid == len(full)
+    # a torn tail (partial last block) is dropped, completed blocks kept
+    torn = full[:-5]
+    ok, chunks, valid = lsds_scan(torn, HDR)
+    assert ok and chunks == [6, 7]
+    assert valid == len(lsds_header(HDR)) + 2 * len(lsds_block(var_block(6)))
+
+
+def test_lsds_scan_stops_at_corrupt_or_noncontiguous_block():
+    h = lsds_header(HDR)
+    b6, b7, b8 = (lsds_block(var_block(ci)) for ci in (6, 7, 8))
+    # flip one payload byte of the middle block → prefix ends after 6
+    broken = bytearray(h + b6 + b7 + b8)
+    broken[len(h) + len(b6) + 12] ^= 0x01
+    ok, chunks, _ = lsds_scan(bytes(broken), HDR)
+    assert ok and chunks == [6]
+    # a gap in the chunk sequence (6 then 8) also stops the prefix
+    ok, chunks, _ = lsds_scan(h + b6 + b8, HDR)
+    assert ok and chunks == [6]
+    # wrong starting chunk → empty prefix
+    ok, chunks, _ = lsds_scan(h + b7 + b8, HDR)
+    assert ok and chunks == []
+
+
+def test_lsds_reduce_block_roundtrips_framing():
+    hdr = dict(HDR, kind=KIND_REDUCE, n=32)
+    block = dict(
+        chunk_index=6,
+        docs=3,
+        nnz=40,
+        doc_ids=[384, 385, 386],
+        doc_ptr=[0, 2, 2, 5],
+        idx=[0, 7, 1, 2, 31],
+        val=[1.0, 2.0, 0.5, -1.0, 4.0],
+    )
+    buf = lsds_header(hdr) + lsds_block(block)
+    ok, chunks, valid = lsds_scan(buf, hdr)
+    assert ok and chunks == [6] and valid == len(buf)
+    # framing sizes: 3 lens + rows + rnnz + doc_ids + row_ends + cols + vals
+    payload_len = 24 + 16 + 8 * 3 + 8 * 3 + 4 * 5 + 8 * 5
+    assert len(lsds_block(block)) == 8 + payload_len + 8
+
+
+# ---------------------------------------------------------------------------
+# Shard plan (dist::plan)
+# ---------------------------------------------------------------------------
+
+
+def effective_shard_docs(chunk_docs, shard_docs):
+    want = 8 * chunk_docs if shard_docs == 0 else shard_docs
+    return max(-(-want // chunk_docs), 1) * chunk_docs
+
+
+def plan_shards(num_docs, chunk_docs, shard_docs):
+    eff = effective_shard_docs(chunk_docs, shard_docs)
+    cps = eff // chunk_docs
+    num_chunks = -(-num_docs // chunk_docs)
+    num_shards = max(-(-num_chunks // cps), 1)
+    out = []
+    for s in range(num_shards):
+        cs, ce = s * cps, min((s + 1) * cps, num_chunks)
+        out.append(
+            dict(
+                index=s,
+                chunk_start=cs,
+                chunk_end=ce,
+                doc_start=min(cs * chunk_docs, num_docs),
+                doc_end=min(ce * chunk_docs, num_docs),
+            )
+        )
+    return out
+
+
+def test_plan_small_cases_match_rust_tests():
+    p = plan_shards(10, 4, 5)
+    assert [(s["chunk_start"], s["chunk_end"]) for s in p] == [(0, 2), (2, 3)]
+    assert [(s["doc_start"], s["doc_end"]) for s in p] == [(0, 8), (8, 10)]
+    assert effective_shard_docs(64, 0) == 512
+    assert effective_shard_docs(64, 1) == 64
+    assert effective_shard_docs(64, 65) == 128
+    assert effective_shard_docs(64, 128) == 128
+    p = plan_shards(0, 64, 0)
+    assert len(p) == 1 and p[0]["doc_end"] == 0
+
+
+def test_plan_properties_over_seeded_sweep():
+    # mirrors plan::tests' property sweep: exact doc cover, chunk-aligned
+    # boundaries, and a pure function of its three inputs
+    state = 0x00C0FFEE
+    for _ in range(200):
+        state = (state * 6364136223846793005 + 1442695040888963407) & MASK
+        num_docs = (state >> 33) % 3000
+        chunk_docs = 1 + (state >> 13) % 200
+        shard_docs = (state >> 3) % 1000
+        plan = plan_shards(num_docs, chunk_docs, shard_docs)
+        nxt = 0
+        for s in plan:
+            assert s["doc_start"] == nxt
+            assert s["doc_start"] % chunk_docs == 0
+            assert s["doc_start"] == s["chunk_start"] * chunk_docs
+            nxt = s["doc_end"]
+        assert nxt == num_docs
+        assert plan == plan_shards(num_docs, chunk_docs, shard_docs)
+
+
+# ---------------------------------------------------------------------------
+# The determinism keystone: chunk-order fold of per-chunk accumulators
+# ---------------------------------------------------------------------------
+
+
+class Welford:
+    """util::stats::RunningStats — push/merge (Chan et al.)."""
+
+    def __init__(self):
+        self.n, self.mean, self.m2 = 0, 0.0, 0.0
+
+    def push(self, x):
+        self.n += 1
+        d = x - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (x - self.mean)
+
+    def merge(self, o):
+        if o.n == 0:
+            return
+        if self.n == 0:
+            self.n, self.mean, self.m2 = o.n, o.mean, o.m2
+            return
+        n1, n2 = float(self.n), float(o.n)
+        d = o.mean - self.mean
+        n = n1 + n2
+        self.mean += d * n2 / n
+        self.m2 += o.m2 + d * d * n1 * n2 / n
+        self.n += o.n
+
+    def bits(self):
+        return (self.n, struct.pack("<d", self.mean), struct.pack("<d", self.m2))
+
+
+def lcg_values(seed, k):
+    out, s = [], seed
+    for _ in range(k):
+        s = (s * 6364136223846793005 + 1442695040888963407) & MASK
+        out.append((s >> 11) / float(1 << 53) * 10.0 - 5.0)
+    return out
+
+
+def chunk_accumulators(chunks, order):
+    accs = [None] * len(chunks)
+    for i in order:  # computation order is the knob under test
+        a = Welford()
+        for x in chunks[i]:
+            a.push(x)
+        accs[i] = a
+    return accs
+
+
+def fold_in_chunk_order(accs):
+    m = Welford()
+    for a in accs:
+        m.merge(a)
+    return m
+
+
+def test_chunk_order_fold_is_invariant_to_worker_schedule():
+    # The coordinator merges per-chunk blocks in ascending global chunk
+    # index, so which worker computed a block (and when it finished) can
+    # never change a bit of the merged accumulator.
+    vals = lcg_values(42, 24)
+    chunks = [vals[i * 4 : (i + 1) * 4] for i in range(6)]
+    reference = fold_in_chunk_order(chunk_accumulators(chunks, range(6)))
+    for order in ([5, 4, 3, 2, 1, 0], [2, 0, 4, 1, 5, 3], [3, 5, 0, 2, 4, 1]):
+        shuffled = fold_in_chunk_order(chunk_accumulators(chunks, order))
+        assert shuffled.bits() == reference.bits()
+
+
+def test_hierarchical_shard_master_fold_is_not_bitwise():
+    # Folding each shard to a master and then merging masters is the
+    # "obvious" parallel reduction — and it drifts in the last mantissa
+    # bit on this pinned data. This is exactly why run_job merges the
+    # per-chunk blocks and never the workers' shard masters.
+    vals = lcg_values(42, 24)
+    chunks = [vals[i * 4 : (i + 1) * 4] for i in range(6)]
+    accs = chunk_accumulators(chunks, range(6))
+    reference = fold_in_chunk_order(accs)
+    masters = []
+    for shard in ([0, 1, 2], [3, 4, 5]):
+        m = Welford()
+        for i in shard:
+            m.merge(accs[i])
+        masters.append(m)
+    hierarchical = Welford()
+    for m in masters:
+        hierarchical.merge(m)
+    assert hierarchical.n == reference.n
+    assert hierarchical.bits() != reference.bits()

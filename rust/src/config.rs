@@ -248,6 +248,8 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("robustness", "job_state"),
     ("robustness", "job_state_chunks"),
     ("robustness", "faults"),
+    ("dist", "workers"),
+    ("dist", "shard_docs"),
 ];
 
 /// Levenshtein edit distance (the strings involved are tiny).
@@ -503,6 +505,16 @@ pub struct PipelineConfig {
     /// `op:tag@offset;...` — see `util::faultinject`; empty = off; test
     /// harness only).
     pub robust_faults: String,
+    /// Worker processes for the distributed corpus pass (`[dist]
+    /// workers`; 0 = disabled, run the passes in-process). > 0 shards
+    /// the docword stream across re-exec'd worker processes — see
+    /// [`crate::dist`]. Requires `corpus.cache_dir` (shard results and
+    /// the job manifest live there).
+    pub dist_workers: usize,
+    /// Target documents per shard for the distributed pass (`[dist]
+    /// shard_docs`; 0 = auto: 8 × `stream.chunk_docs`). Rounded up to a
+    /// chunk multiple so shard boundaries never split a chunk.
+    pub dist_shard_docs: u64,
 }
 
 impl Default for PipelineConfig {
@@ -552,6 +564,8 @@ impl Default for PipelineConfig {
             robust_job_state: true,
             robust_job_state_chunks: 64,
             robust_faults: String::new(),
+            dist_workers: 0,
+            dist_shard_docs: 0,
         }
     }
 }
@@ -626,6 +640,8 @@ impl PipelineConfig {
                 d.robust_job_state_chunks,
             )?,
             robust_faults: doc.str_or("robustness", "faults", &d.robust_faults)?,
+            dist_workers: doc.usize_or("dist", "workers", d.dist_workers)?,
+            dist_shard_docs: doc.u64_or("dist", "shard_docs", d.dist_shard_docs)?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -730,6 +746,13 @@ impl PipelineConfig {
                 return bad(format!("robustness.faults: {e}"));
             }
         }
+        if self.dist_workers > 0 && self.cache_dir.is_empty() {
+            return bad(
+                "dist.workers > 0 requires corpus.cache_dir (shard results and the \
+                 dist manifest are cache files)"
+                    .into(),
+            );
+        }
         Ok(())
     }
 }
@@ -824,6 +847,25 @@ lambdas = [0.1, 0.2, 0.5]
             let doc = Document::parse(bad).unwrap();
             assert!(PipelineConfig::from_document(&doc).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn dist_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[corpus]\ncache_dir = \"cache\"\n[dist]\nworkers = 4\nshard_docs = 5000",
+        )
+        .unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.dist_workers, 4);
+        assert_eq!(cfg.dist_shard_docs, 5000);
+        // defaults: disabled, auto shard size
+        let d = PipelineConfig::default();
+        assert_eq!(d.dist_workers, 0);
+        assert_eq!(d.dist_shard_docs, 0);
+        // shard results live in the cache: no cache dir, no dist pass
+        let bad = Document::parse("[dist]\nworkers = 2").unwrap();
+        let e = PipelineConfig::from_document(&bad).unwrap_err().to_string();
+        assert!(e.contains("cache_dir"), "{e}");
     }
 
     #[test]

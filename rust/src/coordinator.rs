@@ -41,6 +41,11 @@
 //! bitwise-identical to `"gram"`); `"auto"` lets [`plan_backend`] — the
 //! memory-budget planner — pick from variance-pass footprint estimates,
 //! logging the numbers behind the decision.
+//!
+//! Distributed note: with `[dist] workers > 0` the two corpus passes run
+//! as coordinator + worker *processes* ([`crate::dist`]) instead of
+//! in-process thread pools; results stay bitwise identical and the
+//! stages, caching, and λ-search above are unchanged.
 
 use std::path::Path;
 use std::sync::Arc;

@@ -117,6 +117,16 @@ pub fn reduced_lookup(elim: &SafeElimination) -> Vec<u32> {
     lookup
 }
 
+/// [`reduced_lookup`] from a bare kept-id list (the form the distributed
+/// job manifest carries across the process boundary).
+pub fn reduced_lookup_from_kept(kept: &[u32], n: usize) -> Vec<u32> {
+    let mut lookup = vec![u32::MAX; n];
+    for (r, &orig) in kept.iter().enumerate() {
+        lookup[orig as usize] = r as u32;
+    }
+    lookup
+}
+
 /// Streaming reduced-covariance pass.
 pub fn covariance_pass<S: ChunkSource>(
     source: &mut S,
@@ -198,6 +208,30 @@ impl ReducedDocsAccum {
         self.val.extend_from_slice(&other.val);
     }
 
+    /// Decompose into raw parts `(doc_ids, doc_ptr, idx, val)` — the
+    /// distributed shard format persists per-chunk accumulators in
+    /// exactly this shape ([`crate::dist::shardio`]).
+    pub fn into_parts(self) -> (Vec<u64>, Vec<usize>, Vec<u32>, Vec<f64>) {
+        (self.doc_ids, self.doc_ptr, self.idx, self.val)
+    }
+
+    /// Reassemble from raw parts (inverse of
+    /// [`ReducedDocsAccum::into_parts`]). `doc_ptr` must be a valid
+    /// prefix-offset table: `doc_ptr[0] == 0`, monotone, last entry ==
+    /// `idx.len()`, and `doc_ptr.len() == doc_ids.len() + 1`.
+    pub fn from_parts(
+        doc_ids: Vec<u64>,
+        doc_ptr: Vec<usize>,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+    ) -> ReducedDocsAccum {
+        assert_eq!(doc_ptr.len(), doc_ids.len() + 1);
+        assert_eq!(doc_ptr.first(), Some(&0));
+        assert_eq!(doc_ptr.last(), Some(&idx.len()));
+        assert_eq!(idx.len(), val.len());
+        ReducedDocsAccum { doc_ids, doc_ptr, idx, val }
+    }
+
     /// Assemble the reduced CSR (rows = documents with ≥ 1 kept feature,
     /// in ascending doc-id order; cols = kept features in elimination
     /// order). Within each row the entries are sorted by reduced column
@@ -273,6 +307,33 @@ pub fn gram_pass<S: ChunkSource>(
 ) -> Result<(GramCov, StreamStats), crate::error::LsspcaError> {
     let (csr, stats) = reduced_csr_pass(source, elim, opts)?;
     Ok((GramCov::new(csr, stats.docs, cache_mb), stats))
+}
+
+/// Dense covariance replayed from an already-reduced *canonical* CSR
+/// (the [`ReducedDocsAccum::finalize`] layout: rows ascending by doc id,
+/// columns sorted within each row). Used by the distributed dense
+/// backend: the merged shard CSR is replayed through a fresh
+/// [`CovAccum`] row by row, with the document count overridden to
+/// `docs` (the CSR omits documents with zero kept features, but the
+/// single-process pass counts them toward the `1/m` normalizer).
+///
+/// Bitwise equal to a single-process [`covariance_pass`] at
+/// `stream.workers = 1`: within one document every kept feature (and
+/// feature pair) touches its accumulator slot exactly once, so each
+/// slot sees the same per-document addition sequence in the same
+/// ascending doc order regardless of within-row entry order.
+pub fn covariance_from_canonical_csr(m: &CsrMatrix, docs: u64) -> SymMat {
+    let nhat = m.cols;
+    let lookup: Vec<u32> = (0..nhat as u32).collect();
+    let mut acc = CovAccum::new(nhat);
+    let mut words: Vec<(u32, f64)> = Vec::new();
+    for d in 0..m.rows {
+        words.clear();
+        words.extend(m.row(d).map(|(c, v)| (c as u32, v)));
+        acc.push_doc(&words, &lookup);
+    }
+    acc.docs = docs;
+    acc.finalize()
 }
 
 /// Dense reference: centered covariance of selected columns of a CSR
@@ -570,5 +631,45 @@ mod tests {
                 assert!((cov_stream.get(i, j) - cov_csr.get(i, j)).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn canonical_csr_replay_is_bitwise_vs_sequential_pass() {
+        // The distributed dense backend's determinism contract: replaying
+        // the canonical reduced CSR equals a workers=1 streaming pass
+        // bit for bit (per-slot addition sequences are identical).
+        let c = SynthCorpus::new(CorpusSpec::nytimes().scaled(180, 700), 17);
+        let opts = StreamOptions { workers: 1, chunk_docs: 41, queue_depth: 2 };
+        let (fv, _) = variance_pass(&mut SynthSource::new(&c), opts).unwrap();
+        let elim = SafeElimination::from_variances(&fv, 0.02, Some(24));
+        let (cov_seq, stats) = covariance_pass(&mut SynthSource::new(&c), &elim, opts).unwrap();
+        let (csr, _) = reduced_csr_pass(&mut SynthSource::new(&c), &elim, opts).unwrap();
+        let cov_replay = covariance_from_canonical_csr(&csr, stats.docs);
+        for i in 0..elim.reduced() {
+            for j in 0..elim.reduced() {
+                assert_eq!(
+                    cov_replay.get(i, j).to_bits(),
+                    cov_seq.get(i, j).to_bits(),
+                    "Σ[{i},{j}] drifted"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduced_accum_parts_roundtrip() {
+        let lookup: Vec<u32> = vec![0, u32::MAX, 1, 2];
+        let mut acc = ReducedDocsAccum::new();
+        acc.push_doc(7, &[(0, 2.0), (2, 1.0)], &lookup);
+        acc.push_doc(9, &[(1, 5.0)], &lookup); // fully dropped → no row
+        acc.push_doc(3, &[(3, 4.0)], &lookup);
+        let (doc_ids, doc_ptr, idx, val) = acc.clone().into_parts();
+        assert_eq!(doc_ids, vec![7, 3]);
+        assert_eq!(doc_ptr, vec![0, 2, 3]);
+        let back = ReducedDocsAccum::from_parts(doc_ids, doc_ptr, idx, val);
+        let (a, b) = (acc.finalize(3), back.finalize(3));
+        assert_eq!(a.indptr, b.indptr);
+        assert_eq!(a.indices, b.indices);
+        assert_eq!(a.values, b.values);
     }
 }

@@ -304,6 +304,46 @@ pub fn read_records(path: &Path) -> Result<Vec<DeadLetterRecord>, LsspcaError> {
     Ok(out)
 }
 
+/// Merge per-shard dead-letter files from a distributed run into the
+/// main queue at `main`, deduplicating by source offset: two workers (or
+/// two passes) that both hit the same malformed line quarantine it
+/// exactly once in the merged queue. Records are folded in ascending
+/// offset order so the merged file's line order is independent of shard
+/// completion order. Shard files are removed after a successful merge;
+/// a missing shard file is fine (that worker saw no bad records).
+/// Returns the merged queue's distinct-record count.
+pub fn merge_shard_queues(main: &Path, shard_paths: &[PathBuf]) -> Result<u64, LsspcaError> {
+    let mut incoming: Vec<DeadLetterRecord> = Vec::new();
+    for p in shard_paths {
+        if !p.exists() {
+            continue;
+        }
+        incoming.extend(read_records(p)?);
+    }
+    incoming.sort_by_key(|r| r.offset);
+    let mut q = DeadLetterQueue::open(main)?;
+    for r in &incoming {
+        let Some(reason) = r.reason else {
+            // machine-written shard files only carry known reasons; an
+            // unknown one means damage, which must stay loud
+            return Err(LsspcaError::io_at(
+                main,
+                format!("shard dead-letter record with unknown reason {:?}", r.reason_str),
+            ));
+        };
+        q.quarantine(r.offset, reason, &r.detail, &r.line)?;
+    }
+    for p in shard_paths {
+        match std::fs::remove_file(p) {
+            Err(e) if e.kind() != std::io::ErrorKind::NotFound => {
+                return Err(LsspcaError::io_at(p, format!("remove shard dead-letter file: {e}")));
+            }
+            _ => {}
+        }
+    }
+    Ok(q.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -394,6 +434,38 @@ mod tests {
         // the record that broke the budget is still on disk (evidence)
         assert_eq!(read_records(&p).unwrap().len(), 3);
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn shard_queues_merge_with_offset_dedup() {
+        let main = tmp("merge_main.jsonl");
+        let s0 = tmp("merge_s0.jsonl");
+        let s1 = tmp("merge_s1.jsonl");
+        for p in [&main, &s0, &s1] {
+            std::fs::remove_file(p).ok();
+        }
+        // both shards saw offset 9 (a chunk-boundary re-read); shard 1
+        // additionally saw offset 4, which must sort before 9
+        let mut q0 = DeadLetterQueue::open(&s0).unwrap();
+        q0.quarantine(9, BadRecordReason::ZeroId, "ids are 1-based", "0 3 1").unwrap();
+        drop(q0);
+        let mut q1 = DeadLetterQueue::open(&s1).unwrap();
+        q1.quarantine(9, BadRecordReason::ZeroId, "ids are 1-based", "0 3 1").unwrap();
+        q1.quarantine(4, BadRecordReason::BadCount, "x", "1 2 huh").unwrap();
+        drop(q1);
+        let total = merge_shard_queues(&main, &[s0.clone(), s1.clone()]).unwrap();
+        assert_eq!(total, 2);
+        let recs = read_records(&main).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].offset, 4, "merged order is ascending offset");
+        assert_eq!(recs[1].offset, 9);
+        assert!(recs.iter().all(|r| r.crc_ok));
+        assert!(!s0.exists() && !s1.exists(), "shard files removed after merge");
+        // merging again (e.g. a resumed coordinator) is a no-op
+        let total = merge_shard_queues(&main, &[s0.clone(), s1.clone()]).unwrap();
+        assert_eq!(total, 2);
+        assert_eq!(read_records(&main).unwrap().len(), 2);
+        std::fs::remove_file(&main).ok();
     }
 
     #[test]

@@ -1,0 +1,410 @@
+//! Distributed sharded corpus pass: a coordinator plus N worker
+//! *processes* over the streaming passes, bitwise identical to the
+//! single-process pipeline.
+//!
+//! ```text
+//!            ┌────────────── coordinator (this module) ──────────────┐
+//!            │ distjob_*.lsjs manifest: identity + shard status table │
+//!            └──┬──────────────────┬──────────────────┬──────────────┘
+//!     spawn `lsspca worker`  spawn `lsspca worker`  spawn …
+//!            │ shard 0             │ shard 1             │ shard S-1
+//!            ▼                     ▼                     ▼
+//!   distshard_*_s0.lsds   distshard_*_s1.lsds   distshard_*_sS-1.lsds
+//!   (per-chunk blocks)    (per-chunk blocks)    (per-chunk blocks)
+//!            └──────────────────┬──┴──────────────────┬─┘
+//!                               ▼
+//!              merge in strict shard → chunk order
+//!              (= ascending global chunk index)
+//! ```
+//!
+//! **Determinism invariant.** Workers fold each chunk into a fresh
+//! accumulator sequentially and persist *per-chunk* blocks; the
+//! coordinator merges them in ascending global chunk index — exactly the
+//! merge schedule of [`crate::stream::resumable_variance_pass`]. Welford
+//! merges are not associative in floating point, but a fixed merge order
+//! over identical per-chunk inputs is reproducible, so the merged
+//! variance pass is **bitwise identical** to a single-process run for
+//! any worker count and any shard size. The reduce pass is canonical by
+//! construction ([`crate::cov::ReducedDocsAccum::finalize`] sorts rows
+//! and columns), and the distributed dense backend replays that
+//! canonical CSR through [`crate::cov::covariance_from_canonical_csr`]
+//! — bitwise equal to a `stream.workers = 1` single-process pass.
+//!
+//! **Fault model.** Every shard commits via atomic rename; the manifest
+//! records per-shard status crash-atomically. A SIGKILLed worker resumes
+//! from its `.part` block prefix; a SIGKILLed coordinator reloads the
+//! manifest, adopts shards whose result files verify, and re-runs only
+//! the rest. A worker that *fails* (bad exit, corrupt result) leaves its
+//! shard in a retryable `Failed` state — the job errors at the end of
+//! the run instead of aborting mid-flight, and the next run retries just
+//! the failed shards. Malformed corpus records land in per-shard
+//! dead-letter files merged into the main queue with offset dedup.
+
+pub mod plan;
+pub mod shardio;
+pub mod worker;
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+
+use crate::cov::ReducedDocsAccum;
+use crate::data::sparse::CsrMatrix;
+use crate::error::LsspcaError;
+use crate::jobstate::{
+    self, CorpusSource, DistManifest, ShardEntry, ShardStatus, KIND_REDUCE, KIND_VARIANCE,
+};
+use crate::moments::{FeatureMoments, FeatureVariances};
+use crate::session::{Progress, ProgressUpdate, Stage};
+use crate::stream::StreamStats;
+use plan::{plan_shards, ShardRange};
+use shardio::{BlockPayload, ShardBlock};
+
+/// Environment override for the worker executable (tests run inside the
+/// test harness binary, which has no `worker` subcommand).
+pub const WORKER_BIN_ENV: &str = "LSSPCA_WORKER_BIN";
+
+/// Everything a distributed pass needs from the session, decoupled from
+/// the session's own types so the coordinator stays independently
+/// testable.
+#[derive(Clone, Debug)]
+pub struct DistPassParams {
+    /// Cache directory holding the manifest and shard files (the config
+    /// validator requires one when `dist_workers > 0`).
+    pub cache_dir: PathBuf,
+    /// Concurrent worker processes to keep in flight.
+    pub workers: usize,
+    /// Requested shard size in documents (0 = auto; rounded up to a
+    /// chunk multiple either way).
+    pub shard_docs: u64,
+    /// Documents per streamed chunk.
+    pub chunk_docs: u64,
+    /// Corpus digest ([`crate::checkpoint::corpus_key`]).
+    pub key: u64,
+    /// How workers reopen the corpus.
+    pub source: CorpusSource,
+    /// Total observed documents.
+    pub num_docs: u64,
+    /// Vocabulary size.
+    pub n: u64,
+    /// Dead-letter budget (0 = strict readers).
+    pub max_bad_records: u64,
+    /// Main dead-letter queue path, when quarantine is enabled.
+    pub dead_letter: Option<PathBuf>,
+    /// In-process threads for the final `finalize_par` (output is
+    /// thread-count independent).
+    pub threads: usize,
+}
+
+/// Resolve the worker executable: [`WORKER_BIN_ENV`] override, else the
+/// current binary re-exec'd.
+pub fn worker_binary() -> Result<PathBuf, LsspcaError> {
+    if let Ok(p) = std::env::var(WORKER_BIN_ENV) {
+        if !p.is_empty() {
+            return Ok(PathBuf::from(p));
+        }
+    }
+    std::env::current_exe()
+        .map_err(|e| LsspcaError::config(format!("cannot locate the worker binary: {e}")))
+}
+
+/// Rebuild one variance block's chunk accumulator (sparse stored feats →
+/// full-width [`FeatureMoments`]). Exact: features absent from the block
+/// had zero nonzero observations in the chunk, which is precisely the
+/// default [`crate::util::stats::RunningStats`] the in-process pass
+/// would have left untouched.
+pub(crate) fn block_moments(block: &ShardBlock, n: usize) -> FeatureMoments {
+    let BlockPayload::Variance { feats } = &block.payload else {
+        unreachable!("variance merge over a reduce block");
+    };
+    let mut stats = vec![crate::util::stats::RunningStats::new(); n];
+    for &(f, st) in feats {
+        stats[f as usize] = st;
+    }
+    FeatureMoments::from_parts(stats, block.docs, block.nnz)
+}
+
+/// The distributed variance pass (drop-in for the single-process
+/// resumable pass in `Session::run_stream`). Fires
+/// `observer.stage_advanced(Stage::Stream, …)` once per shard a worker
+/// actually executed — adopted (already-complete) shards are silent, so
+/// `CountingProgress::reads(Stage::Stream)` counts re-executed shards.
+pub fn dist_variance_pass(
+    params: &DistPassParams,
+    observer: &dyn Progress,
+) -> Result<(FeatureVariances, StreamStats), LsspcaError> {
+    let n = params.n as usize;
+    let mut master = FeatureMoments::new(n);
+    let stats = run_job(params, KIND_VARIANCE, Vec::new(), observer, Stage::Stream, |block| {
+        master.merge(&block_moments(&block, n));
+    })?;
+    Ok((master.finalize_par(params.threads), stats))
+}
+
+/// The distributed reduced-CSR pass (drop-in for
+/// [`crate::cov::reduced_csr_pass`]): per-chunk accumulator parts are
+/// concatenated in shard/chunk order and finalized into the canonical
+/// doc-sorted, column-sorted CSR — bitwise identical to any
+/// single-process run.
+pub fn dist_reduced_csr_pass(
+    params: &DistPassParams,
+    kept: &[u32],
+    observer: &dyn Progress,
+) -> Result<(CsrMatrix, StreamStats), LsspcaError> {
+    let mut acc = ReducedDocsAccum::new();
+    let stats = run_job(params, KIND_REDUCE, kept.to_vec(), observer, Stage::Reduce, |block| {
+        let BlockPayload::Reduce { doc_ids, doc_ptr, idx, val } = block.payload else {
+            unreachable!("reduce merge over a variance block");
+        };
+        acc.merge(ReducedDocsAccum::from_parts(doc_ids, doc_ptr, idx, val));
+    })?;
+    Ok((acc.finalize(kept.len()), stats))
+}
+
+/// Coordinator core: resume-or-create the manifest, drive workers over
+/// the incomplete shards, merge dead-letter spills, then fold every
+/// shard's blocks through `fold` in strict shard → chunk order.
+fn run_job(
+    params: &DistPassParams,
+    kind: u64,
+    kept: Vec<u32>,
+    observer: &dyn Progress,
+    stage: Stage,
+    mut fold: impl FnMut(ShardBlock),
+) -> Result<StreamStats, LsspcaError> {
+    let t0 = std::time::Instant::now();
+    let shard_plan = plan_shards(params.num_docs, params.chunk_docs, params.shard_docs);
+    let fresh = DistManifest {
+        key: params.key,
+        kind,
+        chunk_docs: params.chunk_docs,
+        shard_docs: plan::effective_shard_docs(params.chunk_docs, params.shard_docs),
+        num_docs: params.num_docs,
+        n: params.n,
+        source: params.source.clone(),
+        max_bad_records: params.max_bad_records,
+        dead_letter: params
+            .dead_letter
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_default(),
+        kept,
+        shards: vec![ShardEntry { status: ShardStatus::Pending, attempts: 0 }; shard_plan.len()],
+    };
+    let manifest_path = jobstate::dist_path_for(&params.cache_dir, params.key, kind);
+    let mut manifest = match jobstate::load_dist(&manifest_path) {
+        Ok(Some(old)) if old.same_job(&fresh) => {
+            let done = old.shards.iter().filter(|s| s.status == ShardStatus::Done).count();
+            eprintln!(
+                "dist: resuming {} from its manifest ({done}/{} shards already complete)",
+                pass_name(kind),
+                old.shards.len()
+            );
+            old
+        }
+        Ok(Some(_)) => {
+            eprintln!("warning: dist manifest belongs to a different job; starting over");
+            jobstate::save_dist(&manifest_path, &fresh, "distmanifest-init")?;
+            fresh
+        }
+        Ok(None) => {
+            jobstate::save_dist(&manifest_path, &fresh, "distmanifest-init")?;
+            fresh
+        }
+        Err(e) => {
+            eprintln!("warning: dist manifest rejected ({e}); starting over");
+            jobstate::save_dist(&manifest_path, &fresh, "distmanifest-init")?;
+            fresh
+        }
+    };
+
+    // Adopt shards whose committed result file verifies — covers a
+    // coordinator killed after a worker's rename but before the manifest
+    // update. Adopted shards are not re-read and fire no progress.
+    let mut adopted = false;
+    for range in &shard_plan {
+        if manifest.shards[range.index].status != ShardStatus::Done {
+            let hdr = worker::shard_header(&manifest, range);
+            let path = shardio::result_path(&params.cache_dir, params.key, kind, range.index);
+            if shardio::read_complete(&path, &hdr)?.is_some() {
+                manifest.shards[range.index].status = ShardStatus::Done;
+                adopted = true;
+            }
+        }
+    }
+    if adopted {
+        jobstate::save_dist(&manifest_path, &manifest, "distmanifest")?;
+    }
+
+    drive_workers(params, &mut manifest, &manifest_path, &shard_plan, observer, stage)?;
+
+    // Merge per-shard dead-letter spills (offset dedup) and enforce the
+    // *global* budget — two workers can each stay within budget while
+    // their distinct bad lines together exceed it.
+    if params.max_bad_records > 0 {
+        if let Some(main) = &params.dead_letter {
+            let shard_paths: Vec<PathBuf> =
+                (0..shard_plan.len()).map(|i| worker::shard_dlq_path(main, i)).collect();
+            let total = crate::deadletter::merge_shard_queues(main, &shard_paths)?;
+            if total > params.max_bad_records {
+                return Err(LsspcaError::corpus(format!(
+                    "too many bad records: {total} quarantined, max_bad_records = {} (see {})",
+                    params.max_bad_records,
+                    main.display()
+                )));
+            }
+            if total > 0 {
+                eprintln!(
+                    "warning: {total} malformed record(s) quarantined across shards (see {})",
+                    main.display()
+                );
+            }
+        }
+    }
+
+    // Strict-order merge: ascending shard index, ascending chunk index
+    // within each shard = ascending global chunk index.
+    let mut stats = StreamStats::default();
+    for range in &shard_plan {
+        let hdr = worker::shard_header(&manifest, range);
+        let path = shardio::result_path(&params.cache_dir, params.key, kind, range.index);
+        let blocks = shardio::read_complete(&path, &hdr)?.ok_or_else(|| {
+            LsspcaError::cache(format!("shard {} result vanished before the merge", range.index))
+        })?;
+        for block in blocks {
+            stats.docs += block.docs;
+            stats.nnz += block.nnz;
+            stats.chunks += 1;
+            fold(block);
+        }
+    }
+
+    // Success: the job's scaffolding has served its purpose.
+    jobstate::remove(&manifest_path)
+        .map_err(|e| LsspcaError::io_at(&manifest_path, format!("remove dist manifest: {e}")))?;
+    for range in &shard_plan {
+        for p in [
+            shardio::result_path(&params.cache_dir, params.key, kind, range.index),
+            shardio::part_path(&params.cache_dir, params.key, kind, range.index),
+            worker::shard_jobstate_path(&params.cache_dir, &manifest, range.index),
+        ] {
+            match std::fs::remove_file(&p) {
+                Err(e) if e.kind() != std::io::ErrorKind::NotFound => {
+                    eprintln!("warning: cannot remove {}: {e}", p.display());
+                }
+                _ => {}
+            }
+        }
+    }
+    stats.seconds = t0.elapsed().as_secs_f64();
+    Ok(stats)
+}
+
+fn pass_name(kind: u64) -> &'static str {
+    match kind {
+        KIND_VARIANCE => "variance pass",
+        KIND_REDUCE => "reduce pass",
+        _ => "corpus pass",
+    }
+}
+
+/// Spawn worker processes (at most `params.workers` in flight) for every
+/// shard not yet `Done`, recording each outcome in the manifest as it
+/// lands. Returns an error if any shard ends the run `Failed` — the
+/// manifest keeps the failed shards retryable for the next run.
+fn drive_workers(
+    params: &DistPassParams,
+    manifest: &mut DistManifest,
+    manifest_path: &Path,
+    shard_plan: &[ShardRange],
+    observer: &dyn Progress,
+    stage: Stage,
+) -> Result<(), LsspcaError> {
+    let mut queue: VecDeque<usize> = shard_plan
+        .iter()
+        .filter(|r| manifest.shards[r.index].status != ShardStatus::Done)
+        .map(|r| r.index)
+        .collect();
+    if queue.is_empty() {
+        return Ok(());
+    }
+    let bin = worker_binary()?;
+    let procs = params.workers.max(1);
+    let mut active: Vec<(usize, std::process::Child)> = Vec::new();
+    let mut failed = 0usize;
+    while !queue.is_empty() || !active.is_empty() {
+        while active.len() < procs {
+            let Some(shard) = queue.pop_front() else {
+                break;
+            };
+            match std::process::Command::new(&bin)
+                .arg("worker")
+                .arg("--manifest")
+                .arg(manifest_path)
+                .arg("--shard")
+                .arg(shard.to_string())
+                .spawn()
+            {
+                Ok(child) => active.push((shard, child)),
+                Err(e) => {
+                    eprintln!("warning: cannot spawn worker for shard {shard}: {e}");
+                    manifest.shards[shard].status = ShardStatus::Failed;
+                    manifest.shards[shard].attempts += 1;
+                    failed += 1;
+                    jobstate::save_dist(manifest_path, manifest, "distmanifest")?;
+                }
+            }
+        }
+        let mut reaped_any = false;
+        let mut k = 0;
+        while k < active.len() {
+            let exited = active[k].1.try_wait().map_err(|e| {
+                LsspcaError::corpus(format!("waiting on worker for shard {}: {e}", active[k].0))
+            })?;
+            match exited {
+                None => k += 1,
+                Some(status) => {
+                    let (shard, _) = active.swap_remove(k);
+                    reaped_any = true;
+                    let range = shard_plan[shard];
+                    let hdr = worker::shard_header(manifest, &range);
+                    let path = shardio::result_path(&params.cache_dir, params.key, hdr.kind, shard);
+                    let complete = shardio::read_complete(&path, &hdr)?.is_some();
+                    let entry = &mut manifest.shards[shard];
+                    entry.attempts += 1;
+                    if status.success() && complete {
+                        entry.status = ShardStatus::Done;
+                        observer.stage_advanced(
+                            stage,
+                            ProgressUpdate { docs: range.doc_end - range.doc_start, nnz: 0 },
+                        );
+                    } else {
+                        entry.status = ShardStatus::Failed;
+                        failed += 1;
+                        eprintln!(
+                            "warning: shard {shard} worker {} (result {}); marked retryable",
+                            describe_exit(&status),
+                            if complete { "complete" } else { "incomplete" },
+                        );
+                    }
+                    jobstate::save_dist(manifest_path, manifest, "distmanifest")?;
+                }
+            }
+        }
+        if !reaped_any && !active.is_empty() {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+    }
+    if failed > 0 {
+        return Err(LsspcaError::corpus(format!(
+            "{failed} shard(s) failed; the dist manifest keeps them retryable — rerun to retry"
+        )));
+    }
+    Ok(())
+}
+
+fn describe_exit(status: &std::process::ExitStatus) -> String {
+    match status.code() {
+        Some(c) => format!("exited with status {c}"),
+        None => "was killed by a signal".to_string(),
+    }
+}

@@ -1,0 +1,197 @@
+//! Shard partitioner for the distributed corpus pass.
+//!
+//! Shards are expressed in **observed-document ordinals** (the k-th
+//! document the streaming reader materializes, not the file's declared
+//! doc id) and are always aligned to `chunk_docs` multiples. That
+//! alignment is the determinism keystone: the chunks a shard's worker
+//! folds are *exactly* the chunks the single-process resumable pass
+//! would have folded at the same global chunk indices, so the
+//! coordinator can replay the single-process merge order bit for bit.
+//!
+//! Invariants (pinned by the property tests below):
+//! - every chunk index in `[0, ceil(num_docs / chunk_docs))` belongs to
+//!   exactly one shard,
+//! - shard boundaries fall on chunk boundaries, so a document is never
+//!   split across shards,
+//! - the plan is a pure function of `(num_docs, chunk_docs, shard_docs)`
+//!   — worker count and completion order never change it.
+
+/// One shard: a contiguous run of global chunk indices and the
+/// observed-document ordinals they cover.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardRange {
+    /// Position in the shard table (merge order).
+    pub index: usize,
+    /// First global chunk index (inclusive).
+    pub chunk_start: u64,
+    /// Past-the-end global chunk index.
+    pub chunk_end: u64,
+    /// First observed-document ordinal (inclusive).
+    pub doc_start: u64,
+    /// Past-the-end observed-document ordinal (clamped to `num_docs`).
+    pub doc_end: u64,
+}
+
+impl ShardRange {
+    /// Chunks this shard covers.
+    pub fn num_chunks(&self) -> u64 {
+        self.chunk_end - self.chunk_start
+    }
+}
+
+/// Effective shard size in documents: the configured `shard_docs`
+/// (0 = auto, eight chunks) rounded **up** to a `chunk_docs` multiple.
+pub fn effective_shard_docs(chunk_docs: u64, shard_docs: u64) -> u64 {
+    let auto = 8 * chunk_docs;
+    let want = if shard_docs == 0 { auto } else { shard_docs };
+    want.div_ceil(chunk_docs).max(1) * chunk_docs
+}
+
+/// Partition a corpus of `num_docs` observed documents into chunk-aligned
+/// shards. Always returns at least one shard (possibly empty, when
+/// `num_docs == 0`), so the coordinator's shard table is never empty.
+pub fn plan_shards(num_docs: u64, chunk_docs: u64, shard_docs: u64) -> Vec<ShardRange> {
+    assert!(chunk_docs >= 1, "chunk_docs must be >= 1");
+    let eff = effective_shard_docs(chunk_docs, shard_docs);
+    let chunks_per_shard = eff / chunk_docs;
+    let num_chunks = num_docs.div_ceil(chunk_docs);
+    let num_shards = num_chunks.div_ceil(chunks_per_shard).max(1);
+    (0..num_shards)
+        .map(|s| {
+            let chunk_start = s * chunks_per_shard;
+            let chunk_end = ((s + 1) * chunks_per_shard).min(num_chunks);
+            ShardRange {
+                index: s as usize,
+                chunk_start,
+                chunk_end,
+                doc_start: (chunk_start * chunk_docs).min(num_docs),
+                doc_end: (chunk_end * chunk_docs).min(num_docs),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::property;
+
+    #[test]
+    fn exact_cover_small_cases() {
+        // 10 docs, chunks of 4 → chunks [0,3); shard_docs 5 rounds up to 8
+        // (2 chunks) → shards {[0,2), [2,3)}.
+        let p = plan_shards(10, 4, 5);
+        assert_eq!(p.len(), 2);
+        assert_eq!((p[0].chunk_start, p[0].chunk_end), (0, 2));
+        assert_eq!((p[0].doc_start, p[0].doc_end), (0, 8));
+        assert_eq!((p[1].chunk_start, p[1].chunk_end), (2, 3));
+        assert_eq!((p[1].doc_start, p[1].doc_end), (8, 10));
+    }
+
+    #[test]
+    fn zero_docs_yields_one_empty_shard() {
+        let p = plan_shards(0, 64, 0);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].num_chunks(), 0);
+        assert_eq!((p[0].doc_start, p[0].doc_end), (0, 0));
+    }
+
+    #[test]
+    fn auto_shard_docs_is_eight_chunks() {
+        assert_eq!(effective_shard_docs(64, 0), 512);
+        assert_eq!(effective_shard_docs(64, 1), 64);
+        assert_eq!(effective_shard_docs(64, 65), 128);
+        assert_eq!(effective_shard_docs(64, 128), 128);
+    }
+
+    #[test]
+    fn prop_every_doc_covered_exactly_once() {
+        property("shard plan covers every doc exactly once", 50, |rng| {
+            let num_docs = rng.below(2000) as u64;
+            let chunk_docs = (1 + rng.below(128)) as u64;
+            let shard_docs = rng.below(512) as u64;
+            let plan = plan_shards(num_docs, chunk_docs, shard_docs);
+            // doc ranges tile [0, num_docs) in order with no gap/overlap
+            let mut next = 0u64;
+            for s in &plan {
+                if s.doc_start != next {
+                    return Err(format!(
+                        "gap/overlap at shard {}: {} != {next}",
+                        s.index, s.doc_start
+                    ));
+                }
+                if s.doc_end < s.doc_start {
+                    return Err(format!("inverted shard {}", s.index));
+                }
+                next = s.doc_end;
+            }
+            if next != num_docs {
+                return Err(format!("plan ends at {next}, want {num_docs}"));
+            }
+            // chunk ranges tile the global chunk index space the same way
+            let mut next_chunk = 0u64;
+            for s in &plan {
+                if s.chunk_start != next_chunk {
+                    return Err(format!("chunk gap at shard {}", s.index));
+                }
+                next_chunk = s.chunk_end;
+            }
+            if next_chunk != num_docs.div_ceil(chunk_docs) {
+                return Err("chunk cover incomplete".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_boundaries_never_split_a_document() {
+        property("shard boundaries land on chunk boundaries", 50, |rng| {
+            let num_docs = (1 + rng.below(3000)) as u64;
+            let chunk_docs = (1 + rng.below(200)) as u64;
+            let shard_docs = rng.below(1000) as u64;
+            for s in plan_shards(num_docs, chunk_docs, shard_docs) {
+                // every shard start is a chunk multiple; a document lives
+                // entirely inside one chunk, so it cannot straddle shards
+                if s.doc_start % chunk_docs != 0 {
+                    return Err(format!("shard {} starts mid-chunk at {}", s.index, s.doc_start));
+                }
+                if s.doc_start != s.chunk_start * chunk_docs {
+                    return Err(format!("shard {} doc/chunk start disagree", s.index));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_plan_independent_of_worker_count() {
+        // The plan has no worker-count input at all; pin that the merge
+        // order (shard index order) reconstructs the identity permutation
+        // regardless of any completion order a scheduler could produce.
+        property("merge order independent of completion order", 30, |rng| {
+            let num_docs = (1 + rng.below(2000)) as u64;
+            let chunk_docs = (1 + rng.below(100)) as u64;
+            let plan = plan_shards(num_docs, chunk_docs, rng.below(700) as u64);
+            // simulate an arbitrary completion order
+            let mut order: Vec<usize> = (0..plan.len()).collect();
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.below(i + 1));
+            }
+            // merging by shard index (not completion order) restores the
+            // global chunk sequence
+            let mut merged: Vec<(usize, u64, u64)> = order
+                .iter()
+                .map(|&i| (plan[i].index, plan[i].chunk_start, plan[i].chunk_end))
+                .collect();
+            merged.sort_unstable_by_key(|&(idx, _, _)| idx);
+            let mut next = 0u64;
+            for (_, start, end) in merged {
+                if start != next {
+                    return Err(format!("merge order broke the chunk sequence at {start}"));
+                }
+                next = end;
+            }
+            Ok(())
+        });
+    }
+}

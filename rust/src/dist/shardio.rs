@@ -1,0 +1,665 @@
+//! Per-shard result files for the distributed corpus pass.
+//!
+//! A worker appends one self-checksummed **block per corpus chunk** to a
+//! `.part` file and atomically renames it to the final `.lsds` name when
+//! its doc range is exhausted — the rename is the shard's commit point.
+//! Storing per-chunk blocks (not a per-shard merged accumulator) is what
+//! lets the coordinator replay the *single-process* merge order exactly:
+//! Welford merges are not associative in floating point, so the merged
+//! result is only bitwise-reproducible if the coordinator folds chunk
+//! accumulators in ascending global chunk index, precisely as
+//! [`crate::stream::resumable_variance_pass`] does.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! "LSDS" | u32 version | u64×6 header (key kind shard chunk_docs
+//!                                      chunk_start n) | u64 hdr checksum
+//! repeated blocks:
+//!   u64 payload_len | payload | u64 xor-fold checksum of payload
+//! payload = u64 chunk_index, u64 docs, u64 nnz, then per kind:
+//!   variance: u64 k, k × (u32 feature, u64 n, f64 mean, f64 m2)
+//!             (only features with n > 0 — merging an empty Welford
+//!              triple is an exact no-op, so sparsity is free)
+//!   reduce:   u64 rows, u64 rnnz, rows × u64 doc_id, rows × u64 row_end,
+//!             rnnz × u32 col, rnnz × f64 val
+//! ```
+//!
+//! A truncated or torn tail never corrupts a shard: readers accept the
+//! longest valid block prefix ([`scan`]), and a resuming worker truncates
+//! to that prefix and continues. Writes go through the fault-injection
+//! tags `"distshard"` (all workers) and `"distshard<index>"` (one
+//! worker), so `LSSPCA_FAULTS=wkill:distshard@…` scripts a mid-shard
+//! worker kill.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::LsspcaError;
+use crate::util::faultinject::{self, FaultWrite};
+use crate::util::stats::RunningStats;
+use crate::util::xor_fold_checksum;
+
+/// Magic bytes of a shard result file.
+pub const SHARD_MAGIC: &[u8; 4] = b"LSDS";
+/// Shard result format version.
+pub const SHARD_VERSION: u32 = 1;
+
+/// Identity header every shard file carries; readers reject files whose
+/// header disagrees with the manifest they are merging under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    /// Corpus digest (same FNV fold as the variance checkpoint).
+    pub key: u64,
+    /// Pass kind: [`crate::jobstate::KIND_VARIANCE`] or
+    /// [`crate::jobstate::KIND_REDUCE`].
+    pub kind: u64,
+    /// Shard index in the manifest's shard table.
+    pub shard_index: u64,
+    /// Documents per chunk the pass ran at.
+    pub chunk_docs: u64,
+    /// First global chunk index of this shard's range.
+    pub chunk_start: u64,
+    /// Feature dimension: vocabulary n (variance) or n̂ (reduce).
+    pub n: u64,
+}
+
+/// Kind-specific contents of one per-chunk block.
+#[derive(Clone, Debug)]
+pub enum BlockPayload {
+    /// Sparse Welford triples of one chunk's [`crate::moments::FeatureMoments`]
+    /// (features with at least one nonzero observation, ascending).
+    Variance {
+        /// `(feature, stats)` pairs, ascending by feature id.
+        feats: Vec<(u32, RunningStats)>,
+    },
+    /// One chunk's [`crate::cov::ReducedDocsAccum`] parts.
+    Reduce {
+        /// Kept-doc ids, in stream order.
+        doc_ids: Vec<u64>,
+        /// Row start offsets (`len == doc_ids.len() + 1`, starts at 0).
+        doc_ptr: Vec<usize>,
+        /// Reduced column indices per stored entry.
+        idx: Vec<u32>,
+        /// Stored counts, aligned with `idx`.
+        val: Vec<f64>,
+    },
+}
+
+/// One per-chunk result block.
+#[derive(Clone, Debug)]
+pub struct ShardBlock {
+    /// Global chunk index this block covers.
+    pub chunk_index: u64,
+    /// Documents streamed in the chunk (including docs with no kept
+    /// features — the reduce pass still counts them).
+    pub docs: u64,
+    /// `(word, count)` pairs streamed in the chunk.
+    pub nnz: u64,
+    /// The accumulator contents.
+    pub payload: BlockPayload,
+}
+
+/// Final (committed) path of a shard's result file.
+pub fn result_path(dir: &Path, key: u64, kind: u64, shard: usize) -> PathBuf {
+    dir.join(format!("distshard_{key:016x}_k{kind}_s{shard}.lsds"))
+}
+
+/// In-progress path a worker appends to before the commit rename.
+pub fn part_path(dir: &Path, key: u64, kind: u64, shard: usize) -> PathBuf {
+    dir.join(format!("distshard_{key:016x}_k{kind}_s{shard}.lsds.part"))
+}
+
+fn push_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_f64(v: &mut Vec<u8>, x: f64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Little-endian cursor over a byte slice; `None` on underrun.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, p: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.p.checked_add(n)?;
+        if end > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.p..end];
+        self.p = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        self.take(8).map(|s| f64::from_le_bytes(s.try_into().unwrap()))
+    }
+
+    fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+}
+
+fn header_bytes(h: &ShardHeader) -> Vec<u8> {
+    let mut v = Vec::with_capacity(64);
+    v.extend_from_slice(SHARD_MAGIC);
+    push_u32(&mut v, SHARD_VERSION);
+    let payload_start = v.len();
+    for x in [h.key, h.kind, h.shard_index, h.chunk_docs, h.chunk_start, h.n] {
+        push_u64(&mut v, x);
+    }
+    let ck = xor_fold_checksum(&v[payload_start..]);
+    push_u64(&mut v, ck);
+    v
+}
+
+/// Byte length of the file header.
+const HEADER_LEN: usize = 4 + 4 + 6 * 8 + 8;
+
+fn parse_header(bytes: &[u8]) -> Option<ShardHeader> {
+    if bytes.len() < HEADER_LEN || &bytes[..4] != SHARD_MAGIC {
+        return None;
+    }
+    let mut c = Cur::new(&bytes[4..HEADER_LEN]);
+    if c.u32()? != SHARD_VERSION {
+        return None;
+    }
+    let payload = &bytes[8..HEADER_LEN - 8];
+    let h = ShardHeader {
+        key: c.u64()?,
+        kind: c.u64()?,
+        shard_index: c.u64()?,
+        chunk_docs: c.u64()?,
+        chunk_start: c.u64()?,
+        n: c.u64()?,
+    };
+    if c.u64()? != xor_fold_checksum(payload) {
+        return None;
+    }
+    Some(h)
+}
+
+fn encode_block(b: &ShardBlock) -> Vec<u8> {
+    let mut payload = Vec::new();
+    push_u64(&mut payload, b.chunk_index);
+    push_u64(&mut payload, b.docs);
+    push_u64(&mut payload, b.nnz);
+    match &b.payload {
+        BlockPayload::Variance { feats } => {
+            push_u64(&mut payload, feats.len() as u64);
+            for (f, st) in feats {
+                push_u32(&mut payload, *f);
+                push_u64(&mut payload, st.n);
+                push_f64(&mut payload, st.mean);
+                push_f64(&mut payload, st.m2);
+            }
+        }
+        BlockPayload::Reduce { doc_ids, doc_ptr, idx, val } => {
+            debug_assert_eq!(doc_ptr.len(), doc_ids.len() + 1);
+            debug_assert_eq!(idx.len(), val.len());
+            push_u64(&mut payload, doc_ids.len() as u64);
+            push_u64(&mut payload, idx.len() as u64);
+            for &d in doc_ids {
+                push_u64(&mut payload, d);
+            }
+            for &p in &doc_ptr[1..] {
+                push_u64(&mut payload, p as u64);
+            }
+            for &i in idx {
+                push_u32(&mut payload, i);
+            }
+            for &x in val {
+                push_f64(&mut payload, x);
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(payload.len() + 16);
+    push_u64(&mut out, payload.len() as u64);
+    let ck = xor_fold_checksum(&payload);
+    out.extend_from_slice(&payload);
+    push_u64(&mut out, ck);
+    out
+}
+
+fn decode_payload(payload: &[u8], hdr: &ShardHeader) -> Option<ShardBlock> {
+    let mut c = Cur::new(payload);
+    let chunk_index = c.u64()?;
+    let docs = c.u64()?;
+    let nnz = c.u64()?;
+    let body = match hdr.kind {
+        crate::jobstate::KIND_VARIANCE => {
+            let k = c.u64()? as usize;
+            let mut feats = Vec::with_capacity(k.min(payload.len() / 28));
+            let mut prev: Option<u32> = None;
+            for _ in 0..k {
+                let f = c.u32()?;
+                if f as u64 >= hdr.n || prev.is_some_and(|p| f <= p) {
+                    return None;
+                }
+                prev = Some(f);
+                let st = RunningStats { n: c.u64()?, mean: c.f64()?, m2: c.f64()? };
+                if st.n == 0 {
+                    return None;
+                }
+                feats.push((f, st));
+            }
+            BlockPayload::Variance { feats }
+        }
+        crate::jobstate::KIND_REDUCE => {
+            let rows = c.u64()? as usize;
+            let rnnz = c.u64()? as usize;
+            let mut doc_ids = Vec::with_capacity(rows.min(payload.len() / 8));
+            for _ in 0..rows {
+                doc_ids.push(c.u64()?);
+            }
+            let mut doc_ptr = Vec::with_capacity(rows + 1);
+            doc_ptr.push(0usize);
+            for _ in 0..rows {
+                let p = c.u64()? as usize;
+                if p < *doc_ptr.last().unwrap() || p > rnnz {
+                    return None;
+                }
+                doc_ptr.push(p);
+            }
+            if doc_ptr.last() != Some(&rnnz) {
+                return None;
+            }
+            let mut idx = Vec::with_capacity(rnnz.min(payload.len() / 4));
+            for _ in 0..rnnz {
+                let i = c.u32()?;
+                if i as u64 >= hdr.n {
+                    return None;
+                }
+                idx.push(i);
+            }
+            let mut val = Vec::with_capacity(rnnz);
+            for _ in 0..rnnz {
+                val.push(c.f64()?);
+            }
+            BlockPayload::Reduce { doc_ids, doc_ptr, idx, val }
+        }
+        _ => return None,
+    };
+    if !c.done() || docs == 0 {
+        return None;
+    }
+    Some(ShardBlock { chunk_index, docs, nnz, payload: body })
+}
+
+/// Result of scanning a (possibly partial) shard file: the longest valid
+/// block prefix plus how far into the file it reaches.
+#[derive(Debug, Default)]
+pub struct ScanOutcome {
+    /// Whether the header parsed and matched the expected identity.
+    pub header_ok: bool,
+    /// Decoded blocks of the valid prefix, in file order.
+    pub blocks: Vec<ShardBlock>,
+    /// Byte length of header + valid blocks (truncation point on resume).
+    pub valid_len: u64,
+    /// Total file length on disk (0 when the file is missing).
+    pub file_len: u64,
+}
+
+impl ScanOutcome {
+    /// A committed shard: header valid and every byte belongs to a valid
+    /// block whose chunk indices are contiguous from `chunk_start`.
+    pub fn is_complete(&self, chunk_start: u64) -> bool {
+        self.header_ok
+            && self.file_len > 0
+            && self.valid_len == self.file_len
+            && self
+                .blocks
+                .iter()
+                .enumerate()
+                .all(|(i, b)| b.chunk_index == chunk_start + i as u64)
+    }
+}
+
+/// Scan `path` against the expected header, tolerating a missing file
+/// and any truncated/corrupt tail. Reads are wrapped under the
+/// `"distshard"` fault tag.
+pub fn scan(path: &Path, expect: &ShardHeader) -> Result<ScanOutcome, LsspcaError> {
+    let file = match File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(ScanOutcome::default()),
+        Err(e) => return Err(LsspcaError::io_at(path, format!("open shard result: {e}"))),
+    };
+    let mut bytes = Vec::new();
+    faultinject::wrap_read("distshard", file)
+        .read_to_end(&mut bytes)
+        .map_err(|e| LsspcaError::io_at(path, format!("read shard result: {e}")))?;
+    let mut out = ScanOutcome { file_len: bytes.len() as u64, ..Default::default() };
+    let Some(hdr) = parse_header(&bytes) else {
+        return Ok(out);
+    };
+    if hdr != *expect {
+        return Ok(out);
+    }
+    out.header_ok = true;
+    out.valid_len = HEADER_LEN as u64;
+    let mut pos = HEADER_LEN;
+    let mut next_chunk = expect.chunk_start;
+    while pos + 8 <= bytes.len() {
+        let len = u64::from_le_bytes(bytes[pos..pos + 8].try_into().unwrap()) as usize;
+        let Some(end) =
+            pos.checked_add(8).and_then(|p| p.checked_add(len)).and_then(|p| p.checked_add(8))
+        else {
+            break;
+        };
+        if end > bytes.len() {
+            break;
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        let ck = u64::from_le_bytes(bytes[end - 8..end].try_into().unwrap());
+        if ck != xor_fold_checksum(payload) {
+            break;
+        }
+        let Some(block) = decode_payload(payload, expect) else {
+            break;
+        };
+        if block.chunk_index != next_chunk {
+            break;
+        }
+        next_chunk += 1;
+        out.blocks.push(block);
+        out.valid_len = end as u64;
+        pos = end;
+    }
+    Ok(out)
+}
+
+/// Read a committed shard result; `Ok(None)` when the file is missing,
+/// incomplete, or fails validation — the caller then re-runs the shard.
+pub fn read_complete(
+    path: &Path,
+    expect: &ShardHeader,
+) -> Result<Option<Vec<ShardBlock>>, LsspcaError> {
+    let out = scan(path, expect)?;
+    if out.is_complete(expect.chunk_start) {
+        Ok(Some(out.blocks))
+    } else {
+        Ok(None)
+    }
+}
+
+/// Incremental writer over a shard's `.part` file. Each appended block
+/// is flushed before the next chunk is read, so a killed worker loses at
+/// most the chunk it was writing; [`ShardWriter::finish`] fsyncs and
+/// commits via atomic rename.
+pub struct ShardWriter {
+    w: FaultWrite<FaultWrite<File>>,
+    part: PathBuf,
+    final_path: PathBuf,
+    kind: u64,
+    next_chunk: u64,
+}
+
+impl ShardWriter {
+    /// Open the shard's `.part` file for appending, reusing the longest
+    /// valid block prefix of any earlier attempt. Returns the writer and
+    /// the number of blocks (chunks) already committed to the prefix.
+    pub fn create_or_resume(
+        dir: &Path,
+        hdr: &ShardHeader,
+    ) -> Result<(ShardWriter, u64), LsspcaError> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| LsspcaError::io_at(dir, format!("create cache dir: {e}")))?;
+        let part = part_path(dir, hdr.key, hdr.kind, hdr.shard_index as usize);
+        let final_path = result_path(dir, hdr.key, hdr.kind, hdr.shard_index as usize);
+        let prior = scan(&part, hdr)?;
+        let done = if prior.header_ok {
+            // keep the valid prefix, drop the torn tail
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&part)
+                .map_err(|e| LsspcaError::io_at(&part, format!("reopen shard part: {e}")))?;
+            f.set_len(prior.valid_len)
+                .map_err(|e| LsspcaError::io_at(&part, format!("truncate shard part: {e}")))?;
+            prior.blocks.len() as u64
+        } else {
+            0
+        };
+        let fresh = !prior.header_ok;
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&part)
+            .map_err(|e| LsspcaError::io_at(&part, format!("open shard part: {e}")))?;
+        if fresh {
+            file.set_len(0)
+                .map_err(|e| LsspcaError::io_at(&part, format!("reset shard part: {e}")))?;
+        }
+        let specific = format!("distshard{}", hdr.shard_index);
+        let mut w = faultinject::wrap_write(&specific, faultinject::wrap_write("distshard", file));
+        if fresh {
+            w.write_all(&header_bytes(hdr))
+                .and_then(|()| w.flush())
+                .map_err(|e| LsspcaError::io_at(&part, format!("write shard header: {e}")))?;
+        }
+        Ok((
+            ShardWriter {
+                w,
+                part,
+                final_path,
+                kind: hdr.kind,
+                next_chunk: hdr.chunk_start + done,
+            },
+            done,
+        ))
+    }
+
+    /// The global chunk index the next appended block must carry.
+    pub fn next_chunk(&self) -> u64 {
+        self.next_chunk
+    }
+
+    /// Append one per-chunk block and flush it.
+    pub fn append(&mut self, block: &ShardBlock) -> Result<(), LsspcaError> {
+        assert_eq!(block.chunk_index, self.next_chunk, "blocks must be appended in chunk order");
+        match (&block.payload, self.kind) {
+            (BlockPayload::Variance { .. }, crate::jobstate::KIND_VARIANCE)
+            | (BlockPayload::Reduce { .. }, crate::jobstate::KIND_REDUCE) => {}
+            _ => panic!("block payload kind does not match the shard header"),
+        }
+        let bytes = encode_block(block);
+        self.w
+            .write_all(&bytes)
+            .and_then(|()| self.w.flush())
+            .map_err(|e| LsspcaError::io_at(&self.part, format!("append shard block: {e}")))?;
+        self.next_chunk += 1;
+        Ok(())
+    }
+
+    /// Commit: fsync the `.part` file and rename it to the final name.
+    pub fn finish(self) -> Result<PathBuf, LsspcaError> {
+        let file = self.w.into_inner().into_inner();
+        file.sync_all()
+            .map_err(|e| LsspcaError::io_at(&self.part, format!("sync shard result: {e}")))?;
+        drop(file);
+        std::fs::rename(&self.part, &self.final_path)
+            .map_err(|e| LsspcaError::io_at(&self.final_path, format!("commit shard result: {e}")))?;
+        Ok(self.final_path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobstate::{KIND_REDUCE, KIND_VARIANCE};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lsspca_shardio_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn var_header() -> ShardHeader {
+        ShardHeader {
+            key: 0xabcd,
+            kind: KIND_VARIANCE,
+            shard_index: 2,
+            chunk_docs: 64,
+            chunk_start: 6,
+            n: 100,
+        }
+    }
+
+    fn var_block(chunk: u64) -> ShardBlock {
+        let mut st = RunningStats::new();
+        st.push(2.0);
+        st.push(3.0);
+        let mut st17 = RunningStats::new();
+        st17.push(1.0);
+        ShardBlock {
+            chunk_index: chunk,
+            docs: 64,
+            nnz: 2,
+            payload: BlockPayload::Variance { feats: vec![(5, st), (17, st17)] },
+        }
+    }
+
+    #[test]
+    fn roundtrip_variance_blocks() {
+        let dir = tmpdir("roundtrip_var");
+        let hdr = var_header();
+        let (mut w, done) = ShardWriter::create_or_resume(&dir, &hdr).unwrap();
+        assert_eq!(done, 0);
+        w.append(&var_block(6)).unwrap();
+        w.append(&var_block(7)).unwrap();
+        let final_path = w.finish().unwrap();
+        let blocks = read_complete(&final_path, &hdr).unwrap().expect("complete");
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].chunk_index, 6);
+        match &blocks[1].payload {
+            BlockPayload::Variance { feats } => {
+                assert_eq!(feats.len(), 2);
+                assert_eq!(feats[0].0, 5);
+                assert_eq!(feats[0].1.n, 2);
+                assert_eq!(feats[0].1.mean.to_bits(), 2.5f64.to_bits());
+            }
+            _ => panic!("wrong payload kind"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn roundtrip_reduce_blocks() {
+        let dir = tmpdir("roundtrip_red");
+        let hdr = ShardHeader { kind: KIND_REDUCE, n: 8, ..var_header() };
+        let block = ShardBlock {
+            chunk_index: 6,
+            docs: 3,
+            nnz: 5,
+            payload: BlockPayload::Reduce {
+                doc_ids: vec![400, 402],
+                doc_ptr: vec![0, 2, 3],
+                idx: vec![1, 7, 0],
+                val: vec![2.0, 1.0, 4.0],
+            },
+        };
+        let (mut w, _) = ShardWriter::create_or_resume(&dir, &hdr).unwrap();
+        w.append(&block).unwrap();
+        let p = w.finish().unwrap();
+        let blocks = read_complete(&p, &hdr).unwrap().expect("complete");
+        match &blocks[0].payload {
+            BlockPayload::Reduce { doc_ids, doc_ptr, idx, val } => {
+                assert_eq!(doc_ids[..], [400u64, 402][..]);
+                assert_eq!(doc_ptr[..], [0usize, 2, 3][..]);
+                assert_eq!(idx[..], [1u32, 7, 0][..]);
+                assert_eq!(
+                    val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    [2.0f64, 1.0, 4.0].iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            _ => panic!("wrong payload kind"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_resumed() {
+        let dir = tmpdir("torn_tail");
+        let hdr = var_header();
+        let (mut w, _) = ShardWriter::create_or_resume(&dir, &hdr).unwrap();
+        w.append(&var_block(6)).unwrap();
+        drop(w); // simulate a kill: .part left behind, no rename
+        let part = part_path(&dir, hdr.key, hdr.kind, hdr.shard_index as usize);
+        // tear the file mid-block: append half of a second block
+        let next = encode_block(&var_block(7));
+        let mut f = std::fs::OpenOptions::new().append(true).open(&part).unwrap();
+        f.write_all(&next[..next.len() / 2]).unwrap();
+        drop(f);
+        let torn_len = std::fs::metadata(&part).unwrap().len();
+
+        let (mut w, done) = ShardWriter::create_or_resume(&dir, &hdr).unwrap();
+        assert_eq!(done, 1, "one valid block survives the tear");
+        assert!(std::fs::metadata(&part).unwrap().len() < torn_len, "torn tail truncated");
+        assert_eq!(w.next_chunk(), 7);
+        w.append(&var_block(7)).unwrap();
+        let p = w.finish().unwrap();
+        assert_eq!(read_complete(&p, &hdr).unwrap().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_or_corrupt_header_is_rejected() {
+        let dir = tmpdir("foreign");
+        let hdr = var_header();
+        let (mut w, _) = ShardWriter::create_or_resume(&dir, &hdr).unwrap();
+        w.append(&var_block(6)).unwrap();
+        let p = w.finish().unwrap();
+        // wrong key
+        let other = ShardHeader { key: 0x9999, ..hdr };
+        assert!(read_complete(&p, &other).unwrap().is_none());
+        // flipped byte inside the first block's payload
+        let mut bytes = std::fs::read(&p).unwrap();
+        let at = HEADER_LEN + 12;
+        bytes[at] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(read_complete(&p, &hdr).unwrap().is_none());
+        // a missing file is simply "not complete", not an error
+        assert!(read_complete(Path::new("/nonexistent/x.lsds"), &hdr).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn out_of_order_chunks_invalidate_the_tail() {
+        let dir = tmpdir("order");
+        let hdr = var_header();
+        let (mut w, _) = ShardWriter::create_or_resume(&dir, &hdr).unwrap();
+        w.append(&var_block(6)).unwrap();
+        let part = part_path(&dir, hdr.key, hdr.kind, hdr.shard_index as usize);
+        drop(w);
+        // forge a block with a skipped chunk index
+        let mut f = std::fs::OpenOptions::new().append(true).open(&part).unwrap();
+        f.write_all(&encode_block(&var_block(9))).unwrap();
+        drop(f);
+        let out = scan(&part, &hdr).unwrap();
+        assert!(out.header_ok);
+        assert_eq!(out.blocks.len(), 1, "the out-of-order block is rejected");
+        assert!(out.valid_len < out.file_len);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,272 @@
+//! Worker-process side of the distributed corpus pass.
+//!
+//! A worker is the same `lsspca` binary re-executed with the hidden
+//! `worker --manifest <path> --shard <index>` subcommand. It loads the
+//! [`crate::jobstate::DistManifest`], recomputes the shard plan (a pure
+//! function of the manifest, so coordinator and worker always agree on
+//! boundaries), reopens the corpus stream from the manifest's
+//! [`crate::jobstate::CorpusSource`], and folds its shard's chunks into
+//! per-chunk accumulator blocks appended to the shard's `.part` file.
+//! The atomic rename in [`crate::dist::shardio::ShardWriter::finish`] is
+//! the shard's commit point.
+//!
+//! Determinism: the worker streams its chunks **sequentially** (no
+//! in-process thread pool) into one fresh accumulator per chunk —
+//! exactly the per-chunk arithmetic of
+//! [`crate::stream::resumable_variance_pass`], so the coordinator's
+//! strict chunk-order merge replays the single-process f64 sequence bit
+//! for bit.
+//!
+//! Crash safety: a SIGKILLed worker leaves a `.part` file whose longest
+//! valid block prefix is resumed on the next launch (torn tail
+//! truncated, completed chunks never re-folded). Alongside it the worker
+//! maintains a per-shard `.lsjs` job-state snapshot — for variance
+//! shards a genuine [`crate::jobstate::JobState`] of the shard's partial
+//! accumulator, for reduce shards a progress-only marker — which is both
+//! operator-visible progress and the write the fault suite's
+//! `wkill:jobstate@…` scripts kill workers through. Malformed records go
+//! to a per-shard dead-letter file the coordinator later merges with
+//! offset dedup.
+
+use std::path::{Path, PathBuf};
+
+use crate::corpus::{CorpusSpec, SynthCorpus};
+use crate::cov::{reduced_lookup_from_kept, ReducedDocsAccum};
+use crate::deadletter::{DeadLetterQueue, RecordPolicy};
+use crate::dist::plan::{plan_shards, ShardRange};
+use crate::dist::shardio::{self, BlockPayload, ShardBlock, ShardHeader, ShardWriter};
+use crate::error::LsspcaError;
+use crate::jobstate::{self, CorpusSource, DistManifest, JobState, KIND_REDUCE, KIND_VARIANCE};
+use crate::moments::FeatureMoments;
+use crate::stream::{ChunkSource, FileSource, SynthSource};
+
+/// Per-shard dead-letter file: the main queue path with `_shard<i>`
+/// spliced in before the extension, so shard spills sit next to the
+/// merged queue and match the CI artifact globs.
+pub fn shard_dlq_path(main: &Path, shard: usize) -> PathBuf {
+    match main.extension() {
+        Some(ext) => {
+            let stem = main.with_extension("");
+            let mut name = stem.file_name().unwrap_or_default().to_os_string();
+            name.push(format!("_shard{shard}."));
+            name.push(ext);
+            stem.with_file_name(name)
+        }
+        None => main.with_file_name({
+            let mut name = main.file_name().unwrap_or_default().to_os_string();
+            name.push(format!("_shard{shard}"));
+            name
+        }),
+    }
+}
+
+/// Per-shard job-state path: a shard-scoped corpus key keeps it distinct
+/// from the single-process `jobstate_*.lsjs` of the same corpus.
+pub fn shard_jobstate_path(cache_dir: &Path, m: &DistManifest, shard: usize) -> PathBuf {
+    let key = crate::checkpoint::corpus_key(&format!(
+        "{:016x}:dist:{}:{}",
+        m.key, m.kind, shard
+    ));
+    jobstate::path_for(cache_dir, key)
+}
+
+/// The shard-file identity header a manifest implies for one shard.
+pub fn shard_header(m: &DistManifest, range: &ShardRange) -> ShardHeader {
+    let n = if m.kind == KIND_REDUCE { m.kept.len() as u64 } else { m.n };
+    ShardHeader {
+        key: m.key,
+        kind: m.kind,
+        shard_index: range.index as u64,
+        chunk_docs: m.chunk_docs,
+        chunk_start: range.chunk_start,
+        n,
+    }
+}
+
+/// Resolve the manifest's shard table entry to a chunk range.
+fn shard_range(m: &DistManifest, shard: usize) -> Result<ShardRange, LsspcaError> {
+    let plan = plan_shards(m.num_docs, m.chunk_docs, m.shard_docs);
+    if plan.len() != m.shards.len() {
+        return Err(LsspcaError::corpus(format!(
+            "dist manifest shard table ({}) disagrees with the recomputed plan ({})",
+            m.shards.len(),
+            plan.len()
+        )));
+    }
+    plan.get(shard).copied().ok_or_else(|| {
+        LsspcaError::corpus(format!("shard index {shard} out of range (plan has {})", plan.len()))
+    })
+}
+
+/// The corpus stream a worker folds: either a rebuilt synthetic
+/// generator or the docword file, with the skip-ahead already applied.
+enum WorkerSource<'a> {
+    Synth(SynthSource<'a>),
+    File(FileSource),
+}
+
+impl WorkerSource<'_> {
+    fn next_chunk(
+        &mut self,
+        max_docs: usize,
+    ) -> Result<Option<crate::data::docword::DocChunk>, LsspcaError> {
+        match self {
+            WorkerSource::Synth(s) => s.next_chunk(max_docs),
+            WorkerSource::File(s) => s.next_chunk(max_docs),
+        }
+    }
+}
+
+/// Run one shard to completion (idempotent: returns immediately when the
+/// shard's final result file is already committed and valid).
+pub fn run_worker(manifest_path: &Path, shard: usize) -> Result<(), LsspcaError> {
+    let m = jobstate::load_dist(manifest_path)?.ok_or_else(|| {
+        LsspcaError::corpus(format!("dist manifest not found: {}", manifest_path.display()))
+    })?;
+    let cache_dir = manifest_path
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let range = shard_range(&m, shard)?;
+    let hdr = shard_header(&m, &range);
+    let final_path = shardio::result_path(&cache_dir, m.key, m.kind, shard);
+    if shardio::read_complete(&final_path, &hdr)?.is_some() {
+        return Ok(()); // an earlier attempt committed; nothing to redo
+    }
+
+    // Pre-scan the `.part` prefix so the variance shard-master can be
+    // rebuilt to exactly the state the killed attempt had reached
+    // (create_or_resume re-scans and truncates the torn tail itself).
+    let part = shardio::part_path(&cache_dir, m.key, m.kind, shard);
+    let prior = shardio::scan(&part, &hdr)?;
+    let (mut writer, done) = ShardWriter::create_or_resume(&cache_dir, &hdr)?;
+    debug_assert_eq!(done, prior.blocks.len() as u64);
+    let chunk_docs = m.chunk_docs as usize;
+    let skip_chunks = range.chunk_start + done;
+
+    // Rebuild the corpus stream and position it at the first chunk this
+    // attempt still owes. The synthetic generator is position-seeded, so
+    // it jumps straight there; a file re-reads and discards the prefix
+    // (gzip cannot seek), quarantining any malformed prefix records into
+    // this shard's dead-letter file — the coordinator's offset-dedup
+    // merge collapses the cross-worker duplicates that creates.
+    let corpus_holder; // owns the SynthCorpus the source borrows
+    let mut source = match &m.source {
+        CorpusSource::Synth { preset, docs, vocab, seed } => {
+            let spec = CorpusSpec::preset(preset)
+                .ok_or_else(|| {
+                    LsspcaError::corpus(format!("dist manifest names unknown preset {preset:?}"))
+                })?
+                .scaled(*docs as usize, *vocab as usize);
+            corpus_holder = SynthCorpus::new(spec, *seed);
+            WorkerSource::Synth(SynthSource::starting_at(
+                &corpus_holder,
+                skip_chunks * m.chunk_docs,
+            ))
+        }
+        CorpusSource::File { path } => {
+            let path = Path::new(path);
+            let policy = if m.max_bad_records > 0 && !m.dead_letter.is_empty() {
+                let dlq_path = shard_dlq_path(Path::new(&m.dead_letter), shard);
+                Some(RecordPolicy::new(m.max_bad_records, DeadLetterQueue::open(&dlq_path)?))
+            } else {
+                None
+            };
+            let mut src = FileSource::open_with_policy(path, policy)?;
+            if src.header().vocab_size as u64 != m.n {
+                return Err(LsspcaError::corpus(format!(
+                    "docword vocabulary {} disagrees with the dist manifest ({})",
+                    src.header().vocab_size,
+                    m.n
+                )));
+            }
+            for _ in 0..skip_chunks {
+                if src.next_chunk(chunk_docs)?.is_none() {
+                    return Err(LsspcaError::corpus(
+                        "corpus ended before this shard's range — stale dist manifest",
+                    ));
+                }
+            }
+            WorkerSource::File(src)
+        }
+    };
+
+    // Kept-feature lookup for the reduce kind (full → reduced index).
+    let lookup = if m.kind == KIND_REDUCE {
+        reduced_lookup_from_kept(&m.kept, m.n as usize)
+    } else {
+        Vec::new()
+    };
+
+    // Shard-local master (variance kind): merged in chunk order so the
+    // job-state snapshot is a genuine resumable accumulator — including
+    // the chunks a killed earlier attempt already committed.
+    let mut shard_master =
+        FeatureMoments::new(if m.kind == KIND_VARIANCE { m.n as usize } else { 0 });
+    if m.kind == KIND_VARIANCE {
+        for block in &prior.blocks {
+            shard_master.merge(&super::block_moments(block, m.n as usize));
+        }
+    }
+    let js_path = shard_jobstate_path(&cache_dir, &m, shard);
+
+    for chunk_index in skip_chunks..range.chunk_end {
+        let chunk = source.next_chunk(chunk_docs)?.ok_or_else(|| {
+            LsspcaError::corpus("corpus ended inside this shard's range — stale dist manifest")
+        })?;
+        let block = match m.kind {
+            KIND_VARIANCE => {
+                let mut acc = FeatureMoments::new(m.n as usize);
+                acc.push_chunk(&chunk);
+                let feats: Vec<(u32, crate::util::stats::RunningStats)> = acc
+                    .stats()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, st)| st.n > 0)
+                    .map(|(f, st)| (f as u32, *st))
+                    .collect();
+                let block = ShardBlock {
+                    chunk_index,
+                    docs: acc.docs,
+                    nnz: acc.nnz,
+                    payload: BlockPayload::Variance { feats },
+                };
+                shard_master.merge(&acc);
+                block
+            }
+            KIND_REDUCE => {
+                let mut acc = ReducedDocsAccum::new();
+                for doc in &chunk.docs {
+                    acc.push_doc(doc.id as u64, &doc.words, &lookup);
+                }
+                let (doc_ids, doc_ptr, idx, val) = acc.into_parts();
+                ShardBlock {
+                    chunk_index,
+                    docs: chunk.docs.len() as u64,
+                    nnz: chunk.total_nnz() as u64,
+                    payload: BlockPayload::Reduce { doc_ids, doc_ptr, idx, val },
+                }
+            }
+            k => return Err(LsspcaError::corpus(format!("unknown dist pass kind {k}"))),
+        };
+        writer.append(&block)?;
+        // Progress snapshot after every durable block. The `.part` prefix
+        // is the authoritative resume source; this file is the operator-
+        // visible breadcrumb and the `wkill:jobstate@…` kill point.
+        jobstate::save(
+            &js_path,
+            &JobState {
+                key: m.key,
+                kind: m.kind,
+                chunk_docs: m.chunk_docs,
+                completed_chunks: chunk_index + 1,
+                moments: shard_master.clone(),
+            },
+        )?;
+    }
+
+    writer.finish()?;
+    jobstate::remove(&js_path)
+        .map_err(|e| LsspcaError::io_at(&js_path, format!("remove shard job state: {e}")))?;
+    Ok(())
+}

@@ -23,6 +23,12 @@
 //! stale, or foreign file is *rejected* (never silently used) and the
 //! pass simply starts over. Writes are crash-atomic with transient-I/O
 //! retry, so the file on disk is always a complete, verified snapshot.
+//!
+//! The distributed corpus pass ([`crate::dist`]) persists a second kind
+//! of state here: a [`DistManifest`] (`distjob_*.lsjs`) holding the
+//! job identity, the corpus source, and the per-shard status table a
+//! killed coordinator resumes from. Same framing family, same advisory
+//! semantics.
 
 use std::io::Read;
 use std::path::{Path, PathBuf};
@@ -43,6 +49,11 @@ const HEADER_U64S: usize = 7;
 /// accumulator). Future kinds (e.g. the reduced-CSR pass) extend the
 /// format without breaking this one.
 pub const KIND_VARIANCE: u64 = 1;
+
+/// Job kind: the reduced-documents CSR pass (`ReducedDocsAccum` over the
+/// kept features). Used by the distributed shard layer; the
+/// single-process `.lsjs` snapshot above remains variance-only.
+pub const KIND_REDUCE: u64 = 2;
 
 /// A resumable pass's persisted position: everything needed to continue
 /// folding from chunk `completed_chunks` as if never interrupted.
@@ -208,6 +219,316 @@ pub fn remove(path: &Path) -> std::io::Result<()> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Distributed job manifest
+// ---------------------------------------------------------------------------
+
+const DIST_MAGIC: &[u8; 4] = b"LSJM";
+const DIST_VERSION: u32 = 1;
+
+/// Where the corpus a distributed job streams comes from. The manifest
+/// carries the source so a worker process can reopen the *identical*
+/// stream (same synthetic generator seed or same file) without any other
+/// channel to the coordinator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CorpusSource {
+    /// A deterministic synthetic corpus ([`crate::corpus::SynthCorpus`]).
+    Synth {
+        /// Preset name ([`crate::corpus::CorpusSpec::name`]).
+        preset: String,
+        /// Documents in the (possibly rescaled) spec.
+        docs: u64,
+        /// Vocabulary size of the spec.
+        vocab: u64,
+        /// Generator seed.
+        seed: u64,
+    },
+    /// An on-disk UCI docword file.
+    File {
+        /// Path as the coordinator sees it (workers run on the same host).
+        path: String,
+    },
+}
+
+/// Lifecycle of one shard in the manifest's shard table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStatus {
+    /// Not yet completed (never ran, or its worker died mid-shard).
+    Pending,
+    /// Final shard result file written and verified.
+    Done,
+    /// Its worker exited with an error; retryable on the next run.
+    Failed,
+}
+
+impl ShardStatus {
+    fn to_u8(self) -> u8 {
+        match self {
+            ShardStatus::Pending => 0,
+            ShardStatus::Done => 1,
+            ShardStatus::Failed => 2,
+        }
+    }
+    fn from_u8(v: u8) -> Option<Self> {
+        match v {
+            0 => Some(ShardStatus::Pending),
+            1 => Some(ShardStatus::Done),
+            2 => Some(ShardStatus::Failed),
+            _ => None,
+        }
+    }
+}
+
+/// One row of the manifest's shard table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Current lifecycle state.
+    pub status: ShardStatus,
+    /// Worker launches so far (for operator visibility in `status`).
+    pub attempts: u32,
+}
+
+/// Persisted state of one distributed corpus pass: the job identity
+/// (corpus key, kind, geometry), everything a worker needs to reopen the
+/// stream, and the shard table the coordinator checks off as workers
+/// finish. A killed coordinator reloads this file and resumes from the
+/// last completed shard; a mismatched identity means the file belongs to
+/// a different job and is discarded, never resumed from.
+///
+/// Format (little-endian): magic `"LSJM"`, `u32` version, payload —
+/// `u64` key, kind, chunk_docs, shard_docs, num_docs, n,
+/// max_bad_records, the corpus source (`u8` tag then its fields; strings
+/// are `u64` length + UTF-8 bytes), the dead-letter path string (empty =
+/// none), `u64` kept count + `u32` kept feature ids, `u64` shard count +
+/// per-shard `(u8 status, u32 attempts)` — then a trailing xor-fold
+/// checksum of the payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistManifest {
+    /// Corpus digest ([`crate::checkpoint::corpus_key`]).
+    pub key: u64,
+    /// Which pass: [`KIND_VARIANCE`] or [`KIND_REDUCE`].
+    pub kind: u64,
+    /// Chunk size (documents) every worker streams with.
+    pub chunk_docs: u64,
+    /// Effective shard size in documents (chunk-aligned; see
+    /// [`crate::dist::plan::effective_shard_docs`]).
+    pub shard_docs: u64,
+    /// Total observed documents the plan partitions.
+    pub num_docs: u64,
+    /// Feature count (vocabulary size for variance, kept count for reduce
+    /// is still the full `n`; workers validate against the live corpus).
+    pub n: u64,
+    /// How workers reopen the corpus stream.
+    pub source: CorpusSource,
+    /// Per-run dead-letter budget (`robust_max_bad_records`); 0 = strict.
+    pub max_bad_records: u64,
+    /// Main dead-letter file path (empty when quarantine is disabled).
+    pub dead_letter: String,
+    /// Kept feature ids for [`KIND_REDUCE`] (empty for variance).
+    pub kept: Vec<u32>,
+    /// Shard table in merge order.
+    pub shards: Vec<ShardEntry>,
+}
+
+impl DistManifest {
+    /// True when `other` describes the same job: every identity field
+    /// matches (shard *statuses* are allowed to differ — that is the
+    /// progress this file exists to persist).
+    pub fn same_job(&self, other: &DistManifest) -> bool {
+        self.key == other.key
+            && self.kind == other.kind
+            && self.chunk_docs == other.chunk_docs
+            && self.shard_docs == other.shard_docs
+            && self.num_docs == other.num_docs
+            && self.n == other.n
+            && self.source == other.source
+            && self.max_bad_records == other.max_bad_records
+            && self.dead_letter == other.dead_letter
+            && self.kept == other.kept
+            && self.shards.len() == other.shards.len()
+    }
+}
+
+/// Manifest file path for a `(corpus key, kind)` pair in a cache dir.
+pub fn dist_path_for(cache_dir: &Path, key: u64, kind: u64) -> PathBuf {
+    cache_dir.join(format!("distjob_{key:016x}_k{kind}.lsjs"))
+}
+
+fn put_str(bytes: &mut Vec<u8>, s: &str) {
+    bytes.extend_from_slice(&(s.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(s.as_bytes());
+}
+
+/// Persist a manifest crash-atomically under fault tag `tag`. The
+/// coordinator uses `"distmanifest-init"` for the creation save and
+/// `"distmanifest"` for the per-shard status updates, so
+/// `wkill:distmanifest@…` deterministically kills it right after the
+/// first shard completes (between shard merges) — each save is a fresh
+/// write stream, so the offset alone cannot select the k-th save.
+pub fn save_dist(path: &Path, m: &DistManifest, tag: &str) -> Result<(), LsspcaError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| LsspcaError::cache(format!("dist manifest mkdir {}: {e}", dir.display())))?;
+    }
+    let mut bytes = Vec::with_capacity(256 + 4 * m.kept.len() + 5 * m.shards.len());
+    bytes.extend_from_slice(DIST_MAGIC);
+    bytes.extend_from_slice(&DIST_VERSION.to_le_bytes());
+    for v in [m.key, m.kind, m.chunk_docs, m.shard_docs, m.num_docs, m.n, m.max_bad_records] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    match &m.source {
+        CorpusSource::Synth { preset, docs, vocab, seed } => {
+            bytes.push(0);
+            put_str(&mut bytes, preset);
+            for v in [*docs, *vocab, *seed] {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        CorpusSource::File { path } => {
+            bytes.push(1);
+            put_str(&mut bytes, path);
+        }
+    }
+    put_str(&mut bytes, &m.dead_letter);
+    bytes.extend_from_slice(&(m.kept.len() as u64).to_le_bytes());
+    for &f in &m.kept {
+        bytes.extend_from_slice(&f.to_le_bytes());
+    }
+    bytes.extend_from_slice(&(m.shards.len() as u64).to_le_bytes());
+    for s in &m.shards {
+        bytes.push(s.status.to_u8());
+        bytes.extend_from_slice(&s.attempts.to_le_bytes());
+    }
+    let sum = checksum(&bytes[8..]);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+    retry::with_retry(&retry::policy(), || atomic_write(path, tag, &bytes)).map_err(|e| {
+        let msg = e.describe(&format!("dist manifest {}: write", path.display()));
+        if e.transient { LsspcaError::cache_transient(msg) } else { LsspcaError::cache(msg) }
+    })
+}
+
+/// Load a manifest. `Ok(None)` when no file exists; `Err` on any
+/// structural defect (bad magic/version/checksum, truncation, malformed
+/// fields). Identity validation against the live job is the caller's:
+/// the coordinator discards a non-[`DistManifest::same_job`] file and
+/// starts fresh; a worker treats any mismatch as fatal.
+pub fn load_dist(path: &Path) -> Result<Option<DistManifest>, LsspcaError> {
+    let buf = match retry::with_retry(&retry::policy(), || {
+        let f = std::fs::File::open(path)?;
+        let mut r = faultinject::wrap_read("distmanifest", f);
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf)?;
+        Ok(buf)
+    }) {
+        Ok(buf) => buf,
+        Err(e) if e.error.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            let msg = e.describe(&format!("dist manifest read {}", path.display()));
+            return Err(if e.transient {
+                LsspcaError::cache_transient(msg)
+            } else {
+                LsspcaError::cache(msg)
+            });
+        }
+    };
+    let bad = |what: &str| LsspcaError::cache(format!("dist manifest: {what}"));
+    if buf.len() < 8 + 8 || &buf[..4] != DIST_MAGIC {
+        return Err(bad("bad magic or truncated header"));
+    }
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    if version != DIST_VERSION {
+        return Err(bad(&format!("version {version}, want {DIST_VERSION}")));
+    }
+    let payload = &buf[8..buf.len() - 8];
+    let stored_sum = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+    if checksum(payload) != stored_sum {
+        return Err(bad("checksum mismatch (corrupt file)"));
+    }
+    struct Cur<'a> {
+        p: &'a [u8],
+        pos: usize,
+    }
+    impl<'a> Cur<'a> {
+        fn take(&mut self, len: usize) -> Result<&'a [u8], LsspcaError> {
+            if self.p.len() - self.pos < len {
+                return Err(LsspcaError::cache("dist manifest: truncated payload"));
+            }
+            let s = &self.p[self.pos..self.pos + len];
+            self.pos += len;
+            Ok(s)
+        }
+        fn u64(&mut self) -> Result<u64, LsspcaError> {
+            Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        }
+        fn u32(&mut self) -> Result<u32, LsspcaError> {
+            Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        }
+        fn str(&mut self, label: &str) -> Result<String, LsspcaError> {
+            let len = self.u64()?;
+            if len > self.p.len() as u64 {
+                return Err(LsspcaError::cache(format!("dist manifest: oversized {label}")));
+            }
+            String::from_utf8(self.take(len as usize)?.to_vec())
+                .map_err(|_| LsspcaError::cache(format!("dist manifest: non-UTF-8 {label}")))
+        }
+    }
+    let mut c = Cur { p: payload, pos: 0 };
+    let key = c.u64()?;
+    let kind = c.u64()?;
+    if kind != KIND_VARIANCE && kind != KIND_REDUCE {
+        return Err(bad(&format!("unknown kind {kind}")));
+    }
+    let chunk_docs = c.u64()?;
+    let shard_docs = c.u64()?;
+    let num_docs = c.u64()?;
+    let n = c.u64()?;
+    let max_bad_records = c.u64()?;
+    let source = match c.take(1)?[0] {
+        0 => {
+            let preset = c.str("preset")?;
+            CorpusSource::Synth { preset, docs: c.u64()?, vocab: c.u64()?, seed: c.u64()? }
+        }
+        1 => CorpusSource::File { path: c.str("path")? },
+        t => return Err(bad(&format!("unknown corpus source tag {t}"))),
+    };
+    let dead_letter = c.str("dead-letter path")?;
+    let kept_len = c.u64()? as usize;
+    if kept_len > payload.len() {
+        return Err(bad("oversized kept table"));
+    }
+    let mut kept = Vec::with_capacity(kept_len);
+    for _ in 0..kept_len {
+        kept.push(c.u32()?);
+    }
+    let num_shards = c.u64()? as usize;
+    if num_shards > payload.len() {
+        return Err(bad("oversized shard table"));
+    }
+    let mut shards = Vec::with_capacity(num_shards);
+    for _ in 0..num_shards {
+        let status = ShardStatus::from_u8(c.take(1)?[0])
+            .ok_or_else(|| LsspcaError::cache("dist manifest: unknown shard status"))?;
+        let attempts = c.u32()?;
+        shards.push(ShardEntry { status, attempts });
+    }
+    if c.pos != payload.len() {
+        return Err(bad("trailing bytes after shard table"));
+    }
+    Ok(Some(DistManifest {
+        key,
+        kind,
+        chunk_docs,
+        shard_docs,
+        num_docs,
+        n,
+        source,
+        max_bad_records,
+        dead_letter,
+        kept,
+        shards,
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,5 +660,148 @@ mod tests {
         remove(&p).unwrap();
         remove(&p).unwrap();
         assert!(load(&p, 1, 4, 128).unwrap().is_none());
+    }
+
+    fn sample_manifest() -> DistManifest {
+        DistManifest {
+            key: crate::checkpoint::corpus_key("dist:test"),
+            kind: KIND_REDUCE,
+            chunk_docs: 64,
+            shard_docs: 512,
+            num_docs: 600,
+            n: 1500,
+            source: CorpusSource::Synth {
+                preset: "nytimes".into(),
+                docs: 600,
+                vocab: 1500,
+                seed: 42,
+            },
+            max_bad_records: 8,
+            dead_letter: "/tmp/dlq.jsonl".into(),
+            kept: vec![3, 7, 11, 999],
+            shards: vec![
+                ShardEntry { status: ShardStatus::Done, attempts: 1 },
+                ShardEntry { status: ShardStatus::Failed, attempts: 2 },
+                ShardEntry { status: ShardStatus::Pending, attempts: 0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_exactly() {
+        let m = sample_manifest();
+        let p = tmp("manifest.lsjs");
+        save_dist(&p, &m, "distmanifest-init").unwrap();
+        let got = load_dist(&p).unwrap().unwrap();
+        assert_eq!(got, m);
+        assert!(got.same_job(&m));
+        // a file-source manifest roundtrips too
+        let mut mf = m.clone();
+        mf.source = CorpusSource::File { path: "data/docword.nytimes.txt".into() };
+        mf.kept.clear();
+        mf.kind = KIND_VARIANCE;
+        save_dist(&p, &mf, "distmanifest").unwrap();
+        assert_eq!(load_dist(&p).unwrap().unwrap(), mf);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn manifest_missing_file_is_none() {
+        assert!(load_dist(&tmp("manifest_none.lsjs")).unwrap().is_none());
+    }
+
+    #[test]
+    fn manifest_corruption_and_truncation_rejected() {
+        let p = tmp("manifest_bad.lsjs");
+        save_dist(&p, &sample_manifest(), "distmanifest").unwrap();
+        let clean = std::fs::read(&p).unwrap();
+        // flip a payload byte → checksum catches it
+        let mut bytes = clean.clone();
+        bytes[20] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let e = load_dist(&p).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+        // truncate → bad magic/truncated or checksum error, never Ok
+        std::fs::write(&p, &clean[..clean.len() / 3]).unwrap();
+        assert!(load_dist(&p).is_err());
+        // wrong magic
+        let mut bytes = clean.clone();
+        bytes[0] = b'X';
+        std::fs::write(&p, &bytes).unwrap();
+        let e = load_dist(&p).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn same_job_ignores_progress_but_not_identity() {
+        let m = sample_manifest();
+        let mut progressed = m.clone();
+        progressed.shards[2].status = ShardStatus::Done;
+        progressed.shards[2].attempts = 1;
+        assert!(m.same_job(&progressed));
+        let mut other = m.clone();
+        other.chunk_docs = 32;
+        assert!(!m.same_job(&other));
+        let mut other = m.clone();
+        other.source = CorpusSource::File { path: "x".into() };
+        assert!(!m.same_job(&other));
+        let mut other = m.clone();
+        other.shards.pop();
+        assert!(!m.same_job(&other));
+    }
+
+    #[test]
+    fn manifest_path_embeds_key_and_kind() {
+        let p = dist_path_for(Path::new("/cache"), 0xABCD, KIND_VARIANCE);
+        assert_eq!(p, Path::new("/cache/distjob_000000000000abcd_k1.lsjs"));
+    }
+
+    #[test]
+    fn manifest_bytes_are_stable() {
+        // Pinned layout shared with python/tests/test_dist_mirror.py:
+        // the identical example must produce the identical file image
+        // (and so the identical trailing checksum) in both languages.
+        let m = DistManifest {
+            key: 0x1122334455667788,
+            kind: KIND_REDUCE,
+            chunk_docs: 64,
+            shard_docs: 128,
+            num_docs: 200,
+            n: 1500,
+            source: CorpusSource::Synth {
+                preset: "nytimes".into(),
+                docs: 200,
+                vocab: 1500,
+                seed: 7,
+            },
+            max_bad_records: 2,
+            dead_letter: "dlq.jsonl".into(),
+            kept: vec![2, 5],
+            shards: vec![
+                ShardEntry { status: ShardStatus::Done, attempts: 1 },
+                ShardEntry { status: ShardStatus::Pending, attempts: 0 },
+            ],
+        };
+        let p = tmp("manifest_pin.lsjs");
+        save_dist(&p, &m, "distmanifest").unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(bytes.len(), 163);
+        let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        assert_eq!(sum, 0x069566457F40FCA7, "checksum drifted from the Python mirror pin");
+        use std::fmt::Write as _;
+        let mut hex = String::with_capacity(2 * bytes.len());
+        for b in &bytes {
+            write!(hex, "{b:02x}").unwrap();
+        }
+        assert_eq!(
+            hex,
+            "4c534a4d0100000088776655443322110200000000000000400000000000000080000000000000\
+             00c800000000000000dc0500000000000002000000000000000007000000000000006e7974696d\
+             6573c800000000000000dc0500000000000007000000000000000900000000000000646c712e6a\
+             736f6e6c02000000000000000200000005000000020000000000000001010000000000000000a7\
+             fc407f45669506"
+        );
     }
 }

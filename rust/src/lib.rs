@@ -74,6 +74,7 @@ pub mod cov_disk;
 pub mod covop;
 pub mod data;
 pub mod deadletter;
+pub mod dist;
 pub mod elim;
 pub mod engine;
 pub mod error;

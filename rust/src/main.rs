@@ -10,6 +10,7 @@
 //! lsspca score      --model model.lspm --input new.txt.gz        # batch projection
 //! lsspca serve      --model model.lspm --addr 127.0.0.1:7878     # HTTP scoring
 //! lsspca dlq        --path deadletter.jsonl --retry              # inspect quarantine
+//! lsspca worker     --manifest distjob.lsjs --shard 0            # dist-pass worker (internal)
 //! lsspca artifacts  --dir artifacts                              # inspect AOT artifacts
 //! lsspca bench      --compare BENCH_baseline.json                # perf-regression gate
 //! ```
@@ -62,6 +63,8 @@ fn with_training_flags(spec: CommandSpec) -> CommandSpec {
         .opt("job-state", "", "resumable job state: on|off (empty = config value)")
         .opt("job-state-chunks", "", "chunks between job-state checkpoints (empty = config value)")
         .opt("faults", "", "deterministic fault-injection plan (testing; empty = config value)")
+        .opt("dist-workers", "", "distributed-pass worker processes, 0 = in-process (empty = config)")
+        .opt("dist-shard-docs", "", "docs per distributed shard, 0 = auto (empty = config value)")
         .switch("fast-math", "allow reassociating FMA kernels (faster, not bitwise-reproducible)")
         .switch("certify", "compute a dual optimality certificate per PC")
 }
@@ -117,6 +120,11 @@ fn app() -> App {
                 .opt("list", "10", "print the first N quarantined records (0 = none)")
                 .opt("vocab-size", "0", "validate retried word ids against this vocab size (0 = skip)")
                 .switch("retry", "re-parse quarantined lines and report which are recoverable"),
+        )
+        .command(
+            CommandSpec::new("worker", "distributed-pass worker (spawned by the coordinator)")
+                .req("manifest", "dist job manifest (distjob_*.lsjs) written by the coordinator")
+                .req("shard", "shard index from the manifest's shard table"),
         )
         .command(
             CommandSpec::new("gen", "generate a synthetic corpus to disk (UCI docword format)")
@@ -246,6 +254,12 @@ fn pipeline_config_from_args(args: &Args) -> Result<PipelineConfig, LsspcaError>
     }
     if !args.str("faults").is_empty() {
         cfg.robust_faults = args.str("faults");
+    }
+    if !args.str("dist-workers").is_empty() {
+        cfg.dist_workers = args.usize("dist-workers")?;
+    }
+    if !args.str("dist-shard-docs").is_empty() {
+        cfg.dist_shard_docs = args.u64("dist-shard-docs")?;
     }
     cfg.certify = cfg.certify || args.switch("certify");
     Ok(cfg)
@@ -1395,6 +1409,17 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
     Ok(())
 }
 
+/// Hidden worker entrypoint for the distributed corpus pass: the
+/// coordinator re-execs this binary as `lsspca worker --manifest <path>
+/// --shard <i>` — see [`lsspca::dist`]. Faults arrive through the
+/// inherited `LSSPCA_FAULTS` environment, so kill scripts hit workers
+/// without any extra plumbing.
+fn cmd_worker(args: &Args) -> Result<(), LsspcaError> {
+    let manifest = PathBuf::from(args.str("manifest"));
+    let shard = args.usize("shard")?;
+    lsspca::dist::worker::run_worker(&manifest, shard)
+}
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let parsed = match app().parse(&argv) {
@@ -1420,6 +1445,7 @@ fn main() {
             "solve" => cmd_solve(&args),
             "artifacts" => cmd_artifacts(&args),
             "bench" => cmd_bench(&args),
+            "worker" => cmd_worker(&args),
             _ => unreachable!("parser rejects unknown commands"),
         },
     };

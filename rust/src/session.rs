@@ -72,7 +72,7 @@ use crate::coordinator::{
 use crate::corpus::{CorpusSpec, SynthCorpus};
 use crate::cov::{covariance_pass, gram_pass, reduced_csr_pass};
 use crate::cov_disk::DiskGramCov;
-use crate::covop::{CovOp, DenseCov};
+use crate::covop::{CovOp, DenseCov, GramCov};
 use crate::data::docword::DocChunk;
 use crate::data::shardcache::{self, ShardCacheKey};
 use crate::data::Vocab;
@@ -580,6 +580,19 @@ impl SessionBuilder {
         self
     }
 
+    /// Worker *processes* for the distributed corpus pass (0 =
+    /// disabled; > 0 needs a cache dir) — see [`crate::dist`].
+    pub fn dist_workers(mut self, workers: usize) -> Self {
+        self.cfg.dist_workers = workers;
+        self
+    }
+
+    /// Target documents per shard for the distributed pass (0 = auto).
+    pub fn dist_shard_docs(mut self, docs: u64) -> Self {
+        self.cfg.dist_shard_docs = docs;
+        self
+    }
+
     /// Solver-side worker threads (0 = all cores, 1 = serial).
     pub fn threads(mut self, threads: usize) -> Self {
         self.cfg.threads = threads;
@@ -817,7 +830,6 @@ impl Session {
     fn run_stream(&mut self) -> Result<(), LsspcaError> {
         let cfg = self.cfg.clone();
         install_robustness(&cfg);
-        let opts = stream_opts(&cfg);
         // --- resolve corpus ------------------------------------------------
         let synth: Option<SynthCorpus> = if cfg.input.is_empty() {
             let spec = CorpusSpec::preset(&cfg.synth_preset)
@@ -902,106 +914,22 @@ impl Session {
             }
             None => {
                 let t = Timer::start();
-                // Resumable job state: with a cache dir, the pass snapshots
-                // its partial accumulators every `job_state_chunks` chunks
-                // so a killed run restarts at the last completed chunk, not
-                // byte zero (see `jobstate`). The load is advisory:
-                // corrupt/stale/foreign state is rejected with a warning
-                // and the pass starts over.
-                let job = match (&cache, cfg.robust_job_state, expected_n) {
-                    (Some((_, key)), true, Some(n)) => {
-                        let js_path = crate::jobstate::path_for(Path::new(&cfg.cache_dir), *key);
-                        let resume =
-                            match crate::jobstate::load(&js_path, *key, n, opts.chunk_docs as u64) {
-                                Ok(Some(js)) => {
-                                    crate::info!(
-                                        "variance pass: resuming from job state at chunk {} \
-                                         ({} docs already folded)",
-                                        js.completed_chunks,
-                                        js.moments.docs
-                                    );
-                                    Some((js.moments, js.completed_chunks))
-                                }
-                                Ok(None) => None,
-                                Err(e) => {
-                                    crate::warn_!("ignoring bad job state: {e}");
-                                    None
-                                }
-                            };
-                        Some((js_path, *key, resume))
-                    }
-                    _ => None,
-                };
-                let (fv, stats) = match job {
-                    None => match &synth {
-                        Some(s) => {
-                            let mut inner = SynthSource::new(s);
-                            let mut src =
-                                ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
-                            variance_pass(&mut src, opts)?
-                        }
-                        None => {
-                            let policy = record_policy(&cfg, &input_path, corpus_digest)?;
-                            let mut inner = FileSource::open_with_policy(&input_path, policy)?;
-                            let r = {
-                                let mut src =
-                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
-                                variance_pass(&mut src, opts)?
-                            };
-                            report_quarantined(&inner, "variance pass");
-                            r
-                        }
-                    },
-                    Some((js_path, key, resume)) => {
-                        let persist_every = cfg.robust_job_state_chunks as u64;
-                        let chunk_docs = opts.chunk_docs as u64;
-                        let persist = |m: &crate::moments::FeatureMoments, done: u64| {
-                            crate::jobstate::save(
-                                &js_path,
-                                &crate::jobstate::JobState {
-                                    key,
-                                    kind: crate::jobstate::KIND_VARIANCE,
-                                    chunk_docs,
-                                    completed_chunks: done,
-                                    moments: m.clone(),
-                                },
-                            )
-                        };
-                        let r = match &synth {
-                            Some(s) => {
-                                let mut inner = SynthSource::new(s);
-                                let mut src =
-                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
-                                resumable_variance_pass(&mut src, opts, resume, persist_every, persist)?
-                            }
-                            None => {
-                                let policy = record_policy(&cfg, &input_path, corpus_digest)?;
-                                let mut inner = FileSource::open_with_policy(&input_path, policy)?;
-                                let r = {
-                                    let mut src = ObservedSource::new(
-                                        &mut inner,
-                                        obs.as_ref(),
-                                        Stage::Stream,
-                                    );
-                                    resumable_variance_pass(
-                                        &mut src,
-                                        opts,
-                                        resume,
-                                        persist_every,
-                                        persist,
-                                    )?
-                                };
-                                report_quarantined(&inner, "variance pass");
-                                r
-                            }
-                        };
-                        // The pass completed: the job state has served its
-                        // purpose and a stale copy must not outlive it.
-                        if let Err(e) = crate::jobstate::remove(&js_path) {
-                            crate::warn_!("could not remove job state: {e}");
-                        }
-                        r
-                    }
+                let (fv, stats) = if cfg.dist_workers > 0 {
+                    // `[dist] workers` shards the pass across worker
+                    // processes; the dist manifest plays the job-state
+                    // role, so the in-process resume machinery is
+                    // bypassed — see `crate::dist`.
+                    let params = dist_params(&cfg, synth.as_ref(), &input_path, corpus_digest)?;
+                    crate::dist::dist_variance_pass(&params, obs.as_ref())?
+                } else {
+                    single_variance_pass(
+                        &cfg,
+                        &cache,
+                        expected_n,
+                        &synth,
+                        corpus_digest,
+                        obs.as_ref(),
+                    )?
                 };
                 self.prof.add("variance_pass", t.secs());
                 if let Some((path, key)) = &cache {
@@ -1175,14 +1103,28 @@ impl Session {
                     Some(man) => man,
                     None => {
                         let t = Timer::start();
-                        let (csr, stats2) = match synth {
-                            Some(s) => {
+                        let dist = if cfg.dist_workers > 0 {
+                            let r = dist_reduce(
+                                &cfg,
+                                synth,
+                                &input_path,
+                                corpus_digest,
+                                &elim,
+                                obs.as_ref(),
+                            )?;
+                            Some(r)
+                        } else {
+                            None
+                        };
+                        let (csr, stats2) = match (dist, synth) {
+                            (Some(r), _) => Ok(r),
+                            (None, Some(s)) => {
                                 let mut inner = SynthSource::new(s);
                                 let mut src =
                                     ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
                                 reduced_csr_pass(&mut src, &elim, opts)
                             }
-                            None => {
+                            (None, None) => {
                                 let policy = record_policy(&cfg, &input_path, corpus_digest)?;
                                 let mut inner =
                                     FileSource::open_with_policy(&input_path, policy)?;
@@ -1232,13 +1174,23 @@ impl Session {
             }
             "gram" => {
                 let t = Timer::start();
-                let (gram, _stats2) = match synth {
-                    Some(s) => {
+                let dist = if cfg.dist_workers > 0 {
+                    let r =
+                        dist_reduce(&cfg, synth, &input_path, corpus_digest, &elim, obs.as_ref())?;
+                    Some(r)
+                } else {
+                    None
+                };
+                let (gram, _stats2) = match (dist, synth) {
+                    (Some((csr, stats2)), _) => {
+                        Ok((GramCov::new(csr, stats2.docs, cfg.row_cache_mb), stats2))
+                    }
+                    (None, Some(s)) => {
                         let mut inner = SynthSource::new(s);
                         let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
                         gram_pass(&mut src, &elim, opts, cfg.row_cache_mb)
                     }
-                    None => {
+                    (None, None) => {
                         let policy = record_policy(&cfg, &input_path, corpus_digest)?;
                         let mut inner = FileSource::open_with_policy(&input_path, policy)?;
                         let r = {
@@ -1261,13 +1213,26 @@ impl Session {
             }
             _ => {
                 let t = Timer::start();
-                let (cov, _stats2) = match synth {
-                    Some(s) => {
+                // Distributed dense path: replay the canonical reduced
+                // CSR through a fresh accumulator — bitwise equal to a
+                // `stream.workers = 1` in-process covariance pass.
+                let dist = if cfg.dist_workers > 0 {
+                    let r =
+                        dist_reduce(&cfg, synth, &input_path, corpus_digest, &elim, obs.as_ref())?;
+                    Some(r)
+                } else {
+                    None
+                };
+                let (cov, _stats2) = match (dist, synth) {
+                    (Some((csr, stats2)), _) => {
+                        Ok((crate::cov::covariance_from_canonical_csr(&csr, stats2.docs), stats2))
+                    }
+                    (None, Some(s)) => {
                         let mut inner = SynthSource::new(s);
                         let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
                         covariance_pass(&mut src, &elim, opts)
                     }
-                    None => {
+                    (None, None) => {
                         let policy = record_policy(&cfg, &input_path, corpus_digest)?;
                         let mut inner = FileSource::open_with_policy(&input_path, policy)?;
                         let r = {
@@ -1493,6 +1458,173 @@ fn report_quarantined(src: &FileSource, pass: &str) {
     if n > 0 {
         crate::warn_!("{pass}: {n} bad records quarantined (see dead-letter queue)");
     }
+}
+
+/// The in-process variance pass with optional resumable job state — the
+/// `[dist] workers = 0` arm of [`Session::run_stream`].
+fn single_variance_pass(
+    cfg: &PipelineConfig,
+    cache: &Option<(PathBuf, u64)>,
+    expected_n: Option<usize>,
+    synth: &Option<SynthCorpus>,
+    corpus_digest: u64,
+    obs: &dyn Progress,
+) -> Result<(FeatureVariances, crate::stream::StreamStats), LsspcaError> {
+    let opts = stream_opts(cfg);
+    let input_path = PathBuf::from(&cfg.input);
+    // Resumable job state: with a cache dir, the pass snapshots its
+    // partial accumulators every `job_state_chunks` chunks so a killed
+    // run restarts at the last completed chunk, not byte zero (see
+    // `jobstate`). The load is advisory: corrupt/stale/foreign state is
+    // rejected with a warning and the pass starts over.
+    let job = match (cache, cfg.robust_job_state, expected_n) {
+        (Some((_, key)), true, Some(n)) => {
+            let js_path = crate::jobstate::path_for(Path::new(&cfg.cache_dir), *key);
+            let resume = match crate::jobstate::load(&js_path, *key, n, opts.chunk_docs as u64) {
+                Ok(Some(js)) => {
+                    crate::info!(
+                        "variance pass: resuming from job state at chunk {} \
+                         ({} docs already folded)",
+                        js.completed_chunks,
+                        js.moments.docs
+                    );
+                    Some((js.moments, js.completed_chunks))
+                }
+                Ok(None) => None,
+                Err(e) => {
+                    crate::warn_!("ignoring bad job state: {e}");
+                    None
+                }
+            };
+            Some((js_path, *key, resume))
+        }
+        _ => None,
+    };
+    match job {
+        None => match synth {
+            Some(s) => {
+                let mut inner = SynthSource::new(s);
+                let mut src = ObservedSource::new(&mut inner, obs, Stage::Stream);
+                variance_pass(&mut src, opts)
+            }
+            None => {
+                let policy = record_policy(cfg, &input_path, corpus_digest)?;
+                let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                let r = {
+                    let mut src = ObservedSource::new(&mut inner, obs, Stage::Stream);
+                    variance_pass(&mut src, opts)
+                };
+                report_quarantined(&inner, "variance pass");
+                r
+            }
+        },
+        Some((js_path, key, resume)) => {
+            let persist_every = cfg.robust_job_state_chunks as u64;
+            let chunk_docs = opts.chunk_docs as u64;
+            let persist = |m: &crate::moments::FeatureMoments, done: u64| {
+                crate::jobstate::save(
+                    &js_path,
+                    &crate::jobstate::JobState {
+                        key,
+                        kind: crate::jobstate::KIND_VARIANCE,
+                        chunk_docs,
+                        completed_chunks: done,
+                        moments: m.clone(),
+                    },
+                )
+            };
+            let r = match synth {
+                Some(s) => {
+                    let mut inner = SynthSource::new(s);
+                    let mut src = ObservedSource::new(&mut inner, obs, Stage::Stream);
+                    resumable_variance_pass(&mut src, opts, resume, persist_every, persist)?
+                }
+                None => {
+                    let policy = record_policy(cfg, &input_path, corpus_digest)?;
+                    let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                    let r = {
+                        let mut src = ObservedSource::new(&mut inner, obs, Stage::Stream);
+                        resumable_variance_pass(&mut src, opts, resume, persist_every, persist)?
+                    };
+                    report_quarantined(&inner, "variance pass");
+                    r
+                }
+            };
+            // The pass completed: the job state has served its purpose
+            // and a stale copy must not outlive it.
+            if let Err(e) = crate::jobstate::remove(&js_path) {
+                crate::warn_!("could not remove job state: {e}");
+            }
+            Ok(r)
+        }
+    }
+}
+
+/// Assemble the distributed-pass parameters shared by the variance and
+/// reduce dispatches: the corpus identity re-encoded as a
+/// [`crate::jobstate::CorpusSource`] worker processes can rebuild their
+/// stream from.
+fn dist_params(
+    cfg: &PipelineConfig,
+    synth: Option<&SynthCorpus>,
+    input_path: &Path,
+    corpus_digest: u64,
+) -> Result<crate::dist::DistPassParams, LsspcaError> {
+    let (source, num_docs, n) = match synth {
+        Some(s) => (
+            crate::jobstate::CorpusSource::Synth {
+                preset: cfg.synth_preset.clone(),
+                docs: s.spec.num_docs as u64,
+                vocab: s.spec.vocab_size as u64,
+                seed: s.seed,
+            },
+            s.spec.num_docs as u64,
+            s.spec.vocab_size as u64,
+        ),
+        None => {
+            let reader = crate::data::docword::DocwordReader::open(input_path)?;
+            let hdr = reader.header();
+            (
+                crate::jobstate::CorpusSource::File { path: input_path.display().to_string() },
+                hdr.num_docs as u64,
+                hdr.vocab_size as u64,
+            )
+        }
+    };
+    let dead_letter = if cfg.robust_max_bad_records > 0 && synth.is_none() {
+        Some(dead_letter_path(cfg, input_path, corpus_digest))
+    } else {
+        None
+    };
+    Ok(crate::dist::DistPassParams {
+        cache_dir: PathBuf::from(&cfg.cache_dir),
+        workers: cfg.dist_workers,
+        shard_docs: cfg.dist_shard_docs,
+        chunk_docs: cfg.chunk_docs as u64,
+        key: corpus_digest,
+        source,
+        num_docs,
+        n,
+        max_bad_records: cfg.robust_max_bad_records,
+        dead_letter,
+        threads: cfg.workers,
+    })
+}
+
+/// Run the distributed reduce pass for [`Session::run_reduce`]'s
+/// backends: one canonical reduced CSR, reused by the dense / gram /
+/// disk arms.
+fn dist_reduce(
+    cfg: &PipelineConfig,
+    synth: Option<&SynthCorpus>,
+    input_path: &Path,
+    corpus_digest: u64,
+    elim: &SafeElimination,
+    obs: &dyn Progress,
+) -> Result<(crate::data::CsrMatrix, crate::stream::StreamStats), LsspcaError> {
+    let kept: Vec<u32> = elim.kept.iter().map(|&k| k as u32).collect();
+    let params = dist_params(cfg, synth, input_path, corpus_digest)?;
+    crate::dist::dist_reduced_csr_pass(&params, &kept, obs)
 }
 
 /// Build the dead-letter record policy from config. `None` (strict

@@ -269,6 +269,15 @@ impl<'a> SynthSource<'a> {
     pub fn new(corpus: &'a crate::corpus::SynthCorpus) -> SynthSource<'a> {
         SynthSource { corpus, next_doc: 0 }
     }
+
+    /// Stream from document ordinal `doc` (clamped to the corpus size).
+    /// The generator is position-seeded per document, so starting
+    /// mid-corpus yields exactly the documents a from-zero stream would
+    /// have produced at those ordinals — the property the distributed
+    /// shard workers rely on to skip straight to their shard.
+    pub fn starting_at(corpus: &'a crate::corpus::SynthCorpus, doc: u64) -> SynthSource<'a> {
+        SynthSource { corpus, next_doc: (doc as usize).min(corpus.spec.num_docs) }
+    }
 }
 
 impl ChunkSource for SynthSource<'_> {

@@ -6,10 +6,13 @@
 //! replaces timing with *scripted byte offsets*: a [`FaultPlan`] lists
 //! faults as `op:tag@offset` entries, and the I/O sites that opt in
 //! ([`wrap_read`] / [`wrap_write`], tagged `"checkpoint"`,
-//! `"jobstate"`, `"manifest"`, `"shard"`, `"docword"`) fire each entry
-//! exactly once when their cumulative byte position crosses the scripted
-//! offset. The same corpus plus the same plan always fails at the same
-//! byte.
+//! `"jobstate"`, `"manifest"`, `"shard"`, `"docword"`, and — for the
+//! distributed pass — `"distshard"` / `"distshard<index>"` on worker
+//! shard writes, `"distmanifest-init"` on the coordinator's manifest
+//! creation and `"distmanifest"` on its post-shard updates) fire each
+//! entry exactly once when their cumulative byte position crosses the
+//! scripted offset. The same corpus plus the same plan always fails at
+//! the same byte.
 //!
 //! Plans come from three places, in priority order: a programmatic
 //! [`scoped`] call (unit tests), the `LSSPCA_FAULTS` environment

@@ -1,0 +1,462 @@
+//! Distributed sharded corpus pass conformance: coordinator + worker
+//! *processes* must be bitwise identical to the single-process pipeline
+//! on every covariance backend, survive worker and coordinator kills
+//! with a resume that re-executes only the unfinished shards, and
+//! deduplicate dead-letter quarantines across workers.
+//!
+//! In-process tests drive the coordinator through [`Session`] with
+//! `LSSPCA_WORKER_BIN` pointed at the real `lsspca` binary (the test
+//! harness executable has no `worker` subcommand to re-exec). CLI kill
+//! tests re-exec the binary under `LSSPCA_FAULTS` scripts, exactly like
+//! `tests/fault_tolerance.rs` — worker processes inherit the env, so
+//! one variable scripts deterministic deaths anywhere in the tree.
+//!
+//! Artifacts land under `LSSPCA_FAULT_DIR` when set (the CI upload
+//! point); on success each test removes its own directory.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Arc;
+
+use lsspca::config::PipelineConfig;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::session::{CountingProgress, LambdaSpec, Session, SessionBuilder, Stage};
+
+/// Root for test artifacts: `LSSPCA_FAULT_DIR` (CI upload point) or the
+/// system temp dir.
+fn artifact_root() -> PathBuf {
+    match std::env::var("LSSPCA_FAULT_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => std::env::temp_dir(),
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let p = artifact_root().join(format!("lsspca_dist_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(p.parent().unwrap()).ok();
+    p
+}
+
+fn bin() -> PathBuf {
+    // target/<profile>/lsspca next to the test executable
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // <profile>/
+    p.push("lsspca");
+    p
+}
+
+/// Point the in-process coordinator at the real binary, once. Without
+/// this, `dist::worker_binary()` would re-exec the *test harness*.
+fn set_worker_bin() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| std::env::set_var(lsspca::dist::WORKER_BIN_ENV, bin()));
+}
+
+/// Run the binary; returns (exit code, success, stdout+stderr).
+fn run_cli(args: &[&str], env: &[(&str, &str)]) -> (Option<i32>, bool, String) {
+    let mut cmd = Command::new(bin());
+    cmd.args(args);
+    for &(k, v) in env {
+        cmd.env(k, v);
+    }
+    let out = cmd.output().expect("spawn lsspca");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.code(), out.status.success(), text)
+}
+
+/// 600 docs × 64-doc chunks = 10 chunks; `stream.workers = 1` so the
+/// dense backend's in-process covariance pass is the sequential schedule
+/// the distributed canonical-CSR replay reproduces bitwise.
+fn dist_config(cache_dir: &Path, dist_workers: usize, shard_docs: u64) -> PipelineConfig {
+    PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 600,
+        synth_vocab: 1500,
+        workers: 1,
+        chunk_docs: 64,
+        max_reduced: 32,
+        bca_sweeps: 4,
+        cache_dir: cache_dir.display().to_string(),
+        dist_workers,
+        dist_shard_docs: shard_docs,
+        ..Default::default()
+    }
+}
+
+/// The corpus digest `run_stream` derives for a synthetic config — same
+/// identity string, same FNV fold.
+fn synth_key(cfg: &PipelineConfig) -> u64 {
+    let spec = CorpusSpec::preset(&cfg.synth_preset)
+        .unwrap()
+        .scaled(cfg.synth_docs, cfg.synth_vocab);
+    let corpus = SynthCorpus::new(spec, cfg.seed);
+    lsspca::checkpoint::corpus_key(&format!(
+        "synth:{}:{}:{}:{}",
+        corpus.spec.name, corpus.spec.num_docs, corpus.spec.vocab_size, corpus.seed
+    ))
+}
+
+/// Find the single `.lspv` variance checkpoint in a cache dir.
+fn lspv(dir: &Path) -> Option<PathBuf> {
+    std::fs::read_dir(dir)
+        .ok()
+        .into_iter()
+        .flatten()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "lspv"))
+}
+
+#[test]
+fn dist_variance_is_bitwise_identical_across_worker_and_shard_counts() {
+    set_worker_bin();
+    let cache_ref = tmp("var_ref");
+    std::fs::remove_dir_all(&cache_ref).ok();
+    let cfg_ref = dist_config(&cache_ref, 0, 0);
+    let key = synth_key(&cfg_ref);
+    let mut sess = Session::from_config(cfg_ref).unwrap();
+    let stats = sess.stream().unwrap();
+    let (var_ref, mean_ref, docs_ref, nnz_ref) = (
+        stats.variances.variance.clone(),
+        stats.variances.mean.clone(),
+        stats.docs,
+        stats.nnz,
+    );
+    let ckpt_ref = std::fs::read(lsspca::checkpoint::path_for(&cache_ref, key)).unwrap();
+
+    // Over the 10-chunk corpus: (1 worker, auto) → 2 shards, (2, 100
+    // docs) → 5 shards, (7, 64 docs) → 10 single-chunk shards.
+    for (workers, shard_docs) in [(1usize, 0u64), (2, 100), (7, 64)] {
+        let cache = tmp(&format!("var_w{workers}_s{shard_docs}"));
+        std::fs::remove_dir_all(&cache).ok();
+        let mut sess = Session::from_config(dist_config(&cache, workers, shard_docs)).unwrap();
+        let got = sess.stream().unwrap();
+        assert_eq!(got.docs, docs_ref, "{workers} workers / shard_docs {shard_docs}");
+        assert_eq!(got.nnz, nnz_ref, "shard merge must account every (word, count) pair");
+        for (a, b) in var_ref.iter().zip(&got.variances.variance) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "variances must be bitwise identical at {workers} workers"
+            );
+        }
+        for (a, b) in mean_ref.iter().zip(&got.variances.mean) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let ckpt = std::fs::read(lsspca::checkpoint::path_for(&cache, key)).unwrap();
+        assert_eq!(
+            ckpt_ref,
+            ckpt,
+            "checkpoint after a {workers}-worker pass must match the single-process bytes"
+        );
+        std::fs::remove_dir_all(&cache).ok();
+    }
+    std::fs::remove_dir_all(&cache_ref).ok();
+}
+
+#[test]
+fn dist_fit_matches_single_process_on_every_backend() {
+    set_worker_bin();
+    for backend in ["dense", "gram", "disk", "auto"] {
+        let cache_sp = tmp(&format!("fit_{backend}_sp"));
+        let cache_dist = tmp(&format!("fit_{backend}_dist"));
+        std::fs::remove_dir_all(&cache_sp).ok();
+        std::fs::remove_dir_all(&cache_dist).ok();
+
+        let fit_with = |cache: &Path, dist_workers: usize| {
+            let mut cfg = dist_config(cache, dist_workers, 100);
+            cfg.cov_backend = backend.into();
+            let mut sess = Session::from_config(cfg).unwrap();
+            sess.stream().unwrap();
+            sess.fit(LambdaSpec::search(5, 2), 2).unwrap()
+        };
+        let sp = fit_with(&cache_sp, 0);
+        let dist = fit_with(&cache_dist, 2);
+
+        assert_eq!(sp.components.len(), dist.components.len(), "backend {backend}");
+        for (a, b) in sp.components.iter().zip(&dist.components) {
+            assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "λ diverged on {backend}");
+            assert_eq!(a.phi.to_bits(), b.phi.to_bits(), "φ diverged on {backend}");
+            assert_eq!(
+                a.explained_variance.to_bits(),
+                b.explained_variance.to_bits(),
+                "explained variance diverged on {backend}"
+            );
+            assert_eq!(a.pc.support, b.pc.support, "support diverged on {backend}");
+            for (x, y) in a.pc.vector.iter().zip(&b.pc.vector) {
+                assert_eq!(x.to_bits(), y.to_bits(), "loadings diverged on {backend}");
+            }
+        }
+        std::fs::remove_dir_all(&cache_sp).ok();
+        std::fs::remove_dir_all(&cache_dist).ok();
+    }
+}
+
+/// Shared scaffolding for the CLI kill matrix: generate a 400-doc file
+/// corpus (13 chunks at 32 docs; shard_docs 64 → 7 two-chunk shards)
+/// and return (root, run args builder output).
+fn kill_fixture(name: &str) -> (PathBuf, String, String) {
+    let root = tmp(name);
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let corpus = root.join("corpus.txt.gz");
+    let corpus_s = corpus.display().to_string();
+    let (_, ok, text) = run_cli(
+        &["gen", "--out", &corpus_s, "--preset", "nytimes", "--docs", "400", "--vocab", "1500"],
+        &[],
+    );
+    assert!(ok, "{text}");
+    // chunk_docs is a config-file knob; the dist knobs ride on flags
+    // because `PipelineConfig::load` validates the file *before* flag
+    // overrides land (dist.workers > 0 demands a cache_dir).
+    let cfg = root.join("dist.toml");
+    std::fs::write(&cfg, "[stream]\nchunk_docs = 32\n").unwrap();
+    (root, corpus_s, cfg.display().to_string())
+}
+
+fn kill_run_args<'a>(
+    corpus: &'a str,
+    cfg: &'a str,
+    cache: &'a str,
+    dist_workers: &'a str,
+) -> Vec<&'a str> {
+    vec![
+        "run", "--config", cfg, "--input", corpus, "--pcs", "1", "--max-reduced", "32",
+        "--cache-dir", cache, "--dist-workers", dist_workers, "--dist-shard-docs", "64",
+    ]
+}
+
+#[test]
+fn cli_worker_killed_mid_shard_resumes_only_that_shard_bitwise() {
+    let (root, corpus_s, cfg_s) = kill_fixture("kill_worker");
+    let killed = root.join("cache_killed");
+    let clean = root.join("cache_clean");
+    let killed_s = killed.display().to_string();
+    let clean_s = clean.display().to_string();
+
+    // Reference: a never-killed distributed run.
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &clean_s, "1"), &[]);
+    assert!(ok, "{text}");
+    let ckpt_clean = std::fs::read(lspv(&clean).expect("clean checkpoint")).unwrap();
+
+    // Kill the worker for shard 2 mid-write of its result file. Shards
+    // 0-1 and 3-6 complete; the run ends with shard 2 retryable.
+    let (code, ok, text) = run_cli(
+        &kill_run_args(&corpus_s, &cfg_s, &killed_s, "1"),
+        &[("LSSPCA_FAULTS", "wkill:distshard2@8")],
+    );
+    assert!(!ok, "the scripted worker kill must fail the run:\n{text}");
+    assert_eq!(code, Some(6), "shard failures surface as corpus errors:\n{text}");
+    assert!(text.contains("retryable"), "{text}");
+    assert!(lspv(&killed).is_none(), "no checkpoint may exist after a failed pass");
+
+    // Resume in-process with a counting observer: exactly ONE shard
+    // (the failed one) streams again — adopted shards are silent.
+    set_worker_bin();
+    let cfg = PipelineConfig {
+        input: corpus_s.clone(),
+        chunk_docs: 32,
+        max_reduced: 32,
+        cache_dir: killed_s.clone(),
+        dist_workers: 1,
+        dist_shard_docs: 64,
+        ..Default::default()
+    };
+    let obs = Arc::new(CountingProgress::new());
+    let mut sess = SessionBuilder::from_config(cfg).observer(Arc::clone(&obs)).build().unwrap();
+    sess.stream().unwrap();
+    assert_eq!(
+        obs.reads(Stage::Stream),
+        1,
+        "resume must re-execute only the killed shard, not re-read completed ones"
+    );
+    let ckpt_resumed = std::fs::read(lspv(&killed).expect("checkpoint after resume")).unwrap();
+    assert_eq!(ckpt_clean, ckpt_resumed, "resumed pass must be bitwise identical");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cli_every_worker_killed_then_rerun_matches_clean_run() {
+    let (root, corpus_s, cfg_s) = kill_fixture("kill_all");
+    let killed = root.join("cache_killed");
+    let clean = root.join("cache_clean");
+    let killed_s = killed.display().to_string();
+    let clean_s = clean.display().to_string();
+
+    // `distshard` (no index) matches every worker's result-file stream:
+    // all 7 shards die in their header write, all land retryable.
+    let (code, ok, text) = run_cli(
+        &kill_run_args(&corpus_s, &cfg_s, &killed_s, "2"),
+        &[("LSSPCA_FAULTS", "wkill:distshard@8")],
+    );
+    assert!(!ok, "{text}");
+    assert_eq!(code, Some(6), "{text}");
+    assert!(text.contains("shard(s) failed"), "{text}");
+
+    // Faultless rerun recovers; clean reference run in a fresh cache.
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &killed_s, "2"), &[]);
+    assert!(ok, "{text}");
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &clean_s, "2"), &[]);
+    assert!(ok, "{text}");
+    let a = std::fs::read(lspv(&killed).expect("checkpoint after recovery")).unwrap();
+    let b = std::fs::read(lspv(&clean).expect("checkpoint of clean run")).unwrap();
+    assert_eq!(a, b, "post-crash rerun must produce a bitwise-identical checkpoint");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cli_coordinator_killed_between_merges_adopts_committed_shards() {
+    let (root, corpus_s, cfg_s) = kill_fixture("kill_coord");
+    let killed = root.join("cache_killed");
+    let clean = root.join("cache_clean");
+    let killed_s = killed.display().to_string();
+    let clean_s = clean.display().to_string();
+
+    // The coordinator's post-completion manifest update carries its own
+    // fault tag, so this kills the *coordinator* right after the first
+    // shard's result file is renamed into place — the
+    // committed-but-unrecorded window the adoption scan covers.
+    let (_, ok, text) = run_cli(
+        &kill_run_args(&corpus_s, &cfg_s, &killed_s, "1"),
+        &[("LSSPCA_FAULTS", "wkill:distmanifest@8")],
+    );
+    assert!(!ok, "the scripted coordinator kill must abort the run:\n{text}");
+    assert!(lspv(&killed).is_none());
+
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &killed_s, "1"), &[]);
+    assert!(ok, "{text}");
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &clean_s, "1"), &[]);
+    assert!(ok, "{text}");
+    let a = std::fs::read(lspv(&killed).expect("checkpoint after adoption")).unwrap();
+    let b = std::fs::read(lspv(&clean).expect("checkpoint of clean run")).unwrap();
+    assert_eq!(a, b, "adopted shards must merge bitwise-identically");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cli_worker_killed_in_shard_job_state_resumes_from_partial_shard() {
+    let (root, corpus_s, cfg_s) = kill_fixture("kill_jobstate");
+    let killed = root.join("cache_killed");
+    let clean = root.join("cache_clean");
+    let killed_s = killed.display().to_string();
+    let clean_s = clean.display().to_string();
+
+    // Workers persist per-shard job state after every chunk; dying in
+    // that write leaves a partial `.part` result whose committed prefix
+    // the rerun's worker resumes instead of restarting the shard.
+    let (code, ok, text) = run_cli(
+        &kill_run_args(&corpus_s, &cfg_s, &killed_s, "1"),
+        &[("LSSPCA_FAULTS", "wkill:jobstate@8")],
+    );
+    assert!(!ok, "{text}");
+    assert_eq!(code, Some(6), "{text}");
+
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &killed_s, "1"), &[]);
+    assert!(ok, "{text}");
+    let (_, ok, text) = run_cli(&kill_run_args(&corpus_s, &cfg_s, &clean_s, "1"), &[]);
+    assert!(ok, "{text}");
+    let a = std::fs::read(lspv(&killed).expect("checkpoint after resume")).unwrap();
+    let b = std::fs::read(lspv(&clean).expect("checkpoint of clean run")).unwrap();
+    assert_eq!(a, b, "partial-shard resume must be bitwise identical");
+    std::fs::remove_dir_all(&root).ok();
+}
+
+#[test]
+fn cli_dist_dead_letter_dedups_across_workers_and_matches_single_process() {
+    let root = tmp("dist_dlq");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let corpus = root.join("corpus.txt");
+    let corpus_s = corpus.display().to_string();
+    let (_, ok, text) = run_cli(
+        &["gen", "--out", &corpus_s, "--preset", "nytimes", "--docs", "300", "--vocab", "1200"],
+        &[],
+    );
+    assert!(ok, "{text}");
+    // Three malformed records at the top of the data section — inside
+    // shard 0's range, but *every* worker re-reads this prefix while
+    // seeking to its own shard, so each quarantines all three.
+    let txt = std::fs::read_to_string(&corpus).unwrap();
+    let mut lines: Vec<&str> = txt.lines().collect();
+    lines.splice(3..3, ["0 5 1", "1 999999 2", "1 7 x"]);
+    std::fs::write(&corpus, lines.join("\n") + "\n").unwrap();
+    let cfg = root.join("dist.toml");
+    std::fs::write(&cfg, "[stream]\nchunk_docs = 32\n").unwrap();
+    let cfg_s = cfg.display().to_string();
+
+    // Distributed run, 5 shards × 2 workers: completes, and the merged
+    // queue holds each bad record ONCE (offset dedup), not once per
+    // worker that saw it.
+    let cache = root.join("cache_dist");
+    let cache_s = cache.display().to_string();
+    let dlq = root.join("dlq.jsonl");
+    let dlq_s = dlq.display().to_string();
+    let (_, ok, text) = run_cli(
+        &[
+            "run", "--config", &cfg_s, "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+            "--cache-dir", &cache_s, "--dist-workers", "2", "--dist-shard-docs", "64",
+            "--max-bad-records", "10", "--dead-letter-path", &dlq_s,
+        ],
+        &[],
+    );
+    assert!(ok, "{text}");
+    assert!(text.contains("quarantined"), "{text}");
+
+    let (_, ok, text) = run_cli(&["dlq", "--path", &dlq_s], &[]);
+    assert!(ok, "{text}");
+    assert!(text.contains("3 quarantined records"), "cross-worker dedup failed:\n{text}");
+    for reason in ["zero-id", "word-out-of-range", "bad-count"] {
+        assert!(text.contains(reason), "missing {reason}:\n{text}");
+    }
+    assert!(!text.contains("WARNING"), "all merged records must pass their crc:\n{text}");
+
+    // `dlq --retry` parity: the merged queue classifies exactly like a
+    // single-process one — nothing salvageable here.
+    let (code, ok, text) =
+        run_cli(&["dlq", "--path", &dlq_s, "--retry", "--vocab-size", "1200"], &[]);
+    assert!(!ok);
+    assert_eq!(code, Some(6), "{text}");
+    assert!(text.contains("0 recoverable / 3 permanently malformed"), "{text}");
+
+    // Single-process reference on the same damaged corpus: the same
+    // count and classification.
+    let cache_sp = root.join("cache_sp");
+    let cache_sp_s = cache_sp.display().to_string();
+    let dlq_sp = root.join("dlq_sp.jsonl");
+    let dlq_sp_s = dlq_sp.display().to_string();
+    let (_, ok, text) = run_cli(
+        &[
+            "run", "--config", &cfg_s, "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+            "--cache-dir", &cache_sp_s, "--max-bad-records", "10", "--dead-letter-path", &dlq_sp_s,
+        ],
+        &[],
+    );
+    assert!(ok, "{text}");
+    let (_, ok, text) = run_cli(&["dlq", "--path", &dlq_sp_s], &[]);
+    assert!(ok, "{text}");
+    assert!(text.contains("3 quarantined records"), "{text}");
+
+    // A budget below the damage fails the shards that hit it, with the
+    // corpus exit code and the manifest left retryable.
+    let cache_tight = root.join("cache_tight");
+    let cache_tight_s = cache_tight.display().to_string();
+    let dlq_tight = root.join("dlq_tight.jsonl");
+    let dlq_tight_s = dlq_tight.display().to_string();
+    let (code, ok, text) = run_cli(
+        &[
+            "run", "--config", &cfg_s, "--input", &corpus_s, "--pcs", "1", "--max-reduced", "32",
+            "--cache-dir", &cache_tight_s, "--dist-workers", "2", "--dist-shard-docs", "64",
+            "--max-bad-records", "2", "--dead-letter-path", &dlq_tight_s,
+        ],
+        &[],
+    );
+    assert!(!ok);
+    assert_eq!(code, Some(6), "{text}");
+    assert!(text.contains("shard(s) failed"), "{text}");
+    std::fs::remove_dir_all(&root).ok();
+}
