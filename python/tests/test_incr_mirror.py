@@ -1,0 +1,231 @@
+"""Mirror of the incremental-corpus cross-language contracts.
+
+``rust/src/incr/mod.rs`` chains the corpus identity on every append —
+``digest_{i+1} = H("chain:{prev:016x}:{seg:016x}")`` with the crate's
+FNV-1a (``checkpoint::corpus_key``) — and persists mid-append Welford
+state as ``KIND_APPEND = 3`` LSJS job-state files (same byte layout as
+the variance kind, see ``test_fault_mirror``). Both are contracts a
+Python operator tool must reproduce to audit or garbage-collect the
+digest-keyed caches the Rust pipeline leaves behind.
+
+This mirror reimplements them from the format docs alone and checks:
+
+- FNV-1a and the canonical chain encoding against pinned vectors
+  (shared with ``incr::tests::chain_digest_is_deterministic_and_order_
+  sensitive``), including order sensitivity and zero-width formatting;
+- the KIND_APPEND LSJS image round-trips, and the kind-directed loader
+  rejects a variance snapshot at an append path (and vice versa) — the
+  exact confusion ``jobstate::load_kind`` exists to prevent;
+- the drift gate's arithmetic: the mandatory condition is
+  tolerance-independent, the quality condition is a *strict*
+  inequality on relative shift (``tol = 0`` fires on any change, an
+  unchanged profile never fires).
+"""
+
+import struct
+
+MASK = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & MASK
+    return h
+
+
+def corpus_key(identity: str) -> int:
+    """checkpoint::corpus_key — FNV-1a over the identity string."""
+    return fnv1a(identity.encode())
+
+
+def chain_digest(prev: int, seg: int) -> int:
+    """incr::chain_digest — FNV-1a over the canonical chain encoding."""
+    return corpus_key("chain:%016x:%016x" % (prev, seg))
+
+
+def rotl64(x, k):
+    k %= 64
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def xor_fold_checksum(buf):
+    acc = 0x9E3779B97F4A7C15
+    for i in range(0, len(buf), 8):
+        lane = buf[i : i + 8].ljust(8, b"\x00")
+        acc ^= rotl64(struct.unpack("<Q", lane)[0], (i // 8) % 63)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Chained digests
+# ---------------------------------------------------------------------------
+
+
+def test_chain_digest_pinned_vectors():
+    # The base identity a synthetic session derives (preset nytimes,
+    # 300 docs, 800 vocab, default seed) and one appended segment.
+    base = corpus_key("synth:nytimes-synth:300:800:20111212")
+    seg = corpus_key("parity-segment")
+    assert base == 0xE1F65B5723826D82
+    assert seg == 0x664A1CBB21B9B034
+    assert chain_digest(base, seg) == 0xA67C6AEE4B56EE10
+
+
+def test_chain_digest_is_order_sensitive_and_total():
+    base = corpus_key("synth:nytimes-synth:300:800:20111212")
+    seg = corpus_key("parity-segment")
+    # Appending A then B names a different prefix than B then A.
+    assert chain_digest(base, seg) != chain_digest(seg, base)
+    assert chain_digest(seg, base) == 0x842D4D2653C7FAAC
+    # Zero-padding is part of the canonical encoding: small digests
+    # still format to 16 hex chars, so encodings never alias.
+    assert chain_digest(0, 0) == 0x26D9201420613A5A
+    assert chain_digest(0, 0) == corpus_key(
+        "chain:0000000000000000:0000000000000000"
+    )
+
+
+def test_chain_digest_composes_per_segment():
+    # Three appends = three chain links; every prefix has a distinct
+    # digest, which is what keys job state and shard caches.
+    d0 = corpus_key("file:docword.nytimes.txt.gz:123456789")
+    d1 = chain_digest(d0, corpus_key("day-1"))
+    d2 = chain_digest(d1, corpus_key("day-2"))
+    d3 = chain_digest(d2, corpus_key("day-3"))
+    assert len({d0, d1, d2, d3}) == 4
+    # Folding day-2 before day-1 is a different corpus.
+    alt = chain_digest(chain_digest(d0, corpus_key("day-2")), corpus_key("day-1"))
+    assert alt != d2
+
+
+# ---------------------------------------------------------------------------
+# KIND_APPEND job state
+# ---------------------------------------------------------------------------
+
+MAGIC = b"LSJS"
+VERSION = 1
+KIND_VARIANCE = 1
+KIND_REDUCE = 2
+KIND_APPEND = 3
+HEADER_U64S = 7
+
+
+def lsjs_bytes(key, kind, chunk_docs, completed_chunks, docs, nnz, triples):
+    out = bytearray()
+    out += MAGIC
+    out += struct.pack("<I", VERSION)
+    out += struct.pack(
+        "<7Q", key, kind, chunk_docs, completed_chunks, docs, nnz, len(triples)
+    )
+    for n_obs, mean, m2 in triples:
+        out += struct.pack("<Qdd", n_obs, mean, m2)
+    out += struct.pack("<Q", xor_fold_checksum(out[8:]))
+    return bytes(out)
+
+
+def lsjs_load_kind(buf, key, expected_n, chunk_docs, want_kind):
+    """jobstate::load_kind's validation ladder: identical to the
+    variance loader, with the kind an explicit parameter."""
+    if len(buf) < 8 + 8 * HEADER_U64S + 8 or buf[:4] != MAGIC:
+        raise ValueError("bad magic or truncated header")
+    (version,) = struct.unpack("<I", buf[4:8])
+    if version != VERSION:
+        raise ValueError(f"version {version}, want {VERSION}")
+    payload = buf[8:-8]
+    (stored_sum,) = struct.unpack("<Q", buf[-8:])
+    if xor_fold_checksum(payload) != stored_sum:
+        raise ValueError("checksum mismatch (corrupt file)")
+    hdr = struct.unpack("<7Q", payload[: 8 * HEADER_U64S])
+    stored_key, kind, stored_chunk, completed, docs, nnz, n = hdr
+    if stored_key != key:
+        raise ValueError("corpus key mismatch — foreign job state")
+    if kind != want_kind:
+        raise ValueError(f"kind {kind}, want {want_kind}")
+    if stored_chunk != chunk_docs:
+        raise ValueError("chunk size mismatch — stale job state")
+    if len(payload) != 8 * HEADER_U64S + 24 * n:
+        raise ValueError("payload size mismatch")
+    if n != expected_n:
+        raise ValueError("dimension mismatch — stale or foreign job state")
+    return dict(completed_chunks=completed, docs=docs, nnz=nnz)
+
+
+def append_state_example():
+    chained = chain_digest(
+        corpus_key("synth:nytimes-synth:128:600:20111212"), corpus_key("kill-seg")
+    )
+    triples = [(192, 0.25, 3.5), (192, 0.0, 0.0), (192, 1.5, 12.25)]
+    return chained, lsjs_bytes(chained, KIND_APPEND, 64, 3, 192, 411, triples)
+
+
+def test_kind_append_roundtrip():
+    chained, buf = append_state_example()
+    st = lsjs_load_kind(buf, chained, 3, 64, KIND_APPEND)
+    assert st == dict(completed_chunks=3, docs=192, nnz=411)
+
+
+def test_kind_mismatch_is_an_identity_mismatch():
+    # An append loader must reject a crashed *variance* pass's snapshot
+    # sitting at the same digest — same payload shape, different pass.
+    chained, _ = append_state_example()
+    variance = lsjs_bytes(chained, KIND_VARIANCE, 64, 3, 192, 411, [(192, 0.0, 1.0)])
+    try:
+        lsjs_load_kind(variance, chained, 1, 64, KIND_APPEND)
+        raise AssertionError("variance snapshot adopted by append loader")
+    except ValueError as e:
+        assert "kind" in str(e)
+    # …and symmetrically: the variance pass never resumes append state.
+    _, append_buf = append_state_example()
+    try:
+        lsjs_load_kind(append_buf, chained, 3, 64, KIND_VARIANCE)
+        raise AssertionError("append snapshot adopted by variance loader")
+    except ValueError as e:
+        assert "kind" in str(e)
+    assert KIND_APPEND == 3 and KIND_REDUCE == 2 and KIND_VARIANCE == 1
+
+
+# ---------------------------------------------------------------------------
+# Drift gate arithmetic
+# ---------------------------------------------------------------------------
+
+
+def drift_gate(lambda_, kept, kept_variances, merged, tol):
+    """incr::drift_gate — mandatory on any eliminated feature crossing
+    λ, quality on a *strict* relative-shift exceedance."""
+    kept_set = set(kept)
+    mandatory = any(
+        v > lambda_ for j, v in enumerate(merged) if j not in kept_set
+    )
+    max_shift = 0.0
+    for r, j in enumerate(kept):
+        old = kept_variances[r]
+        shift = abs(merged[j] - old) / max(old, 1e-12)
+        max_shift = max(max_shift, shift)
+    return mandatory, max_shift, mandatory or max_shift > tol
+
+
+def test_drift_gate_mandatory_ignores_tolerance():
+    # Feature 2 was eliminated at λ = 1.0; its merged variance rose
+    # above λ, so the gate fires at any tolerance.
+    kept, kept_var = [0, 1], [4.0, 2.0]
+    merged = [4.0, 2.0, 1.5]
+    for tol in (0.0, 0.5, 1e9):
+        mandatory, _, fired = drift_gate(1.0, kept, kept_var, merged, tol)
+        assert mandatory and fired
+
+
+def test_drift_gate_quality_is_strict():
+    kept, kept_var = [0, 1], [4.0, 2.0]
+    # Kept feature 0 shifted by exactly 12.5% (0.5/4.0 — exact in
+    # binary, so "at tolerance" is testable); eliminated stays below λ.
+    merged = [4.5, 2.0, 0.5]
+    mandatory, max_shift, fired = drift_gate(1.0, kept, kept_var, merged, 0.125)
+    assert not mandatory and max_shift == 0.125
+    assert not fired  # strictly-greater: a shift AT tol does not fire
+    assert drift_gate(1.0, kept, kept_var, merged, 0.124)[2]
+    # tol = 0 fires on any change at all — the forced-parity regime —
+    # while a bit-identical profile stays quiet even at tol = 0.
+    assert drift_gate(1.0, kept, kept_var, merged, 0.0)[2]
+    assert not drift_gate(1.0, kept, kept_var, [4.0, 2.0, 0.5], 0.0)[2]

@@ -250,6 +250,8 @@ const KNOWN_KEYS: &[(&str, &str)] = &[
     ("robustness", "faults"),
     ("dist", "workers"),
     ("dist", "shard_docs"),
+    ("incremental", "drift_tol"),
+    ("incremental", "watch_poll_ms"),
 ];
 
 /// Levenshtein edit distance (the strings involved are tiny).
@@ -515,6 +517,18 @@ pub struct PipelineConfig {
     /// shard_docs`; 0 = auto: 8 × `stream.chunk_docs`). Rounded up to a
     /// chunk multiple so shard boundaries never split a chunk.
     pub dist_shard_docs: u64,
+    /// Drift tolerance for incremental appends (`[incremental]
+    /// drift_tol`): the largest relative per-feature variance shift an
+    /// appended segment may cause among *kept* features before the
+    /// Thm-2.1 elimination is re-run from scratch. Below it the cached
+    /// kept-feature set is provably still valid and reused (see
+    /// [`crate::incr::drift_gate`]); 0.0 forces re-elimination on every
+    /// append (the bitwise-parity setting).
+    pub incr_drift_tol: f64,
+    /// Poll interval in ms for the `lsspca watch` corpus daemon
+    /// (`[incremental] watch_poll_ms`) — how often the input file's
+    /// `(len, mtime)` signature is checked for growth.
+    pub incr_watch_poll_ms: u64,
 }
 
 impl Default for PipelineConfig {
@@ -566,6 +580,8 @@ impl Default for PipelineConfig {
             robust_faults: String::new(),
             dist_workers: 0,
             dist_shard_docs: 0,
+            incr_drift_tol: 0.05,
+            incr_watch_poll_ms: 1000,
         }
     }
 }
@@ -642,6 +658,12 @@ impl PipelineConfig {
             robust_faults: doc.str_or("robustness", "faults", &d.robust_faults)?,
             dist_workers: doc.usize_or("dist", "workers", d.dist_workers)?,
             dist_shard_docs: doc.u64_or("dist", "shard_docs", d.dist_shard_docs)?,
+            incr_drift_tol: doc.f64_or("incremental", "drift_tol", d.incr_drift_tol)?,
+            incr_watch_poll_ms: doc.u64_or(
+                "incremental",
+                "watch_poll_ms",
+                d.incr_watch_poll_ms,
+            )?,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -745,6 +767,9 @@ impl PipelineConfig {
             if let Err(e) = crate::util::faultinject::FaultPlan::parse(&self.robust_faults) {
                 return bad(format!("robustness.faults: {e}"));
             }
+        }
+        if !(self.incr_drift_tol >= 0.0) {
+            return bad("incremental.drift_tol must be >= 0".into());
         }
         if self.dist_workers > 0 && self.cache_dir.is_empty() {
             return bad(
@@ -866,6 +891,26 @@ lambdas = [0.1, 0.2, 0.5]
         let bad = Document::parse("[dist]\nworkers = 2").unwrap();
         let e = PipelineConfig::from_document(&bad).unwrap_err().to_string();
         assert!(e.contains("cache_dir"), "{e}");
+    }
+
+    #[test]
+    fn incremental_section_parses_and_validates() {
+        let doc =
+            Document::parse("[incremental]\ndrift_tol = 0.1\nwatch_poll_ms = 50").unwrap();
+        let cfg = PipelineConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.incr_drift_tol, 0.1);
+        assert_eq!(cfg.incr_watch_poll_ms, 50);
+        // defaults: 5% drift tolerance, 1 s poll
+        let d = PipelineConfig::default();
+        assert_eq!(d.incr_drift_tol, 0.05);
+        assert_eq!(d.incr_watch_poll_ms, 1000);
+        // drift_tol = 0.0 is the bitwise-parity setting, not an error
+        let zero = Document::parse("[incremental]\ndrift_tol = 0.0").unwrap();
+        assert_eq!(PipelineConfig::from_document(&zero).unwrap().incr_drift_tol, 0.0);
+        // negative (or NaN) tolerances are config errors
+        let bad = Document::parse("[incremental]\ndrift_tol = -0.5").unwrap();
+        let e = PipelineConfig::from_document(&bad).unwrap_err().to_string();
+        assert!(e.contains("drift_tol"), "{e}");
     }
 
     #[test]

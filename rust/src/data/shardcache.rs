@@ -410,6 +410,75 @@ pub fn write(
     Ok(manifest)
 }
 
+/// Write the cache for `new_key` reusing a previous manifest's *column
+/// partition* — the incremental-append path.
+///
+/// Appending documents adds rows to the reduced CSR but leaves the
+/// feature (column) axis untouched, so instead of re-planning shards
+/// from scratch the new cache keeps `old`'s `(col_start, ncols)` ranges.
+/// Shard payloads embed the row count and the digests, so whole files
+/// cannot be reused — but for every column range **no appended document
+/// touched**, the CSC array section of the payload (everything past the
+/// 7-word header) is byte-for-byte identical to the old shard's, and
+/// shard sizes stay stable across appends (pinned by
+/// `extend_keeps_ranges_and_untouched_column_payloads`). Errors if the
+/// reduced column count changed (that is a re-elimination: [`write`] a
+/// fresh cache instead).
+pub fn extend(
+    dir: &Path,
+    old: &ShardManifest,
+    new_key: &ShardCacheKey,
+    csr: &CsrMatrix,
+    total_docs: u64,
+) -> Result<ShardManifest, LsspcaError> {
+    if old.nhat != csr.cols {
+        return Err(LsspcaError::cache(format!(
+            "shard extend: reduced column count changed ({} -> {}); rewrite the cache",
+            old.nhat, csr.cols
+        )));
+    }
+    let (mean, diag) = crate::covop::reduced_means_and_diag(csr, total_docs);
+    let csc = csr.to_csc();
+    let mut shards = Vec::with_capacity(old.shards.len());
+    for (idx, meta) in old.shards.iter().enumerate() {
+        let (col_start, ncols) = (meta.col_start, meta.ncols);
+        let (lo, hi) = (csc.colptr[col_start], csc.colptr[col_start + ncols]);
+        let mut payload = Vec::with_capacity(64 + shard_payload_bytes(ncols, hi - lo));
+        put_u64(&mut payload, new_key.corpus_digest);
+        put_u64(&mut payload, new_key.elim_digest);
+        put_u64(&mut payload, idx as u64);
+        put_u64(&mut payload, col_start as u64);
+        put_u64(&mut payload, ncols as u64);
+        put_u64(&mut payload, csr.rows as u64);
+        put_u64(&mut payload, (hi - lo) as u64);
+        for &p in &csc.colptr[col_start..=col_start + ncols] {
+            put_u64(&mut payload, (p - lo) as u64);
+        }
+        for &r in &csc.rowidx[lo..hi] {
+            payload.extend_from_slice(&r.to_le_bytes());
+        }
+        for &v in &csc.values[lo..hi] {
+            put_f64(&mut payload, v);
+        }
+        let sum = checksum(&payload);
+        write_framed(&shard_path(dir, new_key, idx), SHARD_MAGIC, "shard", &payload)?;
+        shards.push(ShardMeta { col_start, ncols, nnz: hi - lo, checksum: sum });
+    }
+    let manifest = ShardManifest {
+        key: *new_key,
+        total_docs,
+        rows: csr.rows,
+        nhat: csr.cols,
+        nnz: csr.nnz(),
+        shard_bytes: old.shard_bytes,
+        shards,
+        mean,
+        diag,
+    };
+    write_manifest(dir, &manifest)?;
+    Ok(manifest)
+}
+
 fn write_manifest(dir: &Path, man: &ShardManifest) -> Result<(), LsspcaError> {
     let mut payload = Vec::new();
     put_u64(&mut payload, man.key.corpus_digest);
@@ -802,6 +871,93 @@ mod tests {
         assert!(verify_shards(&dir, &man, 2).is_err());
         std::fs::write(&path, &good).unwrap();
         verify_shards(&dir, &man, 2).unwrap();
+    }
+
+    #[test]
+    fn extend_keeps_ranges_and_untouched_column_payloads() {
+        let dir = tmpdir("ext");
+        let (rows, cols) = (30usize, 8usize);
+        // deterministic base triplets, regenerated for the extended build
+        let base_entries = |t: &mut TripletMatrix| {
+            let mut rng = Rng::seed_from(42);
+            for r in 0..rows {
+                for c in 0..cols {
+                    if rng.bool(0.3) {
+                        t.push(r, c, (1 + rng.below(6)) as f64);
+                    }
+                }
+            }
+        };
+        let mut tb = TripletMatrix::new(rows, cols);
+        base_entries(&mut tb);
+        let base = tb.to_csr();
+        let k_old = key(100, 7);
+        // ~1 column per shard at this budget → most ranges miss cols 0/1
+        let old = write(&dir, &k_old, &base, rows as u64, 128).unwrap();
+        assert!(old.shards.len() > 2, "want several shards");
+
+        // append 3 docs touching ONLY columns 0 and 1
+        let mut te = TripletMatrix::new(rows + 3, cols);
+        base_entries(&mut te);
+        for i in 0..3 {
+            te.push(rows + i, 0, 2.0);
+            te.push(rows + i, 1, 3.0);
+        }
+        let ext = te.to_csr();
+        let k_new = key(200, 7);
+        let new = extend(&dir, &old, &k_new, &ext, rows as u64 + 3).unwrap();
+
+        // the column partition is reused verbatim; shape bookkeeping moves
+        let old_ranges: Vec<(usize, usize)> =
+            old.shards.iter().map(|s| (s.col_start, s.ncols)).collect();
+        let new_ranges: Vec<(usize, usize)> =
+            new.shards.iter().map(|s| (s.col_start, s.ncols)).collect();
+        assert_eq!(new_ranges, old_ranges);
+        assert_eq!(new.rows, rows + 3);
+        assert_eq!(new.nnz, ext.nnz());
+        assert_eq!(new.shard_bytes, old.shard_bytes);
+
+        // untouched column ranges: the CSC section of the payload — past
+        // the 8-byte frame header and 56-byte (7×u64) shard header, before
+        // the 8-byte checksum trailer — is byte-for-byte the old shard's
+        let mut untouched_checked = 0;
+        for (idx, meta) in new.shards.iter().enumerate() {
+            let ob = std::fs::read(shard_path(&dir, &k_old, idx)).unwrap();
+            let nb = std::fs::read(shard_path(&dir, &k_new, idx)).unwrap();
+            if meta.col_start >= 2 {
+                assert_eq!(
+                    &ob[8 + 56..ob.len() - 8],
+                    &nb[8 + 56..nb.len() - 8],
+                    "shard {idx} (cols {}..{}) payload changed",
+                    meta.col_start,
+                    meta.col_start + meta.ncols
+                );
+                untouched_checked += 1;
+            }
+        }
+        assert!(untouched_checked > 0, "no untouched shard exercised the pin");
+
+        // the extended cache is a valid cache: reopen + bitwise column check
+        let reopened = open(&dir, &k_new).unwrap().expect("manifest must exist");
+        assert_eq!(reopened, new);
+        let csc = ext.to_csc();
+        for (idx, meta) in new.shards.iter().enumerate() {
+            let block = load_shard(&dir, &new, idx).unwrap();
+            for c in 0..block.ncols {
+                let got: Vec<(usize, u64)> =
+                    block.col(c).map(|(r, v)| (r, v.to_bits())).collect();
+                let want: Vec<(usize, u64)> =
+                    csc.col(meta.col_start + c).map(|(r, v)| (r, v.to_bits())).collect();
+                assert_eq!(got, want, "column {}", meta.col_start + c);
+            }
+        }
+
+        // a changed column count is a re-elimination, not an extension
+        let mut tw = TripletMatrix::new(rows + 3, cols + 1);
+        base_entries(&mut tw);
+        tw.push(rows, cols, 1.0);
+        let err = extend(&dir, &old, &key(300, 7), &tw.to_csr(), rows as u64 + 3).unwrap_err();
+        assert!(err.to_string().contains("column count changed"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,789 @@
+//! Incremental-corpus subsystem: append-only covariance updates.
+//!
+//! Production corpora grow. The paper's pipeline (variance pass →
+//! Thm-2.1 elimination → reduced covariance → BCA) is built from
+//! mergeable accumulators, so an appended docword segment does not have
+//! to force a cold re-stream: this module keeps the *master Welford
+//! accumulator* of the base corpus alive between fits and folds new
+//! segments into it in global chunk order — bitwise-identical to the
+//! resumable variance pass over the concatenated corpus (pinned by the
+//! `append_fold_matches_cold_resumable_pass` test below).
+//!
+//! Three invariants make the whole thing safe:
+//!
+//! 1. **Chained digest.** Every successful append advances the corpus
+//!    identity `digest_{i+1} = H(digest_i ‖ segment_digest)` (see
+//!    [`chain_digest`]). All caches keyed by corpus digest (checkpoints,
+//!    job state, the shard cache) therefore never confuse an appended
+//!    corpus with its base, and a failed append leaves the digest — and
+//!    every cache keyed by it — untouched.
+//! 2. **Chunk-aligned fold.** Appended documents are re-buffered into
+//!    exactly the `chunk_docs`-sized chunks a cold stream over the
+//!    concatenated corpus would produce, each folded into a *fresh*
+//!    [`FeatureMoments`] and merged into the master in order — the same
+//!    structure as [`crate::stream::resumable_variance_pass`], so the
+//!    merged moments are bitwise-identical to a cold pass.
+//! 3. **Drift gate.** The Thm-2.1 kept set stays provably valid as long
+//!    as (a) no eliminated feature's merged variance rises above λ and
+//!    (b) the kept variances have not shifted past `[incremental]
+//!    drift_tol`. [`drift_gate`] checks both; only when it fires does
+//!    the session re-run elimination (the monotone re-elimination path:
+//!    newly loud features enter the kept set, everything is recomputed
+//!    from the merged variances).
+//!
+//! The [`watch`] submodule turns this into a polling daemon
+//! (`lsspca watch`) that feeds the serving layer's hot-reload watcher.
+
+pub mod watch;
+
+use crate::checkpoint;
+use crate::data::docword::{Doc, DocChunk};
+use crate::data::shardcache::ShardCacheKey;
+use crate::data::sparse::CsrMatrix;
+use crate::elim::SafeElimination;
+use crate::error::LsspcaError;
+use crate::moments::{FeatureMoments, FeatureVariances};
+use crate::stream::{ChunkSource, StreamStats};
+
+// ---------------------------------------------------------------------------
+// Chained digest
+// ---------------------------------------------------------------------------
+
+/// Advance the chained corpus digest: `H(prev ‖ segment)`.
+///
+/// The hash is the same FNV-1a used for every other corpus identity in
+/// the crate ([`checkpoint::corpus_key`]), applied to a canonical text
+/// encoding of the two inputs. Chaining is order-sensitive — appending
+/// segments A then B yields a different digest than B then A — and the
+/// digest only advances on a *successful* append, so a crashed or
+/// rejected segment can never poison downstream cache keys.
+pub fn chain_digest(prev: u64, seg: u64) -> u64 {
+    checkpoint::corpus_key(&format!("chain:{prev:016x}:{seg:016x}"))
+}
+
+// ---------------------------------------------------------------------------
+// Drift gate
+// ---------------------------------------------------------------------------
+
+/// Outcome of the drift gate for one appended segment.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftReport {
+    /// An eliminated feature's merged variance rose above λ — the
+    /// Thm-2.1 certificate for the old kept set no longer holds and
+    /// re-elimination is *mandatory* regardless of tolerance.
+    pub mandatory: bool,
+    /// Largest relative shift of any kept feature's variance vs. the
+    /// value recorded at elimination time.
+    pub max_shift: f64,
+    /// Whether the gate fired (mandatory, or `max_shift > drift_tol`).
+    pub fired: bool,
+}
+
+/// Decide whether an append invalidates the current elimination.
+///
+/// `elim` is the plan in force (with the kept variances recorded when
+/// it was computed), `merged` the variances after folding the segment,
+/// and `tol` the `[incremental] drift_tol` quality threshold. The
+/// mandatory condition — some *non*-kept feature now has variance
+/// above `elim.lambda` — fires even at `tol = ∞`, because Thm 2.1 only
+/// certifies zero loadings for features below λ.
+pub fn drift_gate(elim: &SafeElimination, merged: &FeatureVariances, tol: f64) -> DriftReport {
+    let n = merged.variance.len();
+    debug_assert_eq!(n, elim.original, "drift gate: feature count mismatch");
+    let mut is_kept = vec![false; n];
+    for &j in &elim.kept {
+        is_kept[j] = true;
+    }
+    // Mandatory: a feature we eliminated is no longer safely below λ.
+    let mandatory = merged
+        .variance
+        .iter()
+        .enumerate()
+        .any(|(j, &v)| !is_kept[j] && v > elim.lambda);
+    // Quality: how far the survivors drifted from the variances the
+    // plan (and the λ-search bracket derived from them) was built on.
+    let mut max_shift = 0.0f64;
+    for (r, &j) in elim.kept.iter().enumerate() {
+        let old = elim.kept_variances[r];
+        let shift = (merged.variance[j] - old).abs() / old.max(1e-12);
+        if shift > max_shift {
+            max_shift = shift;
+        }
+    }
+    DriftReport { mandatory, max_shift, fired: mandatory || max_shift > tol }
+}
+
+// ---------------------------------------------------------------------------
+// Append report
+// ---------------------------------------------------------------------------
+
+/// What one `Session::append` call did.
+#[derive(Clone, Copy, Debug)]
+pub struct AppendReport {
+    /// Documents folded from the segment.
+    pub docs: u64,
+    /// `(word, count)` pairs folded from the segment.
+    pub nnz: u64,
+    /// Whether the drift gate fired (elimination will re-run).
+    pub drift: bool,
+    /// The chained corpus digest after this append.
+    pub digest: u64,
+    /// Wall time of the append fold.
+    pub seconds: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Incremental state
+// ---------------------------------------------------------------------------
+
+/// Reduced CSR cached across appends, tagged with the elimination it
+/// was built under so a re-elimination invalidates it.
+#[derive(Clone)]
+pub(crate) struct CachedCsr {
+    /// Canonical reduced matrix over documents `[0, docs)`.
+    pub(crate) csr: CsrMatrix,
+    /// Documents covered (base + appended at build time).
+    pub(crate) docs: u64,
+    /// `shardcache::elim_digest` of the plan the columns map through.
+    pub(crate) elim_digest: u64,
+}
+
+/// Live incremental state held by a `Session` between appends.
+///
+/// Owns the master Welford accumulator (complete chunks only), the
+/// re-buffer tail (documents short of a full chunk), and an in-memory
+/// replay store of every appended document — the latter is what lets
+/// both the zero-read CSR extension *and* a drift-forced full
+/// re-reduction run without re-reading the appended segments from
+/// their (possibly gone) sources.
+#[derive(Clone)]
+pub struct IncrState {
+    /// Master accumulator: complete chunks, merged in global order.
+    pub(crate) moments: FeatureMoments,
+    /// Pending documents of the trailing partial chunk (`< chunk_docs`).
+    pub(crate) tail: Vec<Vec<(u32, f64)>>,
+    /// Complete chunks merged into `moments` so far.
+    pub(crate) chunks_done: u64,
+    /// Chunk size of the fold (must stay fixed across appends).
+    pub(crate) chunk_docs: usize,
+    /// Documents in the base corpus (before the first append).
+    pub(crate) base_docs: u64,
+    /// Replay store: appended doc `i` has global id `base_docs + i`.
+    pub(crate) appended: Vec<Vec<(u32, f64)>>,
+    /// Chained corpus digest — advances only on successful appends.
+    pub(crate) digest: u64,
+    /// Reduced CSR reused across appends while the plan holds.
+    pub(crate) csr: Option<CachedCsr>,
+    /// Shard-cache key of the last on-disk manifest we wrote/extended,
+    /// so the next append can extend those shards instead of rewriting.
+    pub(crate) last_shard_key: Option<ShardCacheKey>,
+    /// Set when a drift-forced re-elimination happened after the last
+    /// fit — the next refit must re-run the λ-search cold.
+    pub(crate) drift_since_fit: bool,
+    /// Per-component λ values of the last completed fit (the warm path
+    /// refits at these fixed λs, skipping the search).
+    pub(crate) last_lambdas: Vec<f64>,
+}
+
+impl IncrState {
+    /// Build the incremental state by streaming the base corpus once.
+    ///
+    /// This is the one unavoidable full pass: checkpoints only store
+    /// finalized variances, and Welford *merge order* matters bitwise,
+    /// so the master accumulator has to be rebuilt chunk-by-chunk. The
+    /// fold mirrors [`crate::stream::resumable_variance_pass`] exactly
+    /// (fresh accumulator per chunk, merged in order), which is what
+    /// makes every later append bitwise-identical to a cold stream.
+    pub fn bootstrap<S: ChunkSource>(
+        source: &mut S,
+        chunk_docs: usize,
+        digest: u64,
+    ) -> Result<(IncrState, StreamStats), LsspcaError> {
+        assert!(chunk_docs >= 1);
+        let t0 = std::time::Instant::now();
+        let nf = source.num_features();
+        let mut st = IncrState {
+            moments: FeatureMoments::new(nf),
+            tail: Vec::new(),
+            chunks_done: 0,
+            chunk_docs,
+            base_docs: 0,
+            appended: Vec::new(),
+            digest,
+            csr: None,
+            last_shard_key: None,
+            drift_since_fit: false,
+            last_lambdas: Vec::new(),
+        };
+        let mut stats = StreamStats::default();
+        while let Some(chunk) = source.next_chunk(chunk_docs)? {
+            stats.docs += chunk.docs.len() as u64;
+            stats.nnz += chunk.total_nnz() as u64;
+            stats.chunks += 1;
+            for doc in chunk.docs {
+                st.buffer_doc(doc.words);
+            }
+        }
+        st.base_docs = st.total_docs();
+        stats.seconds = t0.elapsed().as_secs_f64();
+        Ok((st, stats))
+    }
+
+    /// Number of features the fold is sized for.
+    pub fn num_features(&self) -> usize {
+        self.moments.num_features()
+    }
+
+    /// Total documents folded so far (complete chunks + tail).
+    pub fn total_docs(&self) -> u64 {
+        self.moments.docs + self.tail.len() as u64
+    }
+
+    /// Total `(word, count)` pairs folded so far.
+    pub fn total_nnz(&self) -> u64 {
+        self.moments.nnz + self.tail.iter().map(|w| w.len() as u64).sum::<u64>()
+    }
+
+    /// The chained corpus digest.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Whether a drift-forced re-elimination happened since the last fit.
+    pub fn drift_since_fit(&self) -> bool {
+        self.drift_since_fit
+    }
+
+    /// Push one document into the re-buffer; fold a complete chunk.
+    fn buffer_doc(&mut self, words: Vec<(u32, f64)>) {
+        self.tail.push(words);
+        if self.tail.len() == self.chunk_docs {
+            self.fold_tail_chunk();
+        }
+    }
+
+    /// Fold the (full) tail as one fresh chunk accumulator, merged in
+    /// order — the exact structure of the resumable pass's merger.
+    fn fold_tail_chunk(&mut self) {
+        let mut fresh = FeatureMoments::new(self.num_features());
+        for words in &self.tail {
+            fresh.push_doc(words);
+        }
+        self.moments.merge(&fresh);
+        self.chunks_done += 1;
+        self.tail.clear();
+    }
+
+    /// Fold an appended segment into the master accumulator.
+    ///
+    /// Every segment document is retained in the replay store (global
+    /// ids continue from the current total). `skip_folded` documents at
+    /// the front go to the replay store *only* — they were already
+    /// merged into `moments` by a resumed job state (see
+    /// `Session::append`'s resume math: any persisted chunk count lies
+    /// strictly past the pre-append total, so the skipped prefix is
+    /// pure segment docs). `persist` fires after every `persist_every`
+    /// chunk merges with the master accumulator and the *global*
+    /// completed-chunk count, mirroring the resumable pass cadence.
+    ///
+    /// Returns `(docs, nnz)` of the full segment (including skipped).
+    pub fn append_docs<S, F>(
+        &mut self,
+        source: &mut S,
+        persist_every: u64,
+        mut persist: F,
+        skip_folded: u64,
+    ) -> Result<(u64, u64), LsspcaError>
+    where
+        S: ChunkSource,
+        F: FnMut(&FeatureMoments, u64) -> Result<(), LsspcaError>,
+    {
+        if source.num_features() != self.num_features() {
+            return Err(LsspcaError::config(format!(
+                "append: segment has {} features, session has {}",
+                source.num_features(),
+                self.num_features()
+            )));
+        }
+        let (mut docs, mut nnz) = (0u64, 0u64);
+        let mut skip = skip_folded;
+        let mut unsaved = 0u64;
+        while let Some(chunk) = source.next_chunk(self.chunk_docs)? {
+            for doc in chunk.docs {
+                docs += 1;
+                nnz += doc.words.len() as u64;
+                self.appended.push(doc.words.clone());
+                if skip > 0 {
+                    skip -= 1;
+                    continue;
+                }
+                let before = self.chunks_done;
+                self.buffer_doc(doc.words);
+                if self.chunks_done > before {
+                    unsaved += 1;
+                    if persist_every > 0 && unsaved >= persist_every {
+                        persist(&self.moments, self.chunks_done)?;
+                        unsaved = 0;
+                    }
+                }
+            }
+        }
+        if skip > 0 {
+            return Err(LsspcaError::cache(format!(
+                "append resume: job state covers {skip} more docs than the segment provides"
+            )));
+        }
+        Ok((docs, nnz))
+    }
+
+    /// Finalize the merged per-feature variances without disturbing the
+    /// running state: the tail is folded as one last (partial) fresh
+    /// chunk — exactly what the resumable pass does with a final short
+    /// chunk — into a clone of the master.
+    pub fn finalize_variances(&self) -> FeatureVariances {
+        let mut master = self.moments.clone();
+        if !self.tail.is_empty() {
+            let mut fresh = FeatureMoments::new(self.num_features());
+            for words in &self.tail {
+                fresh.push_doc(words);
+            }
+            master.merge(&fresh);
+        }
+        master.finalize()
+    }
+
+    /// Record a completed fit's per-component λs and clear the drift flag.
+    pub(crate) fn record_fit(&mut self, lambdas: Vec<f64>) {
+        self.last_lambdas = lambdas;
+        self.drift_since_fit = false;
+    }
+
+    /// Mark that elimination was invalidated by drift.
+    pub(crate) fn mark_drift(&mut self) {
+        self.drift_since_fit = true;
+        self.csr = None;
+        self.last_shard_key = None;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Segment source adapters
+// ---------------------------------------------------------------------------
+
+/// Replay appended documents out of the in-memory store, with their
+/// global document ids (`start_id + ordinal`).
+pub struct ReplaySource<'a> {
+    docs: &'a [Vec<(u32, f64)>],
+    start_id: u64,
+    pos: usize,
+    num_features: usize,
+}
+
+impl<'a> ReplaySource<'a> {
+    /// Replay `docs`, assigning ids `start_id..start_id + docs.len()`.
+    pub fn new(
+        docs: &'a [Vec<(u32, f64)>],
+        start_id: u64,
+        num_features: usize,
+    ) -> ReplaySource<'a> {
+        ReplaySource { docs, start_id, pos: 0, num_features }
+    }
+}
+
+impl ChunkSource for ReplaySource<'_> {
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
+        if self.pos >= self.docs.len() {
+            return Ok(None);
+        }
+        let end = (self.pos + max_docs).min(self.docs.len());
+        let docs = (self.pos..end)
+            .map(|i| Doc { id: (self.start_id as usize) + i, words: self.docs[i].clone() })
+            .collect();
+        self.pos = end;
+        Ok(Some(DocChunk { docs }))
+    }
+}
+
+/// Concatenate two chunk sources: all of `a`, then all of `b`.
+///
+/// Chunk boundaries at the seam may be partial; that is fine for every
+/// consumer the incremental path feeds (the reduce pass canonicalizes
+/// by document id, the dense fold is order-only), and the Welford fold
+/// never uses this adapter — it re-buffers documents itself.
+pub struct ChainSource<A: ChunkSource, B: ChunkSource> {
+    a: A,
+    b: B,
+    on_second: bool,
+}
+
+impl<A: ChunkSource, B: ChunkSource> ChainSource<A, B> {
+    /// Chain `a` then `b`; errors if their feature counts differ.
+    pub fn new(a: A, b: B) -> Result<ChainSource<A, B>, LsspcaError> {
+        if a.num_features() != b.num_features() {
+            return Err(LsspcaError::config(format!(
+                "chained sources disagree on features: {} vs {}",
+                a.num_features(),
+                b.num_features()
+            )));
+        }
+        Ok(ChainSource { a, b, on_second: false })
+    }
+}
+
+impl<A: ChunkSource, B: ChunkSource> ChunkSource for ChainSource<A, B> {
+    fn num_features(&self) -> usize {
+        self.a.num_features()
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
+        if !self.on_second {
+            if let Some(chunk) = self.a.next_chunk(max_docs)? {
+                return Ok(Some(chunk));
+            }
+            self.on_second = true;
+        }
+        self.b.next_chunk(max_docs)
+    }
+}
+
+/// Drop the first `skip` documents of a source, pass the rest through.
+///
+/// The watch daemon uses this to slice the appended suffix out of a
+/// docword file that grew in place (the reader has no seek-to-doc).
+pub struct SkipSource<S: ChunkSource> {
+    inner: S,
+    remaining: u64,
+}
+
+impl<S: ChunkSource> SkipSource<S> {
+    /// Skip the first `skip` documents of `inner`.
+    pub fn new(inner: S, skip: u64) -> SkipSource<S> {
+        SkipSource { inner, remaining: skip }
+    }
+}
+
+impl<S: ChunkSource> ChunkSource for SkipSource<S> {
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
+        loop {
+            let Some(mut chunk) = self.inner.next_chunk(max_docs)? else {
+                return Ok(None);
+            };
+            if self.remaining == 0 {
+                return Ok(Some(chunk));
+            }
+            let drop = (self.remaining as usize).min(chunk.docs.len());
+            chunk.docs.drain(..drop);
+            self.remaining -= drop as u64;
+            if !chunk.docs.is_empty() {
+                return Ok(Some(chunk));
+            }
+        }
+    }
+}
+
+/// Cap a source at its first `limit` documents.
+///
+/// In watch mode the input docword file grows *in place*, so a plain
+/// re-open of the base corpus would also stream the appended suffix and
+/// double-count it against the replay store. Wrapping the base stream
+/// in a `LimitSource` at `base_docs` restores the original prefix.
+pub struct LimitSource<S: ChunkSource> {
+    inner: S,
+    remaining: u64,
+}
+
+impl<S: ChunkSource> LimitSource<S> {
+    /// Pass through at most the first `limit` documents of `inner`.
+    pub fn new(inner: S, limit: u64) -> LimitSource<S> {
+        LimitSource { inner, remaining: limit }
+    }
+}
+
+impl<S: ChunkSource> ChunkSource for LimitSource<S> {
+    fn num_features(&self) -> usize {
+        self.inner.num_features()
+    }
+
+    fn next_chunk(&mut self, max_docs: usize) -> Result<Option<DocChunk>, LsspcaError> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        let want = (self.remaining as usize).min(max_docs);
+        let Some(mut chunk) = self.inner.next_chunk(want)? else {
+            self.remaining = 0;
+            return Ok(None);
+        };
+        if chunk.docs.len() as u64 > self.remaining {
+            chunk.docs.truncate(self.remaining as usize);
+        }
+        self.remaining -= chunk.docs.len() as u64;
+        if chunk.docs.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(chunk))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusSpec, SynthCorpus};
+    use crate::stream::{resumable_variance_pass, StreamOptions, SynthSource};
+
+    fn corpus(docs: usize) -> SynthCorpus {
+        SynthCorpus::new(CorpusSpec::nytimes().scaled(docs, 400), 7)
+    }
+
+    /// The tentpole invariant: bootstrap(base) + append(suffix) merges
+    /// bitwise-identically to the resumable pass over the grown corpus,
+    /// at a chunk size that leaves a partial tail on both sides.
+    #[test]
+    fn append_fold_matches_cold_resumable_pass() {
+        let base = corpus(230);
+        let grown = corpus(300);
+        let opts = StreamOptions { workers: 2, chunk_docs: 64, queue_depth: 4 };
+
+        let mut cold_src = SynthSource::new(&grown);
+        let (cold, cold_stats) =
+            resumable_variance_pass(&mut cold_src, opts, None, 1_000_000, |_, _| Ok(())).unwrap();
+
+        let (mut st, boot_stats) =
+            IncrState::bootstrap(&mut SynthSource::new(&base), 64, 1).unwrap();
+        assert_eq!(boot_stats.docs, 230);
+        assert_eq!(st.base_docs, 230);
+        assert_eq!(st.chunks_done, 3); // 230 = 3*64 + 38
+        assert_eq!(st.tail.len(), 38);
+
+        let mut seg = SynthSource::starting_at(&grown, 230);
+        let (docs, nnz) = st.append_docs(&mut seg, 1_000_000, |_, _| Ok(()), 0).unwrap();
+        assert_eq!(docs, 70);
+        assert!(nnz > 0);
+        assert_eq!(st.total_docs(), 300);
+        assert_eq!(st.appended.len(), 70);
+
+        let merged = st.finalize_variances();
+        assert_eq!(cold_stats.docs, 300);
+        assert_eq!(merged.docs, cold.docs);
+        for j in 0..merged.variance.len() {
+            assert_eq!(merged.variance[j].to_bits(), cold.variance[j].to_bits(), "var {j}");
+            assert_eq!(merged.mean[j].to_bits(), cold.mean[j].to_bits(), "mean {j}");
+            assert_eq!(
+                merged.second_moment[j].to_bits(),
+                cold.second_moment[j].to_bits(),
+                "m2 {j}"
+            );
+        }
+        // nnz bookkeeping matches the cold pass too.
+        assert_eq!(st.total_nnz(), cold_stats.nnz);
+    }
+
+    /// Resume parity: fold a prefix of the segment, persist, then start
+    /// over from the persisted moments with `skip_folded` — bitwise
+    /// identical to the uninterrupted fold, and the replay store is
+    /// complete either way.
+    #[test]
+    fn append_resume_from_persisted_moments_is_bitwise() {
+        let base = corpus(128); // exactly 2 chunks of 64: empty tail
+        let grown = corpus(320);
+
+        // Uninterrupted reference.
+        let (mut full, _) = IncrState::bootstrap(&mut SynthSource::new(&base), 64, 9).unwrap();
+        full.append_docs(&mut SynthSource::starting_at(&grown, 128), 1_000_000, |_, _| Ok(()), 0)
+            .unwrap();
+
+        // Interrupted: persist after every merge, fail after the first.
+        let (mut st, _) = IncrState::bootstrap(&mut SynthSource::new(&base), 64, 9).unwrap();
+        let saved: std::cell::RefCell<Option<(FeatureMoments, u64)>> =
+            std::cell::RefCell::new(None);
+        let err = st
+            .append_docs(
+                &mut SynthSource::starting_at(&grown, 128),
+                1,
+                |m, done| {
+                    if saved.borrow().is_some() {
+                        return Err(LsspcaError::io("simulated kill"));
+                    }
+                    *saved.borrow_mut() = Some((m.clone(), done));
+                    Ok(())
+                },
+                0,
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("simulated kill"));
+
+        // Fresh state resumes from the persisted accumulator: skip the
+        // segment docs already covered by the saved chunk count.
+        let (moments, done) = saved.into_inner().unwrap();
+        let (mut res, _) = IncrState::bootstrap(&mut SynthSource::new(&base), 64, 9).unwrap();
+        let covered = done * 64; // total docs in complete chunks
+        let skip = covered - res.total_docs();
+        res.moments = moments;
+        res.chunks_done = done;
+        res.tail.clear();
+        res.append_docs(&mut SynthSource::starting_at(&grown, 128), 1_000_000, |_, _| Ok(()), skip)
+            .unwrap();
+
+        let a = full.finalize_variances();
+        let b = res.finalize_variances();
+        for j in 0..a.variance.len() {
+            assert_eq!(a.variance[j].to_bits(), b.variance[j].to_bits());
+        }
+        assert_eq!(full.appended.len(), res.appended.len());
+        for (x, y) in full.appended.iter().zip(&res.appended) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn chain_digest_is_deterministic_and_order_sensitive() {
+        let a = checkpoint::corpus_key("segment-a");
+        let b = checkpoint::corpus_key("segment-b");
+        assert_eq!(chain_digest(a, b), chain_digest(a, b));
+        assert_ne!(chain_digest(a, b), chain_digest(b, a));
+        assert_ne!(chain_digest(a, b), a);
+        assert_ne!(chain_digest(a, b), b);
+        // Chaining twice differs from chaining once (no fixed point).
+        let ab = chain_digest(a, b);
+        assert_ne!(chain_digest(ab, b), ab);
+        // Cross-language pins shared with python/tests/test_incr_mirror.py:
+        // the canonical encoding zero-pads to 16 hex chars.
+        assert_eq!(chain_digest(0, 0), 0x26D9201420613A5A);
+        assert_eq!(
+            chain_digest(
+                checkpoint::corpus_key("synth:nytimes-synth:300:800:20111212"),
+                checkpoint::corpus_key("parity-segment"),
+            ),
+            0xA67C6AEE4B56EE10
+        );
+    }
+
+    #[test]
+    fn drift_gate_mandatory_and_quality_paths() {
+        // Features 0,1 kept; 2,3 eliminated at λ = 1.0.
+        let elim = SafeElimination::apply(&[4.0, 2.0, 0.5, 0.2], 1.0, None);
+        assert_eq!(elim.kept, vec![0, 1]);
+
+        let fv = |v: Vec<f64>| FeatureVariances {
+            variance: v,
+            mean: vec![0.0; 4],
+            second_moment: vec![0.0; 4],
+            docs: 10,
+        };
+
+        // No movement: quiet at any tolerance.
+        let r = drift_gate(&elim, &fv(vec![4.0, 2.0, 0.5, 0.2]), 0.01);
+        assert!(!r.fired && !r.mandatory);
+
+        // Kept variance shifts 10%: fires at tol 0.05, not at tol 0.5.
+        let r = drift_gate(&elim, &fv(vec![4.4, 2.0, 0.5, 0.2]), 0.05);
+        assert!(r.fired && !r.mandatory);
+        assert!((r.max_shift - 0.1).abs() < 1e-12);
+        let r = drift_gate(&elim, &fv(vec![4.4, 2.0, 0.5, 0.2]), 0.5);
+        assert!(!r.fired);
+
+        // Eliminated feature rises above λ: mandatory even at huge tol.
+        let r = drift_gate(&elim, &fv(vec![4.0, 2.0, 1.5, 0.2]), 1e9);
+        assert!(r.fired && r.mandatory);
+    }
+
+    #[test]
+    fn replay_chain_skip_sources_compose() {
+        let grown = corpus(50);
+        // Materialize docs 30..50 as a replay store.
+        let mut suffix = Vec::new();
+        for d in 30..50 {
+            suffix.push(grown.generate_doc(d));
+        }
+        let replay = ReplaySource::new(&suffix, 30, 400);
+        let base = SynthSource::new(&corpus(30));
+        // ChainSource over (base corpus, replay) == full grown stream.
+        let mut chain = ChainSource::new(base, replay).unwrap();
+        let mut ids = Vec::new();
+        while let Some(chunk) = chain.next_chunk(16).unwrap() {
+            for doc in &chunk.docs {
+                assert_eq!(doc.words, grown.generate_doc(doc.id));
+                ids.push(doc.id);
+            }
+        }
+        assert_eq!(ids, (0..50).collect::<Vec<_>>());
+
+        // SkipSource drops exactly the first k docs, across chunk seams.
+        let mut skip = SkipSource::new(SynthSource::new(&grown), 37);
+        let mut ids = Vec::new();
+        while let Some(chunk) = skip.next_chunk(16).unwrap() {
+            for doc in &chunk.docs {
+                ids.push(doc.id);
+            }
+        }
+        assert_eq!(ids, (37..50).collect::<Vec<_>>());
+
+        // LimitSource caps at the first k docs, across chunk seams.
+        let mut lim = LimitSource::new(SynthSource::new(&grown), 37);
+        let mut ids = Vec::new();
+        while let Some(chunk) = lim.next_chunk(16).unwrap() {
+            for doc in &chunk.docs {
+                ids.push(doc.id);
+            }
+        }
+        assert_eq!(ids, (0..37).collect::<Vec<_>>());
+        // Limit past the end is harmless; limit 0 yields nothing.
+        let mut lim = LimitSource::new(SynthSource::new(&grown), 99);
+        let mut n = 0;
+        while let Some(chunk) = lim.next_chunk(16).unwrap() {
+            n += chunk.docs.len();
+        }
+        assert_eq!(n, 50);
+        let mut lim = LimitSource::new(SynthSource::new(&grown), 0);
+        assert!(lim.next_chunk(16).unwrap().is_none());
+
+        // LimitSource(base) ++ Replay(suffix) reproduces the grown stream
+        // even when the underlying file already contains the suffix —
+        // the watch-mode double-count guard.
+        let grown_src = SynthSource::new(&grown);
+        let replay = ReplaySource::new(&suffix, 30, 400);
+        let mut chain = ChainSource::new(LimitSource::new(grown_src, 30), replay).unwrap();
+        let mut ids = Vec::new();
+        while let Some(chunk) = chain.next_chunk(16).unwrap() {
+            for doc in &chunk.docs {
+                assert_eq!(doc.words, grown.generate_doc(doc.id));
+                ids.push(doc.id);
+            }
+        }
+        assert_eq!(ids, (0..50).collect::<Vec<_>>());
+
+        // Feature-count mismatch is a config error.
+        let narrow = SynthCorpus::new(CorpusSpec::nytimes().scaled(10, 300), 7);
+        let err =
+            ChainSource::new(SynthSource::new(&grown), SynthSource::new(&narrow)).unwrap_err();
+        assert!(format!("{err}").contains("features"));
+    }
+
+    #[test]
+    fn append_rejects_feature_mismatch_and_short_resume() {
+        let (mut st, _) = IncrState::bootstrap(&mut SynthSource::new(&corpus(64)), 64, 1).unwrap();
+        let narrow = SynthCorpus::new(CorpusSpec::nytimes().scaled(10, 300), 7);
+        let err = st
+            .append_docs(&mut SynthSource::new(&narrow), 0, |_, _| Ok(()), 0)
+            .unwrap_err();
+        assert!(format!("{err}").contains("features"));
+
+        // skip_folded beyond the segment length is a corrupt-resume error.
+        let tiny = corpus(70); // segment = docs 64..70
+        let err = st
+            .append_docs(&mut SynthSource::starting_at(&tiny, 64), 0, |_, _| Ok(()), 99)
+            .unwrap_err();
+        assert!(format!("{err}").contains("resume"));
+    }
+}

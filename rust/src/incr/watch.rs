@@ -1,0 +1,244 @@
+//! The `lsspca watch` daemon: keep a model artifact fresh as its
+//! docword corpus grows in place.
+//!
+//! The daemon polls the input file's `(len, mtime)` signature — the
+//! same change detector the serving layer's hot-reload watcher uses
+//! ([`crate::serve::reload::stat_sig`]) — and, when the corpus has
+//! grown, runs the incremental cycle: slice the appended suffix out of
+//! the grown file ([`SkipSource`]), fold it with [`Session::append`]
+//! (chained digest, drift gate, resumable job state), warm-refit with
+//! [`Session::refit_incremental`], and atomically rewrite the LSPM
+//! artifact ([`crate::model::Model::save`] renames a fully-fsynced file
+//! into place). Point `lsspca serve --model-path` at the same artifact
+//! and the reload watcher hot-swaps each refresh with zero dropped
+//! requests — the end-to-end pinned by `rust/tests/incremental.rs`.
+//!
+//! Failures are contained: `Session::append` commits by clone-swap, so
+//! a corrupt or half-written segment leaves the session, its chained
+//! digest, and the served artifact untouched; the daemon logs the error
+//! and retries on the next poll.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use crate::config::PipelineConfig;
+use crate::data::docword::DocwordReader;
+use crate::error::LsspcaError;
+use crate::incr::SkipSource;
+use crate::serve::reload::{stat_sig, ArtifactSig};
+use crate::session::Session;
+use crate::stream::FileSource;
+
+/// Knobs for one [`watch_corpus`] run.
+#[derive(Clone, Debug)]
+pub struct WatchOptions {
+    /// Poll interval between corpus signature checks
+    /// (`[incremental] watch_poll_ms`).
+    pub poll: Duration,
+    /// Stop after this many successful refits, counting the initial fit
+    /// (0 = run until `shutdown`).
+    pub max_refits: u64,
+    /// Where the LSPM artifact is atomically rewritten after every
+    /// refit — point the serving watcher at the same path.
+    pub model_out: PathBuf,
+}
+
+/// What a [`watch_corpus`] run did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WatchReport {
+    /// Appended segments successfully folded.
+    pub appends: u64,
+    /// Successful refits — each one rewrote the artifact.
+    pub refits: u64,
+    /// Appends on which the drift gate fired (re-elimination ran).
+    pub drifts: u64,
+}
+
+/// Run the watch daemon: fit the current corpus once and write the
+/// artifact, then poll for growth until `shutdown` (or `max_refits`).
+///
+/// Requires a file corpus (`[data] input`) — a synthetic corpus cannot
+/// grow. The session is built fresh from `cfg`, so every `[robustness]`
+/// knob (retry schedule, job state, dead-letter quarantine, fault
+/// injection) applies to the daemon's folds exactly as it would to a
+/// one-shot run.
+pub fn watch_corpus(
+    cfg: &PipelineConfig,
+    opts: &WatchOptions,
+    shutdown: &AtomicBool,
+) -> Result<WatchReport, LsspcaError> {
+    if cfg.input.is_empty() {
+        return Err(LsspcaError::config(
+            "watch: requires a docword input file (a synthetic corpus cannot grow)",
+        ));
+    }
+    let input = PathBuf::from(&cfg.input);
+    let mut session = Session::from_config(cfg.clone())?;
+    let mut report = WatchReport::default();
+
+    // Capture the signature *before* the initial fit: if the corpus
+    // grows while the fit streams it, the next poll still sees a change
+    // and folds whatever the bootstrap did not cover.
+    let mut last_sig: Option<ArtifactSig> = stat_sig(&input);
+    let fit = session.refit_incremental()?;
+    fit.model.save(&opts.model_out)?;
+    report.refits += 1;
+    crate::info!("watch: initial model written to {}", opts.model_out.display());
+    if opts.max_refits > 0 && report.refits >= opts.max_refits {
+        return Ok(report);
+    }
+
+    while !shutdown.load(Ordering::SeqCst) {
+        stepped_sleep(opts.poll, shutdown);
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let sig = stat_sig(&input);
+        if sig.is_none() || sig == last_sig {
+            continue; // unchanged, or mid-rename / gone: next poll
+        }
+        match append_growth(cfg, &input, &mut session, opts, &mut report) {
+            Ok(()) => last_sig = sig,
+            // The clone-commit in `Session::append` left the session and
+            // its chained digest untouched; the old artifact keeps
+            // serving and the next poll retries.
+            Err(e) => crate::warn_!("watch: append failed, will retry: {e}"),
+        }
+        if opts.max_refits > 0 && report.refits >= opts.max_refits {
+            break;
+        }
+    }
+    Ok(report)
+}
+
+/// One detected change: fold any appended documents, refit, rewrite the
+/// artifact. A change without growth (e.g. an in-place rewrite of the
+/// same documents) is a no-op.
+fn append_growth(
+    cfg: &PipelineConfig,
+    input: &Path,
+    session: &mut Session,
+    opts: &WatchOptions,
+    report: &mut WatchReport,
+) -> Result<(), LsspcaError> {
+    let header_docs = DocwordReader::open(input)?.header().num_docs as u64;
+    let folded = session.stats().map(|s| s.docs).unwrap_or(0);
+    if header_docs <= folded {
+        return Ok(());
+    }
+    let len = std::fs::metadata(input).map(|m| m.len()).unwrap_or(0);
+    let identity = format!("file:{}:{len}", input.display());
+    let seg_digest = crate::checkpoint::corpus_key(&identity);
+    let policy = crate::session::record_policy(cfg, input, seg_digest)?;
+    let mut src = SkipSource::new(FileSource::open_with_policy(input, policy)?, folded);
+    let ar = session.append(&mut src, &identity)?;
+    report.appends += 1;
+    report.drifts += ar.drift as u64;
+    crate::info!(
+        "watch: appended {} docs, {} nnz (drift={}, digest {:016x})",
+        ar.docs,
+        ar.nnz,
+        ar.drift,
+        ar.digest
+    );
+    let fit = session.refit_incremental()?;
+    fit.model.save(&opts.model_out)?;
+    report.refits += 1;
+    crate::info!("watch: artifact refreshed at {}", opts.model_out.display());
+    Ok(())
+}
+
+/// Sleep `poll` in short steps so `shutdown` is honored promptly even
+/// with a long poll interval (mirrors the reload watcher's loop).
+fn stepped_sleep(poll: Duration, shutdown: &AtomicBool) {
+    let mut left = poll;
+    while !left.is_zero() && !shutdown.load(Ordering::SeqCst) {
+        let step = left.min(Duration::from_millis(25));
+        std::thread::sleep(step);
+        left -= step;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusSpec, SynthCorpus};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lsspca_watch_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn small_cfg(input: &Path) -> PipelineConfig {
+        PipelineConfig {
+            input: input.display().to_string(),
+            workers: 1,
+            chunk_docs: 64,
+            target_card: 5,
+            card_slack: 2,
+            max_reduced: 32,
+            bca_sweeps: 4,
+            num_pcs: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn watch_requires_a_file_corpus() {
+        let opts = WatchOptions {
+            poll: Duration::from_millis(10),
+            max_refits: 1,
+            model_out: std::env::temp_dir().join("lsspca_watch_never.lspm"),
+        };
+        let err =
+            watch_corpus(&PipelineConfig::default(), &opts, &AtomicBool::new(false)).unwrap_err();
+        assert!(format!("{err}").contains("input"));
+    }
+
+    #[test]
+    fn initial_fit_writes_artifact_and_growth_triggers_refresh() {
+        let dir = tmpdir("grow");
+        let input = dir.join("corpus.docword.txt");
+        let model_out = dir.join("model.lspm");
+        let base = SynthCorpus::new(CorpusSpec::nytimes().scaled(200, 400), 7);
+        base.write_docword(&input).unwrap();
+
+        let cfg = small_cfg(&input);
+        let opts = WatchOptions {
+            poll: Duration::from_millis(10),
+            max_refits: 2, // initial fit + one growth refresh, then exit
+            model_out: model_out.clone(),
+        };
+        let shutdown = std::sync::Arc::new(AtomicBool::new(false));
+        let handle = {
+            let (cfg, opts, shutdown) =
+                (cfg.clone(), opts.clone(), std::sync::Arc::clone(&shutdown));
+            std::thread::spawn(move || watch_corpus(&cfg, &opts, &shutdown))
+        };
+
+        // Wait for the initial artifact (fit of the 200-doc base).
+        let t0 = std::time::Instant::now();
+        loop {
+            if let Ok(m) = crate::model::Model::load(&model_out) {
+                assert_eq!(m.num_docs, 200);
+                break;
+            }
+            assert!(t0.elapsed().as_secs() < 60, "initial artifact never appeared");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        // Grow the corpus in place; the daemon appends, refits, exits.
+        let grown = SynthCorpus::new(CorpusSpec::nytimes().scaled(260, 400), 7);
+        grown.write_docword(&input).unwrap();
+        let report = handle.join().unwrap().unwrap();
+        shutdown.store(true, Ordering::SeqCst);
+        assert_eq!(report.refits, 2);
+        assert_eq!(report.appends, 1);
+        let m2 = crate::model::Model::load(&model_out).unwrap();
+        assert_eq!(m2.num_docs, 260);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

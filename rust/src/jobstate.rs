@@ -55,6 +55,12 @@ pub const KIND_VARIANCE: u64 = 1;
 /// single-process `.lsjs` snapshot above remains variance-only.
 pub const KIND_REDUCE: u64 = 2;
 
+/// Job kind: an incremental append fold ([`crate::incr`]). Same payload
+/// as [`KIND_VARIANCE`] — a `FeatureMoments` accumulator at chunk
+/// granularity — but keyed by the *chained* corpus digest of the append
+/// in flight, so it can never be confused with a cold variance pass.
+pub const KIND_APPEND: u64 = 3;
+
 /// A resumable pass's persisted position: everything needed to continue
 /// folding from chunk `completed_chunks` as if never interrupted.
 #[derive(Clone, Debug)]
@@ -129,6 +135,20 @@ pub fn load(
     expected_n: usize,
     chunk_docs: u64,
 ) -> Result<Option<JobState>, LsspcaError> {
+    load_kind(path, key, expected_n, chunk_docs, KIND_VARIANCE)
+}
+
+/// [`load`] for an explicit job kind: the variance pass resumes
+/// [`KIND_VARIANCE`] snapshots, the incremental append fold
+/// [`KIND_APPEND`] ones. A kind mismatch is an identity mismatch — the
+/// file describes a different pass and is rejected, never resumed from.
+pub fn load_kind(
+    path: &Path,
+    key: u64,
+    expected_n: usize,
+    chunk_docs: u64,
+    want_kind: u64,
+) -> Result<Option<JobState>, LsspcaError> {
     let buf = match retry::with_retry(&retry::policy(), || {
         let f = std::fs::File::open(path)?;
         let mut r = faultinject::wrap_read("jobstate", f);
@@ -167,8 +187,11 @@ pub fn load(
         )));
     }
     let kind = rd_u64(8);
-    if kind != KIND_VARIANCE {
-        return Err(LsspcaError::cache(format!("job state: unknown kind {kind}")));
+    if kind != want_kind {
+        return Err(LsspcaError::cache(format!(
+            "job state: kind mismatch (file has kind {kind}, want {want_kind}) — \
+             state from a different pass"
+        )));
     }
     let stored_chunk = rd_u64(16);
     if stored_chunk != chunk_docs {
@@ -651,6 +674,26 @@ mod tests {
              0f83f000000000000d03f070000000000000000000000000000c00000000000000c40c7672c2a\
              fd4a1517"
         );
+    }
+
+    #[test]
+    fn append_kind_roundtrips_and_kinds_do_not_mix() {
+        let mut js = sample(12, 5);
+        js.kind = KIND_APPEND;
+        let p = tmp("append.lsjs");
+        save(&p, &js).unwrap();
+        // the right kind loads
+        let got = load_kind(&p, js.key, 12, 128, KIND_APPEND).unwrap().unwrap();
+        assert_eq!(got.kind, KIND_APPEND);
+        assert_eq!(got.completed_chunks, js.completed_chunks);
+        // a variance resume must reject an append snapshot, and vice versa
+        let e = load(&p, js.key, 12, 128).unwrap_err().to_string();
+        assert!(e.contains("kind mismatch"), "{e}");
+        let v = sample(12, 5);
+        save(&p, &v).unwrap();
+        let e = load_kind(&p, v.key, 12, 128, KIND_APPEND).unwrap_err().to_string();
+        assert!(e.contains("kind mismatch"), "{e}");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

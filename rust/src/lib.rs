@@ -78,6 +78,7 @@ pub mod dist;
 pub mod elim;
 pub mod engine;
 pub mod error;
+pub mod incr;
 pub mod jobstate;
 pub mod kernels;
 pub mod linalg;

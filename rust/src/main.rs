@@ -9,6 +9,7 @@
 //! lsspca export     --model-out model.lspm                       # train → artifact
 //! lsspca score      --model model.lspm --input new.txt.gz        # batch projection
 //! lsspca serve      --model model.lspm --addr 127.0.0.1:7878     # HTTP scoring
+//! lsspca watch      --input corpus.txt --model-out model.lspm    # append→refit daemon
 //! lsspca dlq        --path deadletter.jsonl --retry              # inspect quarantine
 //! lsspca worker     --manifest distjob.lsjs --shard 0            # dist-pass worker (internal)
 //! lsspca artifacts  --dir artifacts                              # inspect AOT artifacts
@@ -115,6 +116,15 @@ fn app() -> App {
                 .switch("normalize", "divide loadings by training std deviations"),
         )
         .command(
+            with_training_flags(CommandSpec::new(
+                "watch",
+                "daemon: poll a growing docword corpus, append + refit, rewrite the artifact",
+            ))
+            .req("model-out", "LSPM artifact kept fresh (point `lsspca serve --model` here)")
+            .opt("poll-ms", "", "corpus poll interval ms (empty = config value, default 1000)")
+            .opt("max-refits", "0", "stop after N refits, counting the initial fit (0 = run forever)"),
+        )
+        .command(
             CommandSpec::new("dlq", "inspect or retry a dead-letter queue (deadletter.jsonl)")
                 .req("path", "deadletter.jsonl written by a pass with max_bad_records > 0")
                 .opt("list", "10", "print the first N quarantined records (0 = none)")
@@ -169,6 +179,7 @@ fn app() -> App {
             .opt("kernels", "", "SIMD kernel tier: auto|scalar|avx2|neon (empty = env or auto)")
             .opt("kernels-out", "BENCH_kernels.json", "kernel micro-bench output JSON path")
             .opt("serve-out", "BENCH_serve.json", "serving-latency output JSON path")
+            .opt("incr-out", "BENCH_incr.json", "incremental-append output JSON path")
             .opt("compare", "", "baseline BENCH_bca.json: exit nonzero on gate regression")
             .opt("max-regress", "0.25", "allowed fractional slowdown of gate medians")
             .switch("quick", "smaller sizes / fewer repetitions"),
@@ -439,6 +450,42 @@ fn cmd_serve(args: &Args) -> Result<(), LsspcaError> {
         server.local_addr()
     );
     server.run()
+}
+
+fn cmd_watch(args: &Args) -> Result<(), LsspcaError> {
+    let cfg = pipeline_config_from_args(args)?;
+    cfg.validate()?;
+    apply_compute(&cfg)?;
+    let poll_ms = if args.str("poll-ms").is_empty() {
+        cfg.incr_watch_poll_ms
+    } else {
+        args.u64("poll-ms")?
+    };
+    let opts = lsspca::incr::watch::WatchOptions {
+        poll: std::time::Duration::from_millis(poll_ms),
+        max_refits: args.u64("max-refits")?,
+        model_out: PathBuf::from(args.str("model-out")),
+    };
+    println!(
+        "watching {} every {poll_ms} ms → {} (stop with ^C{})",
+        cfg.input,
+        opts.model_out.display(),
+        if opts.max_refits > 0 {
+            format!(", or after {} refits", opts.max_refits)
+        } else {
+            String::new()
+        }
+    );
+    // No in-process stop signal: the daemon runs until --max-refits or
+    // the process is killed. A kill mid-append is safe — the resumable
+    // job state picks the fold back up bitwise on the next start.
+    let shutdown = std::sync::atomic::AtomicBool::new(false);
+    let report = lsspca::incr::watch::watch_corpus(&cfg, &opts, &shutdown)?;
+    println!(
+        "watch done: {} appends, {} refits, {} drift re-eliminations",
+        report.appends, report.refits, report.drifts
+    );
+    Ok(())
 }
 
 /// Can a quarantined line now be parsed as a valid docword triple? Mirrors
@@ -928,6 +975,64 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
         cold_secs / warm_min.max(1e-12)
     ));
 
+    // --- session_append: fold a 1% segment + warm refit vs cold re-run ----
+    // The incremental subsystem's headline number: once a session is fit,
+    // folding a 1% appended segment and warm-refitting must cost a small
+    // fraction of the cold one-shot (the appended docs are the only
+    // corpus bytes touched). The gate tracks the append+refit median.
+    use lsspca::incr::LimitSource;
+    use lsspca::stream::SynthSource as BenchSynthSource;
+
+    section("session — incremental 1% append + warm refit vs cold one-shot");
+    let sa_docs = sr_docs;
+    let sa_grow = (sa_docs / 100).max(8);
+    let sa_reps = if quick { 3 } else { 5 };
+    let mut inc = Session::from_config(sr_cfg.clone())?;
+    let t = lsspca::util::Timer::start();
+    inc.refit_incremental()?;
+    let sa_bootstrap_secs = t.secs();
+    // One generator big enough for every segment; position-seeded docs
+    // mean the suffix is exactly what a larger corpus would contain.
+    let sa_grown = SynthCorpus::new(
+        CorpusSpec::nytimes().scaled(sa_docs + sa_reps * sa_grow, sr_cfg.synth_vocab),
+        sr_cfg.seed,
+    );
+    let mut sa_seg = 0u64;
+    let append_samples = time_samples(sa_reps, || {
+        let start = sa_docs as u64 + sa_seg * sa_grow as u64;
+        let mut src = LimitSource::new(
+            BenchSynthSource::starting_at(&sa_grown, start),
+            sa_grow as u64,
+        );
+        inc.append(&mut src, &format!("bench-append:{sa_seg}")).expect("append");
+        inc.refit_incremental().expect("incremental refit");
+        sa_seg += 1;
+    });
+    let append_min = append_samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let session_append_median = median_secs(&append_samples);
+    let sa_speedup = cold_secs / append_min.max(1e-12);
+    metric("session.append_bootstrap_secs", format!("{sa_bootstrap_secs:.4}"));
+    metric("session.append_segment_docs", format!("{sa_grow}"));
+    metric("session.append_refit_secs", format!("{append_min:.6}"));
+    metric("session.append_speedup_vs_cold", format!("{sa_speedup:.1}"));
+    metric("gate.session_append_median_secs", format!("{session_append_median:.6}"));
+    let ij = format!(
+        "{{\n  \"session_append\": {{\"base_docs\": {sa_docs}, \"segment_docs\": {sa_grow}, \
+         \"segments\": {sa_reps}, \"bootstrap_secs\": {sa_bootstrap_secs:.6}, \
+         \"append_refit_secs\": {append_min:.6}, \
+         \"append_refit_median_secs\": {session_append_median:.6}, \
+         \"cold_oneshot_secs\": {cold_secs:.6}, \"speedup\": {sa_speedup:.3}}}\n}}\n"
+    );
+    let incr_out = PathBuf::from(args.str("incr-out"));
+    std::fs::write(&incr_out, &ij)
+        .map_err(|e| LsspcaError::io_at(&incr_out, format!("writing bench json: {e}")))?;
+    println!("wrote {}", incr_out.display());
+    json.push_str(&format!(
+        "  \"session_append\": {{\"base_docs\": {sa_docs}, \"segment_docs\": {sa_grow}, \
+         \"append_refit_median_secs\": {session_append_median:.6}, \
+         \"speedup_vs_cold\": {sa_speedup:.3}}},\n"
+    ));
+
     // --- oocore: disk-backed covariance vs in-memory gram ------------------
     // Runs before the gate object is assembled because the disk matvec
     // median is one of the gated metrics.
@@ -1195,6 +1300,7 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
          \"fig1_speed_median_secs\": {fig1_gate_median:.6}, \
          \"oocore_disk_matvec_median_secs\": {oocore_gate_median:.6}, \
          \"session_refit_median_secs\": {session_refit_median:.6}, \
+         \"session_append_median_secs\": {session_append_median:.6}, \
          \"kernel_dot_median_secs\": {kernel_dot_median:.6}, \
          \"kernel_spmv_median_secs\": {kernel_spmv_median:.6}, \
          \"serve_throughput_p99_secs\": {serve_p99:.6}}},\n"
@@ -1397,6 +1503,7 @@ fn cmd_bench(args: &Args) -> Result<(), LsspcaError> {
                 ("fig1_speed_median_secs", fig1_gate_median),
                 ("oocore_disk_matvec_median_secs", oocore_gate_median),
                 ("session_refit_median_secs", session_refit_median),
+                ("session_append_median_secs", session_append_median),
                 ("kernel_dot_median_secs", kernel_dot_median),
                 ("kernel_spmv_median_secs", kernel_spmv_median),
                 ("serve_throughput_p99_secs", serve_p99),
@@ -1439,6 +1546,7 @@ fn main() {
             "export" => cmd_export(&args),
             "score" => cmd_score(&args),
             "serve" => cmd_serve(&args),
+            "watch" => cmd_watch(&args),
             "dlq" => cmd_dlq(&args),
             "gen" => cmd_gen(&args),
             "variances" => cmd_variances(&args),

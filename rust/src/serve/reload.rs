@@ -41,7 +41,11 @@ pub struct ArtifactSig {
     mtime: Option<SystemTime>,
 }
 
-fn stat_sig(path: &Path) -> Option<ArtifactSig> {
+/// The `(len, mtime)` signature of a file, or `None` while it is
+/// missing or mid-rename. This is the change detector shared by the
+/// reload watcher and the `lsspca watch` corpus daemon
+/// ([`crate::incr::watch`]).
+pub fn stat_sig(path: &Path) -> Option<ArtifactSig> {
     let meta = std::fs::metadata(path).ok()?;
     Some(ArtifactSig { len: meta.len(), mtime: meta.modified().ok() })
 }

@@ -81,6 +81,10 @@ use crate::engine::{Engine, NativeEngine};
 #[cfg(feature = "xla")]
 use crate::engine::XlaEngine;
 use crate::error::LsspcaError;
+use crate::incr::{
+    chain_digest, drift_gate, AppendReport, CachedCsr, ChainSource, IncrState, LimitSource,
+    ReplaySource,
+};
 use crate::model::Model;
 use crate::moments::FeatureVariances;
 use crate::solver::bca::BcaOptions;
@@ -722,6 +726,7 @@ impl SessionBuilder {
             stats: None,
             plan: None,
             reduced: None,
+            incr: None,
         })
     }
 }
@@ -740,6 +745,10 @@ pub struct Session {
     stats: Option<CorpusStats>,
     plan: Option<EliminationPlan>,
     reduced: Option<ReducedCorpus>,
+    /// Incremental-corpus state (master Welford accumulator, replay
+    /// store, chained digest) — present once [`Session::append`] or
+    /// [`Session::refit_incremental`] has run. See [`crate::incr`].
+    incr: Option<IncrState>,
 }
 
 impl Session {
@@ -798,6 +807,7 @@ impl Session {
         self.stats = None;
         self.plan = None;
         self.reduced = None;
+        self.incr = None;
     }
 
     /// Cached [`CorpusStats`] if [`Session::stream`] has run.
@@ -830,49 +840,9 @@ impl Session {
     fn run_stream(&mut self) -> Result<(), LsspcaError> {
         let cfg = self.cfg.clone();
         install_robustness(&cfg);
-        // --- resolve corpus ------------------------------------------------
-        let synth: Option<SynthCorpus> = if cfg.input.is_empty() {
-            let spec = CorpusSpec::preset(&cfg.synth_preset)
-                .ok_or_else(|| {
-                    LsspcaError::config(format!("unknown preset {}", cfg.synth_preset))
-                })?
-                .scaled(cfg.synth_docs, cfg.synth_vocab);
-            Some(SynthCorpus::new(spec, cfg.seed))
-        } else {
-            None
-        };
-        let input_path = PathBuf::from(&cfg.input);
-        let vocab = match &synth {
-            Some(s) => s.vocab.clone(),
-            None => {
-                let vp = input_path.with_extension("vocab");
-                if vp.exists() {
-                    Vocab::load(&vp)?
-                } else {
-                    Vocab::default()
-                }
-            }
-        };
-        let corpus_name = synth
-            .as_ref()
-            .map(|s| s.spec.name.to_string())
-            .unwrap_or_else(|| input_path.display().to_string());
+        let rc = resolve_corpus(&cfg)?;
+        let ResolvedCorpus { synth, input_path, vocab, corpus_name, corpus_digest } = rc;
         crate::info!("pipeline start: corpus={corpus_name} engine={}", cfg.engine);
-
-        // Fingerprint the corpus identity: synthetic params, or the
-        // input path + its size (cheap mtime-free invalidation). Shared
-        // by the variance checkpoint and the covariance shard cache.
-        let identity = match &synth {
-            Some(s) => format!(
-                "synth:{}:{}:{}:{}",
-                s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
-            ),
-            None => {
-                let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
-                format!("file:{}:{len}", input_path.display())
-            }
-        };
-        let corpus_digest = crate::checkpoint::corpus_key(&identity);
         let cache = if cfg.cache_dir.is_empty() {
             None
         } else {
@@ -1021,6 +991,11 @@ impl Session {
     }
 
     fn run_reduce(&mut self) -> Result<(), LsspcaError> {
+        // An incremental session assembles the operator from its cached
+        // reduced CSR + replay store instead of re-streaming.
+        if self.incr.is_some() {
+            return self.run_reduce_incremental();
+        }
         let cfg = self.cfg.clone();
         let opts = stream_opts(&cfg);
         let input_path = PathBuf::from(&cfg.input);
@@ -1256,6 +1231,229 @@ impl Session {
         Ok(())
     }
 
+    /// The incremental arm of [`Session::reduce`]: assemble the reduced
+    /// operator from the cached reduced CSR plus the in-memory replay
+    /// store. While the elimination plan holds this performs **zero**
+    /// corpus reads — the cached CSR is extended with the appended
+    /// documents' reduced rows (appended global ids all exceed the
+    /// cached rows' ids, so concatenation equals the cold canonical
+    /// finalize bitwise) and, on the disk backend, the previous shard
+    /// manifest's column partition is extended in place. Only after a
+    /// drift-forced re-elimination does the base corpus re-stream —
+    /// capped at `base_docs` via [`LimitSource`], because in watch mode
+    /// the input file has grown in place and the suffix must come from
+    /// the replay store, not be double-counted.
+    fn run_reduce_incremental(&mut self) -> Result<(), LsspcaError> {
+        let cfg = self.cfg.clone();
+        let opts = stream_opts(&cfg);
+        let (backend, memory_plan) = {
+            let stats = self.stats.as_ref().expect("stream ran");
+            let plan = self.plan.as_ref().expect("eliminate ran");
+            if cfg.cov_backend == "auto" {
+                let p = plan_backend(&stats.variances, &plan.elim, &cfg);
+                crate::info!("memory planner: {}", p.describe());
+                (p.backend.clone(), Some(p))
+            } else {
+                (cfg.cov_backend.clone(), None)
+            }
+        };
+        let elim = self.plan.as_ref().expect("eliminate ran").elim.clone();
+        let elim_dig = shardcache::elim_digest(&elim);
+        let stats = self.stats.as_ref().expect("stream ran");
+        let total_docs = stats.docs;
+        let corpus_digest = stats.corpus_digest;
+        let obs = Arc::clone(&self.observer);
+        let guard = StageGuard::begin(obs.as_ref(), Stage::Reduce);
+        let mut profbuf: Vec<(&'static str, f64)> = Vec::new();
+
+        // --- canonical reduced CSR: extend the cache or rebuild -------------
+        let csr = {
+            let incr = self.incr.as_ref().expect("incremental session");
+            let reuse = incr
+                .csr
+                .as_ref()
+                .filter(|c| c.elim_digest == elim_dig && c.docs <= total_docs);
+            match reuse {
+                Some(cached) => {
+                    let t = Timer::start();
+                    let lookup = crate::cov::reduced_lookup(&elim);
+                    let mut acc = crate::cov::ReducedDocsAccum::new();
+                    // Appended doc `start + i` has global id
+                    // `base_docs + start + i = cached.docs + i`.
+                    let start = (cached.docs - incr.base_docs) as usize;
+                    for (i, words) in incr.appended[start..].iter().enumerate() {
+                        acc.push_doc(cached.docs + i as u64, words, &lookup);
+                    }
+                    let seg = acc.finalize(elim.reduced());
+                    let mut merged = cached.csr.clone();
+                    let offset = *merged.indptr.last().expect("csr indptr");
+                    for r in 0..seg.rows {
+                        merged.indptr.push(offset + seg.indptr[r + 1]);
+                    }
+                    merged.indices.extend_from_slice(&seg.indices);
+                    merged.values.extend_from_slice(&seg.values);
+                    merged.rows += seg.rows;
+                    profbuf.push(("csr_extend", t.secs()));
+                    crate::info!(
+                        "incremental reduce: extended cached CSR by {} rows (zero corpus reads)",
+                        seg.rows
+                    );
+                    merged
+                }
+                None => {
+                    let t = Timer::start();
+                    let replay =
+                        ReplaySource::new(&incr.appended, incr.base_docs, incr.num_features());
+                    let (csr, _s2) = match self.synth.as_ref() {
+                        Some(s) => {
+                            let mut inner = SynthSource::new(s);
+                            let base =
+                                ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                            let mut chain = ChainSource::new(
+                                LimitSource::new(base, incr.base_docs),
+                                replay,
+                            )?;
+                            reduced_csr_pass(&mut chain, &elim, opts)?
+                        }
+                        None => {
+                            let input_path = PathBuf::from(&cfg.input);
+                            let policy = record_policy(&cfg, &input_path, corpus_digest)?;
+                            let mut inner = FileSource::open_with_policy(&input_path, policy)?;
+                            let r = {
+                                let base =
+                                    ObservedSource::new(&mut inner, obs.as_ref(), Stage::Reduce);
+                                let mut chain = ChainSource::new(
+                                    LimitSource::new(base, incr.base_docs),
+                                    replay,
+                                )?;
+                                reduced_csr_pass(&mut chain, &elim, opts)?
+                            };
+                            report_quarantined(&inner, "incremental reduce");
+                            r
+                        }
+                    };
+                    profbuf.push(("gram_pass", t.secs()));
+                    csr
+                }
+            }
+        };
+
+        // --- backend assembly from the owned canonical CSR ------------------
+        let mut new_shard_key: Option<ShardCacheKey> = None;
+        let cov: Box<dyn CovOp> = match backend.as_str() {
+            "disk" => {
+                let dir = if cfg.cache_dir.is_empty() {
+                    let user = std::env::var("USER")
+                        .or_else(|_| std::env::var("USERNAME"))
+                        .unwrap_or_else(|_| "default".into());
+                    std::env::temp_dir().join(format!("lsspca_shards_{user}"))
+                } else {
+                    PathBuf::from(&cfg.cache_dir)
+                };
+                if cfg.cache_dir.is_empty() {
+                    make_private_dir(&dir);
+                }
+                let key = ShardCacheKey { corpus_digest, elim_digest: elim_dig };
+                let opened = match shardcache::open(&dir, &key) {
+                    Ok(Some(man)) => {
+                        let t = Timer::start();
+                        let verified = shardcache::verify_shards(&dir, &man, cfg.threads);
+                        profbuf.push(("shard_verify", t.secs()));
+                        match verified {
+                            Ok(()) => Some(man),
+                            Err(e) => {
+                                crate::warn_!("rebuilding shard cache: {e}");
+                                None
+                            }
+                        }
+                    }
+                    Ok(None) => None,
+                    Err(e) => {
+                        crate::warn_!("rebuilding shard cache: {e}");
+                        None
+                    }
+                };
+                let man = match opened {
+                    Some(man) => man,
+                    None => {
+                        let t = Timer::start();
+                        // Extend the previous append's shards under the
+                        // chained key: same column partition, untouched
+                        // column payloads byte-identical.
+                        let prev = self
+                            .incr
+                            .as_ref()
+                            .expect("incremental session")
+                            .last_shard_key
+                            .filter(|k| *k != key);
+                        let extended = prev.and_then(|old_key| {
+                            let old = match shardcache::open(&dir, &old_key) {
+                                Ok(Some(m)) if m.nhat == csr.cols => m,
+                                _ => return None,
+                            };
+                            match shardcache::extend(&dir, &old, &key, &csr, total_docs) {
+                                Ok(man) => {
+                                    crate::info!(
+                                        "shard cache extended: {} shards reused their \
+                                         column partition",
+                                        man.shards.len()
+                                    );
+                                    Some(man)
+                                }
+                                Err(e) => {
+                                    crate::warn_!("shard extend failed, rewriting: {e}");
+                                    None
+                                }
+                            }
+                        });
+                        let man = match extended {
+                            Some(man) => man,
+                            None => shardcache::write(
+                                &dir,
+                                &key,
+                                &csr,
+                                total_docs,
+                                cfg.shard_mb * 1024 * 1024,
+                            )?,
+                        };
+                        profbuf.push(("shard_write", t.secs()));
+                        man
+                    }
+                };
+                let cache_mb = disk_row_cache_mb(&cfg, man.max_shard_bytes());
+                let disk = DiskGramCov::new(&dir, man, cache_mb, cfg.threads);
+                new_shard_key = Some(key);
+                Box::new(disk)
+            }
+            "gram" => {
+                let t = Timer::start();
+                let gram = GramCov::new(csr.clone(), total_docs, cfg.row_cache_mb);
+                profbuf.push(("gram_build", t.secs()));
+                Box::new(gram)
+            }
+            _ => {
+                let t = Timer::start();
+                // Bitwise equal to a `stream.workers = 1` covariance
+                // pass over the concatenated corpus, same as the
+                // distributed dense path.
+                let cov = crate::cov::covariance_from_canonical_csr(&csr, total_docs);
+                profbuf.push(("covariance_fold", t.secs()));
+                Box::new(DenseCov::new(cov))
+            }
+        };
+        let seconds = guard.finish();
+        for (name, secs) in profbuf {
+            self.prof.add(name, secs);
+        }
+        let incr = self.incr.as_mut().expect("incremental session");
+        incr.csr = Some(CachedCsr { csr, docs: total_docs, elim_digest: elim_dig });
+        if let Some(k) = new_shard_key {
+            incr.last_shard_key = Some(k);
+        }
+        self.reduced = Some(ReducedCorpus { cov, backend, memory_plan, seconds });
+        Ok(())
+    }
+
     // -- stage 4: fit -------------------------------------------------------
 
     /// Extract `num_pcs` sparse PCs from the cached reduced operator —
@@ -1276,6 +1474,20 @@ impl Session {
                 return Err(LsspcaError::config("fit: target_card must be >= 1"));
             }
         }
+        self.fit_inner(lambda, None, num_pcs)
+    }
+
+    /// The fit body behind [`Session::fit`] and the incremental warm
+    /// refit. `per_component` overrides component `k`'s λ with a fixed
+    /// value (a remembered λ from the previous fit) — each such solve is
+    /// bitwise-identical to that λ landing as a search probe, but skips
+    /// the search entirely.
+    fn fit_inner(
+        &mut self,
+        lambda: LambdaSpec,
+        per_component: Option<&[f64]>,
+        num_pcs: usize,
+    ) -> Result<FitResult, LsspcaError> {
         self.reduce()?;
         let cfg = self.cfg.clone();
         let obs = Arc::clone(&self.observer);
@@ -1294,6 +1506,12 @@ impl Session {
             let mut components: Vec<ComponentReport> = Vec::new();
             for k in 0..num_pcs {
                 let t = Timer::start();
+                // Warm incremental refit: component k re-solves at the λ
+                // the previous fit landed on, skipping the search.
+                let eff = match per_component {
+                    Some(l) => LambdaSpec::Fixed(l[k]),
+                    None => lambda,
+                };
                 let bca = BcaOptions {
                     max_sweeps: cfg.bca_sweeps,
                     epsilon: cfg.epsilon,
@@ -1309,11 +1527,11 @@ impl Session {
                 // results are identical on every machine and for every
                 // `threads` setting; threads only change wall time.
                 let sopts = LambdaSearchOptions {
-                    target_card: match lambda {
+                    target_card: match eff {
                         LambdaSpec::Search { target_card, .. } => target_card,
                         LambdaSpec::Fixed(_) => cfg.target_card,
                     },
-                    slack: match lambda {
+                    slack: match eff {
                         LambdaSpec::Search { slack, .. } => slack,
                         LambdaSpec::Fixed(_) => cfg.card_slack,
                     },
@@ -1323,7 +1541,7 @@ impl Session {
                     ..Default::default()
                 };
                 let t_solve = Timer::start();
-                let res = match lambda {
+                let res = match eff {
                     LambdaSpec::Search { .. } => {
                         let mut on_eval = |e: &LambdaEval| obs.lambda_evaluated(k, e);
                         search_with_engine_observed(&mut *engine, &defl, &sopts, &mut on_eval)?
@@ -1423,7 +1641,268 @@ impl Session {
         for (name, secs) in profbuf {
             self.prof.add(name, secs);
         }
+        // Remember this fit's λs so the next incremental refit can take
+        // the warm (fixed-λ) path; also clears the drift flag.
+        if let Some(incr) = self.incr.as_mut() {
+            incr.record_fit(components.iter().map(|c| c.lambda).collect());
+        }
         Ok(FitResult { components, topic_table, model, seconds })
+    }
+
+    // -- incremental corpora ------------------------------------------------
+
+    /// Fold an appended docword segment into the session — the
+    /// incremental-corpus entry point (see [`crate::incr`]).
+    ///
+    /// `identity` fingerprints the segment (same convention as the base
+    /// corpus: `"file:<path>:<len>"` or `"synth:..."`); the session's
+    /// corpus digest advances to `H(digest ‖ H(identity))` **only if the
+    /// whole fold succeeds** — a failed or corrupt segment leaves the
+    /// session, its digest, and every digest-keyed cache untouched.
+    ///
+    /// The fold is chunk-aligned and merged in global chunk order, so
+    /// the merged variances are bitwise-identical to a (resumable) cold
+    /// pass over the concatenated corpus. The segment's documents are
+    /// retained in an in-memory replay store: subsequent
+    /// [`Session::reduce`]/[`Session::fit`] calls extend the reduced
+    /// operator without re-reading **any** corpus bytes. After the fold,
+    /// the drift gate decides whether the current elimination survives;
+    /// if it fires, elimination (and everything downstream) re-runs cold
+    /// on the next stage call.
+    ///
+    /// With a cache dir and `[robustness] job_state = true`, the fold
+    /// persists resumable job state under the *chained* digest: a run
+    /// killed mid-append resumes bitwise-identically.
+    pub fn append<S: ChunkSource>(
+        &mut self,
+        source: &mut S,
+        identity: &str,
+    ) -> Result<AppendReport, LsspcaError> {
+        self.ensure_incr()?;
+        let cfg = self.cfg.clone();
+        install_robustness(&cfg);
+        let obs = Arc::clone(&self.observer);
+        let seg_digest = crate::checkpoint::corpus_key(identity);
+        let new_digest = chain_digest(self.incr.as_ref().expect("ensured").digest(), seg_digest);
+
+        // Clone-commit: mutate a copy of the incremental state and swap
+        // it in only on success, so any error below (I/O, corrupt
+        // segment, feature mismatch) leaves the session unchanged.
+        let mut next = self.incr.as_ref().expect("ensured").clone();
+
+        // Resumable job state for the append fold, keyed by the chained
+        // digest (so state from a different base or segment can never be
+        // adopted). Any chunk count a mid-append persist recorded lies
+        // strictly past the pre-append total — the first merged chunk
+        // completes the pre-append tail — so the resumed fold skips
+        // exactly `covered - total_pre` segment documents (they are
+        // already in the master) while still replay-storing them.
+        let js_path = if !cfg.cache_dir.is_empty() && cfg.robust_job_state {
+            Some(crate::jobstate::path_for(Path::new(&cfg.cache_dir), new_digest))
+        } else {
+            None
+        };
+        let chunk_docs = cfg.chunk_docs as u64;
+        let mut skip_folded = 0u64;
+        if let Some(path) = &js_path {
+            let total_pre = next.total_docs();
+            match crate::jobstate::load_kind(
+                path,
+                new_digest,
+                next.num_features(),
+                chunk_docs,
+                crate::jobstate::KIND_APPEND,
+            ) {
+                Ok(Some(js)) => {
+                    let covered = js.completed_chunks * chunk_docs;
+                    if js.moments.docs == covered
+                        && js.completed_chunks > next.chunks_done
+                        && covered >= total_pre
+                    {
+                        crate::info!(
+                            "append: resuming from job state at chunk {} \
+                             ({} docs already folded)",
+                            js.completed_chunks,
+                            js.moments.docs
+                        );
+                        skip_folded = covered - total_pre;
+                        next.moments = js.moments;
+                        next.chunks_done = js.completed_chunks;
+                        next.tail.clear();
+                    } else {
+                        crate::warn_!("ignoring inconsistent append job state");
+                    }
+                }
+                Ok(None) => {}
+                Err(e) => crate::warn_!("ignoring bad job state: {e}"),
+            }
+        }
+
+        let guard = StageGuard::begin(obs.as_ref(), Stage::Stream);
+        let (docs, nnz) = {
+            let mut src = ObservedSource::new(source, obs.as_ref(), Stage::Stream);
+            match &js_path {
+                Some(path) => {
+                    let persist = |m: &crate::moments::FeatureMoments, done: u64| {
+                        crate::jobstate::save(
+                            path,
+                            &crate::jobstate::JobState {
+                                key: new_digest,
+                                kind: crate::jobstate::KIND_APPEND,
+                                chunk_docs,
+                                completed_chunks: done,
+                                moments: m.clone(),
+                            },
+                        )
+                    };
+                    next.append_docs(
+                        &mut src,
+                        cfg.robust_job_state_chunks as u64,
+                        persist,
+                        skip_folded,
+                    )?
+                }
+                None => next.append_docs(&mut src, 0, |_, _| Ok(()), skip_folded)?,
+            }
+        };
+        let fv = next.finalize_variances();
+        let seconds = guard.finish();
+        self.prof.add("append_fold", seconds);
+        if let Some(path) = &js_path {
+            if let Err(e) = crate::jobstate::remove(path) {
+                crate::warn_!("could not remove job state: {e}");
+            }
+        }
+
+        // Drift gate: does the current elimination survive the merge?
+        let drift = match self.plan.as_ref() {
+            Some(plan) => {
+                let gate = drift_gate(&plan.elim, &fv, cfg.incr_drift_tol);
+                if gate.fired {
+                    crate::info!(
+                        "append: drift gate fired (mandatory={}, max_shift={:.3e}) — \
+                         re-elimination scheduled",
+                        gate.mandatory,
+                        gate.max_shift
+                    );
+                } else {
+                    crate::info!(
+                        "append: drift gate quiet (max_shift={:.3e} ≤ tol={:.3e}) — \
+                         elimination plan reused",
+                        gate.max_shift,
+                        cfg.incr_drift_tol
+                    );
+                }
+                gate.fired
+            }
+            // No plan yet: nothing to invalidate, the next eliminate()
+            // works from the merged variances anyway.
+            None => false,
+        };
+
+        // Commit.
+        next.digest = new_digest;
+        if drift {
+            next.mark_drift();
+            self.plan = None;
+        }
+        self.reduced = None;
+        let stats = self.stats.as_mut().expect("ensured");
+        stats.variances = fv;
+        stats.docs = next.total_docs();
+        stats.nnz = next.total_nnz();
+        stats.corpus_digest = new_digest;
+        stats.from_checkpoint = false;
+        stats.seconds = seconds;
+        crate::info!(
+            "append: {docs} docs, {nnz} nnz folded in {seconds:.2}s \
+             (digest {new_digest:016x}, drift={drift})"
+        );
+        self.incr = Some(next);
+        Ok(AppendReport { docs, nnz, drift, digest: new_digest, seconds })
+    }
+
+    /// Re-fit after appends, reusing everything that is still valid.
+    ///
+    /// If the drift gate has stayed quiet since the last fit, each
+    /// component re-solves at its previous λ (no λ-search) against the
+    /// incrementally extended reduced operator — the warm path the
+    /// `session_append` bench gate pins at ≪ a cold run. After a
+    /// drift-forced re-elimination (or on the first call) this is a
+    /// full [`Session::fit`] with the configured λ spec.
+    pub fn refit_incremental(&mut self) -> Result<FitResult, LsspcaError> {
+        self.ensure_incr()?;
+        let lambda = LambdaSpec::from_config(&self.cfg);
+        let num_pcs = self.cfg.num_pcs;
+        let warm: Option<Vec<f64>> = {
+            let incr = self.incr.as_ref().expect("ensured");
+            (!incr.drift_since_fit() && incr.last_lambdas.len() == num_pcs)
+                .then(|| incr.last_lambdas.clone())
+        };
+        match warm {
+            Some(l) => self.fit_inner(lambda, Some(&l), num_pcs),
+            None => self.fit_inner(lambda, None, num_pcs),
+        }
+    }
+
+    /// Bootstrap the incremental state: one chunk-aligned pass over the
+    /// base corpus that *retains* the master Welford accumulator (a
+    /// variance checkpoint cannot — it only stores finalized variances,
+    /// and Welford merge order matters bitwise). Overwrites the cached
+    /// corpus stats with the bootstrap's (bitwise-identical) result.
+    fn ensure_incr(&mut self) -> Result<(), LsspcaError> {
+        if self.incr.is_some() {
+            return Ok(());
+        }
+        let cfg = self.cfg.clone();
+        install_robustness(&cfg);
+        let rc = resolve_corpus(&cfg)?;
+        let obs = Arc::clone(&self.observer);
+        let guard = StageGuard::begin(obs.as_ref(), Stage::Stream);
+        let (st, _boot_stats) = match &rc.synth {
+            Some(s) => {
+                let mut inner = SynthSource::new(s);
+                let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                IncrState::bootstrap(&mut src, cfg.chunk_docs, rc.corpus_digest)?
+            }
+            None => {
+                let policy = record_policy(&cfg, &rc.input_path, rc.corpus_digest)?;
+                let mut inner = FileSource::open_with_policy(&rc.input_path, policy)?;
+                let r = {
+                    let mut src = ObservedSource::new(&mut inner, obs.as_ref(), Stage::Stream);
+                    IncrState::bootstrap(&mut src, cfg.chunk_docs, rc.corpus_digest)?
+                };
+                report_quarantined(&inner, "incremental bootstrap");
+                r
+            }
+        };
+        let fv = st.finalize_variances();
+        let seconds = guard.finish();
+        self.prof.add("incr_bootstrap", seconds);
+        crate::info!(
+            "incremental bootstrap: {} docs, {} nnz (digest {:016x})",
+            st.total_docs(),
+            st.total_nnz(),
+            rc.corpus_digest
+        );
+        // The bootstrap is authoritative for the variance profile (it
+        // *is* the deterministic pass); downstream stages recompute from
+        // it on demand.
+        self.synth = rc.synth;
+        self.plan = None;
+        self.reduced = None;
+        self.stats = Some(CorpusStats {
+            corpus_name: rc.corpus_name,
+            variances: fv,
+            docs: st.total_docs(),
+            nnz: st.total_nnz(),
+            seconds,
+            from_checkpoint: false,
+            vocab: rc.vocab,
+            corpus_digest: rc.corpus_digest,
+        });
+        self.incr = Some(st);
+        Ok(())
     }
 }
 
@@ -1433,6 +1912,63 @@ fn stream_opts(cfg: &PipelineConfig) -> StreamOptions {
         chunk_docs: cfg.chunk_docs,
         queue_depth: cfg.queue_depth,
     }
+}
+
+/// A configuration's corpus, resolved: the synthetic generator (if any),
+/// the training vocabulary, the display name, and the FNV digest of the
+/// corpus identity that keys every cache.
+struct ResolvedCorpus {
+    synth: Option<SynthCorpus>,
+    input_path: PathBuf,
+    vocab: Vocab,
+    corpus_name: String,
+    corpus_digest: u64,
+}
+
+/// Resolve a configuration's corpus — shared by [`Session::run_stream`]
+/// and the incremental bootstrap so both derive the identical identity
+/// digest for the same knobs.
+fn resolve_corpus(cfg: &PipelineConfig) -> Result<ResolvedCorpus, LsspcaError> {
+    let synth: Option<SynthCorpus> = if cfg.input.is_empty() {
+        let spec = CorpusSpec::preset(&cfg.synth_preset)
+            .ok_or_else(|| LsspcaError::config(format!("unknown preset {}", cfg.synth_preset)))?
+            .scaled(cfg.synth_docs, cfg.synth_vocab);
+        Some(SynthCorpus::new(spec, cfg.seed))
+    } else {
+        None
+    };
+    let input_path = PathBuf::from(&cfg.input);
+    let vocab = match &synth {
+        Some(s) => s.vocab.clone(),
+        None => {
+            let vp = input_path.with_extension("vocab");
+            if vp.exists() {
+                Vocab::load(&vp)?
+            } else {
+                Vocab::default()
+            }
+        }
+    };
+    let corpus_name = synth
+        .as_ref()
+        .map(|s| s.spec.name.to_string())
+        .unwrap_or_else(|| input_path.display().to_string());
+
+    // Fingerprint the corpus identity: synthetic params, or the
+    // input path + its size (cheap mtime-free invalidation). Shared
+    // by the variance checkpoint and the covariance shard cache.
+    let identity = match &synth {
+        Some(s) => format!(
+            "synth:{}:{}:{}:{}",
+            s.spec.name, s.spec.num_docs, s.spec.vocab_size, s.seed
+        ),
+        None => {
+            let len = std::fs::metadata(&input_path).map(|m| m.len()).unwrap_or(0);
+            format!("file:{}:{len}", input_path.display())
+        }
+    };
+    let corpus_digest = crate::checkpoint::corpus_key(&identity);
+    Ok(ResolvedCorpus { synth, input_path, vocab, corpus_name, corpus_digest })
 }
 
 /// Install the process-wide robustness knobs from config: the
@@ -1631,7 +2167,7 @@ fn dist_reduce(
 /// reads) when `[robustness] max_bad_records` is 0 or the corpus is
 /// synthetic — a generator cannot produce malformed lines, only a file
 /// can.
-fn record_policy(
+pub(crate) fn record_policy(
     cfg: &PipelineConfig,
     input_path: &Path,
     corpus_digest: u64,

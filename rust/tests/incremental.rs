@@ -1,0 +1,551 @@
+//! Integration pins for the incremental-corpus subsystem (`lsspca::incr`):
+//!
+//! (1) forcing the drift gate (`drift_tol = 0`) makes append + refit
+//!     **bitwise-identical** to a cold run over the concatenated corpus
+//!     on all four covariance backends,
+//! (2) a 1% append + warm refit re-reads **zero** bytes of the original
+//!     corpus (instrumented via `CountingProgress`) and reuses the
+//!     elimination plan and per-component λs,
+//! (3) a fold killed mid-append resumes bitwise from its persisted
+//!     `KIND_APPEND` job state — and job state of the wrong kind is
+//!     rejected, not adopted,
+//! (4) a corrupt segment is quarantined to the dead-letter queue within
+//!     budget (or rejected in strict mode) without ever advancing the
+//!     chained corpus digest on failure,
+//! (5) end-to-end: the `watch` daemon appends, refits and atomically
+//!     rewrites the artifact while a live server hot-swaps it with zero
+//!     dropped requests.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use lsspca::checkpoint;
+use lsspca::config::PipelineConfig;
+use lsspca::coordinator::ComponentReport;
+use lsspca::corpus::{CorpusSpec, SynthCorpus};
+use lsspca::deadletter::{DeadLetterQueue, RecordPolicy};
+use lsspca::error::LsspcaError;
+use lsspca::incr::watch::{watch_corpus, WatchOptions};
+use lsspca::incr::{chain_digest, IncrState};
+use lsspca::jobstate::{self, JobState, KIND_APPEND, KIND_VARIANCE};
+use lsspca::model::Model;
+use lsspca::moments::FeatureMoments;
+use lsspca::serve::{Server, ServerBuilder, ServerHandle};
+use lsspca::session::{CountingProgress, LambdaSpec, Progress, Session, Stage};
+use lsspca::stream::{FileSource, SynthSource};
+
+fn tmp(name: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!("lsspca_incr_{}_{name}", std::process::id()));
+    p
+}
+
+/// The corpus digest the session derives for a synthetic config — same
+/// identity string, same FNV fold as `resolve_corpus`.
+fn synth_digest(cfg: &PipelineConfig) -> u64 {
+    let spec = CorpusSpec::preset(&cfg.synth_preset)
+        .unwrap()
+        .scaled(cfg.synth_docs, cfg.synth_vocab);
+    let c = SynthCorpus::new(spec, cfg.seed);
+    checkpoint::corpus_key(&format!(
+        "synth:{}:{}:{}:{}",
+        c.spec.name, c.spec.num_docs, c.spec.vocab_size, c.seed
+    ))
+}
+
+fn assert_components_bitwise(a: &[ComponentReport], b: &[ComponentReport]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits());
+        assert_eq!(x.phi.to_bits(), y.phi.to_bits());
+        assert_eq!(x.pc.support, y.pc.support);
+        assert_eq!(x.pc.vector.len(), y.pc.vector.len());
+        for (u, v) in x.pc.vector.iter().zip(&y.pc.vector) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(x.words, y.words);
+    }
+}
+
+// -- (1) drift-forced refit is bitwise a cold run, on every backend ---------
+
+#[test]
+fn forced_drift_refit_matches_cold_run_bitwise_on_all_backends() {
+    let make_cfg = |docs: usize, dir: &PathBuf, backend: &str| PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: docs,
+        synth_vocab: 800,
+        // The incremental reduce folds the canonical CSR, which is
+        // documented bitwise-equal to a workers = 1 covariance pass —
+        // the cold side must run the same schedule-free shape.
+        workers: 1,
+        chunk_docs: 64,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 32,
+        bca_sweeps: 4,
+        cov_backend: backend.into(),
+        // A cache dir routes the cold variance pass through the
+        // deterministic resumable fold — the same chunk-ordered merge
+        // the incremental bootstrap performs.
+        cache_dir: dir.display().to_string(),
+        incr_drift_tol: 0.0, // any variance shift re-runs elimination
+        ..Default::default()
+    };
+
+    for backend in ["dense", "gram", "disk", "auto"] {
+        let inc_dir = tmp(&format!("parity_inc_{backend}"));
+        let cold_dir = tmp(&format!("parity_cold_{backend}"));
+        std::fs::remove_dir_all(&inc_dir).ok();
+        std::fs::remove_dir_all(&cold_dir).ok();
+
+        // Incremental: fit the 300-doc base, append 60 docs, refit.
+        let cfg_inc = make_cfg(300, &inc_dir, backend);
+        let grown = SynthCorpus::new(CorpusSpec::nytimes().scaled(360, 800), cfg_inc.seed);
+        let mut inc = Session::from_config(cfg_inc).unwrap();
+        let first = inc.refit_incremental().unwrap();
+        assert_eq!(first.components.len(), 2, "{backend}");
+        let mut seg = SynthSource::starting_at(&grown, 300);
+        let rep = inc.append(&mut seg, "parity-segment").unwrap();
+        assert_eq!(rep.docs, 60, "{backend}");
+        assert!(rep.drift, "{backend}: drift_tol = 0 must force re-elimination");
+        let refit = inc.refit_incremental().unwrap();
+
+        // Cold: a fresh one-shot fit of the 360-doc concatenated corpus.
+        let cfg_cold = make_cfg(360, &cold_dir, backend);
+        let spec = LambdaSpec::from_config(&cfg_cold);
+        let mut cold = Session::from_config(cfg_cold).unwrap();
+        let cold_fit = cold.fit(spec, 2).unwrap();
+
+        assert_components_bitwise(&refit.components, &cold_fit.components);
+        assert_eq!(refit.topic_table, cold_fit.topic_table, "{backend}");
+        assert_eq!(refit.model, cold_fit.model, "{backend}");
+        let (iv, cv) = (
+            &inc.stats().unwrap().variances.variance,
+            &cold.stats().unwrap().variances.variance,
+        );
+        assert_eq!(iv.len(), cv.len());
+        for (a, b) in iv.iter().zip(cv) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{backend}: merged variances drifted");
+        }
+
+        std::fs::remove_dir_all(&inc_dir).ok();
+        std::fs::remove_dir_all(&cold_dir).ok();
+    }
+}
+
+// -- (2) 1% append + warm refit: zero re-reads, plan + λ reuse --------------
+
+#[test]
+fn one_percent_append_refits_with_zero_corpus_rereads() {
+    let cfg = PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 2000,
+        synth_vocab: 1200,
+        workers: 2,
+        chunk_docs: 128,
+        num_pcs: 2,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 32,
+        bca_sweeps: 4,
+        incr_drift_tol: 0.5, // a 1% same-distribution append stays far below
+        ..Default::default()
+    };
+    let grown = SynthCorpus::new(CorpusSpec::nytimes().scaled(2020, 1200), cfg.seed);
+    let obs = Arc::new(CountingProgress::new());
+    let mut session = Session::from_config(cfg).unwrap();
+    session.set_observer(Arc::clone(&obs) as Arc<dyn Progress>);
+
+    // Stage + fit the base corpus once.
+    let first = session.refit_incremental().unwrap();
+    let base_stream_docs = obs.docs(Stage::Stream);
+    let base_reduce_reads = obs.reads(Stage::Reduce);
+    let base_elim_began = obs.began(Stage::Eliminate);
+    let base_evals = obs.lambda_evals();
+    assert_eq!(base_stream_docs, 2000);
+    assert!(base_reduce_reads > 0, "staging must stream the corpus once");
+
+    // Append the 1% suffix and warm-refit.
+    let mut seg = SynthSource::starting_at(&grown, 2000);
+    let rep = session.append(&mut seg, "one-percent-segment").unwrap();
+    assert_eq!(rep.docs, 20);
+    assert!(!rep.drift, "a 1% same-distribution append must not fire the gate");
+    let second = session.refit_incremental().unwrap();
+    assert_eq!(second.model.num_docs, 2020);
+
+    // The only corpus bytes touched were the 20 segment documents: the
+    // reduce stage performed zero reads (the cached CSR was extended
+    // from the replay store) and elimination never re-ran.
+    assert_eq!(obs.docs(Stage::Stream), base_stream_docs + 20);
+    assert_eq!(
+        obs.reads(Stage::Reduce),
+        base_reduce_reads,
+        "append + refit must not re-read the original corpus"
+    );
+    assert_eq!(obs.began(Stage::Eliminate), base_elim_began, "elimination plan must be reused");
+    // Warm path: each component re-solved at its remembered λ — exactly
+    // one evaluation per PC, no search.
+    assert_eq!(obs.lambda_evals(), base_evals + 2);
+    for (a, b) in first.components.iter().zip(&second.components) {
+        assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "warm refit must reuse λ");
+    }
+}
+
+// -- (3) kill mid-append, resume bitwise from job state ---------------------
+
+#[test]
+fn append_killed_mid_fold_resumes_bitwise_from_job_state() {
+    let make_cfg = |dir: &PathBuf| PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 128,
+        synth_vocab: 600,
+        workers: 2,
+        chunk_docs: 64,
+        num_pcs: 1,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 32,
+        bca_sweeps: 4,
+        cache_dir: dir.display().to_string(),
+        robust_job_state_chunks: 1,
+        ..Default::default()
+    };
+    let cache_a = tmp("resume_clean");
+    let cache_b = tmp("resume_killed");
+    let cache_c = tmp("resume_foreign");
+    for d in [&cache_a, &cache_b, &cache_c] {
+        std::fs::remove_dir_all(d).ok();
+    }
+    let cfg_a = make_cfg(&cache_a);
+    let grown = SynthCorpus::new(CorpusSpec::nytimes().scaled(320, 600), cfg_a.seed);
+    let chained = chain_digest(synth_digest(&cfg_a), checkpoint::corpus_key("kill-seg"));
+
+    // Reference: one uninterrupted append.
+    let mut a = Session::from_config(cfg_a.clone()).unwrap();
+    let rep_a = a.append(&mut SynthSource::starting_at(&grown, 128), "kill-seg").unwrap();
+    assert_eq!(rep_a.docs, 192);
+    assert_eq!(rep_a.digest, chained, "chained digest must be H(base ‖ segment)");
+    let var_a = a.stats().unwrap().variances.variance.clone();
+
+    // Reconstruct the moment-in-time a SIGKILL mid-fold leaves behind:
+    // drive the fold directly, capture the first persisted snapshot,
+    // then die on the second.
+    let base = SynthCorpus::new(CorpusSpec::nytimes().scaled(128, 600), cfg_a.seed);
+    let (mut st, _) = IncrState::bootstrap(&mut SynthSource::new(&base), 64, 0).unwrap();
+    let saved: std::cell::RefCell<Option<(FeatureMoments, u64)>> = std::cell::RefCell::new(None);
+    let err = st
+        .append_docs(
+            &mut SynthSource::starting_at(&grown, 128),
+            1,
+            |m, done| {
+                if saved.borrow().is_some() {
+                    return Err(LsspcaError::io("simulated kill"));
+                }
+                *saved.borrow_mut() = Some((m.clone(), done));
+                Ok(())
+            },
+            0,
+        )
+        .unwrap_err();
+    assert!(format!("{err}").contains("simulated kill"));
+    let (moments, done) = saved.into_inner().unwrap();
+    assert_eq!(done, 3, "base = 2 complete chunks; first segment chunk is the 3rd");
+    jobstate::save(
+        &jobstate::path_for(&cache_b, chained),
+        &JobState {
+            key: chained,
+            kind: KIND_APPEND,
+            chunk_docs: 64,
+            completed_chunks: done,
+            moments,
+        },
+    )
+    .unwrap();
+
+    // Restart: the session adopts the job state, folds only the docs it
+    // does not cover, and lands bitwise on the uninterrupted result.
+    let mut b = Session::from_config(make_cfg(&cache_b)).unwrap();
+    let rep_b = b.append(&mut SynthSource::starting_at(&grown, 128), "kill-seg").unwrap();
+    assert_eq!(rep_b.docs, rep_a.docs);
+    assert_eq!(rep_b.nnz, rep_a.nnz);
+    assert_eq!(rep_b.digest, rep_a.digest);
+    let var_b = &b.stats().unwrap().variances.variance;
+    for (x, y) in var_a.iter().zip(var_b) {
+        assert_eq!(x.to_bits(), y.to_bits(), "resumed fold must be bitwise identical");
+    }
+    assert!(
+        !jobstate::path_for(&cache_b, chained).exists(),
+        "job state is removed once the append commits"
+    );
+
+    // Job state of the wrong kind at the right path (a variance pass
+    // crashed under the same digest) is rejected, not adopted.
+    jobstate::save(
+        &jobstate::path_for(&cache_c, chained),
+        &JobState {
+            key: chained,
+            kind: KIND_VARIANCE,
+            chunk_docs: 64,
+            completed_chunks: 3,
+            moments: FeatureMoments::new(600),
+        },
+    )
+    .unwrap();
+    let mut c = Session::from_config(make_cfg(&cache_c)).unwrap();
+    let rep_c = c.append(&mut SynthSource::starting_at(&grown, 128), "kill-seg").unwrap();
+    assert_eq!(rep_c.digest, rep_a.digest);
+    let var_c = &c.stats().unwrap().variances.variance;
+    for (x, y) in var_a.iter().zip(var_c) {
+        assert_eq!(x.to_bits(), y.to_bits(), "foreign-kind job state must be ignored");
+    }
+
+    for d in [&cache_a, &cache_b, &cache_c] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+// -- (4) corrupt segments: DLQ within budget, digest never poisoned ---------
+
+#[test]
+fn corrupt_segment_quarantines_without_poisoning_chained_digest() {
+    let root = tmp("corrupt_seg");
+    std::fs::remove_dir_all(&root).ok();
+    std::fs::create_dir_all(&root).unwrap();
+    let cfg = PipelineConfig {
+        synth_preset: "nytimes".into(),
+        synth_docs: 200,
+        synth_vocab: 1000,
+        workers: 2,
+        chunk_docs: 64,
+        num_pcs: 1,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 32,
+        bca_sweeps: 4,
+        ..Default::default()
+    };
+    let base_digest = synth_digest(&cfg);
+
+    // A 40-doc segment file with three malformed records spliced in
+    // front of the data section: zero doc id, out-of-range word id,
+    // non-numeric count.
+    let seg_path = root.join("segment.docword.txt");
+    let seg_corpus = SynthCorpus::new(CorpusSpec::nytimes().scaled(40, 1000), 12345);
+    seg_corpus.write_docword(&seg_path).unwrap();
+    let txt = std::fs::read_to_string(&seg_path).unwrap();
+    let mut lines: Vec<&str> = txt.lines().collect();
+    lines.splice(3..3, ["0 5 1", "1 999999 2", "1 7 x"]);
+    std::fs::write(&seg_path, lines.join("\n") + "\n").unwrap();
+
+    let mut session = Session::from_config(cfg).unwrap();
+
+    // Strict (no budget): the first malformed record aborts the append;
+    // the clone-commit leaves digest, docs, everything untouched.
+    let mut strict = FileSource::open(&seg_path).unwrap();
+    let err = session.append(&mut strict, "corrupt-seg").unwrap_err();
+    assert_eq!(err.exit_code(), 6, "malformed records are a corpus error: {err}");
+    let stats = session.stats().unwrap();
+    assert_eq!(stats.docs, 200, "failed append must not change the session");
+    assert_eq!(stats.corpus_digest, base_digest, "failed append must not advance the digest");
+
+    // With a quarantine budget the same segment folds: the three bad
+    // records land in the dead-letter queue, the 40 documents append,
+    // and the digest advances exactly one chain link.
+    let dlq_path = root.join("dlq.jsonl");
+    let policy = RecordPolicy::new(10, DeadLetterQueue::open(&dlq_path).unwrap());
+    let mut lenient = FileSource::open_with_policy(&seg_path, Some(policy)).unwrap();
+    let rep = session.append(&mut lenient, "corrupt-seg").unwrap();
+    assert_eq!(rep.docs, 40);
+    assert_eq!(lenient.bad_records(), 3);
+    assert_eq!(rep.digest, chain_digest(base_digest, checkpoint::corpus_key("corrupt-seg")));
+    let dlq_len = std::fs::metadata(&dlq_path).unwrap().len();
+    assert!(dlq_len > 0, "quarantined records must be in the queue");
+
+    // The session is healthy: the refit covers base + segment.
+    let fit = session.refit_incremental().unwrap();
+    assert_eq!(fit.model.num_docs, 240);
+
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// -- (5) e2e: watch daemon → artifact → serving hot reload ------------------
+
+/// Read one HTTP/1.1 response (head to the blank line, then
+/// `Content-Length` body bytes) off a keep-alive stream.
+fn read_resp(s: &mut TcpStream) -> (u16, Vec<u8>) {
+    let mut head = Vec::new();
+    let mut b = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        match s.read(&mut b) {
+            Ok(0) => panic!("eof mid-head: {:?}", String::from_utf8_lossy(&head)),
+            Ok(_) => head.push(b[0]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => panic!("reading head: {e}"),
+        }
+        assert!(head.len() < 64 * 1024, "unterminated response head");
+    }
+    let head = String::from_utf8(head).unwrap();
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (n, v) = l.split_once(':')?;
+            n.eq_ignore_ascii_case("content-length").then(|| v.trim().parse().unwrap())
+        })
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).unwrap();
+    let status = head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap();
+    (status, body)
+}
+
+/// One-shot request on a fresh connection (`Connection: close`).
+fn req(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    read_resp(&mut s)
+}
+
+fn start(server: Server) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let addr = server.local_addr();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run().unwrap());
+    (addr, handle, join)
+}
+
+#[test]
+fn watch_daemon_feeds_serving_hot_reload_without_dropped_requests() {
+    let dir = tmp("watch_e2e");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let input = dir.join("corpus.docword.txt");
+    let model_out = dir.join("model.lspm");
+    let base = SynthCorpus::new(CorpusSpec::nytimes().scaled(200, 400), 7);
+    base.write_docword(&input).unwrap();
+
+    let cfg = PipelineConfig {
+        input: input.display().to_string(),
+        workers: 1,
+        chunk_docs: 64,
+        num_pcs: 1,
+        target_card: 5,
+        card_slack: 2,
+        max_reduced: 32,
+        bca_sweeps: 4,
+        incr_watch_poll_ms: 10,
+        ..Default::default()
+    };
+    let opts = WatchOptions {
+        poll: Duration::from_millis(10),
+        max_refits: 2, // initial fit + one growth refresh, then exit
+        model_out: model_out.clone(),
+    };
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let watch = {
+        let (cfg, opts, shutdown) = (cfg.clone(), opts.clone(), Arc::clone(&shutdown));
+        std::thread::spawn(move || watch_corpus(&cfg, &opts, &shutdown))
+    };
+
+    // Wait for the daemon's initial artifact, then start serving it.
+    let t0 = Instant::now();
+    loop {
+        if let Ok(m) = Model::load(&model_out) {
+            assert_eq!(m.num_docs, 200);
+            break;
+        }
+        assert!(t0.elapsed().as_secs() < 60, "initial artifact never appeared");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let server = ServerBuilder::new()
+        .addr("127.0.0.1:0")
+        .workers(2)
+        .reload_poll_ms(10)
+        .register("default", &model_out)
+        .default_model("default")
+        .build()
+        .unwrap();
+    let (addr, handle, srv) = start(server);
+
+    // Hammer the score route on keep-alive connections throughout.
+    let stop = Arc::new(AtomicBool::new(false));
+    let errors_5xx = Arc::new(AtomicU64::new(0));
+    let requests = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for _ in 0..2 {
+        let (stop, errors_5xx, requests) =
+            (Arc::clone(&stop), Arc::clone(&errors_5xx), Arc::clone(&requests));
+        clients.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let body = r#"{"words": [[3, 1]]}"#;
+            while !stop.load(Ordering::Relaxed) {
+                write!(
+                    s,
+                    "POST /v1/models/default/score HTTP/1.1\r\nHost: t\r\n\
+                     Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                    body.len()
+                )
+                .unwrap();
+                let (status, _) = read_resp(&mut s);
+                requests.fetch_add(1, Ordering::Relaxed);
+                if status >= 500 {
+                    errors_5xx.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    assert_eq!(status, 200, "unexpected status {status}");
+                }
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(50));
+
+    // Grow the corpus in place: the daemon appends the 60-doc suffix,
+    // refits, atomically rewrites the artifact, and exits.
+    let grown = SynthCorpus::new(CorpusSpec::nytimes().scaled(260, 400), 7);
+    grown.write_docword(&input).unwrap();
+    let report = watch.join().unwrap().unwrap();
+    assert_eq!(report.refits, 2);
+    assert_eq!(report.appends, 1);
+    assert_eq!(Model::load(&model_out).unwrap().num_docs, 260);
+
+    // The serving watcher must pick the refreshed artifact up.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = req(addr, "GET", "/v1/metrics", "");
+        assert_eq!(status, 200);
+        let text = String::from_utf8(body).unwrap();
+        let reloads: u64 = text
+            .lines()
+            .find_map(|l| l.strip_prefix("lsspca_reloads_total ").map(|v| v.parse().unwrap()))
+            .unwrap();
+        if reloads >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "hot reload never observed:\n{text}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    stop.store(true, Ordering::Relaxed);
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert!(requests.load(Ordering::Relaxed) > 0, "hammering never got going");
+    assert_eq!(
+        errors_5xx.load(Ordering::Relaxed),
+        0,
+        "the artifact swap must not drop a single request"
+    );
+    shutdown.store(true, Ordering::SeqCst);
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
